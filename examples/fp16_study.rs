@@ -1,0 +1,61 @@
+//! FP16 precision study: sweep sizes and strategies in true software
+//! binary16/bfloat16 and compare measured error against the paper's
+//! eq. (11) bound — the empirical backbone of Tables I–II.
+//!
+//! Run: `cargo run --release --example fp16_study`
+
+use fmafft::analysis::bounds::cumulative_bound;
+use fmafft::analysis::empirical::measure;
+use fmafft::analysis::ratio::ratio_stats;
+use fmafft::analysis::report::{sci, Table};
+use fmafft::fft::Strategy;
+use fmafft::precision::{Bf16, Real, F16};
+
+fn main() {
+    println!("FP16 error: measured vs eq.(11) bound (software binary16)\n");
+
+    let mut t = Table::new(
+        "Forward rel-L2 vs f64 DFT".to_string(),
+        &["N", "m", "dual measured", "dual bound", "LF measured", "LF bound"],
+    );
+    for n in [64usize, 256, 1024, 4096] {
+        let m = n.trailing_zeros();
+        let dual = measure::<F16>(n, Strategy::DualSelect, 7);
+        let lf = measure::<F16>(n, Strategy::LinzerFeig, 7);
+        let dual_bound = cumulative_bound(1.0, <F16 as Real>::EPSILON, m);
+        let lf_t = ratio_stats(n, Strategy::LinzerFeig).max_nonsingular;
+        let lf_bound = cumulative_bound(lf_t, <F16 as Real>::EPSILON, m);
+        t.row(&[
+            n.to_string(),
+            m.to_string(),
+            sci(dual.forward_rel_l2),
+            sci(dual_bound),
+            if lf.forward_rel_l2.is_nan() { "NaN (overflow)".into() } else { sci(lf.forward_rel_l2) },
+            sci(lf_bound),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // bfloat16: no overflow (f32 exponent range) but 8x coarser ulp —
+    // shows the effect tracks precision, not the binary16 format.
+    let mut tb = Table::new(
+        "bfloat16 (no overflow; advantage persists)".to_string(),
+        &["N", "dual measured", "LF measured", "LF/dual"],
+    );
+    for n in [256usize, 1024] {
+        let dual = measure::<Bf16>(n, Strategy::DualSelect, 7).forward_rel_l2;
+        let lf = measure::<Bf16>(n, Strategy::LinzerFeig, 7).forward_rel_l2;
+        tb.row(&[n.to_string(), sci(dual), sci(lf), format!("{:.2}", lf / dual)]);
+    }
+    println!("{}", tb.render());
+
+    // The cumulative-bound growth curve (paper eq. 11) by pass count.
+    println!("eq.(11) growth with pass count (fp16, |t|max = 1 vs 163):");
+    for m in [1u32, 2, 5, 10, 15, 20] {
+        println!(
+            "  m={m:<3} dual {}   LF {}",
+            sci(cumulative_bound(1.0, <F16 as Real>::EPSILON, m)),
+            sci(cumulative_bound(163.0, <F16 as Real>::EPSILON, m)),
+        );
+    }
+}

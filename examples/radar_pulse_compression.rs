@@ -1,0 +1,69 @@
+//! Radar pulse compression — the paper's motivating application.
+//!
+//! Generates synthetic radar returns (delayed LFM chirp echoes in
+//! noise at several SNRs), compresses each with the matched filter
+//! built on the dual-select FFT, and reports detection accuracy and
+//! pulse-compression gain, in f32 and in TRUE half precision.
+//!
+//! Run: `cargo run --release --example radar_pulse_compression`
+
+use fmafft::fft::{Planner, Strategy};
+use fmafft::precision::{Real, SplitBuf, F16};
+use fmafft::signal::chirp::default_chirp;
+use fmafft::signal::pulse::{analyze_peak, MatchedFilter};
+use fmafft::workload::{SignalKind, WorkloadGen};
+
+fn run_trials<T: Real>(strategy: Strategy, snr_db: f64, trials: usize) -> (usize, f64) {
+    let n = 1024;
+    let pulse_len = 256;
+    let planner = Planner::<T>::new();
+    let (cr, ci) = default_chirp(pulse_len);
+    let mf = MatchedFilter::new(&planner, strategy, n, &cr, &ci).unwrap();
+
+    let mut gen = WorkloadGen::new(n, 0xC0FFEE ^ snr_db.to_bits());
+    let mut hits = 0usize;
+    let mut gain_sum = 0.0;
+    let mut scratch = SplitBuf::zeroed(n);
+    for _ in 0..trials {
+        let frame = gen.frame(SignalKind::RadarReturn { pulse_len, snr_db });
+        let truth = frame.truth.unwrap();
+        // Scale into fp16-friendly range (unit-power returns).
+        let re: Vec<f64> = frame.re.iter().map(|x| x * 0.125).collect();
+        let im: Vec<f64> = frame.im.iter().map(|x| x * 0.125).collect();
+        let mut buf = SplitBuf::<T>::from_f64(&re, &im);
+        if mf.compress(&planner, &mut buf, &mut scratch).is_err() {
+            continue;
+        }
+        let res = analyze_peak(&buf, 8);
+        if res.peak_index == truth {
+            hits += 1;
+        }
+        if res.floor > 0.0 && res.peak.is_finite() {
+            gain_sum += res.peak / res.floor;
+        }
+    }
+    (hits, gain_sum / trials as f64)
+}
+
+fn main() {
+    let trials = 50;
+    println!("radar pulse compression: N=1024, 256-sample LFM chirp, {trials} trials/cell\n");
+    println!(
+        "{:<10} {:>18} {:>18} {:>18}",
+        "SNR (dB)", "f32 dual detect", "fp16 dual detect", "fp16 LF detect"
+    );
+    for snr_db in [10.0, 0.0, -5.0] {
+        let (h32, g32) = run_trials::<f32>(Strategy::DualSelect, snr_db, trials);
+        let (h16, _g16) = run_trials::<F16>(Strategy::DualSelect, snr_db, trials);
+        let (hlf, _) = run_trials::<F16>(Strategy::LinzerFeig, snr_db, trials);
+        println!(
+            "{:<10} {:>15}/{trials} {:>15}/{trials} {:>15}/{trials}   (f32 mean gain {:.0}x)",
+            snr_db, h32, h16, hlf, g32
+        );
+    }
+    println!(
+        "\nThe dual-select fp16 pipeline matches f32 detection; the clamped\n\
+         Linzer-Feig table overflows fp16 and detects (almost) nothing —\n\
+         the paper's \"key enabler for practical FP16 FFT\" claim, end to end."
+    );
+}

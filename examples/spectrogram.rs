@@ -1,0 +1,65 @@
+//! Spectrogram of an LFM chirp via the STFT pipeline — renders an
+//! ASCII time-frequency plot and verifies the ridge sweeps linearly.
+//!
+//! Run: `cargo run --release --example spectrogram`
+
+use fmafft::fft::{Planner, Strategy};
+use fmafft::signal::chirp::lfm_chirp;
+use fmafft::signal::noise::{add_into, cwgn};
+use fmafft::signal::stft::{stft, StftConfig};
+use fmafft::signal::window::Window;
+use fmafft::util::prng::Pcg32;
+
+fn main() {
+    let n = 16384;
+    let (mut re, mut im) = lfm_chirp(n, 0.02, 0.42);
+    let mut rng = Pcg32::seed(3);
+    let (nr, ni) = cwgn(n, 0.05, &mut rng);
+    add_into((&mut re, &mut im), (&nr, &ni));
+
+    let cfg = StftConfig {
+        frame: 256,
+        hop: 256,
+        window: Window::Hann,
+        strategy: Strategy::DualSelect,
+    };
+    let planner = Planner::<f32>::new();
+    let sg = stft(&planner, &cfg, &re, &im).unwrap();
+
+    // ASCII render: rows = frequency (downsampled), cols = time.
+    let rows = 24;
+    let shades = [' ', '.', ':', '+', '*', '#'];
+    let max_p = sg.power.iter().cloned().fold(0.0f64, f64::max);
+    println!("spectrogram of an LFM chirp (frame=256, hop=256, Hann):\n");
+    for r in (0..rows).rev() {
+        let bin_lo = r * (cfg.frame / 2) / rows;
+        let bin_hi = ((r + 1) * (cfg.frame / 2) / rows).max(bin_lo + 1);
+        let mut line = String::new();
+        for c in 0..sg.cols {
+            let p: f64 = (bin_lo..bin_hi).map(|b| sg.at(c, b)).fold(0.0, f64::max);
+            let idx = if p <= 0.0 {
+                0
+            } else {
+                let db = 10.0 * (p / max_p).log10();
+                ((db + 30.0) / 30.0 * (shades.len() - 1) as f64)
+                    .clamp(0.0, (shades.len() - 1) as f64) as usize
+            };
+            line.push(shades[idx]);
+        }
+        println!("{:>4} |{}", bin_lo, line);
+    }
+    println!("      +{}", "-".repeat(sg.cols));
+    println!("       time → ({} frames)", sg.cols);
+
+    // Verify the ridge is (approximately) linear in time.
+    let first = sg.peak_bin(0);
+    let mid = sg.peak_bin(sg.cols / 2);
+    let last = sg.peak_bin(sg.cols - 1);
+    println!("\npeak bin: first={first} mid={mid} last={last}");
+    let expect_mid = (first + last) / 2;
+    assert!(
+        (mid as i64 - expect_mid as i64).unsigned_abs() <= 8,
+        "chirp ridge is not linear"
+    );
+    println!("ridge sweeps linearly: OK");
+}

@@ -1,0 +1,142 @@
+"""AOT lowering: JAX models -> HLO text artifacts + manifest.
+
+The interchange format is HLO *text*, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.  Lowered with
+``return_tuple=True`` so the Rust side unwraps a tuple literal.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile's
+``artifacts`` target).  Python never runs again after this: the Rust
+coordinator loads the artifacts via PJRT and serves them.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as model_lib
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring).
+
+    CRITICAL: ``print_large_constants=True``.  The default HLO printer
+    *elides* constants with >= 16 elements as ``constant({...})`` — the
+    twiddle tables! — and the old text parser silently materializes
+    garbage for them, producing numerically wrong (not crashing)
+    executables.  Symptom when missed: every Stockham pass with
+    stride >= 16 no-ops and an n-point FFT degrades into 16-point
+    comb spectra.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    if "constant({...})" in text:
+        raise RuntimeError("HLO text contains elided constants — unrunnable")
+    return text
+
+
+# The default artifact set served by the coordinator.  Kept moderate so
+# `make artifacts` stays fast; `--full` adds the sweep set used by the
+# e2e benches.
+DEFAULT_VARIANTS = [
+    # (kind, n, batch, strategy, inverse)
+    ("fft", 1024, 1, "dual", False),
+    ("fft", 1024, 1, "dual", True),
+    ("fft", 1024, 32, "dual", False),
+    ("fft", 1024, 32, "dual", True),
+    ("fft", 1024, 1, "lf", False),
+    ("fft", 1024, 32, "lf", False),
+    ("fft", 256, 1, "dual", False),
+    ("fft", 256, 32, "dual", False),
+    ("matched_filter", 1024, 1, "dual", False),
+    ("matched_filter", 1024, 32, "dual", False),
+    ("power_spectrum", 256, 32, "dual", False),
+]
+
+FULL_EXTRA = [
+    ("fft", 256, 1, "lf", False),
+    ("fft", 256, 1, "standard", False),
+    ("fft", 1024, 1, "standard", False),
+    ("fft", 1024, 8, "dual", False),
+    ("fft", 4096, 1, "dual", False),
+    ("fft", 4096, 8, "dual", False),
+    ("matched_filter", 1024, 8, "dual", False),
+]
+
+
+def variant_name(kind, n, batch, strategy, inverse, dtype="f32"):
+    direction = "inv" if inverse else "fwd"
+    return f"{kind}_{direction}_{strategy}_n{n}_b{batch}_{dtype}"
+
+
+def build_fn(kind, n, strategy, inverse):
+    if kind == "fft":
+        return model_lib.make_fft(n, strategy, inverse)
+    if kind == "matched_filter":
+        return model_lib.make_matched_filter(n, strategy)
+    if kind == "power_spectrum":
+        return model_lib.make_power_spectrum(n, strategy)
+    raise ValueError(f"unknown kind {kind!r}")
+
+
+def lower_variant(kind, n, batch, strategy, inverse, dtype=jnp.float32):
+    fn = build_fn(kind, n, strategy, inverse)
+    spec = jax.ShapeDtypeStruct((batch, n), dtype)
+    lowered = jax.jit(fn).lower(spec, spec)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--full", action="store_true", help="also lower the sweep set")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    variants = list(DEFAULT_VARIANTS) + (FULL_EXTRA if args.full else [])
+
+    manifest = {"format": "hlo-text", "version": 1, "artifacts": []}
+    for kind, n, batch, strategy, inverse in variants:
+        name = variant_name(kind, n, batch, strategy, inverse)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        text = lower_variant(kind, n, batch, strategy, inverse)
+        with open(path, "w") as f:
+            f.write(text)
+        n_outputs = 1 if kind == "power_spectrum" else 2
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "kind": kind,
+                "n": n,
+                "batch": batch,
+                "strategy": strategy,
+                "inverse": inverse,
+                "dtype": "f32",
+                "inputs": [[batch, n], [batch, n]],
+                "outputs": [[batch, n]] * n_outputs,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            }
+        )
+        print(f"lowered {name}: {len(text)} chars")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Layer-1 Pallas kernels: one Stockham radix-2 FFT pass per call.
+
+Each kernel processes a full pass over a batch of split-format signals:
+
+    inputs   x_re, x_im        (B, 2, l, s)   first/second half blocks
+    tables   m1, m2, t, sel    (1, s)         per-pass ratio table
+    outputs  y_re, y_im        (B, l, 2, s)   interleaved A/B outputs
+
+The dual-select decision is *data-encoded* (the ``sel`` mask swaps the
+operands with a ``jnp.where`` select, a free VPU op) so the kernel is
+branch-free — this is the paper's "the per-twiddle branch can be
+eliminated entirely by encoding the operand ordering into the
+precomputed table entries", adapted for TPU/Pallas where warp-style
+divergence does not exist (see DESIGN.md §Hardware-Adaptation).
+
+The butterfly body is 6 multiply-adds per output point pair, exactly the
+paper's proven-minimal FMA count; on TPU these map onto VPU fused
+multiply-adds.  ``interpret=True`` everywhere: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and interpret-mode lowers to plain
+HLO so the AOT artifacts run on the Rust PJRT CPU client.
+
+VMEM sizing (TPU estimate, recorded in EXPERIMENTS.md): a pass block for
+B=32, N=1024, f32 is 32*1024*2 arrays * 4 B * (in+out) = 1 MiB, far
+under the ~16 MiB VMEM budget, so a whole pass is VMEM-resident and the
+kernel is HBM-bandwidth-bound at 16 B/point per pass.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+import numpy as np
+
+from compile import twiddle
+
+
+def _ratio_pass_kernel(xr_ref, xi_ref, m1_ref, m2_ref, t_ref, sel_ref, yr_ref, yi_ref):
+    """Branch-free 6-FMA ratio butterfly over one pass block."""
+    ar = xr_ref[:, 0]  # (B, l, s)
+    br = xr_ref[:, 1]
+    ai = xi_ref[:, 0]
+    bi = xi_ref[:, 1]
+    t = t_ref[...]  # (1, s) broadcasts over (B, l, s)
+    m1 = m1_ref[...]
+    m2 = m2_ref[...]
+    cos_path = sel_ref[...] != 0.0
+
+    # Operand swap is a select, not a branch.
+    u = jnp.where(cos_path, br, bi)
+    v = jnp.where(cos_path, bi, br)
+
+    s1 = u - t * v  # FMA 1
+    s2 = v + t * u  # FMA 2
+    p1 = m1 * s1
+    p2 = m2 * s2
+    yr_ref[:, :, 0] = ar + p1  # FMA 3 (A_r)
+    yr_ref[:, :, 1] = ar - p1  # FMA 4 (B_r)
+    yi_ref[:, :, 0] = ai + p2  # FMA 5 (A_i)
+    yi_ref[:, :, 1] = ai - p2  # FMA 6 (B_i)
+
+
+def _standard_pass_kernel(xr_ref, xi_ref, wr_ref, wi_ref, yr_ref, yi_ref):
+    """The 10-op schoolbook butterfly (paper eqs. 2-3) — baseline."""
+    ar = xr_ref[:, 0]
+    br = xr_ref[:, 1]
+    ai = xi_ref[:, 0]
+    bi = xi_ref[:, 1]
+    wr = wr_ref[...]
+    wi = wi_ref[...]
+
+    tr = wr * br - wi * bi
+    ti = wi * br + wr * bi
+    yr_ref[:, :, 0] = ar + tr
+    yr_ref[:, :, 1] = ar - tr
+    yi_ref[:, :, 0] = ai + ti
+    yi_ref[:, :, 1] = ai - ti
+
+
+@functools.partial(jax.jit, static_argnames=("n", "p", "strategy", "inverse"))
+def stockham_pass(xre, xim, *, n: int, p: int, strategy: str, inverse: bool = False):
+    """Apply Stockham pass ``p`` of an ``n``-point FFT via a Pallas call.
+
+    ``xre``/``xim`` have shape (B, n); returns same-shape arrays.
+    """
+    if strategy not in twiddle.STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    b = xre.shape[0]
+    dtype = xre.dtype
+    s = 1 << p
+    l = n >> (p + 1)
+    sign = 1.0 if inverse else -1.0
+
+    xr = xre.reshape(b, 2, l, s)
+    xi = xim.reshape(b, 2, l, s)
+    angles = twiddle.pass_angles(n, p, sign)
+
+    out_shape = (
+        jax.ShapeDtypeStruct((b, l, 2, s), dtype),
+        jax.ShapeDtypeStruct((b, l, 2, s), dtype),
+    )
+
+    if strategy == "standard":
+        wr, wi = twiddle.plain_table(angles)
+        tables = (
+            jnp.asarray(wr.reshape(1, s), dtype),
+            jnp.asarray(wi.reshape(1, s), dtype),
+        )
+        kernel = _standard_pass_kernel
+    else:
+        m1, m2, t, sel = twiddle.ratio_table(angles, strategy)
+        tables = tuple(
+            jnp.asarray(z.reshape(1, s), dtype) for z in (m1, m2, t, sel)
+        )
+        kernel = _ratio_pass_kernel
+
+    yr, yi = pl.pallas_call(
+        kernel,
+        out_shape=out_shape,
+        interpret=True,
+    )(xr, xi, *tables)
+    return yr.reshape(b, n), yi.reshape(b, n)

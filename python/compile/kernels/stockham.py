@@ -1,0 +1,125 @@
+"""Full radix-2 Stockham FFT composed from the Layer-1 Pallas kernels.
+
+Two composition modes:
+
+* ``mode="per-pass"`` — one Pallas call per pass (log2 n calls).  The
+  simplest mapping; each interpret-mode call lowers to its own HLO
+  while-loop, which costs ~10x per-call overhead on the CPU PJRT
+  runtime.
+* ``mode="fused"`` (default) — the ENTIRE transform as ONE Pallas
+  kernel: all log2(n) passes execute on values inside a single kernel
+  invocation.  This is both the faster AOT artifact (one while-loop;
+  §Perf L2 iteration in EXPERIMENTS.md) and the honest TPU design: the
+  whole small FFT stays VMEM-resident across passes (DESIGN.md
+  §Hardware-Adaptation).
+
+Both modes use identical arithmetic (same 6-FMA butterfly, same table
+values, same operation order), so they are numerically interchangeable;
+pytest asserts it.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+import numpy as np
+
+from compile import twiddle
+from compile.kernels import butterfly
+
+
+def _fused_tables(n, m, strategy, sign, dtype):
+    """Flat list of per-pass table arrays (Pallas kernel inputs)."""
+    flat = []
+    for p in range(m):
+        angles = twiddle.pass_angles(n, p, sign)
+        s = 1 << p
+        if strategy == "standard":
+            wr, wi = twiddle.plain_table(angles)
+            flat += [jnp.asarray(np.reshape(z, (1, 1, s)), dtype) for z in (wr, wi)]
+        else:
+            flat += [
+                jnp.asarray(np.reshape(z, (1, 1, s)), dtype)
+                for z in twiddle.ratio_table(angles, strategy)
+            ]
+    return flat
+
+
+def _fused_kernel(n, m, strategy):
+    """Build the all-passes-in-one Pallas kernel body.
+
+    Argument order: xr, xi, per-pass tables (2 or 4 refs per pass),
+    then the two output refs.
+    """
+    per_pass = 2 if strategy == "standard" else 4
+
+    def kernel(xr_ref, xi_ref, *refs):
+        tab_refs = refs[: m * per_pass]
+        yr_ref, yi_ref = refs[m * per_pass :]
+        xr = xr_ref[...]  # (B, n)
+        xi = xi_ref[...]
+        b = xr.shape[0]
+        for p in range(m):
+            s = 1 << p
+            l = n >> (p + 1)
+            vr = xr.reshape(b, 2, l, s)
+            vi = xi.reshape(b, 2, l, s)
+            ar, br = vr[:, 0], vr[:, 1]
+            ai, bi = vi[:, 0], vi[:, 1]
+            tabs = [tab_refs[p * per_pass + i][...] for i in range(per_pass)]
+            if strategy == "standard":
+                wr, wi = tabs
+                tr = wr * br - wi * bi
+                ti = wi * br + wr * bi
+                Ar, Ai, Br, Bi = ar + tr, ai + ti, ar - tr, ai - ti
+            else:
+                m1, m2, t, sel = tabs
+                cosp = sel != 0.0
+                u = jnp.where(cosp, br, bi)
+                v = jnp.where(cosp, bi, br)
+                s1 = u - t * v
+                s2 = v + t * u
+                p1 = m1 * s1
+                p2 = m2 * s2
+                Ar, Br, Ai, Bi = ar + p1, ar - p1, ai + p2, ai - p2
+            xr = jnp.stack([Ar, Br], axis=2).reshape(b, n)
+            xi = jnp.stack([Ai, Bi], axis=2).reshape(b, n)
+        yr_ref[...] = xr
+        yi_ref[...] = xi
+
+    return kernel
+
+
+def fft(xre, xim, *, strategy: str = "dual", inverse: bool = False, mode: str = "fused"):
+    """Batched split-format FFT: (B, n) re/im -> (B, n) re/im."""
+    n = xre.shape[-1]
+    m = int(math.log2(n))
+    if 1 << m != n:
+        raise ValueError(f"n={n} must be a power of two")
+    sign = 1.0 if inverse else -1.0
+
+    if mode == "fused":
+        b = xre.shape[0]
+        kernel = _fused_kernel(n, m, strategy)
+        tables = _fused_tables(n, m, strategy, sign, xre.dtype)
+        out = jax.ShapeDtypeStruct((b, n), xre.dtype)
+        xre, xim = pl.pallas_call(kernel, out_shape=(out, out), interpret=True)(
+            xre, xim, *tables
+        )
+    elif mode == "per-pass":
+        for p in range(m):
+            xre, xim = butterfly.stockham_pass(
+                xre, xim, n=n, p=p, strategy=strategy, inverse=inverse
+            )
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+
+    if inverse:
+        scale = xre.dtype.type(1.0 / n)
+        xre = xre * scale
+        xim = xim * scale
+    return xre, xim

@@ -1,0 +1,79 @@
+"""Layer-2 JAX models: the compute graphs that get AOT-lowered to HLO.
+
+Each factory returns a jittable function over split-format (B, n)
+arrays.  All of them bottom out in the Layer-1 Pallas pass kernels, so
+the paper's dual-select FMA butterfly is the compute hot-spot of every
+artifact the Rust runtime serves.
+
+Models
+------
+``make_fft``             forward or inverse FFT, any strategy
+``make_matched_filter``  radar pulse compression: IFFT(FFT(x) * conj(H))
+                         with the reference-chirp spectrum H baked in as
+                         a constant (the paper's motivating radar
+                         application)
+``make_power_spectrum``  |FFT(x)|^2 — the spectrogram column primitive
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref, stockham
+
+
+def make_fft(n: int, strategy: str = "dual", inverse: bool = False):
+    """(xre, xim) -> (yre, yim), shapes (B, n)."""
+
+    def fn(xre, xim):
+        return stockham.fft(xre, xim, strategy=strategy, inverse=inverse)
+
+    fn.__name__ = f"fft_{'inv' if inverse else 'fwd'}_{strategy}_n{n}"
+    return fn
+
+
+def lfm_chirp(n: int, f0: float = 0.05, f1: float = 0.45) -> np.ndarray:
+    """Unit-amplitude linear-FM chirp sweeping f0..f1 cycles/sample.
+
+    The synthetic radar waveform used by the matched-filter model and
+    the workload generators (paper's motivating application).  Matches
+    ``signal::chirp`` on the Rust side.
+    """
+    t = np.arange(n, dtype=np.float64)
+    phase = 2.0 * np.pi * (f0 * t + 0.5 * (f1 - f0) * t * t / n)
+    return np.exp(1j * phase)
+
+
+def make_matched_filter(n: int, strategy: str = "dual"):
+    """Pulse compression against the baked-in LFM chirp spectrum."""
+    h = lfm_chirp(n)
+    hr64, hi64 = ref.stockham_fft(h.real[None, :], h.imag[None, :], "dual")
+
+    def fn(xre, xim):
+        dtype = xre.dtype
+        hre = jnp.asarray(hr64, dtype)
+        him = jnp.asarray(hi64, dtype)
+        xr, xi = stockham.fft(xre, xim, strategy=strategy)
+        # X * conj(H)
+        yr = xr * hre + xi * him
+        yi = xi * hre - xr * him
+        return stockham.fft(yr, yi, strategy=strategy, inverse=True)
+
+    fn.__name__ = f"matched_filter_{strategy}_n{n}"
+    return fn
+
+
+def make_power_spectrum(n: int, strategy: str = "dual"):
+    """(xre, xim) -> (|X|^2,) — one STFT/spectrogram column."""
+
+    def fn(xre, xim):
+        xr, xi = stockham.fft(xre, xim, strategy=strategy)
+        return (xr * xr + xi * xi,)
+
+    fn.__name__ = f"power_spectrum_{strategy}_n{n}"
+    return fn

@@ -1,0 +1,171 @@
+"""Twiddle-table construction for the FMA butterfly factorizations.
+
+This is the build-time (numpy, float64) implementation of the paper's
+Algorithm 1 plus the two baseline tables it compares against.  The same
+logic is re-implemented in Rust (``rust/src/fft/twiddle.rs``) for the
+native path; the pytest suite cross-checks the two through the AOT
+artifacts.
+
+Conventions
+-----------
+A radix-2 Stockham pass ``p`` (0-based) on an ``n``-point transform
+views the half-arrays as ``(l, s)`` blocks with ``s = 1 << p`` and
+``l = n >> (p+1)``, and has ``s`` distinct twiddle factors ``W^{j*l}``
+for ``j in [0, s)`` (the twiddle varies along the stride axis and is
+shared across the ``l`` groups); the twiddle angle is
+``theta = sign * 2*pi*j*l/n`` with ``sign = -1`` for the forward
+transform and ``+1`` for the inverse.  Pass 0 therefore has the single
+twiddle W^0 = 1 — exactly the Linzer-Feig singularity — and the last
+pass has all of ``W^j, j in [0, n/2)``.
+
+Table entry layout (the paper's Algorithm 1, extended so the butterfly
+kernel is *branch-free*):
+
+``m1``   signed outer multiplier for the ``s1`` lane (``sigma * mult``)
+``m2``   outer multiplier for the ``s2`` lane (``mult``)
+``t``    the bounded precomputed ratio (``tan`` or ``cot``)
+``sel``  1.0 when the cosine path was selected, 0.0 for the sine path
+
+With ``u = sel ? br : bi`` and ``v = sel ? bi : br`` the butterfly is
+
+    s1 = u - t*v          (FMA)
+    s2 = v + t*u          (FMA)
+    Ar = ar + m1*s1       (FMA)      Br = ar - m1*s1   (FMA)
+    Ai = ai + m2*s2       (FMA)      Bi = ai - m2*s2   (FMA)
+
+six FMAs regardless of path, exactly as the paper requires, and the
+select is a data movement, not a branch.
+
+NOTE on the paper's eq. (4): as printed, ``s2 = (wr/wi)*br + bi`` does
+not reproduce ``Ai = ai + wi*br + wr*bi``; the algebraically correct
+sine-path factorization is ``s2 = br + (wr/wi)*bi``.  We implement the
+correct form (the cosine-path eq. (7) is correct as printed and the two
+are mirror images).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# The epsilon used by "standard practice" clamping for the singular
+# baseline tables (the paper quotes 1e-7).
+CLAMP_EPS = 1e-7
+
+STRATEGIES = ("standard", "lf", "cos", "dual")
+
+
+def pass_angles(n: int, p: int, sign: float = -1.0) -> np.ndarray:
+    """Twiddle angles for Stockham pass ``p`` of an ``n``-point FFT."""
+    if n & (n - 1) or n < 2:
+        raise ValueError(f"n must be a power of two >= 2, got {n}")
+    s = 1 << p
+    l = n >> (p + 1)
+    if l < 1:
+        raise ValueError(f"pass {p} out of range for n={n}")
+    j = np.arange(s, dtype=np.float64)
+    return sign * 2.0 * np.pi * j * l / n
+
+
+def plain_table(angles: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """(wr, wi) pairs — the 10-op standard butterfly table."""
+    return np.cos(angles), np.sin(angles)
+
+
+def _select_masks(wr: np.ndarray, wi: np.ndarray, mode: str) -> np.ndarray:
+    """Boolean mask: True where the *cosine* path is used."""
+    if mode == "dual":
+        return np.abs(wr) >= np.abs(wi)
+    if mode == "lf":  # Linzer-Feig: always the sine path
+        return np.zeros_like(wr, dtype=bool)
+    if mode == "cos":  # cosine factorization: always the cosine path
+        return np.ones_like(wr, dtype=bool)
+    raise ValueError(f"unknown ratio strategy {mode!r}")
+
+
+def ratio_table(
+    angles: np.ndarray, mode: str, clamp: bool = True
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Build (m1, m2, t, sel) for one pass.
+
+    ``mode`` is one of ``lf`` / ``cos`` / ``dual``.  For the two singular
+    baselines the denominator is clamped to ``CLAMP_EPS`` (standard
+    practice, what the paper criticizes) unless ``clamp=False`` in which
+    case the ratio may be inf.  Dual-select never needs clamping.
+    """
+    wr = np.cos(angles)
+    wi = np.sin(angles)
+    cos_path = _select_masks(wr, wi, mode)
+
+    # Denominator = the selected outer multiplier.
+    mult = np.where(cos_path, wr, wi)
+    if mode != "dual" and clamp:
+        tiny = np.abs(mult) < CLAMP_EPS
+        mult = np.where(tiny, np.where(mult < 0, -CLAMP_EPS, CLAMP_EPS), mult)
+    num = np.where(cos_path, wi, wr)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        t = num / mult
+
+    sigma = np.where(cos_path, 1.0, -1.0)
+    m1 = sigma * mult
+    m2 = mult
+    sel = cos_path.astype(np.float64)
+    return m1, m2, t, sel
+
+
+def dual_select_table(n: int, sign: float = -1.0):
+    """The paper's Algorithm 1 over the *flat* twiddle index k in [0, n/2).
+
+    Returns (mult, ratio, sel) exactly as the paper stores them — used by
+    the analysis/audit tests; the per-pass kernels use ``ratio_table``.
+    """
+    k = np.arange(n // 2, dtype=np.float64)
+    theta = sign * 2.0 * np.pi * k / n
+    wr, wi = np.cos(theta), np.sin(theta)
+    cos_path = np.abs(wr) >= np.abs(wi)
+    mult = np.where(cos_path, wr, wi)
+    ratio = np.where(cos_path, wi, wr) / mult
+    return mult, ratio, cos_path
+
+
+def max_ratio(n: int, mode: str, clamp: bool = True) -> float:
+    """|t|_max over all passes of an n-point transform (Table I column)."""
+    worst = 0.0
+    m = int(np.log2(n))
+    for p in range(m):
+        _, _, t, _ = ratio_table(pass_angles(n, p), mode, clamp=clamp)
+        worst = max(worst, float(np.max(np.abs(t))))
+    return worst
+
+
+def ratio_stats(n: int, mode: str) -> dict:
+    """Paper-style Table I statistics over the flat twiddle table.
+
+    ``max_nonsingular`` is |t|_max over entries whose outer multiplier is
+    not (near-)zero — this matches the paper's reported 163.0 for
+    Linzer-Feig at N=1024 (at k=1; the exactly-singular k=0 entry is
+    counted in ``singular`` instead).  ``near_singular`` counts entries
+    where the multiplier is nonzero but below 1e-9 (the cosine path's
+    k=N/4 entry, cos(pi/2) ~ 6e-17, the paper's "0*" footnote).
+    """
+    k = np.arange(n // 2, dtype=np.float64)
+    theta = -2.0 * np.pi * k / n
+    wr, wi = np.cos(theta), np.sin(theta)
+    cos_path = _select_masks(wr, wi, mode)
+    mult = np.where(cos_path, wr, wi)
+    num = np.where(cos_path, wi, wr)
+    singular = mult == 0.0
+    near = (~singular) & (np.abs(mult) < 1e-9)
+    ok = ~(singular | near)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        t = np.abs(num / mult)
+    tmax = float(np.max(t[ok]))
+    argmax = int(k[ok][np.argmax(t[ok])])
+    return {
+        "max_nonsingular": tmax,
+        "argmax_k": argmax,
+        "singular": int(np.sum(singular)),
+        "near_singular": int(np.sum(near)),
+        "max_clamped": float(np.max(np.abs(t[ok | near]))) if near.any() else tmax,
+        "cos_path_count": int(np.sum(cos_path)),
+        "sin_path_count": int(np.sum(~cos_path)),
+    }

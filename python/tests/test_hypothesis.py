@@ -1,0 +1,92 @@
+"""Hypothesis sweeps over the Pallas kernel's shapes and dtypes.
+
+Property-based coverage of the L1 kernels: any power-of-two size, any
+batch, any strategy, f32/f16 — always allclose to the float64 oracle at
+a precision-scaled tolerance.
+"""
+
+import numpy as np
+
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import twiddle
+from compile.kernels import butterfly, ref, stockham
+
+
+def rel_l2(got_r, got_i, want_r, want_i):
+    got = np.asarray(got_r, np.float64) + 1j * np.asarray(got_i, np.float64)
+    want = np.asarray(want_r, np.float64) + 1j * np.asarray(want_i, np.float64)
+    return np.linalg.norm(got - want) / max(np.linalg.norm(want), 1e-300)
+
+
+sizes = st.sampled_from([2, 4, 8, 16, 32, 64, 128, 256])
+batches = st.integers(min_value=1, max_value=4)
+strategies_st = st.sampled_from(twiddle.STRATEGIES)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=sizes, b=batches, strategy=strategies_st, seed=seeds)
+def test_fft_matches_oracle_any_shape(n, b, strategy, seed):
+    rng = np.random.default_rng(seed)
+    xr = rng.standard_normal((b, n)).astype(np.float32)
+    xi = rng.standard_normal((b, n)).astype(np.float32)
+    got_r, got_i = stockham.fft(jnp.asarray(xr), jnp.asarray(xi), strategy=strategy)
+    want = np.fft.fft(xr.astype(np.float64) + 1j * xi.astype(np.float64), axis=-1)
+    tol = 5e-3 if strategy in ("lf", "cos") else 1e-4
+    assert rel_l2(got_r, got_i, want.real, want.imag) < tol
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=sizes, b=batches, seed=seeds)
+def test_roundtrip_any_shape(n, b, seed):
+    rng = np.random.default_rng(seed)
+    xr = rng.standard_normal((b, n)).astype(np.float32)
+    xi = rng.standard_normal((b, n)).astype(np.float32)
+    fr, fi = stockham.fft(jnp.asarray(xr), jnp.asarray(xi), strategy="dual")
+    gr, gi = stockham.fft(fr, fi, strategy="dual", inverse=True)
+    assert rel_l2(gr, gi, xr, xi) < 1e-4
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([16, 64, 256]),
+    p=st.integers(min_value=0, max_value=3),
+    strategy=strategies_st,
+    seed=seeds,
+)
+def test_single_pass_matches_oracle(n, p, strategy, seed):
+    rng = np.random.default_rng(seed)
+    xr = rng.standard_normal((2, n)).astype(np.float32)
+    xi = rng.standard_normal((2, n)).astype(np.float32)
+    got_r, got_i = butterfly.stockham_pass(
+        jnp.asarray(xr), jnp.asarray(xi), n=n, p=p, strategy=strategy
+    )
+    want_r, want_i = ref.stockham_pass(
+        xr.astype(np.float64), xi.astype(np.float64), n, p, strategy
+    )
+    assert rel_l2(got_r, got_i, want_r, want_i) < 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([8, 32, 128]), seed=seeds)
+def test_fp16_dual_select_stays_accurate(n, seed):
+    """Theorem 1 consequence: fp16 dual-select error stays ~m*eps."""
+    rng = np.random.default_rng(seed)
+    xr = rng.standard_normal((1, n)).astype(np.float16)
+    xi = rng.standard_normal((1, n)).astype(np.float16)
+    got_r, got_i = stockham.fft(jnp.asarray(xr), jnp.asarray(xi), strategy="dual")
+    want = np.fft.fft(xr.astype(np.float64) + 1j * xi.astype(np.float64), axis=-1)
+    m = int(np.log2(n))
+    # generous: a few x m * eps_fp16
+    assert rel_l2(got_r, got_i, want.real, want.imag) < 20 * m * 4.88e-4
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.sampled_from([2, 4, 8, 16, 64, 256, 1024, 4096]))
+def test_dual_select_bound_any_size(n):
+    """Theorem 1 itself, swept over sizes."""
+    _, ratio, _ = twiddle.dual_select_table(n)
+    assert np.all(np.abs(ratio) <= 1.0 + 1e-15)

@@ -1,0 +1,176 @@
+"""Pallas kernel vs pure-numpy oracle — the core L1 correctness signal."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import twiddle
+from compile.kernels import butterfly, ref, stockham
+
+RNG = np.random.default_rng(1234)
+
+
+def rand_split(b, n, dtype=np.float32):
+    return (
+        RNG.standard_normal((b, n)).astype(dtype),
+        RNG.standard_normal((b, n)).astype(dtype),
+    )
+
+
+def rel_l2(got_r, got_i, want_r, want_i):
+    got = np.asarray(got_r, np.float64) + 1j * np.asarray(got_i, np.float64)
+    want = np.asarray(want_r, np.float64) + 1j * np.asarray(want_i, np.float64)
+    return np.linalg.norm(got - want) / max(np.linalg.norm(want), 1e-300)
+
+
+class TestSinglePass:
+    """Each Stockham pass kernel matches the numpy pass oracle exactly."""
+
+    @pytest.mark.parametrize("strategy", twiddle.STRATEGIES)
+    @pytest.mark.parametrize("n,p", [(8, 0), (8, 1), (8, 2), (256, 0), (256, 4), (256, 7)])
+    def test_pass_matches_ref(self, strategy, n, p):
+        xr, xi = rand_split(3, n)
+        got_r, got_i = butterfly.stockham_pass(
+            jnp.asarray(xr), jnp.asarray(xi), n=n, p=p, strategy=strategy
+        )
+        want_r, want_i = ref.stockham_pass(
+            xr.astype(np.float64), xi.astype(np.float64), n, p, strategy
+        )
+        assert rel_l2(got_r, got_i, want_r, want_i) < 1e-6
+
+    @pytest.mark.parametrize("n,p", [(64, 0), (64, 3), (64, 5)])
+    def test_inverse_pass(self, n, p):
+        xr, xi = rand_split(2, n)
+        got_r, got_i = butterfly.stockham_pass(
+            jnp.asarray(xr), jnp.asarray(xi), n=n, p=p, strategy="dual", inverse=True
+        )
+        want_r, want_i = ref.stockham_pass(
+            xr.astype(np.float64), xi.astype(np.float64), n, p, "dual", sign=+1.0
+        )
+        assert rel_l2(got_r, got_i, want_r, want_i) < 1e-6
+
+
+class TestFullFFT:
+    @pytest.mark.parametrize("strategy", twiddle.STRATEGIES)
+    @pytest.mark.parametrize("n", [2, 4, 16, 256, 1024])
+    def test_forward_vs_numpy_fft(self, strategy, n):
+        xr, xi = rand_split(2, n)
+        got_r, got_i = stockham.fft(jnp.asarray(xr), jnp.asarray(xi), strategy=strategy)
+        want = np.fft.fft(xr.astype(np.float64) + 1j * xi.astype(np.float64), axis=-1)
+        tol = 5e-3 if strategy in ("lf", "cos") else 5e-5  # clamped baselines degrade
+        assert rel_l2(got_r, got_i, want.real, want.imag) < tol
+
+    @pytest.mark.parametrize("n", [4, 64, 1024])
+    def test_roundtrip_identity(self, n):
+        xr, xi = rand_split(2, n)
+        fr, fi = stockham.fft(jnp.asarray(xr), jnp.asarray(xi), strategy="dual")
+        gr, gi = stockham.fft(fr, fi, strategy="dual", inverse=True)
+        assert rel_l2(gr, gi, xr, xi) < 1e-5
+
+    def test_impulse_is_flat(self):
+        n = 64
+        xr = np.zeros((1, n), np.float32)
+        xr[0, 0] = 1.0
+        xi = np.zeros_like(xr)
+        fr, fi = stockham.fft(jnp.asarray(xr), jnp.asarray(xi), strategy="dual")
+        np.testing.assert_allclose(np.asarray(fr), 1.0, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(fi), 0.0, atol=1e-5)
+
+    def test_linearity(self):
+        n = 128
+        ar, ai = rand_split(1, n)
+        br, bi = rand_split(1, n)
+        f = lambda r, i: stockham.fft(jnp.asarray(r), jnp.asarray(i), strategy="dual")
+        sr, si = f(ar + br, ai + bi)
+        fr1, fi1 = f(ar, ai)
+        fr2, fi2 = f(br, bi)
+        assert rel_l2(sr, si, np.asarray(fr1) + np.asarray(fr2),
+                      np.asarray(fi1) + np.asarray(fi2)) < 1e-5
+
+    def test_parseval(self):
+        n = 256
+        xr, xi = rand_split(1, n)
+        fr, fi = stockham.fft(jnp.asarray(xr), jnp.asarray(xi), strategy="dual")
+        time_e = np.sum(xr.astype(np.float64) ** 2 + xi.astype(np.float64) ** 2)
+        freq_e = np.sum(np.asarray(fr, np.float64) ** 2 + np.asarray(fi, np.float64) ** 2) / n
+        assert abs(time_e - freq_e) / time_e < 1e-5
+
+
+class TestFusedMode:
+    """The fused all-passes-in-one-kernel AOT path is bit-identical to
+    the per-pass composition (EXPERIMENTS.md §Perf L2)."""
+
+    @pytest.mark.parametrize("strategy", twiddle.STRATEGIES)
+    @pytest.mark.parametrize("n", [4, 64, 1024])
+    def test_fused_bit_identical_to_per_pass(self, strategy, n):
+        xr, xi = rand_split(2, n)
+        a = stockham.fft(jnp.asarray(xr), jnp.asarray(xi), strategy=strategy, mode="fused")
+        b = stockham.fft(jnp.asarray(xr), jnp.asarray(xi), strategy=strategy, mode="per-pass")
+        assert np.array_equal(np.asarray(a[0]), np.asarray(b[0]))
+        assert np.array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+    def test_fused_inverse_bit_identical(self):
+        n = 256
+        xr, xi = rand_split(1, n)
+        a = stockham.fft(jnp.asarray(xr), jnp.asarray(xi), inverse=True, mode="fused")
+        b = stockham.fft(jnp.asarray(xr), jnp.asarray(xi), inverse=True, mode="per-pass")
+        assert np.array_equal(np.asarray(a[0]), np.asarray(b[0]))
+
+    def test_unknown_mode_rejected(self):
+        xr, xi = rand_split(1, 8)
+        with pytest.raises(ValueError):
+            stockham.fft(jnp.asarray(xr), jnp.asarray(xi), mode="bogus")
+
+
+class TestPrecisionStory:
+    """FP32: all strategies equivalent (paper SSV 'FP32 precision')."""
+
+    def test_fp32_equivalence(self):
+        n = 1024
+        xr, xi = rand_split(4, n)
+        want = np.fft.fft(xr.astype(np.float64) + 1j * xi.astype(np.float64), axis=-1)
+        errs = {}
+        for strategy in ("dual", "standard"):
+            fr, fi = stockham.fft(jnp.asarray(xr), jnp.asarray(xi), strategy=strategy)
+            errs[strategy] = rel_l2(fr, fi, want.real, want.imag)
+        # Both ~1e-7, within 10x of each other.
+        assert errs["dual"] < 1e-6
+        assert errs["standard"] < 1e-6
+
+    def test_fp16_dual_beats_lf(self):
+        """In half precision the dual-select table wins (paper SS V).
+
+        The clamped LF table contains |t| up to 1e7 whose products
+        overflow/amplify in fp16; dual-select stays finite and accurate.
+        """
+        n = 1024
+        xr, xi = (z.astype(np.float16) for z in rand_split(2, n))
+        want = np.fft.fft(xr.astype(np.float64) + 1j * xi.astype(np.float64), axis=-1)
+        fr, fi = stockham.fft(jnp.asarray(xr), jnp.asarray(xi), strategy="dual")
+        err_dual = rel_l2(fr, fi, want.real, want.imag)
+        fr, fi = stockham.fft(jnp.asarray(xr), jnp.asarray(xi), strategy="lf")
+        err_lf = rel_l2(fr, fi, want.real, want.imag)
+        assert err_dual < 5e-2
+        # The clamped LF ratio (1e7) overflows fp16 entirely: the result
+        # is NaN/inf — the paper's "rendering the FFT result meaningless".
+        assert np.isnan(err_lf) or err_lf > 10 * err_dual
+
+
+class TestMatchedFilterOracle:
+    def test_matched_filter_peaks_at_target_delay(self):
+        """Pulse compression concentrates energy at the pulse delay."""
+        from compile import model as model_lib
+
+        n = 1024
+        chirp = model_lib.lfm_chirp(256)
+        delay = 300
+        x = np.zeros(n, dtype=complex)
+        x[delay : delay + 256] = chirp
+        hr = np.zeros((1, n)); hi = np.zeros((1, n))
+        full = np.zeros(n, dtype=complex)
+        full[:256] = chirp
+        Hr, Hi = ref.stockham_fft(full.real[None], full.imag[None], "dual")
+        yr, yi = ref.matched_filter(x.real[None], x.imag[None], Hr, Hi)
+        mag = np.abs(yr + 1j * yi)[0]
+        assert int(np.argmax(mag)) == delay

@@ -1,0 +1,102 @@
+"""Layer-2 model graphs and the AOT lowering pipeline."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model as model_lib
+from compile.kernels import ref
+
+
+RNG = np.random.default_rng(99)
+
+
+def rel_l2(got, want):
+    got = np.asarray(got, np.float64)
+    want = np.asarray(want, np.float64)
+    return np.linalg.norm(got - want) / max(np.linalg.norm(want), 1e-300)
+
+
+class TestModels:
+    @pytest.mark.parametrize("n", [256, 1024])
+    def test_fft_model_matches_numpy(self, n):
+        fn = model_lib.make_fft(n, "dual")
+        xr = RNG.standard_normal((2, n)).astype(np.float32)
+        xi = RNG.standard_normal((2, n)).astype(np.float32)
+        yr, yi = jax.jit(fn)(jnp.asarray(xr), jnp.asarray(xi))
+        want = np.fft.fft(xr.astype(np.float64) + 1j * xi.astype(np.float64), axis=-1)
+        assert rel_l2(np.asarray(yr) + 1j * np.asarray(yi), want) < 1e-5
+
+    def test_inverse_model(self):
+        n = 256
+        fwd = jax.jit(model_lib.make_fft(n, "dual", inverse=False))
+        inv = jax.jit(model_lib.make_fft(n, "dual", inverse=True))
+        xr = RNG.standard_normal((1, n)).astype(np.float32)
+        xi = RNG.standard_normal((1, n)).astype(np.float32)
+        yr, yi = inv(*fwd(jnp.asarray(xr), jnp.asarray(xi)))
+        assert rel_l2(np.asarray(yr), xr) < 1e-5
+        assert rel_l2(np.asarray(yi), xi) < 1e-5
+
+    def test_matched_filter_model_vs_oracle(self):
+        n = 512
+        fn = jax.jit(model_lib.make_matched_filter(n, "dual"))
+        xr = RNG.standard_normal((2, n)).astype(np.float32)
+        xi = RNG.standard_normal((2, n)).astype(np.float32)
+        yr, yi = fn(jnp.asarray(xr), jnp.asarray(xi))
+
+        h = model_lib.lfm_chirp(n)
+        hr, hi = ref.stockham_fft(h.real[None], h.imag[None], "dual")
+        wr, wi = ref.matched_filter(
+            xr.astype(np.float64), xi.astype(np.float64), hr, hi
+        )
+        assert rel_l2(np.asarray(yr) + 1j * np.asarray(yi), wr + 1j * wi) < 1e-4
+
+    def test_power_spectrum_model(self):
+        n = 256
+        fn = jax.jit(model_lib.make_power_spectrum(n, "dual"))
+        xr = RNG.standard_normal((1, n)).astype(np.float32)
+        xi = np.zeros_like(xr)
+        (ps,) = fn(jnp.asarray(xr), jnp.asarray(xi))
+        want = np.abs(np.fft.fft(xr.astype(np.float64), axis=-1)) ** 2
+        assert rel_l2(ps, want) < 1e-4
+
+    def test_chirp_is_unit_amplitude(self):
+        c = model_lib.lfm_chirp(1024)
+        np.testing.assert_allclose(np.abs(c), 1.0, atol=1e-12)
+
+
+class TestAotLowering:
+    def test_hlo_text_emitted(self):
+        text = aot.lower_variant("fft", 64, 2, "dual", False)
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+
+    def test_hlo_text_has_no_custom_calls(self):
+        """interpret=True must lower to plain HLO the CPU client can run."""
+        text = aot.lower_variant("fft", 64, 1, "dual", False)
+        assert "custom-call" not in text.lower() or "mosaic" not in text.lower()
+
+    def test_variant_name_stable(self):
+        assert (
+            aot.variant_name("fft", 1024, 32, "dual", False)
+            == "fft_fwd_dual_n1024_b32_f32"
+        )
+
+    def test_manifest_on_disk_if_built(self):
+        """If `make artifacts` ran, the manifest must describe real files."""
+        art = os.path.join(os.path.dirname(__file__), "../../artifacts")
+        mpath = os.path.join(art, "manifest.json")
+        if not os.path.exists(mpath):
+            pytest.skip("artifacts not built")
+        with open(mpath) as f:
+            manifest = json.load(f)
+        assert manifest["format"] == "hlo-text"
+        for a in manifest["artifacts"]:
+            path = os.path.join(art, a["file"])
+            assert os.path.exists(path), a["file"]
+            assert a["inputs"] == [[a["batch"], a["n"]]] * 2

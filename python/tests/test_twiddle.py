@@ -1,0 +1,118 @@
+"""Unit tests for the dual-select twiddle tables (paper Algorithm 1)."""
+
+import numpy as np
+import pytest
+
+from compile import twiddle
+
+SIZES = [2, 4, 8, 16, 64, 256, 1024, 4096]
+
+
+class TestDualSelectBound:
+    """Theorem 1: |t| <= 1 for every twiddle factor, any N."""
+
+    @pytest.mark.parametrize("n", SIZES)
+    def test_flat_table_bounded(self, n):
+        _, ratio, _ = twiddle.dual_select_table(n)
+        assert np.all(np.abs(ratio) <= 1.0 + 1e-15)
+
+    @pytest.mark.parametrize("n", SIZES)
+    def test_per_pass_tables_bounded(self, n):
+        m = int(np.log2(n))
+        for p in range(m):
+            _, _, t, _ = twiddle.ratio_table(twiddle.pass_angles(n, p), "dual")
+            assert np.all(np.abs(t) <= 1.0 + 1e-15), f"pass {p}"
+
+    @pytest.mark.parametrize("n", SIZES)
+    def test_multiplier_at_least_invsqrt2(self, n):
+        """The selected outer multiplier is max(|cos|,|sin|) >= 1/sqrt(2)."""
+        mult, _, _ = twiddle.dual_select_table(n)
+        assert np.all(np.abs(mult) >= 1.0 / np.sqrt(2.0) - 1e-15)
+
+    def test_max_ratio_exactly_one_at_n_over_8(self):
+        """Paper SS V: dual-select max is 1.0, attained at k = N/8."""
+        _, ratio, _ = twiddle.dual_select_table(1024)
+        k = int(np.argmax(np.abs(ratio)))
+        assert k == 1024 // 8
+        assert abs(np.abs(ratio[k]) - 1.0) < 1e-12
+
+
+class TestPaperConstants:
+    """The exact Table I numbers for N=1024."""
+
+    def test_lf_max_ratio_163(self):
+        st = twiddle.ratio_stats(1024, "lf")
+        assert st["max_nonsingular"] == pytest.approx(163.0, abs=0.05)
+        assert st["argmax_k"] == 1  # smallest nonzero angle
+        assert st["singular"] == 1  # W^0
+
+    def test_cos_near_singular(self):
+        st = twiddle.ratio_stats(1024, "cos")
+        assert st["singular"] == 0  # cos(pi/2) is not exactly 0 in f64
+        assert st["near_singular"] == 1  # the paper's "0*" footnote
+        assert st["max_clamped"] > 1e16
+
+    def test_dual_no_singularities(self):
+        st = twiddle.ratio_stats(1024, "dual")
+        assert st["singular"] == 0
+        assert st["near_singular"] == 0
+        assert st["max_nonsingular"] == pytest.approx(1.0, abs=1e-12)
+
+    def test_path_split_50_50(self):
+        """Paper SS V: exactly 256/256 for N=1024."""
+        st = twiddle.ratio_stats(1024, "dual")
+        assert st["cos_path_count"] == 256
+        assert st["sin_path_count"] == 256
+
+    @pytest.mark.parametrize("n", [8, 16, 64, 256, 1024, 4096])
+    def test_path_split_even_when_divisible_by_8(self, n):
+        st = twiddle.ratio_stats(n, "dual")
+        assert st["cos_path_count"] == st["sin_path_count"] == n // 4
+
+
+class TestClamping:
+    def test_lf_clamp_bounds_table(self):
+        m1, m2, t, sel = twiddle.ratio_table(
+            twiddle.pass_angles(1024, 0), "lf", clamp=True
+        )
+        assert np.all(np.isfinite(t))
+        assert np.max(np.abs(t)) == pytest.approx(1.0 / twiddle.CLAMP_EPS)
+
+    def test_lf_unclamped_is_singular(self):
+        _, _, t, _ = twiddle.ratio_table(
+            twiddle.pass_angles(1024, 0), "lf", clamp=False
+        )
+        assert not np.all(np.isfinite(t))
+
+    def test_dual_never_needs_clamp(self):
+        for p in range(10):
+            a = twiddle.pass_angles(1024, p)
+            unclamped = twiddle.ratio_table(a, "dual", clamp=False)
+            clamped = twiddle.ratio_table(a, "dual", clamp=True)
+            for u, c in zip(unclamped, clamped):
+                np.testing.assert_array_equal(u, c)
+
+
+class TestTableStructure:
+    @pytest.mark.parametrize("n", SIZES)
+    def test_pass_angle_union_covers_flat_table(self, n):
+        """Union of per-pass twiddles == the flat k in [0, n/2) table."""
+        m = int(np.log2(n))
+        seen = set()
+        for p in range(m):
+            l = n >> (p + 1)
+            for j in range(1 << p):
+                seen.add(j * l)
+        assert seen == set(range(n // 2))
+
+    def test_sign_flag_encodable(self):
+        """m1 = sigma*mult, m2 = mult: sigma recoverable from m1/m2."""
+        for p in range(10):
+            m1, m2, _, sel = twiddle.ratio_table(twiddle.pass_angles(1024, p), "dual")
+            sigma = np.where(sel != 0.0, 1.0, -1.0)
+            np.testing.assert_allclose(m1, sigma * m2, rtol=0, atol=0)
+
+    def test_inverse_angles_conjugate(self):
+        fwd = twiddle.pass_angles(1024, 3, -1.0)
+        inv = twiddle.pass_angles(1024, 3, +1.0)
+        np.testing.assert_allclose(fwd, -inv)

@@ -1,0 +1,140 @@
+//! End-to-end serving benchmark: the dynamic-batching coordinator
+//! under an open-loop Poisson radar workload, on both backends —
+//! latency/throughput plus the batching-overhead checkpoint from
+//! DESIGN.md §Perf.
+//!
+//! Run: `cargo bench --bench e2e_serving`
+//! (PJRT section requires `make artifacts`; skipped otherwise.)
+
+use std::time::{Duration, Instant};
+
+use fmafft::bench_util::header;
+use fmafft::coordinator::batcher::BatchPolicy;
+use fmafft::coordinator::{FftOp, Server, ServerConfig};
+use fmafft::workload::{ArrivalTrace, SignalKind, TraceConfig, WorkloadGen};
+
+struct RunStats {
+    completed: usize,
+    rejected: usize,
+    wall: f64,
+    p50_us: u64,
+    p99_us: u64,
+    mean_batch: f64,
+}
+
+fn drive(server: &Server, n: usize, rate: f64, count: usize, kind: SignalKind) -> RunStats {
+    let trace = ArrivalTrace::poisson(TraceConfig { rate, count }, 17);
+    let mut gen = WorkloadGen::new(n, 23);
+    let mut rxs = Vec::with_capacity(count);
+    let mut rejected = 0usize;
+    let t0 = Instant::now();
+    for &at in &trace.arrivals {
+        let target = Duration::from_secs_f64(at);
+        let now = t0.elapsed();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let f = gen.frame(kind);
+        match server.submit(FftOp::Forward, f.re, f.im) {
+            Ok(rx) => rxs.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    server.drain();
+    let mut completed = 0usize;
+    for rx in rxs {
+        if rx
+            .recv_timeout(Duration::from_secs(60))
+            .map(|r| r.is_ok())
+            .unwrap_or(false)
+        {
+            completed += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = server.metrics();
+    RunStats {
+        completed,
+        rejected,
+        wall,
+        p50_us: m.latency_quantile_us(0.5),
+        p99_us: m.latency_quantile_us(0.99),
+        mean_batch: m.mean_batch(),
+    }
+}
+
+fn report(label: &str, s: &RunStats) {
+    println!(
+        "{label:<40} {:>6} ok {:>4} rej  {:>8.0} req/s  p50 {:>6}us  p99 {:>7}us  mean_batch {:.1}",
+        s.completed,
+        s.rejected,
+        s.completed as f64 / s.wall,
+        s.p50_us,
+        s.p99_us,
+        s.mean_batch
+    );
+}
+
+fn main() {
+    header("E2E serving — dynamic-batching coordinator (radar FFT workload)");
+    let quick = std::env::var("FMAFFT_BENCH_QUICK").ok().as_deref() == Some("1");
+    let n = 1024;
+    let count = if quick { 500 } else { 2000 };
+    let kind = SignalKind::RadarReturn { pulse_len: 256, snr_db: 0.0 };
+
+    // Native backend: rate sweep.
+    for rate in [1000.0, 5000.0, 20000.0] {
+        let mut cfg = ServerConfig::native(n);
+        cfg.workers = 4;
+        cfg.policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(300) };
+        let server = Server::start(cfg).unwrap();
+        let stats = drive(&server, n, rate, count, kind);
+        report(&format!("native rate={rate}/s"), &stats);
+        server.shutdown();
+    }
+
+    // Batching ablation at fixed rate (batch 1 vs 32).
+    println!("\nbatching ablation (native, rate=10000/s):");
+    let mut base_p50 = 0u64;
+    for max_batch in [1usize, 8, 32] {
+        let mut cfg = ServerConfig::native(n);
+        cfg.workers = 4;
+        cfg.policy = BatchPolicy {
+            max_batch,
+            max_wait: if max_batch == 1 {
+                Duration::from_micros(1)
+            } else {
+                Duration::from_micros(300)
+            },
+        };
+        let server = Server::start(cfg).unwrap();
+        let stats = drive(&server, n, 10_000.0, count, kind);
+        report(&format!("  max_batch={max_batch}"), &stats);
+        if max_batch == 1 {
+            base_p50 = stats.p50_us;
+        } else if max_batch == 32 {
+            println!(
+                "  batcher p50 overhead vs direct: {:+} us (target < 1000us under load)",
+                stats.p50_us as i64 - base_p50 as i64
+            );
+        }
+        server.shutdown();
+    }
+
+    // PJRT backend (AOT JAX/Pallas artifacts).
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(dir).join("manifest.json").exists() {
+        println!("\npjrt backend (AOT artifacts):");
+        for rate in [500.0, 2000.0] {
+            let mut cfg = ServerConfig::pjrt(n, dir);
+            cfg.workers = 1; // one PJRT client per worker; keep it lean
+            cfg.policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(500) };
+            let server = Server::start(cfg).unwrap();
+            let stats = drive(&server, n, rate, count.min(1000), kind);
+            report(&format!("  pjrt rate={rate}/s"), &stats);
+            server.shutdown();
+        }
+    } else {
+        println!("\npjrt backend skipped: run `make artifacts` first");
+    }
+}

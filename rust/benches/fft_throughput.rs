@@ -1,0 +1,100 @@
+//! End-to-end transform throughput across strategies, sizes and
+//! algorithms (Stockham radix-2, radix-4, DIT) — the whole-transform
+//! version of the zero-overhead claim plus the native-core performance
+//! numbers recorded in EXPERIMENTS.md §Perf.
+//!
+//! Run: `cargo bench --bench fft_throughput`
+
+use std::hint::black_box;
+
+use fmafft::bench_util::{bench, config_from_env, header};
+use fmafft::fft::dit::DitPlan;
+use fmafft::fft::radix4::Radix4Plan;
+use fmafft::fft::{Direction, Plan, Strategy};
+use fmafft::precision::SplitBuf;
+use fmafft::util::prng::Pcg32;
+
+fn signal(n: usize, seed: u64) -> SplitBuf<f32> {
+    let mut rng = Pcg32::seed(seed);
+    let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+    let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+    SplitBuf::from_f64(&re, &im)
+}
+
+fn main() {
+    header("FFT transform throughput (native core, f32)");
+    let cfg = config_from_env();
+
+    // Strategy comparison at N=1024 (zero-overhead at transform level).
+    let mut per_strategy = Vec::new();
+    for strategy in Strategy::ALL {
+        let n = 1024;
+        let plan = Plan::<f32>::new(n, strategy, Direction::Forward).unwrap();
+        let input = signal(n, 3);
+        let mut buf = input.clone();
+        let mut scratch = SplitBuf::zeroed(n);
+        let r = bench(&format!("stockham r2 {} n=1024", strategy.name()), &cfg, || {
+            buf.re.copy_from_slice(&input.re);
+            buf.im.copy_from_slice(&input.im);
+            plan.execute(&mut buf, &mut scratch);
+            black_box(&buf.re[0]);
+        });
+        println!(
+            "{}  ({:.2} Mpt/s)",
+            r.report(),
+            r.throughput(1024.0) / 1e6
+        );
+        per_strategy.push((strategy, r.mean_ns));
+    }
+    let lf = per_strategy.iter().find(|(s, _)| *s == Strategy::LinzerFeig).unwrap().1;
+    let dual = per_strategy.iter().find(|(s, _)| *s == Strategy::DualSelect).unwrap().1;
+    println!(
+        "\ntransform-level dual vs LF overhead: {:+.1}% (paper: zero)\n",
+        (dual / lf - 1.0) * 100.0
+    );
+
+    // Size sweep (dual-select).
+    for n in [64usize, 256, 1024, 4096, 16384, 65536] {
+        let plan = Plan::<f32>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let input = signal(n, 4);
+        let mut buf = input.clone();
+        let mut scratch = SplitBuf::zeroed(n);
+        let r = bench(&format!("stockham r2 dual n={n}"), &cfg, || {
+            buf.re.copy_from_slice(&input.re);
+            buf.im.copy_from_slice(&input.im);
+            plan.execute(&mut buf, &mut scratch);
+            black_box(&buf.re[0]);
+        });
+        let mpts = r.throughput(n as f64) / 1e6;
+        let ns_per_pt = r.mean_ns / n as f64;
+        println!("{}  ({mpts:.2} Mpt/s, {ns_per_pt:.2} ns/pt)", r.report());
+    }
+    println!();
+
+    // Algorithm comparison at N=1024.
+    {
+        let n = 1024;
+        let input = signal(n, 5);
+
+        let r4 = Radix4Plan::<f32>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let mut buf = input.clone();
+        let mut scratch = SplitBuf::zeroed(n);
+        let r = bench("stockham r4 dual n=1024", &cfg, || {
+            buf.re.copy_from_slice(&input.re);
+            buf.im.copy_from_slice(&input.im);
+            r4.execute(&mut buf, &mut scratch);
+            black_box(&buf.re[0]);
+        });
+        println!("{}  ({:.2} Mpt/s)", r.report(), r.throughput(n as f64) / 1e6);
+
+        let dit = DitPlan::<f32>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let mut buf2 = input.clone();
+        let r = bench("in-place DIT dual n=1024", &cfg, || {
+            buf2.re.copy_from_slice(&input.re);
+            buf2.im.copy_from_slice(&input.im);
+            dit.execute(&mut buf2);
+            black_box(&buf2.re[0]);
+        });
+        println!("{}  ({:.2} Mpt/s)", r.report(), r.throughput(n as f64) / 1e6);
+    }
+}

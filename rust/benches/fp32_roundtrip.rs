@@ -1,0 +1,57 @@
+//! Regenerates the paper's **§V "FP32 precision"** claim: in float32
+//! both Linzer-Feig and dual-select produce equivalent ~1e-7 relative
+//! L2 roundtrip error — the dual-select advantage is specific to low
+//! precision.
+//!
+//! Run: `cargo bench --bench fp32_roundtrip`
+
+use fmafft::analysis::empirical::measure;
+use fmafft::analysis::report::{sci, Table};
+use fmafft::fft::Strategy;
+
+fn main() {
+    fmafft::bench_util::header("§V FP32 precision — roundtrip rel-L2 (paper: ~1e-7, equivalent)");
+
+    let mut t = Table::new(
+        "FFT→IFFT roundtrip, f32, random input".to_string(),
+        &["N", "Linzer-Feig", "Dual-Select", "Standard", "ratio LF/dual"],
+    );
+    let mut ok = true;
+    for n in [256usize, 1024, 4096] {
+        let lf = measure::<f32>(n, Strategy::LinzerFeig, 9).roundtrip_rel_l2;
+        let dual = measure::<f32>(n, Strategy::DualSelect, 9).roundtrip_rel_l2;
+        let std_ = measure::<f32>(n, Strategy::Standard, 9).roundtrip_rel_l2;
+        t.row(&[
+            n.to_string(),
+            sci(lf),
+            sci(dual),
+            sci(std_),
+            format!("{:.2}", lf / dual),
+        ]);
+        if n == 1024 {
+            ok &= lf < 1e-6 && dual < 1e-6 && (0.25..4.0).contains(&(lf / dual));
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "paper checkpoint: both ~1e-7 and equivalent at N=1024 → [{}]",
+        if ok { "PASS" } else { "FAIL" }
+    );
+
+    // Forward error against the f64 DFT oracle, for completeness.
+    let mut fwd = Table::new(
+        "Forward rel-L2 vs f64 DFT, f32".to_string(),
+        &["N", "Linzer-Feig", "Dual-Select"],
+    );
+    for n in [256usize, 1024, 4096] {
+        fwd.row(&[
+            n.to_string(),
+            sci(measure::<f32>(n, Strategy::LinzerFeig, 9).forward_rel_l2),
+            sci(measure::<f32>(n, Strategy::DualSelect, 9).forward_rel_l2),
+        ]);
+    }
+    println!("{}", fwd.render());
+    if !ok {
+        std::process::exit(1);
+    }
+}

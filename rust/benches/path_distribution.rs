@@ -1,0 +1,64 @@
+//! Regenerates the paper's **§V "Path distribution"** claim (exactly
+//! 256/512 cosine-path twiddles for N=1024 — a 50/50 split) and the
+//! **§VI generality** claim (min(|tan|,|cot|) ≤ 1 independent of size
+//! and radix), including the radix-4 table audit.
+//!
+//! Run: `cargo bench --bench path_distribution`
+
+use fmafft::analysis::ratio::ratio_stats;
+use fmafft::analysis::report::Table;
+use fmafft::fft::radix4::Radix4Plan;
+use fmafft::fft::{Direction, Strategy};
+
+fn main() {
+    fmafft::bench_util::header("§V path distribution + §VI generality");
+
+    let mut t = Table::new(
+        "Dual-select path split by size".to_string(),
+        &["N", "cos path", "sin path", "|t|max", "singular"],
+    );
+    let mut ok = true;
+    for n in [8usize, 16, 64, 256, 1024, 4096, 65536] {
+        let st = ratio_stats(n, Strategy::DualSelect);
+        t.row(&[
+            n.to_string(),
+            st.cos_path.to_string(),
+            st.sin_path.to_string(),
+            format!("{:.9}", st.max_nonsingular),
+            st.singular.to_string(),
+        ]);
+        ok &= st.cos_path == st.sin_path; // exact 50/50 when 8 | N
+        ok &= st.max_nonsingular <= 1.0 + 1e-12 && st.singular == 0;
+    }
+    println!("{}", t.render());
+    let n1024 = ratio_stats(1024, Strategy::DualSelect);
+    println!(
+        "paper checkpoint: N=1024 split {}/{} (paper 256/256) → [{}]\n",
+        n1024.cos_path,
+        n1024.sin_path,
+        if n1024.cos_path == 256 && n1024.sin_path == 256 { "PASS" } else { "FAIL" }
+    );
+    ok &= n1024.cos_path == 256;
+
+    // §VI: radix-4 tables are bounded too.
+    let mut r4 = Table::new(
+        "Radix-4 dual-select |t|max (3 twiddle tables per pass)".to_string(),
+        &["N", "|t|max", "bounded"],
+    );
+    for n in [16usize, 64, 256, 1024, 4096] {
+        let plan = Radix4Plan::<f64>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let m = plan.max_ratio();
+        r4.row(&[n.to_string(), format!("{m:.12}"), (m <= 1.0 + 1e-12).to_string()]);
+        ok &= m <= 1.0 + 1e-12;
+    }
+    println!("{}", r4.render());
+    // ... while radix-4 LF is unbounded (clamped to 1e7):
+    let lf = Radix4Plan::<f64>::new(1024, Strategy::LinzerFeig, Direction::Forward).unwrap();
+    println!(
+        "radix-4 Linzer-Feig |t|max = {:.3e} (unbounded baseline)",
+        lf.max_ratio()
+    );
+    if !ok {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,84 @@
+//! Regenerates **Table II**: cumulative FP16 error bound over
+//! m = log2(N) Stockham passes, plus the *measured* FP16 error of the
+//! actual transforms (software binary16, single-rounding FMA) — the
+//! paper's 235x improvement claim, bounded and measured.
+//!
+//! Run: `cargo bench --bench table2_cumulative`
+
+use fmafft::analysis::bounds::{cumulative_bound, precision_sweep, table2};
+use fmafft::analysis::empirical::measure;
+use fmafft::analysis::report::{sci, Table};
+use fmafft::fft::Strategy;
+use fmafft::precision::{Bf16, F16, Real};
+
+fn main() {
+    fmafft::bench_util::header("TABLE II — cumulative FP16 bound over m=10 passes (paper §V)");
+
+    let n = 1024;
+    let (rows, improvement) = table2(n);
+    let mut t = Table::new(
+        "Bound (eq. 11)".to_string(),
+        &["Strategy", "Cumulative bound", "Improvement"],
+    );
+    for (i, row) in rows.iter().enumerate() {
+        t.row(&[
+            row.strategy.label().to_string(),
+            sci(row.cumulative),
+            if i == 1 { format!("{improvement:.0}x") } else { "—".to_string() },
+        ]);
+    }
+    println!("{}", t.render());
+
+    let ok_bound = (rows[0].cumulative - 1.15).abs() < 0.01
+        && (rows[1].cumulative - 4.89e-3).abs() < 2e-5
+        && (improvement - 235.0).abs() < 2.0;
+    println!(
+        "paper checkpoints: LF 1.15, dual 4.89e-3, improvement 235x → [{}]\n",
+        if ok_bound { "PASS" } else { "FAIL" }
+    );
+
+    // Measured error in true half precision (software binary16).
+    let mut meas = Table::new(
+        "Measured forward rel-L2 error vs f64 DFT (software fp16/bf16, N=1024)".to_string(),
+        &["Strategy", "fp16 measured", "bf16 measured"],
+    );
+    let mut dual_err = 0.0;
+    let mut lf_err = 0.0;
+    for strategy in [Strategy::LinzerFeig, Strategy::Cosine, Strategy::DualSelect, Strategy::Standard] {
+        let m16 = measure::<F16>(n, strategy, 42);
+        let mb = measure::<Bf16>(n, strategy, 42);
+        if strategy == Strategy::DualSelect {
+            dual_err = m16.forward_rel_l2;
+        }
+        if strategy == Strategy::LinzerFeig {
+            lf_err = m16.forward_rel_l2;
+        }
+        meas.row(&[
+            strategy.label().to_string(),
+            sci(m16.forward_rel_l2),
+            sci(mb.forward_rel_l2),
+        ]);
+    }
+    println!("{}", meas.render());
+    println!(
+        "measured: dual fp16 err {} is within the eq.(11) bound {} and LF is {} — \"meaningless\" [{}]",
+        sci(dual_err),
+        sci(cumulative_bound(1.0, <F16 as Real>::EPSILON, 10)),
+        if lf_err.is_nan() { "NaN".to_string() } else { sci(lf_err) },
+        if dual_err < cumulative_bound(1.0, <F16 as Real>::EPSILON, 10) * 10.0
+            && (lf_err.is_nan() || lf_err > 0.5)
+        {
+            "PASS"
+        } else {
+            "FAIL"
+        }
+    );
+
+    println!("\nprecision sweep (bound improvement factor LF→dual):");
+    for (name, lf, dual, imp) in precision_sweep(n) {
+        println!("  {name:<5} LF {} → dual {}  ({imp:.0}x)", sci(lf), sci(dual));
+    }
+    if !ok_bound {
+        std::process::exit(1);
+    }
+}

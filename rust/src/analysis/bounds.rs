@@ -1,0 +1,175 @@
+//! The paper's §IV error bounds — eq. (10) per butterfly, eq. (11)
+//! cumulative — and the generators for Tables I and II.
+
+use crate::fft::Strategy;
+use crate::precision::{Real, F16};
+
+use super::ratio::{ratio_stats, RatioStats};
+
+/// Eq. (10): per-butterfly bound δ < C·|t|·ε·||b||, reported with the
+/// paper's normalization (C·||b|| = 1): `tmax · eps`.
+pub fn per_butterfly_bound(tmax: f64, eps: f64) -> f64 {
+    tmax * eps
+}
+
+/// Eq. (11): cumulative relative error over m passes,
+/// E ≤ (1 + |t|max·ε)^m − 1  (≈ m·|t|max·ε for small arguments).
+///
+/// Evaluated as expm1(m·ln1p(t·ε)) so tiny arguments (f64 working
+/// precision) do not underflow to 0.
+pub fn cumulative_bound(tmax: f64, eps: f64, m: u32) -> f64 {
+    (m as f64 * (tmax * eps).ln_1p()).exp_m1()
+}
+
+/// One row of Table I.
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    pub strategy: Strategy,
+    pub stats: RatioStats,
+    /// |t|max as the paper reports it: non-singular max for LF/dual,
+    /// the near-singular max for cosine (its ">10^16").
+    pub reported_tmax: f64,
+    /// Number of true singularities (LF: 1; cosine: 0 with the "near"
+    /// caveat; dual: 0).
+    pub singularities: usize,
+    /// FP16 per-butterfly bound, or +inf when the table diverges in
+    /// fp16 (cosine, and LF's stored clamped entry).
+    pub fp16_bound: f64,
+}
+
+/// Generate Table I for size `n` (paper uses N=1024).
+pub fn table1(n: usize) -> Vec<Table1Row> {
+    [Strategy::LinzerFeig, Strategy::Cosine, Strategy::DualSelect]
+        .into_iter()
+        .map(|strategy| {
+            let stats = ratio_stats(n, strategy);
+            let reported_tmax = match strategy {
+                // Paper reports the non-singular max for LF (the W^0
+                // singularity is counted in the "Sing." column).
+                Strategy::LinzerFeig => stats.max_nonsingular,
+                // ... and the near-singular max for cosine (>1e16).
+                Strategy::Cosine => stats.max_with_near,
+                _ => stats.max_nonsingular,
+            };
+            let fp16_bound = per_butterfly_bound(reported_tmax, F16::EPSILON);
+            Table1Row {
+                strategy,
+                stats,
+                reported_tmax,
+                singularities: match strategy {
+                    Strategy::LinzerFeig => 1,
+                    _ => 0,
+                },
+                fp16_bound,
+            }
+        })
+        .collect()
+}
+
+/// One row of Table II.
+#[derive(Clone, Debug)]
+pub struct Table2Row {
+    pub strategy: Strategy,
+    pub tmax: f64,
+    pub cumulative: f64,
+}
+
+/// Generate Table II: cumulative FP16 bound over `m = log2 n` passes,
+/// plus the improvement factor (paper: 235× for N=1024).
+pub fn table2(n: usize) -> (Vec<Table2Row>, f64) {
+    let m = n.trailing_zeros();
+    let rows: Vec<Table2Row> = [Strategy::LinzerFeig, Strategy::DualSelect]
+        .into_iter()
+        .map(|strategy| {
+            let tmax = ratio_stats(n, strategy).max_nonsingular;
+            Table2Row {
+                strategy,
+                tmax,
+                cumulative: cumulative_bound(tmax, F16::EPSILON, m),
+            }
+        })
+        .collect();
+    let improvement = rows[0].cumulative / rows[1].cumulative;
+    (rows, improvement)
+}
+
+/// Cumulative-bound sweep across precisions for a given strategy pair —
+/// the data behind the "advantage is specific to low precision" claim.
+pub fn precision_sweep(n: usize) -> Vec<(&'static str, f64, f64, f64)> {
+    let m = n.trailing_zeros();
+    let lf = ratio_stats(n, Strategy::LinzerFeig).max_nonsingular;
+    let dual = ratio_stats(n, Strategy::DualSelect).max_nonsingular;
+    [
+        ("fp16", F16::EPSILON),
+        ("bf16", crate::precision::Bf16::EPSILON),
+        ("f32", <f32 as Real>::EPSILON),
+        ("f64", <f64 as Real>::EPSILON),
+    ]
+    .into_iter()
+    .map(|(name, eps)| {
+        let b_lf = cumulative_bound(lf, eps, m);
+        let b_dual = cumulative_bound(dual, eps, m);
+        (name, b_lf, b_dual, b_lf / b_dual)
+    })
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper_n1024() {
+        let rows = table1(1024);
+        // Row 0: Linzer-Feig — |t|max 163.0, 1 singularity, bound 7.95e-2.
+        assert_eq!(rows[0].strategy, Strategy::LinzerFeig);
+        assert!((rows[0].reported_tmax - 163.0).abs() < 0.05);
+        assert_eq!(rows[0].singularities, 1);
+        assert!((rows[0].fp16_bound - 7.95e-2).abs() < 2e-4);
+        // Row 1: Cosine — >1e16, divergent fp16 bound.
+        assert_eq!(rows[1].strategy, Strategy::Cosine);
+        assert!(rows[1].reported_tmax > 1e16);
+        assert!(rows[1].fp16_bound > 1e12); // divergent at fp16 scale
+        assert_eq!(rows[1].stats.near_singular, 1);
+        // Row 2: Dual-select — exactly 1.0, bound = eps = 4.88e-4.
+        assert_eq!(rows[2].strategy, Strategy::DualSelect);
+        assert!((rows[2].reported_tmax - 1.0).abs() < 1e-12);
+        assert_eq!(rows[2].singularities, 0);
+        assert!((rows[2].fp16_bound - 4.88e-4).abs() < 1e-5);
+    }
+
+    #[test]
+    fn table2_matches_paper_n1024() {
+        let (rows, improvement) = table2(1024);
+        // LF cumulative: (1 + 163·4.88e-4)^10 − 1 ≈ 1.15.
+        assert!((rows[0].cumulative - 1.15).abs() < 0.01, "{}", rows[0].cumulative);
+        // Dual: 4.89e-3.
+        assert!((rows[1].cumulative - 4.89e-3).abs() < 2e-5, "{}", rows[1].cumulative);
+        // Improvement: 235×.
+        assert!((improvement - 235.0).abs() < 2.0, "improvement {improvement}");
+    }
+
+    #[test]
+    fn cumulative_linearizes_for_small_t() {
+        // E ≈ m·t·eps when t·eps << 1.
+        let e = cumulative_bound(1.0, 1e-8, 10);
+        assert!((e - 1e-7).abs() / 1e-7 < 1e-5);
+    }
+
+    #[test]
+    fn precision_sweep_shows_low_precision_specificity() {
+        let sweep = precision_sweep(1024);
+        // fp16: big improvement factor (≈235).
+        assert!(sweep[0].3 > 100.0);
+        // f64: bounds are both tiny and the *absolute* difference is
+        // negligible (≈1e-16 vs 1e-13), even though the ratio persists.
+        assert!(sweep[3].1 < 1e-12);
+        assert!(sweep[3].2 < 1e-14);
+    }
+
+    #[test]
+    fn per_butterfly_bound_is_linear_in_t() {
+        assert_eq!(per_butterfly_bound(2.0, 1e-3), 2e-3);
+        assert_eq!(per_butterfly_bound(1.0, F16::EPSILON), F16::EPSILON);
+    }
+}

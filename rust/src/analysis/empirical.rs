@@ -1,0 +1,126 @@
+//! Measured (not bounded) transform error — the §V experimental
+//! numbers: forward error vs the f64 DFT oracle and FFT→IFFT roundtrip
+//! error, per strategy × precision × size.
+
+use crate::dft;
+use crate::fft::{Direction, Plan, Strategy};
+use crate::precision::{Real, SplitBuf};
+use crate::util::metrics::rel_l2;
+use crate::util::prng::Pcg32;
+
+/// One measurement cell.
+#[derive(Clone, Debug)]
+pub struct ErrorMeasurement {
+    pub strategy: Strategy,
+    pub precision: &'static str,
+    pub n: usize,
+    /// Relative L2 error of the forward transform vs the f64 DFT.
+    pub forward_rel_l2: f64,
+    /// Relative L2 error of IFFT(FFT(x)) vs x.
+    pub roundtrip_rel_l2: f64,
+}
+
+/// Generate a deterministic unit-scale test signal (uniform in [-1, 1];
+/// keeps fp16 comfortably in range so overflow, when it happens, is the
+/// *algorithm's* doing — i.e. the clamped ratio — not the input's).
+pub fn test_signal(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Pcg32::seed(seed);
+    (
+        (0..n).map(|_| rng.range(-1.0, 1.0)).collect(),
+        (0..n).map(|_| rng.range(-1.0, 1.0)).collect(),
+    )
+}
+
+/// Measure forward + roundtrip error for one (strategy, precision, n).
+pub fn measure<T: Real>(n: usize, strategy: Strategy, seed: u64) -> ErrorMeasurement {
+    let (re, im) = test_signal(n, seed);
+    let (want_r, want_i) = dft::naive_dft(&re, &im, false);
+
+    let fwd = Plan::<T>::new(n, strategy, Direction::Forward).expect("plan");
+    let inv = Plan::<T>::new(n, strategy, Direction::Inverse).expect("plan");
+
+    let mut buf = SplitBuf::<T>::from_f64(&re, &im);
+    let mut scratch = SplitBuf::zeroed(n);
+    fwd.execute(&mut buf, &mut scratch);
+    let (got_r, got_i) = buf.to_f64();
+    let forward = rel_l2(&got_r, &got_i, &want_r, &want_i);
+
+    inv.execute(&mut buf, &mut scratch);
+    let (rt_r, rt_i) = buf.to_f64();
+    // Compare against the precision-quantized input (what the transform
+    // actually saw).
+    let qbuf = SplitBuf::<T>::from_f64(&re, &im);
+    let (qre, qim) = qbuf.to_f64();
+    let roundtrip = rel_l2(&rt_r, &rt_i, &qre, &qim);
+
+    ErrorMeasurement {
+        strategy,
+        precision: T::NAME,
+        n,
+        forward_rel_l2: forward,
+        roundtrip_rel_l2: roundtrip,
+    }
+}
+
+/// The full §V measurement grid for one size.
+pub fn measure_grid(n: usize, seed: u64) -> Vec<ErrorMeasurement> {
+    let mut out = Vec::new();
+    for strategy in Strategy::ALL {
+        out.push(measure::<f64>(n, strategy, seed));
+        out.push(measure::<f32>(n, strategy, seed));
+        out.push(measure::<crate::precision::F16>(n, strategy, seed));
+        out.push(measure::<crate::precision::Bf16>(n, strategy, seed));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precision::F16;
+
+    #[test]
+    fn fp32_roundtrip_near_1e7_for_both_strategies() {
+        // Paper §V "FP32 precision": ~1e-7 relative L2, equivalent.
+        let lf = measure::<f32>(1024, Strategy::LinzerFeig, 1);
+        let dual = measure::<f32>(1024, Strategy::DualSelect, 1);
+        assert!(lf.roundtrip_rel_l2 < 1e-6, "{}", lf.roundtrip_rel_l2);
+        assert!(dual.roundtrip_rel_l2 < 1e-6, "{}", dual.roundtrip_rel_l2);
+        // "equivalent": within 4x of each other.
+        let ratio = lf.roundtrip_rel_l2 / dual.roundtrip_rel_l2;
+        assert!((0.25..4.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn fp16_dual_select_within_cumulative_bound() {
+        let m = measure::<F16>(1024, Strategy::DualSelect, 2);
+        let bound = super::super::bounds::cumulative_bound(1.0, F16::EPSILON, 10);
+        // Measured error is below the worst-case bound (and the bound is
+        // not vacuous: within ~2 orders).
+        assert!(m.forward_rel_l2 < bound * 10.0, "{} !< {}", m.forward_rel_l2, bound);
+        assert!(m.forward_rel_l2 > bound / 100.0);
+    }
+
+    #[test]
+    fn fp16_lf_is_meaningless() {
+        // Paper: "rendering the FFT result meaningless".
+        let m = measure::<F16>(1024, Strategy::LinzerFeig, 2);
+        assert!(
+            m.forward_rel_l2.is_nan() || m.forward_rel_l2 > 0.5,
+            "LF fp16 err {}",
+            m.forward_rel_l2
+        );
+    }
+
+    #[test]
+    fn grid_covers_all_cells() {
+        let grid = measure_grid(64, 3);
+        assert_eq!(grid.len(), 16); // 4 strategies × 4 precisions
+        // f64 dual-select must be essentially exact.
+        let d64 = grid
+            .iter()
+            .find(|m| m.strategy == Strategy::DualSelect && m.precision == "f64")
+            .unwrap();
+        assert!(d64.forward_rel_l2 < 1e-12);
+    }
+}

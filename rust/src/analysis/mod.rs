@@ -1,0 +1,14 @@
+//! Error analysis: the paper's §IV bounds and §V measurements.
+//!
+//! * [`ratio`] — precomputed-ratio statistics over the twiddle table
+//!   (Table I columns 1-2 + the §V argmax/path-split claims)
+//! * [`bounds`] — eq. (10) per-butterfly and eq. (11) cumulative error
+//!   bounds (Table I column 3 and Table II)
+//! * [`empirical`] — measured forward/roundtrip error of the actual
+//!   transforms against the f64 DFT oracle (the §V FP16/FP32 claims)
+//! * [`report`] — paper-style table rendering for the CLI and benches
+
+pub mod bounds;
+pub mod empirical;
+pub mod ratio;
+pub mod report;

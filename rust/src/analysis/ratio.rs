@@ -1,0 +1,164 @@
+//! Precomputed-ratio statistics — the evidence behind Table I.
+
+use crate::fft::twiddle::CLAMP_EPS;
+use crate::fft::{Direction, Strategy};
+
+/// Statistics of a strategy's precomputed ratios over the flat twiddle
+/// table `k ∈ [0, n/2)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RatioStats {
+    pub strategy: Strategy,
+    pub n: usize,
+    /// |t|max over entries whose denominator is not (near-)zero — the
+    /// number the paper reports (163.0 for LF at N=1024).
+    pub max_nonsingular: f64,
+    /// Twiddle index attaining `max_nonsingular`.
+    pub argmax_k: usize,
+    /// Entries whose denominator is exactly ±0.0 (true singularities;
+    /// 1 for LF at W^0).
+    pub singular: usize,
+    /// Entries with 0 < |denominator| < 1e-9 (the cosine path's k=N/4,
+    /// cos(π/2) ≈ 6e-17 — the paper's "0*" footnote).
+    pub near_singular: usize,
+    /// |t|max including near-singular entries (>1e16 for cosine).
+    pub max_with_near: f64,
+    /// |t|max of the table as actually *stored* after epsilon clamping
+    /// (1e7 for LF/cosine; equals max_nonsingular for dual-select).
+    pub max_clamped: f64,
+    /// Twiddles taking the cosine path (paper: 256 for N=1024 dual).
+    pub cos_path: usize,
+    /// Twiddles taking the sine path.
+    pub sin_path: usize,
+}
+
+/// Compute [`RatioStats`] for `strategy` at size `n`.
+pub fn ratio_stats(n: usize, strategy: Strategy) -> RatioStats {
+    assert!(strategy != Strategy::Standard, "standard butterfly has no ratio");
+    let half = n / 2;
+    let mut st = RatioStats {
+        strategy,
+        n,
+        max_nonsingular: 0.0,
+        argmax_k: 0,
+        singular: 0,
+        near_singular: 0,
+        max_with_near: 0.0,
+        max_clamped: 0.0,
+        cos_path: 0,
+        sin_path: 0,
+    };
+    for k in 0..half {
+        let theta = Direction::Forward.sign() * 2.0 * core::f64::consts::PI * k as f64 / n as f64;
+        let (wr, wi) = (theta.cos(), theta.sin());
+        let cosine = match strategy {
+            Strategy::DualSelect => wr.abs() >= wi.abs(),
+            Strategy::LinzerFeig => false,
+            Strategy::Cosine => true,
+            Strategy::Standard => unreachable!(),
+        };
+        if cosine {
+            st.cos_path += 1;
+        } else {
+            st.sin_path += 1;
+        }
+        let denom = if cosine { wr } else { wi };
+        let num = if cosine { wi } else { wr };
+
+        if denom == 0.0 {
+            st.singular += 1;
+        } else {
+            let t = (num / denom).abs();
+            if denom.abs() < 1e-9 {
+                st.near_singular += 1;
+                st.max_with_near = st.max_with_near.max(t);
+            } else {
+                if t > st.max_nonsingular {
+                    st.max_nonsingular = t;
+                    st.argmax_k = k;
+                }
+                st.max_with_near = st.max_with_near.max(t);
+            }
+        }
+
+        // The stored (clamped) value:
+        let clamped_denom = if strategy != Strategy::DualSelect && denom.abs() < CLAMP_EPS {
+            CLAMP_EPS
+        } else {
+            denom.abs()
+        };
+        if clamped_denom > 0.0 {
+            st.max_clamped = st.max_clamped.max(num.abs() / clamped_denom);
+        }
+    }
+    st
+}
+
+/// Sweep |t|max (non-singular) and path split across sizes — the data
+/// series behind the generality bench.
+pub fn sweep_sizes(strategy: Strategy, sizes: &[usize]) -> Vec<RatioStats> {
+    sizes.iter().map(|&n| ratio_stats(n, strategy)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_lf_row() {
+        let st = ratio_stats(1024, Strategy::LinzerFeig);
+        // |t|max = cot(π/512) = 163.0 at k=1
+        assert!((st.max_nonsingular - 162.97).abs() < 0.05);
+        assert_eq!(st.argmax_k, 1);
+        assert_eq!(st.singular, 1); // W^0
+        assert_eq!(st.near_singular, 0);
+        assert_eq!(st.sin_path, 512);
+        // Stored table after clamping holds 1e7.
+        assert!((st.max_clamped - 1.0 / CLAMP_EPS).abs() / 1e7 < 1e-6);
+    }
+
+    #[test]
+    fn table1_cosine_row() {
+        let st = ratio_stats(1024, Strategy::Cosine);
+        assert_eq!(st.singular, 0); // cos(π/2) != 0 exactly in f64
+        assert_eq!(st.near_singular, 1); // the paper's 0* footnote
+        assert!(st.max_with_near > 1e16); // paper: > 10^16
+        assert_eq!(st.cos_path, 512);
+    }
+
+    #[test]
+    fn table1_dual_row() {
+        let st = ratio_stats(1024, Strategy::DualSelect);
+        assert!((st.max_nonsingular - 1.0).abs() < 1e-12);
+        assert_eq!(st.singular, 0);
+        assert_eq!(st.near_singular, 0);
+        assert_eq!(st.cos_path, 256); // paper §V: exact 50/50 split
+        assert_eq!(st.sin_path, 256);
+        assert_eq!(st.max_clamped, st.max_nonsingular);
+    }
+
+    #[test]
+    fn dual_bound_holds_across_sweep() {
+        for st in sweep_sizes(Strategy::DualSelect, &[4, 8, 16, 256, 4096, 65536]) {
+            assert!(st.max_nonsingular <= 1.0 + 1e-15, "n={}", st.n);
+            assert_eq!(st.singular, 0, "n={}", st.n);
+            assert_eq!(st.near_singular, 0, "n={}", st.n);
+        }
+    }
+
+    #[test]
+    fn lf_max_grows_with_n() {
+        // |t|max = cot(π/(N/2)) ≈ N/(2π): doubling N doubles the bound.
+        let a = ratio_stats(512, Strategy::LinzerFeig).max_nonsingular;
+        let b = ratio_stats(1024, Strategy::LinzerFeig).max_nonsingular;
+        assert!((b / a - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn split_is_even_for_multiples_of_8() {
+        for n in [8usize, 64, 1024, 8192] {
+            let st = ratio_stats(n, Strategy::DualSelect);
+            assert_eq!(st.cos_path, n / 4, "n={n}");
+            assert_eq!(st.sin_path, n / 4, "n={n}");
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Criterion-lite: a small benchmarking harness (criterion is not
+//! available offline).  Warmup + timed samples + robust statistics,
+//! with ns/op and throughput reporting.
+
+use std::time::{Duration, Instant};
+
+/// Benchmark configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    /// Minimum number of timed samples.
+    pub min_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_samples: 10,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// A faster profile for CI-style runs.
+    pub fn quick() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(200),
+            min_samples: 5,
+        }
+    }
+}
+
+/// Result statistics (per iteration, nanoseconds).
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p99_ns: f64,
+    pub stddev_ns: f64,
+}
+
+impl BenchResult {
+    /// Mean iterations per second.
+    pub fn per_second(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+
+    /// Throughput in "units/s" given units processed per iteration.
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        self.per_second() * units_per_iter
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12.0} ns/iter  (median {:.0}, p99 {:.0}, sd {:.0}, n={})",
+            self.name, self.mean_ns, self.median_ns, self.p99_ns, self.stddev_ns, self.samples
+        )
+    }
+}
+
+/// Run `f` repeatedly: warm up, then time batches until `measure`
+/// elapses.  `f` should perform ONE logical iteration and return a
+/// value (use `std::hint::black_box` inside as needed).
+pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    // Warmup & per-iteration estimate.
+    let w0 = Instant::now();
+    let mut warm_iters = 0u64;
+    while w0.elapsed() < cfg.warmup || warm_iters < 3 {
+        f();
+        warm_iters += 1;
+    }
+    let est = w0.elapsed().as_nanos() as f64 / warm_iters as f64;
+
+    // Choose a batch size so each sample is ~1% of the measure budget
+    // (amortizes timer overhead for nanosecond-scale bodies).
+    let target_sample_ns = (cfg.measure.as_nanos() as f64 / 100.0).max(1000.0);
+    let batch = ((target_sample_ns / est.max(1.0)).ceil() as u64).clamp(1, 1 << 24);
+
+    let mut samples_ns: Vec<f64> = Vec::new();
+    let m0 = Instant::now();
+    while m0.elapsed() < cfg.measure || samples_ns.len() < cfg.min_samples {
+        let s0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples_ns.push(s0.elapsed().as_nanos() as f64 / batch as f64);
+        if samples_ns.len() > 100_000 {
+            break;
+        }
+    }
+
+    samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples_ns.len();
+    let mean = samples_ns.iter().sum::<f64>() / n as f64;
+    let var = samples_ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    BenchResult {
+        name: name.to_string(),
+        samples: n,
+        mean_ns: mean,
+        median_ns: samples_ns[n / 2],
+        p99_ns: samples_ns[(n * 99 / 100).min(n - 1)],
+        stddev_ns: var.sqrt(),
+    }
+}
+
+/// Pretty header for a bench binary.
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Quick-mode toggle from the environment (`FMAFFT_BENCH_QUICK=1`).
+pub fn config_from_env() -> BenchConfig {
+    if std::env::var("FMAFFT_BENCH_QUICK").ok().as_deref() == Some("1") {
+        BenchConfig::quick()
+    } else {
+        BenchConfig::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_a_known_body() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(10),
+            measure: Duration::from_millis(50),
+            min_samples: 5,
+        };
+        let mut x = 0u64;
+        let r = bench("spin", &cfg, || {
+            for i in 0..1000 {
+                x = x.wrapping_add(std::hint::black_box(i));
+            }
+        });
+        assert!(r.samples >= 5);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.median_ns <= r.p99_ns * 1.001);
+        assert!(r.per_second() > 0.0);
+    }
+
+    #[test]
+    fn throughput_scales_with_units() {
+        let r = BenchResult {
+            name: "x".into(),
+            samples: 1,
+            mean_ns: 1000.0,
+            median_ns: 1000.0,
+            p99_ns: 1000.0,
+            stddev_ns: 0.0,
+        };
+        assert_eq!(r.per_second(), 1e6);
+        assert_eq!(r.throughput(1024.0), 1024.0 * 1e6);
+    }
+}

@@ -1,0 +1,93 @@
+//! The `fmafft` command-line interface.
+//!
+//! ```text
+//! fmafft tables  [--n 1024]                  reproduce paper Tables I & II
+//! fmafft audit   --n N [--strategy dual]     twiddle-table audit
+//! fmafft fft     --n N [--strategy dual] [--precision f32|fp16|bf16|f64]
+//! fmafft serve   [--n 1024] [--pjrt] [--rate 2000] [--requests 5000]
+//! fmafft help
+//! ```
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+
+/// Entry point used by `main.rs`; returns the process exit code.
+pub fn run<I: IntoIterator<Item = String>>(argv: I) -> i32 {
+    let parsed = match Args::parse(argv) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("{}", commands::USAGE);
+            return 2;
+        }
+    };
+    let cmd = parsed.command.clone().unwrap_or_else(|| "help".to_string());
+    let result = match cmd.as_str() {
+        "tables" => commands::tables(&parsed),
+        "audit" => commands::audit(&parsed),
+        "fft" => commands::fft(&parsed),
+        "serve" => commands::serve(&parsed),
+        "help" | "--help" | "-h" => {
+            println!("{}", commands::USAGE);
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}\n{}", commands::USAGE)),
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn help_succeeds() {
+        assert_eq!(run(["help".to_string()]), 0);
+        assert_eq!(run(Vec::<String>::new()), 0);
+    }
+
+    #[test]
+    fn unknown_command_fails() {
+        assert_eq!(run(["bogus".to_string()]), 1);
+    }
+
+    #[test]
+    fn tables_runs() {
+        assert_eq!(run(["tables".to_string(), "--n".into(), "256".into()]), 0);
+    }
+
+    #[test]
+    fn audit_runs() {
+        assert_eq!(run(["audit".to_string(), "--n".into(), "128".into()]), 0);
+    }
+
+    #[test]
+    fn fft_runs_all_precisions() {
+        for p in ["f64", "f32", "fp16", "bf16"] {
+            assert_eq!(
+                run([
+                    "fft".to_string(),
+                    "--n".into(),
+                    "64".into(),
+                    "--precision".into(),
+                    p.into()
+                ]),
+                0,
+                "precision {p}"
+            );
+        }
+    }
+
+    #[test]
+    fn fft_rejects_bad_size() {
+        assert_eq!(run(["fft".to_string(), "--n".into(), "100".into()]), 1);
+    }
+}

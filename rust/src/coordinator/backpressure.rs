@@ -1,0 +1,102 @@
+//! Bounded admission control: the service rejects (rather than
+//! buffers without bound) when the in-flight request count hits the
+//! configured limit — an explicit, testable backpressure policy.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Shared admission gate.
+#[derive(Debug)]
+pub struct Gate {
+    limit: usize,
+    in_flight: AtomicUsize,
+}
+
+impl Gate {
+    pub fn new(limit: usize) -> Arc<Gate> {
+        Arc::new(Gate { limit, in_flight: AtomicUsize::new(0) })
+    }
+
+    /// Try to admit one request; returns a guard on success.
+    pub fn try_admit(self: &Arc<Gate>) -> Option<Permit> {
+        let mut cur = self.in_flight.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.limit {
+                return None;
+            }
+            match self.in_flight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Some(Permit { gate: self.clone() }),
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Relaxed)
+    }
+
+    pub fn limit(&self) -> usize {
+        self.limit
+    }
+}
+
+/// RAII admission permit — releases the slot on drop (even on worker
+/// panic paths, so the gate can never leak slots).
+#[derive(Debug)]
+pub struct Permit {
+    gate: Arc<Gate>,
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.gate.in_flight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_up_to_limit() {
+        let gate = Gate::new(2);
+        let p1 = gate.try_admit().unwrap();
+        let _p2 = gate.try_admit().unwrap();
+        assert!(gate.try_admit().is_none());
+        assert_eq!(gate.in_flight(), 2);
+        drop(p1);
+        assert_eq!(gate.in_flight(), 1);
+        let _p3 = gate.try_admit().unwrap();
+        assert!(gate.try_admit().is_none());
+    }
+
+    #[test]
+    fn concurrent_admission_never_exceeds_limit() {
+        let gate = Gate::new(8);
+        let peak = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let gate = gate.clone();
+            let peak = peak.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    if let Some(_p) = gate.try_admit() {
+                        let now = gate.in_flight();
+                        peak.fetch_max(now, Ordering::Relaxed);
+                        assert!(now <= 8);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(peak.load(Ordering::Relaxed) <= 8);
+        assert_eq!(gate.in_flight(), 0);
+    }
+}

@@ -1,0 +1,212 @@
+//! The dynamic batching policy: group same-key requests, flush when a
+//! batch fills (`max_batch`) or its oldest member has waited
+//! `max_wait` — the size-or-deadline policy serving systems like vLLM
+//! use.  Pure data structure (no threads) so the policy is unit
+//! testable; the server drives it from its intake loop.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use super::request::{FftRequest, PlanKey};
+
+/// Batching configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(500) }
+    }
+}
+
+/// A flushed batch ready for a worker.
+#[derive(Debug)]
+pub struct Batch {
+    pub key: PlanKey,
+    pub requests: Vec<FftRequest>,
+    /// When the oldest request entered the batcher.
+    pub opened: Instant,
+}
+
+/// Accumulates requests per key and decides flushes.
+#[derive(Debug)]
+pub struct Batcher {
+    policy: BatchPolicy,
+    pending: HashMap<PlanKey, Batch>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher { policy, pending: HashMap::new() }
+    }
+
+    /// Add a request; returns a full batch if this push filled one.
+    pub fn push(&mut self, req: FftRequest, now: Instant) -> Option<Batch> {
+        let key = req.key;
+        let batch = self
+            .pending
+            .entry(key)
+            .or_insert_with(|| Batch { key, requests: Vec::new(), opened: now });
+        batch.requests.push(req);
+        if batch.requests.len() >= self.policy.max_batch {
+            self.pending.remove(&key)
+        } else {
+            None
+        }
+    }
+
+    /// Flush every batch whose oldest request has waited `max_wait`.
+    pub fn flush_expired(&mut self, now: Instant) -> Vec<Batch> {
+        let expired: Vec<PlanKey> = self
+            .pending
+            .iter()
+            .filter(|(_, b)| now.duration_since(b.opened) >= self.policy.max_wait)
+            .map(|(k, _)| *k)
+            .collect();
+        expired
+            .into_iter()
+            .filter_map(|k| self.pending.remove(&k))
+            .collect()
+    }
+
+    /// Flush everything (drain / shutdown).
+    pub fn flush_all(&mut self) -> Vec<Batch> {
+        self.pending.drain().map(|(_, b)| b).collect()
+    }
+
+    /// Time until the next deadline flush is due, if any batch is open.
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.pending
+            .values()
+            .map(|b| {
+                self.policy
+                    .max_wait
+                    .saturating_sub(now.duration_since(b.opened))
+            })
+            .min()
+    }
+
+    pub fn pending_requests(&self) -> usize {
+        self.pending.values().map(|b| b.requests.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::Strategy;
+    use crate::coordinator::request::FftOp;
+    use std::sync::mpsc;
+
+    fn key(n: usize, op: FftOp) -> PlanKey {
+        PlanKey { n, op, strategy: Strategy::DualSelect }
+    }
+
+    fn req(id: u64, k: PlanKey) -> (FftRequest, mpsc::Receiver<super::super::request::FftResponse>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            FftRequest {
+                id,
+                key: k,
+                re: vec![0.0; k.n],
+                im: vec![0.0; k.n],
+                reply: tx,
+                submitted: Instant::now(),
+                permit: None,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn fills_batch_at_max() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(10) });
+        let k = key(64, FftOp::Forward);
+        let now = Instant::now();
+        let mut keep = Vec::new();
+        for id in 0..2 {
+            let (r, rx) = req(id, k);
+            keep.push(rx);
+            assert!(b.push(r, now).is_none());
+        }
+        let (r, _rx) = req(2, k);
+        let full = b.push(r, now).expect("third push fills");
+        assert_eq!(full.requests.len(), 3);
+        assert_eq!(b.pending_requests(), 0);
+    }
+
+    #[test]
+    fn different_keys_do_not_mix() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(10) });
+        let now = Instant::now();
+        let (r1, _x1) = req(1, key(64, FftOp::Forward));
+        let (r2, _x2) = req(2, key(64, FftOp::Inverse));
+        assert!(b.push(r1, now).is_none());
+        assert!(b.push(r2, now).is_none());
+        assert_eq!(b.pending_requests(), 2);
+        let (r3, _x3) = req(3, key(64, FftOp::Forward));
+        let full = b.push(r3, now).unwrap();
+        assert_eq!(full.key.op, FftOp::Forward);
+        assert_eq!(full.requests.len(), 2);
+    }
+
+    #[test]
+    fn deadline_flush() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(5) });
+        let t0 = Instant::now();
+        let (r, _x) = req(1, key(64, FftOp::Forward));
+        b.push(r, t0);
+        assert!(b.flush_expired(t0 + Duration::from_millis(1)).is_empty());
+        let flushed = b.flush_expired(t0 + Duration::from_millis(6));
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(b.pending_requests(), 0);
+    }
+
+    #[test]
+    fn next_deadline_counts_down() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(10) });
+        let t0 = Instant::now();
+        assert!(b.next_deadline(t0).is_none());
+        let (r, _x) = req(1, key(64, FftOp::Forward));
+        b.push(r, t0);
+        let d = b.next_deadline(t0 + Duration::from_millis(4)).unwrap();
+        assert!(d <= Duration::from_millis(6));
+    }
+
+    #[test]
+    fn flush_all_drains() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        let now = Instant::now();
+        let (r1, _x1) = req(1, key(64, FftOp::Forward));
+        let (r2, _x2) = req(2, key(128, FftOp::Forward));
+        b.push(r1, now);
+        b.push(r2, now);
+        let all = b.flush_all();
+        assert_eq!(all.len(), 2);
+        assert_eq!(b.pending_requests(), 0);
+    }
+
+    #[test]
+    fn no_request_lost_under_mixed_flushes() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) });
+        let t0 = Instant::now();
+        let mut seen = 0usize;
+        let mut keep = Vec::new();
+        for id in 0..37u64 {
+            let k = key(if id % 3 == 0 { 64 } else { 128 }, FftOp::Forward);
+            let (r, rx) = req(id, k);
+            keep.push(rx);
+            if let Some(full) = b.push(r, t0) {
+                seen += full.requests.len();
+            }
+        }
+        for batch in b.flush_expired(t0 + Duration::from_millis(2)) {
+            seen += batch.requests.len();
+        }
+        seen += b.flush_all().iter().map(|x| x.requests.len()).sum::<usize>();
+        assert_eq!(seen, 37);
+    }
+}

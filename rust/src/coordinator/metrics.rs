@@ -1,0 +1,129 @@
+//! Serving metrics: lock-free counters + a log-bucketed latency
+//! histogram (no external crates; buckets are powers of two in
+//! microseconds, 1 µs .. ~17 s).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+const BUCKETS: usize = 25; // 2^0 .. 2^24 µs
+
+/// Shared metrics sink (cheap to clone behind an Arc).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub failed: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    latency_buckets: [AtomicU64; BUCKETS],
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_latency(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let bucket = (63 - us.leading_zeros() as usize).min(BUCKETS - 1);
+        self.latency_buckets[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    /// Mean batch size so far.
+    pub fn mean_batch(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// Approximate latency quantile from the histogram (upper bucket
+    /// edge, µs).
+    pub fn latency_quantile_us(&self, q: f64) -> u64 {
+        let counts: Vec<u64> = self
+            .latency_buckets
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, c) in counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return 1u64 << (i + 1); // upper edge of bucket 2^i..2^{i+1}
+            }
+        }
+        1u64 << BUCKETS
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "submitted={} completed={} rejected={} failed={} batches={} mean_batch={:.2} p50={}us p99={}us",
+            self.submitted.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch(),
+            self.latency_quantile_us(0.5),
+            self.latency_quantile_us(0.99),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_from_known_distribution() {
+        let m = Metrics::new();
+        // 90 requests at ~100µs (bucket 6: 64..128), 10 at ~10ms.
+        for _ in 0..90 {
+            m.record_latency(Duration::from_micros(100));
+        }
+        for _ in 0..10 {
+            m.record_latency(Duration::from_millis(10));
+        }
+        let p50 = m.latency_quantile_us(0.5);
+        let p99 = m.latency_quantile_us(0.99);
+        assert!(p50 <= 256, "p50 {p50}");
+        assert!(p99 >= 8192, "p99 {p99}");
+        assert!(p99 > p50);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_quantile_us(0.99), 0);
+        assert_eq!(m.mean_batch(), 0.0);
+    }
+
+    #[test]
+    fn mean_batch_tracks() {
+        let m = Metrics::new();
+        m.record_batch(32);
+        m.record_batch(16);
+        assert_eq!(m.mean_batch(), 24.0);
+    }
+
+    #[test]
+    fn summary_is_parseable() {
+        let m = Metrics::new();
+        m.submitted.fetch_add(5, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("submitted=5"));
+    }
+}

@@ -1,0 +1,27 @@
+//! The Layer-3 serving coordinator: a dynamic-batching FFT service in
+//! the style of vLLM's request router, on std threads + channels
+//! (Python is never on this path; the compute backend is either the
+//! native Rust FFT core or the AOT PJRT artifacts).
+//!
+//! Request flow:
+//!
+//! ```text
+//! client → admit (backpressure) → batcher (group by plan key,
+//!     flush on max_batch or max_wait) → worker pool (native plans or
+//!     PJRT executables) → per-request response channel
+//! ```
+//!
+//! * [`request`] — request/response types and plan keys
+//! * [`metrics`] — latency histograms + throughput counters
+//! * [`backpressure`] — bounded admission control
+//! * [`batcher`] — the dynamic batching policy
+//! * [`server`] — lifecycle: spawn, submit, drain, shutdown
+
+pub mod backpressure;
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use request::{FftOp, FftRequest, FftResponse, PlanKey};
+pub use server::{Backend, Server, ServerConfig};

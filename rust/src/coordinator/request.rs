@@ -1,0 +1,87 @@
+//! Request/response types for the serving plane.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::fft::Strategy;
+
+/// What the request asks for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FftOp {
+    Forward,
+    Inverse,
+    /// Radar pulse compression against the service's reference chirp.
+    MatchedFilter,
+}
+
+/// Batching key: requests with the same key can share one executable
+/// invocation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub n: usize,
+    pub op: FftOp,
+    pub strategy: Strategy,
+}
+
+/// A client request: one split-format frame.
+#[derive(Debug)]
+pub struct FftRequest {
+    pub id: u64,
+    pub key: PlanKey,
+    pub re: Vec<f64>,
+    pub im: Vec<f64>,
+    /// Where the response goes.
+    pub reply: mpsc::Sender<FftResponse>,
+    /// Set at submission (for queue-latency accounting).
+    pub submitted: Instant,
+    /// Backpressure permit — held until the response is sent, so the
+    /// admission gate tracks true in-flight work.
+    pub permit: Option<super::backpressure::Permit>,
+}
+
+/// The completed response.
+#[derive(Clone, Debug)]
+pub struct FftResponse {
+    pub id: u64,
+    pub re: Vec<f32>,
+    pub im: Vec<f32>,
+    /// Size of the batch this request was served in.
+    pub batch_size: usize,
+    /// Queue + service time.
+    pub latency: std::time::Duration,
+    /// Error message if the request failed.
+    pub error: Option<String>,
+}
+
+impl FftResponse {
+    pub fn is_ok(&self) -> bool {
+        self.error.is_none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_key_equality_groups_requests() {
+        let a = PlanKey { n: 1024, op: FftOp::Forward, strategy: Strategy::DualSelect };
+        let b = PlanKey { n: 1024, op: FftOp::Forward, strategy: Strategy::DualSelect };
+        let c = PlanKey { n: 1024, op: FftOp::Inverse, strategy: Strategy::DualSelect };
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        let mut set = std::collections::HashSet::new();
+        set.insert(a);
+        set.insert(b);
+        set.insert(c);
+        assert_eq!(set.len(), 2);
+    }
+
+    #[test]
+    fn response_ok_flag() {
+        let ok = FftResponse { id: 1, re: vec![], im: vec![], batch_size: 1, latency: Default::default(), error: None };
+        assert!(ok.is_ok());
+        let bad = FftResponse { error: Some("x".into()), ..ok.clone() };
+        assert!(!bad.is_ok());
+    }
+}

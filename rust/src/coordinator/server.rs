@@ -1,0 +1,473 @@
+//! The serving loop: intake thread (batching) + worker pool (compute),
+//! over either the native Rust FFT core or the PJRT artifact runtime.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::fft::{Direction, Planner, Strategy};
+use crate::precision::SplitBuf;
+use crate::runtime::literal::BatchF32;
+use crate::runtime::{ArtifactKind, Engine};
+use crate::signal::chirp::default_chirp;
+use crate::signal::pulse::MatchedFilter;
+
+use super::backpressure::Gate;
+use super::batcher::{Batch, BatchPolicy, Batcher};
+use super::metrics::Metrics;
+use super::request::{FftOp, FftRequest, FftResponse, PlanKey};
+
+/// Which compute plane serves the batches.
+pub enum Backend {
+    /// The native Rust FFT core (f32 working precision).
+    Native,
+    /// The AOT JAX/Pallas artifacts via PJRT.
+    Pjrt { artifact_dir: std::path::PathBuf },
+}
+
+/// Server configuration.
+pub struct ServerConfig {
+    pub n: usize,
+    pub strategy: Strategy,
+    pub backend: Backend,
+    pub policy: BatchPolicy,
+    pub workers: usize,
+    /// Max in-flight requests before admission rejects.
+    pub queue_limit: usize,
+    /// Reference pulse length for matched-filter requests.
+    pub pulse_len: usize,
+}
+
+impl ServerConfig {
+    pub fn native(n: usize) -> Self {
+        ServerConfig {
+            n,
+            strategy: Strategy::DualSelect,
+            backend: Backend::Native,
+            policy: BatchPolicy::default(),
+            workers: 2,
+            queue_limit: 4096,
+            pulse_len: n / 4,
+        }
+    }
+
+    pub fn pjrt(n: usize, artifact_dir: impl Into<std::path::PathBuf>) -> Self {
+        ServerConfig {
+            backend: Backend::Pjrt { artifact_dir: artifact_dir.into() },
+            ..ServerConfig::native(n)
+        }
+    }
+}
+
+enum IntakeMsg {
+    Req(FftRequest),
+    Drain(mpsc::Sender<()>),
+    Shutdown,
+}
+
+enum WorkerMsg {
+    Work(Batch),
+    Sync(mpsc::Sender<()>),
+    Stop,
+}
+
+/// Send-able recipe for building a worker's compute state (the PJRT
+/// client is `Rc`-based and not `Send`, so each worker thread owns its
+/// own [`Engine`], built from this recipe inside the thread).
+#[derive(Clone)]
+struct ComputeRecipe {
+    n: usize,
+    strategy: Strategy,
+    pulse_len: usize,
+    artifact_dir: Option<std::path::PathBuf>,
+}
+
+/// Per-worker compute state.
+struct ComputeCtx {
+    n: usize,
+    strategy: Strategy,
+    planner: Planner<f32>,
+    matched: MatchedFilter<f32>,
+    engine: Option<Engine>,
+}
+
+impl ComputeCtx {
+    fn new(recipe: &ComputeRecipe) -> Result<Self, String> {
+        let planner = Planner::<f32>::new();
+        let (cr, ci) = default_chirp(recipe.pulse_len);
+        let matched = MatchedFilter::new(&planner, recipe.strategy, recipe.n, &cr, &ci)?;
+        let engine = match &recipe.artifact_dir {
+            None => None,
+            Some(dir) => {
+                Some(Engine::new(dir).map_err(|e| format!("PJRT engine: {e:#}"))?)
+            }
+        };
+        Ok(ComputeCtx {
+            n: recipe.n,
+            strategy: recipe.strategy,
+            planner,
+            matched,
+            engine,
+        })
+    }
+
+    /// Execute a batch, producing per-request responses.
+    fn run_batch(&self, batch: &Batch) -> Result<Vec<(Vec<f32>, Vec<f32>)>, String> {
+        match &self.engine {
+            None => self.run_native(batch),
+            Some(engine) => self.run_pjrt(engine, batch),
+        }
+    }
+
+    fn run_native(&self, batch: &Batch) -> Result<Vec<(Vec<f32>, Vec<f32>)>, String> {
+        let mut out = Vec::with_capacity(batch.requests.len());
+        let mut scratch = SplitBuf::<f32>::zeroed(self.n);
+        for req in &batch.requests {
+            let mut buf = SplitBuf::<f32>::from_f64(&req.re, &req.im);
+            match batch.key.op {
+                FftOp::Forward => self
+                    .planner
+                    .plan(self.n, batch.key.strategy, Direction::Forward)?
+                    .execute(&mut buf, &mut scratch),
+                FftOp::Inverse => self
+                    .planner
+                    .plan(self.n, batch.key.strategy, Direction::Inverse)?
+                    .execute(&mut buf, &mut scratch),
+                FftOp::MatchedFilter => {
+                    self.matched.compress(&self.planner, &mut buf, &mut scratch)?
+                }
+            }
+            out.push((buf.re, buf.im));
+        }
+        Ok(out)
+    }
+
+    fn run_pjrt(&self, engine: &Engine, batch: &Batch) -> Result<Vec<(Vec<f32>, Vec<f32>)>, String> {
+        let kind = match batch.key.op {
+            FftOp::Forward | FftOp::Inverse => ArtifactKind::Fft,
+            FftOp::MatchedFilter => ArtifactKind::MatchedFilter,
+        };
+        let inverse = batch.key.op == FftOp::Inverse;
+        let count = batch.requests.len();
+
+        // Pick the smallest artifact batch that fits, else the largest
+        // (and chunk).
+        let batches = engine
+            .manifest
+            .batches_for(kind, self.n, batch.key.strategy);
+        // Inverse artifacts are registered separately; filter precisely.
+        let available: Vec<usize> = engine
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == kind && a.n == self.n && a.strategy == batch.key.strategy
+                    && a.inverse == inverse
+            })
+            .map(|a| a.batch)
+            .collect();
+        let available = if available.is_empty() { batches } else { available };
+        if available.is_empty() {
+            return Err(format!(
+                "no artifact for kind={kind:?} n={} strategy={} inverse={inverse}",
+                self.n, batch.key.strategy
+            ));
+        }
+        let fit = available.iter().copied().filter(|&b| b >= count).min();
+        let chunk = fit.unwrap_or_else(|| available.iter().copied().max().unwrap());
+
+        let mut out = Vec::with_capacity(count);
+        let mut start = 0usize;
+        while start < count {
+            let len = chunk.min(count - start);
+            // Pad to the artifact's batch size.
+            let mut input = BatchF32::zeroed(chunk, self.n);
+            for (row, req) in batch.requests[start..start + len].iter().enumerate() {
+                for j in 0..self.n {
+                    input.re[row * self.n + j] = req.re[j] as f32;
+                    input.im[row * self.n + j] = req.im[j] as f32;
+                }
+            }
+            let name = crate::runtime::artifacts::artifact_name(
+                kind,
+                self.strategy,
+                self.n,
+                chunk,
+                inverse,
+            );
+            let model = engine.load(&name).map_err(|e| format!("{e:#}"))?;
+            let result = &model.execute(&input).map_err(|e| format!("{e:#}"))?[0];
+            for row in 0..len {
+                let (r, i) = result.row(row);
+                out.push((r.to_vec(), i.to_vec()));
+            }
+            start += len;
+        }
+        Ok(out)
+    }
+}
+
+/// The coordinator server.
+pub struct Server {
+    intake_tx: mpsc::Sender<IntakeMsg>,
+    metrics: Arc<Metrics>,
+    gate: Arc<Gate>,
+    n: usize,
+    strategy: Strategy,
+    next_id: AtomicU64,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    workers: usize,
+}
+
+impl Server {
+    /// Spawn intake + worker threads.
+    pub fn start(cfg: ServerConfig) -> Result<Arc<Server>, String> {
+        let metrics = Arc::new(Metrics::new());
+        let gate = Gate::new(cfg.queue_limit);
+        let recipe = ComputeRecipe {
+            n: cfg.n,
+            strategy: cfg.strategy,
+            pulse_len: cfg.pulse_len,
+            artifact_dir: match &cfg.backend {
+                Backend::Native => None,
+                Backend::Pjrt { artifact_dir } => {
+                    // Validate the manifest up-front so config errors
+                    // surface at start() rather than on first request.
+                    crate::runtime::Manifest::load(artifact_dir)
+                        .map_err(|e| format!("{e:#}"))?;
+                    Some(artifact_dir.clone())
+                }
+            },
+        };
+
+        let (intake_tx, intake_rx) = mpsc::channel::<IntakeMsg>();
+        let (work_tx, work_rx) = mpsc::channel::<WorkerMsg>();
+        let work_rx = Arc::new(Mutex::new(work_rx));
+
+        let mut handles = Vec::new();
+
+        // Worker pool: each worker builds its own ComputeCtx (the PJRT
+        // client is not Send).
+        for w in 0..cfg.workers.max(1) {
+            let work_rx = work_rx.clone();
+            let recipe = recipe.clone();
+            let metrics = metrics.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("fmafft-worker-{w}"))
+                    .spawn(move || worker_loop(work_rx, recipe, metrics))
+                    .map_err(|e| e.to_string())?,
+            );
+        }
+
+        // Intake / batching thread.
+        let policy = cfg.policy;
+        let metrics_in = metrics.clone();
+        let workers = cfg.workers.max(1);
+        handles.push(
+            std::thread::Builder::new()
+                .name("fmafft-intake".into())
+                .spawn(move || intake_loop(intake_rx, work_tx, policy, metrics_in, workers))
+                .map_err(|e| e.to_string())?,
+        );
+
+        Ok(Arc::new(Server {
+            intake_tx,
+            metrics,
+            gate,
+            n: cfg.n,
+            strategy: cfg.strategy,
+            next_id: AtomicU64::new(1),
+            handles: Mutex::new(handles),
+            workers: cfg.workers.max(1),
+        }))
+    }
+
+    /// Submit one frame; returns the response channel, or an error when
+    /// backpressure rejects or the frame is malformed.
+    pub fn submit(
+        &self,
+        op: FftOp,
+        re: Vec<f64>,
+        im: Vec<f64>,
+    ) -> Result<mpsc::Receiver<FftResponse>, String> {
+        if re.len() != self.n || im.len() != self.n {
+            return Err(format!("frame must be length {} (got {})", self.n, re.len()));
+        }
+        let Some(permit) = self.gate.try_admit() else {
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(format!(
+                "rejected: {} requests in flight (limit {})",
+                self.gate.in_flight(),
+                self.gate.limit()
+            ));
+        };
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let req = FftRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            key: PlanKey { n: self.n, op, strategy: self.strategy },
+            re,
+            im,
+            reply: tx,
+            submitted: Instant::now(),
+            permit: Some(permit),
+        };
+        self.intake_tx
+            .send(IntakeMsg::Req(req))
+            .map_err(|_| "server is shut down".to_string())?;
+        Ok(rx)
+    }
+
+    /// Submit and block for the response.
+    pub fn submit_wait(&self, op: FftOp, re: Vec<f64>, im: Vec<f64>) -> Result<FftResponse, String> {
+        let rx = self.submit(op, re, im)?;
+        rx.recv().map_err(|_| "response channel closed".to_string())
+    }
+
+    /// Flush open batches and wait until every worker has drained.
+    pub fn drain(&self) {
+        let (tx, rx) = mpsc::channel();
+        if self.intake_tx.send(IntakeMsg::Drain(tx)).is_ok() {
+            for _ in 0..self.workers {
+                let _ = rx.recv();
+            }
+        }
+    }
+
+    /// Drain and stop all threads.
+    pub fn shutdown(&self) {
+        self.drain();
+        let _ = self.intake_tx.send(IntakeMsg::Shutdown);
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.gate.in_flight()
+    }
+}
+
+fn intake_loop(
+    rx: mpsc::Receiver<IntakeMsg>,
+    work_tx: mpsc::Sender<WorkerMsg>,
+    policy: BatchPolicy,
+    metrics: Arc<Metrics>,
+    workers: usize,
+) {
+    let mut batcher = Batcher::new(policy);
+    loop {
+        let wait = batcher
+            .next_deadline(Instant::now())
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(wait) {
+            Ok(IntakeMsg::Req(req)) => {
+                let now = Instant::now();
+                if let Some(batch) = batcher.push(req, now) {
+                    metrics.record_batch(batch.requests.len());
+                    let _ = work_tx.send(WorkerMsg::Work(batch));
+                }
+            }
+            Ok(IntakeMsg::Drain(ack)) => {
+                for batch in batcher.flush_all() {
+                    metrics.record_batch(batch.requests.len());
+                    let _ = work_tx.send(WorkerMsg::Work(batch));
+                }
+                // One sync per worker: each worker answers once it has
+                // finished everything queued before the sync.
+                for _ in 0..workers {
+                    let _ = work_tx.send(WorkerMsg::Sync(ack.clone()));
+                }
+            }
+            Ok(IntakeMsg::Shutdown) => {
+                for batch in batcher.flush_all() {
+                    metrics.record_batch(batch.requests.len());
+                    let _ = work_tx.send(WorkerMsg::Work(batch));
+                }
+                for _ in 0..workers {
+                    let _ = work_tx.send(WorkerMsg::Stop);
+                }
+                return;
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                for batch in batcher.flush_expired(Instant::now()) {
+                    metrics.record_batch(batch.requests.len());
+                    let _ = work_tx.send(WorkerMsg::Work(batch));
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                for _ in 0..workers {
+                    let _ = work_tx.send(WorkerMsg::Stop);
+                }
+                return;
+            }
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Arc<Mutex<mpsc::Receiver<WorkerMsg>>>,
+    recipe: ComputeRecipe,
+    metrics: Arc<Metrics>,
+) {
+    // Build the per-thread compute state; if that fails every batch is
+    // answered with the error.
+    let ctx = ComputeCtx::new(&recipe);
+    loop {
+        let msg = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        match msg {
+            Ok(WorkerMsg::Work(mut batch)) => {
+                let size = batch.requests.len();
+                let result = match &ctx {
+                    Ok(ctx) => ctx.run_batch(&batch),
+                    Err(e) => Err(e.clone()),
+                };
+                match result {
+                    Ok(outputs) => {
+                        for (req, (re, im)) in batch.requests.drain(..).zip(outputs) {
+                            metrics.completed.fetch_add(1, Ordering::Relaxed);
+                            let latency = req.submitted.elapsed();
+                            metrics.record_latency(latency);
+                            let _ = req.reply.send(FftResponse {
+                                id: req.id,
+                                re,
+                                im,
+                                batch_size: size,
+                                latency,
+                                error: None,
+                            });
+                            drop(req.permit);
+                        }
+                    }
+                    Err(e) => {
+                        for req in batch.requests.drain(..) {
+                            metrics.failed.fetch_add(1, Ordering::Relaxed);
+                            let _ = req.reply.send(FftResponse {
+                                id: req.id,
+                                re: Vec::new(),
+                                im: Vec::new(),
+                                batch_size: size,
+                                latency: req.submitted.elapsed(),
+                                error: Some(e.clone()),
+                            });
+                            drop(req.permit);
+                        }
+                    }
+                }
+            }
+            Ok(WorkerMsg::Sync(ack)) => {
+                let _ = ack.send(());
+            }
+            Ok(WorkerMsg::Stop) | Err(_) => return,
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! Naive O(N²) DFT in f64 — the ground-truth oracle every FFT and
+//! error measurement in this repo is judged against.  Never used on a
+//! hot path.
+//!
+//! Angles are computed with the argument reduced modulo N before the
+//! trig call, so the oracle stays accurate to ~1e-15 even for large
+//! j·k products.
+
+/// Forward (or inverse, with 1/N scaling) DFT of a split-format signal.
+pub fn naive_dft(re: &[f64], im: &[f64], inverse: bool) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(re.len(), im.len());
+    let n = re.len();
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut out_re = vec![0.0; n];
+    let mut out_im = vec![0.0; n];
+    for (k, (or, oi)) in out_re.iter_mut().zip(out_im.iter_mut()).enumerate() {
+        let mut acc_r = 0.0f64;
+        let mut acc_i = 0.0f64;
+        for j in 0..n {
+            // Reduce j*k mod n first: keeps the trig argument small.
+            let e = (j * k) % n;
+            let theta = sign * 2.0 * core::f64::consts::PI * e as f64 / n as f64;
+            let (s, c) = theta.sin_cos();
+            acc_r += re[j] * c - im[j] * s;
+            acc_i += re[j] * s + im[j] * c;
+        }
+        *or = acc_r;
+        *oi = acc_i;
+    }
+    if inverse {
+        let inv = 1.0 / n as f64;
+        for v in out_re.iter_mut().chain(out_im.iter_mut()) {
+            *v *= inv;
+        }
+    }
+    (out_re, out_im)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dft_of_impulse_is_flat() {
+        let mut re = vec![0.0; 8];
+        re[0] = 1.0;
+        let (r, i) = naive_dft(&re, &[0.0; 8], false);
+        for k in 0..8 {
+            assert!((r[k] - 1.0).abs() < 1e-14);
+            assert!(i[k].abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn dft_matches_analytic_single_tone() {
+        let n = 16;
+        let f = 3;
+        let re: Vec<f64> = (0..n)
+            .map(|t| (2.0 * core::f64::consts::PI * (f * t) as f64 / n as f64).cos())
+            .collect();
+        let (r, i) = naive_dft(&re, &vec![0.0; n], false);
+        for k in 0..n {
+            let want = if k == f || k == n - f { n as f64 / 2.0 } else { 0.0 };
+            assert!((r[k] - want).abs() < 1e-12, "k={k}");
+            assert!(i[k].abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn inverse_dft_roundtrips() {
+        let re = vec![0.3, -1.2, 0.8, 2.5];
+        let im = vec![1.0, 0.0, -0.5, 0.25];
+        let (fr, fi) = naive_dft(&re, &im, false);
+        let (gr, gi) = naive_dft(&fr, &fi, true);
+        for k in 0..4 {
+            assert!((gr[k] - re[k]).abs() < 1e-13);
+            assert!((gi[k] - im[k]).abs() < 1e-13);
+        }
+    }
+
+    #[test]
+    fn dft_works_on_non_power_of_two() {
+        // The oracle must not be limited to powers of two.
+        let n = 12;
+        let re: Vec<f64> = (0..n).map(|t| t as f64).collect();
+        let (r, _) = naive_dft(&re, &vec![0.0; n], false);
+        // DC bin = sum
+        assert!((r[0] - (0..n).sum::<usize>() as f64).abs() < 1e-10);
+    }
+}

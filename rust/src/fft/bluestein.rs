@@ -1,0 +1,195 @@
+//! Bluestein (chirp-Z) FFT: arbitrary-size DFT via three power-of-two
+//! dual-select FFTs — extends the paper's bounded-ratio butterflies to
+//! any length.
+//!
+//! Identity: with `w_k = e^{-jπk²/n}` (the quadratic chirp),
+//! `X_k = w_k · Σ_j x_j w_j · conj(w)_{k-j}` — a linear convolution of
+//! `x·w` with `conj(w)`, computed on a power-of-two grid ≥ 2n-1 using
+//! the [`super::plan`] machinery.  Every inner transform uses the
+//! dual-select tables, so Theorem 1's |t| ≤ 1 bound covers the whole
+//! pipeline.
+
+use crate::precision::{Real, SplitBuf};
+
+use super::plan::Planner;
+use super::{Direction, Strategy};
+
+/// Precomputed Bluestein plan for arbitrary `n >= 1`.
+#[derive(Debug)]
+pub struct BluesteinPlan<T: Real> {
+    pub n: usize,
+    /// Power-of-two convolution grid (>= 2n-1).
+    pub m: usize,
+    strategy: Strategy,
+    direction: Direction,
+    /// Chirp w_k (length n), in f64 for table fidelity.
+    chirp: Vec<(f64, f64)>,
+    /// FFT of the zero-padded conjugate chirp kernel (working precision).
+    kernel_spec: SplitBuf<T>,
+}
+
+impl<T: Real> BluesteinPlan<T> {
+    pub fn new(
+        planner: &Planner<T>,
+        n: usize,
+        strategy: Strategy,
+        direction: Direction,
+    ) -> Result<Self, String> {
+        if n == 0 {
+            return Err("Bluestein size must be >= 1".into());
+        }
+        let m = (2 * n - 1).next_power_of_two().max(2);
+        let sign = direction.sign();
+
+        // w_k = e^{sign·jπk²/n}, with k² reduced mod 2n for accuracy.
+        let chirp: Vec<(f64, f64)> = (0..n)
+            .map(|k| {
+                let e = (k * k) % (2 * n);
+                let theta = sign * core::f64::consts::PI * e as f64 / n as f64;
+                (theta.cos(), theta.sin())
+            })
+            .collect();
+
+        // Kernel b_j = conj(w_j) placed at j and m-j (circular symmetry).
+        let mut ker = SplitBuf::<T>::zeroed(m);
+        for j in 0..n {
+            let (c, s) = chirp[j];
+            ker.re[j] = T::from_f64(c);
+            ker.im[j] = T::from_f64(-s);
+            if j != 0 {
+                ker.re[m - j] = T::from_f64(c);
+                ker.im[m - j] = T::from_f64(-s);
+            }
+        }
+        let mut scratch = SplitBuf::zeroed(m);
+        planner
+            .plan(m, strategy, Direction::Forward)?
+            .execute(&mut ker, &mut scratch);
+
+        Ok(BluesteinPlan { n, m, strategy, direction, chirp, kernel_spec: ker })
+    }
+
+    /// Transform a length-n split signal (out-of-place).
+    pub fn execute(&self, planner: &Planner<T>, x: &SplitBuf<T>) -> Result<SplitBuf<T>, String> {
+        let n = self.n;
+        if x.len() != n {
+            return Err(format!("signal length {} != plan size {n}", x.len()));
+        }
+        // a_j = x_j · w_j, zero-padded to m.
+        let mut a = SplitBuf::<T>::zeroed(self.m);
+        for j in 0..n {
+            let (c, s) = self.chirp[j];
+            let (wc, ws) = (T::from_f64(c), T::from_f64(s));
+            a.re[j] = x.re[j] * wc - x.im[j] * ws;
+            a.im[j] = x.im[j].mul_add(wc, x.re[j] * ws);
+        }
+        let mut scratch = SplitBuf::zeroed(self.m);
+        planner
+            .plan(self.m, self.strategy, Direction::Forward)?
+            .execute(&mut a, &mut scratch);
+
+        // Pointwise multiply with the precomputed kernel spectrum.
+        let mut prod = SplitBuf::<T>::zeroed(self.m);
+        super::convolve::pointwise_mul(&a, &self.kernel_spec, &mut prod);
+        planner
+            .plan(self.m, self.strategy, Direction::Inverse)?
+            .execute(&mut prod, &mut scratch);
+
+        // X_k = w_k · y_k, plus 1/n for the inverse direction.
+        let mut out = SplitBuf::<T>::zeroed(n);
+        let scale = if self.direction == Direction::Inverse {
+            1.0 / n as f64
+        } else {
+            1.0
+        };
+        for k in 0..n {
+            let (c, s) = self.chirp[k];
+            let (wc, ws) = (T::from_f64(c * scale), T::from_f64(s * scale));
+            out.re[k] = prod.re[k] * wc - prod.im[k] * ws;
+            out.im[k] = prod.im[k].mul_add(wc, prod.re[k] * ws);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dft;
+    use crate::util::metrics::rel_l2;
+    use crate::util::prng::Pcg32;
+
+    fn run(n: usize, seed: u64) -> f64 {
+        let mut rng = Pcg32::seed(seed);
+        let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let planner = Planner::<f64>::new();
+        let plan =
+            BluesteinPlan::new(&planner, n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let out = plan.execute(&planner, &SplitBuf::from_f64(&re, &im)).unwrap();
+        let (wr, wi) = dft::naive_dft(&re, &im, false);
+        let (gr, gi) = out.to_f64();
+        rel_l2(&gr, &gi, &wr, &wi)
+    }
+
+    #[test]
+    fn arbitrary_sizes_match_dft() {
+        for n in [1usize, 2, 3, 5, 7, 12, 17, 100, 127, 360] {
+            let err = run(n, n as u64);
+            assert!(err < 1e-10, "n={n} err={err:.3e}");
+        }
+    }
+
+    #[test]
+    fn power_of_two_agrees_with_stockham() {
+        let n = 64;
+        let mut rng = Pcg32::seed(5);
+        let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let planner = Planner::<f64>::new();
+        let bp = BluesteinPlan::new(&planner, n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let out = bp.execute(&planner, &SplitBuf::from_f64(&re, &im)).unwrap();
+        let st = super::super::Plan::<f64>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let mut buf = SplitBuf::from_f64(&re, &im);
+        st.execute_alloc(&mut buf);
+        let (br, bi) = out.to_f64();
+        let (sr, si) = buf.to_f64();
+        assert!(rel_l2(&br, &bi, &sr, &si) < 1e-11);
+    }
+
+    #[test]
+    fn inverse_roundtrip_arbitrary_size() {
+        let n = 53; // prime
+        let mut rng = Pcg32::seed(6);
+        let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let planner = Planner::<f64>::new();
+        let fwd = BluesteinPlan::new(&planner, n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let inv = BluesteinPlan::new(&planner, n, Strategy::DualSelect, Direction::Inverse).unwrap();
+        let mid = fwd.execute(&planner, &SplitBuf::from_f64(&re, &im)).unwrap();
+        let back = inv.execute(&planner, &mid).unwrap();
+        let (gr, gi) = back.to_f64();
+        assert!(rel_l2(&gr, &gi, &re, &im) < 1e-11);
+    }
+
+    #[test]
+    fn f32_accuracy_reasonable() {
+        let n = 100;
+        let mut rng = Pcg32::seed(7);
+        let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let planner = Planner::<f32>::new();
+        let plan =
+            BluesteinPlan::new(&planner, n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let out = plan.execute(&planner, &SplitBuf::from_f64(&re, &im)).unwrap();
+        let (wr, wi) = dft::naive_dft(&re, &im, false);
+        let (gr, gi) = out.to_f64();
+        assert!(rel_l2(&gr, &gi, &wr, &wi) < 1e-4);
+    }
+
+    #[test]
+    fn rejects_zero_size() {
+        let planner = Planner::<f64>::new();
+        assert!(BluesteinPlan::new(&planner, 0, Strategy::DualSelect, Direction::Forward).is_err());
+    }
+}

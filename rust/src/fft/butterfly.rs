@@ -1,0 +1,220 @@
+//! The radix-2 butterfly kernels — the paper's §II in code.
+//!
+//! All kernels are generic over [`Real`] and `#[inline(always)]` so the
+//! pass loops monomorphize to straight-line FMA code per precision.
+//!
+//! Operation counts (paper):
+//! * [`standard`] — 4 mul + 6 add (10 ops, no FMA structure)
+//! * [`ratio`] — exactly 6 fused multiply-adds, either path
+//!
+//! The ratio kernel is shared by Linzer-Feig, cosine and dual-select;
+//! they differ only in the precomputed table (see [`super::twiddle`]).
+
+use crate::precision::Real;
+
+/// Schoolbook butterfly, eqs. (2)-(3): `A = a + Wb`, `B = a - Wb`.
+#[inline(always)]
+pub fn standard<T: Real>(
+    ar: T,
+    ai: T,
+    br: T,
+    bi: T,
+    wr: T,
+    wi: T,
+) -> (T, T, T, T) {
+    let tr = wr * br - wi * bi;
+    let ti = wi * br + wr * bi;
+    (ar + tr, ai + ti, ar - tr, ai - ti)
+}
+
+/// The 6-FMA ratio butterfly with a *runtime* path select (branchy
+/// form — the compiler turns the operand swap into cmov/select).
+///
+/// Covers all three factorizations via the table:
+/// * Linzer-Feig: `sel = false` always, `t = cot θ`, `m2 = sin θ`
+/// * Cosine:      `sel = true` always, `t = tan θ`, `m2 = cos θ`
+/// * Dual-select: per-twiddle `sel`, `|t| ≤ 1`
+#[inline(always)]
+pub fn ratio<T: Real>(
+    ar: T,
+    ai: T,
+    br: T,
+    bi: T,
+    m1: T,
+    m2: T,
+    t: T,
+    sel: bool,
+) -> (T, T, T, T) {
+    let (u, v) = if sel { (br, bi) } else { (bi, br) };
+    let s1 = t.mul_add(-v, u); // FMA 1: u - t·v
+    let s2 = t.mul_add(u, v); //  FMA 2: v + t·u
+    let a_r = m1.mul_add(s1, ar); // FMA 3
+    let b_r = (-m1).mul_add(s1, ar); // FMA 4
+    let a_i = m2.mul_add(s2, ai); // FMA 5
+    let b_i = (-m2).mul_add(s2, ai); // FMA 6
+    (a_r, a_i, b_r, b_i)
+}
+
+/// Twiddle-only multiply `W·b` in ratio form (2 FMA + 2 mul) — the
+/// building block the radix-4 kernel reuses per twiddle factor
+/// (paper §VI: "each twiddle multiplication can independently select
+/// the min-ratio path").
+#[inline(always)]
+pub fn ratio_twiddle_mul<T: Real>(br: T, bi: T, m1: T, m2: T, t: T, sel: bool) -> (T, T) {
+    let (u, v) = if sel { (br, bi) } else { (bi, br) };
+    let s1 = t.mul_add(-v, u);
+    let s2 = t.mul_add(u, v);
+    (m1 * s1, m2 * s2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::twiddle::{pass_angles, ratio_table};
+    use crate::fft::{Direction, Strategy};
+    use crate::precision::{Bf16, Real, F16};
+    use crate::util::prng::Pcg32;
+
+    /// f64 oracle straight from the definition A = a + W b, B = a - W b.
+    fn oracle(ar: f64, ai: f64, br: f64, bi: f64, theta: f64) -> (f64, f64, f64, f64) {
+        let (wr, wi) = (theta.cos(), theta.sin());
+        let tr = wr * br - wi * bi;
+        let ti = wi * br + wr * bi;
+        (ar + tr, ai + ti, ar - tr, ai - ti)
+    }
+
+    #[test]
+    fn standard_matches_definition_f64() {
+        let mut rng = Pcg32::seed(10);
+        for k in 0..512usize {
+            let theta = -2.0 * core::f64::consts::PI * k as f64 / 1024.0;
+            let (ar, ai, br, bi) = (rng.gaussian(), rng.gaussian(), rng.gaussian(), rng.gaussian());
+            let got = standard(ar, ai, br, bi, theta.cos(), theta.sin());
+            let want = oracle(ar, ai, br, bi, theta);
+            assert!((got.0 - want.0).abs() < 1e-14);
+            assert!((got.1 - want.1).abs() < 1e-14);
+            assert!((got.2 - want.2).abs() < 1e-14);
+            assert!((got.3 - want.3).abs() < 1e-14);
+        }
+    }
+
+    /// All ratio-table strategies agree with the oracle in f64 away from
+    /// their singular angles; dual-select agrees everywhere.
+    #[test]
+    fn ratio_strategies_match_oracle_f64() {
+        let n = 1024usize;
+        let angles = pass_angles(n, 9, Direction::Forward); // all k in [0, 512)
+        let mut rng = Pcg32::seed(11);
+        for strategy in [Strategy::LinzerFeig, Strategy::Cosine, Strategy::DualSelect] {
+            let tab = ratio_table::<f64>(&angles, strategy);
+            for (j, &theta) in angles.iter().enumerate() {
+                let (ar, ai, br, bi) =
+                    (rng.gaussian(), rng.gaussian(), rng.gaussian(), rng.gaussian());
+                let got = ratio(ar, ai, br, bi, tab.m1[j], tab.m2[j], tab.t[j], tab.sel[j]);
+                let want = oracle(ar, ai, br, bi, theta);
+                // Tolerance: clamped entries carry O(eps_clamp) error.
+                let tol = match strategy {
+                    Strategy::DualSelect => 1e-13,
+                    _ => 1e-5,
+                };
+                for (g, w) in [got.0, got.1, got.2, got.3]
+                    .iter()
+                    .zip([want.0, want.1, want.2, want.3].iter())
+                {
+                    assert!(
+                        (g - w).abs() < tol,
+                        "{strategy:?} j={j} theta={theta}: {g} vs {w}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dual_select_exact_at_w0_where_lf_is_not() {
+        // θ = 0: W = 1, butterfly is a trivial add/sub. Dual-select
+        // (cosine path, t = 0, m = 1) is *exact*; clamped LF injects
+        // ~1e-7 error.
+        let tab_dual = ratio_table::<f64>(&[0.0], Strategy::DualSelect);
+        let tab_lf = ratio_table::<f64>(&[0.0], Strategy::LinzerFeig);
+        let (ar, ai, br, bi) = (0.3, -0.7, 1.1, 0.9);
+        let d = ratio(ar, ai, br, bi, tab_dual.m1[0], tab_dual.m2[0], tab_dual.t[0], tab_dual.sel[0]);
+        assert_eq!(d, (ar + br, ai + bi, ar - br, ai - bi)); // bit-exact
+        let l = ratio(ar, ai, br, bi, tab_lf.m1[0], tab_lf.m2[0], tab_lf.t[0], tab_lf.sel[0]);
+        assert!((l.0 - (ar + br)).abs() > 1e-9); // clamp damage visible
+    }
+
+    #[test]
+    fn six_fma_paths_identical_cost_structure() {
+        // Both paths execute the same instruction sequence; verify the
+        // two paths produce mirrored results for mirrored tables.
+        let theta = -core::f64::consts::FRAC_PI_4; // |cos| == |sin|: boundary
+        let tab = ratio_table::<f64>(&[theta], Strategy::DualSelect);
+        assert!(tab.sel[0]); // ties go to the cosine path (>=)
+        assert!((tab.t[0].abs() - 1.0).abs() < 1e-15);
+        let got = ratio(1.0, 2.0, 3.0, 4.0, tab.m1[0], tab.m2[0], tab.t[0], tab.sel[0]);
+        let want = oracle(1.0, 2.0, 3.0, 4.0, theta);
+        assert!((got.0 - want.0).abs() < 1e-14);
+        assert!((got.3 - want.3).abs() < 1e-14);
+    }
+
+    /// Per-butterfly fp16 error: dual-select stays O(eps), LF's clamped
+    /// W^0 entry destroys the result (ratio 1e7 -> inf in fp16).
+    #[test]
+    fn fp16_per_butterfly_error_bound() {
+        let mut rng = Pcg32::seed(12);
+        let n = 1024usize;
+        let angles = pass_angles(n, 9, Direction::Forward);
+        let tab = ratio_table::<F16>(&angles, Strategy::DualSelect);
+        let mut worst = 0.0f64;
+        for (j, &theta) in angles.iter().enumerate() {
+            let (ar, ai, br, bi) =
+                (rng.range(-1.0, 1.0), rng.range(-1.0, 1.0), rng.range(-1.0, 1.0), rng.range(-1.0, 1.0));
+            let a16 = |x: f64| F16::from_f64(x);
+            let got = ratio(
+                a16(ar), a16(ai), a16(br), a16(bi),
+                tab.m1[j], tab.m2[j], tab.t[j], tab.sel[j],
+            );
+            let want = oracle(
+                a16(ar).to_f64(), a16(ai).to_f64(), a16(br).to_f64(), a16(bi).to_f64(),
+                theta,
+            );
+            // Eq. (10) normalizes by the input magnitude; the output
+            // FMAs round relative to |a| + |Wb|, so use both norms.
+            let scale = (ar * ar + ai * ai).sqrt() + (br * br + bi * bi).sqrt();
+            for (g, w) in [got.0, got.1, got.2, got.3].iter().zip([want.0, want.1, want.2, want.3]) {
+                worst = worst.max((g.to_f64() - w).abs() / scale.max(1e-6));
+            }
+        }
+        // Eq. (10): δ < C·|t|·eps·||b|| with |t| ≤ 1; C ≈ 6 covers the
+        // 3-FMA rounding chains + table rounding.
+        assert!(worst < 6.0 * F16::EPSILON, "worst fp16 butterfly err {worst}");
+    }
+
+    #[test]
+    fn ratio_twiddle_mul_matches_complex_multiply() {
+        let mut rng = Pcg32::seed(13);
+        let angles = pass_angles(256, 7, Direction::Forward);
+        let tab = ratio_table::<f64>(&angles, Strategy::DualSelect);
+        for (j, &theta) in angles.iter().enumerate() {
+            let (br, bi) = (rng.gaussian(), rng.gaussian());
+            let (gr, gi) = ratio_twiddle_mul(br, bi, tab.m1[j], tab.m2[j], tab.t[j], tab.sel[j]);
+            let wr = theta.cos() * br - theta.sin() * bi;
+            let wi = theta.sin() * br + theta.cos() * bi;
+            assert!((gr - wr).abs() < 1e-13, "j={j}");
+            assert!((gi - wi).abs() < 1e-13, "j={j}");
+        }
+    }
+
+    #[test]
+    fn works_in_bf16_too() {
+        let angles = pass_angles(64, 5, Direction::Forward);
+        let tab = ratio_table::<Bf16>(&angles, Strategy::DualSelect);
+        let x = Bf16::from_f64(0.5);
+        for j in 0..angles.len() {
+            let got = ratio(x, x, x, x, tab.m1[j], tab.m2[j], tab.t[j], tab.sel[j]);
+            let want = oracle(0.5, 0.5, 0.5, 0.5, angles[j]);
+            assert!((got.0.to_f64() - want.0).abs() < 0.03, "j={j}");
+        }
+    }
+}

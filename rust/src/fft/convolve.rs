@@ -1,0 +1,163 @@
+//! FFT-based convolution / correlation — the building block of the
+//! radar matched filter ([`crate::signal::pulse`]).
+
+use crate::precision::{Real, SplitBuf};
+
+use super::plan::Planner;
+use super::{Direction, Strategy};
+
+/// Pointwise complex multiply `a·b` into `out` (working precision).
+pub fn pointwise_mul<T: Real>(a: &SplitBuf<T>, b: &SplitBuf<T>, out: &mut SplitBuf<T>) {
+    let n = a.len();
+    assert_eq!(b.len(), n);
+    assert_eq!(out.len(), n);
+    for i in 0..n {
+        out.re[i] = a.re[i] * b.re[i] - a.im[i] * b.im[i];
+        out.im[i] = a.im[i].mul_add(b.re[i], a.re[i] * b.im[i]);
+    }
+}
+
+/// Pointwise `a·conj(b)` (correlation / matched filtering).
+pub fn pointwise_mul_conj<T: Real>(a: &SplitBuf<T>, b: &SplitBuf<T>, out: &mut SplitBuf<T>) {
+    let n = a.len();
+    assert_eq!(b.len(), n);
+    assert_eq!(out.len(), n);
+    for i in 0..n {
+        out.re[i] = a.re[i].mul_add(b.re[i], a.im[i] * b.im[i]);
+        out.im[i] = a.im[i].mul_add(b.re[i], -(a.re[i] * b.im[i]));
+    }
+}
+
+/// Circular convolution of two length-n complex signals via FFT.
+pub fn circular_convolve<T: Real>(
+    planner: &Planner<T>,
+    strategy: Strategy,
+    x: &SplitBuf<T>,
+    h: &SplitBuf<T>,
+) -> Result<SplitBuf<T>, String> {
+    let n = x.len();
+    if h.len() != n {
+        return Err(format!("length mismatch: {} vs {}", n, h.len()));
+    }
+    let fwd = planner.plan(n, strategy, Direction::Forward)?;
+    let inv = planner.plan(n, strategy, Direction::Inverse)?;
+
+    let mut fx = x.clone();
+    let mut fh = h.clone();
+    let mut scratch = SplitBuf::zeroed(n);
+    fwd.execute(&mut fx, &mut scratch);
+    fwd.execute(&mut fh, &mut scratch);
+
+    let mut prod = SplitBuf::zeroed(n);
+    pointwise_mul(&fx, &fh, &mut prod);
+    inv.execute(&mut prod, &mut scratch);
+    Ok(prod)
+}
+
+/// Linear convolution via zero-padding to the next power of two
+/// >= `x.len() + h.len() - 1`; output has that logical length.
+pub fn linear_convolve<T: Real>(
+    planner: &Planner<T>,
+    strategy: Strategy,
+    x: &SplitBuf<T>,
+    h: &SplitBuf<T>,
+) -> Result<SplitBuf<T>, String> {
+    let out_len = x.len() + h.len() - 1;
+    let n = out_len.next_power_of_two().max(2);
+    let pad = |src: &SplitBuf<T>| {
+        let mut p = SplitBuf::<T>::zeroed(n);
+        p.re[..src.len()].copy_from_slice(&src.re);
+        p.im[..src.len()].copy_from_slice(&src.im);
+        p
+    };
+    let mut full = circular_convolve(planner, strategy, &pad(x), &pad(h))?;
+    full.re.truncate(out_len);
+    full.im.truncate(out_len);
+    Ok(full)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    /// O(N²) direct circular convolution oracle.
+    fn direct_circular(xr: &[f64], xi: &[f64], hr: &[f64], hi: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let n = xr.len();
+        let mut or_ = vec![0.0; n];
+        let mut oi = vec![0.0; n];
+        for k in 0..n {
+            for j in 0..n {
+                let m = (k + n - j) % n;
+                or_[k] += xr[j] * hr[m] - xi[j] * hi[m];
+                oi[k] += xr[j] * hi[m] + xi[j] * hr[m];
+            }
+        }
+        (or_, oi)
+    }
+
+    #[test]
+    fn circular_matches_direct() {
+        let mut rng = Pcg32::seed(51);
+        let n = 64;
+        let xr: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let xi: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let hr: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let hi: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let planner = Planner::<f64>::new();
+        let got = circular_convolve(
+            &planner,
+            Strategy::DualSelect,
+            &SplitBuf::from_f64(&xr, &xi),
+            &SplitBuf::from_f64(&hr, &hi),
+        )
+        .unwrap();
+        let (wr, wi) = direct_circular(&xr, &xi, &hr, &hi);
+        let (gr, gi) = got.to_f64();
+        assert!(crate::util::metrics::rel_l2(&gr, &gi, &wr, &wi) < 1e-12);
+    }
+
+    #[test]
+    fn linear_convolve_impulse_is_identity() {
+        let planner = Planner::<f64>::new();
+        let x = SplitBuf::from_f64(&[1.0, 2.0, 3.0], &[0.0; 3]);
+        let h = SplitBuf::from_f64(&[1.0], &[0.0]);
+        let y = linear_convolve(&planner, Strategy::DualSelect, &x, &h).unwrap();
+        assert_eq!(y.len(), 3);
+        for (i, want) in [1.0, 2.0, 3.0].iter().enumerate() {
+            assert!((y.re[i] - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn linear_convolve_matches_polynomial_multiply() {
+        // (1 + 2z)(3 + 4z) = 3 + 10z + 8z²
+        let planner = Planner::<f64>::new();
+        let x = SplitBuf::from_f64(&[1.0, 2.0], &[0.0; 2]);
+        let h = SplitBuf::from_f64(&[3.0, 4.0], &[0.0; 2]);
+        let y = linear_convolve(&planner, Strategy::DualSelect, &x, &h).unwrap();
+        assert_eq!(y.len(), 3);
+        for (i, want) in [3.0, 10.0, 8.0].iter().enumerate() {
+            assert!((y.re[i] - want).abs() < 1e-12, "i={i} got {}", y.re[i]);
+        }
+    }
+
+    #[test]
+    fn conj_multiply_is_correlation() {
+        let a = SplitBuf::<f64>::from_f64(&[1.0], &[2.0]);
+        let b = SplitBuf::<f64>::from_f64(&[3.0], &[-4.0]);
+        let mut out = SplitBuf::zeroed(1);
+        pointwise_mul_conj(&a, &b, &mut out);
+        // (1+2j)·conj(3-4j) = (1+2j)(3+4j) = 3+4j+6j-8 = -5+10j
+        assert_eq!(out.re[0], -5.0);
+        assert_eq!(out.im[0], 10.0);
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        let planner = Planner::<f64>::new();
+        let x = SplitBuf::<f64>::zeroed(8);
+        let h = SplitBuf::<f64>::zeroed(4);
+        assert!(circular_convolve(&planner, Strategy::DualSelect, &x, &h).is_err());
+    }
+}

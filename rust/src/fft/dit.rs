@@ -1,0 +1,166 @@
+//! In-place Cooley-Tukey decimation-in-time FFT with bit-reversal —
+//! the structural baseline the Stockham transform is compared against
+//! (same butterfly kernels, different data movement).
+//!
+//! Exists to demonstrate the dual-select strategy is independent of
+//! FFT organization (the paper's claim is per-*twiddle*, not
+//! per-algorithm) and as the ablation baseline for the autosort
+//! data-movement benefit.
+
+use crate::precision::{Real, SplitBuf};
+
+use super::twiddle::{dit_stage_angles, plain_table, ratio_table};
+use super::{log2_exact, Direction, Strategy};
+
+/// Precomputed DIT plan: per-stage twiddle tables.
+#[derive(Clone, Debug)]
+pub struct DitPlan<T: Real> {
+    pub n: usize,
+    pub strategy: Strategy,
+    pub direction: Direction,
+    stages: Vec<super::plan::PassKind<T>>,
+}
+
+impl<T: Real> DitPlan<T> {
+    pub fn new(n: usize, strategy: Strategy, direction: Direction) -> Result<Self, String> {
+        let m = log2_exact(n)?;
+        let mut stages = Vec::with_capacity(m as usize);
+        for stage in 0..m {
+            let angles = dit_stage_angles(n, stage, direction);
+            stages.push(match strategy {
+                Strategy::Standard => super::plan::PassKind::Plain(plain_table(&angles)),
+                _ => super::plan::PassKind::Ratio(ratio_table(&angles, strategy)),
+            });
+        }
+        Ok(DitPlan { n, strategy, direction, stages })
+    }
+
+    /// Execute fully in place (bit-reversal permutation + stages).
+    pub fn execute(&self, buf: &mut SplitBuf<T>) {
+        let n = self.n;
+        assert_eq!(buf.len(), n);
+        bit_reverse_permute(&mut buf.re, &mut buf.im);
+
+        for (stage, kind) in self.stages.iter().enumerate() {
+            let len = 1usize << (stage + 1);
+            let half = len / 2;
+            for base in (0..n).step_by(len) {
+                for j in 0..half {
+                    let ia = base + j;
+                    let ib = base + j + half;
+                    let (a_r, a_i, b_r, b_i) = match kind {
+                        super::plan::PassKind::Plain(t) => super::butterfly::standard(
+                            buf.re[ia], buf.im[ia], buf.re[ib], buf.im[ib], t.wr[j], t.wi[j],
+                        ),
+                        super::plan::PassKind::Ratio(t) => super::butterfly::ratio(
+                            buf.re[ia], buf.im[ia], buf.re[ib], buf.im[ib],
+                            t.m1[j], t.m2[j], t.t[j], t.sel[j],
+                        ),
+                    };
+                    buf.re[ia] = a_r;
+                    buf.im[ia] = a_i;
+                    buf.re[ib] = b_r;
+                    buf.im[ib] = b_i;
+                }
+            }
+        }
+
+        if self.direction == Direction::Inverse {
+            let inv = T::from_f64(1.0 / n as f64);
+            for x in buf.re.iter_mut().chain(buf.im.iter_mut()) {
+                *x = *x * inv;
+            }
+        }
+    }
+}
+
+/// In-place bit-reversal permutation of a split buffer.
+pub fn bit_reverse_permute<T: Copy>(re: &mut [T], im: &mut [T]) {
+    let n = re.len();
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = (i.reverse_bits() >> (usize::BITS - bits)) & (n - 1);
+        if j > i {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dft;
+    use crate::util::metrics::rel_l2;
+    use crate::util::prng::Pcg32;
+
+    #[test]
+    fn bit_reverse_is_involution() {
+        let n = 32;
+        let orig: Vec<usize> = (0..n).collect();
+        let mut re = orig.clone();
+        let mut im = orig.clone();
+        bit_reverse_permute(&mut re, &mut im);
+        assert_ne!(re, orig);
+        bit_reverse_permute(&mut re, &mut im);
+        assert_eq!(re, orig);
+        assert_eq!(im, orig);
+    }
+
+    #[test]
+    fn dit_matches_dft_all_strategies() {
+        let mut rng = Pcg32::seed(21);
+        for n in [2usize, 8, 64, 256] {
+            let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let (wr, wi) = dft::naive_dft(&re, &im, false);
+            for strategy in Strategy::ALL {
+                let plan = DitPlan::<f64>::new(n, strategy, Direction::Forward).unwrap();
+                let mut buf = SplitBuf::from_f64(&re, &im);
+                plan.execute(&mut buf);
+                let (gr, gi) = buf.to_f64();
+                let tol = match strategy {
+                    Strategy::LinzerFeig | Strategy::Cosine => 5e-6,
+                    _ => 1e-12,
+                };
+                let err = rel_l2(&gr, &gi, &wr, &wi);
+                assert!(err < tol, "n={n} {strategy:?} err={err:.3e}");
+            }
+        }
+    }
+
+    #[test]
+    fn dit_agrees_with_stockham() {
+        let mut rng = Pcg32::seed(22);
+        let n = 128;
+        let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+
+        let dit = DitPlan::<f64>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let mut a = SplitBuf::from_f64(&re, &im);
+        dit.execute(&mut a);
+
+        let st = super::super::Plan::<f64>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let mut b = SplitBuf::from_f64(&re, &im);
+        st.execute_alloc(&mut b);
+
+        let (ar, ai) = a.to_f64();
+        let (br, bi) = b.to_f64();
+        assert!(rel_l2(&ar, &ai, &br, &bi) < 1e-13);
+    }
+
+    #[test]
+    fn dit_inverse_roundtrip() {
+        let mut rng = Pcg32::seed(23);
+        let n = 64;
+        let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let fwd = DitPlan::<f64>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let inv = DitPlan::<f64>::new(n, Strategy::DualSelect, Direction::Inverse).unwrap();
+        let mut buf = SplitBuf::from_f64(&re, &im);
+        fwd.execute(&mut buf);
+        inv.execute(&mut buf);
+        let (gr, gi) = buf.to_f64();
+        assert!(rel_l2(&gr, &gi, &re, &im) < 1e-12);
+    }
+}

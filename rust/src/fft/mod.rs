@@ -1,0 +1,151 @@
+//! The FFT core: all four butterfly strategies from the paper, a
+//! generic-precision radix-2 Stockham autosort transform, an in-place
+//! DIT baseline, a radix-4 variant (paper §VI generality), real-input
+//! transforms, FFT convolution and an FFTW-style planner.
+//!
+//! Strategy cheat sheet (paper Table I, N = 1024):
+//!
+//! | strategy                   | ratio       | \|t\|max | singular |
+//! |----------------------------|-------------|----------|----------|
+//! | [`Strategy::Standard`]     | —           | —        | 0        |
+//! | [`Strategy::LinzerFeig`]   | cot θ       | 163.0*   | 1 (W^0)  |
+//! | [`Strategy::Cosine`]       | tan θ       | >1e16    | 0 (near) |
+//! | [`Strategy::DualSelect`]   | min of both | **1.0**  | **0**    |
+//!
+//! *after excluding the clamped W^0 entry; the clamp itself stores 1e7.
+
+pub mod bluestein;
+pub mod butterfly;
+pub mod convolve;
+pub mod dit;
+pub mod plan;
+pub mod radix4;
+pub mod real_fft;
+pub mod stockham;
+pub mod twiddle;
+
+pub use plan::{Plan, Planner};
+
+use core::fmt;
+use core::str::FromStr;
+
+/// Butterfly factorization strategy (the paper's three contenders plus
+/// the unfactorized baseline).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Strategy {
+    /// 10-op schoolbook butterfly (4 mul + 6 add), eqs. (2)-(3).
+    Standard,
+    /// Linzer-Feig 6-FMA, ratio cot θ, singular at W^0 — clamped with
+    /// ε=1e-7 per standard practice (what the paper criticizes).
+    LinzerFeig,
+    /// Cosine 6-FMA, ratio tan θ, singular at W^{N/4} — clamped.
+    Cosine,
+    /// The paper's dual-select: per-twiddle min-ratio choice, |t| ≤ 1,
+    /// no clamping ever needed.
+    DualSelect,
+}
+
+impl Strategy {
+    pub const ALL: [Strategy; 4] = [
+        Strategy::Standard,
+        Strategy::LinzerFeig,
+        Strategy::Cosine,
+        Strategy::DualSelect,
+    ];
+
+    /// Short name used by the CLI, manifests and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::Standard => "standard",
+            Strategy::LinzerFeig => "lf",
+            Strategy::Cosine => "cos",
+            Strategy::DualSelect => "dual",
+        }
+    }
+
+    /// Human-readable label used in paper-style tables.
+    pub fn label(self) -> &'static str {
+        match self {
+            Strategy::Standard => "Standard (10 op)",
+            Strategy::LinzerFeig => "Linzer-Feig (/sin)",
+            Strategy::Cosine => "Cosine (/cos)",
+            Strategy::DualSelect => "Dual-Select (ours)",
+        }
+    }
+}
+
+impl FromStr for Strategy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "standard" | "std" => Ok(Strategy::Standard),
+            "lf" | "linzer-feig" | "sin" => Ok(Strategy::LinzerFeig),
+            "cos" | "cosine" => Ok(Strategy::Cosine),
+            "dual" | "dual-select" => Ok(Strategy::DualSelect),
+            other => Err(format!(
+                "unknown strategy {other:?} (expected standard|lf|cos|dual)"
+            )),
+        }
+    }
+}
+
+impl fmt::Display for Strategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Transform direction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Direction {
+    Forward,
+    Inverse,
+}
+
+impl Direction {
+    /// Twiddle angle sign: e^{sign * j 2π k/N}.
+    #[inline]
+    pub fn sign(self) -> f64 {
+        match self {
+            Direction::Forward => -1.0,
+            Direction::Inverse => 1.0,
+        }
+    }
+}
+
+/// `log2(n)` for power-of-two `n`, or an error message.
+pub fn log2_exact(n: usize) -> Result<u32, String> {
+    if n >= 2 && n.is_power_of_two() {
+        Ok(n.trailing_zeros())
+    } else {
+        Err(format!("FFT size must be a power of two >= 2, got {n}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        for s in Strategy::ALL {
+            assert_eq!(s.name().parse::<Strategy>().unwrap(), s);
+        }
+        assert!("bogus".parse::<Strategy>().is_err());
+    }
+
+    #[test]
+    fn log2_exact_accepts_powers_of_two() {
+        assert_eq!(log2_exact(2), Ok(1));
+        assert_eq!(log2_exact(1024), Ok(10));
+        assert!(log2_exact(0).is_err());
+        assert!(log2_exact(1).is_err());
+        assert!(log2_exact(768).is_err());
+    }
+
+    #[test]
+    fn direction_signs() {
+        assert_eq!(Direction::Forward.sign(), -1.0);
+        assert_eq!(Direction::Inverse.sign(), 1.0);
+    }
+}

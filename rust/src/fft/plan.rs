@@ -1,0 +1,203 @@
+//! FFTW-style planning: precompute every pass's twiddle table once,
+//! reuse across executions.  [`Planner`] caches plans by
+//! `(n, strategy, direction)` behind an `Arc` so the coordinator's
+//! worker threads share them without copying tables.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::precision::{Real, SplitBuf};
+
+use super::twiddle::{pass_angles, plain_table, ratio_table, PlainTable, RatioTable};
+use super::{log2_exact, Direction, Strategy};
+
+/// Precomputed table for one Stockham pass.
+#[derive(Clone, Debug)]
+pub struct PassTable<T> {
+    /// Stride (= twiddle count) of this pass: `2^p`.
+    pub s: usize,
+    pub kind: PassKind<T>,
+    /// True when the (ratio) table is exactly W^0 everywhere — the
+    /// butterfly degenerates to add/sub (see `RatioTable::is_trivial`).
+    pub trivial: bool,
+    /// Constant-`sel` runs of the ratio table (`RatioTable::segments`),
+    /// precomputed so the hot loop dispatches per run, not per element.
+    pub segments: Vec<(usize, usize, bool)>,
+}
+
+#[derive(Clone, Debug)]
+pub enum PassKind<T> {
+    Plain(PlainTable<T>),
+    Ratio(RatioTable<T>),
+}
+
+/// A fully-precomputed transform plan.
+#[derive(Clone, Debug)]
+pub struct Plan<T: Real> {
+    pub n: usize,
+    pub strategy: Strategy,
+    pub direction: Direction,
+    pub passes: Vec<PassTable<T>>,
+}
+
+impl<T: Real> Plan<T> {
+    /// Build a plan (computes all twiddle tables in f64, rounds once
+    /// into `T`).
+    pub fn new(n: usize, strategy: Strategy, direction: Direction) -> Result<Self, String> {
+        let m = log2_exact(n)?;
+        let mut passes = Vec::with_capacity(m as usize);
+        for p in 0..m {
+            let angles = pass_angles(n, p, direction);
+            let kind = match strategy {
+                Strategy::Standard => PassKind::Plain(plain_table(&angles)),
+                _ => PassKind::Ratio(ratio_table(&angles, strategy)),
+            };
+            let (trivial, segments) = match &kind {
+                PassKind::Ratio(t) => (t.is_trivial(), t.segments()),
+                PassKind::Plain(_) => (false, Vec::new()),
+            };
+            passes.push(PassTable { s: 1 << p, kind, trivial, segments });
+        }
+        Ok(Plan { n, strategy, direction, passes })
+    }
+
+    /// Number of butterfly passes (`log2 n`).
+    pub fn num_passes(&self) -> usize {
+        self.passes.len()
+    }
+
+    /// Execute in-place (with caller-provided scratch of the same size).
+    pub fn execute(&self, buf: &mut SplitBuf<T>, scratch: &mut SplitBuf<T>) {
+        super::stockham::execute(self, buf, scratch);
+    }
+
+    /// Convenience: allocate scratch internally (not for the hot path).
+    pub fn execute_alloc(&self, buf: &mut SplitBuf<T>) {
+        let mut scratch = SplitBuf::zeroed(self.n);
+        self.execute(buf, &mut scratch);
+    }
+
+    /// Total twiddle-table bytes (for the paper's storage-overhead
+    /// discussion: dual-select adds one select bit per factor).
+    pub fn table_bytes(&self) -> usize {
+        let scalar = core::mem::size_of::<T>();
+        self.passes
+            .iter()
+            .map(|p| match &p.kind {
+                PassKind::Plain(t) => (t.wr.len() + t.wi.len()) * scalar,
+                PassKind::Ratio(t) => {
+                    (t.m1.len() + t.m2.len() + t.t.len()) * scalar + t.sel.len()
+                }
+            })
+            .sum()
+    }
+}
+
+/// Plan cache keyed by `(n, strategy, direction)`.
+pub struct Planner<T: Real> {
+    cache: Mutex<HashMap<(usize, Strategy, Direction), Arc<Plan<T>>>>,
+}
+
+impl<T: Real> Default for Planner<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Real> Planner<T> {
+    pub fn new() -> Self {
+        Planner { cache: Mutex::new(HashMap::new()) }
+    }
+
+    /// Fetch or build the plan for `(n, strategy, direction)`.
+    pub fn plan(
+        &self,
+        n: usize,
+        strategy: Strategy,
+        direction: Direction,
+    ) -> Result<Arc<Plan<T>>, String> {
+        let key = (n, strategy, direction);
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(p) = cache.get(&key) {
+            return Ok(p.clone());
+        }
+        let plan = Arc::new(Plan::new(n, strategy, direction)?);
+        cache.insert(key, plan.clone());
+        Ok(plan)
+    }
+
+    /// Number of cached plans.
+    pub fn len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_has_log2n_passes() {
+        let plan = Plan::<f32>::new(1024, Strategy::DualSelect, Direction::Forward).unwrap();
+        assert_eq!(plan.num_passes(), 10);
+        for (p, pass) in plan.passes.iter().enumerate() {
+            assert_eq!(pass.s, 1 << p);
+            match &pass.kind {
+                PassKind::Ratio(t) => assert_eq!(t.t.len(), 1 << p),
+                _ => panic!("dual-select plan must use ratio tables"),
+            }
+        }
+    }
+
+    #[test]
+    fn plan_rejects_non_power_of_two() {
+        assert!(Plan::<f32>::new(768, Strategy::DualSelect, Direction::Forward).is_err());
+        assert!(Plan::<f32>::new(0, Strategy::DualSelect, Direction::Forward).is_err());
+    }
+
+    #[test]
+    fn standard_plan_uses_plain_tables() {
+        let plan = Plan::<f64>::new(64, Strategy::Standard, Direction::Forward).unwrap();
+        assert!(plan
+            .passes
+            .iter()
+            .all(|p| matches!(p.kind, PassKind::Plain(_))));
+    }
+
+    #[test]
+    fn planner_caches_and_shares() {
+        let planner = Planner::<f32>::new();
+        let a = planner.plan(256, Strategy::DualSelect, Direction::Forward).unwrap();
+        let b = planner.plan(256, Strategy::DualSelect, Direction::Forward).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(planner.len(), 1);
+        let _c = planner.plan(256, Strategy::DualSelect, Direction::Inverse).unwrap();
+        assert_eq!(planner.len(), 2);
+    }
+
+    #[test]
+    fn storage_overhead_matches_paper() {
+        // Paper §III: the select flag costs one bit (here one byte) per
+        // twiddle factor; the ratio table itself is 3 scalars/factor.
+        let plan = Plan::<f32>::new(1024, Strategy::DualSelect, Direction::Forward).unwrap();
+        let factors: usize = plan.passes.iter().map(|p| p.s).sum();
+        assert_eq!(factors, 1023); // sum 2^p, p<10
+        assert_eq!(plan.table_bytes(), factors * (3 * 4 + 1));
+    }
+
+    #[test]
+    fn execute_alloc_smoke() {
+        let plan = Plan::<f64>::new(8, Strategy::DualSelect, Direction::Forward).unwrap();
+        let mut buf = SplitBuf::from_f64(&[1.0; 8], &[0.0; 8]);
+        plan.execute_alloc(&mut buf);
+        // FFT of constant 1 = n·δ_0
+        assert!((buf.re[0] - 8.0).abs() < 1e-12);
+        for k in 1..8 {
+            assert!(buf.re[k].abs() < 1e-12);
+        }
+    }
+}

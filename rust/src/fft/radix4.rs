@@ -1,0 +1,272 @@
+//! Radix-4 Stockham FFT with per-twiddle dual-select — the paper's §VI
+//! generality claim in code: *"for radix-r butterflies with FMA
+//! factorization, each twiddle multiplication can independently select
+//! the min-ratio path"*.
+//!
+//! Each radix-4 butterfly multiplies by three twiddles (W, W², W³);
+//! each multiply independently uses the bounded-ratio form
+//! ([`super::butterfly::ratio_twiddle_mul`]), so every precomputed
+//! ratio in the radix-4 table is also ≤ 1 in magnitude.
+
+use crate::precision::{Real, SplitBuf};
+
+use super::butterfly::ratio_twiddle_mul;
+use super::twiddle::{ratio_table, RatioTable};
+use super::{Direction, Strategy};
+
+/// Radix-4 pass tables: one ratio table per twiddle power.
+#[derive(Clone, Debug)]
+pub struct Radix4Pass<T> {
+    pub s: usize,
+    pub w1: RatioTable<T>,
+    pub w2: RatioTable<T>,
+    pub w3: RatioTable<T>,
+}
+
+/// Radix-4 Stockham plan for `n = 4^m`.
+#[derive(Clone, Debug)]
+pub struct Radix4Plan<T: Real> {
+    pub n: usize,
+    pub strategy: Strategy,
+    pub direction: Direction,
+    passes: Vec<Radix4Pass<T>>,
+}
+
+/// `log4(n)` for exact powers of four.
+pub fn log4_exact(n: usize) -> Result<u32, String> {
+    if n >= 4 && n.is_power_of_two() && n.trailing_zeros() % 2 == 0 {
+        Ok(n.trailing_zeros() / 2)
+    } else {
+        Err(format!("radix-4 FFT size must be a power of four >= 4, got {n}"))
+    }
+}
+
+impl<T: Real> Radix4Plan<T> {
+    pub fn new(n: usize, strategy: Strategy, direction: Direction) -> Result<Self, String> {
+        if strategy == Strategy::Standard {
+            return Err("radix-4 plan is ratio-form only (use standard radix-2)".into());
+        }
+        let m = log4_exact(n)?;
+        let sign = direction.sign();
+        let mut passes = Vec::with_capacity(m as usize);
+        for p in 0..m {
+            let s = 4usize.pow(p);
+            let l = n / (4 * s);
+            let angle = |mult: usize, j: usize| {
+                sign * 2.0 * core::f64::consts::PI * (mult * j * l) as f64 / n as f64
+            };
+            let a1: Vec<f64> = (0..s).map(|j| angle(1, j)).collect();
+            let a2: Vec<f64> = (0..s).map(|j| angle(2, j)).collect();
+            let a3: Vec<f64> = (0..s).map(|j| angle(3, j)).collect();
+            passes.push(Radix4Pass {
+                s,
+                w1: ratio_table(&a1, strategy),
+                w2: ratio_table(&a2, strategy),
+                w3: ratio_table(&a3, strategy),
+            });
+        }
+        Ok(Radix4Plan { n, strategy, direction, passes })
+    }
+
+    /// Maximum |ratio| across all three twiddle tables of all passes
+    /// (Theorem 1 generalization: ≤ 1 for dual-select).
+    pub fn max_ratio(&self) -> f64 {
+        let mut worst = 0.0f64;
+        for pass in &self.passes {
+            for tab in [&pass.w1, &pass.w2, &pass.w3] {
+                for &t in &tab.t {
+                    worst = worst.max(t.to_f64().abs());
+                }
+            }
+        }
+        worst
+    }
+
+    pub fn execute(&self, buf: &mut SplitBuf<T>, scratch: &mut SplitBuf<T>) {
+        let n = self.n;
+        assert_eq!(buf.len(), n);
+        if scratch.len() != n {
+            *scratch = SplitBuf::zeroed(n);
+        }
+        // Multiply by ±j depending on direction: forward uses -j.
+        let fwd = self.direction == Direction::Forward;
+
+        let mut src_is_buf = true;
+        for pass in &self.passes {
+            let (xre, xim, yre, yim) = if src_is_buf {
+                (&buf.re, &buf.im, &mut scratch.re, &mut scratch.im)
+            } else {
+                (&scratch.re, &scratch.im, &mut buf.re, &mut buf.im)
+            };
+            run_radix4_pass(pass, fwd, n, xre, xim, yre, yim);
+            src_is_buf = !src_is_buf;
+        }
+        if !src_is_buf {
+            core::mem::swap(buf, scratch);
+        }
+        if self.direction == Direction::Inverse {
+            let inv = T::from_f64(1.0 / n as f64);
+            for x in buf.re.iter_mut().chain(buf.im.iter_mut()) {
+                *x = *x * inv;
+            }
+        }
+    }
+
+    /// Convenience wrapper allocating scratch.
+    pub fn execute_alloc(&self, buf: &mut SplitBuf<T>) {
+        let mut scratch = SplitBuf::zeroed(self.n);
+        self.execute(buf, &mut scratch);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_radix4_pass<T: Real>(
+    pass: &Radix4Pass<T>,
+    fwd: bool,
+    n: usize,
+    xre: &[T],
+    xim: &[T],
+    yre: &mut [T],
+    yim: &mut [T],
+) {
+    let s = pass.s;
+    let l = n / (4 * s);
+    let q = n / 4;
+    for k in 0..l {
+        let base = k * s;
+        let out = 4 * k * s;
+        for j in 0..s {
+            let i0 = base + j;
+            let (t0r, t0i) = (xre[i0], xim[i0]);
+            let (t1r, t1i) = ratio_twiddle_mul(
+                xre[i0 + q], xim[i0 + q],
+                pass.w1.m1[j], pass.w1.m2[j], pass.w1.t[j], pass.w1.sel[j],
+            );
+            let (t2r, t2i) = ratio_twiddle_mul(
+                xre[i0 + 2 * q], xim[i0 + 2 * q],
+                pass.w2.m1[j], pass.w2.m2[j], pass.w2.t[j], pass.w2.sel[j],
+            );
+            let (t3r, t3i) = ratio_twiddle_mul(
+                xre[i0 + 3 * q], xim[i0 + 3 * q],
+                pass.w3.m1[j], pass.w3.m2[j], pass.w3.t[j], pass.w3.sel[j],
+            );
+
+            // Even/odd partial sums.
+            let e_r = t0r + t2r;
+            let e_i = t0i + t2i;
+            let f_r = t0r - t2r;
+            let f_i = t0i - t2i;
+            let g_r = t1r + t3r;
+            let g_i = t1i + t3i;
+            let h_r = t1r - t3r;
+            let h_i = t1i - t3i;
+
+            // jj = sign·j: forward  jj·h = (h_i, -h_r); inverse (-h_i, h_r).
+            let (jh_r, jh_i) = if fwd { (h_i, -h_r) } else { (-h_i, h_r) };
+
+            yre[out + j] = e_r + g_r;
+            yim[out + j] = e_i + g_i;
+            yre[out + s + j] = f_r + jh_r;
+            yim[out + s + j] = f_i + jh_i;
+            yre[out + 2 * s + j] = e_r - g_r;
+            yim[out + 2 * s + j] = e_i - g_i;
+            yre[out + 3 * s + j] = f_r - jh_r;
+            yim[out + 3 * s + j] = f_i - jh_i;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dft;
+    use crate::precision::F16;
+    use crate::util::metrics::rel_l2;
+    use crate::util::prng::Pcg32;
+
+    #[test]
+    fn log4_accepts_only_powers_of_four() {
+        assert_eq!(log4_exact(4), Ok(1));
+        assert_eq!(log4_exact(1024), Ok(5));
+        assert!(log4_exact(2).is_err());
+        assert!(log4_exact(8).is_err());
+        assert!(log4_exact(512).is_err());
+    }
+
+    #[test]
+    fn radix4_matches_dft_oracle() {
+        let mut rng = Pcg32::seed(31);
+        for n in [4usize, 16, 64, 256, 1024] {
+            let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let (wr, wi) = dft::naive_dft(&re, &im, false);
+            for strategy in [Strategy::DualSelect, Strategy::LinzerFeig] {
+                let plan = Radix4Plan::<f64>::new(n, strategy, Direction::Forward).unwrap();
+                let mut buf = SplitBuf::from_f64(&re, &im);
+                plan.execute_alloc(&mut buf);
+                let (gr, gi) = buf.to_f64();
+                let tol = if strategy == Strategy::DualSelect { 1e-12 } else { 5e-6 };
+                assert!(rel_l2(&gr, &gi, &wr, &wi) < tol, "n={n} {strategy:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn radix4_agrees_with_radix2() {
+        let mut rng = Pcg32::seed(32);
+        let n = 256;
+        let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let r4 = Radix4Plan::<f64>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let mut a = SplitBuf::from_f64(&re, &im);
+        r4.execute_alloc(&mut a);
+        let r2 = super::super::Plan::<f64>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let mut b = SplitBuf::from_f64(&re, &im);
+        r2.execute_alloc(&mut b);
+        let (ar, ai) = a.to_f64();
+        let (br, bi) = b.to_f64();
+        assert!(rel_l2(&ar, &ai, &br, &bi) < 1e-13);
+    }
+
+    #[test]
+    fn radix4_inverse_roundtrip() {
+        let mut rng = Pcg32::seed(33);
+        let n = 64;
+        let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let fwd = Radix4Plan::<f64>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let inv = Radix4Plan::<f64>::new(n, Strategy::DualSelect, Direction::Inverse).unwrap();
+        let mut buf = SplitBuf::from_f64(&re, &im);
+        fwd.execute_alloc(&mut buf);
+        inv.execute_alloc(&mut buf);
+        let (gr, gi) = buf.to_f64();
+        assert!(rel_l2(&gr, &gi, &re, &im) < 1e-12);
+    }
+
+    #[test]
+    fn theorem1_generalizes_to_radix4() {
+        // Paper §VI: the |t| ≤ 1 bound is radix-independent.
+        for n in [4usize, 16, 256, 4096] {
+            let plan = Radix4Plan::<f64>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+            assert!(plan.max_ratio() <= 1.0 + 1e-15, "n={n}");
+        }
+        // ... and LF's radix-4 table is NOT bounded (clamped 1e7).
+        let lf = Radix4Plan::<f64>::new(256, Strategy::LinzerFeig, Direction::Forward).unwrap();
+        assert!(lf.max_ratio() > 1e6);
+    }
+
+    #[test]
+    fn radix4_fp16_dual_select_accurate() {
+        let mut rng = Pcg32::seed(34);
+        let n = 256;
+        let re: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+        let im: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+        let (wr, wi) = dft::naive_dft(&re, &im, false);
+        let plan = Radix4Plan::<F16>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let mut buf = SplitBuf::<F16>::from_f64(&re, &im);
+        plan.execute_alloc(&mut buf);
+        let (gr, gi) = buf.to_f64();
+        let err = rel_l2(&gr, &gi, &wr, &wi);
+        assert!(err < 0.03, "radix-4 fp16 err {err:.3e}");
+    }
+}

@@ -1,0 +1,138 @@
+//! Real-input FFT via the N/2 complex packing trick.
+//!
+//! Pack x[2k] + j·x[2k+1], run an N/2-point complex FFT (any strategy),
+//! then untangle even/odd spectra and combine with one final twiddle
+//! multiply (done in dual-select ratio form, naturally).  Returns the
+//! N/2+1 non-redundant bins of the Hermitian spectrum.
+
+use crate::precision::{Real, SplitBuf};
+
+use super::plan::Plan;
+use super::{Direction, Strategy};
+
+/// Real-to-complex forward FFT plan for even `n`.
+#[derive(Debug)]
+pub struct RealFftPlan<T: Real> {
+    pub n: usize,
+    inner: Plan<T>,
+    /// Untangle twiddles e^{-2πik/n} for k in [0, n/2], in f64 (applied
+    /// in working precision at execute time).
+    tw: Vec<(f64, f64)>,
+}
+
+impl<T: Real> RealFftPlan<T> {
+    pub fn new(n: usize, strategy: Strategy) -> Result<Self, String> {
+        if n < 4 || n % 2 != 0 {
+            return Err(format!("real FFT size must be even and >= 4, got {n}"));
+        }
+        let inner = Plan::new(n / 2, strategy, Direction::Forward)?;
+        let tw = (0..=n / 2)
+            .map(|k| {
+                let theta = -2.0 * core::f64::consts::PI * k as f64 / n as f64;
+                (theta.cos(), theta.sin())
+            })
+            .collect();
+        Ok(RealFftPlan { n, inner, tw })
+    }
+
+    /// Transform a length-n real signal into n/2+1 spectrum bins.
+    pub fn execute(&self, x: &[T]) -> SplitBuf<T> {
+        let n = self.n;
+        assert_eq!(x.len(), n);
+        let half = n / 2;
+
+        // Pack even/odd samples as a complex signal.
+        let mut buf = SplitBuf::<T>::zeroed(half);
+        for k in 0..half {
+            buf.re[k] = x[2 * k];
+            buf.im[k] = x[2 * k + 1];
+        }
+        let mut scratch = SplitBuf::zeroed(half);
+        self.inner.execute(&mut buf, &mut scratch);
+
+        // Untangle: for k in [0, half], with Z the packed spectrum,
+        //   E[k] = (Z[k] + conj(Z[half-k])) / 2        (even samples)
+        //   O[k] = (Z[k] - conj(Z[half-k])) / (2j)     (odd samples)
+        //   X[k] = E[k] + e^{-2πik/n}·O[k]
+        let mut out = SplitBuf::<T>::zeroed(half + 1);
+        let h = T::from_f64(0.5);
+        for k in 0..=half {
+            let (zr_k, zi_k, zr_m, zi_m) = {
+                let km = (half - k) % half;
+                let kk = k % half;
+                (buf.re[kk], buf.im[kk], buf.re[km], buf.im[km])
+            };
+            let er = (zr_k + zr_m) * h;
+            let ei = (zi_k - zi_m) * h;
+            let or_ = (zi_k + zi_m) * h;
+            let oi = (zr_m - zr_k) * h;
+            // Twiddle multiply (f64 table rounded into T on the fly; the
+            // table is small — n/2+1 entries).
+            let (c, s) = self.tw[k];
+            let wc = T::from_f64(c);
+            let ws = T::from_f64(s);
+            let tr = wc * or_ - ws * oi;
+            let ti = ws.mul_add(or_, wc * oi);
+            out.re[k] = er + tr;
+            out.im[k] = ei + ti;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dft;
+    use crate::util::metrics::rel_l2;
+    use crate::util::prng::Pcg32;
+
+    #[test]
+    fn real_fft_matches_dft() {
+        let mut rng = Pcg32::seed(41);
+        for n in [4usize, 8, 64, 256, 1024] {
+            let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let plan = RealFftPlan::<f64>::new(n, Strategy::DualSelect).unwrap();
+            let xt: Vec<f64> = x.clone();
+            let out = plan.execute(&xt);
+            let (wr, wi) = dft::naive_dft(&x, &vec![0.0; n], false);
+            let (gr, gi) = out.to_f64();
+            assert!(
+                rel_l2(&gr, &gi, &wr[..=n / 2].to_vec(), &wi[..=n / 2].to_vec()) < 1e-12,
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn dc_and_nyquist_are_real() {
+        let mut rng = Pcg32::seed(42);
+        let n = 128;
+        let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let plan = RealFftPlan::<f64>::new(n, Strategy::DualSelect).unwrap();
+        let out = plan.execute(&x);
+        assert!(out.im[0].abs() < 1e-12);
+        assert!(out.im[n / 2].abs() < 1e-12);
+        // DC = sum of samples
+        assert!((out.re[0] - x.iter().sum::<f64>()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn rejects_odd_sizes() {
+        assert!(RealFftPlan::<f64>::new(6, Strategy::DualSelect).is_err()); // n/2 = 3 not pow2
+        assert!(RealFftPlan::<f64>::new(3, Strategy::DualSelect).is_err());
+    }
+
+    #[test]
+    fn real_fft_f32_accuracy() {
+        let mut rng = Pcg32::seed(43);
+        let n = 512;
+        let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let plan = RealFftPlan::<f32>::new(n, Strategy::DualSelect).unwrap();
+        let xt: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let out = plan.execute(&xt);
+        let (wr, wi) = dft::naive_dft(&x, &vec![0.0; n], false);
+        let (gr, gi) = out.to_f64();
+        assert!(rel_l2(&gr, &gi, &wr[..=n / 2].to_vec(), &wi[..=n / 2].to_vec()) < 1e-5);
+    }
+}

@@ -1,0 +1,316 @@
+//! Radix-2 Stockham autosort FFT — the paper's transform structure
+//! (§IV-B: "a Stockham FFT with m = log2 N passes").
+//!
+//! Out-of-place ping-pong between the data buffer and a scratch buffer;
+//! no bit-reversal permutation (the autosort property).  Pass `p` views
+//! the half-arrays as `(l, s)` blocks (`s = 2^p`, `l = n/2^{p+1}`),
+//! applies the butterfly with twiddle `W^{j·l}` along the stride axis,
+//! and interleaves the outputs as `(l, 2, s)`.
+
+use crate::precision::{Real, SplitBuf};
+
+use super::plan::{PassTable, Plan};
+use super::Direction;
+
+/// Execute one pass from its precomputed table.
+///
+/// `x*` are the input halves (length n), `y*` the output (length n).
+pub fn run_pass<T: Real>(
+    table: &PassTable<T>,
+    xre: &[T],
+    xim: &[T],
+    yre: &mut [T],
+    yim: &mut [T],
+) {
+    let n = xre.len();
+    let s = table.s;
+    let l = n / (2 * s);
+    debug_assert_eq!(n % (2 * s), 0);
+
+    let (are, bre) = xre.split_at(n / 2);
+    let (aim, bim) = xim.split_at(n / 2);
+
+    match &table.kind {
+        super::plan::PassKind::Plain(tab) => {
+            for k in 0..l {
+                let base_in = k * s;
+                let base_out = 2 * k * s;
+                for j in 0..s {
+                    let (a_r, a_i, b_r, b_i) = super::butterfly::standard(
+                        are[base_in + j],
+                        aim[base_in + j],
+                        bre[base_in + j],
+                        bim[base_in + j],
+                        tab.wr[j],
+                        tab.wi[j],
+                    );
+                    yre[base_out + j] = a_r;
+                    yim[base_out + j] = a_i;
+                    yre[base_out + s + j] = b_r;
+                    yim[base_out + s + j] = b_i;
+                }
+            }
+        }
+        super::plan::PassKind::Ratio(tab) => {
+            // §Perf iteration 2/3: (a) tables that are exactly W^0
+            // (dual-select / standard pass 0) degenerate to add/sub;
+            // (b) otherwise iterate constant-`sel` runs so the path
+            // choice is hoisted out of the inner loop and the body
+            // vectorizes.  Both preserve rounding semantics exactly.
+            if table.trivial {
+                for k in 0..l {
+                    let i = k * s;
+                    let o = 2 * k * s;
+                    for j in 0..s {
+                        let (ar, ai, br, bi) =
+                            (are[i + j], aim[i + j], bre[i + j], bim[i + j]);
+                        yre[o + j] = ar + br;
+                        yim[o + j] = ai + bi;
+                        yre[o + s + j] = ar - br;
+                        yim[o + s + j] = ai - bi;
+                    }
+                }
+            } else {
+                for k in 0..l {
+                    let base_in = k * s;
+                    let base_out = 2 * k * s;
+                    // Slice windows give LLVM exact loop bounds (no
+                    // per-element bounds checks in the 6-FMA body).
+                    let ar = &are[base_in..base_in + s];
+                    let ai = &aim[base_in..base_in + s];
+                    let br = &bre[base_in..base_in + s];
+                    let bi = &bim[base_in..base_in + s];
+                    let (yar, ybr) = yre[base_out..base_out + 2 * s].split_at_mut(s);
+                    let (yai, ybi) = yim[base_out..base_out + 2 * s].split_at_mut(s);
+                    // NOTE (§Perf L3): per-element select beats
+                    // constant-`sel` segment dispatch here — both
+                    // segment variants measured slower (EXPERIMENTS.md
+                    // iterations 2 and 5); the cmov pipeline wins.
+                    for j in 0..s {
+                        let (a_r, a_i, b_r, b_i) = super::butterfly::ratio(
+                            ar[j], ai[j], br[j], bi[j],
+                            tab.m1[j], tab.m2[j], tab.t[j], tab.sel[j],
+                        );
+                        yar[j] = a_r;
+                        yai[j] = a_i;
+                        ybr[j] = b_r;
+                        ybi[j] = b_i;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Full transform: executes every pass of `plan`, ping-ponging with
+/// `scratch`, leaving the result in `buf`.  Applies the 1/n scale for
+/// inverse plans.
+pub fn execute<T: Real>(plan: &Plan<T>, buf: &mut SplitBuf<T>, scratch: &mut SplitBuf<T>) {
+    let n = plan.n;
+    assert_eq!(buf.len(), n, "buffer length != plan size");
+    if scratch.len() != n {
+        *scratch = SplitBuf::zeroed(n);
+    }
+
+    let mut src_is_buf = true;
+    for table in &plan.passes {
+        if src_is_buf {
+            run_pass(table, &buf.re, &buf.im, &mut scratch.re, &mut scratch.im);
+        } else {
+            run_pass(table, &scratch.re, &scratch.im, &mut buf.re, &mut buf.im);
+        }
+        src_is_buf = !src_is_buf;
+    }
+    if !src_is_buf {
+        core::mem::swap(buf, scratch);
+    }
+
+    if plan.direction == Direction::Inverse {
+        let inv_n = T::from_f64(1.0 / n as f64);
+        for x in buf.re.iter_mut() {
+            *x = *x * inv_n;
+        }
+        for x in buf.im.iter_mut() {
+            *x = *x * inv_n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dft;
+    use crate::fft::{Direction, Plan, Strategy};
+    use crate::precision::{Bf16, F16};
+    use crate::util::metrics::rel_l2;
+    use crate::util::prng::Pcg32;
+
+    fn random_signal(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = Pcg32::seed(seed);
+        (
+            (0..n).map(|_| rng.gaussian()).collect(),
+            (0..n).map(|_| rng.gaussian()).collect(),
+        )
+    }
+
+    fn run<T: crate::precision::Real>(
+        n: usize,
+        strategy: Strategy,
+        dir: Direction,
+        re: &[f64],
+        im: &[f64],
+    ) -> (Vec<f64>, Vec<f64>) {
+        let plan = Plan::<T>::new(n, strategy, dir).unwrap();
+        let mut buf = SplitBuf::<T>::from_f64(re, im);
+        let mut scratch = SplitBuf::zeroed(n);
+        execute(&plan, &mut buf, &mut scratch);
+        buf.to_f64()
+    }
+
+    #[test]
+    fn all_strategies_match_dft_oracle_f64() {
+        for n in [2usize, 4, 8, 32, 128, 1024] {
+            let (re, im) = random_signal(n, n as u64);
+            let (wr, wi) = dft::naive_dft(&re, &im, false);
+            for strategy in Strategy::ALL {
+                let (gr, gi) = run::<f64>(n, strategy, Direction::Forward, &re, &im);
+                let err = rel_l2(&gr, &gi, &wr, &wi);
+                let tol = match strategy {
+                    Strategy::LinzerFeig | Strategy::Cosine => 5e-6, // clamp damage
+                    _ => 1e-12,
+                };
+                assert!(err < tol, "n={n} {strategy:?} err={err:.3e}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_roundtrip_error_matches_paper() {
+        // Paper §V "FP32 precision": ~1e-7 relative L2 roundtrip for
+        // both LF and dual-select.
+        let n = 1024;
+        let (re, im) = random_signal(n, 42);
+        for strategy in [Strategy::LinzerFeig, Strategy::DualSelect] {
+            let (fr, fi) = run::<f32>(n, strategy, Direction::Forward, &re, &im);
+            let (gr, gi) = run::<f32>(n, strategy, Direction::Inverse, &fr, &fi);
+            let err = rel_l2(&gr, &gi, &re, &im);
+            assert!(err < 1e-6, "{strategy:?} roundtrip {err:.3e}");
+        }
+    }
+
+    #[test]
+    fn fp16_dual_select_works_where_lf_fails() {
+        // The paper's headline: in half precision LF's clamped table
+        // (ratio 1e7 -> inf in fp16) destroys the transform; dual-select
+        // stays at O(m·eps).
+        let n = 1024;
+        let (re, im) = random_signal(n, 7);
+        let (wr, wi) = dft::naive_dft(&re, &im, false);
+
+        let (dr, di) = run::<F16>(n, Strategy::DualSelect, Direction::Forward, &re, &im);
+        let err_dual = rel_l2(&dr, &di, &wr, &wi);
+        assert!(err_dual < 0.05, "dual fp16 err {err_dual:.3e}");
+
+        let (lr, li) = run::<F16>(n, Strategy::LinzerFeig, Direction::Forward, &re, &im);
+        let err_lf = rel_l2(&lr, &li, &wr, &wi);
+        assert!(
+            err_lf.is_nan() || err_lf > 10.0 * err_dual,
+            "lf fp16 err {err_lf:.3e} vs dual {err_dual:.3e}"
+        );
+    }
+
+    #[test]
+    fn bf16_dual_select_beats_lf() {
+        // bf16 has f32's exponent range, so the clamped LF entries stay
+        // finite — but still amplify error by orders of magnitude.
+        let n = 256;
+        let (re, im) = random_signal(n, 8);
+        let (wr, wi) = dft::naive_dft(&re, &im, false);
+        let (dr, di) = run::<Bf16>(n, Strategy::DualSelect, Direction::Forward, &re, &im);
+        let (lr, li) = run::<Bf16>(n, Strategy::LinzerFeig, Direction::Forward, &re, &im);
+        let err_dual = rel_l2(&dr, &di, &wr, &wi);
+        let err_lf = rel_l2(&lr, &li, &wr, &wi);
+        assert!(err_dual < 0.2, "dual bf16 {err_dual:.3e}");
+        assert!(err_lf > err_dual, "lf {err_lf:.3e} dual {err_dual:.3e}");
+    }
+
+    #[test]
+    fn impulse_transforms_to_flat_spectrum() {
+        let n = 64;
+        let mut re = vec![0.0; n];
+        re[0] = 1.0;
+        let im = vec![0.0; n];
+        let (gr, gi) = run::<f64>(n, Strategy::DualSelect, Direction::Forward, &re, &im);
+        for k in 0..n {
+            assert!((gr[k] - 1.0).abs() < 1e-12);
+            assert!(gi[k].abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn single_tone_lands_in_one_bin() {
+        let n = 128;
+        let f = 9;
+        let re: Vec<f64> = (0..n)
+            .map(|t| (2.0 * core::f64::consts::PI * (f * t) as f64 / n as f64).cos())
+            .collect();
+        let im = vec![0.0; n];
+        let (gr, gi) = run::<f64>(n, Strategy::DualSelect, Direction::Forward, &re, &im);
+        for k in 0..n {
+            let mag = (gr[k] * gr[k] + gi[k] * gi[k]).sqrt();
+            if k == f || k == n - f {
+                assert!((mag - n as f64 / 2.0).abs() < 1e-9, "bin {k} mag {mag}");
+            } else {
+                assert!(mag < 1e-9, "bin {k} mag {mag}");
+            }
+        }
+    }
+
+    #[test]
+    fn linearity_and_parseval() {
+        let n = 256;
+        let (ar, ai) = random_signal(n, 100);
+        let (br, bi) = random_signal(n, 101);
+        let sum_r: Vec<f64> = ar.iter().zip(&br).map(|(x, y)| x + y).collect();
+        let sum_i: Vec<f64> = ai.iter().zip(&bi).map(|(x, y)| x + y).collect();
+        let (fa_r, fa_i) = run::<f64>(n, Strategy::DualSelect, Direction::Forward, &ar, &ai);
+        let (fb_r, fb_i) = run::<f64>(n, Strategy::DualSelect, Direction::Forward, &br, &bi);
+        let (fs_r, fs_i) = run::<f64>(n, Strategy::DualSelect, Direction::Forward, &sum_r, &sum_i);
+        let want_r: Vec<f64> = fa_r.iter().zip(&fb_r).map(|(x, y)| x + y).collect();
+        let want_i: Vec<f64> = fa_i.iter().zip(&fb_i).map(|(x, y)| x + y).collect();
+        assert!(rel_l2(&fs_r, &fs_i, &want_r, &want_i) < 1e-12);
+
+        // Parseval: sum |x|^2 == sum |X|^2 / n
+        let te: f64 = ar.iter().zip(&ai).map(|(r, i)| r * r + i * i).sum();
+        let fe: f64 = fa_r.iter().zip(&fa_i).map(|(r, i)| r * r + i * i).sum::<f64>() / n as f64;
+        assert!((te - fe).abs() / te < 1e-12);
+    }
+
+    #[test]
+    fn inverse_undoes_forward_exactly_in_f64() {
+        let n = 512;
+        let (re, im) = random_signal(n, 55);
+        let (fr, fi) = run::<f64>(n, Strategy::DualSelect, Direction::Forward, &re, &im);
+        let (gr, gi) = run::<f64>(n, Strategy::DualSelect, Direction::Inverse, &fr, &fi);
+        assert!(rel_l2(&gr, &gi, &re, &im) < 1e-12);
+    }
+
+    #[test]
+    fn time_shift_is_phase_ramp() {
+        let n = 64;
+        let (re, im) = random_signal(n, 77);
+        let shift = 5usize;
+        let sr: Vec<f64> = (0..n).map(|i| re[(i + n - shift) % n]).collect();
+        let si: Vec<f64> = (0..n).map(|i| im[(i + n - shift) % n]).collect();
+        let (fr, fi) = run::<f64>(n, Strategy::DualSelect, Direction::Forward, &re, &im);
+        let (gr, gi) = run::<f64>(n, Strategy::DualSelect, Direction::Forward, &sr, &si);
+        for k in 0..n {
+            let phi = -2.0 * core::f64::consts::PI * (k * shift) as f64 / n as f64;
+            let (c, s) = (phi.cos(), phi.sin());
+            let wr = fr[k] * c - fi[k] * s;
+            let wi = fr[k] * s + fi[k] * c;
+            assert!((gr[k] - wr).abs() < 1e-10, "k={k}");
+            assert!((gi[k] - wi).abs() < 1e-10, "k={k}");
+        }
+    }
+}

@@ -1,0 +1,310 @@
+//! Twiddle-table construction — the paper's Algorithm 1 and the two
+//! clamped baselines, mirrored from `python/compile/twiddle.py`.
+//!
+//! Tables are always computed in f64 and rounded **once** into the
+//! working precision `T`, matching how production FFTs build tables.
+//!
+//! Branch-free entry layout (see the Python module docstring for the
+//! derivation, including the paper's eq. (4) s2 typo):
+//!
+//! ```text
+//! u  = sel ? br : bi        v  = sel ? bi : br
+//! s1 = u - t*v              s2 = v + t*u
+//! Ar = ar + m1*s1           Br = ar - m1*s1
+//! Ai = ai + m2*s2           Bi = ai - m2*s2
+//! ```
+//!
+//! with `m1 = σ·mult`, `m2 = mult`, `σ = +1` on the cosine path and
+//! `-1` on the sine path — six FMAs per butterfly on either path.
+
+use crate::precision::Real;
+
+use super::{Direction, Strategy};
+
+/// The epsilon used to clamp the singular baselines' denominators
+/// ("standard practice", paper §I).
+pub const CLAMP_EPS: f64 = 1e-7;
+
+/// One pass worth of precomputed ratio-butterfly table entries.
+#[derive(Clone, Debug)]
+pub struct RatioTable<T> {
+    /// Signed outer multiplier for the s1 lane (σ·mult).
+    pub m1: Vec<T>,
+    /// Outer multiplier for the s2 lane (mult).
+    pub m2: Vec<T>,
+    /// The bounded precomputed ratio (tan θ or cot θ).
+    pub t: Vec<T>,
+    /// True where the cosine path was selected (the paper's one-bit
+    /// flag; here a bool lane so kernels can be branchy or branch-free).
+    pub sel: Vec<bool>,
+}
+
+impl<T: Real> RatioTable<T> {
+    /// Maximal runs of constant `sel`, as `(start, end, cos_path)`.
+    ///
+    /// Because the dual-select rule compares |cos θ| with |sin θ| and
+    /// the pass angles are monotone in j, `sel` changes at most a few
+    /// times per pass — the hot loop iterates run-by-run with the path
+    /// choice hoisted out (branch-free, vectorizable inner loops; this
+    /// is the §Perf L3 iteration 2 optimization).
+    pub fn segments(&self) -> Vec<(usize, usize, bool)> {
+        let mut out = Vec::new();
+        let mut start = 0usize;
+        for j in 1..=self.sel.len() {
+            if j == self.sel.len() || self.sel[j] != self.sel[start] {
+                out.push((start, j, self.sel[start]));
+                start = j;
+            }
+        }
+        out
+    }
+
+    /// True when every entry is the exact trivial twiddle W^0
+    /// (mult = 1, ratio = 0): the butterfly degenerates to add/sub and
+    /// the kernel may skip the table entirely.  This is *semantics
+    /// preserving*: the clamped LF table at W^0 is NOT trivial (its
+    /// huge ratio is the paper's point) and keeps the general path.
+    pub fn is_trivial(&self) -> bool {
+        self.t.iter().all(|&t| t.to_f64() == 0.0)
+            && self.m1.iter().all(|&m| m.to_f64() == 1.0)
+            && self.m2.iter().all(|&m| m.to_f64() == 1.0)
+    }
+}
+
+/// One pass worth of plain (ωr, ωi) entries for the standard butterfly.
+#[derive(Clone, Debug)]
+pub struct PlainTable<T> {
+    pub wr: Vec<T>,
+    pub wi: Vec<T>,
+}
+
+/// Twiddle angles for Stockham pass `p` of an `n`-point transform:
+/// `s = 2^p` angles `θ_j = sign·2π·j·l/n`, `l = n >> (p+1)`.
+pub fn pass_angles(n: usize, p: u32, dir: Direction) -> Vec<f64> {
+    let s = 1usize << p;
+    let l = n >> (p + 1);
+    assert!(l >= 1, "pass {p} out of range for n={n}");
+    let sign = dir.sign();
+    (0..s)
+        .map(|j| sign * 2.0 * core::f64::consts::PI * (j * l) as f64 / n as f64)
+        .collect()
+}
+
+/// Plain (cos, sin) table for the standard butterfly.
+pub fn plain_table<T: Real>(angles: &[f64]) -> PlainTable<T> {
+    PlainTable {
+        wr: angles.iter().map(|&a| T::from_f64(a.cos())).collect(),
+        wi: angles.iter().map(|&a| T::from_f64(a.sin())).collect(),
+    }
+}
+
+/// Whether the cosine path is selected for each angle under `strategy`.
+fn cos_path(wr: f64, wi: f64, strategy: Strategy) -> bool {
+    match strategy {
+        Strategy::DualSelect => wr.abs() >= wi.abs(),
+        Strategy::LinzerFeig => false,
+        Strategy::Cosine => true,
+        Strategy::Standard => unreachable!("standard butterfly has no ratio table"),
+    }
+}
+
+/// Build the (m1, m2, t, sel) ratio table for one pass.
+///
+/// For `LinzerFeig`/`Cosine` the denominator is clamped to
+/// [`CLAMP_EPS`]; `DualSelect` never needs it (Theorem 1).
+pub fn ratio_table<T: Real>(angles: &[f64], strategy: Strategy) -> RatioTable<T> {
+    let mut out = RatioTable {
+        m1: Vec::with_capacity(angles.len()),
+        m2: Vec::with_capacity(angles.len()),
+        t: Vec::with_capacity(angles.len()),
+        sel: Vec::with_capacity(angles.len()),
+    };
+    for &a in angles {
+        let (wr, wi) = (a.cos(), a.sin());
+        let cosine = cos_path(wr, wi, strategy);
+        let mut mult = if cosine { wr } else { wi };
+        if strategy != Strategy::DualSelect && mult.abs() < CLAMP_EPS {
+            mult = if mult < 0.0 { -CLAMP_EPS } else { CLAMP_EPS };
+        }
+        let num = if cosine { wi } else { wr };
+        let t = num / mult;
+        let sigma = if cosine { 1.0 } else { -1.0 };
+        out.m1.push(T::from_f64(sigma * mult));
+        out.m2.push(T::from_f64(mult));
+        out.t.push(T::from_f64(t));
+        out.sel.push(cosine);
+    }
+    out
+}
+
+/// The paper's Algorithm 1 over the flat twiddle index `k ∈ [0, n/2)`:
+/// returns `(mult, ratio, sel)` in f64 — the audit/analysis form.
+pub fn dual_select_flat(n: usize, dir: Direction) -> (Vec<f64>, Vec<f64>, Vec<bool>) {
+    let half = n / 2;
+    let sign = dir.sign();
+    let mut mult = Vec::with_capacity(half);
+    let mut ratio = Vec::with_capacity(half);
+    let mut sel = Vec::with_capacity(half);
+    for k in 0..half {
+        let theta = sign * 2.0 * core::f64::consts::PI * k as f64 / n as f64;
+        let (wr, wi) = (theta.cos(), theta.sin());
+        let cosine = wr.abs() >= wi.abs();
+        let m = if cosine { wr } else { wi };
+        mult.push(m);
+        ratio.push(if cosine { wi } else { wr } / m);
+        sel.push(cosine);
+    }
+    (mult, ratio, sel)
+}
+
+/// DIT stage twiddles: stage with butterfly span `len = 2^(stage+1)`
+/// uses `W_n^{j·(n/len)}` for `j ∈ [0, len/2)` — same factor set as the
+/// Stockham passes, different iteration order.
+pub fn dit_stage_angles(n: usize, stage: u32, dir: Direction) -> Vec<f64> {
+    let len = 1usize << (stage + 1);
+    let half = len / 2;
+    let step = n / len;
+    let sign = dir.sign();
+    (0..half)
+        .map(|j| sign * 2.0 * core::f64::consts::PI * (j * step) as f64 / n as f64)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::log2_exact;
+
+    #[test]
+    fn dual_select_bound_holds_for_all_sizes() {
+        for n in [2usize, 4, 8, 16, 64, 256, 1024, 4096, 16384] {
+            let (_, ratio, _) = dual_select_flat(n, Direction::Forward);
+            for (k, r) in ratio.iter().enumerate() {
+                assert!(r.abs() <= 1.0 + 1e-15, "n={n} k={k} |t|={}", r.abs());
+            }
+        }
+    }
+
+    #[test]
+    fn dual_select_multiplier_at_least_invsqrt2() {
+        let (mult, _, _) = dual_select_flat(1024, Direction::Forward);
+        for m in mult {
+            assert!(m.abs() >= core::f64::consts::FRAC_1_SQRT_2 - 1e-15);
+        }
+    }
+
+    #[test]
+    fn path_split_is_50_50_for_n1024() {
+        let (_, _, sel) = dual_select_flat(1024, Direction::Forward);
+        let cos_count = sel.iter().filter(|&&c| c).count();
+        assert_eq!(cos_count, 256);
+        assert_eq!(sel.len() - cos_count, 256);
+    }
+
+    #[test]
+    fn dual_max_ratio_is_exactly_one_at_n_over_8() {
+        let (_, ratio, _) = dual_select_flat(1024, Direction::Forward);
+        let max = ratio.iter().fold(0.0f64, |w, r| w.max(r.abs()));
+        assert!((max - 1.0).abs() < 1e-12);
+        // |t| = 1 exactly where |cos| = |sin|: k = N/8 (θ=-π/4) and its
+        // mirror k = 3N/8 (θ=-3π/4). The paper cites k=N/8.
+        assert!((ratio[128].abs() - 1.0).abs() < 1e-12);
+        assert!((ratio[384].abs() - 1.0).abs() < 1e-12);
+        for (k, r) in ratio.iter().enumerate() {
+            if k != 128 && k != 384 {
+                assert!(r.abs() < 1.0, "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn lf_table_clamped_at_w0() {
+        // Pass 0 has the single twiddle W^0 = 1: the LF denominator
+        // sin(0) = 0 gets clamped, storing the huge ratio 1e7.
+        let angles = pass_angles(1024, 0, Direction::Forward);
+        assert_eq!(angles.len(), 1);
+        let t: RatioTable<f64> = ratio_table(&angles, Strategy::LinzerFeig);
+        assert!(t.t[0].abs() >= 0.99 / CLAMP_EPS);
+        assert!(!t.sel[0]);
+    }
+
+    #[test]
+    fn cosine_table_clamped_at_n_over_4() {
+        // The last pass contains k = n/4 (θ = -π/2) where cos ≈ 6e-17.
+        let n = 1024;
+        let angles = pass_angles(n, 9, Direction::Forward);
+        let t: RatioTable<f64> = ratio_table(&angles, Strategy::Cosine);
+        let worst = t.t.iter().fold(0.0f64, |w, &x| w.max(x.abs()));
+        assert!(worst >= 0.99 / CLAMP_EPS);
+    }
+
+    #[test]
+    fn dual_table_bounded_every_pass() {
+        let n = 4096;
+        for p in 0..log2_exact(n).unwrap() {
+            let angles = pass_angles(n, p, Direction::Forward);
+            let t: RatioTable<f64> = ratio_table(&angles, Strategy::DualSelect);
+            for &x in &t.t {
+                assert!(x.abs() <= 1.0 + 1e-15);
+            }
+            // m1 = σ m2 exactly.
+            for i in 0..t.m1.len() {
+                let sigma = if t.sel[i] { 1.0 } else { -1.0 };
+                assert_eq!(t.m1[i], sigma * t.m2[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn pass_angle_union_covers_flat_table() {
+        let n = 256;
+        let mut seen = std::collections::BTreeSet::new();
+        for p in 0..log2_exact(n).unwrap() {
+            let l = n >> (p + 1);
+            for j in 0..(1usize << p) {
+                seen.insert(j * l);
+            }
+        }
+        assert_eq!(seen, (0..n / 2).collect());
+    }
+
+    #[test]
+    fn inverse_angles_are_conjugate() {
+        let fwd = pass_angles(64, 3, Direction::Forward);
+        let inv = pass_angles(64, 3, Direction::Inverse);
+        for (f, i) in fwd.iter().zip(&inv) {
+            assert_eq!(*f, -*i);
+        }
+    }
+
+    #[test]
+    fn dit_stage_angles_match_stockham_factor_set() {
+        let n = 64;
+        let mut dit: Vec<i64> = Vec::new();
+        for stage in 0..log2_exact(n).unwrap() {
+            let len = 1usize << (stage + 1);
+            for j in 0..len / 2 {
+                dit.push((j * (n / len)) as i64);
+            }
+        }
+        dit.sort_unstable();
+        dit.dedup();
+        assert_eq!(dit, (0..(n / 2) as i64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn tables_round_into_working_precision() {
+        use crate::precision::F16;
+        let angles = pass_angles(1024, 9, Direction::Forward);
+        let t16: RatioTable<F16> = ratio_table(&angles, Strategy::DualSelect);
+        // Every dual-select entry is finite and bounded in fp16.
+        for (&t, &m) in t16.t.iter().zip(&t16.m2) {
+            assert!(t.is_finite());
+            assert!(t.to_f64().abs() <= 1.0);
+            assert!(m.to_f64().abs() <= 1.0);
+        }
+        // ... whereas the clamped LF ratio overflows fp16 to inf.
+        let lf16: RatioTable<F16> = ratio_table(&angles, Strategy::LinzerFeig);
+        assert!(lf16.t.iter().any(|t| !t.is_finite()));
+    }
+}

@@ -1,0 +1,39 @@
+//! # fmafft — Dual-Select FMA Butterfly FFT framework
+//!
+//! Reproduction of *"Dual-Select FMA Butterfly for FFT: Eliminating
+//! Twiddle Factor Singularities with Bounded Precomputed Ratios"*
+//! (M. A. Bergach, CS.PF 2026).
+//!
+//! The library has three planes:
+//!
+//! * **Native FFT core** ([`fft`], [`precision`], [`analysis`]) — a
+//!   generic-precision radix-2/4 Stockham FFT implementing all four
+//!   butterfly strategies the paper compares (standard 10-op,
+//!   Linzer–Feig ÷sin, cosine ÷cos, and the paper's dual-select), over
+//!   `f64`/`f32` hardware floats and bit-exact software
+//!   [`precision::F16`]/[`precision::Bf16`].  This is the measurement
+//!   instrument for the paper's Tables I–II.
+//! * **Serving plane** ([`runtime`], [`coordinator`]) — a PJRT CPU
+//!   client that loads the AOT-compiled JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`, built once by `make artifacts`; Python is
+//!   never on the request path) plus a dynamic-batching request
+//!   coordinator in the style of vLLM's router.
+//! * **Applications** ([`signal`], [`workload`]) — the radar pulse
+//!   compression and spectrogram pipelines the paper motivates, used by
+//!   the examples and benches.
+//!
+//! See `DESIGN.md` for the experiment index mapping every paper table
+//! to its regenerating bench, and `EXPERIMENTS.md` for measured-vs-paper
+//! results.
+
+pub mod analysis;
+pub mod bench_util;
+pub mod cli;
+pub mod coordinator;
+pub mod dft;
+pub mod fft;
+pub mod precision;
+pub mod runtime;
+pub mod signal;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,6 @@
+//! `fmafft` binary — CLI entry point (see [`fmafft::cli`]).
+
+fn main() {
+    let code = fmafft::cli::run(std::env::args().skip(1));
+    std::process::exit(code);
+}

@@ -1,0 +1,178 @@
+//! Generic complex scalar over any [`Real`] working precision.
+//!
+//! Storage is a plain (re, im) pair; the FFT core itself uses
+//! split-format *arrays* for the hot path, but `Complex` is the
+//! ergonomic unit for signal generation, oracles and tests.
+
+use super::Real;
+
+/// A complex number in working precision `T`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Complex<T: Real> {
+    pub re: T,
+    pub im: T,
+}
+
+impl<T: Real> Complex<T> {
+    #[inline]
+    pub fn new(re: T, im: T) -> Self {
+        Complex { re, im }
+    }
+
+    #[inline]
+    pub fn zero() -> Self {
+        Complex { re: T::zero(), im: T::zero() }
+    }
+
+    /// Round an f64 complex pair into working precision.
+    #[inline]
+    pub fn from_f64(re: f64, im: f64) -> Self {
+        Complex { re: T::from_f64(re), im: T::from_f64(im) }
+    }
+
+    /// Widen to an (f64, f64) pair (exact).
+    #[inline]
+    pub fn to_f64(self) -> (f64, f64) {
+        (self.re.to_f64(), self.im.to_f64())
+    }
+
+    #[inline]
+    pub fn conj(self) -> Self {
+        Complex { re: self.re, im: -self.im }
+    }
+
+    /// |z|^2 in working precision.
+    #[inline]
+    pub fn abs_sq(self) -> T {
+        self.re.mul_add(self.re, self.im * self.im)
+    }
+
+    /// Complex multiply in working precision (4 mul + 2 add as written;
+    /// the FFT butterflies never call this on the hot path — they use
+    /// the factorized FMA forms).
+    #[inline]
+    pub fn mul(self, o: Self) -> Self {
+        Complex {
+            re: self.re * o.re - self.im * o.im,
+            im: self.im.mul_add(o.re, self.re * o.im),
+        }
+    }
+
+    /// Scale by a real factor.
+    #[inline]
+    pub fn scale(self, s: T) -> Self {
+        Complex { re: self.re * s, im: self.im * s }
+    }
+}
+
+impl<T: Real> core::ops::Add for Complex<T> {
+    type Output = Self;
+    #[inline]
+    fn add(self, o: Self) -> Self {
+        Complex { re: self.re + o.re, im: self.im + o.im }
+    }
+}
+
+impl<T: Real> core::ops::Sub for Complex<T> {
+    type Output = Self;
+    #[inline]
+    fn sub(self, o: Self) -> Self {
+        Complex { re: self.re - o.re, im: self.im - o.im }
+    }
+}
+
+impl<T: Real> core::ops::Neg for Complex<T> {
+    type Output = Self;
+    #[inline]
+    fn neg(self) -> Self {
+        Complex { re: -self.re, im: -self.im }
+    }
+}
+
+/// Split-format complex buffer: separate re/im vectors (the layout the
+/// FFT hot path and the PJRT artifacts both use).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SplitBuf<T: Real> {
+    pub re: Vec<T>,
+    pub im: Vec<T>,
+}
+
+impl<T: Real> SplitBuf<T> {
+    pub fn zeroed(n: usize) -> Self {
+        SplitBuf { re: vec![T::zero(); n], im: vec![T::zero(); n] }
+    }
+
+    pub fn len(&self) -> usize {
+        debug_assert_eq!(self.re.len(), self.im.len());
+        self.re.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.re.is_empty()
+    }
+
+    /// Build from f64 slices, rounding once into working precision.
+    pub fn from_f64(re: &[f64], im: &[f64]) -> Self {
+        assert_eq!(re.len(), im.len());
+        SplitBuf {
+            re: re.iter().map(|&x| T::from_f64(x)).collect(),
+            im: im.iter().map(|&x| T::from_f64(x)).collect(),
+        }
+    }
+
+    /// Widen to (Vec<f64>, Vec<f64>).
+    pub fn to_f64(&self) -> (Vec<f64>, Vec<f64>) {
+        (
+            self.re.iter().map(|x| x.to_f64()).collect(),
+            self.im.iter().map(|x| x.to_f64()).collect(),
+        )
+    }
+
+    pub fn get(&self, i: usize) -> Complex<T> {
+        Complex { re: self.re[i], im: self.im[i] }
+    }
+
+    pub fn set(&mut self, i: usize, z: Complex<T>) {
+        self.re[i] = z.re;
+        self.im[i] = z.im;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precision::F16;
+
+    #[test]
+    fn complex_algebra_f64() {
+        let a = Complex::<f64>::new(1.0, 2.0);
+        let b = Complex::<f64>::new(3.0, -1.0);
+        let p = a.mul(b);
+        assert_eq!((p.re, p.im), (5.0, 5.0));
+        let s = a + b;
+        assert_eq!((s.re, s.im), (4.0, 1.0));
+        assert_eq!(a.conj().im, -2.0);
+        assert_eq!(a.abs_sq(), 5.0);
+    }
+
+    #[test]
+    fn complex_generic_fp16() {
+        let a = Complex::<F16>::from_f64(0.5, -0.25);
+        let (re, im) = a.to_f64();
+        assert_eq!((re, im), (0.5, -0.25));
+        let sq = a.abs_sq().to_f64();
+        assert_eq!(sq, 0.3125);
+    }
+
+    #[test]
+    fn splitbuf_roundtrip() {
+        let re = [1.0, 2.0, 3.0];
+        let im = [-1.0, 0.0, 0.5];
+        let buf = SplitBuf::<f32>::from_f64(&re, &im);
+        assert_eq!(buf.len(), 3);
+        let (r2, i2) = buf.to_f64();
+        assert_eq!(r2, re.to_vec());
+        assert_eq!(i2, im.to_vec());
+        assert_eq!(buf.get(1).re, 2.0f32);
+    }
+}

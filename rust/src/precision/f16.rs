@@ -1,0 +1,370 @@
+//! Software IEEE 754 binary16 (`F16`) — and the macro that also
+//! generates bfloat16 in `bf16.rs`.
+//!
+//! Every arithmetic operation computes the *exact* result (or an
+//! error-free transformation of it) in f64 and rounds **once** to the
+//! narrow format.  Why this is exact:
+//!
+//! * narrow values are exact in f64 (11- or 8-bit significands);
+//! * `a + b` in f64 is exact (worst case needs ~51 bits < 53);
+//! * `a * b` in f64 is exact (22 bits);
+//! * `a * b + c` uses the exact product plus a TwoSum, with the TwoSum
+//!   residual breaking rounding ties — single-rounding FMA semantics;
+//! * `a / b` and `sqrt` correct the f64 rounding with an FMA-computed
+//!   remainder term before the final rounding.
+
+use super::round::{decode_to_f64, round_f64_to, two_sum, FloatFormat};
+
+macro_rules! softfloat {
+    ($name:ident, $fmt:expr, $docname:literal) => {
+        #[doc = concat!("Software ", $docname, " with bit-exact IEEE semantics.")]
+        #[derive(Clone, Copy, PartialEq, Eq, Default)]
+        pub struct $name(pub u16);
+
+        impl $name {
+            /// The underlying format descriptor.
+            pub const FORMAT: FloatFormat = $fmt;
+            pub const ZERO: $name = $name(0);
+            /// Positive infinity.
+            pub const INFINITY: $name = $name($fmt.inf_bits());
+
+            /// Construct from raw bits.
+            #[inline]
+            pub const fn from_bits(bits: u16) -> Self {
+                $name(bits)
+            }
+
+            /// Raw bit pattern.
+            #[inline]
+            pub const fn to_bits(self) -> u16 {
+                self.0
+            }
+
+            /// Round an f64 to this format (one rounding).
+            #[inline]
+            pub fn from_f64(x: f64) -> Self {
+                $name(round_f64_to($fmt, x, 0.0))
+            }
+
+            /// Round an f32 to this format (f32 -> f64 is exact, so this
+            /// is a single rounding too).
+            #[inline]
+            pub fn from_f32(x: f32) -> Self {
+                Self::from_f64(x as f64)
+            }
+
+            /// Exact widening to f64.
+            #[inline]
+            pub fn to_f64(self) -> f64 {
+                decode_to_f64($fmt, self.0)
+            }
+
+            /// Widening to f32 (exact for binary16 and bfloat16).
+            #[inline]
+            pub fn to_f32(self) -> f32 {
+                self.to_f64() as f32
+            }
+
+            #[inline]
+            pub fn is_nan(self) -> bool {
+                self.to_f64().is_nan()
+            }
+
+            #[inline]
+            pub fn is_finite(self) -> bool {
+                self.to_f64().is_finite()
+            }
+
+            /// Absolute value (sign-bit clear; exact).
+            #[inline]
+            pub fn abs(self) -> Self {
+                $name(self.0 & !(1 << ($fmt.width() - 1)))
+            }
+
+            /// Correctly-rounded fused multiply-add: `self * b + c` with
+            /// one rounding of the exact result.
+            #[inline]
+            pub fn mul_add(self, b: Self, c: Self) -> Self {
+                let p = self.to_f64() * b.to_f64(); // exact
+                let (s, e) = two_sum(p, c.to_f64()); // exact transform
+                $name(round_f64_to($fmt, s, e))
+            }
+
+            /// Correctly-rounded division.
+            #[inline]
+            pub fn div_exact(self, b: Self) -> Self {
+                let a = self.to_f64();
+                let bb = b.to_f64();
+                let q = a / bb;
+                // Remainder r = a - q*b, exact via f64 FMA; its sign
+                // (relative to b) says which side of q the true quotient
+                // lies on, which is what tie-breaking needs.
+                let r = (-q).mul_add(bb, a);
+                let res = if bb > 0.0 { r } else { -r };
+                $name(round_f64_to($fmt, q, res))
+            }
+
+            /// Correctly-rounded square root.
+            #[inline]
+            pub fn sqrt(self) -> Self {
+                let a = self.to_f64();
+                let s = a.sqrt();
+                let r = (-s).mul_add(s, a); // a - s*s, exact
+                $name(round_f64_to($fmt, s, r))
+            }
+
+            /// Machine epsilon as f64 (4.88e-4 for binary16 — the
+            /// constant in the paper's Tables I-II).
+            #[inline]
+            pub fn epsilon() -> f64 {
+                $fmt.epsilon()
+            }
+
+            /// Largest finite value as f64 (65504 for binary16).
+            #[inline]
+            pub fn max_finite() -> f64 {
+                $fmt.max_finite()
+            }
+        }
+
+        impl core::ops::Add for $name {
+            type Output = $name;
+            #[inline]
+            fn add(self, rhs: $name) -> $name {
+                // Exact in f64 (see module docs), so one rounding.
+                $name(round_f64_to($fmt, self.to_f64() + rhs.to_f64(), 0.0))
+            }
+        }
+
+        impl core::ops::Sub for $name {
+            type Output = $name;
+            #[inline]
+            fn sub(self, rhs: $name) -> $name {
+                $name(round_f64_to($fmt, self.to_f64() - rhs.to_f64(), 0.0))
+            }
+        }
+
+        impl core::ops::Mul for $name {
+            type Output = $name;
+            #[inline]
+            fn mul(self, rhs: $name) -> $name {
+                $name(round_f64_to($fmt, self.to_f64() * rhs.to_f64(), 0.0))
+            }
+        }
+
+        impl core::ops::Div for $name {
+            type Output = $name;
+            #[inline]
+            fn div(self, rhs: $name) -> $name {
+                self.div_exact(rhs)
+            }
+        }
+
+        impl core::ops::Neg for $name {
+            type Output = $name;
+            #[inline]
+            fn neg(self) -> $name {
+                $name(self.0 ^ (1 << ($fmt.width() - 1)))
+            }
+        }
+
+        impl PartialOrd for $name {
+            #[inline]
+            fn partial_cmp(&self, other: &Self) -> Option<core::cmp::Ordering> {
+                self.to_f64().partial_cmp(&other.to_f64())
+            }
+        }
+
+        impl core::fmt::Debug for $name {
+            fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+                write!(f, concat!(stringify!($name), "({})"), self.to_f64())
+            }
+        }
+
+        impl core::fmt::Display for $name {
+            fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+                write!(f, "{}", self.to_f64())
+            }
+        }
+
+        impl From<f32> for $name {
+            fn from(x: f32) -> Self {
+                Self::from_f32(x)
+            }
+        }
+
+        impl From<$name> for f32 {
+            fn from(x: $name) -> f32 {
+                x.to_f32()
+            }
+        }
+    };
+}
+
+pub(crate) use softfloat;
+
+softfloat!(F16, FloatFormat::BINARY16, "IEEE 754 binary16 (half precision)");
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants() {
+        assert_eq!(F16::from_f64(1.0).to_bits(), 0x3c00);
+        assert_eq!(F16::epsilon(), 4.8828125e-4);
+        assert_eq!(F16::max_finite(), 65504.0);
+    }
+
+    #[test]
+    fn roundtrip_all_bit_patterns_via_f64() {
+        for bits in 0u16..=0xffff {
+            let x = F16::from_bits(bits);
+            if x.is_nan() {
+                assert!(F16::from_f64(x.to_f64()).is_nan());
+                continue;
+            }
+            assert_eq!(F16::from_f64(x.to_f64()).to_bits(), bits);
+        }
+    }
+
+    /// Exhaustive-ish check: softfloat add/mul equal "round(exact f64 op)"
+    /// for a structured sample of operand pairs.
+    #[test]
+    fn add_mul_match_rounded_f64() {
+        let interesting: Vec<u16> = (0u16..=0xffff).step_by(97).collect();
+        for &a_bits in &interesting {
+            for &b_bits in &interesting {
+                let a = F16::from_bits(a_bits);
+                let b = F16::from_bits(b_bits);
+                if a.is_nan() || b.is_nan() {
+                    continue;
+                }
+                let sum = (a + b).to_f64();
+                let want_sum = F16::from_f64(a.to_f64() + b.to_f64()).to_f64();
+                assert!(
+                    sum == want_sum || (sum.is_nan() && want_sum.is_nan()),
+                    "add {a:?}+{b:?}: {sum} vs {want_sum}"
+                );
+                let prod = (a * b).to_f64();
+                let want_prod = F16::from_f64(a.to_f64() * b.to_f64()).to_f64();
+                assert!(
+                    prod == want_prod || (prod.is_nan() && want_prod.is_nan()),
+                    "mul {a:?}*{b:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fma_single_rounding_differs_from_two_roundings() {
+        // Construct a case where fl16(fl16(a*b) + c) != fl16(a*b + c):
+        // a*b slightly above a representable value, c nudges across a tie.
+        // a = 1 + 2^-10 (ulp above 1), b = 1 + 2^-10:
+        //   a*b = 1 + 2^-9 + 2^-20 exactly.
+        // Two-rounding: fl(a*b) = 1 + 2^-9 (2^-20 lost, RNE tie? rem=2^-20,
+        //   half=2^-11... a*b = 1.001953125 + 2^-20; fl16 keeps 1+2^-9).
+        let a = F16::from_f64(1.0 + (2.0f64).powi(-10));
+        let b = a;
+        let c = F16::from_f64((2.0f64).powi(-11)); // half-ulp of 1.0 region
+        // exact = 1 + 2^-9 + 2^-11 + 2^-20 -> rounds up (above the tie)
+        let fused = a.mul_add(b, c);
+        let two_step = (a * b) + c;
+        // two_step: a*b -> 1+2^-9 (tie at 2^-20 below half, rounds down);
+        // then + 2^-11 = exact tie at 1+2^-9+2^-11 -> ties-to-even -> 1+2^-9.
+        // fused: exact sum is above that tie -> 1+2^-9+2^-10.
+        assert_eq!(fused.to_f64(), 1.0 + (2.0f64).powi(-9) + (2.0f64).powi(-10));
+        assert_eq!(two_step.to_f64(), 1.0 + (2.0f64).powi(-9));
+        assert_ne!(fused.to_bits(), two_step.to_bits());
+    }
+
+    #[test]
+    fn fma_matches_exact_rounding_on_random_triples() {
+        let mut rng = crate::util::prng::Pcg32::seed(42);
+        for _ in 0..200_000 {
+            let a = F16::from_bits((rng.next_u32() & 0xffff) as u16);
+            let b = F16::from_bits((rng.next_u32() & 0xffff) as u16);
+            let c = F16::from_bits((rng.next_u32() & 0xffff) as u16);
+            if a.is_nan() || b.is_nan() || c.is_nan() {
+                continue;
+            }
+            let got = a.mul_add(b, c);
+            // Oracle: exact product is representable in f64; exact sum may
+            // not be, but TwoSum recovers it. Compare against doing the
+            // whole thing in extended precision via integer reasoning:
+            // here we trust two_sum (tested separately) and just check
+            // consistency with f64::mul_add when that is exact enough.
+            let exact64 = a.to_f64().mul_add(b.to_f64(), c.to_f64());
+            let naive = F16::from_f64(exact64);
+            // They may differ only on f64-level ties, which the residual
+            // corrects; those are rare. Check got is within 1 ulp and
+            // equal in the non-tie case.
+            if got.to_bits() != naive.to_bits() {
+                // must be an f64 halfway case
+                let d = (got.to_f64() - naive.to_f64()).abs();
+                let ulp = F16::epsilon() * got.to_f64().abs().max(f64::MIN_POSITIVE);
+                assert!(d <= ulp, "fma mismatch beyond tie correction");
+            }
+        }
+    }
+
+    #[test]
+    fn overflow_saturates_to_inf() {
+        let big = F16::from_f64(60000.0);
+        assert!((big + big).to_f64().is_infinite());
+        assert!((big * big).to_f64().is_infinite());
+        // This is what happens to the clamped LF ratio (1e7) in fp16:
+        let t = F16::from_f64(1e7);
+        assert!(t.to_f64().is_infinite());
+    }
+
+    #[test]
+    fn division_correctly_rounded_sample() {
+        let mut rng = crate::util::prng::Pcg32::seed(7);
+        for _ in 0..100_000 {
+            let a = F16::from_bits((rng.next_u32() & 0xffff) as u16);
+            let b = F16::from_bits((rng.next_u32() & 0xffff) as u16);
+            if a.is_nan() || b.is_nan() || b.to_f64() == 0.0 {
+                continue;
+            }
+            let q16 = a / b;
+            let q = q16.to_f64();
+            if !q.is_finite() || q == 0.0 {
+                continue;
+            }
+            // |a - q_f16 * b| must be minimal among representable
+            // neighbours (nearest-rounding property).
+            let err = |cand: f64| (a.to_f64() - cand * b.to_f64()).abs();
+            let up = F16::from_bits(q16.to_bits().wrapping_add(1));
+            let dn = F16::from_bits(q16.to_bits().wrapping_sub(1));
+            for nb in [up, dn] {
+                if nb.is_finite() && nb.to_f64().signum() == q.signum() {
+                    assert!(
+                        err(q) <= err(nb.to_f64()) * (1.0 + 1e-12),
+                        "div not nearest: {a:?}/{b:?} = {q} (neighbour {nb:?})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sqrt_correctly_rounded_sample() {
+        for bits in (0u16..0x7c00).step_by(13) {
+            let x = F16::from_bits(bits);
+            let s = x.sqrt().to_f64();
+            let want = F16::from_f64(x.to_f64().sqrt()).to_f64();
+            // sqrt(f64) of an f16 is inexact in f64 by < 2^-53 relative;
+            // the residual fix makes the narrow rounding exact.
+            assert_eq!(s, want, "sqrt({})", x.to_f64());
+        }
+    }
+
+    #[test]
+    fn neg_and_abs_are_sign_ops() {
+        let x = F16::from_f64(-1.5);
+        assert_eq!((-x).to_f64(), 1.5);
+        assert_eq!(x.abs().to_f64(), 1.5);
+        assert_eq!((-F16::ZERO).to_bits(), 0x8000);
+    }
+}

@@ -1,0 +1,25 @@
+//! Multi-precision scalar substrate.
+//!
+//! The paper's claims are about the rounding behaviour of *half
+//! precision* FMA arithmetic.  XLA's CPU backend (and many GPU
+//! compilers) widen f16 intermediates to f32 inside fusions, which
+//! masks exactly the effect under study — so this module provides
+//! bit-exact software IEEE 754 binary16 ([`F16`]) and bfloat16
+//! ([`Bf16`]) where **every** operation rounds once to the target
+//! format, including a correctly-rounded fused multiply-add.
+//!
+//! The [`Real`] trait abstracts over `f64`, `f32`, `F16` and `Bf16` so
+//! the entire FFT core is generic over precision; [`Complex`] is the
+//! split-storage complex type built on it.
+
+mod bf16;
+mod complex;
+mod f16;
+mod real;
+mod round;
+
+pub use bf16::Bf16;
+pub use complex::{Complex, SplitBuf};
+pub use f16::F16;
+pub use real::Real;
+pub use round::{round_f64_to, FloatFormat};

@@ -1,0 +1,268 @@
+//! The [`Real`] trait: the scalar abstraction the whole FFT core is
+//! generic over.
+//!
+//! Implementations: `f64`, `f32` (hardware, `mul_add` maps to the CPU
+//! FMA instruction), [`super::F16`] and [`super::Bf16`] (software,
+//! single-rounding semantics).  The trait deliberately exposes *only*
+//! operations the paper's butterflies need, plus conversions used by
+//! twiddle precomputation (always done in f64 and rounded once into the
+//! working precision — matching how real implementations build tables).
+
+use core::fmt::Debug;
+use core::ops::{Add, Div, Mul, Neg, Sub};
+
+use super::{Bf16, F16};
+
+/// A real scalar type usable as the FFT working precision.
+pub trait Real:
+    Copy
+    + Clone
+    + Debug
+    + PartialEq
+    + PartialOrd
+    + Default
+    + Send
+    + Sync
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + 'static
+{
+    /// Short name used in reports/benches ("f32", "fp16", ...).
+    const NAME: &'static str;
+
+    /// Machine epsilon (ulp of 1.0) as f64 — the `eps` in the paper's
+    /// error bounds (4.88e-4 for fp16, 5.96e-8 for f32).
+    const EPSILON: f64;
+
+    fn zero() -> Self;
+    fn one() -> Self;
+
+    /// Round an f64 into this precision (single rounding).
+    fn from_f64(x: f64) -> Self;
+
+    /// Widen to f64 (exact for every supported format).
+    fn to_f64(self) -> f64;
+
+    /// Fused multiply-add `self * b + c` with a single rounding.
+    fn mul_add(self, b: Self, c: Self) -> Self;
+
+    fn abs(self) -> Self;
+    fn sqrt(self) -> Self;
+    fn is_nan(self) -> bool;
+    fn is_finite(self) -> bool;
+}
+
+impl Real for f64 {
+    const NAME: &'static str = "f64";
+    const EPSILON: f64 = 1.1102230246251565e-16; // unit roundoff 2^-53
+
+    #[inline]
+    fn zero() -> Self {
+        0.0
+    }
+    #[inline]
+    fn one() -> Self {
+        1.0
+    }
+    #[inline]
+    fn from_f64(x: f64) -> Self {
+        x
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline]
+    fn mul_add(self, b: Self, c: Self) -> Self {
+        f64::mul_add(self, b, c)
+    }
+    #[inline]
+    fn abs(self) -> Self {
+        f64::abs(self)
+    }
+    #[inline]
+    fn sqrt(self) -> Self {
+        f64::sqrt(self)
+    }
+    #[inline]
+    fn is_nan(self) -> bool {
+        f64::is_nan(self)
+    }
+    #[inline]
+    fn is_finite(self) -> bool {
+        f64::is_finite(self)
+    }
+}
+
+impl Real for f32 {
+    const NAME: &'static str = "f32";
+    const EPSILON: f64 = 5.960464477539063e-8; // 2^-24, the paper's SS V value
+
+    #[inline]
+    fn zero() -> Self {
+        0.0
+    }
+    #[inline]
+    fn one() -> Self {
+        1.0
+    }
+    #[inline]
+    fn from_f64(x: f64) -> Self {
+        x as f32
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline]
+    fn mul_add(self, b: Self, c: Self) -> Self {
+        f32::mul_add(self, b, c)
+    }
+    #[inline]
+    fn abs(self) -> Self {
+        f32::abs(self)
+    }
+    #[inline]
+    fn sqrt(self) -> Self {
+        f32::sqrt(self)
+    }
+    #[inline]
+    fn is_nan(self) -> bool {
+        f32::is_nan(self)
+    }
+    #[inline]
+    fn is_finite(self) -> bool {
+        f32::is_finite(self)
+    }
+}
+
+impl Real for F16 {
+    const NAME: &'static str = "fp16";
+    const EPSILON: f64 = 4.8828125e-4; // unit roundoff 2^-11 (paper's eps_FP16)
+
+    #[inline]
+    fn zero() -> Self {
+        F16::ZERO
+    }
+    #[inline]
+    fn one() -> Self {
+        F16::from_bits(0x3c00)
+    }
+    #[inline]
+    fn from_f64(x: f64) -> Self {
+        F16::from_f64(x)
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        F16::to_f64(self)
+    }
+    #[inline]
+    fn mul_add(self, b: Self, c: Self) -> Self {
+        F16::mul_add(self, b, c)
+    }
+    #[inline]
+    fn abs(self) -> Self {
+        F16::abs(self)
+    }
+    #[inline]
+    fn sqrt(self) -> Self {
+        F16::sqrt(self)
+    }
+    #[inline]
+    fn is_nan(self) -> bool {
+        F16::is_nan(self)
+    }
+    #[inline]
+    fn is_finite(self) -> bool {
+        F16::is_finite(self)
+    }
+}
+
+impl Real for Bf16 {
+    const NAME: &'static str = "bf16";
+    const EPSILON: f64 = 0.00390625; // unit roundoff 2^-8
+
+    #[inline]
+    fn zero() -> Self {
+        Bf16::ZERO
+    }
+    #[inline]
+    fn one() -> Self {
+        Bf16::from_bits(0x3f80)
+    }
+    #[inline]
+    fn from_f64(x: f64) -> Self {
+        Bf16::from_f64(x)
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        Bf16::to_f64(self)
+    }
+    #[inline]
+    fn mul_add(self, b: Self, c: Self) -> Self {
+        Bf16::mul_add(self, b, c)
+    }
+    #[inline]
+    fn abs(self) -> Self {
+        Bf16::abs(self)
+    }
+    #[inline]
+    fn sqrt(self) -> Self {
+        Bf16::sqrt(self)
+    }
+    #[inline]
+    fn is_nan(self) -> bool {
+        Bf16::is_nan(self)
+    }
+    #[inline]
+    fn is_finite(self) -> bool {
+        Bf16::is_finite(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn generic_roundtrip<T: Real>() {
+        for v in [0.0, 1.0, -1.0, 0.5, 2.0, -0.25] {
+            assert_eq!(T::from_f64(v).to_f64(), v, "{} {v}", T::NAME);
+        }
+        assert_eq!(T::zero().to_f64(), 0.0);
+        assert_eq!(T::one().to_f64(), 1.0);
+    }
+
+    #[test]
+    fn all_impls_roundtrip_simple_values() {
+        generic_roundtrip::<f64>();
+        generic_roundtrip::<f32>();
+        generic_roundtrip::<F16>();
+        generic_roundtrip::<Bf16>();
+    }
+
+    /// The paper's eps values, used throughout the bound computations.
+    #[test]
+    fn epsilons_match_paper() {
+        assert_eq!(F16::EPSILON, 4.8828125e-4);
+        assert!((f32::EPSILON as f64 - 1.1920929e-7).abs() < 1e-12);
+        assert_eq!(<f32 as Real>::EPSILON, 5.960464477539063e-8);
+    }
+
+    fn generic_fma<T: Real>() {
+        let a = T::from_f64(3.0);
+        let b = T::from_f64(4.0);
+        let c = T::from_f64(-10.0);
+        assert_eq!(a.mul_add(b, c).to_f64(), 2.0, "{}", T::NAME);
+    }
+
+    #[test]
+    fn fma_works_generically() {
+        generic_fma::<f64>();
+        generic_fma::<f32>();
+        generic_fma::<F16>();
+        generic_fma::<Bf16>();
+    }
+}

@@ -1,0 +1,340 @@
+//! Correctly-rounded f64 → narrow-float conversion, shared by [`super::F16`]
+//! and [`super::Bf16`].
+//!
+//! The narrow formats are parameterized by [`FloatFormat`].  The core
+//! routine [`round_f64_to`] rounds an f64 to the target format with
+//! round-to-nearest-even, optionally consulting a *residual* term: when
+//! an arithmetic result was first rounded to f64 (e.g. the sum inside a
+//! software FMA), the residual carries the exact remainder so that ties
+//! in the narrow format are broken by the true value rather than the
+//! doubly-rounded one.  This gives **single-rounding semantics** for
+//! every softfloat operation — the property the paper's 6-FMA butterfly
+//! analysis assumes of hardware FMA units.
+
+/// Static description of a narrow binary floating-point format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FloatFormat {
+    /// Stored mantissa bits (10 for binary16, 7 for bfloat16).
+    pub mant_bits: u32,
+    /// Exponent field width in bits (5 for binary16, 8 for bfloat16).
+    pub exp_bits: u32,
+}
+
+impl FloatFormat {
+    pub const BINARY16: FloatFormat = FloatFormat { mant_bits: 10, exp_bits: 5 };
+    pub const BFLOAT16: FloatFormat = FloatFormat { mant_bits: 7, exp_bits: 8 };
+
+    /// Exponent bias (15 for binary16, 127 for bfloat16).
+    #[inline]
+    pub const fn bias(self) -> i64 {
+        (1 << (self.exp_bits - 1)) - 1
+    }
+
+    /// Largest unbiased exponent of a normal number (15 / 127).
+    #[inline]
+    pub const fn max_exp(self) -> i64 {
+        self.bias()
+    }
+
+    /// Smallest unbiased exponent of a normal number (-14 / -126).
+    #[inline]
+    pub const fn min_exp(self) -> i64 {
+        1 - self.bias()
+    }
+
+    /// Total storage width (sign + exponent + mantissa), always <= 16 here.
+    #[inline]
+    pub const fn width(self) -> u32 {
+        1 + self.exp_bits + self.mant_bits
+    }
+
+    /// Bit pattern of +infinity.
+    #[inline]
+    pub const fn inf_bits(self) -> u16 {
+        (((1u32 << self.exp_bits) - 1) << self.mant_bits) as u16
+    }
+
+    /// Canonical quiet-NaN bit pattern.
+    #[inline]
+    pub const fn nan_bits(self) -> u16 {
+        self.inf_bits() | (1 << (self.mant_bits - 1)) as u16
+    }
+
+    /// Unit roundoff (half an ulp of 1.0) as f64 — the paper's "machine
+    /// epsilon" convention: 4.88e-4 for binary16, 3.9e-3 for bfloat16.
+    #[inline]
+    pub fn epsilon(self) -> f64 {
+        (2.0f64).powi(-(self.mant_bits as i32 + 1))
+    }
+
+    /// Largest finite value as f64.
+    #[inline]
+    pub fn max_finite(self) -> f64 {
+        let frac = 2.0 - (2.0f64).powi(-(self.mant_bits as i32));
+        frac * (2.0f64).powi(self.max_exp() as i32)
+    }
+}
+
+/// Round `x + residual` (exact mathematical sum, with `|residual|` far
+/// below one ulp of `x`) to the nearest value in `fmt`, ties to even.
+///
+/// `residual` must satisfy `|residual| < 0.5 * ulp_f64(x)` — exactly
+/// what a TwoSum / divide-remainder correction term provides.  Pass
+/// `0.0` when `x` is already the exact value.
+pub fn round_f64_to(fmt: FloatFormat, x: f64, residual: f64) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 63) as u16) << (fmt.width() - 1);
+
+    if x.is_nan() {
+        return fmt.nan_bits() | sign;
+    }
+    if x.is_infinite() {
+        return sign | fmt.inf_bits();
+    }
+    if x == 0.0 {
+        // TwoSum guarantees residual == 0 when the rounded sum is 0.
+        return sign;
+    }
+
+    let e = ((bits >> 52) & 0x7ff) as i64 - 1023;
+    // 53-bit significand with the implicit bit.  (x != 0; f64 subnormals
+    // are far below every representable narrow value and every rounding
+    // boundary, so treating them via the normal path after flushing is
+    // safe — but be exact anyway.)
+    let (mant, e) = if (bits >> 52) & 0x7ff == 0 {
+        // f64 subnormal: normalize.
+        let raw = bits & ((1u64 << 52) - 1);
+        let lz = raw.leading_zeros() as i64 - 11; // bits above position 52
+        (raw << (lz + 1), -1022 - (lz + 1))
+    } else {
+        (bits & ((1u64 << 52) - 1) | (1u64 << 52), e)
+    };
+    debug_assert!(mant >> 52 == 1);
+
+    if e > fmt.max_exp() {
+        // Magnitude >= 2^(max_exp+1): infinity.
+        return sign | fmt.inf_bits();
+    }
+
+    // How many low bits of the 53-bit significand get rounded away.
+    let shift: i64 = if e >= fmt.min_exp() {
+        52 - fmt.mant_bits as i64
+    } else {
+        // Subnormal target: each exponent step below min_exp costs a bit.
+        52 - fmt.mant_bits as i64 + (fmt.min_exp() - e)
+    };
+
+    if shift >= 64 {
+        // Too small to influence even the smallest subnormal's rounding.
+        return sign;
+    }
+    if shift >= 54 {
+        // keep == 0 and rem < half with certainty only when shift >= 54
+        // (mant has exactly 53 bits): value < 2^-1 * min_subnormal.
+        return sign;
+    }
+
+    let shift = shift as u32;
+    let keep = mant >> shift;
+    let rem = mant & ((1u64 << shift) - 1);
+    let half = 1u64 << (shift - 1);
+
+    // Assemble the packed value so a rounding carry propagates naturally
+    // through the exponent (including into infinity).
+    let mut packed: u64 = if e >= fmt.min_exp() {
+        // keep in [2^mant_bits, 2^(mant_bits+1)); implicit bit adds one
+        // exponent step: field = (e + bias - 1) then + keep.
+        (((e + fmt.bias() - 1) as u64) << fmt.mant_bits) + keep
+    } else {
+        keep // subnormal: exponent field 0
+    };
+
+    let round_up = if rem > half {
+        true
+    } else if rem < half {
+        false
+    } else {
+        // Exactly at the f64-visible halfway point: the residual decides,
+        // falling back to ties-to-even when the value is a true tie.
+        if residual > 0.0 {
+            true
+        } else if residual < 0.0 {
+            false
+        } else {
+            (packed & 1) == 1
+        }
+    };
+    if round_up {
+        packed += 1;
+    }
+    // Overflow past the largest finite value lands exactly on inf_bits.
+    sign | (packed as u16)
+}
+
+/// Decode `bits` in `fmt` to f64 (always exact — every narrow value is
+/// representable in f64).
+pub fn decode_to_f64(fmt: FloatFormat, bits: u16) -> f64 {
+    let sign = if bits >> (fmt.width() - 1) & 1 == 1 { -1.0 } else { 1.0 };
+    let exp_field = ((bits >> fmt.mant_bits) & ((1 << fmt.exp_bits) - 1)) as i64;
+    let frac = (bits & ((1 << fmt.mant_bits) - 1)) as f64;
+    let scale = (2.0f64).powi(-(fmt.mant_bits as i32));
+
+    if exp_field == (1 << fmt.exp_bits) - 1 {
+        return if frac == 0.0 { sign * f64::INFINITY } else { f64::NAN };
+    }
+    if exp_field == 0 {
+        // Subnormal (or zero).
+        return sign * frac * scale * (2.0f64).powi(fmt.min_exp() as i32);
+    }
+    sign * (1.0 + frac * scale) * (2.0f64).powi((exp_field - fmt.bias()) as i32)
+}
+
+/// Error-free transformation: returns `(s, e)` with `s = fl(a + b)` and
+/// `a + b = s + e` exactly (Knuth TwoSum, no magnitude ordering needed).
+#[inline]
+pub fn two_sum(a: f64, b: f64) -> (f64, f64) {
+    let s = a + b;
+    let ap = s - b;
+    let bp = s - ap;
+    let da = a - ap;
+    let db = b - bp;
+    (s, da + db)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const F16: FloatFormat = FloatFormat::BINARY16;
+    const BF16: FloatFormat = FloatFormat::BFLOAT16;
+
+    #[test]
+    fn format_constants() {
+        assert_eq!(F16.bias(), 15);
+        assert_eq!(F16.max_exp(), 15);
+        assert_eq!(F16.min_exp(), -14);
+        assert_eq!(F16.inf_bits(), 0x7c00);
+        assert_eq!(F16.max_finite(), 65504.0);
+        assert_eq!(F16.epsilon(), 4.8828125e-4); // paper's eps_FP16 = 4.88e-4
+        assert_eq!(BF16.bias(), 127);
+        assert_eq!(BF16.inf_bits(), 0x7f80);
+        assert_eq!(BF16.epsilon(), 0.00390625); // 2^-8
+    }
+
+    #[test]
+    fn exact_small_integers() {
+        assert_eq!(round_f64_to(F16, 0.0, 0.0), 0x0000);
+        assert_eq!(round_f64_to(F16, -0.0, 0.0), 0x8000);
+        assert_eq!(round_f64_to(F16, 1.0, 0.0), 0x3c00);
+        assert_eq!(round_f64_to(F16, -2.0, 0.0), 0xc000);
+        assert_eq!(round_f64_to(F16, 65504.0, 0.0), 0x7bff);
+    }
+
+    #[test]
+    fn overflow_to_inf() {
+        assert_eq!(round_f64_to(F16, 65536.0, 0.0), 0x7c00);
+        assert_eq!(round_f64_to(F16, 1e300, 0.0), 0x7c00);
+        assert_eq!(round_f64_to(F16, -1e300, 0.0), 0xfc00);
+        // 65520 is the rounding boundary: ties-to-even rounds it to inf.
+        assert_eq!(round_f64_to(F16, 65520.0, 0.0), 0x7c00);
+        assert_eq!(round_f64_to(F16, 65519.999, 0.0), 0x7bff);
+    }
+
+    #[test]
+    fn subnormals() {
+        let min_sub = (2.0f64).powi(-24);
+        assert_eq!(round_f64_to(F16, min_sub, 0.0), 0x0001);
+        assert_eq!(round_f64_to(F16, min_sub * 0.5, 0.0), 0x0000); // tie -> even
+        assert_eq!(round_f64_to(F16, min_sub * 0.50001, 0.0), 0x0001);
+        assert_eq!(round_f64_to(F16, min_sub * 0.49999, 0.0), 0x0000);
+        assert_eq!(round_f64_to(F16, min_sub * 1.5, 0.0), 0x0002); // tie -> even
+        // Largest subnormal.
+        let max_sub = (2.0f64).powi(-14) - (2.0f64).powi(-24);
+        assert_eq!(round_f64_to(F16, max_sub, 0.0), 0x03ff);
+        // Smallest normal.
+        assert_eq!(round_f64_to(F16, (2.0f64).powi(-14), 0.0), 0x0400);
+    }
+
+    #[test]
+    fn ties_to_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10.
+        let half_ulp = (2.0f64).powi(-11);
+        assert_eq!(round_f64_to(F16, 1.0 + half_ulp, 0.0), 0x3c00); // even
+        assert_eq!(round_f64_to(F16, 1.0 + 3.0 * half_ulp, 0.0), 0x3c02); // even
+    }
+
+    #[test]
+    fn residual_breaks_ties() {
+        let half_ulp = (2.0f64).powi(-11);
+        // Without residual: tie -> even -> down.
+        assert_eq!(round_f64_to(F16, 1.0 + half_ulp, 0.0), 0x3c00);
+        // Positive residual: exact value is above the tie -> up.
+        assert_eq!(round_f64_to(F16, 1.0 + half_ulp, 1e-20), 0x3c01);
+        // Negative residual: exact value below the tie -> down.
+        assert_eq!(round_f64_to(F16, 1.0 + 3.0 * half_ulp, -1e-20), 0x3c01);
+    }
+
+    #[test]
+    fn nan_and_inf_pass_through() {
+        assert_eq!(round_f64_to(F16, f64::NAN, 0.0) & 0x7c00, 0x7c00);
+        assert_ne!(round_f64_to(F16, f64::NAN, 0.0) & 0x03ff, 0);
+        assert_eq!(round_f64_to(F16, f64::INFINITY, 0.0), 0x7c00);
+        assert_eq!(round_f64_to(F16, f64::NEG_INFINITY, 0.0), 0xfc00);
+    }
+
+    #[test]
+    fn decode_roundtrips_all_finite_f16_patterns() {
+        for bits in 0u16..=0xffff {
+            let v = decode_to_f64(F16, bits);
+            if v.is_nan() {
+                continue;
+            }
+            assert_eq!(round_f64_to(F16, v, 0.0), bits, "bits={bits:#06x} v={v}");
+        }
+    }
+
+    #[test]
+    fn decode_roundtrips_all_finite_bf16_patterns() {
+        for bits in 0u16..=0xffff {
+            let v = decode_to_f64(BF16, bits);
+            if v.is_nan() {
+                continue;
+            }
+            assert_eq!(round_f64_to(BF16, v, 0.0), bits, "bits={bits:#06x} v={v}");
+        }
+    }
+
+    #[test]
+    fn two_sum_is_exact() {
+        let cases = [
+            (1.0, 1e-30),
+            (1e16, 1.0),
+            (-3.5, 3.5),
+            (0.1, 0.2),
+            (1e308, -1e308),
+        ];
+        for (a, b) in cases {
+            let (s, e) = two_sum(a, b);
+            // s + e == a + b exactly: verify via higher-precision splitting.
+            assert_eq!(s, a + b);
+            // e must be the exact residual for representable cases.
+            if (a + b) - a == b {
+                assert_eq!(e, 0.0, "a={a} b={b}");
+            }
+        }
+        // A case with a genuine residual.
+        let (s, e) = two_sum(1.0, (2.0f64).powi(-60));
+        assert_eq!(s, 1.0);
+        assert_eq!(e, (2.0f64).powi(-60));
+    }
+
+    #[test]
+    fn bf16_basics() {
+        assert_eq!(round_f64_to(BF16, 1.0, 0.0), 0x3f80);
+        assert_eq!(round_f64_to(BF16, -1.0, 0.0), 0xbf80);
+        // max finite = 255/128 * 2^127
+        let max = decode_to_f64(BF16, 0x7f7f);
+        assert_eq!(round_f64_to(BF16, max, 0.0), 0x7f7f);
+        assert_eq!(round_f64_to(BF16, max * 1.01, 0.0), 0x7f80);
+    }
+}

@@ -1,0 +1,223 @@
+//! Artifact manifest: typed view of `artifacts/manifest.json`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::fft::Strategy;
+use crate::util::json::Json;
+
+/// What computation an artifact implements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    Fft,
+    MatchedFilter,
+    PowerSpectrum,
+}
+
+impl ArtifactKind {
+    /// Manifest string form (matches `python/compile/aot.py`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ArtifactKind::Fft => "fft",
+            ArtifactKind::MatchedFilter => "matched_filter",
+            ArtifactKind::PowerSpectrum => "power_spectrum",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "fft" => ArtifactKind::Fft,
+            "matched_filter" => ArtifactKind::MatchedFilter,
+            "power_spectrum" => ArtifactKind::PowerSpectrum,
+            other => bail!("unknown artifact kind {other:?}"),
+        })
+    }
+}
+
+/// Canonical artifact name (mirrors `aot.variant_name` in Python):
+/// `{kind}_{fwd|inv}_{strategy}_n{n}_b{batch}_f32`.
+pub fn artifact_name(
+    kind: ArtifactKind,
+    strategy: Strategy,
+    n: usize,
+    batch: usize,
+    inverse: bool,
+) -> String {
+    let dir = if inverse { "inv" } else { "fwd" };
+    format!("{}_{dir}_{}_n{n}_b{batch}_f32", kind.as_str(), strategy.name())
+}
+
+/// One AOT-compiled model variant.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    /// Absolute path of the HLO text file.
+    pub path: PathBuf,
+    pub kind: ArtifactKind,
+    pub n: usize,
+    pub batch: usize,
+    pub strategy: Strategy,
+    pub inverse: bool,
+    /// Input shapes (split re/im: two `[batch, n]` arrays).
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shapes.
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<Artifact>,
+}
+
+fn parse_shapes(v: &Json) -> Result<Vec<Vec<usize>>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("shapes not an array"))?
+        .iter()
+        .map(|shape| {
+            shape
+                .as_arr()
+                .ok_or_else(|| anyhow!("shape not an array"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect()
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+
+        if root.get("format").and_then(Json::as_str) != Some("hlo-text") {
+            bail!("unsupported manifest format (want hlo-text)");
+        }
+
+        let mut artifacts = Vec::new();
+        for a in root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts[]"))?
+        {
+            let get_str = |k: &str| -> Result<&str> {
+                a.get(k).and_then(Json::as_str).ok_or_else(|| anyhow!("missing {k}"))
+            };
+            let get_usize = |k: &str| -> Result<usize> {
+                a.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("missing {k}"))
+            };
+            let file = get_str("file")?;
+            let art = Artifact {
+                name: get_str("name")?.to_string(),
+                path: dir.join(file),
+                kind: ArtifactKind::parse(get_str("kind")?)?,
+                n: get_usize("n")?,
+                batch: get_usize("batch")?,
+                strategy: get_str("strategy")?
+                    .parse::<Strategy>()
+                    .map_err(|e| anyhow!(e))?,
+                inverse: a
+                    .get("inverse")
+                    .and_then(Json::as_bool)
+                    .ok_or_else(|| anyhow!("missing inverse"))?,
+                inputs: parse_shapes(a.get("inputs").ok_or_else(|| anyhow!("missing inputs"))?)?,
+                outputs: parse_shapes(
+                    a.get("outputs").ok_or_else(|| anyhow!("missing outputs"))?,
+                )?,
+            };
+            if !art.path.exists() {
+                bail!("artifact file missing: {:?}", art.path);
+            }
+            artifacts.push(art);
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    /// Find an artifact by exact name.
+    pub fn by_name(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Find the FFT artifact for `(n, batch, strategy, inverse)`.
+    pub fn find_fft(
+        &self,
+        n: usize,
+        batch: usize,
+        strategy: Strategy,
+        inverse: bool,
+    ) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| {
+            a.kind == ArtifactKind::Fft
+                && a.n == n
+                && a.batch == batch
+                && a.strategy == strategy
+                && a.inverse == inverse
+        })
+    }
+
+    /// All batch sizes available for a given (kind, n, strategy).
+    pub fn batches_for(&self, kind: ArtifactKind, n: usize, strategy: Strategy) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == kind && a.n == n && a.strategy == strategy && !a.inverse)
+            .map(|a| a.batch)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> Option<Manifest> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        Manifest::load(dir).ok()
+    }
+
+    #[test]
+    fn loads_repo_manifest_when_built() {
+        let Some(m) = repo_artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert!(!m.artifacts.is_empty());
+        // The default set always contains the n=1024 b=1 dual fft.
+        let a = m.find_fft(1024, 1, Strategy::DualSelect, false).expect("default artifact");
+        assert_eq!(a.inputs, vec![vec![1, 1024], vec![1, 1024]]);
+        assert_eq!(a.outputs.len(), 2);
+        assert!(a.path.exists());
+    }
+
+    #[test]
+    fn batches_for_reports_sorted() {
+        let Some(m) = repo_artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let b = m.batches_for(ArtifactKind::Fft, 1024, Strategy::DualSelect);
+        assert!(b.windows(2).all(|w| w[0] < w[1]));
+        assert!(b.contains(&1));
+    }
+
+    #[test]
+    fn missing_dir_is_a_clean_error() {
+        let err = Manifest::load("/nonexistent/path").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn kind_parsing() {
+        assert_eq!(ArtifactKind::parse("fft").unwrap(), ArtifactKind::Fft);
+        assert!(ArtifactKind::parse("nope").is_err());
+    }
+}

@@ -1,0 +1,119 @@
+//! PJRT client wrapper: compile-once / execute-many over the AOT
+//! artifacts.  Adapted from the reference wiring in
+//! `/opt/xla-example/src/bin/load_hlo.rs` (HLO *text* interchange —
+//! see `python/compile/aot.py` for why not serialized protos).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifacts::{Artifact, Manifest};
+use super::literal::BatchF32;
+
+/// A compiled, ready-to-execute model variant.
+pub struct LoadedModel {
+    pub artifact: Artifact,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModel {
+    /// Execute on a batch; returns the split-format outputs.
+    ///
+    /// The artifact was lowered with `return_tuple=True`, so the single
+    /// result literal is a tuple of `[batch, n]` arrays.
+    pub fn execute(&self, input: &BatchF32) -> Result<Vec<BatchF32>> {
+        let (batch, n) = (self.artifact.batch, self.artifact.n);
+        if input.batch != batch || input.n != n {
+            bail!(
+                "input shape [{}, {}] does not match artifact {} ([{batch}, {n}])",
+                input.batch,
+                input.n,
+                self.artifact.name
+            );
+        }
+        let (lre, lim) = input.to_literals()?;
+        let result = self.exe.execute::<xla::Literal>(&[lre, lim])?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+
+        let n_out = self.artifact.outputs.len();
+        if n_out == 2 {
+            // (re, im) pair.
+            let out = BatchF32::from_literals(&parts[0], &parts[1], batch, n)?;
+            Ok(vec![out])
+        } else if n_out == 1 {
+            // Single real output (power spectrum): put it in `re`.
+            let rv = parts[0].to_vec::<f32>()?;
+            Ok(vec![BatchF32 { batch, n, re: rv, im: vec![0.0; batch * n] }])
+        } else {
+            bail!("unsupported output arity {n_out}");
+        }
+    }
+}
+
+/// The PJRT engine: one CPU client + a cache of compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<LoadedModel>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Engine { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (compile) an artifact by name, memoized.
+    pub fn load(&self, name: &str) -> Result<Arc<LoadedModel>> {
+        if let Some(m) = self.cache.lock().unwrap().get(name) {
+            return Ok(m.clone());
+        }
+        let artifact = self
+            .manifest
+            .by_name(name)
+            .ok_or_else(|| anyhow!("no artifact named {name:?} in manifest"))?
+            .clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            artifact
+                .path
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", artifact.path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let model = Arc::new(LoadedModel { artifact, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), model.clone());
+        Ok(model)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Preload every artifact in the manifest (startup warm-up).
+    pub fn warm_up(&self) -> Result<usize> {
+        let names: Vec<String> =
+            self.manifest.artifacts.iter().map(|a| a.name.clone()).collect();
+        for n in &names {
+            self.load(n)?;
+        }
+        Ok(names.len())
+    }
+}

@@ -1,0 +1,15 @@
+//! The serving runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (HLO text, produced once by `make artifacts`) and executes them on
+//! the PJRT CPU client via the `xla` crate.  Python is never on this
+//! path.
+//!
+//! * [`artifacts`] — `manifest.json` discovery and typed descriptors
+//! * [`literal`] — split-format ↔ `xla::Literal` conversion
+//! * [`client`] — PJRT client wrapper + compiled-executable cache
+
+pub mod artifacts;
+pub mod client;
+pub mod literal;
+
+pub use artifacts::{Artifact, ArtifactKind, Manifest};
+pub use client::{Engine, LoadedModel};

@@ -1,0 +1,64 @@
+//! Linear-FM (chirp) waveforms — the canonical radar pulse.
+//! Mirrors `python/compile/model.py::lfm_chirp` exactly so the Rust
+//! native path and the AOT artifacts agree on the reference pulse.
+
+/// Complex LFM chirp: unit amplitude, instantaneous frequency sweeping
+/// `f0 → f1` cycles/sample over `n` samples.
+pub fn lfm_chirp(n: usize, f0: f64, f1: f64) -> (Vec<f64>, Vec<f64>) {
+    let mut re = Vec::with_capacity(n);
+    let mut im = Vec::with_capacity(n);
+    for t in 0..n {
+        let t = t as f64;
+        let phase = 2.0 * core::f64::consts::PI * (f0 * t + 0.5 * (f1 - f0) * t * t / n as f64);
+        re.push(phase.cos());
+        im.push(phase.sin());
+    }
+    (re, im)
+}
+
+/// The default chirp used by the matched-filter artifacts
+/// (`f0 = 0.05`, `f1 = 0.45` — matches `model.lfm_chirp` defaults).
+pub fn default_chirp(n: usize) -> (Vec<f64>, Vec<f64>) {
+    lfm_chirp(n, 0.05, 0.45)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_amplitude() {
+        let (re, im) = lfm_chirp(256, 0.05, 0.45);
+        for i in 0..256 {
+            let mag = (re[i] * re[i] + im[i] * im[i]).sqrt();
+            assert!((mag - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn starts_at_phase_zero() {
+        let (re, im) = lfm_chirp(64, 0.1, 0.4);
+        assert!((re[0] - 1.0).abs() < 1e-12);
+        assert!(im[0].abs() < 1e-12);
+    }
+
+    #[test]
+    fn instantaneous_frequency_sweeps_up() {
+        // Phase difference between consecutive samples grows along an
+        // up-chirp.
+        let (re, im) = lfm_chirp(1024, 0.01, 0.30);
+        let phase = |i: usize| im[i].atan2(re[i]);
+        let dp_early = (phase(11) - phase(10)).rem_euclid(2.0 * core::f64::consts::PI);
+        let dp_late = (phase(901) - phase(900)).rem_euclid(2.0 * core::f64::consts::PI);
+        assert!(dp_late > dp_early, "{dp_early} {dp_late}");
+    }
+
+    #[test]
+    fn matches_python_reference_values() {
+        // Spot values computed with the python model (same formula).
+        let (re, _) = lfm_chirp(1024, 0.05, 0.45);
+        let t: f64 = 100.0;
+        let phase = 2.0 * core::f64::consts::PI * (0.05 * t + 0.5 * 0.4 * t * t / 1024.0);
+        assert!((re[100] - phase.cos()).abs() < 1e-12);
+    }
+}

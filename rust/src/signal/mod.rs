@@ -1,0 +1,15 @@
+//! Signal-processing applications built on the FFT core — the
+//! workloads the paper's introduction motivates ("real-time radar and
+//! neural network inference").
+//!
+//! * [`window`] — analysis windows for the STFT
+//! * [`chirp`] — LFM radar waveforms
+//! * [`noise`] — calibrated noise generators
+//! * [`stft`] — short-time Fourier transform / spectrograms
+//! * [`pulse`] — radar pulse compression (matched filter)
+
+pub mod chirp;
+pub mod noise;
+pub mod pulse;
+pub mod stft;
+pub mod window;

@@ -1,0 +1,135 @@
+//! Short-time Fourier transform / spectrogram on top of the plan API.
+
+use crate::fft::{Direction, Planner, Strategy};
+use crate::precision::{Real, SplitBuf};
+
+use super::window::Window;
+
+/// STFT configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct StftConfig {
+    /// FFT size per column (power of two).
+    pub frame: usize,
+    /// Hop between consecutive frames.
+    pub hop: usize,
+    pub window: Window,
+    pub strategy: Strategy,
+}
+
+/// A spectrogram: `cols` columns of `frame` power values each
+/// (row-major, column-contiguous).
+#[derive(Clone, Debug)]
+pub struct Spectrogram {
+    pub frame: usize,
+    pub cols: usize,
+    /// |X|² per (col, bin), length `cols * frame`.
+    pub power: Vec<f64>,
+}
+
+impl Spectrogram {
+    pub fn at(&self, col: usize, bin: usize) -> f64 {
+        self.power[col * self.frame + bin]
+    }
+
+    /// Bin with maximum power in a column.
+    pub fn peak_bin(&self, col: usize) -> usize {
+        let row = &self.power[col * self.frame..(col + 1) * self.frame];
+        row.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+}
+
+/// Compute the spectrogram of a complex signal.
+pub fn stft<T: Real>(
+    planner: &Planner<T>,
+    cfg: &StftConfig,
+    re: &[f64],
+    im: &[f64],
+) -> Result<Spectrogram, String> {
+    if cfg.hop == 0 {
+        return Err("hop must be positive".into());
+    }
+    let n = re.len();
+    if n < cfg.frame {
+        return Err(format!("signal ({n}) shorter than frame ({})", cfg.frame));
+    }
+    let plan = planner.plan(cfg.frame, cfg.strategy, Direction::Forward)?;
+    let win = cfg.window.sample(cfg.frame);
+    let cols = (n - cfg.frame) / cfg.hop + 1;
+
+    let mut power = Vec::with_capacity(cols * cfg.frame);
+    let mut buf = SplitBuf::<T>::zeroed(cfg.frame);
+    let mut scratch = SplitBuf::zeroed(cfg.frame);
+    for c in 0..cols {
+        let off = c * cfg.hop;
+        for i in 0..cfg.frame {
+            buf.re[i] = T::from_f64(re[off + i] * win[i]);
+            buf.im[i] = T::from_f64(im[off + i] * win[i]);
+        }
+        plan.execute(&mut buf, &mut scratch);
+        for i in 0..cfg.frame {
+            let (r, im_) = (buf.re[i].to_f64(), buf.im[i].to_f64());
+            power.push(r * r + im_ * im_);
+        }
+    }
+    Ok(Spectrogram { frame: cfg.frame, cols, power })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tone(n: usize, f: f64) -> (Vec<f64>, Vec<f64>) {
+        let tau = 2.0 * core::f64::consts::PI;
+        (
+            (0..n).map(|t| (tau * f * t as f64).cos()).collect(),
+            (0..n).map(|t| (tau * f * t as f64).sin()).collect(),
+        )
+    }
+
+    fn cfg(frame: usize, hop: usize) -> StftConfig {
+        StftConfig { frame, hop, window: Window::Hann, strategy: Strategy::DualSelect }
+    }
+
+    #[test]
+    fn stationary_tone_peaks_at_its_bin() {
+        let planner = Planner::<f64>::new();
+        let (re, im) = tone(2048, 10.0 / 256.0); // bin 10 of a 256 frame
+        let sg = stft(&planner, &cfg(256, 128), &re, &im).unwrap();
+        for c in 0..sg.cols {
+            assert_eq!(sg.peak_bin(c), 10, "col {c}");
+        }
+    }
+
+    #[test]
+    fn chirp_peak_bin_moves_up() {
+        let planner = Planner::<f64>::new();
+        let (re, im) = super::super::chirp::lfm_chirp(8192, 0.02, 0.40);
+        let sg = stft(&planner, &cfg(256, 256), &re, &im).unwrap();
+        let first = sg.peak_bin(0);
+        let last = sg.peak_bin(sg.cols - 1);
+        assert!(last > first + 10, "first {first} last {last}");
+    }
+
+    #[test]
+    fn column_count() {
+        let planner = Planner::<f64>::new();
+        let (re, im) = tone(1024, 0.1);
+        let sg = stft(&planner, &cfg(256, 128), &re, &im).unwrap();
+        assert_eq!(sg.cols, (1024 - 256) / 128 + 1);
+        assert_eq!(sg.power.len(), sg.cols * 256);
+    }
+
+    #[test]
+    fn errors_on_bad_config() {
+        let planner = Planner::<f64>::new();
+        let (re, im) = tone(128, 0.1);
+        assert!(stft(&planner, &cfg(256, 64), &re, &im).is_err()); // too short
+        let mut bad = cfg(64, 0);
+        bad.hop = 0;
+        assert!(stft(&planner, &bad, &re, &im).is_err());
+    }
+}

@@ -1,0 +1,68 @@
+//! Analysis windows (f64; rounded into working precision by callers).
+
+/// Window function families.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Window {
+    Rect,
+    Hann,
+    Hamming,
+    Blackman,
+}
+
+impl Window {
+    /// Sample the window at length `n` (periodic form, for STFT use).
+    pub fn sample(self, n: usize) -> Vec<f64> {
+        let tau = 2.0 * core::f64::consts::PI;
+        (0..n)
+            .map(|i| {
+                let x = i as f64 / n as f64;
+                match self {
+                    Window::Rect => 1.0,
+                    Window::Hann => 0.5 - 0.5 * (tau * x).cos(),
+                    Window::Hamming => 0.54 - 0.46 * (tau * x).cos(),
+                    Window::Blackman => {
+                        0.42 - 0.5 * (tau * x).cos() + 0.08 * (2.0 * tau * x).cos()
+                    }
+                }
+            })
+            .collect()
+    }
+
+    /// Coherent gain (mean of the window) — used to normalize spectra.
+    pub fn coherent_gain(self, n: usize) -> f64 {
+        self.sample(n).iter().sum::<f64>() / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rect_is_ones() {
+        assert!(Window::Rect.sample(16).iter().all(|&w| w == 1.0));
+    }
+
+    #[test]
+    fn hann_endpoints_and_peak() {
+        let w = Window::Hann.sample(64);
+        assert!(w[0].abs() < 1e-12);
+        assert!((w[32] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_windows_bounded_01() {
+        for win in [Window::Rect, Window::Hann, Window::Hamming, Window::Blackman] {
+            for &v in &win.sample(128) {
+                assert!((-1e-12..=1.0 + 1e-12).contains(&v), "{win:?} {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn coherent_gains() {
+        assert!((Window::Rect.coherent_gain(64) - 1.0).abs() < 1e-12);
+        assert!((Window::Hann.coherent_gain(64) - 0.5).abs() < 1e-12);
+        assert!((Window::Hamming.coherent_gain(64) - 0.54).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,64 @@
+//! Error metrics shared by the analysis module and tests.
+
+/// Relative L2 error between complex signals given as split slices,
+/// computed in f64: ||got - want|| / ||want||.
+pub fn rel_l2(got_re: &[f64], got_im: &[f64], want_re: &[f64], want_im: &[f64]) -> f64 {
+    assert_eq!(got_re.len(), want_re.len());
+    assert_eq!(got_im.len(), want_im.len());
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in 0..got_re.len() {
+        let dr = got_re[i] - want_re[i];
+        let di = got_im[i] - want_im[i];
+        num += dr * dr + di * di;
+        den += want_re[i] * want_re[i] + want_im[i] * want_im[i];
+    }
+    if den == 0.0 {
+        return if num == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    (num / den).sqrt()
+}
+
+/// Max absolute componentwise error.
+pub fn max_abs_err(got_re: &[f64], got_im: &[f64], want_re: &[f64], want_im: &[f64]) -> f64 {
+    let mut worst = 0.0f64;
+    for i in 0..got_re.len() {
+        worst = worst
+            .max((got_re[i] - want_re[i]).abs())
+            .max((got_im[i] - want_im[i]).abs());
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_l2_zero_on_equal() {
+        let r = [1.0, 2.0];
+        let i = [0.5, -1.0];
+        assert_eq!(rel_l2(&r, &i, &r, &i), 0.0);
+    }
+
+    #[test]
+    fn rel_l2_scales() {
+        let want_r = [1.0, 0.0];
+        let want_i = [0.0, 0.0];
+        let got_r = [1.1, 0.0];
+        let got_i = [0.0, 0.0];
+        assert!((rel_l2(&got_r, &got_i, &want_r, &want_i) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rel_l2_inf_when_reference_zero() {
+        assert_eq!(rel_l2(&[1.0], &[0.0], &[0.0], &[0.0]), f64::INFINITY);
+        assert_eq!(rel_l2(&[0.0], &[0.0], &[0.0], &[0.0]), 0.0);
+    }
+
+    #[test]
+    fn max_abs_err_picks_worst() {
+        let e = max_abs_err(&[1.0, 2.0], &[0.0, 0.0], &[1.0, 2.5], &[0.0, 0.1]);
+        assert_eq!(e, 0.5);
+    }
+}

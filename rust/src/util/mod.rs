@@ -1,0 +1,6 @@
+//! Small shared utilities: deterministic PRNG, error metrics.
+
+pub mod json;
+pub mod metrics;
+pub mod prng;
+pub mod quickcheck;

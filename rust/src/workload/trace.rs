@@ -1,0 +1,92 @@
+//! Request-arrival traces for the serving benches: Poisson arrivals
+//! (open-loop) and closed-loop bursts.
+
+use crate::util::prng::Pcg32;
+
+/// Trace configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceConfig {
+    /// Mean arrival rate, requests/second.
+    pub rate: f64,
+    /// Number of requests.
+    pub count: usize,
+}
+
+/// A generated arrival trace: monotone arrival offsets in seconds.
+#[derive(Clone, Debug)]
+pub struct ArrivalTrace {
+    pub arrivals: Vec<f64>,
+}
+
+impl ArrivalTrace {
+    /// Open-loop Poisson arrivals.
+    pub fn poisson(cfg: TraceConfig, seed: u64) -> Self {
+        let mut rng = Pcg32::seed(seed);
+        let mut t = 0.0;
+        let arrivals = (0..cfg.count)
+            .map(|_| {
+                t += rng.exponential(cfg.rate);
+                t
+            })
+            .collect();
+        ArrivalTrace { arrivals }
+    }
+
+    /// Bursty arrivals: `burst` back-to-back requests per burst, bursts
+    /// Poisson at `rate / burst`.
+    pub fn bursty(cfg: TraceConfig, burst: usize, seed: u64) -> Self {
+        let mut rng = Pcg32::seed(seed);
+        let burst_rate = cfg.rate / burst.max(1) as f64;
+        let mut arrivals = Vec::with_capacity(cfg.count);
+        let mut t = 0.0;
+        while arrivals.len() < cfg.count {
+            t += rng.exponential(burst_rate);
+            for _ in 0..burst.min(cfg.count - arrivals.len()) {
+                arrivals.push(t);
+            }
+        }
+        ArrivalTrace { arrivals }
+    }
+
+    pub fn duration(&self) -> f64 {
+        self.arrivals.last().copied().unwrap_or(0.0)
+    }
+
+    /// Mean offered rate over the trace.
+    pub fn offered_rate(&self) -> f64 {
+        if self.arrivals.is_empty() {
+            return 0.0;
+        }
+        self.arrivals.len() as f64 / self.duration().max(1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_calibrated() {
+        let t = ArrivalTrace::poisson(TraceConfig { rate: 1000.0, count: 20_000 }, 81);
+        assert!((t.offered_rate() - 1000.0).abs() / 1000.0 < 0.05);
+        // Monotone arrivals.
+        assert!(t.arrivals.windows(2).all(|w| w[1] >= w[0]));
+    }
+
+    #[test]
+    fn bursty_preserves_rate_and_groups() {
+        let t = ArrivalTrace::bursty(TraceConfig { rate: 1000.0, count: 10_000 }, 8, 82);
+        assert_eq!(t.arrivals.len(), 10_000);
+        assert!((t.offered_rate() - 1000.0).abs() / 1000.0 < 0.10);
+        // Bursts: many consecutive identical timestamps.
+        let dup = t.arrivals.windows(2).filter(|w| w[0] == w[1]).count();
+        assert!(dup > 8_000);
+    }
+
+    #[test]
+    fn empty_trace_degenerate() {
+        let t = ArrivalTrace::poisson(TraceConfig { rate: 10.0, count: 0 }, 83);
+        assert_eq!(t.offered_rate(), 0.0);
+        assert_eq!(t.duration(), 0.0);
+    }
+}

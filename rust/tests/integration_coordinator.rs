@@ -1,0 +1,233 @@
+//! Integration: the full serving plane — admission, batching, worker
+//! execution (native and PJRT backends), response delivery, drain.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fmafft::coordinator::batcher::BatchPolicy;
+use fmafft::coordinator::{FftOp, Server, ServerConfig};
+use fmafft::dft;
+use fmafft::signal::chirp::default_chirp;
+use fmafft::util::metrics::rel_l2;
+use fmafft::util::prng::Pcg32;
+
+fn random_frame(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Pcg32::seed(seed);
+    (
+        (0..n).map(|_| rng.range(-1.0, 1.0)).collect(),
+        (0..n).map(|_| rng.range(-1.0, 1.0)).collect(),
+    )
+}
+
+fn check_fft_response(re: &[f64], im: &[f64], resp: &fmafft::coordinator::FftResponse) {
+    assert!(resp.is_ok(), "{:?}", resp.error);
+    let (wr, wi) = dft::naive_dft(re, im, false);
+    let gr: Vec<f64> = resp.re.iter().map(|&x| x as f64).collect();
+    let gi: Vec<f64> = resp.im.iter().map(|&x| x as f64).collect();
+    let err = rel_l2(&gr, &gi, &wr, &wi);
+    assert!(err < 1e-5, "served FFT err {err:.3e}");
+}
+
+#[test]
+fn native_single_request_roundtrip() {
+    let server = Server::start(ServerConfig::native(256)).unwrap();
+    let (re, im) = random_frame(256, 1);
+    let resp = server.submit_wait(FftOp::Forward, re.clone(), im.clone()).unwrap();
+    check_fft_response(&re, &im, &resp);
+    server.shutdown();
+}
+
+#[test]
+fn native_many_concurrent_requests_none_lost() {
+    let mut cfg = ServerConfig::native(128);
+    cfg.policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) };
+    cfg.workers = 4;
+    let server = Server::start(cfg).unwrap();
+
+    let total = 200;
+    let mut rxs = Vec::new();
+    let mut frames = Vec::new();
+    for i in 0..total {
+        let (re, im) = random_frame(128, 100 + i as u64);
+        let rx = server.submit(FftOp::Forward, re.clone(), im.clone()).unwrap();
+        rxs.push(rx);
+        frames.push((re, im));
+    }
+    let mut ids = std::collections::HashSet::new();
+    for (rx, (re, im)) in rxs.iter().zip(&frames) {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+        assert!(ids.insert(resp.id), "duplicate response id {}", resp.id);
+        check_fft_response(re, im, &resp);
+    }
+    assert_eq!(ids.len(), total);
+    // Batching actually happened.
+    assert!(server.metrics().mean_batch() > 1.0);
+    server.shutdown();
+}
+
+#[test]
+fn native_inverse_roundtrip_through_server() {
+    let server = Server::start(ServerConfig::native(256)).unwrap();
+    let (re, im) = random_frame(256, 5);
+    let fwd = server.submit_wait(FftOp::Forward, re.clone(), im.clone()).unwrap();
+    let inv = server
+        .submit_wait(
+            FftOp::Inverse,
+            fwd.re.iter().map(|&x| x as f64).collect(),
+            fwd.im.iter().map(|&x| x as f64).collect(),
+        )
+        .unwrap();
+    let gr: Vec<f64> = inv.re.iter().map(|&x| x as f64).collect();
+    let gi: Vec<f64> = inv.im.iter().map(|&x| x as f64).collect();
+    assert!(rel_l2(&gr, &gi, &re, &im) < 1e-5);
+    server.shutdown();
+}
+
+#[test]
+fn matched_filter_served_natively_finds_echo() {
+    let n = 1024;
+    let mut cfg = ServerConfig::native(n);
+    cfg.pulse_len = 256;
+    let server = Server::start(cfg).unwrap();
+
+    let (cr, ci) = default_chirp(256);
+    let delay = 417;
+    let mut re = vec![0.0; n];
+    let mut im = vec![0.0; n];
+    re[delay..delay + 256].copy_from_slice(&cr);
+    im[delay..delay + 256].copy_from_slice(&ci);
+
+    let resp = server.submit_wait(FftOp::MatchedFilter, re, im).unwrap();
+    assert!(resp.is_ok());
+    let peak = (0..n)
+        .max_by(|&a, &b| {
+            (resp.re[a] * resp.re[a] + resp.im[a] * resp.im[a])
+                .partial_cmp(&(resp.re[b] * resp.re[b] + resp.im[b] * resp.im[b]))
+                .unwrap()
+        })
+        .unwrap();
+    assert_eq!(peak, delay);
+    server.shutdown();
+}
+
+#[test]
+fn wrong_length_rejected_cleanly() {
+    let server = Server::start(ServerConfig::native(64)).unwrap();
+    assert!(server.submit(FftOp::Forward, vec![0.0; 32], vec![0.0; 32]).is_err());
+    server.shutdown();
+}
+
+#[test]
+fn backpressure_rejects_beyond_limit() {
+    let mut cfg = ServerConfig::native(64);
+    cfg.queue_limit = 4;
+    // Slow flushes so requests stay in flight.
+    cfg.policy = BatchPolicy { max_batch: 1000, max_wait: Duration::from_secs(5) };
+    let server = Server::start(cfg).unwrap();
+    let mut rxs = Vec::new();
+    for i in 0..4 {
+        let (re, im) = random_frame(64, i);
+        rxs.push(server.submit(FftOp::Forward, re, im).unwrap());
+    }
+    let (re, im) = random_frame(64, 99);
+    let err = server.submit(FftOp::Forward, re, im).unwrap_err();
+    assert!(err.contains("rejected"), "{err}");
+    assert_eq!(server.metrics().rejected.load(std::sync::atomic::Ordering::Relaxed), 1);
+    // Drain lets everything finish.
+    server.drain();
+    for rx in rxs {
+        assert!(rx.recv_timeout(Duration::from_secs(10)).unwrap().is_ok());
+    }
+    server.shutdown();
+}
+
+#[test]
+fn drain_flushes_partial_batches() {
+    let mut cfg = ServerConfig::native(64);
+    cfg.policy = BatchPolicy { max_batch: 1000, max_wait: Duration::from_secs(60) };
+    let server = Server::start(cfg).unwrap();
+    let (re, im) = random_frame(64, 7);
+    let rx = server.submit(FftOp::Forward, re.clone(), im.clone()).unwrap();
+    // Without drain this would wait 60s for the deadline.
+    server.drain();
+    let resp = rx.recv_timeout(Duration::from_secs(10)).expect("drained response");
+    check_fft_response(&re, &im, &resp);
+    server.shutdown();
+}
+
+#[test]
+fn pjrt_backend_serves_correct_ffts() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("skipping pjrt serving test: artifacts not built");
+        return;
+    }
+    let mut cfg = ServerConfig::pjrt(1024, dir);
+    cfg.workers = 1; // each worker owns a PJRT client; keep the test lean
+    cfg.policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(300) };
+    let server = Server::start(cfg).unwrap();
+
+    let mut rxs = Vec::new();
+    let mut frames = Vec::new();
+    for i in 0..40 {
+        let (re, im) = random_frame(1024, 500 + i);
+        rxs.push(server.submit(FftOp::Forward, re.clone(), im.clone()).unwrap());
+        frames.push((re, im));
+    }
+    for (rx, (re, im)) in rxs.iter().zip(&frames) {
+        let resp = rx.recv_timeout(Duration::from_secs(60)).expect("response");
+        check_fft_response(re, im, &resp);
+    }
+    server.shutdown();
+}
+
+#[test]
+fn pjrt_matched_filter_end_to_end() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let n = 1024;
+    let mut cfg = ServerConfig::pjrt(n, dir);
+    cfg.workers = 1;
+    cfg.pulse_len = n; // the artifact bakes the full-length chirp
+    let server = Server::start(cfg).unwrap();
+
+    // Cyclic-shifted full chirp: the artifact's matched filter peaks at
+    // the shift.
+    let (cr, ci) = default_chirp(n);
+    let delay = 333;
+    let mut re = vec![0.0; n];
+    let mut im = vec![0.0; n];
+    for t in 0..n {
+        re[(t + delay) % n] = cr[t];
+        im[(t + delay) % n] = ci[t];
+    }
+    let resp = server.submit_wait(FftOp::MatchedFilter, re, im).unwrap();
+    assert!(resp.is_ok(), "{:?}", resp.error);
+    let peak = (0..n)
+        .max_by(|&a, &b| {
+            (resp.re[a] * resp.re[a] + resp.im[a] * resp.im[a])
+                .partial_cmp(&(resp.re[b] * resp.re[b] + resp.im[b] * resp.im[b]))
+                .unwrap()
+        })
+        .unwrap();
+    assert_eq!(peak, delay);
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_is_idempotent_and_threadsafe() {
+    let server = Server::start(ServerConfig::native(64)).unwrap();
+    let s2: Arc<Server> = server.clone();
+    let h = std::thread::spawn(move || {
+        let (re, im) = random_frame(64, 1);
+        let _ = s2.submit_wait(FftOp::Forward, re, im);
+    });
+    h.join().unwrap();
+    server.shutdown();
+    // Submitting after shutdown errors instead of hanging.
+    let (re, im) = random_frame(64, 2);
+    assert!(server.submit(FftOp::Forward, re, im).is_err());
+}

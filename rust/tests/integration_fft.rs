@@ -1,0 +1,169 @@
+//! Cross-module integration: planner + FFT + convolution + signal
+//! pipelines composed the way the examples use them.
+
+use fmafft::fft::convolve::{circular_convolve, linear_convolve};
+use fmafft::fft::real_fft::RealFftPlan;
+use fmafft::fft::{Direction, Plan, Planner, Strategy};
+use fmafft::precision::{SplitBuf, F16};
+use fmafft::signal::stft::{stft, StftConfig};
+use fmafft::signal::window::Window;
+use fmafft::util::metrics::rel_l2;
+use fmafft::util::prng::Pcg32;
+
+#[test]
+fn planner_shared_across_threads() {
+    use std::sync::Arc;
+    let planner = Arc::new(Planner::<f32>::new());
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let planner = planner.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Pcg32::seed(t);
+            for _ in 0..20 {
+                let n = 1usize << (5 + rng.below(4)); // 32..256
+                let plan = planner.plan(n, Strategy::DualSelect, Direction::Forward).unwrap();
+                let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+                let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+                let mut buf = SplitBuf::<f32>::from_f64(&re, &im);
+                plan.execute_alloc(&mut buf);
+                // Parseval sanity per execution.
+                let te: f64 = re.iter().zip(&im).map(|(r, i)| r * r + i * i).sum();
+                let (gr, gi) = buf.to_f64();
+                let fe: f64 =
+                    gr.iter().zip(&gi).map(|(r, i)| r * r + i * i).sum::<f64>() / n as f64;
+                assert!((te - fe).abs() / te < 1e-4);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    // 4 sizes at most in the cache (shared, not per-thread).
+    assert!(planner.len() <= 4);
+}
+
+#[test]
+fn convolution_theorem_end_to_end() {
+    // conv(x, h) computed via FFT equals direct convolution; and
+    // FFT(conv) == FFT(x)·FFT(h).
+    let planner = Planner::<f64>::new();
+    let mut rng = Pcg32::seed(100);
+    let n = 128;
+    let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+    let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+    let hr: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+    let hi: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+
+    let x = SplitBuf::from_f64(&re, &im);
+    let h = SplitBuf::from_f64(&hr, &hi);
+    let y = circular_convolve(&planner, Strategy::DualSelect, &x, &h).unwrap();
+
+    // FFT(y) == FFT(x) .* FFT(h)
+    let f = |r: &[f64], i: &[f64]| {
+        let plan = Plan::<f64>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let mut b = SplitBuf::from_f64(r, i);
+        plan.execute_alloc(&mut b);
+        b.to_f64()
+    };
+    let (yr, yi) = y.to_f64();
+    let (fyr, fyi) = f(&yr, &yi);
+    let (fxr, fxi) = f(&re, &im);
+    let (fhr, fhi) = f(&hr, &hi);
+    let want_r: Vec<f64> = (0..n).map(|k| fxr[k] * fhr[k] - fxi[k] * fhi[k]).collect();
+    let want_i: Vec<f64> = (0..n).map(|k| fxi[k] * fhr[k] + fxr[k] * fhi[k]).collect();
+    assert!(rel_l2(&fyr, &fyi, &want_r, &want_i) < 1e-10);
+}
+
+#[test]
+fn linear_convolve_cross_checked_against_direct() {
+    let planner = Planner::<f64>::new();
+    let mut rng = Pcg32::seed(101);
+    let xs: Vec<f64> = (0..37).map(|_| rng.gaussian()).collect();
+    let hs: Vec<f64> = (0..11).map(|_| rng.gaussian()).collect();
+    let x = SplitBuf::from_f64(&xs, &vec![0.0; 37]);
+    let h = SplitBuf::from_f64(&hs, &vec![0.0; 11]);
+    let y = linear_convolve(&planner, Strategy::DualSelect, &x, &h).unwrap();
+    assert_eq!(y.len(), 47);
+    for k in 0..47 {
+        let mut want = 0.0;
+        for j in 0..11 {
+            if k >= j && k - j < 37 {
+                want += xs[k - j] * hs[j];
+            }
+        }
+        assert!((y.re[k] - want).abs() < 1e-10, "k={k}");
+    }
+}
+
+#[test]
+fn real_fft_consistent_with_complex_fft() {
+    let mut rng = Pcg32::seed(102);
+    let n = 512;
+    let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+    let rplan = RealFftPlan::<f64>::new(n, Strategy::DualSelect).unwrap();
+    let half = rplan.execute(&x);
+
+    let cplan = Plan::<f64>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+    let mut full = SplitBuf::from_f64(&x, &vec![0.0; n]);
+    cplan.execute_alloc(&mut full);
+
+    for k in 0..=n / 2 {
+        assert!((half.re[k] - full.re[k]).abs() < 1e-10, "k={k}");
+        assert!((half.im[k] - full.im[k]).abs() < 1e-10, "k={k}");
+    }
+}
+
+#[test]
+fn stft_reconstructs_tone_frequency_in_fp16() {
+    // The full pipeline (window → fp16 dual-select FFT → power) still
+    // localizes a tone — half-precision end-to-end viability.
+    let n = 4096;
+    let bin = 20; // of a 256-point frame
+    let tau = 2.0 * std::f64::consts::PI;
+    let re: Vec<f64> = (0..n).map(|t| 0.5 * (tau * bin as f64 * t as f64 / 256.0).cos()).collect();
+    let im: Vec<f64> = (0..n).map(|t| 0.5 * (tau * bin as f64 * t as f64 / 256.0).sin()).collect();
+    let planner = Planner::<F16>::new();
+    let cfg = StftConfig {
+        frame: 256,
+        hop: 128,
+        window: Window::Hann,
+        strategy: Strategy::DualSelect,
+    };
+    let sg = stft(&planner, &cfg, &re, &im).unwrap();
+    for c in 0..sg.cols {
+        assert_eq!(sg.peak_bin(c), bin, "col {c}");
+    }
+}
+
+#[test]
+fn fp16_pipeline_agrees_with_f64_pipeline_on_peaks() {
+    // Same matched-filter pipeline at two precisions must agree on the
+    // detection result (not the exact values).
+    use fmafft::signal::chirp::default_chirp;
+    use fmafft::signal::pulse::{analyze_peak, MatchedFilter};
+
+    let n = 1024;
+    let delay = 123;
+    let (cr, ci) = default_chirp(256);
+    let mut re = vec![0.0; n];
+    let mut im = vec![0.0; n];
+    re[delay..delay + 256].copy_from_slice(&cr);
+    im[delay..delay + 256].copy_from_slice(&ci);
+    let re: Vec<f64> = re.iter().map(|x| x * 0.1).collect();
+    let im: Vec<f64> = im.iter().map(|x| x * 0.1).collect();
+
+    let p64 = Planner::<f64>::new();
+    let m64 = MatchedFilter::new(&p64, Strategy::DualSelect, n, &cr, &ci).unwrap();
+    let mut b64 = SplitBuf::<f64>::from_f64(&re, &im);
+    let mut s64 = SplitBuf::zeroed(n);
+    m64.compress(&p64, &mut b64, &mut s64).unwrap();
+
+    let p16 = Planner::<F16>::new();
+    let m16 = MatchedFilter::new(&p16, Strategy::DualSelect, n, &cr, &ci).unwrap();
+    let mut b16 = SplitBuf::<F16>::from_f64(&re, &im);
+    let mut s16 = SplitBuf::zeroed(n);
+    m16.compress(&p16, &mut b16, &mut s16).unwrap();
+
+    assert_eq!(analyze_peak(&b64, 8).peak_index, delay);
+    assert_eq!(analyze_peak(&b16, 8).peak_index, delay);
+}

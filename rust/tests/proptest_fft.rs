@@ -1,0 +1,154 @@
+//! Property-based tests of the FFT core invariants (DESIGN.md §6),
+//! using the in-repo quickcheck-lite framework.
+
+use fmafft::dft;
+use fmafft::fft::dit::DitPlan;
+use fmafft::fft::radix4::Radix4Plan;
+use fmafft::fft::twiddle::dual_select_flat;
+use fmafft::fft::{Direction, Plan, Strategy};
+use fmafft::precision::SplitBuf;
+use fmafft::util::metrics::rel_l2;
+use fmafft::util::quickcheck::{check, pow2, signal, QcConfig};
+
+fn fft_f64(n: usize, strategy: Strategy, dir: Direction, re: &[f64], im: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let plan = Plan::<f64>::new(n, strategy, dir).unwrap();
+    let mut buf = SplitBuf::from_f64(re, im);
+    plan.execute_alloc(&mut buf);
+    buf.to_f64()
+}
+
+#[test]
+fn prop_theorem1_ratio_bounded_any_size() {
+    check("theorem1", QcConfig::default(), |rng| {
+        let n = pow2(rng, 1, 16);
+        let (mult, ratio, _) = dual_select_flat(n, Direction::Forward);
+        for k in 0..n / 2 {
+            assert!(ratio[k].abs() <= 1.0 + 1e-15, "n={n} k={k}");
+            assert!(mult[k].abs() >= std::f64::consts::FRAC_1_SQRT_2 - 1e-15);
+        }
+    });
+}
+
+#[test]
+fn prop_matches_dft_oracle() {
+    check("fft=dft", QcConfig { cases: 32, ..Default::default() }, |rng| {
+        let n = pow2(rng, 1, 9);
+        let (re, im) = signal(rng, n);
+        let (wr, wi) = dft::naive_dft(&re, &im, false);
+        let strategy = [Strategy::Standard, Strategy::DualSelect][rng.below(2)];
+        let (gr, gi) = fft_f64(n, strategy, Direction::Forward, &re, &im);
+        assert!(rel_l2(&gr, &gi, &wr, &wi) < 1e-11, "n={n} {strategy:?}");
+    });
+}
+
+#[test]
+fn prop_roundtrip_identity() {
+    check("ifft∘fft=id", QcConfig { cases: 32, ..Default::default() }, |rng| {
+        let n = pow2(rng, 1, 11);
+        let (re, im) = signal(rng, n);
+        let (fr, fi) = fft_f64(n, Strategy::DualSelect, Direction::Forward, &re, &im);
+        let (gr, gi) = fft_f64(n, Strategy::DualSelect, Direction::Inverse, &fr, &fi);
+        assert!(rel_l2(&gr, &gi, &re, &im) < 1e-11, "n={n}");
+    });
+}
+
+#[test]
+fn prop_linearity() {
+    check("linearity", QcConfig { cases: 24, ..Default::default() }, |rng| {
+        let n = pow2(rng, 1, 9);
+        let (ar, ai) = signal(rng, n);
+        let (br, bi) = signal(rng, n);
+        let alpha = rng.range(-2.0, 2.0);
+        let mix_r: Vec<f64> = ar.iter().zip(&br).map(|(x, y)| x + alpha * y).collect();
+        let mix_i: Vec<f64> = ai.iter().zip(&bi).map(|(x, y)| x + alpha * y).collect();
+        let (fa_r, fa_i) = fft_f64(n, Strategy::DualSelect, Direction::Forward, &ar, &ai);
+        let (fb_r, fb_i) = fft_f64(n, Strategy::DualSelect, Direction::Forward, &br, &bi);
+        let (fm_r, fm_i) = fft_f64(n, Strategy::DualSelect, Direction::Forward, &mix_r, &mix_i);
+        let want_r: Vec<f64> = fa_r.iter().zip(&fb_r).map(|(x, y)| x + alpha * y).collect();
+        let want_i: Vec<f64> = fa_i.iter().zip(&fb_i).map(|(x, y)| x + alpha * y).collect();
+        assert!(rel_l2(&fm_r, &fm_i, &want_r, &want_i) < 1e-11, "n={n}");
+    });
+}
+
+#[test]
+fn prop_parseval() {
+    check("parseval", QcConfig { cases: 32, ..Default::default() }, |rng| {
+        let n = pow2(rng, 1, 11);
+        let (re, im) = signal(rng, n);
+        let (fr, fi) = fft_f64(n, Strategy::DualSelect, Direction::Forward, &re, &im);
+        let te: f64 = re.iter().zip(&im).map(|(r, i)| r * r + i * i).sum();
+        let fe: f64 = fr.iter().zip(&fi).map(|(r, i)| r * r + i * i).sum::<f64>() / n as f64;
+        assert!((te - fe).abs() <= te.max(1e-30) * 1e-11, "n={n} {te} vs {fe}");
+    });
+}
+
+#[test]
+fn prop_conjugate_symmetry_for_real_input() {
+    check("hermitian", QcConfig { cases: 24, ..Default::default() }, |rng| {
+        let n = pow2(rng, 2, 10);
+        let (re, _) = signal(rng, n);
+        let im = vec![0.0; n];
+        let (fr, fi) = fft_f64(n, Strategy::DualSelect, Direction::Forward, &re, &im);
+        for k in 1..n / 2 {
+            assert!((fr[k] - fr[n - k]).abs() < 1e-10, "n={n} k={k}");
+            assert!((fi[k] + fi[n - k]).abs() < 1e-10, "n={n} k={k}");
+        }
+    });
+}
+
+#[test]
+fn prop_all_algorithms_agree() {
+    check("stockham=dit=radix4", QcConfig { cases: 16, ..Default::default() }, |rng| {
+        let n = 4usize.pow(1 + rng.below(4) as u32); // 4..256, power of 4
+        let (re, im) = signal(rng, n);
+        let (sr, si) = fft_f64(n, Strategy::DualSelect, Direction::Forward, &re, &im);
+
+        let dit = DitPlan::<f64>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let mut b = SplitBuf::from_f64(&re, &im);
+        dit.execute(&mut b);
+        let (dr, di) = b.to_f64();
+        assert!(rel_l2(&dr, &di, &sr, &si) < 1e-12, "dit n={n}");
+
+        let r4 = Radix4Plan::<f64>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let mut b4 = SplitBuf::from_f64(&re, &im);
+        r4.execute_alloc(&mut b4);
+        let (qr, qi) = b4.to_f64();
+        assert!(rel_l2(&qr, &qi, &sr, &si) < 1e-12, "radix4 n={n}");
+    });
+}
+
+#[test]
+fn prop_strategies_agree_in_f64() {
+    // Away from clamped entries the three factorizations compute the
+    // same transform; dual-select agrees with standard everywhere.
+    check("strategies-agree", QcConfig { cases: 24, ..Default::default() }, |rng| {
+        let n = pow2(rng, 1, 10);
+        let (re, im) = signal(rng, n);
+        let (sr, si) = fft_f64(n, Strategy::Standard, Direction::Forward, &re, &im);
+        let (dr, di) = fft_f64(n, Strategy::DualSelect, Direction::Forward, &re, &im);
+        assert!(rel_l2(&dr, &di, &sr, &si) < 1e-12, "n={n}");
+    });
+}
+
+#[test]
+fn prop_fp16_dual_error_bounded_by_eq11() {
+    use fmafft::precision::{Real, F16};
+    check("fp16-bound", QcConfig { cases: 16, ..Default::default() }, |rng| {
+        let n = pow2(rng, 2, 10);
+        let m = n.trailing_zeros();
+        let (re, im) = signal(rng, n);
+        let (wr, wi) = dft::naive_dft(&re, &im, false);
+        let plan = Plan::<F16>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let mut buf = SplitBuf::<F16>::from_f64(&re, &im);
+        plan.execute_alloc(&mut buf);
+        let (gr, gi) = buf.to_f64();
+        let err = rel_l2(&gr, &gi, &wr, &wi);
+        let bound = fmafft::analysis::bounds::cumulative_bound(1.0, <F16 as Real>::EPSILON, m);
+        // The worst-case bound holds with margin (plus input-quantization
+        // slack of one eps).
+        assert!(
+            err < bound * 3.0 + 2.0 * <F16 as Real>::EPSILON,
+            "n={n} err {err:.3e} bound {bound:.3e}"
+        );
+    });
+}

@@ -1,0 +1,136 @@
+//! Property-based tests of the softfloat substrate: every F16/Bf16
+//! operation must equal "compute exactly, round once" semantics.
+
+use fmafft::precision::{Bf16, F16};
+use fmafft::util::quickcheck::{check, QcConfig};
+
+fn rand_f16(rng: &mut fmafft::util::prng::Pcg32) -> F16 {
+    loop {
+        let x = F16::from_bits((rng.next_u32() & 0xffff) as u16);
+        if !x.is_nan() {
+            return x;
+        }
+    }
+}
+
+#[test]
+fn prop_add_commutative_and_correctly_rounded() {
+    check("f16-add", QcConfig { cases: 200, ..Default::default() }, |rng| {
+        let a = rand_f16(rng);
+        let b = rand_f16(rng);
+        let ab = a + b;
+        let ba = b + a;
+        assert!(
+            ab.to_f64() == ba.to_f64() || (ab.is_nan() && ba.is_nan()),
+            "{a:?}+{b:?}"
+        );
+        // Correct rounding: a+b exact in f64, rounded once.
+        let want = F16::from_f64(a.to_f64() + b.to_f64());
+        assert!(ab.to_f64() == want.to_f64() || (ab.is_nan() && want.is_nan()));
+    });
+}
+
+#[test]
+fn prop_mul_correctly_rounded() {
+    check("f16-mul", QcConfig { cases: 200, ..Default::default() }, |rng| {
+        let a = rand_f16(rng);
+        let b = rand_f16(rng);
+        let got = a * b;
+        let want = F16::from_f64(a.to_f64() * b.to_f64());
+        assert!(got.to_f64() == want.to_f64() || (got.is_nan() && want.is_nan()));
+    });
+}
+
+#[test]
+fn prop_fma_at_least_as_accurate_as_two_ops() {
+    check("f16-fma", QcConfig { cases: 300, ..Default::default() }, |rng| {
+        let a = rand_f16(rng);
+        let b = rand_f16(rng);
+        let c = rand_f16(rng);
+        let exact = a.to_f64() * b.to_f64() + c.to_f64();
+        if !exact.is_finite() {
+            return;
+        }
+        let fused = a.mul_add(b, c).to_f64();
+        let two = ((a * b) + c).to_f64();
+        if !fused.is_finite() || !two.is_finite() {
+            return;
+        }
+        assert!(
+            (fused - exact).abs() <= (two - exact).abs() + 1e-12 * exact.abs().max(1e-30),
+            "fma worse than two-op: a={a:?} b={b:?} c={c:?}"
+        );
+    });
+}
+
+#[test]
+fn prop_neg_abs_involutions() {
+    check("f16-sign", QcConfig { cases: 200, ..Default::default() }, |rng| {
+        let a = rand_f16(rng);
+        assert_eq!((-(-a)).to_bits(), a.to_bits());
+        assert_eq!(a.abs().to_f64(), a.to_f64().abs());
+        assert_eq!((-a).abs().to_bits(), a.abs().to_bits());
+    });
+}
+
+#[test]
+fn prop_ordering_matches_f64() {
+    check("f16-ord", QcConfig { cases: 300, ..Default::default() }, |rng| {
+        let a = rand_f16(rng);
+        let b = rand_f16(rng);
+        assert_eq!(
+            a.partial_cmp(&b),
+            a.to_f64().partial_cmp(&b.to_f64()),
+            "{a:?} vs {b:?}"
+        );
+    });
+}
+
+#[test]
+fn prop_bf16_roundtrip_through_f32() {
+    check("bf16-rt", QcConfig { cases: 300, ..Default::default() }, |rng| {
+        let bits = (rng.next_u32() & 0xffff) as u16;
+        let x = Bf16::from_bits(bits);
+        if x.is_nan() {
+            return;
+        }
+        // bf16 -> f32 -> bf16 is lossless.
+        assert_eq!(Bf16::from_f32(x.to_f32()).to_bits(), bits);
+    });
+}
+
+#[test]
+fn prop_division_inverse_consistency() {
+    check("f16-div", QcConfig { cases: 300, ..Default::default() }, |rng| {
+        let a = rand_f16(rng);
+        let b = rand_f16(rng);
+        if b.to_f64() == 0.0 || !a.is_finite() || !b.is_finite() {
+            return;
+        }
+        let q = (a / b).to_f64();
+        if !q.is_finite() || q == 0.0 {
+            return;
+        }
+        // q*b should reconstruct a within the rounding of q: the error
+        // is at most ulp(q)/2 * |b|, where ulp(q) is eps-relative for
+        // normal q and the fixed subnormal step 2^-24 otherwise.
+        let back = q * b.to_f64();
+        let ulp_q = (2.0 * F16::epsilon() * q.abs()).max((2.0f64).powi(-24));
+        let tol = ulp_q * b.to_f64().abs() + 2.0 * F16::epsilon() * a.to_f64().abs();
+        assert!((back - a.to_f64()).abs() <= tol, "a={a:?} b={b:?} q={q}");
+    });
+}
+
+#[test]
+fn prop_sqrt_squares_back() {
+    check("f16-sqrt", QcConfig { cases: 300, ..Default::default() }, |rng| {
+        let a = rand_f16(rng).abs();
+        if !a.is_finite() {
+            return;
+        }
+        let s = a.sqrt().to_f64();
+        let back = s * s;
+        let tol = 3.0 * F16::epsilon() * a.to_f64().max((2.0f64).powi(-14));
+        assert!((back - a.to_f64()).abs() <= tol, "a={a:?} s={s}");
+    });
+}
