@@ -1,15 +1,35 @@
+//! Micro-timing of the AOT PJRT artifacts (requires `make artifacts`
+//! and a build with the `xla` runtime; exits gracefully otherwise).
+//!
+//! Run: `cargo run --release --example pjrt_time`
+
 use std::time::Instant;
+
 fn main() {
-    let engine = fmafft::runtime::Engine::new("artifacts").unwrap();
-    for name in ["fft_fwd_dual_n1024_b1_f32", "fft_fwd_dual_n1024_b32_f32", "matched_filter_fwd_dual_n1024_b32_f32"] {
+    let engine = match fmafft::runtime::Engine::new("artifacts") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("pjrt_time: {e}");
+            return;
+        }
+    };
+    for name in [
+        "fft_fwd_dual_n1024_b1_f32",
+        "fft_fwd_dual_n1024_b32_f32",
+        "matched_filter_fwd_dual_n1024_b32_f32",
+    ] {
         let model = engine.load(name).unwrap();
         let b = model.artifact.batch;
         let input = fmafft::runtime::literal::BatchF32::zeroed(b, 1024);
         // warmup
-        for _ in 0..3 { model.execute(&input).unwrap(); }
+        for _ in 0..3 {
+            model.execute(&input).unwrap();
+        }
         let t0 = Instant::now();
         let iters = 20;
-        for _ in 0..iters { model.execute(&input).unwrap(); }
+        for _ in 0..iters {
+            model.execute(&input).unwrap();
+        }
         let us = t0.elapsed().as_micros() as f64 / iters as f64;
         println!("{name}: {us:.0} us/exec ({:.1} us/frame)", us / b as f64);
     }

@@ -1,11 +1,11 @@
-//! Quickstart: plan an FFT, run it, check it, and see why dual-select
-//! matters in half precision.
+//! Quickstart: describe an FFT with `PlanSpec`, build it, run it,
+//! check it, and see why dual-select matters in half precision.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use fmafft::analysis::report::sci;
 use fmafft::dft;
-use fmafft::fft::{Direction, Plan, Strategy};
+use fmafft::fft::{PlanSpec, Strategy, Transform};
 use fmafft::precision::{SplitBuf, F16};
 use fmafft::util::metrics::rel_l2;
 use fmafft::util::prng::Pcg32;
@@ -25,11 +25,16 @@ fn main() {
         .collect();
     let im = vec![0.0; n];
 
-    // 2. Plan + execute a forward FFT with the paper's dual-select
-    //    butterfly (f32 working precision).
-    let plan = Plan::<f32>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+    // 2. Describe + build + execute a forward FFT with the paper's
+    //    dual-select butterfly (f32 working precision).  The same
+    //    builder covers inverse, radix-4, DIT, Bluestein (any size!)
+    //    and real input — see `PlanSpec`.
+    let fft = PlanSpec::new(n)
+        .strategy(Strategy::DualSelect)
+        .build::<f32>()
+        .unwrap();
     let mut buf = SplitBuf::<f32>::from_f64(&re, &im);
-    plan.execute_alloc(&mut buf);
+    fft.execute_alloc(&mut buf);
 
     // 3. The two tones appear at bins 50 and 300.
     let mag =
@@ -46,14 +51,18 @@ fn main() {
     // 5. The paper's point, in three lines: the same transform in TRUE
     //    half precision (software binary16, every op rounds to fp16).
     let mut b16 = SplitBuf::<F16>::from_f64(&re, &im);
-    Plan::<F16>::new(n, Strategy::DualSelect, Direction::Forward)
+    PlanSpec::new(n)
+        .strategy(Strategy::DualSelect)
+        .build::<F16>()
         .unwrap()
         .execute_alloc(&mut b16);
     let (g16r, g16i) = b16.to_f64();
     println!("fp16 dual-select forward error: {}", sci(rel_l2(&g16r, &g16i, &wr, &wi)));
 
     let mut lf16 = SplitBuf::<F16>::from_f64(&re, &im);
-    Plan::<F16>::new(n, Strategy::LinzerFeig, Direction::Forward)
+    PlanSpec::new(n)
+        .strategy(Strategy::LinzerFeig)
+        .build::<F16>()
         .unwrap()
         .execute_alloc(&mut lf16);
     let (lr, li) = lf16.to_f64();

@@ -31,7 +31,7 @@ fn run_trials<T: Real>(strategy: Strategy, snr_db: f64, trials: usize) -> (usize
         let re: Vec<f64> = frame.re.iter().map(|x| x * 0.125).collect();
         let im: Vec<f64> = frame.im.iter().map(|x| x * 0.125).collect();
         let mut buf = SplitBuf::<T>::from_f64(&re, &im);
-        if mf.compress(&planner, &mut buf, &mut scratch).is_err() {
+        if mf.compress(&mut buf, &mut scratch).is_err() {
             continue;
         }
         let res = analyze_peak(&buf, 8);

@@ -15,7 +15,7 @@
 use std::time::{Duration, Instant};
 
 use fmafft::coordinator::batcher::BatchPolicy;
-use fmafft::coordinator::{Backend, FftOp, Server, ServerConfig};
+use fmafft::coordinator::{FftOp, Server, ServerConfig};
 use fmafft::signal::chirp::default_chirp;
 use fmafft::util::prng::Pcg32;
 use fmafft::workload::{ArrivalTrace, TraceConfig};
@@ -25,24 +25,43 @@ fn main() {
     let requests = 1024;
     let rate = 3000.0;
 
-    let artifact_dir = std::path::Path::new("artifacts");
-    let use_pjrt = artifact_dir.join("manifest.json").exists();
-    let mut cfg = if use_pjrt {
-        ServerConfig::pjrt(n, artifact_dir)
-    } else {
-        eprintln!("artifacts/ missing — run `make artifacts`; using native backend");
-        ServerConfig::native(n)
+    let make_cfg = |pjrt: bool| {
+        let mut cfg = if pjrt {
+            ServerConfig::pjrt(n, "artifacts")
+        } else {
+            ServerConfig::native(n)
+        };
+        cfg.workers = if pjrt { 1 } else { 4 };
+        cfg.pulse_len = n; // match the artifact's baked full-length chirp
+        cfg.policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(500) };
+        cfg
     };
-    cfg.workers = if use_pjrt { 1 } else { 4 };
-    cfg.pulse_len = n; // match the artifact's baked full-length chirp
-    cfg.policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(500) };
 
+    let artifact_dir = std::path::Path::new("artifacts");
+    let mut use_pjrt = artifact_dir.join("manifest.json").exists();
+    if !use_pjrt {
+        eprintln!("artifacts/ missing — run `make artifacts`; using native backend");
+    }
+    // Server::start preflights the PJRT engine; fall back to the
+    // native core when the runtime is unavailable (e.g. this offline
+    // build carries no `xla` bindings).
+    let server = if use_pjrt {
+        match Server::start(make_cfg(true)) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("pjrt backend unavailable ({e}); falling back to native");
+                use_pjrt = false;
+                Server::start(make_cfg(false)).expect("server start")
+            }
+        }
+    } else {
+        Server::start(make_cfg(false)).expect("server start")
+    };
     println!(
         "serve_demo: n={n} backend={} workers={} requests={requests} rate={rate}/s",
-        if matches!(cfg.backend, Backend::Pjrt { .. }) { "pjrt(AOT jax+pallas)" } else { "native" },
-        cfg.workers,
+        if use_pjrt { "pjrt(AOT jax+pallas)" } else { "native" },
+        if use_pjrt { 1 } else { 4 },
     );
-    let server = Server::start(cfg).expect("server start");
 
     // Workload: cyclically-delayed full-length chirp echoes + noise.
     // The matched-filter response must peak at the true delay.

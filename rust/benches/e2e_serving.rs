@@ -129,7 +129,13 @@ fn main() {
             let mut cfg = ServerConfig::pjrt(n, dir);
             cfg.workers = 1; // one PJRT client per worker; keep it lean
             cfg.policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(500) };
-            let server = Server::start(cfg).unwrap();
+            let server = match Server::start(cfg) {
+                Ok(s) => s,
+                Err(e) => {
+                    println!("  pjrt backend unavailable ({e}); skipping");
+                    break;
+                }
+            };
             let stats = drive(&server, n, rate, count.min(1000), kind);
             report(&format!("  pjrt rate={rate}/s"), &stats);
             server.shutdown();

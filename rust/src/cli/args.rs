@@ -4,6 +4,8 @@
 
 use std::collections::BTreeMap;
 
+use crate::fft::{FftError, FftResult};
+
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
@@ -14,13 +16,13 @@ pub struct Args {
 
 impl Args {
     /// Parse from an iterator of arguments (excluding argv[0]).
-    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> FftResult<Args> {
         let mut out = Args::default();
         let mut it = argv.into_iter().peekable();
         while let Some(a) = it.next() {
             if let Some(body) = a.strip_prefix("--") {
                 if body.is_empty() {
-                    return Err("unexpected bare --".into());
+                    return Err(FftError::InvalidArgument("unexpected bare --".into()));
                 }
                 if let Some((k, v)) = body.split_once('=') {
                     out.opts.insert(k.to_string(), v.to_string());
@@ -33,7 +35,9 @@ impl Args {
             } else if out.command.is_none() {
                 out.command = Some(a);
             } else {
-                return Err(format!("unexpected positional argument {a:?}"));
+                return Err(FftError::InvalidArgument(format!(
+                    "unexpected positional argument {a:?}"
+                )));
             }
         }
         Ok(out)
@@ -52,7 +56,7 @@ impl Args {
     }
 
     /// Typed option with default.
-    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String>
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> FftResult<T>
     where
         T::Err: std::fmt::Display,
     {
@@ -60,7 +64,7 @@ impl Args {
             None => Ok(default),
             Some(s) => s
                 .parse::<T>()
-                .map_err(|e| format!("invalid --{name} {s:?}: {e}")),
+                .map_err(|e| FftError::InvalidArgument(format!("invalid --{name} {s:?}: {e}"))),
         }
     }
 }

@@ -8,7 +8,7 @@ use crate::analysis::ratio::ratio_stats;
 use crate::analysis::report::{fixed, sci, Table};
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::{FftOp, Server, ServerConfig};
-use crate::fft::{Strategy};
+use crate::fft::{FftError, FftResult, Strategy};
 use crate::precision::{Bf16, F16};
 use crate::workload::{ArrivalTrace, SignalKind, TraceConfig, WorkloadGen};
 
@@ -30,7 +30,7 @@ USAGE:
   fmafft help
 ";
 
-pub fn tables(a: &Args) -> Result<(), String> {
+pub fn tables(a: &Args) -> FftResult<()> {
     let n: usize = a.get_parse("n", 1024usize)?;
     let m = crate::fft::log2_exact(n)?;
 
@@ -90,12 +90,15 @@ pub fn tables(a: &Args) -> Result<(), String> {
     Ok(())
 }
 
-pub fn audit(a: &Args) -> Result<(), String> {
+pub fn audit(a: &Args) -> FftResult<()> {
     let n: usize = a.get_parse("n", 1024usize)?;
     crate::fft::log2_exact(n)?;
     let strategy: Strategy = a.get_or("strategy", "dual").parse()?;
     if strategy == Strategy::Standard {
-        return Err("standard butterfly has no ratio table to audit".into());
+        return Err(FftError::UnsupportedStrategy {
+            strategy,
+            reason: "standard butterfly has no ratio table to audit",
+        });
     }
     let st = ratio_stats(n, strategy);
     let mut t = Table::new(
@@ -115,13 +118,13 @@ pub fn audit(a: &Args) -> Result<(), String> {
         let ok = st.max_nonsingular <= 1.0 + 1e-12 && st.singular == 0 && st.near_singular == 0;
         println!("Theorem 1 check (|t| <= 1, no singularities): {}", if ok { "PASS" } else { "FAIL" });
         if !ok {
-            return Err("dual-select audit failed".into());
+            return Err(FftError::AuditFailed { strategy });
         }
     }
     Ok(())
 }
 
-pub fn fft(a: &Args) -> Result<(), String> {
+pub fn fft(a: &Args) -> FftResult<()> {
     let n: usize = a.get_parse("n", 1024usize)?;
     crate::fft::log2_exact(n)?;
     let strategy: Strategy = a.get_or("strategy", "dual").parse()?;
@@ -133,7 +136,7 @@ pub fn fft(a: &Args) -> Result<(), String> {
         "f32" => measure::<f32>(n, strategy, seed),
         "fp16" | "f16" => measure::<F16>(n, strategy, seed),
         "bf16" => measure::<Bf16>(n, strategy, seed),
-        other => return Err(format!("unknown precision {other:?}")),
+        other => return Err(FftError::InvalidArgument(format!("unknown precision {other:?}"))),
     };
     println!(
         "n={} strategy={} precision={}\n  forward rel-L2 vs f64 DFT: {}\n  FFT→IFFT roundtrip rel-L2: {}",
@@ -146,7 +149,7 @@ pub fn fft(a: &Args) -> Result<(), String> {
     Ok(())
 }
 
-pub fn serve(a: &Args) -> Result<(), String> {
+pub fn serve(a: &Args) -> FftResult<()> {
     let n: usize = a.get_parse("n", 1024usize)?;
     crate::fft::log2_exact(n)?;
     let rate: f64 = a.get_parse("rate", 2000.0f64)?;

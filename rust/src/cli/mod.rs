@@ -33,7 +33,10 @@ pub fn run<I: IntoIterator<Item = String>>(argv: I) -> i32 {
             println!("{}", commands::USAGE);
             Ok(())
         }
-        other => Err(format!("unknown command {other:?}\n{}", commands::USAGE)),
+        other => Err(crate::fft::FftError::InvalidArgument(format!(
+            "unknown command {other:?}\n{}",
+            commands::USAGE
+        ))),
     };
     match result {
         Ok(()) => 0,

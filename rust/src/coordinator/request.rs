@@ -3,7 +3,7 @@
 use std::sync::mpsc;
 use std::time::Instant;
 
-use crate::fft::Strategy;
+use crate::fft::{FftError, Strategy};
 
 /// What the request asks for.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -49,8 +49,8 @@ pub struct FftResponse {
     pub batch_size: usize,
     /// Queue + service time.
     pub latency: std::time::Duration,
-    /// Error message if the request failed.
-    pub error: Option<String>,
+    /// Typed error if the request failed.
+    pub error: Option<FftError>,
 }
 
 impl FftResponse {
@@ -81,7 +81,7 @@ mod tests {
     fn response_ok_flag() {
         let ok = FftResponse { id: 1, re: vec![], im: vec![], batch_size: 1, latency: Default::default(), error: None };
         assert!(ok.is_ok());
-        let bad = FftResponse { error: Some("x".into()), ..ok.clone() };
+        let bad = FftResponse { error: Some(FftError::Unsupported("x")), ..ok.clone() };
         assert!(!bad.is_ok());
     }
 }

@@ -1,12 +1,18 @@
 //! The serving loop: intake thread (batching) + worker pool (compute),
 //! over either the native Rust FFT core or the PJRT artifact runtime.
+//!
+//! Workers resolve each batch's [`PlanKey`] to one
+//! `Arc<dyn Transform<f32>>` (a cached FFT plan or the matched filter)
+//! and call [`Transform::execute_batch`] — dispatch happens once per
+//! batch, not once per request, and new transform kinds slot in
+//! without touching the worker loop.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::fft::{Direction, Planner, Strategy};
+use crate::fft::{Direction, FftError, FftResult, Planner, Strategy, Transform};
 use crate::precision::SplitBuf;
 use crate::runtime::literal::BatchF32;
 use crate::runtime::{ArtifactKind, Engine};
@@ -73,8 +79,8 @@ enum WorkerMsg {
 }
 
 /// Send-able recipe for building a worker's compute state (the PJRT
-/// client is `Rc`-based and not `Send`, so each worker thread owns its
-/// own [`Engine`], built from this recipe inside the thread).
+/// client is not `Send`, so each worker thread owns its own
+/// [`Engine`], built from this recipe inside the thread).
 #[derive(Clone)]
 struct ComputeRecipe {
     n: usize,
@@ -88,20 +94,19 @@ struct ComputeCtx {
     n: usize,
     strategy: Strategy,
     planner: Planner<f32>,
-    matched: MatchedFilter<f32>,
+    matched: Arc<MatchedFilter<f32>>,
     engine: Option<Engine>,
 }
 
 impl ComputeCtx {
-    fn new(recipe: &ComputeRecipe) -> Result<Self, String> {
+    fn new(recipe: &ComputeRecipe) -> FftResult<Self> {
         let planner = Planner::<f32>::new();
         let (cr, ci) = default_chirp(recipe.pulse_len);
-        let matched = MatchedFilter::new(&planner, recipe.strategy, recipe.n, &cr, &ci)?;
+        let matched =
+            Arc::new(MatchedFilter::new(&planner, recipe.strategy, recipe.n, &cr, &ci)?);
         let engine = match &recipe.artifact_dir {
             None => None,
-            Some(dir) => {
-                Some(Engine::new(dir).map_err(|e| format!("PJRT engine: {e:#}"))?)
-            }
+            Some(dir) => Some(Engine::new(dir)?),
         };
         Ok(ComputeCtx {
             n: recipe.n,
@@ -112,38 +117,36 @@ impl ComputeCtx {
         })
     }
 
+    /// Resolve a batch key to the one transform that serves it.
+    fn transform_for(&self, key: &PlanKey) -> FftResult<Arc<dyn Transform<f32>>> {
+        match key.op {
+            FftOp::Forward => self.planner.plan(key.n, key.strategy, Direction::Forward),
+            FftOp::Inverse => self.planner.plan(key.n, key.strategy, Direction::Inverse),
+            FftOp::MatchedFilter => Ok(self.matched.clone() as Arc<dyn Transform<f32>>),
+        }
+    }
+
     /// Execute a batch, producing per-request responses.
-    fn run_batch(&self, batch: &Batch) -> Result<Vec<(Vec<f32>, Vec<f32>)>, String> {
+    fn run_batch(&self, batch: &Batch) -> FftResult<Vec<(Vec<f32>, Vec<f32>)>> {
         match &self.engine {
             None => self.run_native(batch),
             Some(engine) => self.run_pjrt(engine, batch),
         }
     }
 
-    fn run_native(&self, batch: &Batch) -> Result<Vec<(Vec<f32>, Vec<f32>)>, String> {
-        let mut out = Vec::with_capacity(batch.requests.len());
-        let mut scratch = SplitBuf::<f32>::zeroed(self.n);
-        for req in &batch.requests {
-            let mut buf = SplitBuf::<f32>::from_f64(&req.re, &req.im);
-            match batch.key.op {
-                FftOp::Forward => self
-                    .planner
-                    .plan(self.n, batch.key.strategy, Direction::Forward)?
-                    .execute(&mut buf, &mut scratch),
-                FftOp::Inverse => self
-                    .planner
-                    .plan(self.n, batch.key.strategy, Direction::Inverse)?
-                    .execute(&mut buf, &mut scratch),
-                FftOp::MatchedFilter => {
-                    self.matched.compress(&self.planner, &mut buf, &mut scratch)?
-                }
-            }
-            out.push((buf.re, buf.im));
-        }
-        Ok(out)
+    fn run_native(&self, batch: &Batch) -> FftResult<Vec<(Vec<f32>, Vec<f32>)>> {
+        let transform = self.transform_for(&batch.key)?;
+        let mut bufs: Vec<SplitBuf<f32>> = batch
+            .requests
+            .iter()
+            .map(|req| SplitBuf::from_f64(&req.re, &req.im))
+            .collect();
+        let mut scratch = SplitBuf::<f32>::zeroed(transform.len());
+        transform.execute_batch(&mut bufs, &mut scratch);
+        Ok(bufs.into_iter().map(|b| (b.re, b.im)).collect())
     }
 
-    fn run_pjrt(&self, engine: &Engine, batch: &Batch) -> Result<Vec<(Vec<f32>, Vec<f32>)>, String> {
+    fn run_pjrt(&self, engine: &Engine, batch: &Batch) -> FftResult<Vec<(Vec<f32>, Vec<f32>)>> {
         let kind = match batch.key.op {
             FftOp::Forward | FftOp::Inverse => ArtifactKind::Fft,
             FftOp::MatchedFilter => ArtifactKind::MatchedFilter,
@@ -169,10 +172,10 @@ impl ComputeCtx {
             .collect();
         let available = if available.is_empty() { batches } else { available };
         if available.is_empty() {
-            return Err(format!(
+            return Err(FftError::Backend(format!(
                 "no artifact for kind={kind:?} n={} strategy={} inverse={inverse}",
                 self.n, batch.key.strategy
-            ));
+            )));
         }
         let fit = available.iter().copied().filter(|&b| b >= count).min();
         let chunk = fit.unwrap_or_else(|| available.iter().copied().max().unwrap());
@@ -196,8 +199,8 @@ impl ComputeCtx {
                 chunk,
                 inverse,
             );
-            let model = engine.load(&name).map_err(|e| format!("{e:#}"))?;
-            let result = &model.execute(&input).map_err(|e| format!("{e:#}"))?[0];
+            let model = engine.load(&name)?;
+            let result = &model.execute(&input)?[0];
             for row in 0..len {
                 let (r, i) = result.row(row);
                 out.push((r.to_vec(), i.to_vec()));
@@ -222,7 +225,7 @@ pub struct Server {
 
 impl Server {
     /// Spawn intake + worker threads.
-    pub fn start(cfg: ServerConfig) -> Result<Arc<Server>, String> {
+    pub fn start(cfg: ServerConfig) -> FftResult<Arc<Server>> {
         let metrics = Arc::new(Metrics::new());
         let gate = Gate::new(cfg.queue_limit);
         let recipe = ComputeRecipe {
@@ -232,10 +235,12 @@ impl Server {
             artifact_dir: match &cfg.backend {
                 Backend::Native => None,
                 Backend::Pjrt { artifact_dir } => {
-                    // Validate the manifest up-front so config errors
-                    // surface at start() rather than on first request.
-                    crate::runtime::Manifest::load(artifact_dir)
-                        .map_err(|e| format!("{e:#}"))?;
+                    // Preflight the whole backend up-front (manifest +
+                    // engine construction) so an unusable PJRT runtime
+                    // fails start() with a typed error the caller can
+                    // fall back on — instead of accepting requests
+                    // that would all come back FftError::Backend.
+                    crate::runtime::Engine::new(artifact_dir)?;
                     Some(artifact_dir.clone())
                 }
             },
@@ -257,7 +262,7 @@ impl Server {
                 std::thread::Builder::new()
                     .name(format!("fmafft-worker-{w}"))
                     .spawn(move || worker_loop(work_rx, recipe, metrics))
-                    .map_err(|e| e.to_string())?,
+                    .map_err(|e| FftError::Backend(format!("spawning worker: {e}")))?,
             );
         }
 
@@ -269,7 +274,7 @@ impl Server {
             std::thread::Builder::new()
                 .name("fmafft-intake".into())
                 .spawn(move || intake_loop(intake_rx, work_tx, policy, metrics_in, workers))
-                .map_err(|e| e.to_string())?,
+                .map_err(|e| FftError::Backend(format!("spawning intake: {e}")))?,
         );
 
         Ok(Arc::new(Server {
@@ -291,17 +296,16 @@ impl Server {
         op: FftOp,
         re: Vec<f64>,
         im: Vec<f64>,
-    ) -> Result<mpsc::Receiver<FftResponse>, String> {
+    ) -> FftResult<mpsc::Receiver<FftResponse>> {
         if re.len() != self.n || im.len() != self.n {
-            return Err(format!("frame must be length {} (got {})", self.n, re.len()));
+            return Err(FftError::LengthMismatch { expected: self.n, got: re.len() });
         }
         let Some(permit) = self.gate.try_admit() else {
             self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            return Err(format!(
-                "rejected: {} requests in flight (limit {})",
-                self.gate.in_flight(),
-                self.gate.limit()
-            ));
+            return Err(FftError::Rejected {
+                in_flight: self.gate.in_flight(),
+                limit: self.gate.limit(),
+            });
         };
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
@@ -316,14 +320,15 @@ impl Server {
         };
         self.intake_tx
             .send(IntakeMsg::Req(req))
-            .map_err(|_| "server is shut down".to_string())?;
+            .map_err(|_| FftError::ChannelClosed("server is shut down"))?;
         Ok(rx)
     }
 
     /// Submit and block for the response.
-    pub fn submit_wait(&self, op: FftOp, re: Vec<f64>, im: Vec<f64>) -> Result<FftResponse, String> {
+    pub fn submit_wait(&self, op: FftOp, re: Vec<f64>, im: Vec<f64>) -> FftResult<FftResponse> {
         let rx = self.submit(op, re, im)?;
-        rx.recv().map_err(|_| "response channel closed".to_string())
+        rx.recv()
+            .map_err(|_| FftError::ChannelClosed("response channel closed"))
     }
 
     /// Flush open batches and wait until every worker has drained.
@@ -340,7 +345,11 @@ impl Server {
     pub fn shutdown(&self) {
         self.drain();
         let _ = self.intake_tx.send(IntakeMsg::Shutdown);
-        for h in self.handles.lock().unwrap().drain(..) {
+        let mut handles = self
+            .handles
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        for h in handles.drain(..) {
             let _ = h.join();
         }
     }
@@ -421,7 +430,9 @@ fn worker_loop(
     let ctx = ComputeCtx::new(&recipe);
     loop {
         let msg = {
-            let guard = rx.lock().unwrap();
+            // Poison recovery: a sibling worker that panicked while
+            // receiving must not take the whole pool down with it.
+            let guard = rx.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
             guard.recv()
         };
         match msg {

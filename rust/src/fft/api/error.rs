@@ -1,0 +1,125 @@
+//! The crate-wide typed error: every fallible operation in the FFT
+//! core, the signal pipelines, the runtime and the serving plane
+//! returns [`FftError`] (no more stringly-typed `Result<_, String>`).
+//!
+//! The taxonomy mirrors where things can go wrong:
+//!
+//! * plan construction — [`FftError::NonPowerOfTwo`],
+//!   [`FftError::InvalidSize`], [`FftError::UnsupportedStrategy`],
+//!   [`FftError::Unsupported`]
+//! * data shape — [`FftError::LengthMismatch`]
+//! * user input (CLI / spec parsing) — [`FftError::UnknownStrategy`],
+//!   [`FftError::InvalidArgument`]
+//! * serving plane — [`FftError::Rejected`], [`FftError::ChannelClosed`],
+//!   [`FftError::Poisoned`]
+//! * compute backends — [`FftError::Backend`]
+
+use core::fmt;
+
+use crate::fft::Strategy;
+
+/// Shorthand used across the crate.
+pub type FftResult<T> = Result<T, FftError>;
+
+/// Everything that can go wrong planning or serving a transform.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FftError {
+    /// The requested size is not the power of two the algorithm needs.
+    NonPowerOfTwo { n: usize },
+    /// The requested size is invalid for the chosen transform kind.
+    InvalidSize { n: usize, reason: &'static str },
+    /// Input length does not match what the plan was built for.
+    LengthMismatch { expected: usize, got: usize },
+    /// The chosen (algorithm, strategy) combination is not available.
+    UnsupportedStrategy { strategy: Strategy, reason: &'static str },
+    /// The operation has no implementation in this build.
+    Unsupported(&'static str),
+    /// A strategy name that did not parse.
+    UnknownStrategy(String),
+    /// A malformed CLI argument or spec field.
+    InvalidArgument(String),
+    /// A shared lock was poisoned by a panicking thread and the
+    /// operation chose not to continue over the poisoned state.
+    Poisoned(&'static str),
+    /// A compute backend (PJRT runtime, artifact manifest, worker
+    /// thread spawn) failed.
+    Backend(String),
+    /// Admission control rejected the request (backpressure).
+    Rejected { in_flight: usize, limit: usize },
+    /// The server (or a response channel) has shut down.
+    ChannelClosed(&'static str),
+    /// A paper-invariant audit failed (CLI `audit` command).
+    AuditFailed { strategy: Strategy },
+}
+
+impl fmt::Display for FftError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FftError::NonPowerOfTwo { n } => {
+                write!(f, "FFT size must be a power of two >= 2, got {n}")
+            }
+            FftError::InvalidSize { n, reason } => write!(f, "{reason}, got {n}"),
+            FftError::LengthMismatch { expected, got } => {
+                write!(f, "length mismatch: expected {expected}, got {got}")
+            }
+            FftError::UnsupportedStrategy { strategy, reason } => {
+                write!(f, "strategy {strategy} unsupported: {reason}")
+            }
+            FftError::Unsupported(what) => write!(f, "unsupported: {what}"),
+            FftError::UnknownStrategy(s) => {
+                write!(f, "unknown strategy {s:?} (expected standard|lf|cos|dual)")
+            }
+            FftError::InvalidArgument(msg) => f.write_str(msg),
+            FftError::Poisoned(what) => {
+                write!(f, "lock poisoned by a panicked thread: {what}")
+            }
+            FftError::Backend(msg) => f.write_str(msg),
+            FftError::Rejected { in_flight, limit } => {
+                write!(f, "rejected: {in_flight} requests in flight (limit {limit})")
+            }
+            FftError::ChannelClosed(what) => write!(f, "channel closed: {what}"),
+            FftError::AuditFailed { strategy } => {
+                write!(f, "{} audit failed (paper invariant violated)", strategy.name())
+            }
+        }
+    }
+}
+
+impl std::error::Error for FftError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        assert_eq!(
+            FftError::NonPowerOfTwo { n: 768 }.to_string(),
+            "FFT size must be a power of two >= 2, got 768"
+        );
+        assert!(FftError::Rejected { in_flight: 4, limit: 4 }
+            .to_string()
+            .contains("rejected"));
+        assert!(FftError::LengthMismatch { expected: 8, got: 4 }
+            .to_string()
+            .contains("expected 8"));
+    }
+
+    #[test]
+    fn error_trait_object_works() {
+        let e: Box<dyn std::error::Error> = Box::new(FftError::Unsupported("x"));
+        assert_eq!(e.to_string(), "unsupported: x");
+    }
+
+    #[test]
+    fn errors_are_comparable() {
+        assert_eq!(
+            FftError::NonPowerOfTwo { n: 3 },
+            FftError::NonPowerOfTwo { n: 3 }
+        );
+        assert_ne!(
+            FftError::NonPowerOfTwo { n: 3 },
+            FftError::NonPowerOfTwo { n: 5 }
+        );
+    }
+}

@@ -1,0 +1,34 @@
+//! The public FFT facade: typed errors, the [`Transform`] trait, the
+//! [`PlanSpec`] builder and the generalized [`Planner`].
+//!
+//! The paper's point is that dual-select is a drop-in table swap; this
+//! module makes "drop-in" true at the API level too — one way to
+//! describe any transform, one way to execute it, one error type:
+//!
+//! ```text
+//!   PlanSpec::new(n)                      describe
+//!       .strategy(Strategy::DualSelect)
+//!       .direction(Direction::Inverse)
+//!       .radix4()              // or .dit() / .bluestein() / .real_input()
+//!       .build::<f32>()?                  -> Box<dyn Transform<f32>>
+//!
+//!   planner.get(spec)?                    same, cached -> Arc<dyn Transform<T>>
+//!   transform.execute(&mut buf, &mut scratch)
+//!   transform.execute_batch(&mut frames, &mut scratch)
+//! ```
+//!
+//! Concrete plan types ([`super::Plan`], [`super::radix4::Radix4Plan`],
+//! [`super::dit::DitPlan`], [`super::bluestein::BluesteinPlan`],
+//! [`super::real_fft::RealFftPlan`]) remain public for code that wants
+//! monomorphized access; they all implement [`Transform`].
+//! See `DESIGN.md` for the facade diagram and migration notes.
+
+pub mod error;
+pub mod planner;
+pub mod spec;
+pub mod transform;
+
+pub use error::{FftError, FftResult};
+pub use planner::Planner;
+pub use spec::{Algorithm, PlanSpec};
+pub use transform::{RealTransform, Transform};

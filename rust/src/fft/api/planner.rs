@@ -1,0 +1,131 @@
+//! The generalized [`Planner`]: an FFTW-style cache keyed by
+//! [`PlanSpec`], holding *every* plan kind (complex radix-2/4, DIT,
+//! Bluestein, real-input) behind `Arc<dyn Transform<T>>` so the
+//! coordinator's worker threads share tables without copying.
+//!
+//! The cache mutex uses poison *recovery*: a worker that panics while
+//! holding the lock leaves a fully valid `HashMap` behind (plans are
+//! immutable once inserted, and `HashMap::insert`/`get` keep the map
+//! valid), so other workers continue over the poisoned state instead
+//! of wedging the serving plane.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, PoisonError};
+
+use crate::precision::Real;
+
+use super::super::{Direction, Strategy};
+use super::error::FftResult;
+use super::spec::PlanSpec;
+use super::transform::Transform;
+
+/// Thread-safe plan cache keyed by [`PlanSpec`].
+pub struct Planner<T: Real> {
+    cache: Mutex<HashMap<PlanSpec, Arc<dyn Transform<T>>>>,
+}
+
+impl<T: Real> Default for Planner<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Real> Planner<T> {
+    pub fn new() -> Self {
+        Planner { cache: Mutex::new(HashMap::new()) }
+    }
+
+    /// Fetch or build the transform described by `spec`.
+    pub fn get(&self, spec: PlanSpec) -> FftResult<Arc<dyn Transform<T>>> {
+        let mut cache = self.cache.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(t) = cache.get(&spec) {
+            return Ok(t.clone());
+        }
+        let built: Arc<dyn Transform<T>> = Arc::from(spec.build::<T>()?);
+        cache.insert(spec, built.clone());
+        Ok(built)
+    }
+
+    /// Fetch or build a complex transform for `(n, strategy,
+    /// direction)` — the legacy `Planner::plan` shape, now routed
+    /// through [`PlanSpec`] (so non-power-of-two sizes work too).
+    pub fn plan(
+        &self,
+        n: usize,
+        strategy: Strategy,
+        direction: Direction,
+    ) -> FftResult<Arc<dyn Transform<T>>> {
+        self.get(PlanSpec::new(n).strategy(strategy).direction(direction))
+    }
+
+    /// Number of cached plans.
+    pub fn len(&self) -> usize {
+        self.cache
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn planner_caches_and_shares() {
+        let planner = Planner::<f32>::new();
+        let a = planner.plan(256, Strategy::DualSelect, Direction::Forward).unwrap();
+        let b = planner.plan(256, Strategy::DualSelect, Direction::Forward).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(planner.len(), 1);
+        let _c = planner.plan(256, Strategy::DualSelect, Direction::Inverse).unwrap();
+        assert_eq!(planner.len(), 2);
+    }
+
+    #[test]
+    fn planner_caches_every_plan_kind() {
+        let planner = Planner::<f64>::new();
+        planner.get(PlanSpec::new(64)).unwrap();
+        planner.get(PlanSpec::new(64).radix4()).unwrap();
+        planner.get(PlanSpec::new(64).dit()).unwrap();
+        planner.get(PlanSpec::new(60)).unwrap(); // Bluestein via Auto
+        planner.get(PlanSpec::new(64).real_input()).unwrap();
+        assert_eq!(planner.len(), 5);
+        // Same spec, same Arc — regardless of kind.
+        let x = planner.get(PlanSpec::new(64).radix4()).unwrap();
+        let y = planner.get(PlanSpec::new(64).radix4()).unwrap();
+        assert!(Arc::ptr_eq(&x, &y));
+        assert_eq!(planner.len(), 5);
+    }
+
+    #[test]
+    fn build_errors_are_not_cached() {
+        let planner = Planner::<f32>::new();
+        assert!(planner.get(PlanSpec::new(100).stockham()).is_err());
+        assert!(planner.is_empty());
+    }
+
+    #[test]
+    fn poisoned_cache_recovers() {
+        // A thread that panics while planning must not wedge the
+        // planner for everyone else (the serving plane's workers share
+        // one Planner).
+        let planner = Arc::new(Planner::<f32>::new());
+        planner.plan(64, Strategy::DualSelect, Direction::Forward).unwrap();
+        let p2 = planner.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = p2.cache.lock().unwrap();
+            panic!("worker dies holding the cache lock");
+        })
+        .join();
+        // The mutex is now poisoned; the planner still serves.
+        assert_eq!(planner.len(), 1);
+        let t = planner.plan(128, Strategy::DualSelect, Direction::Forward).unwrap();
+        assert_eq!(t.len(), 128);
+        assert_eq!(planner.len(), 2);
+    }
+}

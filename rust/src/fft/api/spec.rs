@@ -1,0 +1,270 @@
+//! [`PlanSpec`]: one builder for every transform kind.
+//!
+//! ```
+//! use fmafft::fft::{Direction, PlanSpec, Strategy, Transform};
+//! use fmafft::precision::SplitBuf;
+//!
+//! // FFT of a constant is n·δ0.
+//! let fft = PlanSpec::new(8).strategy(Strategy::DualSelect).build::<f32>().unwrap();
+//! let mut buf = SplitBuf::<f32>::from_f64(&[1.0; 8], &[0.0; 8]);
+//! fft.execute_alloc(&mut buf);
+//! assert!((buf.re[0] - 8.0).abs() < 1e-3);
+//!
+//! // Non-power-of-two sizes auto-route to Bluestein instead of erroring.
+//! let odd = PlanSpec::new(12).build::<f64>().unwrap();
+//! assert_eq!(odd.len(), 12);
+//!
+//! // The builder covers direction, algorithm and real input too.
+//! let spec = PlanSpec::new(1024)
+//!     .strategy(Strategy::DualSelect)
+//!     .direction(Direction::Inverse)
+//!     .radix4();
+//! assert!(spec.build::<f32>().is_ok());
+//! ```
+
+use crate::precision::Real;
+
+use super::super::bluestein::BluesteinPlan;
+use super::super::dit::DitPlan;
+use super::super::plan::Plan;
+use super::super::radix4::Radix4Plan;
+use super::super::real_fft::RealFftPlan;
+use super::super::{Direction, Strategy};
+use super::error::{FftError, FftResult};
+use super::transform::{RealTransform, Transform};
+
+/// Which FFT organization executes the plan.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Algorithm {
+    /// Pick automatically: Stockham radix-2 for powers of two,
+    /// Bluestein (chirp-Z) for everything else.
+    #[default]
+    Auto,
+    /// Radix-2 Stockham autosort (the tuned hot path).
+    Stockham,
+    /// Radix-4 Stockham (powers of four, ratio strategies only).
+    Radix4,
+    /// In-place Cooley-Tukey DIT with bit reversal (ablation baseline).
+    Dit,
+    /// Bluestein chirp-Z (any size >= 1).
+    Bluestein,
+}
+
+/// A complete description of a transform: the [`super::Planner`] cache
+/// key and the input to [`PlanSpec::build`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanSpec {
+    pub n: usize,
+    pub strategy: Strategy,
+    pub direction: Direction,
+    pub algorithm: Algorithm,
+    pub real_input: bool,
+}
+
+impl PlanSpec {
+    /// A forward, dual-select, auto-algorithm complex transform of
+    /// size `n`; refine with the builder methods.
+    pub fn new(n: usize) -> Self {
+        PlanSpec {
+            n,
+            strategy: Strategy::DualSelect,
+            direction: Direction::Forward,
+            algorithm: Algorithm::Auto,
+            real_input: false,
+        }
+    }
+
+    pub fn strategy(mut self, strategy: Strategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    pub fn direction(mut self, direction: Direction) -> Self {
+        self.direction = direction;
+        self
+    }
+
+    pub fn forward(self) -> Self {
+        self.direction(Direction::Forward)
+    }
+
+    pub fn inverse(self) -> Self {
+        self.direction(Direction::Inverse)
+    }
+
+    pub fn algorithm(mut self, algorithm: Algorithm) -> Self {
+        self.algorithm = algorithm;
+        self
+    }
+
+    pub fn stockham(self) -> Self {
+        self.algorithm(Algorithm::Stockham)
+    }
+
+    pub fn radix4(self) -> Self {
+        self.algorithm(Algorithm::Radix4)
+    }
+
+    pub fn dit(self) -> Self {
+        self.algorithm(Algorithm::Dit)
+    }
+
+    pub fn bluestein(self) -> Self {
+        self.algorithm(Algorithm::Bluestein)
+    }
+
+    /// Treat the input as real samples (in the `re` lane); see
+    /// [`RealTransform`] for the exact buffer semantics.
+    pub fn real_input(mut self) -> Self {
+        self.real_input = true;
+        self
+    }
+
+    /// Build the transform this spec describes.
+    pub fn build<T: Real>(&self) -> FftResult<Box<dyn Transform<T>>> {
+        if self.real_input {
+            if !matches!(self.algorithm, Algorithm::Auto | Algorithm::Stockham) {
+                return Err(FftError::Unsupported(
+                    "real-input transforms run on the Stockham core (use Auto or Stockham)",
+                ));
+            }
+            let plan = RealFftPlan::<T>::new(self.n, self.strategy)?;
+            return Ok(Box::new(RealTransform::new(plan, self.direction)));
+        }
+        match self.algorithm {
+            Algorithm::Auto => {
+                if self.n >= 2 && self.n.is_power_of_two() {
+                    Ok(Box::new(Plan::<T>::new(self.n, self.strategy, self.direction)?))
+                } else {
+                    Ok(Box::new(BluesteinPlan::<T>::new(
+                        self.n,
+                        self.strategy,
+                        self.direction,
+                    )?))
+                }
+            }
+            Algorithm::Stockham => {
+                Ok(Box::new(Plan::<T>::new(self.n, self.strategy, self.direction)?))
+            }
+            Algorithm::Radix4 => Ok(Box::new(Radix4Plan::<T>::new(
+                self.n,
+                self.strategy,
+                self.direction,
+            )?)),
+            Algorithm::Dit => {
+                Ok(Box::new(DitPlan::<T>::new(self.n, self.strategy, self.direction)?))
+            }
+            Algorithm::Bluestein => Ok(Box::new(BluesteinPlan::<T>::new(
+                self.n,
+                self.strategy,
+                self.direction,
+            )?)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precision::SplitBuf;
+    use crate::util::metrics::rel_l2;
+    use crate::util::prng::Pcg32;
+
+    #[test]
+    fn auto_routes_pow2_to_stockham_tables() {
+        let t = PlanSpec::new(256).build::<f64>().unwrap();
+        assert_eq!(t.len(), 256);
+        assert_eq!(t.strategy(), Strategy::DualSelect);
+    }
+
+    #[test]
+    fn auto_routes_non_pow2_to_bluestein() {
+        // The old Plan::new path errored here; the facade serves it.
+        let t = PlanSpec::new(100).build::<f64>().unwrap();
+        assert_eq!(t.len(), 100);
+        let mut rng = Pcg32::seed(1);
+        let re: Vec<f64> = (0..100).map(|_| rng.gaussian()).collect();
+        let im: Vec<f64> = (0..100).map(|_| rng.gaussian()).collect();
+        let mut buf = SplitBuf::from_f64(&re, &im);
+        t.execute_alloc(&mut buf);
+        let (wr, wi) = crate::dft::naive_dft(&re, &im, false);
+        let (gr, gi) = buf.to_f64();
+        assert!(rel_l2(&gr, &gi, &wr, &wi) < 1e-10);
+    }
+
+    #[test]
+    fn explicit_stockham_still_rejects_non_pow2() {
+        assert_eq!(
+            PlanSpec::new(100).stockham().build::<f32>().unwrap_err(),
+            FftError::NonPowerOfTwo { n: 100 }
+        );
+    }
+
+    #[test]
+    fn radix4_requires_power_of_four_and_ratio_strategy() {
+        assert!(PlanSpec::new(64).radix4().build::<f32>().is_ok());
+        assert!(matches!(
+            PlanSpec::new(128).radix4().build::<f32>().unwrap_err(),
+            FftError::InvalidSize { n: 128, .. }
+        ));
+        assert!(matches!(
+            PlanSpec::new(64)
+                .strategy(Strategy::Standard)
+                .radix4()
+                .build::<f32>()
+                .unwrap_err(),
+            FftError::UnsupportedStrategy { .. }
+        ));
+    }
+
+    #[test]
+    fn real_input_builds_and_rejects_bad_sizes() {
+        assert!(PlanSpec::new(256).real_input().build::<f64>().is_ok());
+        // n/2 must be a power of two for the packing trick.
+        assert!(PlanSpec::new(6).real_input().build::<f64>().is_err());
+        assert!(matches!(
+            PlanSpec::new(3).real_input().build::<f64>().unwrap_err(),
+            FftError::InvalidSize { n: 3, .. }
+        ));
+        // Real input on the radix-4 organization is not a thing.
+        assert!(matches!(
+            PlanSpec::new(256).real_input().radix4().build::<f64>().unwrap_err(),
+            FftError::Unsupported(_)
+        ));
+    }
+
+    #[test]
+    fn spec_is_a_value_type_cache_key() {
+        use std::collections::HashSet;
+        let mut set = HashSet::new();
+        set.insert(PlanSpec::new(8));
+        set.insert(PlanSpec::new(8).forward());
+        set.insert(PlanSpec::new(8).inverse());
+        set.insert(PlanSpec::new(8).dit());
+        assert_eq!(set.len(), 3);
+    }
+
+    #[test]
+    fn all_algorithms_agree_on_pow4_size() {
+        let n = 64;
+        let mut rng = Pcg32::seed(7);
+        let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let reference = {
+            let t = PlanSpec::new(n).stockham().build::<f64>().unwrap();
+            let mut b = SplitBuf::from_f64(&re, &im);
+            t.execute_alloc(&mut b);
+            b.to_f64()
+        };
+        for alg in [Algorithm::Radix4, Algorithm::Dit, Algorithm::Bluestein] {
+            let t = PlanSpec::new(n).algorithm(alg).build::<f64>().unwrap();
+            let mut b = SplitBuf::from_f64(&re, &im);
+            t.execute_alloc(&mut b);
+            let (gr, gi) = b.to_f64();
+            assert!(
+                rel_l2(&gr, &gi, &reference.0, &reference.1) < 1e-11,
+                "{alg:?}"
+            );
+        }
+    }
+}

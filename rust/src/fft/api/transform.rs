@@ -1,0 +1,280 @@
+//! The [`Transform`] trait — one execute shape for every transform
+//! kind (Stockham radix-2/4, DIT, Bluestein, real-input), so the
+//! serving plane, the signal pipelines and the benches all drive
+//! `dyn Transform<T>` instead of five concrete plan types.
+//!
+//! Contract:
+//!
+//! * `len()` is the logical frame length; `execute` panics (like every
+//!   plan's concrete `execute` always has) if `buf.len() != len()`.
+//! * `execute` transforms `buf` in place; `scratch` is working space
+//!   that is resized on demand and carries no state between calls.
+//! * `execute_batch` has a default serial loop; the coordinator's
+//!   worker pool calls it so backends that can do better (e.g. a
+//!   batched PJRT artifact) override one method instead of the server
+//!   hand-rolling per-request dispatch.
+
+use crate::precision::{Real, SplitBuf};
+
+use super::super::bluestein::BluesteinPlan;
+use super::super::dit::DitPlan;
+use super::super::plan::Plan;
+use super::super::radix4::Radix4Plan;
+use super::super::real_fft::RealFftPlan;
+use super::super::{Direction, Strategy};
+
+/// A planned, executable transform over working precision `T`.
+pub trait Transform<T: Real>: Send + Sync + core::fmt::Debug {
+    /// Logical frame length (number of complex samples per execute).
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Butterfly strategy baked into the plan's tables.
+    fn strategy(&self) -> Strategy;
+
+    /// Transform direction.
+    fn direction(&self) -> Direction;
+
+    /// Execute in place. `buf.len()` must equal [`Transform::len`];
+    /// `scratch` is resized when needed.
+    fn execute(&self, buf: &mut SplitBuf<T>, scratch: &mut SplitBuf<T>);
+
+    /// Execute a whole batch of same-length frames, reusing `scratch`.
+    fn execute_batch(&self, bufs: &mut [SplitBuf<T>], scratch: &mut SplitBuf<T>) {
+        for buf in bufs.iter_mut() {
+            self.execute(buf, scratch);
+        }
+    }
+
+    /// Convenience: allocate scratch internally (not for the hot path).
+    fn execute_alloc(&self, buf: &mut SplitBuf<T>) {
+        let mut scratch = SplitBuf::zeroed(self.len());
+        self.execute(buf, &mut scratch);
+    }
+}
+
+impl<T: Real> Transform<T> for Plan<T> {
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn strategy(&self) -> Strategy {
+        self.strategy
+    }
+    fn direction(&self) -> Direction {
+        self.direction
+    }
+    fn execute(&self, buf: &mut SplitBuf<T>, scratch: &mut SplitBuf<T>) {
+        crate::fft::stockham::execute(self, buf, scratch);
+    }
+}
+
+impl<T: Real> Transform<T> for Radix4Plan<T> {
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn strategy(&self) -> Strategy {
+        self.strategy
+    }
+    fn direction(&self) -> Direction {
+        self.direction
+    }
+    fn execute(&self, buf: &mut SplitBuf<T>, scratch: &mut SplitBuf<T>) {
+        Radix4Plan::execute(self, buf, scratch);
+    }
+}
+
+impl<T: Real> Transform<T> for DitPlan<T> {
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn strategy(&self) -> Strategy {
+        self.strategy
+    }
+    fn direction(&self) -> Direction {
+        self.direction
+    }
+    fn execute(&self, buf: &mut SplitBuf<T>, _scratch: &mut SplitBuf<T>) {
+        // The DIT transform is fully in place (bit-reversal + stages).
+        DitPlan::execute(self, buf);
+    }
+}
+
+impl<T: Real> Transform<T> for BluesteinPlan<T> {
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn strategy(&self) -> Strategy {
+        BluesteinPlan::strategy(self)
+    }
+    fn direction(&self) -> Direction {
+        BluesteinPlan::direction(self)
+    }
+    fn execute(&self, buf: &mut SplitBuf<T>, _scratch: &mut SplitBuf<T>) {
+        *buf = self.transform(buf);
+    }
+}
+
+/// Real-input transform behind the facade: full-spectrum semantics so
+/// it composes with the complex transforms.
+///
+/// * Forward: `buf.re` holds the length-n real signal (`buf.im` is
+///   ignored); after execute, `buf` holds the full complex spectrum —
+///   bins `0..=n/2` computed by the half-size packing trick
+///   ([`RealFftPlan`]), bins `n/2+1..n` filled by Hermitian symmetry.
+///   The result matches a complex FFT of the same real signal.
+/// * Inverse: `buf` holds a Hermitian spectrum (only bins `0..=n/2`
+///   are read); after execute, `buf.re` holds the real signal and
+///   `buf.im` is zero.
+#[derive(Debug)]
+pub struct RealTransform<T: Real> {
+    plan: RealFftPlan<T>,
+    direction: Direction,
+}
+
+impl<T: Real> RealTransform<T> {
+    pub fn new(plan: RealFftPlan<T>, direction: Direction) -> Self {
+        RealTransform { plan, direction }
+    }
+
+    /// The underlying half-size r2c/c2r plan.
+    pub fn inner(&self) -> &RealFftPlan<T> {
+        &self.plan
+    }
+}
+
+impl<T: Real> Transform<T> for RealTransform<T> {
+    fn len(&self) -> usize {
+        self.plan.n
+    }
+    fn strategy(&self) -> Strategy {
+        self.plan.strategy
+    }
+    fn direction(&self) -> Direction {
+        self.direction
+    }
+    fn execute(&self, buf: &mut SplitBuf<T>, _scratch: &mut SplitBuf<T>) {
+        let n = self.plan.n;
+        assert_eq!(buf.len(), n, "buffer length != plan size");
+        let half = n / 2;
+        match self.direction {
+            Direction::Forward => {
+                let spec = self.plan.execute(&buf.re);
+                for k in 0..=half {
+                    buf.re[k] = spec.re[k];
+                    buf.im[k] = spec.im[k];
+                }
+                for k in half + 1..n {
+                    buf.re[k] = spec.re[n - k];
+                    buf.im[k] = -spec.im[n - k];
+                }
+            }
+            Direction::Inverse => {
+                let mut spec = SplitBuf::<T>::zeroed(half + 1);
+                spec.re.copy_from_slice(&buf.re[..=half]);
+                spec.im.copy_from_slice(&buf.im[..=half]);
+                let x = self
+                    .plan
+                    .execute_inverse(&spec)
+                    .expect("spec length is half+1 by construction");
+                buf.re.copy_from_slice(&x);
+                for v in buf.im.iter_mut() {
+                    *v = T::zero();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dft;
+    use crate::util::metrics::rel_l2;
+    use crate::util::prng::Pcg32;
+
+    fn boxed(n: usize) -> Box<dyn Transform<f64>> {
+        Box::new(Plan::<f64>::new(n, Strategy::DualSelect, Direction::Forward).unwrap())
+    }
+
+    #[test]
+    fn trait_object_executes_like_concrete_plan() {
+        let n = 64;
+        let t = boxed(n);
+        assert_eq!(t.len(), n);
+        assert_eq!(t.strategy(), Strategy::DualSelect);
+        assert_eq!(t.direction(), Direction::Forward);
+        let mut rng = Pcg32::seed(1);
+        let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let mut buf = SplitBuf::from_f64(&re, &im);
+        t.execute_alloc(&mut buf);
+        let (wr, wi) = dft::naive_dft(&re, &im, false);
+        let (gr, gi) = buf.to_f64();
+        assert!(rel_l2(&gr, &gi, &wr, &wi) < 1e-12);
+    }
+
+    #[test]
+    fn default_batch_loop_matches_single_executes() {
+        let n = 32;
+        let t = boxed(n);
+        let mut rng = Pcg32::seed(2);
+        let frames: Vec<(Vec<f64>, Vec<f64>)> = (0..5)
+            .map(|_| {
+                (
+                    (0..n).map(|_| rng.gaussian()).collect(),
+                    (0..n).map(|_| rng.gaussian()).collect(),
+                )
+            })
+            .collect();
+        let mut batch: Vec<SplitBuf<f64>> =
+            frames.iter().map(|(r, i)| SplitBuf::from_f64(r, i)).collect();
+        let mut scratch = SplitBuf::zeroed(n);
+        t.execute_batch(&mut batch, &mut scratch);
+        for ((r, i), got) in frames.iter().zip(&batch) {
+            let mut single = SplitBuf::from_f64(r, i);
+            t.execute_alloc(&mut single);
+            assert_eq!(single, *got);
+        }
+    }
+
+    #[test]
+    fn real_transform_matches_complex_fft_full_spectrum() {
+        let n = 128;
+        let mut rng = Pcg32::seed(3);
+        let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let rt = RealTransform::new(
+            RealFftPlan::<f64>::new(n, Strategy::DualSelect).unwrap(),
+            Direction::Forward,
+        );
+        let mut buf = SplitBuf::from_f64(&x, &vec![0.0; n]);
+        let mut scratch = SplitBuf::zeroed(n);
+        rt.execute(&mut buf, &mut scratch);
+        let (wr, wi) = dft::naive_dft(&x, &vec![0.0; n], false);
+        let (gr, gi) = buf.to_f64();
+        assert!(rel_l2(&gr, &gi, &wr, &wi) < 1e-12);
+    }
+
+    #[test]
+    fn real_roundtrip_is_identity() {
+        let n = 256;
+        let mut rng = Pcg32::seed(4);
+        let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let fwd = RealTransform::new(
+            RealFftPlan::<f64>::new(n, Strategy::DualSelect).unwrap(),
+            Direction::Forward,
+        );
+        let inv = RealTransform::new(
+            RealFftPlan::<f64>::new(n, Strategy::DualSelect).unwrap(),
+            Direction::Inverse,
+        );
+        let mut buf = SplitBuf::from_f64(&x, &vec![0.0; n]);
+        let mut scratch = SplitBuf::zeroed(n);
+        fwd.execute(&mut buf, &mut scratch);
+        inv.execute(&mut buf, &mut scratch);
+        let (gr, gi) = buf.to_f64();
+        assert!(rel_l2(&gr, &gi, &x, &vec![0.0; n]) < 1e-12);
+    }
+}

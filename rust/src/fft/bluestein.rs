@@ -6,13 +6,18 @@
 //! `X_k = w_k · Σ_j x_j w_j · conj(w)_{k-j}` — a linear convolution of
 //! `x·w` with `conj(w)`, computed on a power-of-two grid ≥ 2n-1 using
 //! the [`super::plan`] machinery.  Every inner transform uses the
-//! dual-select tables, so Theorem 1's |t| ≤ 1 bound covers the whole
-//! pipeline.
+//! selected strategy's tables, so for dual-select Theorem 1's |t| ≤ 1
+//! bound covers the whole pipeline.
+//!
+//! The plan owns its inner power-of-two plans (built once in `new`),
+//! so executing needs no planner and the type slots behind the
+//! [`super::Transform`] facade like every other plan.  The facade
+//! auto-routes non-power-of-two [`super::PlanSpec`] sizes here.
 
 use crate::precision::{Real, SplitBuf};
 
-use super::plan::Planner;
-use super::{Direction, Strategy};
+use super::plan::Plan;
+use super::{Direction, FftError, FftResult, Strategy};
 
 /// Precomputed Bluestein plan for arbitrary `n >= 1`.
 #[derive(Debug)]
@@ -26,19 +31,19 @@ pub struct BluesteinPlan<T: Real> {
     chirp: Vec<(f64, f64)>,
     /// FFT of the zero-padded conjugate chirp kernel (working precision).
     kernel_spec: SplitBuf<T>,
+    /// m-point forward / inverse plans for the convolution.
+    fwd: Plan<T>,
+    inv: Plan<T>,
 }
 
 impl<T: Real> BluesteinPlan<T> {
-    pub fn new(
-        planner: &Planner<T>,
-        n: usize,
-        strategy: Strategy,
-        direction: Direction,
-    ) -> Result<Self, String> {
+    pub fn new(n: usize, strategy: Strategy, direction: Direction) -> FftResult<Self> {
         if n == 0 {
-            return Err("Bluestein size must be >= 1".into());
+            return Err(FftError::InvalidSize { n, reason: "Bluestein size must be >= 1" });
         }
         let m = (2 * n - 1).next_power_of_two().max(2);
+        let fwd = Plan::new(m, strategy, Direction::Forward)?;
+        let inv = Plan::new(m, strategy, Direction::Inverse)?;
         let sign = direction.sign();
 
         // w_k = e^{sign·jπk²/n}, with k² reduced mod 2n for accuracy.
@@ -62,19 +67,23 @@ impl<T: Real> BluesteinPlan<T> {
             }
         }
         let mut scratch = SplitBuf::zeroed(m);
-        planner
-            .plan(m, strategy, Direction::Forward)?
-            .execute(&mut ker, &mut scratch);
+        fwd.execute(&mut ker, &mut scratch);
 
-        Ok(BluesteinPlan { n, m, strategy, direction, chirp, kernel_spec: ker })
+        Ok(BluesteinPlan { n, m, strategy, direction, chirp, kernel_spec: ker, fwd, inv })
+    }
+
+    pub fn strategy(&self) -> Strategy {
+        self.strategy
+    }
+
+    pub fn direction(&self) -> Direction {
+        self.direction
     }
 
     /// Transform a length-n split signal (out-of-place).
-    pub fn execute(&self, planner: &Planner<T>, x: &SplitBuf<T>) -> Result<SplitBuf<T>, String> {
+    pub fn transform(&self, x: &SplitBuf<T>) -> SplitBuf<T> {
         let n = self.n;
-        if x.len() != n {
-            return Err(format!("signal length {} != plan size {n}", x.len()));
-        }
+        assert_eq!(x.len(), n, "buffer length != plan size");
         // a_j = x_j · w_j, zero-padded to m.
         let mut a = SplitBuf::<T>::zeroed(self.m);
         for j in 0..n {
@@ -84,16 +93,12 @@ impl<T: Real> BluesteinPlan<T> {
             a.im[j] = x.im[j].mul_add(wc, x.re[j] * ws);
         }
         let mut scratch = SplitBuf::zeroed(self.m);
-        planner
-            .plan(self.m, self.strategy, Direction::Forward)?
-            .execute(&mut a, &mut scratch);
+        self.fwd.execute(&mut a, &mut scratch);
 
         // Pointwise multiply with the precomputed kernel spectrum.
         let mut prod = SplitBuf::<T>::zeroed(self.m);
         super::convolve::pointwise_mul(&a, &self.kernel_spec, &mut prod);
-        planner
-            .plan(self.m, self.strategy, Direction::Inverse)?
-            .execute(&mut prod, &mut scratch);
+        self.inv.execute(&mut prod, &mut scratch);
 
         // X_k = w_k · y_k, plus 1/n for the inverse direction.
         let mut out = SplitBuf::<T>::zeroed(n);
@@ -108,7 +113,7 @@ impl<T: Real> BluesteinPlan<T> {
             out.re[k] = prod.re[k] * wc - prod.im[k] * ws;
             out.im[k] = prod.im[k].mul_add(wc, prod.re[k] * ws);
         }
-        Ok(out)
+        out
     }
 }
 
@@ -123,10 +128,8 @@ mod tests {
         let mut rng = Pcg32::seed(seed);
         let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
         let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
-        let planner = Planner::<f64>::new();
-        let plan =
-            BluesteinPlan::new(&planner, n, Strategy::DualSelect, Direction::Forward).unwrap();
-        let out = plan.execute(&planner, &SplitBuf::from_f64(&re, &im)).unwrap();
+        let plan = BluesteinPlan::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let out = plan.transform(&SplitBuf::from_f64(&re, &im));
         let (wr, wi) = dft::naive_dft(&re, &im, false);
         let (gr, gi) = out.to_f64();
         rel_l2(&gr, &gi, &wr, &wi)
@@ -146,9 +149,8 @@ mod tests {
         let mut rng = Pcg32::seed(5);
         let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
         let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
-        let planner = Planner::<f64>::new();
-        let bp = BluesteinPlan::new(&planner, n, Strategy::DualSelect, Direction::Forward).unwrap();
-        let out = bp.execute(&planner, &SplitBuf::from_f64(&re, &im)).unwrap();
+        let bp = BluesteinPlan::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let out = bp.transform(&SplitBuf::from_f64(&re, &im));
         let st = super::super::Plan::<f64>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
         let mut buf = SplitBuf::from_f64(&re, &im);
         st.execute_alloc(&mut buf);
@@ -163,11 +165,10 @@ mod tests {
         let mut rng = Pcg32::seed(6);
         let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
         let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
-        let planner = Planner::<f64>::new();
-        let fwd = BluesteinPlan::new(&planner, n, Strategy::DualSelect, Direction::Forward).unwrap();
-        let inv = BluesteinPlan::new(&planner, n, Strategy::DualSelect, Direction::Inverse).unwrap();
-        let mid = fwd.execute(&planner, &SplitBuf::from_f64(&re, &im)).unwrap();
-        let back = inv.execute(&planner, &mid).unwrap();
+        let fwd = BluesteinPlan::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let inv = BluesteinPlan::new(n, Strategy::DualSelect, Direction::Inverse).unwrap();
+        let mid = fwd.transform(&SplitBuf::from_f64(&re, &im));
+        let back = inv.transform(&mid);
         let (gr, gi) = back.to_f64();
         assert!(rel_l2(&gr, &gi, &re, &im) < 1e-11);
     }
@@ -178,10 +179,8 @@ mod tests {
         let mut rng = Pcg32::seed(7);
         let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
         let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
-        let planner = Planner::<f32>::new();
-        let plan =
-            BluesteinPlan::new(&planner, n, Strategy::DualSelect, Direction::Forward).unwrap();
-        let out = plan.execute(&planner, &SplitBuf::from_f64(&re, &im)).unwrap();
+        let plan = BluesteinPlan::<f32>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let out = plan.transform(&SplitBuf::from_f64(&re, &im));
         let (wr, wi) = dft::naive_dft(&re, &im, false);
         let (gr, gi) = out.to_f64();
         assert!(rel_l2(&gr, &gi, &wr, &wi) < 1e-4);
@@ -189,7 +188,9 @@ mod tests {
 
     #[test]
     fn rejects_zero_size() {
-        let planner = Planner::<f64>::new();
-        assert!(BluesteinPlan::new(&planner, 0, Strategy::DualSelect, Direction::Forward).is_err());
+        assert_eq!(
+            BluesteinPlan::<f64>::new(0, Strategy::DualSelect, Direction::Forward).unwrap_err(),
+            FftError::InvalidSize { n: 0, reason: "Bluestein size must be >= 1" }
+        );
     }
 }

@@ -3,8 +3,8 @@
 
 use crate::precision::{Real, SplitBuf};
 
-use super::plan::Planner;
-use super::{Direction, Strategy};
+use super::api::{Planner, Transform};
+use super::{Direction, FftError, FftResult, Strategy};
 
 /// Pointwise complex multiply `a·b` into `out` (working precision).
 pub fn pointwise_mul<T: Real>(a: &SplitBuf<T>, b: &SplitBuf<T>, out: &mut SplitBuf<T>) {
@@ -34,10 +34,10 @@ pub fn circular_convolve<T: Real>(
     strategy: Strategy,
     x: &SplitBuf<T>,
     h: &SplitBuf<T>,
-) -> Result<SplitBuf<T>, String> {
+) -> FftResult<SplitBuf<T>> {
     let n = x.len();
     if h.len() != n {
-        return Err(format!("length mismatch: {} vs {}", n, h.len()));
+        return Err(FftError::LengthMismatch { expected: n, got: h.len() });
     }
     let fwd = planner.plan(n, strategy, Direction::Forward)?;
     let inv = planner.plan(n, strategy, Direction::Inverse)?;
@@ -61,7 +61,7 @@ pub fn linear_convolve<T: Real>(
     strategy: Strategy,
     x: &SplitBuf<T>,
     h: &SplitBuf<T>,
-) -> Result<SplitBuf<T>, String> {
+) -> FftResult<SplitBuf<T>> {
     let out_len = x.len() + h.len() - 1;
     let n = out_len.next_power_of_two().max(2);
     let pad = |src: &SplitBuf<T>| {

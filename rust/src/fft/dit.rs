@@ -10,7 +10,7 @@
 use crate::precision::{Real, SplitBuf};
 
 use super::twiddle::{dit_stage_angles, plain_table, ratio_table};
-use super::{log2_exact, Direction, Strategy};
+use super::{log2_exact, Direction, FftResult, Strategy};
 
 /// Precomputed DIT plan: per-stage twiddle tables.
 #[derive(Clone, Debug)]
@@ -22,7 +22,7 @@ pub struct DitPlan<T: Real> {
 }
 
 impl<T: Real> DitPlan<T> {
-    pub fn new(n: usize, strategy: Strategy, direction: Direction) -> Result<Self, String> {
+    pub fn new(n: usize, strategy: Strategy, direction: Direction) -> FftResult<Self> {
         let m = log2_exact(n)?;
         let mut stages = Vec::with_capacity(m as usize);
         for stage in 0..m {

@@ -1,7 +1,10 @@
 //! The FFT core: all four butterfly strategies from the paper, a
 //! generic-precision radix-2 Stockham autosort transform, an in-place
 //! DIT baseline, a radix-4 variant (paper §VI generality), real-input
-//! transforms, FFT convolution and an FFTW-style planner.
+//! transforms, Bluestein for arbitrary sizes, FFT convolution — and
+//! the [`api`] facade (typed [`FftError`], the [`Transform`] trait,
+//! the [`PlanSpec`] builder and the [`Planner`] cache) that fronts
+//! all of them.
 //!
 //! Strategy cheat sheet (paper Table I, N = 1024):
 //!
@@ -14,6 +17,7 @@
 //!
 //! *after excluding the clamped W^0 entry; the clamp itself stores 1e7.
 
+pub mod api;
 pub mod bluestein;
 pub mod butterfly;
 pub mod convolve;
@@ -24,7 +28,8 @@ pub mod real_fft;
 pub mod stockham;
 pub mod twiddle;
 
-pub use plan::{Plan, Planner};
+pub use api::{Algorithm, FftError, FftResult, PlanSpec, Planner, RealTransform, Transform};
+pub use plan::Plan;
 
 use core::fmt;
 use core::str::FromStr;
@@ -75,16 +80,14 @@ impl Strategy {
 }
 
 impl FromStr for Strategy {
-    type Err = String;
+    type Err = FftError;
     fn from_str(s: &str) -> Result<Self, Self::Err> {
         match s {
             "standard" | "std" => Ok(Strategy::Standard),
             "lf" | "linzer-feig" | "sin" => Ok(Strategy::LinzerFeig),
             "cos" | "cosine" => Ok(Strategy::Cosine),
             "dual" | "dual-select" => Ok(Strategy::DualSelect),
-            other => Err(format!(
-                "unknown strategy {other:?} (expected standard|lf|cos|dual)"
-            )),
+            other => Err(FftError::UnknownStrategy(other.to_string())),
         }
     }
 }
@@ -113,12 +116,12 @@ impl Direction {
     }
 }
 
-/// `log2(n)` for power-of-two `n`, or an error message.
-pub fn log2_exact(n: usize) -> Result<u32, String> {
+/// `log2(n)` for power-of-two `n`, or [`FftError::NonPowerOfTwo`].
+pub fn log2_exact(n: usize) -> FftResult<u32> {
     if n >= 2 && n.is_power_of_two() {
         Ok(n.trailing_zeros())
     } else {
-        Err(format!("FFT size must be a power of two >= 2, got {n}"))
+        Err(FftError::NonPowerOfTwo { n })
     }
 }
 

@@ -1,15 +1,16 @@
-//! FFTW-style planning: precompute every pass's twiddle table once,
-//! reuse across executions.  [`Planner`] caches plans by
-//! `(n, strategy, direction)` behind an `Arc` so the coordinator's
-//! worker threads share them without copying tables.
-
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+//! Precomputed radix-2 Stockham plans: every pass's twiddle table is
+//! built once (in f64, rounded once into `T`) and reused across
+//! executions.
+//!
+//! [`Plan::new`] is the legacy direct-construction path and stays as a
+//! thin shim; new code should describe transforms with
+//! [`super::PlanSpec`] and cache them in the [`super::Planner`] (which
+//! also covers radix-4, DIT, Bluestein and real-input plans).
 
 use crate::precision::{Real, SplitBuf};
 
 use super::twiddle::{pass_angles, plain_table, ratio_table, PlainTable, RatioTable};
-use super::{log2_exact, Direction, Strategy};
+use super::{log2_exact, Direction, FftResult, Strategy};
 
 /// Precomputed table for one Stockham pass.
 #[derive(Clone, Debug)]
@@ -43,7 +44,12 @@ pub struct Plan<T: Real> {
 impl<T: Real> Plan<T> {
     /// Build a plan (computes all twiddle tables in f64, rounds once
     /// into `T`).
-    pub fn new(n: usize, strategy: Strategy, direction: Direction) -> Result<Self, String> {
+    ///
+    /// Legacy shim: prefer `PlanSpec::new(n).strategy(..).build()` —
+    /// it routes non-power-of-two sizes to Bluestein instead of
+    /// erroring and returns the same transform behind the
+    /// [`super::Transform`] trait.
+    pub fn new(n: usize, strategy: Strategy, direction: Direction) -> FftResult<Self> {
         let m = log2_exact(n)?;
         let mut passes = Vec::with_capacity(m as usize);
         for p in 0..m {
@@ -93,52 +99,10 @@ impl<T: Real> Plan<T> {
     }
 }
 
-/// Plan cache keyed by `(n, strategy, direction)`.
-pub struct Planner<T: Real> {
-    cache: Mutex<HashMap<(usize, Strategy, Direction), Arc<Plan<T>>>>,
-}
-
-impl<T: Real> Default for Planner<T> {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl<T: Real> Planner<T> {
-    pub fn new() -> Self {
-        Planner { cache: Mutex::new(HashMap::new()) }
-    }
-
-    /// Fetch or build the plan for `(n, strategy, direction)`.
-    pub fn plan(
-        &self,
-        n: usize,
-        strategy: Strategy,
-        direction: Direction,
-    ) -> Result<Arc<Plan<T>>, String> {
-        let key = (n, strategy, direction);
-        let mut cache = self.cache.lock().unwrap();
-        if let Some(p) = cache.get(&key) {
-            return Ok(p.clone());
-        }
-        let plan = Arc::new(Plan::new(n, strategy, direction)?);
-        cache.insert(key, plan.clone());
-        Ok(plan)
-    }
-
-    /// Number of cached plans.
-    pub fn len(&self) -> usize {
-        self.cache.lock().unwrap().len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fft::FftError;
 
     #[test]
     fn plan_has_log2n_passes() {
@@ -154,9 +118,15 @@ mod tests {
     }
 
     #[test]
-    fn plan_rejects_non_power_of_two() {
-        assert!(Plan::<f32>::new(768, Strategy::DualSelect, Direction::Forward).is_err());
-        assert!(Plan::<f32>::new(0, Strategy::DualSelect, Direction::Forward).is_err());
+    fn plan_rejects_non_power_of_two_with_typed_error() {
+        assert_eq!(
+            Plan::<f32>::new(768, Strategy::DualSelect, Direction::Forward).unwrap_err(),
+            FftError::NonPowerOfTwo { n: 768 }
+        );
+        assert_eq!(
+            Plan::<f32>::new(0, Strategy::DualSelect, Direction::Forward).unwrap_err(),
+            FftError::NonPowerOfTwo { n: 0 }
+        );
     }
 
     #[test]
@@ -166,17 +136,6 @@ mod tests {
             .passes
             .iter()
             .all(|p| matches!(p.kind, PassKind::Plain(_))));
-    }
-
-    #[test]
-    fn planner_caches_and_shares() {
-        let planner = Planner::<f32>::new();
-        let a = planner.plan(256, Strategy::DualSelect, Direction::Forward).unwrap();
-        let b = planner.plan(256, Strategy::DualSelect, Direction::Forward).unwrap();
-        assert!(Arc::ptr_eq(&a, &b));
-        assert_eq!(planner.len(), 1);
-        let _c = planner.plan(256, Strategy::DualSelect, Direction::Inverse).unwrap();
-        assert_eq!(planner.len(), 2);
     }
 
     #[test]

@@ -12,7 +12,7 @@ use crate::precision::{Real, SplitBuf};
 
 use super::butterfly::ratio_twiddle_mul;
 use super::twiddle::{ratio_table, RatioTable};
-use super::{Direction, Strategy};
+use super::{Direction, FftError, FftResult, Strategy};
 
 /// Radix-4 pass tables: one ratio table per twiddle power.
 #[derive(Clone, Debug)]
@@ -33,18 +33,21 @@ pub struct Radix4Plan<T: Real> {
 }
 
 /// `log4(n)` for exact powers of four.
-pub fn log4_exact(n: usize) -> Result<u32, String> {
+pub fn log4_exact(n: usize) -> FftResult<u32> {
     if n >= 4 && n.is_power_of_two() && n.trailing_zeros() % 2 == 0 {
         Ok(n.trailing_zeros() / 2)
     } else {
-        Err(format!("radix-4 FFT size must be a power of four >= 4, got {n}"))
+        Err(FftError::InvalidSize { n, reason: "radix-4 FFT size must be a power of four >= 4" })
     }
 }
 
 impl<T: Real> Radix4Plan<T> {
-    pub fn new(n: usize, strategy: Strategy, direction: Direction) -> Result<Self, String> {
+    pub fn new(n: usize, strategy: Strategy, direction: Direction) -> FftResult<Self> {
         if strategy == Strategy::Standard {
-            return Err("radix-4 plan is ratio-form only (use standard radix-2)".into());
+            return Err(FftError::UnsupportedStrategy {
+                strategy,
+                reason: "radix-4 plan is ratio-form only (use standard radix-2)",
+            });
         }
         let m = log4_exact(n)?;
         let sign = direction.sign();

@@ -1,38 +1,59 @@
-//! Real-input FFT via the N/2 complex packing trick.
+//! Real-input FFT via the N/2 complex packing trick — both directions.
 //!
-//! Pack x[2k] + j·x[2k+1], run an N/2-point complex FFT (any strategy),
-//! then untangle even/odd spectra and combine with one final twiddle
-//! multiply (done in dual-select ratio form, naturally).  Returns the
-//! N/2+1 non-redundant bins of the Hermitian spectrum.
+//! Forward (r2c): pack x[2k] + j·x[2k+1], run an N/2-point complex FFT
+//! (any strategy), then untangle even/odd spectra and combine with one
+//! final twiddle multiply.  Returns the N/2+1 non-redundant bins of
+//! the Hermitian spectrum.
+//!
+//! Inverse (c2r): the exact algebraic inverse — re-tangle the N/2+1
+//! Hermitian bins into the packed spectrum Z, run an N/2-point inverse
+//! complex FFT, and deinterleave the real/imag lanes into the even/odd
+//! samples.  `IFFT_real(FFT_real(x)) == x` up to rounding.
+//!
+//! Behind the facade both directions are reachable as
+//! `PlanSpec::new(n).real_input()` (+ `.inverse()`), executing with
+//! full-spectrum buffer semantics (see [`super::RealTransform`]).
 
 use crate::precision::{Real, SplitBuf};
 
 use super::plan::Plan;
-use super::{Direction, Strategy};
+use super::{Direction, FftError, FftResult, Strategy};
 
-/// Real-to-complex forward FFT plan for even `n`.
+/// Real FFT plan for even `n` (with `n/2` a power of two): r2c forward
+/// and c2r inverse over the same precomputed half-size tables.
 #[derive(Debug)]
 pub struct RealFftPlan<T: Real> {
     pub n: usize,
-    inner: Plan<T>,
+    pub strategy: Strategy,
+    /// Half-size forward complex plan (r2c path).
+    fwd: Plan<T>,
+    /// Half-size inverse complex plan (c2r path).
+    inv: Plan<T>,
     /// Untangle twiddles e^{-2πik/n} for k in [0, n/2], in f64 (applied
     /// in working precision at execute time).
     tw: Vec<(f64, f64)>,
 }
 
 impl<T: Real> RealFftPlan<T> {
-    pub fn new(n: usize, strategy: Strategy) -> Result<Self, String> {
-        if n < 4 || n % 2 != 0 {
-            return Err(format!("real FFT size must be even and >= 4, got {n}"));
+    pub fn new(n: usize, strategy: Strategy) -> FftResult<Self> {
+        // Validate the caller's n in full here: letting the inner
+        // half-size plan reject n/2 would surface a size the caller
+        // never asked for.
+        if n < 4 || n % 2 != 0 || !(n / 2).is_power_of_two() {
+            return Err(FftError::InvalidSize {
+                n,
+                reason: "real FFT size must be >= 4 with n/2 a power of two",
+            });
         }
-        let inner = Plan::new(n / 2, strategy, Direction::Forward)?;
+        let fwd = Plan::new(n / 2, strategy, Direction::Forward)?;
+        let inv = Plan::new(n / 2, strategy, Direction::Inverse)?;
         let tw = (0..=n / 2)
             .map(|k| {
                 let theta = -2.0 * core::f64::consts::PI * k as f64 / n as f64;
                 (theta.cos(), theta.sin())
             })
             .collect();
-        Ok(RealFftPlan { n, inner, tw })
+        Ok(RealFftPlan { n, strategy, fwd, inv, tw })
     }
 
     /// Transform a length-n real signal into n/2+1 spectrum bins.
@@ -48,7 +69,7 @@ impl<T: Real> RealFftPlan<T> {
             buf.im[k] = x[2 * k + 1];
         }
         let mut scratch = SplitBuf::zeroed(half);
-        self.inner.execute(&mut buf, &mut scratch);
+        self.fwd.execute(&mut buf, &mut scratch);
 
         // Untangle: for k in [0, half], with Z the packed spectrum,
         //   E[k] = (Z[k] + conj(Z[half-k])) / 2        (even samples)
@@ -77,6 +98,53 @@ impl<T: Real> RealFftPlan<T> {
             out.im[k] = ei + ti;
         }
         out
+    }
+
+    /// Inverse (c2r): reconstruct the length-n real signal from its
+    /// n/2+1 Hermitian spectrum bins.
+    ///
+    /// For k in [0, half), with X the given half-spectrum:
+    ///   E[k] = (X[k] + conj(X[half-k])) / 2
+    ///   O[k] = (X[k] - conj(X[half-k])) / 2 · e^{+2πik/n}
+    ///   Z[k] = E[k] + j·O[k]
+    /// then z = IFFT_{n/2}(Z) and x[2k] = Re z[k], x[2k+1] = Im z[k].
+    pub fn execute_inverse(&self, spectrum: &SplitBuf<T>) -> FftResult<Vec<T>> {
+        let n = self.n;
+        let half = n / 2;
+        if spectrum.len() != half + 1 {
+            return Err(FftError::LengthMismatch { expected: half + 1, got: spectrum.len() });
+        }
+
+        let mut buf = SplitBuf::<T>::zeroed(half);
+        let h = T::from_f64(0.5);
+        for k in 0..half {
+            let m = half - k; // in [1, half]
+            let (xr_k, xi_k) = (spectrum.re[k], spectrum.im[k]);
+            let (xr_m, xi_m) = (spectrum.re[m], spectrum.im[m]);
+            // E[k] = (X[k] + conj(X[m]))/2, D[k] = (X[k] - conj(X[m]))/2.
+            let er = (xr_k + xr_m) * h;
+            let ei = (xi_k - xi_m) * h;
+            let dr = (xr_k - xr_m) * h;
+            let di = (xi_k + xi_m) * h;
+            // O[k] = D[k] · conj(W^k) with W^k = e^{-2πik/n} = (c, s).
+            let (c, s) = self.tw[k];
+            let wc = T::from_f64(c);
+            let ws = T::from_f64(s);
+            let or_ = wc.mul_add(dr, ws * di);
+            let oi = wc.mul_add(di, -(ws * dr));
+            // Z[k] = E[k] + j·O[k].
+            buf.re[k] = er - oi;
+            buf.im[k] = ei + or_;
+        }
+        let mut scratch = SplitBuf::zeroed(half);
+        self.inv.execute(&mut buf, &mut scratch);
+
+        let mut x = vec![T::zero(); n];
+        for k in 0..half {
+            x[2 * k] = buf.re[k];
+            x[2 * k + 1] = buf.im[k];
+        }
+        Ok(x)
     }
 }
 
@@ -119,8 +187,15 @@ mod tests {
 
     #[test]
     fn rejects_odd_sizes() {
-        assert!(RealFftPlan::<f64>::new(6, Strategy::DualSelect).is_err()); // n/2 = 3 not pow2
-        assert!(RealFftPlan::<f64>::new(3, Strategy::DualSelect).is_err());
+        // n/2 = 3 not pow2: the error names the requested n, not n/2.
+        assert_eq!(
+            RealFftPlan::<f64>::new(6, Strategy::DualSelect).unwrap_err(),
+            FftError::InvalidSize { n: 6, reason: "real FFT size must be >= 4 with n/2 a power of two" }
+        );
+        assert_eq!(
+            RealFftPlan::<f64>::new(3, Strategy::DualSelect).unwrap_err(),
+            FftError::InvalidSize { n: 3, reason: "real FFT size must be >= 4 with n/2 a power of two" }
+        );
     }
 
     #[test]
@@ -134,5 +209,62 @@ mod tests {
         let (wr, wi) = dft::naive_dft(&x, &vec![0.0; n], false);
         let (gr, gi) = out.to_f64();
         assert!(rel_l2(&gr, &gi, &wr[..=n / 2].to_vec(), &wi[..=n / 2].to_vec()) < 1e-5);
+    }
+
+    #[test]
+    fn inverse_roundtrips_forward() {
+        let mut rng = Pcg32::seed(44);
+        for n in [4usize, 8, 64, 512, 2048] {
+            let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let plan = RealFftPlan::<f64>::new(n, Strategy::DualSelect).unwrap();
+            let spec = plan.execute(&x);
+            let back = plan.execute_inverse(&spec).unwrap();
+            let got: Vec<f64> = back.iter().map(|v| v.to_f64()).collect();
+            assert!(
+                rel_l2(&got, &vec![0.0; n], &x, &vec![0.0; n]) < 1e-12,
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn inverse_matches_full_complex_ifft() {
+        // c2r of a Hermitian spectrum equals the real part of the full
+        // complex inverse DFT.
+        let mut rng = Pcg32::seed(45);
+        let n = 64;
+        let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let (fr, fi) = dft::naive_dft(&x, &vec![0.0; n], false);
+        let plan = RealFftPlan::<f64>::new(n, Strategy::DualSelect).unwrap();
+        let mut spec = SplitBuf::<f64>::zeroed(n / 2 + 1);
+        for k in 0..=n / 2 {
+            spec.re[k] = fr[k];
+            spec.im[k] = fi[k];
+        }
+        let back = plan.execute_inverse(&spec).unwrap();
+        assert!(rel_l2(&back, &vec![0.0; n], &x, &vec![0.0; n]) < 1e-12);
+    }
+
+    #[test]
+    fn inverse_rejects_wrong_spectrum_length() {
+        let plan = RealFftPlan::<f64>::new(64, Strategy::DualSelect).unwrap();
+        let bad = SplitBuf::<f64>::zeroed(64);
+        assert_eq!(
+            plan.execute_inverse(&bad).unwrap_err(),
+            FftError::LengthMismatch { expected: 33, got: 64 }
+        );
+    }
+
+    #[test]
+    fn inverse_works_in_f32() {
+        let mut rng = Pcg32::seed(46);
+        let n = 256;
+        let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let plan = RealFftPlan::<f32>::new(n, Strategy::DualSelect).unwrap();
+        let xt: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let spec = plan.execute(&xt);
+        let back = plan.execute_inverse(&spec).unwrap();
+        let got: Vec<f64> = back.iter().map(|v| v.to_f64()).collect();
+        assert!(rel_l2(&got, &vec![0.0; n], &x, &vec![0.0; n]) < 1e-5);
     }
 }

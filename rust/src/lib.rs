@@ -4,27 +4,32 @@
 //! Twiddle Factor Singularities with Bounded Precomputed Ratios"*
 //! (M. A. Bergach, CS.PF 2026).
 //!
-//! The library has three planes:
+//! The library has three planes, all fronted by one facade:
 //!
+//! * **Public API** ([`fft::api`]) — the typed [`fft::FftError`], the
+//!   [`fft::Transform`] trait (one execute shape for every transform
+//!   kind), the [`fft::PlanSpec`] builder and the generalized
+//!   [`fft::Planner`] cache.  Start here:
+//!   `PlanSpec::new(n).strategy(Strategy::DualSelect).build::<f32>()?`.
 //! * **Native FFT core** ([`fft`], [`precision`], [`analysis`]) — a
 //!   generic-precision radix-2/4 Stockham FFT implementing all four
 //!   butterfly strategies the paper compares (standard 10-op,
 //!   Linzer–Feig ÷sin, cosine ÷cos, and the paper's dual-select), over
 //!   `f64`/`f32` hardware floats and bit-exact software
-//!   [`precision::F16`]/[`precision::Bf16`].  This is the measurement
+//!   [`precision::F16`]/[`precision::Bf16`], plus DIT, Bluestein and
+//!   real-input (r2c/c2r) organizations.  This is the measurement
 //!   instrument for the paper's Tables I–II.
-//! * **Serving plane** ([`runtime`], [`coordinator`]) — a PJRT CPU
-//!   client that loads the AOT-compiled JAX/Pallas artifacts
-//!   (`artifacts/*.hlo.txt`, built once by `make artifacts`; Python is
-//!   never on the request path) plus a dynamic-batching request
-//!   coordinator in the style of vLLM's router.
+//! * **Serving plane** ([`runtime`], [`coordinator`]) — a
+//!   dynamic-batching request coordinator in the style of vLLM's
+//!   router, whose workers drive `dyn Transform` batches; the PJRT
+//!   artifact runtime is stubbed offline (see [`runtime`]).
 //! * **Applications** ([`signal`], [`workload`]) — the radar pulse
 //!   compression and spectrogram pipelines the paper motivates, used by
 //!   the examples and benches.
 //!
-//! See `DESIGN.md` for the experiment index mapping every paper table
-//! to its regenerating bench, and `EXPERIMENTS.md` for measured-vs-paper
-//! results.
+//! See `DESIGN.md` (repo root) for the facade diagram, the error
+//! taxonomy, migration notes from the pre-facade API, and the
+//! experiment index mapping paper tables to benches.
 
 pub mod analysis;
 pub mod bench_util;

@@ -2,10 +2,12 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-
-use crate::fft::Strategy;
+use crate::fft::{FftError, FftResult, Strategy};
 use crate::util::json::Json;
+
+fn manifest_err(msg: impl Into<String>) -> FftError {
+    FftError::Backend(msg.into())
+}
 
 /// What computation an artifact implements.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -25,12 +27,12 @@ impl ArtifactKind {
         }
     }
 
-    fn parse(s: &str) -> Result<Self> {
+    fn parse(s: &str) -> FftResult<Self> {
         Ok(match s {
             "fft" => ArtifactKind::Fft,
             "matched_filter" => ArtifactKind::MatchedFilter,
             "power_spectrum" => ArtifactKind::PowerSpectrum,
-            other => bail!("unknown artifact kind {other:?}"),
+            other => return Err(manifest_err(format!("unknown artifact kind {other:?}"))),
         })
     }
 }
@@ -72,16 +74,16 @@ pub struct Manifest {
     pub artifacts: Vec<Artifact>,
 }
 
-fn parse_shapes(v: &Json) -> Result<Vec<Vec<usize>>> {
+fn parse_shapes(v: &Json) -> FftResult<Vec<Vec<usize>>> {
     v.as_arr()
-        .ok_or_else(|| anyhow!("shapes not an array"))?
+        .ok_or_else(|| manifest_err("shapes not an array"))?
         .iter()
         .map(|shape| {
             shape
                 .as_arr()
-                .ok_or_else(|| anyhow!("shape not an array"))?
+                .ok_or_else(|| manifest_err("shape not an array"))?
                 .iter()
-                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .map(|d| d.as_usize().ok_or_else(|| manifest_err("bad dim")))
                 .collect()
         })
         .collect()
@@ -89,28 +91,33 @@ fn parse_shapes(v: &Json) -> Result<Vec<Vec<usize>>> {
 
 impl Manifest {
     /// Load `<dir>/manifest.json`.
-    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+    pub fn load(dir: impl AsRef<Path>) -> FftResult<Manifest> {
         let dir = dir.as_ref().to_path_buf();
         let path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
-        let root = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            manifest_err(format!("reading {path:?} — run `make artifacts` first: {e}"))
+        })?;
+        let root = Json::parse(&text).map_err(|e| manifest_err(format!("{path:?}: {e}")))?;
 
         if root.get("format").and_then(Json::as_str) != Some("hlo-text") {
-            bail!("unsupported manifest format (want hlo-text)");
+            return Err(manifest_err("unsupported manifest format (want hlo-text)"));
         }
 
         let mut artifacts = Vec::new();
         for a in root
             .get("artifacts")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("manifest missing artifacts[]"))?
+            .ok_or_else(|| manifest_err("manifest missing artifacts[]"))?
         {
-            let get_str = |k: &str| -> Result<&str> {
-                a.get(k).and_then(Json::as_str).ok_or_else(|| anyhow!("missing {k}"))
+            let get_str = |k: &str| -> FftResult<&str> {
+                a.get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| manifest_err(format!("missing {k}")))
             };
-            let get_usize = |k: &str| -> Result<usize> {
-                a.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("missing {k}"))
+            let get_usize = |k: &str| -> FftResult<usize> {
+                a.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| manifest_err(format!("missing {k}")))
             };
             let file = get_str("file")?;
             let art = Artifact {
@@ -119,20 +126,18 @@ impl Manifest {
                 kind: ArtifactKind::parse(get_str("kind")?)?,
                 n: get_usize("n")?,
                 batch: get_usize("batch")?,
-                strategy: get_str("strategy")?
-                    .parse::<Strategy>()
-                    .map_err(|e| anyhow!(e))?,
+                strategy: get_str("strategy")?.parse::<Strategy>()?,
                 inverse: a
                     .get("inverse")
                     .and_then(Json::as_bool)
-                    .ok_or_else(|| anyhow!("missing inverse"))?,
-                inputs: parse_shapes(a.get("inputs").ok_or_else(|| anyhow!("missing inputs"))?)?,
+                    .ok_or_else(|| manifest_err("missing inverse"))?,
+                inputs: parse_shapes(a.get("inputs").ok_or_else(|| manifest_err("missing inputs"))?)?,
                 outputs: parse_shapes(
-                    a.get("outputs").ok_or_else(|| anyhow!("missing outputs"))?,
+                    a.get("outputs").ok_or_else(|| manifest_err("missing outputs"))?,
                 )?,
             };
             if !art.path.exists() {
-                bail!("artifact file missing: {:?}", art.path);
+                return Err(manifest_err(format!("artifact file missing: {:?}", art.path)));
             }
             artifacts.push(art);
         }
@@ -210,8 +215,9 @@ mod tests {
     }
 
     #[test]
-    fn missing_dir_is_a_clean_error() {
+    fn missing_dir_is_a_clean_typed_error() {
         let err = Manifest::load("/nonexistent/path").unwrap_err();
+        assert!(matches!(err, FftError::Backend(_)));
         assert!(err.to_string().contains("make artifacts"));
     }
 

@@ -1,11 +1,13 @@
-//! Split-format signal ↔ `xla::Literal` conversion.
+//! Split-format batch buffers for the runtime boundary.
 //!
 //! The artifacts take two f32 `[batch, n]` inputs (re, im) and return a
 //! tuple of f32 `[batch, n]` outputs — matching the split layout the
 //! native FFT core uses, so no interleaving ever happens on the hot
-//! path.
+//! path.  (The `xla::Literal` conversions live with the PJRT client
+//! and return when the `xla` runtime is re-enabled; see
+//! [`super::client`].)
 
-use anyhow::{bail, Result};
+use crate::fft::{FftError, FftResult};
 
 /// A batch of split-format f32 frames, row-major `[batch, n]`.
 #[derive(Clone, Debug, Default)]
@@ -22,15 +24,16 @@ impl BatchF32 {
     }
 
     /// Gather `frames` (each a split f64 pair of length n) into a batch.
-    pub fn from_frames(frames: &[(&[f64], &[f64])]) -> Result<Self> {
+    pub fn from_frames(frames: &[(&[f64], &[f64])]) -> FftResult<Self> {
         if frames.is_empty() {
-            bail!("empty batch");
+            return Err(FftError::InvalidArgument("empty batch".into()));
         }
         let n = frames[0].0.len();
         let mut out = BatchF32::zeroed(frames.len(), n);
         for (i, (re, im)) in frames.iter().enumerate() {
             if re.len() != n || im.len() != n {
-                bail!("inconsistent frame lengths in batch");
+                let got = if re.len() != n { re.len() } else { im.len() };
+                return Err(FftError::LengthMismatch { expected: n, got });
             }
             for j in 0..n {
                 out.re[i * n + j] = re[j] as f32;
@@ -43,24 +46,6 @@ impl BatchF32 {
     /// View of row `i`.
     pub fn row(&self, i: usize) -> (&[f32], &[f32]) {
         (&self.re[i * self.n..(i + 1) * self.n], &self.im[i * self.n..(i + 1) * self.n])
-    }
-
-    /// Convert to the two input literals `[batch, n]`.
-    pub fn to_literals(&self) -> Result<(xla::Literal, xla::Literal)> {
-        let dims = [self.batch as i64, self.n as i64];
-        let re = xla::Literal::vec1(&self.re).reshape(&dims)?;
-        let im = xla::Literal::vec1(&self.im).reshape(&dims)?;
-        Ok((re, im))
-    }
-
-    /// Rebuild from two output literals.
-    pub fn from_literals(re: &xla::Literal, im: &xla::Literal, batch: usize, n: usize) -> Result<Self> {
-        let rv = re.to_vec::<f32>()?;
-        let iv = im.to_vec::<f32>()?;
-        if rv.len() != batch * n || iv.len() != batch * n {
-            bail!("literal size mismatch: {} vs {}", rv.len(), batch * n);
-        }
-        Ok(BatchF32 { batch, n, re: rv, im: iv })
     }
 }
 
@@ -88,19 +73,5 @@ mod tests {
         let b = (vec![3.0f64], vec![0.0f64]);
         assert!(BatchF32::from_frames(&[(&a.0, &a.1), (&b.0, &b.1)]).is_err());
         assert!(BatchF32::from_frames(&[]).is_err());
-    }
-
-    #[test]
-    fn literal_roundtrip() {
-        let batch = BatchF32 {
-            batch: 2,
-            n: 3,
-            re: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
-            im: vec![-1.0, -2.0, -3.0, -4.0, -5.0, -6.0],
-        };
-        let (lr, li) = batch.to_literals().unwrap();
-        let back = BatchF32::from_literals(&lr, &li, 2, 3).unwrap();
-        assert_eq!(back.re, batch.re);
-        assert_eq!(back.im, batch.im);
     }
 }

@@ -1,11 +1,18 @@
-//! The serving runtime: loads the AOT-compiled JAX/Pallas artifacts
-//! (HLO text, produced once by `make artifacts`) and executes them on
-//! the PJRT CPU client via the `xla` crate.  Python is never on this
-//! path.
+//! The serving runtime: artifact manifest discovery plus the PJRT
+//! execution layer for the AOT-compiled JAX/Pallas artifacts (HLO
+//! text, produced once by `make artifacts`; Python is never on the
+//! request path).
 //!
 //! * [`artifacts`] — `manifest.json` discovery and typed descriptors
-//! * [`literal`] — split-format ↔ `xla::Literal` conversion
-//! * [`client`] — PJRT client wrapper + compiled-executable cache
+//!   (pure Rust, always available)
+//! * [`literal`] — split-format batch buffers shared with the PJRT
+//!   boundary
+//! * [`client`] — the PJRT engine.  The actual XLA bindings (`xla`
+//!   crate) are not vendored in this offline build, so [`Engine::new`]
+//!   returns [`crate::fft::FftError::Backend`] and callers fall back
+//!   to the native core (every integration test and the serving demo
+//!   already handle that path).  See DESIGN.md §Runtime for how to
+//!   re-enable the real client.
 
 pub mod artifacts;
 pub mod client;

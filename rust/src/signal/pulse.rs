@@ -4,9 +4,16 @@
 //! chirp in the frequency domain: `y = IFFT(FFT(x) · conj(H))`.  The
 //! echo delay appears as a sharp peak; pulse-compression gain is the
 //! ratio of the peak to the pre-compression SNR.
+//!
+//! [`MatchedFilter`] holds its forward/inverse plans (fetched from the
+//! shared [`Planner`] at build time) and implements
+//! [`Transform`], so the coordinator's workers batch-execute it
+//! exactly like a plain FFT.
+
+use std::sync::Arc;
 
 use crate::fft::convolve::pointwise_mul_conj;
-use crate::fft::{Direction, Planner, Strategy};
+use crate::fft::{Direction, FftError, FftResult, Planner, Strategy, Transform};
 use crate::precision::{Real, SplitBuf};
 
 /// A pulse-compression processor with a precomputed reference spectrum.
@@ -16,6 +23,8 @@ pub struct MatchedFilter<T: Real> {
     pub strategy: Strategy,
     /// FFT of the zero-padded reference pulse (working precision).
     spectrum: SplitBuf<T>,
+    fwd: Arc<dyn Transform<T>>,
+    inv: Arc<dyn Transform<T>>,
 }
 
 impl<T: Real> MatchedFilter<T> {
@@ -26,10 +35,16 @@ impl<T: Real> MatchedFilter<T> {
         n: usize,
         pulse_re: &[f64],
         pulse_im: &[f64],
-    ) -> Result<Self, String> {
+    ) -> FftResult<Self> {
         if pulse_re.len() > n {
-            return Err(format!("pulse ({}) longer than frame ({n})", pulse_re.len()));
+            return Err(FftError::InvalidArgument(format!(
+                "pulse ({}) longer than frame ({n})",
+                pulse_re.len()
+            )));
         }
+        let fwd = planner.plan(n, strategy, Direction::Forward)?;
+        let inv = planner.plan(n, strategy, Direction::Inverse)?;
+
         let mut padded_re = vec![0.0; n];
         let mut padded_im = vec![0.0; n];
         padded_re[..pulse_re.len()].copy_from_slice(pulse_re);
@@ -37,32 +52,37 @@ impl<T: Real> MatchedFilter<T> {
 
         let mut spectrum = SplitBuf::<T>::from_f64(&padded_re, &padded_im);
         let mut scratch = SplitBuf::zeroed(n);
-        planner
-            .plan(n, strategy, Direction::Forward)?
-            .execute(&mut spectrum, &mut scratch);
-        Ok(MatchedFilter { n, strategy, spectrum })
+        fwd.execute(&mut spectrum, &mut scratch);
+        Ok(MatchedFilter { n, strategy, spectrum, fwd, inv })
     }
 
     /// Compress one frame in place: `x ← IFFT(FFT(x)·conj(H))`.
-    pub fn compress(
-        &self,
-        planner: &Planner<T>,
-        x: &mut SplitBuf<T>,
-        scratch: &mut SplitBuf<T>,
-    ) -> Result<(), String> {
+    pub fn compress(&self, x: &mut SplitBuf<T>, scratch: &mut SplitBuf<T>) -> FftResult<()> {
         if x.len() != self.n {
-            return Err(format!("frame length {} != {}", x.len(), self.n));
+            return Err(FftError::LengthMismatch { expected: self.n, got: x.len() });
         }
-        planner
-            .plan(self.n, self.strategy, Direction::Forward)?
-            .execute(x, scratch);
+        self.fwd.execute(x, scratch);
         let mut prod = SplitBuf::zeroed(self.n);
         pointwise_mul_conj(x, &self.spectrum, &mut prod);
         *x = prod;
-        planner
-            .plan(self.n, self.strategy, Direction::Inverse)?
-            .execute(x, scratch);
+        self.inv.execute(x, scratch);
         Ok(())
+    }
+}
+
+impl<T: Real> Transform<T> for MatchedFilter<T> {
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn strategy(&self) -> Strategy {
+        self.strategy
+    }
+    fn direction(&self) -> Direction {
+        Direction::Forward
+    }
+    fn execute(&self, buf: &mut SplitBuf<T>, scratch: &mut SplitBuf<T>) {
+        assert_eq!(buf.len(), self.n, "buffer length != plan size");
+        self.compress(buf, scratch).expect("length checked above");
     }
 }
 
@@ -141,7 +161,7 @@ mod tests {
         let mf = MatchedFilter::new(&planner, Strategy::DualSelect, n, &cr, &ci).unwrap();
         let mut x = SplitBuf::from_f64(&re, &im);
         let mut scratch = SplitBuf::zeroed(n);
-        mf.compress(&planner, &mut x, &mut scratch).unwrap();
+        mf.compress(&mut x, &mut scratch).unwrap();
         let res = analyze_peak(&x, 8);
         assert_eq!(res.peak_index, delay);
         // Pulse-compression gain: peak well above the floor.
@@ -163,7 +183,7 @@ mod tests {
             MatchedFilter::new(&planner, Strategy::DualSelect, n, &cr, &ci).unwrap();
         let mut x = SplitBuf::from_f64(&re, &im);
         let mut scratch = SplitBuf::zeroed(n);
-        mf.compress(&planner, &mut x, &mut scratch).unwrap();
+        mf.compress(&mut x, &mut scratch).unwrap();
         let res = analyze_peak(&x, 8);
         assert_eq!(res.peak_index, delay);
     }
@@ -172,11 +192,35 @@ mod tests {
     fn rejects_mismatched_lengths() {
         let planner = Planner::<f64>::new();
         let (cr, ci) = default_chirp(64);
-        assert!(MatchedFilter::new(&planner, Strategy::DualSelect, 32, &cr, &ci).is_err());
+        let err = MatchedFilter::new(&planner, Strategy::DualSelect, 32, &cr, &ci).unwrap_err();
+        assert!(matches!(err, FftError::InvalidArgument(_)), "{err}");
+        assert!(err.to_string().contains("pulse (64) longer than frame (32)"), "{err}");
         let mf = MatchedFilter::new(&planner, Strategy::DualSelect, 128, &cr, &ci).unwrap();
         let mut x = SplitBuf::<f64>::zeroed(64);
         let mut s = SplitBuf::zeroed(64);
-        assert!(mf.compress(&planner, &mut x, &mut s).is_err());
+        assert_eq!(
+            mf.compress(&mut x, &mut s).unwrap_err(),
+            FftError::LengthMismatch { expected: 128, got: 64 }
+        );
+    }
+
+    #[test]
+    fn matched_filter_is_a_transform() {
+        // The serving plane drives it through the facade.
+        let n = 512;
+        let delay = 77;
+        let (re, im) = echo_frame(n, 128, delay, 5.0, 74);
+        let planner = Planner::<f32>::new();
+        let (cr, ci) = default_chirp(128);
+        let mf = MatchedFilter::new(&planner, Strategy::DualSelect, n, &cr, &ci).unwrap();
+        let t: &dyn Transform<f32> = &mf;
+        assert_eq!(t.len(), n);
+        let mut bufs = vec![SplitBuf::<f32>::from_f64(&re, &im); 3];
+        let mut scratch = SplitBuf::zeroed(n);
+        t.execute_batch(&mut bufs, &mut scratch);
+        for b in &bufs {
+            assert_eq!(analyze_peak(b, 8).peak_index, delay);
+        }
     }
 
     #[test]
@@ -191,7 +235,7 @@ mod tests {
             let mf = MatchedFilter::new(&planner, Strategy::DualSelect, n, &cr, &ci).unwrap();
             let mut x = SplitBuf::from_f64(&re, &im);
             let mut scratch = SplitBuf::zeroed(n);
-            mf.compress(&planner, &mut x, &mut scratch).unwrap();
+            mf.compress(&mut x, &mut scratch).unwrap();
             let res = analyze_peak(&x, pulse_len);
             gains.push(res.peak / res.floor);
         }

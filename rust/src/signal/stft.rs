@@ -1,6 +1,6 @@
 //! Short-time Fourier transform / spectrogram on top of the plan API.
 
-use crate::fft::{Direction, Planner, Strategy};
+use crate::fft::{Direction, FftError, FftResult, Planner, Strategy, Transform};
 use crate::precision::{Real, SplitBuf};
 
 use super::window::Window;
@@ -48,13 +48,13 @@ pub fn stft<T: Real>(
     cfg: &StftConfig,
     re: &[f64],
     im: &[f64],
-) -> Result<Spectrogram, String> {
+) -> FftResult<Spectrogram> {
     if cfg.hop == 0 {
-        return Err("hop must be positive".into());
+        return Err(FftError::InvalidArgument("hop must be positive".into()));
     }
     let n = re.len();
     if n < cfg.frame {
-        return Err(format!("signal ({n}) shorter than frame ({})", cfg.frame));
+        return Err(FftError::LengthMismatch { expected: cfg.frame, got: n });
     }
     let plan = planner.plan(cfg.frame, cfg.strategy, Direction::Forward)?;
     let win = cfg.window.sample(cfg.frame);

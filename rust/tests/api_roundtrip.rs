@@ -1,0 +1,180 @@
+//! Property tests of the `fft::api` facade: forward∘inverse ≈ identity
+//! through the `PlanSpec` builder, across all four strategies, every
+//! algorithm (Stockham radix-2, radix-4, DIT, Bluestein) and real
+//! input, in f32 and f64 — plus typed-error pinning for the paths the
+//! facade rejects.
+
+use fmafft::fft::{Algorithm, FftError, PlanSpec, Strategy, Transform};
+use fmafft::precision::{Real, SplitBuf};
+use fmafft::util::metrics::rel_l2;
+use fmafft::util::prng::Pcg32;
+use fmafft::util::quickcheck::{check, pow2, signal, QcConfig};
+
+/// Forward-then-inverse through the builder; returns rel-L2 distance
+/// from the precision-quantized input.
+fn roundtrip_err<T: Real>(spec: PlanSpec, re: &[f64], im: &[f64]) -> f64 {
+    let fwd = spec.build::<T>().unwrap();
+    let inv = spec.inverse().build::<T>().unwrap();
+    let mut buf = SplitBuf::<T>::from_f64(re, im);
+    let mut scratch = SplitBuf::zeroed(fwd.len());
+    fwd.execute(&mut buf, &mut scratch);
+    inv.execute(&mut buf, &mut scratch);
+    let (gr, gi) = buf.to_f64();
+    // Compare against what the transform actually saw (the input
+    // rounded once into T).
+    let (qr, qi) = SplitBuf::<T>::from_f64(re, im).to_f64();
+    rel_l2(&gr, &gi, &qr, &qi)
+}
+
+/// Single-rounding input quantization keeps signals representable, so
+/// the roundtrip tolerance only reflects transform error.
+fn tol<T: Real>(m: u32) -> f64 {
+    // ~ m passes each way, generous constant.
+    40.0 * m as f64 * T::EPSILON
+}
+
+#[test]
+fn prop_roundtrip_all_strategies_stockham() {
+    check("spec-roundtrip-strategies", QcConfig { cases: 24, ..Default::default() }, |rng| {
+        let n = pow2(rng, 1, 10);
+        let m = n.trailing_zeros();
+        let (re, im) = signal(rng, n);
+        for strategy in Strategy::ALL {
+            // LF/Cosine carry clamp damage (~CLAMP_EPS per pass) that
+            // dwarfs f64 rounding — the paper's point; budget for it.
+            let clamped = matches!(strategy, Strategy::LinzerFeig | Strategy::Cosine);
+            let spec = PlanSpec::new(n).strategy(strategy);
+            let e64 = roundtrip_err::<f64>(spec, &re, &im);
+            let lim64 = if clamped { 5e-5 } else { tol::<f64>(m) };
+            assert!(e64 < lim64, "f64 n={n} {strategy:?} err={e64:.3e}");
+            let e32 = roundtrip_err::<f32>(spec, &re, &im);
+            let lim32 = tol::<f32>(m).max(if clamped { 5e-5 } else { 0.0 });
+            assert!(e32 < lim32, "f32 n={n} {strategy:?} err={e32:.3e}");
+        }
+    });
+}
+
+#[test]
+fn prop_roundtrip_radix4_and_dit() {
+    check("spec-roundtrip-algorithms", QcConfig { cases: 16, ..Default::default() }, |rng| {
+        let n = 4usize.pow(1 + rng.below(4) as u32); // 4..256, power of 4
+        let m = n.trailing_zeros();
+        let (re, im) = signal(rng, n);
+        for alg in [Algorithm::Radix4, Algorithm::Dit] {
+            let spec = PlanSpec::new(n).algorithm(alg);
+            let e64 = roundtrip_err::<f64>(spec, &re, &im);
+            assert!(e64 < tol::<f64>(m), "f64 n={n} {alg:?} err={e64:.3e}");
+            let e32 = roundtrip_err::<f32>(spec, &re, &im);
+            assert!(e32 < tol::<f32>(m), "f32 n={n} {alg:?} err={e32:.3e}");
+        }
+    });
+}
+
+#[test]
+fn prop_roundtrip_bluestein_arbitrary_sizes() {
+    check("spec-roundtrip-bluestein", QcConfig { cases: 16, ..Default::default() }, |rng| {
+        let n = 1 + rng.below(300); // arbitrary, including primes
+        let (re, im) = signal(rng, n);
+        // Auto routes non-powers-of-two to Bluestein; pin it explicitly
+        // too so both entry points are exercised.
+        let spec = if rng.below(2) == 0 {
+            PlanSpec::new(n)
+        } else {
+            PlanSpec::new(n).bluestein()
+        };
+        let e64 = roundtrip_err::<f64>(spec, &re, &im);
+        assert!(e64 < 1e-9, "f64 n={n} err={e64:.3e}");
+        let e32 = roundtrip_err::<f32>(spec, &re, &im);
+        // Bluestein runs three m-point transforms per direction.
+        assert!(e32 < 5e-3, "f32 n={n} err={e32:.3e}");
+    });
+}
+
+#[test]
+fn prop_roundtrip_real_input() {
+    check("spec-roundtrip-real", QcConfig { cases: 16, ..Default::default() }, |rng| {
+        let n = pow2(rng, 2, 11);
+        let m = n.trailing_zeros();
+        let (re, _) = signal(rng, n);
+        let im = vec![0.0; n];
+        let spec = PlanSpec::new(n).real_input();
+        let e64 = roundtrip_err::<f64>(spec, &re, &im);
+        assert!(e64 < tol::<f64>(m), "f64 n={n} err={e64:.3e}");
+        let e32 = roundtrip_err::<f32>(spec, &re, &im);
+        assert!(e32 < tol::<f32>(m), "f32 n={n} err={e32:.3e}");
+    });
+}
+
+#[test]
+fn prop_forward_matches_oracle_through_facade() {
+    check("spec-forward-oracle", QcConfig { cases: 16, ..Default::default() }, |rng| {
+        // Mix of pow2 and arbitrary sizes: the facade must agree with
+        // the O(N²) DFT either way.
+        let n = if rng.below(2) == 0 { pow2(rng, 1, 8) } else { 1 + rng.below(150) };
+        let (re, im) = signal(rng, n);
+        let t = PlanSpec::new(n).build::<f64>().unwrap();
+        let mut buf = SplitBuf::from_f64(&re, &im);
+        t.execute_alloc(&mut buf);
+        let (wr, wi) = fmafft::dft::naive_dft(&re, &im, false);
+        let (gr, gi) = buf.to_f64();
+        assert!(rel_l2(&gr, &gi, &wr, &wi) < 1e-9, "n={n}");
+    });
+}
+
+#[test]
+fn facade_error_pinning() {
+    // The exact typed errors the builder must produce.
+    assert_eq!(
+        PlanSpec::new(100).stockham().build::<f32>().unwrap_err(),
+        FftError::NonPowerOfTwo { n: 100 }
+    );
+    assert_eq!(
+        PlanSpec::new(0).build::<f32>().unwrap_err(),
+        FftError::InvalidSize { n: 0, reason: "Bluestein size must be >= 1" }
+    );
+    assert!(matches!(
+        PlanSpec::new(32).radix4().build::<f64>().unwrap_err(),
+        FftError::InvalidSize { n: 32, .. }
+    ));
+    assert!(matches!(
+        PlanSpec::new(64).strategy(Strategy::Standard).radix4().build::<f64>().unwrap_err(),
+        FftError::UnsupportedStrategy { strategy: Strategy::Standard, .. }
+    ));
+    assert!(matches!(
+        PlanSpec::new(6).real_input().build::<f64>().unwrap_err(),
+        FftError::InvalidSize { n: 6, .. } // n/2 = 3 not a power of two
+    ));
+}
+
+#[test]
+fn planner_serves_mixed_specs_across_threads() {
+    use fmafft::fft::Planner;
+    use std::sync::Arc;
+    let planner = Arc::new(Planner::<f32>::new());
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let planner = planner.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Pcg32::seed(t);
+            for _ in 0..16 {
+                let spec = match rng.below(4) {
+                    0 => PlanSpec::new(64),
+                    1 => PlanSpec::new(64).radix4(),
+                    2 => PlanSpec::new(60), // Bluestein
+                    _ => PlanSpec::new(64).real_input(),
+                };
+                let tr = planner.get(spec).unwrap();
+                let mut buf = SplitBuf::<f32>::zeroed(tr.len());
+                buf.re[0] = 1.0;
+                tr.execute_alloc(&mut buf);
+                // Impulse -> flat spectrum, in every organization.
+                assert!((buf.re[1].to_f64() - 1.0).abs() < 1e-3);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    // One cache entry per distinct spec, shared across threads.
+    assert_eq!(planner.len(), 4);
+}
