@@ -1,11 +1,13 @@
-//! Quickstart: describe an FFT with `PlanSpec`, build it, run it,
-//! check it, and see why dual-select matters in half precision.
+//! Quickstart: describe an FFT with `PlanSpec`, build it, run it over
+//! an arena view with pooled scratch (the allocation-free execution
+//! shape), check it, and see why dual-select matters in half
+//! precision.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use fmafft::analysis::report::sci;
 use fmafft::dft;
-use fmafft::fft::{PlanSpec, Strategy, Transform};
+use fmafft::fft::{FrameArena, PlanSpec, Scratch, Strategy, Transform};
 use fmafft::precision::{SplitBuf, F16};
 use fmafft::util::metrics::rel_l2;
 use fmafft::util::prng::Pcg32;
@@ -25,37 +27,49 @@ fn main() {
         .collect();
     let im = vec![0.0; n];
 
-    // 2. Describe + build + execute a forward FFT with the paper's
-    //    dual-select butterfly (f32 working precision).  The same
-    //    builder covers inverse, radix-4, DIT, Bluestein (any size!)
-    //    and real input — see `PlanSpec`.
+    // 2. Describe + build a forward FFT with the paper's dual-select
+    //    butterfly (f32 working precision).  The same builder covers
+    //    inverse, radix-4, DIT, Bluestein (any size!) and real input —
+    //    see `PlanSpec`.
     let fft = PlanSpec::new(n)
         .strategy(Strategy::DualSelect)
         .build::<f32>()
         .unwrap();
-    let mut buf = SplitBuf::<f32>::from_f64(&re, &im);
-    fft.execute_alloc(&mut buf);
+
+    //    Execute over an arena view: the frame is deserialized into
+    //    planar storage in one pass, and the pooled scratch makes
+    //    repeated executes allocation-free (this is exactly the shape
+    //    the serving plane runs at scale — see `Transform::execute_many`).
+    let mut arena = FrameArena::<f32>::new(n);
+    arena.push_frame_f64(&re, &im);
+    let mut scratch = Scratch::new();
+    fft.execute_many(arena.view_mut(), &mut scratch);
+    let (sre, sim) = arena.frame(0);
 
     // 3. The two tones appear at bins 50 and 300.
     let mag =
-        |k: usize| ((buf.re[k] as f64).powi(2) + (buf.im[k] as f64).powi(2)).sqrt();
+        |k: usize| ((sre[k] as f64).powi(2) + (sim[k] as f64).powi(2)).sqrt();
     let mut peaks: Vec<usize> = (1..n / 2).collect();
     peaks.sort_by(|&a, &b| mag(b).partial_cmp(&mag(a)).unwrap());
     println!("top spectral peaks: bins {} and {} (expected 50 and 300)", peaks[0], peaks[1]);
 
     // 4. Accuracy vs the O(N^2) f64 DFT oracle.
     let (wr, wi) = dft::naive_dft(&re, &im, false);
-    let (gr, gi) = buf.to_f64();
+    let gr: Vec<f64> = sre.iter().map(|&x| x as f64).collect();
+    let gi: Vec<f64> = sim.iter().map(|&x| x as f64).collect();
     println!("f32 dual-select forward error: {}", sci(rel_l2(&gr, &gi, &wr, &wi)));
 
-    // 5. The paper's point, in three lines: the same transform in TRUE
+    // 5. The paper's point, in a few lines: the same transform in TRUE
     //    half precision (software binary16, every op rounds to fp16).
+    //    One pooled scratch serves both fp16 transforms.
+    let mut scratch16 = Scratch::<F16>::new();
+
     let mut b16 = SplitBuf::<F16>::from_f64(&re, &im);
     PlanSpec::new(n)
         .strategy(Strategy::DualSelect)
         .build::<F16>()
         .unwrap()
-        .execute_alloc(&mut b16);
+        .execute_frame(&mut b16.re, &mut b16.im, &mut scratch16);
     let (g16r, g16i) = b16.to_f64();
     println!("fp16 dual-select forward error: {}", sci(rel_l2(&g16r, &g16i, &wr, &wi)));
 
@@ -64,7 +78,7 @@ fn main() {
         .strategy(Strategy::LinzerFeig)
         .build::<F16>()
         .unwrap()
-        .execute_alloc(&mut lf16);
+        .execute_frame(&mut lf16.re, &mut lf16.im, &mut scratch16);
     let (lr, li) = lf16.to_f64();
     let lf_err = rel_l2(&lr, &li, &wr, &wi);
     println!(

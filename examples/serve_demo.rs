@@ -100,10 +100,13 @@ fn main() {
             continue;
         }
         completed += 1;
+        // Zero-copy: these are borrowed views into the batch's shared
+        // result arena, not per-request Vecs.
+        let (rre, rim) = (resp.re(), resp.im());
         let peak = (0..n)
             .max_by(|&a, &b| {
-                (resp.re[a] * resp.re[a] + resp.im[a] * resp.im[a])
-                    .partial_cmp(&(resp.re[b] * resp.re[b] + resp.im[b] * resp.im[b]))
+                (rre[a] * rre[a] + rim[a] * rim[a])
+                    .partial_cmp(&(rre[b] * rre[b] + rim[b] * rim[b]))
                     .unwrap()
             })
             .unwrap();

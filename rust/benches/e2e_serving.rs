@@ -1,14 +1,15 @@
 //! End-to-end serving benchmark: the dynamic-batching coordinator
 //! under an open-loop Poisson radar workload, on both backends —
 //! latency/throughput plus the batching-overhead checkpoint from
-//! DESIGN.md §Perf.
+//! DESIGN.md §Perf.  Results are also written to `BENCH_serving.json`
+//! (the cross-PR perf trajectory).
 //!
 //! Run: `cargo bench --bench e2e_serving`
 //! (PJRT section requires `make artifacts`; skipped otherwise.)
 
 use std::time::{Duration, Instant};
 
-use fmafft::bench_util::header;
+use fmafft::bench_util::{header, JsonReport};
 use fmafft::coordinator::batcher::BatchPolicy;
 use fmafft::coordinator::{FftOp, Server, ServerConfig};
 use fmafft::workload::{ArrivalTrace, SignalKind, TraceConfig, WorkloadGen};
@@ -20,6 +21,7 @@ struct RunStats {
     p50_us: u64,
     p99_us: u64,
     mean_batch: f64,
+    occupancy: f64,
 }
 
 fn drive(server: &Server, n: usize, rate: f64, count: usize, kind: SignalKind) -> RunStats {
@@ -52,26 +54,40 @@ fn drive(server: &Server, n: usize, rate: f64, count: usize, kind: SignalKind) -
         }
     }
     let wall = t0.elapsed().as_secs_f64();
-    let m = server.metrics();
+    let m = server.snapshot();
     RunStats {
         completed,
         rejected,
         wall,
-        p50_us: m.latency_quantile_us(0.5),
-        p99_us: m.latency_quantile_us(0.99),
-        mean_batch: m.mean_batch(),
+        p50_us: m.p50_us,
+        p99_us: m.p99_us,
+        mean_batch: m.mean_batch,
+        occupancy: m.occupancy,
     }
 }
 
-fn report(label: &str, s: &RunStats) {
+fn report(label: &str, s: &RunStats, json: &mut JsonReport) {
     println!(
-        "{label:<40} {:>6} ok {:>4} rej  {:>8.0} req/s  p50 {:>6}us  p99 {:>7}us  mean_batch {:.1}",
+        "{label:<40} {:>6} ok {:>4} rej  {:>8.0} req/s  p50 {:>6}us  p99 {:>7}us  mean_batch {:.1}  occ {:.2}",
         s.completed,
         s.rejected,
         s.completed as f64 / s.wall,
         s.p50_us,
         s.p99_us,
-        s.mean_batch
+        s.mean_batch,
+        s.occupancy,
+    );
+    json.push_metrics(
+        label,
+        &[
+            ("completed", s.completed as f64),
+            ("rejected", s.rejected as f64),
+            ("req_per_s", s.completed as f64 / s.wall),
+            ("p50_us", s.p50_us as f64),
+            ("p99_us", s.p99_us as f64),
+            ("mean_batch", s.mean_batch),
+            ("occupancy", s.occupancy),
+        ],
     );
 }
 
@@ -81,6 +97,7 @@ fn main() {
     let n = 1024;
     let count = if quick { 500 } else { 2000 };
     let kind = SignalKind::RadarReturn { pulse_len: 256, snr_db: 0.0 };
+    let mut json = JsonReport::new("serving");
 
     // Native backend: rate sweep.
     for rate in [1000.0, 5000.0, 20000.0] {
@@ -89,7 +106,7 @@ fn main() {
         cfg.policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(300) };
         let server = Server::start(cfg).unwrap();
         let stats = drive(&server, n, rate, count, kind);
-        report(&format!("native rate={rate}/s"), &stats);
+        report(&format!("native rate={rate}/s"), &stats, &mut json);
         server.shutdown();
     }
 
@@ -109,7 +126,7 @@ fn main() {
         };
         let server = Server::start(cfg).unwrap();
         let stats = drive(&server, n, 10_000.0, count, kind);
-        report(&format!("  max_batch={max_batch}"), &stats);
+        report(&format!("  max_batch={max_batch}"), &stats, &mut json);
         if max_batch == 1 {
             base_p50 = stats.p50_us;
         } else if max_batch == 32 {
@@ -137,10 +154,15 @@ fn main() {
                 }
             };
             let stats = drive(&server, n, rate, count.min(1000), kind);
-            report(&format!("  pjrt rate={rate}/s"), &stats);
+            report(&format!("  pjrt rate={rate}/s"), &stats, &mut json);
             server.shutdown();
         }
     } else {
         println!("\npjrt backend skipped: run `make artifacts` first");
+    }
+
+    match json.write(".") {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\ncould not write BENCH_serving.json: {e}"),
     }
 }

@@ -1,16 +1,18 @@
 //! End-to-end transform throughput across strategies, sizes and
 //! algorithms (Stockham radix-2, radix-4, DIT) — the whole-transform
 //! version of the zero-overhead claim plus the native-core performance
-//! numbers recorded in EXPERIMENTS.md §Perf.
+//! numbers recorded in EXPERIMENTS.md §Perf.  Also measures the batch
+//! view path (`execute_into` over a [`FrameArena`]) that the serving
+//! plane runs, and writes the results to `BENCH_fft.json`.
 //!
 //! Run: `cargo bench --bench fft_throughput`
 
 use std::hint::black_box;
 
-use fmafft::bench_util::{bench, config_from_env, header};
+use fmafft::bench_util::{bench, config_from_env, header, JsonReport};
 use fmafft::fft::dit::DitPlan;
 use fmafft::fft::radix4::Radix4Plan;
-use fmafft::fft::{Direction, Plan, Strategy};
+use fmafft::fft::{Direction, FrameArena, Plan, Scratch, Strategy, Transform};
 use fmafft::precision::SplitBuf;
 use fmafft::util::prng::Pcg32;
 
@@ -21,9 +23,22 @@ fn signal(n: usize, seed: u64) -> SplitBuf<f32> {
     SplitBuf::from_f64(&re, &im)
 }
 
+/// A pristine arena of `frames` random frames.
+fn arena(n: usize, frames: usize, seed: u64) -> FrameArena<f32> {
+    let mut rng = Pcg32::seed(seed);
+    let mut a = FrameArena::with_capacity(n, frames);
+    for _ in 0..frames {
+        let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        a.push_frame_f64(&re, &im);
+    }
+    a
+}
+
 fn main() {
     header("FFT transform throughput (native core, f32)");
     let cfg = config_from_env();
+    let mut json = JsonReport::new("fft");
 
     // Strategy comparison at N=1024 (zero-overhead at transform level).
     let mut per_strategy = Vec::new();
@@ -44,6 +59,7 @@ fn main() {
             r.report(),
             r.throughput(1024.0) / 1e6
         );
+        json.push_result(&r);
         per_strategy.push((strategy, r.mean_ns));
     }
     let lf = per_strategy.iter().find(|(s, _)| *s == Strategy::LinzerFeig).unwrap().1;
@@ -68,6 +84,53 @@ fn main() {
         let mpts = r.throughput(n as f64) / 1e6;
         let ns_per_pt = r.mean_ns / n as f64;
         println!("{}  ({mpts:.2} Mpt/s, {ns_per_pt:.2} ns/pt)", r.report());
+        json.push_result(&r);
+    }
+    println!();
+
+    // Batch view path: execute_into over a planar arena — src is
+    // pristine, dst + pooled scratch are reused every iteration (the
+    // serving plane's allocation-free shape).
+    {
+        let n = 1024;
+        let frames = 32;
+        let plan = Plan::<f32>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let src = arena(n, frames, 6);
+        let mut dst = FrameArena::with_capacity(n, frames);
+        for _ in 0..frames {
+            dst.push_zeroed();
+        }
+        let mut scratch = Scratch::new();
+        let r = bench(&format!("execute_into arena b={frames} n={n} dual"), &cfg, || {
+            plan.execute_into(src.view(), dst.view_mut(), &mut scratch);
+            black_box(&dst.frame(0).0[0]);
+        });
+        let frames_per_s = r.per_second() * frames as f64;
+        println!(
+            "{}  ({:.0} frames/s, {:.2} Mpt/s, scratch allocs {})",
+            r.report(),
+            frames_per_s,
+            r.throughput((n * frames) as f64) / 1e6,
+            scratch.misses(),
+        );
+        json.push_result(&r);
+
+        // The per-frame legacy adapter on the same workload, for the
+        // batching-benefit delta.
+        let mut bufs: Vec<SplitBuf<f32>> =
+            (0..frames).map(|f| src.frame_to_split(f)).collect();
+        let mut sbuf = SplitBuf::zeroed(n);
+        let r2 = bench(&format!("execute_batch vecs b={frames} n={n} dual"), &cfg, || {
+            for (f, buf) in bufs.iter_mut().enumerate() {
+                let (re, im) = src.frame(f);
+                buf.re.copy_from_slice(re);
+                buf.im.copy_from_slice(im);
+            }
+            plan.execute_batch(&mut bufs, &mut sbuf);
+            black_box(&bufs[0].re[0]);
+        });
+        println!("{}", r2.report());
+        json.push_result(&r2);
     }
     println!();
 
@@ -86,6 +149,7 @@ fn main() {
             black_box(&buf.re[0]);
         });
         println!("{}  ({:.2} Mpt/s)", r.report(), r.throughput(n as f64) / 1e6);
+        json.push_result(&r);
 
         let dit = DitPlan::<f32>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
         let mut buf2 = input.clone();
@@ -96,5 +160,11 @@ fn main() {
             black_box(&buf2.re[0]);
         });
         println!("{}  ({:.2} Mpt/s)", r.report(), r.throughput(n as f64) / 1e6);
+        json.push_result(&r);
+    }
+
+    match json.write(".") {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\ncould not write BENCH_fft.json: {e}"),
     }
 }

@@ -1,7 +1,11 @@
 //! Criterion-lite: a small benchmarking harness (criterion is not
 //! available offline).  Warmup + timed samples + robust statistics,
-//! with ns/op and throughput reporting.
+//! with ns/op and throughput reporting — plus machine-readable output
+//! ([`BenchResult::to_json`], [`JsonReport`]) so the perf trajectory
+//! is tracked across PRs as `BENCH_<suite>.json` files.
 
+use std::io::Write;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 /// Benchmark configuration.
@@ -61,6 +65,111 @@ impl BenchResult {
             "{:<44} {:>12.0} ns/iter  (median {:.0}, p99 {:.0}, sd {:.0}, n={})",
             self.name, self.mean_ns, self.median_ns, self.p99_ns, self.stddev_ns, self.samples
         )
+    }
+
+    /// One JSON object with every statistic (machine-readable form of
+    /// [`BenchResult::report`]).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"name\":{},\"samples\":{},\"mean_ns\":{},\"median_ns\":{},\"p99_ns\":{},\"stddev_ns\":{},\"per_second\":{}}}",
+            json_escape(&self.name),
+            self.samples,
+            json_num(self.mean_ns),
+            json_num(self.median_ns),
+            json_num(self.p99_ns),
+            json_num(self.stddev_ns),
+            json_num(self.per_second()),
+        )
+    }
+}
+
+/// Quote + escape a string for JSON.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Format an f64 as a JSON number (JSON has no NaN/Inf — map to null).
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Collects bench results and free-form metric rows, then writes one
+/// `BENCH_<suite>.json` file — the cross-PR perf trajectory record.
+///
+/// ```text
+/// {"suite":"fft","results":[
+///   {"name":"stockham r2 dual n=1024","mean_ns":...},
+///   {"name":"serving rate=5000","completed":..., "p99_us":...}
+/// ]}
+/// ```
+#[derive(Clone, Debug)]
+pub struct JsonReport {
+    suite: String,
+    entries: Vec<String>,
+}
+
+impl JsonReport {
+    pub fn new(suite: &str) -> Self {
+        JsonReport { suite: suite.to_string(), entries: Vec::new() }
+    }
+
+    /// Append a harness result.
+    pub fn push_result(&mut self, r: &BenchResult) {
+        self.entries.push(r.to_json());
+    }
+
+    /// Append a named row of scalar metrics (for benches that measure
+    /// things other than ns/iter, e.g. serving latency quantiles).
+    pub fn push_metrics(&mut self, name: &str, fields: &[(&str, f64)]) {
+        let mut obj = format!("{{\"name\":{}", json_escape(name));
+        for (k, v) in fields {
+            obj.push_str(&format!(",{}:{}", json_escape(k), json_num(*v)));
+        }
+        obj.push('}');
+        self.entries.push(obj);
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The complete document.
+    pub fn render(&self) -> String {
+        format!(
+            "{{\"suite\":{},\"results\":[{}]}}\n",
+            json_escape(&self.suite),
+            self.entries.join(",")
+        )
+    }
+
+    /// Write `BENCH_<suite>.json` into `dir`; returns the path.
+    pub fn write(&self, dir: impl AsRef<Path>) -> std::io::Result<PathBuf> {
+        let path = dir.as_ref().join(format!("BENCH_{}.json", self.suite));
+        let mut f = std::fs::File::create(&path)?;
+        f.write_all(self.render().as_bytes())?;
+        Ok(path)
     }
 }
 
@@ -144,6 +253,48 @@ mod tests {
         assert!(r.mean_ns > 0.0);
         assert!(r.median_ns <= r.p99_ns * 1.001);
         assert!(r.per_second() > 0.0);
+    }
+
+    #[test]
+    fn json_roundtrips_through_parser() {
+        let r = BenchResult {
+            name: "stockham \"r2\" n=1024".into(),
+            samples: 12,
+            mean_ns: 1500.5,
+            median_ns: 1400.0,
+            p99_ns: 2000.0,
+            stddev_ns: 100.25,
+        };
+        let v = crate::util::json::Json::parse(&r.to_json()).expect("valid json");
+        assert_eq!(v.get("name").unwrap().as_str(), Some("stockham \"r2\" n=1024"));
+        assert_eq!(v.get("samples").unwrap().as_usize(), Some(12));
+        assert_eq!(v.get("mean_ns").unwrap().as_f64(), Some(1500.5));
+
+        let mut rep = JsonReport::new("fft");
+        rep.push_result(&r);
+        rep.push_metrics("serving rate=5000", &[("p99_us", 750.0), ("occupancy", 0.82)]);
+        assert_eq!(rep.len(), 2);
+        let doc = crate::util::json::Json::parse(rep.render().trim()).expect("valid doc");
+        assert_eq!(doc.get("suite").unwrap().as_str(), Some("fft"));
+        let results = doc.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[1].get("occupancy").unwrap().as_f64(), Some(0.82));
+    }
+
+    #[test]
+    fn json_report_writes_bench_file() {
+        let dir = std::env::temp_dir().join("fmafft_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rep = JsonReport::new("testsuite");
+        rep.push_metrics("row", &[("x", 1.0), ("bad", f64::NAN)]);
+        let path = rep.write(&dir).unwrap();
+        assert!(path.ends_with("BENCH_testsuite.json"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::util::json::Json::parse(text.trim()).unwrap();
+        let row = &doc.get("results").unwrap().as_arr().unwrap()[0];
+        assert_eq!(row.get("x").unwrap().as_f64(), Some(1.0));
+        assert_eq!(row.get("bad"), Some(&crate::util::json::Json::Null));
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

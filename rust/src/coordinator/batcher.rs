@@ -3,11 +3,21 @@
 //! `max_wait` — the size-or-deadline policy serving systems like vLLM
 //! use.  Pure data structure (no threads) so the policy is unit
 //! testable; the server drives it from its intake loop.
+//!
+//! Since the zero-copy redesign the batcher IS the intake
+//! deserializer: `push` moves each request's f64 payload straight into
+//! the batch's planar [`FrameArena`] (one rounding pass into f32) and
+//! keeps only the per-request [`RequestMeta`].  Arenas come from a
+//! shared [`ArenaPool`], so a warm serving plane opens batches without
+//! touching the allocator.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use super::request::{FftRequest, PlanKey};
+use crate::fft::{ArenaPool, FrameArena};
+
+use super::request::{FftRequest, PlanKey, RequestMeta};
 
 /// Batching configuration.
 #[derive(Clone, Copy, Debug)]
@@ -22,36 +32,57 @@ impl Default for BatchPolicy {
     }
 }
 
-/// A flushed batch ready for a worker.
+/// A flushed batch ready for a worker: the frames, planar and
+/// contiguous in `arena` (frame `i` belongs to `meta[i]`), plus the
+/// per-request reply/accounting state.
 #[derive(Debug)]
 pub struct Batch {
     pub key: PlanKey,
-    pub requests: Vec<FftRequest>,
+    pub arena: FrameArena<f32>,
+    pub meta: Vec<RequestMeta>,
     /// When the oldest request entered the batcher.
     pub opened: Instant,
+}
+
+impl Batch {
+    /// Number of requests in the batch.
+    pub fn len(&self) -> usize {
+        self.meta.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.meta.is_empty()
+    }
 }
 
 /// Accumulates requests per key and decides flushes.
 #[derive(Debug)]
 pub struct Batcher {
     policy: BatchPolicy,
+    pool: Arc<ArenaPool<f32>>,
     pending: HashMap<PlanKey, Batch>,
 }
 
 impl Batcher {
-    pub fn new(policy: BatchPolicy) -> Self {
-        Batcher { policy, pending: HashMap::new() }
+    pub fn new(policy: BatchPolicy, pool: Arc<ArenaPool<f32>>) -> Self {
+        Batcher { policy, pool, pending: HashMap::new() }
     }
 
-    /// Add a request; returns a full batch if this push filled one.
+    /// Add a request — its payload is deserialized into the batch
+    /// arena here; returns a full batch if this push filled one.
     pub fn push(&mut self, req: FftRequest, now: Instant) -> Option<Batch> {
         let key = req.key;
-        let batch = self
-            .pending
-            .entry(key)
-            .or_insert_with(|| Batch { key, requests: Vec::new(), opened: now });
-        batch.requests.push(req);
-        if batch.requests.len() >= self.policy.max_batch {
+        let max_batch = self.policy.max_batch;
+        let pool = &self.pool;
+        let batch = self.pending.entry(key).or_insert_with(|| {
+            let mut arena = pool.take(key.n);
+            arena.reserve_frames(max_batch);
+            Batch { key, arena, meta: Vec::with_capacity(max_batch), opened: now }
+        });
+        let (re, im, meta) = req.into_parts();
+        batch.arena.push_frame_f64(&re, &im);
+        batch.meta.push(meta);
+        if batch.meta.len() >= self.policy.max_batch {
             self.pending.remove(&key)
         } else {
             None
@@ -90,16 +121,20 @@ impl Batcher {
     }
 
     pub fn pending_requests(&self) -> usize {
-        self.pending.values().map(|b| b.requests.len()).sum()
+        self.pending.values().map(|b| b.meta.len()).sum()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fft::Strategy;
     use crate::coordinator::request::FftOp;
+    use crate::fft::Strategy;
     use std::sync::mpsc;
+
+    fn batcher(policy: BatchPolicy) -> Batcher {
+        Batcher::new(policy, Arc::new(ArenaPool::new()))
+    }
 
     fn key(n: usize, op: FftOp) -> PlanKey {
         PlanKey { n, op, strategy: Strategy::DualSelect }
@@ -111,7 +146,7 @@ mod tests {
             FftRequest {
                 id,
                 key: k,
-                re: vec![0.0; k.n],
+                re: vec![id as f64; k.n],
                 im: vec![0.0; k.n],
                 reply: tx,
                 submitted: Instant::now(),
@@ -123,7 +158,7 @@ mod tests {
 
     #[test]
     fn fills_batch_at_max() {
-        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(10) });
+        let mut b = batcher(BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(10) });
         let k = key(64, FftOp::Forward);
         let now = Instant::now();
         let mut keep = Vec::new();
@@ -134,13 +169,30 @@ mod tests {
         }
         let (r, _rx) = req(2, k);
         let full = b.push(r, now).expect("third push fills");
-        assert_eq!(full.requests.len(), 3);
+        assert_eq!(full.len(), 3);
         assert_eq!(b.pending_requests(), 0);
     }
 
     #[test]
+    fn push_deserializes_payload_into_arena() {
+        let mut b = batcher(BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(10) });
+        let k = key(8, FftOp::Forward);
+        let now = Instant::now();
+        let (r1, _x1) = req(7, k);
+        assert!(b.push(r1, now).is_none());
+        let (r2, _x2) = req(9, k);
+        let full = b.push(r2, now).unwrap();
+        assert_eq!(full.arena.frames(), 2);
+        assert_eq!(full.arena.frame_len(), 8);
+        // Frame i belongs to meta[i]; payload rounded to f32.
+        assert_eq!(full.meta[0].id, 7);
+        assert_eq!(full.arena.frame(0).0, &[7.0f32; 8]);
+        assert_eq!(full.arena.frame(1).0, &[9.0f32; 8]);
+    }
+
+    #[test]
     fn different_keys_do_not_mix() {
-        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(10) });
+        let mut b = batcher(BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(10) });
         let now = Instant::now();
         let (r1, _x1) = req(1, key(64, FftOp::Forward));
         let (r2, _x2) = req(2, key(64, FftOp::Inverse));
@@ -150,12 +202,12 @@ mod tests {
         let (r3, _x3) = req(3, key(64, FftOp::Forward));
         let full = b.push(r3, now).unwrap();
         assert_eq!(full.key.op, FftOp::Forward);
-        assert_eq!(full.requests.len(), 2);
+        assert_eq!(full.len(), 2);
     }
 
     #[test]
     fn deadline_flush() {
-        let mut b = Batcher::new(BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(5) });
+        let mut b = batcher(BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(5) });
         let t0 = Instant::now();
         let (r, _x) = req(1, key(64, FftOp::Forward));
         b.push(r, t0);
@@ -167,7 +219,7 @@ mod tests {
 
     #[test]
     fn next_deadline_counts_down() {
-        let mut b = Batcher::new(BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(10) });
+        let mut b = batcher(BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(10) });
         let t0 = Instant::now();
         assert!(b.next_deadline(t0).is_none());
         let (r, _x) = req(1, key(64, FftOp::Forward));
@@ -178,7 +230,7 @@ mod tests {
 
     #[test]
     fn flush_all_drains() {
-        let mut b = Batcher::new(BatchPolicy::default());
+        let mut b = batcher(BatchPolicy::default());
         let now = Instant::now();
         let (r1, _x1) = req(1, key(64, FftOp::Forward));
         let (r2, _x2) = req(2, key(128, FftOp::Forward));
@@ -191,7 +243,7 @@ mod tests {
 
     #[test]
     fn no_request_lost_under_mixed_flushes() {
-        let mut b = Batcher::new(BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) });
+        let mut b = batcher(BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) });
         let t0 = Instant::now();
         let mut seen = 0usize;
         let mut keep = Vec::new();
@@ -200,13 +252,14 @@ mod tests {
             let (r, rx) = req(id, k);
             keep.push(rx);
             if let Some(full) = b.push(r, t0) {
-                seen += full.requests.len();
+                assert_eq!(full.arena.frames(), full.len());
+                seen += full.len();
             }
         }
         for batch in b.flush_expired(t0 + Duration::from_millis(2)) {
-            seen += batch.requests.len();
+            seen += batch.len();
         }
-        seen += b.flush_all().iter().map(|x| x.requests.len()).sum::<usize>();
+        seen += b.flush_all().iter().map(|x| x.len()).sum::<usize>();
         assert_eq!(seen, 37);
     }
 }

@@ -16,6 +16,11 @@ pub struct Metrics {
     pub failed: AtomicU64,
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
+    /// Σ `max_batch` over flushed batches — the denominator of
+    /// [`Metrics::occupancy`] (how full batches run vs the policy cap).
+    pub batch_capacity: AtomicU64,
+    /// Gauge: requests currently waiting in open (unflushed) batches.
+    queue_depth: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS],
 }
 
@@ -30,9 +35,23 @@ impl Metrics {
         self.latency_buckets[bucket].fetch_add(1, Ordering::Relaxed);
     }
 
-    pub fn record_batch(&self, size: usize) {
+    /// Record one flushed batch of `size` requests under a policy cap
+    /// of `max_batch`.
+    pub fn record_batch(&self, size: usize, max_batch: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
+        self.batch_capacity
+            .fetch_add(max_batch.max(1) as u64, Ordering::Relaxed);
+    }
+
+    /// Update the queue-depth gauge (intake thread, after every event).
+    pub fn set_queue_depth(&self, depth: usize) {
+        self.queue_depth.store(depth as u64, Ordering::Relaxed);
+    }
+
+    /// Requests currently waiting in open batches.
+    pub fn queue_depth(&self) -> u64 {
+        self.queue_depth.load(Ordering::Relaxed)
     }
 
     /// Mean batch size so far.
@@ -42,6 +61,16 @@ impl Metrics {
             return 0.0;
         }
         self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// Batch fill ratio in `[0, 1]`: served requests over the summed
+    /// policy caps of their batches (1.0 = every batch flushed full).
+    pub fn occupancy(&self) -> f64 {
+        let cap = self.batch_capacity.load(Ordering::Relaxed);
+        if cap == 0 {
+            return 0.0;
+        }
+        self.batched_requests.load(Ordering::Relaxed) as f64 / cap as f64
     }
 
     /// Approximate latency quantile from the histogram (upper bucket
@@ -67,20 +96,58 @@ impl Metrics {
         1u64 << BUCKETS
     }
 
+    /// Point-in-time copy of every counter and gauge — what the
+    /// server surfaces to operators and benches serialize to JSON.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            mean_batch: self.mean_batch(),
+            occupancy: self.occupancy(),
+            queue_depth: self.queue_depth(),
+            p50_us: self.latency_quantile_us(0.5),
+            p99_us: self.latency_quantile_us(0.99),
+        }
+    }
+
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
+        let s = self.snapshot();
         format!(
-            "submitted={} completed={} rejected={} failed={} batches={} mean_batch={:.2} p50={}us p99={}us",
-            self.submitted.load(Ordering::Relaxed),
-            self.completed.load(Ordering::Relaxed),
-            self.rejected.load(Ordering::Relaxed),
-            self.failed.load(Ordering::Relaxed),
-            self.batches.load(Ordering::Relaxed),
-            self.mean_batch(),
-            self.latency_quantile_us(0.5),
-            self.latency_quantile_us(0.99),
+            "submitted={} completed={} rejected={} failed={} batches={} mean_batch={:.2} occupancy={:.2} queue_depth={} p50={}us p99={}us",
+            s.submitted,
+            s.completed,
+            s.rejected,
+            s.failed,
+            s.batches,
+            s.mean_batch,
+            s.occupancy,
+            s.queue_depth,
+            s.p50_us,
+            s.p99_us,
         )
     }
+}
+
+/// A consistent-enough copy of the serving metrics (each field is read
+/// with relaxed ordering; totals may be mid-update by one request).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub failed: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    /// Batch fill ratio vs the policy `max_batch`, in `[0, 1]`.
+    pub occupancy: f64,
+    /// Requests waiting in open batches when the snapshot was taken.
+    pub queue_depth: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
 }
 
 #[cfg(test)]
@@ -109,21 +176,61 @@ mod tests {
         let m = Metrics::new();
         assert_eq!(m.latency_quantile_us(0.99), 0);
         assert_eq!(m.mean_batch(), 0.0);
+        assert_eq!(m.occupancy(), 0.0);
+        assert_eq!(m.queue_depth(), 0);
     }
 
     #[test]
     fn mean_batch_tracks() {
         let m = Metrics::new();
-        m.record_batch(32);
-        m.record_batch(16);
+        m.record_batch(32, 32);
+        m.record_batch(16, 32);
         assert_eq!(m.mean_batch(), 24.0);
+    }
+
+    #[test]
+    fn occupancy_is_fill_ratio_vs_policy_cap() {
+        let m = Metrics::new();
+        m.record_batch(32, 32); // full
+        m.record_batch(16, 32); // half
+        assert_eq!(m.occupancy(), 0.75);
+    }
+
+    #[test]
+    fn queue_depth_gauge_overwrites() {
+        let m = Metrics::new();
+        m.set_queue_depth(7);
+        assert_eq!(m.queue_depth(), 7);
+        m.set_queue_depth(2);
+        assert_eq!(m.queue_depth(), 2);
+        assert_eq!(m.snapshot().queue_depth, 2);
     }
 
     #[test]
     fn summary_is_parseable() {
         let m = Metrics::new();
         m.submitted.fetch_add(5, Ordering::Relaxed);
+        m.record_batch(8, 16);
+        m.set_queue_depth(3);
         let s = m.summary();
         assert!(s.contains("submitted=5"));
+        assert!(s.contains("occupancy=0.50"));
+        assert!(s.contains("queue_depth=3"));
+    }
+
+    #[test]
+    fn snapshot_mirrors_counters() {
+        let m = Metrics::new();
+        m.submitted.fetch_add(4, Ordering::Relaxed);
+        m.completed.fetch_add(3, Ordering::Relaxed);
+        m.record_batch(3, 4);
+        m.record_latency(Duration::from_micros(100));
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 4);
+        assert_eq!(s.completed, 3);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.mean_batch, 3.0);
+        assert_eq!(s.occupancy, 0.75);
+        assert!(s.p50_us > 0);
     }
 }

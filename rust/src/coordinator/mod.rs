@@ -23,5 +23,6 @@ pub mod metrics;
 pub mod request;
 pub mod server;
 
-pub use request::{FftOp, FftRequest, FftResponse, PlanKey};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use request::{FftOp, FftRequest, FftResponse, PlanKey, RequestMeta};
 pub use server::{Backend, Server, ServerConfig};

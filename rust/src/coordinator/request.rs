@@ -1,9 +1,15 @@
 //! Request/response types for the serving plane.
+//!
+//! Responses are zero-copy: a completed batch's [`FrameArena`] is
+//! shared behind an `Arc` and every response holds (arena, frame
+//! index) instead of per-request `Vec`s.  When all clients drop their
+//! responses the arena's refcount falls to 1 and the server's
+//! [`crate::fft::ArenaPool`] reclaims the allocation.
 
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
-use crate::fft::{FftError, Strategy};
+use crate::fft::{FftError, FrameArena, Strategy};
 
 /// What the request asks for.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -23,7 +29,9 @@ pub struct PlanKey {
     pub strategy: Strategy,
 }
 
-/// A client request: one split-format frame.
+/// A client request: one split-format frame.  The payload travels to
+/// the intake thread, which deserializes it straight into the batch
+/// arena (f64 → f32, one pass) and keeps only the [`RequestMeta`].
 #[derive(Debug)]
 pub struct FftRequest {
     pub id: u64,
@@ -39,12 +47,31 @@ pub struct FftRequest {
     pub permit: Option<super::backpressure::Permit>,
 }
 
-/// The completed response.
+/// What remains of a request once its payload has moved into the
+/// batch arena: identity, reply channel, accounting.
+#[derive(Debug)]
+pub struct RequestMeta {
+    pub id: u64,
+    pub reply: mpsc::Sender<FftResponse>,
+    pub submitted: Instant,
+    pub permit: Option<super::backpressure::Permit>,
+}
+
+impl FftRequest {
+    /// Split into (payload, meta) — the intake path.
+    pub fn into_parts(self) -> (Vec<f64>, Vec<f64>, RequestMeta) {
+        let FftRequest { id, re, im, reply, submitted, permit, .. } = self;
+        (re, im, RequestMeta { id, reply, submitted, permit })
+    }
+}
+
+/// The completed response: a zero-copy window into the batch's shared
+/// result arena (empty on error).
 #[derive(Clone, Debug)]
 pub struct FftResponse {
     pub id: u64,
-    pub re: Vec<f32>,
-    pub im: Vec<f32>,
+    /// The batch's result arena + this request's frame index.
+    payload: Option<(Arc<FrameArena<f32>>, usize)>,
     /// Size of the batch this request was served in.
     pub batch_size: usize,
     /// Queue + service time.
@@ -54,6 +81,45 @@ pub struct FftResponse {
 }
 
 impl FftResponse {
+    /// A successful response viewing frame `frame` of `arena`.
+    pub fn ok(
+        id: u64,
+        arena: Arc<FrameArena<f32>>,
+        frame: usize,
+        batch_size: usize,
+        latency: std::time::Duration,
+    ) -> Self {
+        debug_assert!(frame < arena.frames());
+        FftResponse { id, payload: Some((arena, frame)), batch_size, latency, error: None }
+    }
+
+    /// A failed response.
+    pub fn err(
+        id: u64,
+        error: FftError,
+        batch_size: usize,
+        latency: std::time::Duration,
+    ) -> Self {
+        FftResponse { id, payload: None, batch_size, latency, error: Some(error) }
+    }
+
+    /// Real plane of the result frame (empty if the request failed).
+    pub fn re(&self) -> &[f32] {
+        match &self.payload {
+            Some((arena, frame)) => arena.frame(*frame).0,
+            None => &[],
+        }
+    }
+
+    /// Imaginary plane of the result frame (empty if the request
+    /// failed).
+    pub fn im(&self) -> &[f32] {
+        match &self.payload {
+            Some((arena, frame)) => arena.frame(*frame).1,
+            None => &[],
+        }
+    }
+
     pub fn is_ok(&self) -> bool {
         self.error.is_none()
     }
@@ -78,10 +144,41 @@ mod tests {
     }
 
     #[test]
-    fn response_ok_flag() {
-        let ok = FftResponse { id: 1, re: vec![], im: vec![], batch_size: 1, latency: Default::default(), error: None };
+    fn response_ok_flag_and_zero_copy_views() {
+        let mut arena = FrameArena::<f32>::new(3);
+        arena.push_frame_f64(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]);
+        arena.push_frame_f64(&[7.0, 8.0, 9.0], &[0.5, 1.5, 2.5]);
+        let shared = Arc::new(arena);
+        let ok = FftResponse::ok(1, shared.clone(), 1, 2, Default::default());
         assert!(ok.is_ok());
-        let bad = FftResponse { error: Some(FftError::Unsupported("x")), ..ok.clone() };
+        assert_eq!(ok.re(), &[7.0, 8.0, 9.0]);
+        assert_eq!(ok.im(), &[0.5, 1.5, 2.5]);
+        // Two responses share one arena — no copies.
+        let ok0 = FftResponse::ok(0, shared.clone(), 0, 2, Default::default());
+        assert_eq!(ok0.re(), &[1.0, 2.0, 3.0]);
+        assert_eq!(Arc::strong_count(&shared), 3);
+
+        let bad = FftResponse::err(2, FftError::Unsupported("x"), 2, Default::default());
         assert!(!bad.is_ok());
+        assert!(bad.re().is_empty());
+        assert!(bad.im().is_empty());
+    }
+
+    #[test]
+    fn request_into_parts_keeps_accounting() {
+        let (tx, _rx) = mpsc::channel();
+        let req = FftRequest {
+            id: 42,
+            key: PlanKey { n: 4, op: FftOp::Forward, strategy: Strategy::DualSelect },
+            re: vec![1.0; 4],
+            im: vec![2.0; 4],
+            reply: tx,
+            submitted: Instant::now(),
+            permit: None,
+        };
+        let (re, im, meta) = req.into_parts();
+        assert_eq!(re, vec![1.0; 4]);
+        assert_eq!(im, vec![2.0; 4]);
+        assert_eq!(meta.id, 42);
     }
 }

@@ -1,19 +1,24 @@
 //! The serving loop: intake thread (batching) + worker pool (compute),
 //! over either the native Rust FFT core or the PJRT artifact runtime.
 //!
-//! Workers resolve each batch's [`PlanKey`] to one
-//! `Arc<dyn Transform<f32>>` (a cached FFT plan or the matched filter)
-//! and call [`Transform::execute_batch`] — dispatch happens once per
-//! batch, not once per request, and new transform kinds slot in
-//! without touching the worker loop.
+//! Zero-copy data plane: intake deserializes request payloads straight
+//! into a pooled planar [`FrameArena`] (one f64→f32 pass), workers
+//! resolve each batch's [`PlanKey`] to one `Arc<dyn Transform<f32>>`
+//! and run [`Transform::execute_many`] over the arena view with a
+//! per-worker pooled [`Scratch`] — after warmup the native compute
+//! path does no heap allocation (the PJRT path still stages a
+//! `BatchF32` per chunk).  Responses share the result arena behind an
+//! `Arc` (no per-request copies); once every client drops its
+//! response the arena recycles through the [`ArenaPool`].
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::fft::{Direction, FftError, FftResult, Planner, Strategy, Transform};
-use crate::precision::SplitBuf;
+use crate::fft::{
+    ArenaPool, Direction, FftError, FftResult, Planner, Scratch, Strategy, Transform,
+};
 use crate::runtime::literal::BatchF32;
 use crate::runtime::{ArtifactKind, Engine};
 use crate::signal::chirp::default_chirp;
@@ -126,33 +131,27 @@ impl ComputeCtx {
         }
     }
 
-    /// Execute a batch, producing per-request responses.
-    fn run_batch(&self, batch: &Batch) -> FftResult<Vec<(Vec<f32>, Vec<f32>)>> {
+    /// Execute a batch in place: results overwrite the batch arena.
+    fn run_batch(&self, batch: &mut Batch, scratch: &mut Scratch<f32>) -> FftResult<()> {
         match &self.engine {
-            None => self.run_native(batch),
+            None => self.run_native(batch, scratch),
             Some(engine) => self.run_pjrt(engine, batch),
         }
     }
 
-    fn run_native(&self, batch: &Batch) -> FftResult<Vec<(Vec<f32>, Vec<f32>)>> {
+    fn run_native(&self, batch: &mut Batch, scratch: &mut Scratch<f32>) -> FftResult<()> {
         let transform = self.transform_for(&batch.key)?;
-        let mut bufs: Vec<SplitBuf<f32>> = batch
-            .requests
-            .iter()
-            .map(|req| SplitBuf::from_f64(&req.re, &req.im))
-            .collect();
-        let mut scratch = SplitBuf::<f32>::zeroed(transform.len());
-        transform.execute_batch(&mut bufs, &mut scratch);
-        Ok(bufs.into_iter().map(|b| (b.re, b.im)).collect())
+        transform.execute_many(batch.arena.view_mut(), scratch);
+        Ok(())
     }
 
-    fn run_pjrt(&self, engine: &Engine, batch: &Batch) -> FftResult<Vec<(Vec<f32>, Vec<f32>)>> {
+    fn run_pjrt(&self, engine: &Engine, batch: &mut Batch) -> FftResult<()> {
         let kind = match batch.key.op {
             FftOp::Forward | FftOp::Inverse => ArtifactKind::Fft,
             FftOp::MatchedFilter => ArtifactKind::MatchedFilter,
         };
         let inverse = batch.key.op == FftOp::Inverse;
-        let count = batch.requests.len();
+        let count = batch.len();
 
         // Pick the smallest artifact batch that fits, else the largest
         // (and chunk).
@@ -180,17 +179,16 @@ impl ComputeCtx {
         let fit = available.iter().copied().filter(|&b| b >= count).min();
         let chunk = fit.unwrap_or_else(|| available.iter().copied().max().unwrap());
 
-        let mut out = Vec::with_capacity(count);
         let mut start = 0usize;
         while start < count {
             let len = chunk.min(count - start);
-            // Pad to the artifact's batch size.
+            // Pad to the artifact's batch size, reading straight from
+            // the arena (already f32).
             let mut input = BatchF32::zeroed(chunk, self.n);
-            for (row, req) in batch.requests[start..start + len].iter().enumerate() {
-                for j in 0..self.n {
-                    input.re[row * self.n + j] = req.re[j] as f32;
-                    input.im[row * self.n + j] = req.im[j] as f32;
-                }
+            for row in 0..len {
+                let (fre, fim) = batch.arena.frame(start + row);
+                input.re[row * self.n..(row + 1) * self.n].copy_from_slice(fre);
+                input.im[row * self.n..(row + 1) * self.n].copy_from_slice(fim);
             }
             let name = crate::runtime::artifacts::artifact_name(
                 kind,
@@ -201,13 +199,17 @@ impl ComputeCtx {
             );
             let model = engine.load(&name)?;
             let result = &model.execute(&input)?[0];
+            // Results land back in the arena — the response path is
+            // identical for both backends.
             for row in 0..len {
                 let (r, i) = result.row(row);
-                out.push((r.to_vec(), i.to_vec()));
+                let (fre, fim) = batch.arena.frame_mut(start + row);
+                fre.copy_from_slice(r);
+                fim.copy_from_slice(i);
             }
             start += len;
         }
-        Ok(out)
+        Ok(())
     }
 }
 
@@ -221,6 +223,7 @@ pub struct Server {
     next_id: AtomicU64,
     handles: Mutex<Vec<JoinHandle<()>>>,
     workers: usize,
+    arena_pool: Arc<ArenaPool<f32>>,
 }
 
 impl Server {
@@ -228,6 +231,7 @@ impl Server {
     pub fn start(cfg: ServerConfig) -> FftResult<Arc<Server>> {
         let metrics = Arc::new(Metrics::new());
         let gate = Gate::new(cfg.queue_limit);
+        let arena_pool = Arc::new(ArenaPool::<f32>::new());
         let recipe = ComputeRecipe {
             n: cfg.n,
             strategy: cfg.strategy,
@@ -253,15 +257,16 @@ impl Server {
         let mut handles = Vec::new();
 
         // Worker pool: each worker builds its own ComputeCtx (the PJRT
-        // client is not Send).
+        // client is not Send) and owns its own Scratch pool.
         for w in 0..cfg.workers.max(1) {
             let work_rx = work_rx.clone();
             let recipe = recipe.clone();
             let metrics = metrics.clone();
+            let pool = arena_pool.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("fmafft-worker-{w}"))
-                    .spawn(move || worker_loop(work_rx, recipe, metrics))
+                    .spawn(move || worker_loop(work_rx, recipe, metrics, pool))
                     .map_err(|e| FftError::Backend(format!("spawning worker: {e}")))?,
             );
         }
@@ -270,10 +275,13 @@ impl Server {
         let policy = cfg.policy;
         let metrics_in = metrics.clone();
         let workers = cfg.workers.max(1);
+        let pool_in = arena_pool.clone();
         handles.push(
             std::thread::Builder::new()
                 .name("fmafft-intake".into())
-                .spawn(move || intake_loop(intake_rx, work_tx, policy, metrics_in, workers))
+                .spawn(move || {
+                    intake_loop(intake_rx, work_tx, policy, metrics_in, workers, pool_in)
+                })
                 .map_err(|e| FftError::Backend(format!("spawning intake: {e}")))?,
         );
 
@@ -286,6 +294,7 @@ impl Server {
             next_id: AtomicU64::new(1),
             handles: Mutex::new(handles),
             workers: cfg.workers.max(1),
+            arena_pool,
         }))
     }
 
@@ -358,8 +367,20 @@ impl Server {
         &self.metrics
     }
 
+    /// Point-in-time serving metrics (counters, occupancy, queue
+    /// depth, latency quantiles).
+    pub fn snapshot(&self) -> super::metrics::MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
     pub fn in_flight(&self) -> usize {
         self.gate.in_flight()
+    }
+
+    /// Arenas parked for recycling (observability for the zero-copy
+    /// response path).
+    pub fn arenas_parked(&self) -> usize {
+        self.arena_pool.parked()
     }
 }
 
@@ -369,8 +390,9 @@ fn intake_loop(
     policy: BatchPolicy,
     metrics: Arc<Metrics>,
     workers: usize,
+    pool: Arc<ArenaPool<f32>>,
 ) {
-    let mut batcher = Batcher::new(policy);
+    let mut batcher = Batcher::new(policy, pool);
     loop {
         let wait = batcher
             .next_deadline(Instant::now())
@@ -379,15 +401,17 @@ fn intake_loop(
             Ok(IntakeMsg::Req(req)) => {
                 let now = Instant::now();
                 if let Some(batch) = batcher.push(req, now) {
-                    metrics.record_batch(batch.requests.len());
+                    metrics.record_batch(batch.len(), policy.max_batch);
                     let _ = work_tx.send(WorkerMsg::Work(batch));
                 }
+                metrics.set_queue_depth(batcher.pending_requests());
             }
             Ok(IntakeMsg::Drain(ack)) => {
                 for batch in batcher.flush_all() {
-                    metrics.record_batch(batch.requests.len());
+                    metrics.record_batch(batch.len(), policy.max_batch);
                     let _ = work_tx.send(WorkerMsg::Work(batch));
                 }
+                metrics.set_queue_depth(0);
                 // One sync per worker: each worker answers once it has
                 // finished everything queued before the sync.
                 for _ in 0..workers {
@@ -396,9 +420,10 @@ fn intake_loop(
             }
             Ok(IntakeMsg::Shutdown) => {
                 for batch in batcher.flush_all() {
-                    metrics.record_batch(batch.requests.len());
+                    metrics.record_batch(batch.len(), policy.max_batch);
                     let _ = work_tx.send(WorkerMsg::Work(batch));
                 }
+                metrics.set_queue_depth(0);
                 for _ in 0..workers {
                     let _ = work_tx.send(WorkerMsg::Stop);
                 }
@@ -406,9 +431,10 @@ fn intake_loop(
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
                 for batch in batcher.flush_expired(Instant::now()) {
-                    metrics.record_batch(batch.requests.len());
+                    metrics.record_batch(batch.len(), policy.max_batch);
                     let _ = work_tx.send(WorkerMsg::Work(batch));
                 }
+                metrics.set_queue_depth(batcher.pending_requests());
             }
             Err(mpsc::RecvTimeoutError::Disconnected) => {
                 for _ in 0..workers {
@@ -424,10 +450,13 @@ fn worker_loop(
     rx: Arc<Mutex<mpsc::Receiver<WorkerMsg>>>,
     recipe: ComputeRecipe,
     metrics: Arc<Metrics>,
+    pool: Arc<ArenaPool<f32>>,
 ) {
     // Build the per-thread compute state; if that fails every batch is
-    // answered with the error.
+    // answered with the error.  The Scratch pool lives as long as the
+    // worker — after the first batch the compute path stops allocating.
     let ctx = ComputeCtx::new(&recipe);
+    let mut scratch = Scratch::<f32>::new();
     loop {
         let msg = {
             // Poison recovery: a sibling worker that panicked while
@@ -437,41 +466,44 @@ fn worker_loop(
         };
         match msg {
             Ok(WorkerMsg::Work(mut batch)) => {
-                let size = batch.requests.len();
+                let size = batch.len();
                 let result = match &ctx {
-                    Ok(ctx) => ctx.run_batch(&batch),
+                    Ok(ctx) => ctx.run_batch(&mut batch, &mut scratch),
                     Err(e) => Err(e.clone()),
                 };
+                let Batch { arena, meta, .. } = batch;
                 match result {
-                    Ok(outputs) => {
-                        for (req, (re, im)) in batch.requests.drain(..).zip(outputs) {
+                    Ok(()) => {
+                        // Share the result arena across all responses
+                        // (zero copies), then park it for recycling.
+                        let shared = Arc::new(arena);
+                        for (frame, m) in meta.into_iter().enumerate() {
                             metrics.completed.fetch_add(1, Ordering::Relaxed);
-                            let latency = req.submitted.elapsed();
+                            let latency = m.submitted.elapsed();
                             metrics.record_latency(latency);
-                            let _ = req.reply.send(FftResponse {
-                                id: req.id,
-                                re,
-                                im,
-                                batch_size: size,
+                            let _ = m.reply.send(FftResponse::ok(
+                                m.id,
+                                shared.clone(),
+                                frame,
+                                size,
                                 latency,
-                                error: None,
-                            });
-                            drop(req.permit);
+                            ));
+                            drop(m.permit);
                         }
+                        pool.recycle(shared);
                     }
                     Err(e) => {
-                        for req in batch.requests.drain(..) {
+                        for m in meta {
                             metrics.failed.fetch_add(1, Ordering::Relaxed);
-                            let _ = req.reply.send(FftResponse {
-                                id: req.id,
-                                re: Vec::new(),
-                                im: Vec::new(),
-                                batch_size: size,
-                                latency: req.submitted.elapsed(),
-                                error: Some(e.clone()),
-                            });
-                            drop(req.permit);
+                            let _ = m.reply.send(FftResponse::err(
+                                m.id,
+                                e.clone(),
+                                size,
+                                m.submitted.elapsed(),
+                            ));
+                            drop(m.permit);
                         }
+                        pool.recycle(Arc::new(arena));
                     }
                 }
             }

@@ -1,0 +1,649 @@
+//! The buffer layer of the execution API: contiguous planar batch
+//! storage ([`FrameArena`]), borrowed strided views ([`FrameBatch`] /
+//! [`FrameBatchMut`]), a pooled scratch allocator ([`Scratch`]) and an
+//! arena recycler ([`ArenaPool`]).
+//!
+//! The paper's butterflies cost nothing extra at run time; at serving
+//! scale the bottleneck is the memory traffic *around* them.  This
+//! module fixes the layout so that traffic is one pass:
+//!
+//! ```text
+//!   FrameArena<T>              owns planar storage, frame-major:
+//!     re: [f0 f0 .. | f1 f1 .. | ..]   frame i at [i*frame_len ..)
+//!     im: [f0 f0 .. | f1 f1 .. | ..]
+//!        │
+//!        ├── view()      -> FrameBatch<'_, T>     (shared, strided)
+//!        └── view_mut()  -> FrameBatchMut<'_, T>  (exclusive, strided)
+//!
+//!   Scratch<T>                 per-worker pool of SplitBuf working
+//!                              buffers; take()/put() never allocate
+//!                              once the pool is warm
+//!
+//!   ArenaPool<T>               recycles arenas whose response handles
+//!                              have all been dropped (Arc count == 1)
+//! ```
+//!
+//! Layout contract (every kernel relies on it):
+//!
+//! * re/im are separate planes (split format — same as [`SplitBuf`]).
+//! * Frame `i` occupies `[i*stride, i*stride + frame_len)` in both
+//!   planes; `stride >= frame_len` (the gap, if any, is never touched).
+//! * Views never own memory; an arena view has `stride == frame_len`.
+
+use std::sync::{Arc, Mutex, PoisonError};
+
+use crate::precision::{Real, SplitBuf};
+
+/// Owned planar frame storage: `frames` frames of `frame_len` complex
+/// samples, frame-major, contiguous (`stride == frame_len`).
+///
+/// Intake paths append with [`FrameArena::push_frame_f64`] (rounds f64
+/// payloads into working precision in a single pass) or
+/// [`FrameArena::push_interleaved_f64`] (splits `[re, im, re, im, ..]`
+/// sources in a single pass).  [`FrameArena::reset`] keeps the
+/// allocation, so a recycled arena serves the next batch without
+/// touching the allocator.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FrameArena<T: Real> {
+    re: Vec<T>,
+    im: Vec<T>,
+    frame_len: usize,
+    frames: usize,
+}
+
+impl<T: Real> FrameArena<T> {
+    /// An empty arena for frames of `frame_len` complex samples.
+    pub fn new(frame_len: usize) -> Self {
+        FrameArena { re: Vec::new(), im: Vec::new(), frame_len, frames: 0 }
+    }
+
+    /// Pre-size for `frames` frames (one allocation up front).
+    pub fn with_capacity(frame_len: usize, frames: usize) -> Self {
+        let mut a = FrameArena::new(frame_len);
+        a.reserve_frames(frames);
+        a
+    }
+
+    /// Samples per frame.
+    pub fn frame_len(&self) -> usize {
+        self.frame_len
+    }
+
+    /// Number of frames currently stored.
+    pub fn frames(&self) -> usize {
+        self.frames
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.frames == 0
+    }
+
+    /// Frames that fit without reallocating.
+    pub fn capacity_frames(&self) -> usize {
+        if self.frame_len == 0 {
+            return 0;
+        }
+        self.re.capacity().min(self.im.capacity()) / self.frame_len
+    }
+
+    /// Ensure room for `frames` frames total.
+    pub fn reserve_frames(&mut self, frames: usize) {
+        let want = frames * self.frame_len;
+        self.re.reserve(want.saturating_sub(self.re.len()));
+        self.im.reserve(want.saturating_sub(self.im.len()));
+    }
+
+    /// Drop all frames, keep the allocation.
+    pub fn clear(&mut self) {
+        self.re.clear();
+        self.im.clear();
+        self.frames = 0;
+    }
+
+    /// Re-purpose the arena (possibly for a new frame length), keeping
+    /// the allocation — the recycle path of [`ArenaPool`].
+    pub fn reset(&mut self, frame_len: usize) {
+        self.clear();
+        self.frame_len = frame_len;
+    }
+
+    /// Append a zeroed frame; returns its index.
+    pub fn push_zeroed(&mut self) -> usize {
+        let new_len = self.re.len() + self.frame_len;
+        self.re.resize(new_len, T::zero());
+        self.im.resize(new_len, T::zero());
+        self.frames += 1;
+        self.frames - 1
+    }
+
+    /// Append a frame from split f64 payloads, rounding into working
+    /// precision in one pass; returns the frame index.
+    pub fn push_frame_f64(&mut self, re: &[f64], im: &[f64]) -> usize {
+        assert_eq!(re.len(), self.frame_len, "frame length != arena frame_len");
+        assert_eq!(im.len(), self.frame_len, "frame length != arena frame_len");
+        self.re.extend(re.iter().map(|&x| T::from_f64(x)));
+        self.im.extend(im.iter().map(|&x| T::from_f64(x)));
+        self.frames += 1;
+        self.frames - 1
+    }
+
+    /// Append a frame from an interleaved `[re, im, re, im, ..]` f64
+    /// source (length `2 * frame_len`) in a single pass.
+    pub fn push_interleaved_f64(&mut self, zs: &[f64]) -> usize {
+        assert_eq!(zs.len(), 2 * self.frame_len, "interleaved length != 2*frame_len");
+        self.re.reserve(self.frame_len);
+        self.im.reserve(self.frame_len);
+        for pair in zs.chunks_exact(2) {
+            self.re.push(T::from_f64(pair[0]));
+            self.im.push(T::from_f64(pair[1]));
+        }
+        self.frames += 1;
+        self.frames - 1
+    }
+
+    /// Append a frame already in working precision.
+    pub fn push_split(&mut self, buf: &SplitBuf<T>) -> usize {
+        assert_eq!(buf.len(), self.frame_len, "frame length != arena frame_len");
+        self.re.extend_from_slice(&buf.re);
+        self.im.extend_from_slice(&buf.im);
+        self.frames += 1;
+        self.frames - 1
+    }
+
+    /// Borrow frame `i` as planar slices.
+    pub fn frame(&self, i: usize) -> (&[T], &[T]) {
+        assert!(i < self.frames, "frame index {i} out of range ({})", self.frames);
+        let a = i * self.frame_len;
+        let b = a + self.frame_len;
+        (&self.re[a..b], &self.im[a..b])
+    }
+
+    /// Mutably borrow frame `i` as planar slices.
+    pub fn frame_mut(&mut self, i: usize) -> (&mut [T], &mut [T]) {
+        assert!(i < self.frames, "frame index {i} out of range ({})", self.frames);
+        let a = i * self.frame_len;
+        let b = a + self.frame_len;
+        (&mut self.re[a..b], &mut self.im[a..b])
+    }
+
+    /// Shared view over all frames.
+    pub fn view(&self) -> FrameBatch<'_, T> {
+        FrameBatch {
+            re: &self.re[..],
+            im: &self.im[..],
+            frames: self.frames,
+            frame_len: self.frame_len,
+            stride: self.frame_len,
+        }
+    }
+
+    /// Exclusive view over all frames — what
+    /// [`super::Transform::execute_many`] consumes.
+    pub fn view_mut(&mut self) -> FrameBatchMut<'_, T> {
+        FrameBatchMut {
+            re: &mut self.re[..],
+            im: &mut self.im[..],
+            frames: self.frames,
+            frame_len: self.frame_len,
+            stride: self.frame_len,
+        }
+    }
+
+    /// Copy frame `i` out into an owned [`SplitBuf`] (test/compat
+    /// convenience — the hot path reads slices via [`FrameArena::frame`]).
+    pub fn frame_to_split(&self, i: usize) -> SplitBuf<T> {
+        let (re, im) = self.frame(i);
+        SplitBuf { re: re.to_vec(), im: im.to_vec() }
+    }
+}
+
+fn check_batch_geometry<T>(
+    re: &[T],
+    im: &[T],
+    frames: usize,
+    frame_len: usize,
+    stride: usize,
+) {
+    assert_eq!(re.len(), im.len(), "re/im planes differ in length");
+    assert!(stride >= frame_len, "stride {stride} < frame_len {frame_len}");
+    if frames > 0 {
+        let span = (frames - 1) * stride + frame_len;
+        assert!(
+            span <= re.len(),
+            "batch needs {span} samples per plane, planes hold {}",
+            re.len()
+        );
+    }
+}
+
+/// Borrowed, read-only, strided view of a frame batch.
+///
+/// Frame `i` lives at `[i*stride, i*stride + frame_len)` in both
+/// planes.  `stride > frame_len` lets a view address frames embedded
+/// in a larger layout (row-padded matrices, interleaved pools) without
+/// copying.
+#[derive(Clone, Copy, Debug)]
+pub struct FrameBatch<'a, T: Real> {
+    re: &'a [T],
+    im: &'a [T],
+    frames: usize,
+    frame_len: usize,
+    stride: usize,
+}
+
+impl<'a, T: Real> FrameBatch<'a, T> {
+    /// Contiguous view: `stride == frame_len`, frame count inferred.
+    pub fn new(re: &'a [T], im: &'a [T], frame_len: usize) -> Self {
+        assert!(frame_len > 0, "frame_len must be positive");
+        assert_eq!(re.len() % frame_len, 0, "plane length not a multiple of frame_len");
+        let frames = re.len() / frame_len;
+        Self::with_stride(re, im, frames, frame_len, frame_len)
+    }
+
+    /// Explicit-stride view.
+    pub fn with_stride(
+        re: &'a [T],
+        im: &'a [T],
+        frames: usize,
+        frame_len: usize,
+        stride: usize,
+    ) -> Self {
+        check_batch_geometry(re, im, frames, frame_len, stride);
+        FrameBatch { re, im, frames, frame_len, stride }
+    }
+
+    pub fn frames(&self) -> usize {
+        self.frames
+    }
+
+    pub fn frame_len(&self) -> usize {
+        self.frame_len
+    }
+
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.frames == 0
+    }
+
+    /// Borrow frame `i` as planar slices.
+    pub fn frame(&self, i: usize) -> (&[T], &[T]) {
+        assert!(i < self.frames, "frame index {i} out of range ({})", self.frames);
+        let a = i * self.stride;
+        let b = a + self.frame_len;
+        (&self.re[a..b], &self.im[a..b])
+    }
+}
+
+/// Borrowed, exclusive, strided view of a frame batch — the argument
+/// of [`super::Transform::execute_many`].
+#[derive(Debug)]
+pub struct FrameBatchMut<'a, T: Real> {
+    re: &'a mut [T],
+    im: &'a mut [T],
+    frames: usize,
+    frame_len: usize,
+    stride: usize,
+}
+
+impl<'a, T: Real> FrameBatchMut<'a, T> {
+    /// Contiguous view: `stride == frame_len`, frame count inferred.
+    pub fn new(re: &'a mut [T], im: &'a mut [T], frame_len: usize) -> Self {
+        assert!(frame_len > 0, "frame_len must be positive");
+        assert_eq!(re.len() % frame_len, 0, "plane length not a multiple of frame_len");
+        let frames = re.len() / frame_len;
+        Self::with_stride(re, im, frames, frame_len, frame_len)
+    }
+
+    /// Explicit-stride view.
+    pub fn with_stride(
+        re: &'a mut [T],
+        im: &'a mut [T],
+        frames: usize,
+        frame_len: usize,
+        stride: usize,
+    ) -> Self {
+        check_batch_geometry(re, im, frames, frame_len, stride);
+        FrameBatchMut { re, im, frames, frame_len, stride }
+    }
+
+    pub fn frames(&self) -> usize {
+        self.frames
+    }
+
+    pub fn frame_len(&self) -> usize {
+        self.frame_len
+    }
+
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.frames == 0
+    }
+
+    /// Borrow frame `i` read-only.
+    pub fn frame(&self, i: usize) -> (&[T], &[T]) {
+        assert!(i < self.frames, "frame index {i} out of range ({})", self.frames);
+        let a = i * self.stride;
+        let b = a + self.frame_len;
+        (&self.re[a..b], &self.im[a..b])
+    }
+
+    /// Borrow frame `i` mutably as planar slices.
+    pub fn frame_mut(&mut self, i: usize) -> (&mut [T], &mut [T]) {
+        assert!(i < self.frames, "frame index {i} out of range ({})", self.frames);
+        let a = i * self.stride;
+        let b = a + self.frame_len;
+        (&mut self.re[a..b], &mut self.im[a..b])
+    }
+
+    /// Reborrow with a shorter lifetime (lets a by-value view be used
+    /// more than once).
+    pub fn reborrow(&mut self) -> FrameBatchMut<'_, T> {
+        FrameBatchMut {
+            re: &mut self.re[..],
+            im: &mut self.im[..],
+            frames: self.frames,
+            frame_len: self.frame_len,
+            stride: self.stride,
+        }
+    }
+
+    /// Downgrade to a shared view.
+    pub fn as_shared(&self) -> FrameBatch<'_, T> {
+        FrameBatch {
+            re: &self.re[..],
+            im: &self.im[..],
+            frames: self.frames,
+            frame_len: self.frame_len,
+            stride: self.stride,
+        }
+    }
+
+    /// Copy every frame of `src` into this view (frame counts and
+    /// lengths must match; strides may differ).
+    pub fn copy_from(&mut self, src: &FrameBatch<'_, T>) {
+        assert_eq!(src.frames(), self.frames, "frame count mismatch");
+        assert_eq!(src.frame_len(), self.frame_len, "frame length mismatch");
+        for i in 0..self.frames {
+            let (sre, sim) = src.frame(i);
+            let (dre, dim) = self.frame_mut(i);
+            dre.copy_from_slice(sre);
+            dim.copy_from_slice(sim);
+        }
+    }
+}
+
+/// A per-worker pool of working buffers.  Kernels `take` the scratch
+/// they need and `put` it back; after the first batch (warmup) every
+/// `take` is served from the pool without touching the allocator.
+///
+/// `take` returns a buffer of exactly the requested length whose
+/// *contents are unspecified* — kernels that read before writing must
+/// use [`Scratch::take_zeroed`].
+#[derive(Debug, Default)]
+pub struct Scratch<T: Real> {
+    pool: Vec<SplitBuf<T>>,
+    takes: u64,
+    misses: u64,
+}
+
+impl<T: Real> Scratch<T> {
+    pub fn new() -> Self {
+        Scratch { pool: Vec::new(), takes: 0, misses: 0 }
+    }
+
+    /// Total `take`/`take_zeroed` calls served.
+    pub fn takes(&self) -> u64 {
+        self.takes
+    }
+
+    /// `take` calls that had to allocate (no pooled buffer large
+    /// enough).  Flat after warmup — asserted by the allocation
+    /// regression test.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Buffers currently parked in the pool.
+    pub fn pooled(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// Take a buffer of length `len` with unspecified contents.
+    /// Served from the pool (best capacity fit) when possible.
+    pub fn take(&mut self, len: usize) -> SplitBuf<T> {
+        self.takes += 1;
+        let cap_of = |b: &SplitBuf<T>| b.re.capacity().min(b.im.capacity());
+        let mut best: Option<usize> = None;
+        for (i, b) in self.pool.iter().enumerate() {
+            let cap = cap_of(b);
+            if cap >= len && best.map_or(true, |j| cap < cap_of(&self.pool[j])) {
+                best = Some(i);
+            }
+        }
+        match best {
+            Some(i) => {
+                let mut b = self.pool.swap_remove(i);
+                // Within capacity: resize never reallocates here.
+                b.re.resize(len, T::zero());
+                b.im.resize(len, T::zero());
+                b
+            }
+            None => {
+                self.misses += 1;
+                SplitBuf::zeroed(len)
+            }
+        }
+    }
+
+    /// Take a buffer of length `len` with every sample zeroed.
+    pub fn take_zeroed(&mut self, len: usize) -> SplitBuf<T> {
+        let mut b = self.take(len);
+        b.re.fill(T::zero());
+        b.im.fill(T::zero());
+        b
+    }
+
+    /// Return a buffer to the pool for reuse.
+    pub fn put(&mut self, buf: SplitBuf<T>) {
+        self.pool.push(buf);
+    }
+}
+
+/// Shared recycler for [`FrameArena`]s that travel through the serving
+/// plane inside `Arc`s (batch → responses).  Once every response
+/// handle is dropped the arena's refcount falls to 1 and the next
+/// [`ArenaPool::take`] reclaims its allocation instead of allocating.
+#[derive(Debug, Default)]
+pub struct ArenaPool<T: Real> {
+    parked: Mutex<Vec<Arc<FrameArena<T>>>>,
+}
+
+/// Cap on parked arenas; beyond this, recycled arenas are dropped
+/// (bounds memory if clients hold responses for a long time).
+const ARENA_POOL_CAP: usize = 64;
+
+impl<T: Real> ArenaPool<T> {
+    pub fn new() -> Self {
+        ArenaPool { parked: Mutex::new(Vec::new()) }
+    }
+
+    /// Take an arena configured for `frame_len`, reusing a parked one
+    /// whose clients have all dropped their handles.
+    pub fn take(&self, frame_len: usize) -> FrameArena<T> {
+        let mut parked = self.parked.lock().unwrap_or_else(PoisonError::into_inner);
+        let mut i = 0;
+        while i < parked.len() {
+            if Arc::strong_count(&parked[i]) == 1 {
+                let arc = parked.swap_remove(i);
+                // The pool lock is held and the parked Vec owned the
+                // only handle, so no new clone can appear between the
+                // strong_count check and the unwrap.
+                let mut arena = Arc::try_unwrap(arc).unwrap_or_else(|_| {
+                    unreachable!("sole Arc handle observed under the pool lock")
+                });
+                arena.reset(frame_len);
+                return arena;
+            }
+            i += 1;
+        }
+        FrameArena::new(frame_len)
+    }
+
+    /// Park a shared arena for future reclamation.
+    pub fn recycle(&self, arena: Arc<FrameArena<T>>) {
+        let mut parked = self.parked.lock().unwrap_or_else(PoisonError::into_inner);
+        if parked.len() < ARENA_POOL_CAP {
+            parked.push(arena);
+        }
+    }
+
+    /// Arenas currently parked (in any refcount state).
+    pub fn parked(&self) -> usize {
+        self.parked
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_push_and_view_layout() {
+        let mut a = FrameArena::<f32>::new(4);
+        assert!(a.is_empty());
+        a.push_frame_f64(&[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0]);
+        a.push_interleaved_f64(&[9.0, 10.0, 11.0, 12.0, 13.0, 14.0, 15.0, 16.0]);
+        assert_eq!(a.frames(), 2);
+        let (re0, im0) = a.frame(0);
+        assert_eq!(re0, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(im0, &[5.0, 6.0, 7.0, 8.0]);
+        let (re1, im1) = a.frame(1);
+        assert_eq!(re1, &[9.0, 11.0, 13.0, 15.0]);
+        assert_eq!(im1, &[10.0, 12.0, 14.0, 16.0]);
+        let v = a.view();
+        assert_eq!(v.frames(), 2);
+        assert_eq!(v.stride(), 4);
+        assert_eq!(v.frame(1).0, re1);
+    }
+
+    #[test]
+    fn arena_reset_keeps_allocation() {
+        let mut a = FrameArena::<f32>::with_capacity(8, 4);
+        for _ in 0..4 {
+            a.push_zeroed();
+        }
+        let cap = a.capacity_frames();
+        assert!(cap >= 4);
+        a.reset(8);
+        assert_eq!(a.frames(), 0);
+        assert_eq!(a.capacity_frames(), cap);
+    }
+
+    #[test]
+    fn strided_view_addresses_padded_rows() {
+        // 3 frames of 4 samples, stride 6 (2 samples of padding).
+        let mut re = vec![0.0f64; 2 * 6 + 4];
+        let mut im = vec![0.0f64; 2 * 6 + 4];
+        for f in 0..3 {
+            for j in 0..4 {
+                re[f * 6 + j] = (10 * f + j) as f64;
+                im[f * 6 + j] = -((10 * f + j) as f64);
+            }
+        }
+        let v = FrameBatch::with_stride(&re, &im, 3, 4, 6);
+        assert_eq!(v.frame(2).0, &[20.0, 21.0, 22.0, 23.0]);
+        let mut vm = FrameBatchMut::with_stride(&mut re, &mut im, 3, 4, 6);
+        vm.frame_mut(1).0[0] = 99.0;
+        assert_eq!(re[6], 99.0);
+        // Padding untouched.
+        assert_eq!(re[4], 0.0);
+        assert_eq!(re[5], 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "batch needs")]
+    fn view_rejects_short_planes() {
+        let re = vec![0.0f32; 7];
+        let im = vec![0.0f32; 7];
+        let _ = FrameBatch::with_stride(&re, &im, 2, 4, 4);
+    }
+
+    #[test]
+    fn copy_from_between_strides() {
+        let mut src_a = FrameArena::<f32>::new(3);
+        src_a.push_frame_f64(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]);
+        src_a.push_frame_f64(&[7.0, 8.0, 9.0], &[1.5, 2.5, 3.5]);
+        let mut dre = vec![0.0f32; 2 * 5];
+        let mut dim = vec![0.0f32; 2 * 5];
+        let mut dst = FrameBatchMut::with_stride(&mut dre, &mut dim, 2, 3, 5);
+        dst.copy_from(&src_a.view());
+        assert_eq!(dst.frame(1).0, &[7.0, 8.0, 9.0]);
+        assert_eq!(dre[5..8], [7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn scratch_pool_amortizes() {
+        let mut s = Scratch::<f32>::new();
+        let b1 = s.take(128);
+        assert_eq!(b1.len(), 128);
+        assert_eq!(s.misses(), 1);
+        s.put(b1);
+        // Smaller and equal requests reuse the pooled buffer.
+        let b2 = s.take(64);
+        assert_eq!(b2.len(), 64);
+        assert_eq!(s.misses(), 1);
+        s.put(b2);
+        let b3 = s.take_zeroed(128);
+        assert!(b3.re.iter().all(|&x| x == 0.0));
+        assert_eq!(s.misses(), 1);
+        s.put(b3);
+        // A larger request is a (counted) miss.
+        let b4 = s.take(256);
+        assert_eq!(s.misses(), 2);
+        s.put(b4);
+        assert_eq!(s.pooled(), 2);
+        assert_eq!(s.takes(), 4);
+    }
+
+    #[test]
+    fn scratch_best_fit_prefers_smallest_sufficient() {
+        let mut s = Scratch::<f32>::new();
+        let small = SplitBuf::zeroed(16);
+        let big = SplitBuf::zeroed(1024);
+        s.put(big);
+        s.put(small);
+        let got = s.take(10);
+        assert!(got.re.capacity() < 1024, "picked the oversized buffer");
+        assert_eq!(s.misses(), 0);
+    }
+
+    #[test]
+    fn arena_pool_recycles_when_handles_drop() {
+        let pool = ArenaPool::<f32>::new();
+        let mut a = pool.take(8);
+        a.push_zeroed();
+        a.reserve_frames(16);
+        let cap = a.capacity_frames();
+        let shared = Arc::new(a);
+        let client = shared.clone();
+        pool.recycle(shared);
+        // Client still holds a handle: take() must not steal it.
+        let fresh = pool.take(8);
+        assert_eq!(fresh.capacity_frames(), 0);
+        drop(client);
+        // Now the parked arena is reclaimable, allocation intact.
+        let reused = pool.take(8);
+        assert_eq!(reused.frames(), 0);
+        assert_eq!(reused.capacity_frames(), cap);
+        assert_eq!(pool.parked(), 0);
+    }
+}

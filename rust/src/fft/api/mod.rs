@@ -1,5 +1,7 @@
 //! The public FFT facade: typed errors, the [`Transform`] trait, the
-//! [`PlanSpec`] builder and the generalized [`Planner`].
+//! [`PlanSpec`] builder, the generalized [`Planner`] and the zero-copy
+//! buffer layer ([`FrameArena`] / [`FrameBatch`] / [`FrameBatchMut`] /
+//! [`Scratch`]).
 //!
 //! The paper's point is that dual-select is a drop-in table swap; this
 //! module makes "drop-in" true at the API level too — one way to
@@ -13,21 +15,32 @@
 //!       .build::<f32>()?                  -> Box<dyn Transform<f32>>
 //!
 //!   planner.get(spec)?                    same, cached -> Arc<dyn Transform<T>>
-//!   transform.execute(&mut buf, &mut scratch)
-//!   transform.execute_batch(&mut frames, &mut scratch)
+//!
+//!   // Hot path: frames live in a planar arena, workers own a pooled
+//!   // scratch — no per-frame buffers, no allocation after warmup.
+//!   arena.push_frame_f64(&re, &im);       ingest (one rounding pass)
+//!   transform.execute_many(arena.view_mut(), &mut scratch);
+//!   transform.execute_into(src.view(), dst.view_mut(), &mut scratch);
+//!
+//!   // Legacy adapters (owned buffers) still work, bit-identically:
+//!   transform.execute(&mut buf, &mut scratch_buf)
+//!   transform.execute_batch(&mut frames, &mut scratch_buf)
 //! ```
 //!
 //! Concrete plan types ([`super::Plan`], [`super::radix4::Radix4Plan`],
 //! [`super::dit::DitPlan`], [`super::bluestein::BluesteinPlan`],
 //! [`super::real_fft::RealFftPlan`]) remain public for code that wants
 //! monomorphized access; they all implement [`Transform`].
-//! See `DESIGN.md` for the facade diagram and migration notes.
+//! See `DESIGN.md` for the facade diagram, the buffer-layer layout
+//! contract and migration notes.
 
+pub mod batch;
 pub mod error;
 pub mod planner;
 pub mod spec;
 pub mod transform;
 
+pub use batch::{ArenaPool, FrameArena, FrameBatch, FrameBatchMut, Scratch};
 pub use error::{FftError, FftResult};
 pub use planner::Planner;
 pub use spec::{Algorithm, PlanSpec};

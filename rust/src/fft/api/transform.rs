@@ -5,14 +5,22 @@
 //!
 //! Contract:
 //!
-//! * `len()` is the logical frame length; `execute` panics (like every
-//!   plan's concrete `execute` always has) if `buf.len() != len()`.
-//! * `execute` transforms `buf` in place; `scratch` is working space
-//!   that is resized on demand and carries no state between calls.
-//! * `execute_batch` has a default serial loop; the coordinator's
-//!   worker pool calls it so backends that can do better (e.g. a
-//!   batched PJRT artifact) override one method instead of the server
-//!   hand-rolling per-request dispatch.
+//! * `len()` is the logical frame length; every execute entry point
+//!   panics (like the concrete plans always have) when a frame's
+//!   length differs.
+//! * [`Transform::execute_frame`] is the one required compute method:
+//!   transform a single planar frame in place, drawing working
+//!   buffers from a pooled [`Scratch`] (allocation-free once warm).
+//! * [`Transform::execute_many`] runs a whole strided
+//!   [`FrameBatchMut`] view — the serving hot path; the default loops
+//!   `execute_frame`, and batched backends (e.g. a PJRT artifact)
+//!   override one method.
+//! * [`Transform::execute_into`] is the out-of-place form: the source
+//!   view is preserved, results land in the destination view.
+//! * `execute` / `execute_batch` / `execute_alloc` are the legacy
+//!   owned-[`SplitBuf`] adapters, kept so no caller breaks; they route
+//!   through `execute_frame`, so results are bit-identical across all
+//!   entry points.
 
 use crate::precision::{Real, SplitBuf};
 
@@ -22,6 +30,7 @@ use super::super::plan::Plan;
 use super::super::radix4::Radix4Plan;
 use super::super::real_fft::RealFftPlan;
 use super::super::{Direction, Strategy};
+use super::batch::{FrameBatch, FrameBatchMut, Scratch};
 
 /// A planned, executable transform over working precision `T`.
 pub trait Transform<T: Real>: Send + Sync + core::fmt::Debug {
@@ -38,21 +47,66 @@ pub trait Transform<T: Real>: Send + Sync + core::fmt::Debug {
     /// Transform direction.
     fn direction(&self) -> Direction;
 
-    /// Execute in place. `buf.len()` must equal [`Transform::len`];
-    /// `scratch` is resized when needed.
-    fn execute(&self, buf: &mut SplitBuf<T>, scratch: &mut SplitBuf<T>);
+    /// Transform one planar frame in place.  `re`/`im` must both have
+    /// length [`Transform::len`]; working buffers come from `scratch`
+    /// and are returned to it before this call completes.
+    fn execute_frame(&self, re: &mut [T], im: &mut [T], scratch: &mut Scratch<T>);
+
+    /// Execute every frame of a strided batch view in place, reusing
+    /// one pooled `scratch` across the whole batch — the serving hot
+    /// path (zero heap allocation once `scratch` is warm).
+    fn execute_many(&self, mut batch: FrameBatchMut<'_, T>, scratch: &mut Scratch<T>) {
+        assert_eq!(batch.frame_len(), self.len(), "batch frame length != plan size");
+        for f in 0..batch.frames() {
+            let (re, im) = batch.frame_mut(f);
+            self.execute_frame(re, im, scratch);
+        }
+    }
+
+    /// Out-of-place batch execute: copy `src` into `dst` (strides may
+    /// differ), then transform `dst` in place.  The source view is
+    /// preserved — the re-run/retry and compare paths rely on that.
+    fn execute_into(
+        &self,
+        src: FrameBatch<'_, T>,
+        mut dst: FrameBatchMut<'_, T>,
+        scratch: &mut Scratch<T>,
+    ) {
+        assert_eq!(src.frame_len(), self.len(), "batch frame length != plan size");
+        dst.copy_from(&src);
+        self.execute_many(dst, scratch);
+    }
+
+    /// Execute in place. `buf.len()` must equal [`Transform::len`].
+    /// (Legacy owned-buffer adapter over [`Transform::execute_frame`];
+    /// the caller's `scratch` buffer is pooled for the call and one
+    /// buffer is handed back so repeated calls stay amortized.)
+    fn execute(&self, buf: &mut SplitBuf<T>, scratch: &mut SplitBuf<T>) {
+        assert_eq!(buf.len(), self.len(), "buffer length != plan size");
+        let mut pool = Scratch::new();
+        pool.put(core::mem::take(scratch));
+        self.execute_frame(&mut buf.re, &mut buf.im, &mut pool);
+        *scratch = pool.take(self.len());
+    }
 
     /// Execute a whole batch of same-length frames, reusing `scratch`.
+    /// (Legacy vec-of-bufs adapter; new code hands the coordinator an
+    /// arena view via [`Transform::execute_many`].)
     fn execute_batch(&self, bufs: &mut [SplitBuf<T>], scratch: &mut SplitBuf<T>) {
+        let mut pool = Scratch::new();
+        pool.put(core::mem::take(scratch));
         for buf in bufs.iter_mut() {
-            self.execute(buf, scratch);
+            assert_eq!(buf.len(), self.len(), "buffer length != plan size");
+            self.execute_frame(&mut buf.re, &mut buf.im, &mut pool);
         }
+        *scratch = pool.take(self.len());
     }
 
     /// Convenience: allocate scratch internally (not for the hot path).
     fn execute_alloc(&self, buf: &mut SplitBuf<T>) {
-        let mut scratch = SplitBuf::zeroed(self.len());
-        self.execute(buf, &mut scratch);
+        assert_eq!(buf.len(), self.len(), "buffer length != plan size");
+        let mut pool = Scratch::new();
+        self.execute_frame(&mut buf.re, &mut buf.im, &mut pool);
     }
 }
 
@@ -66,8 +120,10 @@ impl<T: Real> Transform<T> for Plan<T> {
     fn direction(&self) -> Direction {
         self.direction
     }
-    fn execute(&self, buf: &mut SplitBuf<T>, scratch: &mut SplitBuf<T>) {
-        crate::fft::stockham::execute(self, buf, scratch);
+    fn execute_frame(&self, re: &mut [T], im: &mut [T], scratch: &mut Scratch<T>) {
+        let mut work = scratch.take(self.n);
+        crate::fft::stockham::execute_in(self, re, im, &mut work.re, &mut work.im);
+        scratch.put(work);
     }
 }
 
@@ -81,8 +137,10 @@ impl<T: Real> Transform<T> for Radix4Plan<T> {
     fn direction(&self) -> Direction {
         self.direction
     }
-    fn execute(&self, buf: &mut SplitBuf<T>, scratch: &mut SplitBuf<T>) {
-        Radix4Plan::execute(self, buf, scratch);
+    fn execute_frame(&self, re: &mut [T], im: &mut [T], scratch: &mut Scratch<T>) {
+        let mut work = scratch.take(self.n);
+        Radix4Plan::execute_in(self, re, im, &mut work.re, &mut work.im);
+        scratch.put(work);
     }
 }
 
@@ -96,9 +154,9 @@ impl<T: Real> Transform<T> for DitPlan<T> {
     fn direction(&self) -> Direction {
         self.direction
     }
-    fn execute(&self, buf: &mut SplitBuf<T>, _scratch: &mut SplitBuf<T>) {
+    fn execute_frame(&self, re: &mut [T], im: &mut [T], _scratch: &mut Scratch<T>) {
         // The DIT transform is fully in place (bit-reversal + stages).
-        DitPlan::execute(self, buf);
+        DitPlan::execute_in(self, re, im);
     }
 }
 
@@ -112,22 +170,23 @@ impl<T: Real> Transform<T> for BluesteinPlan<T> {
     fn direction(&self) -> Direction {
         BluesteinPlan::direction(self)
     }
-    fn execute(&self, buf: &mut SplitBuf<T>, _scratch: &mut SplitBuf<T>) {
-        *buf = self.transform(buf);
+    fn execute_frame(&self, re: &mut [T], im: &mut [T], scratch: &mut Scratch<T>) {
+        BluesteinPlan::execute_in(self, re, im, scratch);
     }
 }
 
 /// Real-input transform behind the facade: full-spectrum semantics so
 /// it composes with the complex transforms.
 ///
-/// * Forward: `buf.re` holds the length-n real signal (`buf.im` is
-///   ignored); after execute, `buf` holds the full complex spectrum —
-///   bins `0..=n/2` computed by the half-size packing trick
-///   ([`RealFftPlan`]), bins `n/2+1..n` filled by Hermitian symmetry.
-///   The result matches a complex FFT of the same real signal.
-/// * Inverse: `buf` holds a Hermitian spectrum (only bins `0..=n/2`
-///   are read); after execute, `buf.re` holds the real signal and
-///   `buf.im` is zero.
+/// * Forward: the frame's `re` plane holds the length-n real signal
+///   (`im` is ignored); after execute, the frame holds the full
+///   complex spectrum — bins `0..=n/2` computed by the half-size
+///   packing trick ([`RealFftPlan`]), bins `n/2+1..n` filled by
+///   Hermitian symmetry.  The result matches a complex FFT of the
+///   same real signal.
+/// * Inverse: the frame holds a Hermitian spectrum (only bins
+///   `0..=n/2` are read); after execute, `re` holds the real signal
+///   and `im` is zero.
 #[derive(Debug)]
 pub struct RealTransform<T: Real> {
     plan: RealFftPlan<T>,
@@ -155,41 +214,17 @@ impl<T: Real> Transform<T> for RealTransform<T> {
     fn direction(&self) -> Direction {
         self.direction
     }
-    fn execute(&self, buf: &mut SplitBuf<T>, _scratch: &mut SplitBuf<T>) {
-        let n = self.plan.n;
-        assert_eq!(buf.len(), n, "buffer length != plan size");
-        let half = n / 2;
+    fn execute_frame(&self, re: &mut [T], im: &mut [T], scratch: &mut Scratch<T>) {
         match self.direction {
-            Direction::Forward => {
-                let spec = self.plan.execute(&buf.re);
-                for k in 0..=half {
-                    buf.re[k] = spec.re[k];
-                    buf.im[k] = spec.im[k];
-                }
-                for k in half + 1..n {
-                    buf.re[k] = spec.re[n - k];
-                    buf.im[k] = -spec.im[n - k];
-                }
-            }
-            Direction::Inverse => {
-                let mut spec = SplitBuf::<T>::zeroed(half + 1);
-                spec.re.copy_from_slice(&buf.re[..=half]);
-                spec.im.copy_from_slice(&buf.im[..=half]);
-                let x = self
-                    .plan
-                    .execute_inverse(&spec)
-                    .expect("spec length is half+1 by construction");
-                buf.re.copy_from_slice(&x);
-                for v in buf.im.iter_mut() {
-                    *v = T::zero();
-                }
-            }
+            Direction::Forward => self.plan.forward_full(re, im, scratch),
+            Direction::Inverse => self.plan.inverse_full(re, im, scratch),
         }
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::batch::FrameArena;
     use super::*;
     use crate::dft;
     use crate::util::metrics::rel_l2;
@@ -241,6 +276,53 @@ mod tests {
     }
 
     #[test]
+    fn execute_many_over_arena_matches_per_frame_execute() {
+        let n = 64;
+        let t = boxed(n);
+        let mut rng = Pcg32::seed(9);
+        let mut arena = FrameArena::<f64>::new(n);
+        let mut singles = Vec::new();
+        for _ in 0..4 {
+            let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            arena.push_frame_f64(&re, &im);
+            singles.push(SplitBuf::<f64>::from_f64(&re, &im));
+        }
+        let mut scratch = Scratch::new();
+        t.execute_many(arena.view_mut(), &mut scratch);
+        for (f, single) in singles.iter_mut().enumerate() {
+            t.execute_alloc(single);
+            assert_eq!(arena.frame_to_split(f), *single, "frame {f}");
+        }
+    }
+
+    #[test]
+    fn execute_into_preserves_source() {
+        let n = 32;
+        let t = boxed(n);
+        let mut rng = Pcg32::seed(10);
+        let mut src = FrameArena::<f64>::new(n);
+        for _ in 0..3 {
+            let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            src.push_frame_f64(&re, &im);
+        }
+        let pristine = src.clone();
+        let mut dst = FrameArena::<f64>::new(n);
+        for _ in 0..3 {
+            dst.push_zeroed();
+        }
+        let mut scratch = Scratch::new();
+        t.execute_into(src.view(), dst.view_mut(), &mut scratch);
+        assert_eq!(src, pristine, "source mutated");
+        for f in 0..3 {
+            let mut single = pristine.frame_to_split(f);
+            t.execute_alloc(&mut single);
+            assert_eq!(dst.frame_to_split(f), single, "frame {f}");
+        }
+    }
+
+    #[test]
     fn real_transform_matches_complex_fft_full_spectrum() {
         let n = 128;
         let mut rng = Pcg32::seed(3);
@@ -276,5 +358,38 @@ mod tests {
         inv.execute(&mut buf, &mut scratch);
         let (gr, gi) = buf.to_f64();
         assert!(rel_l2(&gr, &gi, &x, &vec![0.0; n]) < 1e-12);
+    }
+
+    #[test]
+    fn scratch_stops_allocating_after_warmup() {
+        // Every plan kind's execute_frame must be served entirely from
+        // the pool on the second and later frames.
+        let kinds: Vec<Box<dyn Transform<f64>>> = vec![
+            Box::new(Plan::<f64>::new(64, Strategy::DualSelect, Direction::Forward).unwrap()),
+            Box::new(
+                Radix4Plan::<f64>::new(64, Strategy::DualSelect, Direction::Forward).unwrap(),
+            ),
+            Box::new(DitPlan::<f64>::new(64, Strategy::DualSelect, Direction::Forward).unwrap()),
+            Box::new(
+                BluesteinPlan::<f64>::new(60, Strategy::DualSelect, Direction::Forward).unwrap(),
+            ),
+            Box::new(RealTransform::new(
+                RealFftPlan::<f64>::new(64, Strategy::DualSelect).unwrap(),
+                Direction::Forward,
+            )),
+        ];
+        for t in &kinds {
+            let n = t.len();
+            let mut scratch = Scratch::new();
+            let mut arena = FrameArena::<f64>::new(n);
+            for _ in 0..8 {
+                arena.push_zeroed();
+            }
+            t.execute_many(arena.view_mut(), &mut scratch);
+            let warm = scratch.misses();
+            t.execute_many(arena.view_mut(), &mut scratch);
+            t.execute_many(arena.view_mut(), &mut scratch);
+            assert_eq!(scratch.misses(), warm, "{t:?} allocated after warmup");
+        }
     }
 }

@@ -16,6 +16,7 @@
 
 use crate::precision::{Real, SplitBuf};
 
+use super::api::Scratch;
 use super::plan::Plan;
 use super::{Direction, FftError, FftResult, Strategy};
 
@@ -80,28 +81,38 @@ impl<T: Real> BluesteinPlan<T> {
         self.direction
     }
 
-    /// Transform a length-n split signal (out-of-place).
-    pub fn transform(&self, x: &SplitBuf<T>) -> SplitBuf<T> {
+    /// Slice core: transform one planar frame in place, drawing the
+    /// two m-sized working buffers from the pooled `scratch` (no heap
+    /// allocation once the pool is warm).  Arithmetic is identical to
+    /// [`BluesteinPlan::transform`].
+    pub fn execute_in(&self, re: &mut [T], im: &mut [T], scratch: &mut Scratch<T>) {
         let n = self.n;
-        assert_eq!(x.len(), n, "buffer length != plan size");
+        assert_eq!(re.len(), n, "buffer length != plan size");
+        assert_eq!(im.len(), n, "buffer length != plan size");
         // a_j = x_j · w_j, zero-padded to m.
-        let mut a = SplitBuf::<T>::zeroed(self.m);
+        let mut a = scratch.take_zeroed(self.m);
         for j in 0..n {
             let (c, s) = self.chirp[j];
             let (wc, ws) = (T::from_f64(c), T::from_f64(s));
-            a.re[j] = x.re[j] * wc - x.im[j] * ws;
-            a.im[j] = x.im[j].mul_add(wc, x.re[j] * ws);
+            a.re[j] = re[j] * wc - im[j] * ws;
+            a.im[j] = im[j].mul_add(wc, re[j] * ws);
         }
-        let mut scratch = SplitBuf::zeroed(self.m);
-        self.fwd.execute(&mut a, &mut scratch);
+        let mut work = scratch.take(self.m);
+        super::stockham::execute_in(&self.fwd, &mut a.re, &mut a.im, &mut work.re, &mut work.im);
 
-        // Pointwise multiply with the precomputed kernel spectrum.
-        let mut prod = SplitBuf::<T>::zeroed(self.m);
-        super::convolve::pointwise_mul(&a, &self.kernel_spec, &mut prod);
-        self.inv.execute(&mut prod, &mut scratch);
+        // Pointwise multiply with the precomputed kernel spectrum,
+        // in place, then convolve back.
+        super::convolve::pointwise_mul_in(
+            &mut a.re,
+            &mut a.im,
+            &self.kernel_spec.re,
+            &self.kernel_spec.im,
+        );
+        super::stockham::execute_in(&self.inv, &mut a.re, &mut a.im, &mut work.re, &mut work.im);
 
-        // X_k = w_k · y_k, plus 1/n for the inverse direction.
-        let mut out = SplitBuf::<T>::zeroed(n);
+        // X_k = w_k · y_k, plus 1/n for the inverse direction.  The
+        // frame's input values were consumed building `a`, so writing
+        // over it here is safe.
         let scale = if self.direction == Direction::Inverse {
             1.0 / n as f64
         } else {
@@ -110,9 +121,19 @@ impl<T: Real> BluesteinPlan<T> {
         for k in 0..n {
             let (c, s) = self.chirp[k];
             let (wc, ws) = (T::from_f64(c * scale), T::from_f64(s * scale));
-            out.re[k] = prod.re[k] * wc - prod.im[k] * ws;
-            out.im[k] = prod.im[k].mul_add(wc, prod.re[k] * ws);
+            re[k] = a.re[k] * wc - a.im[k] * ws;
+            im[k] = a.im[k].mul_add(wc, a.re[k] * ws);
         }
+        scratch.put(work);
+        scratch.put(a);
+    }
+
+    /// Transform a length-n split signal (out-of-place, allocating —
+    /// the batch path uses [`BluesteinPlan::execute_in`]).
+    pub fn transform(&self, x: &SplitBuf<T>) -> SplitBuf<T> {
+        let mut out = x.clone();
+        let mut scratch = Scratch::new();
+        self.execute_in(&mut out.re, &mut out.im, &mut scratch);
         out
     }
 }

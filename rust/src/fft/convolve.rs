@@ -17,6 +17,22 @@ pub fn pointwise_mul<T: Real>(a: &SplitBuf<T>, b: &SplitBuf<T>, out: &mut SplitB
     }
 }
 
+/// Pointwise complex multiply `a ·= b` over planar slices, in place —
+/// the zero-copy form the batch execution path uses (identical
+/// arithmetic to [`pointwise_mul`]: both outputs are computed from the
+/// original `a[i]` before either store).
+pub fn pointwise_mul_in<T: Real>(are: &mut [T], aim: &mut [T], bre: &[T], bim: &[T]) {
+    let n = are.len();
+    assert_eq!(aim.len(), n);
+    assert_eq!(bre.len(), n);
+    assert_eq!(bim.len(), n);
+    for i in 0..n {
+        let (ar, ai) = (are[i], aim[i]);
+        are[i] = ar * bre[i] - ai * bim[i];
+        aim[i] = ai.mul_add(bre[i], ar * bim[i]);
+    }
+}
+
 /// Pointwise `a·conj(b)` (correlation / matched filtering).
 pub fn pointwise_mul_conj<T: Real>(a: &SplitBuf<T>, b: &SplitBuf<T>, out: &mut SplitBuf<T>) {
     let n = a.len();
@@ -25,6 +41,20 @@ pub fn pointwise_mul_conj<T: Real>(a: &SplitBuf<T>, b: &SplitBuf<T>, out: &mut S
     for i in 0..n {
         out.re[i] = a.re[i].mul_add(b.re[i], a.im[i] * b.im[i]);
         out.im[i] = a.im[i].mul_add(b.re[i], -(a.re[i] * b.im[i]));
+    }
+}
+
+/// Pointwise `a ·= conj(b)` over planar slices, in place (identical
+/// arithmetic to [`pointwise_mul_conj`]).
+pub fn pointwise_mul_conj_in<T: Real>(are: &mut [T], aim: &mut [T], bre: &[T], bim: &[T]) {
+    let n = are.len();
+    assert_eq!(aim.len(), n);
+    assert_eq!(bre.len(), n);
+    assert_eq!(bim.len(), n);
+    for i in 0..n {
+        let (ar, ai) = (are[i], aim[i]);
+        are[i] = ar.mul_add(bre[i], ai * bim[i]);
+        aim[i] = ai.mul_add(bre[i], -(ar * bim[i]));
     }
 }
 
@@ -151,6 +181,31 @@ mod tests {
         // (1+2j)·conj(3-4j) = (1+2j)(3+4j) = 3+4j+6j-8 = -5+10j
         assert_eq!(out.re[0], -5.0);
         assert_eq!(out.im[0], 10.0);
+    }
+
+    #[test]
+    fn inplace_variants_match_out_of_place_bitwise() {
+        let mut rng = Pcg32::seed(52);
+        let n = 33;
+        let a = SplitBuf::<f32>::from_f64(
+            &(0..n).map(|_| rng.gaussian()).collect::<Vec<_>>(),
+            &(0..n).map(|_| rng.gaussian()).collect::<Vec<_>>(),
+        );
+        let b = SplitBuf::<f32>::from_f64(
+            &(0..n).map(|_| rng.gaussian()).collect::<Vec<_>>(),
+            &(0..n).map(|_| rng.gaussian()).collect::<Vec<_>>(),
+        );
+        let mut want = SplitBuf::zeroed(n);
+        pointwise_mul(&a, &b, &mut want);
+        let mut got = a.clone();
+        pointwise_mul_in(&mut got.re, &mut got.im, &b.re, &b.im);
+        assert_eq!(got, want);
+
+        let mut want_c = SplitBuf::zeroed(n);
+        pointwise_mul_conj(&a, &b, &mut want_c);
+        let mut got_c = a.clone();
+        pointwise_mul_conj_in(&mut got_c.re, &mut got_c.im, &b.re, &b.im);
+        assert_eq!(got_c, want_c);
     }
 
     #[test]

@@ -35,11 +35,14 @@ impl<T: Real> DitPlan<T> {
         Ok(DitPlan { n, strategy, direction, stages })
     }
 
-    /// Execute fully in place (bit-reversal permutation + stages).
-    pub fn execute(&self, buf: &mut SplitBuf<T>) {
+    /// Slice core: execute fully in place over one planar frame
+    /// (bit-reversal permutation + stages).  Needs no scratch — the
+    /// DIT organization is the in-place baseline.
+    pub fn execute_in(&self, re: &mut [T], im: &mut [T]) {
         let n = self.n;
-        assert_eq!(buf.len(), n);
-        bit_reverse_permute(&mut buf.re, &mut buf.im);
+        assert_eq!(re.len(), n, "buffer length != plan size");
+        assert_eq!(im.len(), n, "buffer length != plan size");
+        bit_reverse_permute(re, im);
 
         for (stage, kind) in self.stages.iter().enumerate() {
             let len = 1usize << (stage + 1);
@@ -50,27 +53,33 @@ impl<T: Real> DitPlan<T> {
                     let ib = base + j + half;
                     let (a_r, a_i, b_r, b_i) = match kind {
                         super::plan::PassKind::Plain(t) => super::butterfly::standard(
-                            buf.re[ia], buf.im[ia], buf.re[ib], buf.im[ib], t.wr[j], t.wi[j],
+                            re[ia], im[ia], re[ib], im[ib], t.wr[j], t.wi[j],
                         ),
                         super::plan::PassKind::Ratio(t) => super::butterfly::ratio(
-                            buf.re[ia], buf.im[ia], buf.re[ib], buf.im[ib],
+                            re[ia], im[ia], re[ib], im[ib],
                             t.m1[j], t.m2[j], t.t[j], t.sel[j],
                         ),
                     };
-                    buf.re[ia] = a_r;
-                    buf.im[ia] = a_i;
-                    buf.re[ib] = b_r;
-                    buf.im[ib] = b_i;
+                    re[ia] = a_r;
+                    im[ia] = a_i;
+                    re[ib] = b_r;
+                    im[ib] = b_i;
                 }
             }
         }
 
         if self.direction == Direction::Inverse {
             let inv = T::from_f64(1.0 / n as f64);
-            for x in buf.re.iter_mut().chain(buf.im.iter_mut()) {
+            for x in re.iter_mut().chain(im.iter_mut()) {
                 *x = *x * inv;
             }
         }
+    }
+
+    /// Execute fully in place (bit-reversal permutation + stages).
+    pub fn execute(&self, buf: &mut SplitBuf<T>) {
+        assert_eq!(buf.len(), self.n);
+        self.execute_in(&mut buf.re, &mut buf.im);
     }
 }
 

@@ -28,7 +28,10 @@ pub mod real_fft;
 pub mod stockham;
 pub mod twiddle;
 
-pub use api::{Algorithm, FftError, FftResult, PlanSpec, Planner, RealTransform, Transform};
+pub use api::{
+    Algorithm, ArenaPool, FftError, FftResult, FrameArena, FrameBatch, FrameBatchMut, PlanSpec,
+    Planner, RealTransform, Scratch, Transform,
+};
 pub use plan::Plan;
 
 use core::fmt;

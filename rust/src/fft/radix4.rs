@@ -85,34 +85,48 @@ impl<T: Real> Radix4Plan<T> {
         worst
     }
 
+    /// Slice core: transform one planar frame in place, ping-ponging
+    /// with caller-provided scratch planes (all length n).  Odd pass
+    /// counts copy the input into scratch first so the result always
+    /// lands back in the frame (borrowed frames can't be swapped).
+    pub fn execute_in(&self, re: &mut [T], im: &mut [T], sre: &mut [T], sim: &mut [T]) {
+        let n = self.n;
+        assert_eq!(re.len(), n, "buffer length != plan size");
+        assert_eq!(im.len(), n, "buffer length != plan size");
+        assert_eq!(sre.len(), n, "scratch length != plan size");
+        assert_eq!(sim.len(), n, "scratch length != plan size");
+        // Multiply by ±j depending on direction: forward uses -j.
+        let fwd = self.direction == Direction::Forward;
+
+        let mut src_in_frame = self.passes.len() % 2 == 0;
+        if !src_in_frame {
+            sre.copy_from_slice(re);
+            sim.copy_from_slice(im);
+        }
+        for pass in &self.passes {
+            if src_in_frame {
+                run_radix4_pass(pass, fwd, n, re, im, sre, sim);
+            } else {
+                run_radix4_pass(pass, fwd, n, sre, sim, re, im);
+            }
+            src_in_frame = !src_in_frame;
+        }
+        debug_assert!(src_in_frame, "result must end in the frame");
+        if self.direction == Direction::Inverse {
+            let inv = T::from_f64(1.0 / n as f64);
+            for x in re.iter_mut().chain(im.iter_mut()) {
+                *x = *x * inv;
+            }
+        }
+    }
+
     pub fn execute(&self, buf: &mut SplitBuf<T>, scratch: &mut SplitBuf<T>) {
         let n = self.n;
         assert_eq!(buf.len(), n);
         if scratch.len() != n {
             *scratch = SplitBuf::zeroed(n);
         }
-        // Multiply by ±j depending on direction: forward uses -j.
-        let fwd = self.direction == Direction::Forward;
-
-        let mut src_is_buf = true;
-        for pass in &self.passes {
-            let (xre, xim, yre, yim) = if src_is_buf {
-                (&buf.re, &buf.im, &mut scratch.re, &mut scratch.im)
-            } else {
-                (&scratch.re, &scratch.im, &mut buf.re, &mut buf.im)
-            };
-            run_radix4_pass(pass, fwd, n, xre, xim, yre, yim);
-            src_is_buf = !src_is_buf;
-        }
-        if !src_is_buf {
-            core::mem::swap(buf, scratch);
-        }
-        if self.direction == Direction::Inverse {
-            let inv = T::from_f64(1.0 / n as f64);
-            for x in buf.re.iter_mut().chain(buf.im.iter_mut()) {
-                *x = *x * inv;
-            }
-        }
+        self.execute_in(&mut buf.re, &mut buf.im, &mut scratch.re, &mut scratch.im);
     }
 
     /// Convenience wrapper allocating scratch.

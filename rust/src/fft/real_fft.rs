@@ -16,6 +16,7 @@
 
 use crate::precision::{Real, SplitBuf};
 
+use super::api::Scratch;
 use super::plan::Plan;
 use super::{Direction, FftError, FftResult, Strategy};
 
@@ -54,6 +55,114 @@ impl<T: Real> RealFftPlan<T> {
             })
             .collect();
         Ok(RealFftPlan { n, strategy, fwd, inv, tw })
+    }
+
+    /// Slice core, forward, full-spectrum semantics: the frame's `re`
+    /// plane holds the length-n real signal (`im` is ignored); on
+    /// return the frame holds the full complex spectrum — bins
+    /// `0..=n/2` computed by the half-size packing trick, the rest
+    /// filled by Hermitian symmetry.  Working buffers (two half-size)
+    /// come from the pooled `scratch`.  Arithmetic is identical to
+    /// [`RealFftPlan::execute`].
+    pub fn forward_full(&self, re: &mut [T], im: &mut [T], scratch: &mut Scratch<T>) {
+        let n = self.n;
+        assert_eq!(re.len(), n, "buffer length != plan size");
+        assert_eq!(im.len(), n, "buffer length != plan size");
+        let half = n / 2;
+
+        // Pack even/odd samples as a complex signal.
+        let mut packed = scratch.take(half);
+        for k in 0..half {
+            packed.re[k] = re[2 * k];
+            packed.im[k] = re[2 * k + 1];
+        }
+        let mut work = scratch.take(half);
+        super::stockham::execute_in(
+            &self.fwd,
+            &mut packed.re,
+            &mut packed.im,
+            &mut work.re,
+            &mut work.im,
+        );
+
+        // Untangle (reads only `packed`, so writing the frame is safe):
+        //   E[k] = (Z[k] + conj(Z[half-k])) / 2
+        //   O[k] = (Z[k] - conj(Z[half-k])) / (2j)
+        //   X[k] = E[k] + e^{-2πik/n}·O[k]
+        let h = T::from_f64(0.5);
+        for k in 0..=half {
+            let (zr_k, zi_k, zr_m, zi_m) = {
+                let km = (half - k) % half;
+                let kk = k % half;
+                (packed.re[kk], packed.im[kk], packed.re[km], packed.im[km])
+            };
+            let er = (zr_k + zr_m) * h;
+            let ei = (zi_k - zi_m) * h;
+            let or_ = (zi_k + zi_m) * h;
+            let oi = (zr_m - zr_k) * h;
+            let (c, s) = self.tw[k];
+            let wc = T::from_f64(c);
+            let ws = T::from_f64(s);
+            let tr = wc * or_ - ws * oi;
+            let ti = ws.mul_add(or_, wc * oi);
+            re[k] = er + tr;
+            im[k] = ei + ti;
+        }
+        // Hermitian extension: bins half+1..n mirror bins 1..half,
+        // which were just written and are not touched again.
+        for k in half + 1..n {
+            re[k] = re[n - k];
+            im[k] = -im[n - k];
+        }
+        scratch.put(work);
+        scratch.put(packed);
+    }
+
+    /// Slice core, inverse, full-spectrum semantics: the frame holds a
+    /// Hermitian spectrum (only bins `0..=n/2` are read); on return
+    /// `re` holds the length-n real signal and `im` is zero.
+    /// Arithmetic is identical to [`RealFftPlan::execute_inverse`].
+    pub fn inverse_full(&self, re: &mut [T], im: &mut [T], scratch: &mut Scratch<T>) {
+        let n = self.n;
+        assert_eq!(re.len(), n, "buffer length != plan size");
+        assert_eq!(im.len(), n, "buffer length != plan size");
+        let half = n / 2;
+
+        // Re-tangle bins 0..=half into the packed spectrum Z (reads
+        // the frame before any write — `packed` is separate storage).
+        let mut packed = scratch.take(half);
+        let h = T::from_f64(0.5);
+        for k in 0..half {
+            let m = half - k; // in [1, half]
+            let (xr_k, xi_k) = (re[k], im[k]);
+            let (xr_m, xi_m) = (re[m], im[m]);
+            let er = (xr_k + xr_m) * h;
+            let ei = (xi_k - xi_m) * h;
+            let dr = (xr_k - xr_m) * h;
+            let di = (xi_k + xi_m) * h;
+            let (c, s) = self.tw[k];
+            let wc = T::from_f64(c);
+            let ws = T::from_f64(s);
+            let or_ = wc.mul_add(dr, ws * di);
+            let oi = wc.mul_add(di, -(ws * dr));
+            packed.re[k] = er - oi;
+            packed.im[k] = ei + or_;
+        }
+        let mut work = scratch.take(half);
+        super::stockham::execute_in(
+            &self.inv,
+            &mut packed.re,
+            &mut packed.im,
+            &mut work.re,
+            &mut work.im,
+        );
+        for k in 0..half {
+            re[2 * k] = packed.re[k];
+            re[2 * k + 1] = packed.im[k];
+        }
+        im.fill(T::zero());
+        scratch.put(work);
+        scratch.put(packed);
     }
 
     /// Transform a length-n real signal into n/2+1 spectrum bins.

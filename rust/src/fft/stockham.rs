@@ -102,38 +102,68 @@ pub fn run_pass<T: Real>(
     }
 }
 
+/// Full transform over borrowed planar slices — the zero-copy core
+/// that [`execute`] and the batch path (`Transform::execute_many`)
+/// both drive.  Ping-pongs between the frame (`re`/`im`) and the
+/// caller's scratch planes, leaving the result in the frame; applies
+/// the 1/n scale for inverse plans.
+///
+/// When the pass count is odd the input is first copied (exactly) into
+/// scratch so the ping-pong still terminates in the frame — frames
+/// borrowed from an arena cannot be pointer-swapped the way owned
+/// buffers were.
+pub fn execute_in<T: Real>(
+    plan: &Plan<T>,
+    re: &mut [T],
+    im: &mut [T],
+    sre: &mut [T],
+    sim: &mut [T],
+) {
+    let n = plan.n;
+    assert_eq!(re.len(), n, "buffer length != plan size");
+    assert_eq!(im.len(), n, "buffer length != plan size");
+    assert_eq!(sre.len(), n, "scratch length != plan size");
+    assert_eq!(sim.len(), n, "scratch length != plan size");
+
+    // `src_in_frame` tracks where the current pass reads from.  With
+    // an odd pass count, start from scratch so pass parity lands the
+    // final write in the frame.
+    let mut src_in_frame = plan.passes.len() % 2 == 0;
+    if !src_in_frame {
+        sre.copy_from_slice(re);
+        sim.copy_from_slice(im);
+    }
+    for table in &plan.passes {
+        if src_in_frame {
+            run_pass(table, re, im, sre, sim);
+        } else {
+            run_pass(table, sre, sim, re, im);
+        }
+        src_in_frame = !src_in_frame;
+    }
+    debug_assert!(src_in_frame, "result must end in the frame");
+
+    if plan.direction == Direction::Inverse {
+        let inv_n = T::from_f64(1.0 / n as f64);
+        for x in re.iter_mut() {
+            *x = *x * inv_n;
+        }
+        for x in im.iter_mut() {
+            *x = *x * inv_n;
+        }
+    }
+}
+
 /// Full transform: executes every pass of `plan`, ping-ponging with
 /// `scratch`, leaving the result in `buf`.  Applies the 1/n scale for
-/// inverse plans.
+/// inverse plans.  (Owned-buffer adapter over [`execute_in`].)
 pub fn execute<T: Real>(plan: &Plan<T>, buf: &mut SplitBuf<T>, scratch: &mut SplitBuf<T>) {
     let n = plan.n;
     assert_eq!(buf.len(), n, "buffer length != plan size");
     if scratch.len() != n {
         *scratch = SplitBuf::zeroed(n);
     }
-
-    let mut src_is_buf = true;
-    for table in &plan.passes {
-        if src_is_buf {
-            run_pass(table, &buf.re, &buf.im, &mut scratch.re, &mut scratch.im);
-        } else {
-            run_pass(table, &scratch.re, &scratch.im, &mut buf.re, &mut buf.im);
-        }
-        src_is_buf = !src_is_buf;
-    }
-    if !src_is_buf {
-        core::mem::swap(buf, scratch);
-    }
-
-    if plan.direction == Direction::Inverse {
-        let inv_n = T::from_f64(1.0 / n as f64);
-        for x in buf.re.iter_mut() {
-            *x = *x * inv_n;
-        }
-        for x in buf.im.iter_mut() {
-            *x = *x * inv_n;
-        }
-    }
+    execute_in(plan, &mut buf.re, &mut buf.im, &mut scratch.re, &mut scratch.im);
 }
 
 #[cfg(test)]

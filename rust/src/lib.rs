@@ -8,9 +8,12 @@
 //!
 //! * **Public API** ([`fft::api`]) — the typed [`fft::FftError`], the
 //!   [`fft::Transform`] trait (one execute shape for every transform
-//!   kind), the [`fft::PlanSpec`] builder and the generalized
-//!   [`fft::Planner`] cache.  Start here:
-//!   `PlanSpec::new(n).strategy(Strategy::DualSelect).build::<f32>()?`.
+//!   kind), the [`fft::PlanSpec`] builder, the generalized
+//!   [`fft::Planner`] cache, and the zero-copy buffer layer
+//!   ([`fft::FrameArena`] batch storage, [`fft::FrameBatchMut`]
+//!   strided views, pooled [`fft::Scratch`]).  Start here:
+//!   `PlanSpec::new(n).strategy(Strategy::DualSelect).build::<f32>()?`,
+//!   then `transform.execute_many(arena.view_mut(), &mut scratch)`.
 //! * **Native FFT core** ([`fft`], [`precision`], [`analysis`]) — a
 //!   generic-precision radix-2/4 Stockham FFT implementing all four
 //!   butterfly strategies the paper compares (standard 10-op,

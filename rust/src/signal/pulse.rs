@@ -12,8 +12,8 @@
 
 use std::sync::Arc;
 
-use crate::fft::convolve::pointwise_mul_conj;
-use crate::fft::{Direction, FftError, FftResult, Planner, Strategy, Transform};
+use crate::fft::convolve::pointwise_mul_conj_in;
+use crate::fft::{Direction, FftError, FftResult, Planner, Scratch, Strategy, Transform};
 use crate::precision::{Real, SplitBuf};
 
 /// A pulse-compression processor with a precomputed reference spectrum.
@@ -56,16 +56,28 @@ impl<T: Real> MatchedFilter<T> {
         Ok(MatchedFilter { n, strategy, spectrum, fwd, inv })
     }
 
+    /// Compress one planar frame in place:
+    /// `x ← IFFT(FFT(x)·conj(H))`, with all working buffers drawn
+    /// from the pooled `scratch` (the conjugate multiply itself runs
+    /// in place — no product buffer).
+    pub fn compress_frame(&self, re: &mut [T], im: &mut [T], scratch: &mut Scratch<T>) {
+        assert_eq!(re.len(), self.n, "buffer length != plan size");
+        assert_eq!(im.len(), self.n, "buffer length != plan size");
+        self.fwd.execute_frame(re, im, scratch);
+        pointwise_mul_conj_in(re, im, &self.spectrum.re, &self.spectrum.im);
+        self.inv.execute_frame(re, im, scratch);
+    }
+
     /// Compress one frame in place: `x ← IFFT(FFT(x)·conj(H))`.
+    /// (Owned-buffer adapter over [`MatchedFilter::compress_frame`].)
     pub fn compress(&self, x: &mut SplitBuf<T>, scratch: &mut SplitBuf<T>) -> FftResult<()> {
         if x.len() != self.n {
             return Err(FftError::LengthMismatch { expected: self.n, got: x.len() });
         }
-        self.fwd.execute(x, scratch);
-        let mut prod = SplitBuf::zeroed(self.n);
-        pointwise_mul_conj(x, &self.spectrum, &mut prod);
-        *x = prod;
-        self.inv.execute(x, scratch);
+        let mut pool = Scratch::new();
+        pool.put(core::mem::take(scratch));
+        self.compress_frame(&mut x.re, &mut x.im, &mut pool);
+        *scratch = pool.take(self.n);
         Ok(())
     }
 }
@@ -80,9 +92,8 @@ impl<T: Real> Transform<T> for MatchedFilter<T> {
     fn direction(&self) -> Direction {
         Direction::Forward
     }
-    fn execute(&self, buf: &mut SplitBuf<T>, scratch: &mut SplitBuf<T>) {
-        assert_eq!(buf.len(), self.n, "buffer length != plan size");
-        self.compress(buf, scratch).expect("length checked above");
+    fn execute_frame(&self, re: &mut [T], im: &mut [T], scratch: &mut Scratch<T>) {
+        self.compress_frame(re, im, scratch);
     }
 }
 

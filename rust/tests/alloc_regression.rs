@@ -1,0 +1,113 @@
+//! Allocation-count regression test for the worker hot path: after a
+//! one-batch warmup, `execute_many` over an arena view with a pooled
+//! [`Scratch`] must perform ZERO heap allocations, for every plan kind
+//! plus the matched filter.
+//!
+//! This test binary installs a counting global allocator, so it
+//! contains exactly one `#[test]` (parallel tests in the same binary
+//! would pollute the counter).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use fmafft::fft::{Direction, FrameArena, PlanSpec, Planner, Scratch, Strategy, Transform};
+use fmafft::signal::chirp::default_chirp;
+use fmafft::signal::pulse::MatchedFilter;
+use fmafft::util::prng::Pcg32;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocations() -> u64 {
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+fn fill(arena: &mut FrameArena<f32>, n: usize, frames: usize, seed: u64) {
+    let mut rng = Pcg32::seed(seed);
+    for _ in 0..frames {
+        let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        arena.push_frame_f64(&re, &im);
+    }
+}
+
+#[test]
+fn worker_hot_path_allocates_zero_after_warmup() {
+    let batch = 16;
+
+    // Build every plan kind the serving plane can run, plus the
+    // matched filter (planning/allocating here is expected and fine).
+    let planner = Planner::<f32>::new();
+    let (cr, ci) = default_chirp(64);
+    let matched: Arc<dyn Transform<f32>> =
+        Arc::new(MatchedFilter::new(&planner, Strategy::DualSelect, 256, &cr, &ci).unwrap());
+    let under_test: Vec<(&str, Arc<dyn Transform<f32>>)> = vec![
+        ("stockham fwd", planner.plan(256, Strategy::DualSelect, Direction::Forward).unwrap()),
+        ("stockham inv", planner.plan(256, Strategy::DualSelect, Direction::Inverse).unwrap()),
+        (
+            "radix4",
+            planner.get(PlanSpec::new(256).radix4()).unwrap(),
+        ),
+        ("dit", planner.get(PlanSpec::new(256).dit()).unwrap()),
+        ("bluestein n=60", planner.get(PlanSpec::new(60).bluestein()).unwrap()),
+        ("real r2c", planner.get(PlanSpec::new(256).real_input()).unwrap()),
+        (
+            "real c2r",
+            planner.get(PlanSpec::new(256).real_input().inverse()).unwrap(),
+        ),
+        ("matched filter", matched),
+    ];
+
+    // One arena per frame length, pre-filled (intake's job).
+    let mut arenas: Vec<FrameArena<f32>> = Vec::new();
+    for (i, (_, t)) in under_test.iter().enumerate() {
+        let mut arena = FrameArena::with_capacity(t.len(), batch);
+        fill(&mut arena, t.len(), batch, 1000 + i as u64);
+        arenas.push(arena);
+    }
+
+    // One persistent per-worker scratch pool, exactly like the server's
+    // worker loop.
+    let mut scratch = Scratch::<f32>::new();
+
+    // Warmup: one batch through every transform (pools fill here).
+    for ((_, t), arena) in under_test.iter().zip(arenas.iter_mut()) {
+        t.execute_many(arena.view_mut(), &mut scratch);
+    }
+
+    // Hot path: repeated batches must not touch the allocator at all.
+    let misses_before = scratch.misses();
+    let before = allocations();
+    for _ in 0..4 {
+        for ((_, t), arena) in under_test.iter().zip(arenas.iter_mut()) {
+            t.execute_many(arena.view_mut(), &mut scratch);
+        }
+    }
+    let after = allocations();
+    assert_eq!(
+        after - before,
+        0,
+        "worker hot path allocated {} times after warmup",
+        after - before
+    );
+    assert_eq!(scratch.misses(), misses_before, "scratch pool kept allocating");
+}

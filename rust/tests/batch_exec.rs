@@ -1,0 +1,236 @@
+//! Strided-equivalence suite for the zero-copy batch execution API:
+//! `execute_many` over a shared arena (and over padded strided views)
+//! must be bit-identical to per-frame `execute` for every strategy ×
+//! algorithm — including Bluestein on non-power-of-two sizes and the
+//! real-input r2c/c2r paths — in both f32 and f64.
+
+use fmafft::fft::{
+    Algorithm, FrameArena, FrameBatchMut, PlanSpec, Scratch, Strategy, Transform,
+};
+use fmafft::precision::{Real, SplitBuf};
+use fmafft::util::prng::Pcg32;
+
+/// Every (algorithm, size) pair under test; 60 exercises Bluestein's
+/// non-power-of-two path.
+const CASES: [(Algorithm, usize); 5] = [
+    (Algorithm::Stockham, 64),
+    (Algorithm::Radix4, 64),
+    (Algorithm::Dit, 64),
+    (Algorithm::Bluestein, 60),
+    (Algorithm::Auto, 60), // Auto routes non-pow2 to Bluestein too
+];
+
+const FRAMES: usize = 5;
+
+fn strategies(alg: Algorithm) -> Vec<Strategy> {
+    match alg {
+        // The radix-4 organization is ratio-form only.
+        Algorithm::Radix4 => vec![Strategy::DualSelect, Strategy::LinzerFeig, Strategy::Cosine],
+        _ => Strategy::ALL.to_vec(),
+    }
+}
+
+fn random_frames(n: usize, seed: u64) -> Vec<(Vec<f64>, Vec<f64>)> {
+    let mut rng = Pcg32::seed(seed);
+    (0..FRAMES)
+        .map(|_| {
+            (
+                (0..n).map(|_| rng.gaussian()).collect(),
+                (0..n).map(|_| rng.gaussian()).collect(),
+            )
+        })
+        .collect()
+}
+
+/// Exact (bit-level) frame comparison; `to_f64` is exact for every
+/// supported working precision, so comparing f64 bit patterns compares
+/// the underlying values bit-for-bit.
+fn assert_identical<T: Real>(got: (&[T], &[T]), want: &SplitBuf<T>, ctx: &str) {
+    assert_eq!(got.0.len(), want.len(), "{ctx}: length");
+    for j in 0..want.len() {
+        assert_eq!(
+            got.0[j].to_f64().to_bits(),
+            want.re[j].to_f64().to_bits(),
+            "{ctx}: re[{j}] {} vs {}",
+            got.0[j].to_f64(),
+            want.re[j].to_f64()
+        );
+        assert_eq!(
+            got.1[j].to_f64().to_bits(),
+            want.im[j].to_f64().to_bits(),
+            "{ctx}: im[{j}] {} vs {}",
+            got.1[j].to_f64(),
+            want.im[j].to_f64()
+        );
+    }
+}
+
+/// Per-frame reference results through the legacy `execute` adapter.
+fn reference<T: Real>(
+    t: &dyn Transform<T>,
+    frames: &[(Vec<f64>, Vec<f64>)],
+) -> Vec<SplitBuf<T>> {
+    let mut scratch = SplitBuf::zeroed(t.len());
+    frames
+        .iter()
+        .map(|(re, im)| {
+            let mut buf = SplitBuf::<T>::from_f64(re, im);
+            t.execute(&mut buf, &mut scratch);
+            buf
+        })
+        .collect()
+}
+
+fn check_spec<T: Real>(spec: PlanSpec, seed: u64) {
+    let t = match spec.build::<T>() {
+        Ok(t) => t,
+        Err(e) => panic!("build {spec:?}: {e}"),
+    };
+    let n = t.len();
+    let frames = random_frames(n, seed);
+    let want = reference(t.as_ref(), &frames);
+    let ctx = format!("{spec:?} {}", T::NAME);
+
+    // (a) Contiguous arena, one pooled scratch across the batch.
+    let mut arena = FrameArena::<T>::new(n);
+    for (re, im) in &frames {
+        arena.push_frame_f64(re, im);
+    }
+    let mut scratch = Scratch::new();
+    t.execute_many(arena.view_mut(), &mut scratch);
+    for (f, w) in want.iter().enumerate() {
+        assert_identical(arena.frame(f), w, &format!("{ctx} arena frame {f}"));
+    }
+
+    // (b) Strided view over a padded buffer: same results, padding
+    // untouched.
+    let stride = n + 3;
+    let mut re_plane = vec![T::from_f64(-7.5); (FRAMES - 1) * stride + n];
+    let mut im_plane = vec![T::from_f64(-7.5); (FRAMES - 1) * stride + n];
+    for (f, (re, im)) in frames.iter().enumerate() {
+        for j in 0..n {
+            re_plane[f * stride + j] = T::from_f64(re[j]);
+            im_plane[f * stride + j] = T::from_f64(im[j]);
+        }
+    }
+    let view = FrameBatchMut::with_stride(&mut re_plane, &mut im_plane, FRAMES, n, stride);
+    t.execute_many(view, &mut scratch);
+    for (f, w) in want.iter().enumerate() {
+        let a = f * stride;
+        assert_identical(
+            (&re_plane[a..a + n], &im_plane[a..a + n]),
+            w,
+            &format!("{ctx} strided frame {f}"),
+        );
+    }
+    let pad = T::from_f64(-7.5);
+    for f in 0..FRAMES - 1 {
+        for j in n..stride {
+            assert_eq!(re_plane[f * stride + j], pad, "{ctx}: padding clobbered");
+            assert_eq!(im_plane[f * stride + j], pad, "{ctx}: padding clobbered");
+        }
+    }
+
+    // (c) Out-of-place execute_into: source preserved, dst identical.
+    let mut src = FrameArena::<T>::new(n);
+    for (re, im) in &frames {
+        src.push_frame_f64(re, im);
+    }
+    let pristine = src.clone();
+    let mut dst = FrameArena::<T>::new(n);
+    for _ in 0..FRAMES {
+        dst.push_zeroed();
+    }
+    t.execute_into(src.view(), dst.view_mut(), &mut scratch);
+    assert_eq!(src, pristine, "{ctx}: execute_into mutated its source");
+    for (f, w) in want.iter().enumerate() {
+        assert_identical(dst.frame(f), w, &format!("{ctx} into frame {f}"));
+    }
+}
+
+fn check_all_for<T: Real>() {
+    let mut seed = 1u64;
+    for (alg, n) in CASES {
+        for strategy in strategies(alg) {
+            for spec in [
+                PlanSpec::new(n).algorithm(alg).strategy(strategy),
+                PlanSpec::new(n).algorithm(alg).strategy(strategy).inverse(),
+            ] {
+                check_spec::<T>(spec, seed);
+                seed += 1;
+            }
+        }
+    }
+    // Real input (r2c forward + c2r inverse) on the Stockham core.
+    for strategy in Strategy::ALL {
+        check_spec::<T>(PlanSpec::new(64).real_input().strategy(strategy), seed);
+        seed += 1;
+        check_spec::<T>(
+            PlanSpec::new(64).real_input().strategy(strategy).inverse(),
+            seed,
+        );
+        seed += 1;
+    }
+}
+
+#[test]
+fn execute_many_bit_identical_to_per_frame_execute_f32() {
+    check_all_for::<f32>();
+}
+
+#[test]
+fn execute_many_bit_identical_to_per_frame_execute_f64() {
+    check_all_for::<f64>();
+}
+
+#[test]
+fn matched_filter_batches_bit_identical() {
+    use fmafft::fft::Planner;
+    use fmafft::signal::chirp::default_chirp;
+    use fmafft::signal::pulse::MatchedFilter;
+
+    let n = 512;
+    let planner = Planner::<f32>::new();
+    let (cr, ci) = default_chirp(128);
+    let mf = MatchedFilter::new(&planner, Strategy::DualSelect, n, &cr, &ci).unwrap();
+    let t: &dyn Transform<f32> = &mf;
+
+    let frames = random_frames(n, 99);
+    let want = reference(t, &frames);
+    let mut arena = FrameArena::<f32>::new(n);
+    for (re, im) in &frames {
+        arena.push_frame_f64(re, im);
+    }
+    let mut scratch = Scratch::new();
+    t.execute_many(arena.view_mut(), &mut scratch);
+    for (f, w) in want.iter().enumerate() {
+        assert_identical(arena.frame(f), w, &format!("matched filter frame {f}"));
+    }
+}
+
+#[test]
+fn c2r_inverse_reconstructs_signal_through_batch_path() {
+    // End-to-end real-input roundtrip over arena views: r2c forward
+    // then c2r inverse recovers the signal (both directions batched).
+    let n = 128;
+    let fwd = PlanSpec::new(n).real_input().build::<f64>().unwrap();
+    let inv = PlanSpec::new(n).real_input().inverse().build::<f64>().unwrap();
+    let mut rng = Pcg32::seed(1234);
+    let signals: Vec<Vec<f64>> =
+        (0..3).map(|_| (0..n).map(|_| rng.gaussian()).collect()).collect();
+
+    let mut arena = FrameArena::<f64>::new(n);
+    for s in &signals {
+        arena.push_frame_f64(s, &vec![0.0; n]);
+    }
+    let mut scratch = Scratch::new();
+    fwd.execute_many(arena.view_mut(), &mut scratch);
+    inv.execute_many(arena.view_mut(), &mut scratch);
+    for (f, s) in signals.iter().enumerate() {
+        let (re, im) = arena.frame(f);
+        for j in 0..n {
+            assert!((re[j] - s[j]).abs() < 1e-12, "frame {f} re[{j}]");
+            assert!(im[j].abs() < 1e-12, "frame {f} im[{j}]");
+        }
+    }
+}

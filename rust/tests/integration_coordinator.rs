@@ -22,8 +22,8 @@ fn random_frame(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
 fn check_fft_response(re: &[f64], im: &[f64], resp: &fmafft::coordinator::FftResponse) {
     assert!(resp.is_ok(), "{:?}", resp.error);
     let (wr, wi) = dft::naive_dft(re, im, false);
-    let gr: Vec<f64> = resp.re.iter().map(|&x| x as f64).collect();
-    let gi: Vec<f64> = resp.im.iter().map(|&x| x as f64).collect();
+    let gr: Vec<f64> = resp.re().iter().map(|&x| x as f64).collect();
+    let gi: Vec<f64> = resp.im().iter().map(|&x| x as f64).collect();
     let err = rel_l2(&gr, &gi, &wr, &wi);
     assert!(err < 1e-5, "served FFT err {err:.3e}");
 }
@@ -73,12 +73,12 @@ fn native_inverse_roundtrip_through_server() {
     let inv = server
         .submit_wait(
             FftOp::Inverse,
-            fwd.re.iter().map(|&x| x as f64).collect(),
-            fwd.im.iter().map(|&x| x as f64).collect(),
+            fwd.re().iter().map(|&x| x as f64).collect(),
+            fwd.im().iter().map(|&x| x as f64).collect(),
         )
         .unwrap();
-    let gr: Vec<f64> = inv.re.iter().map(|&x| x as f64).collect();
-    let gi: Vec<f64> = inv.im.iter().map(|&x| x as f64).collect();
+    let gr: Vec<f64> = inv.re().iter().map(|&x| x as f64).collect();
+    let gi: Vec<f64> = inv.im().iter().map(|&x| x as f64).collect();
     assert!(rel_l2(&gr, &gi, &re, &im) < 1e-5);
     server.shutdown();
 }
@@ -99,14 +99,86 @@ fn matched_filter_served_natively_finds_echo() {
 
     let resp = server.submit_wait(FftOp::MatchedFilter, re, im).unwrap();
     assert!(resp.is_ok());
+    let (rre, rim) = (resp.re(), resp.im());
     let peak = (0..n)
         .max_by(|&a, &b| {
-            (resp.re[a] * resp.re[a] + resp.im[a] * resp.im[a])
-                .partial_cmp(&(resp.re[b] * resp.re[b] + resp.im[b] * resp.im[b]))
+            (rre[a] * rre[a] + rim[a] * rim[a])
+                .partial_cmp(&(rre[b] * rre[b] + rim[b] * rim[b]))
                 .unwrap()
         })
         .unwrap();
     assert_eq!(peak, delay);
+    server.shutdown();
+}
+
+#[test]
+fn snapshot_exposes_occupancy_and_queue_depth() {
+    let mut cfg = ServerConfig::native(128);
+    cfg.policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) };
+    cfg.workers = 2;
+    let server = Server::start(cfg).unwrap();
+
+    let total = 96;
+    let mut rxs = Vec::new();
+    for i in 0..total {
+        let (re, im) = random_frame(128, 300 + i as u64);
+        rxs.push(server.submit(FftOp::Forward, re, im).unwrap());
+    }
+    server.drain();
+    for rx in rxs {
+        assert!(rx.recv_timeout(Duration::from_secs(30)).unwrap().is_ok());
+    }
+    let snap = server.snapshot();
+    assert_eq!(snap.submitted, total as u64);
+    assert_eq!(snap.completed, total as u64);
+    assert_eq!(snap.failed, 0);
+    // Batch-occupancy gauge: fill ratio vs max_batch, in (0, 1].
+    assert!(
+        snap.occupancy > 0.0 && snap.occupancy <= 1.0,
+        "occupancy {}",
+        snap.occupancy
+    );
+    // Consistency: occupancy == served / Σ max_batch over batches.
+    let cap = server
+        .metrics()
+        .batch_capacity
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(cap, snap.batches * 8);
+    assert!((snap.occupancy - total as f64 / cap as f64).abs() < 1e-9);
+    // All batches flushed: the queue-depth gauge has settled to 0.
+    assert_eq!(snap.queue_depth, 0);
+    assert!(snap.p99_us >= snap.p50_us);
+    assert!(snap.p50_us > 0);
+    server.shutdown();
+}
+
+#[test]
+fn responses_are_zero_copy_views_and_arenas_recycle() {
+    let mut cfg = ServerConfig::native(64);
+    cfg.policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(100) };
+    cfg.workers = 1;
+    let server = Server::start(cfg).unwrap();
+
+    let mut rxs = Vec::new();
+    let mut frames = Vec::new();
+    for i in 0..8 {
+        let (re, im) = random_frame(64, 700 + i);
+        rxs.push(server.submit(FftOp::Forward, re.clone(), im.clone()).unwrap());
+        frames.push((re, im));
+    }
+    server.drain();
+    let resps: Vec<_> = rxs
+        .iter()
+        .map(|rx| rx.recv_timeout(Duration::from_secs(30)).unwrap())
+        .collect();
+    for (resp, (re, im)) in resps.iter().zip(&frames) {
+        assert_eq!(resp.re().len(), 64);
+        check_fft_response(re, im, resp);
+    }
+    // Responses hold views into shared batch arenas; once dropped, the
+    // arenas become reclaimable through the server's pool.
+    drop(resps);
+    assert!(server.arenas_parked() > 0, "no arenas parked for recycling");
     server.shutdown();
 }
 
@@ -222,10 +294,11 @@ fn pjrt_matched_filter_end_to_end() {
     }
     let resp = server.submit_wait(FftOp::MatchedFilter, re, im).unwrap();
     assert!(resp.is_ok(), "{:?}", resp.error);
+    let (rre, rim) = (resp.re(), resp.im());
     let peak = (0..n)
         .max_by(|&a, &b| {
-            (resp.re[a] * resp.re[a] + resp.im[a] * resp.im[a])
-                .partial_cmp(&(resp.re[b] * resp.re[b] + resp.im[b] * resp.im[b]))
+            (rre[a] * rre[a] + rim[a] * rim[a])
+                .partial_cmp(&(rre[b] * rre[b] + rim[b] * rim[b]))
                 .unwrap()
         })
         .unwrap();
