@@ -7,8 +7,7 @@
 
 use fmafft::analysis::report::sci;
 use fmafft::dft;
-use fmafft::fft::{FrameArena, PlanSpec, Scratch, Strategy, Transform};
-use fmafft::precision::{SplitBuf, F16};
+use fmafft::fft::{AnyArena, AnyScratch, DType, FrameArena, PlanSpec, Scratch, Strategy, Transform};
 use fmafft::util::metrics::rel_l2;
 use fmafft::util::prng::Pcg32;
 
@@ -60,26 +59,36 @@ fn main() {
     println!("f32 dual-select forward error: {}", sci(rel_l2(&gr, &gi, &wr, &wi)));
 
     // 5. The paper's point, in a few lines: the same transform in TRUE
-    //    half precision (software binary16, every op rounds to fp16).
-    //    One pooled scratch serves both fp16 transforms.
-    let mut scratch16 = Scratch::<F16>::new();
+    //    half precision (software binary16, every op rounds to fp16) —
+    //    through the dtype-erased API, which is exactly how the
+    //    serving plane runs reduced precision end to end.  Try it from
+    //    the CLI too: `fmafft fft --dtype f16` and
+    //    `fmafft serve --dtype f16` (or `--dtype bf16`); the serve
+    //    demo takes the same flag: `cargo run --example serve_demo --
+    //    --dtype f16`.  One AnyScratch (per-dtype pools inside) serves
+    //    both fp16 transforms.
+    let mut scratch16 = AnyScratch::new();
 
-    let mut b16 = SplitBuf::<F16>::from_f64(&re, &im);
-    PlanSpec::new(n)
+    let dual16 = PlanSpec::new(n)
         .strategy(Strategy::DualSelect)
-        .build::<F16>()
-        .unwrap()
-        .execute_frame(&mut b16.re, &mut b16.im, &mut scratch16);
-    let (g16r, g16i) = b16.to_f64();
+        .dtype(DType::F16)
+        .build_any()
+        .unwrap();
+    let mut a16 = AnyArena::new(DType::F16, n);
+    a16.push_frame_f64(&re, &im); // rounds ONCE into binary16
+    dual16.execute_many_any(&mut a16, &mut scratch16).unwrap();
+    let (g16r, g16i) = a16.frame_f64(0);
     println!("fp16 dual-select forward error: {}", sci(rel_l2(&g16r, &g16i, &wr, &wi)));
 
-    let mut lf16 = SplitBuf::<F16>::from_f64(&re, &im);
-    PlanSpec::new(n)
+    let lf16 = PlanSpec::new(n)
         .strategy(Strategy::LinzerFeig)
-        .build::<F16>()
-        .unwrap()
-        .execute_frame(&mut lf16.re, &mut lf16.im, &mut scratch16);
-    let (lr, li) = lf16.to_f64();
+        .dtype(DType::F16)
+        .build_any()
+        .unwrap();
+    let mut l16 = AnyArena::new(DType::F16, n);
+    l16.push_frame_f64(&re, &im);
+    lf16.execute_many_any(&mut l16, &mut scratch16).unwrap();
+    let (lr, li) = l16.frame_f64(0);
     let lf_err = rel_l2(&lr, &li, &wr, &wi);
     println!(
         "fp16 Linzer-Feig forward error: {} (clamped cot table overflows fp16)",

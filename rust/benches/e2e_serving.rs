@@ -12,6 +12,7 @@ use std::time::{Duration, Instant};
 use fmafft::bench_util::{header, JsonReport};
 use fmafft::coordinator::batcher::BatchPolicy;
 use fmafft::coordinator::{FftOp, Server, ServerConfig};
+use fmafft::fft::DType;
 use fmafft::workload::{ArrivalTrace, SignalKind, TraceConfig, WorkloadGen};
 
 struct RunStats {
@@ -66,7 +67,7 @@ fn drive(server: &Server, n: usize, rate: f64, count: usize, kind: SignalKind) -
     }
 }
 
-fn report(label: &str, s: &RunStats, json: &mut JsonReport) {
+fn report(label: &str, dtype: DType, s: &RunStats, json: &mut JsonReport) {
     println!(
         "{label:<40} {:>6} ok {:>4} rej  {:>8.0} req/s  p50 {:>6}us  p99 {:>7}us  mean_batch {:.1}  occ {:.2}",
         s.completed,
@@ -77,8 +78,12 @@ fn report(label: &str, s: &RunStats, json: &mut JsonReport) {
         s.mean_batch,
         s.occupancy,
     );
-    json.push_metrics(
+    // Every entry records its element dtype and strategy so the perf
+    // trajectory is comparable per precision across PRs.
+    json.push_metrics_tagged(
         label,
+        dtype.name(),
+        "dual",
         &[
             ("completed", s.completed as f64),
             ("rejected", s.rejected as f64),
@@ -99,14 +104,29 @@ fn main() {
     let kind = SignalKind::RadarReturn { pulse_len: 256, snr_db: 0.0 };
     let mut json = JsonReport::new("serving");
 
-    // Native backend: rate sweep.
+    // Native backend: rate sweep (f32).
     for rate in [1000.0, 5000.0, 20000.0] {
         let mut cfg = ServerConfig::native(n);
         cfg.workers = 4;
         cfg.policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(300) };
         let server = Server::start(cfg).unwrap();
         let stats = drive(&server, n, rate, count, kind);
-        report(&format!("native rate={rate}/s"), &stats, &mut json);
+        report(&format!("native rate={rate}/s"), DType::F32, &stats, &mut json);
+        server.shutdown();
+    }
+
+    // Reduced-precision serving: the same coordinator path with f16
+    // and bf16 working dtypes (software floats — throughput is the
+    // software-emulation cost, tracked per dtype).
+    println!("\nreduced-precision serving (native, rate=500/s):");
+    for dtype in [DType::F16, DType::Bf16] {
+        let mut cfg = ServerConfig::native(n);
+        cfg.workers = 4;
+        cfg.dtype = dtype;
+        cfg.policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(300) };
+        let server = Server::start(cfg).unwrap();
+        let stats = drive(&server, n, 500.0, count.min(500), kind);
+        report(&format!("  native {dtype} rate=500/s"), dtype, &stats, &mut json);
         server.shutdown();
     }
 
@@ -126,7 +146,7 @@ fn main() {
         };
         let server = Server::start(cfg).unwrap();
         let stats = drive(&server, n, 10_000.0, count, kind);
-        report(&format!("  max_batch={max_batch}"), &stats, &mut json);
+        report(&format!("  max_batch={max_batch}"), DType::F32, &stats, &mut json);
         if max_batch == 1 {
             base_p50 = stats.p50_us;
         } else if max_batch == 32 {
@@ -154,7 +174,7 @@ fn main() {
                 }
             };
             let stats = drive(&server, n, rate, count.min(1000), kind);
-            report(&format!("  pjrt rate={rate}/s"), &stats, &mut json);
+            report(&format!("  pjrt rate={rate}/s"), DType::F32, &stats, &mut json);
             server.shutdown();
         }
     } else {

@@ -12,7 +12,10 @@ use std::hint::black_box;
 use fmafft::bench_util::{bench, config_from_env, header, JsonReport};
 use fmafft::fft::dit::DitPlan;
 use fmafft::fft::radix4::Radix4Plan;
-use fmafft::fft::{Direction, FrameArena, Plan, Scratch, Strategy, Transform};
+use fmafft::fft::{
+    AnyArena, AnyScratch, DType, Direction, FrameArena, Plan, PlanSpec, Scratch, Strategy,
+    Transform,
+};
 use fmafft::precision::SplitBuf;
 use fmafft::util::prng::Pcg32;
 
@@ -53,7 +56,8 @@ fn main() {
             buf.im.copy_from_slice(&input.im);
             plan.execute(&mut buf, &mut scratch);
             black_box(&buf.re[0]);
-        });
+        })
+        .tagged("f32", strategy.name());
         println!(
             "{}  ({:.2} Mpt/s)",
             r.report(),
@@ -80,7 +84,8 @@ fn main() {
             buf.im.copy_from_slice(&input.im);
             plan.execute(&mut buf, &mut scratch);
             black_box(&buf.re[0]);
-        });
+        })
+        .tagged("f32", "dual");
         let mpts = r.throughput(n as f64) / 1e6;
         let ns_per_pt = r.mean_ns / n as f64;
         println!("{}  ({mpts:.2} Mpt/s, {ns_per_pt:.2} ns/pt)", r.report());
@@ -104,7 +109,8 @@ fn main() {
         let r = bench(&format!("execute_into arena b={frames} n={n} dual"), &cfg, || {
             plan.execute_into(src.view(), dst.view_mut(), &mut scratch);
             black_box(&dst.frame(0).0[0]);
-        });
+        })
+        .tagged("f32", "dual");
         let frames_per_s = r.per_second() * frames as f64;
         println!(
             "{}  ({:.0} frames/s, {:.2} Mpt/s, scratch allocs {})",
@@ -128,7 +134,8 @@ fn main() {
             }
             plan.execute_batch(&mut bufs, &mut sbuf);
             black_box(&bufs[0].re[0]);
-        });
+        })
+        .tagged("f32", "dual");
         println!("{}", r2.report());
         json.push_result(&r2);
     }
@@ -147,7 +154,8 @@ fn main() {
             buf.im.copy_from_slice(&input.im);
             r4.execute(&mut buf, &mut scratch);
             black_box(&buf.re[0]);
-        });
+        })
+        .tagged("f32", "dual");
         println!("{}  ({:.2} Mpt/s)", r.report(), r.throughput(n as f64) / 1e6);
         json.push_result(&r);
 
@@ -158,9 +166,60 @@ fn main() {
             buf2.im.copy_from_slice(&input.im);
             dit.execute(&mut buf2);
             black_box(&buf2.re[0]);
-        });
+        })
+        .tagged("f32", "dual");
         println!("{}  ({:.2} Mpt/s)", r.report(), r.throughput(n as f64) / 1e6);
         json.push_result(&r);
+    }
+
+    println!();
+
+    // Dtype sweep over the dtype-erased serving path: the same
+    // dual-select transform at every working precision, driven exactly
+    // as the coordinator's workers drive it (AnyTransform over a
+    // dtype-tagged arena with per-dtype pooled scratch).  f16/bf16 are
+    // software floats — the point is the trajectory per dtype, not a
+    // hardware comparison.
+    {
+        let n = 1024;
+        let frames = 8;
+        let mut rng = Pcg32::seed(8);
+        let re: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+        let im: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+        for dtype in DType::ALL {
+            let t = PlanSpec::new(n)
+                .strategy(Strategy::DualSelect)
+                .dtype(dtype)
+                .build_any()
+                .unwrap();
+            let mut arena = AnyArena::new(dtype, n);
+            arena.reserve_frames(frames);
+            let mut scratch = AnyScratch::new();
+            // Refill the arena every iteration (reset keeps the
+            // allocation): transforming the previous output in place
+            // would square the magnitudes each round and overflow
+            // f16/bf16 into inf/NaN.  This measures ingest + execute —
+            // exactly the serving plane's per-batch work.
+            let r = bench(
+                &format!("execute_many_any b={frames} n={n} dual {dtype}"),
+                &cfg,
+                || {
+                    arena.reset(n);
+                    for _ in 0..frames {
+                        arena.push_frame_f64(&re, &im);
+                    }
+                    t.execute_many_any(&mut arena, &mut scratch).unwrap();
+                    black_box(arena.frames());
+                },
+            )
+            .tagged(dtype.name(), "dual");
+            println!(
+                "{}  ({:.2} Mpt/s)",
+                r.report(),
+                r.throughput((n * frames) as f64) / 1e6
+            );
+            json.push_result(&r);
+        }
     }
 
     match json.write(".") {

@@ -93,6 +93,40 @@ pub fn table2(n: usize) -> (Vec<Table2Row>, f64) {
     (rows, improvement)
 }
 
+/// Eq. (11) with the butterfly's operation count folded in: the
+/// end-to-end a-priori bound the serving plane attaches to responses.
+///
+/// Each pass produces every output through one 6-FMA ratio butterfly;
+/// each FMA rounds once and the ratio path amplifies by at most
+/// `(1 + |t|)`, so one pass grows the relative error by at most
+/// `(1 + 6·(1 + |t|max)·eps)`.  Over `m` passes:
+///
+/// ```text
+/// E  ≤  (1 + 6·(1 + |t|max)·eps)^m − 1
+/// ```
+///
+/// Unlike [`cumulative_bound`] (the paper's normalized per-ratio
+/// form), this covers the whole butterfly arithmetic, so *measured*
+/// transform error sits below it — the coordinator integration tests
+/// assert exactly that for served f16/bf16 requests.
+pub fn serving_bound_from_tmax(tmax: f64, eps: f64, m: u32) -> f64 {
+    (m as f64 * (6.0 * (1.0 + tmax) * eps).ln_1p()).exp_m1()
+}
+
+/// The serving bound for one transform: `|t|max` is taken from the
+/// table as actually *stored* (clamped — for Linzer–Feig/cosine that
+/// is the 1e7 clamp entry, which is the paper's point), `eps` is the
+/// working dtype's unit roundoff.  `None` when no ratio bound applies
+/// (standard butterfly, or a size without a radix-2 decomposition).
+pub fn serving_bound(n: usize, strategy: Strategy, eps: f64) -> Option<f64> {
+    if strategy == Strategy::Standard || n < 2 || !n.is_power_of_two() {
+        return None;
+    }
+    let m = n.trailing_zeros();
+    let tmax = ratio_stats(n, strategy).max_clamped;
+    Some(serving_bound_from_tmax(tmax, eps, m))
+}
+
 /// Cumulative-bound sweep across precisions for a given strategy pair —
 /// the data behind the "advantage is specific to low precision" claim.
 pub fn precision_sweep(n: usize) -> Vec<(&'static str, f64, f64, f64)> {
@@ -165,6 +199,34 @@ mod tests {
         // negligible (≈1e-16 vs 1e-13), even though the ratio persists.
         assert!(sweep[3].1 < 1e-12);
         assert!(sweep[3].2 < 1e-14);
+    }
+
+    #[test]
+    fn serving_bound_dominates_paper_bound_and_separates_strategies() {
+        use crate::fft::DType;
+        let n = 1024;
+        let m = 10;
+        // The op-count form dominates the paper's normalized form at
+        // every precision (it counts strictly more roundings).
+        for dtype in DType::ALL {
+            let eps = dtype.epsilon();
+            assert!(
+                serving_bound_from_tmax(1.0, eps, m) > cumulative_bound(1.0, eps, m),
+                "{dtype}"
+            );
+        }
+        // Dual-select at fp16: a small, finite, usable bound.
+        let dual = serving_bound(n, Strategy::DualSelect, DType::F16.epsilon()).unwrap();
+        assert!(dual > 0.0 && dual < 0.1, "dual fp16 serving bound {dual}");
+        // Clamped LF at fp16: the stored 1e7 entry makes the a-priori
+        // bound astronomically worse — the serving plane reports it
+        // honestly instead of hiding the clamp.
+        let lf = serving_bound(n, Strategy::LinzerFeig, DType::F16.epsilon()).unwrap();
+        assert!(lf > 1e6, "lf fp16 serving bound {lf}");
+        assert!(lf / dual > 1e6);
+        // No ratio table, no bound.
+        assert_eq!(serving_bound(n, Strategy::Standard, DType::F16.epsilon()), None);
+        assert_eq!(serving_bound(100, Strategy::DualSelect, DType::F16.epsilon()), None);
     }
 
     #[test]

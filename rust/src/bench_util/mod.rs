@@ -38,7 +38,9 @@ impl BenchConfig {
     }
 }
 
-/// Result statistics (per iteration, nanoseconds).
+/// Result statistics (per iteration, nanoseconds), plus the element
+/// dtype and butterfly strategy of the measured workload so the
+/// cross-PR perf trajectory is comparable per precision.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
     pub name: String,
@@ -47,9 +49,22 @@ pub struct BenchResult {
     pub median_ns: f64,
     pub p99_ns: f64,
     pub stddev_ns: f64,
+    /// Element dtype of the workload ("f32", "f16", ...), when known.
+    pub dtype: Option<String>,
+    /// Butterfly strategy of the workload ("dual", "lf", ...), when
+    /// applicable.
+    pub strategy: Option<String>,
 }
 
 impl BenchResult {
+    /// Tag this result with the workload's element dtype and strategy
+    /// (recorded in the JSON report).
+    pub fn tagged(mut self, dtype: &str, strategy: &str) -> Self {
+        self.dtype = Some(dtype.to_string());
+        self.strategy = Some(strategy.to_string());
+        self
+    }
+
     /// Mean iterations per second.
     pub fn per_second(&self) -> f64 {
         1e9 / self.mean_ns
@@ -68,10 +83,11 @@ impl BenchResult {
     }
 
     /// One JSON object with every statistic (machine-readable form of
-    /// [`BenchResult::report`]).
+    /// [`BenchResult::report`]); includes `dtype`/`strategy` when the
+    /// result was [`BenchResult::tagged`].
     pub fn to_json(&self) -> String {
-        format!(
-            "{{\"name\":{},\"samples\":{},\"mean_ns\":{},\"median_ns\":{},\"p99_ns\":{},\"stddev_ns\":{},\"per_second\":{}}}",
+        let mut out = format!(
+            "{{\"name\":{},\"samples\":{},\"mean_ns\":{},\"median_ns\":{},\"p99_ns\":{},\"stddev_ns\":{},\"per_second\":{}",
             json_escape(&self.name),
             self.samples,
             json_num(self.mean_ns),
@@ -79,7 +95,15 @@ impl BenchResult {
             json_num(self.p99_ns),
             json_num(self.stddev_ns),
             json_num(self.per_second()),
-        )
+        );
+        if let Some(dtype) = &self.dtype {
+            out.push_str(&format!(",\"dtype\":{}", json_escape(dtype)));
+        }
+        if let Some(strategy) = &self.strategy {
+            out.push_str(&format!(",\"strategy\":{}", json_escape(strategy)));
+        }
+        out.push('}');
+        out
     }
 }
 
@@ -139,7 +163,35 @@ impl JsonReport {
     /// Append a named row of scalar metrics (for benches that measure
     /// things other than ns/iter, e.g. serving latency quantiles).
     pub fn push_metrics(&mut self, name: &str, fields: &[(&str, f64)]) {
+        self.push_entry(name, None, None, fields);
+    }
+
+    /// [`JsonReport::push_metrics`] with the workload's element dtype
+    /// and strategy recorded alongside the numbers.
+    pub fn push_metrics_tagged(
+        &mut self,
+        name: &str,
+        dtype: &str,
+        strategy: &str,
+        fields: &[(&str, f64)],
+    ) {
+        self.push_entry(name, Some(dtype), Some(strategy), fields);
+    }
+
+    fn push_entry(
+        &mut self,
+        name: &str,
+        dtype: Option<&str>,
+        strategy: Option<&str>,
+        fields: &[(&str, f64)],
+    ) {
         let mut obj = format!("{{\"name\":{}", json_escape(name));
+        if let Some(d) = dtype {
+            obj.push_str(&format!(",\"dtype\":{}", json_escape(d)));
+        }
+        if let Some(s) = strategy {
+            obj.push_str(&format!(",\"strategy\":{}", json_escape(s)));
+        }
         for (k, v) in fields {
             obj.push_str(&format!(",{}:{}", json_escape(k), json_num(*v)));
         }
@@ -215,6 +267,8 @@ pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult
         median_ns: samples_ns[n / 2],
         p99_ns: samples_ns[(n * 99 / 100).min(n - 1)],
         stddev_ns: var.sqrt(),
+        dtype: None,
+        strategy: None,
     }
 }
 
@@ -264,11 +318,15 @@ mod tests {
             median_ns: 1400.0,
             p99_ns: 2000.0,
             stddev_ns: 100.25,
+            dtype: None,
+            strategy: None,
         };
         let v = crate::util::json::Json::parse(&r.to_json()).expect("valid json");
         assert_eq!(v.get("name").unwrap().as_str(), Some("stockham \"r2\" n=1024"));
         assert_eq!(v.get("samples").unwrap().as_usize(), Some(12));
         assert_eq!(v.get("mean_ns").unwrap().as_f64(), Some(1500.5));
+        // Untagged results carry no dtype/strategy keys.
+        assert_eq!(v.get("dtype"), None);
 
         let mut rep = JsonReport::new("fft");
         rep.push_result(&r);
@@ -279,6 +337,33 @@ mod tests {
         let results = doc.get("results").unwrap().as_arr().unwrap();
         assert_eq!(results.len(), 2);
         assert_eq!(results[1].get("occupancy").unwrap().as_f64(), Some(0.82));
+    }
+
+    #[test]
+    fn json_entries_record_dtype_and_strategy() {
+        let r = BenchResult {
+            name: "stockham r2 n=1024".into(),
+            samples: 3,
+            mean_ns: 100.0,
+            median_ns: 100.0,
+            p99_ns: 100.0,
+            stddev_ns: 0.0,
+            dtype: None,
+            strategy: None,
+        }
+        .tagged("f16", "dual");
+        let v = crate::util::json::Json::parse(&r.to_json()).expect("valid json");
+        assert_eq!(v.get("dtype").unwrap().as_str(), Some("f16"));
+        assert_eq!(v.get("strategy").unwrap().as_str(), Some("dual"));
+        assert_eq!(v.get("mean_ns").unwrap().as_f64(), Some(100.0));
+
+        let mut rep = JsonReport::new("serving");
+        rep.push_metrics_tagged("native rate=2000", "bf16", "dual", &[("p99_us", 420.0)]);
+        let doc = crate::util::json::Json::parse(rep.render().trim()).expect("valid doc");
+        let row = &doc.get("results").unwrap().as_arr().unwrap()[0];
+        assert_eq!(row.get("dtype").unwrap().as_str(), Some("bf16"));
+        assert_eq!(row.get("strategy").unwrap().as_str(), Some("dual"));
+        assert_eq!(row.get("p99_us").unwrap().as_f64(), Some(420.0));
     }
 
     #[test]
@@ -306,6 +391,8 @@ mod tests {
             median_ns: 1000.0,
             p99_ns: 1000.0,
             stddev_ns: 0.0,
+            dtype: None,
+            strategy: None,
         };
         assert_eq!(r.per_second(), 1e6);
         assert_eq!(r.throughput(1024.0), 1024.0 * 1e6);

@@ -2,13 +2,13 @@
 
 use std::time::{Duration, Instant};
 
-use crate::analysis::bounds::{precision_sweep, table1, table2};
+use crate::analysis::bounds::{precision_sweep, serving_bound, table1, table2};
 use crate::analysis::empirical::measure;
 use crate::analysis::ratio::ratio_stats;
 use crate::analysis::report::{fixed, sci, Table};
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::{FftOp, Server, ServerConfig};
-use crate::fft::{FftError, FftResult, Strategy};
+use crate::fft::{DType, FftError, FftResult, Strategy};
 use crate::precision::{Bf16, F16};
 use crate::workload::{ArrivalTrace, SignalKind, TraceConfig, WorkloadGen};
 
@@ -22,11 +22,15 @@ USAGE:
       Reproduce the paper's Table I, Table II and the §V claims.
   fmafft audit   [--n 1024] [--strategy dual|lf|cos]
       Audit the precomputed twiddle table of a strategy.
-  fmafft fft     [--n 1024] [--strategy dual] [--precision f32]
+  fmafft fft     [--n 1024] [--strategy dual] [--dtype f64|f32|bf16|f16]
       Run one native FFT on a random frame; report error vs the f64 DFT.
-  fmafft serve   [--n 1024] [--pjrt] [--artifacts DIR] [--rate 2000]
-                 [--requests 2000] [--workers 2] [--max-batch 32]
-      Run the dynamic-batching coordinator against a Poisson workload.
+      (--precision is accepted as an alias of --dtype.)
+  fmafft serve   [--n 1024] [--dtype f32] [--strategy dual] [--pjrt]
+                 [--artifacts DIR] [--rate 2000] [--requests 2000]
+                 [--workers 2] [--max-batch 32]
+      Run the dynamic-batching coordinator against a Poisson workload
+      in the chosen working precision (try --dtype f16: the paper's
+      bounded-ratio claim, served end to end).
   fmafft help
 ";
 
@@ -128,16 +132,23 @@ pub fn fft(a: &Args) -> FftResult<()> {
     let n: usize = a.get_parse("n", 1024usize)?;
     crate::fft::log2_exact(n)?;
     let strategy: Strategy = a.get_or("strategy", "dual").parse()?;
-    let precision = a.get_or("precision", "f32");
+    // --dtype is the canonical spelling; --precision stays as an alias.
+    let dtype: DType = a
+        .get("dtype")
+        .or_else(|| a.get("precision"))
+        .unwrap_or("f32")
+        .parse()?;
     let seed: u64 = a.get_parse("seed", 42u64)?;
 
-    let m = match precision {
-        "f64" => measure::<f64>(n, strategy, seed),
-        "f32" => measure::<f32>(n, strategy, seed),
-        "fp16" | "f16" => measure::<F16>(n, strategy, seed),
-        "bf16" => measure::<Bf16>(n, strategy, seed),
-        other => return Err(FftError::InvalidArgument(format!("unknown precision {other:?}"))),
+    let m = match dtype {
+        DType::F64 => measure::<f64>(n, strategy, seed),
+        DType::F32 => measure::<f32>(n, strategy, seed),
+        DType::F16 => measure::<F16>(n, strategy, seed),
+        DType::Bf16 => measure::<Bf16>(n, strategy, seed),
     };
+    if let Some(bound) = serving_bound(n, strategy, dtype.epsilon()) {
+        println!("a-priori bound ({} x {}): {}", strategy, dtype, sci(bound));
+    }
     println!(
         "n={} strategy={} precision={}\n  forward rel-L2 vs f64 DFT: {}\n  FFT→IFFT roundtrip rel-L2: {}",
         m.n,
@@ -157,22 +168,34 @@ pub fn serve(a: &Args) -> FftResult<()> {
     let workers: usize = a.get_parse("workers", 2usize)?;
     let max_batch: usize = a.get_parse("max-batch", 32usize)?;
     let max_wait_us: u64 = a.get_parse("max-wait-us", 500u64)?;
+    let dtype: DType = a.get_or("dtype", "f32").parse()?;
+    let strategy: Strategy = a.get_or("strategy", "dual").parse()?;
 
     let mut cfg = if a.flag("pjrt") || a.get("artifacts").is_some() {
+        if dtype != DType::F32 {
+            return Err(FftError::InvalidArgument(format!(
+                "the PJRT backend serves dtype f32 only (asked for {dtype})"
+            )));
+        }
         ServerConfig::pjrt(n, a.get_or("artifacts", "artifacts"))
     } else {
         ServerConfig::native(n)
     };
     cfg.workers = workers;
+    cfg.strategy = strategy;
+    cfg.dtype = dtype;
     cfg.policy = BatchPolicy {
         max_batch,
         max_wait: Duration::from_micros(max_wait_us),
     };
 
     println!(
-        "serving n={n} backend={} workers={workers} max_batch={max_batch} rate={rate}/s requests={requests}",
+        "serving n={n} dtype={dtype} strategy={strategy} backend={} workers={workers} max_batch={max_batch} rate={rate}/s requests={requests}",
         if matches!(cfg.backend, crate::coordinator::Backend::Pjrt { .. }) { "pjrt" } else { "native" },
     );
+    if let Some(bound) = serving_bound(n, strategy, dtype.epsilon()) {
+        println!("a-priori per-request error bound ({strategy} x {dtype}): {}", sci(bound));
+    }
     let server = Server::start(cfg)?;
 
     let trace = ArrivalTrace::poisson(TraceConfig { rate, count: requests }, 7);
@@ -210,6 +233,11 @@ pub fn serve(a: &Args) -> FftResult<()> {
     let wall = t0.elapsed().as_secs_f64();
     println!("completed {ok}/{requests} in {wall:.2}s ({:.0} req/s)", ok as f64 / wall);
     println!("{}", server.metrics().summary());
+    let counts = server.snapshot().dtype(dtype);
+    println!(
+        "dtype {dtype}: submitted={} completed={} failed={}",
+        counts.submitted, counts.completed, counts.failed
+    );
     server.shutdown();
     Ok(())
 }

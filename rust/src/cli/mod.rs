@@ -3,8 +3,9 @@
 //! ```text
 //! fmafft tables  [--n 1024]                  reproduce paper Tables I & II
 //! fmafft audit   --n N [--strategy dual]     twiddle-table audit
-//! fmafft fft     --n N [--strategy dual] [--precision f32|fp16|bf16|f64]
-//! fmafft serve   [--n 1024] [--pjrt] [--rate 2000] [--requests 5000]
+//! fmafft fft     --n N [--strategy dual] [--dtype f64|f32|bf16|f16]
+//! fmafft serve   [--n 1024] [--dtype f16] [--strategy dual] [--pjrt]
+//!                [--rate 2000] [--requests 5000]
 //! fmafft help
 //! ```
 
@@ -92,5 +93,26 @@ mod tests {
     #[test]
     fn fft_rejects_bad_size() {
         assert_eq!(run(["fft".to_string(), "--n".into(), "100".into()]), 1);
+    }
+
+    #[test]
+    fn fft_accepts_dtype_spelling() {
+        for d in ["f64", "f32", "bf16", "f16", "fp16"] {
+            assert_eq!(
+                run([
+                    "fft".to_string(),
+                    "--n".into(),
+                    "64".into(),
+                    "--dtype".into(),
+                    d.into()
+                ]),
+                0,
+                "dtype {d}"
+            );
+        }
+        assert_eq!(
+            run(["fft".to_string(), "--n".into(), "64".into(), "--dtype".into(), "f8".into()]),
+            1
+        );
     }
 }

@@ -6,16 +6,18 @@
 //!
 //! Since the zero-copy redesign the batcher IS the intake
 //! deserializer: `push` moves each request's f64 payload straight into
-//! the batch's planar [`FrameArena`] (one rounding pass into f32) and
-//! keeps only the per-request [`RequestMeta`].  Arenas come from a
-//! shared [`ArenaPool`], so a warm serving plane opens batches without
-//! touching the allocator.
+//! the batch's planar [`AnyArena`] (one rounding pass into the key's
+//! working dtype) and keeps only the per-request [`RequestMeta`].
+//! Batches group by the full [`PlanKey`] — `(n, op, strategy, dtype)`
+//! — so mixed-precision traffic shares the coordinator but never a
+//! batch.  Arenas come from a shared [`AnyArenaPool`], so a warm
+//! serving plane opens batches without touching the allocator.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::fft::{ArenaPool, FrameArena};
+use crate::fft::{AnyArena, AnyArenaPool};
 
 use super::request::{FftRequest, PlanKey, RequestMeta};
 
@@ -33,12 +35,13 @@ impl Default for BatchPolicy {
 }
 
 /// A flushed batch ready for a worker: the frames, planar and
-/// contiguous in `arena` (frame `i` belongs to `meta[i]`), plus the
-/// per-request reply/accounting state.
+/// contiguous in `arena` (frame `i` belongs to `meta[i]`), stored in
+/// the key's working dtype, plus the per-request reply/accounting
+/// state.
 #[derive(Debug)]
 pub struct Batch {
     pub key: PlanKey,
-    pub arena: FrameArena<f32>,
+    pub arena: AnyArena,
     pub meta: Vec<RequestMeta>,
     /// When the oldest request entered the batcher.
     pub opened: Instant,
@@ -59,23 +62,24 @@ impl Batch {
 #[derive(Debug)]
 pub struct Batcher {
     policy: BatchPolicy,
-    pool: Arc<ArenaPool<f32>>,
+    pool: Arc<AnyArenaPool>,
     pending: HashMap<PlanKey, Batch>,
 }
 
 impl Batcher {
-    pub fn new(policy: BatchPolicy, pool: Arc<ArenaPool<f32>>) -> Self {
+    pub fn new(policy: BatchPolicy, pool: Arc<AnyArenaPool>) -> Self {
         Batcher { policy, pool, pending: HashMap::new() }
     }
 
     /// Add a request — its payload is deserialized into the batch
-    /// arena here; returns a full batch if this push filled one.
+    /// arena here (rounding once into the key's dtype); returns a full
+    /// batch if this push filled one.
     pub fn push(&mut self, req: FftRequest, now: Instant) -> Option<Batch> {
         let key = req.key;
         let max_batch = self.policy.max_batch;
         let pool = &self.pool;
         let batch = self.pending.entry(key).or_insert_with(|| {
-            let mut arena = pool.take(key.n);
+            let mut arena = pool.take(key.dtype, key.n);
             arena.reserve_frames(max_batch);
             Batch { key, arena, meta: Vec::with_capacity(max_batch), opened: now }
         });
@@ -129,15 +133,15 @@ impl Batcher {
 mod tests {
     use super::*;
     use crate::coordinator::request::FftOp;
-    use crate::fft::Strategy;
+    use crate::fft::{DType, Strategy};
     use std::sync::mpsc;
 
     fn batcher(policy: BatchPolicy) -> Batcher {
-        Batcher::new(policy, Arc::new(ArenaPool::new()))
+        Batcher::new(policy, Arc::new(AnyArenaPool::new()))
     }
 
     fn key(n: usize, op: FftOp) -> PlanKey {
-        PlanKey { n, op, strategy: Strategy::DualSelect }
+        PlanKey { n, op, strategy: Strategy::DualSelect, dtype: DType::F32 }
     }
 
     fn req(id: u64, k: PlanKey) -> (FftRequest, mpsc::Receiver<super::super::request::FftResponse>) {
@@ -184,10 +188,33 @@ mod tests {
         let full = b.push(r2, now).unwrap();
         assert_eq!(full.arena.frames(), 2);
         assert_eq!(full.arena.frame_len(), 8);
+        assert_eq!(full.arena.dtype(), DType::F32);
         // Frame i belongs to meta[i]; payload rounded to f32.
         assert_eq!(full.meta[0].id, 7);
-        assert_eq!(full.arena.frame(0).0, &[7.0f32; 8]);
-        assert_eq!(full.arena.frame(1).0, &[9.0f32; 8]);
+        assert_eq!(full.arena.as_f32().unwrap().frame(0).0, &[7.0f32; 8]);
+        assert_eq!(full.arena.as_f32().unwrap().frame(1).0, &[9.0f32; 8]);
+    }
+
+    #[test]
+    fn dtypes_do_not_mix_in_a_batch() {
+        let mut b = batcher(BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(10) });
+        let now = Instant::now();
+        let k32 = key(8, FftOp::Forward);
+        let k16 = PlanKey { dtype: DType::F16, ..k32 };
+        let (r1, _x1) = req(1, k32);
+        let (r2, _x2) = req(2, k16);
+        assert!(b.push(r1, now).is_none());
+        // Same n/op/strategy, different dtype: opens a second batch.
+        assert!(b.push(r2, now).is_none());
+        assert_eq!(b.pending_requests(), 2);
+        let (r3, _x3) = req(3, k16);
+        let full = b.push(r3, now).expect("f16 batch fills");
+        assert_eq!(full.key.dtype, DType::F16);
+        assert_eq!(full.arena.dtype(), DType::F16);
+        assert_eq!(full.len(), 2);
+        // The f16 payload was rounded once into binary16 storage.
+        assert_eq!(full.arena.frame_f64(0).0, vec![2.0; 8]);
+        assert_eq!(b.pending_requests(), 1);
     }
 
     #[test]

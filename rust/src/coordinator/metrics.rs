@@ -1,9 +1,13 @@
 //! Serving metrics: lock-free counters + a log-bucketed latency
 //! histogram (no external crates; buckets are powers of two in
-//! microseconds, 1 µs .. ~17 s).
+//! microseconds, 1 µs .. ~17 s).  Request counters are kept both in
+//! aggregate and split per working [`DType`], so mixed-precision
+//! traffic is observable per precision.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
+
+use crate::fft::DType;
 
 const BUCKETS: usize = 25; // 2^0 .. 2^24 µs
 
@@ -22,11 +26,44 @@ pub struct Metrics {
     /// Gauge: requests currently waiting in open (unflushed) batches.
     queue_depth: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS],
+    // Per-dtype splits of submitted/completed/failed, indexed by
+    // `DType::index()`.
+    dtype_submitted: [AtomicU64; 4],
+    dtype_completed: [AtomicU64; 4],
+    dtype_failed: [AtomicU64; 4],
 }
 
 impl Metrics {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Count one admitted request of `dtype` (aggregate + per-dtype).
+    pub fn record_submitted(&self, dtype: DType) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.dtype_submitted[dtype.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one completed request of `dtype` (aggregate + per-dtype).
+    pub fn record_completed(&self, dtype: DType) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.dtype_completed[dtype.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one failed request of `dtype` (aggregate + per-dtype).
+    pub fn record_failed(&self, dtype: DType) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+        self.dtype_failed[dtype.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Point-in-time per-dtype counters.
+    pub fn dtype_counts(&self, dtype: DType) -> DTypeCounts {
+        let i = dtype.index();
+        DTypeCounts {
+            submitted: self.dtype_submitted[i].load(Ordering::Relaxed),
+            completed: self.dtype_completed[i].load(Ordering::Relaxed),
+            failed: self.dtype_failed[i].load(Ordering::Relaxed),
+        }
     }
 
     pub fn record_latency(&self, d: Duration) {
@@ -110,13 +147,15 @@ impl Metrics {
             queue_depth: self.queue_depth(),
             p50_us: self.latency_quantile_us(0.5),
             p99_us: self.latency_quantile_us(0.99),
+            per_dtype: core::array::from_fn(|i| self.dtype_counts(DType::ALL[i])),
         }
     }
 
-    /// One-line summary for logs.
+    /// One-line summary for logs (per-dtype splits appended for every
+    /// dtype that has seen traffic).
     pub fn summary(&self) -> String {
         let s = self.snapshot();
-        format!(
+        let mut out = format!(
             "submitted={} completed={} rejected={} failed={} batches={} mean_batch={:.2} occupancy={:.2} queue_depth={} p50={}us p99={}us",
             s.submitted,
             s.completed,
@@ -128,8 +167,28 @@ impl Metrics {
             s.queue_depth,
             s.p50_us,
             s.p99_us,
-        )
+        );
+        for dtype in DType::ALL {
+            let c = s.dtype(dtype);
+            if c.submitted > 0 {
+                out.push_str(&format!(
+                    " {}={}/{}",
+                    dtype.name(),
+                    c.completed,
+                    c.submitted
+                ));
+            }
+        }
+        out
     }
+}
+
+/// Per-dtype request counters (one cell of the per-precision split).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DTypeCounts {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
 }
 
 /// A consistent-enough copy of the serving metrics (each field is read
@@ -148,6 +207,16 @@ pub struct MetricsSnapshot {
     pub queue_depth: u64,
     pub p50_us: u64,
     pub p99_us: u64,
+    /// Per-dtype request counters, indexed by `DType::index()` (use
+    /// [`MetricsSnapshot::dtype`] for keyed access).
+    pub per_dtype: [DTypeCounts; 4],
+}
+
+impl MetricsSnapshot {
+    /// The counters for one working precision.
+    pub fn dtype(&self, dtype: DType) -> DTypeCounts {
+        self.per_dtype[dtype.index()]
+    }
 }
 
 #[cfg(test)]
@@ -216,6 +285,33 @@ mod tests {
         assert!(s.contains("submitted=5"));
         assert!(s.contains("occupancy=0.50"));
         assert!(s.contains("queue_depth=3"));
+    }
+
+    #[test]
+    fn per_dtype_counters_split_traffic() {
+        let m = Metrics::new();
+        m.record_submitted(DType::F32);
+        m.record_submitted(DType::F32);
+        m.record_submitted(DType::F16);
+        m.record_completed(DType::F32);
+        m.record_completed(DType::F16);
+        m.record_failed(DType::F32);
+        // Aggregates and splits agree.
+        assert_eq!(m.submitted.load(Ordering::Relaxed), 3);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 2);
+        assert_eq!(m.failed.load(Ordering::Relaxed), 1);
+        let f32c = m.dtype_counts(DType::F32);
+        assert_eq!((f32c.submitted, f32c.completed, f32c.failed), (2, 1, 1));
+        let f16c = m.dtype_counts(DType::F16);
+        assert_eq!((f16c.submitted, f16c.completed, f16c.failed), (1, 1, 0));
+        assert_eq!(m.dtype_counts(DType::Bf16), DTypeCounts::default());
+        // Snapshot carries the split; summary names active dtypes only.
+        let s = m.snapshot();
+        assert_eq!(s.dtype(DType::F16).completed, 1);
+        let text = m.summary();
+        assert!(text.contains("f32=1/2"), "{text}");
+        assert!(text.contains("f16=1/1"), "{text}");
+        assert!(!text.contains("bf16="), "{text}");
     }
 
     #[test]

@@ -6,13 +6,23 @@
 //! Request flow:
 //!
 //! ```text
-//! client → admit (backpressure) → batcher (group by plan key,
-//!     flush on max_batch or max_wait) → worker pool (native plans or
-//!     PJRT executables) → per-request response channel
+//! client → admit (backpressure) → batcher (group by plan key —
+//!     (n, op, strategy, dtype) — flush on max_batch or max_wait)
+//!     → worker pool (native plans, any dtype; or PJRT executables,
+//!       f32) → per-request response channel
 //! ```
 //!
+//! The serving plane is precision-polymorphic: requests name a
+//! [`crate::fft::DType`] (f64/f32/bf16/f16), intake rounds the f64
+//! payload once into that working precision, workers execute through
+//! the dtype-erased [`crate::fft::AnyTransform`], and responses report
+//! the dtype plus the a-priori error bound for their strategy × dtype
+//! — so an f16 dual-select request observably beats clamped
+//! Linzer–Feig in the same serving path (the paper's headline claim,
+//! served).
+//!
 //! * [`request`] — request/response types and plan keys
-//! * [`metrics`] — latency histograms + throughput counters
+//! * [`metrics`] — latency histograms + per-dtype throughput counters
 //! * [`backpressure`] — bounded admission control
 //! * [`batcher`] — the dynamic batching policy
 //! * [`server`] — lifecycle: spawn, submit, drain, shutdown
@@ -23,6 +33,6 @@ pub mod metrics;
 pub mod request;
 pub mod server;
 
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{DTypeCounts, Metrics, MetricsSnapshot};
 pub use request::{FftOp, FftRequest, FftResponse, PlanKey, RequestMeta};
 pub use server::{Backend, Server, ServerConfig};

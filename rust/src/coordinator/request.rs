@@ -1,15 +1,25 @@
 //! Request/response types for the serving plane.
 //!
-//! Responses are zero-copy: a completed batch's [`FrameArena`] is
-//! shared behind an `Arc` and every response holds (arena, frame
-//! index) instead of per-request `Vec`s.  When all clients drop their
+//! Since the dtype redesign the wire format is precision-polymorphic:
+//! every request carries a [`DType`] in its [`PlanKey`] (so batches
+//! only mix same-precision frames), payloads always travel as f64 and
+//! are rounded **once** into the working precision at intake (the same
+//! policy the twiddle tables use), and every response reports the
+//! dtype it was computed in plus the a-priori error bound from
+//! [`crate::analysis::bounds`] for its strategy × dtype.
+//!
+//! Responses are zero-copy: a completed batch's [`AnyArena`] is shared
+//! behind an `Arc` and every response holds (arena, frame index)
+//! instead of per-request `Vec`s.  When all clients drop their
 //! responses the arena's refcount falls to 1 and the server's
-//! [`crate::fft::ArenaPool`] reclaims the allocation.
+//! [`crate::fft::AnyArenaPool`] reclaims the allocation.  f32
+//! responses expose borrowed slices ([`FftResponse::re`]); other
+//! dtypes read through the exact-widening [`FftResponse::re_f64`].
 
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
-use crate::fft::{FftError, FrameArena, Strategy};
+use crate::fft::{AnyArena, DType, FftError, Strategy};
 
 /// What the request asks for.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -21,17 +31,21 @@ pub enum FftOp {
 }
 
 /// Batching key: requests with the same key can share one executable
-/// invocation.
+/// invocation.  The dtype is part of the key, so an f16 request never
+/// lands in an f32 batch.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct PlanKey {
     pub n: usize,
     pub op: FftOp,
     pub strategy: Strategy,
+    /// Working precision the batch computes (and stores results) in.
+    pub dtype: DType,
 }
 
 /// A client request: one split-format frame.  The payload travels to
 /// the intake thread, which deserializes it straight into the batch
-/// arena (f64 → f32, one pass) and keeps only the [`RequestMeta`].
+/// arena (f64 → working dtype, one rounding pass) and keeps only the
+/// [`RequestMeta`].
 #[derive(Debug)]
 pub struct FftRequest {
     pub id: u64,
@@ -66,16 +80,24 @@ impl FftRequest {
 }
 
 /// The completed response: a zero-copy window into the batch's shared
-/// result arena (empty on error).
+/// result arena (empty on error), tagged with the working dtype.
 #[derive(Clone, Debug)]
 pub struct FftResponse {
     pub id: u64,
     /// The batch's result arena + this request's frame index.
-    payload: Option<(Arc<FrameArena<f32>>, usize)>,
+    payload: Option<(Arc<AnyArena>, usize)>,
+    /// Working precision the request was computed in (valid on both
+    /// success and failure — it is the dtype that *would have* served).
+    pub dtype: DType,
     /// Size of the batch this request was served in.
     pub batch_size: usize,
     /// Queue + service time.
     pub latency: std::time::Duration,
+    /// A-priori cumulative error bound for this request's
+    /// strategy × dtype ([`crate::analysis::bounds::serving_bound`]);
+    /// `None` when no ratio bound applies (standard butterfly,
+    /// matched-filter composites, non-radix-2 sizes).
+    pub bound: Option<f64>,
     /// Typed error if the request failed.
     pub error: Option<FftError>,
 }
@@ -84,39 +106,91 @@ impl FftResponse {
     /// A successful response viewing frame `frame` of `arena`.
     pub fn ok(
         id: u64,
-        arena: Arc<FrameArena<f32>>,
+        arena: Arc<AnyArena>,
         frame: usize,
         batch_size: usize,
         latency: std::time::Duration,
+        bound: Option<f64>,
     ) -> Self {
         debug_assert!(frame < arena.frames());
-        FftResponse { id, payload: Some((arena, frame)), batch_size, latency, error: None }
+        let dtype = arena.dtype();
+        FftResponse {
+            id,
+            payload: Some((arena, frame)),
+            dtype,
+            batch_size,
+            latency,
+            bound,
+            error: None,
+        }
     }
 
     /// A failed response.
     pub fn err(
         id: u64,
         error: FftError,
+        dtype: DType,
         batch_size: usize,
         latency: std::time::Duration,
     ) -> Self {
-        FftResponse { id, payload: None, batch_size, latency, error: Some(error) }
+        FftResponse {
+            id,
+            payload: None,
+            dtype,
+            batch_size,
+            latency,
+            bound: None,
+            error: Some(error),
+        }
     }
 
-    /// Real plane of the result frame (empty if the request failed).
+    /// Real plane of the result frame, borrowed zero-copy (empty if
+    /// the request failed).
+    ///
+    /// Only f32 responses expose borrowed slices; for any other dtype
+    /// this panics — read through [`FftResponse::re_f64`] instead.
     pub fn re(&self) -> &[f32] {
         match &self.payload {
-            Some((arena, frame)) => arena.frame(*frame).0,
+            Some((arena, frame)) => {
+                let a = arena.as_f32().unwrap_or_else(|| {
+                    panic!("response dtype is {}; use re_f64()/im_f64()", self.dtype)
+                });
+                a.frame(*frame).0
+            }
             None => &[],
         }
     }
 
-    /// Imaginary plane of the result frame (empty if the request
-    /// failed).
+    /// Imaginary plane of the result frame, borrowed zero-copy (empty
+    /// if the request failed).  f32 only — see [`FftResponse::re`].
     pub fn im(&self) -> &[f32] {
         match &self.payload {
-            Some((arena, frame)) => arena.frame(*frame).1,
+            Some((arena, frame)) => {
+                let a = arena.as_f32().unwrap_or_else(|| {
+                    panic!("response dtype is {}; use re_f64()/im_f64()", self.dtype)
+                });
+                a.frame(*frame).1
+            }
             None => &[],
+        }
+    }
+
+    /// Real plane widened exactly to f64 — works for every dtype
+    /// (empty if the request failed).  The values are exactly what the
+    /// working precision produced; widening loses nothing.
+    pub fn re_f64(&self) -> Vec<f64> {
+        match &self.payload {
+            Some((arena, frame)) => arena.frame_f64(*frame).0,
+            None => Vec::new(),
+        }
+    }
+
+    /// Imaginary plane widened exactly to f64 — works for every dtype
+    /// (empty if the request failed).
+    pub fn im_f64(&self) -> Vec<f64> {
+        match &self.payload {
+            Some((arena, frame)) => arena.frame_f64(*frame).1,
+            None => Vec::new(),
         }
     }
 
@@ -128,19 +202,39 @@ impl FftResponse {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fft::FrameArena;
 
     #[test]
     fn plan_key_equality_groups_requests() {
-        let a = PlanKey { n: 1024, op: FftOp::Forward, strategy: Strategy::DualSelect };
-        let b = PlanKey { n: 1024, op: FftOp::Forward, strategy: Strategy::DualSelect };
-        let c = PlanKey { n: 1024, op: FftOp::Inverse, strategy: Strategy::DualSelect };
+        let a = PlanKey {
+            n: 1024,
+            op: FftOp::Forward,
+            strategy: Strategy::DualSelect,
+            dtype: DType::F32,
+        };
+        let b = PlanKey {
+            n: 1024,
+            op: FftOp::Forward,
+            strategy: Strategy::DualSelect,
+            dtype: DType::F32,
+        };
+        let c = PlanKey {
+            n: 1024,
+            op: FftOp::Inverse,
+            strategy: Strategy::DualSelect,
+            dtype: DType::F32,
+        };
+        // Same shape, different working precision: distinct batch key.
+        let d = PlanKey { dtype: DType::F16, ..a };
         assert_eq!(a, b);
         assert_ne!(a, c);
+        assert_ne!(a, d);
         let mut set = std::collections::HashSet::new();
         set.insert(a);
         set.insert(b);
         set.insert(c);
-        assert_eq!(set.len(), 2);
+        set.insert(d);
+        assert_eq!(set.len(), 3);
     }
 
     #[test]
@@ -148,20 +242,43 @@ mod tests {
         let mut arena = FrameArena::<f32>::new(3);
         arena.push_frame_f64(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]);
         arena.push_frame_f64(&[7.0, 8.0, 9.0], &[0.5, 1.5, 2.5]);
-        let shared = Arc::new(arena);
-        let ok = FftResponse::ok(1, shared.clone(), 1, 2, Default::default());
+        let shared = Arc::new(AnyArena::from(arena));
+        let ok = FftResponse::ok(1, shared.clone(), 1, 2, Default::default(), Some(1e-6));
         assert!(ok.is_ok());
+        assert_eq!(ok.dtype, DType::F32);
+        assert_eq!(ok.bound, Some(1e-6));
         assert_eq!(ok.re(), &[7.0, 8.0, 9.0]);
         assert_eq!(ok.im(), &[0.5, 1.5, 2.5]);
         // Two responses share one arena — no copies.
-        let ok0 = FftResponse::ok(0, shared.clone(), 0, 2, Default::default());
+        let ok0 = FftResponse::ok(0, shared.clone(), 0, 2, Default::default(), None);
         assert_eq!(ok0.re(), &[1.0, 2.0, 3.0]);
         assert_eq!(Arc::strong_count(&shared), 3);
 
-        let bad = FftResponse::err(2, FftError::Unsupported("x"), 2, Default::default());
+        let bad = FftResponse::err(2, FftError::Unsupported("x"), DType::F32, 2, Default::default());
         assert!(!bad.is_ok());
         assert!(bad.re().is_empty());
         assert!(bad.im().is_empty());
+        assert!(bad.re_f64().is_empty());
+    }
+
+    #[test]
+    fn non_f32_responses_widen_exactly() {
+        let mut arena = AnyArena::new(DType::F16, 3);
+        // Exactly representable in binary16.
+        arena.push_frame_f64(&[1.0, -0.5, 2.0], &[0.25, 4.0, -1.0]);
+        let resp = FftResponse::ok(7, Arc::new(arena), 0, 1, Default::default(), Some(0.05));
+        assert_eq!(resp.dtype, DType::F16);
+        assert_eq!(resp.re_f64(), vec![1.0, -0.5, 2.0]);
+        assert_eq!(resp.im_f64(), vec![0.25, 4.0, -1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "use re_f64()")]
+    fn borrowed_f32_view_rejects_other_dtypes() {
+        let mut arena = AnyArena::new(DType::F16, 2);
+        arena.push_zeroed();
+        let resp = FftResponse::ok(1, Arc::new(arena), 0, 1, Default::default(), None);
+        let _ = resp.re();
     }
 
     #[test]
@@ -169,7 +286,12 @@ mod tests {
         let (tx, _rx) = mpsc::channel();
         let req = FftRequest {
             id: 42,
-            key: PlanKey { n: 4, op: FftOp::Forward, strategy: Strategy::DualSelect },
+            key: PlanKey {
+                n: 4,
+                op: FftOp::Forward,
+                strategy: Strategy::DualSelect,
+                dtype: DType::F32,
+            },
             re: vec![1.0; 4],
             im: vec![2.0; 4],
             reply: tx,

@@ -1,23 +1,30 @@
 //! The serving loop: intake thread (batching) + worker pool (compute),
 //! over either the native Rust FFT core or the PJRT artifact runtime.
 //!
-//! Zero-copy data plane: intake deserializes request payloads straight
-//! into a pooled planar [`FrameArena`] (one f64→f32 pass), workers
-//! resolve each batch's [`PlanKey`] to one `Arc<dyn Transform<f32>>`
-//! and run [`Transform::execute_many`] over the arena view with a
-//! per-worker pooled [`Scratch`] — after warmup the native compute
-//! path does no heap allocation (the PJRT path still stages a
-//! `BatchF32` per chunk).  Responses share the result arena behind an
-//! `Arc` (no per-request copies); once every client drops its
-//! response the arena recycles through the [`ArenaPool`].
+//! Precision-polymorphic, zero-copy data plane: intake deserializes
+//! request payloads straight into a pooled dtype-tagged [`AnyArena`]
+//! (one f64 → working-dtype rounding pass), workers resolve each
+//! batch's [`PlanKey`] — `(n, op, strategy, dtype)` — to one
+//! [`AnyTransform`] through a shared-nothing per-worker [`AnyPlanner`]
+//! and run [`AnyTransform::execute_many_any`] over the arena with
+//! per-dtype pooled scratch ([`AnyScratch`]) — after warmup the native
+//! compute path does no heap allocation for any dtype it has seen
+//! (the PJRT path, f32 only, still stages a `BatchF32` per chunk).
+//! Responses share the result arena behind an `Arc` (no per-request
+//! copies), report the working dtype plus the a-priori error bound
+//! from [`crate::analysis::bounds`] for their strategy × dtype, and
+//! the arena recycles through the [`AnyArenaPool`].
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::analysis::bounds::serving_bound_from_tmax;
+use crate::analysis::ratio::ratio_stats;
 use crate::fft::{
-    ArenaPool, Direction, FftError, FftResult, Planner, Scratch, Strategy, Transform,
+    AnyArena, AnyArenaPool, AnyPlanner, AnyScratch, AnyTransform, DType, Direction, FftError,
+    FftResult, Planner, Strategy,
 };
 use crate::runtime::literal::BatchF32;
 use crate::runtime::{ArtifactKind, Engine};
@@ -31,9 +38,9 @@ use super::request::{FftOp, FftRequest, FftResponse, PlanKey};
 
 /// Which compute plane serves the batches.
 pub enum Backend {
-    /// The native Rust FFT core (f32 working precision).
+    /// The native Rust FFT core (any working dtype).
     Native,
-    /// The AOT JAX/Pallas artifacts via PJRT.
+    /// The AOT JAX/Pallas artifacts via PJRT (f32 only).
     Pjrt { artifact_dir: std::path::PathBuf },
 }
 
@@ -48,6 +55,9 @@ pub struct ServerConfig {
     pub queue_limit: usize,
     /// Reference pulse length for matched-filter requests.
     pub pulse_len: usize,
+    /// Default working precision for [`Server::submit`] (requests can
+    /// override per call with [`Server::submit_with`]).
+    pub dtype: DType,
 }
 
 impl ServerConfig {
@@ -60,6 +70,7 @@ impl ServerConfig {
             workers: 2,
             queue_limit: 4096,
             pulse_len: n / 4,
+            dtype: DType::F32,
         }
     }
 
@@ -91,6 +102,7 @@ struct ComputeRecipe {
     n: usize,
     strategy: Strategy,
     pulse_len: usize,
+    dtype: DType,
     artifact_dir: Option<std::path::PathBuf>,
 }
 
@@ -98,60 +110,142 @@ struct ComputeRecipe {
 struct ComputeCtx {
     n: usize,
     strategy: Strategy,
-    planner: Planner<f32>,
-    matched: Arc<MatchedFilter<f32>>,
+    planner: AnyPlanner,
+    /// Matched filters built on demand per dtype (worker-local lock,
+    /// uncontended; the server-default dtype is built eagerly so a bad
+    /// pulse config fails every batch immediately, as before).
+    matched: Mutex<std::collections::HashMap<DType, AnyTransform>>,
+    /// Zero-padded reference chirp for lazily-built matched filters.
+    chirp: (Vec<f64>, Vec<f64>),
+    /// |t|max of the *stored* (clamped) twiddle table for (n,
+    /// strategy), computed once — the dtype-independent part of the
+    /// a-priori response bound.
+    tmax_stored: Option<f64>,
     engine: Option<Engine>,
 }
 
 impl ComputeCtx {
     fn new(recipe: &ComputeRecipe) -> FftResult<Self> {
-        let planner = Planner::<f32>::new();
-        let (cr, ci) = default_chirp(recipe.pulse_len);
-        let matched =
-            Arc::new(MatchedFilter::new(&planner, recipe.strategy, recipe.n, &cr, &ci)?);
+        let chirp = default_chirp(recipe.pulse_len);
+        let tmax_stored = if recipe.strategy == Strategy::Standard
+            || recipe.n < 2
+            || !recipe.n.is_power_of_two()
+        {
+            None
+        } else {
+            Some(ratio_stats(recipe.n, recipe.strategy).max_clamped)
+        };
         let engine = match &recipe.artifact_dir {
             None => None,
             Some(dir) => Some(Engine::new(dir)?),
         };
-        Ok(ComputeCtx {
+        let ctx = ComputeCtx {
             n: recipe.n,
             strategy: recipe.strategy,
-            planner,
-            matched,
+            planner: AnyPlanner::new(),
+            matched: Mutex::new(std::collections::HashMap::new()),
+            chirp,
+            tmax_stored,
             engine,
-        })
+        };
+        // Preflight the default dtype's matched filter (validates the
+        // pulse/frame configuration at worker start).
+        ctx.matched_for(recipe.dtype)?;
+        Ok(ctx)
+    }
+
+    /// The matched filter computing in `dtype`, built on first use.
+    fn matched_for(&self, dtype: DType) -> FftResult<AnyTransform> {
+        let mut map = self.matched.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(t) = map.get(&dtype) {
+            return Ok(t.clone());
+        }
+        let (cr, ci) = (&self.chirp.0, &self.chirp.1);
+        let built = match dtype {
+            DType::F64 => {
+                let mf: MatchedFilter<f64> =
+                    MatchedFilter::new(&Planner::new(), self.strategy, self.n, cr, ci)?;
+                AnyTransform::F64(Arc::new(mf))
+            }
+            DType::F32 => {
+                let mf: MatchedFilter<f32> =
+                    MatchedFilter::new(&Planner::new(), self.strategy, self.n, cr, ci)?;
+                AnyTransform::F32(Arc::new(mf))
+            }
+            DType::Bf16 => {
+                let mf: MatchedFilter<crate::precision::Bf16> =
+                    MatchedFilter::new(&Planner::new(), self.strategy, self.n, cr, ci)?;
+                AnyTransform::Bf16(Arc::new(mf))
+            }
+            DType::F16 => {
+                let mf: MatchedFilter<crate::precision::F16> =
+                    MatchedFilter::new(&Planner::new(), self.strategy, self.n, cr, ci)?;
+                AnyTransform::F16(Arc::new(mf))
+            }
+        };
+        map.insert(dtype, built.clone());
+        Ok(built)
     }
 
     /// Resolve a batch key to the one transform that serves it.
-    fn transform_for(&self, key: &PlanKey) -> FftResult<Arc<dyn Transform<f32>>> {
+    fn transform_for(&self, key: &PlanKey) -> FftResult<AnyTransform> {
         match key.op {
-            FftOp::Forward => self.planner.plan(key.n, key.strategy, Direction::Forward),
-            FftOp::Inverse => self.planner.plan(key.n, key.strategy, Direction::Inverse),
-            FftOp::MatchedFilter => Ok(self.matched.clone() as Arc<dyn Transform<f32>>),
+            FftOp::Forward => {
+                self.planner
+                    .plan(key.n, key.strategy, Direction::Forward, key.dtype)
+            }
+            FftOp::Inverse => {
+                self.planner
+                    .plan(key.n, key.strategy, Direction::Inverse, key.dtype)
+            }
+            FftOp::MatchedFilter => self.matched_for(key.dtype),
+        }
+    }
+
+    /// The a-priori error bound attached to responses for `key` —
+    /// [`crate::analysis::bounds::serving_bound`] evaluated with the
+    /// `|t|max` cached at worker start.  None for the matched-filter
+    /// composite (two transforms plus a pointwise product; no single
+    /// eq.-(11) form applies).
+    fn bound_for(&self, key: &PlanKey) -> Option<f64> {
+        match key.op {
+            FftOp::MatchedFilter => None,
+            FftOp::Forward | FftOp::Inverse => self.tmax_stored.map(|tmax| {
+                serving_bound_from_tmax(tmax, key.dtype.epsilon(), self.n.trailing_zeros())
+            }),
         }
     }
 
     /// Execute a batch in place: results overwrite the batch arena.
-    fn run_batch(&self, batch: &mut Batch, scratch: &mut Scratch<f32>) -> FftResult<()> {
+    fn run_batch(&self, batch: &mut Batch, scratch: &mut AnyScratch) -> FftResult<()> {
         match &self.engine {
             None => self.run_native(batch, scratch),
             Some(engine) => self.run_pjrt(engine, batch),
         }
     }
 
-    fn run_native(&self, batch: &mut Batch, scratch: &mut Scratch<f32>) -> FftResult<()> {
+    fn run_native(&self, batch: &mut Batch, scratch: &mut AnyScratch) -> FftResult<()> {
         let transform = self.transform_for(&batch.key)?;
-        transform.execute_many(batch.arena.view_mut(), scratch);
-        Ok(())
+        transform.execute_many_any(&mut batch.arena, scratch)
     }
 
     fn run_pjrt(&self, engine: &Engine, batch: &mut Batch) -> FftResult<()> {
+        // The AOT artifacts are compiled for f32 I/O; other dtypes are
+        // a typed error (the native backend serves them).
+        let arena = match &mut batch.arena {
+            AnyArena::F32(a) => a,
+            _ => {
+                return Err(FftError::Unsupported(
+                    "PJRT backend serves dtype f32 only (use the native backend)",
+                ))
+            }
+        };
         let kind = match batch.key.op {
             FftOp::Forward | FftOp::Inverse => ArtifactKind::Fft,
             FftOp::MatchedFilter => ArtifactKind::MatchedFilter,
         };
         let inverse = batch.key.op == FftOp::Inverse;
-        let count = batch.len();
+        let count = batch.meta.len();
 
         // Pick the smallest artifact batch that fits, else the largest
         // (and chunk).
@@ -186,7 +280,7 @@ impl ComputeCtx {
             // the arena (already f32).
             let mut input = BatchF32::zeroed(chunk, self.n);
             for row in 0..len {
-                let (fre, fim) = batch.arena.frame(start + row);
+                let (fre, fim) = arena.frame(start + row);
                 input.re[row * self.n..(row + 1) * self.n].copy_from_slice(fre);
                 input.im[row * self.n..(row + 1) * self.n].copy_from_slice(fim);
             }
@@ -203,7 +297,7 @@ impl ComputeCtx {
             // identical for both backends.
             for row in 0..len {
                 let (r, i) = result.row(row);
-                let (fre, fim) = batch.arena.frame_mut(start + row);
+                let (fre, fim) = arena.frame_mut(start + row);
                 fre.copy_from_slice(r);
                 fim.copy_from_slice(i);
             }
@@ -220,10 +314,11 @@ pub struct Server {
     gate: Arc<Gate>,
     n: usize,
     strategy: Strategy,
+    dtype: DType,
     next_id: AtomicU64,
     handles: Mutex<Vec<JoinHandle<()>>>,
     workers: usize,
-    arena_pool: Arc<ArenaPool<f32>>,
+    arena_pool: Arc<AnyArenaPool>,
 }
 
 impl Server {
@@ -231,11 +326,12 @@ impl Server {
     pub fn start(cfg: ServerConfig) -> FftResult<Arc<Server>> {
         let metrics = Arc::new(Metrics::new());
         let gate = Gate::new(cfg.queue_limit);
-        let arena_pool = Arc::new(ArenaPool::<f32>::new());
+        let arena_pool = Arc::new(AnyArenaPool::new());
         let recipe = ComputeRecipe {
             n: cfg.n,
             strategy: cfg.strategy,
             pulse_len: cfg.pulse_len,
+            dtype: cfg.dtype,
             artifact_dir: match &cfg.backend {
                 Backend::Native => None,
                 Backend::Pjrt { artifact_dir } => {
@@ -257,7 +353,7 @@ impl Server {
         let mut handles = Vec::new();
 
         // Worker pool: each worker builds its own ComputeCtx (the PJRT
-        // client is not Send) and owns its own Scratch pool.
+        // client is not Send) and owns its own per-dtype Scratch pools.
         for w in 0..cfg.workers.max(1) {
             let work_rx = work_rx.clone();
             let recipe = recipe.clone();
@@ -291,6 +387,7 @@ impl Server {
             gate,
             n: cfg.n,
             strategy: cfg.strategy,
+            dtype: cfg.dtype,
             next_id: AtomicU64::new(1),
             handles: Mutex::new(handles),
             workers: cfg.workers.max(1),
@@ -298,11 +395,25 @@ impl Server {
         }))
     }
 
-    /// Submit one frame; returns the response channel, or an error when
-    /// backpressure rejects or the frame is malformed.
+    /// Submit one frame in the server's default dtype; returns the
+    /// response channel, or an error when backpressure rejects or the
+    /// frame is malformed.
     pub fn submit(
         &self,
         op: FftOp,
+        re: Vec<f64>,
+        im: Vec<f64>,
+    ) -> FftResult<mpsc::Receiver<FftResponse>> {
+        self.submit_with(op, self.dtype, re, im)
+    }
+
+    /// Submit one frame with an explicit working precision — the
+    /// precision-polymorphic entry point.  The payload is rounded once
+    /// into `dtype` at intake; the response reports `dtype` back.
+    pub fn submit_with(
+        &self,
+        op: FftOp,
+        dtype: DType,
         re: Vec<f64>,
         im: Vec<f64>,
     ) -> FftResult<mpsc::Receiver<FftResponse>> {
@@ -316,11 +427,11 @@ impl Server {
                 limit: self.gate.limit(),
             });
         };
-        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        self.metrics.record_submitted(dtype);
         let (tx, rx) = mpsc::channel();
         let req = FftRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
-            key: PlanKey { n: self.n, op, strategy: self.strategy },
+            key: PlanKey { n: self.n, op, strategy: self.strategy, dtype },
             re,
             im,
             reply: tx,
@@ -333,9 +444,20 @@ impl Server {
         Ok(rx)
     }
 
-    /// Submit and block for the response.
+    /// Submit and block for the response (default dtype).
     pub fn submit_wait(&self, op: FftOp, re: Vec<f64>, im: Vec<f64>) -> FftResult<FftResponse> {
-        let rx = self.submit(op, re, im)?;
+        self.submit_wait_with(op, self.dtype, re, im)
+    }
+
+    /// Submit with an explicit dtype and block for the response.
+    pub fn submit_wait_with(
+        &self,
+        op: FftOp,
+        dtype: DType,
+        re: Vec<f64>,
+        im: Vec<f64>,
+    ) -> FftResult<FftResponse> {
+        let rx = self.submit_with(op, dtype, re, im)?;
         rx.recv()
             .map_err(|_| FftError::ChannelClosed("response channel closed"))
     }
@@ -367,14 +489,19 @@ impl Server {
         &self.metrics
     }
 
-    /// Point-in-time serving metrics (counters, occupancy, queue
-    /// depth, latency quantiles).
+    /// Point-in-time serving metrics (counters — aggregate and
+    /// per-dtype — occupancy, queue depth, latency quantiles).
     pub fn snapshot(&self) -> super::metrics::MetricsSnapshot {
         self.metrics.snapshot()
     }
 
     pub fn in_flight(&self) -> usize {
         self.gate.in_flight()
+    }
+
+    /// The server's default working precision.
+    pub fn dtype(&self) -> DType {
+        self.dtype
     }
 
     /// Arenas parked for recycling (observability for the zero-copy
@@ -390,7 +517,7 @@ fn intake_loop(
     policy: BatchPolicy,
     metrics: Arc<Metrics>,
     workers: usize,
-    pool: Arc<ArenaPool<f32>>,
+    pool: Arc<AnyArenaPool>,
 ) {
     let mut batcher = Batcher::new(policy, pool);
     loop {
@@ -450,13 +577,14 @@ fn worker_loop(
     rx: Arc<Mutex<mpsc::Receiver<WorkerMsg>>>,
     recipe: ComputeRecipe,
     metrics: Arc<Metrics>,
-    pool: Arc<ArenaPool<f32>>,
+    pool: Arc<AnyArenaPool>,
 ) {
     // Build the per-thread compute state; if that fails every batch is
-    // answered with the error.  The Scratch pool lives as long as the
-    // worker — after the first batch the compute path stops allocating.
+    // answered with the error.  The per-dtype Scratch pools live as
+    // long as the worker — after the first batch of each dtype the
+    // compute path stops allocating.
     let ctx = ComputeCtx::new(&recipe);
-    let mut scratch = Scratch::<f32>::new();
+    let mut scratch = AnyScratch::new();
     loop {
         let msg = {
             // Poison recovery: a sibling worker that panicked while
@@ -467,9 +595,14 @@ fn worker_loop(
         match msg {
             Ok(WorkerMsg::Work(mut batch)) => {
                 let size = batch.len();
+                let key = batch.key;
                 let result = match &ctx {
                     Ok(ctx) => ctx.run_batch(&mut batch, &mut scratch),
                     Err(e) => Err(e.clone()),
+                };
+                let bound = match &ctx {
+                    Ok(ctx) => ctx.bound_for(&key),
+                    Err(_) => None,
                 };
                 let Batch { arena, meta, .. } = batch;
                 match result {
@@ -478,7 +611,7 @@ fn worker_loop(
                         // (zero copies), then park it for recycling.
                         let shared = Arc::new(arena);
                         for (frame, m) in meta.into_iter().enumerate() {
-                            metrics.completed.fetch_add(1, Ordering::Relaxed);
+                            metrics.record_completed(key.dtype);
                             let latency = m.submitted.elapsed();
                             metrics.record_latency(latency);
                             let _ = m.reply.send(FftResponse::ok(
@@ -487,6 +620,7 @@ fn worker_loop(
                                 frame,
                                 size,
                                 latency,
+                                bound,
                             ));
                             drop(m.permit);
                         }
@@ -494,10 +628,11 @@ fn worker_loop(
                     }
                     Err(e) => {
                         for m in meta {
-                            metrics.failed.fetch_add(1, Ordering::Relaxed);
+                            metrics.record_failed(key.dtype);
                             let _ = m.reply.send(FftResponse::err(
                                 m.id,
                                 e.clone(),
+                                key.dtype,
                                 size,
                                 m.submitted.elapsed(),
                             ));

@@ -1,0 +1,710 @@
+//! The dtype layer of the execution API: a runtime description of the
+//! working precision ([`DType`]) and the dtype-erased execution types
+//! ([`AnyTransform`], [`AnyArena`], [`AnyScratch`], [`AnyArenaPool`],
+//! [`AnyPlanner`]) that let one serving plane run `f64`/`f32`/`bf16`/
+//! `fp16` transforms side by side.
+//!
+//! The paper's headline claim is about *half precision*: dual-select's
+//! bounded ratios give fp16 FFTs a 235× tighter cumulative error bound
+//! than clamped Linzer–Feig.  The typed core ([`Transform<T>`]) has
+//! carried that result since the seed, but a serving plane cannot be
+//! generic over `T` — requests pick their precision at run time.  This
+//! module erases the dtype exactly once, at the enum boundary:
+//!
+//! ```text
+//!   PlanSpec::new(n).strategy(..).dtype(DType::F16)
+//!        .build_any()?            -> AnyTransform   (enum of Arc<dyn Transform<T>>)
+//!
+//!   AnyPlanner::get(spec)?        same, cached — the cache key is the
+//!                                 full PlanSpec, dtype included
+//!
+//!   AnyArena::new(dtype, n)       dtype-tagged planar frame storage;
+//!     .push_frame_f64(re, im)     f64 payloads round ONCE into the
+//!                                 working precision (same policy as
+//!                                 the twiddle tables)
+//!
+//!   t.execute_many_any(&mut arena, &mut scratch)?
+//!                                 dispatches to the typed kernel; a
+//!                                 dtype mismatch is a typed error,
+//!                                 never a silent cast
+//! ```
+//!
+//! Inside each enum arm the full monomorphized kernel runs — the
+//! `DType::F32` path executes the *same machine code* as the typed
+//! `Transform<f32>` path, bit for bit (asserted by the
+//! `dtype_api` regression test).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, PoisonError};
+
+use crate::precision::{Bf16, F16, Real};
+
+use super::super::{Direction, Strategy};
+use super::batch::{FrameArena, Scratch};
+use super::error::{FftError, FftResult};
+use super::spec::PlanSpec;
+use super::transform::Transform;
+
+/// A runtime description of the working precision — the serving
+/// plane's wire-level dtype tag.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DType {
+    /// IEEE 754 binary64 (hardware).
+    F64,
+    /// IEEE 754 binary32 (hardware; the serving default).
+    #[default]
+    F32,
+    /// bfloat16 (software, single-rounding semantics).
+    Bf16,
+    /// IEEE 754 binary16 (software, single-rounding semantics) — the
+    /// precision the paper's headline bound is about.
+    F16,
+}
+
+impl DType {
+    /// Every supported dtype, in [`DType::index`] order.
+    pub const ALL: [DType; 4] = [DType::F64, DType::F32, DType::Bf16, DType::F16];
+
+    /// Wire/CLI name (`"f64" | "f32" | "bf16" | "f16"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F64 => "f64",
+            DType::F32 => "f32",
+            DType::Bf16 => "bf16",
+            DType::F16 => "f16",
+        }
+    }
+
+    /// Dense index into per-dtype tables (`[0, 4)`, matching
+    /// [`DType::ALL`]).
+    pub fn index(self) -> usize {
+        match self {
+            DType::F64 => 0,
+            DType::F32 => 1,
+            DType::Bf16 => 2,
+            DType::F16 => 3,
+        }
+    }
+
+    /// Unit roundoff of the format — the `eps` in the paper's error
+    /// bounds (4.88e-4 for f16, 5.96e-8 for f32).
+    pub fn epsilon(self) -> f64 {
+        match self {
+            DType::F64 => <f64 as Real>::EPSILON,
+            DType::F32 => <f32 as Real>::EPSILON,
+            DType::Bf16 => <Bf16 as Real>::EPSILON,
+            DType::F16 => <F16 as Real>::EPSILON,
+        }
+    }
+
+    /// The dtype of a typed [`Real`] working precision, if it is one
+    /// of the four wire dtypes.  `None` for downstream [`Real`]
+    /// implementations the wire format does not know about (the trait
+    /// is public and unsealed) — such types still work through the
+    /// typed API, they just have no dtype-erased spelling.
+    pub fn try_of<T: Real>() -> Option<DType> {
+        match T::NAME {
+            "f64" => Some(DType::F64),
+            "f32" => Some(DType::F32),
+            "bf16" => Some(DType::Bf16),
+            "fp16" => Some(DType::F16),
+            _ => None,
+        }
+    }
+
+    /// The dtype of one of the four built-in [`Real`] precisions;
+    /// panics for foreign `Real` implementations (use
+    /// [`DType::try_of`] when `T` may come from downstream).
+    pub fn of<T: Real>() -> DType {
+        Self::try_of::<T>()
+            .unwrap_or_else(|| panic!("Real impl {:?} has no wire dtype", T::NAME))
+    }
+}
+
+impl core::fmt::Display for DType {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl core::str::FromStr for DType {
+    type Err = FftError;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "f64" => Ok(DType::F64),
+            "f32" => Ok(DType::F32),
+            "bf16" => Ok(DType::Bf16),
+            "f16" | "fp16" | "half" => Ok(DType::F16),
+            other => Err(FftError::InvalidArgument(format!(
+                "unknown dtype {other:?} (expected f64|f32|bf16|f16)"
+            ))),
+        }
+    }
+}
+
+/// Dispatch a generic expression over every [`AnyArena`] variant.
+macro_rules! each_arena {
+    ($value:expr, $a:ident => $body:expr) => {
+        match $value {
+            AnyArena::F64($a) => $body,
+            AnyArena::F32($a) => $body,
+            AnyArena::Bf16($a) => $body,
+            AnyArena::F16($a) => $body,
+        }
+    };
+}
+
+/// Dispatch a generic expression over every [`AnyTransform`] variant.
+macro_rules! each_transform {
+    ($value:expr, $t:ident => $body:expr) => {
+        match $value {
+            AnyTransform::F64($t) => $body,
+            AnyTransform::F32($t) => $body,
+            AnyTransform::Bf16($t) => $body,
+            AnyTransform::F16($t) => $body,
+        }
+    };
+}
+
+/// Dtype-tagged planar frame storage: a [`FrameArena`] whose element
+/// type is chosen at run time.
+///
+/// Ingest policy (identical to the twiddle tables, see
+/// [`crate::fft::twiddle`]): payloads arrive as f64 and are rounded
+/// **once** into the working precision by
+/// [`AnyArena::push_frame_f64`] — never through an intermediate
+/// format.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AnyArena {
+    F64(FrameArena<f64>),
+    F32(FrameArena<f32>),
+    Bf16(FrameArena<Bf16>),
+    F16(FrameArena<F16>),
+}
+
+impl AnyArena {
+    /// An empty arena of `dtype` for frames of `frame_len` samples.
+    pub fn new(dtype: DType, frame_len: usize) -> Self {
+        match dtype {
+            DType::F64 => AnyArena::F64(FrameArena::new(frame_len)),
+            DType::F32 => AnyArena::F32(FrameArena::new(frame_len)),
+            DType::Bf16 => AnyArena::Bf16(FrameArena::new(frame_len)),
+            DType::F16 => AnyArena::F16(FrameArena::new(frame_len)),
+        }
+    }
+
+    /// The element dtype this arena stores.
+    pub fn dtype(&self) -> DType {
+        match self {
+            AnyArena::F64(_) => DType::F64,
+            AnyArena::F32(_) => DType::F32,
+            AnyArena::Bf16(_) => DType::Bf16,
+            AnyArena::F16(_) => DType::F16,
+        }
+    }
+
+    /// Samples per frame.
+    pub fn frame_len(&self) -> usize {
+        each_arena!(self, a => a.frame_len())
+    }
+
+    /// Number of frames currently stored.
+    pub fn frames(&self) -> usize {
+        each_arena!(self, a => a.frames())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.frames() == 0
+    }
+
+    /// Ensure room for `frames` frames total.
+    pub fn reserve_frames(&mut self, frames: usize) {
+        each_arena!(self, a => a.reserve_frames(frames))
+    }
+
+    /// Drop all frames and re-purpose for `frame_len`, keeping the
+    /// allocation and the dtype — the recycle path of [`AnyArenaPool`].
+    pub fn reset(&mut self, frame_len: usize) {
+        each_arena!(self, a => a.reset(frame_len))
+    }
+
+    /// Append a zeroed frame; returns its index.
+    pub fn push_zeroed(&mut self) -> usize {
+        each_arena!(self, a => a.push_zeroed())
+    }
+
+    /// Append a frame from split f64 payloads, rounding into the
+    /// working precision in one pass; returns the frame index.
+    pub fn push_frame_f64(&mut self, re: &[f64], im: &[f64]) -> usize {
+        each_arena!(self, a => a.push_frame_f64(re, im))
+    }
+
+    /// Copy frame `i` out, widened to f64 (exact for every supported
+    /// format — the wire-level read path for non-f32 dtypes).
+    pub fn frame_f64(&self, i: usize) -> (Vec<f64>, Vec<f64>) {
+        each_arena!(self, a => {
+            let (re, im) = a.frame(i);
+            (
+                re.iter().map(|&x| x.to_f64()).collect(),
+                im.iter().map(|&x| x.to_f64()).collect(),
+            )
+        })
+    }
+
+    /// The typed f32 arena, when that is what this is (the zero-copy
+    /// response fast path).
+    pub fn as_f32(&self) -> Option<&FrameArena<f32>> {
+        match self {
+            AnyArena::F32(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+impl From<FrameArena<f64>> for AnyArena {
+    fn from(a: FrameArena<f64>) -> Self {
+        AnyArena::F64(a)
+    }
+}
+impl From<FrameArena<f32>> for AnyArena {
+    fn from(a: FrameArena<f32>) -> Self {
+        AnyArena::F32(a)
+    }
+}
+impl From<FrameArena<Bf16>> for AnyArena {
+    fn from(a: FrameArena<Bf16>) -> Self {
+        AnyArena::Bf16(a)
+    }
+}
+impl From<FrameArena<F16>> for AnyArena {
+    fn from(a: FrameArena<F16>) -> Self {
+        AnyArena::F16(a)
+    }
+}
+
+/// Per-worker scratch pools, one per dtype.  Each typed pool amortizes
+/// independently, so a worker serving mixed-precision traffic is still
+/// allocation-free once every dtype it has seen is warm.
+#[derive(Debug, Default)]
+pub struct AnyScratch {
+    pub for_f64: Scratch<f64>,
+    pub for_f32: Scratch<f32>,
+    pub for_bf16: Scratch<Bf16>,
+    pub for_f16: Scratch<F16>,
+}
+
+impl AnyScratch {
+    pub fn new() -> Self {
+        AnyScratch::default()
+    }
+
+    /// Total pool misses (allocations) across all dtypes — flat after
+    /// warmup, asserted by the allocation regression test.
+    pub fn misses(&self) -> u64 {
+        self.for_f64.misses()
+            + self.for_f32.misses()
+            + self.for_bf16.misses()
+            + self.for_f16.misses()
+    }
+
+    /// Total `take` calls served across all dtypes.
+    pub fn takes(&self) -> u64 {
+        self.for_f64.takes() + self.for_f32.takes() + self.for_bf16.takes() + self.for_f16.takes()
+    }
+}
+
+/// A dtype-erased planned transform: an enum of typed
+/// `Arc<dyn Transform<T>>`, cheap to clone and [`Send`]/[`Sync`] like
+/// its contents.
+///
+/// Execution dispatches once per *batch* (not per sample): inside each
+/// arm the fully monomorphized typed kernel runs, so erasure costs one
+/// match per call.
+#[derive(Clone, Debug)]
+pub enum AnyTransform {
+    F64(Arc<dyn Transform<f64>>),
+    F32(Arc<dyn Transform<f32>>),
+    Bf16(Arc<dyn Transform<Bf16>>),
+    F16(Arc<dyn Transform<F16>>),
+}
+
+impl AnyTransform {
+    /// The working precision this transform computes in.
+    pub fn dtype(&self) -> DType {
+        match self {
+            AnyTransform::F64(_) => DType::F64,
+            AnyTransform::F32(_) => DType::F32,
+            AnyTransform::Bf16(_) => DType::Bf16,
+            AnyTransform::F16(_) => DType::F16,
+        }
+    }
+
+    /// Logical frame length (number of complex samples per execute).
+    pub fn len(&self) -> usize {
+        each_transform!(self, t => t.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Butterfly strategy baked into the plan's tables.
+    pub fn strategy(&self) -> Strategy {
+        each_transform!(self, t => t.strategy())
+    }
+
+    /// Transform direction.
+    pub fn direction(&self) -> Direction {
+        each_transform!(self, t => t.direction())
+    }
+
+    /// Execute every frame of `arena` in place, drawing working
+    /// buffers from the matching per-dtype pool of `scratch` — the
+    /// dtype-erased serving hot path.
+    ///
+    /// A dtype mismatch between transform and arena is a typed
+    /// [`FftError::DTypeMismatch`], never a silent cast.
+    pub fn execute_many_any(
+        &self,
+        arena: &mut AnyArena,
+        scratch: &mut AnyScratch,
+    ) -> FftResult<()> {
+        match (self, arena) {
+            (AnyTransform::F64(t), AnyArena::F64(a)) => {
+                t.execute_many(a.view_mut(), &mut scratch.for_f64);
+                Ok(())
+            }
+            (AnyTransform::F32(t), AnyArena::F32(a)) => {
+                t.execute_many(a.view_mut(), &mut scratch.for_f32);
+                Ok(())
+            }
+            (AnyTransform::Bf16(t), AnyArena::Bf16(a)) => {
+                t.execute_many(a.view_mut(), &mut scratch.for_bf16);
+                Ok(())
+            }
+            (AnyTransform::F16(t), AnyArena::F16(a)) => {
+                t.execute_many(a.view_mut(), &mut scratch.for_f16);
+                Ok(())
+            }
+            (t, a) => Err(FftError::DTypeMismatch { expected: t.dtype(), got: a.dtype() }),
+        }
+    }
+
+    /// Execute a single frame of `arena` in place (same dispatch and
+    /// mismatch semantics as [`AnyTransform::execute_many_any`]).
+    pub fn execute_frame_any(
+        &self,
+        arena: &mut AnyArena,
+        frame: usize,
+        scratch: &mut AnyScratch,
+    ) -> FftResult<()> {
+        match (self, arena) {
+            (AnyTransform::F64(t), AnyArena::F64(a)) => {
+                let (re, im) = a.frame_mut(frame);
+                t.execute_frame(re, im, &mut scratch.for_f64);
+                Ok(())
+            }
+            (AnyTransform::F32(t), AnyArena::F32(a)) => {
+                let (re, im) = a.frame_mut(frame);
+                t.execute_frame(re, im, &mut scratch.for_f32);
+                Ok(())
+            }
+            (AnyTransform::Bf16(t), AnyArena::Bf16(a)) => {
+                let (re, im) = a.frame_mut(frame);
+                t.execute_frame(re, im, &mut scratch.for_bf16);
+                Ok(())
+            }
+            (AnyTransform::F16(t), AnyArena::F16(a)) => {
+                let (re, im) = a.frame_mut(frame);
+                t.execute_frame(re, im, &mut scratch.for_f16);
+                Ok(())
+            }
+            (t, a) => Err(FftError::DTypeMismatch { expected: t.dtype(), got: a.dtype() }),
+        }
+    }
+}
+
+/// Shared recycler for [`AnyArena`]s travelling through the serving
+/// plane inside `Arc`s — the dtype-aware sibling of
+/// [`super::batch::ArenaPool`].  `take` reclaims a parked arena only
+/// when its dtype matches and every response handle has been dropped
+/// (refcount 1), so an f16 batch never inherits f32 storage.
+#[derive(Debug, Default)]
+pub struct AnyArenaPool {
+    parked: Mutex<Vec<Arc<AnyArena>>>,
+}
+
+/// Cap on parked arenas; beyond this, recycled arenas are dropped
+/// (bounds memory if clients hold responses for a long time).
+const ANY_ARENA_POOL_CAP: usize = 64;
+
+impl AnyArenaPool {
+    pub fn new() -> Self {
+        AnyArenaPool { parked: Mutex::new(Vec::new()) }
+    }
+
+    /// Take an arena of `dtype` configured for `frame_len`, reusing a
+    /// parked same-dtype arena whose clients have all dropped their
+    /// handles.
+    pub fn take(&self, dtype: DType, frame_len: usize) -> AnyArena {
+        let mut parked = self.parked.lock().unwrap_or_else(PoisonError::into_inner);
+        let mut i = 0;
+        while i < parked.len() {
+            if parked[i].dtype() == dtype && Arc::strong_count(&parked[i]) == 1 {
+                let arc = parked.swap_remove(i);
+                // The pool lock is held and the parked Vec owned the
+                // only handle, so no new clone can appear between the
+                // strong_count check and the unwrap.
+                let mut arena = Arc::try_unwrap(arc).unwrap_or_else(|_| {
+                    unreachable!("sole Arc handle observed under the pool lock")
+                });
+                arena.reset(frame_len);
+                return arena;
+            }
+            i += 1;
+        }
+        AnyArena::new(dtype, frame_len)
+    }
+
+    /// Park a shared arena for future reclamation.
+    pub fn recycle(&self, arena: Arc<AnyArena>) {
+        let mut parked = self.parked.lock().unwrap_or_else(PoisonError::into_inner);
+        if parked.len() < ANY_ARENA_POOL_CAP {
+            parked.push(arena);
+        }
+    }
+
+    /// Arenas currently parked (in any refcount state).
+    pub fn parked(&self) -> usize {
+        self.parked
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .len()
+    }
+}
+
+/// Thread-safe dtype-erased plan cache, keyed by the full [`PlanSpec`]
+/// — dtype included, so `(PlanSpec, DType)` pairs cache independently.
+/// Same poison-recovery policy as the typed [`super::Planner`].
+#[derive(Default)]
+pub struct AnyPlanner {
+    cache: Mutex<HashMap<PlanSpec, AnyTransform>>,
+}
+
+impl AnyPlanner {
+    pub fn new() -> Self {
+        AnyPlanner { cache: Mutex::new(HashMap::new()) }
+    }
+
+    /// Fetch or build the transform described by `spec` in
+    /// `spec.dtype`.
+    pub fn get(&self, spec: PlanSpec) -> FftResult<AnyTransform> {
+        let mut cache = self.cache.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(t) = cache.get(&spec) {
+            return Ok(t.clone());
+        }
+        let built = spec.build_any()?;
+        cache.insert(spec, built.clone());
+        Ok(built)
+    }
+
+    /// Fetch or build a complex transform for `(n, strategy,
+    /// direction, dtype)` — the serving plane's lookup shape.
+    pub fn plan(
+        &self,
+        n: usize,
+        strategy: Strategy,
+        direction: Direction,
+        dtype: DType,
+    ) -> FftResult<AnyTransform> {
+        self.get(
+            PlanSpec::new(n)
+                .strategy(strategy)
+                .direction(direction)
+                .dtype(dtype),
+        )
+    }
+
+    /// Number of cached plans.
+    pub fn len(&self) -> usize {
+        self.cache
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::metrics::rel_l2;
+    use crate::util::prng::Pcg32;
+
+    #[test]
+    fn dtype_parse_display_epsilon() {
+        for d in DType::ALL {
+            assert_eq!(d.name().parse::<DType>().unwrap(), d);
+            assert_eq!(d.to_string(), d.name());
+            assert_eq!(DType::ALL[d.index()], d);
+        }
+        assert_eq!("fp16".parse::<DType>().unwrap(), DType::F16);
+        assert!("f8".parse::<DType>().is_err());
+        assert_eq!(DType::F16.epsilon(), 4.8828125e-4);
+        assert_eq!(DType::default(), DType::F32);
+        assert_eq!(DType::of::<f32>(), DType::F32);
+        assert_eq!(DType::of::<F16>(), DType::F16);
+        assert_eq!(DType::of::<Bf16>(), DType::Bf16);
+        assert_eq!(DType::of::<f64>(), DType::F64);
+    }
+
+    #[test]
+    fn any_arena_rounds_once_and_widens_exactly() {
+        for dtype in DType::ALL {
+            let mut a = AnyArena::new(dtype, 4);
+            assert_eq!(a.dtype(), dtype);
+            // Values exactly representable in every format.
+            a.push_frame_f64(&[1.0, -0.5, 2.0, 0.0], &[0.25, 1.0, -1.0, 4.0]);
+            assert_eq!(a.frames(), 1);
+            assert_eq!(a.frame_len(), 4);
+            let (re, im) = a.frame_f64(0);
+            assert_eq!(re, vec![1.0, -0.5, 2.0, 0.0], "{dtype}");
+            assert_eq!(im, vec![0.25, 1.0, -1.0, 4.0], "{dtype}");
+        }
+        // Rounding happens (once) for values outside the format.
+        let mut h = AnyArena::new(DType::F16, 1);
+        h.push_frame_f64(&[1.0 + 1e-6], &[0.0]);
+        assert_eq!(h.frame_f64(0).0, vec![1.0]);
+    }
+
+    #[test]
+    fn any_transform_executes_each_dtype() {
+        let n = 64;
+        let mut rng = Pcg32::seed(5);
+        let re: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+        let im: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+        let (wr, wi) = crate::dft::naive_dft(&re, &im, false);
+        for dtype in DType::ALL {
+            let t = PlanSpec::new(n)
+                .strategy(Strategy::DualSelect)
+                .dtype(dtype)
+                .build_any()
+                .unwrap();
+            assert_eq!(t.dtype(), dtype);
+            assert_eq!(t.len(), n);
+            assert_eq!(t.strategy(), Strategy::DualSelect);
+            assert_eq!(t.direction(), Direction::Forward);
+            let mut arena = AnyArena::new(dtype, n);
+            arena.push_frame_f64(&re, &im);
+            let mut scratch = AnyScratch::new();
+            t.execute_many_any(&mut arena, &mut scratch).unwrap();
+            let (gr, gi) = arena.frame_f64(0);
+            let err = rel_l2(&gr, &gi, &wr, &wi);
+            // Coarse per-dtype sanity; exact bound checks live in the
+            // analysis tests and the coordinator integration tests.
+            let tol = 100.0 * dtype.epsilon();
+            assert!(err < tol, "{dtype} err {err:.3e} tol {tol:.3e}");
+        }
+    }
+
+    #[test]
+    fn execute_frame_any_matches_execute_many_any() {
+        let n = 32;
+        let t = PlanSpec::new(n).dtype(DType::F16).build_any().unwrap();
+        let mut rng = Pcg32::seed(9);
+        let re: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+        let im: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+        let mut a = AnyArena::new(DType::F16, n);
+        let mut b = AnyArena::new(DType::F16, n);
+        a.push_frame_f64(&re, &im);
+        b.push_frame_f64(&re, &im);
+        let mut scratch = AnyScratch::new();
+        t.execute_many_any(&mut a, &mut scratch).unwrap();
+        t.execute_frame_any(&mut b, 0, &mut scratch).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn dtype_mismatch_is_a_typed_error() {
+        let t = PlanSpec::new(8).dtype(DType::F16).build_any().unwrap();
+        let mut arena = AnyArena::new(DType::F32, 8);
+        arena.push_zeroed();
+        let mut scratch = AnyScratch::new();
+        let err = t.execute_many_any(&mut arena, &mut scratch).unwrap_err();
+        assert_eq!(
+            err,
+            FftError::DTypeMismatch { expected: DType::F16, got: DType::F32 }
+        );
+        assert!(err.to_string().contains("dtype mismatch"), "{err}");
+        let err2 = t.execute_frame_any(&mut arena, 0, &mut scratch).unwrap_err();
+        assert_eq!(err, err2);
+    }
+
+    #[test]
+    fn any_planner_caches_per_dtype() {
+        let planner = AnyPlanner::new();
+        let spec = PlanSpec::new(64).strategy(Strategy::DualSelect);
+        for dtype in DType::ALL {
+            planner.get(spec.dtype(dtype)).unwrap();
+        }
+        assert_eq!(planner.len(), 4);
+        // Same (spec, dtype): served from cache, count unchanged.
+        planner.get(spec.dtype(DType::F16)).unwrap();
+        assert_eq!(planner.len(), 4);
+        // plan() is the (n, strategy, direction, dtype) spelling.
+        planner
+            .plan(64, Strategy::DualSelect, Direction::Inverse, DType::F16)
+            .unwrap();
+        assert_eq!(planner.len(), 5);
+        // Build errors are not cached.
+        assert!(planner.get(PlanSpec::new(100).stockham()).is_err());
+        assert_eq!(planner.len(), 5);
+    }
+
+    #[test]
+    fn any_arena_pool_matches_dtype_and_refcount() {
+        let pool = AnyArenaPool::new();
+        let mut a = pool.take(DType::F16, 8);
+        for _ in 0..4 {
+            a.push_zeroed();
+        }
+        a.reserve_frames(16);
+        let shared = Arc::new(a);
+        let client = shared.clone();
+        pool.recycle(shared);
+        // Client still holds a handle: not reclaimable.
+        assert_eq!(pool.take(DType::F16, 8).frames(), 0);
+        drop(client);
+        // An f32 request must NOT steal the parked f16 arena.
+        let f32_arena = pool.take(DType::F32, 8);
+        assert_eq!(f32_arena.dtype(), DType::F32);
+        assert_eq!(pool.parked(), 1);
+        // A matching f16 request reclaims it (reset, allocation kept).
+        let reused = pool.take(DType::F16, 8);
+        assert_eq!(reused.dtype(), DType::F16);
+        assert_eq!(reused.frames(), 0);
+        assert_eq!(pool.parked(), 0);
+    }
+
+    #[test]
+    fn any_scratch_pools_amortize_per_dtype() {
+        let n = 64;
+        let mut scratch = AnyScratch::new();
+        for dtype in DType::ALL {
+            let t = PlanSpec::new(n).dtype(dtype).build_any().unwrap();
+            let mut arena = AnyArena::new(dtype, n);
+            for _ in 0..4 {
+                arena.push_zeroed();
+            }
+            t.execute_many_any(&mut arena, &mut scratch).unwrap();
+            let warm = scratch.misses();
+            t.execute_many_any(&mut arena, &mut scratch).unwrap();
+            t.execute_many_any(&mut arena, &mut scratch).unwrap();
+            assert_eq!(scratch.misses(), warm, "{dtype} pool kept allocating");
+        }
+        assert!(scratch.takes() > 0);
+    }
+}

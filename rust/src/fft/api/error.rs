@@ -7,7 +7,8 @@
 //! * plan construction — [`FftError::NonPowerOfTwo`],
 //!   [`FftError::InvalidSize`], [`FftError::UnsupportedStrategy`],
 //!   [`FftError::Unsupported`]
-//! * data shape — [`FftError::LengthMismatch`]
+//! * data shape — [`FftError::LengthMismatch`],
+//!   [`FftError::DTypeMismatch`]
 //! * user input (CLI / spec parsing) — [`FftError::UnknownStrategy`],
 //!   [`FftError::InvalidArgument`]
 //! * serving plane — [`FftError::Rejected`], [`FftError::ChannelClosed`],
@@ -17,6 +18,8 @@
 use core::fmt;
 
 use crate::fft::Strategy;
+
+use super::dtype::DType;
 
 /// Shorthand used across the crate.
 pub type FftResult<T> = Result<T, FftError>;
@@ -30,6 +33,9 @@ pub enum FftError {
     InvalidSize { n: usize, reason: &'static str },
     /// Input length does not match what the plan was built for.
     LengthMismatch { expected: usize, got: usize },
+    /// A dtype-erased execute was handed buffers of a different
+    /// working precision than the transform computes in.
+    DTypeMismatch { expected: DType, got: DType },
     /// The chosen (algorithm, strategy) combination is not available.
     UnsupportedStrategy { strategy: Strategy, reason: &'static str },
     /// The operation has no implementation in this build.
@@ -61,6 +67,9 @@ impl fmt::Display for FftError {
             FftError::InvalidSize { n, reason } => write!(f, "{reason}, got {n}"),
             FftError::LengthMismatch { expected, got } => {
                 write!(f, "length mismatch: expected {expected}, got {got}")
+            }
+            FftError::DTypeMismatch { expected, got } => {
+                write!(f, "dtype mismatch: transform computes in {expected}, buffers are {got}")
             }
             FftError::UnsupportedStrategy { strategy, reason } => {
                 write!(f, "strategy {strategy} unsupported: {reason}")

@@ -25,6 +25,11 @@
 //!   // Legacy adapters (owned buffers) still work, bit-identically:
 //!   transform.execute(&mut buf, &mut scratch_buf)
 //!   transform.execute_batch(&mut frames, &mut scratch_buf)
+//!
+//!   // Pick the working precision at run time (the serving plane's
+//!   // shape — see the [`dtype`] module):
+//!   PlanSpec::new(n).dtype(DType::F16).build_any()?   -> AnyTransform
+//!   any.execute_many_any(&mut any_arena, &mut any_scratch)?
 //! ```
 //!
 //! Concrete plan types ([`super::Plan`], [`super::radix4::Radix4Plan`],
@@ -35,12 +40,14 @@
 //! contract and migration notes.
 
 pub mod batch;
+pub mod dtype;
 pub mod error;
 pub mod planner;
 pub mod spec;
 pub mod transform;
 
 pub use batch::{ArenaPool, FrameArena, FrameBatch, FrameBatchMut, Scratch};
+pub use dtype::{AnyArena, AnyArenaPool, AnyPlanner, AnyScratch, AnyTransform, DType};
 pub use error::{FftError, FftResult};
 pub use planner::Planner;
 pub use spec::{Algorithm, PlanSpec};

@@ -15,6 +15,7 @@ use std::sync::{Arc, Mutex, PoisonError};
 use crate::precision::Real;
 
 use super::super::{Direction, Strategy};
+use super::dtype::DType;
 use super::error::FftResult;
 use super::spec::PlanSpec;
 use super::transform::Transform;
@@ -36,7 +37,17 @@ impl<T: Real> Planner<T> {
     }
 
     /// Fetch or build the transform described by `spec`.
+    ///
+    /// The spec's `dtype` field is normalized to `T` first: a typed
+    /// planner computes in exactly one precision, so specs that differ
+    /// only in their (ignored) dtype tag share one cache entry.  (For
+    /// a downstream `Real` impl with no wire dtype the tag is left
+    /// as-is — there is nothing to normalize to.)
     pub fn get(&self, spec: PlanSpec) -> FftResult<Arc<dyn Transform<T>>> {
+        let spec = match DType::try_of::<T>() {
+            Some(dtype) => spec.dtype(dtype),
+            None => spec,
+        };
         let mut cache = self.cache.lock().unwrap_or_else(PoisonError::into_inner);
         if let Some(t) = cache.get(&spec) {
             return Ok(t.clone());

@@ -1,7 +1,7 @@
 //! [`PlanSpec`]: one builder for every transform kind.
 //!
 //! ```
-//! use fmafft::fft::{Direction, PlanSpec, Strategy, Transform};
+//! use fmafft::fft::{Direction, DType, PlanSpec, Strategy, Transform};
 //! use fmafft::precision::SplitBuf;
 //!
 //! // FFT of a constant is n·δ0.
@@ -20,7 +20,14 @@
 //!     .direction(Direction::Inverse)
 //!     .radix4();
 //! assert!(spec.build::<f32>().is_ok());
+//!
+//! // Pick the working precision at run time with the dtype-erased
+//! // form (what the serving plane does).
+//! let any = PlanSpec::new(8).dtype(DType::F16).build_any().unwrap();
+//! assert_eq!(any.dtype(), DType::F16);
 //! ```
+
+use std::sync::Arc;
 
 use crate::precision::Real;
 
@@ -30,6 +37,7 @@ use super::super::plan::Plan;
 use super::super::radix4::Radix4Plan;
 use super::super::real_fft::RealFftPlan;
 use super::super::{Direction, Strategy};
+use super::dtype::{AnyTransform, DType};
 use super::error::{FftError, FftResult};
 use super::transform::{RealTransform, Transform};
 
@@ -59,11 +67,15 @@ pub struct PlanSpec {
     pub direction: Direction,
     pub algorithm: Algorithm,
     pub real_input: bool,
+    /// Working precision used by [`PlanSpec::build_any`] and the
+    /// dtype-erased planner cache.  The statically-typed
+    /// [`PlanSpec::build`] ignores it — there `T` decides.
+    pub dtype: DType,
 }
 
 impl PlanSpec {
-    /// A forward, dual-select, auto-algorithm complex transform of
-    /// size `n`; refine with the builder methods.
+    /// A forward, dual-select, auto-algorithm, f32 complex transform
+    /// of size `n`; refine with the builder methods.
     pub fn new(n: usize) -> Self {
         PlanSpec {
             n,
@@ -71,11 +83,18 @@ impl PlanSpec {
             direction: Direction::Forward,
             algorithm: Algorithm::Auto,
             real_input: false,
+            dtype: DType::F32,
         }
     }
 
     pub fn strategy(mut self, strategy: Strategy) -> Self {
         self.strategy = strategy;
+        self
+    }
+
+    /// Working precision for the dtype-erased build path.
+    pub fn dtype(mut self, dtype: DType) -> Self {
+        self.dtype = dtype;
         self
     }
 
@@ -161,6 +180,20 @@ impl PlanSpec {
             )?)),
         }
     }
+
+    /// Build the transform this spec describes in the working
+    /// precision named by `self.dtype` — the dtype-erased form the
+    /// serving plane and [`super::AnyPlanner`] use.  Each arm routes
+    /// through [`PlanSpec::build`], so per dtype the produced
+    /// transform is identical to the statically-typed one.
+    pub fn build_any(&self) -> FftResult<AnyTransform> {
+        Ok(match self.dtype {
+            DType::F64 => AnyTransform::F64(Arc::from(self.build::<f64>()?)),
+            DType::F32 => AnyTransform::F32(Arc::from(self.build::<f32>()?)),
+            DType::Bf16 => AnyTransform::Bf16(Arc::from(self.build::<crate::precision::Bf16>()?)),
+            DType::F16 => AnyTransform::F16(Arc::from(self.build::<crate::precision::F16>()?)),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -242,6 +275,36 @@ mod tests {
         set.insert(PlanSpec::new(8).inverse());
         set.insert(PlanSpec::new(8).dit());
         assert_eq!(set.len(), 3);
+        // The dtype is part of the key: same shape, different working
+        // precision, distinct cache entries.
+        set.insert(PlanSpec::new(8).dtype(DType::F16));
+        set.insert(PlanSpec::new(8).dtype(DType::Bf16));
+        assert_eq!(set.len(), 5);
+    }
+
+    #[test]
+    fn build_any_dispatches_on_spec_dtype() {
+        for dtype in DType::ALL {
+            let t = PlanSpec::new(64)
+                .strategy(Strategy::DualSelect)
+                .dtype(dtype)
+                .build_any()
+                .unwrap();
+            assert_eq!(t.dtype(), dtype);
+            assert_eq!(t.len(), 64);
+        }
+        // Build errors carry through unchanged.
+        assert_eq!(
+            PlanSpec::new(100).stockham().dtype(DType::F16).build_any().unwrap_err(),
+            FftError::NonPowerOfTwo { n: 100 }
+        );
+        // Every algorithm builds in every dtype (Bluestein via odd n).
+        for dtype in DType::ALL {
+            assert!(PlanSpec::new(60).dtype(dtype).build_any().is_ok());
+            assert!(PlanSpec::new(64).radix4().dtype(dtype).build_any().is_ok());
+            assert!(PlanSpec::new(64).dit().dtype(dtype).build_any().is_ok());
+            assert!(PlanSpec::new(64).real_input().dtype(dtype).build_any().is_ok());
+        }
     }
 
     #[test]

@@ -29,8 +29,9 @@ pub mod stockham;
 pub mod twiddle;
 
 pub use api::{
-    Algorithm, ArenaPool, FftError, FftResult, FrameArena, FrameBatch, FrameBatchMut, PlanSpec,
-    Planner, RealTransform, Scratch, Transform,
+    Algorithm, AnyArena, AnyArenaPool, AnyPlanner, AnyScratch, AnyTransform, ArenaPool, DType,
+    FftError, FftResult, FrameArena, FrameBatch, FrameBatchMut, PlanSpec, Planner, RealTransform,
+    Scratch, Transform,
 };
 pub use plan::Plan;
 

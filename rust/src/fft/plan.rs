@@ -13,6 +13,11 @@ use super::twiddle::{pass_angles, plain_table, ratio_table, PlainTable, RatioTab
 use super::{log2_exact, Direction, FftResult, Strategy};
 
 /// Precomputed table for one Stockham pass.
+///
+/// (The constant-`sel` runs a segment-dispatching kernel would need
+/// are stored inside the [`RatioTable`] itself — built once in
+/// `ratio_table`, borrowed via `RatioTable::segments`, never
+/// recomputed or reallocated on the execute path.)
 #[derive(Clone, Debug)]
 pub struct PassTable<T> {
     /// Stride (= twiddle count) of this pass: `2^p`.
@@ -21,9 +26,6 @@ pub struct PassTable<T> {
     /// True when the (ratio) table is exactly W^0 everywhere — the
     /// butterfly degenerates to add/sub (see `RatioTable::is_trivial`).
     pub trivial: bool,
-    /// Constant-`sel` runs of the ratio table (`RatioTable::segments`),
-    /// precomputed so the hot loop dispatches per run, not per element.
-    pub segments: Vec<(usize, usize, bool)>,
 }
 
 #[derive(Clone, Debug)]
@@ -58,11 +60,11 @@ impl<T: Real> Plan<T> {
                 Strategy::Standard => PassKind::Plain(plain_table(&angles)),
                 _ => PassKind::Ratio(ratio_table(&angles, strategy)),
             };
-            let (trivial, segments) = match &kind {
-                PassKind::Ratio(t) => (t.is_trivial(), t.segments()),
-                PassKind::Plain(_) => (false, Vec::new()),
+            let trivial = match &kind {
+                PassKind::Ratio(t) => t.is_trivial(),
+                PassKind::Plain(_) => false,
             };
-            passes.push(PassTable { s: 1 << p, kind, trivial, segments });
+            passes.push(PassTable { s: 1 << p, kind, trivial });
         }
         Ok(Plan { n, strategy, direction, passes })
     }

@@ -37,6 +37,22 @@ pub struct RatioTable<T> {
     /// True where the cosine path was selected (the paper's one-bit
     /// flag; here a bool lane so kernels can be branchy or branch-free).
     pub sel: Vec<bool>,
+    /// Maximal constant-`sel` runs, precomputed at table build time
+    /// (see [`RatioTable::segments`]).
+    segments: Vec<(usize, usize, bool)>,
+}
+
+/// Maximal runs of constant `sel`, as `(start, end, cos_path)`.
+fn compute_segments(sel: &[bool]) -> Vec<(usize, usize, bool)> {
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    for j in 1..=sel.len() {
+        if j == sel.len() || sel[j] != sel[start] {
+            out.push((start, j, sel[start]));
+            start = j;
+        }
+    }
+    out
 }
 
 impl<T: Real> RatioTable<T> {
@@ -44,19 +60,14 @@ impl<T: Real> RatioTable<T> {
     ///
     /// Because the dual-select rule compares |cos θ| with |sin θ| and
     /// the pass angles are monotone in j, `sel` changes at most a few
-    /// times per pass — the hot loop iterates run-by-run with the path
+    /// times per pass — a kernel can iterate run-by-run with the path
     /// choice hoisted out (branch-free, vectorizable inner loops; this
-    /// is the §Perf L3 iteration 2 optimization).
-    pub fn segments(&self) -> Vec<(usize, usize, bool)> {
-        let mut out = Vec::new();
-        let mut start = 0usize;
-        for j in 1..=self.sel.len() {
-            if j == self.sel.len() || self.sel[j] != self.sel[start] {
-                out.push((start, j, self.sel[start]));
-                start = j;
-            }
-        }
-        out
+    /// is the §Perf L3 iteration 2 optimization).  The runs are
+    /// computed once in [`ratio_table`] and stored with the table, so
+    /// this accessor is a borrow — safe to call from hot loops, never
+    /// allocates.
+    pub fn segments(&self) -> &[(usize, usize, bool)] {
+        &self.segments
     }
 
     /// True when every entry is the exact trivial twiddle W^0
@@ -118,6 +129,7 @@ pub fn ratio_table<T: Real>(angles: &[f64], strategy: Strategy) -> RatioTable<T>
         m2: Vec::with_capacity(angles.len()),
         t: Vec::with_capacity(angles.len()),
         sel: Vec::with_capacity(angles.len()),
+        segments: Vec::new(),
     };
     for &a in angles {
         let (wr, wi) = (a.cos(), a.sin());
@@ -134,6 +146,7 @@ pub fn ratio_table<T: Real>(angles: &[f64], strategy: Strategy) -> RatioTable<T>
         out.t.push(T::from_f64(t));
         out.sel.push(cosine);
     }
+    out.segments = compute_segments(&out.sel);
     out
 }
 
@@ -290,6 +303,31 @@ mod tests {
         dit.sort_unstable();
         dit.dedup();
         assert_eq!(dit, (0..(n / 2) as i64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn segments_are_precomputed_and_borrowed() {
+        let angles = pass_angles(1024, 9, Direction::Forward);
+        let t: RatioTable<f64> = ratio_table(&angles, Strategy::DualSelect);
+        // The accessor borrows the stored runs — same pointer every
+        // call, no per-call allocation.
+        assert_eq!(t.segments().as_ptr(), t.segments().as_ptr());
+        // The runs tile the table, alternate `sel`, and match the lane.
+        let mut covered = 0usize;
+        let mut prev: Option<bool> = None;
+        for &(start, end, cos) in t.segments() {
+            assert_eq!(start, covered);
+            assert!(end > start);
+            covered = end;
+            for j in start..end {
+                assert_eq!(t.sel[j], cos);
+            }
+            if let Some(p) = prev {
+                assert_ne!(p, cos, "adjacent runs must differ");
+            }
+            prev = Some(cos);
+        }
+        assert_eq!(covered, t.sel.len());
     }
 
     #[test]

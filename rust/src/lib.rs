@@ -9,11 +9,15 @@
 //! * **Public API** ([`fft::api`]) — the typed [`fft::FftError`], the
 //!   [`fft::Transform`] trait (one execute shape for every transform
 //!   kind), the [`fft::PlanSpec`] builder, the generalized
-//!   [`fft::Planner`] cache, and the zero-copy buffer layer
+//!   [`fft::Planner`] cache, the zero-copy buffer layer
 //!   ([`fft::FrameArena`] batch storage, [`fft::FrameBatchMut`]
-//!   strided views, pooled [`fft::Scratch`]).  Start here:
+//!   strided views, pooled [`fft::Scratch`]), and the dtype layer
+//!   ([`fft::DType`], dtype-erased [`fft::AnyTransform`] /
+//!   [`fft::AnyArena`] / [`fft::AnyPlanner`]) that picks the working
+//!   precision at run time.  Start here:
 //!   `PlanSpec::new(n).strategy(Strategy::DualSelect).build::<f32>()?`,
-//!   then `transform.execute_many(arena.view_mut(), &mut scratch)`.
+//!   then `transform.execute_many(arena.view_mut(), &mut scratch)`;
+//!   or `.dtype(DType::F16).build_any()?` for runtime precision.
 //! * **Native FFT core** ([`fft`], [`precision`], [`analysis`]) — a
 //!   generic-precision radix-2/4 Stockham FFT implementing all four
 //!   butterfly strategies the paper compares (standard 10-op,

@@ -1,7 +1,9 @@
 //! Allocation-count regression test for the worker hot path: after a
-//! one-batch warmup, `execute_many` over an arena view with a pooled
-//! [`Scratch`] must perform ZERO heap allocations, for every plan kind
-//! plus the matched filter.
+//! one-batch warmup, batch execution with pooled scratch must perform
+//! ZERO heap allocations — for every plan kind, for every working
+//! dtype (f64/f32/bf16/f16), through both the typed
+//! (`Transform::execute_many`) and the dtype-erased
+//! (`AnyTransform::execute_many_any`) entry points.
 //!
 //! This test binary installs a counting global allocator, so it
 //! contains exactly one `#[test]` (parallel tests in the same binary
@@ -11,7 +13,11 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use fmafft::fft::{Direction, FrameArena, PlanSpec, Planner, Scratch, Strategy, Transform};
+use fmafft::fft::{
+    AnyArena, AnyArenaPool, AnyPlanner, AnyScratch, AnyTransform, DType, Direction, FrameArena,
+    PlanSpec, Planner, Scratch, Strategy, Transform,
+};
+use fmafft::precision::Real;
 use fmafft::signal::chirp::default_chirp;
 use fmafft::signal::pulse::MatchedFilter;
 use fmafft::util::prng::Pcg32;
@@ -41,45 +47,40 @@ fn allocations() -> u64 {
     ALLOCS.load(Ordering::SeqCst)
 }
 
-fn fill(arena: &mut FrameArena<f32>, n: usize, frames: usize, seed: u64) {
+fn fill<T: Real>(arena: &mut FrameArena<T>, n: usize, frames: usize, seed: u64) {
     let mut rng = Pcg32::seed(seed);
     for _ in 0..frames {
-        let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
-        let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let re: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+        let im: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
         arena.push_frame_f64(&re, &im);
     }
 }
 
-#[test]
-fn worker_hot_path_allocates_zero_after_warmup() {
-    let batch = 16;
-
+/// The typed worker shape for one working precision: every plan kind
+/// plus the matched filter, one persistent scratch pool, repeated
+/// batches — with the allocator counter required to stand still after
+/// the warmup batch.
+fn typed_hot_path_is_alloc_free<T: Real>(batch: usize) {
     // Build every plan kind the serving plane can run, plus the
     // matched filter (planning/allocating here is expected and fine).
-    let planner = Planner::<f32>::new();
+    let planner = Planner::<T>::new();
     let (cr, ci) = default_chirp(64);
-    let matched: Arc<dyn Transform<f32>> =
+    let matched: Arc<dyn Transform<T>> =
         Arc::new(MatchedFilter::new(&planner, Strategy::DualSelect, 256, &cr, &ci).unwrap());
-    let under_test: Vec<(&str, Arc<dyn Transform<f32>>)> = vec![
-        ("stockham fwd", planner.plan(256, Strategy::DualSelect, Direction::Forward).unwrap()),
-        ("stockham inv", planner.plan(256, Strategy::DualSelect, Direction::Inverse).unwrap()),
-        (
-            "radix4",
-            planner.get(PlanSpec::new(256).radix4()).unwrap(),
-        ),
-        ("dit", planner.get(PlanSpec::new(256).dit()).unwrap()),
-        ("bluestein n=60", planner.get(PlanSpec::new(60).bluestein()).unwrap()),
-        ("real r2c", planner.get(PlanSpec::new(256).real_input()).unwrap()),
-        (
-            "real c2r",
-            planner.get(PlanSpec::new(256).real_input().inverse()).unwrap(),
-        ),
-        ("matched filter", matched),
+    let under_test: Vec<Arc<dyn Transform<T>>> = vec![
+        planner.plan(256, Strategy::DualSelect, Direction::Forward).unwrap(),
+        planner.plan(256, Strategy::DualSelect, Direction::Inverse).unwrap(),
+        planner.get(PlanSpec::new(256).radix4()).unwrap(),
+        planner.get(PlanSpec::new(256).dit()).unwrap(),
+        planner.get(PlanSpec::new(60).bluestein()).unwrap(),
+        planner.get(PlanSpec::new(256).real_input()).unwrap(),
+        planner.get(PlanSpec::new(256).real_input().inverse()).unwrap(),
+        matched,
     ];
 
     // One arena per frame length, pre-filled (intake's job).
-    let mut arenas: Vec<FrameArena<f32>> = Vec::new();
-    for (i, (_, t)) in under_test.iter().enumerate() {
+    let mut arenas: Vec<FrameArena<T>> = Vec::new();
+    for (i, t) in under_test.iter().enumerate() {
         let mut arena = FrameArena::with_capacity(t.len(), batch);
         fill(&mut arena, t.len(), batch, 1000 + i as u64);
         arenas.push(arena);
@@ -87,10 +88,10 @@ fn worker_hot_path_allocates_zero_after_warmup() {
 
     // One persistent per-worker scratch pool, exactly like the server's
     // worker loop.
-    let mut scratch = Scratch::<f32>::new();
+    let mut scratch = Scratch::<T>::new();
 
     // Warmup: one batch through every transform (pools fill here).
-    for ((_, t), arena) in under_test.iter().zip(arenas.iter_mut()) {
+    for (t, arena) in under_test.iter().zip(arenas.iter_mut()) {
         t.execute_many(arena.view_mut(), &mut scratch);
     }
 
@@ -98,7 +99,7 @@ fn worker_hot_path_allocates_zero_after_warmup() {
     let misses_before = scratch.misses();
     let before = allocations();
     for _ in 0..4 {
-        for ((_, t), arena) in under_test.iter().zip(arenas.iter_mut()) {
+        for (t, arena) in under_test.iter().zip(arenas.iter_mut()) {
             t.execute_many(arena.view_mut(), &mut scratch);
         }
     }
@@ -106,8 +107,101 @@ fn worker_hot_path_allocates_zero_after_warmup() {
     assert_eq!(
         after - before,
         0,
-        "worker hot path allocated {} times after warmup",
+        "{} worker hot path allocated {} times after warmup",
+        T::NAME,
         after - before
     );
-    assert_eq!(scratch.misses(), misses_before, "scratch pool kept allocating");
+    assert_eq!(
+        scratch.misses(),
+        misses_before,
+        "{} scratch pool kept allocating",
+        T::NAME
+    );
+}
+
+#[test]
+fn worker_hot_path_allocates_zero_after_warmup() {
+    let batch = 16;
+
+    // 1. The typed path, per dtype.
+    typed_hot_path_is_alloc_free::<f64>(batch);
+    typed_hot_path_is_alloc_free::<f32>(batch);
+    typed_hot_path_is_alloc_free::<fmafft::precision::Bf16>(batch);
+    typed_hot_path_is_alloc_free::<fmafft::precision::F16>(batch);
+
+    // 2. The dtype-erased serving path: AnyTransform over dtype-tagged
+    //    arenas with one AnyScratch (per-dtype pools inside), exactly
+    //    what a coordinator worker runs for mixed-precision traffic.
+    let planner = AnyPlanner::new();
+    let mut rng = Pcg32::seed(42);
+    let n = 256;
+    let re: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+    let im: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+
+    let mut lanes: Vec<(AnyTransform, AnyArena)> = Vec::new();
+    for dtype in DType::ALL {
+        let t = planner
+            .plan(n, Strategy::DualSelect, Direction::Forward, dtype)
+            .unwrap();
+        let mut arena = AnyArena::new(dtype, n);
+        arena.reserve_frames(batch);
+        for _ in 0..batch {
+            arena.push_frame_f64(&re, &im);
+        }
+        lanes.push((t, arena));
+    }
+    let mut any_scratch = AnyScratch::new();
+
+    // Warmup (per-dtype pools fill here).
+    for (t, arena) in lanes.iter_mut() {
+        t.execute_many_any(arena, &mut any_scratch).unwrap();
+    }
+
+    let misses_before = any_scratch.misses();
+    let before = allocations();
+    for _ in 0..4 {
+        for (t, arena) in lanes.iter_mut() {
+            t.execute_many_any(arena, &mut any_scratch).unwrap();
+        }
+    }
+    let after = allocations();
+    assert_eq!(
+        after - before,
+        0,
+        "dtype-erased hot path allocated {} times after warmup",
+        after - before
+    );
+    assert_eq!(
+        any_scratch.misses(),
+        misses_before,
+        "AnyScratch pools kept allocating"
+    );
+
+    // 3. Arena recycling through the dtype-tagged pool: a recycled
+    //    arena keeps its allocation, and refilling it to the same
+    //    occupancy stays within capacity (the batcher's open-batch
+    //    path).  The Arc bookkeeping itself allocates (one Arc per
+    //    batch, as in the server), so this section asserts capacity
+    //    reuse rather than raw allocator counts.
+    let pool = AnyArenaPool::new();
+    for dtype in DType::ALL {
+        let mut arena = pool.take(dtype, n);
+        arena.reserve_frames(batch);
+        for _ in 0..batch {
+            arena.push_frame_f64(&re, &im);
+        }
+        pool.recycle(Arc::new(arena));
+        let reused = pool.take(dtype, n);
+        assert_eq!(reused.dtype(), dtype);
+        assert_eq!(reused.frames(), 0, "{dtype} reused arena not reset");
+        // The reclaimed storage still fits a full batch without
+        // growing: pushing `batch` frames causes no pool-side churn.
+        let mut reused = reused;
+        for _ in 0..batch {
+            reused.push_frame_f64(&re, &im);
+        }
+        assert_eq!(reused.frames(), batch);
+        pool.recycle(Arc::new(reused));
+    }
+    assert_eq!(pool.parked(), 4);
 }

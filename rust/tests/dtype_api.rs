@@ -1,0 +1,134 @@
+//! Integration tests for the dtype-erased execution API.
+//!
+//! The load-bearing guarantee: `DType::F32` through the dtype layer
+//! (`PlanSpec::build_any` → `AnyTransform::execute_many_any` over an
+//! `AnyArena`) is BIT-IDENTICAL to the pre-redesign typed path
+//! (`PlanSpec::build::<f32>` → `Transform::execute_many` over a
+//! `FrameArena<f32>`) — the erasure is one enum dispatch around the
+//! same monomorphized kernel, never a numeric change.
+
+use fmafft::analysis::bounds::serving_bound;
+use fmafft::fft::{
+    Algorithm, AnyArena, AnyScratch, DType, FrameArena, PlanSpec, Scratch, Strategy,
+};
+use fmafft::util::metrics::rel_l2;
+use fmafft::util::prng::Pcg32;
+
+fn frames(n: usize, count: usize, seed: u64) -> Vec<(Vec<f64>, Vec<f64>)> {
+    let mut rng = Pcg32::seed(seed);
+    (0..count)
+        .map(|_| {
+            (
+                (0..n).map(|_| rng.range(-1.0, 1.0)).collect(),
+                (0..n).map(|_| rng.range(-1.0, 1.0)).collect(),
+            )
+        })
+        .collect()
+}
+
+/// Run `spec` through both paths and require bitwise-equal results.
+fn assert_f32_paths_bit_identical(spec: PlanSpec, label: &str) {
+    let n = spec.n;
+    let batch = frames(n, 4, 7 + n as u64);
+
+    // Pre-redesign typed path.
+    let typed = spec.build::<f32>().unwrap();
+    let mut typed_arena = FrameArena::<f32>::new(n);
+    for (re, im) in &batch {
+        typed_arena.push_frame_f64(re, im);
+    }
+    let mut typed_scratch = Scratch::new();
+    typed.execute_many(typed_arena.view_mut(), &mut typed_scratch);
+
+    // Dtype-erased path.
+    let any = spec.dtype(DType::F32).build_any().unwrap();
+    let mut any_arena = AnyArena::new(DType::F32, n);
+    for (re, im) in &batch {
+        any_arena.push_frame_f64(re, im);
+    }
+    let mut any_scratch = AnyScratch::new();
+    any.execute_many_any(&mut any_arena, &mut any_scratch).unwrap();
+
+    let erased = any_arena.as_f32().expect("f32 arena");
+    for f in 0..batch.len() {
+        let (tre, tim) = typed_arena.frame(f);
+        let (are, aim) = erased.frame(f);
+        for j in 0..n {
+            assert_eq!(
+                tre[j].to_bits(),
+                are[j].to_bits(),
+                "{label}: re bit mismatch at frame {f} sample {j}"
+            );
+            assert_eq!(
+                tim[j].to_bits(),
+                aim[j].to_bits(),
+                "{label}: im bit mismatch at frame {f} sample {j}"
+            );
+        }
+    }
+}
+
+#[test]
+fn f32_dtype_path_is_bit_identical_to_typed_path() {
+    // Every algorithm × both ratio-relevant strategies × directions.
+    for strategy in [Strategy::Standard, Strategy::DualSelect] {
+        assert_f32_paths_bit_identical(
+            PlanSpec::new(1024).strategy(strategy),
+            &format!("stockham {strategy}"),
+        );
+        assert_f32_paths_bit_identical(
+            PlanSpec::new(1024).strategy(strategy).inverse(),
+            &format!("stockham inv {strategy}"),
+        );
+    }
+    assert_f32_paths_bit_identical(PlanSpec::new(256).radix4(), "radix4");
+    assert_f32_paths_bit_identical(PlanSpec::new(256).dit(), "dit");
+    assert_f32_paths_bit_identical(PlanSpec::new(60).algorithm(Algorithm::Bluestein), "bluestein");
+    assert_f32_paths_bit_identical(PlanSpec::new(256).real_input(), "real r2c");
+    assert_f32_paths_bit_identical(PlanSpec::new(256).real_input().inverse(), "real c2r");
+}
+
+#[test]
+fn f16_dual_select_beats_clamped_lf_through_the_any_api() {
+    // The paper's headline, through the dtype layer alone (no server):
+    // fp16 dual-select lands under its a-priori bound; fp16 clamped LF
+    // does not even stay finite/close.
+    let n = 1024;
+    let batch = frames(n, 2, 99);
+    let (wr, wi) = fmafft::dft::naive_dft(&batch[0].0, &batch[0].1, false);
+
+    let run = |strategy: Strategy| -> f64 {
+        let t = PlanSpec::new(n)
+            .strategy(strategy)
+            .dtype(DType::F16)
+            .build_any()
+            .unwrap();
+        let mut arena = AnyArena::new(DType::F16, n);
+        arena.push_frame_f64(&batch[0].0, &batch[0].1);
+        let mut scratch = AnyScratch::new();
+        t.execute_many_any(&mut arena, &mut scratch).unwrap();
+        let (gr, gi) = arena.frame_f64(0);
+        rel_l2(&gr, &gi, &wr, &wi)
+    };
+
+    let err_dual = run(Strategy::DualSelect);
+    let bound = serving_bound(n, Strategy::DualSelect, DType::F16.epsilon()).unwrap();
+    assert!(err_dual <= bound, "fp16 dual err {err_dual:.3e} > bound {bound:.3e}");
+
+    let err_lf = run(Strategy::LinzerFeig);
+    assert!(
+        err_lf.is_nan() || err_lf > 10.0 * err_dual,
+        "fp16 lf err {err_lf:.3e} vs dual {err_dual:.3e}"
+    );
+}
+
+#[test]
+fn typed_planner_normalizes_dtype_tag() {
+    // A typed planner computes in exactly one precision; specs that
+    // differ only in the (ignored) dtype tag share one cache entry.
+    let planner = fmafft::fft::Planner::<f32>::new();
+    let a = planner.get(PlanSpec::new(64)).unwrap();
+    let b = planner.get(PlanSpec::new(64).dtype(DType::F16)).unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+    assert_eq!(planner.len(), 1);
+}

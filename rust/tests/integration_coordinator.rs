@@ -4,9 +4,11 @@
 use std::sync::Arc;
 use std::time::Duration;
 
+use fmafft::analysis::bounds::{serving_bound, serving_bound_from_tmax};
 use fmafft::coordinator::batcher::BatchPolicy;
 use fmafft::coordinator::{FftOp, Server, ServerConfig};
 use fmafft::dft;
+use fmafft::fft::{DType, Strategy};
 use fmafft::signal::chirp::default_chirp;
 use fmafft::util::metrics::rel_l2;
 use fmafft::util::prng::Pcg32;
@@ -303,6 +305,183 @@ fn pjrt_matched_filter_end_to_end() {
         })
         .unwrap();
     assert_eq!(peak, delay);
+    server.shutdown();
+}
+
+/// Serve one forward FFT at `dtype` with `strategy` and return the
+/// observed relative L2 error vs the f64 DFT oracle, plus the a-priori
+/// bound the response carried.
+fn served_forward_error(
+    n: usize,
+    strategy: Strategy,
+    dtype: DType,
+    re: &[f64],
+    im: &[f64],
+) -> (f64, Option<f64>) {
+    let mut cfg = ServerConfig::native(n);
+    cfg.strategy = strategy;
+    cfg.dtype = dtype;
+    cfg.workers = 1;
+    let server = Server::start(cfg).unwrap();
+    let resp = server
+        .submit_wait(FftOp::Forward, re.to_vec(), im.to_vec())
+        .unwrap();
+    assert!(resp.is_ok(), "{:?}", resp.error);
+    assert_eq!(resp.dtype, dtype);
+    let (wr, wi) = dft::naive_dft(re, im, false);
+    let err = rel_l2(&resp.re_f64(), &resp.im_f64(), &wr, &wi);
+    let bound = resp.bound;
+    server.shutdown();
+    (err, bound)
+}
+
+#[test]
+fn f16_bf16_dual_select_served_within_bound_and_beats_clamped_lf() {
+    // The acceptance loop: an f16 (and bf16) DualSelect request served
+    // through the coordinator returns error below the a-priori
+    // analysis::bounds prediction — with zero epsilon clamping in its
+    // table — and strictly beats clamped Linzer-Feig at the same
+    // dtype in the same serving path.
+    let n = 256;
+    let mut rng = Pcg32::seed(61);
+    let re: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+    let im: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+
+    for dtype in [DType::F16, DType::Bf16] {
+        let (err_dual, bound_dual) =
+            served_forward_error(n, Strategy::DualSelect, dtype, &re, &im);
+        let bound = bound_dual.expect("dual-select response carries a bound");
+        // The response's bound is exactly the analysis::bounds value.
+        let predicted = serving_bound(n, Strategy::DualSelect, dtype.epsilon()).unwrap();
+        assert!((bound - predicted).abs() <= predicted * 1e-12, "{dtype}");
+        // Observed error is below the a-priori prediction.
+        assert!(
+            err_dual <= bound,
+            "{dtype} dual served err {err_dual:.3e} exceeds bound {bound:.3e}"
+        );
+        // Zero epsilon clamping: dual-select's stored table is bounded
+        // by 1 with no (near-)singular entries.
+        let stats = fmafft::analysis::ratio::ratio_stats(n, Strategy::DualSelect);
+        assert_eq!(stats.singular, 0);
+        assert_eq!(stats.near_singular, 0);
+        assert!(stats.max_clamped <= 1.0 + 1e-12);
+
+        // Clamped LF at the same dtype, same serving path: strictly
+        // worse (NaN/inf counts as worse — that is the paper's point).
+        let (err_lf, bound_lf) =
+            served_forward_error(n, Strategy::LinzerFeig, dtype, &re, &im);
+        assert!(
+            err_lf.is_nan() || err_lf > err_dual,
+            "{dtype}: lf err {err_lf:.3e} not worse than dual {err_dual:.3e}"
+        );
+        // And the a-priori bounds already tell the story.
+        let lf_bound = bound_lf.expect("lf response carries a bound");
+        assert!(lf_bound > bound * 1e3, "{dtype}: lf bound {lf_bound:.3e}");
+    }
+}
+
+#[test]
+fn f16_roundtrip_request_batch_response() {
+    // Full round trip through the wire: forward request at f16, feed
+    // the (exactly f64-widened) spectrum back as an inverse request,
+    // compare against the f16-quantized input.  Because response
+    // values are exact binary16, re-ingesting them rounds exactly —
+    // the only error is the transform arithmetic, bounded a priori by
+    // the 2m-pass serving bound.
+    let n = 256;
+    let m = n.trailing_zeros();
+    let mut cfg = ServerConfig::native(n);
+    cfg.dtype = DType::F16;
+    let server = Server::start(cfg).unwrap();
+
+    let mut rng = Pcg32::seed(62);
+    let re: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+    let im: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+
+    let fwd = server.submit_wait(FftOp::Forward, re.clone(), im.clone()).unwrap();
+    assert!(fwd.is_ok(), "{:?}", fwd.error);
+    assert_eq!(fwd.dtype, DType::F16);
+    let inv = server
+        .submit_wait(FftOp::Inverse, fwd.re_f64(), fwd.im_f64())
+        .unwrap();
+    assert!(inv.is_ok(), "{:?}", inv.error);
+    server.shutdown();
+
+    // Reference: what the transform actually saw (input quantized once
+    // to binary16 — the wire's single-rounding ingest policy).
+    let q = fmafft::precision::SplitBuf::<fmafft::precision::F16>::from_f64(&re, &im);
+    let (qre, qim) = q.to_f64();
+    let err = rel_l2(&inv.re_f64(), &inv.im_f64(), &qre, &qim);
+    let bound = serving_bound_from_tmax(1.0, DType::F16.epsilon(), 2 * m);
+    assert!(
+        err <= bound,
+        "f16 roundtrip err {err:.3e} exceeds 2m-pass bound {bound:.3e}"
+    );
+}
+
+#[test]
+fn mixed_dtype_traffic_shares_the_server() {
+    // One server, per-request dtypes: batching keys keep precisions
+    // apart, metrics split per dtype, every response reports its own
+    // working precision.
+    let n = 128;
+    let mut cfg = ServerConfig::native(n);
+    cfg.policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) };
+    cfg.workers = 2;
+    let server = Server::start(cfg).unwrap();
+
+    let mut rxs = Vec::new();
+    let mut want = Vec::new();
+    for i in 0..30u64 {
+        let (re, im) = random_frame(n, 800 + i);
+        let dtype = match i % 3 {
+            0 => DType::F32,
+            1 => DType::F16,
+            _ => DType::Bf16,
+        };
+        rxs.push(
+            server
+                .submit_with(FftOp::Forward, dtype, re.clone(), im.clone())
+                .unwrap(),
+        );
+        want.push((dtype, re, im));
+    }
+    server.drain();
+    for (rx, (dtype, re, im)) in rxs.iter().zip(&want) {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+        assert!(resp.is_ok(), "{:?}", resp.error);
+        assert_eq!(resp.dtype, *dtype);
+        let (wr, wi) = dft::naive_dft(re, im, false);
+        let err = rel_l2(&resp.re_f64(), &resp.im_f64(), &wr, &wi);
+        let tol = 100.0 * dtype.epsilon();
+        assert!(err < tol, "{dtype} err {err:.3e}");
+    }
+    let snap = server.snapshot();
+    assert_eq!(snap.dtype(DType::F32).completed, 10);
+    assert_eq!(snap.dtype(DType::F16).completed, 10);
+    assert_eq!(snap.dtype(DType::Bf16).completed, 10);
+    assert_eq!(snap.dtype(DType::F64).submitted, 0);
+    assert_eq!(snap.completed, 30);
+    server.shutdown();
+}
+
+#[test]
+fn default_f32_responses_keep_zero_copy_views_and_bound() {
+    let server = Server::start(ServerConfig::native(256)).unwrap();
+    assert_eq!(server.dtype(), DType::F32);
+    let (re, im) = random_frame(256, 9);
+    let resp = server.submit_wait(FftOp::Forward, re.clone(), im.clone()).unwrap();
+    assert_eq!(resp.dtype, DType::F32);
+    // Borrowed f32 views still work (and agree with the widening path).
+    check_fft_response(&re, &im, &resp);
+    let wide: Vec<f64> = resp.re().iter().map(|&x| x as f64).collect();
+    assert_eq!(wide, resp.re_f64());
+    // The f32 bound rides along too.
+    let bound = resp.bound.expect("bound attached");
+    assert_eq!(
+        bound,
+        serving_bound(256, Strategy::DualSelect, DType::F32.epsilon()).unwrap()
+    );
     server.shutdown();
 }
 
