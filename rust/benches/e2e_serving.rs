@@ -7,12 +7,15 @@
 //! Run: `cargo bench --bench e2e_serving`
 //! (PJRT section requires `make artifacts`; skipped otherwise.)
 
+use std::collections::HashMap;
+use std::net::SocketAddr;
 use std::time::{Duration, Instant};
 
 use fmafft::bench_util::{header, JsonReport};
 use fmafft::coordinator::batcher::BatchPolicy;
 use fmafft::coordinator::{FftOp, Server, ServerConfig};
-use fmafft::fft::DType;
+use fmafft::fft::{DType, Strategy};
+use fmafft::net::{FftClient, FftdServer};
 use fmafft::workload::{ArrivalTrace, SignalKind, TraceConfig, WorkloadGen};
 
 struct RunStats {
@@ -67,7 +70,7 @@ fn drive(server: &Server, n: usize, rate: f64, count: usize, kind: SignalKind) -
     }
 }
 
-fn report(label: &str, dtype: DType, s: &RunStats, json: &mut JsonReport) {
+fn report(label: &str, dtype: DType, transport: &str, s: &RunStats, json: &mut JsonReport) {
     println!(
         "{label:<40} {:>6} ok {:>4} rej  {:>8.0} req/s  p50 {:>6}us  p99 {:>7}us  mean_batch {:.1}  occ {:.2}",
         s.completed,
@@ -78,12 +81,12 @@ fn report(label: &str, dtype: DType, s: &RunStats, json: &mut JsonReport) {
         s.mean_batch,
         s.occupancy,
     );
-    // Every entry records its element dtype and strategy so the perf
-    // trajectory is comparable per precision across PRs.
-    json.push_metrics_tagged(
+    // Every entry records its element dtype, strategy and transport
+    // (in_process vs tcp) so the perf trajectory is comparable per
+    // precision and per serving path across PRs.
+    json.push_metrics_tags(
         label,
-        dtype.name(),
-        "dual",
+        &[("dtype", dtype.name()), ("strategy", "dual"), ("transport", transport)],
         &[
             ("completed", s.completed as f64),
             ("rejected", s.rejected as f64),
@@ -94,6 +97,84 @@ fn report(label: &str, dtype: DType, s: &RunStats, json: &mut JsonReport) {
             ("occupancy", s.occupancy),
         ],
     );
+}
+
+/// Drive the server over loopback TCP: `clients` connections, each
+/// pipelining up to `window` requests, `per_client` requests each.
+/// Per-request latency is measured client-side (submit → response).
+fn drive_tcp(
+    addr: SocketAddr,
+    server: &Server,
+    dtype: DType,
+    clients: usize,
+    per_client: usize,
+    window: usize,
+    kind: SignalKind,
+) -> RunStats {
+    let n = server.frame_len();
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        handles.push(std::thread::spawn(move || {
+            let mut client = FftClient::connect(addr).expect("connect to fftd");
+            client
+                .set_read_timeout(Some(Duration::from_secs(120)))
+                .expect("read timeout");
+            let mut gen = WorkloadGen::new(n, 900 + c as u64);
+            let mut starts: HashMap<u64, Instant> = HashMap::new();
+            let mut lat_us: Vec<u64> = Vec::new();
+            let (mut ok, mut rejected) = (0usize, 0usize);
+            let mut submitted = 0usize;
+            while submitted < per_client || client.in_flight() > 0 {
+                while submitted < per_client && client.in_flight() < window {
+                    let f = gen.frame(kind);
+                    let id = client
+                        .submit_with(FftOp::Forward, dtype, Strategy::DualSelect, &f.re, &f.im)
+                        .expect("submit");
+                    starts.insert(id, Instant::now());
+                    submitted += 1;
+                }
+                let resp = client.recv().expect("recv");
+                if let Some(t) = starts.remove(&resp.id) {
+                    lat_us.push(t.elapsed().as_micros() as u64);
+                }
+                if resp.is_ok() {
+                    ok += 1;
+                } else {
+                    rejected += 1;
+                }
+            }
+            (ok, rejected, lat_us)
+        }));
+    }
+    let mut completed = 0usize;
+    let mut rejected = 0usize;
+    let mut lat_us: Vec<u64> = Vec::new();
+    for h in handles {
+        let (ok, rej, lat) = h.join().expect("client thread");
+        completed += ok;
+        rejected += rej;
+        lat_us.extend(lat);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    lat_us.sort_unstable();
+    let quantile = |q: f64| -> u64 {
+        if lat_us.is_empty() {
+            0
+        } else {
+            lat_us[((lat_us.len() as f64 * q) as usize).min(lat_us.len() - 1)]
+        }
+    };
+    let m = server.snapshot();
+    RunStats {
+        completed,
+        rejected,
+        wall,
+        p50_us: quantile(0.50),
+        p99_us: quantile(0.99),
+        mean_batch: m.mean_batch,
+        occupancy: m.occupancy,
+    }
 }
 
 fn main() {
@@ -111,7 +192,7 @@ fn main() {
         cfg.policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(300) };
         let server = Server::start(cfg).unwrap();
         let stats = drive(&server, n, rate, count, kind);
-        report(&format!("native rate={rate}/s"), DType::F32, &stats, &mut json);
+        report(&format!("native rate={rate}/s"), DType::F32, "in_process", &stats, &mut json);
         server.shutdown();
     }
 
@@ -126,7 +207,7 @@ fn main() {
         cfg.policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(300) };
         let server = Server::start(cfg).unwrap();
         let stats = drive(&server, n, 500.0, count.min(500), kind);
-        report(&format!("  native {dtype} rate=500/s"), dtype, &stats, &mut json);
+        report(&format!("  native {dtype} rate=500/s"), dtype, "in_process", &stats, &mut json);
         server.shutdown();
     }
 
@@ -146,7 +227,7 @@ fn main() {
         };
         let server = Server::start(cfg).unwrap();
         let stats = drive(&server, n, 10_000.0, count, kind);
-        report(&format!("  max_batch={max_batch}"), DType::F32, &stats, &mut json);
+        report(&format!("  max_batch={max_batch}"), DType::F32, "in_process", &stats, &mut json);
         if max_batch == 1 {
             base_p50 = stats.p50_us;
         } else if max_batch == 32 {
@@ -155,6 +236,38 @@ fn main() {
                 stats.p50_us as i64 - base_p50 as i64
             );
         }
+        server.shutdown();
+    }
+
+    // Net path: client → fftd → coordinator → response over loopback
+    // TCP (closed-loop pipelined clients; same workload, same
+    // coordinator — the delta vs in_process rows is the wire cost).
+    println!("\ntcp loopback serving (client → fftd → coordinator):");
+    for clients in [1usize, 4] {
+        let mut cfg = ServerConfig::native(n);
+        cfg.workers = 4;
+        cfg.policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(300) };
+        let server = Server::start(cfg).unwrap();
+        let fftd = FftdServer::start(server.clone(), "127.0.0.1:0").unwrap();
+        let stats =
+            drive_tcp(fftd.local_addr(), &server, DType::F32, clients, count / clients, 16, kind);
+        report(&format!("  tcp clients={clients}"), DType::F32, "tcp", &stats, &mut json);
+        fftd.shutdown();
+        server.shutdown();
+    }
+    // Reduced precision over the wire: the f16 dual-select serving
+    // path, bound metadata included, end to end over TCP.
+    {
+        let mut cfg = ServerConfig::native(n);
+        cfg.workers = 4;
+        cfg.dtype = DType::F16;
+        cfg.policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(300) };
+        let server = Server::start(cfg).unwrap();
+        let fftd = FftdServer::start(server.clone(), "127.0.0.1:0").unwrap();
+        let stats =
+            drive_tcp(fftd.local_addr(), &server, DType::F16, 2, count.min(500) / 2, 16, kind);
+        report("  tcp f16 clients=2", DType::F16, "tcp", &stats, &mut json);
+        fftd.shutdown();
         server.shutdown();
     }
 
@@ -174,7 +287,7 @@ fn main() {
                 }
             };
             let stats = drive(&server, n, rate, count.min(1000), kind);
-            report(&format!("  pjrt rate={rate}/s"), DType::F32, &stats, &mut json);
+            report(&format!("  pjrt rate={rate}/s"), DType::F32, "in_process", &stats, &mut json);
             server.shutdown();
         }
     } else {

@@ -175,22 +175,25 @@ impl JsonReport {
         strategy: &str,
         fields: &[(&str, f64)],
     ) {
-        self.push_entry(name, Some(dtype), Some(strategy), fields);
+        self.push_entry(name, &[("dtype", dtype), ("strategy", strategy)], fields);
     }
 
-    fn push_entry(
+    /// [`JsonReport::push_metrics`] with arbitrary string tags (e.g.
+    /// `("transport", "tcp")`) recorded alongside the numbers — the
+    /// general form behind [`JsonReport::push_metrics_tagged`].
+    pub fn push_metrics_tags(
         &mut self,
         name: &str,
-        dtype: Option<&str>,
-        strategy: Option<&str>,
+        tags: &[(&str, &str)],
         fields: &[(&str, f64)],
     ) {
+        self.push_entry(name, tags, fields);
+    }
+
+    fn push_entry(&mut self, name: &str, tags: &[(&str, &str)], fields: &[(&str, f64)]) {
         let mut obj = format!("{{\"name\":{}", json_escape(name));
-        if let Some(d) = dtype {
-            obj.push_str(&format!(",\"dtype\":{}", json_escape(d)));
-        }
-        if let Some(s) = strategy {
-            obj.push_str(&format!(",\"strategy\":{}", json_escape(s)));
+        for (k, v) in tags {
+            obj.push_str(&format!(",{}:{}", json_escape(k), json_escape(v)));
         }
         for (k, v) in fields {
             obj.push_str(&format!(",{}:{}", json_escape(k), json_num(*v)));
@@ -364,6 +367,21 @@ mod tests {
         assert_eq!(row.get("dtype").unwrap().as_str(), Some("bf16"));
         assert_eq!(row.get("strategy").unwrap().as_str(), Some("dual"));
         assert_eq!(row.get("p99_us").unwrap().as_f64(), Some(420.0));
+    }
+
+    #[test]
+    fn json_entries_record_arbitrary_string_tags() {
+        let mut rep = JsonReport::new("serving");
+        rep.push_metrics_tags(
+            "tcp clients=4",
+            &[("dtype", "f32"), ("strategy", "dual"), ("transport", "tcp")],
+            &[("completed", 500.0)],
+        );
+        let doc = crate::util::json::Json::parse(rep.render().trim()).expect("valid doc");
+        let row = &doc.get("results").unwrap().as_arr().unwrap()[0];
+        assert_eq!(row.get("transport").unwrap().as_str(), Some("tcp"));
+        assert_eq!(row.get("dtype").unwrap().as_str(), Some("f32"));
+        assert_eq!(row.get("completed").unwrap().as_f64(), Some(500.0));
     }
 
     #[test]

@@ -9,6 +9,7 @@ use crate::analysis::report::{fixed, sci, Table};
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::{FftOp, Server, ServerConfig};
 use crate::fft::{DType, FftError, FftResult, Strategy};
+use crate::net::{FftClient, FftdServer};
 use crate::precision::{Bf16, F16};
 use crate::workload::{ArrivalTrace, SignalKind, TraceConfig, WorkloadGen};
 
@@ -28,9 +29,19 @@ USAGE:
   fmafft serve   [--n 1024] [--dtype f32] [--strategy dual] [--pjrt]
                  [--artifacts DIR] [--rate 2000] [--requests 2000]
                  [--workers 2] [--max-batch 32]
+                 [--listen ADDR] [--serve-for SECS]
       Run the dynamic-batching coordinator against a Poisson workload
       in the chosen working precision (try --dtype f16: the paper's
-      bounded-ratio claim, served end to end).
+      bounded-ratio claim, served end to end).  With --listen the
+      coordinator becomes fftd, a TCP daemon (e.g. --listen
+      127.0.0.1:0 for an ephemeral port; --serve-for 0 = run until
+      killed); see PROTOCOL.md for the wire format.
+  fmafft client  --addr HOST:PORT [--n 1024] [--dtype f32]
+                 [--strategy dual] [--op forward|inverse|mf]
+                 [--requests 16] [--pipeline 8] [--verify]
+      Drive a running fftd over TCP with pipelined requests; --verify
+      checks every response against the f64 DFT oracle and its
+      attached a-priori bound.
   fmafft help
 ";
 
@@ -189,6 +200,35 @@ pub fn serve(a: &Args) -> FftResult<()> {
         max_wait: Duration::from_micros(max_wait_us),
     };
 
+    // --listen turns `serve` into fftd: a TCP daemon over the same
+    // coordinator, no synthetic workload (drive it with `fmafft
+    // client` or any PROTOCOL.md speaker).
+    if let Some(listen) = a.get("listen") {
+        let serve_for: u64 = a.get_parse("serve-for", 0u64)?;
+        let server = Server::start(cfg)?;
+        let fftd = FftdServer::start(server.clone(), listen)?;
+        // Scripts (CI smoke test) scrape the bound address from this
+        // exact line — keep it first and flush it.
+        println!("fftd listening on {}", fftd.local_addr());
+        if let Some(bound) = serving_bound(n, strategy, dtype.epsilon()) {
+            println!("a-priori per-request error bound ({strategy} x {dtype}): {}", sci(bound));
+        }
+        use std::io::Write as _;
+        let _ = std::io::stdout().flush();
+        match serve_for {
+            0 => loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            },
+            secs => {
+                std::thread::sleep(Duration::from_secs(secs));
+                fftd.shutdown();
+                println!("{}", server.metrics().summary());
+                server.shutdown();
+            }
+        }
+        return Ok(());
+    }
+
     println!(
         "serving n={n} dtype={dtype} strategy={strategy} backend={} workers={workers} max_batch={max_batch} rate={rate}/s requests={requests}",
         if matches!(cfg.backend, crate::coordinator::Backend::Pjrt { .. }) { "pjrt" } else { "native" },
@@ -239,5 +279,104 @@ pub fn serve(a: &Args) -> FftResult<()> {
         counts.submitted, counts.completed, counts.failed
     );
     server.shutdown();
+    Ok(())
+}
+
+pub fn client(a: &Args) -> FftResult<()> {
+    let addr = a
+        .get("addr")
+        .ok_or_else(|| FftError::InvalidArgument("client requires --addr HOST:PORT".into()))?;
+    let n: usize = a.get_parse("n", 1024usize)?;
+    let requests: usize = a.get_parse("requests", 16usize)?;
+    let pipeline: usize = a.get_parse("pipeline", 8usize)?.max(1);
+    let dtype: DType = a.get_or("dtype", "f32").parse()?;
+    let strategy: Strategy = a.get_or("strategy", "dual").parse()?;
+    let seed: u64 = a.get_parse("seed", 42u64)?;
+    let verify = a.flag("verify");
+    let op = match a.get_or("op", "forward") {
+        "forward" | "fwd" => FftOp::Forward,
+        "inverse" | "inv" => FftOp::Inverse,
+        "mf" | "matched-filter" => FftOp::MatchedFilter,
+        other => {
+            return Err(FftError::InvalidArgument(format!(
+                "unknown --op {other:?} (expected forward|inverse|mf)"
+            )))
+        }
+    };
+
+    let mut client = FftClient::connect(addr)?.with_defaults(dtype, strategy);
+    client.set_read_timeout(Some(Duration::from_secs(60)))?;
+    println!("connected to {addr} — n={n} dtype={dtype} strategy={strategy} requests={requests} pipeline={pipeline}");
+
+    let mut gen = WorkloadGen::new(n, seed);
+    // Frames retained for oracle verification (matched-filter has no
+    // DFT oracle here, so nothing is retained for it).
+    let track = verify && op != FftOp::MatchedFilter;
+    let mut sent: std::collections::HashMap<u64, (Vec<f64>, Vec<f64>)> =
+        std::collections::HashMap::new();
+    let (mut ok, mut busy, mut failed) = (0usize, 0usize, 0usize);
+    let mut bound_seen: Option<f64> = None;
+    let mut max_err = 0.0f64;
+    let mut submitted = 0usize;
+    let t0 = Instant::now();
+    while submitted < requests || client.in_flight() > 0 {
+        while submitted < requests && client.in_flight() < pipeline {
+            let f = gen.frame(SignalKind::Noise);
+            let id = client.submit(op, &f.re, &f.im)?;
+            if track {
+                sent.insert(id, (f.re, f.im));
+            }
+            submitted += 1;
+        }
+        let resp = client.recv()?;
+        match &resp.error {
+            None => {
+                ok += 1;
+                bound_seen = bound_seen.or(resp.bound);
+                if track {
+                    if let Some((re, im)) = sent.remove(&resp.id) {
+                        let inverse = op == FftOp::Inverse;
+                        let (wr, wi) = crate::dft::naive_dft(&re, &im, inverse);
+                        let err = crate::util::metrics::rel_l2(&resp.re, &resp.im, &wr, &wi);
+                        max_err = max_err.max(err);
+                        if let Some(bound) = resp.bound {
+                            // NaN counts as a violation, not a pass.
+                            if err.is_nan() || err > bound {
+                                return Err(FftError::Backend(format!(
+                                    "response {} error {err:.3e} exceeds its a-priori bound {bound:.3e}",
+                                    resp.id
+                                )));
+                            }
+                        }
+                    }
+                }
+            }
+            Some(FftError::Rejected { .. }) => {
+                busy += 1;
+                sent.remove(&resp.id);
+            }
+            Some(e) => {
+                failed += 1;
+                sent.remove(&resp.id);
+                eprintln!("request {} failed: {e}", resp.id);
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "{ok}/{requests} ok ({busy} busy, {failed} error) in {wall:.3}s ({:.0} req/s)",
+        ok as f64 / wall.max(1e-9)
+    );
+    if let Some(bound) = bound_seen {
+        println!("a-priori bound carried by responses ({strategy} x {dtype}): {}", sci(bound));
+    }
+    if verify && ok > 0 {
+        println!("verified against the f64 DFT oracle: max rel-L2 {}", sci(max_err));
+    }
+    if ok == 0 {
+        return Err(FftError::Backend(format!(
+            "no request succeeded ({busy} busy, {failed} error)"
+        )));
+    }
     Ok(())
 }

@@ -6,6 +6,8 @@
 //! fmafft fft     --n N [--strategy dual] [--dtype f64|f32|bf16|f16]
 //! fmafft serve   [--n 1024] [--dtype f16] [--strategy dual] [--pjrt]
 //!                [--rate 2000] [--requests 5000]
+//!                [--listen ADDR] [--serve-for SECS]   (fftd mode)
+//! fmafft client  --addr HOST:PORT [--dtype f32] [--requests 16]
 //! fmafft help
 //! ```
 
@@ -30,6 +32,7 @@ pub fn run<I: IntoIterator<Item = String>>(argv: I) -> i32 {
         "audit" => commands::audit(&parsed),
         "fft" => commands::fft(&parsed),
         "serve" => commands::serve(&parsed),
+        "client" => commands::client(&parsed),
         "help" | "--help" | "-h" => {
             println!("{}", commands::USAGE);
             Ok(())
@@ -88,6 +91,11 @@ mod tests {
                 "precision {p}"
             );
         }
+    }
+
+    #[test]
+    fn client_requires_addr() {
+        assert_eq!(run(["client".to_string()]), 1);
     }
 
     #[test]

@@ -34,5 +34,5 @@ pub mod request;
 pub mod server;
 
 pub use metrics::{DTypeCounts, Metrics, MetricsSnapshot};
-pub use request::{FftOp, FftRequest, FftResponse, PlanKey, RequestMeta};
+pub use request::{FftOp, FftRequest, FftResponse, PlanKey, RequestMeta, Route};
 pub use server::{Backend, Server, ServerConfig};

@@ -42,6 +42,20 @@ pub struct PlanKey {
     pub dtype: DType,
 }
 
+/// Routing header of an externally-submitted request — the shape the
+/// network plane's ingest hook
+/// ([`crate::coordinator::Server::submit_routed`]) takes: a
+/// caller-chosen response-correlation id plus the full per-request
+/// plan selection.  The id is echoed on the [`FftResponse`] and only
+/// needs to be unique per reply channel, not globally.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Route {
+    pub id: u64,
+    pub op: FftOp,
+    pub dtype: DType,
+    pub strategy: Strategy,
+}
+
 /// A client request: one split-format frame.  The payload travels to
 /// the intake thread, which deserializes it straight into the batch
 /// arena (f64 → working dtype, one rounding pass) and keeps only the

@@ -34,7 +34,7 @@ use crate::signal::pulse::MatchedFilter;
 use super::backpressure::Gate;
 use super::batcher::{Batch, BatchPolicy, Batcher};
 use super::metrics::Metrics;
-use super::request::{FftOp, FftRequest, FftResponse, PlanKey};
+use super::request::{FftOp, FftRequest, FftResponse, PlanKey, Route};
 
 /// Which compute plane serves the batches.
 pub enum Backend {
@@ -111,30 +111,25 @@ struct ComputeCtx {
     n: usize,
     strategy: Strategy,
     planner: AnyPlanner,
-    /// Matched filters built on demand per dtype (worker-local lock,
-    /// uncontended; the server-default dtype is built eagerly so a bad
-    /// pulse config fails every batch immediately, as before).
-    matched: Mutex<std::collections::HashMap<DType, AnyTransform>>,
+    /// Matched filters built on demand per (strategy, dtype)
+    /// (worker-local lock, uncontended; the server-default pair is
+    /// built eagerly so a bad pulse config fails every batch
+    /// immediately, as before).  Since the network plane landed,
+    /// requests can override the strategy per call, so the key is the
+    /// full pair.
+    matched: Mutex<std::collections::HashMap<(Strategy, DType), AnyTransform>>,
     /// Zero-padded reference chirp for lazily-built matched filters.
     chirp: (Vec<f64>, Vec<f64>),
-    /// |t|max of the *stored* (clamped) twiddle table for (n,
-    /// strategy), computed once — the dtype-independent part of the
-    /// a-priori response bound.
-    tmax_stored: Option<f64>,
+    /// |t|max of the *stored* (clamped) twiddle table per strategy,
+    /// computed on first use — the dtype-independent part of the
+    /// a-priori response bound (`None` when no ratio bound applies).
+    tmax: Mutex<std::collections::HashMap<Strategy, Option<f64>>>,
     engine: Option<Engine>,
 }
 
 impl ComputeCtx {
     fn new(recipe: &ComputeRecipe) -> FftResult<Self> {
         let chirp = default_chirp(recipe.pulse_len);
-        let tmax_stored = if recipe.strategy == Strategy::Standard
-            || recipe.n < 2
-            || !recipe.n.is_power_of_two()
-        {
-            None
-        } else {
-            Some(ratio_stats(recipe.n, recipe.strategy).max_clamped)
-        };
         let engine = match &recipe.artifact_dir {
             None => None,
             Some(dir) => Some(Engine::new(dir)?),
@@ -145,45 +140,61 @@ impl ComputeCtx {
             planner: AnyPlanner::new(),
             matched: Mutex::new(std::collections::HashMap::new()),
             chirp,
-            tmax_stored,
+            tmax: Mutex::new(std::collections::HashMap::new()),
             engine,
         };
-        // Preflight the default dtype's matched filter (validates the
-        // pulse/frame configuration at worker start).
-        ctx.matched_for(recipe.dtype)?;
+        // Warm the default strategy's ratio statistics and preflight
+        // the default matched filter (validates the pulse/frame
+        // configuration at worker start).
+        let _ = ctx.tmax_for(recipe.strategy);
+        ctx.matched_for(recipe.strategy, recipe.dtype)?;
         Ok(ctx)
     }
 
-    /// The matched filter computing in `dtype`, built on first use.
-    fn matched_for(&self, dtype: DType) -> FftResult<AnyTransform> {
+    /// |t|max of the stored table for `strategy` at this server's n,
+    /// computed once per strategy the worker has seen.
+    fn tmax_for(&self, strategy: Strategy) -> Option<f64> {
+        let mut map = self.tmax.lock().unwrap_or_else(PoisonError::into_inner);
+        *map.entry(strategy).or_insert_with(|| {
+            if strategy == Strategy::Standard || self.n < 2 || !self.n.is_power_of_two() {
+                None
+            } else {
+                Some(ratio_stats(self.n, strategy).max_clamped)
+            }
+        })
+    }
+
+    /// The matched filter computing in (`strategy`, `dtype`), built on
+    /// first use.
+    fn matched_for(&self, strategy: Strategy, dtype: DType) -> FftResult<AnyTransform> {
         let mut map = self.matched.lock().unwrap_or_else(PoisonError::into_inner);
-        if let Some(t) = map.get(&dtype) {
+        if let Some(t) = map.get(&(strategy, dtype)) {
             return Ok(t.clone());
         }
         let (cr, ci) = (&self.chirp.0, &self.chirp.1);
         let built = match dtype {
             DType::F64 => {
                 let mf: MatchedFilter<f64> =
-                    MatchedFilter::new(&Planner::new(), self.strategy, self.n, cr, ci)?;
+                    MatchedFilter::new(&Planner::new(), strategy, self.n, cr, ci)?;
                 AnyTransform::F64(Arc::new(mf))
             }
             DType::F32 => {
                 let mf: MatchedFilter<f32> =
-                    MatchedFilter::new(&Planner::new(), self.strategy, self.n, cr, ci)?;
+                    MatchedFilter::new(&Planner::new(), strategy, self.n, cr, ci)?;
                 AnyTransform::F32(Arc::new(mf))
             }
             DType::Bf16 => {
                 let mf: MatchedFilter<crate::precision::Bf16> =
-                    MatchedFilter::new(&Planner::new(), self.strategy, self.n, cr, ci)?;
+                    MatchedFilter::new(&Planner::new(), strategy, self.n, cr, ci)?;
                 AnyTransform::Bf16(Arc::new(mf))
             }
             DType::F16 => {
                 let mf: MatchedFilter<crate::precision::F16> =
-                    MatchedFilter::new(&Planner::new(), self.strategy, self.n, cr, ci)?;
+                    MatchedFilter::new(&Planner::new(), strategy, self.n, cr, ci)?;
                 AnyTransform::F16(Arc::new(mf))
             }
         };
-        map.insert(dtype, built.clone());
+        map.insert((strategy, dtype), built.clone());
         Ok(built)
     }
 
@@ -198,19 +209,19 @@ impl ComputeCtx {
                 self.planner
                     .plan(key.n, key.strategy, Direction::Inverse, key.dtype)
             }
-            FftOp::MatchedFilter => self.matched_for(key.dtype),
+            FftOp::MatchedFilter => self.matched_for(key.strategy, key.dtype),
         }
     }
 
     /// The a-priori error bound attached to responses for `key` —
     /// [`crate::analysis::bounds::serving_bound`] evaluated with the
-    /// `|t|max` cached at worker start.  None for the matched-filter
+    /// `|t|max` cached per strategy.  None for the matched-filter
     /// composite (two transforms plus a pointwise product; no single
     /// eq.-(11) form applies).
     fn bound_for(&self, key: &PlanKey) -> Option<f64> {
         match key.op {
             FftOp::MatchedFilter => None,
-            FftOp::Forward | FftOp::Inverse => self.tmax_stored.map(|tmax| {
+            FftOp::Forward | FftOp::Inverse => self.tmax_for(key.strategy).map(|tmax| {
                 serving_bound_from_tmax(tmax, key.dtype.epsilon(), self.n.trailing_zeros())
             }),
         }
@@ -319,6 +330,9 @@ pub struct Server {
     handles: Mutex<Vec<JoinHandle<()>>>,
     workers: usize,
     arena_pool: Arc<AnyArenaPool>,
+    /// Set once by the first [`Server::shutdown`] (explicit or from
+    /// [`Drop`]) so teardown never runs twice.
+    stopped: std::sync::atomic::AtomicBool,
 }
 
 impl Server {
@@ -392,6 +406,7 @@ impl Server {
             handles: Mutex::new(handles),
             workers: cfg.workers.max(1),
             arena_pool,
+            stopped: std::sync::atomic::AtomicBool::new(false),
         }))
     }
 
@@ -417,8 +432,38 @@ impl Server {
         re: Vec<f64>,
         im: Vec<f64>,
     ) -> FftResult<mpsc::Receiver<FftResponse>> {
+        let (tx, rx) = mpsc::channel();
+        let route = Route {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            op,
+            dtype,
+            strategy: self.strategy,
+        };
+        self.submit_routed(route, re, im, tx)?;
+        Ok(rx)
+    }
+
+    /// Submit a fully-specified request whose response is delivered to
+    /// a caller-owned channel under a caller-chosen id — the ingest
+    /// hook the network plane ([`crate::net`]) uses to fan many
+    /// in-flight wire requests into one per-connection reply channel.
+    ///
+    /// The payload still deserializes straight into the coordinator's
+    /// pooled batch arenas at intake; `route.strategy` overrides the
+    /// server default per request (batches key on the full
+    /// `(n, op, strategy, dtype)`, so mixed-strategy traffic shares
+    /// the coordinator but never a batch).  Backpressure surfaces as
+    /// [`FftError::Rejected`] without consuming the reply channel.
+    pub fn submit_routed(
+        &self,
+        route: Route,
+        re: Vec<f64>,
+        im: Vec<f64>,
+        reply: mpsc::Sender<FftResponse>,
+    ) -> FftResult<()> {
         if re.len() != self.n || im.len() != self.n {
-            return Err(FftError::LengthMismatch { expected: self.n, got: re.len() });
+            let got = if re.len() != self.n { re.len() } else { im.len() };
+            return Err(FftError::LengthMismatch { expected: self.n, got });
         }
         let Some(permit) = self.gate.try_admit() else {
             self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
@@ -427,21 +472,24 @@ impl Server {
                 limit: self.gate.limit(),
             });
         };
-        self.metrics.record_submitted(dtype);
-        let (tx, rx) = mpsc::channel();
+        self.metrics.record_submitted(route.dtype);
         let req = FftRequest {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
-            key: PlanKey { n: self.n, op, strategy: self.strategy, dtype },
+            id: route.id,
+            key: PlanKey {
+                n: self.n,
+                op: route.op,
+                strategy: route.strategy,
+                dtype: route.dtype,
+            },
             re,
             im,
-            reply: tx,
+            reply,
             submitted: Instant::now(),
             permit: Some(permit),
         };
         self.intake_tx
             .send(IntakeMsg::Req(req))
-            .map_err(|_| FftError::ChannelClosed("server is shut down"))?;
-        Ok(rx)
+            .map_err(|_| FftError::ChannelClosed("server is shut down"))
     }
 
     /// Submit and block for the response (default dtype).
@@ -472,8 +520,13 @@ impl Server {
         }
     }
 
-    /// Drain and stop all threads.
+    /// Drain and stop all threads.  Idempotent: the first call (from
+    /// any thread, or from [`Drop`]) tears down; later calls return
+    /// immediately, so explicit-shutdown-then-drop never double-joins.
     pub fn shutdown(&self) {
+        if self.stopped.swap(true, Ordering::SeqCst) {
+            return;
+        }
         self.drain();
         let _ = self.intake_tx.send(IntakeMsg::Shutdown);
         let mut handles = self
@@ -504,10 +557,32 @@ impl Server {
         self.dtype
     }
 
+    /// The server's default butterfly strategy.
+    pub fn strategy(&self) -> Strategy {
+        self.strategy
+    }
+
+    /// The frame length this server was planned for.
+    pub fn frame_len(&self) -> usize {
+        self.n
+    }
+
     /// Arenas parked for recycling (observability for the zero-copy
     /// response path).
     pub fn arenas_parked(&self) -> usize {
         self.arena_pool.parked()
+    }
+}
+
+/// Dropping the last handle tears the server down: drain, stop, join
+/// — so `fftd` ctrl-c paths and tests that forget an explicit
+/// [`Server::shutdown`] cannot leak worker threads.  The `stopped`
+/// guard makes this a no-op after an explicit shutdown, and every
+/// lock on the teardown path recovers from poisoning instead of
+/// double-panicking.
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
     }
 }
 

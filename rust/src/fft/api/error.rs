@@ -13,6 +13,7 @@
 //!   [`FftError::InvalidArgument`]
 //! * serving plane — [`FftError::Rejected`], [`FftError::ChannelClosed`],
 //!   [`FftError::Poisoned`]
+//! * network plane (wire codec) — [`FftError::Protocol`]
 //! * compute backends — [`FftError::Backend`]
 
 use core::fmt;
@@ -50,6 +51,11 @@ pub enum FftError {
     /// A compute backend (PJRT runtime, artifact manifest, worker
     /// thread spawn) failed.
     Backend(String),
+    /// A malformed or incompatible frame on the network plane: bad
+    /// magic, failed header checksum, unknown version, unknown
+    /// op/strategy/dtype/status tag, an oversized or inconsistent
+    /// length, or a stream truncated mid-frame (see `PROTOCOL.md`).
+    Protocol(String),
     /// Admission control rejected the request (backpressure).
     Rejected { in_flight: usize, limit: usize },
     /// The server (or a response channel) has shut down.
@@ -83,6 +89,7 @@ impl fmt::Display for FftError {
                 write!(f, "lock poisoned by a panicked thread: {what}")
             }
             FftError::Backend(msg) => f.write_str(msg),
+            FftError::Protocol(msg) => write!(f, "protocol error: {msg}"),
             FftError::Rejected { in_flight, limit } => {
                 write!(f, "rejected: {in_flight} requests in flight (limit {limit})")
             }
@@ -112,6 +119,10 @@ mod tests {
         assert!(FftError::LengthMismatch { expected: 8, got: 4 }
             .to_string()
             .contains("expected 8"));
+        assert_eq!(
+            FftError::Protocol("bad magic".into()).to_string(),
+            "protocol error: bad magic"
+        );
     }
 
     #[test]

@@ -30,6 +30,11 @@
 //!   dynamic-batching request coordinator in the style of vLLM's
 //!   router, whose workers drive `dyn Transform` batches; the PJRT
 //!   artifact runtime is stubbed offline (see [`runtime`]).
+//! * **Network plane** ([`net`]) — `fftd`: a zero-dependency TCP
+//!   serving layer over the coordinator ([`net::wire`] frame codec,
+//!   [`net::FftdServer`], [`net::FftClient`]), so remote callers get
+//!   the same dtype + a-priori-bound metadata as in-process ones.
+//!   See `PROTOCOL.md` for the wire format.
 //! * **Applications** ([`signal`], [`workload`]) — the radar pulse
 //!   compression and spectrogram pipelines the paper motivates, used by
 //!   the examples and benches.
@@ -44,6 +49,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod dft;
 pub mod fft;
+pub mod net;
 pub mod precision;
 pub mod runtime;
 pub mod signal;

@@ -1,0 +1,332 @@
+//! `FftClient` — a blocking client for the `fftd` wire protocol.
+//!
+//! Two usage shapes over one connection:
+//!
+//! * **Call**: [`FftClient::call`] / [`FftClient::call_with`] submit
+//!   one request and block for *its* response (other in-flight
+//!   responses are buffered, so calls compose with pipelining).
+//! * **Pipeline**: [`FftClient::submit`] returns immediately with the
+//!   request id; [`FftClient::recv`] yields responses in *completion*
+//!   order — keep a window of ids in flight for throughput.
+//!
+//! Server-side failures come back typed: a `BUSY` wire status decodes
+//! to [`FftError::Rejected`] (mirroring what an in-process
+//! [`crate::coordinator::Server::submit_with`] caller sees), an
+//! `ERROR` status to [`FftError::Backend`] carrying the server's
+//! message.  Transport and framing failures are the return value of
+//! `submit`/`recv` themselves.
+
+use std::collections::VecDeque;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use crate::coordinator::FftOp;
+use crate::fft::{DType, FftError, FftResult, Strategy};
+
+use super::wire;
+
+/// One completed wire exchange, mirroring the in-process
+/// [`crate::coordinator::FftResponse`]: the working dtype, the
+/// a-priori error bound the server attached (when one applies), the
+/// result frame widened exactly to f64 — or a typed error.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetResponse {
+    /// The id [`FftClient::submit`] returned for this request.
+    pub id: u64,
+    /// Working precision the request was computed in (the wire
+    /// default, f32, when the server could not say — e.g. `BUSY`).
+    pub dtype: DType,
+    /// A-priori cumulative error bound for the request's
+    /// strategy × dtype; `None` when no ratio bound applies.
+    pub bound: Option<f64>,
+    pub re: Vec<f64>,
+    pub im: Vec<f64>,
+    /// `Rejected` for a `BUSY` status, `Backend` for a server-side
+    /// `ERROR` status, `None` on success.
+    pub error: Option<FftError>,
+}
+
+impl NetResponse {
+    pub fn is_ok(&self) -> bool {
+        self.error.is_none()
+    }
+}
+
+/// Blocking TCP client for one `fftd` connection.
+pub struct FftClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    next_id: u64,
+    dtype: DType,
+    strategy: Strategy,
+    /// Responses read while waiting for a specific id (completion
+    /// order differs from submission order under pipelining).
+    pending: VecDeque<wire::Response>,
+    in_flight: usize,
+    /// Set after any transport/framing failure.  A failed read may
+    /// have consumed part of a frame, so the stream can no longer be
+    /// trusted to be on a frame boundary — every later submit/recv
+    /// fails fast instead of desyncing silently.
+    poisoned: bool,
+}
+
+impl FftClient {
+    /// Connect to an `fftd` server.
+    pub fn connect(addr: impl ToSocketAddrs) -> FftResult<FftClient> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| FftError::Backend(format!("connecting to fftd: {e}")))?;
+        let _ = stream.set_nodelay(true);
+        let reader = stream
+            .try_clone()
+            .map_err(|e| FftError::Backend(format!("cloning fftd stream: {e}")))?;
+        Ok(FftClient {
+            reader: BufReader::new(reader),
+            writer: BufWriter::new(stream),
+            next_id: 1,
+            dtype: DType::F32,
+            strategy: Strategy::DualSelect,
+            pending: VecDeque::new(),
+            in_flight: 0,
+            poisoned: false,
+        })
+    }
+
+    /// Set the dtype/strategy used by [`FftClient::call`] and
+    /// [`FftClient::submit`] (the wire defaults are f32 and
+    /// dual-select).
+    pub fn with_defaults(mut self, dtype: DType, strategy: Strategy) -> FftClient {
+        self.dtype = dtype;
+        self.strategy = strategy;
+        self
+    }
+
+    /// Bound how long [`FftClient::recv`] may block (`None` = wait
+    /// forever).  A timeout surfaces as a transport error, not a
+    /// hang — recommended in tests and batch jobs.
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) -> FftResult<()> {
+        self.reader
+            .get_ref()
+            .set_read_timeout(timeout)
+            .map_err(|e| FftError::Backend(format!("setting read timeout: {e}")))
+    }
+
+    /// Requests submitted but not yet received.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// Pipelined submit with the client's default dtype/strategy:
+    /// write one request frame and return its id without waiting.
+    pub fn submit(&mut self, op: FftOp, re: &[f64], im: &[f64]) -> FftResult<u64> {
+        self.submit_with(op, self.dtype, self.strategy, re, im)
+    }
+
+    /// Pipelined submit with explicit working precision and butterfly
+    /// strategy.
+    ///
+    /// Ids count up from 1 — id 0 is reserved by the protocol for
+    /// connection-level errors (see `PROTOCOL.md` §Session) and is
+    /// skipped on wraparound.
+    pub fn submit_with(
+        &mut self,
+        op: FftOp,
+        dtype: DType,
+        strategy: Strategy,
+        re: &[f64],
+        im: &[f64],
+    ) -> FftResult<u64> {
+        if self.poisoned {
+            return Err(FftError::ChannelClosed(
+                "connection poisoned by an earlier transport error; reconnect",
+            ));
+        }
+        if re.len() != im.len() {
+            return Err(FftError::LengthMismatch { expected: re.len(), got: im.len() });
+        }
+        let id = self.next_id;
+        self.next_id = self.next_id.wrapping_add(1);
+        if self.next_id == 0 {
+            self.next_id = 1;
+        }
+        if let Err(e) = wire::write_request_parts(&mut self.writer, id, op, strategy, dtype, re, im)
+        {
+            // Encode-time validation errors write nothing; an i/o
+            // failure may have left a partial frame on the wire —
+            // the stream is off a frame boundary for good.
+            if matches!(e, FftError::Backend(_)) {
+                self.poisoned = true;
+            }
+            return Err(e);
+        }
+        if let Err(e) = self.writer.flush() {
+            self.poisoned = true;
+            return Err(FftError::Backend(format!("flushing request frame: {e}")));
+        }
+        self.in_flight += 1;
+        Ok(id)
+    }
+
+    /// Next response in completion order (buffered responses first).
+    /// Blocks until one arrives, the read timeout expires, or the
+    /// server closes the connection.
+    pub fn recv(&mut self) -> FftResult<NetResponse> {
+        let frame = match self.pending.pop_front() {
+            Some(f) => f,
+            None => self.read_frame()?,
+        };
+        self.in_flight = self.in_flight.saturating_sub(1);
+        Ok(from_wire(frame))
+    }
+
+    /// Block for the response to a specific `id`, buffering any other
+    /// responses that complete first.
+    pub fn recv_id(&mut self, id: u64) -> FftResult<NetResponse> {
+        if let Some(pos) = self.pending.iter().position(|f| f.id() == id) {
+            let frame = self.pending.remove(pos).unwrap();
+            self.in_flight = self.in_flight.saturating_sub(1);
+            return Ok(from_wire(frame));
+        }
+        loop {
+            let frame = self.read_frame()?;
+            if frame.id() == id {
+                self.in_flight = self.in_flight.saturating_sub(1);
+                return Ok(from_wire(frame));
+            }
+            self.pending.push_back(frame);
+        }
+    }
+
+    /// Submit one request and block for its response (default
+    /// dtype/strategy).
+    pub fn call(&mut self, op: FftOp, re: &[f64], im: &[f64]) -> FftResult<NetResponse> {
+        let id = self.submit(op, re, im)?;
+        self.recv_id(id)
+    }
+
+    /// [`FftClient::call`] with explicit working precision and
+    /// strategy — the remote spelling of
+    /// [`crate::coordinator::Server::submit_wait_with`].
+    pub fn call_with(
+        &mut self,
+        op: FftOp,
+        dtype: DType,
+        strategy: Strategy,
+        re: &[f64],
+        im: &[f64],
+    ) -> FftResult<NetResponse> {
+        let id = self.submit_with(op, dtype, strategy, re, im)?;
+        self.recv_id(id)
+    }
+
+    fn read_frame(&mut self) -> FftResult<wire::Response> {
+        if self.poisoned {
+            return Err(FftError::ChannelClosed(
+                "connection poisoned by an earlier transport error; reconnect",
+            ));
+        }
+        let frame = match wire::read_response(&mut self.reader) {
+            Ok(f) => f,
+            Err(e) => {
+                // The failed read may have consumed part of a frame
+                // (e.g. a timeout mid-header); the stream is off a
+                // frame boundary for good.
+                self.poisoned = true;
+                return Err(e);
+            }
+        };
+        match frame {
+            Some(frame) if frame.id() == 0 => {
+                // Id 0 is reserved for connection-level errors the
+                // server could not attribute to any request
+                // (PROTOCOL.md §Session) — surface it as a transport
+                // failure, never as some request's answer.  In-flight
+                // accounting is unknowable past this point, so the
+                // connection is treated as done.
+                self.poisoned = true;
+                let detail = match frame {
+                    wire::Response::Error { message, .. } => message,
+                    other => format!("unexpected id-0 frame {other:?}"),
+                };
+                Err(FftError::Protocol(format!(
+                    "server reported a connection-level error: {detail}"
+                )))
+            }
+            Some(frame) => Ok(frame),
+            None => {
+                self.poisoned = true;
+                Err(FftError::ChannelClosed("fftd closed the connection"))
+            }
+        }
+    }
+}
+
+fn from_wire(frame: wire::Response) -> NetResponse {
+    match frame {
+        wire::Response::Ok { id, dtype, bound, re, im } => {
+            NetResponse { id, dtype, bound, re, im, error: None }
+        }
+        wire::Response::Busy { id, in_flight, limit } => NetResponse {
+            id,
+            dtype: DType::F32,
+            bound: None,
+            re: Vec::new(),
+            im: Vec::new(),
+            error: Some(FftError::Rejected {
+                in_flight: in_flight as usize,
+                limit: limit as usize,
+            }),
+        },
+        wire::Response::Error { id, dtype, message } => NetResponse {
+            id,
+            dtype,
+            bound: None,
+            re: Vec::new(),
+            im: Vec::new(),
+            error: Some(FftError::Backend(message)),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn busy_frames_decode_to_typed_rejection() {
+        let r = from_wire(wire::Response::Busy { id: 3, in_flight: 7, limit: 7 });
+        assert_eq!(r.id, 3);
+        assert!(!r.is_ok());
+        assert_eq!(r.error, Some(FftError::Rejected { in_flight: 7, limit: 7 }));
+        assert!(r.re.is_empty());
+    }
+
+    #[test]
+    fn error_frames_carry_the_server_message() {
+        let r = from_wire(wire::Response::Error {
+            id: 4,
+            dtype: DType::F16,
+            message: "length mismatch: expected 256, got 8".into(),
+        });
+        assert_eq!(r.dtype, DType::F16);
+        assert_eq!(
+            r.error,
+            Some(FftError::Backend("length mismatch: expected 256, got 8".into()))
+        );
+    }
+
+    #[test]
+    fn ok_frames_keep_payload_and_bound() {
+        let r = from_wire(wire::Response::Ok {
+            id: 9,
+            dtype: DType::F16,
+            bound: Some(0.061),
+            re: vec![1.0, 2.0],
+            im: vec![3.0, 4.0],
+        });
+        assert!(r.is_ok());
+        assert_eq!(r.bound, Some(0.061));
+        assert_eq!(r.re, vec![1.0, 2.0]);
+        assert_eq!(r.im, vec![3.0, 4.0]);
+    }
+}

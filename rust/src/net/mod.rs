@@ -1,0 +1,39 @@
+//! The network plane: a zero-dependency TCP serving layer over the
+//! coordinator — `std::net` + `std::io` only.
+//!
+//! After the batch/dtype redesigns the serving fast path (dtype-erased
+//! [`crate::fft::AnyTransform`], pooled arenas, zero-alloc workers)
+//! was only reachable in-process.  This module opens it to remote
+//! callers without changing its semantics:
+//!
+//! ```text
+//!   FftClient ──request frame──► FftdServer(reader) ─► Server::submit_routed
+//!      ▲                                                   │ (payload lands in the
+//!      │                                                   │  pooled batch arenas)
+//!      └──response frame◄── FftdServer(writer) ◄── reply channel ◄── workers
+//! ```
+//!
+//! * [`wire`] — the versioned, length-prefixed, checksummed binary
+//!   frame codec (`PROTOCOL.md` is the normative spec).  Malformed
+//!   frames decode to typed [`crate::fft::FftError::Protocol`]
+//!   errors, never panics.
+//! * [`server`] — [`FftdServer`]: acceptor + two threads per
+//!   connection, pipelining (responses stream in completion order),
+//!   coordinator backpressure mapped to a `BUSY` wire status, and
+//!   graceful drain/shutdown.
+//! * [`client`] — [`FftClient`]: blocking `call`/`call_with` plus the
+//!   pipelined `submit`/`recv` pair.
+//!
+//! Responses carry exactly what in-process callers get: the working
+//! dtype and the a-priori error bound for the request's
+//! strategy × dtype, with the result frame widened *exactly* to f64 —
+//! a TCP response is bit-identical to the same request served through
+//! [`crate::coordinator::Server::submit_wait_with`] (asserted by
+//! `tests/net_serving.rs`).
+
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use client::{FftClient, NetResponse};
+pub use server::FftdServer;

@@ -1,0 +1,406 @@
+//! `fftd` — the TCP serving plane over the coordinator.
+//!
+//! One bounded acceptor thread plus two threads per connection:
+//!
+//! ```text
+//!   accept ── spawn ──► reader ──► Server::submit_routed ──► workers
+//!                         │ (decode straight into the pooled            │
+//!                         │  batch arenas; wire id = reply id)          │
+//!                         └── reply_tx clone ◄──────────────────────────┘
+//!                                   │
+//!                                 writer  (one per connection; encodes
+//!                                          responses in COMPLETION
+//!                                          order — pipelining)
+//! ```
+//!
+//! Every wire request on a connection shares that connection's one
+//! reply channel, so any number of request ids can be in flight and
+//! responses stream back as the coordinator finishes them — no
+//! head-of-line blocking between requests.  Coordinator backpressure
+//! ([`FftError::Rejected`]) becomes a `BUSY` wire status on the same
+//! connection instead of a disconnect; malformed bytes get a
+//! best-effort `ERROR` frame before the connection closes (the stream
+//! can no longer be framed after a decode failure).
+//!
+//! Shutdown is graceful: [`FftdServer::drain`] stops the acceptor
+//! only; [`FftdServer::shutdown`] then closes each connection's read
+//! half, which lets in-flight responses flush before the writer
+//! exits, and joins every thread.  Dropping the server shuts it down.
+
+use std::io::BufReader;
+use std::net::{
+    IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs,
+};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex, PoisonError};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::{FftResponse, Route, Server};
+use crate::fft::{DType, FftError, FftResult};
+
+use super::wire;
+
+/// How long a connection writer may block on a peer that has stopped
+/// reading before the connection is declared dead (keeps
+/// [`FftdServer::shutdown`] from hanging on a stuck client).
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// The `fftd` daemon: a [`TcpListener`] serving a coordinator
+/// [`Server`] over the `PROTOCOL.md` wire format.
+pub struct FftdServer {
+    coordinator: Arc<Server>,
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_handle: Mutex<Option<JoinHandle<()>>>,
+    conns: Arc<Mutex<Vec<ConnHandle>>>,
+    stopped: AtomicBool,
+}
+
+struct ConnHandle {
+    /// A clone of the connection stream, kept so shutdown can unblock
+    /// the reader with [`TcpStream::shutdown`].
+    stream: TcpStream,
+    reader: Option<JoinHandle<()>>,
+    writer: Option<JoinHandle<()>>,
+}
+
+fn thread_done(h: &Option<JoinHandle<()>>) -> bool {
+    match h {
+        Some(handle) => handle.is_finished(),
+        None => true,
+    }
+}
+
+impl ConnHandle {
+    fn join(mut self) {
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.writer.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl FftdServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start accepting connections that are served by `coordinator`.
+    pub fn start(coordinator: Arc<Server>, addr: impl ToSocketAddrs) -> FftResult<FftdServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| FftError::Backend(format!("binding fftd listener: {e}")))?;
+        let local_addr = listener
+            .local_addr()
+            .map_err(|e| FftError::Backend(format!("reading fftd listener address: {e}")))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<ConnHandle>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let accept_handle = {
+            let stop = stop.clone();
+            let conns = conns.clone();
+            let coordinator = coordinator.clone();
+            std::thread::Builder::new()
+                .name("fftd-accept".into())
+                .spawn(move || accept_loop(listener, coordinator, stop, conns))
+                .map_err(|e| FftError::Backend(format!("spawning fftd acceptor: {e}")))?
+        };
+
+        Ok(FftdServer {
+            coordinator,
+            local_addr,
+            stop,
+            accept_handle: Mutex::new(Some(accept_handle)),
+            conns,
+            stopped: AtomicBool::new(false),
+        })
+    }
+
+    /// The bound address — with port filled in when the server was
+    /// started on port 0.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The coordinator this daemon fronts.
+    pub fn coordinator(&self) -> &Arc<Server> {
+        &self.coordinator
+    }
+
+    /// Connections currently tracked (finished ones are pruned as new
+    /// connections arrive and at shutdown).
+    pub fn connections(&self) -> usize {
+        self.conns
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .len()
+    }
+
+    /// Stop accepting new connections; established connections keep
+    /// being served.  Idempotent.
+    pub fn drain(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let handle = self
+            .accept_handle
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .take();
+        if let Some(h) = handle {
+            // Wake the blocking accept with a throwaway connection so
+            // the loop observes the stop flag and exits.
+            let wake = wake_addr(self.local_addr);
+            if TcpStream::connect_timeout(&wake, Duration::from_millis(500)).is_ok() {
+                let _ = h.join();
+            }
+            // If the self-connection failed (e.g. a firewalled
+            // non-loopback bind), the acceptor stays parked until the
+            // next real connection, observes `stop`, and exits then —
+            // detach rather than hang the teardown on a join.
+        }
+    }
+
+    /// Graceful shutdown: drain the acceptor, then close every
+    /// connection's read half — in-flight responses still flush
+    /// through the writers — and join all connection threads.
+    /// Idempotent; also runs on drop.  The coordinator is left
+    /// running (it may be shared); shut it down separately.
+    pub fn shutdown(&self) {
+        if self.stopped.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        self.drain();
+        let mut conns = self.conns.lock().unwrap_or_else(PoisonError::into_inner);
+        for c in conns.iter() {
+            // EOF the reader; it exits cleanly and drops its reply
+            // sender, so the writer terminates once every in-flight
+            // response has been written.
+            let _ = c.stream.shutdown(Shutdown::Read);
+        }
+        for c in conns.drain(..) {
+            c.join();
+        }
+    }
+}
+
+impl Drop for FftdServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Loopback-reachable form of the bound address (an unspecified bind
+/// ip like 0.0.0.0 is not connectable; the wake-up connection targets
+/// localhost on the same port).
+fn wake_addr(local: SocketAddr) -> SocketAddr {
+    let ip = if local.ip().is_unspecified() {
+        match local {
+            SocketAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+            SocketAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+        }
+    } else {
+        local.ip()
+    };
+    SocketAddr::new(ip, local.port())
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    coordinator: Arc<Server>,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<ConnHandle>>>,
+) {
+    for incoming in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let stream = match incoming {
+            Ok(s) => s,
+            Err(_) => {
+                // Transient accept failures (EMFILE, aborted handshake)
+                // must not busy-spin the acceptor at 100% CPU.
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        // On stream-setup failure (clone/spawn) the connection is
+        // simply dropped and the acceptor keeps serving.
+        if let Ok(conn) = spawn_connection(stream, &coordinator) {
+            let mut guard = conns.lock().unwrap_or_else(PoisonError::into_inner);
+            // Reap connections that already hung up.
+            guard.retain_mut(|c| {
+                let done = thread_done(&c.reader) && thread_done(&c.writer);
+                if done {
+                    if let Some(h) = c.reader.take() {
+                        let _ = h.join();
+                    }
+                    if let Some(h) = c.writer.take() {
+                        let _ = h.join();
+                    }
+                }
+                !done
+            });
+            guard.push(conn);
+        }
+    }
+}
+
+fn spawn_connection(stream: TcpStream, coordinator: &Arc<Server>) -> std::io::Result<ConnHandle> {
+    // Frames are written whole and flushed; disable Nagle so pipelined
+    // responses are not held back waiting for more bytes.
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let read_half = stream.try_clone()?;
+    let write_half = stream.try_clone()?;
+    let (reply_tx, reply_rx) = mpsc::channel::<FftResponse>();
+    let coordinator = coordinator.clone();
+    let reader = std::thread::Builder::new()
+        .name("fftd-conn-read".into())
+        .spawn(move || read_loop(read_half, coordinator, reply_tx))?;
+    let writer = match std::thread::Builder::new()
+        .name("fftd-conn-write".into())
+        .spawn(move || write_loop(write_half, reply_rx))
+    {
+        Ok(w) => w,
+        Err(e) => {
+            // The reader is already running on a cloned fd; close the
+            // socket so it exits at EOF instead of serving a
+            // connection whose responses would go nowhere, and reap
+            // it before reporting the failure.
+            let _ = stream.shutdown(Shutdown::Both);
+            let _ = reader.join();
+            return Err(e);
+        }
+    };
+    Ok(ConnHandle { stream, reader: Some(reader), writer: Some(writer) })
+}
+
+/// Decode request frames and hand them to the coordinator.  Requests
+/// the coordinator refuses synchronously (backpressure, length
+/// mismatch, shutdown) are answered with a synthetic error response
+/// through the same reply channel, so the writer turns them into
+/// typed `BUSY`/`ERROR` wire statuses — the connection survives.
+fn read_loop(stream: TcpStream, coordinator: Arc<Server>, reply_tx: mpsc::Sender<FftResponse>) {
+    let mut r = BufReader::new(stream);
+    loop {
+        match wire::read_request(&mut r) {
+            Ok(None) => return, // peer closed cleanly
+            Ok(Some(req)) => {
+                let wire::Request { id, op, strategy, dtype, re, im } = req;
+                if id == 0 {
+                    // Id 0 is reserved for connection-level errors
+                    // (PROTOCOL.md §Session); answering an OK frame on
+                    // it would read as a fatal connection error to
+                    // conforming clients.  Reject the request, keep
+                    // the connection.
+                    let e = FftError::Protocol(
+                        "request used reserved correlation id 0".to_string(),
+                    );
+                    let _ = reply_tx.send(FftResponse::err(id, e, dtype, 0, Duration::ZERO));
+                    continue;
+                }
+                let route = Route { id, op, dtype, strategy };
+                if let Err(e) = coordinator.submit_routed(route, re, im, reply_tx.clone()) {
+                    let _ = reply_tx.send(FftResponse::err(id, e, dtype, 0, Duration::ZERO));
+                }
+            }
+            Err(e) => {
+                // The byte stream can no longer be framed; answer
+                // best-effort on the RESERVED connection-level id 0
+                // (PROTOCOL.md §Session) and close.
+                let _ = reply_tx.send(FftResponse::err(0, e, DType::F32, 0, Duration::ZERO));
+                return;
+            }
+        }
+    }
+    // reply_tx drops here; the writer exits after flushing whatever
+    // the coordinator still owes this connection.
+}
+
+/// Encode coordinator responses in completion order.  Consecutive
+/// already-completed responses coalesce into one flush.
+fn write_loop(stream: TcpStream, reply_rx: mpsc::Receiver<FftResponse>) {
+    use std::io::Write;
+    let mut w = std::io::BufWriter::new(stream);
+    'serve: while let Ok(resp) = reply_rx.recv() {
+        if write_reply(&mut w, &resp).is_err() {
+            break 'serve;
+        }
+        while let Ok(next) = reply_rx.try_recv() {
+            if write_reply(&mut w, &next).is_err() {
+                break 'serve;
+            }
+        }
+        if w.flush().is_err() {
+            break 'serve;
+        }
+    }
+    let _ = w.flush();
+    // The writer speaks last: once it exits nothing more can be sent
+    // on this connection.  Close the *socket* (not just this fd — a
+    // clone lives in the server registry until reaped), so the peer
+    // sees FIN now instead of when the registry prunes.
+    let _ = w.get_ref().shutdown(Shutdown::Both);
+}
+
+/// Write one coordinator response: successes stream the widened
+/// result planes straight into the connection writer (no intermediate
+/// byte-frame staging — the two `Vec<f64>` widening copies remain,
+/// inherent to exact f64 widening of non-f64 dtypes); failures go
+/// through [`error_to_wire`].
+fn write_reply<W: std::io::Write>(w: &mut W, resp: &FftResponse) -> crate::fft::FftResult<()> {
+    match &resp.error {
+        None => wire::write_ok_response_parts(
+            w,
+            resp.id,
+            resp.dtype,
+            resp.bound,
+            &resp.re_f64(),
+            &resp.im_f64(),
+        ),
+        Some(e) => wire::write_response(w, &error_to_wire(resp.id, resp.dtype, e)),
+    }
+}
+
+/// Map a failed coordinator response onto the wire:
+/// [`FftError::Rejected`] becomes the `BUSY` status; every other
+/// error travels as `ERROR` with its `Display` form.
+fn error_to_wire(id: u64, dtype: DType, e: &FftError) -> wire::Response {
+    match e {
+        FftError::Rejected { in_flight, limit } => wire::Response::Busy {
+            id,
+            in_flight: (*in_flight).min(u32::MAX as usize) as u32,
+            limit: (*limit).min(u32::MAX as usize) as u32,
+        },
+        other => wire::Response::Error { id, dtype, message: other.to_string() },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wake_addr_maps_unspecified_to_loopback() {
+        let a: SocketAddr = "0.0.0.0:8080".parse().unwrap();
+        assert_eq!(wake_addr(a), "127.0.0.1:8080".parse().unwrap());
+        let b: SocketAddr = "127.0.0.1:9000".parse().unwrap();
+        assert_eq!(wake_addr(b), b);
+        let c: SocketAddr = "[::]:7000".parse().unwrap();
+        assert_eq!(wake_addr(c), "[::1]:7000".parse().unwrap());
+    }
+
+    #[test]
+    fn busy_and_error_responses_map_to_wire_statuses() {
+        assert_eq!(
+            error_to_wire(5, DType::F16, &FftError::Rejected { in_flight: 9, limit: 9 }),
+            wire::Response::Busy { id: 5, in_flight: 9, limit: 9 }
+        );
+        match error_to_wire(6, DType::F32, &FftError::LengthMismatch { expected: 8, got: 4 }) {
+            wire::Response::Error { id, dtype, message } => {
+                assert_eq!(id, 6);
+                assert_eq!(dtype, DType::F32);
+                assert!(message.contains("length mismatch"));
+            }
+            other => panic!("expected error frame, got {other:?}"),
+        }
+    }
+}

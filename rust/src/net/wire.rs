@@ -1,0 +1,643 @@
+//! The versioned, length-prefixed binary frame codec of the network
+//! plane — `std::io` only, zero external dependencies.
+//!
+//! Every frame is a fixed 28-byte little-endian header followed by a
+//! `body_len`-byte body (see `PROTOCOL.md` for the normative layout):
+//!
+//! ```text
+//! offset size  field
+//!   0     4    magic     "FFTN"
+//!   4     2    version   1
+//!   6     1    kind      1 = request, 2 = response
+//!   7     1    code      request: op tag; response: status
+//!   8     1    strategy  request only (responses write 0)
+//!   9     1    dtype     working precision tag
+//!  10     2    reserved  must be 0 on encode, ignored on decode
+//!  12     8    id        caller-chosen correlation id
+//!  20     4    body_len  bytes following the header (<= MAX_BODY)
+//!  24     4    checksum  FNV-1a over header bytes [0, 24)
+//! ```
+//!
+//! Payloads travel planar as f64 (`n` re samples then `n` im
+//! samples), matching the coordinator's ingest policy: the serving
+//! side rounds **once** into the working dtype, and result frames
+//! widen exactly back to f64 — so the wire never adds a rounding
+//! step of its own.  Successful responses prefix the payload with the
+//! a-priori error bound for the request's strategy × dtype (NaN
+//! encodes "no bound applies").
+//!
+//! Every decode failure is a typed [`FftError::Protocol`] — truncated
+//! streams, bad magic, failed checksums, unknown versions/tags and
+//! oversized lengths are all errors, never panics (asserted by
+//! `tests/net_wire.rs`).  A cleanly closed stream (EOF on a frame
+//! boundary) decodes as `Ok(None)`.
+
+use std::io::{Read, Write};
+
+use crate::coordinator::FftOp;
+use crate::fft::{DType, FftError, FftResult, Strategy};
+
+/// Frame magic: the first four bytes of every valid frame.
+pub const MAGIC: [u8; 4] = *b"FFTN";
+/// Protocol version this build speaks.  Decoders reject every other
+/// version (see `PROTOCOL.md` §Versioning).
+pub const VERSION: u16 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 28;
+/// Upper bound on a frame payload: 64 MiB = 4 Mi complex f64 samples.
+pub const MAX_PAYLOAD: u32 = 64 * 1024 * 1024;
+/// Upper bound on `body_len`: the payload cap plus the 8-byte bound
+/// prefix an `OK` response carries — so a maximum-size legal request
+/// always has an encodable response.  Larger advertised lengths are a
+/// protocol error, so a corrupt or hostile peer cannot make the
+/// receiver allocate without bound.  (Request bodies between
+/// `MAX_PAYLOAD` and `MAX_BODY` cannot slip through: the only value
+/// in that range, `MAX_PAYLOAD + 8`, is not a whole number of complex
+/// samples and fails the `body_len % 16` rule.)
+pub const MAX_BODY: u32 = MAX_PAYLOAD + 8;
+
+const KIND_REQUEST: u8 = 1;
+const KIND_RESPONSE: u8 = 2;
+
+/// Response status codes (the `code` header byte of response frames).
+pub const STATUS_OK: u8 = 0;
+/// Admission control rejected the request — retry later; the
+/// connection stays open.
+pub const STATUS_BUSY: u8 = 1;
+/// The request failed; the body carries the error message.
+pub const STATUS_ERROR: u8 = 2;
+
+/// One decoded request frame: id + plan selection + planar payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    /// Caller-chosen correlation id, echoed on the response.
+    pub id: u64,
+    pub op: FftOp,
+    pub strategy: Strategy,
+    pub dtype: DType,
+    pub re: Vec<f64>,
+    pub im: Vec<f64>,
+}
+
+/// One decoded response frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// The request completed: the working dtype, the a-priori error
+    /// bound for its strategy × dtype (when one applies), and the
+    /// result frame widened exactly to f64.
+    Ok {
+        id: u64,
+        dtype: DType,
+        bound: Option<f64>,
+        re: Vec<f64>,
+        im: Vec<f64>,
+    },
+    /// Backpressure: the coordinator's admission gate was full.  The
+    /// connection is still good; the client may retry.
+    Busy { id: u64, in_flight: u32, limit: u32 },
+    /// The request failed with a server-side error (the `Display`
+    /// form of the typed [`FftError`] travels as the message).
+    Error { id: u64, dtype: DType, message: String },
+}
+
+impl Response {
+    /// The correlation id this response answers.
+    pub fn id(&self) -> u64 {
+        match self {
+            Response::Ok { id, .. } | Response::Busy { id, .. } | Response::Error { id, .. } => {
+                *id
+            }
+        }
+    }
+}
+
+/// FNV-1a (32-bit) over `bytes` — the header checksum function.
+pub fn checksum(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+fn op_code(op: FftOp) -> u8 {
+    match op {
+        FftOp::Forward => 0,
+        FftOp::Inverse => 1,
+        FftOp::MatchedFilter => 2,
+    }
+}
+
+fn op_from(code: u8) -> FftResult<FftOp> {
+    match code {
+        0 => Ok(FftOp::Forward),
+        1 => Ok(FftOp::Inverse),
+        2 => Ok(FftOp::MatchedFilter),
+        other => Err(FftError::Protocol(format!("unknown op tag {other}"))),
+    }
+}
+
+// Tag values are pinned to PROTOCOL.md explicitly — never derived
+// from in-memory enum order, so reordering `Strategy::ALL` or
+// `DType::ALL` can't silently renumber the wire.
+
+fn strategy_code(s: Strategy) -> u8 {
+    match s {
+        Strategy::Standard => 0,
+        Strategy::LinzerFeig => 1,
+        Strategy::Cosine => 2,
+        Strategy::DualSelect => 3,
+    }
+}
+
+fn strategy_from(code: u8) -> FftResult<Strategy> {
+    match code {
+        0 => Ok(Strategy::Standard),
+        1 => Ok(Strategy::LinzerFeig),
+        2 => Ok(Strategy::Cosine),
+        3 => Ok(Strategy::DualSelect),
+        other => Err(FftError::Protocol(format!("unknown strategy tag {other}"))),
+    }
+}
+
+fn dtype_code(d: DType) -> u8 {
+    match d {
+        DType::F64 => 0,
+        DType::F32 => 1,
+        DType::Bf16 => 2,
+        DType::F16 => 3,
+    }
+}
+
+fn dtype_from(code: u8) -> FftResult<DType> {
+    match code {
+        0 => Ok(DType::F64),
+        1 => Ok(DType::F32),
+        2 => Ok(DType::Bf16),
+        3 => Ok(DType::F16),
+        other => Err(FftError::Protocol(format!("unknown dtype tag {other}"))),
+    }
+}
+
+/// The header fields a decoder needs after validation.
+struct Header {
+    kind: u8,
+    code: u8,
+    strategy: u8,
+    dtype: u8,
+    id: u64,
+    body_len: u32,
+}
+
+fn encode_header(
+    kind: u8,
+    code: u8,
+    strategy: u8,
+    dtype: u8,
+    id: u64,
+    body_len: u32,
+) -> [u8; HEADER_LEN] {
+    let mut h = [0u8; HEADER_LEN];
+    h[0..4].copy_from_slice(&MAGIC);
+    h[4..6].copy_from_slice(&VERSION.to_le_bytes());
+    h[6] = kind;
+    h[7] = code;
+    h[8] = strategy;
+    h[9] = dtype;
+    // h[10..12] reserved, zero.
+    h[12..20].copy_from_slice(&id.to_le_bytes());
+    h[20..24].copy_from_slice(&body_len.to_le_bytes());
+    let sum = checksum(&h[..24]);
+    h[24..28].copy_from_slice(&sum.to_le_bytes());
+    h
+}
+
+fn parse_header(h: &[u8; HEADER_LEN]) -> FftResult<Header> {
+    if h[0..4] != MAGIC {
+        return Err(FftError::Protocol(format!(
+            "bad magic {:02x?} (expected {:02x?})",
+            &h[0..4],
+            MAGIC
+        )));
+    }
+    let stored = u32::from_le_bytes(h[24..28].try_into().unwrap());
+    let computed = checksum(&h[..24]);
+    if stored != computed {
+        return Err(FftError::Protocol(format!(
+            "header checksum mismatch: stored {stored:#010x}, computed {computed:#010x}"
+        )));
+    }
+    let version = u16::from_le_bytes(h[4..6].try_into().unwrap());
+    if version != VERSION {
+        return Err(FftError::Protocol(format!(
+            "unsupported protocol version {version} (this build speaks {VERSION})"
+        )));
+    }
+    let body_len = u32::from_le_bytes(h[20..24].try_into().unwrap());
+    if body_len > MAX_BODY {
+        return Err(FftError::Protocol(format!(
+            "advertised body length {body_len} exceeds the {MAX_BODY}-byte limit"
+        )));
+    }
+    Ok(Header {
+        kind: h[6],
+        code: h[7],
+        strategy: h[8],
+        dtype: h[9],
+        id: u64::from_le_bytes(h[12..20].try_into().unwrap()),
+        body_len,
+    })
+}
+
+/// Read exactly one header, or `None` on a clean EOF (no bytes read).
+fn read_header<R: Read>(r: &mut R) -> FftResult<Option<[u8; HEADER_LEN]>> {
+    let mut buf = [0u8; HEADER_LEN];
+    let mut got = 0usize;
+    while got < HEADER_LEN {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                return if got == 0 {
+                    Ok(None)
+                } else {
+                    Err(FftError::Protocol(format!(
+                        "stream truncated mid-header ({got} of {HEADER_LEN} bytes)"
+                    )))
+                }
+            }
+            Ok(k) => got += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(io_err("reading frame header", &e)),
+        }
+    }
+    Ok(Some(buf))
+}
+
+fn read_body<R: Read>(r: &mut R, len: u32) -> FftResult<Vec<u8>> {
+    let mut body = vec![0u8; len as usize];
+    match r.read_exact(&mut body) {
+        Ok(()) => Ok(body),
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => Err(FftError::Protocol(
+            format!("stream truncated mid-body (advertised {len} bytes)"),
+        )),
+        Err(e) => Err(io_err("reading frame body", &e)),
+    }
+}
+
+fn io_err(what: &str, e: &std::io::Error) -> FftError {
+    FftError::Backend(format!("net i/o failure {what}: {e}"))
+}
+
+fn put_f64s(out: &mut Vec<u8>, xs: &[f64]) {
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn get_f64s(bytes: &[u8]) -> Vec<f64> {
+    bytes
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+fn check_planar(re: &[f64], im: &[f64]) -> FftResult<()> {
+    if re.len() != im.len() {
+        // A ragged payload would silently re-split into different
+        // samples on decode — refuse to encode it.
+        return Err(FftError::LengthMismatch { expected: re.len(), got: im.len() });
+    }
+    Ok(())
+}
+
+/// Validate a body length at ENCODE time: anything the decoder would
+/// reject (or that `as u32` would wrap) is a local typed error here,
+/// not a corrupt frame and a killed connection at the peer.
+fn check_body_len(len: usize) -> FftResult<u32> {
+    if len > MAX_BODY as usize {
+        return Err(FftError::Protocol(format!(
+            "frame body of {len} bytes exceeds the {MAX_BODY}-byte limit"
+        )));
+    }
+    Ok(len as u32)
+}
+
+/// Encode one request frame (header + planar payload) into bytes.
+/// Errors when `re`/`im` lengths differ.
+pub fn encode_request(req: &Request) -> FftResult<Vec<u8>> {
+    encode_request_parts(req.id, req.op, req.strategy, req.dtype, &req.re, &req.im)
+}
+
+/// [`encode_request`] over borrowed payload slices (the client's
+/// copy-free submit path).
+pub fn encode_request_parts(
+    id: u64,
+    op: FftOp,
+    strategy: Strategy,
+    dtype: DType,
+    re: &[f64],
+    im: &[f64],
+) -> FftResult<Vec<u8>> {
+    check_planar(re, im)?;
+    let body_len = check_body_len((re.len() + im.len()) * 8)?;
+    let mut out = Vec::with_capacity(HEADER_LEN + body_len as usize);
+    out.extend_from_slice(&encode_header(
+        KIND_REQUEST,
+        op_code(op),
+        strategy_code(strategy),
+        dtype_code(dtype),
+        id,
+        body_len,
+    ));
+    put_f64s(&mut out, re);
+    put_f64s(&mut out, im);
+    Ok(out)
+}
+
+/// Encode one response frame into bytes.  Errors when an `Ok` frame's
+/// `re`/`im` lengths differ.
+pub fn encode_response(resp: &Response) -> FftResult<Vec<u8>> {
+    match resp {
+        Response::Ok { id, dtype, bound, re, im } => {
+            check_planar(re, im)?;
+            let body_len = check_body_len(8 + (re.len() + im.len()) * 8)?;
+            let mut out = Vec::with_capacity(HEADER_LEN + body_len as usize);
+            out.extend_from_slice(&encode_header(
+                KIND_RESPONSE,
+                STATUS_OK,
+                0,
+                dtype_code(*dtype),
+                *id,
+                body_len,
+            ));
+            out.extend_from_slice(&bound.unwrap_or(f64::NAN).to_le_bytes());
+            put_f64s(&mut out, re);
+            put_f64s(&mut out, im);
+            Ok(out)
+        }
+        Response::Busy { id, in_flight, limit } => {
+            let mut out = Vec::with_capacity(HEADER_LEN + 8);
+            out.extend_from_slice(&encode_header(KIND_RESPONSE, STATUS_BUSY, 0, 0, *id, 8));
+            out.extend_from_slice(&in_flight.to_le_bytes());
+            out.extend_from_slice(&limit.to_le_bytes());
+            Ok(out)
+        }
+        Response::Error { id, dtype, message } => {
+            let body = message.as_bytes();
+            let body_len = check_body_len(body.len())?;
+            let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+            out.extend_from_slice(&encode_header(
+                KIND_RESPONSE,
+                STATUS_ERROR,
+                0,
+                dtype_code(*dtype),
+                *id,
+                body_len,
+            ));
+            out.extend_from_slice(body);
+            Ok(out)
+        }
+    }
+}
+
+/// Write one request frame.
+pub fn write_request<W: Write>(w: &mut W, req: &Request) -> FftResult<()> {
+    w.write_all(&encode_request(req)?)
+        .map_err(|e| io_err("writing request frame", &e))
+}
+
+/// Write one request frame from borrowed payload slices.
+pub fn write_request_parts<W: Write>(
+    w: &mut W,
+    id: u64,
+    op: FftOp,
+    strategy: Strategy,
+    dtype: DType,
+    re: &[f64],
+    im: &[f64],
+) -> FftResult<()> {
+    w.write_all(&encode_request_parts(id, op, strategy, dtype, re, im)?)
+        .map_err(|e| io_err("writing request frame", &e))
+}
+
+/// Write one response frame.
+pub fn write_response<W: Write>(w: &mut W, resp: &Response) -> FftResult<()> {
+    w.write_all(&encode_response(resp)?)
+        .map_err(|e| io_err("writing response frame", &e))
+}
+
+/// Stream one `OK` response straight from borrowed payload slices —
+/// the server's per-response hot path.  Byte-identical to
+/// [`encode_response`] of the equivalent [`Response::Ok`], but writes
+/// header, bound and samples through `w` without staging the whole
+/// frame in an intermediate byte vector.
+pub fn write_ok_response_parts<W: Write>(
+    w: &mut W,
+    id: u64,
+    dtype: DType,
+    bound: Option<f64>,
+    re: &[f64],
+    im: &[f64],
+) -> FftResult<()> {
+    check_planar(re, im)?;
+    let io = |e: std::io::Error| io_err("writing response frame", &e);
+    let body_len = check_body_len(8 + (re.len() + im.len()) * 8)?;
+    let header = encode_header(KIND_RESPONSE, STATUS_OK, 0, dtype_code(dtype), id, body_len);
+    w.write_all(&header).map_err(io)?;
+    w.write_all(&bound.unwrap_or(f64::NAN).to_le_bytes()).map_err(io)?;
+    for &x in re {
+        w.write_all(&x.to_le_bytes()).map_err(io)?;
+    }
+    for &x in im {
+        w.write_all(&x.to_le_bytes()).map_err(io)?;
+    }
+    Ok(())
+}
+
+/// Read one request frame; `Ok(None)` on clean EOF.
+pub fn read_request<R: Read>(r: &mut R) -> FftResult<Option<Request>> {
+    let Some(raw) = read_header(r)? else { return Ok(None) };
+    let h = parse_header(&raw)?;
+    if h.kind != KIND_REQUEST {
+        return Err(FftError::Protocol(format!(
+            "expected a request frame, got kind {}",
+            h.kind
+        )));
+    }
+    let op = op_from(h.code)?;
+    let strategy = strategy_from(h.strategy)?;
+    let dtype = dtype_from(h.dtype)?;
+    let body = read_body(r, h.body_len)?;
+    if body.len() % 16 != 0 {
+        return Err(FftError::Protocol(format!(
+            "request body length {} is not a whole number of complex f64 samples",
+            body.len()
+        )));
+    }
+    let half = body.len() / 2;
+    Ok(Some(Request {
+        id: h.id,
+        op,
+        strategy,
+        dtype,
+        re: get_f64s(&body[..half]),
+        im: get_f64s(&body[half..]),
+    }))
+}
+
+/// Read one response frame; `Ok(None)` on clean EOF.
+pub fn read_response<R: Read>(r: &mut R) -> FftResult<Option<Response>> {
+    let Some(raw) = read_header(r)? else { return Ok(None) };
+    let h = parse_header(&raw)?;
+    if h.kind != KIND_RESPONSE {
+        return Err(FftError::Protocol(format!(
+            "expected a response frame, got kind {}",
+            h.kind
+        )));
+    }
+    let body = read_body(r, h.body_len)?;
+    match h.code {
+        STATUS_OK => {
+            let dtype = dtype_from(h.dtype)?;
+            if body.len() < 8 || (body.len() - 8) % 16 != 0 {
+                return Err(FftError::Protocol(format!(
+                    "ok-response body length {} is not bound + complex f64 samples",
+                    body.len()
+                )));
+            }
+            let bound = f64::from_le_bytes(body[..8].try_into().unwrap());
+            let bound = if bound.is_nan() { None } else { Some(bound) };
+            let half = 8 + (body.len() - 8) / 2;
+            Ok(Some(Response::Ok {
+                id: h.id,
+                dtype,
+                bound,
+                re: get_f64s(&body[8..half]),
+                im: get_f64s(&body[half..]),
+            }))
+        }
+        STATUS_BUSY => {
+            if body.len() != 8 {
+                return Err(FftError::Protocol(format!(
+                    "busy-response body length {} (expected 8)",
+                    body.len()
+                )));
+            }
+            Ok(Some(Response::Busy {
+                id: h.id,
+                in_flight: u32::from_le_bytes(body[0..4].try_into().unwrap()),
+                limit: u32::from_le_bytes(body[4..8].try_into().unwrap()),
+            }))
+        }
+        STATUS_ERROR => {
+            let dtype = dtype_from(h.dtype)?;
+            let message = String::from_utf8(body)
+                .map_err(|_| FftError::Protocol("error message is not UTF-8".into()))?;
+            Ok(Some(Response::Error { id: h.id, dtype, message }))
+        }
+        other => Err(FftError::Protocol(format!(
+            "unknown response status {other}"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checksum_is_fnv1a32() {
+        // Known FNV-1a vectors.
+        assert_eq!(checksum(b""), 0x811c9dc5);
+        assert_eq!(checksum(b"a"), 0xe40c292c);
+    }
+
+    #[test]
+    fn tag_codes_roundtrip() {
+        for op in [FftOp::Forward, FftOp::Inverse, FftOp::MatchedFilter] {
+            assert_eq!(op_from(op_code(op)).unwrap(), op);
+        }
+        for s in Strategy::ALL {
+            assert_eq!(strategy_from(strategy_code(s)).unwrap(), s);
+        }
+        for d in DType::ALL {
+            assert_eq!(dtype_from(dtype_code(d)).unwrap(), d);
+        }
+        assert!(matches!(op_from(9), Err(FftError::Protocol(_))));
+        assert!(matches!(strategy_from(9), Err(FftError::Protocol(_))));
+        assert!(matches!(dtype_from(9), Err(FftError::Protocol(_))));
+    }
+
+    #[test]
+    fn tag_codes_match_protocol_md() {
+        // The NORMATIVE values from PROTOCOL.md — a failure here means
+        // a wire-format break, which requires a version bump.
+        assert_eq!(op_code(FftOp::Forward), 0);
+        assert_eq!(op_code(FftOp::Inverse), 1);
+        assert_eq!(op_code(FftOp::MatchedFilter), 2);
+        assert_eq!(strategy_code(Strategy::Standard), 0);
+        assert_eq!(strategy_code(Strategy::LinzerFeig), 1);
+        assert_eq!(strategy_code(Strategy::Cosine), 2);
+        assert_eq!(strategy_code(Strategy::DualSelect), 3);
+        assert_eq!(dtype_code(DType::F64), 0);
+        assert_eq!(dtype_code(DType::F32), 1);
+        assert_eq!(dtype_code(DType::Bf16), 2);
+        assert_eq!(dtype_code(DType::F16), 3);
+        assert_eq!(&MAGIC, b"FFTN");
+        assert_eq!(VERSION, 1);
+    }
+
+    #[test]
+    fn streaming_ok_writer_is_byte_identical_to_encode_response() {
+        let (re, im) = (vec![1.5, -2.25, 0.0], vec![0.5, 3.75, -1.0]);
+        for bound in [Some(6.1e-2), None] {
+            let resp = Response::Ok {
+                id: 77,
+                dtype: DType::F16,
+                bound,
+                re: re.clone(),
+                im: im.clone(),
+            };
+            let staged = encode_response(&resp).unwrap();
+            let mut streamed = Vec::new();
+            write_ok_response_parts(&mut streamed, 77, DType::F16, bound, &re, &im).unwrap();
+            assert_eq!(streamed, staged);
+        }
+    }
+
+    #[test]
+    fn ragged_payloads_refuse_to_encode() {
+        let err = encode_request_parts(
+            1,
+            FftOp::Forward,
+            Strategy::DualSelect,
+            DType::F32,
+            &[1.0, 2.0, 3.0],
+            &[4.0],
+        )
+        .unwrap_err();
+        assert!(matches!(err, FftError::LengthMismatch { .. }), "{err:?}");
+        let resp = Response::Ok {
+            id: 1,
+            dtype: DType::F32,
+            bound: None,
+            re: vec![1.0],
+            im: vec![1.0, 2.0],
+        };
+        assert!(encode_response(&resp).is_err());
+        let mut sink = Vec::new();
+        assert!(write_ok_response_parts(&mut sink, 1, DType::F32, None, &[1.0], &[]).is_err());
+    }
+
+    #[test]
+    fn header_layout_is_28_bytes_and_checksummed() {
+        let h = encode_header(KIND_REQUEST, 0, 3, 1, 42, 160);
+        assert_eq!(h.len(), HEADER_LEN);
+        assert_eq!(&h[0..4], &MAGIC);
+        let parsed = parse_header(&h).unwrap();
+        assert_eq!(parsed.id, 42);
+        assert_eq!(parsed.body_len, 160);
+        assert_eq!(parsed.strategy, 3);
+        assert_eq!(parsed.dtype, 1);
+    }
+}

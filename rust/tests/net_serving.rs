@@ -1,0 +1,395 @@
+//! Integration: the network plane end to end — client → fftd →
+//! coordinator → response over loopback TCP.  Asserts the acceptance
+//! loop of the net subsystem: TCP responses are bit-identical to the
+//! in-process path, carry the same dtype + a-priori bound metadata,
+//! every served error lands under its attached bound, and
+//! backpressure surfaces as a typed BUSY status on a surviving
+//! connection.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use fmafft::coordinator::batcher::BatchPolicy;
+use fmafft::coordinator::{FftOp, Server, ServerConfig};
+use fmafft::dft;
+use fmafft::fft::{DType, FftError, Strategy};
+use fmafft::net::{wire, FftClient, FftdServer};
+use fmafft::util::metrics::rel_l2;
+use fmafft::util::prng::Pcg32;
+
+const RECV_TIMEOUT: Duration = Duration::from_secs(60);
+
+fn random_frame(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Pcg32::seed(seed);
+    (
+        (0..n).map(|_| rng.range(-1.0, 1.0)).collect(),
+        (0..n).map(|_| rng.range(-1.0, 1.0)).collect(),
+    )
+}
+
+fn start_native(n: usize, workers: usize) -> (Arc<Server>, FftdServer) {
+    let mut cfg = ServerConfig::native(n);
+    cfg.workers = workers;
+    cfg.policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) };
+    let server = Server::start(cfg).unwrap();
+    let fftd = FftdServer::start(server.clone(), "127.0.0.1:0").unwrap();
+    (server, fftd)
+}
+
+#[test]
+fn loopback_response_is_bit_identical_to_in_process() {
+    let n = 256;
+    let (server, fftd) = start_native(n, 2);
+    let mut client = FftClient::connect(fftd.local_addr()).unwrap();
+    client.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+
+    for (seed, dtype) in [(1u64, DType::F32), (2, DType::F16), (3, DType::Bf16), (4, DType::F64)]
+    {
+        let (re, im) = random_frame(n, seed);
+        let tcp = client
+            .call_with(FftOp::Forward, dtype, Strategy::DualSelect, &re, &im)
+            .unwrap();
+        assert!(tcp.is_ok(), "{dtype}: {:?}", tcp.error);
+        assert_eq!(tcp.dtype, dtype);
+
+        let local = server
+            .submit_wait_with(FftOp::Forward, dtype, re.clone(), im.clone())
+            .unwrap();
+        assert!(local.is_ok());
+        // Bit-for-bit: same kernels, same single-rounding ingest, and
+        // the wire widens exactly — f64 bit patterns must agree.
+        assert_eq!(tcp.re, local.re_f64(), "{dtype} re");
+        assert_eq!(tcp.im, local.im_f64(), "{dtype} im");
+        // Identical metadata: dtype + the a-priori bound.
+        assert_eq!(tcp.bound, local.bound, "{dtype} bound");
+        assert!(tcp.bound.is_some(), "{dtype} dual-select carries a bound");
+    }
+    fftd.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn multi_client_pipelined_mixed_dtypes() {
+    // ≥4 concurrent clients × mixed dtypes × pipelined ids against one
+    // FftdServer: every response matches the in-process path
+    // bit-for-bit and every observed error lands under the attached
+    // a-priori bound.
+    let n = 128;
+    let per_client = 24usize;
+    let window = 6usize;
+    let (server, fftd) = start_native(n, 4);
+    let addr = fftd.local_addr();
+
+    let mut handles = Vec::new();
+    for c in 0..4u64 {
+        let server = server.clone();
+        handles.push(std::thread::spawn(move || {
+            let dtypes = [DType::F32, DType::F16, DType::Bf16, DType::F64];
+            let mut client = FftClient::connect(addr).expect("connect");
+            client.set_read_timeout(Some(RECV_TIMEOUT)).expect("timeout");
+            let mut frames = std::collections::HashMap::new();
+            let mut submitted = 0usize;
+            let mut received = 0usize;
+            while received < per_client {
+                while submitted < per_client && client.in_flight() < window {
+                    let dtype = dtypes[(submitted + c as usize) % dtypes.len()];
+                    let (re, im) = random_frame(n, 1000 * (c + 1) + submitted as u64);
+                    let id = client
+                        .submit_with(FftOp::Forward, dtype, Strategy::DualSelect, &re, &im)
+                        .expect("submit");
+                    frames.insert(id, (dtype, re, im));
+                    submitted += 1;
+                }
+                // Completion order — ids may come back out of order.
+                let resp = client.recv().expect("recv");
+                received += 1;
+                let (dtype, re, im) = frames.remove(&resp.id).expect("known id");
+                assert!(resp.is_ok(), "client {c} id {}: {:?}", resp.id, resp.error);
+                assert_eq!(resp.dtype, dtype);
+
+                // Bit-for-bit vs the in-process path.
+                let local = server
+                    .submit_wait_with(FftOp::Forward, dtype, re.clone(), im.clone())
+                    .expect("in-process submit");
+                assert_eq!(resp.re, local.re_f64(), "client {c} dtype {dtype}");
+                assert_eq!(resp.im, local.im_f64(), "client {c} dtype {dtype}");
+                assert_eq!(resp.bound, local.bound);
+
+                // Observed error lands under the attached a-priori
+                // bound (the paper's eq. (11), shipped per response).
+                let bound = resp.bound.expect("dual-select bound");
+                let (wr, wi) = dft::naive_dft(&re, &im, false);
+                let err = rel_l2(&resp.re, &resp.im, &wr, &wi);
+                assert!(
+                    err <= bound,
+                    "client {c} dtype {dtype}: err {err:.3e} exceeds bound {bound:.3e}"
+                );
+            }
+            assert_eq!(client.in_flight(), 0);
+        }));
+    }
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    let snap = server.snapshot();
+    assert_eq!(snap.failed, 0);
+    // 4 TCP clients × per_client + the in-process comparison calls.
+    assert_eq!(snap.completed, (4 * per_client * 2) as u64);
+    fftd.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn backpressure_surfaces_as_busy_and_connection_survives() {
+    let n = 64;
+    let mut cfg = ServerConfig::native(n);
+    cfg.workers = 1;
+    cfg.queue_limit = 2;
+    // Park admitted requests so the gate stays full until drained.
+    cfg.policy = BatchPolicy { max_batch: 1000, max_wait: Duration::from_secs(30) };
+    let server = Server::start(cfg).unwrap();
+    let fftd = FftdServer::start(server.clone(), "127.0.0.1:0").unwrap();
+
+    // Fill the admission gate in-process.
+    let (re, im) = random_frame(n, 1);
+    let _rx1 = server.submit(FftOp::Forward, re.clone(), im.clone()).unwrap();
+    let _rx2 = server.submit(FftOp::Forward, re.clone(), im.clone()).unwrap();
+
+    let mut client = FftClient::connect(fftd.local_addr()).unwrap();
+    client.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+
+    // A remote request now gets a typed BUSY status — not a dropped
+    // connection.
+    let busy = client.call(FftOp::Forward, &re, &im).unwrap();
+    assert!(!busy.is_ok());
+    assert!(
+        matches!(busy.error, Some(FftError::Rejected { limit: 2, .. })),
+        "{:?}",
+        busy.error
+    );
+
+    // Free the gate and reuse the very same connection.
+    let stop = Arc::new(AtomicBool::new(false));
+    let drainer = {
+        let server = server.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                server.drain();
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        })
+    };
+    // BUSY is retryable: the connection keeps serving, and once the
+    // drainer frees the gate a retry succeeds.
+    let mut served = None;
+    for _ in 0..200 {
+        let resp = client.call(FftOp::Forward, &re, &im).unwrap();
+        if resp.is_ok() {
+            served = Some(resp);
+            break;
+        }
+        assert!(
+            matches!(resp.error, Some(FftError::Rejected { .. })),
+            "{:?}",
+            resp.error
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let ok = served.expect("retry succeeded after the gate freed");
+    assert_eq!(ok.re.len(), n);
+    stop.store(true, Ordering::Relaxed);
+    drainer.join().unwrap();
+
+    fftd.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn wrong_length_request_gets_typed_error_and_connection_survives() {
+    let n = 128;
+    let (server, fftd) = start_native(n, 1);
+    let mut client = FftClient::connect(fftd.local_addr()).unwrap();
+    client.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+
+    let (re, im) = random_frame(16, 2);
+    let bad = client.call(FftOp::Forward, &re, &im).unwrap();
+    match &bad.error {
+        Some(FftError::Backend(msg)) => {
+            assert!(msg.contains("length mismatch"), "{msg}")
+        }
+        other => panic!("expected remote length-mismatch error, got {other:?}"),
+    }
+
+    // Same connection still serves well-formed requests.
+    let (re, im) = random_frame(n, 3);
+    let ok = client.call(FftOp::Forward, &re, &im).unwrap();
+    assert!(ok.is_ok(), "{:?}", ok.error);
+    fftd.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn malformed_bytes_get_best_effort_error_frame_then_close() {
+    let n = 64;
+    let (server, fftd) = start_native(n, 1);
+    let stream = std::net::TcpStream::connect(fftd.local_addr()).unwrap();
+    stream.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+    {
+        use std::io::Write;
+        let mut w = &stream;
+        // Exactly one header's worth of garbage — the server reads all
+        // of it, so its close is a clean FIN, not an RST.
+        w.write_all(&[0u8; 28]).unwrap();
+        w.flush().unwrap();
+    }
+    let mut reader = std::io::BufReader::new(&stream);
+    match wire::read_response(&mut reader) {
+        Ok(Some(wire::Response::Error { id, message, .. })) => {
+            assert_eq!(id, 0);
+            assert!(message.contains("protocol error"), "{message}");
+        }
+        other => panic!("expected a best-effort error frame, got {other:?}"),
+    }
+    // The server closes the unframeable connection afterwards (clean
+    // EOF, or a reset depending on close timing — never more frames).
+    match wire::read_response(&mut reader) {
+        Ok(None) | Err(_) => {}
+        Ok(Some(frame)) => panic!("expected closed connection, got {frame:?}"),
+    }
+    fftd.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn reserved_id_zero_request_is_rejected_but_connection_survives() {
+    // Raw-socket conformance check: a well-formed request using the
+    // RESERVED id 0 gets an ERROR frame (echoed on id 0), and the
+    // connection keeps serving conforming ids afterwards.
+    let n = 64;
+    let (server, fftd) = start_native(n, 1);
+    let stream = std::net::TcpStream::connect(fftd.local_addr()).unwrap();
+    stream.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+    let (re, im) = random_frame(n, 11);
+    {
+        use std::io::Write;
+        let mut w = &stream;
+        for id in [0u64, 1] {
+            let req = wire::Request {
+                id,
+                op: FftOp::Forward,
+                strategy: Strategy::DualSelect,
+                dtype: DType::F32,
+                re: re.clone(),
+                im: im.clone(),
+            };
+            wire::write_request(&mut w, &req).unwrap();
+        }
+        w.flush().unwrap();
+    }
+    let mut reader = std::io::BufReader::new(&stream);
+    let mut saw_rejection = false;
+    let mut saw_ok = false;
+    for _ in 0..2 {
+        match wire::read_response(&mut reader).unwrap().unwrap() {
+            wire::Response::Error { id: 0, message, .. } => {
+                assert!(message.contains("reserved"), "{message}");
+                saw_rejection = true;
+            }
+            wire::Response::Ok { id: 1, re, .. } => {
+                assert_eq!(re.len(), n);
+                saw_ok = true;
+            }
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+    assert!(saw_rejection && saw_ok);
+    fftd.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn per_request_strategy_rides_the_wire() {
+    // One fftd, one connection, two strategies: the clamped-LF bound
+    // is astronomically worse than dual-select at f16 — visible per
+    // response, exactly as the in-process path reports it.
+    let n = 256;
+    let (server, fftd) = start_native(n, 2);
+    let mut client = FftClient::connect(fftd.local_addr()).unwrap();
+    client.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+
+    let (re, im) = random_frame(n, 7);
+    let dual = client
+        .call_with(FftOp::Forward, DType::F16, Strategy::DualSelect, &re, &im)
+        .unwrap();
+    let lf = client
+        .call_with(FftOp::Forward, DType::F16, Strategy::LinzerFeig, &re, &im)
+        .unwrap();
+    assert!(dual.is_ok() && lf.is_ok());
+    let (b_dual, b_lf) = (dual.bound.unwrap(), lf.bound.unwrap());
+    assert!(
+        b_lf > b_dual * 1e3,
+        "lf bound {b_lf:.3e} should dwarf dual {b_dual:.3e}"
+    );
+    // And the dual-select result actually lands under its bound.
+    let (wr, wi) = dft::naive_dft(&re, &im, false);
+    let err = rel_l2(&dual.re, &dual.im, &wr, &wi);
+    assert!(err <= b_dual, "err {err:.3e} bound {b_dual:.3e}");
+    fftd.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn fftd_shutdown_is_graceful_and_idempotent() {
+    let n = 64;
+    let (server, fftd) = start_native(n, 1);
+    let mut client = FftClient::connect(fftd.local_addr()).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let (re, im) = random_frame(n, 4);
+    assert!(client.call(FftOp::Forward, &re, &im).unwrap().is_ok());
+    // The acceptor registers the connection concurrently with serving
+    // it; wait for the registry to observe it.
+    for _ in 0..200 {
+        if fftd.connections() == 1 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(fftd.connections(), 1);
+
+    fftd.shutdown();
+    fftd.shutdown(); // idempotent
+    assert_eq!(fftd.connections(), 0);
+
+    // The connection was closed server-side; the client observes it
+    // as a typed error, not a hang.
+    let err = client.call(FftOp::Forward, &re, &im);
+    match err {
+        Err(_) => {}
+        Ok(resp) => panic!("expected transport error after shutdown, got {resp:?}"),
+    }
+
+    // New connections are refused after shutdown (listener gone).
+    assert!(FftClient::connect(fftd.local_addr()).is_err());
+
+    drop(fftd); // Drop after explicit shutdown: no double teardown.
+    server.shutdown();
+}
+
+#[test]
+fn coordinator_drop_without_shutdown_joins_threads() {
+    // The Drop guard: a server dropped without an explicit shutdown
+    // must still drain and join its workers (no leaked threads, no
+    // hang), and explicit-shutdown-then-drop must not double-join.
+    let n = 64;
+    let server = Server::start(ServerConfig::native(n)).unwrap();
+    let (re, im) = random_frame(n, 5);
+    let resp = server.submit_wait(FftOp::Forward, re, im).unwrap();
+    assert!(resp.is_ok());
+    drop(server); // no explicit shutdown — Drop tears down
+
+    let server = Server::start(ServerConfig::native(n)).unwrap();
+    server.shutdown();
+    drop(server); // second teardown is a guarded no-op
+}

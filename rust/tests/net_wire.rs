@@ -1,0 +1,339 @@
+//! Wire-codec coverage: exhaustive round-trips (every FftOp ×
+//! strategy × dtype × odd lengths) plus adversarial decodes —
+//! truncated streams, bad magic, oversized lengths, wrong versions,
+//! corrupted checksums, unknown tags — all of which must surface as
+//! typed `FftError::Protocol` values, never panics.
+
+use fmafft::coordinator::FftOp;
+use fmafft::fft::{DType, FftError, Strategy};
+use fmafft::net::wire;
+use fmafft::util::prng::Pcg32;
+
+const OPS: [FftOp; 3] = [FftOp::Forward, FftOp::Inverse, FftOp::MatchedFilter];
+
+fn payload(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Pcg32::seed(seed);
+    (
+        (0..n).map(|_| rng.range(-1.0, 1.0)).collect(),
+        (0..n).map(|_| rng.range(-1.0, 1.0)).collect(),
+    )
+}
+
+fn decode_request(bytes: &[u8]) -> Result<Option<wire::Request>, FftError> {
+    wire::read_request(&mut &bytes[..])
+}
+
+fn decode_response(bytes: &[u8]) -> Result<Option<wire::Response>, FftError> {
+    wire::read_response(&mut &bytes[..])
+}
+
+/// Patch a mutated header back to checksum validity, so tests reach
+/// the check *behind* the checksum (version, length, tags).
+fn fix_checksum(bytes: &mut [u8]) {
+    let sum = wire::checksum(&bytes[..24]);
+    bytes[24..28].copy_from_slice(&sum.to_le_bytes());
+}
+
+#[test]
+fn request_roundtrip_every_op_strategy_dtype_and_odd_length() {
+    let mut seed = 1u64;
+    for op in OPS {
+        for strategy in Strategy::ALL {
+            for dtype in DType::ALL {
+                for n in [1usize, 3, 7, 33, 257] {
+                    let (re, im) = payload(n, seed);
+                    seed += 1;
+                    let req = wire::Request { id: seed * 1000, op, strategy, dtype, re, im };
+                    let bytes = wire::encode_request(&req).unwrap();
+                    assert_eq!(bytes.len(), wire::HEADER_LEN + 16 * n);
+                    let back = decode_request(&bytes)
+                        .expect("decodes")
+                        .expect("not EOF");
+                    // Bit-exact payload round-trip (f64 bits preserved).
+                    assert_eq!(back, req, "op {op:?} strategy {strategy} dtype {dtype} n {n}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn response_roundtrip_all_variants() {
+    for dtype in DType::ALL {
+        let (re, im) = payload(17, 99);
+        for bound in [Some(6.1e-2), None] {
+            let resp = wire::Response::Ok {
+                id: 7,
+                dtype,
+                bound,
+                re: re.clone(),
+                im: im.clone(),
+            };
+            let back = decode_response(&wire::encode_response(&resp).unwrap())
+                .expect("decodes")
+                .expect("not EOF");
+            assert_eq!(back, resp, "dtype {dtype} bound {bound:?}");
+        }
+        let err = wire::Response::Error {
+            id: 8,
+            dtype,
+            message: "length mismatch: expected 256, got 8 — π".into(),
+        };
+        assert_eq!(
+            decode_response(&wire::encode_response(&err).unwrap()).unwrap().unwrap(),
+            err
+        );
+    }
+    let busy = wire::Response::Busy { id: 9, in_flight: 4096, limit: 4096 };
+    assert_eq!(
+        decode_response(&wire::encode_response(&busy).unwrap()).unwrap().unwrap(),
+        busy
+    );
+}
+
+#[test]
+fn multiple_frames_stream_back_to_back() {
+    let (re, im) = payload(5, 3);
+    let a = wire::Request {
+        id: 1,
+        op: FftOp::Forward,
+        strategy: Strategy::DualSelect,
+        dtype: DType::F16,
+        re: re.clone(),
+        im: im.clone(),
+    };
+    let b = wire::Request { id: 2, op: FftOp::Inverse, dtype: DType::F32, ..a.clone() };
+    let mut stream = wire::encode_request(&a).unwrap();
+    stream.extend_from_slice(&wire::encode_request(&b).unwrap());
+    let mut cursor = &stream[..];
+    assert_eq!(wire::read_request(&mut cursor).unwrap().unwrap(), a);
+    assert_eq!(wire::read_request(&mut cursor).unwrap().unwrap(), b);
+    // Clean EOF on the frame boundary.
+    assert_eq!(wire::read_request(&mut cursor).unwrap(), None);
+}
+
+#[test]
+fn clean_eof_decodes_as_none() {
+    assert_eq!(decode_request(&[]).unwrap(), None);
+    assert_eq!(decode_response(&[]).unwrap(), None);
+}
+
+#[test]
+fn truncated_header_is_a_typed_protocol_error() {
+    let (re, im) = payload(4, 5);
+    let req = wire::Request {
+        id: 1,
+        op: FftOp::Forward,
+        strategy: Strategy::DualSelect,
+        dtype: DType::F32,
+        re,
+        im,
+    };
+    let bytes = wire::encode_request(&req).unwrap();
+    for cut in 1..wire::HEADER_LEN {
+        let err = decode_request(&bytes[..cut]).expect_err("truncated header must error");
+        assert!(
+            matches!(err, FftError::Protocol(_)),
+            "cut {cut}: {err:?}"
+        );
+        assert!(err.to_string().contains("truncated"), "cut {cut}: {err}");
+    }
+}
+
+#[test]
+fn truncated_body_is_a_typed_protocol_error() {
+    let (re, im) = payload(8, 6);
+    let req = wire::Request {
+        id: 1,
+        op: FftOp::Forward,
+        strategy: Strategy::DualSelect,
+        dtype: DType::F32,
+        re,
+        im,
+    };
+    let bytes = wire::encode_request(&req).unwrap();
+    for cut in [wire::HEADER_LEN, wire::HEADER_LEN + 1, bytes.len() - 1] {
+        let err = decode_request(&bytes[..cut]).expect_err("truncated body must error");
+        assert!(matches!(err, FftError::Protocol(_)), "cut {cut}: {err:?}");
+    }
+}
+
+#[test]
+fn bad_magic_rejected() {
+    let (re, im) = payload(2, 7);
+    let req = wire::Request {
+        id: 1,
+        op: FftOp::Forward,
+        strategy: Strategy::DualSelect,
+        dtype: DType::F32,
+        re,
+        im,
+    };
+    let mut bytes = wire::encode_request(&req).unwrap();
+    bytes[0] ^= 0xff;
+    let err = decode_request(&bytes).expect_err("bad magic must error");
+    assert!(matches!(err, FftError::Protocol(_)), "{err:?}");
+    assert!(err.to_string().contains("magic"), "{err}");
+}
+
+#[test]
+fn corrupted_header_fails_the_checksum() {
+    let (re, im) = payload(2, 8);
+    let req = wire::Request {
+        id: 123,
+        op: FftOp::Forward,
+        strategy: Strategy::DualSelect,
+        dtype: DType::F32,
+        re,
+        im,
+    };
+    // Flip one id byte without fixing the checksum.
+    let mut bytes = wire::encode_request(&req).unwrap();
+    bytes[12] ^= 0x01;
+    let err = decode_request(&bytes).expect_err("checksum must catch the flip");
+    assert!(err.to_string().contains("checksum"), "{err}");
+    // And a corrupted checksum itself is equally fatal.
+    let mut bytes = wire::encode_request(&req).unwrap();
+    bytes[24] ^= 0x01;
+    assert!(matches!(
+        decode_request(&bytes).expect_err("corrupt checksum"),
+        FftError::Protocol(_)
+    ));
+}
+
+#[test]
+fn wrong_version_rejected() {
+    let (re, im) = payload(2, 9);
+    let req = wire::Request {
+        id: 1,
+        op: FftOp::Forward,
+        strategy: Strategy::DualSelect,
+        dtype: DType::F32,
+        re,
+        im,
+    };
+    let mut bytes = wire::encode_request(&req).unwrap();
+    bytes[4..6].copy_from_slice(&(wire::VERSION + 1).to_le_bytes());
+    fix_checksum(&mut bytes);
+    let err = decode_request(&bytes).expect_err("future version must be rejected");
+    assert!(matches!(err, FftError::Protocol(_)), "{err:?}");
+    assert!(err.to_string().contains("version"), "{err}");
+}
+
+#[test]
+fn oversized_length_rejected_without_allocating() {
+    let (re, im) = payload(2, 10);
+    let req = wire::Request {
+        id: 1,
+        op: FftOp::Forward,
+        strategy: Strategy::DualSelect,
+        dtype: DType::F32,
+        re,
+        im,
+    };
+    let mut bytes = wire::encode_request(&req).unwrap();
+    bytes[20..24].copy_from_slice(&(wire::MAX_BODY + 1).to_le_bytes());
+    fix_checksum(&mut bytes);
+    let err = decode_request(&bytes).expect_err("oversized length must be rejected");
+    assert!(matches!(err, FftError::Protocol(_)), "{err:?}");
+    assert!(err.to_string().contains("limit"), "{err}");
+}
+
+#[test]
+fn unknown_tags_rejected() {
+    let (re, im) = payload(2, 11);
+    let req = wire::Request {
+        id: 1,
+        op: FftOp::Forward,
+        strategy: Strategy::DualSelect,
+        dtype: DType::F32,
+        re,
+        im,
+    };
+    for (offset, what) in [(7usize, "op"), (8, "strategy"), (9, "dtype")] {
+        let mut bytes = wire::encode_request(&req).unwrap();
+        bytes[offset] = 0x7f;
+        fix_checksum(&mut bytes);
+        let err = decode_request(&bytes).expect_err("unknown tag must be rejected");
+        assert!(matches!(err, FftError::Protocol(_)), "{what}: {err:?}");
+        assert!(err.to_string().contains(what), "{what}: {err}");
+    }
+}
+
+#[test]
+fn request_body_must_be_whole_complex_samples() {
+    let (re, im) = payload(2, 12);
+    let req = wire::Request {
+        id: 1,
+        op: FftOp::Forward,
+        strategy: Strategy::DualSelect,
+        dtype: DType::F32,
+        re,
+        im,
+    };
+    let mut bytes = wire::encode_request(&req).unwrap();
+    // Advertise 8 fewer bytes than a whole number of complex samples.
+    bytes[20..24].copy_from_slice(&24u32.to_le_bytes());
+    fix_checksum(&mut bytes);
+    bytes.truncate(wire::HEADER_LEN + 24);
+    let err = decode_request(&bytes).expect_err("ragged body must be rejected");
+    assert!(matches!(err, FftError::Protocol(_)), "{err:?}");
+}
+
+#[test]
+fn kind_confusion_rejected() {
+    // A request frame read as a response (and vice versa) is a typed
+    // protocol error, not a misparse.
+    let (re, im) = payload(2, 13);
+    let req = wire::Request {
+        id: 1,
+        op: FftOp::Forward,
+        strategy: Strategy::DualSelect,
+        dtype: DType::F32,
+        re: re.clone(),
+        im: im.clone(),
+    };
+    let err = decode_response(&wire::encode_request(&req).unwrap()).expect_err("kind mismatch");
+    assert!(matches!(err, FftError::Protocol(_)), "{err:?}");
+    let resp = wire::Response::Ok { id: 1, dtype: DType::F32, bound: None, re, im };
+    let err = decode_request(&wire::encode_response(&resp).unwrap()).expect_err("kind mismatch");
+    assert!(matches!(err, FftError::Protocol(_)), "{err:?}");
+}
+
+#[test]
+fn busy_and_error_bodies_validated() {
+    let busy = wire::Response::Busy { id: 1, in_flight: 3, limit: 4 };
+    let mut bytes = wire::encode_response(&busy).unwrap();
+    // Shrink the busy body to 4 bytes.
+    bytes[20..24].copy_from_slice(&4u32.to_le_bytes());
+    fix_checksum(&mut bytes);
+    bytes.truncate(wire::HEADER_LEN + 4);
+    assert!(matches!(
+        decode_response(&bytes).expect_err("short busy body"),
+        FftError::Protocol(_)
+    ));
+
+    let err_frame = wire::Response::Error { id: 1, dtype: DType::F32, message: "xyz".into() };
+    let mut bytes = wire::encode_response(&err_frame).unwrap();
+    // Replace the message with invalid UTF-8.
+    bytes[wire::HEADER_LEN] = 0xff;
+    bytes[wire::HEADER_LEN + 1] = 0xfe;
+    assert!(matches!(
+        decode_response(&bytes).expect_err("non-utf8 message"),
+        FftError::Protocol(_)
+    ));
+}
+
+#[test]
+fn random_garbage_never_panics() {
+    let mut rng = Pcg32::seed(4242);
+    for len in [0usize, 1, 8, 27, 28, 29, 64, 300] {
+        for _ in 0..50 {
+            let bytes: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+            // Either a typed error or (vanishingly unlikely) a valid
+            // tiny frame — never a panic.
+            let _ = decode_request(&bytes);
+            let _ = decode_response(&bytes);
+        }
+    }
+}
