@@ -1,0 +1,235 @@
+//! Loopback demo of the streaming plane — the stream subsystem's
+//! acceptance run, self-checking:
+//!
+//! 1. Start an `fftd` (protocol v2) on an ephemeral port.
+//! 2. For every dtype, open an **overlap-save** stream, pipeline 100+
+//!    ragged chunks through it, and assert the in-order per-chunk
+//!    results concatenate to output **bit-identical** to the offline
+//!    filter — and, for f16/bf16, that the error vs the f64 reference
+//!    sits within the attached cumulative a-priori bound.
+//! 3. Run a **streaming STFT** session over a chirp and assert the
+//!    peak bin sweeps upward, with the bound growing monotonically.
+//! 4. Saturate a 1-session registry and show backpressure arriving as
+//!    a typed `BUSY` while the open session keeps its state; retry
+//!    succeeds after the close.
+//!
+//! Run: `cargo run --release --example stream_loopback`
+
+use std::time::Duration;
+
+use fmafft::coordinator::{Server, ServerConfig};
+use fmafft::fft::{DType, FftError, Strategy};
+use fmafft::net::{FftClient, FftdServer};
+use fmafft::signal::chirp::lfm_chirp;
+use fmafft::signal::window::Window;
+use fmafft::stream::{filter_offline_any, peak_bin, StreamConfig, StreamSpec};
+use fmafft::util::metrics::rel_l2;
+use fmafft::util::prng::Pcg32;
+
+fn noise(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Pcg32::seed(seed);
+    (
+        (0..n).map(|_| rng.gaussian()).collect(),
+        (0..n).map(|_| rng.gaussian()).collect(),
+    )
+}
+
+fn ragged_chunks(len: usize, seed: u64) -> Vec<usize> {
+    let mut rng = Pcg32::seed(seed);
+    let mut out = Vec::new();
+    let mut left = len;
+    while left > 0 {
+        let c = (1 + rng.below(29)).min(left);
+        out.push(c);
+        left -= c;
+    }
+    out
+}
+
+fn offline(
+    dtype: DType,
+    taps: (&[f64], &[f64]),
+    sig: (&[f64], &[f64]),
+) -> (Vec<f64>, Vec<f64>) {
+    filter_offline_any(dtype, Strategy::DualSelect, taps.0, taps.1, sig.0, sig.1)
+        .expect("offline filter")
+}
+
+fn main() {
+    let server = Server::start(ServerConfig::native(256)).expect("start coordinator");
+    let fftd = FftdServer::start(server.clone(), "127.0.0.1:0").expect("start fftd");
+    println!("fftd (protocol v2) listening on {}", fftd.local_addr());
+
+    // --- Phase 1: pipelined overlap-save in all four dtypes.
+    let (hr, hi) = noise(11, 500);
+    let (xr, xi) = noise(1600, 501);
+    let chunks = ragged_chunks(xr.len(), 502);
+    assert!(chunks.len() >= 100, "demo needs >=100 chunks, got {}", chunks.len());
+    let (wr64, wi64) = offline(DType::F64, (&hr, &hi), (&xr, &xi));
+
+    let mut client = FftClient::connect(fftd.local_addr()).expect("connect");
+    client
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .expect("read timeout");
+
+    for dtype in DType::ALL {
+        let mut handle = client
+            .open_stream(&StreamSpec::ols(
+                dtype,
+                Strategy::DualSelect,
+                hr.clone(),
+                hi.clone(),
+            ))
+            .expect("open ols stream");
+        let (mut got_re, mut got_im) = (Vec::new(), Vec::new());
+        let (mut submitted, mut received, mut off) = (0usize, 0usize, 0usize);
+        while received < chunks.len() {
+            while submitted < chunks.len() && handle.in_flight() < 8 {
+                let c = chunks[submitted];
+                handle
+                    .submit_chunk(&xr[off..off + c], &xi[off..off + c])
+                    .expect("submit chunk");
+                off += c;
+                submitted += 1;
+            }
+            let resp = handle.recv().expect("recv chunk");
+            assert!(resp.is_ok(), "{dtype}: {:?}", resp.error);
+            got_re.extend(resp.re);
+            got_im.extend(resp.im);
+            received += 1;
+        }
+        let fin = handle.close().expect("close stream");
+        got_re.extend(fin.re);
+        got_im.extend(fin.im);
+
+        let (wr, wi) = offline(dtype, (&hr, &hi), (&xr, &xi));
+        assert_eq!(got_re, wr, "{dtype}: TCP stream differs from offline");
+        assert_eq!(got_im, wi, "{dtype}: TCP stream differs from offline");
+        let vs_f64 = rel_l2(&got_re, &got_im, &wr64, &wi64);
+        let bound_txt = match fin.bound {
+            Some(b) => {
+                if matches!(dtype, DType::F16 | DType::Bf16) {
+                    assert!(
+                        vs_f64.is_finite() && vs_f64 <= b,
+                        "{dtype}: err {vs_f64:.3e} exceeds cumulative bound {b:.3e}"
+                    );
+                }
+                format!("{b:.3e}")
+            }
+            None => "n/a".into(),
+        };
+        println!(
+            "  ols {dtype:<4} {} chunks bit-identical to offline; err vs f64 {:.3e} <= bound {}",
+            chunks.len(),
+            vs_f64,
+            bound_txt
+        );
+    }
+
+    // --- Phase 2: streaming STFT over a chirp.
+    let (cre, cim) = lfm_chirp(4096, 0.02, 0.40);
+    let mut handle = client
+        .open_stream(&StreamSpec::stft(
+            DType::F16,
+            Strategy::DualSelect,
+            128,
+            64,
+            Window::Hann,
+        ))
+        .expect("open stft stream");
+    let mut power = Vec::new();
+    let mut last_bound = 0.0f64;
+    let mut off = 0usize;
+    for &c in &ragged_chunks(cre.len(), 503) {
+        handle
+            .submit_chunk(&cre[off..off + c], &cim[off..off + c])
+            .expect("submit stft chunk");
+        let resp = handle.recv().expect("recv stft chunk");
+        assert!(resp.is_ok());
+        if let Some(b) = resp.bound {
+            assert!(b >= last_bound, "bound must grow with passes");
+            last_bound = b;
+        }
+        power.extend(resp.re);
+        off += c;
+    }
+    let fin = handle.close().expect("close stft");
+    power.extend(fin.re);
+    let cols = power.len() / 128;
+    let first = peak_bin(&power[..128]);
+    let last = peak_bin(&power[(cols - 1) * 128..cols * 128]);
+    assert!(last > first + 10, "chirp must sweep up: first {first}, last {last}");
+    println!(
+        "  stft f16  {cols} columns; peak bin {first} -> {last}; cumulative bound {:.3e} after {} passes",
+        fin.bound.unwrap(),
+        fin.passes
+    );
+    fftd.shutdown();
+    server.shutdown();
+
+    // --- Phase 3: registry-full BUSY + retry, session state intact.
+    let server = Server::start(ServerConfig::native(256)).expect("start coordinator");
+    let fftd = FftdServer::start_with_streams(
+        server.clone(),
+        "127.0.0.1:0",
+        StreamConfig { max_sessions: 1, ..Default::default() },
+    )
+    .expect("start fftd");
+    let mut client = FftClient::connect(fftd.local_addr()).expect("connect");
+    client
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .expect("read timeout");
+    let mut other = FftClient::connect(fftd.local_addr()).expect("connect 2");
+    other
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .expect("read timeout");
+
+    let mut handle = client
+        .open_stream(&StreamSpec::ols(
+            DType::F32,
+            Strategy::DualSelect,
+            hr.clone(),
+            hi.clone(),
+        ))
+        .expect("open stream");
+    let half = xr.len() / 2;
+    handle.submit_chunk(&xr[..half], &xi[..half]).expect("first half");
+    let first_half = handle.recv().expect("recv first half");
+    match other.open_stream(&StreamSpec::stft(
+        DType::F32,
+        Strategy::DualSelect,
+        64,
+        32,
+        Window::Hann,
+    )) {
+        Err(FftError::Rejected { in_flight, limit }) => {
+            println!("  backpressure: second open -> BUSY (in_flight={in_flight}, limit={limit})");
+        }
+        Err(e) => panic!("expected BUSY, got error {e:?}"),
+        Ok(_) => panic!("expected BUSY, got a session"),
+    }
+    // The open session streams on, state intact.
+    handle.submit_chunk(&xr[half..], &xi[half..]).expect("second half");
+    let second_half = handle.recv().expect("recv second half");
+    let fin = handle.close().expect("close");
+    let mut got_re = first_half.re;
+    got_re.extend(second_half.re);
+    got_re.extend(fin.re);
+    let (wr, _) = offline(DType::F32, (&hr, &hi), (&xr, &xi));
+    assert_eq!(got_re, wr, "session state was lost across the BUSY");
+    // Retry after the close: admitted.
+    let retry = other
+        .open_stream(&StreamSpec::stft(
+            DType::F32,
+            Strategy::DualSelect,
+            64,
+            32,
+            Window::Hann,
+        ))
+        .expect("retry after close");
+    println!("  retry after close: session {} open (state survived the BUSY)", retry.session());
+    drop(retry);
+    fftd.shutdown();
+    server.shutdown();
+    println!("OK");
+}

@@ -271,6 +271,79 @@ fn main() {
         server.shutdown();
     }
 
+    // Streaming plane: stateful overlap-save / STFT sessions through
+    // the session registry (the same engine the fftd STREAM_* ops
+    // drive), tagged mode=stream next to the one-shot rows.
+    println!("\nstreaming plane (session registry, in-process):");
+    {
+        use fmafft::stream::{SessionRegistry, StreamSpec};
+        use fmafft::util::prng::Pcg32;
+        let chunk_len = 512usize;
+        let chunk_count = if quick { 200 } else { 1000 };
+        let mut rng = Pcg32::seed(77);
+        let chunk_re: Vec<f64> = (0..chunk_len).map(|_| rng.gaussian()).collect();
+        let chunk_im: Vec<f64> = (0..chunk_len).map(|_| rng.gaussian()).collect();
+        let taps_re: Vec<f64> = (0..64).map(|_| rng.gaussian()).collect();
+        let taps_im: Vec<f64> = (0..64).map(|_| rng.gaussian()).collect();
+        let specs: Vec<(&str, DType, StreamSpec)> = vec![
+            (
+                "stream ols",
+                DType::F32,
+                StreamSpec::ols(
+                    DType::F32,
+                    Strategy::DualSelect,
+                    taps_re.clone(),
+                    taps_im.clone(),
+                ),
+            ),
+            (
+                "stream ols",
+                DType::F16,
+                StreamSpec::ols(DType::F16, Strategy::DualSelect, taps_re, taps_im),
+            ),
+            (
+                "stream stft",
+                DType::F32,
+                StreamSpec::stft(
+                    DType::F32,
+                    Strategy::DualSelect,
+                    256,
+                    128,
+                    fmafft::signal::window::Window::Hann,
+                ),
+            ),
+        ];
+        for (what, dtype, spec) in specs {
+            let reg = SessionRegistry::default();
+            let opened = reg.open(&spec).expect("open bench session");
+            let t0 = Instant::now();
+            let mut out_values = 0usize;
+            for _ in 0..chunk_count {
+                let out = reg.chunk(opened.session, &chunk_re, &chunk_im).expect("chunk");
+                out_values += out.re.len() + out.im.len();
+            }
+            let fin = reg.close(opened.session).expect("close");
+            let wall = t0.elapsed().as_secs_f64();
+            let chunks_per_s = chunk_count as f64 / wall;
+            let samples_per_s = (chunk_count * chunk_len) as f64 / wall;
+            let label = format!("  {what} {dtype} chunk={chunk_len}");
+            println!(
+                "{label:<40} {chunks_per_s:>10.0} chunks/s  {samples_per_s:>12.0} samples/s  passes {}",
+                fin.passes
+            );
+            json.push_metrics_tags(
+                &format!("{what} chunk={chunk_len}"),
+                &[("dtype", dtype.name()), ("strategy", "dual"), ("mode", "stream")],
+                &[
+                    ("chunks_per_s", chunks_per_s),
+                    ("samples_per_s", samples_per_s),
+                    ("out_values", out_values as f64),
+                    ("passes", fin.passes as f64),
+                ],
+            );
+        }
+    }
+
     // PJRT backend (AOT JAX/Pallas artifacts).
     let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
     if std::path::Path::new(dir).join("manifest.json").exists() {

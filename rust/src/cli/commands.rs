@@ -8,9 +8,14 @@ use crate::analysis::ratio::ratio_stats;
 use crate::analysis::report::{fixed, sci, Table};
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::{FftOp, Server, ServerConfig};
-use crate::fft::{DType, FftError, FftResult, Strategy};
+use crate::fft::{DType, FftError, FftResult, Planner, Strategy};
 use crate::net::{FftClient, FftdServer};
-use crate::precision::{Bf16, F16};
+use crate::precision::{Bf16, Real, F16};
+use crate::signal::chirp::{default_chirp, lfm_chirp};
+use crate::signal::window::Window;
+use crate::stream::{filter_offline, filter_offline_any, peak_bin, OlsFilter, StreamSpec};
+use crate::util::metrics::rel_l2;
+use crate::util::prng::Pcg32;
 use crate::workload::{ArrivalTrace, SignalKind, TraceConfig, WorkloadGen};
 
 use super::Args;
@@ -26,6 +31,11 @@ USAGE:
   fmafft fft     [--n 1024] [--strategy dual] [--dtype f64|f32|bf16|f16]
       Run one native FFT on a random frame; report error vs the f64 DFT.
       (--precision is accepted as an alias of --dtype.)
+      With --stream-chunks N: run the overlap-save streaming engine
+      instead — a chirp matched filter over a noisy signal fed in N
+      ragged chunks, asserted bit-identical to the offline whole-signal
+      path, with the cumulative a-priori bound reported per dtype
+      (--taps 32, --samples 4096 configure the workload).
   fmafft serve   [--n 1024] [--dtype f32] [--strategy dual] [--pjrt]
                  [--artifacts DIR] [--rate 2000] [--requests 2000]
                  [--workers 2] [--max-batch 32]
@@ -42,6 +52,12 @@ USAGE:
       Drive a running fftd over TCP with pipelined requests; --verify
       checks every response against the f64 DFT oracle and its
       attached a-priori bound.
+      With --stream: drive the protocol-v2 streaming plane instead —
+      an overlap-save session (ragged pipelined chunks, verified
+      bit-identical to the offline filter and within the cumulative
+      bound) plus a streaming-STFT chirp session (peak-bin track
+      verified).  --requests sets the chunk count; --taps and
+      --stft-frame configure the sessions.
   fmafft help
 ";
 
@@ -139,7 +155,118 @@ pub fn audit(a: &Args) -> FftResult<()> {
     Ok(())
 }
 
+/// Ragged chunk lengths covering `len` (seeded, >= `want` chunks for
+/// any `len >= want`).
+fn ragged_chunks(len: usize, want: usize, seed: u64) -> Vec<usize> {
+    let mut rng = Pcg32::seed(seed);
+    let max_chunk = (2 * len / want.max(1)).max(2);
+    let mut out = Vec::new();
+    let mut left = len;
+    while left > 0 {
+        let c = (1 + rng.below(max_chunk)).min(left);
+        out.push(c);
+        left -= c;
+    }
+    out
+}
+
+/// `fft --stream-chunks N`: the in-process streaming demo — a chirp
+/// matched filter over noise, fed in N ragged chunks through
+/// [`OlsFilter`], asserted bit-identical to the offline whole-signal
+/// path, error vs the f64 reference reported against the cumulative
+/// a-priori bound.
+fn fft_stream(a: &Args) -> FftResult<()> {
+    let chunks_wanted: usize = a.get_parse("stream-chunks", 16usize)?;
+    let taps: usize = a.get_parse("taps", 32usize)?;
+    let samples: usize = a.get_parse("samples", 4096usize)?;
+    let strategy: Strategy = a.get_or("strategy", "dual").parse()?;
+    let dtype: DType = a
+        .get("dtype")
+        .or_else(|| a.get("precision"))
+        .unwrap_or("f32")
+        .parse()?;
+    let seed: u64 = a.get_parse("seed", 42u64)?;
+
+    // Matched-filter taps: the time-reversed conjugate chirp.
+    let (cr, ci) = default_chirp(taps);
+    let taps_re: Vec<f64> = cr.iter().rev().copied().collect();
+    let taps_im: Vec<f64> = ci.iter().rev().map(|x| -x).collect();
+    let mut rng = Pcg32::seed(seed);
+    let sig_re: Vec<f64> = (0..samples).map(|_| rng.gaussian()).collect();
+    let sig_im: Vec<f64> = (0..samples).map(|_| rng.gaussian()).collect();
+    let chunks = ragged_chunks(samples, chunks_wanted, seed.wrapping_add(1));
+
+    fn run<T: Real>(
+        strategy: Strategy,
+        taps: (&[f64], &[f64]),
+        sig: (&[f64], &[f64]),
+        chunks: &[usize],
+    ) -> FftResult<(Vec<f64>, Vec<f64>, Option<f64>, u64, usize)> {
+        let planner = Planner::<T>::new();
+        let (wr, wi) = filter_offline::<T>(&planner, strategy, taps.0, taps.1, sig.0, sig.1)?;
+        let mut f = OlsFilter::<T>::new(&planner, strategy, taps.0, taps.1)?;
+        let mut got_re = Vec::new();
+        let mut got_im = Vec::new();
+        let mut off = 0usize;
+        for &c in chunks {
+            f.push(&sig.0[off..off + c], &sig.1[off..off + c], &mut got_re, &mut got_im)?;
+            off += c;
+        }
+        f.finish(&mut got_re, &mut got_im)?;
+        if got_re != wr || got_im != wi {
+            return Err(FftError::Backend(
+                "chunked overlap-save output differs from the offline path".into(),
+            ));
+        }
+        Ok((got_re, got_im, f.bound(), f.fft_passes(), f.fft_len()))
+    }
+
+    let (got_re, got_im, bound, passes, fft_len) = match dtype {
+        DType::F64 => run::<f64>(strategy, (&taps_re, &taps_im), (&sig_re, &sig_im), &chunks)?,
+        DType::F32 => run::<f32>(strategy, (&taps_re, &taps_im), (&sig_re, &sig_im), &chunks)?,
+        DType::Bf16 => run::<Bf16>(strategy, (&taps_re, &taps_im), (&sig_re, &sig_im), &chunks)?,
+        DType::F16 => run::<F16>(strategy, (&taps_re, &taps_im), (&sig_re, &sig_im), &chunks)?,
+    };
+    let (wr64, wi64) = filter_offline::<f64>(
+        &Planner::new(),
+        strategy,
+        &taps_re,
+        &taps_im,
+        &sig_re,
+        &sig_im,
+    )?;
+    let err = rel_l2(&got_re, &got_im, &wr64, &wi64);
+    println!(
+        "streamed {} samples in {} ragged chunks through overlap-save (taps={taps}, fft_n={fft_len}, dtype={dtype}, strategy={strategy})",
+        samples,
+        chunks.len(),
+    );
+    println!("  chunked output bit-identical to the offline whole-signal path: yes");
+    match bound {
+        Some(b) => {
+            println!(
+                "  error vs f64 reference: {} | cumulative a-priori bound after {passes} passes: {}",
+                sci(err),
+                sci(b)
+            );
+            if dtype != DType::F64 && (err.is_nan() || err > b) {
+                return Err(FftError::Backend(format!(
+                    "streamed error {err:.3e} exceeds the cumulative bound {b:.3e}"
+                )));
+            }
+        }
+        None => println!(
+            "  error vs f64 reference: {} (no ratio bound for strategy {strategy})",
+            sci(err)
+        ),
+    }
+    Ok(())
+}
+
 pub fn fft(a: &Args) -> FftResult<()> {
+    if a.get("stream-chunks").is_some() {
+        return fft_stream(a);
+    }
     let n: usize = a.get_parse("n", 1024usize)?;
     crate::fft::log2_exact(n)?;
     let strategy: Strategy = a.get_or("strategy", "dual").parse()?;
@@ -282,10 +409,151 @@ pub fn serve(a: &Args) -> FftResult<()> {
     Ok(())
 }
 
+/// `client --stream`: drive the protocol-v2 streaming plane — one
+/// overlap-save session (ragged pipelined chunks, verified
+/// bit-identical to the offline filter and within the cumulative
+/// bound) and one streaming-STFT chirp session (peak-bin track
+/// verified).  Exits nonzero on any verification failure.
+fn client_stream(a: &Args, addr: &str) -> FftResult<()> {
+    let requests: usize = a.get_parse("requests", 64usize)?.max(1);
+    let taps: usize = a.get_parse("taps", 32usize)?;
+    let frame: usize = a.get_parse("stft-frame", 128usize)?;
+    let pipeline: usize = a.get_parse("pipeline", 8usize)?.max(1);
+    let dtype: DType = a.get_or("dtype", "f32").parse()?;
+    let strategy: Strategy = a.get_or("strategy", "dual").parse()?;
+    let seed: u64 = a.get_parse("seed", 42u64)?;
+
+    let mut client = FftClient::connect(addr)?;
+    client.set_read_timeout(Some(Duration::from_secs(60)))?;
+    println!(
+        "connected to {addr} — streaming (dtype={dtype} strategy={strategy} chunks={requests})"
+    );
+
+    // --- Overlap-save session: chirp matched filter over noise.
+    let (cr, ci) = default_chirp(taps);
+    let taps_re: Vec<f64> = cr.iter().rev().copied().collect();
+    let taps_im: Vec<f64> = ci.iter().rev().map(|x| -x).collect();
+    let samples = (requests * 24).max(256);
+    let mut rng = Pcg32::seed(seed);
+    let sig_re: Vec<f64> = (0..samples).map(|_| rng.gaussian()).collect();
+    let sig_im: Vec<f64> = (0..samples).map(|_| rng.gaussian()).collect();
+    let chunks = ragged_chunks(samples, requests, seed.wrapping_add(9));
+
+    let mut handle = client.open_stream(&StreamSpec::ols(
+        dtype,
+        strategy,
+        taps_re.clone(),
+        taps_im.clone(),
+    ))?;
+    let (mut got_re, mut got_im) = (Vec::new(), Vec::new());
+    let (mut submitted, mut received, mut off) = (0usize, 0usize, 0usize);
+    while received < chunks.len() {
+        while submitted < chunks.len() && handle.in_flight() < pipeline {
+            let c = chunks[submitted];
+            handle.submit_chunk(&sig_re[off..off + c], &sig_im[off..off + c])?;
+            off += c;
+            submitted += 1;
+        }
+        let resp = handle.recv()?;
+        if let Some(e) = resp.error {
+            return Err(e);
+        }
+        got_re.extend(resp.re);
+        got_im.extend(resp.im);
+        received += 1;
+    }
+    let fin = handle.close()?;
+    got_re.extend(fin.re);
+    got_im.extend(fin.im);
+
+    // Offline reference in the SAME dtype must match bit-for-bit.
+    let (wr, wi) = filter_offline_any(dtype, strategy, &taps_re, &taps_im, &sig_re, &sig_im)?;
+    if got_re != wr || got_im != wi {
+        return Err(FftError::Backend(
+            "streamed output differs from the offline overlap-save path".into(),
+        ));
+    }
+    let (wr64, wi64) =
+        filter_offline_any(DType::F64, strategy, &taps_re, &taps_im, &sig_re, &sig_im)?;
+    let err = rel_l2(&got_re, &got_im, &wr64, &wi64);
+    match fin.bound {
+        Some(b) => {
+            if err.is_nan() || (dtype != DType::F64 && err > b) {
+                return Err(FftError::Backend(format!(
+                    "streamed error {err:.3e} exceeds the cumulative bound {b:.3e}"
+                )));
+            }
+            println!(
+                "ols: {} chunks bit-identical to offline; err vs f64 {} <= cumulative bound {} ({} passes)",
+                chunks.len(),
+                sci(err),
+                sci(b),
+                fin.passes
+            );
+        }
+        None => println!(
+            "ols: {} chunks bit-identical to offline; err vs f64 {} (no ratio bound)",
+            chunks.len(),
+            sci(err)
+        ),
+    }
+
+    // --- Streaming STFT session: verify the chirp's peak-bin track.
+    crate::fft::log2_exact(frame)?;
+    let (cre, cim) = lfm_chirp((32 * frame).max(2048), 0.02, 0.40);
+    let mut handle =
+        client.open_stream(&StreamSpec::stft(dtype, strategy, frame, frame / 2, Window::Hann))?;
+    let mut power = Vec::new();
+    let mut last_bound = 0.0f64;
+    let mut off = 0usize;
+    for &c in &ragged_chunks(cre.len(), requests, seed.wrapping_add(10)) {
+        handle.submit_chunk(&cre[off..off + c], &cim[off..off + c])?;
+        let resp = handle.recv()?;
+        if let Some(e) = resp.error {
+            return Err(e);
+        }
+        if let Some(b) = resp.bound {
+            if b < last_bound {
+                return Err(FftError::Backend(
+                    "cumulative bound must grow with passes".into(),
+                ));
+            }
+            last_bound = b;
+        }
+        power.extend(resp.re);
+        off += c;
+    }
+    let fin = handle.close()?;
+    power.extend(fin.re);
+    let cols = power.len() / frame;
+    if cols < 8 {
+        return Err(FftError::Backend(format!("too few STFT columns ({cols})")));
+    }
+    let first = peak_bin(&power[..frame]);
+    let last = peak_bin(&power[(cols - 1) * frame..cols * frame]);
+    if last <= first + 5 {
+        return Err(FftError::Backend(format!(
+            "chirp peak-bin track failed: first {first}, last {last}"
+        )));
+    }
+    match fin.bound {
+        Some(b) => println!(
+            "stft: {cols} columns; peak bin {first} -> {last}; cumulative bound {} after {} passes",
+            sci(b),
+            fin.passes
+        ),
+        None => println!("stft: {cols} columns; peak bin {first} -> {last}"),
+    }
+    Ok(())
+}
+
 pub fn client(a: &Args) -> FftResult<()> {
     let addr = a
         .get("addr")
         .ok_or_else(|| FftError::InvalidArgument("client requires --addr HOST:PORT".into()))?;
+    if a.flag("stream") {
+        return client_stream(a, addr);
+    }
     let n: usize = a.get_parse("n", 1024usize)?;
     let requests: usize = a.get_parse("requests", 16usize)?;
     let pipeline: usize = a.get_parse("pipeline", 8usize)?.max(1);

@@ -96,6 +96,29 @@ mod tests {
     #[test]
     fn client_requires_addr() {
         assert_eq!(run(["client".to_string()]), 1);
+        // --stream still needs an address first.
+        assert_eq!(run(["client".to_string(), "--stream".into()]), 1);
+    }
+
+    #[test]
+    fn fft_stream_chunks_demo_runs_all_dtypes() {
+        for d in ["f64", "f32", "bf16", "f16"] {
+            assert_eq!(
+                run([
+                    "fft".to_string(),
+                    "--stream-chunks".into(),
+                    "8".into(),
+                    "--samples".into(),
+                    "512".into(),
+                    "--taps".into(),
+                    "16".into(),
+                    "--dtype".into(),
+                    d.into(),
+                ]),
+                0,
+                "dtype {d}"
+            );
+        }
     }
 
     #[test]

@@ -25,6 +25,16 @@ pub struct Metrics {
     pub batch_capacity: AtomicU64,
     /// Gauge: requests currently waiting in open (unflushed) batches.
     queue_depth: AtomicU64,
+    /// Stream sessions ever opened (streaming plane counter).
+    pub streams_opened: AtomicU64,
+    /// Gauge: stream sessions currently open.
+    open_streams: AtomicU64,
+    /// Stream chunks processed (streaming plane counter; divide by
+    /// wall time for chunks/s).
+    pub stream_chunks: AtomicU64,
+    /// High-water mark of any session's cumulative FFT pass count —
+    /// how far the eq. (11) serving bound has been stretched.
+    max_stream_passes: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS],
     // Per-dtype splits of submitted/completed/failed, indexed by
     // `DType::index()`.
@@ -79,6 +89,35 @@ impl Metrics {
         self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
         self.batch_capacity
             .fetch_add(max_batch.max(1) as u64, Ordering::Relaxed);
+    }
+
+    /// Count one opened stream session; `open_now` updates the
+    /// open-sessions gauge.
+    pub fn record_stream_open(&self, open_now: usize) {
+        self.streams_opened.fetch_add(1, Ordering::Relaxed);
+        self.open_streams.store(open_now as u64, Ordering::Relaxed);
+    }
+
+    /// Record a closed stream session; `open_now` updates the gauge.
+    pub fn record_stream_closed(&self, open_now: usize) {
+        self.open_streams.store(open_now as u64, Ordering::Relaxed);
+    }
+
+    /// Count one processed stream chunk at a session whose cumulative
+    /// pass count is now `passes` (keeps the high-water mark).
+    pub fn record_stream_chunk(&self, passes: u64) {
+        self.stream_chunks.fetch_add(1, Ordering::Relaxed);
+        self.max_stream_passes.fetch_max(passes, Ordering::Relaxed);
+    }
+
+    /// Stream sessions currently open.
+    pub fn open_streams(&self) -> u64 {
+        self.open_streams.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of any stream session's cumulative pass count.
+    pub fn max_stream_passes(&self) -> u64 {
+        self.max_stream_passes.load(Ordering::Relaxed)
     }
 
     /// Update the queue-depth gauge (intake thread, after every event).
@@ -147,6 +186,10 @@ impl Metrics {
             queue_depth: self.queue_depth(),
             p50_us: self.latency_quantile_us(0.5),
             p99_us: self.latency_quantile_us(0.99),
+            streams_opened: self.streams_opened.load(Ordering::Relaxed),
+            open_streams: self.open_streams(),
+            stream_chunks: self.stream_chunks.load(Ordering::Relaxed),
+            max_stream_passes: self.max_stream_passes(),
             per_dtype: core::array::from_fn(|i| self.dtype_counts(DType::ALL[i])),
         }
     }
@@ -179,6 +222,12 @@ impl Metrics {
                 ));
             }
         }
+        if s.streams_opened > 0 {
+            out.push_str(&format!(
+                " streams={} open_streams={} stream_chunks={} max_stream_passes={}",
+                s.streams_opened, s.open_streams, s.stream_chunks, s.max_stream_passes
+            ));
+        }
         out
     }
 }
@@ -207,6 +256,14 @@ pub struct MetricsSnapshot {
     pub queue_depth: u64,
     pub p50_us: u64,
     pub p99_us: u64,
+    /// Stream sessions ever opened (streaming plane).
+    pub streams_opened: u64,
+    /// Stream sessions open when the snapshot was taken.
+    pub open_streams: u64,
+    /// Stream chunks processed.
+    pub stream_chunks: u64,
+    /// High-water mark of any session's cumulative FFT pass count.
+    pub max_stream_passes: u64,
     /// Per-dtype request counters, indexed by `DType::index()` (use
     /// [`MetricsSnapshot::dtype`] for keyed access).
     pub per_dtype: [DTypeCounts; 4],
@@ -312,6 +369,27 @@ mod tests {
         assert!(text.contains("f32=1/2"), "{text}");
         assert!(text.contains("f16=1/1"), "{text}");
         assert!(!text.contains("bf16="), "{text}");
+    }
+
+    #[test]
+    fn stream_gauges_track_sessions_and_passes() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().streams_opened, 0);
+        m.record_stream_open(1);
+        m.record_stream_open(2);
+        m.record_stream_chunk(20);
+        m.record_stream_chunk(12); // lower pass count: high-water stays
+        assert_eq!(m.open_streams(), 2);
+        assert_eq!(m.max_stream_passes(), 20);
+        m.record_stream_closed(1);
+        let s = m.snapshot();
+        assert_eq!(s.streams_opened, 2);
+        assert_eq!(s.open_streams, 1);
+        assert_eq!(s.stream_chunks, 2);
+        assert_eq!(s.max_stream_passes, 20);
+        let text = m.summary();
+        assert!(text.contains("streams=2"), "{text}");
+        assert!(text.contains("stream_chunks=2"), "{text}");
     }
 
     #[test]

@@ -542,6 +542,13 @@ impl Server {
         &self.metrics
     }
 
+    /// A shared handle to the metrics sink — what the network plane's
+    /// stream [`crate::stream::SessionRegistry`] reports its gauges
+    /// into.
+    pub fn metrics_handle(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
     /// Point-in-time serving metrics (counters — aggregate and
     /// per-dtype — occupancy, queue depth, latency quantiles).
     pub fn snapshot(&self) -> super::metrics::MetricsSnapshot {

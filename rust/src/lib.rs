@@ -35,6 +35,13 @@
 //!   [`net::FftdServer`], [`net::FftClient`]), so remote callers get
 //!   the same dtype + a-priori-bound metadata as in-process ones.
 //!   See `PROTOCOL.md` for the wire format.
+//! * **Streaming plane** ([`stream`]) — stateful DSP sessions over
+//!   continuous signals: overlap-save FIR filtering
+//!   ([`stream::OlsFilter`]), streaming STFT ([`stream::StftStream`]),
+//!   and the [`stream::SessionRegistry`] session layer whose responses
+//!   carry a *running* cumulative a-priori error bound (eq. (11)
+//!   applied to serving).  Served remotely via the `STREAM_*` ops of
+//!   wire protocol v2.
 //! * **Applications** ([`signal`], [`workload`]) — the radar pulse
 //!   compression and spectrogram pipelines the paper motivates, used by
 //!   the examples and benches.
@@ -53,5 +60,6 @@ pub mod net;
 pub mod precision;
 pub mod runtime;
 pub mod signal;
+pub mod stream;
 pub mod util;
 pub mod workload;

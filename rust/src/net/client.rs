@@ -8,6 +8,15 @@
 //! * **Pipeline**: [`FftClient::submit`] returns immediately with the
 //!   request id; [`FftClient::recv`] yields responses in *completion*
 //!   order — keep a window of ids in flight for throughput.
+//! * **Stream**: [`FftClient::open_stream`] opens a stateful session
+//!   (protocol v2) and returns a [`StreamHandle`] whose
+//!   [`StreamHandle::submit_chunk`] / [`StreamHandle::recv`] pair
+//!   pipelines chunks exactly like one-shot requests; every
+//!   [`StreamResponse`] carries the session's cumulative pass count
+//!   and its *running* a-priori error bound.  Stream and one-shot
+//!   traffic share one connection (frames are matched by id), but
+//!   receive stream replies through the handle, not plain
+//!   [`FftClient::recv`].
 //!
 //! Server-side failures come back typed: a `BUSY` wire status decodes
 //! to [`FftError::Rejected`] (mirroring what an in-process
@@ -23,6 +32,7 @@ use std::time::Duration;
 
 use crate::coordinator::FftOp;
 use crate::fft::{DType, FftError, FftResult, Strategy};
+use crate::stream::StreamSpec;
 
 use super::wire;
 
@@ -50,6 +60,46 @@ pub struct NetResponse {
 impl NetResponse {
     pub fn is_ok(&self) -> bool {
         self.error.is_none()
+    }
+}
+
+/// One completed stream exchange: the session's running state plus
+/// whatever the request emitted (OLS: planar output samples; STFT:
+/// `cols · fft_len` power values in `re`, `im` empty) — or a typed
+/// error (`Rejected` for a `BUSY` status, `Backend` for `ERROR`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamResponse {
+    /// The id [`StreamHandle::submit_chunk`] returned for this
+    /// request.
+    pub id: u64,
+    /// Server-assigned session id (0 when the request failed before a
+    /// session existed).
+    pub session: u64,
+    /// Working precision of the session.
+    pub dtype: DType,
+    /// Cumulative butterfly passes the session has executed.
+    pub passes: u64,
+    /// The session's FFT size (OLS block / STFT frame).
+    pub fft_len: usize,
+    /// The running a-priori cumulative error bound at `passes`.
+    pub bound: Option<f64>,
+    pub re: Vec<f64>,
+    pub im: Vec<f64>,
+    pub error: Option<FftError>,
+}
+
+impl StreamResponse {
+    pub fn is_ok(&self) -> bool {
+        self.error.is_none()
+    }
+
+    /// STFT: whole columns in this response's power payload.
+    pub fn cols(&self) -> usize {
+        if self.fft_len == 0 {
+            0
+        } else {
+            self.re.len() / self.fft_len
+        }
     }
 }
 
@@ -144,11 +194,7 @@ impl FftClient {
         if re.len() != im.len() {
             return Err(FftError::LengthMismatch { expected: re.len(), got: im.len() });
         }
-        let id = self.next_id;
-        self.next_id = self.next_id.wrapping_add(1);
-        if self.next_id == 0 {
-            self.next_id = 1;
-        }
+        let id = self.alloc_id();
         if let Err(e) = wire::write_request_parts(&mut self.writer, id, op, strategy, dtype, re, im)
         {
             // Encode-time validation errors write nothing; an i/o
@@ -219,6 +265,80 @@ impl FftClient {
         self.recv_id(id)
     }
 
+    /// Open a stream session (protocol v2) and return a pipelining
+    /// handle for it.  Blocks for the server's open reply; a registry
+    /// at capacity surfaces as [`FftError::Rejected`] (retry after a
+    /// close — the connection stays usable).
+    pub fn open_stream(&mut self, spec: &StreamSpec) -> FftResult<StreamHandle<'_>> {
+        let id = self.send_stream_frame(|id| wire::encode_stream_open(id, spec))?;
+        let frame = self.recv_frame_for(&[id])?;
+        let resp = stream_response_from(frame);
+        match resp.error {
+            None => Ok(StreamHandle {
+                session: resp.session,
+                dtype: resp.dtype,
+                fft_len: resp.fft_len,
+                bound: resp.bound,
+                outstanding: VecDeque::new(),
+                client: self,
+            }),
+            Some(e) => Err(e),
+        }
+    }
+
+    fn alloc_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id = self.next_id.wrapping_add(1);
+        if self.next_id == 0 {
+            self.next_id = 1;
+        }
+        id
+    }
+
+    /// Encode-with-id and write one stream frame (shared by
+    /// open/chunk/close).  Encode-time validation errors write
+    /// nothing; i/o failures poison the connection like any other
+    /// partial frame.
+    fn send_stream_frame(
+        &mut self,
+        encode: impl FnOnce(u64) -> FftResult<Vec<u8>>,
+    ) -> FftResult<u64> {
+        if self.poisoned {
+            return Err(FftError::ChannelClosed(
+                "connection poisoned by an earlier transport error; reconnect",
+            ));
+        }
+        let id = self.alloc_id();
+        let bytes = encode(id)?;
+        if let Err(e) = self.writer.write_all(&bytes) {
+            self.poisoned = true;
+            return Err(FftError::Backend(format!("writing stream frame: {e}")));
+        }
+        if let Err(e) = self.writer.flush() {
+            self.poisoned = true;
+            return Err(FftError::Backend(format!("flushing stream frame: {e}")));
+        }
+        self.in_flight += 1;
+        Ok(id)
+    }
+
+    /// Next frame whose id is in `ids` (pending buffer first), parking
+    /// every other frame for its own receiver.
+    fn recv_frame_for(&mut self, ids: &[u64]) -> FftResult<wire::Response> {
+        if let Some(pos) = self.pending.iter().position(|f| ids.contains(&f.id())) {
+            self.in_flight = self.in_flight.saturating_sub(1);
+            return Ok(self.pending.remove(pos).unwrap());
+        }
+        loop {
+            let frame = self.read_frame()?;
+            if ids.contains(&frame.id()) {
+                self.in_flight = self.in_flight.saturating_sub(1);
+                return Ok(frame);
+            }
+            self.pending.push_back(frame);
+        }
+    }
+
     fn read_frame(&mut self) -> FftResult<wire::Response> {
         if self.poisoned {
             return Err(FftError::ChannelClosed(
@@ -261,6 +381,179 @@ impl FftClient {
     }
 }
 
+/// A pipelining handle for one open stream session — the remote
+/// spelling of [`crate::stream::SessionRegistry`]: submit chunks
+/// without waiting, receive per-chunk results (in order — the server
+/// processes a session's chunks serially), close to flush the tail.
+/// The handle borrows the client, so one-shot calls interleave between
+/// handles, not during one.
+pub struct StreamHandle<'a> {
+    client: &'a mut FftClient,
+    session: u64,
+    dtype: DType,
+    fft_len: usize,
+    bound: Option<f64>,
+    /// Ids of submitted-but-unreceived chunk requests.
+    outstanding: VecDeque<u64>,
+}
+
+impl StreamHandle<'_> {
+    /// Server-assigned session id.
+    pub fn session(&self) -> u64 {
+        self.session
+    }
+
+    /// Working precision of the session.
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    /// The session's FFT size (OLS block / STFT frame).
+    pub fn fft_len(&self) -> usize {
+        self.fft_len
+    }
+
+    /// The a-priori bound the open reply carried (grows with passes on
+    /// every subsequent [`StreamResponse`]).
+    pub fn initial_bound(&self) -> Option<f64> {
+        self.bound
+    }
+
+    /// Chunks submitted but not yet received.
+    pub fn in_flight(&self) -> usize {
+        self.outstanding.len()
+    }
+
+    /// Pipelined chunk submit: write one `STREAM_CHUNK` frame and
+    /// return its correlation id without waiting.
+    pub fn submit_chunk(&mut self, re: &[f64], im: &[f64]) -> FftResult<u64> {
+        if re.len() != im.len() {
+            return Err(FftError::LengthMismatch { expected: re.len(), got: im.len() });
+        }
+        let session = self.session;
+        let id = self
+            .client
+            .send_stream_frame(|id| wire::encode_stream_chunk_parts(id, session, re, im))?;
+        self.outstanding.push_back(id);
+        Ok(id)
+    }
+
+    /// Next chunk result for THIS session (the server answers a
+    /// session's chunks in submission order).  One-shot responses and
+    /// other sessions' frames are parked for their own receivers.
+    pub fn recv(&mut self) -> FftResult<StreamResponse> {
+        if self.outstanding.is_empty() {
+            return Err(FftError::InvalidArgument(
+                "no stream chunks in flight on this handle".into(),
+            ));
+        }
+        let ids: Vec<u64> = self.outstanding.iter().copied().collect();
+        let frame = self.client.recv_frame_for(&ids)?;
+        let resp = stream_response_from(frame);
+        self.outstanding.retain(|&i| i != resp.id);
+        Ok(resp)
+    }
+
+    /// Close the session: drain any outstanding chunk replies (their
+    /// payloads are folded, in order, ahead of the tail), send
+    /// `STREAM_CLOSE`, and return the final result — for overlap-save
+    /// that includes the last `taps-1` convolution samples.
+    ///
+    /// A server-side error on a drained chunk (`BUSY`, oversized
+    /// chunk, …) does NOT skip the close: the session is still torn
+    /// down server-side, then the first such error is returned.  Only
+    /// a transport failure aborts early — the connection is poisoned
+    /// then, and the server reaps the session when it drops.
+    pub fn close(mut self) -> FftResult<StreamResponse> {
+        let mut drained_re = Vec::new();
+        let mut drained_im = Vec::new();
+        let mut first_err: Option<FftError> = None;
+        while !self.outstanding.is_empty() {
+            let r = self.recv()?;
+            match r.error {
+                Some(e) => first_err = first_err.or(Some(e)),
+                None => {
+                    drained_re.extend(r.re);
+                    drained_im.extend(r.im);
+                }
+            }
+        }
+        let session = self.session;
+        let id = self
+            .client
+            .send_stream_frame(|id| wire::encode_stream_close(id, session))?;
+        let frame = self.client.recv_frame_for(&[id])?;
+        let mut resp = stream_response_from(frame);
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        if let Some(e) = resp.error {
+            return Err(e);
+        }
+        if !drained_re.is_empty() || !drained_im.is_empty() {
+            drained_re.extend(resp.re);
+            drained_im.extend(resp.im);
+            resp.re = drained_re;
+            resp.im = drained_im;
+        }
+        Ok(resp)
+    }
+}
+
+fn stream_response_from(frame: wire::Response) -> StreamResponse {
+    match frame {
+        wire::Response::Stream(s) => StreamResponse {
+            id: s.id,
+            session: s.session,
+            dtype: s.dtype,
+            passes: s.passes,
+            fft_len: s.fft_len as usize,
+            bound: s.bound,
+            re: s.re,
+            im: s.im,
+            error: None,
+        },
+        wire::Response::Busy { id, in_flight, limit } => StreamResponse {
+            id,
+            session: 0,
+            dtype: DType::F32,
+            passes: 0,
+            fft_len: 0,
+            bound: None,
+            re: Vec::new(),
+            im: Vec::new(),
+            error: Some(FftError::Rejected {
+                in_flight: in_flight as usize,
+                limit: limit as usize,
+            }),
+        },
+        wire::Response::Error { id, dtype, message } => StreamResponse {
+            id,
+            session: 0,
+            dtype,
+            passes: 0,
+            fft_len: 0,
+            bound: None,
+            re: Vec::new(),
+            im: Vec::new(),
+            error: Some(FftError::Backend(message)),
+        },
+        wire::Response::Ok { id, dtype, .. } => StreamResponse {
+            id,
+            session: 0,
+            dtype,
+            passes: 0,
+            fft_len: 0,
+            bound: None,
+            re: Vec::new(),
+            im: Vec::new(),
+            error: Some(FftError::Protocol(
+                "one-shot OK frame answered a stream request".into(),
+            )),
+        },
+    }
+}
+
 fn from_wire(frame: wire::Response) -> NetResponse {
     match frame {
         wire::Response::Ok { id, dtype, bound, re, im } => {
@@ -284,6 +577,21 @@ fn from_wire(frame: wire::Response) -> NetResponse {
             re: Vec::new(),
             im: Vec::new(),
             error: Some(FftError::Backend(message)),
+        },
+        // A stream reply surfacing on the one-shot path means the
+        // caller mixed recv() with an active StreamHandle — surface a
+        // typed error rather than misparse the payload.  (The handle's
+        // own receive path parks one-shot frames instead.)
+        wire::Response::Stream(s) => NetResponse {
+            id: s.id,
+            dtype: s.dtype,
+            bound: s.bound,
+            re: Vec::new(),
+            im: Vec::new(),
+            error: Some(FftError::Protocol(
+                "stream reply on the one-shot receive path; receive it via the StreamHandle"
+                    .into(),
+            )),
         },
     }
 }

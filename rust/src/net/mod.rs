@@ -31,9 +31,17 @@
 //! [`crate::coordinator::Server::submit_wait_with`] (asserted by
 //! `tests/net_serving.rs`).
 
+//! Protocol v2 adds the **streaming plane** on the same connection:
+//! [`FftClient::open_stream`] opens a stateful overlap-save or STFT
+//! session against the daemon's [`crate::stream::SessionRegistry`]
+//! (`STREAM_OPEN`/`STREAM_CHUNK`/`STREAM_CLOSE` ops); every reply
+//! carries the session's cumulative pass count and its *running*
+//! a-priori error bound, and registry/session backpressure arrives as
+//! the same typed `BUSY` one-shot callers get.
+
 pub mod client;
 pub mod server;
 pub mod wire;
 
-pub use client::{FftClient, NetResponse};
+pub use client::{FftClient, NetResponse, StreamHandle, StreamResponse};
 pub use server::FftdServer;

@@ -1,16 +1,22 @@
 //! `fftd` — the TCP serving plane over the coordinator.
 //!
-//! One bounded acceptor thread plus two threads per connection:
+//! One bounded acceptor thread plus three threads per connection:
 //!
 //! ```text
-//!   accept ── spawn ──► reader ──► Server::submit_routed ──► workers
-//!                         │ (decode straight into the pooled            │
-//!                         │  batch arenas; wire id = reply id)          │
-//!                         └── reply_tx clone ◄──────────────────────────┘
-//!                                   │
-//!                                 writer  (one per connection; encodes
-//!                                          responses in COMPLETION
-//!                                          order — pipelining)
+//!   accept ── spawn ──► reader ──┬► Server::submit_routed ──► workers
+//!                                │   (one-shot ops; payloads decode    │
+//!                                │    straight into pooled arenas;     │
+//!                                │    wire id = reply id)              │
+//!                                │              forwarder ◄────────────┘
+//!                                │                  │ (FftResponse →
+//!                                │                  │  ConnReply)
+//!                                ├► SessionRegistry │   STREAM_* ops run
+//!                                │   (stream ops,   │   synchronously on
+//!                                │    synchronous)  │   the reader: per-
+//!                                ▼                  ▼   session order =
+//!                              writer  (one per connection; encodes
+//!                                       replies in COMPLETION order —
+//!                                       pipelining)  request order
 //! ```
 //!
 //! Every wire request on a connection shares that connection's one
@@ -38,6 +44,7 @@ use std::time::Duration;
 
 use crate::coordinator::{FftResponse, Route, Server};
 use crate::fft::{DType, FftError, FftResult};
+use crate::stream::{SessionRegistry, StreamConfig, StreamOut};
 
 use super::wire;
 
@@ -50,6 +57,9 @@ const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
 /// [`Server`] over the `PROTOCOL.md` wire format.
 pub struct FftdServer {
     coordinator: Arc<Server>,
+    /// Stream sessions served by this daemon (shared across
+    /// connections; gauges report into the coordinator's metrics).
+    streams: Arc<SessionRegistry>,
     local_addr: SocketAddr,
     stop: Arc<AtomicBool>,
     accept_handle: Mutex<Option<JoinHandle<()>>>,
@@ -57,11 +67,22 @@ pub struct FftdServer {
     stopped: AtomicBool,
 }
 
+/// What a connection's writer serializes: a coordinator response
+/// (success, `BUSY` or `ERROR` on the wire) or a streaming-plane
+/// reply.  Coordinator responses arrive via a per-connection forwarder
+/// thread so [`crate::coordinator::Server::submit_routed`] keeps its
+/// plain `Sender<FftResponse>` signature.
+enum ConnReply {
+    Fft(FftResponse),
+    Stream(wire::StreamReply),
+}
+
 struct ConnHandle {
     /// A clone of the connection stream, kept so shutdown can unblock
     /// the reader with [`TcpStream::shutdown`].
     stream: TcpStream,
     reader: Option<JoinHandle<()>>,
+    forwarder: Option<JoinHandle<()>>,
     writer: Option<JoinHandle<()>>,
 }
 
@@ -74,7 +95,18 @@ fn thread_done(h: &Option<JoinHandle<()>>) -> bool {
 
 impl ConnHandle {
     fn join(mut self) {
+        self.reap();
+    }
+
+    fn done(&self) -> bool {
+        thread_done(&self.reader) && thread_done(&self.forwarder) && thread_done(&self.writer)
+    }
+
+    fn reap(&mut self) {
         if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.forwarder.take() {
             let _ = h.join();
         }
         if let Some(h) = self.writer.take() {
@@ -85,8 +117,20 @@ impl ConnHandle {
 
 impl FftdServer {
     /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
-    /// start accepting connections that are served by `coordinator`.
+    /// start accepting connections that are served by `coordinator`,
+    /// with the default streaming-plane limits.
     pub fn start(coordinator: Arc<Server>, addr: impl ToSocketAddrs) -> FftResult<FftdServer> {
+        Self::start_with_streams(coordinator, addr, StreamConfig::default())
+    }
+
+    /// [`FftdServer::start`] with explicit streaming-plane limits
+    /// (session cap, chunk cap, taps cap — the session cap is the
+    /// registry-full → `BUSY` backpressure knob).
+    pub fn start_with_streams(
+        coordinator: Arc<Server>,
+        addr: impl ToSocketAddrs,
+        stream_cfg: StreamConfig,
+    ) -> FftResult<FftdServer> {
         let listener = TcpListener::bind(addr)
             .map_err(|e| FftError::Backend(format!("binding fftd listener: {e}")))?;
         let local_addr = listener
@@ -94,19 +138,25 @@ impl FftdServer {
             .map_err(|e| FftError::Backend(format!("reading fftd listener address: {e}")))?;
         let stop = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<Vec<ConnHandle>>> = Arc::new(Mutex::new(Vec::new()));
+        let streams = Arc::new(SessionRegistry::with_metrics(
+            stream_cfg,
+            coordinator.metrics_handle(),
+        ));
 
         let accept_handle = {
             let stop = stop.clone();
             let conns = conns.clone();
             let coordinator = coordinator.clone();
+            let streams = streams.clone();
             std::thread::Builder::new()
                 .name("fftd-accept".into())
-                .spawn(move || accept_loop(listener, coordinator, stop, conns))
+                .spawn(move || accept_loop(listener, coordinator, streams, stop, conns))
                 .map_err(|e| FftError::Backend(format!("spawning fftd acceptor: {e}")))?
         };
 
         Ok(FftdServer {
             coordinator,
+            streams,
             local_addr,
             stop,
             accept_handle: Mutex::new(Some(accept_handle)),
@@ -124,6 +174,12 @@ impl FftdServer {
     /// The coordinator this daemon fronts.
     pub fn coordinator(&self) -> &Arc<Server> {
         &self.coordinator
+    }
+
+    /// The stream session registry this daemon serves (observability:
+    /// `open_sessions()`, limits).
+    pub fn stream_sessions(&self) -> &Arc<SessionRegistry> {
+        &self.streams
     }
 
     /// Connections currently tracked (finished ones are pruned as new
@@ -205,6 +261,7 @@ fn wake_addr(local: SocketAddr) -> SocketAddr {
 fn accept_loop(
     listener: TcpListener,
     coordinator: Arc<Server>,
+    streams: Arc<SessionRegistry>,
     stop: Arc<AtomicBool>,
     conns: Arc<Mutex<Vec<ConnHandle>>>,
 ) {
@@ -223,18 +280,13 @@ fn accept_loop(
         };
         // On stream-setup failure (clone/spawn) the connection is
         // simply dropped and the acceptor keeps serving.
-        if let Ok(conn) = spawn_connection(stream, &coordinator) {
+        if let Ok(conn) = spawn_connection(stream, &coordinator, &streams) {
             let mut guard = conns.lock().unwrap_or_else(PoisonError::into_inner);
             // Reap connections that already hung up.
             guard.retain_mut(|c| {
-                let done = thread_done(&c.reader) && thread_done(&c.writer);
+                let done = c.done();
                 if done {
-                    if let Some(h) = c.reader.take() {
-                        let _ = h.join();
-                    }
-                    if let Some(h) = c.writer.take() {
-                        let _ = h.join();
-                    }
+                    c.reap();
                 }
                 !done
             });
@@ -243,49 +295,116 @@ fn accept_loop(
     }
 }
 
-fn spawn_connection(stream: TcpStream, coordinator: &Arc<Server>) -> std::io::Result<ConnHandle> {
+fn spawn_connection(
+    stream: TcpStream,
+    coordinator: &Arc<Server>,
+    streams: &Arc<SessionRegistry>,
+) -> std::io::Result<ConnHandle> {
     // Frames are written whole and flushed; disable Nagle so pipelined
     // responses are not held back waiting for more bytes.
     let _ = stream.set_nodelay(true);
     let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
     let read_half = stream.try_clone()?;
     let write_half = stream.try_clone()?;
-    let (reply_tx, reply_rx) = mpsc::channel::<FftResponse>();
-    let coordinator = coordinator.clone();
-    let reader = std::thread::Builder::new()
-        .name("fftd-conn-read".into())
-        .spawn(move || read_loop(read_half, coordinator, reply_tx))?;
-    let writer = match std::thread::Builder::new()
-        .name("fftd-conn-write".into())
-        .spawn(move || write_loop(write_half, reply_rx))
-    {
-        Ok(w) => w,
+    // Two channels: the coordinator keeps its plain FftResponse reply
+    // channel; a per-connection forwarder funnels those into the
+    // writer's ConnReply channel next to the reader's stream replies.
+    let (conn_tx, conn_rx) = mpsc::channel::<ConnReply>();
+    let (fft_tx, fft_rx) = mpsc::channel::<FftResponse>();
+    let reader = {
+        let coordinator = coordinator.clone();
+        let streams = streams.clone();
+        let conn_tx = conn_tx.clone();
+        std::thread::Builder::new()
+            .name("fftd-conn-read".into())
+            .spawn(move || read_loop(read_half, coordinator, streams, fft_tx, conn_tx))?
+    };
+    let forwarder = match std::thread::Builder::new()
+        .name("fftd-conn-fwd".into())
+        .spawn(move || {
+            while let Ok(resp) = fft_rx.recv() {
+                if conn_tx.send(ConnReply::Fft(resp)).is_err() {
+                    return;
+                }
+            }
+        }) {
+        Ok(f) => f,
         Err(e) => {
-            // The reader is already running on a cloned fd; close the
-            // socket so it exits at EOF instead of serving a
-            // connection whose responses would go nowhere, and reap
-            // it before reporting the failure.
+            // A partially-spawned connection must not serve: close the
+            // socket so the reader exits at EOF, reap it, then report
+            // the failure.
             let _ = stream.shutdown(Shutdown::Both);
             let _ = reader.join();
             return Err(e);
         }
     };
-    Ok(ConnHandle { stream, reader: Some(reader), writer: Some(writer) })
+    let writer = match std::thread::Builder::new()
+        .name("fftd-conn-write".into())
+        .spawn(move || write_loop(write_half, conn_rx))
+    {
+        Ok(w) => w,
+        Err(e) => {
+            let _ = stream.shutdown(Shutdown::Both);
+            let _ = reader.join();
+            let _ = forwarder.join();
+            return Err(e);
+        }
+    };
+    Ok(ConnHandle {
+        stream,
+        reader: Some(reader),
+        forwarder: Some(forwarder),
+        writer: Some(writer),
+    })
 }
 
-/// Decode request frames and hand them to the coordinator.  Requests
-/// the coordinator refuses synchronously (backpressure, length
-/// mismatch, shutdown) are answered with a synthetic error response
-/// through the same reply channel, so the writer turns them into
-/// typed `BUSY`/`ERROR` wire statuses — the connection survives.
-fn read_loop(stream: TcpStream, coordinator: Arc<Server>, reply_tx: mpsc::Sender<FftResponse>) {
+/// Decode request frames and route them: one-shot FFT requests go to
+/// the coordinator (whose responses ride the forwarder into the
+/// writer), stream ops run synchronously against the shared
+/// [`SessionRegistry`] — per-session ordering is exactly request
+/// order, which stateful sessions require.  Requests refused
+/// synchronously (backpressure, busy session, length mismatch,
+/// shutdown) are answered with a synthetic error response, so the
+/// writer turns them into typed `BUSY`/`ERROR` wire statuses — the
+/// connection survives.  Sessions opened on this connection are
+/// closed (tail discarded) when it ends.
+fn read_loop(
+    stream: TcpStream,
+    coordinator: Arc<Server>,
+    streams: Arc<SessionRegistry>,
+    fft_tx: mpsc::Sender<FftResponse>,
+    conn_tx: mpsc::Sender<ConnReply>,
+) {
+    let mut owned_sessions: Vec<u64> = Vec::new();
+    read_frames(stream, coordinator, &streams, fft_tx, conn_tx, &mut owned_sessions);
+    // The peer is gone; its sessions would otherwise leak in the
+    // shared registry until daemon shutdown.  force_close removes
+    // even a session another connection has checked out mid-chunk
+    // (it is doomed and reaped when that chunk completes).
+    for id in owned_sessions {
+        streams.force_close(id);
+    }
+}
+
+fn read_frames(
+    stream: TcpStream,
+    coordinator: Arc<Server>,
+    streams: &SessionRegistry,
+    fft_tx: mpsc::Sender<FftResponse>,
+    conn_tx: mpsc::Sender<ConnReply>,
+    owned_sessions: &mut Vec<u64>,
+) {
+    // Reader-synthesized failures reuse the coordinator response shape
+    // so the writer maps them onto BUSY/ERROR uniformly.
+    let send_err = |id: u64, e: FftError, dtype: DType| {
+        let _ = conn_tx.send(ConnReply::Fft(FftResponse::err(id, e, dtype, 0, Duration::ZERO)));
+    };
     let mut r = BufReader::new(stream);
     loop {
-        match wire::read_request(&mut r) {
+        match wire::read_request_frame(&mut r) {
             Ok(None) => return, // peer closed cleanly
-            Ok(Some(req)) => {
-                let wire::Request { id, op, strategy, dtype, re, im } = req;
-                if id == 0 {
+            Ok(Some(frame)) => {
+                if frame_id(&frame) == 0 {
                     // Id 0 is reserved for connection-level errors
                     // (PROTOCOL.md §Session); answering an OK frame on
                     // it would read as a fatal connection error to
@@ -294,38 +413,94 @@ fn read_loop(stream: TcpStream, coordinator: Arc<Server>, reply_tx: mpsc::Sender
                     let e = FftError::Protocol(
                         "request used reserved correlation id 0".to_string(),
                     );
-                    let _ = reply_tx.send(FftResponse::err(id, e, dtype, 0, Duration::ZERO));
+                    send_err(0, e, DType::F32);
                     continue;
                 }
-                let route = Route { id, op, dtype, strategy };
-                if let Err(e) = coordinator.submit_routed(route, re, im, reply_tx.clone()) {
-                    let _ = reply_tx.send(FftResponse::err(id, e, dtype, 0, Duration::ZERO));
+                match frame {
+                    wire::RequestFrame::Fft(req) => {
+                        let wire::Request { id, op, strategy, dtype, re, im } = req;
+                        let route = Route { id, op, dtype, strategy };
+                        if let Err(e) = coordinator.submit_routed(route, re, im, fft_tx.clone())
+                        {
+                            send_err(id, e, dtype);
+                        }
+                    }
+                    wire::RequestFrame::StreamOpen { id, spec } => {
+                        let dtype = spec.dtype;
+                        match streams.open(&spec) {
+                            Ok(out) => {
+                                owned_sessions.push(out.session);
+                                let _ = conn_tx.send(ConnReply::Stream(to_reply(id, out)));
+                            }
+                            Err(e) => send_err(id, e, dtype),
+                        }
+                    }
+                    wire::RequestFrame::StreamChunk { id, session, re, im } => {
+                        match streams.chunk(session, &re, &im) {
+                            Ok(out) => {
+                                let _ = conn_tx.send(ConnReply::Stream(to_reply(id, out)));
+                            }
+                            Err(e) => send_err(id, e, DType::F32),
+                        }
+                    }
+                    wire::RequestFrame::StreamClose { id, session } => {
+                        match streams.close(session) {
+                            Ok(out) => {
+                                owned_sessions.retain(|&s| s != session);
+                                let _ = conn_tx.send(ConnReply::Stream(to_reply(id, out)));
+                            }
+                            Err(e) => send_err(id, e, DType::F32),
+                        }
+                    }
                 }
             }
             Err(e) => {
                 // The byte stream can no longer be framed; answer
                 // best-effort on the RESERVED connection-level id 0
                 // (PROTOCOL.md §Session) and close.
-                let _ = reply_tx.send(FftResponse::err(0, e, DType::F32, 0, Duration::ZERO));
+                send_err(0, e, DType::F32);
                 return;
             }
         }
     }
-    // reply_tx drops here; the writer exits after flushing whatever
-    // the coordinator still owes this connection.
+    // fft_tx and conn_tx drop at the caller; the writer exits after
+    // flushing whatever the coordinator still owes this connection.
 }
 
-/// Encode coordinator responses in completion order.  Consecutive
+fn frame_id(frame: &wire::RequestFrame) -> u64 {
+    match frame {
+        wire::RequestFrame::Fft(req) => req.id,
+        wire::RequestFrame::StreamOpen { id, .. }
+        | wire::RequestFrame::StreamChunk { id, .. }
+        | wire::RequestFrame::StreamClose { id, .. } => *id,
+    }
+}
+
+/// Shape a registry result for the wire (payload moved, not copied).
+fn to_reply(id: u64, out: StreamOut) -> wire::StreamReply {
+    wire::StreamReply {
+        id,
+        dtype: out.dtype,
+        session: out.session,
+        passes: out.passes,
+        fft_len: out.fft_len as u64,
+        bound: out.bound,
+        re: out.re,
+        im: out.im,
+    }
+}
+
+/// Encode responses in completion order.  Consecutive
 /// already-completed responses coalesce into one flush.
-fn write_loop(stream: TcpStream, reply_rx: mpsc::Receiver<FftResponse>) {
+fn write_loop(stream: TcpStream, reply_rx: mpsc::Receiver<ConnReply>) {
     use std::io::Write;
     let mut w = std::io::BufWriter::new(stream);
     'serve: while let Ok(resp) = reply_rx.recv() {
-        if write_reply(&mut w, &resp).is_err() {
+        if write_conn_reply(&mut w, &resp).is_err() {
             break 'serve;
         }
         while let Ok(next) = reply_rx.try_recv() {
-            if write_reply(&mut w, &next).is_err() {
+            if write_conn_reply(&mut w, &next).is_err() {
                 break 'serve;
             }
         }
@@ -339,6 +514,15 @@ fn write_loop(stream: TcpStream, reply_rx: mpsc::Receiver<FftResponse>) {
     // clone lives in the server registry until reaped), so the peer
     // sees FIN now instead of when the registry prunes.
     let _ = w.get_ref().shutdown(Shutdown::Both);
+}
+
+fn write_conn_reply<W: std::io::Write>(w: &mut W, resp: &ConnReply) -> crate::fft::FftResult<()> {
+    match resp {
+        ConnReply::Fft(resp) => write_reply(w, resp),
+        ConnReply::Stream(s) => wire::write_stream_reply_parts(
+            w, s.id, s.dtype, s.session, s.passes, s.fft_len, s.bound, &s.re, &s.im,
+        ),
+    }
 }
 
 /// Write one coordinator response: successes stream the widened

@@ -7,7 +7,7 @@
 //! ```text
 //! offset size  field
 //!   0     4    magic     "FFTN"
-//!   4     2    version   1
+//!   4     2    version   2
 //!   6     1    kind      1 = request, 2 = response
 //!   7     1    code      request: op tag; response: status
 //!   8     1    strategy  request only (responses write 0)
@@ -26,6 +26,13 @@
 //! a-priori error bound for the request's strategy × dtype (NaN
 //! encodes "no bound applies").
 //!
+//! Protocol v2 adds the **streaming plane**: request ops
+//! [`OP_STREAM_OPEN`] / [`OP_STREAM_CHUNK`] / [`OP_STREAM_CLOSE`]
+//! (decoded by [`read_request_frame`]) and the [`STATUS_STREAM`]
+//! response status ([`StreamReply`]), whose body carries the session
+//! id, the cumulative butterfly pass count, the *running* a-priori
+//! bound and the emitted payload — see `PROTOCOL.md` §Streaming.
+//!
 //! Every decode failure is a typed [`FftError::Protocol`] — truncated
 //! streams, bad magic, failed checksums, unknown versions/tags and
 //! oversized lengths are all errors, never panics (asserted by
@@ -36,12 +43,19 @@ use std::io::{Read, Write};
 
 use crate::coordinator::FftOp;
 use crate::fft::{DType, FftError, FftResult, Strategy};
+use crate::signal::window::Window;
+use crate::stream::{StreamKind, StreamSpec};
 
 /// Frame magic: the first four bytes of every valid frame.
 pub const MAGIC: [u8; 4] = *b"FFTN";
 /// Protocol version this build speaks.  Decoders reject every other
 /// version (see `PROTOCOL.md` §Versioning).
-pub const VERSION: u16 = 1;
+///
+/// v2 added the streaming plane: request ops `STREAM_OPEN` /
+/// `STREAM_CHUNK` / `STREAM_CLOSE` and the `STREAM` response status —
+/// new tags and body layouts, hence the bump (v1 peers get a clean
+/// typed version error, never a misparse).
+pub const VERSION: u16 = 2;
 /// Fixed header size in bytes.
 pub const HEADER_LEN: usize = 28;
 /// Upper bound on a frame payload: 64 MiB = 4 Mi complex f64 samples.
@@ -66,6 +80,16 @@ pub const STATUS_OK: u8 = 0;
 pub const STATUS_BUSY: u8 = 1;
 /// The request failed; the body carries the error message.
 pub const STATUS_ERROR: u8 = 2;
+/// A streaming-plane response (answers `STREAM_OPEN` / `STREAM_CHUNK`
+/// / `STREAM_CLOSE`): session id, cumulative pass count, the running
+/// a-priori bound, and the emitted payload.
+pub const STATUS_STREAM: u8 = 3;
+
+/// Request op tags of the streaming plane (the one-shot FFT ops own
+/// tags 0–2 via [`FftOp`]).
+pub const OP_STREAM_OPEN: u8 = 3;
+pub const OP_STREAM_CHUNK: u8 = 4;
+pub const OP_STREAM_CLOSE: u8 = 5;
 
 /// One decoded request frame: id + plan selection + planar payload.
 #[derive(Clone, Debug, PartialEq)]
@@ -77,6 +101,20 @@ pub struct Request {
     pub dtype: DType,
     pub re: Vec<f64>,
     pub im: Vec<f64>,
+}
+
+/// Any decoded request frame — a one-shot FFT request or one of the
+/// streaming-plane ops (protocol v2).
+#[derive(Clone, Debug, PartialEq)]
+pub enum RequestFrame {
+    Fft(Request),
+    /// Open a stream session; the spec's dtype/strategy ride the
+    /// header bytes, kind/frame/hop/window/taps the body.
+    StreamOpen { id: u64, spec: StreamSpec },
+    /// Feed one chunk into an open session.
+    StreamChunk { id: u64, session: u64, re: Vec<f64>, im: Vec<f64> },
+    /// Flush and close a session.
+    StreamClose { id: u64, session: u64 },
 }
 
 /// One decoded response frame.
@@ -98,6 +136,31 @@ pub enum Response {
     /// The request failed with a server-side error (the `Display`
     /// form of the typed [`FftError`] travels as the message).
     Error { id: u64, dtype: DType, message: String },
+    /// A streaming-plane result (`STATUS_STREAM`).
+    Stream(StreamReply),
+}
+
+/// The body of a `STATUS_STREAM` response: the session's identity and
+/// running error-bound state plus whatever the chunk emitted (planar
+/// f64 output samples for overlap-save; `cols · fft_len` power values
+/// in `re` — `im` empty — for streaming STFT).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamReply {
+    /// Correlation id of the stream request this answers.
+    pub id: u64,
+    /// Working precision of the session.
+    pub dtype: DType,
+    /// Server-assigned session id.
+    pub session: u64,
+    /// Cumulative butterfly passes the session has executed.
+    pub passes: u64,
+    /// The session's FFT size (OLS block / STFT frame).
+    pub fft_len: u64,
+    /// Running a-priori cumulative bound at `passes` (NaN on the wire
+    /// encodes `None` — no ratio bound applies).
+    pub bound: Option<f64>,
+    pub re: Vec<f64>,
+    pub im: Vec<f64>,
 }
 
 impl Response {
@@ -107,6 +170,7 @@ impl Response {
             Response::Ok { id, .. } | Response::Busy { id, .. } | Response::Error { id, .. } => {
                 *id
             }
+            Response::Stream(s) => s.id,
         }
     }
 }
@@ -177,6 +241,40 @@ fn dtype_from(code: u8) -> FftResult<DType> {
         2 => Ok(DType::Bf16),
         3 => Ok(DType::F16),
         other => Err(FftError::Protocol(format!("unknown dtype tag {other}"))),
+    }
+}
+
+fn kind_code(k: StreamKind) -> u32 {
+    match k {
+        StreamKind::Ols => 0,
+        StreamKind::Stft => 1,
+    }
+}
+
+fn kind_from(code: u32) -> FftResult<StreamKind> {
+    match code {
+        0 => Ok(StreamKind::Ols),
+        1 => Ok(StreamKind::Stft),
+        other => Err(FftError::Protocol(format!("unknown stream kind tag {other}"))),
+    }
+}
+
+fn window_code(w: Window) -> u32 {
+    match w {
+        Window::Rect => 0,
+        Window::Hann => 1,
+        Window::Hamming => 2,
+        Window::Blackman => 3,
+    }
+}
+
+fn window_from(code: u32) -> FftResult<Window> {
+    match code {
+        0 => Ok(Window::Rect),
+        1 => Ok(Window::Hann),
+        2 => Ok(Window::Hamming),
+        3 => Ok(Window::Blackman),
+        other => Err(FftError::Protocol(format!("unknown window tag {other}"))),
     }
 }
 
@@ -354,6 +452,99 @@ pub fn encode_request_parts(
     Ok(out)
 }
 
+/// Encode one `STREAM_OPEN` request frame.  The spec's dtype and
+/// strategy ride the header; kind, STFT geometry and OLS taps ride the
+/// body.
+pub fn encode_stream_open(id: u64, spec: &StreamSpec) -> FftResult<Vec<u8>> {
+    check_planar(&spec.taps_re, &spec.taps_im)?;
+    if spec.kind == StreamKind::Stft && !spec.taps_re.is_empty() {
+        return Err(FftError::Protocol(
+            "stft stream-open frames carry no taps payload".into(),
+        ));
+    }
+    let (frame, hop) = (spec.frame, spec.hop);
+    if frame > u32::MAX as usize || hop > u32::MAX as usize {
+        return Err(FftError::Protocol(format!(
+            "stream frame/hop {frame}/{hop} exceed the u32 wire field"
+        )));
+    }
+    let body_len = check_body_len(16 + (spec.taps_re.len() + spec.taps_im.len()) * 8)?;
+    let mut out = Vec::with_capacity(HEADER_LEN + body_len as usize);
+    out.extend_from_slice(&encode_header(
+        KIND_REQUEST,
+        OP_STREAM_OPEN,
+        strategy_code(spec.strategy),
+        dtype_code(spec.dtype),
+        id,
+        body_len,
+    ));
+    out.extend_from_slice(&kind_code(spec.kind).to_le_bytes());
+    out.extend_from_slice(&(frame as u32).to_le_bytes());
+    out.extend_from_slice(&(hop as u32).to_le_bytes());
+    out.extend_from_slice(&window_code(spec.window).to_le_bytes());
+    put_f64s(&mut out, &spec.taps_re);
+    put_f64s(&mut out, &spec.taps_im);
+    Ok(out)
+}
+
+/// Write one `STREAM_OPEN` request frame.
+pub fn write_stream_open<W: Write>(w: &mut W, id: u64, spec: &StreamSpec) -> FftResult<()> {
+    w.write_all(&encode_stream_open(id, spec)?)
+        .map_err(|e| io_err("writing stream-open frame", &e))
+}
+
+/// Encode one `STREAM_CHUNK` request frame from borrowed payload
+/// slices (the strategy/dtype header bytes are written as 0 — the
+/// session fixed both at open).
+pub fn encode_stream_chunk_parts(
+    id: u64,
+    session: u64,
+    re: &[f64],
+    im: &[f64],
+) -> FftResult<Vec<u8>> {
+    check_planar(re, im)?;
+    let body_len = check_body_len(8 + (re.len() + im.len()) * 8)?;
+    let mut out = Vec::with_capacity(HEADER_LEN + body_len as usize);
+    out.extend_from_slice(&encode_header(
+        KIND_REQUEST,
+        OP_STREAM_CHUNK,
+        0,
+        0,
+        id,
+        body_len,
+    ));
+    out.extend_from_slice(&session.to_le_bytes());
+    put_f64s(&mut out, re);
+    put_f64s(&mut out, im);
+    Ok(out)
+}
+
+/// Write one `STREAM_CHUNK` request frame.
+pub fn write_stream_chunk_parts<W: Write>(
+    w: &mut W,
+    id: u64,
+    session: u64,
+    re: &[f64],
+    im: &[f64],
+) -> FftResult<()> {
+    w.write_all(&encode_stream_chunk_parts(id, session, re, im)?)
+        .map_err(|e| io_err("writing stream-chunk frame", &e))
+}
+
+/// Encode one `STREAM_CLOSE` request frame.
+pub fn encode_stream_close(id: u64, session: u64) -> FftResult<Vec<u8>> {
+    let mut out = Vec::with_capacity(HEADER_LEN + 8);
+    out.extend_from_slice(&encode_header(KIND_REQUEST, OP_STREAM_CLOSE, 0, 0, id, 8));
+    out.extend_from_slice(&session.to_le_bytes());
+    Ok(out)
+}
+
+/// Write one `STREAM_CLOSE` request frame.
+pub fn write_stream_close<W: Write>(w: &mut W, id: u64, session: u64) -> FftResult<()> {
+    w.write_all(&encode_stream_close(id, session)?)
+        .map_err(|e| io_err("writing stream-close frame", &e))
+}
+
 /// Encode one response frame into bytes.  Errors when an `Ok` frame's
 /// `re`/`im` lengths differ.
 pub fn encode_response(resp: &Response) -> FftResult<Vec<u8>> {
@@ -397,7 +588,58 @@ pub fn encode_response(resp: &Response) -> FftResult<Vec<u8>> {
             out.extend_from_slice(body);
             Ok(out)
         }
+        Response::Stream(s) => {
+            let mut out = Vec::new();
+            write_stream_reply_parts(
+                &mut out,
+                s.id,
+                s.dtype,
+                s.session,
+                s.passes,
+                s.fft_len,
+                s.bound,
+                &s.re,
+                &s.im,
+            )?;
+            Ok(out)
+        }
     }
+}
+
+/// Stream one `STATUS_STREAM` response straight from borrowed payload
+/// slices — the server's per-chunk hot path (byte-identical to
+/// [`encode_response`] of the equivalent [`Response::Stream`]).
+#[allow(clippy::too_many_arguments)]
+pub fn write_stream_reply_parts<W: Write>(
+    w: &mut W,
+    id: u64,
+    dtype: DType,
+    session: u64,
+    passes: u64,
+    fft_len: u64,
+    bound: Option<f64>,
+    re: &[f64],
+    im: &[f64],
+) -> FftResult<()> {
+    // No planar-length constraint: stream replies carry explicit
+    // per-plane counts (STFT power rides `re` alone, `im` empty).
+    let io = |e: std::io::Error| io_err("writing stream response frame", &e);
+    let body_len = check_body_len(40 + (re.len() + im.len()) * 8)?;
+    let header = encode_header(KIND_RESPONSE, STATUS_STREAM, 0, dtype_code(dtype), id, body_len);
+    w.write_all(&header).map_err(io)?;
+    w.write_all(&session.to_le_bytes()).map_err(io)?;
+    w.write_all(&passes.to_le_bytes()).map_err(io)?;
+    w.write_all(&fft_len.to_le_bytes()).map_err(io)?;
+    w.write_all(&bound.unwrap_or(f64::NAN).to_le_bytes()).map_err(io)?;
+    w.write_all(&(re.len() as u32).to_le_bytes()).map_err(io)?;
+    w.write_all(&(im.len() as u32).to_le_bytes()).map_err(io)?;
+    for &x in re {
+        w.write_all(&x.to_le_bytes()).map_err(io)?;
+    }
+    for &x in im {
+        w.write_all(&x.to_le_bytes()).map_err(io)?;
+    }
+    Ok(())
 }
 
 /// Write one request frame.
@@ -454,8 +696,9 @@ pub fn write_ok_response_parts<W: Write>(
     Ok(())
 }
 
-/// Read one request frame; `Ok(None)` on clean EOF.
-pub fn read_request<R: Read>(r: &mut R) -> FftResult<Option<Request>> {
+/// Read one request frame of ANY op — one-shot FFT or streaming-plane
+/// (`fftd`'s read path); `Ok(None)` on clean EOF.
+pub fn read_request_frame<R: Read>(r: &mut R) -> FftResult<Option<RequestFrame>> {
     let Some(raw) = read_header(r)? else { return Ok(None) };
     let h = parse_header(&raw)?;
     if h.kind != KIND_REQUEST {
@@ -464,25 +707,106 @@ pub fn read_request<R: Read>(r: &mut R) -> FftResult<Option<Request>> {
             h.kind
         )));
     }
-    let op = op_from(h.code)?;
-    let strategy = strategy_from(h.strategy)?;
-    let dtype = dtype_from(h.dtype)?;
-    let body = read_body(r, h.body_len)?;
-    if body.len() % 16 != 0 {
-        return Err(FftError::Protocol(format!(
-            "request body length {} is not a whole number of complex f64 samples",
-            body.len()
-        )));
+    match h.code {
+        OP_STREAM_OPEN => {
+            let strategy = strategy_from(h.strategy)?;
+            let dtype = dtype_from(h.dtype)?;
+            let body = read_body(r, h.body_len)?;
+            if body.len() < 16 || (body.len() - 16) % 16 != 0 {
+                return Err(FftError::Protocol(format!(
+                    "stream-open body length {} is not geometry + complex f64 taps",
+                    body.len()
+                )));
+            }
+            let kind = kind_from(u32::from_le_bytes(body[0..4].try_into().unwrap()))?;
+            let frame = u32::from_le_bytes(body[4..8].try_into().unwrap()) as usize;
+            let hop = u32::from_le_bytes(body[8..12].try_into().unwrap()) as usize;
+            let window = window_from(u32::from_le_bytes(body[12..16].try_into().unwrap()))?;
+            if kind == StreamKind::Stft && body.len() > 16 {
+                return Err(FftError::Protocol(
+                    "stft stream-open frames carry no taps payload".into(),
+                ));
+            }
+            let half = 16 + (body.len() - 16) / 2;
+            Ok(Some(RequestFrame::StreamOpen {
+                id: h.id,
+                spec: StreamSpec {
+                    kind,
+                    dtype,
+                    strategy,
+                    frame,
+                    hop,
+                    window,
+                    taps_re: get_f64s(&body[16..half]),
+                    taps_im: get_f64s(&body[half..]),
+                },
+            }))
+        }
+        OP_STREAM_CHUNK => {
+            let body = read_body(r, h.body_len)?;
+            if body.len() < 8 || (body.len() - 8) % 16 != 0 {
+                return Err(FftError::Protocol(format!(
+                    "stream-chunk body length {} is not session + complex f64 samples",
+                    body.len()
+                )));
+            }
+            let session = u64::from_le_bytes(body[0..8].try_into().unwrap());
+            let half = 8 + (body.len() - 8) / 2;
+            Ok(Some(RequestFrame::StreamChunk {
+                id: h.id,
+                session,
+                re: get_f64s(&body[8..half]),
+                im: get_f64s(&body[half..]),
+            }))
+        }
+        OP_STREAM_CLOSE => {
+            let body = read_body(r, h.body_len)?;
+            if body.len() != 8 {
+                return Err(FftError::Protocol(format!(
+                    "stream-close body length {} (expected 8)",
+                    body.len()
+                )));
+            }
+            Ok(Some(RequestFrame::StreamClose {
+                id: h.id,
+                session: u64::from_le_bytes(body[0..8].try_into().unwrap()),
+            }))
+        }
+        code => {
+            let op = op_from(code)?;
+            let strategy = strategy_from(h.strategy)?;
+            let dtype = dtype_from(h.dtype)?;
+            let body = read_body(r, h.body_len)?;
+            if body.len() % 16 != 0 {
+                return Err(FftError::Protocol(format!(
+                    "request body length {} is not a whole number of complex f64 samples",
+                    body.len()
+                )));
+            }
+            let half = body.len() / 2;
+            Ok(Some(RequestFrame::Fft(Request {
+                id: h.id,
+                op,
+                strategy,
+                dtype,
+                re: get_f64s(&body[..half]),
+                im: get_f64s(&body[half..]),
+            })))
+        }
     }
-    let half = body.len() / 2;
-    Ok(Some(Request {
-        id: h.id,
-        op,
-        strategy,
-        dtype,
-        re: get_f64s(&body[..half]),
-        im: get_f64s(&body[half..]),
-    }))
+}
+
+/// Read one ONE-SHOT request frame; `Ok(None)` on clean EOF.  A
+/// streaming-plane frame on this path is a typed protocol error (use
+/// [`read_request_frame`] where streams are served).
+pub fn read_request<R: Read>(r: &mut R) -> FftResult<Option<Request>> {
+    match read_request_frame(r)? {
+        None => Ok(None),
+        Some(RequestFrame::Fft(req)) => Ok(Some(req)),
+        Some(_) => Err(FftError::Protocol(
+            "stream frame on the one-shot request path".into(),
+        )),
+    }
 }
 
 /// Read one response frame; `Ok(None)` on clean EOF.
@@ -535,6 +859,39 @@ pub fn read_response<R: Read>(r: &mut R) -> FftResult<Option<Response>> {
                 .map_err(|_| FftError::Protocol("error message is not UTF-8".into()))?;
             Ok(Some(Response::Error { id: h.id, dtype, message }))
         }
+        STATUS_STREAM => {
+            let dtype = dtype_from(h.dtype)?;
+            if body.len() < 40 || (body.len() - 40) % 8 != 0 {
+                return Err(FftError::Protocol(format!(
+                    "stream-response body length {} is not state + f64 payload",
+                    body.len()
+                )));
+            }
+            let session = u64::from_le_bytes(body[0..8].try_into().unwrap());
+            let passes = u64::from_le_bytes(body[8..16].try_into().unwrap());
+            let fft_len = u64::from_le_bytes(body[16..24].try_into().unwrap());
+            let bound = f64::from_le_bytes(body[24..32].try_into().unwrap());
+            let bound = if bound.is_nan() { None } else { Some(bound) };
+            let n_re = u32::from_le_bytes(body[32..36].try_into().unwrap()) as usize;
+            let n_im = u32::from_le_bytes(body[36..40].try_into().unwrap()) as usize;
+            if n_re.checked_add(n_im).and_then(|n| n.checked_mul(8)) != Some(body.len() - 40) {
+                return Err(FftError::Protocol(format!(
+                    "stream-response plane counts {n_re}+{n_im} disagree with body length {}",
+                    body.len()
+                )));
+            }
+            let re_end = 40 + n_re * 8;
+            Ok(Some(Response::Stream(StreamReply {
+                id: h.id,
+                dtype,
+                session,
+                passes,
+                fft_len,
+                bound,
+                re: get_f64s(&body[40..re_end]),
+                im: get_f64s(&body[re_end..]),
+            })))
+        }
         other => Err(FftError::Protocol(format!(
             "unknown response status {other}"
         ))),
@@ -575,6 +932,9 @@ mod tests {
         assert_eq!(op_code(FftOp::Forward), 0);
         assert_eq!(op_code(FftOp::Inverse), 1);
         assert_eq!(op_code(FftOp::MatchedFilter), 2);
+        assert_eq!(OP_STREAM_OPEN, 3);
+        assert_eq!(OP_STREAM_CHUNK, 4);
+        assert_eq!(OP_STREAM_CLOSE, 5);
         assert_eq!(strategy_code(Strategy::Standard), 0);
         assert_eq!(strategy_code(Strategy::LinzerFeig), 1);
         assert_eq!(strategy_code(Strategy::Cosine), 2);
@@ -583,8 +943,176 @@ mod tests {
         assert_eq!(dtype_code(DType::F32), 1);
         assert_eq!(dtype_code(DType::Bf16), 2);
         assert_eq!(dtype_code(DType::F16), 3);
+        assert_eq!(kind_code(StreamKind::Ols), 0);
+        assert_eq!(kind_code(StreamKind::Stft), 1);
+        assert_eq!(window_code(Window::Rect), 0);
+        assert_eq!(window_code(Window::Hann), 1);
+        assert_eq!(window_code(Window::Hamming), 2);
+        assert_eq!(window_code(Window::Blackman), 3);
+        assert_eq!(STATUS_STREAM, 3);
         assert_eq!(&MAGIC, b"FFTN");
-        assert_eq!(VERSION, 1);
+        // v2: the streaming plane (new op tags, new status, new body
+        // layouts) — v1 peers must get a clean version error.
+        assert_eq!(VERSION, 2);
+    }
+
+    #[test]
+    fn stream_frames_roundtrip() {
+        // Open (OLS, with taps).
+        let spec = StreamSpec::ols(
+            DType::F16,
+            Strategy::DualSelect,
+            vec![1.0, -2.0, 0.5],
+            vec![0.0, 4.0, -1.0],
+        );
+        let bytes = encode_stream_open(9, &spec).unwrap();
+        match read_request_frame(&mut &bytes[..]).unwrap().unwrap() {
+            RequestFrame::StreamOpen { id, spec: got } => {
+                assert_eq!(id, 9);
+                assert_eq!(got, spec);
+            }
+            other => panic!("expected stream-open, got {other:?}"),
+        }
+        // Open (STFT, no taps).
+        let spec = StreamSpec::stft(DType::Bf16, Strategy::LinzerFeig, 256, 64, Window::Hamming);
+        let bytes = encode_stream_open(10, &spec).unwrap();
+        match read_request_frame(&mut &bytes[..]).unwrap().unwrap() {
+            RequestFrame::StreamOpen { spec: got, .. } => assert_eq!(got, spec),
+            other => panic!("expected stream-open, got {other:?}"),
+        }
+        // Chunk.
+        let bytes = encode_stream_chunk_parts(11, 77, &[1.0, 2.0], &[3.0, 4.0]).unwrap();
+        match read_request_frame(&mut &bytes[..]).unwrap().unwrap() {
+            RequestFrame::StreamChunk { id, session, re, im } => {
+                assert_eq!((id, session), (11, 77));
+                assert_eq!(re, vec![1.0, 2.0]);
+                assert_eq!(im, vec![3.0, 4.0]);
+            }
+            other => panic!("expected stream-chunk, got {other:?}"),
+        }
+        // Close.
+        let bytes = encode_stream_close(12, 77).unwrap();
+        match read_request_frame(&mut &bytes[..]).unwrap().unwrap() {
+            RequestFrame::StreamClose { id, session } => assert_eq!((id, session), (12, 77)),
+            other => panic!("expected stream-close, got {other:?}"),
+        }
+        // One-shot frames still decode through the same entry point.
+        let req = Request {
+            id: 13,
+            op: FftOp::Forward,
+            strategy: Strategy::DualSelect,
+            dtype: DType::F32,
+            re: vec![1.0],
+            im: vec![2.0],
+        };
+        let bytes = encode_request(&req).unwrap();
+        match read_request_frame(&mut &bytes[..]).unwrap().unwrap() {
+            RequestFrame::Fft(got) => assert_eq!(got, req),
+            other => panic!("expected fft request, got {other:?}"),
+        }
+        // ... and the one-shot-only reader refuses stream frames.
+        let bytes = encode_stream_close(14, 1).unwrap();
+        assert!(matches!(
+            read_request(&mut &bytes[..]).unwrap_err(),
+            FftError::Protocol(_)
+        ));
+    }
+
+    #[test]
+    fn stream_reply_roundtrips_and_streams_identically() {
+        for (bound, re, im) in [
+            (Some(3.5e-2), vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]),
+            (None, vec![0.25; 8], Vec::new()), // STFT shape: power only
+            (Some(1e-6), Vec::new(), Vec::new()), // open/close shape
+        ] {
+            let reply = StreamReply {
+                id: 21,
+                dtype: DType::F16,
+                session: 5,
+                passes: 120,
+                fft_len: 64,
+                bound,
+                re,
+                im,
+            };
+            let staged = encode_response(&Response::Stream(reply.clone())).unwrap();
+            let mut streamed = Vec::new();
+            write_stream_reply_parts(
+                &mut streamed,
+                reply.id,
+                reply.dtype,
+                reply.session,
+                reply.passes,
+                reply.fft_len,
+                reply.bound,
+                &reply.re,
+                &reply.im,
+            )
+            .unwrap();
+            assert_eq!(streamed, staged);
+            match read_response(&mut &staged[..]).unwrap().unwrap() {
+                Response::Stream(got) => assert_eq!(got, reply),
+                other => panic!("expected stream reply, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_stream_frames_are_typed_errors() {
+        // Stream-open body shorter than its geometry header.
+        let h = encode_header(KIND_REQUEST, OP_STREAM_OPEN, 3, 1, 1, 8);
+        let mut bytes = h.to_vec();
+        bytes.extend_from_slice(&[0u8; 8]);
+        assert!(matches!(
+            read_request_frame(&mut &bytes[..]).unwrap_err(),
+            FftError::Protocol(_)
+        ));
+        // Unknown stream kind / window tags.
+        let spec = StreamSpec::stft(DType::F32, Strategy::DualSelect, 64, 32, Window::Hann);
+        let mut bytes = encode_stream_open(1, &spec).unwrap();
+        bytes[HEADER_LEN] = 9; // kind tag
+        assert!(read_request_frame(&mut &bytes[..]).is_err());
+        let mut bytes = encode_stream_open(1, &spec).unwrap();
+        bytes[HEADER_LEN + 12] = 9; // window tag
+        assert!(read_request_frame(&mut &bytes[..]).is_err());
+        // STFT open with a taps payload is structurally invalid.
+        let mut bad = StreamSpec::ols(DType::F32, Strategy::DualSelect, vec![1.0], vec![0.0]);
+        bad.kind = StreamKind::Stft;
+        assert!(encode_stream_open(1, &bad).is_err());
+        // Ragged chunk refuses to encode.
+        assert!(encode_stream_chunk_parts(1, 1, &[1.0, 2.0], &[3.0]).is_err());
+        // Stream-chunk body not session + whole samples.
+        let h = encode_header(KIND_REQUEST, OP_STREAM_CHUNK, 0, 0, 1, 12);
+        let mut bytes = h.to_vec();
+        bytes.extend_from_slice(&[0u8; 12]);
+        assert!(read_request_frame(&mut &bytes[..]).is_err());
+        // Stream-close body of the wrong size.
+        let h = encode_header(KIND_REQUEST, OP_STREAM_CLOSE, 0, 0, 1, 4);
+        let mut bytes = h.to_vec();
+        bytes.extend_from_slice(&[0u8; 4]);
+        assert!(read_request_frame(&mut &bytes[..]).is_err());
+        // Stream reply whose plane counts disagree with the body.
+        let reply = StreamReply {
+            id: 1,
+            dtype: DType::F32,
+            session: 1,
+            passes: 0,
+            fft_len: 8,
+            bound: None,
+            re: vec![1.0, 2.0],
+            im: Vec::new(),
+        };
+        let mut bytes = encode_response(&Response::Stream(reply)).unwrap();
+        bytes[HEADER_LEN + 32] = 9; // n_re
+        assert!(matches!(
+            read_response(&mut &bytes[..]).unwrap_err(),
+            FftError::Protocol(_)
+        ));
+        // Stream reply body shorter than its fixed state.
+        let h = encode_header(KIND_RESPONSE, STATUS_STREAM, 0, 1, 1, 16);
+        let mut bytes = h.to_vec();
+        bytes.extend_from_slice(&[0u8; 16]);
+        assert!(read_response(&mut &bytes[..]).is_err());
     }
 
     #[test]

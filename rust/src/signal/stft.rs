@@ -31,15 +31,25 @@ impl Spectrogram {
         self.power[col * self.frame + bin]
     }
 
-    /// Bin with maximum power in a column.
+    /// Bin with maximum power in a column (see [`peak_bin`] for the
+    /// NaN semantics).
     pub fn peak_bin(&self, col: usize) -> usize {
-        let row = &self.power[col * self.frame..(col + 1) * self.frame];
-        row.iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap()
+        peak_bin(&self.power[col * self.frame..(col + 1) * self.frame])
     }
+}
+
+/// Bin with maximum power in one spectrum column, NaN-safe: ordering
+/// is IEEE `total_cmp`, so a NaN power (possible when a low-precision
+/// transform overflows) deterministically wins — NaN sorts above +inf
+/// in the total order — instead of panicking the way
+/// `partial_cmp(..).unwrap()` used to.  Returns 0 for an empty slice.
+pub fn peak_bin(power: &[f64]) -> usize {
+    power
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
 }
 
 /// Compute the spectrogram of a complex signal.
@@ -121,6 +131,19 @@ mod tests {
         let sg = stft(&planner, &cfg(256, 128), &re, &im).unwrap();
         assert_eq!(sg.cols, (1024 - 256) / 128 + 1);
         assert_eq!(sg.power.len(), sg.cols * 256);
+    }
+
+    #[test]
+    fn peak_bin_survives_nan_power() {
+        // Regression: a NaN power cell used to panic peak_bin via
+        // partial_cmp().unwrap(); under total_cmp it wins the max
+        // deterministically (NaN > +inf in the IEEE total order).
+        let mut sg = Spectrogram { frame: 4, cols: 2, power: vec![0.0; 8] };
+        sg.power[1] = 7.0;
+        assert_eq!(sg.peak_bin(0), 1);
+        sg.power[6] = f64::NAN;
+        assert_eq!(sg.peak_bin(1), 2); // no panic; NaN bin reported
+        assert_eq!(sg.peak_bin(0), 1); // clean columns unaffected
     }
 
     #[test]

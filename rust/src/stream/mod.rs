@@ -1,0 +1,44 @@
+//! The streaming DSP plane: stateful sessions over continuous
+//! signals, where the paper's bounded-ratio claim matters most —
+//! per-pass rounding error compounds across thousands of chunks, and
+//! dual-select's `|t| ≤ 1` keeps the cumulative eq. (11) bound usable
+//! in half precision while clamped Linzer–Feig's stored 1e7 entry
+//! blows it up.
+//!
+//! Three layers, each usable on its own:
+//!
+//! * [`OlsFilter`] — a stateful **overlap-save** engine convolving an
+//!   unbounded chunked signal against fixed FIR taps through the
+//!   existing [`crate::fft::Transform`]/[`crate::fft::Scratch`]
+//!   machinery.  FFT block size auto-chosen from the tap count,
+//!   history carried across chunks, and output **bit-identical** (per
+//!   dtype) to running the whole signal through in one call — chunk
+//!   boundaries are unobservable.
+//! * [`StftStream`] — **streaming STFT** sessions emitting spectrogram
+//!   columns incrementally with hop-carryover, in any [`crate::fft::DType`]
+//!   via [`crate::fft::AnyTransform`]; columns are bit-identical to
+//!   the offline [`crate::signal::stft::stft`].
+//! * [`SessionRegistry`] — the **session layer**: per-session id,
+//!   dtype, strategy, accumulated pass count and a *running a-priori
+//!   error bound* that grows with passes
+//!   ([`crate::analysis::bounds::serving_bound_from_tmax`]), so every
+//!   streamed chunk's response carries an honest cumulative bound.
+//!   Typed backpressure ([`crate::fft::FftError::Rejected`]) at the
+//!   registry cap and per session.
+//!
+//! The network plane ([`crate::net`]) exposes the registry over TCP as
+//! the `STREAM_OPEN` / `STREAM_CHUNK` / `STREAM_CLOSE` ops of protocol
+//! version 2 (see `PROTOCOL.md`), and
+//! [`crate::net::FftClient::open_stream`] is the pipelined remote
+//! spelling of this module.
+
+pub mod ols;
+pub mod session;
+pub mod stft;
+
+pub use ols::{filter_offline, filter_offline_any, OlsFilter};
+pub use session::{
+    SessionRegistry, StreamConfig, StreamKind, StreamOut, StreamSession, StreamSpec,
+    MAX_STREAM_OUT_F64S,
+};
+pub use stft::{peak_bin, StftStream, StftStreamConfig};

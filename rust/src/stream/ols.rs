@@ -1,0 +1,493 @@
+//! Overlap-save streaming convolution: [`OlsFilter`] convolves an
+//! unbounded chunked signal against a fixed FIR impulse response
+//! (matched filter, channel model, pulse shaper) using the existing
+//! [`Transform`] / [`Scratch`] machinery.
+//!
+//! The engine is the textbook overlap-save organization, made
+//! *chunk-invariant* by construction:
+//!
+//! ```text
+//!   push(chunk) ──► round once into T, append to the carry buffer
+//!                        │
+//!         while carry holds a full FFT block (N samples):
+//!                        │
+//!     [ history L-1 | fresh V ]──FFT──·H──IFFT──► emit the last V
+//!                        │                        (linear-conv samples)
+//!         drop V samples; the block's last L-1 stay as history
+//! ```
+//!
+//! Blocks are always formed from the same absolute sample positions no
+//! matter how the input was chunked, and every block computation is a
+//! pure function of its (already-rounded) samples — so feeding a
+//! signal in ragged chunks (including 1-sample chunks) produces output
+//! **bit-identical** to feeding it in one call, in every dtype.  That
+//! invariant is what the streaming plane's "bit-identical to the
+//! offline path" guarantee rests on, and `tests/stream_dsp.rs` is the
+//! property suite for it.
+//!
+//! The FFT size is auto-chosen from the tap count (`~4·L`, clamped to
+//! a small minimum) so the per-sample cost is `O(log L)`; history
+//! (the last `L-1` input samples) carries across chunks.  Each block
+//! costs one forward and one inverse transform, and the filter tracks
+//! the **cumulative butterfly pass count** so the session layer can
+//! attach the paper's eq. (11) a-priori bound, grown honestly with
+//! every pass the stream has executed (see
+//! [`crate::analysis::bounds::serving_bound_from_tmax`]).
+
+use std::sync::Arc;
+
+use crate::analysis::bounds::serving_bound_from_tmax;
+use crate::analysis::ratio::ratio_stats;
+use crate::fft::api::{Planner, Scratch, Transform};
+use crate::fft::convolve::pointwise_mul_in;
+use crate::fft::{FftError, FftResult, Strategy};
+use crate::precision::{Real, SplitBuf};
+
+/// Smallest FFT block the auto-sizer will pick.
+const MIN_FFT: usize = 8;
+
+/// Stateful overlap-save FIR filter over working precision `T`.
+#[derive(Debug)]
+pub struct OlsFilter<T: Real> {
+    /// FFT block size `N` (power of two, `> taps`).
+    fft_n: usize,
+    /// Tap count `L`.
+    taps: usize,
+    /// Valid (non-aliased) outputs per block: `V = N - L + 1`.
+    valid: usize,
+    strategy: Strategy,
+    fwd: Arc<dyn Transform<T>>,
+    inv: Arc<dyn Transform<T>>,
+    /// `H = FFT(h zero-padded to N)`, precomputed once in `T`.
+    freq: SplitBuf<T>,
+    /// History (last `L-1` consumed samples, zeros initially) followed
+    /// by input not yet forming a full block — working precision.
+    carry: SplitBuf<T>,
+    scratch: Scratch<T>,
+    /// Input samples consumed so far.
+    consumed: u64,
+    /// FFT blocks processed so far.
+    blocks: u64,
+    /// `|t|max` of the stored twiddle table at `fft_n` (`None` for the
+    /// standard butterfly — no ratio bound applies).
+    tmax: Option<f64>,
+    finished: bool,
+}
+
+impl<T: Real> OlsFilter<T> {
+    /// Build a filter for `taps_re/taps_im` with the FFT block size
+    /// auto-chosen from the tap count.
+    pub fn new(
+        planner: &Planner<T>,
+        strategy: Strategy,
+        taps_re: &[f64],
+        taps_im: &[f64],
+    ) -> FftResult<Self> {
+        let fft_n = (4 * taps_re.len().max(1)).next_power_of_two().max(MIN_FFT);
+        Self::with_fft_len(planner, strategy, taps_re, taps_im, fft_n)
+    }
+
+    /// [`OlsFilter::new`] with an explicit FFT block size (power of
+    /// two, strictly greater than the tap count) — lets tests pin
+    /// block boundaries.
+    pub fn with_fft_len(
+        planner: &Planner<T>,
+        strategy: Strategy,
+        taps_re: &[f64],
+        taps_im: &[f64],
+        fft_n: usize,
+    ) -> FftResult<Self> {
+        let taps = taps_re.len();
+        if taps == 0 {
+            return Err(FftError::InvalidArgument(
+                "overlap-save filter needs at least one tap".into(),
+            ));
+        }
+        if taps_im.len() != taps {
+            return Err(FftError::LengthMismatch { expected: taps, got: taps_im.len() });
+        }
+        crate::fft::log2_exact(fft_n)?;
+        if fft_n < taps + 1 {
+            return Err(FftError::InvalidSize {
+                n: fft_n,
+                reason: "overlap-save FFT block must exceed the tap count",
+            });
+        }
+        let fwd = planner.plan(fft_n, strategy, crate::fft::Direction::Forward)?;
+        let inv = planner.plan(fft_n, strategy, crate::fft::Direction::Inverse)?;
+
+        // H = FFT(h · zero-pad), rounded ONCE into T (same ingest
+        // policy as the twiddle tables and the serving arenas).
+        let mut padded_re = taps_re.to_vec();
+        let mut padded_im = taps_im.to_vec();
+        padded_re.resize(fft_n, 0.0);
+        padded_im.resize(fft_n, 0.0);
+        let mut freq = SplitBuf::<T>::from_f64(&padded_re, &padded_im);
+        let mut scratch = Scratch::new();
+        fwd.execute_frame(&mut freq.re, &mut freq.im, &mut scratch);
+
+        // History starts as L-1 zeros: block 0 then covers
+        // x[-(L-1) .. V) and its valid outputs are y[0 .. V).
+        let carry = SplitBuf::<T>::zeroed(taps - 1);
+
+        let tmax = if strategy == Strategy::Standard {
+            None
+        } else {
+            Some(ratio_stats(fft_n, strategy).max_clamped)
+        };
+
+        Ok(OlsFilter {
+            fft_n,
+            taps,
+            valid: fft_n - taps + 1,
+            strategy,
+            fwd,
+            inv,
+            freq,
+            carry,
+            scratch,
+            consumed: 0,
+            blocks: 0,
+            tmax,
+            finished: false,
+        })
+    }
+
+    /// FFT block size `N`.
+    pub fn fft_len(&self) -> usize {
+        self.fft_n
+    }
+
+    /// Tap count `L`.
+    pub fn taps(&self) -> usize {
+        self.taps
+    }
+
+    /// Valid output samples per block (`N - L + 1`).
+    pub fn valid_per_block(&self) -> usize {
+        self.valid
+    }
+
+    pub fn strategy(&self) -> Strategy {
+        self.strategy
+    }
+
+    /// Input samples consumed so far.
+    pub fn consumed(&self) -> u64 {
+        self.consumed
+    }
+
+    /// FFT blocks processed so far.
+    pub fn blocks(&self) -> u64 {
+        self.blocks
+    }
+
+    /// Total butterfly passes executed so far: `log2 N` for the tap
+    /// spectrum plus `2·log2 N` (forward + inverse) per block — the
+    /// `m` of the cumulative a-priori bound.
+    pub fn fft_passes(&self) -> u64 {
+        let m = self.fft_n.trailing_zeros() as u64;
+        m * (1 + 2 * self.blocks)
+    }
+
+    /// The running a-priori cumulative error bound — the paper's
+    /// eq. (11) with the 6-FMA op count folded in
+    /// ([`serving_bound_from_tmax`]), evaluated at this filter's
+    /// *total executed pass count*, so it grows monotonically as the
+    /// stream runs.  `None` for the standard butterfly.
+    pub fn bound(&self) -> Option<f64> {
+        self.tmax.map(|tmax| {
+            let m = self.fft_passes().min(u32::MAX as u64) as u32;
+            serving_bound_from_tmax(tmax, T::EPSILON, m)
+        })
+    }
+
+    /// Worst-case output samples the next `chunk_len`-sample push can
+    /// emit (used by the session layer to pre-check reply size caps).
+    pub fn worst_case_out(&self, chunk_len: usize) -> usize {
+        // Everything pending plus the new chunk could complete blocks.
+        self.carry.len() + chunk_len
+    }
+
+    /// Feed one chunk; completed valid output samples are appended to
+    /// `out_re`/`out_im` widened exactly to f64.  Returns the number
+    /// of complex samples emitted (possibly 0 — short chunks buffer).
+    pub fn push(
+        &mut self,
+        re: &[f64],
+        im: &[f64],
+        out_re: &mut Vec<f64>,
+        out_im: &mut Vec<f64>,
+    ) -> FftResult<usize> {
+        if self.finished {
+            return Err(FftError::ChannelClosed("overlap-save filter already finished"));
+        }
+        if re.len() != im.len() {
+            return Err(FftError::LengthMismatch { expected: re.len(), got: im.len() });
+        }
+        // Round once into working precision, per sample — independent
+        // of how the signal was chunked.
+        self.carry.re.extend(re.iter().map(|&x| T::from_f64(x)));
+        self.carry.im.extend(im.iter().map(|&x| T::from_f64(x)));
+        self.consumed += re.len() as u64;
+        Ok(self.run_blocks(usize::MAX, out_re, out_im))
+    }
+
+    /// Flush the tail: zero-pad the pending input and emit the
+    /// remaining linear-convolution outputs (total output length is
+    /// `consumed + taps - 1`, or 0 for an empty stream).  The filter
+    /// rejects further pushes afterwards.
+    pub fn finish(&mut self, out_re: &mut Vec<f64>, out_im: &mut Vec<f64>) -> FftResult<usize> {
+        if self.finished {
+            return Err(FftError::ChannelClosed("overlap-save filter already finished"));
+        }
+        self.finished = true;
+        if self.consumed == 0 {
+            return Ok(0);
+        }
+        let total = self.consumed + self.taps as u64 - 1;
+        let mut remaining = (total - self.blocks * self.valid as u64) as usize;
+        let mut emitted = 0usize;
+        while remaining > 0 {
+            // Pad to a full block of zeros past the real input; only
+            // the first `remaining` of the block's valid outputs are
+            // genuine tail samples.
+            self.carry.re.resize(self.fft_n, T::zero());
+            self.carry.im.resize(self.fft_n, T::zero());
+            let want = remaining.min(self.valid);
+            let got = self.run_blocks(want, out_re, out_im);
+            debug_assert_eq!(got, want);
+            remaining -= got;
+            emitted += got;
+        }
+        Ok(emitted)
+    }
+
+    /// Process as many full blocks as the carry buffer holds, emitting
+    /// at most `limit` samples from the final block (tail trimming).
+    /// Returns samples emitted.
+    fn run_blocks(
+        &mut self,
+        mut limit: usize,
+        out_re: &mut Vec<f64>,
+        out_im: &mut Vec<f64>,
+    ) -> usize {
+        let mut emitted = 0usize;
+        while self.carry.len() >= self.fft_n && limit > 0 {
+            let mut work = self.scratch.take(self.fft_n);
+            work.re.copy_from_slice(&self.carry.re[..self.fft_n]);
+            work.im.copy_from_slice(&self.carry.im[..self.fft_n]);
+            self.fwd
+                .execute_frame(&mut work.re, &mut work.im, &mut self.scratch);
+            pointwise_mul_in(&mut work.re, &mut work.im, &self.freq.re, &self.freq.im);
+            self.inv
+                .execute_frame(&mut work.re, &mut work.im, &mut self.scratch);
+            // The last V outputs of the circular convolution are the
+            // linear-convolution samples; the first L-1 are aliased.
+            let take = self.valid.min(limit);
+            for i in 0..take {
+                out_re.push(work.re[self.taps - 1 + i].to_f64());
+                out_im.push(work.im[self.taps - 1 + i].to_f64());
+            }
+            self.scratch.put(work);
+            self.carry.re.drain(..self.valid);
+            self.carry.im.drain(..self.valid);
+            self.blocks += 1;
+            emitted += take;
+            limit -= take;
+        }
+        emitted
+    }
+}
+
+/// Run `sig` through a fresh overlap-save filter in ONE push + finish
+/// — the offline reference the streaming equivalence tests (and the
+/// network plane's acceptance demo) compare against, bit for bit.
+pub fn filter_offline<T: Real>(
+    planner: &Planner<T>,
+    strategy: Strategy,
+    taps_re: &[f64],
+    taps_im: &[f64],
+    sig_re: &[f64],
+    sig_im: &[f64],
+) -> FftResult<(Vec<f64>, Vec<f64>)> {
+    let mut f = OlsFilter::<T>::new(planner, strategy, taps_re, taps_im)?;
+    let mut out_re = Vec::new();
+    let mut out_im = Vec::new();
+    f.push(sig_re, sig_im, &mut out_re, &mut out_im)?;
+    f.finish(&mut out_re, &mut out_im)?;
+    Ok((out_re, out_im))
+}
+
+/// [`filter_offline`] with the working precision chosen at run time —
+/// the one dtype dispatch the CLI, examples and tests share.
+pub fn filter_offline_any(
+    dtype: crate::fft::DType,
+    strategy: Strategy,
+    taps_re: &[f64],
+    taps_im: &[f64],
+    sig_re: &[f64],
+    sig_im: &[f64],
+) -> FftResult<(Vec<f64>, Vec<f64>)> {
+    use crate::fft::DType;
+    use crate::precision::{Bf16, F16};
+    match dtype {
+        DType::F64 => {
+            filter_offline::<f64>(&Planner::new(), strategy, taps_re, taps_im, sig_re, sig_im)
+        }
+        DType::F32 => {
+            filter_offline::<f32>(&Planner::new(), strategy, taps_re, taps_im, sig_re, sig_im)
+        }
+        DType::Bf16 => {
+            filter_offline::<Bf16>(&Planner::new(), strategy, taps_re, taps_im, sig_re, sig_im)
+        }
+        DType::F16 => {
+            filter_offline::<F16>(&Planner::new(), strategy, taps_re, taps_im, sig_re, sig_im)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::convolve::linear_convolve;
+    use crate::util::metrics::rel_l2;
+    use crate::util::prng::Pcg32;
+
+    fn noise(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = Pcg32::seed(seed);
+        (
+            (0..n).map(|_| rng.gaussian()).collect(),
+            (0..n).map(|_| rng.gaussian()).collect(),
+        )
+    }
+
+    #[test]
+    fn matches_linear_convolution_f64() {
+        let planner = Planner::<f64>::new();
+        let (hr, hi) = noise(17, 1);
+        let (xr, xi) = noise(300, 2);
+        let (gr, gi) =
+            filter_offline(&planner, Strategy::DualSelect, &hr, &hi, &xr, &xi).unwrap();
+        assert_eq!(gr.len(), 300 + 17 - 1);
+        let want = linear_convolve(
+            &planner,
+            Strategy::DualSelect,
+            &SplitBuf::from_f64(&xr, &xi),
+            &SplitBuf::from_f64(&hr, &hi),
+        )
+        .unwrap();
+        let (wr, wi) = want.to_f64();
+        assert!(rel_l2(&gr, &gi, &wr, &wi) < 1e-12);
+    }
+
+    #[test]
+    fn chunking_is_bit_invariant() {
+        let planner = Planner::<f32>::new();
+        let (hr, hi) = noise(9, 3);
+        let (xr, xi) = noise(257, 4);
+        let (whole_re, whole_im) =
+            filter_offline(&planner, Strategy::DualSelect, &hr, &hi, &xr, &xi).unwrap();
+        // Ragged chunks, including 1-sample chunks.
+        let mut f = OlsFilter::<f32>::new(&planner, Strategy::DualSelect, &hr, &hi).unwrap();
+        let mut got_re = Vec::new();
+        let mut got_im = Vec::new();
+        let mut rng = Pcg32::seed(5);
+        let mut off = 0usize;
+        while off < xr.len() {
+            let len = (1 + rng.below(40)).min(xr.len() - off);
+            f.push(&xr[off..off + len], &xi[off..off + len], &mut got_re, &mut got_im)
+                .unwrap();
+            off += len;
+        }
+        f.finish(&mut got_re, &mut got_im).unwrap();
+        assert_eq!(got_re, whole_re, "re plane differs bitwise");
+        assert_eq!(got_im, whole_im, "im plane differs bitwise");
+    }
+
+    #[test]
+    fn pass_count_and_bound_grow_with_blocks() {
+        let planner = Planner::<crate::precision::F16>::new();
+        let (hr, hi) = noise(8, 6);
+        let mut f = OlsFilter::<crate::precision::F16>::new(
+            &planner,
+            Strategy::DualSelect,
+            &hr,
+            &hi,
+        )
+        .unwrap();
+        let p0 = f.fft_passes();
+        let b0 = f.bound().unwrap();
+        let (xr, xi) = noise(4 * f.fft_len(), 7);
+        let mut o_re = Vec::new();
+        let mut o_im = Vec::new();
+        f.push(&xr, &xi, &mut o_re, &mut o_im).unwrap();
+        assert!(f.blocks() >= 3);
+        assert!(f.fft_passes() > p0);
+        assert!(f.bound().unwrap() > b0, "bound must grow with passes");
+        // Standard butterfly: no ratio table, no bound.
+        let std_f =
+            OlsFilter::<f64>::new(&Planner::new(), Strategy::Standard, &hr, &hi).unwrap();
+        assert_eq!(std_f.bound(), None);
+    }
+
+    #[test]
+    fn finish_emits_exact_tail_and_closes() {
+        let planner = Planner::<f64>::new();
+        let (hr, hi) = noise(5, 8);
+        let mut f = OlsFilter::<f64>::new(&planner, Strategy::DualSelect, &hr, &hi).unwrap();
+        let (xr, xi) = noise(3, 9); // shorter than one block
+        let mut o_re = Vec::new();
+        let mut o_im = Vec::new();
+        assert_eq!(f.push(&xr, &xi, &mut o_re, &mut o_im).unwrap(), 0);
+        f.finish(&mut o_re, &mut o_im).unwrap();
+        assert_eq!(o_re.len(), 3 + 5 - 1);
+        assert!(f.push(&xr, &xi, &mut o_re, &mut o_im).is_err());
+        // Empty stream: finishing emits nothing.
+        let mut empty =
+            OlsFilter::<f64>::new(&planner, Strategy::DualSelect, &hr, &hi).unwrap();
+        let mut e_re = Vec::new();
+        let mut e_im = Vec::new();
+        assert_eq!(empty.finish(&mut e_re, &mut e_im).unwrap(), 0);
+    }
+
+    #[test]
+    fn constructor_validates() {
+        let planner = Planner::<f32>::new();
+        assert!(OlsFilter::<f32>::new(&planner, Strategy::DualSelect, &[], &[]).is_err());
+        assert!(
+            OlsFilter::<f32>::new(&planner, Strategy::DualSelect, &[1.0, 2.0], &[0.0]).is_err()
+        );
+        // Explicit block size must be pow2 and > taps.
+        assert!(OlsFilter::<f32>::with_fft_len(
+            &planner,
+            Strategy::DualSelect,
+            &[1.0; 8],
+            &[0.0; 8],
+            8
+        )
+        .is_err());
+        assert!(OlsFilter::<f32>::with_fft_len(
+            &planner,
+            Strategy::DualSelect,
+            &[1.0; 8],
+            &[0.0; 8],
+            12
+        )
+        .is_err());
+        let f = OlsFilter::<f32>::new(&planner, Strategy::DualSelect, &[1.0; 8], &[0.0; 8])
+            .unwrap();
+        assert_eq!(f.fft_len(), 32);
+        assert_eq!(f.valid_per_block(), 32 - 8 + 1);
+    }
+
+    #[test]
+    fn impulse_taps_are_identity() {
+        let planner = Planner::<f64>::new();
+        let (xr, xi) = noise(100, 10);
+        let (gr, gi) =
+            filter_offline(&planner, Strategy::DualSelect, &[1.0], &[0.0], &xr, &xi).unwrap();
+        assert_eq!(gr.len(), 100);
+        assert!(rel_l2(&gr, &gi, &xr, &xi) < 1e-13);
+    }
+}

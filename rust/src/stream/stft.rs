@@ -1,0 +1,368 @@
+//! Streaming short-time Fourier transform: [`StftStream`] emits
+//! spectrogram columns incrementally as samples arrive, with
+//! hop-carryover across chunk boundaries, in any working [`DType`]
+//! (via the dtype-erased [`AnyTransform`]).
+//!
+//! Column `c` is computed from samples `[c·hop, c·hop + frame)` of the
+//! logical signal — exactly the columns the offline
+//! [`crate::signal::stft::stft`] computes, with the identical
+//! arithmetic (window applied in f64, one rounding into the working
+//! precision, the same monomorphized kernel), so the streamed columns
+//! are **bit-identical** to the offline spectrogram no matter how the
+//! input is chunked (`tests/stream_dsp.rs` asserts this for every
+//! dtype).
+//!
+//! Like [`super::OlsFilter`], the stream tracks its cumulative
+//! butterfly pass count (`cols · log2 frame`) so the session layer can
+//! attach the eq. (11) a-priori bound that grows with every pass.
+
+use crate::analysis::bounds::serving_bound_from_tmax;
+use crate::analysis::ratio::ratio_stats;
+use crate::fft::api::{AnyArena, AnyScratch, AnyTransform, DType, PlanSpec};
+use crate::fft::{FftError, FftResult, Strategy};
+use crate::signal::window::Window;
+
+/// Streaming STFT configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct StftStreamConfig {
+    /// FFT size per column (power of two).
+    pub frame: usize,
+    /// Hop between consecutive columns (>= 1; may exceed `frame`).
+    pub hop: usize,
+    pub window: Window,
+    pub strategy: Strategy,
+    /// Working precision the columns are computed in.
+    pub dtype: DType,
+}
+
+impl StftStreamConfig {
+    /// Hann window, dual-select, hop = frame/2 — the spectrogram
+    /// default.
+    pub fn new(frame: usize, dtype: DType) -> Self {
+        StftStreamConfig {
+            frame,
+            hop: (frame / 2).max(1),
+            window: Window::Hann,
+            strategy: Strategy::DualSelect,
+            dtype,
+        }
+    }
+}
+
+/// A stateful streaming STFT session.
+#[derive(Debug)]
+pub struct StftStream {
+    cfg: StftStreamConfig,
+    /// Window samples (f64; rounded into working precision per frame,
+    /// after the product — same policy as the offline STFT).
+    win: Vec<f64>,
+    transform: AnyTransform,
+    arena: AnyArena,
+    scratch: AnyScratch,
+    /// Raw samples not yet consumed by a column (f64 — rounding into
+    /// the working dtype happens once, after windowing).
+    pend_re: Vec<f64>,
+    pend_im: Vec<f64>,
+    /// Windowed-frame staging (reused; no per-column allocation).
+    wre: Vec<f64>,
+    wim: Vec<f64>,
+    /// Samples still to drop before the next column (hop > frame
+    /// carryover).
+    debt: usize,
+    cols: u64,
+    /// `|t|max` of the stored table at `frame` (`None` for standard).
+    tmax: Option<f64>,
+}
+
+impl StftStream {
+    pub fn new(cfg: StftStreamConfig) -> FftResult<StftStream> {
+        crate::fft::log2_exact(cfg.frame)?;
+        if cfg.hop == 0 {
+            return Err(FftError::InvalidArgument("hop must be positive".into()));
+        }
+        let transform = PlanSpec::new(cfg.frame)
+            .strategy(cfg.strategy)
+            .dtype(cfg.dtype)
+            .build_any()?;
+        let tmax = if cfg.strategy == Strategy::Standard {
+            None
+        } else {
+            Some(ratio_stats(cfg.frame, cfg.strategy).max_clamped)
+        };
+        Ok(StftStream {
+            win: cfg.window.sample(cfg.frame),
+            transform,
+            arena: AnyArena::new(cfg.dtype, cfg.frame),
+            scratch: AnyScratch::new(),
+            pend_re: Vec::new(),
+            pend_im: Vec::new(),
+            wre: vec![0.0; cfg.frame],
+            wim: vec![0.0; cfg.frame],
+            debt: 0,
+            cols: 0,
+            cfg,
+            tmax,
+        })
+    }
+
+    pub fn frame_len(&self) -> usize {
+        self.cfg.frame
+    }
+
+    pub fn hop(&self) -> usize {
+        self.cfg.hop
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.cfg.dtype
+    }
+
+    pub fn strategy(&self) -> Strategy {
+        self.cfg.strategy
+    }
+
+    /// Columns emitted so far.
+    pub fn cols(&self) -> u64 {
+        self.cols
+    }
+
+    /// Total butterfly passes executed (`cols · log2 frame`).
+    pub fn fft_passes(&self) -> u64 {
+        self.cols * self.cfg.frame.trailing_zeros() as u64
+    }
+
+    /// The running a-priori cumulative error bound (eq. (11) with the
+    /// 6-FMA op count, grown with every executed pass); `None` for the
+    /// standard butterfly.
+    pub fn bound(&self) -> Option<f64> {
+        self.tmax.map(|tmax| {
+            let m = self.fft_passes().min(u32::MAX as u64) as u32;
+            serving_bound_from_tmax(tmax, self.cfg.dtype.epsilon(), m)
+        })
+    }
+
+    /// Worst-case power values the next `chunk_len`-sample push can
+    /// emit (session-layer reply-size pre-check).
+    pub fn worst_case_out(&self, chunk_len: usize) -> usize {
+        let avail = self.pend_re.len() + chunk_len;
+        if avail < self.cfg.frame {
+            return 0;
+        }
+        (1 + (avail - self.cfg.frame) / self.cfg.hop) * self.cfg.frame
+    }
+
+    /// Feed one chunk of complex samples; every completed column's
+    /// `frame` power values (`|X|²`, f64, bin-major) are appended to
+    /// `out_power`.  Returns the number of columns emitted.
+    pub fn push(
+        &mut self,
+        re: &[f64],
+        im: &[f64],
+        out_power: &mut Vec<f64>,
+    ) -> FftResult<usize> {
+        if re.len() != im.len() {
+            return Err(FftError::LengthMismatch { expected: re.len(), got: im.len() });
+        }
+        self.pend_re.extend_from_slice(re);
+        self.pend_im.extend_from_slice(im);
+        let mut emitted = 0usize;
+        loop {
+            if self.debt > 0 {
+                let d = self.debt.min(self.pend_re.len());
+                self.pend_re.drain(..d);
+                self.pend_im.drain(..d);
+                self.debt -= d;
+                if self.debt > 0 {
+                    break; // hop > frame and the carry ran dry
+                }
+            }
+            if self.pend_re.len() < self.cfg.frame {
+                break;
+            }
+            // Window in f64, round ONCE into the working precision at
+            // arena ingest — the offline STFT's exact arithmetic.
+            for i in 0..self.cfg.frame {
+                self.wre[i] = self.pend_re[i] * self.win[i];
+                self.wim[i] = self.pend_im[i] * self.win[i];
+            }
+            self.arena.reset(self.cfg.frame);
+            self.arena.push_frame_f64(&self.wre, &self.wim);
+            self.transform
+                .execute_frame_any(&mut self.arena, 0, &mut self.scratch)?;
+            let (gr, gi) = self.arena.frame_f64(0);
+            out_power.extend(gr.iter().zip(&gi).map(|(&r, &i)| r * r + i * i));
+            self.cols += 1;
+            emitted += 1;
+            self.debt = self.cfg.hop;
+        }
+        Ok(emitted)
+    }
+}
+
+pub use crate::signal::stft::peak_bin;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::Planner;
+    use crate::signal::stft::{stft, StftConfig};
+    use crate::util::prng::Pcg32;
+
+    fn tone(n: usize, f: f64) -> (Vec<f64>, Vec<f64>) {
+        let tau = 2.0 * core::f64::consts::PI;
+        (
+            (0..n).map(|t| (tau * f * t as f64).cos()).collect(),
+            (0..n).map(|t| (tau * f * t as f64).sin()).collect(),
+        )
+    }
+
+    #[test]
+    fn streamed_columns_match_offline_stft_bitwise() {
+        for dtype in DType::ALL {
+            let (re, im) = tone(1500, 10.0 / 128.0);
+            let cfg = StftStreamConfig {
+                frame: 128,
+                hop: 48,
+                window: Window::Hann,
+                strategy: Strategy::DualSelect,
+                dtype,
+            };
+            let mut s = StftStream::new(cfg).unwrap();
+            let mut power = Vec::new();
+            let mut rng = Pcg32::seed(11);
+            let mut off = 0usize;
+            while off < re.len() {
+                let len = (1 + rng.below(97)).min(re.len() - off);
+                s.push(&re[off..off + len], &im[off..off + len], &mut power)
+                    .unwrap();
+                off += len;
+            }
+            // Offline reference per dtype.
+            let offline = match dtype {
+                DType::F64 => stft(
+                    &Planner::<f64>::new(),
+                    &StftConfig {
+                        frame: 128,
+                        hop: 48,
+                        window: Window::Hann,
+                        strategy: Strategy::DualSelect,
+                    },
+                    &re,
+                    &im,
+                )
+                .unwrap(),
+                DType::F32 => stft(
+                    &Planner::<f32>::new(),
+                    &StftConfig {
+                        frame: 128,
+                        hop: 48,
+                        window: Window::Hann,
+                        strategy: Strategy::DualSelect,
+                    },
+                    &re,
+                    &im,
+                )
+                .unwrap(),
+                DType::Bf16 => stft(
+                    &Planner::<crate::precision::Bf16>::new(),
+                    &StftConfig {
+                        frame: 128,
+                        hop: 48,
+                        window: Window::Hann,
+                        strategy: Strategy::DualSelect,
+                    },
+                    &re,
+                    &im,
+                )
+                .unwrap(),
+                DType::F16 => stft(
+                    &Planner::<crate::precision::F16>::new(),
+                    &StftConfig {
+                        frame: 128,
+                        hop: 48,
+                        window: Window::Hann,
+                        strategy: Strategy::DualSelect,
+                    },
+                    &re,
+                    &im,
+                )
+                .unwrap(),
+            };
+            assert_eq!(s.cols() as usize, offline.cols, "{dtype}");
+            assert_eq!(power, offline.power, "{dtype}: columns differ bitwise");
+        }
+    }
+
+    #[test]
+    fn hop_larger_than_frame_skips_samples() {
+        let (re, im) = tone(1000, 0.1);
+        let cfg = StftStreamConfig {
+            frame: 64,
+            hop: 100,
+            window: Window::Rect,
+            strategy: Strategy::DualSelect,
+            dtype: DType::F64,
+        };
+        let mut s = StftStream::new(cfg).unwrap();
+        let mut power = Vec::new();
+        for chunk in re.chunks(7).zip(im.chunks(7)) {
+            s.push(chunk.0, chunk.1, &mut power).unwrap();
+        }
+        let offline = stft(
+            &Planner::<f64>::new(),
+            &StftConfig {
+                frame: 64,
+                hop: 100,
+                window: Window::Rect,
+                strategy: Strategy::DualSelect,
+            },
+            &re,
+            &im,
+        )
+        .unwrap();
+        assert_eq!(s.cols() as usize, offline.cols);
+        assert_eq!(power, offline.power);
+    }
+
+    #[test]
+    fn tone_peaks_at_its_bin_and_bound_grows() {
+        let (re, im) = tone(2048, 10.0 / 256.0);
+        let mut s = StftStream::new(StftStreamConfig::new(256, DType::F16)).unwrap();
+        let mut power = Vec::new();
+        s.push(&re, &im, &mut power).unwrap();
+        assert!(s.cols() >= 2);
+        let b1 = s.bound().unwrap();
+        for c in 0..s.cols() as usize {
+            assert_eq!(peak_bin(&power[c * 256..(c + 1) * 256]), 10, "col {c}");
+        }
+        s.push(&re, &im, &mut power).unwrap();
+        assert!(s.bound().unwrap() > b1);
+    }
+
+    #[test]
+    fn peak_bin_is_nan_safe() {
+        assert_eq!(peak_bin(&[1.0, 5.0, 2.0]), 1);
+        assert_eq!(peak_bin(&[1.0, f64::NAN, 2.0]), 1); // NaN > +inf in total order
+        assert_eq!(peak_bin(&[]), 0);
+    }
+
+    #[test]
+    fn config_validates() {
+        assert!(StftStream::new(StftStreamConfig {
+            frame: 100,
+            hop: 10,
+            window: Window::Hann,
+            strategy: Strategy::DualSelect,
+            dtype: DType::F32,
+        })
+        .is_err());
+        assert!(StftStream::new(StftStreamConfig {
+            frame: 64,
+            hop: 0,
+            window: Window::Hann,
+            strategy: Strategy::DualSelect,
+            dtype: DType::F32,
+        })
+        .is_err());
+    }
+}

@@ -1,0 +1,350 @@
+//! End-to-end streaming over the TCP plane: a pipelined client opens
+//! overlap-save and STFT sessions against a real `fftd`, pushes
+//! hundreds of ragged chunks, and every reply must be in order,
+//! bit-identical to the offline engine (all dtypes), and — for
+//! f16/bf16 — within the attached cumulative a-priori bound vs the
+//! f64 reference.  Registry backpressure arrives as typed `BUSY`
+//! without losing session state; per-session gauges land in the
+//! coordinator metrics.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fmafft::coordinator::{Server, ServerConfig};
+use fmafft::fft::{DType, FftError, Planner, Strategy};
+use fmafft::net::{FftClient, FftdServer};
+use fmafft::signal::window::Window;
+use fmafft::stream::{filter_offline, filter_offline_any, peak_bin, StreamConfig, StreamSpec};
+use fmafft::util::metrics::rel_l2;
+use fmafft::util::prng::Pcg32;
+
+fn noise(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Pcg32::seed(seed);
+    (
+        (0..n).map(|_| rng.gaussian()).collect(),
+        (0..n).map(|_| rng.gaussian()).collect(),
+    )
+}
+
+fn ragged_chunks(len: usize, seed: u64) -> Vec<usize> {
+    let mut rng = Pcg32::seed(seed);
+    let mut out = Vec::new();
+    let mut left = len;
+    while left > 0 {
+        let c = (1 + rng.below(29)).min(left);
+        out.push(c);
+        left -= c;
+    }
+    out
+}
+
+fn start_daemon(stream_cfg: StreamConfig) -> (Arc<Server>, FftdServer) {
+    let cfg = ServerConfig::native(256);
+    let server = Server::start(cfg).expect("start coordinator");
+    let fftd = FftdServer::start_with_streams(server.clone(), "127.0.0.1:0", stream_cfg)
+        .expect("start fftd");
+    (server, fftd)
+}
+
+fn connect(fftd: &FftdServer) -> FftClient {
+    let client = FftClient::connect(fftd.local_addr()).expect("connect");
+    client
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .expect("read timeout");
+    client
+}
+
+/// The acceptance run: >= 100 ragged chunks per dtype through a
+/// pipelined TCP overlap-save session; per-chunk results must arrive
+/// in order and concatenate to exactly the offline filter output.
+#[test]
+fn pipelined_ols_sessions_all_dtypes_bit_identical() {
+    let (server, fftd) = start_daemon(StreamConfig::default());
+    let (hr, hi) = noise(11, 200);
+    // >= 100 chunks: 1..=29-sample chunks over 1600 samples averages
+    // ~15/chunk -> ~107 chunks (seeded, deterministic).
+    let (xr, xi) = noise(1600, 201);
+    let chunks = ragged_chunks(xr.len(), 202);
+    assert!(chunks.len() >= 100, "need >=100 chunks, got {}", chunks.len());
+
+    let (wr64, wi64) = filter_offline::<f64>(
+        &Planner::new(),
+        Strategy::DualSelect,
+        &hr,
+        &hi,
+        &xr,
+        &xi,
+    )
+    .unwrap();
+
+    let mut client = connect(&fftd);
+    for dtype in DType::ALL {
+        let mut handle = client
+            .open_stream(&StreamSpec::ols(
+                dtype,
+                Strategy::DualSelect,
+                hr.clone(),
+                hi.clone(),
+            ))
+            .expect("open stream");
+        assert_eq!(handle.dtype(), dtype);
+        assert_eq!(handle.fft_len(), 64);
+
+        // Pipelined submit/recv with a window of 8 chunks in flight;
+        // replies must arrive in submission order.
+        let mut got_re = Vec::new();
+        let mut got_im = Vec::new();
+        let mut submitted = 0usize;
+        let mut received = 0usize;
+        let mut expected_ids = std::collections::VecDeque::new();
+        let mut off = 0usize;
+        let mut last_bound = 0.0f64;
+        while received < chunks.len() {
+            while submitted < chunks.len() && handle.in_flight() < 8 {
+                let c = chunks[submitted];
+                let id = handle.submit_chunk(&xr[off..off + c], &xi[off..off + c]).unwrap();
+                expected_ids.push_back(id);
+                off += c;
+                submitted += 1;
+            }
+            let resp = handle.recv().expect("recv chunk");
+            assert!(resp.is_ok(), "{dtype}: {:?}", resp.error);
+            // In-order delivery per session.
+            assert_eq!(resp.id, expected_ids.pop_front().unwrap(), "{dtype}: out of order");
+            assert_eq!(resp.session, handle.session());
+            if let Some(b) = resp.bound {
+                assert!(b >= last_bound, "{dtype}: bound must be monotone");
+                last_bound = b;
+            }
+            got_re.extend(resp.re);
+            got_im.extend(resp.im);
+            received += 1;
+        }
+        let fin = handle.close().expect("close");
+        got_re.extend(fin.re);
+        got_im.extend(fin.im);
+
+        // Bit-identical to the offline path in the SAME dtype.
+        let (wr, wi) =
+            filter_offline_any(dtype, Strategy::DualSelect, &hr, &hi, &xr, &xi).unwrap();
+        assert_eq!(got_re, wr, "{dtype}: re plane differs from offline");
+        assert_eq!(got_im, wi, "{dtype}: im plane differs from offline");
+
+        // Low precision: within the final cumulative bound vs f64.
+        if matches!(dtype, DType::F16 | DType::Bf16) {
+            let bound = fin.bound.expect("dual-select bound");
+            let err = rel_l2(&got_re, &got_im, &wr64, &wi64);
+            assert!(
+                err.is_finite() && err <= bound,
+                "{dtype}: err {err:.3e} exceeds bound {bound:.3e}"
+            );
+        }
+    }
+
+    // Per-session gauges landed in the coordinator metrics.
+    let snap = server.snapshot();
+    assert_eq!(snap.streams_opened, 4);
+    assert_eq!(snap.open_streams, 0);
+    assert!(snap.stream_chunks >= 400, "{}", snap.stream_chunks);
+    assert!(snap.max_stream_passes > 0);
+
+    fftd.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn stft_stream_over_tcp_tracks_chirp_and_matches_offline() {
+    use fmafft::signal::chirp::lfm_chirp;
+    use fmafft::stream::{StftStream, StftStreamConfig};
+    let (server, fftd) = start_daemon(StreamConfig::default());
+    let (re, im) = lfm_chirp(4096, 0.02, 0.40);
+    let mut client = connect(&fftd);
+    for dtype in [DType::F32, DType::F16] {
+        let mut handle = client
+            .open_stream(&StreamSpec::stft(
+                dtype,
+                Strategy::DualSelect,
+                128,
+                64,
+                Window::Hann,
+            ))
+            .expect("open stft stream");
+        let mut power = Vec::new();
+        let mut off = 0usize;
+        for &c in &ragged_chunks(re.len(), 210) {
+            handle.submit_chunk(&re[off..off + c], &im[off..off + c]).unwrap();
+            let resp = handle.recv().unwrap();
+            assert!(resp.is_ok(), "{dtype}: {:?}", resp.error);
+            assert!(resp.im.is_empty(), "stft replies carry power only");
+            power.extend(resp.re);
+            off += c;
+        }
+        let fin = handle.close().unwrap();
+        power.extend(fin.re);
+
+        // Bit-identical to the local streaming engine.
+        let mut local = StftStream::new(StftStreamConfig {
+            frame: 128,
+            hop: 64,
+            window: Window::Hann,
+            strategy: Strategy::DualSelect,
+            dtype,
+        })
+        .unwrap();
+        let mut want = Vec::new();
+        local.push(&re, &im, &mut want).unwrap();
+        assert_eq!(power, want, "{dtype}: TCP columns differ from local engine");
+
+        // The chirp's peak bin sweeps upward.
+        let cols = power.len() / 128;
+        let first = peak_bin(&power[..128]);
+        let last = peak_bin(&power[(cols - 1) * 128..cols * 128]);
+        assert!(last > first + 10, "{dtype}: first {first} last {last}");
+        assert_eq!(fin.passes, cols as u64 * 7);
+    }
+    fftd.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn registry_full_is_busy_and_sessions_survive_retry() {
+    let (server, fftd) = start_daemon(StreamConfig { max_sessions: 1, ..Default::default() });
+    let (hr, hi) = noise(5, 220);
+    let (xr, xi) = noise(300, 221);
+    let mut client = connect(&fftd);
+
+    let mut handle = client
+        .open_stream(&StreamSpec::ols(
+            DType::F32,
+            Strategy::DualSelect,
+            hr.clone(),
+            hi.clone(),
+        ))
+        .expect("open first stream");
+    // Stream the first half.
+    let half = xr.len() / 2;
+    handle.submit_chunk(&xr[..half], &xi[..half]).unwrap();
+    let first = handle.recv().unwrap();
+    assert!(first.is_ok());
+    let session = handle.session();
+
+    // A second connection's open hits the registry cap: typed BUSY,
+    // its connection survives.
+    let mut other = connect(&fftd);
+    match other.open_stream(&StreamSpec::stft(
+        DType::F32,
+        Strategy::DualSelect,
+        64,
+        32,
+        Window::Hann,
+    )) {
+        Err(FftError::Rejected { in_flight: 1, limit: 1 }) => {}
+        Err(e) => panic!("expected BUSY, got error {e:?}"),
+        Ok(_) => panic!("expected BUSY, got a session"),
+    }
+    // The rejected connection still serves one-shot traffic.
+    let (fr, fi) = noise(256, 222);
+    let resp = other
+        .call(fmafft::coordinator::FftOp::Forward, &fr, &fi)
+        .expect("one-shot after BUSY");
+    assert!(resp.is_ok());
+
+    // The FIRST session lost nothing: finish the signal and compare
+    // against offline bit-for-bit.
+    handle.submit_chunk(&xr[half..], &xi[half..]).unwrap();
+    let second = handle.recv().unwrap();
+    assert!(second.is_ok());
+    assert_eq!(second.session, session);
+    let fin = handle.close().unwrap();
+    let mut got_re = first.re.clone();
+    let mut got_im = first.im.clone();
+    got_re.extend(second.re);
+    got_im.extend(second.im);
+    got_re.extend(fin.re);
+    got_im.extend(fin.im);
+    let (wr, wi) =
+        filter_offline::<f32>(&Planner::new(), Strategy::DualSelect, &hr, &hi, &xr, &xi)
+            .unwrap();
+    assert_eq!(got_re, wr);
+    assert_eq!(got_im, wi);
+
+    // Slot freed: the retry succeeds now.
+    let retry = other
+        .open_stream(&StreamSpec::stft(
+            DType::F32,
+            Strategy::DualSelect,
+            64,
+            32,
+            Window::Hann,
+        ))
+        .expect("retry after close");
+    assert_eq!(retry.fft_len(), 64);
+    drop(retry);
+
+    fftd.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn dead_connection_closes_its_sessions() {
+    let (server, fftd) = start_daemon(StreamConfig::default());
+    let mut client = connect(&fftd);
+    let (hr, hi) = noise(4, 230);
+    let mut handle = client
+        .open_stream(&StreamSpec::ols(DType::F32, Strategy::DualSelect, hr, hi))
+        .expect("open");
+    let (xr, xi) = noise(64, 231);
+    handle.submit_chunk(&xr, &xi).unwrap();
+    assert!(handle.recv().unwrap().is_ok());
+    assert_eq!(fftd.stream_sessions().open_sessions(), 1);
+    // Dropping the connection (client goes away mid-session) closes
+    // its sessions server-side instead of leaking them.
+    drop(handle);
+    drop(client);
+    for _ in 0..200 {
+        if fftd.stream_sessions().open_sessions() == 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(fftd.stream_sessions().open_sessions(), 0, "dead connection leaked sessions");
+    fftd.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn mixed_one_shot_and_stream_traffic_share_a_connection() {
+    let (server, fftd) = start_daemon(StreamConfig::default());
+    let mut client = connect(&fftd);
+    let (fr, fi) = noise(256, 240);
+    // One-shot request answered before the stream opens.
+    let early = client
+        .call(fmafft::coordinator::FftOp::Forward, &fr, &fi)
+        .unwrap();
+    assert!(early.is_ok());
+    let (hr, hi) = noise(6, 241);
+    let (xr, xi) = noise(200, 242);
+    let mut handle = client
+        .open_stream(&StreamSpec::ols(DType::F64, Strategy::DualSelect, hr.clone(), hi.clone()))
+        .unwrap();
+    handle.submit_chunk(&xr, &xi).unwrap();
+    let out = handle.recv().unwrap();
+    assert!(out.is_ok());
+    let fin = handle.close().unwrap();
+    // The same connection serves one-shot traffic again afterwards.
+    let late = client
+        .call(fmafft::coordinator::FftOp::Forward, &fr, &fi)
+        .unwrap();
+    assert!(late.is_ok());
+    assert_eq!(late.re, early.re);
+    assert_eq!(late.im, early.im);
+    // And the streamed output is still exactly the offline filter.
+    let mut got_re = out.re;
+    got_re.extend(fin.re);
+    let (wr, _) =
+        filter_offline::<f64>(&Planner::new(), Strategy::DualSelect, &hr, &hi, &xr, &xi)
+            .unwrap();
+    assert_eq!(got_re, wr);
+    fftd.shutdown();
+    server.shutdown();
+}

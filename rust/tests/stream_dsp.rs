@@ -1,0 +1,267 @@
+//! Property tests for the streaming DSP plane (`fft::stream`):
+//! chunked overlap-save output is bit-identical to the offline path
+//! across ragged chunkings (including 1-sample chunks) in every
+//! dtype; low-precision output stays within the attached cumulative
+//! a-priori bound; streamed STFT columns equal the offline
+//! spectrogram bitwise; the session registry enforces its typed
+//! backpressure.
+
+use fmafft::fft::{DType, Planner, Strategy};
+use fmafft::precision::{Bf16, Real, F16};
+use fmafft::signal::window::Window;
+use fmafft::stream::{
+    filter_offline, OlsFilter, SessionRegistry, StreamConfig, StreamSpec,
+};
+use fmafft::util::metrics::rel_l2;
+use fmafft::util::prng::Pcg32;
+
+fn noise(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Pcg32::seed(seed);
+    (
+        (0..n).map(|_| rng.gaussian()).collect(),
+        (0..n).map(|_| rng.gaussian()).collect(),
+    )
+}
+
+/// Split `0..len` into ragged chunk lengths (seeded); `bias_one`
+/// forces a run of 1-sample chunks at the front.
+fn ragged_chunks(len: usize, seed: u64, bias_one: bool) -> Vec<usize> {
+    let mut rng = Pcg32::seed(seed);
+    let mut out = Vec::new();
+    let mut left = len;
+    while left > 0 {
+        let c = if bias_one && out.len() < 5 {
+            1
+        } else {
+            (1 + rng.below(67)).min(left)
+        };
+        out.push(c);
+        left -= c;
+    }
+    out
+}
+
+fn run_chunked<T: Real>(
+    strategy: Strategy,
+    taps: (&[f64], &[f64]),
+    sig: (&[f64], &[f64]),
+    chunks: &[usize],
+) -> (Vec<f64>, Vec<f64>) {
+    let planner = Planner::<T>::new();
+    let mut f = OlsFilter::<T>::new(&planner, strategy, taps.0, taps.1).unwrap();
+    let mut out_re = Vec::new();
+    let mut out_im = Vec::new();
+    let mut off = 0usize;
+    for &c in chunks {
+        f.push(&sig.0[off..off + c], &sig.1[off..off + c], &mut out_re, &mut out_im)
+            .unwrap();
+        off += c;
+    }
+    f.finish(&mut out_re, &mut out_im).unwrap();
+    (out_re, out_im)
+}
+
+#[test]
+fn chunked_ols_is_bit_identical_to_offline_every_dtype() {
+    let (hr, hi) = noise(13, 100);
+    let (xr, xi) = noise(701, 101);
+    for (bias_one, seed) in [(false, 7u64), (true, 8), (false, 9)] {
+        let chunks = ragged_chunks(xr.len(), seed, bias_one);
+        // One scope per dtype: whole-signal offline vs ragged chunked.
+        macro_rules! check {
+            ($t:ty) => {{
+                let planner = Planner::<$t>::new();
+                let (wr, wi) = filter_offline::<$t>(
+                    &planner,
+                    Strategy::DualSelect,
+                    &hr,
+                    &hi,
+                    &xr,
+                    &xi,
+                )
+                .unwrap();
+                let (gr, gi) =
+                    run_chunked::<$t>(Strategy::DualSelect, (&hr, &hi), (&xr, &xi), &chunks);
+                assert_eq!(gr, wr, "{} re differs (chunks {:?}...)", <$t>::NAME, &chunks[..3]);
+                assert_eq!(gi, wi, "{} im differs", <$t>::NAME);
+            }};
+        }
+        check!(f64);
+        check!(f32);
+        check!(Bf16);
+        check!(F16);
+    }
+}
+
+#[test]
+fn one_sample_chunks_match_offline_bitwise() {
+    let (hr, hi) = noise(7, 110);
+    let (xr, xi) = noise(97, 111);
+    let ones = vec![1usize; 97];
+    let planner = Planner::<f32>::new();
+    let (wr, wi) =
+        filter_offline::<f32>(&planner, Strategy::DualSelect, &hr, &hi, &xr, &xi).unwrap();
+    let (gr, gi) = run_chunked::<f32>(Strategy::DualSelect, (&hr, &hi), (&xr, &xi), &ones);
+    assert_eq!(gr, wr);
+    assert_eq!(gi, wi);
+}
+
+#[test]
+fn low_precision_ols_error_within_cumulative_bound() {
+    // f16/bf16 streamed output, compared against the f64 offline
+    // reference, must sit within the cumulative a-priori bound the
+    // session reports after every chunk.
+    let (hr, hi) = noise(16, 120);
+    let (xr, xi) = noise(1200, 121);
+    let planner64 = Planner::<f64>::new();
+    let (wr, wi) =
+        filter_offline::<f64>(&planner64, Strategy::DualSelect, &hr, &hi, &xr, &xi).unwrap();
+
+    macro_rules! check_dtype {
+        ($t:ty) => {{
+            let planner = Planner::<$t>::new();
+            let mut f =
+                OlsFilter::<$t>::new(&planner, Strategy::DualSelect, &hr, &hi).unwrap();
+            let mut got_re = Vec::new();
+            let mut got_im = Vec::new();
+            let mut off = 0usize;
+            for &c in &ragged_chunks(xr.len(), 122, false) {
+                f.push(&xr[off..off + c], &xi[off..off + c], &mut got_re, &mut got_im)
+                    .unwrap();
+                off += c;
+                if !got_re.is_empty() {
+                    let bound = f.bound().expect("dual-select has a ratio bound");
+                    let err = rel_l2(
+                        &got_re,
+                        &got_im,
+                        &wr[..got_re.len()],
+                        &wi[..got_re.len()],
+                    );
+                    assert!(
+                        err.is_finite() && err <= bound,
+                        "{}: err {err:.3e} exceeds cumulative bound {bound:.3e} at {} samples",
+                        <$t>::NAME,
+                        got_re.len()
+                    );
+                }
+            }
+        }};
+    }
+    check_dtype!(F16);
+    check_dtype!(Bf16);
+    // f32/f64 trivially sit far below their (much tighter) bounds.
+    check_dtype!(f32);
+}
+
+#[test]
+fn registry_streams_match_direct_engines() {
+    // Driving the registry (the serving path) produces the same bytes
+    // as driving the engine directly.
+    let (hr, hi) = noise(9, 130);
+    let (xr, xi) = noise(400, 131);
+    let reg = SessionRegistry::default();
+    let opened = reg
+        .open(&StreamSpec::ols(
+            DType::F16,
+            Strategy::DualSelect,
+            hr.clone(),
+            hi.clone(),
+        ))
+        .unwrap();
+    let mut got_re = Vec::new();
+    let mut got_im = Vec::new();
+    let mut off = 0usize;
+    for &c in &ragged_chunks(xr.len(), 132, true) {
+        let out = reg
+            .chunk(opened.session, &xr[off..off + c], &xi[off..off + c])
+            .unwrap();
+        got_re.extend(out.re);
+        got_im.extend(out.im);
+        off += c;
+    }
+    let fin = reg.close(opened.session).unwrap();
+    got_re.extend(fin.re);
+    got_im.extend(fin.im);
+
+    let planner = Planner::<F16>::new();
+    let (wr, wi) =
+        filter_offline::<F16>(&planner, Strategy::DualSelect, &hr, &hi, &xr, &xi).unwrap();
+    assert_eq!(got_re, wr);
+    assert_eq!(got_im, wi);
+    // Final pass count matches the direct engine's accounting.
+    let mut direct = OlsFilter::<F16>::new(&planner, Strategy::DualSelect, &hr, &hi).unwrap();
+    let mut sink_re = Vec::new();
+    let mut sink_im = Vec::new();
+    direct.push(&xr, &xi, &mut sink_re, &mut sink_im).unwrap();
+    direct.finish(&mut sink_re, &mut sink_im).unwrap();
+    assert_eq!(fin.passes, direct.fft_passes());
+}
+
+#[test]
+fn registry_backpressure_is_typed_and_stateless_for_victims() {
+    let reg = SessionRegistry::new(StreamConfig { max_sessions: 2, ..Default::default() });
+    let (hr, hi) = noise(5, 140);
+    let a = reg
+        .open(&StreamSpec::ols(DType::F32, Strategy::DualSelect, hr.clone(), hi.clone()))
+        .unwrap();
+    let _b = reg
+        .open(&StreamSpec::stft(DType::F32, Strategy::DualSelect, 64, 32, Window::Hann))
+        .unwrap();
+    // Third open: BUSY.
+    let err = reg
+        .open(&StreamSpec::ols(DType::F64, Strategy::DualSelect, hr.clone(), hi.clone()))
+        .unwrap_err();
+    assert!(matches!(err, fmafft::fft::FftError::Rejected { in_flight: 2, limit: 2 }));
+    // Session A's state survived: stream through it and compare
+    // against offline.
+    let (xr, xi) = noise(150, 141);
+    let mut got_re = Vec::new();
+    let mut got_im = Vec::new();
+    let out = reg.chunk(a.session, &xr, &xi).unwrap();
+    got_re.extend(out.re);
+    got_im.extend(out.im);
+    let fin = reg.close(a.session).unwrap();
+    got_re.extend(fin.re);
+    got_im.extend(fin.im);
+    let planner = Planner::<f32>::new();
+    let (wr, wi) =
+        filter_offline::<f32>(&planner, Strategy::DualSelect, &hr, &hi, &xr, &xi).unwrap();
+    assert_eq!(got_re, wr);
+    assert_eq!(got_im, wi);
+    // The freed slot admits a new session.
+    assert!(reg
+        .open(&StreamSpec::ols(DType::F64, Strategy::DualSelect, hr, hi))
+        .is_ok());
+}
+
+#[test]
+fn streamed_stft_columns_track_a_chirp() {
+    use fmafft::signal::chirp::lfm_chirp;
+    use fmafft::stream::{peak_bin, StftStream, StftStreamConfig};
+    let (re, im) = lfm_chirp(8192, 0.02, 0.40);
+    for dtype in [DType::F32, DType::F16] {
+        let mut s = StftStream::new(StftStreamConfig {
+            frame: 256,
+            hop: 256,
+            window: Window::Hann,
+            strategy: Strategy::DualSelect,
+            dtype,
+        })
+        .unwrap();
+        let mut power = Vec::new();
+        let mut off = 0usize;
+        for &c in &ragged_chunks(re.len(), 150, false) {
+            s.push(&re[off..off + c], &im[off..off + c], &mut power).unwrap();
+            off += c;
+        }
+        let cols = s.cols() as usize;
+        assert!(cols >= 30, "{dtype}: {cols} cols");
+        let first = peak_bin(&power[..256]);
+        let last = peak_bin(&power[(cols - 1) * 256..cols * 256]);
+        assert!(
+            last > first + 10,
+            "{dtype}: chirp peak must sweep up (first {first}, last {last})"
+        );
+        assert!(s.bound().unwrap() > 0.0);
+    }
+}
