@@ -270,6 +270,23 @@ fn main() {
         fftd.shutdown();
         server.shutdown();
     }
+    // Quantized serving over the wire: the i16 block-floating-point
+    // plane end to end over TCP — responses travel as raw Q15 codes +
+    // block exponent (half the f64 payload bytes) with the per-frame
+    // quantization bound attached.
+    {
+        let mut cfg = ServerConfig::native(n);
+        cfg.workers = 4;
+        cfg.dtype = DType::I16;
+        cfg.policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(300) };
+        let server = Server::start(cfg).unwrap();
+        let fftd = FftdServer::start(server.clone(), "127.0.0.1:0").unwrap();
+        let stats =
+            drive_tcp(fftd.local_addr(), &server, DType::I16, 2, count.min(500) / 2, 16, kind);
+        report("  tcp i16 clients=2", DType::I16, "tcp", &stats, &mut json);
+        fftd.shutdown();
+        server.shutdown();
+    }
 
     // Streaming plane: stateful overlap-save / STFT sessions through
     // the session registry (the same engine the fftd STREAM_* ops

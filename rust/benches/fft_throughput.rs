@@ -178,7 +178,8 @@ fn main() {
     // dual-select transform at every working precision, driven exactly
     // as the coordinator's workers drive it (AnyTransform over a
     // dtype-tagged arena with per-dtype pooled scratch).  f16/bf16 are
-    // software floats — the point is the trajectory per dtype, not a
+    // software floats and i16/i32 run the quantized block-floating-
+    // point kernel — the point is the trajectory per dtype, not a
     // hardware comparison.
     {
         let n = 1024;

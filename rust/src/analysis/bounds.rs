@@ -127,6 +127,67 @@ pub fn serving_bound(n: usize, strategy: Strategy, eps: f64) -> Option<f64> {
     Some(serving_bound_from_tmax(tmax, eps, m))
 }
 
+/// Absolute L2 quantization noise injected by fixed-point ingest: one
+/// worst-case quantum per real component over an `n`-sample complex
+/// frame quantized at block scale `2^scale`,
+/// `N₀ = √(2n) · 2^scale`.
+///
+/// Together with [`fixed_pass_noise`] and [`fixed_relative_bound`]
+/// this is the quantized sibling of the eq. (11) chain: where the
+/// float bound compounds a *relative* per-pass factor, block
+/// floating point injects *absolute* rounding noise per pass whose
+/// size tracks the running block exponent, so the chain is run in
+/// absolute units and normalized once at the end.
+pub fn fixed_ingest_noise(n: usize, scale: i32) -> f64 {
+    (2.0 * n as f64).sqrt() * (scale as f64).exp2()
+}
+
+/// One radix-2 Stockham pass of the fixed-point noise recurrence:
+///
+/// ```text
+/// N ← √2 · (N_prev + [shifted]·½·√(2n)·2^scale)  +  c·√(2n)·2^scale
+/// ```
+///
+/// * `√2` — the pass's exact L2 gain (each butterfly maps
+///   `(a, b) ↦ (a + wb, a − wb)`, which doubles the squared norm), so
+///   noise already present is amplified exactly like the signal.
+/// * the `shifted` term — when the BFP rule right-shifted the pass's
+///   inputs, each component rounds by at most half a (post-shift)
+///   quantum *before* the butterfly amplifies it.
+/// * `c·√(2n)·2^scale` — fresh per-output rounding: `c = 2` for a
+///   ratio pass (one quantum from the two `mul_round` roundings of
+///   the 6-op dual-select butterfly, one quantum from the quantized
+///   `m1`/`m2`/`t` factors themselves), `c = 0` for a trivial (`W^0`)
+///   pass, which is exact integer add/sub.
+///
+/// `scale` is the block exponent *after* the pass's shift.
+pub fn fixed_pass_noise(prev: f64, n: usize, scale: i32, trivial: bool, shifted: bool) -> f64 {
+    let q = (2.0 * n as f64).sqrt() * (scale as f64).exp2();
+    let carried = prev + if shifted { 0.5 * q } else { 0.0 };
+    let injected = if trivial { 0.0 } else { 2.0 * q };
+    core::f64::consts::SQRT_2 * carried + injected
+}
+
+/// Normalize the accumulated absolute noise after `m` passes into the
+/// relative bound the serving plane attaches: the true output of an
+/// unnormalized `2^m`-point transform has L2 norm exactly
+/// `2^(m/2) · ‖x‖₂` (Parseval), so
+///
+/// ```text
+/// E  ≤  N_m / (2^(m/2) · ‖x‖₂)
+/// ```
+///
+/// The same formula covers the inverse transform: the trailing exact
+/// `1/n` fold (a block-exponent subtraction) scales signal and noise
+/// alike.  A zero input (‖x‖₂ = 0) quantizes, transforms and
+/// dequantizes exactly, so its bound is 0.
+pub fn fixed_relative_bound(noise: f64, m: u32, input_l2: f64) -> f64 {
+    if input_l2 <= 0.0 {
+        return 0.0;
+    }
+    noise / ((m as f64 * 0.5).exp2() * input_l2)
+}
+
 /// Cumulative-bound sweep across precisions for a given strategy pair —
 /// the data behind the "advantage is specific to low precision" claim.
 pub fn precision_sweep(n: usize) -> Vec<(&'static str, f64, f64, f64)> {
@@ -209,24 +270,24 @@ mod tests {
         // The op-count form dominates the paper's normalized form at
         // every precision (it counts strictly more roundings).
         for dtype in DType::ALL {
-            let eps = dtype.epsilon();
+            let eps = dtype.unit_roundoff();
             assert!(
                 serving_bound_from_tmax(1.0, eps, m) > cumulative_bound(1.0, eps, m),
                 "{dtype}"
             );
         }
         // Dual-select at fp16: a small, finite, usable bound.
-        let dual = serving_bound(n, Strategy::DualSelect, DType::F16.epsilon()).unwrap();
+        let dual = serving_bound(n, Strategy::DualSelect, DType::F16.unit_roundoff()).unwrap();
         assert!(dual > 0.0 && dual < 0.1, "dual fp16 serving bound {dual}");
         // Clamped LF at fp16: the stored 1e7 entry makes the a-priori
         // bound astronomically worse — the serving plane reports it
         // honestly instead of hiding the clamp.
-        let lf = serving_bound(n, Strategy::LinzerFeig, DType::F16.epsilon()).unwrap();
+        let lf = serving_bound(n, Strategy::LinzerFeig, DType::F16.unit_roundoff()).unwrap();
         assert!(lf > 1e6, "lf fp16 serving bound {lf}");
         assert!(lf / dual > 1e6);
         // No ratio table, no bound.
-        assert_eq!(serving_bound(n, Strategy::Standard, DType::F16.epsilon()), None);
-        assert_eq!(serving_bound(100, Strategy::DualSelect, DType::F16.epsilon()), None);
+        assert_eq!(serving_bound(n, Strategy::Standard, DType::F16.unit_roundoff()), None);
+        assert_eq!(serving_bound(100, Strategy::DualSelect, DType::F16.unit_roundoff()), None);
     }
 
     #[test]

@@ -28,9 +28,14 @@ USAGE:
       Reproduce the paper's Table I, Table II and the §V claims.
   fmafft audit   [--n 1024] [--strategy dual|lf|cos]
       Audit the precomputed twiddle table of a strategy.
-  fmafft fft     [--n 1024] [--strategy dual] [--dtype f64|f32|bf16|f16]
+  fmafft fft     [--n 1024] [--strategy dual]
+                 [--dtype f64|f32|bf16|f16|i16|i32]
       Run one native FFT on a random frame; report error vs the f64 DFT.
       (--precision is accepted as an alias of --dtype.)
+      i16/i32 run the fixed-point Q15/Q31 plane (block-floating-point
+      scaling); the reported error is checked against the attached
+      a-priori quantization bound, and only dual-select builds — its
+      |ratio| <= 1 tables are the representable ones.
       With --stream-chunks N: run the overlap-save streaming engine
       instead — a chirp matched filter over a noisy signal fed in N
       ragged chunks, asserted bit-identical to the offline whole-signal
@@ -42,7 +47,8 @@ USAGE:
                  [--listen ADDR] [--serve-for SECS]
       Run the dynamic-batching coordinator against a Poisson workload
       in the chosen working precision (try --dtype f16: the paper's
-      bounded-ratio claim, served end to end).  With --listen the
+      bounded-ratio claim, served end to end; --dtype i16 serves the
+      quantized fixed-point plane).  With --listen the
       coordinator becomes fftd, a TCP daemon (e.g. --listen
       127.0.0.1:0 for an ephemeral port; --serve-for 0 = run until
       killed); see PROTOCOL.md for the wire format.
@@ -221,11 +227,38 @@ fn fft_stream(a: &Args) -> FftResult<()> {
         Ok((got_re, got_im, f.bound(), f.fft_passes(), f.fft_len()))
     }
 
+    fn run_fixed<Q: crate::fixed::QSample>(
+        strategy: Strategy,
+        taps: (&[f64], &[f64]),
+        sig: (&[f64], &[f64]),
+        chunks: &[usize],
+    ) -> FftResult<(Vec<f64>, Vec<f64>, Option<f64>, u64, usize)> {
+        let (wr, wi) =
+            crate::fixed::filter_offline_fixed::<Q>(strategy, taps.0, taps.1, sig.0, sig.1)?;
+        let mut f = crate::fixed::FixedOlsFilter::<Q>::new(strategy, taps.0, taps.1)?;
+        let mut got_re = Vec::new();
+        let mut got_im = Vec::new();
+        let mut off = 0usize;
+        for &c in chunks {
+            f.push(&sig.0[off..off + c], &sig.1[off..off + c], &mut got_re, &mut got_im)?;
+            off += c;
+        }
+        f.finish(&mut got_re, &mut got_im)?;
+        if got_re != wr || got_im != wi {
+            return Err(FftError::Backend(
+                "chunked overlap-save output differs from the offline path".into(),
+            ));
+        }
+        Ok((got_re, got_im, f.bound(), f.fft_passes(), f.fft_len()))
+    }
+
     let (got_re, got_im, bound, passes, fft_len) = match dtype {
         DType::F64 => run::<f64>(strategy, (&taps_re, &taps_im), (&sig_re, &sig_im), &chunks)?,
         DType::F32 => run::<f32>(strategy, (&taps_re, &taps_im), (&sig_re, &sig_im), &chunks)?,
         DType::Bf16 => run::<Bf16>(strategy, (&taps_re, &taps_im), (&sig_re, &sig_im), &chunks)?,
         DType::F16 => run::<F16>(strategy, (&taps_re, &taps_im), (&sig_re, &sig_im), &chunks)?,
+        DType::I16 => run_fixed::<i16>(strategy, (&taps_re, &taps_im), (&sig_re, &sig_im), &chunks)?,
+        DType::I32 => run_fixed::<i32>(strategy, (&taps_re, &taps_im), (&sig_re, &sig_im), &chunks)?,
     };
     let (wr64, wi64) = filter_offline::<f64>(
         &Planner::new(),
@@ -263,6 +296,40 @@ fn fft_stream(a: &Args) -> FftResult<()> {
     Ok(())
 }
 
+/// `fft --dtype i16|i32`: one quantized transform on a random frame.
+/// The fixed-point plane attaches a per-frame a-priori quantization
+/// bound (block-floating-point ingest + per-pass noise model); the
+/// measured error against the f64 DFT oracle must sit under it, or the
+/// command exits nonzero.
+fn fft_fixed(n: usize, strategy: Strategy, dtype: DType, seed: u64) -> FftResult<()> {
+    use crate::fft::{AnyArena, AnyScratch, PlanSpec};
+    let transform = PlanSpec::new(n).strategy(strategy).dtype(dtype).build_any()?;
+    let mut arena = AnyArena::new(dtype, n);
+    let mut rng = Pcg32::seed(seed);
+    let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+    let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+    arena.push_frame_f64(&re, &im);
+    let mut scratch = AnyScratch::new();
+    transform.execute_frame_any(&mut arena, 0, &mut scratch)?;
+    let (gr, gi) = arena.frame_f64(0);
+    let (wr, wi) = crate::dft::naive_dft(&re, &im, false);
+    let err = rel_l2(&gr, &gi, &wr, &wi);
+    let bound = arena
+        .frame_bound(0)
+        .ok_or_else(|| FftError::Backend("fixed-point result carries no bound".into()))?;
+    println!(
+        "n={n} strategy={strategy} precision={dtype}\n  forward rel-L2 vs f64 DFT: {} | a-priori quantization bound: {}",
+        sci(err),
+        sci(bound)
+    );
+    if err.is_nan() || err > bound {
+        return Err(FftError::Backend(format!(
+            "fixed-point error {err:.3e} exceeds its a-priori bound {bound:.3e}"
+        )));
+    }
+    Ok(())
+}
+
 pub fn fft(a: &Args) -> FftResult<()> {
     if a.get("stream-chunks").is_some() {
         return fft_stream(a);
@@ -283,8 +350,9 @@ pub fn fft(a: &Args) -> FftResult<()> {
         DType::F32 => measure::<f32>(n, strategy, seed),
         DType::F16 => measure::<F16>(n, strategy, seed),
         DType::Bf16 => measure::<Bf16>(n, strategy, seed),
+        DType::I16 | DType::I32 => return fft_fixed(n, strategy, dtype, seed),
     };
-    if let Some(bound) = serving_bound(n, strategy, dtype.epsilon()) {
+    if let Some(bound) = serving_bound(n, strategy, dtype.unit_roundoff()) {
         println!("a-priori bound ({} x {}): {}", strategy, dtype, sci(bound));
     }
     println!(
@@ -337,8 +405,12 @@ pub fn serve(a: &Args) -> FftResult<()> {
         // Scripts (CI smoke test) scrape the bound address from this
         // exact line — keep it first and flush it.
         println!("fftd listening on {}", fftd.local_addr());
-        if let Some(bound) = serving_bound(n, strategy, dtype.epsilon()) {
-            println!("a-priori per-request error bound ({strategy} x {dtype}): {}", sci(bound));
+        // Fixed dtypes carry a per-frame quantization bound on each
+        // response instead of one per-plan float bound.
+        if !dtype.is_fixed() {
+            if let Some(bound) = serving_bound(n, strategy, dtype.unit_roundoff()) {
+                println!("a-priori per-request error bound ({strategy} x {dtype}): {}", sci(bound));
+            }
         }
         use std::io::Write as _;
         let _ = std::io::stdout().flush();
@@ -360,8 +432,10 @@ pub fn serve(a: &Args) -> FftResult<()> {
         "serving n={n} dtype={dtype} strategy={strategy} backend={} workers={workers} max_batch={max_batch} rate={rate}/s requests={requests}",
         if matches!(cfg.backend, crate::coordinator::Backend::Pjrt { .. }) { "pjrt" } else { "native" },
     );
-    if let Some(bound) = serving_bound(n, strategy, dtype.epsilon()) {
-        println!("a-priori per-request error bound ({strategy} x {dtype}): {}", sci(bound));
+    if !dtype.is_fixed() {
+        if let Some(bound) = serving_bound(n, strategy, dtype.unit_roundoff()) {
+            println!("a-priori per-request error bound ({strategy} x {dtype}): {}", sci(bound));
+        }
     }
     let server = Server::start(cfg)?;
 

@@ -38,9 +38,9 @@ pub struct Metrics {
     latency_buckets: [AtomicU64; BUCKETS],
     // Per-dtype splits of submitted/completed/failed, indexed by
     // `DType::index()`.
-    dtype_submitted: [AtomicU64; 4],
-    dtype_completed: [AtomicU64; 4],
-    dtype_failed: [AtomicU64; 4],
+    dtype_submitted: [AtomicU64; DType::COUNT],
+    dtype_completed: [AtomicU64; DType::COUNT],
+    dtype_failed: [AtomicU64; DType::COUNT],
 }
 
 impl Metrics {
@@ -266,7 +266,7 @@ pub struct MetricsSnapshot {
     pub max_stream_passes: u64,
     /// Per-dtype request counters, indexed by `DType::index()` (use
     /// [`MetricsSnapshot::dtype`] for keyed access).
-    pub per_dtype: [DTypeCounts; 4],
+    pub per_dtype: [DTypeCounts; DType::COUNT],
 }
 
 impl MetricsSnapshot {
@@ -362,12 +362,19 @@ mod tests {
         let f16c = m.dtype_counts(DType::F16);
         assert_eq!((f16c.submitted, f16c.completed, f16c.failed), (1, 1, 0));
         assert_eq!(m.dtype_counts(DType::Bf16), DTypeCounts::default());
+        // Fixed-point dtypes have their own cells.
+        m.record_submitted(DType::I16);
+        m.record_completed(DType::I16);
+        let i16c = m.dtype_counts(DType::I16);
+        assert_eq!((i16c.submitted, i16c.completed, i16c.failed), (1, 1, 0));
         // Snapshot carries the split; summary names active dtypes only.
         let s = m.snapshot();
         assert_eq!(s.dtype(DType::F16).completed, 1);
+        assert_eq!(s.dtype(DType::I32), DTypeCounts::default());
         let text = m.summary();
         assert!(text.contains("f32=1/2"), "{text}");
         assert!(text.contains("f16=1/1"), "{text}");
+        assert!(text.contains("i16=1/1"), "{text}");
         assert!(!text.contains("bf16="), "{text}");
     }
 

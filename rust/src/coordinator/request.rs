@@ -208,6 +208,17 @@ impl FftResponse {
         }
     }
 
+    /// The quantized result frame (codes + block exponent + per-frame
+    /// bound), when the response was computed in a fixed-point dtype —
+    /// the wire encoder's zero-copy read path.  `None` for float
+    /// responses and failures.
+    pub fn fixed_frame(&self) -> Option<crate::fixed::FixedFrameRef<'_>> {
+        match &self.payload {
+            Some((arena, frame)) => arena.fixed_frame(*frame),
+            None => None,
+        }
+    }
+
     pub fn is_ok(&self) -> bool {
         self.error.is_none()
     }

@@ -145,9 +145,14 @@ impl ComputeCtx {
         };
         // Warm the default strategy's ratio statistics and preflight
         // the default matched filter (validates the pulse/frame
-        // configuration at worker start).
+        // configuration at worker start).  Fixed-point defaults skip
+        // the filter preflight — the matched-filter composite is
+        // float-only, and requesting it stays a per-request typed
+        // error rather than poisoning the whole worker.
         let _ = ctx.tmax_for(recipe.strategy);
-        ctx.matched_for(recipe.strategy, recipe.dtype)?;
+        if !recipe.dtype.is_fixed() {
+            ctx.matched_for(recipe.strategy, recipe.dtype)?;
+        }
         Ok(ctx)
     }
 
@@ -193,6 +198,12 @@ impl ComputeCtx {
                     MatchedFilter::new(&Planner::new(), strategy, self.n, cr, ci)?;
                 AnyTransform::F16(Arc::new(mf))
             }
+            DType::I16 | DType::I32 => {
+                return Err(FftError::Unsupported(
+                    "matched filtering is float-only (the composite's reference spectrum \
+                     is not quantized); request dtype f64/f32/bf16/f16",
+                ))
+            }
         };
         map.insert((strategy, dtype), built.clone());
         Ok(built)
@@ -217,12 +228,17 @@ impl ComputeCtx {
     /// [`crate::analysis::bounds::serving_bound`] evaluated with the
     /// `|t|max` cached per strategy.  None for the matched-filter
     /// composite (two transforms plus a pointwise product; no single
-    /// eq.-(11) form applies).
+    /// eq.-(11) form applies) and for fixed-point dtypes, whose bound
+    /// is signal-dependent: each executed frame carries its own from
+    /// the quantization-noise model, read off the arena per response.
     fn bound_for(&self, key: &PlanKey) -> Option<f64> {
+        if key.dtype.is_fixed() {
+            return None;
+        }
         match key.op {
             FftOp::MatchedFilter => None,
             FftOp::Forward | FftOp::Inverse => self.tmax_for(key.strategy).map(|tmax| {
-                serving_bound_from_tmax(tmax, key.dtype.epsilon(), self.n.trailing_zeros())
+                serving_bound_from_tmax(tmax, key.dtype.unit_roundoff(), self.n.trailing_zeros())
             }),
         }
     }
@@ -696,13 +712,17 @@ fn worker_loop(
                             metrics.record_completed(key.dtype);
                             let latency = m.submitted.elapsed();
                             metrics.record_latency(latency);
+                            // Fixed-point frames carry their own
+                            // signal-dependent bound; floats use the
+                            // batch-wide eq. (11) one.
+                            let frame_bound = shared.frame_bound(frame).or(bound);
                             let _ = m.reply.send(FftResponse::ok(
                                 m.id,
                                 shared.clone(),
                                 frame,
                                 size,
                                 latency,
-                                bound,
+                                frame_bound,
                             ));
                             drop(m.permit);
                         }

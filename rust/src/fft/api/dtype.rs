@@ -37,6 +37,7 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, PoisonError};
 
+use crate::fixed::{FixedArena, FixedFrameRef, FixedPlan, FixedScratch};
 use crate::precision::{Bf16, F16, Real};
 
 use super::super::{Direction, Strategy};
@@ -59,23 +60,46 @@ pub enum DType {
     /// IEEE 754 binary16 (software, single-rounding semantics) — the
     /// precision the paper's headline bound is about.
     F16,
+    /// Q15 fixed point (`i16` codes, block-floating-point frames).
+    I16,
+    /// Q31 fixed point (`i32` codes, block-floating-point frames).
+    I32,
 }
 
 impl DType {
     /// Every supported dtype, in [`DType::index`] order.
-    pub const ALL: [DType; 4] = [DType::F64, DType::F32, DType::Bf16, DType::F16];
+    pub const ALL: [DType; 6] = [
+        DType::F64,
+        DType::F32,
+        DType::Bf16,
+        DType::F16,
+        DType::I16,
+        DType::I32,
+    ];
 
-    /// Wire/CLI name (`"f64" | "f32" | "bf16" | "f16"`).
+    /// Number of supported dtypes — the length of per-dtype tables
+    /// indexed by [`DType::index`].
+    pub const COUNT: usize = Self::ALL.len();
+
+    /// The floating-point dtypes only — the ones with a typed
+    /// [`Real`] working precision and an eq. (11)-style a-priori
+    /// bound.  Fixed-point dtypes instead carry a signal-dependent
+    /// quantization bound per frame.
+    pub const FLOATS: [DType; 4] = [DType::F64, DType::F32, DType::Bf16, DType::F16];
+
+    /// Wire/CLI name (`"f64" | "f32" | "bf16" | "f16" | "i16" | "i32"`).
     pub fn name(self) -> &'static str {
         match self {
             DType::F64 => "f64",
             DType::F32 => "f32",
             DType::Bf16 => "bf16",
             DType::F16 => "f16",
+            DType::I16 => "i16",
+            DType::I32 => "i32",
         }
     }
 
-    /// Dense index into per-dtype tables (`[0, 4)`, matching
+    /// Dense index into per-dtype tables (`[0, COUNT)`, matching
     /// [`DType::ALL`]).
     pub fn index(self) -> usize {
         match self {
@@ -83,22 +107,37 @@ impl DType {
             DType::F32 => 1,
             DType::Bf16 => 2,
             DType::F16 => 3,
+            DType::I16 => 4,
+            DType::I32 => 5,
         }
     }
 
-    /// Unit roundoff of the format — the `eps` in the paper's error
-    /// bounds (4.88e-4 for f16, 5.96e-8 for f32).
-    pub fn epsilon(self) -> f64 {
+    /// True for the quantized integer dtypes (block-floating-point
+    /// frames, signal-dependent bounds, dual-select only).
+    pub fn is_fixed(self) -> bool {
+        matches!(self, DType::I16 | DType::I32)
+    }
+
+    /// Quantization step of the format at unit scale: the unit
+    /// roundoff (the `eps` in the paper's error bounds — 4.88e-4 for
+    /// f16, 5.96e-8 for f32) for floats, and the Q-format quantum
+    /// (`2^-15` / `2^-31`) for fixed point.  Fixed-point quanta are
+    /// *absolute* steps at block scale 0, not relative roundoffs — do
+    /// not feed them to the eq. (11) float bound chain; the fixed
+    /// plane attaches its own per-frame bound instead.
+    pub fn unit_roundoff(self) -> f64 {
         match self {
             DType::F64 => <f64 as Real>::EPSILON,
             DType::F32 => <f32 as Real>::EPSILON,
             DType::Bf16 => <Bf16 as Real>::EPSILON,
             DType::F16 => <F16 as Real>::EPSILON,
+            DType::I16 => (-15f64).exp2(),
+            DType::I32 => (-31f64).exp2(),
         }
     }
 
     /// The dtype of a typed [`Real`] working precision, if it is one
-    /// of the four wire dtypes.  `None` for downstream [`Real`]
+    /// of the float wire dtypes.  `None` for downstream [`Real`]
     /// implementations the wire format does not know about (the trait
     /// is public and unsealed) — such types still work through the
     /// typed API, they just have no dtype-erased spelling.
@@ -135,14 +174,18 @@ impl core::str::FromStr for DType {
             "f32" => Ok(DType::F32),
             "bf16" => Ok(DType::Bf16),
             "f16" | "fp16" | "half" => Ok(DType::F16),
+            "i16" | "q15" => Ok(DType::I16),
+            "i32" | "q31" => Ok(DType::I32),
             other => Err(FftError::InvalidArgument(format!(
-                "unknown dtype {other:?} (expected f64|f32|bf16|f16)"
+                "unknown dtype {other:?} (expected f64|f32|bf16|f16|i16|i32)"
             ))),
         }
     }
 }
 
-/// Dispatch a generic expression over every [`AnyArena`] variant.
+/// Dispatch a generic expression over every [`AnyArena`] variant —
+/// float ([`FrameArena`]) and fixed ([`FixedArena`]) alike, so the
+/// body may only use their shared storage surface.
 macro_rules! each_arena {
     ($value:expr, $a:ident => $body:expr) => {
         match $value {
@@ -150,6 +193,8 @@ macro_rules! each_arena {
             AnyArena::F32($a) => $body,
             AnyArena::Bf16($a) => $body,
             AnyArena::F16($a) => $body,
+            AnyArena::I16($a) => $body,
+            AnyArena::I32($a) => $body,
         }
     };
 }
@@ -162,6 +207,8 @@ macro_rules! each_transform {
             AnyTransform::F32($t) => $body,
             AnyTransform::Bf16($t) => $body,
             AnyTransform::F16($t) => $body,
+            AnyTransform::I16($t) => $body,
+            AnyTransform::I32($t) => $body,
         }
     };
 }
@@ -180,6 +227,10 @@ pub enum AnyArena {
     F32(FrameArena<f32>),
     Bf16(FrameArena<Bf16>),
     F16(FrameArena<F16>),
+    /// Q15 block-floating-point frames (quantized plane).
+    I16(FixedArena<i16>),
+    /// Q31 block-floating-point frames (quantized plane).
+    I32(FixedArena<i32>),
 }
 
 impl AnyArena {
@@ -190,6 +241,8 @@ impl AnyArena {
             DType::F32 => AnyArena::F32(FrameArena::new(frame_len)),
             DType::Bf16 => AnyArena::Bf16(FrameArena::new(frame_len)),
             DType::F16 => AnyArena::F16(FrameArena::new(frame_len)),
+            DType::I16 => AnyArena::I16(FixedArena::new(frame_len)),
+            DType::I32 => AnyArena::I32(FixedArena::new(frame_len)),
         }
     }
 
@@ -200,6 +253,8 @@ impl AnyArena {
             AnyArena::F32(_) => DType::F32,
             AnyArena::Bf16(_) => DType::Bf16,
             AnyArena::F16(_) => DType::F16,
+            AnyArena::I16(_) => DType::I16,
+            AnyArena::I32(_) => DType::I32,
         }
     }
 
@@ -240,15 +295,57 @@ impl AnyArena {
     }
 
     /// Copy frame `i` out, widened to f64 (exact for every supported
-    /// format — the wire-level read path for non-f32 dtypes).
+    /// format — float codes widen losslessly, fixed codes dequantize
+    /// as `q · 2^scale`, also exact).
     pub fn frame_f64(&self, i: usize) -> (Vec<f64>, Vec<f64>) {
-        each_arena!(self, a => {
-            let (re, im) = a.frame(i);
-            (
-                re.iter().map(|&x| x.to_f64()).collect(),
-                im.iter().map(|&x| x.to_f64()).collect(),
-            )
-        })
+        macro_rules! widen {
+            ($a:expr) => {{
+                let (re, im) = $a.frame(i);
+                (
+                    re.iter().map(|&x| x.to_f64()).collect(),
+                    im.iter().map(|&x| x.to_f64()).collect(),
+                )
+            }};
+        }
+        match self {
+            AnyArena::F64(a) => widen!(a),
+            AnyArena::F32(a) => widen!(a),
+            AnyArena::Bf16(a) => widen!(a),
+            AnyArena::F16(a) => widen!(a),
+            AnyArena::I16(a) => a.frame_f64(i),
+            AnyArena::I32(a) => a.frame_f64(i),
+        }
+    }
+
+    /// The a-priori relative error bound frame `i` carries, when the
+    /// arena is fixed point and the frame has been transformed.
+    /// Always `None` for float arenas — their bound is the dtype-level
+    /// eq. (11) result, not per-frame state.
+    pub fn frame_bound(&self, i: usize) -> Option<f64> {
+        match self {
+            AnyArena::I16(a) => a.frame_bound(i),
+            AnyArena::I32(a) => a.frame_bound(i),
+            _ => None,
+        }
+    }
+
+    /// Borrow frame `i` as quantized codes plus block-floating-point
+    /// metadata — the wire encoder's zero-copy read path.  `None` for
+    /// float arenas.
+    pub fn fixed_frame(&self, i: usize) -> Option<FixedFrameRef<'_>> {
+        match self {
+            AnyArena::I16(a) => {
+                let meta = a.meta(i);
+                let (re, im) = a.frame(i);
+                Some(FixedFrameRef::I16 { scale: meta.scale, bound: meta.bound, re, im })
+            }
+            AnyArena::I32(a) => {
+                let meta = a.meta(i);
+                let (re, im) = a.frame(i);
+                Some(FixedFrameRef::I32 { scale: meta.scale, bound: meta.bound, re, im })
+            }
+            _ => None,
+        }
     }
 
     /// The typed f32 arena, when that is what this is (the zero-copy
@@ -281,6 +378,16 @@ impl From<FrameArena<F16>> for AnyArena {
         AnyArena::F16(a)
     }
 }
+impl From<FixedArena<i16>> for AnyArena {
+    fn from(a: FixedArena<i16>) -> Self {
+        AnyArena::I16(a)
+    }
+}
+impl From<FixedArena<i32>> for AnyArena {
+    fn from(a: FixedArena<i32>) -> Self {
+        AnyArena::I32(a)
+    }
+}
 
 /// Per-worker scratch pools, one per dtype.  Each typed pool amortizes
 /// independently, so a worker serving mixed-precision traffic is still
@@ -291,6 +398,8 @@ pub struct AnyScratch {
     pub for_f32: Scratch<f32>,
     pub for_bf16: Scratch<Bf16>,
     pub for_f16: Scratch<F16>,
+    pub for_i16: FixedScratch<i16>,
+    pub for_i32: FixedScratch<i32>,
 }
 
 impl AnyScratch {
@@ -305,11 +414,18 @@ impl AnyScratch {
             + self.for_f32.misses()
             + self.for_bf16.misses()
             + self.for_f16.misses()
+            + self.for_i16.misses()
+            + self.for_i32.misses()
     }
 
     /// Total `take` calls served across all dtypes.
     pub fn takes(&self) -> u64 {
-        self.for_f64.takes() + self.for_f32.takes() + self.for_bf16.takes() + self.for_f16.takes()
+        self.for_f64.takes()
+            + self.for_f32.takes()
+            + self.for_bf16.takes()
+            + self.for_f16.takes()
+            + self.for_i16.takes()
+            + self.for_i32.takes()
     }
 }
 
@@ -326,6 +442,10 @@ pub enum AnyTransform {
     F32(Arc<dyn Transform<f32>>),
     Bf16(Arc<dyn Transform<Bf16>>),
     F16(Arc<dyn Transform<F16>>),
+    /// Q15 block-floating-point Stockham plan (dual-select only).
+    I16(Arc<FixedPlan<i16>>),
+    /// Q31 block-floating-point Stockham plan (dual-select only).
+    I32(Arc<FixedPlan<i32>>),
 }
 
 impl AnyTransform {
@@ -336,6 +456,8 @@ impl AnyTransform {
             AnyTransform::F32(_) => DType::F32,
             AnyTransform::Bf16(_) => DType::Bf16,
             AnyTransform::F16(_) => DType::F16,
+            AnyTransform::I16(_) => DType::I16,
+            AnyTransform::I32(_) => DType::I32,
         }
     }
 
@@ -386,6 +508,14 @@ impl AnyTransform {
                 t.execute_many(a.view_mut(), &mut scratch.for_f16);
                 Ok(())
             }
+            (AnyTransform::I16(t), AnyArena::I16(a)) => {
+                t.execute_many(a, &mut scratch.for_i16);
+                Ok(())
+            }
+            (AnyTransform::I32(t), AnyArena::I32(a)) => {
+                t.execute_many(a, &mut scratch.for_i32);
+                Ok(())
+            }
             (t, a) => Err(FftError::DTypeMismatch { expected: t.dtype(), got: a.dtype() }),
         }
     }
@@ -417,6 +547,14 @@ impl AnyTransform {
             (AnyTransform::F16(t), AnyArena::F16(a)) => {
                 let (re, im) = a.frame_mut(frame);
                 t.execute_frame(re, im, &mut scratch.for_f16);
+                Ok(())
+            }
+            (AnyTransform::I16(t), AnyArena::I16(a)) => {
+                t.execute_frame(a, frame, &mut scratch.for_i16);
+                Ok(())
+            }
+            (AnyTransform::I32(t), AnyArena::I32(a)) => {
+                t.execute_frame(a, frame, &mut scratch.for_i32);
                 Ok(())
             }
             (t, a) => Err(FftError::DTypeMismatch { expected: t.dtype(), got: a.dtype() }),
@@ -545,15 +683,25 @@ mod tests {
     use crate::util::prng::Pcg32;
 
     #[test]
-    fn dtype_parse_display_epsilon() {
+    fn dtype_parse_display_unit_roundoff() {
         for d in DType::ALL {
             assert_eq!(d.name().parse::<DType>().unwrap(), d);
             assert_eq!(d.to_string(), d.name());
             assert_eq!(DType::ALL[d.index()], d);
         }
+        assert_eq!(DType::COUNT, DType::ALL.len());
         assert_eq!("fp16".parse::<DType>().unwrap(), DType::F16);
+        assert_eq!("q15".parse::<DType>().unwrap(), DType::I16);
+        assert_eq!("q31".parse::<DType>().unwrap(), DType::I32);
         assert!("f8".parse::<DType>().is_err());
-        assert_eq!(DType::F16.epsilon(), 4.8828125e-4);
+        assert_eq!(DType::F16.unit_roundoff(), 4.8828125e-4);
+        // Fixed-point quanta are the exact Q-format steps.
+        assert_eq!(DType::I16.unit_roundoff(), 3.0517578125e-5);
+        assert_eq!(DType::I32.unit_roundoff(), 4.656612873077393e-10);
+        for d in DType::FLOATS {
+            assert!(!d.is_fixed(), "{d}");
+        }
+        assert!(DType::I16.is_fixed() && DType::I32.is_fixed());
         assert_eq!(DType::default(), DType::F32);
         assert_eq!(DType::of::<f32>(), DType::F32);
         assert_eq!(DType::of::<F16>(), DType::F16);
@@ -603,9 +751,16 @@ mod tests {
             t.execute_many_any(&mut arena, &mut scratch).unwrap();
             let (gr, gi) = arena.frame_f64(0);
             let err = rel_l2(&gr, &gi, &wr, &wi);
-            // Coarse per-dtype sanity; exact bound checks live in the
-            // analysis tests and the coordinator integration tests.
-            let tol = 100.0 * dtype.epsilon();
+            // Floats: coarse per-dtype sanity (exact bound checks live
+            // in the analysis tests and the coordinator integration
+            // tests).  Fixed point: the frame's own attached a-priori
+            // bound IS the contract.
+            let tol = if dtype.is_fixed() {
+                arena.frame_bound(0).expect("fixed frame carries a bound after execute")
+            } else {
+                assert_eq!(arena.frame_bound(0), None);
+                100.0 * dtype.unit_roundoff()
+            };
             assert!(err < tol, "{dtype} err {err:.3e} tol {tol:.3e}");
         }
     }
@@ -650,18 +805,20 @@ mod tests {
         for dtype in DType::ALL {
             planner.get(spec.dtype(dtype)).unwrap();
         }
-        assert_eq!(planner.len(), 4);
+        assert_eq!(planner.len(), DType::COUNT);
         // Same (spec, dtype): served from cache, count unchanged.
         planner.get(spec.dtype(DType::F16)).unwrap();
-        assert_eq!(planner.len(), 4);
+        planner.get(spec.dtype(DType::I16)).unwrap();
+        assert_eq!(planner.len(), DType::COUNT);
         // plan() is the (n, strategy, direction, dtype) spelling.
         planner
             .plan(64, Strategy::DualSelect, Direction::Inverse, DType::F16)
             .unwrap();
-        assert_eq!(planner.len(), 5);
+        assert_eq!(planner.len(), DType::COUNT + 1);
         // Build errors are not cached.
         assert!(planner.get(PlanSpec::new(100).stockham()).is_err());
-        assert_eq!(planner.len(), 5);
+        assert!(planner.get(spec.strategy(Strategy::LinzerFeig).dtype(DType::I16)).is_err());
+        assert_eq!(planner.len(), DType::COUNT + 1);
     }
 
     #[test]

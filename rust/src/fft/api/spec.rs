@@ -183,16 +183,35 @@ impl PlanSpec {
 
     /// Build the transform this spec describes in the working
     /// precision named by `self.dtype` — the dtype-erased form the
-    /// serving plane and [`super::AnyPlanner`] use.  Each arm routes
+    /// serving plane and [`super::AnyPlanner`] use.  Float arms route
     /// through [`PlanSpec::build`], so per dtype the produced
-    /// transform is identical to the statically-typed one.
+    /// transform is identical to the statically-typed one; the fixed
+    /// arms build a [`crate::fixed::FixedPlan`] (Stockham-only,
+    /// complex-only, dual-select-only — everything else is a typed
+    /// error, never a silent fallback).
     pub fn build_any(&self) -> FftResult<AnyTransform> {
         Ok(match self.dtype {
             DType::F64 => AnyTransform::F64(Arc::from(self.build::<f64>()?)),
             DType::F32 => AnyTransform::F32(Arc::from(self.build::<f32>()?)),
             DType::Bf16 => AnyTransform::Bf16(Arc::from(self.build::<crate::precision::Bf16>()?)),
             DType::F16 => AnyTransform::F16(Arc::from(self.build::<crate::precision::F16>()?)),
+            DType::I16 => AnyTransform::I16(Arc::new(self.build_fixed()?)),
+            DType::I32 => AnyTransform::I32(Arc::new(self.build_fixed()?)),
         })
+    }
+
+    fn build_fixed<Q: crate::fixed::QSample>(&self) -> FftResult<crate::fixed::FixedPlan<Q>> {
+        if self.real_input {
+            return Err(FftError::Unsupported(
+                "real-input transforms are not available in fixed point (complex frames only)",
+            ));
+        }
+        if !matches!(self.algorithm, Algorithm::Auto | Algorithm::Stockham) {
+            return Err(FftError::Unsupported(
+                "fixed-point transforms run on the Stockham core (use Auto or Stockham)",
+            ));
+        }
+        crate::fixed::FixedPlan::<Q>::new(self.n, self.strategy, self.direction)
     }
 }
 
@@ -298,12 +317,39 @@ mod tests {
             PlanSpec::new(100).stockham().dtype(DType::F16).build_any().unwrap_err(),
             FftError::NonPowerOfTwo { n: 100 }
         );
-        // Every algorithm builds in every dtype (Bluestein via odd n).
-        for dtype in DType::ALL {
+        // Every algorithm builds in every float dtype (Bluestein via
+        // odd n).
+        for dtype in DType::FLOATS {
             assert!(PlanSpec::new(60).dtype(dtype).build_any().is_ok());
             assert!(PlanSpec::new(64).radix4().dtype(dtype).build_any().is_ok());
             assert!(PlanSpec::new(64).dit().dtype(dtype).build_any().is_ok());
             assert!(PlanSpec::new(64).real_input().dtype(dtype).build_any().is_ok());
+        }
+        // Fixed dtypes are Stockham/complex/dual-select only; every
+        // escape hatch is a typed error, never a fallback.
+        for dtype in [DType::I16, DType::I32] {
+            assert!(PlanSpec::new(64).dtype(dtype).build_any().is_ok());
+            assert!(PlanSpec::new(64).stockham().dtype(dtype).build_any().is_ok());
+            assert!(matches!(
+                PlanSpec::new(60).dtype(dtype).build_any().unwrap_err(),
+                FftError::NonPowerOfTwo { n: 60 }
+            ));
+            assert!(matches!(
+                PlanSpec::new(64).radix4().dtype(dtype).build_any().unwrap_err(),
+                FftError::Unsupported(_)
+            ));
+            assert!(matches!(
+                PlanSpec::new(64).real_input().dtype(dtype).build_any().unwrap_err(),
+                FftError::Unsupported(_)
+            ));
+            assert!(matches!(
+                PlanSpec::new(64)
+                    .strategy(Strategy::LinzerFeig)
+                    .dtype(dtype)
+                    .build_any()
+                    .unwrap_err(),
+                FftError::UnsupportedStrategy { strategy: Strategy::LinzerFeig, .. }
+            ));
         }
     }
 

@@ -1,0 +1,325 @@
+//! Planar quantized frame storage ([`FixedArena`]) with per-frame
+//! block-floating-point metadata, and the pooled integer scratch
+//! allocator ([`FixedScratch`]) the Stockham kernel ping-pongs
+//! through.
+//!
+//! A fixed-point frame is `q_re[i] + j·q_im[i]` with shared value
+//! `x[i] = q[i] · 2^scale` — one block exponent per frame
+//! ([`FrameMeta::scale`]).  Ingest picks the exponent from the frame's
+//! peak magnitude so the loudest sample uses the format's full
+//! dynamic range; the kernel grows it as BFP shifts accumulate.
+
+use super::{block_exponent, exp2i, QSample};
+
+/// Per-frame block-floating-point metadata.
+///
+/// * `scale` — the block exponent: sample value = `q · 2^scale`.
+/// * `l2` — the complex L2 norm of the frame's *intended* (true f64)
+///   value: set exactly from the payload at ingest, multiplied by the
+///   transform's exact gain (`2^(m/2)` forward, `2^(-m/2)` inverse
+///   after the 1/n fold) at execute.
+/// * `noise` — accumulated worst-case absolute L2 error vs that true
+///   value: ingest rounding at push, plus per-pass rounding/BFP loss
+///   from the [`crate::analysis::bounds`] fixed-point noise model at
+///   execute.
+/// * `bound` — `noise / l2` after an execute: the a-priori relative
+///   error bound the serving plane attaches to the response (`None`
+///   until the frame has been transformed, or if the payload norm
+///   overflows f64).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FrameMeta {
+    pub scale: i32,
+    pub l2: f64,
+    pub noise: f64,
+    pub bound: Option<f64>,
+}
+
+/// A borrowed view of one quantized frame plus its metadata — the
+/// dtype-erased read path ([`crate::fft::AnyArena::fixed_frame`]) and
+/// the wire encoder's input.
+#[derive(Clone, Copy, Debug)]
+pub enum FixedFrameRef<'a> {
+    I16 { scale: i32, bound: Option<f64>, re: &'a [i16], im: &'a [i16] },
+    I32 { scale: i32, bound: Option<f64>, re: &'a [i32], im: &'a [i32] },
+}
+
+/// Owned planar quantized frame storage: the fixed-point sibling of
+/// [`crate::fft::FrameArena`], frame-major and contiguous, plus one
+/// [`FrameMeta`] per frame.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FixedArena<Q: QSample> {
+    re: Vec<Q>,
+    im: Vec<Q>,
+    meta: Vec<FrameMeta>,
+    frame_len: usize,
+}
+
+impl<Q: QSample> FixedArena<Q> {
+    /// An empty arena for frames of `frame_len` complex samples.
+    pub fn new(frame_len: usize) -> Self {
+        FixedArena { re: Vec::new(), im: Vec::new(), meta: Vec::new(), frame_len }
+    }
+
+    /// Pre-size for `frames` frames (one allocation up front).
+    pub fn with_capacity(frame_len: usize, frames: usize) -> Self {
+        let mut a = FixedArena::new(frame_len);
+        a.reserve_frames(frames);
+        a
+    }
+
+    /// Samples per frame.
+    pub fn frame_len(&self) -> usize {
+        self.frame_len
+    }
+
+    /// Number of frames currently stored.
+    pub fn frames(&self) -> usize {
+        self.meta.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.meta.is_empty()
+    }
+
+    /// Ensure room for `frames` frames total.
+    pub fn reserve_frames(&mut self, frames: usize) {
+        let want = frames * self.frame_len;
+        self.re.reserve(want.saturating_sub(self.re.len()));
+        self.im.reserve(want.saturating_sub(self.im.len()));
+        self.meta.reserve(frames.saturating_sub(self.meta.len()));
+    }
+
+    /// Drop all frames, keep the allocation.
+    pub fn clear(&mut self) {
+        self.re.clear();
+        self.im.clear();
+        self.meta.clear();
+    }
+
+    /// Re-purpose the arena (possibly for a new frame length), keeping
+    /// the allocation — the pool recycle path.
+    pub fn reset(&mut self, frame_len: usize) {
+        self.clear();
+        self.frame_len = frame_len;
+    }
+
+    /// Append a zeroed frame (exact zero: `q = 0`, `scale = -FRAC`);
+    /// returns its index.
+    pub fn push_zeroed(&mut self) -> usize {
+        let new_len = self.re.len() + self.frame_len;
+        self.re.resize(new_len, Q::from_i64(0));
+        self.im.resize(new_len, Q::from_i64(0));
+        self.meta.push(FrameMeta {
+            scale: -(Q::FRAC as i32),
+            l2: 0.0,
+            noise: 0.0,
+            bound: None,
+        });
+        self.meta.len() - 1
+    }
+
+    /// Append a frame from split f64 payloads: pick the block exponent
+    /// from the frame's peak magnitude, quantize every component with
+    /// at most one quantum of error, and record the exact payload norm
+    /// for the bound denominator.  Returns the frame index.
+    pub fn push_frame_f64(&mut self, re: &[f64], im: &[f64]) -> usize {
+        assert_eq!(re.len(), self.frame_len, "frame length != arena frame_len");
+        assert_eq!(im.len(), self.frame_len, "frame length != arena frame_len");
+        let mut amax = 0.0f64;
+        let mut sumsq = 0.0f64;
+        for &x in re.iter().chain(im.iter()) {
+            amax = amax.max(x.abs()); // NaN-ignoring max
+            sumsq += x * x;
+        }
+        if amax == 0.0 {
+            return self.push_zeroed();
+        }
+        let scale = block_exponent(amax) - Q::FRAC as i32;
+        let inv = exp2i(-scale);
+        let quantize = |x: f64| {
+            let q = (x * inv).round() as i64;
+            Q::from_i64(q.clamp(-Q::MAX_Q, Q::MAX_Q))
+        };
+        self.re.extend(re.iter().map(|&x| quantize(x)));
+        self.im.extend(im.iter().map(|&x| quantize(x)));
+        // One quantum of worst-case error per real component (half a
+        // quantum from rounding, up to one for peak-adjacent clamps).
+        let noise = (2.0 * self.frame_len as f64).sqrt() * exp2i(scale);
+        self.meta.push(FrameMeta { scale, l2: sumsq.sqrt(), noise, bound: None });
+        self.meta.len() - 1
+    }
+
+    /// Borrow frame `i` as planar quantized slices.
+    pub fn frame(&self, i: usize) -> (&[Q], &[Q]) {
+        assert!(i < self.frames(), "frame index {i} out of range ({})", self.frames());
+        let a = i * self.frame_len;
+        let b = a + self.frame_len;
+        (&self.re[a..b], &self.im[a..b])
+    }
+
+    /// Frame `i`'s block-floating-point metadata.
+    pub fn meta(&self, i: usize) -> FrameMeta {
+        self.meta[i]
+    }
+
+    /// The a-priori relative error bound attached to frame `i` (set by
+    /// the last execute).
+    pub fn frame_bound(&self, i: usize) -> Option<f64> {
+        self.meta[i].bound
+    }
+
+    /// Mutably borrow frame `i`'s planes and metadata together — the
+    /// kernel's per-frame entry.
+    pub fn frame_parts_mut(&mut self, i: usize) -> (&mut [Q], &mut [Q], &mut FrameMeta) {
+        assert!(i < self.meta.len(), "frame index {i} out of range ({})", self.meta.len());
+        let a = i * self.frame_len;
+        let b = a + self.frame_len;
+        (&mut self.re[a..b], &mut self.im[a..b], &mut self.meta[i])
+    }
+
+    /// Copy frame `i` out, dequantized to f64 (`q · 2^scale`, exact —
+    /// a Q-code has at most 31 significant bits).
+    pub fn frame_f64(&self, i: usize) -> (Vec<f64>, Vec<f64>) {
+        let scale = exp2i(self.meta[i].scale);
+        let (re, im) = self.frame(i);
+        (
+            re.iter().map(|&q| q.to_i64() as f64 * scale).collect(),
+            im.iter().map(|&q| q.to_i64() as f64 * scale).collect(),
+        )
+    }
+}
+
+/// A per-worker pool of integer working buffers: the fixed-point
+/// sibling of [`crate::fft::Scratch`], with the same best-capacity-fit
+/// reuse and the same `takes`/`misses` counters the allocation
+/// regression test watches.
+#[derive(Debug, Default)]
+pub struct FixedScratch<Q: QSample> {
+    pool: Vec<Vec<Q>>,
+    takes: u64,
+    misses: u64,
+}
+
+impl<Q: QSample> FixedScratch<Q> {
+    pub fn new() -> Self {
+        FixedScratch { pool: Vec::new(), takes: 0, misses: 0 }
+    }
+
+    /// Total `take` calls served.
+    pub fn takes(&self) -> u64 {
+        self.takes
+    }
+
+    /// `take` calls that had to allocate — flat after warmup.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Buffers currently parked in the pool.
+    pub fn pooled(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// Take a buffer of length `len` with unspecified contents, served
+    /// from the pool (best capacity fit) when possible.
+    pub fn take(&mut self, len: usize) -> Vec<Q> {
+        self.takes += 1;
+        let mut best: Option<usize> = None;
+        for (i, b) in self.pool.iter().enumerate() {
+            if b.capacity() >= len
+                && best.map_or(true, |j| b.capacity() < self.pool[j].capacity())
+            {
+                best = Some(i);
+            }
+        }
+        match best {
+            Some(i) => {
+                let mut b = self.pool.swap_remove(i);
+                b.clear();
+                // Within capacity: resize never reallocates here.
+                b.resize(len, Q::from_i64(0));
+                b
+            }
+            None => {
+                self.misses += 1;
+                vec![Q::from_i64(0); len]
+            }
+        }
+    }
+
+    /// Return a buffer to the pool for reuse.
+    pub fn put(&mut self, buf: Vec<Q>) {
+        self.pool.push(buf);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ingest_quantizes_dyadics_exactly() {
+        let mut a = FixedArena::<i16>::new(4);
+        a.push_frame_f64(&[1.0, -0.5, 2.0, 0.0], &[0.25, 1.0, -1.0, 4.0]);
+        let m = a.meta(0);
+        // Peak 4.0 -> block exponent 3 -> scale = 3 - 15.
+        assert_eq!(m.scale, 3 - 15);
+        assert_eq!(m.bound, None);
+        let (re, im) = a.frame_f64(0);
+        assert_eq!(re, vec![1.0, -0.5, 2.0, 0.0]);
+        assert_eq!(im, vec![0.25, 1.0, -1.0, 4.0]);
+        assert!((m.l2 - 23.3125f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ingest_error_is_within_one_quantum() {
+        let n = 64;
+        let mut rng = crate::util::prng::Pcg32::seed(3);
+        let re: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+        let im: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+        let mut a = FixedArena::<i32>::new(n);
+        a.push_frame_f64(&re, &im);
+        let quantum = exp2i(a.meta(0).scale);
+        let (gr, gi) = a.frame_f64(0);
+        for i in 0..n {
+            assert!((gr[i] - re[i]).abs() <= quantum);
+            assert!((gi[i] - im[i]).abs() <= quantum);
+        }
+    }
+
+    #[test]
+    fn zero_frame_is_exact() {
+        let mut a = FixedArena::<i16>::new(3);
+        a.push_frame_f64(&[0.0; 3], &[0.0; 3]);
+        let m = a.meta(0);
+        assert_eq!((m.scale, m.l2, m.noise), (-15, 0.0, 0.0));
+        assert_eq!(a.frame_f64(0).0, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn reset_keeps_allocation() {
+        let mut a = FixedArena::<i16>::with_capacity(8, 4);
+        for _ in 0..4 {
+            a.push_zeroed();
+        }
+        let cap = a.re.capacity();
+        a.reset(8);
+        assert_eq!(a.frames(), 0);
+        assert_eq!(a.re.capacity(), cap);
+    }
+
+    #[test]
+    fn scratch_pool_amortizes() {
+        let mut s = FixedScratch::<i32>::new();
+        let b1 = s.take(128);
+        assert_eq!((b1.len(), s.misses()), (128, 1));
+        s.put(b1);
+        let b2 = s.take(64);
+        assert_eq!((b2.len(), s.misses()), (64, 1));
+        s.put(b2);
+        let b3 = s.take(256);
+        assert_eq!(s.misses(), 2);
+        s.put(b3);
+        assert_eq!((s.pooled(), s.takes()), (2, 3));
+    }
+}

@@ -1,0 +1,258 @@
+//! `fft::fixed` — the quantized integer FFT plane: Q15/Q31 sample
+//! types with block-floating-point (BFP) scaling and *honest* a-priori
+//! quantization bounds.
+//!
+//! The paper's dual-select strategy guarantees every precomputed ratio
+//! satisfies |ratio| ≤ 1 — which is exactly the representability
+//! condition for signed fixed point.  Dual-select twiddle tables
+//! therefore quantize into Q15/Q31 with at most half-quantum rounding
+//! and **zero saturation**, while Linzer–Feig's unbounded cotangents
+//! (clamped to ~1e7 in the float tables) cannot be stored in any
+//! Q-format at all.  This module makes that asymmetry executable:
+//!
+//! * [`FixedPlan`] — a Stockham radix-2 integer kernel running the same
+//!   6-op dual-select butterfly structure in integer
+//!   multiply-shift-add, over [`QSample`] sample types (`i16` = Q15,
+//!   `i32` = Q31).
+//! * [`FixedPassTable`] — per-pass dual-select ratio tables quantized
+//!   at plan-build time, with a build-time assertion that every
+//!   |ratio| ≤ 1; requesting a Linzer–Feig (or any other) fixed-point
+//!   table is a typed [`FftError::UnsupportedStrategy`], never a
+//!   clamped table.
+//! * [`FixedArena`] — planar quantized frame storage.  Each frame
+//!   carries a shared block exponent ([`FrameMeta::scale`]): sample
+//!   value = `q · 2^scale`.  Per butterfly pass the kernel scans the
+//!   running magnitude bound and conditionally right-shifts (recording
+//!   the shift in the scale), so intermediate values never overflow
+//!   and quiet signals keep full precision.
+//! * Every executed frame carries an a-priori relative error bound
+//!   ([`FrameMeta::bound`]) from the quantization-noise model in
+//!   [`crate::analysis::bounds`] (per-pass rounding noise + BFP
+//!   scaling loss, composed with the paper's eq. (11) framework); the
+//!   integration tests verify it against the f64 oracle.
+//!
+//! The plane integrates with the dtype-erased serving stack through
+//! [`crate::fft::DType::I16`] / [`crate::fft::DType::I32`]: the same
+//! `AnyTransform` / `AnyArena` / wire-protocol path that serves
+//! f64/f32/bf16/f16 serves Q15/Q31, with a compact integer payload
+//! encoding on the wire (see `PROTOCOL.md` v3).
+
+pub mod arena;
+pub mod ols;
+pub mod plan;
+pub mod table;
+
+pub use arena::{FixedArena, FixedFrameRef, FixedScratch, FrameMeta};
+pub use ols::{filter_offline_fixed, FixedOlsFilter};
+pub use plan::FixedPlan;
+pub use table::{lane_audit, FixedPassTable};
+
+/// A fixed-point sample format the integer kernel can run in: a signed
+/// two's-complement integer interpreted as Q`FRAC` (value =
+/// `q · 2^(scale - 0)` with the block exponent tracked per frame).
+///
+/// All kernel arithmetic happens in `i64` (which holds every
+/// intermediate for both Q15 and Q31 — see [`mul_round`]); the sample
+/// type only stores.
+pub trait QSample:
+    Copy + Send + Sync + core::fmt::Debug + PartialEq + Eq + 'static
+{
+    /// Wire/CLI name (`"i16"` / `"i32"`).
+    const NAME: &'static str;
+    /// Fractional bits of the Q-format (15 / 31).
+    const FRAC: u32;
+    /// Largest stored magnitude, `2^FRAC - 1` (symmetric quantizer:
+    /// `-MAX_Q ..= MAX_Q`; the most negative two's-complement code is
+    /// never produced).
+    const MAX_Q: i64;
+
+    /// Narrow a kernel intermediate back into the sample type.  The
+    /// BFP shift rule guarantees `|v| <= MAX_Q` at every store.
+    fn from_i64(v: i64) -> Self;
+    /// Widen into the kernel's working integer.
+    fn to_i64(self) -> i64;
+}
+
+impl QSample for i16 {
+    const NAME: &'static str = "i16";
+    const FRAC: u32 = 15;
+    const MAX_Q: i64 = (1 << 15) - 1;
+
+    #[inline]
+    fn from_i64(v: i64) -> Self {
+        debug_assert!(v.abs() <= Self::MAX_Q, "Q15 store out of range: {v}");
+        v as i16
+    }
+
+    #[inline]
+    fn to_i64(self) -> i64 {
+        self as i64
+    }
+}
+
+impl QSample for i32 {
+    const NAME: &'static str = "i32";
+    const FRAC: u32 = 31;
+    const MAX_Q: i64 = (1 << 31) - 1;
+
+    #[inline]
+    fn from_i64(v: i64) -> Self {
+        debug_assert!(v.abs() <= Self::MAX_Q, "Q31 store out of range: {v}");
+        v as i32
+    }
+
+    #[inline]
+    fn to_i64(self) -> i64 {
+        self as i64
+    }
+}
+
+/// `2^e` as f64 (exact for every exponent a clamped block scale can
+/// take — see [`block_exponent`]).
+#[inline]
+pub fn exp2i(e: i32) -> f64 {
+    (e as f64).exp2()
+}
+
+/// Fixed-point product in Q`frac`, round half up:
+/// `(a·b + 2^(frac-1)) >> frac`.  Error vs the real product is in
+/// (-1/2, 1/2] quanta.
+///
+/// Fits `i64` for both formats: the BFP shift rule keeps every operand
+/// below `2^31` and every factor table entry at most `MAX_Q < 2^31`,
+/// so `|a·b| < 2^62`.
+#[inline]
+pub fn mul_round(a: i64, b: i64, frac: u32) -> i64 {
+    (a * b + (1i64 << (frac - 1))) >> frac
+}
+
+/// Arithmetic right shift, round half up: `(x + 2^(s-1)) >> s` (the
+/// BFP down-scale).  `|result| <= (|x| >> s) + 1` and the rounding
+/// error vs `x / 2^s` is in (-1/2, 1/2] post-shift quanta.
+#[inline]
+pub fn rshift_round(x: i64, s: u32) -> i64 {
+    if s == 0 {
+        x
+    } else {
+        (x + (1i64 << (s - 1))) >> s
+    }
+}
+
+/// Quantize a real in [-1, 1] to Q`frac`: returns `(q, saturated)`.
+///
+/// `saturated` is true iff `|x| > 1` or `x` is not finite — the value
+/// is *unrepresentable* and gets pinned to ±`MAX_Q`.  Exactly ±1.0 is
+/// representable to within one quantum (the symmetric quantizer clamps
+/// `2^frac` to `MAX_Q = 2^frac - 1`) and is NOT counted as saturation;
+/// dual-select tables contain such entries (t = ±1 at the odd eighth
+/// roots, |mult| = 1 on the sine path) and their one-quantum error is
+/// covered by the noise model's twiddle-quantization budget.
+pub fn quantize_unit(x: f64, frac: u32) -> (i64, bool) {
+    let max_q = (1i64 << frac) - 1;
+    if !x.is_finite() || x.abs() > 1.0 {
+        return (if x < 0.0 { -max_q } else { max_q }, true);
+    }
+    let q = (x * (1i64 << frac) as f64).round() as i64;
+    (q.clamp(-max_q, max_q), false)
+}
+
+/// The block exponent for a frame with peak magnitude `amax > 0`: the
+/// `e` with `2^(e-1) <= amax < 2^e`, so the peak sample lands in the
+/// top bit of the Q-format and dyadic values quantize exactly.
+///
+/// Clamped to `[-990, 1024]` so that every derived power of two the
+/// plane computes with (`2^scale`, `2^-scale`, dequantized values) is
+/// a normal, finite f64 for both Q15 and Q31.  Clamping the lower end
+/// *up* keeps the error model honest: the per-component ingest error
+/// stays at most one (now larger) quantum.
+pub fn block_exponent(amax: f64) -> i32 {
+    debug_assert!(amax > 0.0, "block_exponent of non-positive peak {amax}");
+    let mut e = amax.log2().floor() as i32 + 1;
+    // log2 is correctly rounded only per-platform; pin the invariant.
+    while e > i32::MIN + 1 && exp2i(e - 1) > amax {
+        e -= 1;
+    }
+    while e < 1025 && amax >= exp2i(e) {
+        e += 1;
+    }
+    e.clamp(-990, 1024)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qsample_formats() {
+        assert_eq!(<i16 as QSample>::FRAC, 15);
+        assert_eq!(<i16 as QSample>::MAX_Q, 32767);
+        assert_eq!(<i32 as QSample>::FRAC, 31);
+        assert_eq!(<i32 as QSample>::MAX_Q, 2147483647);
+        assert_eq!(<i16 as QSample>::from_i64(-5).to_i64(), -5);
+        assert_eq!(<i32 as QSample>::from_i64(1 << 30).to_i64(), 1 << 30);
+    }
+
+    #[test]
+    fn mul_round_rounds_half_up() {
+        // 0.5 * 0.5 = 0.25 exactly in Q15.
+        let half = 1i64 << 14;
+        assert_eq!(mul_round(half, half, 15), 1 << 13);
+        // Rounding: 1 quantum * 1 quantum rounds to... half = 2^14,
+        // (1*1 + 2^14) >> 15 = 0 (product far below half a quantum).
+        assert_eq!(mul_round(1, 1, 15), 0);
+        // Exactly half a quantum rounds up: a*b = 2^14.
+        assert_eq!(mul_round(1 << 7, 1 << 7, 15), 1);
+        // Sign symmetry is round-half-up (toward +inf), as documented.
+        assert_eq!(mul_round(-(1 << 7), 1 << 7, 15), 0);
+    }
+
+    #[test]
+    fn rshift_round_bounds() {
+        assert_eq!(rshift_round(7, 0), 7);
+        assert_eq!(rshift_round(5, 1), 3); // 2.5 -> 3 (half up)
+        assert_eq!(rshift_round(-5, 1), -2); // -2.5 -> -2 (half up)
+        assert_eq!(rshift_round(4, 2), 1);
+        for x in [-1000i64, -3, -1, 0, 1, 3, 999] {
+            for s in 1..4u32 {
+                let got = rshift_round(x, s);
+                let real = x as f64 / (1u64 << s) as f64;
+                assert!((got as f64 - real).abs() <= 0.5, "{x}>>{s}");
+                assert!(got.abs() <= (x.abs() >> s) + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_unit_is_exact_on_dyadics_and_flags_saturation() {
+        let (q, sat) = quantize_unit(0.5, 15);
+        assert_eq!((q, sat), (1 << 14, false));
+        let (q, sat) = quantize_unit(-0.25, 31);
+        assert_eq!((q, sat), (-(1 << 29), false));
+        // Exactly 1.0 clamps one quantum short, NOT saturation.
+        let (q, sat) = quantize_unit(1.0, 15);
+        assert_eq!((q, sat), (32767, false));
+        let (q, sat) = quantize_unit(-1.0, 15);
+        assert_eq!((q, sat), (-32767, false));
+        // Out of the unit interval: saturated.
+        assert_eq!(quantize_unit(1.0 + 1e-9, 15), (32767, true));
+        assert_eq!(quantize_unit(-163.0, 15), (-32767, true));
+        assert_eq!(quantize_unit(1e7, 31), (2147483647, true));
+        assert!(quantize_unit(f64::INFINITY, 15).1);
+        assert!(quantize_unit(f64::NAN, 15).1);
+    }
+
+    #[test]
+    fn block_exponent_brackets_the_peak() {
+        for amax in [1.0, 0.5, 0.75, 2.0, 3.0, 1e-9, 1e9, 0.9999999] {
+            let e = block_exponent(amax);
+            assert!(exp2i(e - 1) <= amax && amax < exp2i(e), "amax={amax} e={e}");
+        }
+        assert_eq!(block_exponent(1.0), 1);
+        assert_eq!(block_exponent(0.5), 0);
+        assert_eq!(block_exponent(0.9), 0);
+        // Extreme ranges clamp but stay finite in every derived scale.
+        assert_eq!(block_exponent(f64::MIN_POSITIVE / 4.0), -990);
+        assert_eq!(block_exponent(f64::MAX), 1024);
+        assert!(exp2i(block_exponent(f64::MAX) - 31).is_finite());
+    }
+}

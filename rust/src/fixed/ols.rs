@@ -1,0 +1,470 @@
+//! Overlap-save streaming convolution over the quantized plane:
+//! [`FixedOlsFilter`] is the Q15/Q31 sibling of
+//! [`crate::stream::OlsFilter`], with the identical block geometry and
+//! the identical chunk-invariance guarantee.
+//!
+//! Differences from the float engine, forced by block floating point:
+//!
+//! * The carry buffer stays **f64**.  A fixed-point frame's block
+//!   exponent depends on the whole frame's peak, so samples cannot be
+//!   quantized as they arrive; instead each FFT block quantizes its
+//!   own N samples when it forms.  Blocks still cover the same
+//!   absolute sample positions regardless of chunking, and each block
+//!   is a pure function of its f64 samples — so ragged pushes remain
+//!   **bit-identical** to one big push.
+//! * The tap spectrum `H` is precomputed and applied in f64 (the
+//!   pointwise product is not an FFT pass; running it in f64 costs a
+//!   few ulps and keeps the quantization budget for the transforms).
+//!   Each block runs: quantize → fixed FFT → dequantize → `·H` →
+//!   requantize → fixed IFFT → dequantize → emit.
+//! * Instead of the float plane's a-priori eq. (11) pass-count bound,
+//!   [`FixedOlsFilter::bound`] accumulates the per-block quantization
+//!   bounds the fixed kernels attach (signal-dependent by nature) into
+//!   a running relative bound for everything emitted so far.
+
+use crate::fft::{FftError, FftResult, PlanSpec, Scratch, Strategy};
+
+use super::arena::{FixedArena, FixedScratch};
+use super::plan::FixedPlan;
+use super::{exp2i, QSample};
+
+/// Smallest FFT block the auto-sizer will pick (same as the float
+/// engine).
+const MIN_FFT: usize = 8;
+
+/// Stateful overlap-save FIR filter in fixed-point format `Q`.
+#[derive(Debug)]
+pub struct FixedOlsFilter<Q: QSample> {
+    /// FFT block size `N` (power of two, `> taps`).
+    fft_n: usize,
+    /// Tap count `L`.
+    taps: usize,
+    /// Valid (non-aliased) outputs per block: `V = N - L + 1`.
+    valid: usize,
+    strategy: Strategy,
+    fwd: FixedPlan<Q>,
+    inv: FixedPlan<Q>,
+    /// `H = FFT(h zero-padded to N)` in f64, and max_k |H_k|.
+    freq_re: Vec<f64>,
+    freq_im: Vec<f64>,
+    hmax: f64,
+    /// History (last `L-1` consumed samples) followed by input not yet
+    /// forming a full block — f64 (see module docs).
+    carry_re: Vec<f64>,
+    carry_im: Vec<f64>,
+    arena: FixedArena<Q>,
+    scratch: FixedScratch<Q>,
+    /// Reused f64 staging for the dequantize → ·H → requantize hop.
+    work_re: Vec<f64>,
+    work_im: Vec<f64>,
+    consumed: u64,
+    blocks: u64,
+    /// Σ (per-block absolute L2 error bound)² — emitted segments are
+    /// disjoint, so the stream-wide absolute error is the root of this.
+    sum_err2: f64,
+    /// Σ |emitted sample|² (dequantized), the bound's denominator.
+    sum_out2: f64,
+    /// Running max of the per-prefix relative bound — reported bounds
+    /// are monotone non-decreasing like the float plane's pass-count
+    /// bound, so streaming clients may treat the latest value as
+    /// covering everything emitted so far.
+    worst_bound: f64,
+    /// Sticky: set once any prefix had no honest bound (emitted energy
+    /// did not dominate the error budget); [`FixedOlsFilter::bound`]
+    /// stays `None` from then on.
+    bound_lost: bool,
+    finished: bool,
+}
+
+impl<Q: QSample> FixedOlsFilter<Q> {
+    /// Build a filter for `taps_re/taps_im` with the FFT block size
+    /// auto-chosen from the tap count.  `strategy` must be
+    /// [`Strategy::DualSelect`] — anything else is the fixed plane's
+    /// typed unrepresentability error.
+    pub fn new(strategy: Strategy, taps_re: &[f64], taps_im: &[f64]) -> FftResult<Self> {
+        let fft_n = (4 * taps_re.len().max(1)).next_power_of_two().max(MIN_FFT);
+        Self::with_fft_len(strategy, taps_re, taps_im, fft_n)
+    }
+
+    /// [`FixedOlsFilter::new`] with an explicit FFT block size (power
+    /// of two, strictly greater than the tap count).
+    pub fn with_fft_len(
+        strategy: Strategy,
+        taps_re: &[f64],
+        taps_im: &[f64],
+        fft_n: usize,
+    ) -> FftResult<Self> {
+        let taps = taps_re.len();
+        if taps == 0 {
+            return Err(FftError::InvalidArgument(
+                "overlap-save filter needs at least one tap".into(),
+            ));
+        }
+        if taps_im.len() != taps {
+            return Err(FftError::LengthMismatch { expected: taps, got: taps_im.len() });
+        }
+        crate::fft::log2_exact(fft_n)?;
+        if fft_n < taps + 1 {
+            return Err(FftError::InvalidSize {
+                n: fft_n,
+                reason: "overlap-save FFT block must exceed the tap count",
+            });
+        }
+        let fwd = FixedPlan::<Q>::new(fft_n, strategy, crate::fft::Direction::Forward)?;
+        let inv = FixedPlan::<Q>::new(fft_n, strategy, crate::fft::Direction::Inverse)?;
+
+        // H in f64 — the reference tap spectrum the fixed blocks are
+        // pointwise-multiplied with.
+        let mut freq_re = taps_re.to_vec();
+        let mut freq_im = taps_im.to_vec();
+        freq_re.resize(fft_n, 0.0);
+        freq_im.resize(fft_n, 0.0);
+        let h_fft = PlanSpec::new(fft_n).strategy(strategy).stockham().build::<f64>()?;
+        let mut fscr = Scratch::<f64>::new();
+        h_fft.execute_frame(&mut freq_re, &mut freq_im, &mut fscr);
+        let hmax = freq_re
+            .iter()
+            .zip(&freq_im)
+            .map(|(&r, &i)| (r * r + i * i).sqrt())
+            .fold(0.0f64, f64::max);
+
+        Ok(FixedOlsFilter {
+            fft_n,
+            taps,
+            valid: fft_n - taps + 1,
+            strategy,
+            fwd,
+            inv,
+            freq_re,
+            freq_im,
+            hmax,
+            carry_re: vec![0.0; taps - 1],
+            carry_im: vec![0.0; taps - 1],
+            arena: FixedArena::new(fft_n),
+            scratch: FixedScratch::new(),
+            work_re: vec![0.0; fft_n],
+            work_im: vec![0.0; fft_n],
+            consumed: 0,
+            blocks: 0,
+            sum_err2: 0.0,
+            sum_out2: 0.0,
+            worst_bound: 0.0,
+            bound_lost: false,
+            finished: false,
+        })
+    }
+
+    /// FFT block size `N`.
+    pub fn fft_len(&self) -> usize {
+        self.fft_n
+    }
+
+    /// Tap count `L`.
+    pub fn taps(&self) -> usize {
+        self.taps
+    }
+
+    /// Valid output samples per block (`N - L + 1`).
+    pub fn valid_per_block(&self) -> usize {
+        self.valid
+    }
+
+    pub fn strategy(&self) -> Strategy {
+        self.strategy
+    }
+
+    /// Input samples consumed so far.
+    pub fn consumed(&self) -> u64 {
+        self.consumed
+    }
+
+    /// FFT blocks processed so far.
+    pub fn blocks(&self) -> u64 {
+        self.blocks
+    }
+
+    /// Total butterfly passes executed so far (`log2 N` for the tap
+    /// spectrum plus forward + inverse per block).
+    pub fn fft_passes(&self) -> u64 {
+        let m = self.fft_n.trailing_zeros() as u64;
+        m * (1 + 2 * self.blocks)
+    }
+
+    /// The running a-priori relative error bound for everything
+    /// emitted so far, accumulated from the per-block quantization
+    /// bounds the fixed kernels attach.  `Some(0.0)` before the first
+    /// block; `None` when some prefix had no honest bound (the emitted
+    /// energy did not dominate the accumulated error budget — e.g. a
+    /// filter that cancels its input to below the quantization floor).
+    /// Reported values are monotone non-decreasing across the stream:
+    /// each is the max over all block prefixes of `E/(O−E)`, so the
+    /// latest bound covers everything emitted so far.
+    pub fn bound(&self) -> Option<f64> {
+        if self.blocks == 0 {
+            return Some(0.0);
+        }
+        if self.bound_lost {
+            return None;
+        }
+        Some(self.worst_bound)
+    }
+
+    /// Worst-case output samples the next `chunk_len`-sample push can
+    /// emit.
+    pub fn worst_case_out(&self, chunk_len: usize) -> usize {
+        self.carry_re.len() + chunk_len
+    }
+
+    /// Feed one chunk; completed valid output samples are appended to
+    /// `out_re`/`out_im` dequantized to f64.  Returns the number of
+    /// complex samples emitted.
+    pub fn push(
+        &mut self,
+        re: &[f64],
+        im: &[f64],
+        out_re: &mut Vec<f64>,
+        out_im: &mut Vec<f64>,
+    ) -> FftResult<usize> {
+        if self.finished {
+            return Err(FftError::ChannelClosed("overlap-save filter already finished"));
+        }
+        if re.len() != im.len() {
+            return Err(FftError::LengthMismatch { expected: re.len(), got: im.len() });
+        }
+        self.carry_re.extend_from_slice(re);
+        self.carry_im.extend_from_slice(im);
+        self.consumed += re.len() as u64;
+        Ok(self.run_blocks(usize::MAX, out_re, out_im))
+    }
+
+    /// Flush the tail (zero-pad pending input; total output length is
+    /// `consumed + taps - 1`, or 0 for an empty stream) and close.
+    pub fn finish(&mut self, out_re: &mut Vec<f64>, out_im: &mut Vec<f64>) -> FftResult<usize> {
+        if self.finished {
+            return Err(FftError::ChannelClosed("overlap-save filter already finished"));
+        }
+        self.finished = true;
+        if self.consumed == 0 {
+            return Ok(0);
+        }
+        let total = self.consumed + self.taps as u64 - 1;
+        let mut remaining = (total - self.blocks * self.valid as u64) as usize;
+        let mut emitted = 0usize;
+        while remaining > 0 {
+            self.carry_re.resize(self.fft_n, 0.0);
+            self.carry_im.resize(self.fft_n, 0.0);
+            let want = remaining.min(self.valid);
+            let got = self.run_blocks(want, out_re, out_im);
+            debug_assert_eq!(got, want);
+            remaining -= got;
+            emitted += got;
+        }
+        Ok(emitted)
+    }
+
+    fn run_blocks(
+        &mut self,
+        mut limit: usize,
+        out_re: &mut Vec<f64>,
+        out_im: &mut Vec<f64>,
+    ) -> usize {
+        let n = self.fft_n;
+        let sqrt_n = (n as f64).sqrt();
+        let mut emitted = 0usize;
+        while self.carry_re.len() >= n && limit > 0 {
+            // Quantize the block, forward transform, dequantize.
+            self.arena.reset(n);
+            self.arena.push_frame_f64(&self.carry_re[..n], &self.carry_im[..n]);
+            self.fwd.execute_frame(&mut self.arena, 0, &mut self.scratch);
+            let mf = self.arena.meta(0);
+            let fscale = exp2i(mf.scale);
+            let (qre, qim) = self.arena.frame(0);
+            let mut ynorm2 = 0.0f64;
+            for k in 0..n {
+                let yr = qre[k].to_i64() as f64 * fscale;
+                let yi = qim[k].to_i64() as f64 * fscale;
+                ynorm2 += yr * yr + yi * yi;
+                // Pointwise ·H in f64.
+                self.work_re[k] = yr * self.freq_re[k] - yi * self.freq_im[k];
+                self.work_im[k] = yr * self.freq_im[k] + yi * self.freq_re[k];
+            }
+            // Requantize, inverse transform.
+            self.arena.reset(n);
+            self.arena.push_frame_f64(&self.work_re, &self.work_im);
+            self.inv.execute_frame(&mut self.arena, 0, &mut self.scratch);
+            let mi = self.arena.meta(0);
+
+            // Per-block absolute error budget (output units):
+            //  * forward-transform noise, scaled through ·H and the
+            //    1/√n gain of the exact inverse,
+            //  * f64 rounding of the pointwise product (a few ulps),
+            //  * requantization + inverse-transform noise, which the
+            //    inverse frame's own bound already covers vs its f64
+            //    payload.
+            let fwd_err = self.hmax * mf.bound.unwrap_or(f64::INFINITY) * mf.l2 / sqrt_n;
+            let mul_err = 4.0 * f64::EPSILON * self.hmax * ynorm2.sqrt() / sqrt_n;
+            let inv_err = mi.bound.unwrap_or(f64::INFINITY) * mi.l2;
+            let block_err = fwd_err + mul_err + inv_err;
+            self.sum_err2 += block_err * block_err;
+
+            // Emit the last V outputs (the non-aliased ones).
+            let take = self.valid.min(limit);
+            let iscale = exp2i(mi.scale);
+            let (qre, qim) = self.arena.frame(0);
+            for i in 0..take {
+                let r = qre[self.taps - 1 + i].to_i64() as f64 * iscale;
+                let v = qim[self.taps - 1 + i].to_i64() as f64 * iscale;
+                self.sum_out2 += r * r + v * v;
+                out_re.push(r);
+                out_im.push(v);
+            }
+            self.carry_re.drain(..self.valid);
+            self.carry_im.drain(..self.valid);
+            self.blocks += 1;
+            emitted += take;
+            limit -= take;
+
+            // Fold this prefix's relative bound into the running max:
+            // ‖ŷ−y‖ ≤ E and ‖ŷ‖ = O  ⇒  ‖y‖ ≥ O−E  ⇒  rel ≤ E/(O−E).
+            let e = self.sum_err2.sqrt();
+            let o = self.sum_out2.sqrt();
+            if !e.is_finite() || o <= e {
+                self.bound_lost = true;
+            } else {
+                self.worst_bound = self.worst_bound.max(e / (o - e));
+            }
+        }
+        emitted
+    }
+}
+
+/// Run `sig` through a fresh fixed-point overlap-save filter in ONE
+/// push + finish — the offline reference the chunk-invariance tests
+/// compare against, bit for bit.
+pub fn filter_offline_fixed<Q: QSample>(
+    strategy: Strategy,
+    taps_re: &[f64],
+    taps_im: &[f64],
+    sig_re: &[f64],
+    sig_im: &[f64],
+) -> FftResult<(Vec<f64>, Vec<f64>)> {
+    let mut f = FixedOlsFilter::<Q>::new(strategy, taps_re, taps_im)?;
+    let mut out_re = Vec::new();
+    let mut out_im = Vec::new();
+    f.push(sig_re, sig_im, &mut out_re, &mut out_im)?;
+    f.finish(&mut out_re, &mut out_im)?;
+    Ok((out_re, out_im))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::Planner;
+    use crate::stream::filter_offline;
+    use crate::util::metrics::rel_l2;
+    use crate::util::prng::Pcg32;
+
+    fn noise(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = Pcg32::seed(seed);
+        (
+            (0..n).map(|_| rng.gaussian()).collect(),
+            (0..n).map(|_| rng.gaussian()).collect(),
+        )
+    }
+
+    #[test]
+    fn matches_f64_reference_within_running_bound() {
+        let (hr, hi) = noise(9, 1);
+        let (xr, xi) = noise(300, 2);
+        let mut f = FixedOlsFilter::<i16>::new(Strategy::DualSelect, &hr, &hi).unwrap();
+        let mut gr = Vec::new();
+        let mut gi = Vec::new();
+        f.push(&xr, &xi, &mut gr, &mut gi).unwrap();
+        f.finish(&mut gr, &mut gi).unwrap();
+        assert_eq!(gr.len(), 300 + 9 - 1);
+        let (wr, wi) =
+            filter_offline(&Planner::<f64>::new(), Strategy::DualSelect, &hr, &hi, &xr, &xi)
+                .unwrap();
+        let err = rel_l2(&gr, &gi, &wr, &wi);
+        let bound = f.bound().expect("running bound after blocks");
+        assert!(err <= bound, "err {err:.3e} > bound {bound:.3e}");
+        assert!(bound < 0.5, "bound uselessly loose: {bound:.3e}");
+        assert!(err > 0.0);
+    }
+
+    #[test]
+    fn chunking_is_bit_invariant() {
+        let (hr, hi) = noise(9, 3);
+        let (xr, xi) = noise(257, 4);
+        let (whole_re, whole_im) =
+            filter_offline_fixed::<i16>(Strategy::DualSelect, &hr, &hi, &xr, &xi).unwrap();
+        let mut f = FixedOlsFilter::<i16>::new(Strategy::DualSelect, &hr, &hi).unwrap();
+        let mut got_re = Vec::new();
+        let mut got_im = Vec::new();
+        let mut rng = Pcg32::seed(5);
+        let mut off = 0usize;
+        while off < xr.len() {
+            let len = (1 + rng.below(40)).min(xr.len() - off);
+            f.push(&xr[off..off + len], &xi[off..off + len], &mut got_re, &mut got_im)
+                .unwrap();
+            off += len;
+        }
+        f.finish(&mut got_re, &mut got_im).unwrap();
+        assert_eq!(got_re, whole_re, "re plane differs bitwise");
+        assert_eq!(got_im, whole_im, "im plane differs bitwise");
+    }
+
+    #[test]
+    fn q31_is_much_tighter_than_q15() {
+        let (hr, hi) = noise(7, 6);
+        let (xr, xi) = noise(200, 7);
+        let (wr, wi) =
+            filter_offline(&Planner::<f64>::new(), Strategy::DualSelect, &hr, &hi, &xr, &xi)
+                .unwrap();
+        let (r16, i16_) =
+            filter_offline_fixed::<i16>(Strategy::DualSelect, &hr, &hi, &xr, &xi).unwrap();
+        let (r32, i32_) =
+            filter_offline_fixed::<i32>(Strategy::DualSelect, &hr, &hi, &xr, &xi).unwrap();
+        let e16 = rel_l2(&r16, &i16_, &wr, &wi);
+        let e32 = rel_l2(&r32, &i32_, &wr, &wi);
+        assert!(e32 < e16 / 100.0, "q15 {e16:.3e} q31 {e32:.3e}");
+    }
+
+    #[test]
+    fn constructor_validates_and_rejects_lf() {
+        assert!(FixedOlsFilter::<i16>::new(Strategy::DualSelect, &[], &[]).is_err());
+        assert!(FixedOlsFilter::<i16>::new(Strategy::DualSelect, &[1.0, 2.0], &[0.0]).is_err());
+        assert!(
+            FixedOlsFilter::<i16>::with_fft_len(Strategy::DualSelect, &[1.0; 8], &[0.0; 8], 8)
+                .is_err()
+        );
+        let err = FixedOlsFilter::<i16>::new(Strategy::LinzerFeig, &[1.0; 4], &[0.0; 4])
+            .unwrap_err();
+        assert!(
+            matches!(err, FftError::UnsupportedStrategy { strategy: Strategy::LinzerFeig, .. }),
+            "{err}"
+        );
+        let f = FixedOlsFilter::<i32>::new(Strategy::DualSelect, &[1.0; 8], &[0.0; 8]).unwrap();
+        assert_eq!(f.fft_len(), 32);
+        assert_eq!(f.valid_per_block(), 32 - 8 + 1);
+        assert_eq!(f.bound(), Some(0.0));
+    }
+
+    #[test]
+    fn finish_emits_exact_tail_and_closes() {
+        let (hr, hi) = noise(5, 8);
+        let mut f = FixedOlsFilter::<i32>::new(Strategy::DualSelect, &hr, &hi).unwrap();
+        let (xr, xi) = noise(3, 9);
+        let mut o_re = Vec::new();
+        let mut o_im = Vec::new();
+        assert_eq!(f.push(&xr, &xi, &mut o_re, &mut o_im).unwrap(), 0);
+        f.finish(&mut o_re, &mut o_im).unwrap();
+        assert_eq!(o_re.len(), 3 + 5 - 1);
+        assert!(f.push(&xr, &xi, &mut o_re, &mut o_im).is_err());
+        assert!(f.bound().is_some());
+        let mut empty = FixedOlsFilter::<i32>::new(Strategy::DualSelect, &hr, &hi).unwrap();
+        let mut e_re = Vec::new();
+        let mut e_im = Vec::new();
+        assert_eq!(empty.finish(&mut e_re, &mut e_im).unwrap(), 0);
+    }
+}

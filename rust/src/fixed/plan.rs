@@ -1,0 +1,386 @@
+//! [`FixedPlan`] — the quantized Stockham radix-2 transform: the same
+//! autosort pass structure and 6-op dual-select butterfly as the float
+//! [`crate::fft::Plan`], executed in integer multiply-shift-add over a
+//! [`FixedArena`] with per-pass block-floating-point scaling.
+//!
+//! Per pass the kernel scans the source frame's peak code and picks
+//! the smallest right shift `s` such that every butterfly output
+//! provably fits the Q-format:
+//!
+//! ```text
+//!   ratio pass:    |out| ≤ 3·M' + 2  with  M' = (max|q| >> s) + 1
+//!   trivial pass:  |out| ≤ 2·M'
+//! ```
+//!
+//! (ratio outputs are `a ± mul_round(m, s12)` with
+//! `|s12| ≤ 2M' + 1` and two half-up roundings; all intermediates fit
+//! `i64` for both Q15 and Q31).  The shift is folded into the frame's
+//! block exponent and its half-quantum rounding loss into the noise
+//! chain, so the attached bound stays honest.
+
+use core::marker::PhantomData;
+
+use crate::analysis::bounds::{fixed_pass_noise, fixed_relative_bound};
+use crate::fft::{log2_exact, Direction, FftResult, Strategy};
+
+use super::arena::{FixedArena, FixedScratch, FrameMeta};
+use super::table::{fixed_pass_tables, FixedPassTable};
+use super::{mul_round, rshift_round, QSample};
+
+/// A planned quantized transform for one `(n, strategy, direction)` in
+/// sample format `Q` (Q15 for `i16`, Q31 for `i32`).
+#[derive(Debug)]
+pub struct FixedPlan<Q: QSample> {
+    n: usize,
+    m: u32,
+    strategy: Strategy,
+    direction: Direction,
+    passes: Vec<FixedPassTable>,
+    _format: PhantomData<Q>,
+}
+
+impl<Q: QSample> FixedPlan<Q> {
+    /// Build the quantized tables for an `n`-point transform.  `n`
+    /// must be a power of two and `strategy` must be
+    /// [`Strategy::DualSelect`] — every other strategy is a typed
+    /// error (unrepresentable ratios; see [`super::table`]).
+    pub fn new(n: usize, strategy: Strategy, direction: Direction) -> FftResult<Self> {
+        let m = log2_exact(n)?;
+        let passes = fixed_pass_tables(n, strategy, direction, Q::FRAC)?;
+        Ok(FixedPlan { n, m, strategy, direction, passes, _format: PhantomData })
+    }
+
+    /// Logical frame length (complex samples per execute).
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Butterfly strategy baked into the quantized tables.
+    pub fn strategy(&self) -> Strategy {
+        self.strategy
+    }
+
+    /// Transform direction.
+    pub fn direction(&self) -> Direction {
+        self.direction
+    }
+
+    /// Number of butterfly passes (`log2 n`).
+    pub fn num_passes(&self) -> u32 {
+        self.m
+    }
+
+    /// Execute every frame of `arena` in place, updating each frame's
+    /// block exponent and a-priori quantization bound.
+    pub fn execute_many(&self, arena: &mut FixedArena<Q>, scratch: &mut FixedScratch<Q>) {
+        for i in 0..arena.frames() {
+            self.execute_frame(arena, i, scratch);
+        }
+    }
+
+    /// Execute a single frame of `arena` in place.
+    pub fn execute_frame(
+        &self,
+        arena: &mut FixedArena<Q>,
+        frame: usize,
+        scratch: &mut FixedScratch<Q>,
+    ) {
+        assert_eq!(
+            arena.frame_len(),
+            self.n,
+            "arena frame_len != plan size"
+        );
+        let mut sre = scratch.take(self.n);
+        let mut sim = scratch.take(self.n);
+        let (re, im, meta) = arena.frame_parts_mut(frame);
+        self.run_frame(re, im, meta, &mut sre, &mut sim);
+        scratch.put(sre);
+        scratch.put(sim);
+    }
+
+    fn run_frame(
+        &self,
+        re: &mut [Q],
+        im: &mut [Q],
+        meta: &mut FrameMeta,
+        sre: &mut [Q],
+        sim: &mut [Q],
+    ) {
+        let l2_in = meta.l2;
+        let mut scale = meta.scale;
+        let mut noise = meta.noise;
+        // Ping-pong parity chosen so the last pass lands in the frame.
+        let mut src_in_frame = self.passes.len() % 2 == 0;
+        if !src_in_frame {
+            sre.copy_from_slice(re);
+            sim.copy_from_slice(im);
+        }
+        for table in &self.passes {
+            let maxq = if src_in_frame {
+                peak_code(re, im)
+            } else {
+                peak_code(sre, sim)
+            };
+            let shift = required_shift(maxq, table.trivial, Q::MAX_Q);
+            scale += shift as i32;
+            if src_in_frame {
+                run_pass::<Q>(table, shift, re, im, sre, sim);
+            } else {
+                run_pass::<Q>(table, shift, sre, sim, re, im);
+            }
+            src_in_frame = !src_in_frame;
+            noise = fixed_pass_noise(noise, self.n, scale, table.trivial, shift > 0);
+        }
+        debug_assert!(src_in_frame, "pass parity should end in the frame");
+        // Relative bound before the inverse 1/n fold; the fold is an
+        // exact block-exponent subtraction that cancels in the ratio.
+        let bound = l2_in
+            .is_finite()
+            .then(|| fixed_relative_bound(noise, self.m, l2_in));
+        let gain = (self.m as f64 * 0.5).exp2();
+        let (l2_out, noise_out, scale_out) = match self.direction {
+            Direction::Forward => (l2_in * gain, noise, scale),
+            Direction::Inverse => (
+                l2_in / gain,
+                noise * (-(self.m as f64)).exp2(),
+                scale - self.m as i32,
+            ),
+        };
+        meta.scale = scale_out;
+        meta.l2 = l2_out;
+        meta.noise = noise_out;
+        meta.bound = bound;
+    }
+}
+
+/// Peak |code| over both planes of the pass source.
+fn peak_code<Q: QSample>(re: &[Q], im: &[Q]) -> i64 {
+    let mut maxq = 0i64;
+    for q in re.iter().chain(im.iter()) {
+        maxq = maxq.max(q.to_i64().abs());
+    }
+    maxq
+}
+
+/// Smallest right shift that makes every butterfly output of this pass
+/// provably fit the format (see module docs for the two bounds).
+fn required_shift(maxq: i64, trivial: bool, max_q: i64) -> u32 {
+    let mut s = 0u32;
+    loop {
+        let mp = (maxq >> s) + 1;
+        let fits = if trivial { 2 * mp <= max_q } else { 3 * mp <= max_q - 2 };
+        if fits {
+            return s;
+        }
+        s += 1;
+    }
+}
+
+/// One Stockham pass, source → destination, applying the BFP `shift`
+/// while loading each source code.  Mirrors the float kernel's
+/// traversal exactly; the ratio body is the integer spelling of the
+/// 6-op dual-select butterfly (`butterfly::ratio`).
+fn run_pass<Q: QSample>(
+    table: &FixedPassTable,
+    shift: u32,
+    xre: &[Q],
+    xim: &[Q],
+    yre: &mut [Q],
+    yim: &mut [Q],
+) {
+    let n = xre.len();
+    let s = table.s;
+    let l = n / (2 * s);
+    let (are, bre) = xre.split_at(n / 2);
+    let (aim, bim) = xim.split_at(n / 2);
+    if table.trivial {
+        for k in 0..l {
+            let i = k * s;
+            let o = 2 * k * s;
+            for j in 0..s {
+                let ar = rshift_round(are[i + j].to_i64(), shift);
+                let ai = rshift_round(aim[i + j].to_i64(), shift);
+                let br = rshift_round(bre[i + j].to_i64(), shift);
+                let bi = rshift_round(bim[i + j].to_i64(), shift);
+                yre[o + j] = Q::from_i64(ar + br);
+                yim[o + j] = Q::from_i64(ai + bi);
+                yre[o + s + j] = Q::from_i64(ar - br);
+                yim[o + s + j] = Q::from_i64(ai - bi);
+            }
+        }
+        return;
+    }
+    for k in 0..l {
+        let base_in = k * s;
+        let base_out = 2 * k * s;
+        let (m1, m2, t, sel) = (table.m1[k], table.m2[k], table.t[k], table.sel[k]);
+        for j in 0..s {
+            let ar = rshift_round(are[base_in + j].to_i64(), shift);
+            let ai = rshift_round(aim[base_in + j].to_i64(), shift);
+            let br = rshift_round(bre[base_in + j].to_i64(), shift);
+            let bi = rshift_round(bim[base_in + j].to_i64(), shift);
+            let (u, v) = if sel { (br, bi) } else { (bi, br) };
+            let s1 = u - mul_round(t, v, Q::FRAC);
+            let s2 = v + mul_round(t, u, Q::FRAC);
+            let p1 = mul_round(m1, s1, Q::FRAC);
+            let p2 = mul_round(m2, s2, Q::FRAC);
+            yre[base_out + j] = Q::from_i64(ar + p1);
+            yre[base_out + s + j] = Q::from_i64(ar - p1);
+            yim[base_out + j] = Q::from_i64(ai + p2);
+            yim[base_out + s + j] = Q::from_i64(ai - p2);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dft::naive_dft;
+    use crate::util::metrics::rel_l2;
+    use crate::util::prng::Pcg32;
+
+    fn random_frame(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = Pcg32::seed(seed);
+        (
+            (0..n).map(|_| rng.range(-1.0, 1.0)).collect(),
+            (0..n).map(|_| rng.range(-1.0, 1.0)).collect(),
+        )
+    }
+
+    fn check_against_oracle<Q: QSample>(n: usize, seed: u64) -> (f64, f64) {
+        let plan = FixedPlan::<Q>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let (re, im) = random_frame(n, seed);
+        let mut arena = FixedArena::<Q>::new(n);
+        arena.push_frame_f64(&re, &im);
+        let mut scratch = FixedScratch::new();
+        plan.execute_many(&mut arena, &mut scratch);
+        let (wr, wi) = naive_dft(&re, &im, false);
+        let (gr, gi) = arena.frame_f64(0);
+        let err = rel_l2(&gr, &gi, &wr, &wi);
+        let bound = arena.frame_bound(0).expect("executed frame has a bound");
+        (err, bound)
+    }
+
+    #[test]
+    fn forward_error_is_within_the_attached_bound() {
+        for n in [8usize, 64, 256, 1024] {
+            for seed in [1u64, 7] {
+                let (err, bound) = check_against_oracle::<i16>(n, seed);
+                assert!(err <= bound, "i16 n={n} seed={seed}: err {err:.3e} > bound {bound:.3e}");
+                assert!(bound < 0.2, "i16 n={n} bound uselessly loose: {bound:.3e}");
+                let (err, bound) = check_against_oracle::<i32>(n, seed);
+                assert!(err <= bound, "i32 n={n} seed={seed}: err {err:.3e} > bound {bound:.3e}");
+                // Q31 is ~2^16 tighter than Q15.
+                assert!(bound < 1e-4, "i32 n={n} bound uselessly loose: {bound:.3e}");
+                assert!(err > 0.0, "quantized transform is suspiciously exact");
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrips_within_composed_bounds() {
+        let n = 256;
+        let fwd = FixedPlan::<i16>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let inv = FixedPlan::<i16>::new(n, Strategy::DualSelect, Direction::Inverse).unwrap();
+        let (re, im) = random_frame(n, 42);
+        let mut arena = FixedArena::<i16>::new(n);
+        arena.push_frame_f64(&re, &im);
+        let mut scratch = FixedScratch::new();
+        fwd.execute_many(&mut arena, &mut scratch);
+        let fwd_bound = arena.frame_bound(0).unwrap();
+        // Round-trip: inverse of the quantized spectrum recovers the
+        // input to within the two composed bounds.
+        inv.execute_many(&mut arena, &mut scratch);
+        let (gr, gi) = arena.frame_f64(0);
+        let err = rel_l2(&gr, &gi, &re, &im);
+        let inv_bound = arena.frame_bound(0).unwrap();
+        assert!(
+            err <= fwd_bound + inv_bound + fwd_bound * inv_bound,
+            "roundtrip err {err:.3e} vs bounds {fwd_bound:.3e}/{inv_bound:.3e}"
+        );
+    }
+
+    #[test]
+    fn inverse_matches_f64_oracle_within_bound() {
+        let n = 128;
+        let inv = FixedPlan::<i32>::new(n, Strategy::DualSelect, Direction::Inverse).unwrap();
+        let (re, im) = random_frame(n, 9);
+        let mut arena = FixedArena::<i32>::new(n);
+        arena.push_frame_f64(&re, &im);
+        let mut scratch = FixedScratch::new();
+        inv.execute_many(&mut arena, &mut scratch);
+        let (wr, wi) = naive_dft(&re, &im, true);
+        let (gr, gi) = arena.frame_f64(0);
+        let err = rel_l2(&gr, &gi, &wr, &wi);
+        let bound = arena.frame_bound(0).unwrap();
+        assert!(err <= bound, "err {err:.3e} > bound {bound:.3e}");
+    }
+
+    #[test]
+    fn quiet_signals_keep_precision() {
+        // A frame 2^10 quieter than full scale must not lose 10 bits:
+        // BFP picks a smaller block exponent, so the relative bound is
+        // identical to the full-scale one.
+        let n = 64;
+        let (re, im) = random_frame(n, 5);
+        let quiet_re: Vec<f64> = re.iter().map(|x| x / 1024.0).collect();
+        let quiet_im: Vec<f64> = im.iter().map(|x| x / 1024.0).collect();
+        let plan = FixedPlan::<i16>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let mut loud = FixedArena::<i16>::new(n);
+        let mut quiet = FixedArena::<i16>::new(n);
+        loud.push_frame_f64(&re, &im);
+        quiet.push_frame_f64(&quiet_re, &quiet_im);
+        let mut scratch = FixedScratch::new();
+        plan.execute_many(&mut loud, &mut scratch);
+        plan.execute_many(&mut quiet, &mut scratch);
+        let lb = loud.frame_bound(0).unwrap();
+        let qb = quiet.frame_bound(0).unwrap();
+        assert!((lb - qb).abs() / lb < 1e-9, "loud {lb:.3e} quiet {qb:.3e}");
+        // And the quantized codes are literally identical (the frame
+        // is an exact power-of-two scaling of the loud one).
+        assert_eq!(loud.frame(0), quiet.frame(0));
+        assert_eq!(quiet.meta(0).scale, loud.meta(0).scale - 10);
+    }
+
+    #[test]
+    fn zero_frame_transforms_exactly() {
+        let n = 32;
+        let plan = FixedPlan::<i16>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let mut arena = FixedArena::<i16>::new(n);
+        arena.push_frame_f64(&[0.0; 32], &[0.0; 32]);
+        let mut scratch = FixedScratch::new();
+        plan.execute_many(&mut arena, &mut scratch);
+        assert_eq!(arena.frame_bound(0), Some(0.0));
+        assert_eq!(arena.frame_f64(0).0, vec![0.0; 32]);
+    }
+
+    #[test]
+    fn rejects_unrepresentable_strategy_and_bad_size() {
+        assert!(matches!(
+            FixedPlan::<i16>::new(64, Strategy::LinzerFeig, Direction::Forward),
+            Err(crate::fft::FftError::UnsupportedStrategy { strategy: Strategy::LinzerFeig, .. })
+        ));
+        assert!(FixedPlan::<i32>::new(100, Strategy::DualSelect, Direction::Forward).is_err());
+    }
+
+    #[test]
+    fn scratch_amortizes_across_executes() {
+        let n = 128;
+        let plan = FixedPlan::<i32>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let mut arena = FixedArena::<i32>::new(n);
+        let (re, im) = random_frame(n, 2);
+        for _ in 0..4 {
+            arena.push_frame_f64(&re, &im);
+        }
+        let mut scratch = FixedScratch::new();
+        plan.execute_many(&mut arena, &mut scratch);
+        let warm = scratch.misses();
+        plan.execute_many(&mut arena, &mut scratch);
+        plan.execute_many(&mut arena, &mut scratch);
+        assert_eq!(scratch.misses(), warm, "fixed scratch kept allocating");
+    }
+}

@@ -1,0 +1,177 @@
+//! Dual-select ratio tables quantized to a Q-format at plan-build
+//! time.
+//!
+//! The float plane builds one [`crate::fft::twiddle::RatioTable`] per
+//! Stockham pass; this module runs the *same* dual-select math in f64
+//! and then quantizes the three factor lanes (`m1`, `m2`, `t`) to
+//! Q`frac`.  Because dual-select guarantees |ratio| ≤ 1 for every
+//! lane (the paper's Table I claim), the quantization is a plain
+//! half-quantum rounding — asserted at build time.  Strategies whose
+//! ratios escape the unit interval (Linzer–Feig's cotangents, the
+//! cosine strategy's tangents) are rejected with a typed
+//! [`FftError::UnsupportedStrategy`] *before* any table is built:
+//! the fixed-point plane never clamps.
+
+use crate::fft::twiddle::{pass_angles, ratio_table};
+use crate::fft::{log2_exact, Direction, FftError, FftResult, Strategy};
+
+use super::quantize_unit;
+
+/// One Stockham pass of quantized dual-select factors.  Lane `k`
+/// (`k < n / 2^(p+1)`) holds the Q`frac` codes of the pass's `m1`,
+/// `m2`, `t` factors; `sel` is the paper's per-twiddle branch
+/// selector, copied verbatim from the f64 table.
+#[derive(Clone, Debug)]
+pub struct FixedPassTable {
+    /// Stride of the pass (`2^p`).
+    pub s: usize,
+    /// All factors are exactly those of `W^0` — the pass degenerates
+    /// to add/sub and skips the multipliers entirely.
+    pub trivial: bool,
+    pub m1: Vec<i64>,
+    pub m2: Vec<i64>,
+    pub t: Vec<i64>,
+    pub sel: Vec<bool>,
+}
+
+/// Quantization audit of one f64 factor lane: returns
+/// `(max round-trip error, saturated entries)` for quantizing every
+/// element to Q`frac`.  Saturated means |x| > 1 or non-finite — the
+/// entry does not fit the format at all.  Used by the
+/// representability property tests (Table I in fixed point).
+pub fn lane_audit(xs: &[f64], frac: u32) -> (f64, usize) {
+    let mut max_err = 0.0f64;
+    let mut saturated = 0usize;
+    let quantum = (frac as f64).exp2().recip();
+    for &x in xs {
+        let (q, sat) = quantize_unit(x, frac);
+        if sat {
+            saturated += 1;
+        } else {
+            max_err = max_err.max((x - q as f64 * quantum).abs());
+        }
+    }
+    (max_err, saturated)
+}
+
+/// Build the quantized per-pass tables for an `n`-point (power of two)
+/// transform.  Only [`Strategy::DualSelect`] is representable; every
+/// other strategy is a typed error (see module docs).
+pub fn fixed_pass_tables(
+    n: usize,
+    strategy: Strategy,
+    direction: Direction,
+    frac: u32,
+) -> FftResult<Vec<FixedPassTable>> {
+    let m = log2_exact(n)?;
+    match strategy {
+        Strategy::DualSelect => {}
+        Strategy::LinzerFeig => {
+            return Err(FftError::UnsupportedStrategy {
+                strategy,
+                reason: "Linzer-Feig ratios (cot) are unbounded and \
+                         unrepresentable in fixed point; use dual-select",
+            });
+        }
+        Strategy::Cosine => {
+            return Err(FftError::UnsupportedStrategy {
+                strategy,
+                reason: "cosine ratios (tan) are unbounded and \
+                         unrepresentable in fixed point; use dual-select",
+            });
+        }
+        Strategy::Standard => {
+            return Err(FftError::UnsupportedStrategy {
+                strategy,
+                reason: "the fixed-point kernel implements the ratio \
+                         butterfly only; use dual-select",
+            });
+        }
+    }
+    let mut passes = Vec::with_capacity(m as usize);
+    for p in 0..m {
+        let angles = pass_angles(n, p, direction);
+        let rt = ratio_table::<f64>(&angles, strategy);
+        let trivial = rt.is_trivial();
+        let quantize_lane = |xs: &[f64]| -> Vec<i64> {
+            xs.iter()
+                .map(|&x| {
+                    let (q, saturated) = quantize_unit(x, frac);
+                    // Build-time assertion of the paper's |ratio| <= 1
+                    // guarantee; unreachable for dual-select.
+                    assert!(
+                        !saturated,
+                        "dual-select ratio {x} out of [-1, 1] at n={n} pass={p}"
+                    );
+                    q
+                })
+                .collect()
+        };
+        passes.push(FixedPassTable {
+            s: 1 << p,
+            trivial,
+            m1: quantize_lane(&rt.m1),
+            m2: quantize_lane(&rt.m2),
+            t: quantize_lane(&rt.t),
+            sel: rt.sel.clone(),
+        });
+    }
+    Ok(passes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dual_select_tables_quantize_without_saturation() {
+        for n in [8usize, 64, 1024] {
+            let passes =
+                fixed_pass_tables(n, Strategy::DualSelect, Direction::Forward, 15).unwrap();
+            assert_eq!(passes.len(), n.trailing_zeros() as usize);
+            for (p, t) in passes.iter().enumerate() {
+                assert_eq!(t.s, 1 << p);
+                let lanes = n / (2 << p);
+                assert_eq!(t.m1.len(), lanes);
+                assert_eq!(t.sel.len(), lanes);
+                for q in t.m1.iter().chain(&t.m2).chain(&t.t) {
+                    assert!(q.abs() <= 32767, "n={n} pass={p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unrepresentable_strategies_are_typed_errors() {
+        for strategy in [Strategy::LinzerFeig, Strategy::Cosine, Strategy::Standard] {
+            let err =
+                fixed_pass_tables(256, strategy, Direction::Forward, 15).unwrap_err();
+            assert!(
+                matches!(err, FftError::UnsupportedStrategy { strategy: s, .. } if s == strategy),
+                "{strategy}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn lane_audit_separates_dual_from_clamped_lf() {
+        let angles = pass_angles(1024, 0, Direction::Forward);
+        let dual = ratio_table::<f64>(&angles, Strategy::DualSelect);
+        for lane in [&dual.m1, &dual.m2, &dual.t] {
+            let (err, sat) = lane_audit(lane, 15);
+            assert_eq!(sat, 0);
+            assert!(err <= (15f64).exp2().recip(), "{err}");
+        }
+        let lf = ratio_table::<f64>(&angles, Strategy::LinzerFeig);
+        let (_, sat) = lane_audit(&lf.t, 15);
+        assert!(sat > 0, "clamped LF table fit Q15 unexpectedly");
+    }
+
+    #[test]
+    fn non_power_of_two_is_rejected() {
+        assert!(matches!(
+            fixed_pass_tables(100, Strategy::DualSelect, Direction::Forward, 15),
+            Err(FftError::NonPowerOfTwo { n: 100 })
+        ));
+    }
+}

@@ -35,13 +35,22 @@
 //!   [`net::FftdServer`], [`net::FftClient`]), so remote callers get
 //!   the same dtype + a-priori-bound metadata as in-process ones.
 //!   See `PROTOCOL.md` for the wire format.
+//! * **Fixed-point plane** ([`fixed`]) — a quantized Q15/Q31 integer
+//!   FFT with per-frame block-floating-point scaling
+//!   ([`fixed::FixedPlan`], [`fixed::FixedArena`]).  Dual-select is
+//!   the only strategy whose precomputed ratios satisfy |ratio| ≤ 1,
+//!   i.e. the only one *representable* in a signed Q-format —
+//!   Linzer–Feig and cosine tables are rejected with a typed error
+//!   instead of being clamped.  Every result carries an a-priori
+//!   quantization-noise bound ([`analysis::bounds`] fixed-point
+//!   model), served end-to-end as `DType::I16`/`DType::I32`.
 //! * **Streaming plane** ([`stream`]) — stateful DSP sessions over
 //!   continuous signals: overlap-save FIR filtering
 //!   ([`stream::OlsFilter`]), streaming STFT ([`stream::StftStream`]),
 //!   and the [`stream::SessionRegistry`] session layer whose responses
 //!   carry a *running* cumulative a-priori error bound (eq. (11)
-//!   applied to serving).  Served remotely via the `STREAM_*` ops of
-//!   wire protocol v2.
+//!   applied to serving).  Served remotely via the wire protocol's
+//!   `STREAM_*` ops (introduced in v2).
 //! * **Applications** ([`signal`], [`workload`]) — the radar pulse
 //!   compression and spectrogram pipelines the paper motivates, used by
 //!   the examples and benches.
@@ -56,6 +65,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod dft;
 pub mod fft;
+pub mod fixed;
 pub mod net;
 pub mod precision;
 pub mod runtime;

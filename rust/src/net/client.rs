@@ -9,7 +9,7 @@
 //!   request id; [`FftClient::recv`] yields responses in *completion*
 //!   order — keep a window of ids in flight for throughput.
 //! * **Stream**: [`FftClient::open_stream`] opens a stateful session
-//!   (protocol v2) and returns a [`StreamHandle`] whose
+//!   (the `STREAM_*` ops) and returns a [`StreamHandle`] whose
 //!   [`StreamHandle::submit_chunk`] / [`StreamHandle::recv`] pair
 //!   pipelines chunks exactly like one-shot requests; every
 //!   [`StreamResponse`] carries the session's cumulative pass count
@@ -265,7 +265,7 @@ impl FftClient {
         self.recv_id(id)
     }
 
-    /// Open a stream session (protocol v2) and return a pipelining
+    /// Open a stream session (the `STREAM_*` ops) and return a pipelining
     /// handle for it.  Blocks for the server's open reply; a registry
     /// at capacity surfaces as [`FftError::Rejected`] (retry after a
     /// close — the connection stays usable).

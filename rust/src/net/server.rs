@@ -525,21 +525,26 @@ fn write_conn_reply<W: std::io::Write>(w: &mut W, resp: &ConnReply) -> crate::ff
     }
 }
 
-/// Write one coordinator response: successes stream the widened
-/// result planes straight into the connection writer (no intermediate
+/// Write one coordinator response: fixed-point successes stream the
+/// quantized frame (raw codes + block exponent — no dequantization at
+/// all on the server), float successes stream the widened result
+/// planes straight into the connection writer (no intermediate
 /// byte-frame staging — the two `Vec<f64>` widening copies remain,
 /// inherent to exact f64 widening of non-f64 dtypes); failures go
 /// through [`error_to_wire`].
 fn write_reply<W: std::io::Write>(w: &mut W, resp: &FftResponse) -> crate::fft::FftResult<()> {
     match &resp.error {
-        None => wire::write_ok_response_parts(
-            w,
-            resp.id,
-            resp.dtype,
-            resp.bound,
-            &resp.re_f64(),
-            &resp.im_f64(),
-        ),
+        None => match resp.fixed_frame() {
+            Some(frame) => wire::write_fixed_ok_response_parts(w, resp.id, &frame),
+            None => wire::write_ok_response_parts(
+                w,
+                resp.id,
+                resp.dtype,
+                resp.bound,
+                &resp.re_f64(),
+                &resp.im_f64(),
+            ),
+        },
         Some(e) => wire::write_response(w, &error_to_wire(resp.id, resp.dtype, e)),
     }
 }

@@ -7,7 +7,7 @@
 //! ```text
 //! offset size  field
 //!   0     4    magic     "FFTN"
-//!   4     2    version   2
+//!   4     2    version   3
 //!   6     1    kind      1 = request, 2 = response
 //!   7     1    code      request: op tag; response: status
 //!   8     1    strategy  request only (responses write 0)
@@ -33,6 +33,14 @@
 //! id, the cumulative butterfly pass count, the *running* a-priori
 //! bound and the emitted payload — see `PROTOCOL.md` §Streaming.
 //!
+//! Protocol v3 adds the **fixed-point plane**: dtype tags `i16 = 4`
+//! and `i32 = 5`, and a compact quantized `OK` body for those dtypes —
+//! `bound f64 | scale i32 | n` raw Q15/Q31 codes per plane (written by
+//! [`write_fixed_ok_response_parts`]).  Requests still travel planar
+//! f64; the decoder dequantizes `code · 2^scale` **exactly** back into
+//! f64 planes, so [`Response::Ok`] keeps one shape for every dtype and
+//! the client is unchanged.  See `PROTOCOL.md` §Fixed-point responses.
+//!
 //! Every decode failure is a typed [`FftError::Protocol`] — truncated
 //! streams, bad magic, failed checksums, unknown versions/tags and
 //! oversized lengths are all errors, never panics (asserted by
@@ -55,7 +63,11 @@ pub const MAGIC: [u8; 4] = *b"FFTN";
 /// `STREAM_CHUNK` / `STREAM_CLOSE` and the `STREAM` response status —
 /// new tags and body layouts, hence the bump (v1 peers get a clean
 /// typed version error, never a misparse).
-pub const VERSION: u16 = 2;
+///
+/// v3 added the fixed-point plane: dtype tags `i16`/`i32` and the
+/// compact quantized `OK` body those dtypes use — a v2 peer would
+/// misparse the integer payload as f64 samples, hence the bump.
+pub const VERSION: u16 = 3;
 /// Fixed header size in bytes.
 pub const HEADER_LEN: usize = 28;
 /// Upper bound on a frame payload: 64 MiB = 4 Mi complex f64 samples.
@@ -231,6 +243,8 @@ fn dtype_code(d: DType) -> u8 {
         DType::F32 => 1,
         DType::Bf16 => 2,
         DType::F16 => 3,
+        DType::I16 => 4,
+        DType::I32 => 5,
     }
 }
 
@@ -240,6 +254,8 @@ fn dtype_from(code: u8) -> FftResult<DType> {
         1 => Ok(DType::F32),
         2 => Ok(DType::Bf16),
         3 => Ok(DType::F16),
+        4 => Ok(DType::I16),
+        5 => Ok(DType::I32),
         other => Err(FftError::Protocol(format!("unknown dtype tag {other}"))),
     }
 }
@@ -549,6 +565,13 @@ pub fn write_stream_close<W: Write>(w: &mut W, id: u64, session: u64) -> FftResu
 /// `re`/`im` lengths differ.
 pub fn encode_response(resp: &Response) -> FftResult<Vec<u8>> {
     match resp {
+        // A fixed-dtype OK travels quantized (codes + block exponent),
+        // which a dequantized f64 `Response::Ok` cannot reproduce —
+        // refuse rather than silently re-encode in the wrong layout.
+        Response::Ok { dtype, .. } if dtype.is_fixed() => Err(FftError::Protocol(format!(
+            "{dtype} ok-responses travel quantized; encode from the result \
+             frame with write_fixed_ok_response_parts"
+        ))),
         Response::Ok { id, dtype, bound, re, im } => {
             check_planar(re, im)?;
             let body_len = check_body_len(8 + (re.len() + im.len()) * 8)?;
@@ -696,6 +719,99 @@ pub fn write_ok_response_parts<W: Write>(
     Ok(())
 }
 
+/// Stream one fixed-point `OK` response straight from the result
+/// frame's quantized view ([`crate::fixed::FixedFrameRef`]) — no
+/// dequantization, no staging.  Body layout (`PROTOCOL.md`
+/// §Fixed-point responses): `bound f64 | scale i32 | qre | qim`, raw
+/// little-endian Q15 (2-byte) / Q31 (4-byte) codes per sample.  The
+/// peer's [`read_response`] dequantizes `code · 2^scale` exactly back
+/// into f64 planes.
+pub fn write_fixed_ok_response_parts<W: Write>(
+    w: &mut W,
+    id: u64,
+    frame: &crate::fixed::FixedFrameRef<'_>,
+) -> FftResult<()> {
+    use crate::fixed::FixedFrameRef;
+    let io = |e: std::io::Error| io_err("writing fixed response frame", &e);
+    let (dtype, scale, bound, n, code_bytes) = match frame {
+        FixedFrameRef::I16 { scale, bound, re, im } => {
+            if re.len() != im.len() {
+                return Err(FftError::LengthMismatch { expected: re.len(), got: im.len() });
+            }
+            (DType::I16, *scale, *bound, re.len(), 2usize)
+        }
+        FixedFrameRef::I32 { scale, bound, re, im } => {
+            if re.len() != im.len() {
+                return Err(FftError::LengthMismatch { expected: re.len(), got: im.len() });
+            }
+            (DType::I32, *scale, *bound, re.len(), 4usize)
+        }
+    };
+    let body_len = check_body_len(12 + 2 * n * code_bytes)?;
+    let header = encode_header(KIND_RESPONSE, STATUS_OK, 0, dtype_code(dtype), id, body_len);
+    w.write_all(&header).map_err(io)?;
+    w.write_all(&bound.unwrap_or(f64::NAN).to_le_bytes()).map_err(io)?;
+    w.write_all(&scale.to_le_bytes()).map_err(io)?;
+    match frame {
+        FixedFrameRef::I16 { re, im, .. } => {
+            for plane in [re, im] {
+                for &q in *plane {
+                    w.write_all(&q.to_le_bytes()).map_err(io)?;
+                }
+            }
+        }
+        FixedFrameRef::I32 { re, im, .. } => {
+            for plane in [re, im] {
+                for &q in *plane {
+                    w.write_all(&q.to_le_bytes()).map_err(io)?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Decode a fixed-dtype `OK` body into exactly-dequantized f64 planes.
+fn decode_fixed_ok(id: u64, dtype: DType, body: &[u8]) -> FftResult<Response> {
+    let code_bytes = match dtype {
+        DType::I16 => 2usize,
+        _ => 4usize,
+    };
+    if body.len() < 12 || (body.len() - 12) % (2 * code_bytes) != 0 {
+        return Err(FftError::Protocol(format!(
+            "{dtype} ok-response body length {} is not bound + scale + complex codes",
+            body.len()
+        )));
+    }
+    let bound = f64::from_le_bytes(body[..8].try_into().unwrap());
+    let bound = if bound.is_nan() { None } else { Some(bound) };
+    let scale = i32::from_le_bytes(body[8..12].try_into().unwrap());
+    // 2^scale is a power of two and every code is a small integer, so
+    // `code · 2^scale` is exact in f64 — the wire adds no rounding.
+    let step = crate::fixed::exp2i(scale);
+    let planes = &body[12..];
+    let half = planes.len() / 2;
+    let dequant = |bytes: &[u8]| -> Vec<f64> {
+        match dtype {
+            DType::I16 => bytes
+                .chunks_exact(2)
+                .map(|c| i16::from_le_bytes(c.try_into().unwrap()) as f64 * step)
+                .collect(),
+            _ => bytes
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes(c.try_into().unwrap()) as f64 * step)
+                .collect(),
+        }
+    };
+    Ok(Response::Ok {
+        id,
+        dtype,
+        bound,
+        re: dequant(&planes[..half]),
+        im: dequant(&planes[half..]),
+    })
+}
+
 /// Read one request frame of ANY op — one-shot FFT or streaming-plane
 /// (`fftd`'s read path); `Ok(None)` on clean EOF.
 pub fn read_request_frame<R: Read>(r: &mut R) -> FftResult<Option<RequestFrame>> {
@@ -823,6 +939,9 @@ pub fn read_response<R: Read>(r: &mut R) -> FftResult<Option<Response>> {
     match h.code {
         STATUS_OK => {
             let dtype = dtype_from(h.dtype)?;
+            if dtype.is_fixed() {
+                return Ok(Some(decode_fixed_ok(h.id, dtype, &body)?));
+            }
             if body.len() < 8 || (body.len() - 8) % 16 != 0 {
                 return Err(FftError::Protocol(format!(
                     "ok-response body length {} is not bound + complex f64 samples",
@@ -943,6 +1062,8 @@ mod tests {
         assert_eq!(dtype_code(DType::F32), 1);
         assert_eq!(dtype_code(DType::Bf16), 2);
         assert_eq!(dtype_code(DType::F16), 3);
+        assert_eq!(dtype_code(DType::I16), 4);
+        assert_eq!(dtype_code(DType::I32), 5);
         assert_eq!(kind_code(StreamKind::Ols), 0);
         assert_eq!(kind_code(StreamKind::Stft), 1);
         assert_eq!(window_code(Window::Rect), 0);
@@ -951,9 +1072,98 @@ mod tests {
         assert_eq!(window_code(Window::Blackman), 3);
         assert_eq!(STATUS_STREAM, 3);
         assert_eq!(&MAGIC, b"FFTN");
-        // v2: the streaming plane (new op tags, new status, new body
-        // layouts) — v1 peers must get a clean version error.
-        assert_eq!(VERSION, 2);
+        // v3: the fixed-point plane (i16/i32 dtype tags + the compact
+        // quantized OK body) — v2 peers must get a clean version error,
+        // never misparse integer codes as f64 samples.
+        assert_eq!(VERSION, 3);
+    }
+
+    #[test]
+    fn fixed_ok_frames_roundtrip_with_exact_dequantization() {
+        use crate::fixed::FixedFrameRef;
+        // Q15 codes at scale −12: each sample dequantizes to the exact
+        // dyadic value code · 2⁻¹².
+        let (re16, im16) = ([100i16, -32767, 0, 1], [7i16, -1, 32767, -4096]);
+        let frame = FixedFrameRef::I16 {
+            scale: -12,
+            bound: Some(3.25e-4),
+            re: &re16,
+            im: &im16,
+        };
+        let mut bytes = Vec::new();
+        write_fixed_ok_response_parts(&mut bytes, 99, &frame).unwrap();
+        assert_eq!(bytes.len(), HEADER_LEN + 12 + 2 * 4 * 2);
+        match read_response(&mut &bytes[..]).unwrap().unwrap() {
+            Response::Ok { id, dtype, bound, re, im } => {
+                assert_eq!((id, dtype), (99, DType::I16));
+                assert_eq!(bound, Some(3.25e-4));
+                let step = (-12f64).exp2();
+                let want_re: Vec<f64> = re16.iter().map(|&q| q as f64 * step).collect();
+                let want_im: Vec<f64> = im16.iter().map(|&q| q as f64 * step).collect();
+                assert_eq!(re, want_re);
+                assert_eq!(im, want_im);
+            }
+            other => panic!("expected ok, got {other:?}"),
+        }
+        // Q31, no bound (NaN on the wire), 4-byte codes.
+        let (re32, im32) = ([i32::MAX, -5], [0i32, i32::MIN + 1]);
+        let frame = FixedFrameRef::I32 { scale: -31, bound: None, re: &re32, im: &im32 };
+        let mut bytes = Vec::new();
+        write_fixed_ok_response_parts(&mut bytes, 7, &frame).unwrap();
+        assert_eq!(bytes.len(), HEADER_LEN + 12 + 2 * 2 * 4);
+        match read_response(&mut &bytes[..]).unwrap().unwrap() {
+            Response::Ok { dtype, bound, re, im, .. } => {
+                assert_eq!(dtype, DType::I32);
+                assert_eq!(bound, None);
+                let step = (-31f64).exp2();
+                assert_eq!(re, vec![i32::MAX as f64 * step, -5.0 * step]);
+                assert_eq!(im, vec![0.0, (i32::MIN + 1) as f64 * step]);
+            }
+            other => panic!("expected ok, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fixed_ok_rejects_float_encoder_and_malformed_bodies() {
+        use crate::fixed::FixedFrameRef;
+        // The dequantized f64 `Response::Ok` cannot reproduce the
+        // quantized wire layout — refusing is the contract.
+        let resp = Response::Ok {
+            id: 1,
+            dtype: DType::I16,
+            bound: None,
+            re: vec![1.0],
+            im: vec![2.0],
+        };
+        assert!(matches!(
+            encode_response(&resp).unwrap_err(),
+            FftError::Protocol(_)
+        ));
+        // Ragged planes refuse to encode.
+        let mut sink = Vec::new();
+        let ragged = FixedFrameRef::I16 { scale: 0, bound: None, re: &[1, 2], im: &[3] };
+        assert!(matches!(
+            write_fixed_ok_response_parts(&mut sink, 1, &ragged).unwrap_err(),
+            FftError::LengthMismatch { .. }
+        ));
+        // Body shorter than bound + scale.
+        let h = encode_header(KIND_RESPONSE, STATUS_OK, 0, 4, 1, 8);
+        let mut bytes = h.to_vec();
+        bytes.extend_from_slice(&[0u8; 8]);
+        assert!(matches!(
+            read_response(&mut &bytes[..]).unwrap_err(),
+            FftError::Protocol(_)
+        ));
+        // Body that is not a whole number of complex codes (i32 needs
+        // multiples of 8 after the 12-byte prefix; 16 + 12 = 28 works,
+        // 14 + 12 does not).
+        let h = encode_header(KIND_RESPONSE, STATUS_OK, 0, 5, 1, 26);
+        let mut bytes = h.to_vec();
+        bytes.extend_from_slice(&[0u8; 26]);
+        assert!(matches!(
+            read_response(&mut &bytes[..]).unwrap_err(),
+            FftError::Protocol(_)
+        ));
     }
 
     #[test]

@@ -27,8 +27,8 @@
 //!   registry cap and per session.
 //!
 //! The network plane ([`crate::net`]) exposes the registry over TCP as
-//! the `STREAM_OPEN` / `STREAM_CHUNK` / `STREAM_CLOSE` ops of protocol
-//! version 2 (see `PROTOCOL.md`), and
+//! the `STREAM_OPEN` / `STREAM_CHUNK` / `STREAM_CLOSE` ops introduced
+//! in protocol v2 (see `PROTOCOL.md`), and
 //! [`crate::net::FftClient::open_stream`] is the pipelined remote
 //! spelling of this module.
 

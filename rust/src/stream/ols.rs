@@ -344,6 +344,12 @@ pub fn filter_offline_any(
         DType::F16 => {
             filter_offline::<F16>(&Planner::new(), strategy, taps_re, taps_im, sig_re, sig_im)
         }
+        DType::I16 => {
+            crate::fixed::filter_offline_fixed::<i16>(strategy, taps_re, taps_im, sig_re, sig_im)
+        }
+        DType::I32 => {
+            crate::fixed::filter_offline_fixed::<i32>(strategy, taps_re, taps_im, sig_re, sig_im)
+        }
     }
 }
 

@@ -37,6 +37,7 @@ use std::sync::{Arc, Mutex, PoisonError};
 use crate::coordinator::Metrics;
 use crate::fft::api::{DType, Planner};
 use crate::fft::{FftError, FftResult, Strategy};
+use crate::fixed::FixedOlsFilter;
 use crate::precision::{Bf16, F16};
 use crate::signal::window::Window;
 
@@ -186,18 +187,22 @@ impl Default for StreamConfig {
 /// advances, so the caller can split and retry losslessly.
 pub const MAX_STREAM_OUT_F64S: usize = 1 << 22;
 
-/// The per-dtype overlap-save engines plus the dtype-erased STFT.
+/// The per-dtype overlap-save engines (float [`OlsFilter`] and
+/// fixed-point [`FixedOlsFilter`]) plus the dtype-erased STFT.
 #[derive(Debug)]
 enum Engine {
     OlsF64(OlsFilter<f64>),
     OlsF32(OlsFilter<f32>),
     OlsBf16(OlsFilter<Bf16>),
     OlsF16(OlsFilter<F16>),
+    OlsI16(FixedOlsFilter<i16>),
+    OlsI32(FixedOlsFilter<i32>),
     Stft(Box<StftStream>),
 }
 
 /// Dispatch over every [`Engine`] variant: one expression for the OLS
-/// arms (generic over the filter's dtype), one for STFT.
+/// arms (the float and fixed-point filters share the accessor
+/// surface), one for STFT.
 macro_rules! on_engine {
     ($value:expr, ols $f:ident => $ols:expr, stft $s:ident => $stft:expr) => {
         match $value {
@@ -205,6 +210,8 @@ macro_rules! on_engine {
             Engine::OlsF32($f) => $ols,
             Engine::OlsBf16($f) => $ols,
             Engine::OlsF16($f) => $ols,
+            Engine::OlsI16($f) => $ols,
+            Engine::OlsI32($f) => $ols,
             Engine::Stft($s) => $stft,
         }
     };
@@ -234,6 +241,19 @@ impl Engine {
                 )?),
                 DType::F16 => Engine::OlsF16(OlsFilter::new(
                     &Planner::new(),
+                    spec.strategy,
+                    &spec.taps_re,
+                    &spec.taps_im,
+                )?),
+                // Fixed-point sessions run the quantized kernels; a
+                // non-representable strategy (Linzer–Feig, cosine)
+                // fails the open with the typed table error.
+                DType::I16 => Engine::OlsI16(FixedOlsFilter::new(
+                    spec.strategy,
+                    &spec.taps_re,
+                    &spec.taps_im,
+                )?),
+                DType::I32 => Engine::OlsI32(FixedOlsFilter::new(
                     spec.strategy,
                     &spec.taps_re,
                     &spec.taps_im,
@@ -274,6 +294,8 @@ impl Engine {
             Engine::OlsF32(f) => ols_chunk(f, re, im),
             Engine::OlsBf16(f) => ols_chunk(f, re, im),
             Engine::OlsF16(f) => ols_chunk(f, re, im),
+            Engine::OlsI16(f) => ols_fixed_chunk(f, re, im),
+            Engine::OlsI32(f) => ols_fixed_chunk(f, re, im),
             Engine::Stft(s) => {
                 let mut power = Vec::new();
                 s.push(re, im, &mut power)?;
@@ -288,6 +310,8 @@ impl Engine {
             Engine::OlsF32(f) => ols_finish(f),
             Engine::OlsBf16(f) => ols_finish(f),
             Engine::OlsF16(f) => ols_finish(f),
+            Engine::OlsI16(f) => ols_fixed_finish(f),
+            Engine::OlsI32(f) => ols_fixed_finish(f),
             // A partial STFT frame is never a column; nothing to flush.
             Engine::Stft(_) => Ok((Vec::new(), Vec::new())),
         }
@@ -307,6 +331,26 @@ fn ols_chunk<T: crate::precision::Real>(
 
 fn ols_finish<T: crate::precision::Real>(
     f: &mut OlsFilter<T>,
+) -> FftResult<(Vec<f64>, Vec<f64>)> {
+    let mut out_re = Vec::new();
+    let mut out_im = Vec::new();
+    f.finish(&mut out_re, &mut out_im)?;
+    Ok((out_re, out_im))
+}
+
+fn ols_fixed_chunk<Q: crate::fixed::QSample>(
+    f: &mut FixedOlsFilter<Q>,
+    re: &[f64],
+    im: &[f64],
+) -> FftResult<(Vec<f64>, Vec<f64>)> {
+    let mut out_re = Vec::new();
+    let mut out_im = Vec::new();
+    f.push(re, im, &mut out_re, &mut out_im)?;
+    Ok((out_re, out_im))
+}
+
+fn ols_fixed_finish<Q: crate::fixed::QSample>(
+    f: &mut FixedOlsFilter<Q>,
 ) -> FftResult<(Vec<f64>, Vec<f64>)> {
     let mut out_re = Vec::new();
     let mut out_im = Vec::new();
@@ -657,6 +701,31 @@ mod tests {
         // Gone now.
         assert!(reg.chunk(opened.session, &xr, &xi).is_err());
         assert!(reg.close(opened.session).is_err());
+    }
+
+    #[test]
+    fn fixed_point_ols_sessions_serve_with_bounds() {
+        let reg = SessionRegistry::default();
+        let (hr, hi) = noise(8, 40);
+        let opened = reg
+            .open(&StreamSpec::ols(DType::I16, Strategy::DualSelect, hr.clone(), hi.clone()))
+            .unwrap();
+        assert_eq!(opened.dtype, DType::I16);
+        assert_eq!(opened.bound, Some(0.0), "no blocks yet — nothing emitted");
+        let (xr, xi) = noise(100, 41);
+        let out = reg.chunk(opened.session, &xr, &xi).unwrap();
+        assert!(!out.re.is_empty());
+        assert!(out.passes > 0);
+        assert!(out.bound.unwrap() > 0.0, "quantization noise is never free");
+        let fin = reg.close(opened.session).unwrap();
+        assert_eq!(out.re.len() + fin.re.len(), 100 + 8 - 1);
+        // Linzer–Feig cotangents cannot be quantized — the open is a
+        // typed error, not a clamped table, and releases its slot.
+        let err = reg
+            .open(&StreamSpec::ols(DType::I32, Strategy::LinzerFeig, hr, hi))
+            .unwrap_err();
+        assert!(matches!(err, FftError::UnsupportedStrategy { .. }), "{err:?}");
+        assert_eq!(reg.open_sessions(), 0);
     }
 
     #[test]

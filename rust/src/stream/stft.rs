@@ -72,6 +72,10 @@ pub struct StftStream {
     cols: u64,
     /// `|t|max` of the stored table at `frame` (`None` for standard).
     tmax: Option<f64>,
+    /// Fixed dtypes only: the worst per-column quantization bound the
+    /// integer kernel attached so far (`None` once any column came
+    /// back without an honest bound).
+    fixed_worst: Option<f64>,
 }
 
 impl StftStream {
@@ -102,6 +106,7 @@ impl StftStream {
             cols: 0,
             cfg,
             tmax,
+            fixed_worst: Some(0.0),
         })
     }
 
@@ -131,13 +136,19 @@ impl StftStream {
         self.cols * self.cfg.frame.trailing_zeros() as u64
     }
 
-    /// The running a-priori cumulative error bound (eq. (11) with the
-    /// 6-FMA op count, grown with every executed pass); `None` for the
-    /// standard butterfly.
+    /// The running a-priori cumulative error bound.  Float dtypes:
+    /// eq. (11) with the 6-FMA op count, grown with every executed
+    /// pass (`None` for the standard butterfly).  Fixed dtypes: the
+    /// worst per-column quantization bound the integer kernel attached
+    /// (every emitted column's spectrum satisfies it; the power values
+    /// square the spectra, so their relative error is ~2× this).
     pub fn bound(&self) -> Option<f64> {
+        if self.cfg.dtype.is_fixed() {
+            return self.fixed_worst;
+        }
         self.tmax.map(|tmax| {
             let m = self.fft_passes().min(u32::MAX as u64) as u32;
-            serving_bound_from_tmax(tmax, self.cfg.dtype.epsilon(), m)
+            serving_bound_from_tmax(tmax, self.cfg.dtype.unit_roundoff(), m)
         })
     }
 
@@ -189,6 +200,12 @@ impl StftStream {
             self.arena.push_frame_f64(&self.wre, &self.wim);
             self.transform
                 .execute_frame_any(&mut self.arena, 0, &mut self.scratch)?;
+            if self.cfg.dtype.is_fixed() {
+                self.fixed_worst = match (self.fixed_worst, self.arena.frame_bound(0)) {
+                    (Some(worst), Some(b)) => Some(worst.max(b)),
+                    _ => None,
+                };
+            }
             let (gr, gi) = self.arena.frame_f64(0);
             out_power.extend(gr.iter().zip(&gi).map(|(&r, &i)| r * r + i * i));
             self.cols += 1;
@@ -237,7 +254,22 @@ mod tests {
                     .unwrap();
                 off += len;
             }
-            // Offline reference per dtype.
+            // Reference per dtype.  Fixed dtypes have no offline stft
+            // (it is generic over `Real`); their reference is a fresh
+            // one-push stream — columns form at absolute positions and
+            // each is a pure function of its f64 samples, so chunking
+            // must not change a single bit.
+            if dtype.is_fixed() {
+                let mut whole = StftStream::new(cfg).unwrap();
+                let mut want = Vec::new();
+                whole.push(&re, &im, &mut want).unwrap();
+                assert_eq!(s.cols(), whole.cols(), "{dtype}");
+                assert_eq!(power, want, "{dtype}: columns differ bitwise");
+                let b = s.bound().expect("fixed stft carries a quantization bound");
+                assert!(b > 0.0 && b < 1.0, "{dtype}: bound {b}");
+                assert_eq!(s.bound(), whole.bound(), "{dtype}: running bound");
+                continue;
+            }
             let offline = match dtype {
                 DType::F64 => stft(
                     &Planner::<f64>::new(),
@@ -287,6 +319,7 @@ mod tests {
                     &im,
                 )
                 .unwrap(),
+                DType::I16 | DType::I32 => unreachable!("handled above"),
             };
             assert_eq!(s.cols() as usize, offline.cols, "{dtype}");
             assert_eq!(power, offline.power, "{dtype}: columns differ bitwise");

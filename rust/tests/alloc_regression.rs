@@ -1,9 +1,11 @@
 //! Allocation-count regression test for the worker hot path: after a
 //! one-batch warmup, batch execution with pooled scratch must perform
 //! ZERO heap allocations — for every plan kind, for every working
-//! dtype (f64/f32/bf16/f16), through both the typed
-//! (`Transform::execute_many`) and the dtype-erased
-//! (`AnyTransform::execute_many_any`) entry points.
+//! dtype (f64/f32/bf16/f16 plus the quantized i16/i32 plane, whose
+//! block-floating-point scaling buffers must come from the pooled
+//! `FixedScratch`), through both the typed (`Transform::execute_many`)
+//! and the dtype-erased (`AnyTransform::execute_many_any`) entry
+//! points.
 //!
 //! This test binary installs a counting global allocator, so it
 //! contains exactly one `#[test]` (parallel tests in the same binary
@@ -203,5 +205,5 @@ fn worker_hot_path_allocates_zero_after_warmup() {
         assert_eq!(reused.frames(), batch);
         pool.recycle(Arc::new(reused));
     }
-    assert_eq!(pool.parked(), 4);
+    assert_eq!(pool.parked(), DType::ALL.len());
 }

@@ -112,7 +112,7 @@ fn f16_dual_select_beats_clamped_lf_through_the_any_api() {
     };
 
     let err_dual = run(Strategy::DualSelect);
-    let bound = serving_bound(n, Strategy::DualSelect, DType::F16.epsilon()).unwrap();
+    let bound = serving_bound(n, Strategy::DualSelect, DType::F16.unit_roundoff()).unwrap();
     assert!(err_dual <= bound, "fp16 dual err {err_dual:.3e} > bound {bound:.3e}");
 
     let err_lf = run(Strategy::LinzerFeig);

@@ -1,0 +1,152 @@
+//! The fixed-point plane's acceptance loop, end to end in-process:
+//!
+//! * Representability (the paper's Table I claim in fixed point): for
+//!   every power-of-two N up to 2^16, every dual-select ratio lane
+//!   quantizes to Q15 with ZERO saturation and at most one quantum of
+//!   round-trip error — while the clamped Linzer–Feig table at the
+//!   same N saturates.
+//! * Requesting a fixed-point Linzer–Feig plan is a typed
+//!   `FftError::UnsupportedStrategy` (never a clamped table), both
+//!   through `PlanSpec::build_any` and through a coordinator route.
+//! * Every served i16/i32 dual-select result lands inside the
+//!   a-priori quantization bound attached to its response, verified
+//!   against the f64 naive-DFT oracle.
+
+use std::sync::mpsc;
+
+use fmafft::coordinator::{FftOp, Route, Server, ServerConfig};
+use fmafft::dft::naive_dft;
+use fmafft::fft::twiddle::{pass_angles, ratio_table};
+use fmafft::fft::{DType, Direction, FftError, PlanSpec, Strategy};
+use fmafft::fixed::{lane_audit, FixedPlan};
+use fmafft::util::metrics::rel_l2;
+use fmafft::util::prng::Pcg32;
+
+fn random_frame(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Pcg32::seed(seed);
+    (
+        (0..n).map(|_| rng.range(-1.0, 1.0)).collect(),
+        (0..n).map(|_| rng.range(-1.0, 1.0)).collect(),
+    )
+}
+
+#[test]
+fn every_dual_select_table_up_to_64k_fits_q15_and_clamped_lf_does_not() {
+    let quantum = (15f64).exp2().recip();
+    for m in 3..=16u32 {
+        let n = 1usize << m;
+        for direction in [Direction::Forward, Direction::Inverse] {
+            for p in 0..m {
+                let angles = pass_angles(n, p, direction);
+                let dual = ratio_table::<f64>(&angles, Strategy::DualSelect);
+                for (lane, name) in [(&dual.m1, "m1"), (&dual.m2, "m2"), (&dual.t, "t")] {
+                    let (err, sat) = lane_audit(lane, 15);
+                    assert_eq!(
+                        sat, 0,
+                        "n={n} pass={p} {direction:?}: dual-select lane {name} saturates Q15"
+                    );
+                    assert!(
+                        err <= quantum,
+                        "n={n} pass={p} {direction:?} lane {name}: \
+                         round-trip err {err:.3e} > 2^-15"
+                    );
+                }
+            }
+            // The float plane's clamped Linzer-Feig table at the SAME
+            // N does not fit any Q-format: its cotangent lane holds
+            // clamped near-singular entries far outside [-1, 1].
+            let lf = ratio_table::<f64>(&pass_angles(n, 0, direction), Strategy::LinzerFeig);
+            let (_, sat) = lane_audit(&lf.t, 15);
+            assert!(sat > 0, "n={n} {direction:?}: clamped LF table fit Q15 unexpectedly");
+        }
+        // And the build-time |ratio| <= 1 assertion holds at every N:
+        // the quantized plan constructs without panicking.
+        FixedPlan::<i16>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+    }
+}
+
+#[test]
+fn fixed_lf_is_a_typed_error_in_process_and_through_the_coordinator() {
+    // Through the dtype-erased plan builder.
+    for dtype in [DType::I16, DType::I32] {
+        let err = PlanSpec::new(256)
+            .strategy(Strategy::LinzerFeig)
+            .dtype(dtype)
+            .build_any()
+            .unwrap_err();
+        assert!(
+            matches!(
+                err,
+                FftError::UnsupportedStrategy { strategy: Strategy::LinzerFeig, .. }
+            ),
+            "{dtype}: {err}"
+        );
+    }
+
+    // Through the serving plane: a routed LF+i16 request comes back as
+    // a failed response carrying the same typed refusal — the batcher
+    // admits it (strategy rides PlanKey), the worker's plan build
+    // rejects it.
+    let n = 64;
+    let server = Server::start(ServerConfig::native(n)).unwrap();
+    let (re, im) = random_frame(n, 5);
+    let (tx, rx) = mpsc::channel();
+    server
+        .submit_routed(
+            Route { id: 1, op: FftOp::Forward, dtype: DType::I16, strategy: Strategy::LinzerFeig },
+            re.clone(),
+            im.clone(),
+            tx,
+        )
+        .unwrap();
+    server.drain();
+    let resp = rx.recv().unwrap();
+    assert!(!resp.is_ok(), "fixed LF must not serve");
+    assert!(
+        matches!(
+            resp.error,
+            Some(FftError::UnsupportedStrategy { strategy: Strategy::LinzerFeig, .. })
+        ),
+        "{:?}",
+        resp.error
+    );
+
+    // The same server keeps serving representable fixed routes.
+    let ok = server
+        .submit_wait_with(FftOp::Forward, DType::I16, re, im)
+        .unwrap();
+    assert!(ok.is_ok(), "{:?}", ok.error);
+    server.shutdown();
+}
+
+#[test]
+fn served_fixed_results_stay_inside_their_attached_bounds() {
+    let n = 256;
+    let server = Server::start(ServerConfig::native(n)).unwrap();
+    for dtype in [DType::I16, DType::I32] {
+        for op in [FftOp::Forward, FftOp::Inverse] {
+            for seed in [11u64, 12, 13] {
+                let (re, im) = random_frame(n, seed);
+                let resp = server
+                    .submit_wait_with(op, dtype, re.clone(), im.clone())
+                    .unwrap();
+                assert!(resp.is_ok(), "{dtype} {op:?} seed {seed}: {:?}", resp.error);
+                assert_eq!(resp.dtype, dtype);
+                let bound = resp
+                    .bound
+                    .expect("every served fixed frame carries its quantization bound");
+                let (wr, wi) = naive_dft(&re, &im, op == FftOp::Inverse);
+                let err = rel_l2(&resp.re_f64(), &resp.im_f64(), &wr, &wi);
+                assert!(
+                    err.is_finite() && err > 0.0 && err <= bound,
+                    "{dtype} {op:?} seed {seed}: err {err:.3e} vs bound {bound:.3e}"
+                );
+                // The bound is useful, not vacuous: Q15 stays under
+                // ~0.2 relative, Q31 under 1e-4, for unit-range noise.
+                let cap = if dtype == DType::I16 { 0.2 } else { 1e-4 };
+                assert!(bound < cap, "{dtype} {op:?}: bound uselessly loose {bound:.3e}");
+            }
+        }
+    }
+    server.shutdown();
+}

@@ -352,7 +352,7 @@ fn f16_bf16_dual_select_served_within_bound_and_beats_clamped_lf() {
             served_forward_error(n, Strategy::DualSelect, dtype, &re, &im);
         let bound = bound_dual.expect("dual-select response carries a bound");
         // The response's bound is exactly the analysis::bounds value.
-        let predicted = serving_bound(n, Strategy::DualSelect, dtype.epsilon()).unwrap();
+        let predicted = serving_bound(n, Strategy::DualSelect, dtype.unit_roundoff()).unwrap();
         assert!((bound - predicted).abs() <= predicted * 1e-12, "{dtype}");
         // Observed error is below the a-priori prediction.
         assert!(
@@ -412,7 +412,7 @@ fn f16_roundtrip_request_batch_response() {
     let q = fmafft::precision::SplitBuf::<fmafft::precision::F16>::from_f64(&re, &im);
     let (qre, qim) = q.to_f64();
     let err = rel_l2(&inv.re_f64(), &inv.im_f64(), &qre, &qim);
-    let bound = serving_bound_from_tmax(1.0, DType::F16.epsilon(), 2 * m);
+    let bound = serving_bound_from_tmax(1.0, DType::F16.unit_roundoff(), 2 * m);
     assert!(
         err <= bound,
         "f16 roundtrip err {err:.3e} exceeds 2m-pass bound {bound:.3e}"
@@ -453,7 +453,7 @@ fn mixed_dtype_traffic_shares_the_server() {
         assert_eq!(resp.dtype, *dtype);
         let (wr, wi) = dft::naive_dft(re, im, false);
         let err = rel_l2(&resp.re_f64(), &resp.im_f64(), &wr, &wi);
-        let tol = 100.0 * dtype.epsilon();
+        let tol = 100.0 * dtype.unit_roundoff();
         assert!(err < tol, "{dtype} err {err:.3e}");
     }
     let snap = server.snapshot();
@@ -480,7 +480,7 @@ fn default_f32_responses_keep_zero_copy_views_and_bound() {
     let bound = resp.bound.expect("bound attached");
     assert_eq!(
         bound,
-        serving_bound(256, Strategy::DualSelect, DType::F32.epsilon()).unwrap()
+        serving_bound(256, Strategy::DualSelect, DType::F32.unit_roundoff()).unwrap()
     );
     server.shutdown();
 }

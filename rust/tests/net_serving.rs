@@ -341,6 +341,71 @@ fn per_request_strategy_rides_the_wire() {
 }
 
 #[test]
+fn quantized_dtypes_over_tcp_verified_and_lf_rejected() {
+    // The fixed-point acceptance loop over the TCP plane: i16/i32
+    // dual-select responses travel as raw quantization codes + block
+    // exponent, dequantize exactly (bit-identical to the in-process
+    // path), and land under the per-response a-priori quantization
+    // bound vs the f64 oracle — while a fixed-point Linzer-Feig
+    // request gets the typed unrepresentability error, never a
+    // clamped table.
+    let n = 256;
+    let (server, fftd) = start_native(n, 2);
+    let mut client = FftClient::connect(fftd.local_addr()).unwrap();
+    client.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+
+    for (seed, dtype) in [(21u64, DType::I16), (22, DType::I32)] {
+        let (re, im) = random_frame(n, seed);
+        let tcp = client
+            .call_with(FftOp::Forward, dtype, Strategy::DualSelect, &re, &im)
+            .unwrap();
+        assert!(tcp.is_ok(), "{dtype}: {:?}", tcp.error);
+        assert_eq!(tcp.dtype, dtype);
+
+        // Bit-identical to the in-process dequantization: the wire
+        // carries the codes themselves, and `code · 2^scale` is exact
+        // in f64 on both sides.
+        let local = server
+            .submit_wait_with(FftOp::Forward, dtype, re.clone(), im.clone())
+            .unwrap();
+        assert!(local.is_ok());
+        assert_eq!(tcp.re, local.re_f64(), "{dtype} re");
+        assert_eq!(tcp.im, local.im_f64(), "{dtype} im");
+        assert_eq!(tcp.bound, local.bound, "{dtype} bound");
+
+        // Honest bound: observed error vs the f64 oracle is inside
+        // the attached a-priori quantization bound.
+        let bound = tcp.bound.expect("fixed dual-select carries a bound");
+        let (wr, wi) = dft::naive_dft(&re, &im, false);
+        let err = rel_l2(&tcp.re, &tcp.im, &wr, &wi);
+        assert!(
+            err.is_finite() && err > 0.0 && err <= bound,
+            "{dtype}: err {err:.3e} vs bound {bound:.3e}"
+        );
+    }
+
+    // LF in fixed point is a typed refusal, surfaced remotely.
+    let (re, im) = random_frame(n, 23);
+    let lf = client
+        .call_with(FftOp::Forward, DType::I16, Strategy::LinzerFeig, &re, &im)
+        .unwrap();
+    match &lf.error {
+        Some(FftError::Backend(msg)) => {
+            assert!(msg.contains("unrepresentable in fixed point"), "{msg}")
+        }
+        other => panic!("expected remote fixed-LF rejection, got {other:?}"),
+    }
+
+    // The same connection keeps serving after the refusal.
+    let ok = client
+        .call_with(FftOp::Forward, DType::I16, Strategy::DualSelect, &re, &im)
+        .unwrap();
+    assert!(ok.is_ok(), "{:?}", ok.error);
+    fftd.shutdown();
+    server.shutdown();
+}
+
+#[test]
 fn fftd_shutdown_is_graceful_and_idempotent() {
     let n = 64;
     let (server, fftd) = start_native(n, 1);

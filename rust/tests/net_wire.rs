@@ -69,6 +69,15 @@ fn response_roundtrip_all_variants() {
                 re: re.clone(),
                 im: im.clone(),
             };
+            if dtype.is_fixed() {
+                // Quantized successes travel as raw codes + block
+                // exponent via `write_fixed_ok_response_parts` (see
+                // the wire unit tests); the planar-f64 encoder must
+                // refuse them rather than invent a layout.
+                let err = wire::encode_response(&resp).unwrap_err();
+                assert!(matches!(err, FftError::Protocol(_)), "dtype {dtype}: {err:?}");
+                continue;
+            }
             let back = decode_response(&wire::encode_response(&resp).unwrap())
                 .expect("decodes")
                 .expect("not EOF");
