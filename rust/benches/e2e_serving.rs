@@ -361,6 +361,87 @@ fn main() {
         }
     }
 
+    // Graph plane: a window→fft→magnitude pipeline fanned out to N
+    // in-process subscribers through the pub/sub registry — the cost
+    // of Arc-shared fan-out is the delta between the subs=1 and
+    // subs=16 rows (payloads are never deep-copied, so it should be
+    // near-flat), tagged mode=graph.
+    println!("\ngraph plane (pipeline pub/sub, in-process):");
+    {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+
+        use fmafft::graph::{
+            GraphOut, GraphPublish, GraphRegistry, GraphSpec, NodeKind, PublishSink, Subscription,
+        };
+        use fmafft::signal::window::Window;
+        use fmafft::util::prng::Pcg32;
+
+        /// Consumes frames immediately: counts deliveries, completes
+        /// the window slot, keeps the Arc only for the count.
+        struct CountSink(Arc<AtomicUsize>);
+
+        impl PublishSink for CountSink {
+            fn deliver(&self, sub: &Arc<Subscription>, _frame: &Arc<GraphPublish>) -> bool {
+                self.0.fetch_add(1, Ordering::Relaxed);
+                sub.complete_delivery();
+                true
+            }
+        }
+
+        let frame = 512usize;
+        let chunk_count = if quick { 200 } else { 1000 };
+        let mut rng = Pcg32::seed(99);
+        let chunk_re: Vec<f64> = (0..frame).map(|_| rng.gaussian()).collect();
+        let chunk_im: Vec<f64> = (0..frame).map(|_| rng.gaussian()).collect();
+        let spec = GraphSpec::new(DType::F32, Strategy::DualSelect, frame)
+            .node(1, NodeKind::Source)
+            .node(2, NodeKind::Window { window: Window::Hann })
+            .node(3, NodeKind::Fft)
+            .node(4, NodeKind::Magnitude)
+            .node(5, NodeKind::Sink)
+            .edge(1, 2)
+            .edge(2, 3)
+            .edge(3, 4)
+            .edge(4, 5);
+        for subs in [1usize, 4, 16] {
+            let reg = GraphRegistry::default();
+            let opened = reg.open(&spec).expect("open bench graph");
+            let delivered = Arc::new(AtomicUsize::new(0));
+            for _ in 0..subs {
+                reg.subscribe(opened.graph, 5, 0, Box::new(CountSink(Arc::clone(&delivered))))
+                    .expect("subscribe");
+            }
+            let mut out = GraphOut::default();
+            let t0 = Instant::now();
+            for _ in 0..chunk_count {
+                reg.chunk(opened.graph, &chunk_re, &chunk_im, &mut out).expect("chunk");
+                reg.publish(&mut out);
+            }
+            let mut fin = GraphOut::default();
+            reg.close(opened.graph, &mut fin).expect("close");
+            reg.publish(&mut fin);
+            let wall = t0.elapsed().as_secs_f64();
+            let chunks_per_s = chunk_count as f64 / wall;
+            let frames = delivered.load(Ordering::Relaxed);
+            let label = format!("  graph subs={subs} frame={frame}");
+            println!(
+                "{label:<40} {chunks_per_s:>10.0} chunks/s  {frames:>8} frames delivered  passes {}",
+                fin.passes
+            );
+            json.push_metrics_tags(
+                &format!("graph subs={subs} frame={frame}"),
+                &[("dtype", "f32"), ("strategy", "dual"), ("mode", "graph")],
+                &[
+                    ("subs", subs as f64),
+                    ("chunks_per_s", chunks_per_s),
+                    ("frames_delivered", frames as f64),
+                    ("passes", fin.passes as f64),
+                ],
+            );
+        }
+    }
+
     // PJRT backend (AOT JAX/Pallas artifacts).
     let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
     if std::path::Path::new(dir).join("manifest.json").exists() {

@@ -9,7 +9,7 @@ use crate::analysis::report::{fixed, sci, Table};
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::{FftOp, Server, ServerConfig};
 use crate::fft::{DType, FftError, FftResult, Planner, Strategy};
-use crate::net::{FftClient, FftdServer};
+use crate::net::{FftClient, FftdServer, GraphResponse, SubscribeHandle};
 use crate::precision::{Bf16, Real, F16};
 use crate::signal::chirp::{default_chirp, lfm_chirp};
 use crate::signal::window::Window;
@@ -41,6 +41,12 @@ USAGE:
       ragged chunks, asserted bit-identical to the offline whole-signal
       path, with the cumulative a-priori bound reported per dtype
       (--taps 32, --samples 4096 configure the workload).
+      With --graph: run the in-process pipeline-graph plane across ALL
+      six dtypes — source -> overlap-save (forced FFT-block override)
+      fanned into raw/magnitude/summary sinks; every sink is verified
+      bit-identical to the stream-session engines, magnitude exactly
+      |.|^2 of the raw sink, and the composed running bound monotone
+      and honored (--taps, --samples, --chunks configure it).
   fmafft serve   [--n 1024] [--dtype f32] [--strategy dual] [--pjrt]
                  [--artifacts DIR] [--rate 2000] [--requests 2000]
                  [--workers 2] [--max-batch 32]
@@ -64,6 +70,14 @@ USAGE:
       bound) plus a streaming-STFT chirp session (peak-bin track
       verified).  --requests sets the chunk count; --taps and
       --stft-frame configure the sessions.
+      With --graph: drive the protocol-v4 graph plane — one publisher
+      declares chirp-echo frames -> window -> fft -> magnitude ->
+      sink#5 plus a matched-filter -> sink#7 DAG, and TWO extra
+      subscriber connections attach to the sink topics; every fanned
+      PUBLISH frame is verified bit-identical to the offline per-frame
+      path, per-sink bounds monotone, and the matched-filter error
+      within its composed bound.  --requests frames of --n samples;
+      float dtypes only (try --dtype f16).
   fmafft help
 ";
 
@@ -296,6 +310,203 @@ fn fft_stream(a: &Args) -> FftResult<()> {
     Ok(())
 }
 
+/// `fft --graph`: the in-process pipeline-graph demo across ALL six
+/// dtypes.  One spec — source → overlap-save chirp matched filter
+/// (with a forced FFT-block override) fanned into a raw sink, a
+/// magnitude sink and a summary sink — runs per dtype; the raw sink
+/// must be bit-identical to a stream-plane session with the same
+/// override, the magnitude sink exactly `|·|²` of the raw sink, and
+/// the composed running bound monotone and honored by the measured
+/// error against the f64 graph.  Exits nonzero on any failure.
+fn fft_graph(a: &Args) -> FftResult<()> {
+    use crate::graph::{GraphOut, GraphRegistry, GraphSpec, NodeKind};
+    use crate::stream::{SessionRegistry, StreamConfig};
+
+    let taps: usize = a.get_parse("taps", 24usize)?;
+    let samples: usize = a.get_parse("samples", 2048usize)?;
+    let chunks_wanted: usize = a.get_parse("chunks", 12usize)?;
+    let strategy: Strategy = a.get_or("strategy", "dual").parse()?;
+    let seed: u64 = a.get_parse("seed", 42u64)?;
+    if taps == 0 {
+        return Err(FftError::InvalidArgument("--taps must be at least 1".into()));
+    }
+
+    // Matched-filter taps (the time-reversed conjugate chirp) over a
+    // noisy signal, shared by every dtype run.
+    let (cr, ci) = default_chirp(taps);
+    let taps_re: Vec<f64> = cr.iter().rev().copied().collect();
+    let taps_im: Vec<f64> = ci.iter().rev().map(|x| -x).collect();
+    let mut rng = Pcg32::seed(seed);
+    let sig_re: Vec<f64> = (0..samples).map(|_| rng.gaussian()).collect();
+    let sig_im: Vec<f64> = (0..samples).map(|_| rng.gaussian()).collect();
+    let chunks = ragged_chunks(samples, chunks_wanted, seed.wrapping_add(3));
+    // Force the OLS FFT block one power of two above the minimum legal
+    // size: the override must flow identically through the graph node
+    // and the stream session it is checked against.
+    let fft_len = 2 * (2 * taps - 1).next_power_of_two();
+
+    let spec = |dtype: DType| {
+        GraphSpec::new(dtype, strategy, 0)
+            .node(1, NodeKind::Source)
+            .node(
+                2,
+                NodeKind::Ols {
+                    taps_re: taps_re.clone(),
+                    taps_im: taps_im.clone(),
+                    fft_len: Some(fft_len),
+                },
+            )
+            .node(3, NodeKind::Sink)
+            .node(4, NodeKind::Magnitude)
+            .node(5, NodeKind::Sink)
+            .node(6, NodeKind::Summary)
+            .node(7, NodeKind::Sink)
+            .edge(1, 2)
+            .edge(2, 3)
+            .edge(2, 4)
+            .edge(4, 5)
+            .edge(2, 6)
+            .edge(6, 7)
+    };
+
+    println!(
+        "graph: source -> ols(taps={taps}, fft_n={fft_len}) -> {{raw, |.|^2, summary}} sinks; \
+         {samples} samples in {} ragged chunks (strategy={strategy})",
+        chunks.len()
+    );
+    let registry = GraphRegistry::default();
+    let sessions = SessionRegistry::new(StreamConfig::default());
+    let mut reference: Option<(Vec<f64>, Vec<f64>)> = None;
+    for dtype in [DType::F64, DType::F32, DType::Bf16, DType::F16, DType::I16, DType::I32] {
+        let opened = registry.open(&spec(dtype))?;
+        let mut out = GraphOut::default();
+        let (mut raw_re, mut raw_im) = (Vec::new(), Vec::new());
+        let mut power = Vec::new();
+        let mut summary = Vec::new();
+        let mut last_bound = opened.bound;
+        let mut collect = |out: &GraphOut,
+                           raw_re: &mut Vec<f64>,
+                           raw_im: &mut Vec<f64>,
+                           power: &mut Vec<f64>,
+                           summary: &mut Vec<f64>|
+         -> FftResult<()> {
+            for sink in &out.sinks {
+                match sink.node {
+                    3 => {
+                        raw_re.extend_from_slice(&sink.re);
+                        raw_im.extend_from_slice(&sink.im);
+                    }
+                    5 => {
+                        if !sink.im.is_empty() {
+                            return Err(FftError::Backend(
+                                "magnitude sink must emit a power plane".into(),
+                            ));
+                        }
+                        power.extend_from_slice(&sink.re);
+                    }
+                    7 => summary.extend_from_slice(&sink.re),
+                    other => {
+                        return Err(FftError::Backend(format!("unexpected sink node {other}")))
+                    }
+                }
+            }
+            Ok(())
+        };
+        let mut off = 0usize;
+        for &c in &chunks {
+            registry.chunk(opened.graph, &sig_re[off..off + c], &sig_im[off..off + c], &mut out)?;
+            off += c;
+            if let (Some(prev), Some(b)) = (last_bound, out.bound) {
+                if b < prev {
+                    return Err(FftError::Backend(
+                        "composed graph bound must grow with passes".into(),
+                    ));
+                }
+            }
+            last_bound = out.bound;
+            collect(&out, &mut raw_re, &mut raw_im, &mut power, &mut summary)?;
+        }
+        registry.close(opened.graph, &mut out)?;
+        collect(&out, &mut raw_re, &mut raw_im, &mut power, &mut summary)?;
+        let (final_passes, final_bound) = (out.passes, out.bound);
+
+        // The raw sink must match a stream-plane session honoring the
+        // same fft_len override, bit for bit.
+        let sid = sessions
+            .open(
+                &StreamSpec::ols(dtype, strategy, taps_re.clone(), taps_im.clone())
+                    .with_fft_len(fft_len),
+            )?
+            .session;
+        let (mut wre, mut wim) = (Vec::new(), Vec::new());
+        let mut off = 0usize;
+        for &c in &chunks {
+            let o = sessions.chunk(sid, &sig_re[off..off + c], &sig_im[off..off + c])?;
+            wre.extend(o.re);
+            wim.extend(o.im);
+            off += c;
+        }
+        let fin = sessions.close(sid)?;
+        wre.extend(fin.re);
+        wim.extend(fin.im);
+        if raw_re != wre || raw_im != wim {
+            return Err(FftError::Backend(format!(
+                "{dtype}: graph raw sink differs from the stream-plane session"
+            )));
+        }
+        // Magnitude sink: exactly |raw|² in f64, element for element.
+        if power.len() != raw_re.len()
+            || power
+                .iter()
+                .zip(raw_re.iter().zip(&raw_im))
+                .any(|(&p, (&r, &i))| p != r * r + i * i)
+        {
+            return Err(FftError::Backend(format!(
+                "{dtype}: magnitude sink is not exactly |.|^2 of the raw sink"
+            )));
+        }
+        // Summary sink: 6-value stats frames whose len fields cover
+        // every raw sample.
+        if summary.len() % 6 != 0
+            || summary.chunks(6).map(|f| f[0] as usize).sum::<usize>() != raw_re.len()
+        {
+            return Err(FftError::Backend(format!(
+                "{dtype}: summary sink frames do not cover the raw output"
+            )));
+        }
+
+        if reference.is_none() {
+            reference = Some((raw_re.clone(), raw_im.clone()));
+        }
+        let (ref_re, ref_im) = reference.as_ref().unwrap();
+        let err = rel_l2(&raw_re, &raw_im, ref_re, ref_im);
+        match final_bound {
+            Some(b) => {
+                println!(
+                    "  {dtype}: {} raw samples; err vs f64 {} <= composed bound {} ({final_passes} passes)",
+                    raw_re.len(),
+                    sci(err),
+                    sci(b)
+                );
+                if dtype != DType::F64 && (err.is_nan() || err > b) {
+                    return Err(FftError::Backend(format!(
+                        "{dtype}: graph error {err:.3e} exceeds the composed bound {b:.3e}"
+                    )));
+                }
+            }
+            None => println!(
+                "  {dtype}: {} raw samples; err vs f64 {} (no ratio bound for {strategy})",
+                raw_re.len(),
+                sci(err)
+            ),
+        }
+    }
+    println!(
+        "all six dtypes: raw sink bit-identical to the stream plane; magnitude and summary sinks verified"
+    );
+    Ok(())
+}
+
 /// `fft --dtype i16|i32`: one quantized transform on a random frame.
 /// The fixed-point plane attaches a per-frame a-priori quantization
 /// bound (block-floating-point ingest + per-pass noise model); the
@@ -333,6 +544,9 @@ fn fft_fixed(n: usize, strategy: Strategy, dtype: DType, seed: u64) -> FftResult
 pub fn fft(a: &Args) -> FftResult<()> {
     if a.get("stream-chunks").is_some() {
         return fft_stream(a);
+    }
+    if a.flag("graph") {
+        return fft_graph(a);
     }
     let n: usize = a.get_parse("n", 1024usize)?;
     crate::fft::log2_exact(n)?;
@@ -621,12 +835,311 @@ fn client_stream(a: &Args, addr: &str) -> FftResult<()> {
     Ok(())
 }
 
+/// `client --graph`: drive the protocol-v4 graph plane end to end —
+/// one publisher connection declares a chirp-echo DAG (window → fft →
+/// magnitude spectrum topic, plus a matched-filter range topic) and
+/// TWO extra subscriber connections attach to the sink topics.  Every
+/// received `PUBLISH` frame is verified bit-identical to the offline
+/// per-frame path in the same dtype, per-topic bounds must be
+/// monotone, and the matched-filter error vs f64 must sit within its
+/// composed bound.  Exits nonzero on any failure.
+fn client_graph(a: &Args, addr: &str) -> FftResult<()> {
+    use crate::fft::{AnyArena, AnyScratch, PlanSpec};
+    use crate::graph::{GraphSpec, NodeKind};
+    use crate::precision::SplitBuf;
+    use crate::signal::pulse::MatchedFilter;
+
+    let n: usize = a.get_parse("n", 256usize)?;
+    crate::fft::log2_exact(n)?;
+    let frames: usize = a.get_parse("requests", 12usize)?.max(1);
+    let pipeline: usize = a.get_parse("pipeline", 4usize)?.max(1);
+    let taps: usize = a.get_parse("taps", 64usize)?;
+    let dtype: DType = a.get_or("dtype", "f32").parse()?;
+    let strategy: Strategy = a.get_or("strategy", "dual").parse()?;
+    let seed: u64 = a.get_parse("seed", 42u64)?;
+    if dtype.is_fixed() {
+        return Err(FftError::InvalidArgument(format!(
+            "--graph drives a matched-filter topic, which needs a float dtype (got {dtype})"
+        )));
+    }
+    if taps == 0 || taps > n {
+        return Err(FftError::InvalidArgument(format!(
+            "--taps must be in 1..=n (got {taps}, n={n})"
+        )));
+    }
+
+    // One frame per request: a delayed, attenuated chirp echo in
+    // noise; the echo delay advances per frame so the range peak
+    // moves.
+    let (pr, pi) = default_chirp(taps);
+    let delay_of = |f: usize| (f * 13) % (n - taps + 1);
+    let mut rng = Pcg32::seed(seed);
+    let mut frames_data: Vec<(Vec<f64>, Vec<f64>)> = Vec::with_capacity(frames);
+    for f in 0..frames {
+        let delay = delay_of(f);
+        let mut re: Vec<f64> = (0..n).map(|_| 0.01 * rng.gaussian()).collect();
+        let mut im: Vec<f64> = (0..n).map(|_| 0.01 * rng.gaussian()).collect();
+        for t in 0..taps {
+            re[delay + t] += 0.1 * pr[t];
+            im[delay + t] += 0.1 * pi[t];
+        }
+        frames_data.push((re, im));
+    }
+
+    let mut publisher = FftClient::connect(addr)?;
+    publisher.set_read_timeout(Some(Duration::from_secs(60)))?;
+    let mut spec_conn = FftClient::connect(addr)?;
+    spec_conn.set_read_timeout(Some(Duration::from_secs(60)))?;
+    let mut range_conn = FftClient::connect(addr)?;
+    range_conn.set_read_timeout(Some(Duration::from_secs(60)))?;
+
+    let spec = GraphSpec::new(dtype, strategy, n)
+        .node(1, NodeKind::Source)
+        .node(2, NodeKind::Window { window: Window::Hann })
+        .node(3, NodeKind::Fft)
+        .node(4, NodeKind::Magnitude)
+        .node(5, NodeKind::Sink)
+        .node(6, NodeKind::MatchedFilter { pulse_re: pr.clone(), pulse_im: pi.clone() })
+        .node(7, NodeKind::Sink)
+        .edge(1, 2)
+        .edge(2, 3)
+        .edge(3, 4)
+        .edge(4, 5)
+        .edge(1, 6)
+        .edge(6, 7);
+    let mut graph = publisher.open_graph(&spec)?;
+    let gid = graph.graph();
+    println!(
+        "connected to {addr} — graph {gid} open (dtype={dtype} strategy={strategy} n={n} \
+         frames={frames}); spectrum topic = sink 5, range topic = sink 7"
+    );
+    let mut spec_sub = spec_conn.subscribe(gid, 5)?;
+    let mut range_sub = range_conn.subscribe(gid, 7)?;
+
+    // Pipelined ingest; every chunk ack carries the graph-wide
+    // composed bound, which must be monotone in the passes.
+    let mut last_bound = graph.initial_bound();
+    let (mut submitted, mut acked) = (0usize, 0usize);
+    while acked < frames {
+        while submitted < frames && graph.in_flight() < pipeline {
+            let (re, im) = &frames_data[submitted];
+            graph.submit_chunk(re, im)?;
+            submitted += 1;
+        }
+        let ack = graph.recv()?;
+        if let Some(e) = ack.error {
+            return Err(e);
+        }
+        if let (Some(prev), Some(b)) = (last_bound, ack.bound) {
+            if b < prev {
+                return Err(FftError::Backend(
+                    "composed graph bound must grow with passes".into(),
+                ));
+            }
+        }
+        last_bound = ack.bound;
+        acked += 1;
+    }
+    let fin = graph.close()?;
+    if let Some(e) = fin.error {
+        return Err(e);
+    }
+
+    // Both subscribers drain to their terminal eos frame.
+    fn drain(sub: &mut SubscribeHandle<'_>) -> FftResult<Vec<GraphResponse>> {
+        let mut out = Vec::new();
+        loop {
+            let r = sub.recv()?;
+            if let Some(e) = r.error {
+                return Err(e);
+            }
+            let eos = r.is_eos();
+            out.push(r);
+            if eos {
+                return Ok(out);
+            }
+        }
+    }
+    let spec_frames = drain(&mut spec_sub)?;
+    let range_frames = drain(&mut range_sub)?;
+
+    // Offline spectrum path, bit-identical by construction: window in
+    // f64, one FFT in the working dtype (widened exactly), |.|^2 in
+    // f64.
+    let win = Window::Hann.sample(n);
+    let transform = PlanSpec::new(n).strategy(strategy).dtype(dtype).build_any()?;
+    let mut arena = AnyArena::new(dtype, n);
+    let mut scratch = AnyScratch::new();
+    let mut spectrum_ref: Vec<Vec<f64>> = Vec::with_capacity(frames);
+    for (re, im) in &frames_data {
+        let wre: Vec<f64> = re.iter().zip(&win).map(|(&x, &w)| x * w).collect();
+        let wim: Vec<f64> = im.iter().zip(&win).map(|(&x, &w)| x * w).collect();
+        arena.reset(n);
+        arena.push_frame_f64(&wre, &wim);
+        transform.execute_frame_any(&mut arena, 0, &mut scratch)?;
+        let (fr, fi) = arena.frame_f64(0);
+        spectrum_ref.push(fr.iter().zip(&fi).map(|(&r, &i)| r * r + i * i).collect());
+    }
+
+    // Offline matched-filter path (round once into the dtype, compress,
+    // widen exactly — the graph node's own policy).
+    fn mf_offline<T: Real>(
+        strategy: Strategy,
+        n: usize,
+        pr: &[f64],
+        pi: &[f64],
+        frames: &[(Vec<f64>, Vec<f64>)],
+    ) -> FftResult<Vec<(Vec<f64>, Vec<f64>)>> {
+        let mf = MatchedFilter::<T>::new(&Planner::new(), strategy, n, pr, pi)?;
+        let mut scratch = SplitBuf::zeroed(n);
+        let mut out = Vec::with_capacity(frames.len());
+        for (re, im) in frames {
+            let mut x = SplitBuf::<T>::from_f64(re, im);
+            mf.compress(&mut x, &mut scratch)?;
+            out.push(x.to_f64());
+        }
+        Ok(out)
+    }
+    let range_ref = match dtype {
+        DType::F64 => mf_offline::<f64>(strategy, n, &pr, &pi, &frames_data)?,
+        DType::F32 => mf_offline::<f32>(strategy, n, &pr, &pi, &frames_data)?,
+        DType::Bf16 => mf_offline::<Bf16>(strategy, n, &pr, &pi, &frames_data)?,
+        DType::F16 => mf_offline::<F16>(strategy, n, &pr, &pi, &frames_data)?,
+        DType::I16 | DType::I32 => unreachable!("fixed dtypes rejected above"),
+    };
+    let range_f64 = if dtype == DType::F64 {
+        range_ref.clone()
+    } else {
+        mf_offline::<f64>(strategy, n, &pr, &pi, &frames_data)?
+    };
+    // Physics check on the f64 reference: the compression peak tracks
+    // the programmed echo delay.
+    for (idx, (fr, fi)) in range_f64.iter().enumerate() {
+        let p: Vec<f64> = fr.iter().zip(fi).map(|(&r, &i)| r * r + i * i).collect();
+        let expect = delay_of(idx);
+        if peak_bin(&p) != expect {
+            return Err(FftError::Backend(format!(
+                "frame {idx}: range peak {} != programmed echo delay {expect}",
+                peak_bin(&p)
+            )));
+        }
+    }
+
+    // Spectrum topic: power-plane frames bit-identical to the offline
+    // path.  `seq` indexes the ingest frame, so legitimate lag-drops
+    // appear as gaps, never as mismatches.
+    let mut spec_seen = 0usize;
+    let mut spec_last_bound: Option<f64> = None;
+    for r in &spec_frames {
+        if r.is_eos() {
+            continue;
+        }
+        let idx = (r.seq as usize)
+            .checked_sub(1)
+            .filter(|&i| i < frames)
+            .ok_or_else(|| FftError::Backend(format!("spectrum frame has bad seq {}", r.seq)))?;
+        if !r.im.is_empty() || r.re != spectrum_ref[idx] {
+            return Err(FftError::Backend(format!(
+                "spectrum frame seq {} differs from the offline window->fft->|.|^2 path",
+                r.seq
+            )));
+        }
+        if let (Some(prev), Some(b)) = (spec_last_bound, r.bound) {
+            if b < prev {
+                return Err(FftError::Backend(
+                    "spectrum topic bound must grow with passes".into(),
+                ));
+            }
+        }
+        spec_last_bound = r.bound.or(spec_last_bound);
+        spec_seen += 1;
+    }
+
+    // Range topic: complex frames bit-identical to the offline matched
+    // filter, error vs the f64 filter within each frame's composed
+    // bound.
+    let mut range_seen = 0usize;
+    let mut range_last_bound: Option<f64> = None;
+    let mut max_err = 0.0f64;
+    for r in &range_frames {
+        if r.is_eos() {
+            continue;
+        }
+        let idx = (r.seq as usize)
+            .checked_sub(1)
+            .filter(|&i| i < frames)
+            .ok_or_else(|| FftError::Backend(format!("range frame has bad seq {}", r.seq)))?;
+        let (wr, wi) = &range_ref[idx];
+        if &r.re != wr || &r.im != wi {
+            return Err(FftError::Backend(format!(
+                "range frame seq {} differs from the offline matched filter",
+                r.seq
+            )));
+        }
+        let (fr, fi) = &range_f64[idx];
+        let err = rel_l2(&r.re, &r.im, fr, fi);
+        max_err = max_err.max(err);
+        if let Some(b) = r.bound {
+            if dtype != DType::F64 && (err.is_nan() || err > b) {
+                return Err(FftError::Backend(format!(
+                    "range frame seq {} error {err:.3e} exceeds its composed bound {b:.3e}",
+                    r.seq
+                )));
+            }
+            if let Some(prev) = range_last_bound {
+                if b < prev {
+                    return Err(FftError::Backend(
+                        "range topic bound must grow with passes".into(),
+                    ));
+                }
+            }
+            range_last_bound = Some(b);
+        }
+        range_seen += 1;
+    }
+
+    println!(
+        "spectrum topic: {spec_seen}/{frames} frames bit-identical to offline ({} lag-dropped)",
+        frames - spec_seen
+    );
+    match range_last_bound {
+        Some(b) => println!(
+            "range topic: {range_seen}/{frames} frames bit-identical to offline ({} lag-dropped); \
+             max err vs f64 {} <= composed bound {}",
+            frames - range_seen,
+            sci(max_err),
+            sci(b)
+        ),
+        None => println!(
+            "range topic: {range_seen}/{frames} frames bit-identical to offline ({} lag-dropped); \
+             max err vs f64 {}",
+            frames - range_seen,
+            sci(max_err),
+        ),
+    }
+    match fin.bound {
+        Some(b) => println!(
+            "graph closed: {} passes, final composed bound {}; both subscribers reached eos",
+            fin.passes,
+            sci(b)
+        ),
+        None => println!(
+            "graph closed: {} passes; both subscribers reached eos",
+            fin.passes
+        ),
+    }
+    Ok(())
+}
+
 pub fn client(a: &Args) -> FftResult<()> {
     let addr = a
         .get("addr")
         .ok_or_else(|| FftError::InvalidArgument("client requires --addr HOST:PORT".into()))?;
     if a.flag("stream") {
         return client_stream(a, addr);
+    }
+    if a.flag("graph") {
+        return client_graph(a, addr);
     }
     let n: usize = a.get_parse("n", 1024usize)?;
     let requests: usize = a.get_parse("requests", 16usize)?;

@@ -35,6 +35,18 @@ pub struct Metrics {
     /// High-water mark of any session's cumulative FFT pass count —
     /// how far the eq. (11) serving bound has been stretched.
     max_stream_passes: AtomicU64,
+    /// Pipeline graphs ever opened (graph plane counter).
+    pub graphs_opened: AtomicU64,
+    /// Gauge: pipeline graphs currently open.
+    open_graphs: AtomicU64,
+    /// Gauge: sink-topic subscriptions currently attached.
+    active_subscribers: AtomicU64,
+    /// Sink frames published (one per frame, however many subscribers
+    /// share it).
+    pub published_chunks: AtomicU64,
+    /// Frames lag-dropped because a subscriber's backpressure window
+    /// was full.
+    pub subscriber_lag_drops: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS],
     // Per-dtype splits of submitted/completed/failed, indexed by
     // `DType::index()`.
@@ -108,6 +120,50 @@ impl Metrics {
     pub fn record_stream_chunk(&self, passes: u64) {
         self.stream_chunks.fetch_add(1, Ordering::Relaxed);
         self.max_stream_passes.fetch_max(passes, Ordering::Relaxed);
+    }
+
+    /// Count one opened pipeline graph; `open_now` updates the
+    /// open-graphs gauge.
+    pub fn record_graph_open(&self, open_now: usize) {
+        self.graphs_opened.fetch_add(1, Ordering::Relaxed);
+        self.open_graphs.store(open_now as u64, Ordering::Relaxed);
+    }
+
+    /// Record a closed (or force-closed) graph; `open_now` updates the
+    /// gauge.
+    pub fn record_graph_closed(&self, open_now: usize) {
+        self.open_graphs.store(open_now as u64, Ordering::Relaxed);
+    }
+
+    /// Record one new sink-topic subscription; `active_now` updates the
+    /// subscriber gauge.
+    pub fn record_graph_subscribe(&self, active_now: usize) {
+        self.active_subscribers.store(active_now as u64, Ordering::Relaxed);
+    }
+
+    /// Record detached subscriptions; `active_now` updates the gauge.
+    pub fn record_graph_unsubscribe(&self, active_now: usize) {
+        self.active_subscribers.store(active_now as u64, Ordering::Relaxed);
+    }
+
+    /// Count one published sink frame (shared by all its subscribers).
+    pub fn record_graph_publish(&self) {
+        self.published_chunks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one frame lag-dropped at a slow subscriber.
+    pub fn record_graph_lag_drop(&self) {
+        self.subscriber_lag_drops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Pipeline graphs currently open.
+    pub fn open_graphs(&self) -> u64 {
+        self.open_graphs.load(Ordering::Relaxed)
+    }
+
+    /// Sink-topic subscriptions currently attached.
+    pub fn active_subscribers(&self) -> u64 {
+        self.active_subscribers.load(Ordering::Relaxed)
     }
 
     /// Stream sessions currently open.
@@ -190,6 +246,11 @@ impl Metrics {
             open_streams: self.open_streams(),
             stream_chunks: self.stream_chunks.load(Ordering::Relaxed),
             max_stream_passes: self.max_stream_passes(),
+            graphs_opened: self.graphs_opened.load(Ordering::Relaxed),
+            open_graphs: self.open_graphs(),
+            active_subscribers: self.active_subscribers(),
+            published_chunks: self.published_chunks.load(Ordering::Relaxed),
+            subscriber_lag_drops: self.subscriber_lag_drops.load(Ordering::Relaxed),
             per_dtype: core::array::from_fn(|i| self.dtype_counts(DType::ALL[i])),
         }
     }
@@ -228,6 +289,16 @@ impl Metrics {
                 s.streams_opened, s.open_streams, s.stream_chunks, s.max_stream_passes
             ));
         }
+        if s.graphs_opened > 0 {
+            out.push_str(&format!(
+                " graphs={} open_graphs={} subscribers={} published_chunks={} lag_drops={}",
+                s.graphs_opened,
+                s.open_graphs,
+                s.active_subscribers,
+                s.published_chunks,
+                s.subscriber_lag_drops
+            ));
+        }
         out
     }
 }
@@ -264,6 +335,16 @@ pub struct MetricsSnapshot {
     pub stream_chunks: u64,
     /// High-water mark of any session's cumulative FFT pass count.
     pub max_stream_passes: u64,
+    /// Pipeline graphs ever opened (graph plane).
+    pub graphs_opened: u64,
+    /// Pipeline graphs open when the snapshot was taken.
+    pub open_graphs: u64,
+    /// Sink-topic subscriptions attached when the snapshot was taken.
+    pub active_subscribers: u64,
+    /// Sink frames published (shared across subscribers, counted once).
+    pub published_chunks: u64,
+    /// Frames lag-dropped at slow subscribers.
+    pub subscriber_lag_drops: u64,
     /// Per-dtype request counters, indexed by `DType::index()` (use
     /// [`MetricsSnapshot::dtype`] for keyed access).
     pub per_dtype: [DTypeCounts; DType::COUNT],
@@ -397,6 +478,32 @@ mod tests {
         let text = m.summary();
         assert!(text.contains("streams=2"), "{text}");
         assert!(text.contains("stream_chunks=2"), "{text}");
+    }
+
+    #[test]
+    fn graph_gauges_track_publishes_and_lag_drops() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().graphs_opened, 0);
+        m.record_graph_open(1);
+        m.record_graph_open(2);
+        m.record_graph_subscribe(1);
+        m.record_graph_subscribe(2);
+        m.record_graph_publish();
+        m.record_graph_publish();
+        m.record_graph_publish();
+        m.record_graph_lag_drop();
+        m.record_graph_unsubscribe(1);
+        m.record_graph_closed(1);
+        let s = m.snapshot();
+        assert_eq!(s.graphs_opened, 2);
+        assert_eq!(s.open_graphs, 1);
+        assert_eq!(s.active_subscribers, 1);
+        assert_eq!(s.published_chunks, 3);
+        assert_eq!(s.subscriber_lag_drops, 1);
+        let text = m.summary();
+        assert!(text.contains("graphs=2"), "{text}");
+        assert!(text.contains("published_chunks=3"), "{text}");
+        assert!(text.contains("lag_drops=1"), "{text}");
     }
 
     #[test]

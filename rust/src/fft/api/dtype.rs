@@ -298,13 +298,20 @@ impl AnyArena {
     /// format — float codes widen losslessly, fixed codes dequantize
     /// as `q · 2^scale`, also exact).
     pub fn frame_f64(&self, i: usize) -> (Vec<f64>, Vec<f64>) {
+        let (mut re, mut im) = (Vec::new(), Vec::new());
+        self.frame_f64_into(i, &mut re, &mut im);
+        (re, im)
+    }
+
+    /// Append frame `i` to caller-held vectors, widened to f64 — the
+    /// allocation-free spelling of [`AnyArena::frame_f64`], used by
+    /// the streaming/graph hot paths (same exactness guarantees).
+    pub fn frame_f64_into(&self, i: usize, out_re: &mut Vec<f64>, out_im: &mut Vec<f64>) {
         macro_rules! widen {
             ($a:expr) => {{
                 let (re, im) = $a.frame(i);
-                (
-                    re.iter().map(|&x| x.to_f64()).collect(),
-                    im.iter().map(|&x| x.to_f64()).collect(),
-                )
+                out_re.extend(re.iter().map(|&x| x.to_f64()));
+                out_im.extend(im.iter().map(|&x| x.to_f64()));
             }};
         }
         match self {
@@ -312,8 +319,8 @@ impl AnyArena {
             AnyArena::F32(a) => widen!(a),
             AnyArena::Bf16(a) => widen!(a),
             AnyArena::F16(a) => widen!(a),
-            AnyArena::I16(a) => a.frame_f64(i),
-            AnyArena::I32(a) => a.frame_f64(i),
+            AnyArena::I16(a) => a.frame_f64_into(i, out_re, out_im),
+            AnyArena::I32(a) => a.frame_f64_into(i, out_re, out_im),
         }
     }
 

@@ -180,12 +180,19 @@ impl<Q: QSample> FixedArena<Q> {
     /// Copy frame `i` out, dequantized to f64 (`q · 2^scale`, exact —
     /// a Q-code has at most 31 significant bits).
     pub fn frame_f64(&self, i: usize) -> (Vec<f64>, Vec<f64>) {
+        let (mut re, mut im) = (Vec::new(), Vec::new());
+        self.frame_f64_into(i, &mut re, &mut im);
+        (re, im)
+    }
+
+    /// Append frame `i`'s dequantized samples to caller-held vectors —
+    /// the allocation-free spelling of [`FixedArena::frame_f64`], used
+    /// by the streaming hot paths.
+    pub fn frame_f64_into(&self, i: usize, out_re: &mut Vec<f64>, out_im: &mut Vec<f64>) {
         let scale = exp2i(self.meta[i].scale);
         let (re, im) = self.frame(i);
-        (
-            re.iter().map(|&q| q.to_i64() as f64 * scale).collect(),
-            im.iter().map(|&q| q.to_i64() as f64 * scale).collect(),
-        )
+        out_re.extend(re.iter().map(|&q| q.to_i64() as f64 * scale));
+        out_im.extend(im.iter().map(|&q| q.to_i64() as f64 * scale));
     }
 }
 

@@ -1,0 +1,47 @@
+//! Composable DSP pipeline graphs with pub/sub fan-out (protocol v4).
+//!
+//! The graph plane generalizes the one-engine-per-session stream
+//! plane ([`crate::stream`]): a client declares a small DAG over one
+//! ingest stream —
+//!
+//! ```text
+//! source → window → fft → magnitude → sink #9   (spectrum topic)
+//!        ↘ matched-filter → sink #5             (range topic)
+//! ```
+//!
+//! — the server validates the topology (acyclic, single source,
+//! single-input nodes, sinks as leaves — all violations are typed
+//! [`crate::fft::FftError::Protocol`]), builds every node over the
+//! existing engines (overlap-save, STFT, matched filter, plan-backed
+//! FFT) plus cheap stages (window, detrend, magnitude, decimate,
+//! summary), and executes chunks in topological order with zero
+//! hot-path allocations.  Any number of subscriber connections attach
+//! to named *sink topics*; every published frame is shared across its
+//! subscribers through one `Arc` — never deep-copied — and a slow
+//! subscriber lag-drops frames behind a per-subscriber backpressure
+//! window instead of stalling the publisher.
+//!
+//! Accuracy accounting composes end-to-end: each node reports its
+//! cumulative butterfly passes and worst precomputed-ratio magnitude,
+//! and every sink frame carries the running a-priori bound along its
+//! source→sink path via
+//! [`crate::analysis::bounds::serving_bound_from_tmax`] — exactly the
+//! stream plane's bound, extended over paths (worst `t`, summed
+//! passes).  Fixed-point graphs sum per-node quantization bounds
+//! instead.
+//!
+//! | module | role |
+//! |---|---|
+//! | [`topology`] | graph specs, structural validation, topo order |
+//! | [`node`] | the [`GraphNode`] work-quantum trait + node impls |
+//! | [`registry`] | open/chunk/close + subscriptions + fan-out |
+
+pub mod node;
+pub mod registry;
+pub mod topology;
+
+pub use node::GraphNode;
+pub use registry::{
+    GraphConfig, GraphOut, GraphPublish, GraphRegistry, PublishSink, SinkOut, Subscription,
+};
+pub use topology::{GraphSpec, NodeKind, NodeSpec, MAX_GRAPH_EDGES, MAX_GRAPH_NODES};

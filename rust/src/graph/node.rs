@@ -1,0 +1,593 @@
+//! The [`GraphNode`] work-quantum trait and the node implementations
+//! behind each [`crate::graph::NodeKind`].
+//!
+//! Dataflow between nodes travels as **planar f64** (`im` empty for
+//! power-plane data).  Engine-backed nodes round into the graph's
+//! working dtype exactly once per quantum and widen exactly back —
+//! the same single-rounding policy the stream plane uses — so every
+//! node's output is bit-identical per dtype to driving the underlying
+//! engine directly.  The cheap nodes (detrend, magnitude, decimate,
+//! summary) compute in f64 and are dtype-independent.
+//!
+//! Processing appends into caller-held output vectors and reuses all
+//! internal staging, so the execute path allocates nothing after
+//! warmup (asserted by `tests/alloc_regression.rs`).
+
+use crate::analysis::ratio::ratio_stats;
+use crate::fft::api::{AnyArena, AnyScratch, AnyTransform, DType, PlanSpec, Planner, Scratch};
+use crate::fft::{log2_exact, FftError, FftResult, Strategy};
+use crate::precision::{Bf16, Real, F16};
+use crate::signal::pulse::MatchedFilter;
+use crate::stream::session::Engine;
+
+/// One pipeline stage, FutureSDR-style: a stateful kernel invoked
+/// once per work quantum.
+///
+/// * `process` receives the parent's output for one quantum as planar
+///   f64 slices (`im` empty on the power plane) and **appends** its
+///   own output to `out_re`/`out_im` — the executor clears them.  An
+///   empty input quantum must succeed as a no-op (it is how tail
+///   flushes cascade through the graph at close).
+/// * `finish` appends any tail after the final quantum (overlap-save
+///   zero-padding flush, for example).
+/// * `passes`/`tmax`/`fixed_bound` feed the composed running error
+///   bound: float graphs combine `(max tmax, Σ passes)` through
+///   [`crate::analysis::bounds::serving_bound_from_tmax`], fixed
+///   graphs sum per-node quantization bounds.
+pub trait GraphNode: Send {
+    fn process(
+        &mut self,
+        re: &[f64],
+        im: &[f64],
+        out_re: &mut Vec<f64>,
+        out_im: &mut Vec<f64>,
+    ) -> FftResult<()>;
+
+    /// Flush any tail after the final quantum (appended, like
+    /// `process`).  Called at most once, at graph close.
+    fn finish(&mut self, _out_re: &mut Vec<f64>, _out_im: &mut Vec<f64>) -> FftResult<()> {
+        Ok(())
+    }
+
+    /// Cumulative FFT butterfly passes this node has executed.
+    fn passes(&self) -> u64 {
+        0
+    }
+
+    /// Worst-case |t| over this node's plans (`None` when the node
+    /// runs no FFT, or its strategy has no bounded precomputed ratio).
+    fn tmax(&self) -> Option<f64> {
+        None
+    }
+
+    /// Fixed-dtype running bound contribution: `Some(0.0)` for nodes
+    /// that run no fixed-point FFT, the engine's running quantization
+    /// bound otherwise (sticky `None` once lost to saturation).
+    fn fixed_bound(&self) -> Option<f64> {
+        Some(0.0)
+    }
+
+    /// Worst-case output samples for an input quantum of `in_samples`
+    /// — lets the executor bound total reply size *before* any node
+    /// state advances, so oversized chunks are rejected losslessly.
+    fn worst_case_out(&self, in_samples: usize) -> usize {
+        in_samples
+    }
+}
+
+/// `Source` and `Sink`: verbatim pass-through.
+pub(crate) struct PassNode;
+
+impl GraphNode for PassNode {
+    fn process(
+        &mut self,
+        re: &[f64],
+        im: &[f64],
+        out_re: &mut Vec<f64>,
+        out_im: &mut Vec<f64>,
+    ) -> FftResult<()> {
+        out_re.extend_from_slice(re);
+        out_im.extend_from_slice(im);
+        Ok(())
+    }
+}
+
+/// `Window`: multiply each fixed-length quantum by a precomputed
+/// window, in f64 — the same windowing policy as the STFT planes, so
+/// `window → fft` matches an STFT column bit-for-bit.
+pub(crate) struct WindowNode {
+    win: Vec<f64>,
+}
+
+impl WindowNode {
+    pub(crate) fn new(win: Vec<f64>) -> Self {
+        WindowNode { win }
+    }
+}
+
+impl GraphNode for WindowNode {
+    fn process(
+        &mut self,
+        re: &[f64],
+        im: &[f64],
+        out_re: &mut Vec<f64>,
+        out_im: &mut Vec<f64>,
+    ) -> FftResult<()> {
+        if re.is_empty() && im.is_empty() {
+            return Ok(());
+        }
+        if re.len() != self.win.len() || im.len() != re.len() {
+            return Err(FftError::LengthMismatch {
+                expected: self.win.len(),
+                got: re.len().max(im.len()),
+            });
+        }
+        out_re.extend(re.iter().zip(&self.win).map(|(&x, &w)| x * w));
+        out_im.extend(im.iter().zip(&self.win).map(|(&x, &w)| x * w));
+        Ok(())
+    }
+}
+
+/// `Fft`: one transform per fixed-length quantum through the
+/// dtype-erased plan — input rounded into the working dtype once,
+/// output widened exactly back.
+pub(crate) struct FftNode {
+    transform: AnyTransform,
+    arena: AnyArena,
+    scratch: AnyScratch,
+    n: usize,
+    m: u64,
+    frames: u64,
+    fixed: bool,
+    tmax: Option<f64>,
+    fixed_worst: Option<f64>,
+}
+
+impl FftNode {
+    pub(crate) fn new(n: usize, dtype: DType, strategy: Strategy) -> FftResult<Self> {
+        let m = u64::from(log2_exact(n)?);
+        let transform = PlanSpec::new(n).strategy(strategy).dtype(dtype).build_any()?;
+        let tmax = (strategy != Strategy::Standard).then(|| ratio_stats(n, strategy).max_clamped);
+        Ok(FftNode {
+            transform,
+            arena: AnyArena::new(dtype, n),
+            scratch: AnyScratch::new(),
+            n,
+            m,
+            frames: 0,
+            fixed: dtype.is_fixed(),
+            tmax,
+            fixed_worst: Some(0.0),
+        })
+    }
+}
+
+impl GraphNode for FftNode {
+    fn process(
+        &mut self,
+        re: &[f64],
+        im: &[f64],
+        out_re: &mut Vec<f64>,
+        out_im: &mut Vec<f64>,
+    ) -> FftResult<()> {
+        if re.is_empty() && im.is_empty() {
+            return Ok(());
+        }
+        if re.len() != self.n || im.len() != re.len() {
+            return Err(FftError::LengthMismatch { expected: self.n, got: re.len().max(im.len()) });
+        }
+        self.arena.reset(self.n);
+        self.arena.push_frame_f64(re, im);
+        self.transform.execute_frame_any(&mut self.arena, 0, &mut self.scratch)?;
+        if self.fixed {
+            self.fixed_worst = match (self.fixed_worst, self.arena.frame_bound(0)) {
+                (Some(w), Some(b)) => Some(w.max(b)),
+                _ => None,
+            };
+        }
+        self.frames += 1;
+        self.arena.frame_f64_into(0, out_re, out_im);
+        Ok(())
+    }
+
+    fn passes(&self) -> u64 {
+        self.frames * self.m
+    }
+
+    fn tmax(&self) -> Option<f64> {
+        self.tmax
+    }
+
+    fn fixed_bound(&self) -> Option<f64> {
+        if self.fixed {
+            self.fixed_worst
+        } else {
+            Some(0.0)
+        }
+    }
+}
+
+/// `Ols` and `Stft`: the stream plane's engines behind the node
+/// interface.  Wrapping [`Engine`] (rather than the filters directly)
+/// buys the full six-dtype dispatch and keeps outputs bit-identical
+/// to stream sessions by construction.
+pub(crate) struct EngineNode {
+    engine: Engine,
+    ols: bool,
+    fixed: bool,
+    tmax: Option<f64>,
+}
+
+impl EngineNode {
+    pub(crate) fn new(engine: Engine, ols: bool, dtype: DType, strategy: Strategy) -> Self {
+        let tmax = (strategy != Strategy::Standard && !dtype.is_fixed())
+            .then(|| ratio_stats(engine.fft_len(), strategy).max_clamped);
+        EngineNode { engine, ols, fixed: dtype.is_fixed(), tmax }
+    }
+}
+
+impl GraphNode for EngineNode {
+    fn process(
+        &mut self,
+        re: &[f64],
+        im: &[f64],
+        out_re: &mut Vec<f64>,
+        out_im: &mut Vec<f64>,
+    ) -> FftResult<()> {
+        self.engine.chunk_into(re, im, out_re, out_im)
+    }
+
+    fn finish(&mut self, out_re: &mut Vec<f64>, out_im: &mut Vec<f64>) -> FftResult<()> {
+        self.engine.finish_into(out_re, out_im)
+    }
+
+    fn passes(&self) -> u64 {
+        self.engine.passes()
+    }
+
+    fn tmax(&self) -> Option<f64> {
+        self.tmax
+    }
+
+    fn fixed_bound(&self) -> Option<f64> {
+        if self.fixed {
+            self.engine.bound()
+        } else {
+            Some(0.0)
+        }
+    }
+
+    fn worst_case_out(&self, in_samples: usize) -> usize {
+        // `worst_case_payload` counts f64 values: both planes for the
+        // complex OLS output, one plane for STFT power columns.
+        let f64s = self.engine.worst_case_payload(in_samples);
+        if self.ols {
+            f64s / 2
+        } else {
+            f64s
+        }
+    }
+}
+
+/// `MatchedFilter`: per-quantum pulse compression in the working
+/// float dtype (round once in, widen exactly out — bit-identical to
+/// [`MatchedFilter::compress_frame`] on a rounded buffer).
+struct MfNode<T: Real> {
+    mf: MatchedFilter<T>,
+    scratch: Scratch<T>,
+    wre: Vec<T>,
+    wim: Vec<T>,
+    n: usize,
+    m: u64,
+    frames: u64,
+    tmax: Option<f64>,
+}
+
+impl<T: Real> GraphNode for MfNode<T> {
+    fn process(
+        &mut self,
+        re: &[f64],
+        im: &[f64],
+        out_re: &mut Vec<f64>,
+        out_im: &mut Vec<f64>,
+    ) -> FftResult<()> {
+        if re.is_empty() && im.is_empty() {
+            return Ok(());
+        }
+        if re.len() != self.n || im.len() != re.len() {
+            return Err(FftError::LengthMismatch { expected: self.n, got: re.len().max(im.len()) });
+        }
+        self.wre.clear();
+        self.wre.extend(re.iter().map(|&x| T::from_f64(x)));
+        self.wim.clear();
+        self.wim.extend(im.iter().map(|&x| T::from_f64(x)));
+        self.mf.compress_frame(&mut self.wre, &mut self.wim, &mut self.scratch);
+        self.frames += 1;
+        out_re.extend(self.wre.iter().map(|&x| x.to_f64()));
+        out_im.extend(self.wim.iter().map(|&x| x.to_f64()));
+        Ok(())
+    }
+
+    fn passes(&self) -> u64 {
+        // One forward FFT of the pulse at build, forward + inverse per
+        // compressed frame — the same accounting as the offline path.
+        self.m * (1 + 2 * self.frames)
+    }
+
+    fn tmax(&self) -> Option<f64> {
+        self.tmax
+    }
+}
+
+/// Build a matched-filter node in the graph's working dtype (float
+/// only — pulse compression has no fixed-point engine).
+pub(crate) fn matched_filter_node(
+    dtype: DType,
+    strategy: Strategy,
+    n: usize,
+    pulse_re: &[f64],
+    pulse_im: &[f64],
+) -> FftResult<Box<dyn GraphNode>> {
+    fn build<T: Real + 'static>(
+        strategy: Strategy,
+        n: usize,
+        pulse_re: &[f64],
+        pulse_im: &[f64],
+    ) -> FftResult<Box<dyn GraphNode>> {
+        let mf = MatchedFilter::<T>::new(&Planner::new(), strategy, n, pulse_re, pulse_im)?;
+        let m = u64::from(log2_exact(n)?);
+        let tmax = (strategy != Strategy::Standard).then(|| ratio_stats(n, strategy).max_clamped);
+        Ok(Box::new(MfNode {
+            mf,
+            scratch: Scratch::new(),
+            wre: Vec::new(),
+            wim: Vec::new(),
+            n,
+            m,
+            frames: 0,
+            tmax,
+        }))
+    }
+    match dtype {
+        DType::F64 => build::<f64>(strategy, n, pulse_re, pulse_im),
+        DType::F32 => build::<f32>(strategy, n, pulse_re, pulse_im),
+        DType::Bf16 => build::<Bf16>(strategy, n, pulse_re, pulse_im),
+        DType::F16 => build::<F16>(strategy, n, pulse_re, pulse_im),
+        DType::I16 | DType::I32 => Err(FftError::InvalidArgument(format!(
+            "matched-filter graph nodes need a float dtype, got {}",
+            dtype.name()
+        ))),
+    }
+}
+
+/// `Detrend`: subtract the per-quantum (complex) mean, in f64.
+pub(crate) struct DetrendNode;
+
+impl GraphNode for DetrendNode {
+    fn process(
+        &mut self,
+        re: &[f64],
+        im: &[f64],
+        out_re: &mut Vec<f64>,
+        out_im: &mut Vec<f64>,
+    ) -> FftResult<()> {
+        if re.is_empty() {
+            return Ok(());
+        }
+        let complex = !im.is_empty();
+        if complex && im.len() != re.len() {
+            return Err(FftError::LengthMismatch { expected: re.len(), got: im.len() });
+        }
+        let n = re.len() as f64;
+        let mean_re = re.iter().sum::<f64>() / n;
+        out_re.extend(re.iter().map(|&x| x - mean_re));
+        if complex {
+            let mean_im = im.iter().sum::<f64>() / n;
+            out_im.extend(im.iter().map(|&x| x - mean_im));
+        }
+        Ok(())
+    }
+}
+
+/// `Magnitude`: per-sample power `|x|²` — complex in, power plane out
+/// (`im` empty), matching the STFT column convention.
+pub(crate) struct MagnitudeNode;
+
+impl GraphNode for MagnitudeNode {
+    fn process(
+        &mut self,
+        re: &[f64],
+        im: &[f64],
+        out_re: &mut Vec<f64>,
+        _out_im: &mut Vec<f64>,
+    ) -> FftResult<()> {
+        if re.is_empty() && im.is_empty() {
+            return Ok(());
+        }
+        if im.len() != re.len() {
+            return Err(FftError::LengthMismatch { expected: re.len(), got: im.len() });
+        }
+        out_re.extend(re.iter().zip(im).map(|(&r, &i)| r * r + i * i));
+        Ok(())
+    }
+}
+
+/// `Decimate`: keep every `factor`-th sample, phase carried across
+/// quanta so chunk boundaries are unobservable.
+pub(crate) struct DecimateNode {
+    factor: usize,
+    phase: usize,
+}
+
+impl DecimateNode {
+    pub(crate) fn new(factor: usize) -> Self {
+        DecimateNode { factor, phase: 0 }
+    }
+}
+
+impl GraphNode for DecimateNode {
+    fn process(
+        &mut self,
+        re: &[f64],
+        im: &[f64],
+        out_re: &mut Vec<f64>,
+        out_im: &mut Vec<f64>,
+    ) -> FftResult<()> {
+        let complex = !im.is_empty();
+        if complex && im.len() != re.len() {
+            return Err(FftError::LengthMismatch { expected: re.len(), got: im.len() });
+        }
+        for i in 0..re.len() {
+            if self.phase == 0 {
+                out_re.push(re[i]);
+                if complex {
+                    out_im.push(im[i]);
+                }
+            }
+            self.phase += 1;
+            if self.phase == self.factor {
+                self.phase = 0;
+            }
+        }
+        Ok(())
+    }
+
+    fn worst_case_out(&self, in_samples: usize) -> usize {
+        in_samples / self.factor + 1
+    }
+}
+
+/// `Summary`: a 6-value stats frame per non-empty quantum —
+/// `[len, mean_re, mean_im, rms, peak_power, peak_index]`, power
+/// plane (`im` empty).
+pub(crate) struct SummaryNode;
+
+impl GraphNode for SummaryNode {
+    fn process(
+        &mut self,
+        re: &[f64],
+        im: &[f64],
+        out_re: &mut Vec<f64>,
+        _out_im: &mut Vec<f64>,
+    ) -> FftResult<()> {
+        if re.is_empty() {
+            return Ok(());
+        }
+        let complex = !im.is_empty();
+        if complex && im.len() != re.len() {
+            return Err(FftError::LengthMismatch { expected: re.len(), got: im.len() });
+        }
+        let n = re.len();
+        let mean_re = re.iter().sum::<f64>() / n as f64;
+        let mean_im = if complex { im.iter().sum::<f64>() / n as f64 } else { 0.0 };
+        let mut energy = 0.0;
+        let mut peak = f64::NEG_INFINITY;
+        let mut peak_index = 0usize;
+        for i in 0..n {
+            let p = re[i] * re[i] + if complex { im[i] * im[i] } else { 0.0 };
+            energy += p;
+            if p > peak {
+                peak = p;
+                peak_index = i;
+            }
+        }
+        out_re.extend_from_slice(&[
+            n as f64,
+            mean_re,
+            mean_im,
+            (energy / n as f64).sqrt(),
+            peak,
+            peak_index as f64,
+        ]);
+        Ok(())
+    }
+
+    fn worst_case_out(&self, _in_samples: usize) -> usize {
+        6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decimate_carries_phase_across_quanta() {
+        let mut d = DecimateNode::new(3);
+        let (mut or_, mut oi) = (Vec::new(), Vec::new());
+        let x: Vec<f64> = (0..10).map(f64::from).collect();
+        d.process(&x[..4], &[], &mut or_, &mut oi).unwrap();
+        d.process(&x[4..], &[], &mut or_, &mut oi).unwrap();
+        assert_eq!(or_, vec![0.0, 3.0, 6.0, 9.0]);
+        assert!(oi.is_empty());
+        // One-shot decimation of the same signal agrees.
+        let mut whole = DecimateNode::new(3);
+        let (mut wr, mut wi) = (Vec::new(), Vec::new());
+        whole.process(&x, &[], &mut wr, &mut wi).unwrap();
+        assert_eq!(or_, wr);
+    }
+
+    #[test]
+    fn summary_reports_len_means_rms_and_peak() {
+        let mut s = SummaryNode;
+        let (mut or_, mut oi) = (Vec::new(), Vec::new());
+        s.process(&[3.0, 0.0, -1.0, 2.0], &[0.0, 4.0, 0.0, 0.0], &mut or_, &mut oi).unwrap();
+        assert_eq!(or_.len(), 6);
+        assert_eq!(or_[0], 4.0);
+        assert_eq!(or_[1], 1.0);
+        assert_eq!(or_[2], 1.0);
+        assert!((or_[3] - (30.0f64 / 4.0).sqrt()).abs() < 1e-15);
+        assert_eq!(or_[4], 16.0);
+        assert_eq!(or_[5], 1.0);
+        assert!(oi.is_empty());
+    }
+
+    #[test]
+    fn fft_node_matches_direct_any_transform() {
+        let n = 16;
+        let re: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+        let im: Vec<f64> = (0..n).map(|i| (i as f64 * 0.11).cos()).collect();
+        for dtype in [DType::F64, DType::F16, DType::I16] {
+            let mut node = FftNode::new(n, dtype, Strategy::DualSelect).unwrap();
+            let (mut or_, mut oi) = (Vec::new(), Vec::new());
+            node.process(&re, &im, &mut or_, &mut oi).unwrap();
+            assert_eq!(node.passes(), 4);
+
+            let t = PlanSpec::new(n).strategy(Strategy::DualSelect).dtype(dtype).build_any().unwrap();
+            let mut arena = AnyArena::new(dtype, n);
+            arena.push_frame_f64(&re, &im);
+            t.execute_frame_any(&mut arena, 0, &mut AnyScratch::new()).unwrap();
+            let (dr, di) = arena.frame_f64(0);
+            assert_eq!(or_, dr, "{} re plane diverged", dtype.name());
+            assert_eq!(oi, di, "{} im plane diverged", dtype.name());
+        }
+    }
+
+    #[test]
+    fn matched_filter_node_rejects_fixed_dtypes() {
+        let err = matched_filter_node(DType::I16, Strategy::DualSelect, 8, &[1.0], &[0.0])
+            .unwrap_err();
+        assert!(matches!(err, FftError::InvalidArgument(_)), "{err:?}");
+    }
+
+    #[test]
+    fn empty_quantum_is_a_no_op_everywhere() {
+        let mut nodes: Vec<Box<dyn GraphNode>> = vec![
+            Box::new(PassNode),
+            Box::new(WindowNode::new(vec![1.0; 8])),
+            Box::new(FftNode::new(8, DType::F32, Strategy::DualSelect).unwrap()),
+            matched_filter_node(DType::F32, Strategy::DualSelect, 8, &[1.0], &[0.0]).unwrap(),
+            Box::new(DetrendNode),
+            Box::new(MagnitudeNode),
+            Box::new(DecimateNode::new(2)),
+            Box::new(SummaryNode),
+        ];
+        for node in &mut nodes {
+            let before = node.passes();
+            let (mut or_, mut oi) = (Vec::new(), Vec::new());
+            node.process(&[], &[], &mut or_, &mut oi).unwrap();
+            assert!(or_.is_empty() && oi.is_empty());
+            assert_eq!(node.passes(), before, "empty quantum must not run an FFT");
+        }
+    }
+}

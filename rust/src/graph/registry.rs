@@ -1,0 +1,1264 @@
+//! The graph session layer: [`GraphRegistry`] owns open pipeline
+//! graphs the way [`crate::stream::SessionRegistry`] owns stream
+//! sessions — same `Idle`/`Busy`/`Doomed` slot protocol, same typed
+//! backpressure ([`crate::fft::FftError::Rejected`] → `BUSY` on the
+//! wire), same force-close guarantees for vanished owners — plus the
+//! **pub/sub side**: any number of subscribers attach to a graph's
+//! sink nodes, and every published sink frame is shared via one
+//! [`Arc<GraphPublish>`] across all of its subscribers (payloads are
+//! never deep-copied per subscriber).
+//!
+//! **Backpressure** is per subscriber: a subscriber with
+//! `GraphConfig::sub_queue` frames still in flight to its writer
+//! *lag-drops* the new frame (counted on the subscription and in
+//! [`crate::coordinator::Metrics::record_graph_lag_drop`]) instead of
+//! stalling the publisher or its peers.  Dropped frames are visible
+//! to the subscriber as gaps in the per-sink `seq`.
+//!
+//! **Zero-allocation contract**: [`GraphRegistry::chunk`] into a
+//! reused [`GraphOut`] allocates nothing after warmup (asserted by
+//! `tests/alloc_regression.rs`).  The Arc-building
+//! [`GraphRegistry::publish`] fan-out path is *outside* that contract
+//! — it hands payload buffers off to subscribers by design.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+
+use crate::analysis::bounds::serving_bound_from_tmax;
+use crate::coordinator::Metrics;
+use crate::fft::api::DType;
+use crate::fft::{FftError, FftResult};
+use crate::stream::session::Engine;
+use crate::stream::{StreamSpec, MAX_STREAM_OUT_F64S};
+
+use super::node::{
+    matched_filter_node, DecimateNode, DetrendNode, EngineNode, FftNode, GraphNode, MagnitudeNode,
+    PassNode, SummaryNode, WindowNode,
+};
+use super::topology::{GraphSpec, NodeKind};
+
+/// Registry limits.
+#[derive(Clone, Copy, Debug)]
+pub struct GraphConfig {
+    /// Concurrent open graphs before `open` answers
+    /// [`FftError::Rejected`] (→ `BUSY`; retry after a close).
+    pub max_graphs: usize,
+    /// Max complex samples per ingest chunk (and per fixed ingest
+    /// frame).
+    pub max_chunk: usize,
+    /// Max OLS taps per node (same rationale as
+    /// [`crate::stream::StreamConfig::max_taps`]).
+    pub max_taps: usize,
+    /// Max STFT frame per node.
+    pub max_stft_frame: usize,
+    /// Total concurrent subscriptions across all graphs.
+    pub max_subscribers: usize,
+    /// In-flight published frames per subscriber before new frames
+    /// lag-drop for that subscriber only.
+    pub sub_queue: usize,
+}
+
+impl Default for GraphConfig {
+    fn default() -> Self {
+        GraphConfig {
+            max_graphs: 16,
+            max_chunk: 1 << 20,
+            max_taps: 1 << 16,
+            max_stft_frame: 1 << 16,
+            max_subscribers: 64,
+            sub_queue: 64,
+        }
+    }
+}
+
+/// One sink's output for one ingest quantum.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SinkOut {
+    /// The sink node's id — the topic subscribers name.
+    pub node: u32,
+    /// Per-sink publish sequence number.  Increments only when the
+    /// sink actually publishes (non-empty payload, or the final eos
+    /// frame), so subscriber-side gaps mean lag-drops, not silence.
+    pub seq: u64,
+    /// Composed passes along this sink's source→sink path.
+    pub passes: u64,
+    /// Composed a-priori bound along the path (float: eq. (11) over
+    /// the path's worst |t| and summed passes; fixed: summed per-node
+    /// quantization bounds; `None` once any contributing node loses
+    /// its bound).
+    pub bound: Option<f64>,
+    /// True on the final frame at graph close.
+    pub eos: bool,
+    pub re: Vec<f64>,
+    pub im: Vec<f64>,
+}
+
+impl SinkOut {
+    /// Whether this entry would produce a `PUBLISH` frame (non-empty
+    /// payload, or the terminal eos marker).
+    pub fn publishable(&self) -> bool {
+        self.eos || !self.re.is_empty() || !self.im.is_empty()
+    }
+}
+
+/// What one `open`/`chunk`/`close` call returns: graph-wide totals
+/// plus one [`SinkOut`] per sink, in a caller-held reusable buffer
+/// (internal staging is swapped in, not copied).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GraphOut {
+    pub graph: u64,
+    pub dtype: DType,
+    /// Ingest chunks processed so far.
+    pub chunks: u64,
+    /// Total butterfly passes across every node in the graph.
+    pub passes: u64,
+    /// Composed bound over the whole graph — an upper bound for every
+    /// sink's path bound (what the publisher's chunk acks carry).
+    pub bound: Option<f64>,
+    pub sinks: Vec<SinkOut>,
+}
+
+impl Default for GraphOut {
+    fn default() -> Self {
+        GraphOut {
+            graph: 0,
+            dtype: DType::F64,
+            chunks: 0,
+            passes: 0,
+            bound: None,
+            sinks: Vec::new(),
+        }
+    }
+}
+
+/// One published sink frame, built once per publish and shared across
+/// every subscriber of that sink via `Arc` — the fan-out never copies
+/// payloads.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GraphPublish {
+    pub graph: u64,
+    /// The graph's working dtype (payload planes are always exact-f64
+    /// widenings, like every other reply in the protocol).
+    pub dtype: DType,
+    /// Sink node id (the topic).
+    pub node: u32,
+    pub seq: u64,
+    pub passes: u64,
+    pub bound: Option<f64>,
+    pub eos: bool,
+    pub re: Vec<f64>,
+    pub im: Vec<f64>,
+}
+
+/// One subscriber attachment to a sink topic.  Shared (`Arc`) between
+/// the registry and the delivery side; the atomic `outstanding`
+/// counter implements the per-subscriber backpressure window.
+#[derive(Debug)]
+pub struct Subscription {
+    graph: u64,
+    dtype: DType,
+    node: u32,
+    sub_id: u64,
+    /// The wire request id subscriber `PUBLISH` frames answer (0 for
+    /// in-process subscribers).
+    wire_id: u64,
+    capacity: usize,
+    outstanding: AtomicUsize,
+    dropped: AtomicU64,
+}
+
+impl Subscription {
+    pub fn graph(&self) -> u64 {
+        self.graph
+    }
+
+    /// The watched graph's working dtype.
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    /// The sink node id this subscription watches.
+    pub fn node(&self) -> u32 {
+        self.node
+    }
+
+    pub fn sub_id(&self) -> u64 {
+        self.sub_id
+    }
+
+    pub fn wire_id(&self) -> u64 {
+        self.wire_id
+    }
+
+    /// Frames lag-dropped for this subscriber so far.
+    pub fn lag_drops(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Frames currently in flight to this subscriber's writer.
+    pub fn outstanding(&self) -> usize {
+        self.outstanding.load(Ordering::Acquire)
+    }
+
+    /// The delivery side MUST call this once per delivered frame after
+    /// it is written out, releasing one slot of the backpressure
+    /// window.
+    pub fn complete_delivery(&self) {
+        self.outstanding.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Claim a delivery slot.  `forced` (eos teardown) always claims,
+    /// even over capacity — the subscription is being removed and the
+    /// terminal frame must not be droppable.
+    fn begin(&self, forced: bool) -> bool {
+        if forced {
+            self.outstanding.fetch_add(1, Ordering::AcqRel);
+            return true;
+        }
+        self.outstanding
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
+                (n < self.capacity).then_some(n + 1)
+            })
+            .is_ok()
+    }
+
+    fn record_drop(&self) {
+        self.dropped.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Where published frames go: the network plane backs this with a
+/// per-connection writer channel; tests and the in-process CLI use
+/// collecting sinks.
+///
+/// `deliver` is called with the registry lock held — it must only
+/// hand the frame off (e.g. a channel send), never call back into the
+/// registry.  Return `false` when the receiver is gone; the registry
+/// removes the subscription.
+pub trait PublishSink: Send {
+    fn deliver(&self, sub: &Arc<Subscription>, frame: &Arc<GraphPublish>) -> bool;
+}
+
+/// Shape of a node's per-quantum output, propagated at build time.
+#[derive(Clone, Copy, Debug)]
+enum Shape {
+    Fixed(usize),
+    Var,
+}
+
+struct NodeSlot {
+    id: u32,
+    sink: bool,
+    parent: Option<usize>,
+    seq: u64,
+    /// Sinks only: positions of the source→…→sink path (execution
+    /// order), for path-bound composition.
+    path: Vec<usize>,
+    node: Box<dyn GraphNode>,
+    out_re: Vec<f64>,
+    out_im: Vec<f64>,
+}
+
+/// One open graph: nodes in execution order, per-node output staging,
+/// and the composition machinery.
+pub(crate) struct GraphExec {
+    id: u64,
+    dtype: DType,
+    frame: usize,
+    chunks: u64,
+    n_sinks: usize,
+    nodes: Vec<NodeSlot>,
+    /// Reused worst-case-size propagation buffer (pre-check scratch).
+    worst: Vec<usize>,
+}
+
+/// Compose `(passes, bound)` over the nodes at `path` positions.
+///
+/// Float: each node's emissions satisfy a per-value relative bound
+/// `(1+6(1+tᵢ)ε)^{mᵢ}−1`; a downstream value is a rounded bilinear
+/// function of upstream ones, so relative factors multiply along the
+/// path and `∏(1+6(1+tᵢ)ε)^{mᵢ} ≤ (1+6(1+t_max)ε)^{Σmᵢ}` — the
+/// returned bound, monotone in every `mᵢ`.  Fixed: per-node absolute
+/// quantization bounds add (sticky `None` once any node loses its
+/// bound to saturation).
+fn compose(
+    dtype: DType,
+    nodes: &[NodeSlot],
+    path: impl Iterator<Item = usize>,
+) -> (u64, Option<f64>) {
+    let mut passes = 0u64;
+    if dtype.is_fixed() {
+        let mut bound = Some(0.0f64);
+        for i in path {
+            passes += nodes[i].node.passes();
+            bound = match (bound, nodes[i].node.fixed_bound()) {
+                (Some(a), Some(b)) => Some(a + b),
+                _ => None,
+            };
+        }
+        (passes, bound)
+    } else {
+        let mut tmax = 0.0f64;
+        let mut lost = false;
+        for i in path {
+            let p = nodes[i].node.passes();
+            passes += p;
+            if p > 0 {
+                match nodes[i].node.tmax() {
+                    Some(t) => tmax = tmax.max(t),
+                    None => lost = true,
+                }
+            }
+        }
+        let bound = if lost {
+            None
+        } else if passes == 0 {
+            Some(0.0)
+        } else {
+            Some(serving_bound_from_tmax(
+                tmax,
+                dtype.unit_roundoff(),
+                passes.min(u64::from(u32::MAX)) as u32,
+            ))
+        };
+        (passes, bound)
+    }
+}
+
+impl GraphExec {
+    /// Build the executor for a validated spec.  Structural errors
+    /// surface as [`FftError::Protocol`] (via `plan`), semantic ones —
+    /// shape mismatches, caps, engine build failures — as the engine's
+    /// own typed errors.
+    fn build(id: u64, spec: &GraphSpec, cfg: &GraphConfig) -> FftResult<GraphExec> {
+        let plan = spec.plan()?;
+        if spec.frame > cfg.max_chunk {
+            return Err(FftError::InvalidArgument(format!(
+                "graph ingest frame {} exceeds the {}-sample limit",
+                spec.frame, cfg.max_chunk
+            )));
+        }
+        let dtype = spec.dtype;
+        let strategy = spec.strategy;
+        let mut nodes: Vec<NodeSlot> = Vec::with_capacity(plan.len());
+        let mut shapes: Vec<(Shape, bool)> = Vec::with_capacity(plan.len());
+        for t in &plan {
+            let ns = &spec.nodes[t.node];
+            let (in_shape, in_complex) = match t.parent {
+                None => {
+                    (if spec.frame > 0 { Shape::Fixed(spec.frame) } else { Shape::Var }, true)
+                }
+                Some(p) => shapes[p],
+            };
+            let fixed_in = || match in_shape {
+                Shape::Fixed(n) => Ok(n),
+                Shape::Var => Err(FftError::InvalidArgument(format!(
+                    "{} node {} needs a fixed-length input; set the graph ingest frame \
+                     (or feed it from a fixed-length node)",
+                    ns.kind.name(),
+                    ns.id
+                ))),
+            };
+            let need_complex = || {
+                if in_complex {
+                    Ok(())
+                } else {
+                    Err(FftError::InvalidArgument(format!(
+                        "{} node {} needs complex input, but its parent emits a power plane",
+                        ns.kind.name(),
+                        ns.id
+                    )))
+                }
+            };
+            let (node, out_shape, out_complex): (Box<dyn GraphNode>, Shape, bool) = match &ns.kind
+            {
+                NodeKind::Source => (Box::new(PassNode), in_shape, true),
+                NodeKind::Sink => (Box::new(PassNode), in_shape, in_complex),
+                NodeKind::Window { window } => {
+                    need_complex()?;
+                    let n = fixed_in()?;
+                    (Box::new(WindowNode::new(window.sample(n))), Shape::Fixed(n), true)
+                }
+                NodeKind::Fft => {
+                    need_complex()?;
+                    let n = fixed_in()?;
+                    (Box::new(FftNode::new(n, dtype, strategy)?), Shape::Fixed(n), true)
+                }
+                NodeKind::Ols { taps_re, taps_im, fft_len } => {
+                    need_complex()?;
+                    if taps_re.len() > cfg.max_taps {
+                        return Err(FftError::InvalidArgument(format!(
+                            "ols node {} taps {} exceed the {}-tap limit",
+                            ns.id,
+                            taps_re.len(),
+                            cfg.max_taps
+                        )));
+                    }
+                    if let Some(n) = *fft_len {
+                        let max = (4 * cfg.max_taps).next_power_of_two();
+                        if n > max {
+                            return Err(FftError::InvalidArgument(format!(
+                                "ols node {} fft block override {n} exceeds the {max}-sample \
+                                 limit",
+                                ns.id
+                            )));
+                        }
+                    }
+                    let mut s =
+                        StreamSpec::ols(dtype, strategy, taps_re.clone(), taps_im.clone());
+                    s.fft_len = *fft_len;
+                    let engine = Engine::build(&s)?;
+                    (
+                        Box::new(EngineNode::new(engine, true, dtype, strategy)),
+                        Shape::Var,
+                        true,
+                    )
+                }
+                NodeKind::Stft { frame, hop, window } => {
+                    need_complex()?;
+                    if *frame > cfg.max_stft_frame {
+                        return Err(FftError::InvalidArgument(format!(
+                            "stft node {} frame {} exceeds the {}-sample limit",
+                            ns.id, frame, cfg.max_stft_frame
+                        )));
+                    }
+                    let s = StreamSpec::stft(dtype, strategy, *frame, *hop, *window);
+                    let engine = Engine::build(&s)?;
+                    (
+                        Box::new(EngineNode::new(engine, false, dtype, strategy)),
+                        Shape::Var,
+                        false,
+                    )
+                }
+                NodeKind::MatchedFilter { pulse_re, pulse_im } => {
+                    need_complex()?;
+                    let n = fixed_in()?;
+                    (
+                        matched_filter_node(dtype, strategy, n, pulse_re, pulse_im)?,
+                        Shape::Fixed(n),
+                        true,
+                    )
+                }
+                NodeKind::Detrend => (Box::new(DetrendNode), in_shape, in_complex),
+                NodeKind::Magnitude => {
+                    need_complex()?;
+                    (Box::new(MagnitudeNode), in_shape, false)
+                }
+                NodeKind::Decimate { factor } => {
+                    (Box::new(DecimateNode::new(*factor)), Shape::Var, in_complex)
+                }
+                NodeKind::Summary => {
+                    let out = match in_shape {
+                        Shape::Fixed(_) => Shape::Fixed(6),
+                        Shape::Var => Shape::Var,
+                    };
+                    (Box::new(SummaryNode), out, false)
+                }
+            };
+            shapes.push((out_shape, out_complex));
+            nodes.push(NodeSlot {
+                id: ns.id,
+                sink: matches!(ns.kind, NodeKind::Sink),
+                parent: t.parent,
+                seq: 0,
+                path: Vec::new(),
+                node,
+                out_re: Vec::new(),
+                out_im: Vec::new(),
+            });
+        }
+        // Precompute each sink's source→sink path for bound
+        // composition.
+        let mut n_sinks = 0usize;
+        for i in 0..nodes.len() {
+            if !nodes[i].sink {
+                continue;
+            }
+            n_sinks += 1;
+            let mut path = Vec::new();
+            let mut cur = Some(i);
+            while let Some(p) = cur {
+                path.push(p);
+                cur = nodes[p].parent;
+            }
+            path.reverse();
+            nodes[i].path = path;
+        }
+        Ok(GraphExec {
+            id,
+            dtype,
+            frame: spec.frame,
+            chunks: 0,
+            n_sinks,
+            nodes,
+            worst: Vec::new(),
+        })
+    }
+
+    /// Graph-wide `(passes, bound)` over every node.
+    fn stats(&self) -> (u64, Option<f64>) {
+        compose(self.dtype, &self.nodes, 0..self.nodes.len())
+    }
+
+    fn sink_ids(&self) -> Vec<u32> {
+        self.nodes.iter().filter(|n| n.sink).map(|n| n.id).collect()
+    }
+
+    /// Run one ingest quantum through every node in topological order.
+    fn chunk(&mut self, re: &[f64], im: &[f64], out: &mut GraphOut) -> FftResult<()> {
+        if self.frame > 0 && re.len() != self.frame {
+            return Err(FftError::LengthMismatch { expected: self.frame, got: re.len() });
+        }
+        // Lossless reply-size pre-check: propagate worst-case output
+        // sizes down the graph BEFORE any node state advances, so an
+        // oversized chunk is refused retryably (split and resend).
+        self.worst.clear();
+        for slot in &self.nodes {
+            let in_samples = match slot.parent {
+                None => re.len(),
+                Some(p) => self.worst[p],
+            };
+            let w = slot.node.worst_case_out(in_samples);
+            if 2 * w > MAX_STREAM_OUT_F64S {
+                return Err(FftError::InvalidArgument(format!(
+                    "graph node {} could emit more than {} output values; split the chunk",
+                    slot.id,
+                    MAX_STREAM_OUT_F64S / 2
+                )));
+            }
+            self.worst.push(w);
+        }
+        for i in 0..self.nodes.len() {
+            let (done, rest) = self.nodes.split_at_mut(i);
+            let slot = &mut rest[0];
+            let (ire, iim): (&[f64], &[f64]) = match slot.parent {
+                None => (re, im),
+                Some(p) => (&done[p].out_re, &done[p].out_im),
+            };
+            slot.out_re.clear();
+            slot.out_im.clear();
+            slot.node.process(ire, iim, &mut slot.out_re, &mut slot.out_im)?;
+        }
+        self.chunks += 1;
+        self.fill_out(out, false);
+        Ok(())
+    }
+
+    /// Cascade the tail flush: each node (topological order) consumes
+    /// its parent's tail, then appends its own.  Fills `out` with eos
+    /// frames for every sink.
+    fn finish(&mut self, out: &mut GraphOut) -> FftResult<()> {
+        for i in 0..self.nodes.len() {
+            let (done, rest) = self.nodes.split_at_mut(i);
+            let slot = &mut rest[0];
+            let (ire, iim): (&[f64], &[f64]) = match slot.parent {
+                None => (&[], &[]),
+                Some(p) => (&done[p].out_re, &done[p].out_im),
+            };
+            slot.out_re.clear();
+            slot.out_im.clear();
+            slot.node.process(ire, iim, &mut slot.out_re, &mut slot.out_im)?;
+            slot.node.finish(&mut slot.out_re, &mut slot.out_im)?;
+        }
+        self.fill_out(out, true);
+        Ok(())
+    }
+
+    /// Transfer sink staging into the caller's reusable [`GraphOut`]
+    /// (buffer swap, no copies) and refresh the composed stats.
+    fn fill_out(&mut self, out: &mut GraphOut, eos: bool) {
+        out.graph = self.id;
+        out.dtype = self.dtype;
+        out.chunks = self.chunks;
+        let (passes, bound) = self.stats();
+        out.passes = passes;
+        out.bound = bound;
+        if out.sinks.len() != self.n_sinks {
+            out.sinks.clear();
+            out.sinks.resize_with(self.n_sinks, SinkOut::default);
+        }
+        let mut s = 0usize;
+        for i in 0..self.nodes.len() {
+            if !self.nodes[i].sink {
+                continue;
+            }
+            let (p, b) = compose(self.dtype, &self.nodes, self.nodes[i].path.iter().copied());
+            let slot = &mut self.nodes[i];
+            let so = &mut out.sinks[s];
+            s += 1;
+            so.node = slot.id;
+            so.passes = p;
+            so.bound = b;
+            so.eos = eos;
+            if eos || !slot.out_re.is_empty() || !slot.out_im.is_empty() {
+                slot.seq += 1;
+            }
+            so.seq = slot.seq;
+            so.re.clear();
+            so.im.clear();
+            std::mem::swap(&mut so.re, &mut slot.out_re);
+            std::mem::swap(&mut so.im, &mut slot.out_im);
+        }
+    }
+}
+
+/// A graph checked out for processing leaves `Busy` behind (same
+/// protocol as the stream plane's slots); `Doomed` marks a busy graph
+/// whose publisher vanished mid-chunk.
+enum GraphSlot {
+    Idle(Box<GraphExec>),
+    Busy,
+    Doomed,
+}
+
+struct GraphEntry {
+    slot: GraphSlot,
+    /// Sink node ids, kept outside the slot so `subscribe` can
+    /// validate topics while the graph is checked out.
+    sinks: Vec<u32>,
+    /// Working dtype, kept outside the slot so `subscribe` and forced
+    /// teardown frames can report it while the graph is checked out.
+    dtype: DType,
+}
+
+struct SubEntry {
+    sub: Arc<Subscription>,
+    sink: Box<dyn PublishSink>,
+}
+
+#[derive(Default)]
+struct GraphsInner {
+    graphs: HashMap<u64, GraphEntry>,
+    subs: HashMap<u64, SubEntry>,
+    next_graph: u64,
+    next_sub: u64,
+}
+
+/// The shared graph table, plus the pub/sub fan-out state.
+pub struct GraphRegistry {
+    cfg: GraphConfig,
+    inner: Mutex<GraphsInner>,
+    metrics: Option<Arc<Metrics>>,
+}
+
+impl Default for GraphRegistry {
+    fn default() -> Self {
+        Self::new(GraphConfig::default())
+    }
+}
+
+impl GraphRegistry {
+    pub fn new(cfg: GraphConfig) -> Self {
+        GraphRegistry {
+            cfg,
+            inner: Mutex::new(GraphsInner {
+                graphs: HashMap::new(),
+                subs: HashMap::new(),
+                next_graph: 1,
+                next_sub: 1,
+            }),
+            metrics: None,
+        }
+    }
+
+    /// A registry that reports the graph gauges into the coordinator's
+    /// [`Metrics`].
+    pub fn with_metrics(cfg: GraphConfig, metrics: Arc<Metrics>) -> Self {
+        GraphRegistry { metrics: Some(metrics), ..Self::new(cfg) }
+    }
+
+    pub fn config(&self) -> GraphConfig {
+        self.cfg
+    }
+
+    /// Graphs currently open.
+    pub fn open_graphs(&self) -> usize {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner).graphs.len()
+    }
+
+    /// Subscriptions currently attached (all graphs).
+    pub fn active_subscribers(&self) -> usize {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner).subs.len()
+    }
+
+    /// Open a graph from a spec.  Structural topology errors are
+    /// [`FftError::Protocol`]; semantic/build errors keep their engine
+    /// types; a full registry is [`FftError::Rejected`].  The returned
+    /// [`GraphOut`] carries the new graph id and the initial composed
+    /// stats (taps/pulse-spectrum passes count from the start, exactly
+    /// as stream sessions do), with no sink frames.
+    pub fn open(&self, spec: &GraphSpec) -> FftResult<GraphOut> {
+        let id = {
+            let mut inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+            if inner.graphs.len() >= self.cfg.max_graphs {
+                return Err(FftError::Rejected {
+                    in_flight: inner.graphs.len(),
+                    limit: self.cfg.max_graphs,
+                });
+            }
+            let id = inner.next_graph;
+            inner.next_graph += 1;
+            inner.graphs.insert(
+                id,
+                GraphEntry { slot: GraphSlot::Busy, sinks: Vec::new(), dtype: spec.dtype },
+            );
+            id
+        };
+        let exec = match GraphExec::build(id, spec, &self.cfg) {
+            Ok(e) => e,
+            Err(e) => {
+                self.inner
+                    .lock()
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .graphs
+                    .remove(&id);
+                return Err(e);
+            }
+        };
+        let (passes, bound) = exec.stats();
+        let sinks = exec.sink_ids();
+        let out = GraphOut {
+            graph: id,
+            dtype: exec.dtype,
+            chunks: 0,
+            passes,
+            bound,
+            sinks: Vec::new(),
+        };
+        {
+            let mut inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+            let dtype = exec.dtype;
+            inner
+                .graphs
+                .insert(id, GraphEntry { slot: GraphSlot::Idle(Box::new(exec)), sinks, dtype });
+            if let Some(m) = &self.metrics {
+                m.record_graph_open(inner.graphs.len());
+            }
+        }
+        Ok(out)
+    }
+
+    /// Feed one ingest chunk through graph `id` into the caller's
+    /// reusable `out`.  [`FftError::Rejected`] while another thread
+    /// has the graph checked out (state intact, retry).  Does NOT fan
+    /// out — call [`GraphRegistry::publish`] with the filled `out` to
+    /// deliver to subscribers.
+    pub fn chunk(&self, id: u64, re: &[f64], im: &[f64], out: &mut GraphOut) -> FftResult<()> {
+        if re.len() != im.len() {
+            return Err(FftError::LengthMismatch { expected: re.len(), got: im.len() });
+        }
+        if re.len() > self.cfg.max_chunk {
+            return Err(FftError::InvalidArgument(format!(
+                "graph chunk of {} samples exceeds the {}-sample limit",
+                re.len(),
+                self.cfg.max_chunk
+            )));
+        }
+        let mut exec = self.check_out(id)?;
+        let result = exec.chunk(re, im, out);
+        self.check_in(id, exec);
+        result
+    }
+
+    /// Close graph `id`: cascade the tail flush through every node,
+    /// fill `out` with one eos frame per sink, and remove the graph.
+    /// Subscribers stay attached until [`GraphRegistry::publish`]
+    /// delivers their eos frames — call it with the filled `out`.
+    pub fn close(&self, id: u64, out: &mut GraphOut) -> FftResult<()> {
+        let mut exec = {
+            let mut inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+            match inner.graphs.remove(&id) {
+                None => {
+                    return Err(FftError::InvalidArgument(format!("unknown graph {id}")))
+                }
+                Some(entry @ GraphEntry { slot: GraphSlot::Busy, .. }) => {
+                    inner.graphs.insert(id, entry);
+                    return Err(FftError::Rejected { in_flight: 1, limit: 1 });
+                }
+                Some(entry @ GraphEntry { slot: GraphSlot::Doomed, .. }) => {
+                    inner.graphs.insert(id, entry);
+                    return Err(FftError::InvalidArgument(format!("graph {id} is closing")));
+                }
+                Some(GraphEntry { slot: GraphSlot::Idle(e), .. }) => e,
+            }
+        };
+        let result = exec.finish(out);
+        if let Some(m) = &self.metrics {
+            m.record_graph_closed(self.open_graphs());
+        }
+        result
+    }
+
+    /// Remove graph `id` unconditionally — the network plane's
+    /// dead-publisher cleanup.  Its subscribers receive a best-effort
+    /// terminal eos frame and are detached; a graph that is mid-chunk
+    /// on another thread is doomed instead, and the in-flight chunk's
+    /// check-in completes the teardown.
+    pub fn force_close(&self, id: u64) {
+        let mut inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        let dtype = match inner.graphs.remove(&id) {
+            None => return,
+            Some(GraphEntry { slot: GraphSlot::Idle(_), dtype, .. }) => dtype,
+            Some(mut entry) => {
+                entry.slot = GraphSlot::Doomed;
+                inner.graphs.insert(id, entry);
+                return; // check_in finishes the removal and teardown
+            }
+        };
+        self.teardown_subs(&mut inner, id, dtype);
+        if let Some(m) = &self.metrics {
+            m.record_graph_closed(inner.graphs.len());
+        }
+    }
+
+    /// Attach a subscriber to sink `node` of graph `graph`.  Frames
+    /// are handed to `sink`; `wire_id` tags them for the network plane
+    /// (0 in-process).  [`FftError::Rejected`] at the subscriber cap.
+    pub fn subscribe(
+        &self,
+        graph: u64,
+        node: u32,
+        wire_id: u64,
+        sink: Box<dyn PublishSink>,
+    ) -> FftResult<Arc<Subscription>> {
+        let mut inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        if inner.subs.len() >= self.cfg.max_subscribers {
+            return Err(FftError::Rejected {
+                in_flight: inner.subs.len(),
+                limit: self.cfg.max_subscribers,
+            });
+        }
+        let Some(entry) = inner.graphs.get(&graph) else {
+            return Err(FftError::InvalidArgument(format!("unknown graph {graph}")));
+        };
+        if !entry.sinks.contains(&node) {
+            return Err(FftError::InvalidArgument(format!(
+                "graph {graph} has no sink node {node}"
+            )));
+        }
+        let dtype = entry.dtype;
+        let sub_id = inner.next_sub;
+        inner.next_sub += 1;
+        let sub = Arc::new(Subscription {
+            graph,
+            dtype,
+            node,
+            sub_id,
+            wire_id,
+            capacity: self.cfg.sub_queue,
+            outstanding: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+        });
+        inner.subs.insert(sub_id, SubEntry { sub: Arc::clone(&sub), sink });
+        if let Some(m) = &self.metrics {
+            m.record_graph_subscribe(inner.subs.len());
+        }
+        Ok(sub)
+    }
+
+    /// Detach subscription `sub_id` (explicit unsubscribe, or the
+    /// network plane's dead-subscriber cleanup).  Returns whether it
+    /// existed.
+    pub fn unsubscribe(&self, sub_id: u64) -> bool {
+        let mut inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        let existed = inner.subs.remove(&sub_id).is_some();
+        if existed {
+            if let Some(m) = &self.metrics {
+                m.record_graph_unsubscribe(inner.subs.len());
+            }
+        }
+        existed
+    }
+
+    /// Fan a filled [`GraphOut`] to subscribers: one shared
+    /// [`Arc<GraphPublish>`] per publishable sink frame, delivered to
+    /// every subscriber of that sink.  A subscriber over its
+    /// backpressure window lag-drops the frame (counted, publisher
+    /// unaffected); a dead subscriber is detached.  Sink payloads with
+    /// at least one subscriber are *moved* into the shared frame (the
+    /// `out` entry is left empty); unsubscribed sinks keep theirs, so
+    /// in-process callers with no subscribers see all data.  Eos
+    /// frames terminate their topic's subscriptions after delivery.
+    /// Returns the number of frame deliveries handed to sinks.
+    pub fn publish(&self, out: &mut GraphOut) -> usize {
+        let mut inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        let mut delivered = 0usize;
+        let mut dead: Vec<u64> = Vec::new();
+        for sink in out.sinks.iter_mut() {
+            if !sink.publishable() {
+                continue;
+            }
+            let watched = inner
+                .subs
+                .values()
+                .any(|e| e.sub.graph == out.graph && e.sub.node == sink.node);
+            if !watched {
+                continue;
+            }
+            let frame = Arc::new(GraphPublish {
+                graph: out.graph,
+                dtype: out.dtype,
+                node: sink.node,
+                seq: sink.seq,
+                passes: sink.passes,
+                bound: sink.bound,
+                eos: sink.eos,
+                re: std::mem::take(&mut sink.re),
+                im: std::mem::take(&mut sink.im),
+            });
+            if let Some(m) = &self.metrics {
+                m.record_graph_publish();
+            }
+            for (id, e) in inner.subs.iter() {
+                if e.sub.graph != out.graph || e.sub.node != sink.node {
+                    continue;
+                }
+                if frame.eos {
+                    e.sub.begin(true);
+                    let _ = e.sink.deliver(&e.sub, &frame);
+                    dead.push(*id);
+                    delivered += 1;
+                } else if !e.sub.begin(false) {
+                    e.sub.record_drop();
+                    if let Some(m) = &self.metrics {
+                        m.record_graph_lag_drop();
+                    }
+                } else if e.sink.deliver(&e.sub, &frame) {
+                    delivered += 1;
+                } else {
+                    e.sub.complete_delivery();
+                    dead.push(*id);
+                }
+            }
+        }
+        if !dead.is_empty() {
+            for id in dead {
+                inner.subs.remove(&id);
+            }
+            if let Some(m) = &self.metrics {
+                m.record_graph_unsubscribe(inner.subs.len());
+            }
+        }
+        delivered
+    }
+
+    /// Deliver terminal eos frames to every subscriber of `graph` and
+    /// detach them (forced teardown — no per-sink payloads survive).
+    fn teardown_subs(&self, inner: &mut GraphsInner, graph: u64, dtype: DType) {
+        let dead: Vec<u64> = inner
+            .subs
+            .iter()
+            .filter(|(_, e)| e.sub.graph == graph)
+            .map(|(k, _)| *k)
+            .collect();
+        for k in &dead {
+            let e = &inner.subs[k];
+            let frame = Arc::new(GraphPublish {
+                graph,
+                dtype,
+                node: e.sub.node,
+                seq: 0,
+                passes: 0,
+                bound: None,
+                eos: true,
+                re: Vec::new(),
+                im: Vec::new(),
+            });
+            e.sub.begin(true);
+            let _ = e.sink.deliver(&e.sub, &frame);
+        }
+        if !dead.is_empty() {
+            for k in dead {
+                inner.subs.remove(&k);
+            }
+            if let Some(m) = &self.metrics {
+                m.record_graph_unsubscribe(inner.subs.len());
+            }
+        }
+    }
+
+    fn check_out(&self, id: u64) -> FftResult<Box<GraphExec>> {
+        let mut inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        match inner.graphs.get_mut(&id) {
+            None => Err(FftError::InvalidArgument(format!("unknown graph {id}"))),
+            Some(entry) => match std::mem::replace(&mut entry.slot, GraphSlot::Busy) {
+                GraphSlot::Idle(e) => Ok(e),
+                GraphSlot::Busy => Err(FftError::Rejected { in_flight: 1, limit: 1 }),
+                GraphSlot::Doomed => {
+                    entry.slot = GraphSlot::Doomed;
+                    Err(FftError::InvalidArgument(format!("graph {id} is closing")))
+                }
+            },
+        }
+    }
+
+    fn check_in(&self, id: u64, exec: Box<GraphExec>) {
+        let mut inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        let doomed = match inner.graphs.get(&id) {
+            None => return,
+            Some(entry) => matches!(entry.slot, GraphSlot::Doomed).then_some(entry.dtype),
+        };
+        if let Some(dtype) = doomed {
+            // force_close deferred this teardown to us.
+            inner.graphs.remove(&id);
+            self.teardown_subs(&mut inner, id, dtype);
+            if let Some(m) = &self.metrics {
+                m.record_graph_closed(inner.graphs.len());
+            }
+        } else if let Some(entry) = inner.graphs.get_mut(&id) {
+            entry.slot = GraphSlot::Idle(exec);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::Strategy;
+    use crate::util::prng::Pcg32;
+
+    /// Collects delivered frames; completes delivery instantly.
+    struct VecSink(Arc<Mutex<Vec<Arc<GraphPublish>>>>);
+
+    impl PublishSink for VecSink {
+        fn deliver(&self, sub: &Arc<Subscription>, frame: &Arc<GraphPublish>) -> bool {
+            self.0.lock().unwrap().push(Arc::clone(frame));
+            sub.complete_delivery();
+            true
+        }
+    }
+
+    /// Never drains its window — a permanently slow subscriber.
+    struct StuckSink;
+
+    impl PublishSink for StuckSink {
+        fn deliver(&self, _sub: &Arc<Subscription>, _frame: &Arc<GraphPublish>) -> bool {
+            true
+        }
+    }
+
+    fn noise(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = Pcg32::seed(seed);
+        ((0..n).map(|_| rng.gaussian()).collect(), (0..n).map(|_| rng.gaussian()).collect())
+    }
+
+    fn mag_graph(dtype: DType, frame: usize) -> GraphSpec {
+        GraphSpec::new(dtype, Strategy::DualSelect, frame)
+            .node(1, NodeKind::Source)
+            .node(2, NodeKind::Fft)
+            .node(3, NodeKind::Magnitude)
+            .node(4, NodeKind::Sink)
+            .edge(1, 2)
+            .edge(2, 3)
+            .edge(3, 4)
+    }
+
+    #[test]
+    fn open_chunk_close_roundtrip_with_monotone_bound() {
+        let reg = GraphRegistry::default();
+        let opened = reg.open(&mag_graph(DType::F32, 64)).unwrap();
+        assert_eq!(opened.passes, 0);
+        assert_eq!(opened.bound, Some(0.0));
+        assert_eq!(reg.open_graphs(), 1);
+        let mut out = GraphOut::default();
+        let mut last_bound = 0.0;
+        for seed in 0..4 {
+            let (re, im) = noise(64, seed);
+            reg.chunk(opened.graph, &re, &im, &mut out).unwrap();
+            assert_eq!(out.sinks.len(), 1);
+            assert_eq!(out.sinks[0].node, 4);
+            assert_eq!(out.sinks[0].re.len(), 64);
+            assert!(out.sinks[0].im.is_empty(), "magnitude emits a power plane");
+            assert_eq!(out.sinks[0].seq, seed + 1);
+            let b = out.sinks[0].bound.unwrap();
+            assert!(b > last_bound, "bound must grow with passes");
+            last_bound = b;
+        }
+        reg.close(opened.graph, &mut out).unwrap();
+        assert!(out.sinks[0].eos);
+        assert_eq!(reg.open_graphs(), 0);
+        assert!(matches!(
+            reg.chunk(opened.graph, &[0.0; 64], &[0.0; 64], &mut out),
+            Err(FftError::InvalidArgument(_))
+        ));
+    }
+
+    #[test]
+    fn fanout_shares_one_arc_per_frame_and_drops_for_slow_subscribers() {
+        let reg = GraphRegistry::new(GraphConfig { sub_queue: 2, ..Default::default() });
+        let opened = reg.open(&mag_graph(DType::F64, 32)).unwrap();
+        let fast = Arc::new(Mutex::new(Vec::new()));
+        let fast2 = Arc::new(Mutex::new(Vec::new()));
+        let s1 = reg
+            .subscribe(opened.graph, 4, 0, Box::new(VecSink(Arc::clone(&fast))))
+            .unwrap();
+        let s2 = reg
+            .subscribe(opened.graph, 4, 0, Box::new(VecSink(Arc::clone(&fast2))))
+            .unwrap();
+        let slow = reg.subscribe(opened.graph, 4, 0, Box::new(StuckSink)).unwrap();
+        assert_eq!(reg.active_subscribers(), 3);
+        // Subscribing to a non-sink or unknown topic is a typed error.
+        assert!(reg.subscribe(opened.graph, 2, 0, Box::new(StuckSink)).is_err());
+        assert!(reg.subscribe(999, 4, 0, Box::new(StuckSink)).is_err());
+
+        let mut out = GraphOut::default();
+        for seed in 0..5 {
+            let (re, im) = noise(32, seed);
+            reg.chunk(opened.graph, &re, &im, &mut out).unwrap();
+            reg.publish(&mut out);
+            // Payload moved into the shared frame, not left behind.
+            assert!(out.sinks[0].re.is_empty());
+        }
+        let fast_frames = fast.lock().unwrap();
+        assert_eq!(fast_frames.len(), 5);
+        // Fan-out shares the SAME allocation across subscribers.
+        let fast2_frames = fast2.lock().unwrap();
+        for (a, b) in fast_frames.iter().zip(fast2_frames.iter()) {
+            assert!(Arc::ptr_eq(a, b), "subscribers must share one Arc per frame");
+        }
+        // The stuck subscriber took its 2-frame window, then dropped 3.
+        assert_eq!(slow.outstanding(), 2);
+        assert_eq!(slow.lag_drops(), 3);
+        assert_eq!(s1.lag_drops(), 0);
+        assert_eq!(s2.lag_drops(), 0);
+        // Seqs are contiguous for the fast subscriber.
+        let seqs: Vec<u64> = fast_frames.iter().map(|f| f.seq).collect();
+        assert_eq!(seqs, vec![1, 2, 3, 4, 5]);
+        drop(fast_frames);
+        drop(fast2_frames);
+
+        // Close: everyone gets eos (even the stuck one) and detaches.
+        reg.close(opened.graph, &mut out).unwrap();
+        reg.publish(&mut out);
+        assert_eq!(reg.active_subscribers(), 0);
+        assert!(fast.lock().unwrap().last().unwrap().eos);
+    }
+
+    #[test]
+    fn dead_subscriber_is_detached_without_stalling_publish() {
+        struct DeadSink;
+        impl PublishSink for DeadSink {
+            fn deliver(&self, _s: &Arc<Subscription>, _f: &Arc<GraphPublish>) -> bool {
+                false
+            }
+        }
+        let reg = GraphRegistry::default();
+        let opened = reg.open(&mag_graph(DType::F32, 16)).unwrap();
+        let live = Arc::new(Mutex::new(Vec::new()));
+        reg.subscribe(opened.graph, 4, 0, Box::new(DeadSink)).unwrap();
+        reg.subscribe(opened.graph, 4, 0, Box::new(VecSink(Arc::clone(&live)))).unwrap();
+        let mut out = GraphOut::default();
+        let (re, im) = noise(16, 7);
+        reg.chunk(opened.graph, &re, &im, &mut out).unwrap();
+        reg.publish(&mut out);
+        assert_eq!(reg.active_subscribers(), 1, "dead subscriber must be detached");
+        assert_eq!(live.lock().unwrap().len(), 1);
+        reg.force_close(opened.graph);
+        assert_eq!(reg.open_graphs(), 0);
+        assert_eq!(reg.active_subscribers(), 0, "force_close detaches subscribers");
+        assert!(live.lock().unwrap().last().unwrap().eos);
+    }
+
+    #[test]
+    fn registry_caps_and_busy_graphs_reject_typed() {
+        let reg = GraphRegistry::new(GraphConfig { max_graphs: 1, ..Default::default() });
+        let a = reg.open(&mag_graph(DType::F32, 16)).unwrap();
+        assert!(matches!(
+            reg.open(&mag_graph(DType::F32, 16)).unwrap_err(),
+            FftError::Rejected { .. }
+        ));
+        // Checked-out graphs answer Rejected to concurrent chunks.
+        let exec = reg.check_out(a.graph).unwrap();
+        let mut out = GraphOut::default();
+        assert!(matches!(
+            reg.chunk(a.graph, &[0.0; 16], &[0.0; 16], &mut out).unwrap_err(),
+            FftError::Rejected { .. }
+        ));
+        assert!(matches!(reg.close(a.graph, &mut out).unwrap_err(), FftError::Rejected { .. }));
+        // force_close while busy dooms; check_in reaps.
+        reg.force_close(a.graph);
+        assert_eq!(reg.open_graphs(), 1, "doomed marker holds the slot");
+        reg.check_in(a.graph, exec);
+        assert_eq!(reg.open_graphs(), 0);
+    }
+
+    #[test]
+    fn semantic_build_errors_are_typed_and_release_the_slot() {
+        let reg = GraphRegistry::default();
+        // Window over a ragged (frame = 0) stream.
+        let err = reg
+            .open(
+                &GraphSpec::new(DType::F32, Strategy::DualSelect, 0)
+                    .node(1, NodeKind::Source)
+                    .node(2, NodeKind::Window { window: crate::signal::window::Window::Hann })
+                    .node(3, NodeKind::Sink)
+                    .edge(1, 2)
+                    .edge(2, 3),
+            )
+            .unwrap_err();
+        assert!(matches!(err, FftError::InvalidArgument(_)), "{err:?}");
+        // FFT over a power plane.
+        let err = reg
+            .open(
+                &GraphSpec::new(DType::F32, Strategy::DualSelect, 16)
+                    .node(1, NodeKind::Source)
+                    .node(2, NodeKind::Magnitude)
+                    .node(3, NodeKind::Fft)
+                    .node(4, NodeKind::Sink)
+                    .edge(1, 2)
+                    .edge(2, 3)
+                    .edge(3, 4),
+            )
+            .unwrap_err();
+        assert!(matches!(err, FftError::InvalidArgument(_)), "{err:?}");
+        // Non-power-of-two ingest frame under an FFT node.
+        assert!(reg.open(&mag_graph(DType::F32, 48)).is_err());
+        // Matched filter in a fixed dtype.
+        let err = reg
+            .open(
+                &GraphSpec::new(DType::I16, Strategy::DualSelect, 16)
+                    .node(1, NodeKind::Source)
+                    .node(
+                        2,
+                        NodeKind::MatchedFilter { pulse_re: vec![1.0], pulse_im: vec![0.0] },
+                    )
+                    .node(3, NodeKind::Sink)
+                    .edge(1, 2)
+                    .edge(2, 3),
+            )
+            .unwrap_err();
+        assert!(matches!(err, FftError::InvalidArgument(_)), "{err:?}");
+        assert_eq!(reg.open_graphs(), 0, "failed opens must release their slots");
+    }
+
+    #[test]
+    fn ragged_graphs_cascade_tails_at_close() {
+        // source → ols → decimate → sink over a ragged stream: the OLS
+        // tail emitted at close must still flow through the decimator.
+        let (hr, hi) = noise(8, 11);
+        let reg = GraphRegistry::default();
+        let opened = reg
+            .open(
+                &GraphSpec::new(DType::F64, Strategy::DualSelect, 0)
+                    .node(1, NodeKind::Source)
+                    .node(2, NodeKind::Ols { taps_re: hr, taps_im: hi, fft_len: None })
+                    .node(3, NodeKind::Decimate { factor: 2 })
+                    .node(4, NodeKind::Sink)
+                    .edge(1, 2)
+                    .edge(2, 3)
+                    .edge(3, 4),
+            )
+            .unwrap();
+        assert!(opened.passes > 0, "taps spectrum FFT counts from the start");
+        let mut out = GraphOut::default();
+        let (re, im) = noise(100, 12);
+        let mut total = 0usize;
+        reg.chunk(opened.graph, &re, &im, &mut out).unwrap();
+        total += out.sinks[0].re.len();
+        reg.close(opened.graph, &mut out).unwrap();
+        total += out.sinks[0].re.len();
+        // 100 + 8 − 1 = 107 filtered samples, decimated by 2 → 54.
+        assert_eq!(total, 54);
+    }
+}

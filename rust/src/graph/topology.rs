@@ -1,0 +1,431 @@
+//! Pipeline-graph topology: the declarative [`GraphSpec`] a client
+//! ships in a `GRAPH_OPEN` frame, and its structural validation.
+//!
+//! A graph is a small single-source DAG: exactly one
+//! [`NodeKind::Source`] ingest node, every other node fed by exactly
+//! one parent (fan-out is any number of children per node), and every
+//! leaf a [`NodeKind::Sink`] — the named topics subscriber connections
+//! attach to.  [`GraphSpec::validate`] enforces all of that
+//! structurally and returns [`FftError::Protocol`] for every
+//! violation (duplicate ids, unknown edge endpoints, multiple inputs,
+//! cycles, dangling outputs, oversized topologies), so a hostile
+//! `GRAPH_OPEN` body can never panic the decoder or build a malformed
+//! executor.  Semantic errors — a window node over a ragged stream, a
+//! matched filter in a fixed dtype, a bad OLS block override — are
+//! *not* protocol errors; they surface as typed [`FftError`]s when the
+//! registry builds the executor (the connection survives).
+
+use std::collections::{HashMap, HashSet};
+
+use crate::fft::{DType, FftError, FftResult, Strategy};
+use crate::signal::window::Window;
+
+/// Upper bound on nodes per graph (a `GRAPH_OPEN` advertising more is
+/// a protocol error — topology is meant to be small).
+pub const MAX_GRAPH_NODES: usize = 32;
+/// Upper bound on edges per graph.
+pub const MAX_GRAPH_EDGES: usize = 64;
+
+/// What one pipeline node computes.  Engine-backed kinds (`Ols`,
+/// `Stft`, `MatchedFilter`, `Fft`) wrap the existing planes and stay
+/// bit-identical per dtype to driving those engines directly; the
+/// rest are cheap f64 stages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum NodeKind {
+    /// The ingest point — exactly one per graph, in-degree 0.
+    Source,
+    /// A named output topic — every leaf must be one; subscribers
+    /// attach to its node id.
+    Sink,
+    /// Multiply each fixed-length chunk by an analysis window (the
+    /// window is sampled at the input length; f64 arithmetic, same
+    /// policy as the offline STFT).
+    Window { window: Window },
+    /// One FFT per fixed-length chunk through the dtype-erased plan
+    /// for the graph's strategy × dtype.
+    Fft,
+    /// Overlap-save FIR filtering ([`crate::stream::OlsFilter`] /
+    /// [`crate::fixed::FixedOlsFilter`]); `fft_len` overrides the
+    /// auto-chosen FFT block (validated pow2 ≥ 2L−1 at open).
+    Ols { taps_re: Vec<f64>, taps_im: Vec<f64>, fft_len: Option<usize> },
+    /// Streaming STFT ([`crate::stream::StftStream`]): emits `frame`
+    /// power values per completed column (power plane, `im` empty).
+    Stft { frame: usize, hop: usize, window: Window },
+    /// Pulse compression per fixed-length chunk
+    /// ([`crate::signal::MatchedFilter`]; float dtypes only).
+    MatchedFilter { pulse_re: Vec<f64>, pulse_im: Vec<f64> },
+    /// Subtract the per-chunk complex mean (DC removal; f64).
+    Detrend,
+    /// Per-sample power `|x|²` (power plane out, `im` empty).
+    Magnitude,
+    /// Keep every `factor`-th sample, phase carried across chunks.
+    Decimate { factor: usize },
+    /// A 6-value stats frame per non-empty chunk:
+    /// `[len, mean_re, mean_im, rms, peak_power, peak_index]`.
+    Summary,
+}
+
+impl NodeKind {
+    /// Stable lower-case kind name (used in errors and the CLI).
+    pub fn name(&self) -> &'static str {
+        match self {
+            NodeKind::Source => "source",
+            NodeKind::Sink => "sink",
+            NodeKind::Window { .. } => "window",
+            NodeKind::Fft => "fft",
+            NodeKind::Ols { .. } => "ols",
+            NodeKind::Stft { .. } => "stft",
+            NodeKind::MatchedFilter { .. } => "matched_filter",
+            NodeKind::Detrend => "detrend",
+            NodeKind::Magnitude => "magnitude",
+            NodeKind::Decimate { .. } => "decimate",
+            NodeKind::Summary => "summary",
+        }
+    }
+}
+
+/// One node of a graph: a client-chosen id plus what it computes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeSpec {
+    pub id: u32,
+    pub kind: NodeKind,
+}
+
+/// A complete graph description — what `GRAPH_OPEN` carries over the
+/// wire.  `dtype`/`strategy` apply to every engine-backed node;
+/// `frame` fixes the ingest chunk length (`0` = ragged chunks of any
+/// length, which fixed-frame nodes like `Window`/`Fft` reject at
+/// open).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GraphSpec {
+    pub dtype: DType,
+    pub strategy: Strategy,
+    /// Ingest chunk length every `GRAPH_CHUNK` must match exactly
+    /// (`0` = variable-length chunks).
+    pub frame: usize,
+    pub nodes: Vec<NodeSpec>,
+    pub edges: Vec<(u32, u32)>,
+}
+
+impl GraphSpec {
+    pub fn new(dtype: DType, strategy: Strategy, frame: usize) -> Self {
+        GraphSpec { dtype, strategy, frame, nodes: Vec::new(), edges: Vec::new() }
+    }
+
+    /// Append a node (builder style).
+    pub fn node(mut self, id: u32, kind: NodeKind) -> Self {
+        self.nodes.push(NodeSpec { id, kind });
+        self
+    }
+
+    /// Append an edge `from → to` (builder style).
+    pub fn edge(mut self, from: u32, to: u32) -> Self {
+        self.edges.push((from, to));
+        self
+    }
+
+    /// Structural validation — every violation is a typed
+    /// [`FftError::Protocol`], never a panic.  Run by the wire decoder
+    /// on every `GRAPH_OPEN` body and again by the registry at open.
+    pub fn validate(&self) -> FftResult<()> {
+        self.plan().map(|_| ())
+    }
+
+    /// Validate and return the execution order: BFS from the source,
+    /// so every node appears after its single parent.
+    pub(crate) fn plan(&self) -> FftResult<Vec<TopoNode>> {
+        if self.nodes.is_empty() {
+            return Err(FftError::Protocol("graph topology has no nodes".into()));
+        }
+        if self.nodes.len() > MAX_GRAPH_NODES {
+            return Err(FftError::Protocol(format!(
+                "graph topology has {} nodes (limit {MAX_GRAPH_NODES})",
+                self.nodes.len()
+            )));
+        }
+        if self.edges.len() > MAX_GRAPH_EDGES {
+            return Err(FftError::Protocol(format!(
+                "graph topology has {} edges (limit {MAX_GRAPH_EDGES})",
+                self.edges.len()
+            )));
+        }
+        let mut index: HashMap<u32, usize> = HashMap::with_capacity(self.nodes.len());
+        for (i, n) in self.nodes.iter().enumerate() {
+            if index.insert(n.id, i).is_some() {
+                return Err(FftError::Protocol(format!("duplicate graph node id {}", n.id)));
+            }
+            match &n.kind {
+                NodeKind::Decimate { factor: 0 } => {
+                    return Err(FftError::Protocol(format!(
+                        "decimate node {} has factor 0 (must be >= 1)",
+                        n.id
+                    )))
+                }
+                NodeKind::Ols { taps_re, taps_im, .. } if taps_re.len() != taps_im.len() => {
+                    return Err(FftError::Protocol(format!(
+                        "ols node {} taps planes differ ({} re, {} im)",
+                        n.id,
+                        taps_re.len(),
+                        taps_im.len()
+                    )))
+                }
+                NodeKind::MatchedFilter { pulse_re, pulse_im }
+                    if pulse_re.len() != pulse_im.len() =>
+                {
+                    return Err(FftError::Protocol(format!(
+                        "matched-filter node {} pulse planes differ ({} re, {} im)",
+                        n.id,
+                        pulse_re.len(),
+                        pulse_im.len()
+                    )))
+                }
+                _ => {}
+            }
+        }
+        let mut children: Vec<Vec<usize>> = vec![Vec::new(); self.nodes.len()];
+        let mut indeg = vec![0usize; self.nodes.len()];
+        let mut seen = HashSet::with_capacity(self.edges.len());
+        for &(from, to) in &self.edges {
+            let (Some(&f), Some(&t)) = (index.get(&from), index.get(&to)) else {
+                return Err(FftError::Protocol(format!(
+                    "graph edge {from} -> {to} references an unknown node id"
+                )));
+            };
+            if from == to {
+                return Err(FftError::Protocol(format!(
+                    "graph node {from} feeds itself"
+                )));
+            }
+            if !seen.insert((from, to)) {
+                return Err(FftError::Protocol(format!(
+                    "duplicate graph edge {from} -> {to}"
+                )));
+            }
+            children[f].push(t);
+            indeg[t] += 1;
+        }
+        let mut source: Option<usize> = None;
+        for (i, n) in self.nodes.iter().enumerate() {
+            if matches!(n.kind, NodeKind::Source) {
+                if source.is_some() {
+                    return Err(FftError::Protocol(
+                        "graph has more than one source node".into(),
+                    ));
+                }
+                if indeg[i] != 0 {
+                    return Err(FftError::Protocol(format!(
+                        "source node {} cannot have an input",
+                        n.id
+                    )));
+                }
+                source = Some(i);
+            } else {
+                match indeg[i] {
+                    1 => {}
+                    0 => {
+                        return Err(FftError::Protocol(format!(
+                            "graph node {} ({}) has no input",
+                            n.id,
+                            n.kind.name()
+                        )))
+                    }
+                    d => {
+                        return Err(FftError::Protocol(format!(
+                            "graph node {} ({}) has {d} inputs (exactly one allowed)",
+                            n.id,
+                            n.kind.name()
+                        )))
+                    }
+                }
+            }
+            if matches!(n.kind, NodeKind::Sink) {
+                if !children[i].is_empty() {
+                    return Err(FftError::Protocol(format!(
+                        "sink node {} cannot feed other nodes",
+                        n.id
+                    )));
+                }
+            } else if children[i].is_empty() {
+                return Err(FftError::Protocol(format!(
+                    "graph node {} ({}) output reaches no sink",
+                    n.id,
+                    n.kind.name()
+                )));
+            }
+        }
+        let Some(source) = source else {
+            return Err(FftError::Protocol("graph has no source node".into()));
+        };
+        // BFS from the source.  In-degrees are all <= 1 here, so each
+        // node is enqueued at most once, exactly when its parent is
+        // visited — anything left over sits on a cycle (or hangs off
+        // one), which a single-parent topology cannot reach.
+        let mut order = Vec::with_capacity(self.nodes.len());
+        order.push(TopoNode { node: source, parent: None });
+        let mut head = 0usize;
+        while head < order.len() {
+            let cur = order[head].node;
+            for &c in &children[cur] {
+                order.push(TopoNode { node: c, parent: Some(head) });
+            }
+            head += 1;
+        }
+        if order.len() != self.nodes.len() {
+            return Err(FftError::Protocol(format!(
+                "graph topology is cyclic or disconnected ({} of {} nodes reachable \
+                 from the source)",
+                order.len(),
+                self.nodes.len()
+            )));
+        }
+        Ok(order)
+    }
+}
+
+/// One node in execution order.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct TopoNode {
+    /// Index into [`GraphSpec::nodes`].
+    pub node: usize,
+    /// Position of this node's single input earlier in the order
+    /// (`None` for the source).
+    pub parent: Option<usize>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn linear() -> GraphSpec {
+        GraphSpec::new(DType::F32, Strategy::DualSelect, 64)
+            .node(1, NodeKind::Source)
+            .node(2, NodeKind::Magnitude)
+            .node(3, NodeKind::Sink)
+            .edge(1, 2)
+            .edge(2, 3)
+    }
+
+    #[test]
+    fn valid_fanout_graph_plans_in_topo_order() {
+        let spec = linear()
+            .node(4, NodeKind::Summary)
+            .node(5, NodeKind::Sink)
+            .edge(1, 4)
+            .edge(4, 5);
+        let plan = spec.plan().unwrap();
+        assert_eq!(plan.len(), 5);
+        assert_eq!(plan[0].node, 0);
+        assert!(plan[0].parent.is_none());
+        for (pos, t) in plan.iter().enumerate().skip(1) {
+            assert!(t.parent.unwrap() < pos, "parent after child at {pos}");
+        }
+    }
+
+    #[test]
+    fn structural_violations_are_protocol_errors() {
+        let protocol = |spec: GraphSpec| {
+            let err = spec.validate().unwrap_err();
+            assert!(matches!(err, FftError::Protocol(_)), "{err:?}");
+            err.to_string()
+        };
+        // Empty, no source, no sink, dangling output.
+        protocol(GraphSpec::new(DType::F64, Strategy::DualSelect, 0));
+        protocol(
+            GraphSpec::new(DType::F64, Strategy::DualSelect, 0)
+                .node(1, NodeKind::Sink),
+        );
+        protocol(
+            GraphSpec::new(DType::F64, Strategy::DualSelect, 0)
+                .node(1, NodeKind::Source),
+        );
+        // Duplicate id.
+        let msg = protocol(linear().node(2, NodeKind::Sink));
+        assert!(msg.contains("duplicate"), "{msg}");
+        // Unknown edge endpoint, self-edge, duplicate edge.
+        protocol(linear().edge(2, 99));
+        protocol(linear().edge(2, 2));
+        protocol(linear().edge(1, 2));
+        // Two inputs into one node.
+        protocol(
+            linear()
+                .node(4, NodeKind::Detrend)
+                .node(5, NodeKind::Sink)
+                .edge(1, 4)
+                .edge(4, 5)
+                .edge(2, 4),
+        );
+        // Cycle hanging off the source's component is unreachable.
+        let msg = protocol(
+            linear()
+                .node(4, NodeKind::Detrend)
+                .node(5, NodeKind::Detrend)
+                .node(6, NodeKind::Sink)
+                .edge(4, 5)
+                .edge(5, 4)
+                .edge(5, 6),
+        );
+        assert!(msg.contains("cyclic"), "{msg}");
+        // Sink feeding a node; source with an input; two sources.
+        protocol(
+            linear()
+                .node(4, NodeKind::Sink)
+                .edge(3, 4),
+        );
+        protocol(linear().edge(2, 1));
+        protocol(
+            linear()
+                .node(4, NodeKind::Source)
+                .node(5, NodeKind::Sink)
+                .edge(4, 5),
+        );
+        // Kind-level structure: zero decimate factor, ragged taps.
+        protocol(
+            GraphSpec::new(DType::F64, Strategy::DualSelect, 0)
+                .node(1, NodeKind::Source)
+                .node(2, NodeKind::Decimate { factor: 0 })
+                .node(3, NodeKind::Sink)
+                .edge(1, 2)
+                .edge(2, 3),
+        );
+        protocol(
+            GraphSpec::new(DType::F64, Strategy::DualSelect, 0)
+                .node(1, NodeKind::Source)
+                .node(
+                    2,
+                    NodeKind::Ols { taps_re: vec![1.0, 2.0], taps_im: vec![0.0], fft_len: None },
+                )
+                .node(3, NodeKind::Sink)
+                .edge(1, 2)
+                .edge(2, 3),
+        );
+        // Oversized topology.
+        let mut big = GraphSpec::new(DType::F64, Strategy::DualSelect, 0)
+            .node(0, NodeKind::Source);
+        for i in 1..=(MAX_GRAPH_NODES as u32) {
+            big = big.node(i, NodeKind::Sink).edge(0, i);
+        }
+        let msg = protocol(big);
+        assert!(msg.contains("nodes"), "{msg}");
+    }
+
+    #[test]
+    fn validate_accepts_the_canonical_radar_graph() {
+        let (pr, pi) = (vec![1.0, 0.5], vec![0.0, -0.5]);
+        GraphSpec::new(DType::F16, Strategy::DualSelect, 256)
+            .node(1, NodeKind::Source)
+            .node(2, NodeKind::Window { window: Window::Hann })
+            .node(3, NodeKind::Fft)
+            .node(4, NodeKind::MatchedFilter { pulse_re: pr, pulse_im: pi })
+            .node(5, NodeKind::Magnitude)
+            .node(6, NodeKind::Sink)
+            .node(7, NodeKind::Sink)
+            .edge(1, 2)
+            .edge(2, 3)
+            .edge(3, 5)
+            .edge(5, 6)
+            .edge(1, 4)
+            .edge(4, 7)
+            .validate()
+            .unwrap();
+    }
+}

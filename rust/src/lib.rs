@@ -51,6 +51,15 @@
 //!   carry a *running* cumulative a-priori error bound (eq. (11)
 //!   applied to serving).  Served remotely via the wire protocol's
 //!   `STREAM_*` ops (introduced in v2).
+//! * **Graph plane** ([`graph`]) — composable DSP pipeline graphs:
+//!   one ingest stream fans through a validated DAG of
+//!   [`graph::GraphNode`] stages (window, FFT, overlap-save, STFT,
+//!   matched filter, detrend, magnitude, decimate, summary) into named
+//!   sink topics; any number of subscribers attach per topic with
+//!   `Arc`-shared zero-copy fan-out and per-subscriber lag-drop
+//!   backpressure, and every published frame carries the composed
+//!   running bound along its source→sink path.  Served remotely via
+//!   the wire protocol's `GRAPH_*` ops (introduced in v4).
 //! * **Applications** ([`signal`], [`workload`]) — the radar pulse
 //!   compression and spectrogram pipelines the paper motivates, used by
 //!   the examples and benches.
@@ -66,6 +75,7 @@ pub mod coordinator;
 pub mod dft;
 pub mod fft;
 pub mod fixed;
+pub mod graph;
 pub mod net;
 pub mod precision;
 pub mod runtime;

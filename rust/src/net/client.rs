@@ -17,6 +17,15 @@
 //!   traffic share one connection (frames are matched by id), but
 //!   receive stream replies through the handle, not plain
 //!   [`FftClient::recv`].
+//! * **Graph** (protocol v4): [`FftClient::open_graph`] declares a
+//!   pipeline DAG and returns a [`GraphHandle`] that pipelines ingest
+//!   chunks like a stream session; [`FftClient::subscribe`] attaches
+//!   this connection to one sink topic of any open graph and returns a
+//!   [`SubscribeHandle`] whose [`SubscribeHandle::recv`] blocks for
+//!   published sink frames (`PUBLISH` data/eos) — each carrying the
+//!   sink's publish sequence number (gaps = frames lag-dropped for
+//!   this subscriber), its composed pass count, and the running bound
+//!   along its source→sink path.
 //!
 //! Server-side failures come back typed: a `BUSY` wire status decodes
 //! to [`FftError::Rejected`] (mirroring what an in-process
@@ -32,9 +41,11 @@ use std::time::Duration;
 
 use crate::coordinator::FftOp;
 use crate::fft::{DType, FftError, FftResult, Strategy};
+use crate::graph::GraphSpec;
 use crate::stream::StreamSpec;
 
 use super::wire;
+use super::wire::PublishKind;
 
 /// One completed wire exchange, mirroring the in-process
 /// [`crate::coordinator::FftResponse`]: the working dtype, the
@@ -100,6 +111,49 @@ impl StreamResponse {
         } else {
             self.re.len() / self.fft_len
         }
+    }
+}
+
+/// One completed graph exchange: a publisher-op `PUBLISH` ack
+/// (graph-wide totals, no payload) or one subscriber sink frame
+/// (payload + per-sink sequence/passes/bound) — or a typed error
+/// (`Rejected` for a `BUSY` status, `Backend` for `ERROR`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GraphResponse {
+    /// The correlation id this frame answered (the publisher op's id
+    /// for acks, the `GRAPH_SUBSCRIBE` id for data/eos frames).
+    pub id: u64,
+    /// Server-assigned graph id (0 when the request failed before a
+    /// graph existed).
+    pub graph: u64,
+    /// Working precision of the graph.
+    pub dtype: DType,
+    /// Ack (publisher op accepted), Data (one sink frame), or Eos
+    /// (terminal frame — the subscription is over).
+    pub kind: PublishKind,
+    /// Sink node id (the topic) for data/eos frames; 0 for acks.
+    pub node: u32,
+    /// Per-sink publish sequence for data/eos (gaps = lag-drops); the
+    /// graph's ingest chunk count for acks.
+    pub seq: u64,
+    /// Composed butterfly passes: along the sink's source→sink path
+    /// for data/eos, across the whole graph for acks.
+    pub passes: u64,
+    /// The running composed a-priori bound at `passes`.
+    pub bound: Option<f64>,
+    pub re: Vec<f64>,
+    pub im: Vec<f64>,
+    pub error: Option<FftError>,
+}
+
+impl GraphResponse {
+    pub fn is_ok(&self) -> bool {
+        self.error.is_none()
+    }
+
+    /// Whether this is the terminal frame of a subscription.
+    pub fn is_eos(&self) -> bool {
+        self.kind == PublishKind::Eos
     }
 }
 
@@ -283,6 +337,62 @@ impl FftClient {
                 client: self,
             }),
             Some(e) => Err(e),
+        }
+    }
+
+    /// Declare a pipeline graph (the `GRAPH_*` ops, protocol v4) and
+    /// return a pipelining publisher handle for it.  Blocks for the
+    /// server's `PUBLISH` ack; structural topology errors surface as
+    /// the server's typed message, a registry at capacity as
+    /// [`FftError::Rejected`] — the connection stays usable.
+    pub fn open_graph(&mut self, spec: &GraphSpec) -> FftResult<GraphHandle<'_>> {
+        let id = self.send_stream_frame(|id| wire::encode_graph_open(id, spec))?;
+        let frame = self.recv_frame_for(&[id])?;
+        let resp = graph_response_from(frame);
+        match resp.error {
+            None => Ok(GraphHandle {
+                graph: resp.graph,
+                dtype: resp.dtype,
+                passes: resp.passes,
+                bound: resp.bound,
+                outstanding: VecDeque::new(),
+                client: self,
+            }),
+            Some(e) => Err(e),
+        }
+    }
+
+    /// Attach this connection as a subscriber to sink node `node` of
+    /// open graph `graph` (opened by any connection).  Blocks for the
+    /// server's `PUBLISH` ack; published sink frames then arrive via
+    /// [`SubscribeHandle::recv`].  A subscriber cap surfaces as
+    /// [`FftError::Rejected`], an unknown graph or non-sink node as
+    /// the server's typed message.
+    pub fn subscribe(&mut self, graph: u64, node: u32) -> FftResult<SubscribeHandle<'_>> {
+        let id = self.send_stream_frame(|id| wire::encode_graph_subscribe(id, graph, node))?;
+        // A publisher on another connection may fan a data frame into
+        // this subscription between the server-side attach and the
+        // ack write; such frames arrive first and are buffered for
+        // `SubscribeHandle::recv`, never dropped.
+        let mut buffered: VecDeque<GraphResponse> = VecDeque::new();
+        loop {
+            let frame = self.recv_frame_for(&[id])?;
+            let resp = graph_response_from(frame);
+            if let Some(e) = resp.error {
+                return Err(e);
+            }
+            if resp.kind == PublishKind::Ack {
+                return Ok(SubscribeHandle {
+                    id,
+                    graph,
+                    node,
+                    dtype: resp.dtype,
+                    done: false,
+                    buffered,
+                    client: self,
+                });
+            }
+            buffered.push_back(resp);
         }
     }
 
@@ -500,6 +610,221 @@ impl StreamHandle<'_> {
     }
 }
 
+/// A pipelining publisher handle for one open pipeline graph — the
+/// remote spelling of [`crate::graph::GraphRegistry`]: submit ingest
+/// chunks without waiting, receive per-chunk `PUBLISH` acks carrying
+/// graph-wide totals (sink payloads go to subscribers, not to the
+/// publisher), close to cascade the tail flush and end every
+/// subscription with an eos frame.
+pub struct GraphHandle<'a> {
+    client: &'a mut FftClient,
+    graph: u64,
+    dtype: DType,
+    passes: u64,
+    bound: Option<f64>,
+    /// Ids of submitted-but-unreceived chunk requests.
+    outstanding: VecDeque<u64>,
+}
+
+impl GraphHandle<'_> {
+    /// Server-assigned graph id (what subscribers attach to).
+    pub fn graph(&self) -> u64 {
+        self.graph
+    }
+
+    /// Working precision of the graph.
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    /// Graph-wide butterfly passes at open (taps/pulse spectra count
+    /// from the start, exactly as stream sessions do).
+    pub fn initial_passes(&self) -> u64 {
+        self.passes
+    }
+
+    /// The composed graph-wide bound the open ack carried (grows with
+    /// passes on every subsequent chunk ack).
+    pub fn initial_bound(&self) -> Option<f64> {
+        self.bound
+    }
+
+    /// Chunks submitted but not yet acked.
+    pub fn in_flight(&self) -> usize {
+        self.outstanding.len()
+    }
+
+    /// Pipelined ingest submit: write one `GRAPH_CHUNK` frame and
+    /// return its correlation id without waiting.
+    pub fn submit_chunk(&mut self, re: &[f64], im: &[f64]) -> FftResult<u64> {
+        if re.len() != im.len() {
+            return Err(FftError::LengthMismatch { expected: re.len(), got: im.len() });
+        }
+        let graph = self.graph;
+        let id = self
+            .client
+            .send_stream_frame(|id| wire::encode_graph_chunk_parts(id, graph, re, im))?;
+        self.outstanding.push_back(id);
+        Ok(id)
+    }
+
+    /// Next chunk ack for THIS graph (the server answers a graph's
+    /// chunks in submission order).  Other frames are parked for their
+    /// own receivers.
+    pub fn recv(&mut self) -> FftResult<GraphResponse> {
+        if self.outstanding.is_empty() {
+            return Err(FftError::InvalidArgument(
+                "no graph chunks in flight on this handle".into(),
+            ));
+        }
+        let ids: Vec<u64> = self.outstanding.iter().copied().collect();
+        let frame = self.client.recv_frame_for(&ids)?;
+        let resp = graph_response_from(frame);
+        self.outstanding.retain(|&i| i != resp.id);
+        Ok(resp)
+    }
+
+    /// Close the graph: drain outstanding chunk acks, send
+    /// `GRAPH_CLOSE` (which cascades the tail flush through every node
+    /// and ends every subscription with an eos frame), and return the
+    /// final ack with the graph's total chunk/pass counts.  A
+    /// server-side error on a drained chunk does NOT skip the close;
+    /// the first such error is returned after teardown.
+    pub fn close(mut self) -> FftResult<GraphResponse> {
+        let mut first_err: Option<FftError> = None;
+        while !self.outstanding.is_empty() {
+            let r = self.recv()?;
+            first_err = first_err.or(r.error);
+        }
+        let graph = self.graph;
+        let id = self
+            .client
+            .send_stream_frame(|id| wire::encode_graph_close(id, graph))?;
+        let frame = self.client.recv_frame_for(&[id])?;
+        let resp = graph_response_from(frame);
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        match resp.error {
+            Some(e) => Err(e),
+            None => Ok(resp),
+        }
+    }
+}
+
+/// A receive handle for one sink-topic subscription.  Published
+/// frames arrive in per-sink sequence order; a gap in
+/// [`GraphResponse::seq`] means frames were lag-dropped for this
+/// subscriber (it fell behind its backpressure window).  The
+/// subscription ends when [`SubscribeHandle::recv`] yields an eos
+/// frame ([`GraphResponse::is_eos`]).
+pub struct SubscribeHandle<'a> {
+    client: &'a mut FftClient,
+    /// The `GRAPH_SUBSCRIBE` correlation id every published frame of
+    /// this subscription answers.
+    id: u64,
+    graph: u64,
+    node: u32,
+    dtype: DType,
+    done: bool,
+    /// Frames that raced ahead of the subscribe ack or a previous
+    /// receiver, in arrival order.
+    buffered: VecDeque<GraphResponse>,
+}
+
+impl SubscribeHandle<'_> {
+    /// The graph this subscription watches.
+    pub fn graph(&self) -> u64 {
+        self.graph
+    }
+
+    /// The sink node id (the topic) this subscription watches.
+    pub fn node(&self) -> u32 {
+        self.node
+    }
+
+    /// Working precision of the watched graph.
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    /// Whether the terminal eos frame has been received.
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Block for the next published frame of this subscription (data
+    /// or eos).  After eos the subscription is over server-side and
+    /// further calls return a typed error.
+    pub fn recv(&mut self) -> FftResult<GraphResponse> {
+        if self.done {
+            return Err(FftError::ChannelClosed(
+                "subscription already received its eos frame",
+            ));
+        }
+        let resp = match self.buffered.pop_front() {
+            Some(r) => r,
+            None => {
+                let frame = self.client.recv_frame_for(&[self.id])?;
+                graph_response_from(frame)
+            }
+        };
+        if resp.is_eos() {
+            self.done = true;
+        }
+        Ok(resp)
+    }
+}
+
+fn graph_response_from(frame: wire::Response) -> GraphResponse {
+    let fail = |id: u64, dtype: DType, error: FftError| GraphResponse {
+        id,
+        graph: 0,
+        dtype,
+        kind: PublishKind::Ack,
+        node: 0,
+        seq: 0,
+        passes: 0,
+        bound: None,
+        re: Vec::new(),
+        im: Vec::new(),
+        error: Some(error),
+    };
+    match frame {
+        wire::Response::Publish(p) => GraphResponse {
+            id: p.id,
+            graph: p.graph,
+            dtype: p.dtype,
+            kind: p.kind,
+            node: p.node,
+            seq: p.seq,
+            passes: p.passes,
+            bound: p.bound,
+            re: p.re,
+            im: p.im,
+            error: None,
+        },
+        wire::Response::Busy { id, in_flight, limit } => fail(
+            id,
+            DType::F32,
+            FftError::Rejected { in_flight: in_flight as usize, limit: limit as usize },
+        ),
+        wire::Response::Error { id, dtype, message } => {
+            fail(id, dtype, FftError::Backend(message))
+        }
+        wire::Response::Ok { id, dtype, .. } => fail(
+            id,
+            dtype,
+            FftError::Protocol("one-shot OK frame answered a graph request".into()),
+        ),
+        wire::Response::Stream(s) => fail(
+            s.id,
+            s.dtype,
+            FftError::Protocol("stream reply answered a graph request".into()),
+        ),
+    }
+}
+
 fn stream_response_from(frame: wire::Response) -> StreamResponse {
     match frame {
         wire::Response::Stream(s) => StreamResponse {
@@ -551,6 +876,19 @@ fn stream_response_from(frame: wire::Response) -> StreamResponse {
                 "one-shot OK frame answered a stream request".into(),
             )),
         },
+        wire::Response::Publish(p) => StreamResponse {
+            id: p.id,
+            session: 0,
+            dtype: p.dtype,
+            passes: 0,
+            fft_len: 0,
+            bound: None,
+            re: Vec::new(),
+            im: Vec::new(),
+            error: Some(FftError::Protocol(
+                "graph publish frame answered a stream request".into(),
+            )),
+        },
     }
 }
 
@@ -593,6 +931,19 @@ fn from_wire(frame: wire::Response) -> NetResponse {
                     .into(),
             )),
         },
+        // Same for a graph publish frame: it belongs to a
+        // GraphHandle/SubscribeHandle receiver.
+        wire::Response::Publish(p) => NetResponse {
+            id: p.id,
+            dtype: p.dtype,
+            bound: p.bound,
+            re: Vec::new(),
+            im: Vec::new(),
+            error: Some(FftError::Protocol(
+                "graph publish frame on the one-shot receive path; receive it via its handle"
+                    .into(),
+            )),
+        },
     }
 }
 
@@ -621,6 +972,44 @@ mod tests {
             r.error,
             Some(FftError::Backend("length mismatch: expected 256, got 8".into()))
         );
+    }
+
+    #[test]
+    fn publish_frames_map_to_graph_responses() {
+        let r = graph_response_from(wire::Response::Publish(wire::PublishReply {
+            id: 11,
+            dtype: DType::F16,
+            graph: 2,
+            kind: PublishKind::Data,
+            node: 9,
+            seq: 4,
+            passes: 120,
+            bound: Some(0.25),
+            re: vec![1.0],
+            im: vec![2.0],
+        }));
+        assert!(r.is_ok() && !r.is_eos());
+        assert_eq!((r.id, r.graph, r.node, r.seq, r.passes), (11, 2, 9, 4, 120));
+        assert_eq!(r.bound, Some(0.25));
+
+        let busy = graph_response_from(wire::Response::Busy { id: 12, in_flight: 64, limit: 64 });
+        assert_eq!(busy.error, Some(FftError::Rejected { in_flight: 64, limit: 64 }));
+
+        // A publish frame escaping to the one-shot path is a typed
+        // protocol error, never a misparsed payload.
+        let stray = from_wire(wire::Response::Publish(wire::PublishReply {
+            id: 13,
+            dtype: DType::F32,
+            graph: 1,
+            kind: PublishKind::Ack,
+            node: 0,
+            seq: 0,
+            passes: 0,
+            bound: None,
+            re: Vec::new(),
+            im: Vec::new(),
+        }));
+        assert!(matches!(stray.error, Some(FftError::Protocol(_))));
     }
 
     #[test]

@@ -38,10 +38,22 @@
 //! carries the session's cumulative pass count and its *running*
 //! a-priori error bound, and registry/session backpressure arrives as
 //! the same typed `BUSY` one-shot callers get.
+//!
+//! Protocol v4 adds the **graph plane**: [`FftClient::open_graph`]
+//! declares a pipeline DAG against the daemon's
+//! [`crate::graph::GraphRegistry`]
+//! (`GRAPH_OPEN`/`GRAPH_CHUNK`/`GRAPH_SUBSCRIBE`/`GRAPH_CLOSE` ops);
+//! any number of connections [`FftClient::subscribe`] to a graph's
+//! sink topics and receive `Arc`-fanned `PUBLISH` frames carrying the
+//! composed running bound along each source→sink path, with
+//! per-subscriber lag-drop backpressure instead of publisher stalls.
 
 pub mod client;
 pub mod server;
 pub mod wire;
 
-pub use client::{FftClient, NetResponse, StreamHandle, StreamResponse};
+pub use client::{
+    FftClient, GraphHandle, GraphResponse, NetResponse, StreamHandle, StreamResponse,
+    SubscribeHandle,
+};
 pub use server::FftdServer;

@@ -19,6 +19,14 @@
 //!                                       pipelining)  request order
 //! ```
 //!
+//! Graph ops (`GRAPH_*`, protocol v4) run like stream ops —
+//! synchronously on the reader against the shared
+//! [`GraphRegistry`] — but published sink frames additionally fan out
+//! into *every subscriber connection's* writer channel as
+//! `Arc`-shared [`ConnReply::Publish`] frames; a subscriber over its
+//! backpressure window lag-drops frames instead of stalling the
+//! publishing connection.
+//!
 //! Every wire request on a connection shares that connection's one
 //! reply channel, so any number of request ids can be in flight and
 //! responses stream back as the coordinator finishes them — no
@@ -44,6 +52,7 @@ use std::time::Duration;
 
 use crate::coordinator::{FftResponse, Route, Server};
 use crate::fft::{DType, FftError, FftResult};
+use crate::graph::{GraphConfig, GraphOut, GraphPublish, GraphRegistry, PublishSink, Subscription};
 use crate::stream::{SessionRegistry, StreamConfig, StreamOut};
 
 use super::wire;
@@ -60,6 +69,9 @@ pub struct FftdServer {
     /// Stream sessions served by this daemon (shared across
     /// connections; gauges report into the coordinator's metrics).
     streams: Arc<SessionRegistry>,
+    /// Pipeline graphs served by this daemon (shared across
+    /// connections — subscribers attach from any connection).
+    graphs: Arc<GraphRegistry>,
     local_addr: SocketAddr,
     stop: Arc<AtomicBool>,
     accept_handle: Mutex<Option<JoinHandle<()>>>,
@@ -68,13 +80,38 @@ pub struct FftdServer {
 }
 
 /// What a connection's writer serializes: a coordinator response
-/// (success, `BUSY` or `ERROR` on the wire) or a streaming-plane
-/// reply.  Coordinator responses arrive via a per-connection forwarder
-/// thread so [`crate::coordinator::Server::submit_routed`] keeps its
-/// plain `Sender<FftResponse>` signature.
+/// (success, `BUSY` or `ERROR` on the wire), a streaming-plane reply,
+/// a graph-plane `PUBLISH` ack, or a fanned-out subscriber frame.
+/// Coordinator responses arrive via a per-connection forwarder thread
+/// so [`crate::coordinator::Server::submit_routed`] keeps its plain
+/// `Sender<FftResponse>` signature.
 enum ConnReply {
     Fft(FftResponse),
     Stream(wire::StreamReply),
+    /// A reader-synthesized graph ack (`GRAPH_OPEN`/`CHUNK`/
+    /// `SUBSCRIBE`/`CLOSE` accepted).
+    Graph(wire::PublishReply),
+    /// One fanned-out sink frame: the payload is the registry's shared
+    /// `Arc` — encoding streams straight from it, never deep-copied —
+    /// and the writer releases the subscriber's backpressure slot
+    /// ([`Subscription::complete_delivery`]) once it is written.
+    Publish { sub: Arc<Subscription>, frame: Arc<GraphPublish> },
+}
+
+/// The graph registry's delivery side for TCP subscribers: frames are
+/// handed to the subscriber connection's writer channel.  A dropped
+/// channel (connection gone) reports the subscriber dead, and the
+/// registry detaches it.
+struct TcpPublishSink {
+    tx: mpsc::Sender<ConnReply>,
+}
+
+impl PublishSink for TcpPublishSink {
+    fn deliver(&self, sub: &Arc<Subscription>, frame: &Arc<GraphPublish>) -> bool {
+        self.tx
+            .send(ConnReply::Publish { sub: Arc::clone(sub), frame: Arc::clone(frame) })
+            .is_ok()
+    }
 }
 
 struct ConnHandle {
@@ -125,11 +162,25 @@ impl FftdServer {
 
     /// [`FftdServer::start`] with explicit streaming-plane limits
     /// (session cap, chunk cap, taps cap — the session cap is the
-    /// registry-full → `BUSY` backpressure knob).
+    /// registry-full → `BUSY` backpressure knob).  Graph-plane limits
+    /// stay at their defaults; see [`FftdServer::start_with_planes`].
     pub fn start_with_streams(
         coordinator: Arc<Server>,
         addr: impl ToSocketAddrs,
         stream_cfg: StreamConfig,
+    ) -> FftResult<FftdServer> {
+        Self::start_with_planes(coordinator, addr, stream_cfg, GraphConfig::default())
+    }
+
+    /// [`FftdServer::start`] with explicit limits for both stateful
+    /// planes: stream sessions and pipeline graphs (graph cap,
+    /// subscriber cap, and the per-subscriber backpressure window —
+    /// the lag-drop knob).
+    pub fn start_with_planes(
+        coordinator: Arc<Server>,
+        addr: impl ToSocketAddrs,
+        stream_cfg: StreamConfig,
+        graph_cfg: GraphConfig,
     ) -> FftResult<FftdServer> {
         let listener = TcpListener::bind(addr)
             .map_err(|e| FftError::Backend(format!("binding fftd listener: {e}")))?;
@@ -142,21 +193,27 @@ impl FftdServer {
             stream_cfg,
             coordinator.metrics_handle(),
         ));
+        let graphs = Arc::new(GraphRegistry::with_metrics(
+            graph_cfg,
+            coordinator.metrics_handle(),
+        ));
 
         let accept_handle = {
             let stop = stop.clone();
             let conns = conns.clone();
             let coordinator = coordinator.clone();
             let streams = streams.clone();
+            let graphs = graphs.clone();
             std::thread::Builder::new()
                 .name("fftd-accept".into())
-                .spawn(move || accept_loop(listener, coordinator, streams, stop, conns))
+                .spawn(move || accept_loop(listener, coordinator, streams, graphs, stop, conns))
                 .map_err(|e| FftError::Backend(format!("spawning fftd acceptor: {e}")))?
         };
 
         Ok(FftdServer {
             coordinator,
             streams,
+            graphs,
             local_addr,
             stop,
             accept_handle: Mutex::new(Some(accept_handle)),
@@ -180,6 +237,12 @@ impl FftdServer {
     /// `open_sessions()`, limits).
     pub fn stream_sessions(&self) -> &Arc<SessionRegistry> {
         &self.streams
+    }
+
+    /// The pipeline-graph registry this daemon serves (observability:
+    /// `open_graphs()`, `active_subscribers()`, limits).
+    pub fn graph_registry(&self) -> &Arc<GraphRegistry> {
+        &self.graphs
     }
 
     /// Connections currently tracked (finished ones are pruned as new
@@ -262,6 +325,7 @@ fn accept_loop(
     listener: TcpListener,
     coordinator: Arc<Server>,
     streams: Arc<SessionRegistry>,
+    graphs: Arc<GraphRegistry>,
     stop: Arc<AtomicBool>,
     conns: Arc<Mutex<Vec<ConnHandle>>>,
 ) {
@@ -280,7 +344,7 @@ fn accept_loop(
         };
         // On stream-setup failure (clone/spawn) the connection is
         // simply dropped and the acceptor keeps serving.
-        if let Ok(conn) = spawn_connection(stream, &coordinator, &streams) {
+        if let Ok(conn) = spawn_connection(stream, &coordinator, &streams, &graphs) {
             let mut guard = conns.lock().unwrap_or_else(PoisonError::into_inner);
             // Reap connections that already hung up.
             guard.retain_mut(|c| {
@@ -299,6 +363,7 @@ fn spawn_connection(
     stream: TcpStream,
     coordinator: &Arc<Server>,
     streams: &Arc<SessionRegistry>,
+    graphs: &Arc<GraphRegistry>,
 ) -> std::io::Result<ConnHandle> {
     // Frames are written whole and flushed; disable Nagle so pipelined
     // responses are not held back waiting for more bytes.
@@ -314,10 +379,11 @@ fn spawn_connection(
     let reader = {
         let coordinator = coordinator.clone();
         let streams = streams.clone();
+        let graphs = graphs.clone();
         let conn_tx = conn_tx.clone();
         std::thread::Builder::new()
             .name("fftd-conn-read".into())
-            .spawn(move || read_loop(read_half, coordinator, streams, fft_tx, conn_tx))?
+            .spawn(move || read_loop(read_half, coordinator, streams, graphs, fft_tx, conn_tx))?
     };
     let forwarder = match std::thread::Builder::new()
         .name("fftd-conn-fwd".into())
@@ -366,33 +432,60 @@ fn spawn_connection(
 /// synchronously (backpressure, busy session, length mismatch,
 /// shutdown) are answered with a synthetic error response, so the
 /// writer turns them into typed `BUSY`/`ERROR` wire statuses — the
-/// connection survives.  Sessions opened on this connection are
-/// closed (tail discarded) when it ends.
+/// connection survives.  Graph ops run the same way (the graph
+/// registry fans published sink frames into every subscriber
+/// connection's writer).  Sessions, graphs, and subscriptions opened
+/// on this connection are closed/detached when it ends.
 fn read_loop(
     stream: TcpStream,
     coordinator: Arc<Server>,
     streams: Arc<SessionRegistry>,
+    graphs: Arc<GraphRegistry>,
     fft_tx: mpsc::Sender<FftResponse>,
     conn_tx: mpsc::Sender<ConnReply>,
 ) {
     let mut owned_sessions: Vec<u64> = Vec::new();
-    read_frames(stream, coordinator, &streams, fft_tx, conn_tx, &mut owned_sessions);
-    // The peer is gone; its sessions would otherwise leak in the
-    // shared registry until daemon shutdown.  force_close removes
-    // even a session another connection has checked out mid-chunk
-    // (it is doomed and reaped when that chunk completes).
+    let mut owned_graphs: Vec<u64> = Vec::new();
+    let mut owned_subs: Vec<u64> = Vec::new();
+    read_frames(
+        stream,
+        coordinator,
+        &streams,
+        &graphs,
+        fft_tx,
+        conn_tx,
+        &mut owned_sessions,
+        &mut owned_graphs,
+        &mut owned_subs,
+    );
+    // The peer is gone; its sessions/graphs/subscriptions would
+    // otherwise leak in the shared registries until daemon shutdown.
+    // force_close removes even a session or graph another connection
+    // has checked out mid-chunk (it is doomed and reaped when that
+    // chunk completes).  Detach this connection's subscriptions first
+    // so graph teardown does not synthesize eos frames for them.
+    for id in owned_subs {
+        graphs.unsubscribe(id);
+    }
+    for id in owned_graphs {
+        graphs.force_close(id);
+    }
     for id in owned_sessions {
         streams.force_close(id);
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn read_frames(
     stream: TcpStream,
     coordinator: Arc<Server>,
     streams: &SessionRegistry,
+    graphs: &GraphRegistry,
     fft_tx: mpsc::Sender<FftResponse>,
     conn_tx: mpsc::Sender<ConnReply>,
     owned_sessions: &mut Vec<u64>,
+    owned_graphs: &mut Vec<u64>,
+    owned_subs: &mut Vec<u64>,
 ) {
     // Reader-synthesized failures reuse the coordinator response shape
     // so the writer maps them onto BUSY/ERROR uniformly.
@@ -400,6 +493,10 @@ fn read_frames(
         let _ = conn_tx.send(ConnReply::Fft(FftResponse::err(id, e, dtype, 0, Duration::ZERO)));
     };
     let mut r = BufReader::new(stream);
+    // One reusable graph-output staging buffer per connection: the
+    // registry swaps sink payloads into it, so the chunk path performs
+    // no per-request allocation after warmup.
+    let mut gout = GraphOut::default();
     loop {
         match wire::read_request_frame(&mut r) {
             Ok(None) => return, // peer closed cleanly
@@ -452,6 +549,56 @@ fn read_frames(
                             Err(e) => send_err(id, e, DType::F32),
                         }
                     }
+                    wire::RequestFrame::GraphOpen { id, spec } => {
+                        let dtype = spec.dtype;
+                        match graphs.open(&spec) {
+                            Ok(out) => {
+                                owned_graphs.push(out.graph);
+                                let _ = conn_tx.send(ConnReply::Graph(graph_ack(id, &out)));
+                            }
+                            Err(e) => send_err(id, e, dtype),
+                        }
+                    }
+                    wire::RequestFrame::GraphChunk { id, graph, re, im } => {
+                        match graphs.chunk(graph, &re, &im, &mut gout) {
+                            Ok(()) => {
+                                graphs.publish(&mut gout);
+                                let _ = conn_tx.send(ConnReply::Graph(graph_ack(id, &gout)));
+                            }
+                            Err(e) => send_err(id, e, DType::F32),
+                        }
+                    }
+                    wire::RequestFrame::GraphSubscribe { id, graph, node } => {
+                        let sink = Box::new(TcpPublishSink { tx: conn_tx.clone() });
+                        match graphs.subscribe(graph, node, id, sink) {
+                            Ok(sub) => {
+                                owned_subs.push(sub.sub_id());
+                                let _ = conn_tx.send(ConnReply::Graph(wire::PublishReply {
+                                    id,
+                                    dtype: sub.dtype(),
+                                    graph,
+                                    kind: wire::PublishKind::Ack,
+                                    node,
+                                    seq: 0,
+                                    passes: 0,
+                                    bound: None,
+                                    re: Vec::new(),
+                                    im: Vec::new(),
+                                }));
+                            }
+                            Err(e) => send_err(id, e, DType::F32),
+                        }
+                    }
+                    wire::RequestFrame::GraphClose { id, graph } => {
+                        match graphs.close(graph, &mut gout) {
+                            Ok(()) => {
+                                owned_graphs.retain(|&g| g != graph);
+                                graphs.publish(&mut gout);
+                                let _ = conn_tx.send(ConnReply::Graph(graph_ack(id, &gout)));
+                            }
+                            Err(e) => send_err(id, e, DType::F32),
+                        }
+                    }
                 }
             }
             Err(e) => {
@@ -472,7 +619,29 @@ fn frame_id(frame: &wire::RequestFrame) -> u64 {
         wire::RequestFrame::Fft(req) => req.id,
         wire::RequestFrame::StreamOpen { id, .. }
         | wire::RequestFrame::StreamChunk { id, .. }
-        | wire::RequestFrame::StreamClose { id, .. } => *id,
+        | wire::RequestFrame::StreamClose { id, .. }
+        | wire::RequestFrame::GraphOpen { id, .. }
+        | wire::RequestFrame::GraphChunk { id, .. }
+        | wire::RequestFrame::GraphSubscribe { id, .. }
+        | wire::RequestFrame::GraphClose { id, .. } => *id,
+    }
+}
+
+/// Shape a publisher-side graph result as the `PUBLISH` ack the op
+/// answers with: graph-wide totals, no payload (subscribers get the
+/// sink frames).
+fn graph_ack(id: u64, out: &GraphOut) -> wire::PublishReply {
+    wire::PublishReply {
+        id,
+        dtype: out.dtype,
+        graph: out.graph,
+        kind: wire::PublishKind::Ack,
+        node: 0,
+        seq: out.chunks,
+        passes: out.passes,
+        bound: out.bound,
+        re: Vec::new(),
+        im: Vec::new(),
     }
 }
 
@@ -522,6 +691,30 @@ fn write_conn_reply<W: std::io::Write>(w: &mut W, resp: &ConnReply) -> crate::ff
         ConnReply::Stream(s) => wire::write_stream_reply_parts(
             w, s.id, s.dtype, s.session, s.passes, s.fft_len, s.bound, &s.re, &s.im,
         ),
+        ConnReply::Graph(p) => wire::write_publish_parts(
+            w, p.id, p.dtype, p.graph, p.kind, p.node, p.seq, p.passes, p.bound, &p.re, &p.im,
+        ),
+        ConnReply::Publish { sub, frame } => {
+            let kind =
+                if frame.eos { wire::PublishKind::Eos } else { wire::PublishKind::Data };
+            let result = wire::write_publish_parts(
+                w,
+                sub.wire_id(),
+                frame.dtype,
+                frame.graph,
+                kind,
+                frame.node,
+                frame.seq,
+                frame.passes,
+                frame.bound,
+                &frame.re,
+                &frame.im,
+            );
+            // Release the backpressure slot even on a failed write —
+            // the accounting must stay symmetric with `begin`.
+            sub.complete_delivery();
+            result
+        }
     }
 }
 

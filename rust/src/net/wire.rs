@@ -7,7 +7,7 @@
 //! ```text
 //! offset size  field
 //!   0     4    magic     "FFTN"
-//!   4     2    version   3
+//!   4     2    version   4
 //!   6     1    kind      1 = request, 2 = response
 //!   7     1    code      request: op tag; response: status
 //!   8     1    strategy  request only (responses write 0)
@@ -41,6 +41,15 @@
 //! f64 planes, so [`Response::Ok`] keeps one shape for every dtype and
 //! the client is unchanged.  See `PROTOCOL.md` §Fixed-point responses.
 //!
+//! Protocol v4 adds the **graph plane**: request ops
+//! [`OP_GRAPH_OPEN`] (a validated pipeline topology — nodes, edges,
+//! taps/pulse payloads), [`OP_GRAPH_CHUNK`], [`OP_GRAPH_SUBSCRIBE`]
+//! and [`OP_GRAPH_CLOSE`], and the [`STATUS_PUBLISH`] response status
+//! ([`PublishReply`]) that both acks publisher ops and carries sink
+//! frames to subscribers (ack/data/eos sub-kinds).  `STREAM_OPEN`
+//! additionally carries the overlap-save FFT block-length override in
+//! its previously-zero `frame` field — see `PROTOCOL.md` §Graphs.
+//!
 //! Every decode failure is a typed [`FftError::Protocol`] — truncated
 //! streams, bad magic, failed checksums, unknown versions/tags and
 //! oversized lengths are all errors, never panics (asserted by
@@ -51,6 +60,7 @@ use std::io::{Read, Write};
 
 use crate::coordinator::FftOp;
 use crate::fft::{DType, FftError, FftResult, Strategy};
+use crate::graph::{GraphSpec, NodeKind, NodeSpec, MAX_GRAPH_EDGES, MAX_GRAPH_NODES};
 use crate::signal::window::Window;
 use crate::stream::{StreamKind, StreamSpec};
 
@@ -67,7 +77,13 @@ pub const MAGIC: [u8; 4] = *b"FFTN";
 /// v3 added the fixed-point plane: dtype tags `i16`/`i32` and the
 /// compact quantized `OK` body those dtypes use — a v2 peer would
 /// misparse the integer payload as f64 samples, hence the bump.
-pub const VERSION: u16 = 3;
+///
+/// v4 added the graph plane: request ops `GRAPH_OPEN` / `GRAPH_CHUNK`
+/// / `GRAPH_SUBSCRIBE` / `GRAPH_CLOSE`, the `PUBLISH` response status,
+/// and the overlap-save FFT block-length override in `STREAM_OPEN`'s
+/// previously-zero `frame` field — new tags and a repurposed
+/// must-be-zero field, hence the bump.
+pub const VERSION: u16 = 4;
 /// Fixed header size in bytes.
 pub const HEADER_LEN: usize = 28;
 /// Upper bound on a frame payload: 64 MiB = 4 Mi complex f64 samples.
@@ -96,12 +112,24 @@ pub const STATUS_ERROR: u8 = 2;
 /// / `STREAM_CLOSE`): session id, cumulative pass count, the running
 /// a-priori bound, and the emitted payload.
 pub const STATUS_STREAM: u8 = 3;
+/// A graph-plane response ([`PublishReply`], protocol v4): answers
+/// every `GRAPH_*` op (ack sub-kind) and carries published sink
+/// frames to subscribers (data/eos sub-kinds), each tagged with the
+/// sink node id, publish sequence number, composed pass count and
+/// running path bound.
+pub const STATUS_PUBLISH: u8 = 4;
 
 /// Request op tags of the streaming plane (the one-shot FFT ops own
 /// tags 0–2 via [`FftOp`]).
 pub const OP_STREAM_OPEN: u8 = 3;
 pub const OP_STREAM_CHUNK: u8 = 4;
 pub const OP_STREAM_CLOSE: u8 = 5;
+
+/// Request op tags of the graph plane (protocol v4).
+pub const OP_GRAPH_OPEN: u8 = 6;
+pub const OP_GRAPH_CHUNK: u8 = 7;
+pub const OP_GRAPH_SUBSCRIBE: u8 = 8;
+pub const OP_GRAPH_CLOSE: u8 = 9;
 
 /// One decoded request frame: id + plan selection + planar payload.
 #[derive(Clone, Debug, PartialEq)]
@@ -127,6 +155,18 @@ pub enum RequestFrame {
     StreamChunk { id: u64, session: u64, re: Vec<f64>, im: Vec<f64> },
     /// Flush and close a session.
     StreamClose { id: u64, session: u64 },
+    /// Open a pipeline graph (protocol v4); the spec's dtype/strategy
+    /// ride the header bytes, the topology the body.  The decoder
+    /// structurally validates the topology — a cyclic, duplicated or
+    /// oversized graph never reaches the registry.
+    GraphOpen { id: u64, spec: GraphSpec },
+    /// Feed one ingest chunk into an open graph.
+    GraphChunk { id: u64, graph: u64, re: Vec<f64>, im: Vec<f64> },
+    /// Attach this connection to sink topic `node` of `graph`;
+    /// published frames answer `id` until eos.
+    GraphSubscribe { id: u64, graph: u64, node: u32 },
+    /// Flush every node's tail and close a graph.
+    GraphClose { id: u64, graph: u64 },
 }
 
 /// One decoded response frame.
@@ -150,6 +190,48 @@ pub enum Response {
     Error { id: u64, dtype: DType, message: String },
     /// A streaming-plane result (`STATUS_STREAM`).
     Stream(StreamReply),
+    /// A graph-plane result (`STATUS_PUBLISH`, protocol v4): op acks
+    /// and published sink frames share one shape.
+    Publish(PublishReply),
+}
+
+/// Sub-kind of a `STATUS_PUBLISH` frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PublishKind {
+    /// Answers a `GRAPH_*` publisher op (open/chunk/close/subscribe
+    /// accepted); carries graph-wide totals, no payload for
+    /// open/subscribe.
+    Ack,
+    /// One published sink frame delivered to a subscriber.
+    Data,
+    /// The terminal frame of a sink topic — the subscription is over.
+    Eos,
+}
+
+/// The body of a `STATUS_PUBLISH` response.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PublishReply {
+    /// Correlation id: the publisher op's id for acks, the
+    /// subscriber's `GRAPH_SUBSCRIBE` id for data/eos frames.
+    pub id: u64,
+    /// Working precision of the graph.
+    pub dtype: DType,
+    /// Server-assigned graph id.
+    pub graph: u64,
+    pub kind: PublishKind,
+    /// Sink node id (the topic) for data/eos; 0 for acks.
+    pub node: u32,
+    /// Per-sink publish sequence number (gaps = lag-drops) for
+    /// data/eos; the graph's chunk count for acks.
+    pub seq: u64,
+    /// Composed butterfly passes: along the sink's source→sink path
+    /// for data/eos, across the whole graph for acks.
+    pub passes: u64,
+    /// Running composed a-priori bound at `passes` (NaN on the wire
+    /// encodes `None`).
+    pub bound: Option<f64>,
+    pub re: Vec<f64>,
+    pub im: Vec<f64>,
 }
 
 /// The body of a `STATUS_STREAM` response: the session's identity and
@@ -183,6 +265,7 @@ impl Response {
                 *id
             }
             Response::Stream(s) => s.id,
+            Response::Publish(p) => p.id,
         }
     }
 }
@@ -291,6 +374,42 @@ fn window_from(code: u32) -> FftResult<Window> {
         2 => Ok(Window::Hamming),
         3 => Ok(Window::Blackman),
         other => Err(FftError::Protocol(format!("unknown window tag {other}"))),
+    }
+}
+
+/// Graph node-kind tag (`PROTOCOL.md` §Graphs).  The payload each
+/// kind packs into the per-node `a`/`b`/`c`/`extra` fields is fixed by
+/// the kind; unused fields MUST be zero/empty on the wire.
+fn node_kind_tag(kind: &NodeKind) -> u32 {
+    match kind {
+        NodeKind::Source => 0,
+        NodeKind::Sink => 1,
+        NodeKind::Window { .. } => 2,
+        NodeKind::Fft => 3,
+        NodeKind::Ols { .. } => 4,
+        NodeKind::Stft { .. } => 5,
+        NodeKind::MatchedFilter { .. } => 6,
+        NodeKind::Detrend => 7,
+        NodeKind::Magnitude => 8,
+        NodeKind::Decimate { .. } => 9,
+        NodeKind::Summary => 10,
+    }
+}
+
+fn publish_kind_code(k: PublishKind) -> u32 {
+    match k {
+        PublishKind::Ack => 0,
+        PublishKind::Data => 1,
+        PublishKind::Eos => 2,
+    }
+}
+
+fn publish_kind_from(code: u32) -> FftResult<PublishKind> {
+    match code {
+        0 => Ok(PublishKind::Ack),
+        1 => Ok(PublishKind::Data),
+        2 => Ok(PublishKind::Eos),
+        other => Err(FftError::Protocol(format!("unknown publish kind tag {other}"))),
     }
 }
 
@@ -478,7 +597,19 @@ pub fn encode_stream_open(id: u64, spec: &StreamSpec) -> FftResult<Vec<u8>> {
             "stft stream-open frames carry no taps payload".into(),
         ));
     }
-    let (frame, hop) = (spec.frame, spec.hop);
+    if spec.kind == StreamKind::Stft && spec.fft_len.is_some() {
+        return Err(FftError::Protocol(
+            "stft stream-open frames carry no fft block override (the frame IS the FFT size)"
+                .into(),
+        ));
+    }
+    // v4: an OLS spec's `frame` is always 0, so the wire field carries
+    // the optional FFT block-length override instead (0 = auto-size).
+    let frame = match spec.kind {
+        StreamKind::Ols => spec.fft_len.unwrap_or(0),
+        StreamKind::Stft => spec.frame,
+    };
+    let hop = spec.hop;
     if frame > u32::MAX as usize || hop > u32::MAX as usize {
         return Err(FftError::Protocol(format!(
             "stream frame/hop {frame}/{hop} exceed the u32 wire field"
@@ -561,6 +692,167 @@ pub fn write_stream_close<W: Write>(w: &mut W, id: u64, session: u64) -> FftResu
         .map_err(|e| io_err("writing stream-close frame", &e))
 }
 
+/// Encode one `GRAPH_OPEN` request frame (protocol v4).  The spec's
+/// dtype/strategy ride the header; the body carries the topology:
+///
+/// ```text
+/// frame u32 | node_count u32
+///   per node: id u32 | kind u32 | a u32 | b u32 | c u32
+///             | extra u32 (count of f64s) | extra f64s
+/// edge_count u32
+///   per edge: from u32 | to u32
+/// ```
+///
+/// `a`/`b`/`c` are kind-specific scalars (window tag; OLS fft-len
+/// override; STFT frame/hop/window; decimate factor) and `extra` is
+/// the planar taps/pulse payload — unused fields MUST be zero/empty.
+/// The encoder does NOT validate the topology (both the decoder and
+/// the registry do), so tests can exercise adversarial frames; it
+/// refuses only payloads the body layout cannot represent.
+pub fn encode_graph_open(id: u64, spec: &GraphSpec) -> FftResult<Vec<u8>> {
+    let field = |v: usize, what: &str| -> FftResult<u32> {
+        u32::try_from(v).map_err(|_| {
+            FftError::Protocol(format!("graph {what} {v} exceeds the u32 wire field"))
+        })
+    };
+    let mut body: Vec<u8> = Vec::new();
+    body.extend_from_slice(&field(spec.frame, "ingest frame")?.to_le_bytes());
+    body.extend_from_slice(&field(spec.nodes.len(), "node count")?.to_le_bytes());
+    for n in &spec.nodes {
+        let (a, b, c, xre, xim): (u32, u32, u32, &[f64], &[f64]) = match &n.kind {
+            NodeKind::Source
+            | NodeKind::Sink
+            | NodeKind::Fft
+            | NodeKind::Detrend
+            | NodeKind::Magnitude
+            | NodeKind::Summary => (0, 0, 0, &[], &[]),
+            NodeKind::Window { window } => (window_code(*window), 0, 0, &[], &[]),
+            NodeKind::Ols { taps_re, taps_im, fft_len } => (
+                field(fft_len.unwrap_or(0), "ols fft-len override")?,
+                0,
+                0,
+                taps_re,
+                taps_im,
+            ),
+            NodeKind::Stft { frame, hop, window } => (
+                field(*frame, "stft frame")?,
+                field(*hop, "stft hop")?,
+                window_code(*window),
+                &[],
+                &[],
+            ),
+            NodeKind::MatchedFilter { pulse_re, pulse_im } => (0, 0, 0, pulse_re, pulse_im),
+            NodeKind::Decimate { factor } => (field(*factor, "decimate factor")?, 0, 0, &[], &[]),
+        };
+        if xre.len() != xim.len() {
+            // A ragged plane pair has no wire representation (the
+            // decoder splits the extra payload in half).
+            return Err(FftError::Protocol(format!(
+                "graph node {} has ragged taps/pulse planes ({} re, {} im)",
+                n.id,
+                xre.len(),
+                xim.len()
+            )));
+        }
+        body.extend_from_slice(&n.id.to_le_bytes());
+        body.extend_from_slice(&node_kind_tag(&n.kind).to_le_bytes());
+        body.extend_from_slice(&a.to_le_bytes());
+        body.extend_from_slice(&b.to_le_bytes());
+        body.extend_from_slice(&c.to_le_bytes());
+        body.extend_from_slice(&field(xre.len() + xim.len(), "node payload")?.to_le_bytes());
+        put_f64s(&mut body, xre);
+        put_f64s(&mut body, xim);
+    }
+    body.extend_from_slice(&field(spec.edges.len(), "edge count")?.to_le_bytes());
+    for (from, to) in &spec.edges {
+        body.extend_from_slice(&from.to_le_bytes());
+        body.extend_from_slice(&to.to_le_bytes());
+    }
+    let body_len = check_body_len(body.len())?;
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+    out.extend_from_slice(&encode_header(
+        KIND_REQUEST,
+        OP_GRAPH_OPEN,
+        strategy_code(spec.strategy),
+        dtype_code(spec.dtype),
+        id,
+        body_len,
+    ));
+    out.extend_from_slice(&body);
+    Ok(out)
+}
+
+/// Write one `GRAPH_OPEN` request frame.
+pub fn write_graph_open<W: Write>(w: &mut W, id: u64, spec: &GraphSpec) -> FftResult<()> {
+    w.write_all(&encode_graph_open(id, spec)?)
+        .map_err(|e| io_err("writing graph-open frame", &e))
+}
+
+/// Encode one `GRAPH_CHUNK` request frame from borrowed payload
+/// slices (strategy/dtype header bytes are 0 — the graph fixed both
+/// at open).
+pub fn encode_graph_chunk_parts(
+    id: u64,
+    graph: u64,
+    re: &[f64],
+    im: &[f64],
+) -> FftResult<Vec<u8>> {
+    check_planar(re, im)?;
+    let body_len = check_body_len(8 + (re.len() + im.len()) * 8)?;
+    let mut out = Vec::with_capacity(HEADER_LEN + body_len as usize);
+    out.extend_from_slice(&encode_header(KIND_REQUEST, OP_GRAPH_CHUNK, 0, 0, id, body_len));
+    out.extend_from_slice(&graph.to_le_bytes());
+    put_f64s(&mut out, re);
+    put_f64s(&mut out, im);
+    Ok(out)
+}
+
+/// Write one `GRAPH_CHUNK` request frame.
+pub fn write_graph_chunk_parts<W: Write>(
+    w: &mut W,
+    id: u64,
+    graph: u64,
+    re: &[f64],
+    im: &[f64],
+) -> FftResult<()> {
+    w.write_all(&encode_graph_chunk_parts(id, graph, re, im)?)
+        .map_err(|e| io_err("writing graph-chunk frame", &e))
+}
+
+/// Encode one `GRAPH_SUBSCRIBE` request frame.
+pub fn encode_graph_subscribe(id: u64, graph: u64, node: u32) -> FftResult<Vec<u8>> {
+    let mut out = Vec::with_capacity(HEADER_LEN + 12);
+    out.extend_from_slice(&encode_header(KIND_REQUEST, OP_GRAPH_SUBSCRIBE, 0, 0, id, 12));
+    out.extend_from_slice(&graph.to_le_bytes());
+    out.extend_from_slice(&node.to_le_bytes());
+    Ok(out)
+}
+
+/// Write one `GRAPH_SUBSCRIBE` request frame.
+pub fn write_graph_subscribe<W: Write>(
+    w: &mut W,
+    id: u64,
+    graph: u64,
+    node: u32,
+) -> FftResult<()> {
+    w.write_all(&encode_graph_subscribe(id, graph, node)?)
+        .map_err(|e| io_err("writing graph-subscribe frame", &e))
+}
+
+/// Encode one `GRAPH_CLOSE` request frame.
+pub fn encode_graph_close(id: u64, graph: u64) -> FftResult<Vec<u8>> {
+    let mut out = Vec::with_capacity(HEADER_LEN + 8);
+    out.extend_from_slice(&encode_header(KIND_REQUEST, OP_GRAPH_CLOSE, 0, 0, id, 8));
+    out.extend_from_slice(&graph.to_le_bytes());
+    Ok(out)
+}
+
+/// Write one `GRAPH_CLOSE` request frame.
+pub fn write_graph_close<W: Write>(w: &mut W, id: u64, graph: u64) -> FftResult<()> {
+    w.write_all(&encode_graph_close(id, graph)?)
+        .map_err(|e| io_err("writing graph-close frame", &e))
+}
+
 /// Encode one response frame into bytes.  Errors when an `Ok` frame's
 /// `re`/`im` lengths differ.
 pub fn encode_response(resp: &Response) -> FftResult<Vec<u8>> {
@@ -626,7 +918,58 @@ pub fn encode_response(resp: &Response) -> FftResult<Vec<u8>> {
             )?;
             Ok(out)
         }
+        Response::Publish(p) => {
+            let mut out = Vec::new();
+            write_publish_parts(
+                &mut out, p.id, p.dtype, p.graph, p.kind, p.node, p.seq, p.passes, p.bound,
+                &p.re, &p.im,
+            )?;
+            Ok(out)
+        }
     }
+}
+
+/// Stream one `STATUS_PUBLISH` response straight from borrowed
+/// payload slices — the graph plane's per-frame hot path
+/// (byte-identical to [`encode_response`] of the equivalent
+/// [`Response::Publish`]).  Body layout: `graph u64 | kind u32 | node
+/// u32 | seq u64 | passes u64 | bound f64 | n_re u32 | n_im u32 |
+/// payload f64s`.
+#[allow(clippy::too_many_arguments)]
+pub fn write_publish_parts<W: Write>(
+    w: &mut W,
+    id: u64,
+    dtype: DType,
+    graph: u64,
+    kind: PublishKind,
+    node: u32,
+    seq: u64,
+    passes: u64,
+    bound: Option<f64>,
+    re: &[f64],
+    im: &[f64],
+) -> FftResult<()> {
+    // No planar-length constraint: publish frames carry explicit
+    // per-plane counts (power-plane sinks ride `re` alone).
+    let io = |e: std::io::Error| io_err("writing publish response frame", &e);
+    let body_len = check_body_len(48 + (re.len() + im.len()) * 8)?;
+    let header = encode_header(KIND_RESPONSE, STATUS_PUBLISH, 0, dtype_code(dtype), id, body_len);
+    w.write_all(&header).map_err(io)?;
+    w.write_all(&graph.to_le_bytes()).map_err(io)?;
+    w.write_all(&publish_kind_code(kind).to_le_bytes()).map_err(io)?;
+    w.write_all(&node.to_le_bytes()).map_err(io)?;
+    w.write_all(&seq.to_le_bytes()).map_err(io)?;
+    w.write_all(&passes.to_le_bytes()).map_err(io)?;
+    w.write_all(&bound.unwrap_or(f64::NAN).to_le_bytes()).map_err(io)?;
+    w.write_all(&(re.len() as u32).to_le_bytes()).map_err(io)?;
+    w.write_all(&(im.len() as u32).to_le_bytes()).map_err(io)?;
+    for &x in re {
+        w.write_all(&x.to_le_bytes()).map_err(io)?;
+    }
+    for &x in im {
+        w.write_all(&x.to_le_bytes()).map_err(io)?;
+    }
+    Ok(())
 }
 
 /// Stream one `STATUS_STREAM` response straight from borrowed payload
@@ -812,6 +1155,153 @@ fn decode_fixed_ok(id: u64, dtype: DType, body: &[u8]) -> FftResult<Response> {
     })
 }
 
+/// Take `n` bytes off the front of `b`, or a typed truncation error.
+fn take<'a>(b: &mut &'a [u8], n: usize, what: &str) -> FftResult<&'a [u8]> {
+    if b.len() < n {
+        return Err(FftError::Protocol(format!(
+            "graph-open body truncated reading {what} ({} of {n} bytes)",
+            b.len()
+        )));
+    }
+    let (head, rest) = b.split_at(n);
+    *b = rest;
+    Ok(head)
+}
+
+fn take_u32(b: &mut &[u8], what: &str) -> FftResult<u32> {
+    Ok(u32::from_le_bytes(take(b, 4, what)?.try_into().unwrap()))
+}
+
+/// Decode a `GRAPH_OPEN` body into a structurally validated
+/// [`GraphSpec`].  Every malformation — truncation, unknown kind
+/// tags, nonzero must-be-zero fields, odd/oversized payloads,
+/// duplicate node ids, cycles — is a typed [`FftError::Protocol`]:
+/// adversarial topologies never reach the registry.
+fn decode_graph_open(
+    id: u64,
+    dtype: DType,
+    strategy: Strategy,
+    body: &[u8],
+) -> FftResult<RequestFrame> {
+    let mut b = body;
+    let frame = take_u32(&mut b, "ingest frame")? as usize;
+    let node_count = take_u32(&mut b, "node count")? as usize;
+    if node_count > MAX_GRAPH_NODES {
+        return Err(FftError::Protocol(format!(
+            "oversized topology: {node_count} nodes exceed the {MAX_GRAPH_NODES}-node limit"
+        )));
+    }
+    let mut spec = GraphSpec::new(dtype, strategy, frame);
+    for _ in 0..node_count {
+        let nid = take_u32(&mut b, "node id")?;
+        let tag = take_u32(&mut b, "node kind")?;
+        let a = take_u32(&mut b, "node field a")?;
+        let bf = take_u32(&mut b, "node field b")?;
+        let c = take_u32(&mut b, "node field c")?;
+        let extra_n = take_u32(&mut b, "node payload count")? as usize;
+        if extra_n % 2 != 0 {
+            return Err(FftError::Protocol(format!(
+                "graph node {nid} payload count {extra_n} is not planar (even)"
+            )));
+        }
+        let extra = take(&mut b, extra_n * 8, "node payload")?;
+        let half = extra.len() / 2;
+        let zeros = |fields: &[(u32, &str)]| -> FftResult<()> {
+            for &(v, name) in fields {
+                if v != 0 {
+                    return Err(FftError::Protocol(format!(
+                        "graph node {nid} (kind tag {tag}) requires a zero {name} field, got {v}"
+                    )));
+                }
+            }
+            Ok(())
+        };
+        let no_payload = || -> FftResult<()> {
+            if extra_n != 0 {
+                return Err(FftError::Protocol(format!(
+                    "graph node {nid} (kind tag {tag}) carries no f64 payload, got {extra_n}"
+                )));
+            }
+            Ok(())
+        };
+        let kind = match tag {
+            0 | 1 | 3 | 7 | 8 | 10 => {
+                zeros(&[(a, "a"), (bf, "b"), (c, "c")])?;
+                no_payload()?;
+                match tag {
+                    0 => NodeKind::Source,
+                    1 => NodeKind::Sink,
+                    3 => NodeKind::Fft,
+                    7 => NodeKind::Detrend,
+                    8 => NodeKind::Magnitude,
+                    _ => NodeKind::Summary,
+                }
+            }
+            2 => {
+                zeros(&[(bf, "b"), (c, "c")])?;
+                no_payload()?;
+                NodeKind::Window { window: window_from(a)? }
+            }
+            4 => {
+                zeros(&[(bf, "b"), (c, "c")])?;
+                NodeKind::Ols {
+                    taps_re: get_f64s(&extra[..half]),
+                    taps_im: get_f64s(&extra[half..]),
+                    fft_len: (a > 0).then_some(a as usize),
+                }
+            }
+            5 => {
+                no_payload()?;
+                NodeKind::Stft {
+                    frame: a as usize,
+                    hop: bf as usize,
+                    window: window_from(c)?,
+                }
+            }
+            6 => {
+                zeros(&[(a, "a"), (bf, "b"), (c, "c")])?;
+                NodeKind::MatchedFilter {
+                    pulse_re: get_f64s(&extra[..half]),
+                    pulse_im: get_f64s(&extra[half..]),
+                }
+            }
+            9 => {
+                zeros(&[(bf, "b"), (c, "c")])?;
+                no_payload()?;
+                NodeKind::Decimate { factor: a as usize }
+            }
+            other => {
+                return Err(FftError::Protocol(format!(
+                    "unknown graph node kind tag {other}"
+                )))
+            }
+        };
+        spec = spec.node(nid, kind);
+    }
+    let edge_count = take_u32(&mut b, "edge count")? as usize;
+    if edge_count > MAX_GRAPH_EDGES {
+        return Err(FftError::Protocol(format!(
+            "oversized topology: {edge_count} edges exceed the {MAX_GRAPH_EDGES}-edge limit"
+        )));
+    }
+    for _ in 0..edge_count {
+        let from = take_u32(&mut b, "edge from")?;
+        let to = take_u32(&mut b, "edge to")?;
+        spec = spec.edge(from, to);
+    }
+    if !b.is_empty() {
+        return Err(FftError::Protocol(format!(
+            "graph-open body has {} trailing bytes after the topology",
+            b.len()
+        )));
+    }
+    // Structural validation (single source, acyclic, duplicate ids,
+    // caps) — hostile topologies die here, typed, before the
+    // registry ever sees them.
+    spec.validate()?;
+    Ok(RequestFrame::GraphOpen { id, spec })
+}
+
 /// Read one request frame of ANY op — one-shot FFT or streaming-plane
 /// (`fftd`'s read path); `Ok(None)` on clean EOF.
 pub fn read_request_frame<R: Read>(r: &mut R) -> FftResult<Option<RequestFrame>> {
@@ -844,6 +1334,12 @@ pub fn read_request_frame<R: Read>(r: &mut R) -> FftResult<Option<RequestFrame>>
                 ));
             }
             let half = 16 + (body.len() - 16) / 2;
+            // v4: the frame field doubles as the OLS FFT block-length
+            // override (OLS sessions have no ingest frame).
+            let (frame, fft_len) = match kind {
+                StreamKind::Ols => (0, (frame > 0).then_some(frame)),
+                StreamKind::Stft => (frame, None),
+            };
             Ok(Some(RequestFrame::StreamOpen {
                 id: h.id,
                 spec: StreamSpec {
@@ -855,6 +1351,7 @@ pub fn read_request_frame<R: Read>(r: &mut R) -> FftResult<Option<RequestFrame>>
                     window,
                     taps_re: get_f64s(&body[16..half]),
                     taps_im: get_f64s(&body[half..]),
+                    fft_len,
                 },
             }))
         }
@@ -886,6 +1383,56 @@ pub fn read_request_frame<R: Read>(r: &mut R) -> FftResult<Option<RequestFrame>>
             Ok(Some(RequestFrame::StreamClose {
                 id: h.id,
                 session: u64::from_le_bytes(body[0..8].try_into().unwrap()),
+            }))
+        }
+        OP_GRAPH_OPEN => {
+            let strategy = strategy_from(h.strategy)?;
+            let dtype = dtype_from(h.dtype)?;
+            let body = read_body(r, h.body_len)?;
+            Ok(Some(decode_graph_open(h.id, dtype, strategy, &body)?))
+        }
+        OP_GRAPH_CHUNK => {
+            let body = read_body(r, h.body_len)?;
+            if body.len() < 8 || (body.len() - 8) % 16 != 0 {
+                return Err(FftError::Protocol(format!(
+                    "graph-chunk body length {} is not graph + complex f64 samples",
+                    body.len()
+                )));
+            }
+            let graph = u64::from_le_bytes(body[0..8].try_into().unwrap());
+            let half = 8 + (body.len() - 8) / 2;
+            Ok(Some(RequestFrame::GraphChunk {
+                id: h.id,
+                graph,
+                re: get_f64s(&body[8..half]),
+                im: get_f64s(&body[half..]),
+            }))
+        }
+        OP_GRAPH_SUBSCRIBE => {
+            let body = read_body(r, h.body_len)?;
+            if body.len() != 12 {
+                return Err(FftError::Protocol(format!(
+                    "graph-subscribe body length {} (expected 12)",
+                    body.len()
+                )));
+            }
+            Ok(Some(RequestFrame::GraphSubscribe {
+                id: h.id,
+                graph: u64::from_le_bytes(body[0..8].try_into().unwrap()),
+                node: u32::from_le_bytes(body[8..12].try_into().unwrap()),
+            }))
+        }
+        OP_GRAPH_CLOSE => {
+            let body = read_body(r, h.body_len)?;
+            if body.len() != 8 {
+                return Err(FftError::Protocol(format!(
+                    "graph-close body length {} (expected 8)",
+                    body.len()
+                )));
+            }
+            Ok(Some(RequestFrame::GraphClose {
+                id: h.id,
+                graph: u64::from_le_bytes(body[0..8].try_into().unwrap()),
             }))
         }
         code => {
@@ -920,7 +1467,7 @@ pub fn read_request<R: Read>(r: &mut R) -> FftResult<Option<Request>> {
         None => Ok(None),
         Some(RequestFrame::Fft(req)) => Ok(Some(req)),
         Some(_) => Err(FftError::Protocol(
-            "stream frame on the one-shot request path".into(),
+            "stream/graph frame on the one-shot request path".into(),
         )),
     }
 }
@@ -1011,6 +1558,43 @@ pub fn read_response<R: Read>(r: &mut R) -> FftResult<Option<Response>> {
                 im: get_f64s(&body[re_end..]),
             })))
         }
+        STATUS_PUBLISH => {
+            let dtype = dtype_from(h.dtype)?;
+            if body.len() < 48 || (body.len() - 48) % 8 != 0 {
+                return Err(FftError::Protocol(format!(
+                    "publish-response body length {} is not state + f64 payload",
+                    body.len()
+                )));
+            }
+            let graph = u64::from_le_bytes(body[0..8].try_into().unwrap());
+            let kind = publish_kind_from(u32::from_le_bytes(body[8..12].try_into().unwrap()))?;
+            let node = u32::from_le_bytes(body[12..16].try_into().unwrap());
+            let seq = u64::from_le_bytes(body[16..24].try_into().unwrap());
+            let passes = u64::from_le_bytes(body[24..32].try_into().unwrap());
+            let bound = f64::from_le_bytes(body[32..40].try_into().unwrap());
+            let bound = if bound.is_nan() { None } else { Some(bound) };
+            let n_re = u32::from_le_bytes(body[40..44].try_into().unwrap()) as usize;
+            let n_im = u32::from_le_bytes(body[44..48].try_into().unwrap()) as usize;
+            if n_re.checked_add(n_im).and_then(|n| n.checked_mul(8)) != Some(body.len() - 48) {
+                return Err(FftError::Protocol(format!(
+                    "publish-response plane counts {n_re}+{n_im} disagree with body length {}",
+                    body.len()
+                )));
+            }
+            let re_end = 48 + n_re * 8;
+            Ok(Some(Response::Publish(PublishReply {
+                id: h.id,
+                dtype,
+                graph,
+                kind,
+                node,
+                seq,
+                passes,
+                bound,
+                re: get_f64s(&body[48..re_end]),
+                im: get_f64s(&body[re_end..]),
+            })))
+        }
         other => Err(FftError::Protocol(format!(
             "unknown response status {other}"
         ))),
@@ -1072,10 +1656,43 @@ mod tests {
         assert_eq!(window_code(Window::Blackman), 3);
         assert_eq!(STATUS_STREAM, 3);
         assert_eq!(&MAGIC, b"FFTN");
-        // v3: the fixed-point plane (i16/i32 dtype tags + the compact
-        // quantized OK body) — v2 peers must get a clean version error,
-        // never misparse integer codes as f64 samples.
-        assert_eq!(VERSION, 3);
+        // v4: the graph plane.
+        assert_eq!(OP_GRAPH_OPEN, 6);
+        assert_eq!(OP_GRAPH_CHUNK, 7);
+        assert_eq!(OP_GRAPH_SUBSCRIBE, 8);
+        assert_eq!(OP_GRAPH_CLOSE, 9);
+        assert_eq!(STATUS_PUBLISH, 4);
+        assert_eq!(publish_kind_code(PublishKind::Ack), 0);
+        assert_eq!(publish_kind_code(PublishKind::Data), 1);
+        assert_eq!(publish_kind_code(PublishKind::Eos), 2);
+        assert_eq!(node_kind_tag(&NodeKind::Source), 0);
+        assert_eq!(node_kind_tag(&NodeKind::Sink), 1);
+        assert_eq!(node_kind_tag(&NodeKind::Window { window: Window::Hann }), 2);
+        assert_eq!(node_kind_tag(&NodeKind::Fft), 3);
+        assert_eq!(
+            node_kind_tag(&NodeKind::Ols {
+                taps_re: vec![],
+                taps_im: vec![],
+                fft_len: None
+            }),
+            4
+        );
+        assert_eq!(
+            node_kind_tag(&NodeKind::Stft { frame: 8, hop: 4, window: Window::Rect }),
+            5
+        );
+        assert_eq!(
+            node_kind_tag(&NodeKind::MatchedFilter { pulse_re: vec![], pulse_im: vec![] }),
+            6
+        );
+        assert_eq!(node_kind_tag(&NodeKind::Detrend), 7);
+        assert_eq!(node_kind_tag(&NodeKind::Magnitude), 8);
+        assert_eq!(node_kind_tag(&NodeKind::Decimate { factor: 2 }), 9);
+        assert_eq!(node_kind_tag(&NodeKind::Summary), 10);
+        // v4: the graph plane (GRAPH_* ops, the PUBLISH status, and the
+        // STREAM_OPEN frame-field override) — v3 peers must get a
+        // clean version error, never misparse a topology body.
+        assert_eq!(VERSION, 4);
     }
 
     #[test]
@@ -1377,5 +1994,249 @@ mod tests {
         assert_eq!(parsed.body_len, 160);
         assert_eq!(parsed.strategy, 3);
         assert_eq!(parsed.dtype, 1);
+    }
+
+    #[test]
+    fn stream_open_carries_the_ols_fft_len_override() {
+        // Some(128) rides the frame field and decodes back.
+        let spec = StreamSpec::ols(DType::F32, Strategy::DualSelect, vec![1.0], vec![0.0])
+            .with_fft_len(128);
+        let bytes = encode_stream_open(1, &spec).unwrap();
+        match read_request_frame(&mut &bytes[..]).unwrap().unwrap() {
+            RequestFrame::StreamOpen { spec: got, .. } => {
+                assert_eq!(got.fft_len, Some(128));
+                assert_eq!(got.frame, 0);
+                assert_eq!(got, spec);
+            }
+            other => panic!("expected stream-open, got {other:?}"),
+        }
+        // An STFT spec with an override has no wire representation.
+        let mut bad = StreamSpec::stft(DType::F32, Strategy::DualSelect, 64, 32, Window::Hann);
+        bad.fft_len = Some(128);
+        assert!(matches!(
+            encode_stream_open(1, &bad).unwrap_err(),
+            FftError::Protocol(_)
+        ));
+    }
+
+    fn demo_graph() -> GraphSpec {
+        GraphSpec::new(DType::F16, Strategy::DualSelect, 64)
+            .node(1, NodeKind::Source)
+            .node(2, NodeKind::Window { window: Window::Hann })
+            .node(3, NodeKind::Fft)
+            .node(4, NodeKind::Magnitude)
+            .node(5, NodeKind::Sink)
+            .node(6, NodeKind::MatchedFilter { pulse_re: vec![1.0, 0.5], pulse_im: vec![0.0, -0.5] })
+            .node(7, NodeKind::Sink)
+            .edge(1, 2)
+            .edge(2, 3)
+            .edge(3, 4)
+            .edge(4, 5)
+            .edge(1, 6)
+            .edge(6, 7)
+    }
+
+    #[test]
+    fn graph_frames_roundtrip() {
+        let spec = demo_graph();
+        let bytes = encode_graph_open(31, &spec).unwrap();
+        match read_request_frame(&mut &bytes[..]).unwrap().unwrap() {
+            RequestFrame::GraphOpen { id, spec: got } => {
+                assert_eq!(id, 31);
+                assert_eq!(got, spec);
+            }
+            other => panic!("expected graph-open, got {other:?}"),
+        }
+        // Every node kind survives the trip (ragged-free linear chain).
+        let all_kinds = GraphSpec::new(DType::F64, Strategy::DualSelect, 16)
+            .node(0, NodeKind::Source)
+            .node(1, NodeKind::Detrend)
+            .node(
+                2,
+                NodeKind::Ols { taps_re: vec![1.0, 2.0], taps_im: vec![0.0, 1.0], fft_len: Some(64) },
+            )
+            .node(3, NodeKind::Decimate { factor: 3 })
+            .node(4, NodeKind::Stft { frame: 32, hop: 16, window: Window::Blackman })
+            .node(5, NodeKind::Summary)
+            .node(6, NodeKind::Sink)
+            .edge(0, 1)
+            .edge(1, 2)
+            .edge(2, 3)
+            .edge(3, 4)
+            .edge(4, 5)
+            .edge(5, 6);
+        let bytes = encode_graph_open(32, &all_kinds).unwrap();
+        match read_request_frame(&mut &bytes[..]).unwrap().unwrap() {
+            RequestFrame::GraphOpen { spec: got, .. } => assert_eq!(got, all_kinds),
+            other => panic!("expected graph-open, got {other:?}"),
+        }
+        // Chunk / subscribe / close.
+        let bytes = encode_graph_chunk_parts(33, 9, &[1.0, 2.0], &[3.0, 4.0]).unwrap();
+        match read_request_frame(&mut &bytes[..]).unwrap().unwrap() {
+            RequestFrame::GraphChunk { id, graph, re, im } => {
+                assert_eq!((id, graph), (33, 9));
+                assert_eq!((re, im), (vec![1.0, 2.0], vec![3.0, 4.0]));
+            }
+            other => panic!("expected graph-chunk, got {other:?}"),
+        }
+        let bytes = encode_graph_subscribe(34, 9, 5).unwrap();
+        match read_request_frame(&mut &bytes[..]).unwrap().unwrap() {
+            RequestFrame::GraphSubscribe { id, graph, node } => {
+                assert_eq!((id, graph, node), (34, 9, 5))
+            }
+            other => panic!("expected graph-subscribe, got {other:?}"),
+        }
+        let bytes = encode_graph_close(35, 9).unwrap();
+        match read_request_frame(&mut &bytes[..]).unwrap().unwrap() {
+            RequestFrame::GraphClose { id, graph } => assert_eq!((id, graph), (35, 9)),
+            other => panic!("expected graph-close, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn publish_reply_roundtrips_and_streams_identically() {
+        for (kind, bound, re, im) in [
+            (PublishKind::Ack, Some(1e-3), Vec::new(), Vec::new()),
+            (PublishKind::Data, Some(2.5e-2), vec![1.0, 2.0], vec![3.0, 4.0]),
+            (PublishKind::Data, None, vec![0.5; 6], Vec::new()), // power plane
+            (PublishKind::Eos, Some(4e-2), Vec::new(), Vec::new()),
+        ] {
+            let reply = PublishReply {
+                id: 55,
+                dtype: DType::F16,
+                graph: 3,
+                kind,
+                node: 7,
+                seq: 12,
+                passes: 360,
+                bound,
+                re,
+                im,
+            };
+            let staged = encode_response(&Response::Publish(reply.clone())).unwrap();
+            let mut streamed = Vec::new();
+            write_publish_parts(
+                &mut streamed,
+                reply.id,
+                reply.dtype,
+                reply.graph,
+                reply.kind,
+                reply.node,
+                reply.seq,
+                reply.passes,
+                reply.bound,
+                &reply.re,
+                &reply.im,
+            )
+            .unwrap();
+            assert_eq!(streamed, staged);
+            match read_response(&mut &staged[..]).unwrap().unwrap() {
+                Response::Publish(got) => assert_eq!(got, reply),
+                other => panic!("expected publish reply, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_graph_frames_are_typed_errors() {
+        let protocol = |bytes: Vec<u8>| {
+            let err = read_request_frame(&mut &bytes[..]).unwrap_err();
+            assert!(matches!(err, FftError::Protocol(_)), "{err:?}");
+        };
+        // Truncated topology body (node count promises more).
+        let good = encode_graph_open(1, &demo_graph()).unwrap();
+        let mut bytes = good[..HEADER_LEN].to_vec();
+        let body = &good[HEADER_LEN..HEADER_LEN + 12];
+        bytes[..HEADER_LEN].copy_from_slice(&encode_header(
+            KIND_REQUEST,
+            OP_GRAPH_OPEN,
+            3,
+            1,
+            1,
+            12,
+        ));
+        bytes.extend_from_slice(body);
+        protocol(bytes);
+        // Cyclic topology: decodes structurally, dies in validate().
+        let cyclic = GraphSpec::new(DType::F32, Strategy::DualSelect, 16)
+            .node(1, NodeKind::Source)
+            .node(2, NodeKind::Detrend)
+            .node(3, NodeKind::Detrend)
+            .node(4, NodeKind::Sink)
+            .edge(1, 2)
+            .edge(2, 3)
+            .edge(3, 2)
+            .edge(3, 4);
+        protocol(encode_graph_open(1, &cyclic).unwrap());
+        // Duplicate node ids.
+        let dup = GraphSpec::new(DType::F32, Strategy::DualSelect, 16)
+            .node(1, NodeKind::Source)
+            .node(1, NodeKind::Sink)
+            .edge(1, 1);
+        protocol(encode_graph_open(1, &dup).unwrap());
+        // Unknown node kind tag (patch the source node's tag field).
+        let mut bytes = encode_graph_open(1, &demo_graph()).unwrap();
+        bytes[HEADER_LEN + 12] = 99; // first node: id u32, then kind u32
+        protocol(bytes);
+        // Oversized topology: node count over the cap.
+        let mut big = GraphSpec::new(DType::F32, Strategy::DualSelect, 16)
+            .node(0, NodeKind::Source);
+        for i in 1..=(MAX_GRAPH_NODES as u32) {
+            big = big.node(i, NodeKind::Detrend).edge(i - 1, i);
+        }
+        protocol(encode_graph_open(1, &big).unwrap());
+        // Nonzero must-be-zero field (patch the source node's a field).
+        let mut bytes = encode_graph_open(1, &demo_graph()).unwrap();
+        bytes[HEADER_LEN + 16] = 7;
+        protocol(bytes);
+        // Graph-chunk body too short / ragged.
+        let h = encode_header(KIND_REQUEST, OP_GRAPH_CHUNK, 0, 0, 1, 12);
+        let mut bytes = h.to_vec();
+        bytes.extend_from_slice(&[0u8; 12]);
+        protocol(bytes);
+        assert!(encode_graph_chunk_parts(1, 1, &[1.0, 2.0], &[3.0]).is_err());
+        // Graph-subscribe body of the wrong size.
+        let h = encode_header(KIND_REQUEST, OP_GRAPH_SUBSCRIBE, 0, 0, 1, 8);
+        let mut bytes = h.to_vec();
+        bytes.extend_from_slice(&[0u8; 8]);
+        protocol(bytes);
+        // Publish reply whose plane counts disagree with the body.
+        let reply = PublishReply {
+            id: 1,
+            dtype: DType::F32,
+            graph: 1,
+            kind: PublishKind::Data,
+            node: 2,
+            seq: 1,
+            passes: 6,
+            bound: None,
+            re: vec![1.0, 2.0],
+            im: Vec::new(),
+        };
+        let mut bytes = encode_response(&Response::Publish(reply)).unwrap();
+        bytes[HEADER_LEN + 40] = 9; // n_re
+        assert!(matches!(
+            read_response(&mut &bytes[..]).unwrap_err(),
+            FftError::Protocol(_)
+        ));
+        // Unknown publish sub-kind tag.
+        let reply = PublishReply {
+            id: 1,
+            dtype: DType::F32,
+            graph: 1,
+            kind: PublishKind::Ack,
+            node: 0,
+            seq: 0,
+            passes: 0,
+            bound: None,
+            re: Vec::new(),
+            im: Vec::new(),
+        };
+        let mut bytes = encode_response(&Response::Publish(reply)).unwrap();
+        bytes[HEADER_LEN + 8] = 9; // kind tag
+        assert!(matches!(
+            read_response(&mut &bytes[..]).unwrap_err(),
+            FftError::Protocol(_)
+        ));
     }
 }

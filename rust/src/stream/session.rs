@@ -84,6 +84,13 @@ pub struct StreamSpec {
     /// OLS: FIR taps, planar f64 (empty for STFT).
     pub taps_re: Vec<f64>,
     pub taps_im: Vec<f64>,
+    /// OLS: optional FFT block-length override (`None` = the ~4L
+    /// auto-size heuristic).  Must be a power of two ≥ 2L−1 so one
+    /// block still holds a full overlap plus at least one valid
+    /// output sample; anything else is a typed error at open.  The
+    /// future autotuning planner drives this knob.  Rejected for STFT
+    /// sessions (the frame *is* the FFT size there).
+    pub fft_len: Option<usize>,
 }
 
 impl StreamSpec {
@@ -98,7 +105,15 @@ impl StreamSpec {
             window: Window::Rect,
             taps_re,
             taps_im,
+            fft_len: None,
         }
+    }
+
+    /// Override the OLS FFT block length (builder style; see
+    /// [`StreamSpec::fft_len`]).
+    pub fn with_fft_len(mut self, fft_len: usize) -> Self {
+        self.fft_len = Some(fft_len);
+        self
     }
 
     /// A streaming STFT session.
@@ -118,8 +133,30 @@ impl StreamSpec {
             window,
             taps_re: Vec::new(),
             taps_im: Vec::new(),
+            fft_len: None,
         }
     }
+}
+
+/// Validate an explicit OLS FFT block override: a power of two big
+/// enough that one block holds the `L−1` overlap plus at least one
+/// valid output sample (`≥ 2L−1`, and never below 2).  Shared by the
+/// stream and graph planes.
+pub(crate) fn check_ols_fft_len(fft_len: usize, taps: usize) -> FftResult<()> {
+    if !fft_len.is_power_of_two() {
+        return Err(FftError::InvalidSize {
+            n: fft_len,
+            reason: "overlap-save FFT block override must be a power of two",
+        });
+    }
+    let min = (2 * taps).saturating_sub(1).max(2);
+    if fft_len < min {
+        return Err(FftError::InvalidSize {
+            n: fft_len,
+            reason: "overlap-save FFT block override must be at least 2·taps − 1",
+        });
+    }
+    Ok(())
 }
 
 /// One streamed result: what `open`/`chunk`/`close` return and the
@@ -189,8 +226,11 @@ pub const MAX_STREAM_OUT_F64S: usize = 1 << 22;
 
 /// The per-dtype overlap-save engines (float [`OlsFilter`] and
 /// fixed-point [`FixedOlsFilter`]) plus the dtype-erased STFT.
+/// `pub(crate)` so the graph plane ([`crate::graph`]) can wrap the
+/// exact same engines — graph node output is bit-identical to stream
+/// sessions by construction, not by parallel implementation.
 #[derive(Debug)]
-enum Engine {
+pub(crate) enum Engine {
     OlsF64(OlsFilter<f64>),
     OlsF32(OlsFilter<f32>),
     OlsBf16(OlsFilter<Bf16>),
@@ -218,144 +258,142 @@ macro_rules! on_engine {
 }
 
 impl Engine {
-    fn build(spec: &StreamSpec) -> FftResult<Engine> {
+    pub(crate) fn build(spec: &StreamSpec) -> FftResult<Engine> {
         match spec.kind {
-            StreamKind::Ols => Ok(match spec.dtype {
-                DType::F64 => Engine::OlsF64(OlsFilter::new(
-                    &Planner::new(),
-                    spec.strategy,
-                    &spec.taps_re,
-                    &spec.taps_im,
-                )?),
-                DType::F32 => Engine::OlsF32(OlsFilter::new(
-                    &Planner::new(),
-                    spec.strategy,
-                    &spec.taps_re,
-                    &spec.taps_im,
-                )?),
-                DType::Bf16 => Engine::OlsBf16(OlsFilter::new(
-                    &Planner::new(),
-                    spec.strategy,
-                    &spec.taps_re,
-                    &spec.taps_im,
-                )?),
-                DType::F16 => Engine::OlsF16(OlsFilter::new(
-                    &Planner::new(),
-                    spec.strategy,
-                    &spec.taps_re,
-                    &spec.taps_im,
-                )?),
+            StreamKind::Ols => {
+                if let Some(n) = spec.fft_len {
+                    check_ols_fft_len(n, spec.taps_re.len())?;
+                }
+                fn float<T: crate::precision::Real>(spec: &StreamSpec) -> FftResult<OlsFilter<T>> {
+                    let planner = Planner::new();
+                    match spec.fft_len {
+                        Some(n) => OlsFilter::with_fft_len(
+                            &planner,
+                            spec.strategy,
+                            &spec.taps_re,
+                            &spec.taps_im,
+                            n,
+                        ),
+                        None => {
+                            OlsFilter::new(&planner, spec.strategy, &spec.taps_re, &spec.taps_im)
+                        }
+                    }
+                }
                 // Fixed-point sessions run the quantized kernels; a
                 // non-representable strategy (Linzer–Feig, cosine)
                 // fails the open with the typed table error.
-                DType::I16 => Engine::OlsI16(FixedOlsFilter::new(
-                    spec.strategy,
-                    &spec.taps_re,
-                    &spec.taps_im,
-                )?),
-                DType::I32 => Engine::OlsI32(FixedOlsFilter::new(
-                    spec.strategy,
-                    &spec.taps_re,
-                    &spec.taps_im,
-                )?),
-            }),
-            StreamKind::Stft => Ok(Engine::Stft(Box::new(StftStream::new(StftStreamConfig {
-                frame: spec.frame,
-                hop: spec.hop,
-                window: spec.window,
-                strategy: spec.strategy,
-                dtype: spec.dtype,
-            })?))),
+                fn fixed<Q: crate::fixed::QSample>(
+                    spec: &StreamSpec,
+                ) -> FftResult<FixedOlsFilter<Q>> {
+                    match spec.fft_len {
+                        Some(n) => FixedOlsFilter::with_fft_len(
+                            spec.strategy,
+                            &spec.taps_re,
+                            &spec.taps_im,
+                            n,
+                        ),
+                        None => {
+                            FixedOlsFilter::new(spec.strategy, &spec.taps_re, &spec.taps_im)
+                        }
+                    }
+                }
+                Ok(match spec.dtype {
+                    DType::F64 => Engine::OlsF64(float(spec)?),
+                    DType::F32 => Engine::OlsF32(float(spec)?),
+                    DType::Bf16 => Engine::OlsBf16(float(spec)?),
+                    DType::F16 => Engine::OlsF16(float(spec)?),
+                    DType::I16 => Engine::OlsI16(fixed(spec)?),
+                    DType::I32 => Engine::OlsI32(fixed(spec)?),
+                })
+            }
+            StreamKind::Stft => {
+                if spec.fft_len.is_some() {
+                    return Err(FftError::InvalidArgument(
+                        "fft block override applies to overlap-save sessions only; \
+                         an stft session's frame is its FFT size"
+                            .into(),
+                    ));
+                }
+                Ok(Engine::Stft(Box::new(StftStream::new(StftStreamConfig {
+                    frame: spec.frame,
+                    hop: spec.hop,
+                    window: spec.window,
+                    strategy: spec.strategy,
+                    dtype: spec.dtype,
+                })?)))
+            }
         }
     }
 
-    fn fft_len(&self) -> usize {
+    pub(crate) fn fft_len(&self) -> usize {
         on_engine!(self, ols f => f.fft_len(), stft s => s.frame_len())
     }
 
-    fn passes(&self) -> u64 {
+    pub(crate) fn passes(&self) -> u64 {
         on_engine!(self, ols f => f.fft_passes(), stft s => s.fft_passes())
     }
 
-    fn bound(&self) -> Option<f64> {
+    pub(crate) fn bound(&self) -> Option<f64> {
         on_engine!(self, ols f => f.bound(), stft s => s.bound())
     }
 
     /// Worst-case f64 payload values a `chunk_len`-sample chunk can
     /// emit (both planes for OLS, the power plane for STFT).
-    fn worst_case_payload(&self, chunk_len: usize) -> usize {
+    pub(crate) fn worst_case_payload(&self, chunk_len: usize) -> usize {
         on_engine!(self, ols f => 2 * f.worst_case_out(chunk_len),
                    stft s => s.worst_case_out(chunk_len))
     }
 
-    fn chunk(&mut self, re: &[f64], im: &[f64]) -> FftResult<(Vec<f64>, Vec<f64>)> {
+    /// Feed one chunk, appending whatever the engine emits to
+    /// caller-held output vectors (alloc-free after warmup — the
+    /// graph plane's hot path).
+    pub(crate) fn chunk_into(
+        &mut self,
+        re: &[f64],
+        im: &[f64],
+        out_re: &mut Vec<f64>,
+        out_im: &mut Vec<f64>,
+    ) -> FftResult<()> {
         match self {
-            Engine::OlsF64(f) => ols_chunk(f, re, im),
-            Engine::OlsF32(f) => ols_chunk(f, re, im),
-            Engine::OlsBf16(f) => ols_chunk(f, re, im),
-            Engine::OlsF16(f) => ols_chunk(f, re, im),
-            Engine::OlsI16(f) => ols_fixed_chunk(f, re, im),
-            Engine::OlsI32(f) => ols_fixed_chunk(f, re, im),
-            Engine::Stft(s) => {
-                let mut power = Vec::new();
-                s.push(re, im, &mut power)?;
-                Ok((power, Vec::new()))
-            }
+            Engine::OlsF64(f) => f.push(re, im, out_re, out_im).map(|_| ()),
+            Engine::OlsF32(f) => f.push(re, im, out_re, out_im).map(|_| ()),
+            Engine::OlsBf16(f) => f.push(re, im, out_re, out_im).map(|_| ()),
+            Engine::OlsF16(f) => f.push(re, im, out_re, out_im).map(|_| ()),
+            Engine::OlsI16(f) => f.push(re, im, out_re, out_im).map(|_| ()),
+            Engine::OlsI32(f) => f.push(re, im, out_re, out_im).map(|_| ()),
+            Engine::Stft(s) => s.push(re, im, out_re).map(|_| ()),
         }
+    }
+
+    /// Flush the engine's tail, appending like [`Engine::chunk_into`].
+    pub(crate) fn finish_into(
+        &mut self,
+        out_re: &mut Vec<f64>,
+        out_im: &mut Vec<f64>,
+    ) -> FftResult<()> {
+        match self {
+            Engine::OlsF64(f) => f.finish(out_re, out_im).map(|_| ()),
+            Engine::OlsF32(f) => f.finish(out_re, out_im).map(|_| ()),
+            Engine::OlsBf16(f) => f.finish(out_re, out_im).map(|_| ()),
+            Engine::OlsF16(f) => f.finish(out_re, out_im).map(|_| ()),
+            Engine::OlsI16(f) => f.finish(out_re, out_im).map(|_| ()),
+            Engine::OlsI32(f) => f.finish(out_re, out_im).map(|_| ()),
+            // A partial STFT frame is never a column; nothing to flush.
+            Engine::Stft(_) => Ok(()),
+        }
+    }
+
+    fn chunk(&mut self, re: &[f64], im: &[f64]) -> FftResult<(Vec<f64>, Vec<f64>)> {
+        let (mut out_re, mut out_im) = (Vec::new(), Vec::new());
+        self.chunk_into(re, im, &mut out_re, &mut out_im)?;
+        Ok((out_re, out_im))
     }
 
     fn finish(&mut self) -> FftResult<(Vec<f64>, Vec<f64>)> {
-        match self {
-            Engine::OlsF64(f) => ols_finish(f),
-            Engine::OlsF32(f) => ols_finish(f),
-            Engine::OlsBf16(f) => ols_finish(f),
-            Engine::OlsF16(f) => ols_finish(f),
-            Engine::OlsI16(f) => ols_fixed_finish(f),
-            Engine::OlsI32(f) => ols_fixed_finish(f),
-            // A partial STFT frame is never a column; nothing to flush.
-            Engine::Stft(_) => Ok((Vec::new(), Vec::new())),
-        }
+        let (mut out_re, mut out_im) = (Vec::new(), Vec::new());
+        self.finish_into(&mut out_re, &mut out_im)?;
+        Ok((out_re, out_im))
     }
-}
-
-fn ols_chunk<T: crate::precision::Real>(
-    f: &mut OlsFilter<T>,
-    re: &[f64],
-    im: &[f64],
-) -> FftResult<(Vec<f64>, Vec<f64>)> {
-    let mut out_re = Vec::new();
-    let mut out_im = Vec::new();
-    f.push(re, im, &mut out_re, &mut out_im)?;
-    Ok((out_re, out_im))
-}
-
-fn ols_finish<T: crate::precision::Real>(
-    f: &mut OlsFilter<T>,
-) -> FftResult<(Vec<f64>, Vec<f64>)> {
-    let mut out_re = Vec::new();
-    let mut out_im = Vec::new();
-    f.finish(&mut out_re, &mut out_im)?;
-    Ok((out_re, out_im))
-}
-
-fn ols_fixed_chunk<Q: crate::fixed::QSample>(
-    f: &mut FixedOlsFilter<Q>,
-    re: &[f64],
-    im: &[f64],
-) -> FftResult<(Vec<f64>, Vec<f64>)> {
-    let mut out_re = Vec::new();
-    let mut out_im = Vec::new();
-    f.push(re, im, &mut out_re, &mut out_im)?;
-    Ok((out_re, out_im))
-}
-
-fn ols_fixed_finish<Q: crate::fixed::QSample>(
-    f: &mut FixedOlsFilter<Q>,
-) -> FftResult<(Vec<f64>, Vec<f64>)> {
-    let mut out_re = Vec::new();
-    let mut out_im = Vec::new();
-    f.finish(&mut out_re, &mut out_im)?;
-    Ok((out_re, out_im))
 }
 
 /// One open stream session.
@@ -477,6 +515,19 @@ impl SessionRegistry {
                 spec.taps_re.len(),
                 self.cfg.max_taps
             )));
+        }
+        if spec.kind == StreamKind::Ols {
+            if let Some(n) = spec.fft_len {
+                // Same ceiling the auto-sizer can reach at max_taps, so
+                // the override cannot demand larger allocations than an
+                // ordinary open already could.
+                let max = (4 * self.cfg.max_taps).next_power_of_two();
+                if n > max {
+                    return Err(FftError::InvalidArgument(format!(
+                        "fft block override {n} exceeds the {max}-sample limit"
+                    )));
+                }
+            }
         }
         if spec.kind == StreamKind::Stft && spec.frame > self.cfg.max_stft_frame {
             return Err(FftError::InvalidArgument(format!(
@@ -793,6 +844,86 @@ mod tests {
             reg.chunk(s.session, &[0.0; 2], &[0.0; 3]).unwrap_err(),
             FftError::LengthMismatch { .. }
         ));
+    }
+
+    #[test]
+    fn fft_len_override_is_validated_and_bit_identical() {
+        let reg = SessionRegistry::default();
+        let (hr, hi) = noise(8, 90);
+        let (xr, xi) = noise(300, 91);
+        // A forced-block session is bit-identical to driving a filter
+        // built with the same override directly.
+        {
+            let forced = reg
+                .open(
+                    &StreamSpec::ols(DType::F32, Strategy::DualSelect, hr.clone(), hi.clone())
+                        .with_fft_len(128),
+                )
+                .unwrap();
+            assert_eq!(forced.fft_len, 128);
+            let out = reg.chunk(forced.session, &xr, &xi).unwrap();
+            let fin = reg.close(forced.session).unwrap();
+            let mut direct = OlsFilter::<f32>::with_fft_len(
+                &Planner::new(),
+                Strategy::DualSelect,
+                &hr,
+                &hi,
+                128,
+            )
+            .unwrap();
+            let (mut dr, mut di) = (Vec::new(), Vec::new());
+            direct.push(&xr, &xi, &mut dr, &mut di).unwrap();
+            direct.finish(&mut dr, &mut di).unwrap();
+            let got: Vec<f64> = out.re.iter().chain(&fin.re).copied().collect();
+            assert_eq!(got, dr, "forced-block session diverged from the direct filter");
+        }
+        {
+            let forced = reg
+                .open(
+                    &StreamSpec::ols(DType::I16, Strategy::DualSelect, hr.clone(), hi.clone())
+                        .with_fft_len(64),
+                )
+                .unwrap();
+            assert_eq!(forced.fft_len, 64);
+            let out = reg.chunk(forced.session, &xr, &xi).unwrap();
+            let fin = reg.close(forced.session).unwrap();
+            let mut direct = FixedOlsFilter::<i16>::with_fft_len(
+                Strategy::DualSelect,
+                &hr,
+                &hi,
+                64,
+            )
+            .unwrap();
+            let (mut dr, mut di) = (Vec::new(), Vec::new());
+            direct.push(&xr, &xi, &mut dr, &mut di).unwrap();
+            direct.finish(&mut dr, &mut di).unwrap();
+            let got: Vec<f64> = out.re.iter().chain(&fin.re).copied().collect();
+            assert_eq!(got, dr, "forced-block Q15 session diverged from the direct filter");
+        }
+        // Non-power-of-two and too-small overrides are typed errors
+        // that release the reservation.
+        for bad in [48usize, 8] {
+            let err = reg
+                .open(
+                    &StreamSpec::ols(DType::F32, Strategy::DualSelect, hr.clone(), hi.clone())
+                        .with_fft_len(bad),
+                )
+                .unwrap_err();
+            assert!(matches!(err, FftError::InvalidSize { .. }), "{bad}: {err:?}");
+        }
+        // STFT sessions reject the knob outright.
+        let mut spec = StreamSpec::stft(DType::F32, Strategy::DualSelect, 64, 32, Window::Hann);
+        spec.fft_len = Some(128);
+        assert!(matches!(reg.open(&spec).unwrap_err(), FftError::InvalidArgument(_)));
+        // Oversized overrides hit the registry cap before any build.
+        let err = reg
+            .open(
+                &StreamSpec::ols(DType::F32, Strategy::DualSelect, hr.clone(), hi.clone())
+                    .with_fft_len(1 << 30),
+            )
+            .unwrap_err();
+        assert!(matches!(err, FftError::InvalidArgument(_)), "{err:?}");
+        assert_eq!(reg.open_sessions(), 0);
     }
 
     #[test]

@@ -206,8 +206,12 @@ impl StftStream {
                     _ => None,
                 };
             }
-            let (gr, gi) = self.arena.frame_f64(0);
-            out_power.extend(gr.iter().zip(&gi).map(|(&r, &i)| r * r + i * i));
+            // Widen the spectrum back into the (now free) window
+            // staging — no per-column allocation.
+            self.wre.clear();
+            self.wim.clear();
+            self.arena.frame_f64_into(0, &mut self.wre, &mut self.wim);
+            out_power.extend(self.wre.iter().zip(&self.wim).map(|(&r, &i)| r * r + i * i));
             self.cols += 1;
             emitted += 1;
             self.debt = self.cfg.hop;

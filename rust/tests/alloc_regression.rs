@@ -5,7 +5,8 @@
 //! block-floating-point scaling buffers must come from the pooled
 //! `FixedScratch`), through both the typed (`Transform::execute_many`)
 //! and the dtype-erased (`AnyTransform::execute_many_any`) entry
-//! points.
+//! points.  The graph plane's execute path (`GraphRegistry::chunk`
+//! into a reused `GraphOut`) is held to the same bar.
 //!
 //! This test binary installs a counting global allocator, so it
 //! contains exactly one `#[test]` (parallel tests in the same binary
@@ -19,9 +20,11 @@ use fmafft::fft::{
     AnyArena, AnyArenaPool, AnyPlanner, AnyScratch, AnyTransform, DType, Direction, FrameArena,
     PlanSpec, Planner, Scratch, Strategy, Transform,
 };
+use fmafft::graph::{GraphOut, GraphRegistry, GraphSpec, NodeKind};
 use fmafft::precision::Real;
 use fmafft::signal::chirp::default_chirp;
 use fmafft::signal::pulse::MatchedFilter;
+use fmafft::signal::window::Window;
 use fmafft::util::prng::Pcg32;
 
 struct CountingAlloc;
@@ -206,4 +209,56 @@ fn worker_hot_path_allocates_zero_after_warmup() {
         pool.recycle(Arc::new(reused));
     }
     assert_eq!(pool.parked(), DType::ALL.len());
+
+    // 4. The graph execute path: a fanned-out pipeline (window→fft→
+    //    magnitude plus the cheap detrend/summary branches) driven
+    //    through a reused `GraphOut`.  `fill_out` hands sink payloads
+    //    over by buffer swap, so staging and output capacities
+    //    circulate: after two chunks both vector sets have been
+    //    through a fill and steady-state chunks must be alloc-free.
+    let reg = GraphRegistry::default();
+    let spec = GraphSpec::new(DType::F32, Strategy::DualSelect, n)
+        .node(1, NodeKind::Source)
+        .node(2, NodeKind::Window { window: Window::Hann })
+        .node(3, NodeKind::Fft)
+        .node(4, NodeKind::Magnitude)
+        .node(5, NodeKind::Sink)
+        .node(6, NodeKind::Detrend)
+        .node(7, NodeKind::Sink)
+        .node(8, NodeKind::Summary)
+        .node(9, NodeKind::Sink)
+        .edge(1, 2)
+        .edge(2, 3)
+        .edge(3, 4)
+        .edge(4, 5)
+        .edge(1, 6)
+        .edge(6, 7)
+        .edge(1, 8)
+        .edge(8, 9);
+    let opened = reg.open(&spec).unwrap();
+    let graph = opened.graph;
+    let mut gout = GraphOut::default();
+
+    // Warmup: node scratch/arena pools, per-edge staging buffers and
+    // both halves of the swapped sink buffers all reach capacity here.
+    for _ in 0..3 {
+        reg.chunk(graph, &re, &im, &mut gout).unwrap();
+    }
+
+    let before = allocations();
+    for _ in 0..4 {
+        reg.chunk(graph, &re, &im, &mut gout).unwrap();
+    }
+    let after = allocations();
+    assert_eq!(
+        after - before,
+        0,
+        "graph execute path allocated {} times after warmup",
+        after - before
+    );
+    assert_eq!(gout.chunks, 7);
+    assert_eq!(gout.sinks.len(), 3);
+    let mut fc = GraphOut::default();
+    reg.close(graph, &mut fc).unwrap();
+    assert!(fc.sinks.iter().all(|s| s.eos));
 }

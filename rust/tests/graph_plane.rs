@@ -1,0 +1,506 @@
+//! In-process integration tests for the pipeline-graph plane
+//! (`fft::graph`): open/chunk/close semantics, per-node bit-identity
+//! against the direct engines in every dtype, composed running bounds,
+//! the `fft_len` override shared with the stream plane, pub/sub
+//! fan-out backpressure, and the coordinator metrics gauges.
+
+use std::sync::{Arc, Mutex};
+
+use fmafft::coordinator::Metrics;
+use fmafft::fft::{AnyArena, AnyScratch, DType, FftError, PlanSpec, Planner, Strategy};
+use fmafft::graph::{
+    GraphConfig, GraphOut, GraphPublish, GraphRegistry, GraphSpec, NodeKind, PublishSink, SinkOut,
+    Subscription,
+};
+use fmafft::precision::{Real, SplitBuf, F16};
+use fmafft::signal::pulse::MatchedFilter;
+use fmafft::signal::window::Window;
+use fmafft::stream::{SessionRegistry, StreamConfig, StreamSpec};
+use fmafft::util::metrics::rel_l2;
+use fmafft::util::prng::Pcg32;
+
+const ALL_DTYPES: [DType; 6] =
+    [DType::F64, DType::F32, DType::Bf16, DType::F16, DType::I16, DType::I32];
+
+fn noise(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Pcg32::seed(seed);
+    ((0..n).map(|_| rng.gaussian()).collect(), (0..n).map(|_| rng.gaussian()).collect())
+}
+
+fn sink<'a>(out: &'a GraphOut, node: u32) -> &'a SinkOut {
+    out.sinks.iter().find(|s| s.node == node).expect("sink present")
+}
+
+/// Collects delivered frames; releases its delivery slot instantly.
+struct VecSink(Arc<Mutex<Vec<Arc<GraphPublish>>>>);
+
+impl PublishSink for VecSink {
+    fn deliver(&self, sub: &Arc<Subscription>, frame: &Arc<GraphPublish>) -> bool {
+        self.0.lock().unwrap().push(Arc::clone(frame));
+        sub.complete_delivery();
+        true
+    }
+}
+
+/// Accepts deliveries but never drains its backpressure window.
+struct StuckSink;
+
+impl PublishSink for StuckSink {
+    fn deliver(&self, _sub: &Arc<Subscription>, _frame: &Arc<GraphPublish>) -> bool {
+        true
+    }
+}
+
+#[test]
+fn fft_node_is_bit_identical_to_the_direct_plan_in_every_dtype() {
+    let n = 32;
+    for dtype in ALL_DTYPES {
+        let reg = GraphRegistry::default();
+        let opened = reg
+            .open(
+                &GraphSpec::new(dtype, Strategy::DualSelect, n)
+                    .node(1, NodeKind::Source)
+                    .node(2, NodeKind::Fft)
+                    .node(3, NodeKind::Sink)
+                    .edge(1, 2)
+                    .edge(2, 3),
+            )
+            .unwrap();
+        let transform =
+            PlanSpec::new(n).strategy(Strategy::DualSelect).dtype(dtype).build_any().unwrap();
+        let mut arena = AnyArena::new(dtype, n);
+        let mut scratch = AnyScratch::new();
+        let mut out = GraphOut::default();
+        for seed in 0..3u64 {
+            let (re, im) = noise(n, seed);
+            reg.chunk(opened.graph, &re, &im, &mut out).unwrap();
+            arena.reset(n);
+            arena.push_frame_f64(&re, &im);
+            transform.execute_frame_any(&mut arena, 0, &mut scratch).unwrap();
+            let (dr, di) = arena.frame_f64(0);
+            let s = sink(&out, 3);
+            assert_eq!(s.re, dr, "{dtype}: graph FFT must be bit-identical");
+            assert_eq!(s.im, di, "{dtype}: graph FFT must be bit-identical");
+            assert!(s.bound.is_some(), "{dtype}: every FFT sink frame carries a bound");
+        }
+        reg.close(opened.graph, &mut out).unwrap();
+    }
+}
+
+#[test]
+fn ols_fft_len_override_matches_the_stream_plane_bit_for_bit() {
+    let (hr, hi) = noise(7, 3);
+    // Auto-sizing would pick 16 (2·7−1 = 13 → next pow2); force 64.
+    let fft_len = 64usize;
+    for dtype in [DType::F32, DType::I16] {
+        let graphs = GraphRegistry::default();
+        let opened = graphs
+            .open(
+                &GraphSpec::new(dtype, Strategy::DualSelect, 0)
+                    .node(1, NodeKind::Source)
+                    .node(
+                        2,
+                        NodeKind::Ols {
+                            taps_re: hr.clone(),
+                            taps_im: hi.clone(),
+                            fft_len: Some(fft_len),
+                        },
+                    )
+                    .node(3, NodeKind::Sink)
+                    .edge(1, 2)
+                    .edge(2, 3),
+            )
+            .unwrap();
+        let sessions = SessionRegistry::new(StreamConfig::default());
+        let stream = sessions
+            .open(
+                &StreamSpec::ols(dtype, Strategy::DualSelect, hr.clone(), hi.clone())
+                    .with_fft_len(fft_len),
+            )
+            .unwrap();
+        assert_eq!(stream.fft_len, fft_len, "override must stick in the stream plane");
+        assert_eq!(
+            opened.passes, stream.passes,
+            "{dtype}: taps-spectrum passes must match at open"
+        );
+        assert_eq!(opened.bound, stream.bound);
+
+        let mut out = GraphOut::default();
+        for (i, len) in [17usize, 1, 32, 9].into_iter().enumerate() {
+            let (re, im) = noise(len, 100 + i as u64);
+            graphs.chunk(opened.graph, &re, &im, &mut out).unwrap();
+            let so = sessions.chunk(stream.session, &re, &im).unwrap();
+            let s = sink(&out, 3);
+            assert_eq!(s.re, so.re, "{dtype}: graph OLS must be bit-identical");
+            assert_eq!(s.im, so.im, "{dtype}: graph OLS must be bit-identical");
+            assert_eq!(s.passes, so.passes, "{dtype}: composed passes = engine passes");
+            assert_eq!(s.bound, so.bound, "{dtype}: composed bound = engine bound");
+        }
+        graphs.close(opened.graph, &mut out).unwrap();
+        let so = sessions.close(stream.session).unwrap();
+        let s = sink(&out, 3);
+        assert!(s.eos);
+        assert_eq!(s.re, so.re, "{dtype}: close tails must match");
+        assert_eq!(s.im, so.im);
+    }
+}
+
+#[test]
+fn invalid_ols_fft_len_overrides_are_rejected_at_open() {
+    let (hr, hi) = noise(8, 5);
+    let open_with = |fft_len: Option<usize>, cfg: GraphConfig| {
+        GraphRegistry::new(cfg).open(
+            &GraphSpec::new(DType::F32, Strategy::DualSelect, 0)
+                .node(1, NodeKind::Source)
+                .node(2, NodeKind::Ols { taps_re: hr.clone(), taps_im: hi.clone(), fft_len })
+                .node(3, NodeKind::Sink)
+                .edge(1, 2)
+                .edge(2, 3),
+        )
+    };
+    // 2L−1 = 15: 8 is too small, 24 is not a power of two.
+    assert!(matches!(
+        open_with(Some(8), GraphConfig::default()).unwrap_err(),
+        FftError::InvalidArgument(_)
+    ));
+    assert!(matches!(
+        open_with(Some(24), GraphConfig::default()).unwrap_err(),
+        FftError::InvalidArgument(_)
+    ));
+    // Over the registry's (4·max_taps) pow2 ceiling.
+    let small = GraphConfig { max_taps: 16, ..Default::default() };
+    assert!(matches!(open_with(Some(128), small).unwrap_err(), FftError::InvalidArgument(_)));
+    assert!(open_with(Some(64), small).is_ok());
+    assert!(open_with(Some(32), GraphConfig::default()).is_ok());
+}
+
+#[test]
+fn stft_node_matches_the_stream_plane_bit_for_bit() {
+    let (frame, hop) = (16usize, 8usize);
+    let graphs = GraphRegistry::default();
+    let opened = graphs
+        .open(
+            &GraphSpec::new(DType::F32, Strategy::DualSelect, 0)
+                .node(1, NodeKind::Source)
+                .node(2, NodeKind::Stft { frame, hop, window: Window::Hann })
+                .node(3, NodeKind::Sink)
+                .edge(1, 2)
+                .edge(2, 3),
+        )
+        .unwrap();
+    let sessions = SessionRegistry::new(StreamConfig::default());
+    let stream = sessions
+        .open(&StreamSpec::stft(DType::F32, Strategy::DualSelect, frame, hop, Window::Hann))
+        .unwrap();
+    let mut out = GraphOut::default();
+    let mut graph_power = Vec::new();
+    let mut stream_power = Vec::new();
+    for (i, len) in [10usize, 30, 5, 20, 64].into_iter().enumerate() {
+        let (re, im) = noise(len, 40 + i as u64);
+        graphs.chunk(opened.graph, &re, &im, &mut out).unwrap();
+        let s = sink(&out, 3);
+        assert!(s.im.is_empty(), "STFT publishes a power plane");
+        graph_power.extend_from_slice(&s.re);
+        let so = sessions.chunk(stream.session, &re, &im).unwrap();
+        stream_power.extend_from_slice(&so.re);
+    }
+    graphs.close(opened.graph, &mut out).unwrap();
+    graph_power.extend_from_slice(&sink(&out, 3).re);
+    stream_power.extend_from_slice(&sessions.close(stream.session).unwrap().re);
+    assert!(!graph_power.is_empty(), "whole columns must have been emitted");
+    assert_eq!(graph_power, stream_power, "graph STFT must be bit-identical");
+}
+
+#[test]
+fn matched_filter_node_matches_direct_compression() {
+    fn direct<T: Real>(
+        n: usize,
+        pr: &[f64],
+        pi: &[f64],
+        frames: &[(Vec<f64>, Vec<f64>)],
+    ) -> Vec<(Vec<f64>, Vec<f64>)> {
+        let mf =
+            MatchedFilter::<T>::new(&Planner::new(), Strategy::DualSelect, n, pr, pi).unwrap();
+        let mut scratch = SplitBuf::zeroed(n);
+        frames
+            .iter()
+            .map(|(re, im)| {
+                let mut x = SplitBuf::<T>::from_f64(re, im);
+                mf.compress(&mut x, &mut scratch).unwrap();
+                x.to_f64()
+            })
+            .collect()
+    }
+    let n = 32usize;
+    let (pr, pi) = noise(5, 9);
+    let frames: Vec<(Vec<f64>, Vec<f64>)> = (0..4).map(|i| noise(n, 60 + i)).collect();
+    for dtype in [DType::F64, DType::F32, DType::F16] {
+        let reg = GraphRegistry::default();
+        let opened = reg
+            .open(
+                &GraphSpec::new(dtype, Strategy::DualSelect, n)
+                    .node(1, NodeKind::Source)
+                    .node(
+                        2,
+                        NodeKind::MatchedFilter { pulse_re: pr.clone(), pulse_im: pi.clone() },
+                    )
+                    .node(3, NodeKind::Sink)
+                    .edge(1, 2)
+                    .edge(2, 3),
+            )
+            .unwrap();
+        let want = match dtype {
+            DType::F64 => direct::<f64>(n, &pr, &pi, &frames),
+            DType::F32 => direct::<f32>(n, &pr, &pi, &frames),
+            DType::F16 => direct::<F16>(n, &pr, &pi, &frames),
+            _ => unreachable!(),
+        };
+        let mut out = GraphOut::default();
+        for ((re, im), (wr, wi)) in frames.iter().zip(&want) {
+            reg.chunk(opened.graph, re, im, &mut out).unwrap();
+            let s = sink(&out, 3);
+            assert_eq!(&s.re, wr, "{dtype}: matched filter must be bit-identical");
+            assert_eq!(&s.im, wi, "{dtype}: matched filter must be bit-identical");
+        }
+        reg.close(opened.graph, &mut out).unwrap();
+    }
+}
+
+#[test]
+fn half_precision_bounds_are_monotone_and_honored() {
+    let n = 64usize;
+    let chunks: Vec<(Vec<f64>, Vec<f64>)> = (0..5).map(|i| noise(n, 70 + i)).collect();
+    let spec = |dtype: DType| {
+        GraphSpec::new(dtype, Strategy::DualSelect, n)
+            .node(1, NodeKind::Source)
+            .node(2, NodeKind::Window { window: Window::Hann })
+            .node(3, NodeKind::Fft)
+            .node(4, NodeKind::Sink)
+            .edge(1, 2)
+            .edge(2, 3)
+            .edge(3, 4)
+    };
+    // f64 reference run of the SAME graph.
+    let reg = GraphRegistry::default();
+    let refg = reg.open(&spec(DType::F64)).unwrap();
+    let mut out = GraphOut::default();
+    let mut reference = Vec::new();
+    for (re, im) in &chunks {
+        reg.chunk(refg.graph, re, im, &mut out).unwrap();
+        let s = sink(&out, 4);
+        reference.push((s.re.clone(), s.im.clone()));
+    }
+    reg.close(refg.graph, &mut out).unwrap();
+
+    for dtype in [DType::F16, DType::Bf16] {
+        let opened = reg.open(&spec(dtype)).unwrap();
+        let mut last = opened.bound.expect("half-precision graphs carry a bound");
+        for ((re, im), (wr, wi)) in chunks.iter().zip(&reference) {
+            reg.chunk(opened.graph, re, im, &mut out).unwrap();
+            let s = sink(&out, 4);
+            let b = s.bound.expect("every sink frame carries the running bound");
+            assert!(b > last, "{dtype}: bound must grow with passes ({b} vs {last})");
+            last = b;
+            let err = rel_l2(&s.re, &s.im, wr, wi);
+            assert!(
+                err.is_finite() && err <= b,
+                "{dtype}: measured error {err:e} exceeds the a-priori bound {b:e}"
+            );
+        }
+        reg.close(opened.graph, &mut out).unwrap();
+    }
+}
+
+#[test]
+fn cheap_nodes_match_their_scalar_references_on_a_fanned_out_graph() {
+    // One source fanned to four independent branches, ragged chunks.
+    let reg = GraphRegistry::default();
+    let opened = reg
+        .open(
+            &GraphSpec::new(DType::F64, Strategy::DualSelect, 0)
+                .node(1, NodeKind::Source)
+                .node(2, NodeKind::Detrend)
+                .node(3, NodeKind::Sink)
+                .node(4, NodeKind::Decimate { factor: 3 })
+                .node(5, NodeKind::Sink)
+                .node(6, NodeKind::Summary)
+                .node(7, NodeKind::Sink)
+                .node(8, NodeKind::Magnitude)
+                .node(9, NodeKind::Sink)
+                .edge(1, 2)
+                .edge(2, 3)
+                .edge(1, 4)
+                .edge(4, 5)
+                .edge(1, 6)
+                .edge(6, 7)
+                .edge(1, 8)
+                .edge(8, 9),
+        )
+        .unwrap();
+    assert_eq!(opened.passes, 0, "cheap nodes execute no butterfly passes");
+    let mut out = GraphOut::default();
+    let mut phase = 0usize;
+    for (i, len) in [5usize, 7, 1, 12].into_iter().enumerate() {
+        let (re, im) = noise(len, 80 + i as u64);
+        reg.chunk(opened.graph, &re, &im, &mut out).unwrap();
+        // Detrend: complex mean removed per chunk.
+        let (mre, mim) =
+            (re.iter().sum::<f64>() / len as f64, im.iter().sum::<f64>() / len as f64);
+        let s = sink(&out, 3);
+        assert_eq!(s.re, re.iter().map(|&x| x - mre).collect::<Vec<_>>());
+        assert_eq!(s.im, im.iter().map(|&x| x - mim).collect::<Vec<_>>());
+        // Decimate: every 3rd GLOBAL sample — phase crosses chunks.
+        let mut dre = Vec::new();
+        let mut dim = Vec::new();
+        for j in 0..len {
+            if phase == 0 {
+                dre.push(re[j]);
+                dim.push(im[j]);
+            }
+            phase = (phase + 1) % 3;
+        }
+        let s = sink(&out, 5);
+        assert_eq!(s.re, dre, "decimation phase must be unobservable across chunks");
+        assert_eq!(s.im, dim);
+        // Summary: one 6-value stats frame per chunk.
+        let s = sink(&out, 7);
+        assert_eq!(s.re.len(), 6);
+        assert!(s.im.is_empty());
+        let powers: Vec<f64> =
+            re.iter().zip(&im).map(|(&r, &i)| r * r + i * i).collect();
+        let peak = powers.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(s.re[0], len as f64);
+        assert_eq!(s.re[1], mre);
+        assert_eq!(s.re[2], mim);
+        assert_eq!(s.re[4], peak);
+        assert_eq!(s.re[5] as usize, powers.iter().position(|&p| p == peak).unwrap());
+        // Magnitude: exact per-sample |x|² power plane.
+        let s = sink(&out, 9);
+        assert_eq!(s.re, powers);
+        assert!(s.im.is_empty());
+    }
+    reg.close(opened.graph, &mut out).unwrap();
+    assert!(out.sinks.iter().all(|s| s.eos), "close flags every sink eos");
+}
+
+#[test]
+fn chunk_shape_errors_and_caps_are_typed() {
+    let reg = GraphRegistry::new(GraphConfig { max_chunk: 16, ..Default::default() });
+    let opened = reg
+        .open(
+            &GraphSpec::new(DType::F64, Strategy::DualSelect, 0)
+                .node(1, NodeKind::Source)
+                .node(2, NodeKind::Detrend)
+                .node(3, NodeKind::Sink)
+                .edge(1, 2)
+                .edge(2, 3),
+        )
+        .unwrap();
+    let mut out = GraphOut::default();
+    assert!(matches!(
+        reg.chunk(opened.graph, &[0.0; 4], &[0.0; 3], &mut out).unwrap_err(),
+        FftError::LengthMismatch { .. }
+    ));
+    assert!(matches!(
+        reg.chunk(opened.graph, &[0.0; 17], &[0.0; 17], &mut out).unwrap_err(),
+        FftError::InvalidArgument(_)
+    ));
+    // A fixed-frame graph rejects mis-sized chunks.
+    let fixed = reg
+        .open(
+            &GraphSpec::new(DType::F64, Strategy::DualSelect, 8)
+                .node(1, NodeKind::Source)
+                .node(2, NodeKind::Magnitude)
+                .node(3, NodeKind::Sink)
+                .edge(1, 2)
+                .edge(2, 3),
+        )
+        .unwrap();
+    assert!(reg.chunk(fixed.graph, &[0.0; 4], &[0.0; 4], &mut out).is_err());
+    // Structural garbage never reaches the registry's build step.
+    assert!(matches!(
+        reg.open(
+            &GraphSpec::new(DType::F64, Strategy::DualSelect, 0)
+                .node(1, NodeKind::Source)
+                .node(2, NodeKind::Detrend)
+                .node(3, NodeKind::Sink)
+                .edge(1, 2)
+                .edge(2, 3)
+                .edge(3, 2)
+        )
+        .unwrap_err(),
+        FftError::Protocol(_)
+    ));
+}
+
+#[test]
+fn metrics_gauges_track_the_graph_lifecycle() {
+    let metrics = Arc::new(Metrics::new());
+    let reg = GraphRegistry::with_metrics(
+        GraphConfig { sub_queue: 1, ..Default::default() },
+        Arc::clone(&metrics),
+    );
+    let spec = GraphSpec::new(DType::F32, Strategy::DualSelect, 16)
+        .node(1, NodeKind::Source)
+        .node(2, NodeKind::Fft)
+        .node(3, NodeKind::Magnitude)
+        .node(4, NodeKind::Sink)
+        .edge(1, 2)
+        .edge(2, 3)
+        .edge(3, 4);
+    let a = reg.open(&spec).unwrap();
+    let b = reg.open(&spec).unwrap();
+    let snap = metrics.snapshot();
+    assert_eq!(snap.graphs_opened, 2);
+    assert_eq!(snap.open_graphs, 2);
+
+    let seen = Arc::new(Mutex::new(Vec::new()));
+    let fast = reg.subscribe(a.graph, 4, 0, Box::new(VecSink(Arc::clone(&seen)))).unwrap();
+    let slow = reg.subscribe(a.graph, 4, 0, Box::new(StuckSink)).unwrap();
+    assert_eq!(metrics.snapshot().active_subscribers, 2);
+
+    let mut out = GraphOut::default();
+    for seed in 0..3u64 {
+        let (re, im) = noise(16, seed);
+        reg.chunk(a.graph, &re, &im, &mut out).unwrap();
+        reg.publish(&mut out);
+    }
+    // Three frames published once each; the stuck subscriber took its
+    // single-slot window and lag-dropped the other two.
+    let snap = metrics.snapshot();
+    assert_eq!(snap.published_chunks, 3);
+    assert_eq!(snap.subscriber_lag_drops, 2);
+    assert_eq!(slow.lag_drops(), 2);
+    assert_eq!(fast.lag_drops(), 0);
+    assert_eq!(seen.lock().unwrap().len(), 3);
+
+    // Close the watched graph: eos publishes, both subscribers detach.
+    reg.close(a.graph, &mut out).unwrap();
+    reg.publish(&mut out);
+    let snap = metrics.snapshot();
+    assert_eq!(snap.open_graphs, 1);
+    assert_eq!(snap.active_subscribers, 0, "eos detaches subscribers");
+    assert_eq!(snap.published_chunks, 4, "the eos frame publishes once too");
+    assert!(seen.lock().unwrap().last().unwrap().eos);
+
+    reg.force_close(b.graph);
+    let snap = metrics.snapshot();
+    assert_eq!(snap.open_graphs, 0);
+    assert_eq!(snap.graphs_opened, 2, "lifetime counter never decrements");
+}
+
+#[test]
+fn registry_rejects_over_capacity_typed() {
+    let reg = GraphRegistry::new(GraphConfig { max_graphs: 1, ..Default::default() });
+    let spec = GraphSpec::new(DType::F32, Strategy::DualSelect, 16)
+        .node(1, NodeKind::Source)
+        .node(2, NodeKind::Magnitude)
+        .node(3, NodeKind::Sink)
+        .edge(1, 2)
+        .edge(2, 3);
+    let a = reg.open(&spec).unwrap();
+    assert!(matches!(reg.open(&spec).unwrap_err(), FftError::Rejected { .. }));
+    let mut out = GraphOut::default();
+    reg.close(a.graph, &mut out).unwrap();
+    assert!(reg.open(&spec).is_ok(), "closing releases the slot");
+}

@@ -1,0 +1,395 @@
+//! End-to-end pipeline graphs over the TCP plane (protocol v4): a
+//! publisher connection declares a DAG, concurrent subscriber
+//! connections attach to its sink topics, and every published frame
+//! must be bit-identical to the direct engines — across subscribers
+//! and against an in-process mirror.  A slow subscriber lag-drops
+//! behind its backpressure window without ever stalling ingest; dead
+//! connections release their graphs and subscriptions instead of
+//! leaking them; registry caps surface as typed `BUSY` on a
+//! connection that stays usable.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fmafft::coordinator::{Server, ServerConfig};
+use fmafft::fft::{AnyArena, AnyScratch, DType, FftError, PlanSpec, Strategy};
+use fmafft::graph::{GraphConfig, GraphSpec, NodeKind};
+use fmafft::net::wire::PublishKind;
+use fmafft::net::{FftClient, FftdServer, GraphResponse};
+use fmafft::stream::StreamConfig;
+use fmafft::util::prng::Pcg32;
+
+fn noise(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Pcg32::seed(seed);
+    ((0..n).map(|_| rng.gaussian()).collect(), (0..n).map(|_| rng.gaussian()).collect())
+}
+
+fn start_daemon(graph_cfg: GraphConfig) -> (Arc<Server>, FftdServer) {
+    let cfg = ServerConfig::native(256);
+    let server = Server::start(cfg).expect("start coordinator");
+    let fftd = FftdServer::start_with_planes(
+        server.clone(),
+        "127.0.0.1:0",
+        StreamConfig::default(),
+        graph_cfg,
+    )
+    .expect("start fftd");
+    (server, fftd)
+}
+
+fn connect(fftd: &FftdServer) -> FftClient {
+    let client = FftClient::connect(fftd.local_addr()).expect("connect");
+    client.set_read_timeout(Some(Duration::from_secs(60))).expect("read timeout");
+    client
+}
+
+/// source → fft → magnitude → sink #4 over fixed `frame`-sample chunks.
+fn spectrum_graph(dtype: DType, frame: usize) -> GraphSpec {
+    GraphSpec::new(dtype, Strategy::DualSelect, frame)
+        .node(1, NodeKind::Source)
+        .node(2, NodeKind::Fft)
+        .node(3, NodeKind::Magnitude)
+        .node(4, NodeKind::Sink)
+        .edge(1, 2)
+        .edge(2, 3)
+        .edge(3, 4)
+}
+
+/// The direct-engine mirror of [`spectrum_graph`]: one FFT in the
+/// working dtype (widened exactly), |.|² in f64.
+fn spectrum_direct(dtype: DType, n: usize, chunks: &[(Vec<f64>, Vec<f64>)]) -> Vec<Vec<f64>> {
+    let transform =
+        PlanSpec::new(n).strategy(Strategy::DualSelect).dtype(dtype).build_any().unwrap();
+    let mut arena = AnyArena::new(dtype, n);
+    let mut scratch = AnyScratch::new();
+    chunks
+        .iter()
+        .map(|(re, im)| {
+            arena.reset(n);
+            arena.push_frame_f64(re, im);
+            transform.execute_frame_any(&mut arena, 0, &mut scratch).unwrap();
+            let (fr, fi) = arena.frame_f64(0);
+            fr.iter().zip(&fi).map(|(&r, &i)| r * r + i * i).collect()
+        })
+        .collect()
+}
+
+/// Drain a subscription to its eos frame, returning the data frames.
+fn drain(sub: &mut fmafft::net::SubscribeHandle<'_>) -> Vec<GraphResponse> {
+    let mut out = Vec::new();
+    loop {
+        let resp = sub.recv().expect("published frame");
+        assert!(resp.is_ok(), "{:?}", resp.error);
+        if resp.is_eos() {
+            return out;
+        }
+        out.push(resp);
+    }
+}
+
+/// The acceptance run: one publisher, two concurrent subscriber
+/// connections, every delivered frame bit-identical across
+/// subscribers AND to the direct engine path, ack/sink bounds
+/// monotone, gauges in the coordinator metrics.
+#[test]
+fn two_tcp_subscribers_receive_bit_identical_fanout() {
+    let (server, fftd) = start_daemon(GraphConfig::default());
+    let n = 64usize;
+    let chunks: Vec<(Vec<f64>, Vec<f64>)> = (0..12).map(|i| noise(n, 300 + i)).collect();
+    let want = spectrum_direct(DType::F32, n, &chunks);
+
+    let mut publisher = connect(&fftd);
+    let mut conn_a = connect(&fftd);
+    let mut conn_b = connect(&fftd);
+
+    let mut graph = publisher.open_graph(&spectrum_graph(DType::F32, n)).expect("open graph");
+    assert_eq!(graph.dtype(), DType::F32);
+    assert_eq!(graph.initial_passes(), 0, "no pre-chunk passes in a pure-FFT graph");
+    let gid = graph.graph();
+
+    // Both subscribers attach BEFORE ingest so no frame predates them.
+    let mut sub_a = conn_a.subscribe(gid, 4).expect("subscribe a");
+    assert_eq!(sub_a.graph(), gid);
+    assert_eq!(sub_a.node(), 4);
+    assert_eq!(sub_a.dtype(), DType::F32);
+    let mut sub_b = conn_b.subscribe(gid, 4).expect("subscribe b");
+
+    // Pipelined ingest: acks arrive in submission order and carry the
+    // graph's cumulative chunk/pass totals with a monotone bound.
+    let mut last_bound = graph.initial_bound().unwrap_or(0.0);
+    let mut last_passes = 0u64;
+    let mut submitted = 0usize;
+    let mut received = 0usize;
+    while received < chunks.len() {
+        while submitted < chunks.len() && graph.in_flight() < 4 {
+            let (re, im) = &chunks[submitted];
+            graph.submit_chunk(re, im).unwrap();
+            submitted += 1;
+        }
+        let ack = graph.recv().expect("chunk ack");
+        assert!(ack.is_ok(), "{:?}", ack.error);
+        assert_eq!(ack.kind, PublishKind::Ack);
+        received += 1;
+        assert_eq!(ack.seq, received as u64, "ack seq is the ingest chunk count");
+        assert!(ack.passes > last_passes, "graph-wide passes must grow");
+        last_passes = ack.passes;
+        let b = ack.bound.expect("dual-select f32 carries a bound");
+        assert!(b > last_bound, "composed bound must grow with passes");
+        last_bound = b;
+    }
+    let fin = graph.close().expect("close graph");
+    assert_eq!(fin.seq, chunks.len() as u64);
+
+    // Drain both subscriptions: contiguous seqs, payloads bit-exact to
+    // the direct path, per-sink bound monotone.
+    let check = |frames: &[GraphResponse], who: &str| {
+        assert_eq!(frames.len(), chunks.len(), "{who}: no lag-drops at the default window");
+        let mut last = 0.0f64;
+        for (i, f) in frames.iter().enumerate() {
+            assert_eq!(f.kind, PublishKind::Data);
+            assert_eq!(f.node, 4);
+            assert_eq!(f.seq, i as u64 + 1, "{who}: contiguous per-sink seq");
+            assert_eq!(f.re, want[i], "{who}: frame {i} differs from the direct engine");
+            assert!(f.im.is_empty(), "{who}: magnitude publishes a power plane");
+            let b = f.bound.expect("bound");
+            assert!(b > last, "{who}: per-sink bound must be monotone");
+            last = b;
+        }
+    };
+    let frames_a = drain(&mut sub_a);
+    let frames_b = drain(&mut sub_b);
+    check(&frames_a, "sub a");
+    check(&frames_b, "sub b");
+    assert_eq!(frames_a, frames_b, "fan-out must deliver identical frames");
+
+    let snap = server.snapshot();
+    assert_eq!(snap.graphs_opened, 1);
+    assert_eq!(snap.open_graphs, 0);
+    assert_eq!(snap.active_subscribers, 0, "eos detaches both subscribers");
+    assert_eq!(snap.published_chunks, chunks.len() as u64 + 1, "12 data frames + 1 eos");
+    assert_eq!(snap.subscriber_lag_drops, 0);
+
+    fftd.shutdown();
+    server.shutdown();
+}
+
+/// A subscriber that never reads while a large signal streams through
+/// must lag-drop behind its 2-frame window — and must NOT stall
+/// ingest: every chunk ack and the close still complete.
+#[test]
+fn slow_subscriber_lag_drops_without_stalling_ingest() {
+    let (server, fftd) = start_daemon(GraphConfig { sub_queue: 2, ..Default::default() });
+    let n = 4096usize;
+    let total = 300usize;
+
+    let mut publisher = connect(&fftd);
+    let mut graph = publisher
+        .open_graph(
+            // Full complex FFT sink: 64 KiB per published frame, so an
+            // unread subscriber connection must fall behind its window
+            // long before kernel socket buffers absorb the run.
+            &GraphSpec::new(DType::F64, Strategy::DualSelect, n)
+                .node(1, NodeKind::Source)
+                .node(2, NodeKind::Fft)
+                .node(3, NodeKind::Sink)
+                .edge(1, 2)
+                .edge(2, 3),
+        )
+        .expect("open graph");
+    let gid = graph.graph();
+
+    // The fast subscriber drains concurrently on its own thread; wait
+    // for its attach so ingest starts with both subscriptions live.
+    let fast_conn = connect(&fftd);
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel();
+    let fast = std::thread::spawn(move || {
+        let mut client = fast_conn;
+        let mut sub = client.subscribe(gid, 3).expect("subscribe fast");
+        ready_tx.send(()).expect("signal readiness");
+        drain(&mut sub)
+    });
+    ready_rx.recv().expect("fast subscriber attached");
+    // The slow subscriber attaches and then never reads.
+    let mut slow_conn = connect(&fftd);
+    let mut slow_sub = slow_conn.subscribe(gid, 3).expect("subscribe slow");
+
+    let mut submitted = 0usize;
+    let mut received = 0usize;
+    while received < total {
+        while submitted < total && graph.in_flight() < 8 {
+            let (re, im) = noise(n, 400 + submitted as u64);
+            graph.submit_chunk(&re, &im).unwrap();
+            submitted += 1;
+        }
+        let ack = graph.recv().expect("ingest must never stall on a slow subscriber");
+        assert!(ack.is_ok(), "{:?}", ack.error);
+        received += 1;
+    }
+    let fin = graph.close().expect("close");
+    assert_eq!(fin.seq, total as u64);
+
+    // Whatever each subscriber received must be in seq order and
+    // bit-identical to the direct engine for that ingest chunk.
+    let transform = PlanSpec::new(n)
+        .strategy(Strategy::DualSelect)
+        .dtype(DType::F64)
+        .build_any()
+        .unwrap();
+    let mut arena = AnyArena::new(DType::F64, n);
+    let mut scratch = AnyScratch::new();
+    let mut verify = |frames: &[GraphResponse], who: &str| {
+        let mut last_seq = 0u64;
+        for f in frames {
+            assert!(f.seq > last_seq, "{who}: seqs must be strictly increasing");
+            last_seq = f.seq;
+            let (re, im) = noise(n, 400 + (f.seq - 1));
+            arena.reset(n);
+            arena.push_frame_f64(&re, &im);
+            transform.execute_frame_any(&mut arena, 0, &mut scratch).unwrap();
+            let (wr, wi) = arena.frame_f64(0);
+            assert_eq!(f.re, wr, "{who}: frame seq {} differs", f.seq);
+            assert_eq!(f.im, wi, "{who}: frame seq {} differs", f.seq);
+        }
+    };
+    let fast_frames = fast.join().expect("fast subscriber thread");
+    verify(&fast_frames, "fast");
+
+    // NOW drain the slow connection: whatever squeezed into its window
+    // is in order and bit-exact; the rest was dropped, not queued.
+    let mut slow_frames = Vec::new();
+    loop {
+        let resp = slow_sub.recv().expect("slow drain");
+        assert!(resp.is_ok(), "{:?}", resp.error);
+        if resp.is_eos() {
+            break;
+        }
+        slow_frames.push(resp);
+    }
+    verify(&slow_frames, "slow");
+    assert!(
+        slow_frames.len() < total,
+        "an unread subscriber must lag-drop ({} of {total} delivered)",
+        slow_frames.len()
+    );
+    let snap = server.snapshot();
+    assert!(snap.subscriber_lag_drops > 0, "drops must land in the metrics");
+    assert_eq!(snap.open_graphs, 0);
+    assert_eq!(snap.active_subscribers, 0);
+
+    fftd.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn dead_connections_release_graphs_and_subscriptions() {
+    let (server, fftd) = start_daemon(GraphConfig::default());
+    let n = 32usize;
+
+    // A dead SUBSCRIBER detaches instead of leaking its slot.
+    let mut publisher = connect(&fftd);
+    let mut graph = publisher.open_graph(&spectrum_graph(DType::F32, n)).expect("open");
+    let gid = graph.graph();
+    {
+        let mut doomed = connect(&fftd);
+        let sub = doomed.subscribe(gid, 4).expect("subscribe");
+        drop(sub);
+        // Connection closes here.
+    }
+    for _ in 0..200 {
+        if fftd.graph_registry().active_subscribers() == 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(
+        fftd.graph_registry().active_subscribers(),
+        0,
+        "dead subscriber connection leaked its subscription"
+    );
+    // Publishing afterwards neither stalls nor errors.
+    let (re, im) = noise(n, 500);
+    graph.submit_chunk(&re, &im).unwrap();
+    assert!(graph.recv().unwrap().is_ok());
+    graph.close().expect("close");
+
+    // A dead PUBLISHER force-closes its graphs and eos's subscribers.
+    let mut doomed = connect(&fftd);
+    let graph2 = doomed.open_graph(&spectrum_graph(DType::F32, n)).expect("open 2");
+    let gid2 = graph2.graph();
+    let mut watcher = connect(&fftd);
+    let mut sub = watcher.subscribe(gid2, 4).expect("subscribe watcher");
+    drop(graph2);
+    drop(doomed); // publisher connection dies with its graph open
+    for _ in 0..200 {
+        if fftd.graph_registry().open_graphs() == 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(fftd.graph_registry().open_graphs(), 0, "dead publisher leaked its graph");
+    let resp = sub.recv().expect("terminal frame");
+    assert!(resp.is_eos(), "subscribers of a dead publisher must get eos");
+    assert_eq!(resp.seq, 0, "forced teardown eos carries seq 0");
+
+    fftd.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn registry_caps_are_busy_and_connections_survive() {
+    let (server, fftd) = start_daemon(GraphConfig {
+        max_graphs: 1,
+        max_subscribers: 1,
+        ..Default::default()
+    });
+    let n = 32usize;
+    let mut publisher = connect(&fftd);
+    let graph = publisher.open_graph(&spectrum_graph(DType::F32, n)).expect("open");
+    let gid = graph.graph();
+    drop(graph);
+
+    // Graph cap: typed BUSY, the connection stays usable.
+    let mut other = connect(&fftd);
+    match other.open_graph(&spectrum_graph(DType::F32, n)) {
+        Err(FftError::Rejected { in_flight: 1, limit: 1 }) => {}
+        Err(e) => panic!("expected BUSY, got {e:?}"),
+        Ok(_) => panic!("expected BUSY, got a graph"),
+    }
+    let (fr, fi) = noise(256, 510);
+    let resp = other.call(fmafft::coordinator::FftOp::Forward, &fr, &fi).expect("one-shot");
+    assert!(resp.is_ok(), "a BUSY connection must keep serving");
+
+    // Subscriber cap: first attach wins, second is typed BUSY.
+    let sub = other.subscribe(gid, 4).expect("first subscriber");
+    drop(sub);
+    let mut third = connect(&fftd);
+    match third.subscribe(gid, 4) {
+        Err(FftError::Rejected { in_flight: 1, limit: 1 }) => {}
+        Err(e) => panic!("expected subscriber BUSY, got {e:?}"),
+        Ok(_) => panic!("expected subscriber BUSY, got a subscription"),
+    }
+
+    // Unknown graph / non-sink topic: typed errors, connection lives.
+    assert!(third.subscribe(999, 4).is_err());
+    assert!(third.subscribe(gid, 2).is_err(), "node 2 is not a sink");
+    let resp = third.call(fmafft::coordinator::FftOp::Forward, &fr, &fi).expect("one-shot");
+    assert!(resp.is_ok());
+
+    // A structurally invalid topology dies in the server's decoder;
+    // that connection is gone, but the daemon keeps serving others.
+    let mut throwaway = connect(&fftd);
+    let cyclic = GraphSpec::new(DType::F32, Strategy::DualSelect, n)
+        .node(1, NodeKind::Source)
+        .node(2, NodeKind::Detrend)
+        .node(3, NodeKind::Sink)
+        .edge(1, 2)
+        .edge(2, 3)
+        .edge(2, 2);
+    assert!(throwaway.open_graph(&cyclic).is_err(), "cyclic topology must be refused");
+    drop(throwaway);
+    let resp = third.call(fmafft::coordinator::FftOp::Forward, &fr, &fi).expect("one-shot");
+    assert!(resp.is_ok(), "other connections must be unaffected");
+
+    fftd.shutdown();
+    server.shutdown();
+}

@@ -6,7 +6,9 @@
 
 use fmafft::coordinator::FftOp;
 use fmafft::fft::{DType, FftError, Strategy};
+use fmafft::graph::{GraphSpec, NodeKind, MAX_GRAPH_EDGES, MAX_GRAPH_NODES};
 use fmafft::net::wire;
+use fmafft::signal::window::Window;
 use fmafft::util::prng::Pcg32;
 
 const OPS: [FftOp; 3] = [FftOp::Forward, FftOp::Inverse, FftOp::MatchedFilter];
@@ -329,6 +331,328 @@ fn busy_and_error_bodies_validated() {
     bytes[wire::HEADER_LEN + 1] = 0xfe;
     assert!(matches!(
         decode_response(&bytes).expect_err("non-utf8 message"),
+        FftError::Protocol(_)
+    ));
+}
+
+/// A structurally valid every-kind topology for graph-open tests.
+fn kitchen_sink_graph(dtype: DType, strategy: Strategy) -> GraphSpec {
+    GraphSpec::new(dtype, strategy, 16)
+        .node(1, NodeKind::Source)
+        .node(2, NodeKind::Window { window: Window::Hann })
+        .node(3, NodeKind::Fft)
+        .node(4, NodeKind::Magnitude)
+        .node(5, NodeKind::Sink)
+        .node(6, NodeKind::Ols { taps_re: vec![0.5, -0.25], taps_im: vec![0.0, 1.0], fft_len: Some(32) })
+        .node(7, NodeKind::Decimate { factor: 3 })
+        .node(8, NodeKind::Sink)
+        .node(9, NodeKind::Stft { frame: 8, hop: 4, window: Window::Blackman })
+        .node(10, NodeKind::Sink)
+        .node(11, NodeKind::MatchedFilter { pulse_re: vec![1.0, 0.0, -1.0], pulse_im: vec![0.5, 0.5, 0.5] })
+        .node(12, NodeKind::Detrend)
+        .node(13, NodeKind::Sink)
+        .node(14, NodeKind::Summary)
+        .node(15, NodeKind::Sink)
+        .edge(1, 2)
+        .edge(2, 3)
+        .edge(3, 4)
+        .edge(4, 5)
+        .edge(1, 6)
+        .edge(6, 7)
+        .edge(7, 8)
+        .edge(1, 9)
+        .edge(9, 10)
+        .edge(1, 11)
+        .edge(11, 12)
+        .edge(12, 13)
+        .edge(1, 14)
+        .edge(14, 15)
+}
+
+fn decode_request_frame(bytes: &[u8]) -> Result<Option<wire::RequestFrame>, FftError> {
+    wire::read_request_frame(&mut &bytes[..])
+}
+
+fn encode_publish(
+    id: u64,
+    dtype: DType,
+    kind: wire::PublishKind,
+    bound: Option<f64>,
+    re: &[f64],
+    im: &[f64],
+) -> Vec<u8> {
+    let mut out = Vec::new();
+    wire::write_publish_parts(&mut out, id, dtype, 42, kind, 5, 9, 120, bound, re, im).unwrap();
+    out
+}
+
+#[test]
+fn protocol_v4_tags_are_pinned() {
+    // The numeric values are PROTOCOL.md law — changing any of them is
+    // a wire break, caught here before it ships.
+    assert_eq!(wire::VERSION, 4);
+    assert_eq!(wire::OP_STREAM_OPEN, 3);
+    assert_eq!(wire::OP_STREAM_CHUNK, 4);
+    assert_eq!(wire::OP_STREAM_CLOSE, 5);
+    assert_eq!(wire::OP_GRAPH_OPEN, 6);
+    assert_eq!(wire::OP_GRAPH_CHUNK, 7);
+    assert_eq!(wire::OP_GRAPH_SUBSCRIBE, 8);
+    assert_eq!(wire::OP_GRAPH_CLOSE, 9);
+    assert_eq!(wire::STATUS_PUBLISH, 4);
+    // Op tags land in the header's code byte (offset 7).
+    let spec = kitchen_sink_graph(DType::F32, Strategy::DualSelect);
+    assert_eq!(wire::encode_graph_open(1, &spec).unwrap()[7], wire::OP_GRAPH_OPEN);
+    assert_eq!(
+        wire::encode_graph_chunk_parts(1, 9, &[0.0], &[0.0]).unwrap()[7],
+        wire::OP_GRAPH_CHUNK
+    );
+    assert_eq!(wire::encode_graph_subscribe(1, 9, 5).unwrap()[7], wire::OP_GRAPH_SUBSCRIBE);
+    assert_eq!(wire::encode_graph_close(1, 9).unwrap()[7], wire::OP_GRAPH_CLOSE);
+    // Node-kind tags ride the body as u32s: source=0 sink=1 window=2
+    // fft=3 ols=4 stft=5 matched-filter=6 detrend=7 magnitude=8
+    // decimate=9 summary=10, in the order the spec listed them.
+    let bytes = wire::encode_graph_open(1, &spec).unwrap();
+    let mut at = wire::HEADER_LEN + 8; // skip frame + node_count
+    let mut tags = Vec::new();
+    for _ in 0..spec.nodes.len() {
+        tags.push(u32::from_le_bytes(bytes[at + 4..at + 8].try_into().unwrap()));
+        let extra = u32::from_le_bytes(bytes[at + 20..at + 24].try_into().unwrap()) as usize;
+        at += 24 + extra * 8;
+    }
+    assert_eq!(tags, vec![0, 2, 3, 8, 1, 4, 9, 1, 5, 1, 6, 7, 1, 10, 1]);
+    // Publish sub-kind tags (body offset 8): ack=0 data=1 eos=2.
+    for (kind, tag) in [
+        (wire::PublishKind::Ack, 0u32),
+        (wire::PublishKind::Data, 1),
+        (wire::PublishKind::Eos, 2),
+    ] {
+        let bytes = encode_publish(1, DType::F16, kind, None, &[], &[]);
+        let at = wire::HEADER_LEN + 8;
+        assert_eq!(u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap()), tag);
+    }
+}
+
+#[test]
+fn graph_open_roundtrips_every_node_kind() {
+    for (dtype, strategy) in [
+        (DType::F64, Strategy::DualSelect),
+        (DType::F16, Strategy::LinzerFeig),
+        (DType::I16, Strategy::Standard),
+    ] {
+        let spec = kitchen_sink_graph(dtype, strategy);
+        let bytes = wire::encode_graph_open(77, &spec).unwrap();
+        match decode_request_frame(&bytes).expect("decodes").expect("not EOF") {
+            wire::RequestFrame::GraphOpen { id, spec: back } => {
+                assert_eq!(id, 77);
+                assert_eq!(back.dtype, dtype);
+                assert_eq!(back.strategy, strategy);
+                assert_eq!(back.frame, spec.frame);
+                assert_eq!(back.nodes, spec.nodes, "taps/pulse/overrides must be bit-exact");
+                assert_eq!(back.edges, spec.edges);
+            }
+            other => panic!("decoded {other:?}"),
+        }
+    }
+    // An absent OLS override travels as 0 and decodes back to None.
+    let spec = GraphSpec::new(DType::F32, Strategy::DualSelect, 0)
+        .node(1, NodeKind::Source)
+        .node(2, NodeKind::Ols { taps_re: vec![1.0], taps_im: vec![0.0], fft_len: None })
+        .node(3, NodeKind::Sink)
+        .edge(1, 2)
+        .edge(2, 3);
+    match decode_request_frame(&wire::encode_graph_open(1, &spec).unwrap()).unwrap().unwrap() {
+        wire::RequestFrame::GraphOpen { spec: back, .. } => {
+            assert!(matches!(back.nodes[1].kind, NodeKind::Ols { fft_len: None, .. }));
+        }
+        other => panic!("decoded {other:?}"),
+    }
+}
+
+#[test]
+fn graph_chunk_subscribe_close_roundtrip() {
+    let (re, im) = payload(9, 21);
+    let bytes = wire::encode_graph_chunk_parts(5, 3, &re, &im).unwrap();
+    assert_eq!(
+        decode_request_frame(&bytes).unwrap().unwrap(),
+        wire::RequestFrame::GraphChunk { id: 5, graph: 3, re, im }
+    );
+    let bytes = wire::encode_graph_subscribe(6, 3, 15).unwrap();
+    assert_eq!(
+        decode_request_frame(&bytes).unwrap().unwrap(),
+        wire::RequestFrame::GraphSubscribe { id: 6, graph: 3, node: 15 }
+    );
+    let bytes = wire::encode_graph_close(7, 3).unwrap();
+    assert_eq!(
+        decode_request_frame(&bytes).unwrap().unwrap(),
+        wire::RequestFrame::GraphClose { id: 7, graph: 3 }
+    );
+}
+
+#[test]
+fn publish_response_roundtrips_all_kinds_and_bounds() {
+    let (re, im) = payload(7, 31);
+    for kind in [wire::PublishKind::Ack, wire::PublishKind::Data, wire::PublishKind::Eos] {
+        for bound in [Some(3.25e-3), None] {
+            // Power-plane frames legitimately carry re without im.
+            for planes in [(re.clone(), im.clone()), (re.clone(), Vec::new())] {
+                let bytes = encode_publish(11, DType::Bf16, kind, bound, &planes.0, &planes.1);
+                match decode_response(&bytes).expect("decodes").expect("not EOF") {
+                    wire::Response::Publish(p) => {
+                        assert_eq!(p.id, 11);
+                        assert_eq!(p.dtype, DType::Bf16);
+                        assert_eq!(p.graph, 42);
+                        assert_eq!(p.kind, kind);
+                        assert_eq!(p.node, 5);
+                        assert_eq!(p.seq, 9);
+                        assert_eq!(p.passes, 120);
+                        assert_eq!(p.bound, bound, "NaN on the wire means None");
+                        assert_eq!((p.re, p.im), planes);
+                    }
+                    other => panic!("decoded {other:?}"),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn truncated_graph_open_bodies_are_typed_protocol_errors() {
+    let bytes =
+        wire::encode_graph_open(1, &kitchen_sink_graph(DType::F32, Strategy::DualSelect)).unwrap();
+    // Every cut point inside the body must fail typed (the advertised
+    // body_len no longer matches, or the topology parse runs dry).
+    for cut in [
+        wire::HEADER_LEN,
+        wire::HEADER_LEN + 3,
+        wire::HEADER_LEN + 11,
+        bytes.len() - 8,
+        bytes.len() - 1,
+    ] {
+        let err = decode_request_frame(&bytes[..cut]).expect_err("truncated graph open");
+        assert!(matches!(err, FftError::Protocol(_)), "cut {cut}: {err:?}");
+    }
+}
+
+#[test]
+fn hostile_topologies_die_in_the_decoder() {
+    let protocol = |bytes: Vec<u8>, what: &str| {
+        let err = decode_request_frame(&bytes).expect_err(what);
+        assert!(matches!(err, FftError::Protocol(_)), "{what}: {err:?}");
+    };
+    let base = |frame: usize| GraphSpec::new(DType::F32, Strategy::DualSelect, frame);
+    // Cyclic: 2 → 3 → 2 (the encoder is deliberately permissive so
+    // hostile frames can be crafted; the decoder must not be).
+    protocol(
+        wire::encode_graph_open(
+            1,
+            &base(8)
+                .node(1, NodeKind::Source)
+                .node(2, NodeKind::Detrend)
+                .node(3, NodeKind::Detrend)
+                .node(4, NodeKind::Sink)
+                .edge(1, 2)
+                .edge(2, 3)
+                .edge(3, 2)
+                .edge(3, 4),
+        )
+        .unwrap(),
+        "cycle",
+    );
+    // Duplicate node id.
+    protocol(
+        wire::encode_graph_open(
+            1,
+            &base(8)
+                .node(1, NodeKind::Source)
+                .node(2, NodeKind::Detrend)
+                .node(2, NodeKind::Sink)
+                .edge(1, 2),
+        )
+        .unwrap(),
+        "duplicate id",
+    );
+    // Self edge (a one-node cycle).
+    protocol(
+        wire::encode_graph_open(
+            1,
+            &base(8).node(1, NodeKind::Sink).node(2, NodeKind::Source).edge(2, 1).edge(1, 1),
+        )
+        .unwrap(),
+        "self edge",
+    );
+    // Oversized: one node over the cap.
+    let mut big = base(8).node(0, NodeKind::Source);
+    for i in 1..=(MAX_GRAPH_NODES as u32) {
+        big = big.node(i, NodeKind::Detrend).edge(i - 1, i);
+    }
+    protocol(wire::encode_graph_open(1, &big).unwrap(), "too many nodes");
+    // Oversized: one edge over the cap (parallel edges).
+    let mut fat = base(8).node(1, NodeKind::Source).node(2, NodeKind::Sink);
+    for _ in 0..=MAX_GRAPH_EDGES {
+        fat = fat.edge(1, 2);
+    }
+    protocol(wire::encode_graph_open(1, &fat).unwrap(), "too many edges");
+    // Unknown node-kind tag: patch the source node's kind u32.
+    let mut bytes = wire::encode_graph_open(
+        1,
+        &base(8).node(1, NodeKind::Source).node(2, NodeKind::Sink).edge(1, 2),
+    )
+    .unwrap();
+    let kind_at = wire::HEADER_LEN + 8 + 4;
+    bytes[kind_at..kind_at + 4].copy_from_slice(&0x7fu32.to_le_bytes());
+    protocol(bytes, "unknown node kind");
+}
+
+#[test]
+fn malformed_graph_and_publish_bodies_are_typed_protocol_errors() {
+    // Graph-chunk body that is not graph-id + whole complex samples.
+    let mut bytes = wire::encode_graph_chunk_parts(1, 2, &[1.0, 2.0], &[3.0, 4.0]).unwrap();
+    bytes[20..24].copy_from_slice(&32u32.to_le_bytes());
+    fix_checksum(&mut bytes);
+    bytes.truncate(wire::HEADER_LEN + 32);
+    assert!(matches!(
+        decode_request_frame(&bytes).expect_err("ragged graph chunk"),
+        FftError::Protocol(_)
+    ));
+    // Graph-subscribe / graph-close bodies of the wrong size.
+    let mut bytes = wire::encode_graph_subscribe(1, 2, 3).unwrap();
+    bytes[20..24].copy_from_slice(&8u32.to_le_bytes());
+    fix_checksum(&mut bytes);
+    bytes.truncate(wire::HEADER_LEN + 8);
+    assert!(matches!(
+        decode_request_frame(&bytes).expect_err("short subscribe"),
+        FftError::Protocol(_)
+    ));
+    let mut bytes = wire::encode_graph_close(1, 2).unwrap();
+    bytes[20..24].copy_from_slice(&4u32.to_le_bytes());
+    fix_checksum(&mut bytes);
+    bytes.truncate(wire::HEADER_LEN + 4);
+    assert!(matches!(
+        decode_request_frame(&bytes).expect_err("short close"),
+        FftError::Protocol(_)
+    ));
+    // Publish response shorter than its 48-byte state prefix.
+    let mut bytes = encode_publish(1, DType::F32, wire::PublishKind::Data, None, &[1.0], &[]);
+    bytes[20..24].copy_from_slice(&40u32.to_le_bytes());
+    fix_checksum(&mut bytes);
+    bytes.truncate(wire::HEADER_LEN + 40);
+    assert!(matches!(
+        decode_response(&bytes).expect_err("short publish"),
+        FftError::Protocol(_)
+    ));
+    // Publish response with an unknown sub-kind tag.
+    let mut bytes = encode_publish(1, DType::F32, wire::PublishKind::Data, None, &[], &[]);
+    let at = wire::HEADER_LEN + 8;
+    bytes[at..at + 4].copy_from_slice(&9u32.to_le_bytes());
+    assert!(matches!(
+        decode_response(&bytes).expect_err("unknown publish kind"),
+        FftError::Protocol(_)
+    ));
+    // Graph ops decoded through the one-shot `read_request` reader are
+    // a typed kind confusion, not a misparse.
+    let bytes = wire::encode_graph_close(1, 2).unwrap();
+    assert!(matches!(
+        decode_request(&bytes).expect_err("graph op on the one-shot reader"),
         FftError::Protocol(_)
     ));
 }
