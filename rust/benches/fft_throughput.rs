@@ -3,20 +3,26 @@
 //! version of the zero-overhead claim plus the native-core performance
 //! numbers recorded in EXPERIMENTS.md §Perf.  Also measures the batch
 //! view path (`execute_into` over a [`FrameArena`]) that the serving
-//! plane runs, and writes the results to `BENCH_fft.json`.
+//! plane runs, and writes the results to `BENCH_fft.json`.  A final
+//! section tunes this host with `fft::tune` and times each wisdom
+//! winner against the serving default (`tuned=auto` vs
+//! `tuned=default` rows, written to `BENCH_tune.json`).
 //!
 //! Run: `cargo bench --bench fft_throughput`
 
 use std::hint::black_box;
+use std::time::Duration;
 
 use fmafft::bench_util::{bench, config_from_env, header, JsonReport};
 use fmafft::fft::dit::DitPlan;
 use fmafft::fft::radix4::Radix4Plan;
 use fmafft::fft::{
-    AnyArena, AnyScratch, DType, Direction, FrameArena, Plan, PlanSpec, Scratch, Strategy,
-    Transform,
+    Algorithm, AnyArena, AnyScratch, DType, Direction, FrameArena, Plan, Planner, PlanSpec,
+    Scratch, Strategy, Transform,
 };
 use fmafft::precision::SplitBuf;
+use fmafft::stream::OlsFilter;
+use fmafft::tune::{tune, MeasureConfig, TuneConfig, TuneOp};
 use fmafft::util::prng::Pcg32;
 
 fn signal(n: usize, seed: u64) -> SplitBuf<f32> {
@@ -226,5 +232,144 @@ fn main() {
     match json.write(".") {
         Ok(path) => println!("\nwrote {}", path.display()),
         Err(e) => eprintln!("\ncould not write BENCH_fft.json: {e}"),
+    }
+
+    // Tuned vs default: run a small budget-bounded `fft::tune` sweep
+    // on this host, then time each wisdom winner against the serving
+    // default for the same key — the delta `--strategy auto` buys (or
+    // doesn't) on this machine.  Rows are tagged tuned=auto /
+    // tuned=default and written separately as BENCH_tune.json.
+    header("autotuned plans vs serving defaults (f32)");
+    let mut tune_json = JsonReport::new("tune");
+    let tcfg = TuneConfig {
+        sizes: vec![256, 1024, 4096],
+        taps: vec![32],
+        dtypes: vec![DType::F32],
+        budget: Duration::from_secs(4),
+        measure: MeasureConfig::default(),
+    };
+    let outcome = tune(&tcfg).expect("tune sweep");
+    if outcome.budget_exhausted {
+        println!("(budget exhausted — untuned keys are skipped below)");
+    }
+
+    let frames = 4usize;
+    for &n in &tcfg.sizes {
+        let entry = match outcome.wisdom.entry(n, TuneOp::Fft, DType::F32) {
+            Some(e) => *e,
+            None => continue,
+        };
+        let rows = [
+            ("auto", entry.strategy, entry.algorithm),
+            ("default", Strategy::DualSelect, Algorithm::Stockham),
+        ];
+        for (tag, strategy, algorithm) in rows {
+            let t = PlanSpec::new(n)
+                .strategy(strategy)
+                .algorithm(algorithm)
+                .dtype(DType::F32)
+                .build_any()
+                .unwrap();
+            let mut rng = Pcg32::seed(9 + n as u64);
+            let re: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+            let im: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+            let mut arena = AnyArena::new(DType::F32, n);
+            arena.reserve_frames(frames);
+            let mut scratch = AnyScratch::new();
+            let algo = format!("{algorithm:?}");
+            let r = bench(
+                &format!("tuned={tag} n={n} {} {algo}", strategy.name()),
+                &cfg,
+                || {
+                    arena.reset(n);
+                    for _ in 0..frames {
+                        arena.push_frame_f64(&re, &im);
+                    }
+                    t.execute_many_any(&mut arena, &mut scratch).unwrap();
+                    black_box(arena.frames());
+                },
+            )
+            .tagged("f32", strategy.name());
+            println!(
+                "{}  ({:.2} Mpt/s)",
+                r.report(),
+                r.throughput((n * frames) as f64) / 1e6
+            );
+            tune_json.push_metrics_tags(
+                &r.name,
+                &[
+                    ("dtype", "f32"),
+                    ("strategy", strategy.name()),
+                    ("algorithm", algo.as_str()),
+                    ("tuned", tag),
+                ],
+                &[
+                    ("mean_ns", r.mean_ns),
+                    ("median_ns", r.median_ns),
+                    ("p99_ns", r.p99_ns),
+                    ("per_second", r.per_second()),
+                ],
+            );
+        }
+    }
+
+    // Overlap-save block length: the tuned block vs the auto-size
+    // heuristic, on the same streaming push path the session and
+    // graph planes serve with.
+    let taps = 32usize;
+    if let Some(tuned_block) = outcome.wisdom.ols_block(taps, DType::F32) {
+        let planner = Planner::<f32>::new();
+        let taps_re: Vec<f64> = (0..taps).map(|i| 0.5_f64.powi(i as i32 % 8)).collect();
+        let taps_im = vec![0.0; taps];
+        let heuristic =
+            OlsFilter::<f32>::new(&planner, Strategy::DualSelect, &taps_re, &taps_im)
+                .unwrap()
+                .fft_len();
+        for (tag, block) in [("auto", tuned_block), ("default", heuristic)] {
+            let mut f = OlsFilter::<f32>::with_fft_len(
+                &planner,
+                Strategy::DualSelect,
+                &taps_re,
+                &taps_im,
+                block,
+            )
+            .unwrap();
+            let mut rng = Pcg32::seed(11);
+            let re: Vec<f64> = (0..block).map(|_| rng.range(-1.0, 1.0)).collect();
+            let im: Vec<f64> = (0..block).map(|_| rng.range(-1.0, 1.0)).collect();
+            let mut out_re: Vec<f64> = Vec::with_capacity(f.worst_case_out(block));
+            let mut out_im: Vec<f64> = Vec::with_capacity(f.worst_case_out(block));
+            let r = bench(
+                &format!("ols tuned={tag} taps={taps} block={block}"),
+                &cfg,
+                || {
+                    out_re.clear();
+                    out_im.clear();
+                    f.push(&re, &im, &mut out_re, &mut out_im).unwrap();
+                    black_box(out_re.len());
+                },
+            )
+            .tagged("f32", "dual");
+            println!(
+                "{}  ({:.2} Msamp/s)",
+                r.report(),
+                r.throughput(block as f64) / 1e6
+            );
+            tune_json.push_metrics_tags(
+                &r.name,
+                &[("dtype", "f32"), ("strategy", "dual"), ("tuned", tag)],
+                &[
+                    ("mean_ns", r.mean_ns),
+                    ("median_ns", r.median_ns),
+                    ("block", block as f64),
+                    ("per_second", r.per_second()),
+                ],
+            );
+        }
+    }
+
+    match tune_json.write(".") {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_tune.json: {e}"),
     }
 }

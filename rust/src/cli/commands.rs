@@ -8,7 +8,7 @@ use crate::analysis::ratio::ratio_stats;
 use crate::analysis::report::{fixed, sci, Table};
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::{FftOp, Server, ServerConfig};
-use crate::fft::{DType, FftError, FftResult, Planner, Strategy};
+use crate::fft::{DType, FftError, FftResult, Planner, Strategy, StrategyChoice};
 use crate::net::{FftClient, FftdServer, GraphResponse, SubscribeHandle};
 use crate::precision::{Bf16, Real, F16};
 use crate::signal::chirp::{default_chirp, lfm_chirp};
@@ -47,9 +47,17 @@ USAGE:
       bit-identical to the stream-session engines, magnitude exactly
       |.|^2 of the raw sink, and the composed running bound monotone
       and honored (--taps, --samples, --chunks configure it).
+  fmafft tune    [--sizes 256,1024,4096] [--taps 32] [--dtypes f32]
+                 [--budget-ms 2000] [--reps 5] [--out wisdom.fft]
+      Measure every candidate plan (FFT strategy x algorithm per size,
+      overlap-save block length per tap count) on THIS host and write
+      the winners to a checksummed wisdom file.  Serve it back with
+      `fmafft serve --wisdom PATH`; clients opt in per request with
+      --strategy auto.  The budget is a soft wall clock: the first
+      key always completes, later keys are skipped once it is spent.
   fmafft serve   [--n 1024] [--dtype f32] [--strategy dual] [--pjrt]
                  [--artifacts DIR] [--rate 2000] [--requests 2000]
-                 [--workers 2] [--max-batch 32]
+                 [--workers 2] [--max-batch 32] [--wisdom PATH]
                  [--listen ADDR] [--serve-for SECS]
       Run the dynamic-batching coordinator against a Poisson workload
       in the chosen working precision (try --dtype f16: the paper's
@@ -57,13 +65,20 @@ USAGE:
       quantized fixed-point plane).  With --listen the
       coordinator becomes fftd, a TCP daemon (e.g. --listen
       127.0.0.1:0 for an ephemeral port; --serve-for 0 = run until
-      killed); see PROTOCOL.md for the wire format.
+      killed); see PROTOCOL.md for the wire format.  --wisdom loads a
+      tuned-plan file written by `fmafft tune`: `--strategy auto`
+      requests resolve through it, and overlap-save streams/graph
+      nodes with no explicit block override take its tuned block
+      length.  A missing or corrupt file logs a diagnostic and serves
+      with defaults — never fatal.
   fmafft client  --addr HOST:PORT [--n 1024] [--dtype f32]
-                 [--strategy dual] [--op forward|inverse|mf]
+                 [--strategy dual|lf|cos|std|auto]
+                 [--op forward|inverse|mf]
                  [--requests 16] [--pipeline 8] [--verify]
       Drive a running fftd over TCP with pipelined requests; --verify
       checks every response against the f64 DFT oracle and its
-      attached a-priori bound.
+      attached a-priori bound.  --strategy auto (one-shot requests
+      only) lets the server resolve through its loaded wisdom.
       With --stream: drive the protocol-v2 streaming plane instead —
       an overlap-save session (ragged pipelined chunks, verified
       bit-identical to the offline filter and within the cumulative
@@ -608,6 +623,17 @@ pub fn serve(a: &Args) -> FftResult<()> {
         max_batch,
         max_wait: Duration::from_micros(max_wait_us),
     };
+    // Wisdom load failures are diagnostics, not fatal: the serve path
+    // must come up with defaults whatever is on disk.
+    if let Some(path) = a.get("wisdom") {
+        match crate::tune::Wisdom::load(std::path::Path::new(path)) {
+            Ok(w) => {
+                println!("loaded wisdom {path}: {} tuned entries", w.len());
+                cfg.wisdom = Some(std::sync::Arc::new(w));
+            }
+            Err(e) => eprintln!("ignoring wisdom {path}: {e}"),
+        }
+    }
 
     // --listen turns `serve` into fftd: a TCP daemon over the same
     // coordinator, no synthetic workload (drive it with `fmafft
@@ -694,6 +720,67 @@ pub fn serve(a: &Args) -> FftResult<()> {
         counts.submitted, counts.completed, counts.failed
     );
     server.shutdown();
+    Ok(())
+}
+
+/// `fmafft tune` — run the autotuning search on this host and persist
+/// the winners as a wisdom file for `serve --wisdom`.
+pub fn tune(a: &Args) -> FftResult<()> {
+    fn list<T: std::str::FromStr>(s: &str, what: &str) -> FftResult<Vec<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        s.split(',')
+            .filter(|p| !p.trim().is_empty())
+            .map(|p| {
+                p.trim().parse::<T>().map_err(|e| {
+                    FftError::InvalidArgument(format!("invalid --{what} element {p:?}: {e}"))
+                })
+            })
+            .collect()
+    }
+    let sizes: Vec<usize> = list(a.get_or("sizes", "256,1024,4096"), "sizes")?;
+    let taps: Vec<usize> = list(a.get_or("taps", "32"), "taps")?;
+    let dtypes: Vec<DType> = list(a.get_or("dtypes", "f32"), "dtypes")?;
+    let budget_ms: u64 = a.get_parse("budget-ms", 2000u64)?;
+    let reps: usize = a.get_parse("reps", 5usize)?.max(1);
+    let out = a.get_or("out", "wisdom.fft");
+
+    let measure =
+        crate::tune::MeasureConfig { reps, ..crate::tune::MeasureConfig::default() };
+    let cfg = crate::tune::TuneConfig {
+        sizes,
+        taps,
+        dtypes,
+        budget: Duration::from_millis(budget_ms),
+        measure,
+    };
+
+    let outcome = crate::tune::tune(&cfg)?;
+    let mut t = Table::new(
+        format!("fft tune — host {:016x}", outcome.wisdom.host()),
+        &["op", "key", "dtype", "winner", "block", "median", "cands"],
+    );
+    for r in &outcome.rows {
+        t.row(&[
+            r.op.name().to_string(),
+            r.n.to_string(),
+            r.dtype.to_string(),
+            match r.op {
+                crate::tune::TuneOp::Fft => format!("{} ({:?})", r.strategy, r.algorithm),
+                crate::tune::TuneOp::Ols => r.strategy.to_string(),
+            },
+            if r.block_len == 0 { "—".to_string() } else { r.block_len.to_string() },
+            format!("{} ns", r.median_ns),
+            r.candidates.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    if outcome.budget_exhausted {
+        println!("budget exhausted: later keys were skipped (raise --budget-ms to cover them)");
+    }
+    outcome.wisdom.save(std::path::Path::new(out))?;
+    println!("wrote {out} ({} entries)", outcome.wisdom.len());
     Ok(())
 }
 
@@ -1145,7 +1232,8 @@ pub fn client(a: &Args) -> FftResult<()> {
     let requests: usize = a.get_parse("requests", 16usize)?;
     let pipeline: usize = a.get_parse("pipeline", 8usize)?.max(1);
     let dtype: DType = a.get_or("dtype", "f32").parse()?;
-    let strategy: Strategy = a.get_or("strategy", "dual").parse()?;
+    // `auto` resolves server-side through the loaded wisdom.
+    let strategy: StrategyChoice = a.get_or("strategy", "dual").parse()?;
     let seed: u64 = a.get_parse("seed", 42u64)?;
     let verify = a.flag("verify");
     let op = match a.get_or("op", "forward") {

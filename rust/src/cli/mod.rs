@@ -4,8 +4,9 @@
 //! fmafft tables  [--n 1024]                  reproduce paper Tables I & II
 //! fmafft audit   --n N [--strategy dual]     twiddle-table audit
 //! fmafft fft     --n N [--strategy dual] [--dtype f64|f32|bf16|f16]
+//! fmafft tune    [--sizes 256,1024] [--budget-ms 2000] [--out wisdom.fft]
 //! fmafft serve   [--n 1024] [--dtype f16] [--strategy dual] [--pjrt]
-//!                [--rate 2000] [--requests 5000]
+//!                [--rate 2000] [--requests 5000] [--wisdom PATH]
 //!                [--listen ADDR] [--serve-for SECS]   (fftd mode)
 //! fmafft client  --addr HOST:PORT [--dtype f32] [--requests 16]
 //! fmafft help
@@ -31,6 +32,7 @@ pub fn run<I: IntoIterator<Item = String>>(argv: I) -> i32 {
         "tables" => commands::tables(&parsed),
         "audit" => commands::audit(&parsed),
         "fft" => commands::fft(&parsed),
+        "tune" => commands::tune(&parsed),
         "serve" => commands::serve(&parsed),
         "client" => commands::client(&parsed),
         "help" | "--help" | "-h" => {

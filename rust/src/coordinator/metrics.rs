@@ -47,12 +47,23 @@ pub struct Metrics {
     /// Frames lag-dropped because a subscriber's backpressure window
     /// was full.
     pub subscriber_lag_drops: AtomicU64,
+    /// Plan-cache lookups the workers served from cache.
+    pub planner_cache_hits: AtomicU64,
+    /// Plan-cache lookups that had to build a plan.
+    pub planner_cache_misses: AtomicU64,
+    /// `Auto`-strategy requests resolved through a wisdom entry
+    /// (aggregate; the per-dtype split is in `dtype_tuned`).
+    pub tuned_plans_selected: AtomicU64,
+    /// `Auto`-strategy requests with no wisdom entry, resolved to the
+    /// server's default strategy.
+    pub auto_defaulted: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS],
-    // Per-dtype splits of submitted/completed/failed, indexed by
+    // Per-dtype splits of submitted/completed/failed/tuned, indexed by
     // `DType::index()`.
     dtype_submitted: [AtomicU64; DType::COUNT],
     dtype_completed: [AtomicU64; DType::COUNT],
     dtype_failed: [AtomicU64; DType::COUNT],
+    dtype_tuned: [AtomicU64; DType::COUNT],
 }
 
 impl Metrics {
@@ -78,6 +89,28 @@ impl Metrics {
         self.dtype_failed[dtype.index()].fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one `Auto` request resolved through a wisdom entry
+    /// (aggregate + per-dtype).
+    pub fn record_tuned_selected(&self, dtype: DType) {
+        self.tuned_plans_selected.fetch_add(1, Ordering::Relaxed);
+        self.dtype_tuned[dtype.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one `Auto` request with no wisdom entry (fell back to the
+    /// server default).
+    pub fn record_auto_defaulted(&self) {
+        self.auto_defaulted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one plan-cache lookup (`hit` = served from cache).
+    pub fn record_planner_lookup(&self, hit: bool) {
+        if hit {
+            self.planner_cache_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.planner_cache_misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     /// Point-in-time per-dtype counters.
     pub fn dtype_counts(&self, dtype: DType) -> DTypeCounts {
         let i = dtype.index();
@@ -85,6 +118,7 @@ impl Metrics {
             submitted: self.dtype_submitted[i].load(Ordering::Relaxed),
             completed: self.dtype_completed[i].load(Ordering::Relaxed),
             failed: self.dtype_failed[i].load(Ordering::Relaxed),
+            tuned: self.dtype_tuned[i].load(Ordering::Relaxed),
         }
     }
 
@@ -251,6 +285,10 @@ impl Metrics {
             active_subscribers: self.active_subscribers(),
             published_chunks: self.published_chunks.load(Ordering::Relaxed),
             subscriber_lag_drops: self.subscriber_lag_drops.load(Ordering::Relaxed),
+            planner_cache_hits: self.planner_cache_hits.load(Ordering::Relaxed),
+            planner_cache_misses: self.planner_cache_misses.load(Ordering::Relaxed),
+            tuned_plans_selected: self.tuned_plans_selected.load(Ordering::Relaxed),
+            auto_defaulted: self.auto_defaulted.load(Ordering::Relaxed),
             per_dtype: core::array::from_fn(|i| self.dtype_counts(DType::ALL[i])),
         }
     }
@@ -299,6 +337,18 @@ impl Metrics {
                 s.subscriber_lag_drops
             ));
         }
+        if s.planner_cache_hits + s.planner_cache_misses > 0 {
+            out.push_str(&format!(
+                " plan_hits={} plan_misses={}",
+                s.planner_cache_hits, s.planner_cache_misses
+            ));
+        }
+        if s.tuned_plans_selected + s.auto_defaulted > 0 {
+            out.push_str(&format!(
+                " tuned={} auto_defaulted={}",
+                s.tuned_plans_selected, s.auto_defaulted
+            ));
+        }
         out
     }
 }
@@ -309,6 +359,8 @@ pub struct DTypeCounts {
     pub submitted: u64,
     pub completed: u64,
     pub failed: u64,
+    /// `Auto` requests of this dtype resolved through a wisdom entry.
+    pub tuned: u64,
 }
 
 /// A consistent-enough copy of the serving metrics (each field is read
@@ -345,6 +397,14 @@ pub struct MetricsSnapshot {
     pub published_chunks: u64,
     /// Frames lag-dropped at slow subscribers.
     pub subscriber_lag_drops: u64,
+    /// Plan-cache lookups the workers served from cache.
+    pub planner_cache_hits: u64,
+    /// Plan-cache lookups that had to build a plan.
+    pub planner_cache_misses: u64,
+    /// `Auto`-strategy requests resolved through a wisdom entry.
+    pub tuned_plans_selected: u64,
+    /// `Auto`-strategy requests that fell back to the server default.
+    pub auto_defaulted: u64,
     /// Per-dtype request counters, indexed by `DType::index()` (use
     /// [`MetricsSnapshot::dtype`] for keyed access).
     pub per_dtype: [DTypeCounts; DType::COUNT],
@@ -504,6 +564,29 @@ mod tests {
         assert!(text.contains("graphs=2"), "{text}");
         assert!(text.contains("published_chunks=3"), "{text}");
         assert!(text.contains("lag_drops=1"), "{text}");
+    }
+
+    #[test]
+    fn planner_and_tuning_counters_track() {
+        let m = Metrics::new();
+        m.record_planner_lookup(false);
+        m.record_planner_lookup(true);
+        m.record_planner_lookup(true);
+        m.record_tuned_selected(DType::F32);
+        m.record_tuned_selected(DType::I16);
+        m.record_auto_defaulted();
+        let s = m.snapshot();
+        assert_eq!((s.planner_cache_hits, s.planner_cache_misses), (2, 1));
+        assert_eq!(s.tuned_plans_selected, 2);
+        assert_eq!(s.auto_defaulted, 1);
+        assert_eq!(s.dtype(DType::F32).tuned, 1);
+        assert_eq!(s.dtype(DType::I16).tuned, 1);
+        assert_eq!(s.dtype(DType::F64).tuned, 0);
+        let text = m.summary();
+        assert!(text.contains("plan_hits=2"), "{text}");
+        assert!(text.contains("plan_misses=1"), "{text}");
+        assert!(text.contains("tuned=2"), "{text}");
+        assert!(text.contains("auto_defaulted=1"), "{text}");
     }
 
     #[test]

@@ -19,7 +19,7 @@
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
-use crate::fft::{AnyArena, DType, FftError, Strategy};
+use crate::fft::{AnyArena, DType, FftError, Strategy, StrategyChoice};
 
 /// What the request asks for.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -48,12 +48,17 @@ pub struct PlanKey {
 /// caller-chosen response-correlation id plus the full per-request
 /// plan selection.  The id is echoed on the [`FftResponse`] and only
 /// needs to be unique per reply channel, not globally.
+///
+/// The strategy is a [`StrategyChoice`]: `Auto` resolves through the
+/// server's loaded wisdom (else its default) *at admission*, so the
+/// [`PlanKey`] a request batches under is always concrete — a tuned
+/// request shares batches (and bits) with an explicit one.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Route {
     pub id: u64,
     pub op: FftOp,
     pub dtype: DType,
-    pub strategy: Strategy,
+    pub strategy: StrategyChoice,
 }
 
 /// A client request: one split-format frame.  The payload travels to

@@ -24,12 +24,13 @@ use crate::analysis::bounds::serving_bound_from_tmax;
 use crate::analysis::ratio::ratio_stats;
 use crate::fft::{
     AnyArena, AnyArenaPool, AnyPlanner, AnyScratch, AnyTransform, DType, Direction, FftError,
-    FftResult, Planner, Strategy,
+    FftResult, Planner, Strategy, StrategyChoice,
 };
 use crate::runtime::literal::BatchF32;
 use crate::runtime::{ArtifactKind, Engine};
 use crate::signal::chirp::default_chirp;
 use crate::signal::pulse::MatchedFilter;
+use crate::tune::Wisdom;
 
 use super::backpressure::Gate;
 use super::batcher::{Batch, BatchPolicy, Batcher};
@@ -58,6 +59,10 @@ pub struct ServerConfig {
     /// Default working precision for [`Server::submit`] (requests can
     /// override per call with [`Server::submit_with`]).
     pub dtype: DType,
+    /// Loaded tuning wisdom ([`crate::tune`]): `Auto`-strategy
+    /// requests resolve through it at admission.  `None` (the
+    /// default) means `Auto` always falls back to `strategy`.
+    pub wisdom: Option<Arc<Wisdom>>,
 }
 
 impl ServerConfig {
@@ -71,6 +76,7 @@ impl ServerConfig {
             queue_limit: 4096,
             pulse_len: n / 4,
             dtype: DType::F32,
+            wisdom: None,
         }
     }
 
@@ -125,10 +131,13 @@ struct ComputeCtx {
     /// a-priori response bound (`None` when no ratio bound applies).
     tmax: Mutex<std::collections::HashMap<Strategy, Option<f64>>>,
     engine: Option<Engine>,
+    /// Shared metrics sink: the worker reports its plan-cache hit/miss
+    /// traffic here.
+    metrics: Arc<Metrics>,
 }
 
 impl ComputeCtx {
-    fn new(recipe: &ComputeRecipe) -> FftResult<Self> {
+    fn new(recipe: &ComputeRecipe, metrics: Arc<Metrics>) -> FftResult<Self> {
         let chirp = default_chirp(recipe.pulse_len);
         let engine = match &recipe.artifact_dir {
             None => None,
@@ -142,6 +151,7 @@ impl ComputeCtx {
             chirp,
             tmax: Mutex::new(std::collections::HashMap::new()),
             engine,
+            metrics,
         };
         // Warm the default strategy's ratio statistics and preflight
         // the default matched filter (validates the pulse/frame
@@ -209,19 +219,19 @@ impl ComputeCtx {
         Ok(built)
     }
 
-    /// Resolve a batch key to the one transform that serves it.
+    /// Resolve a batch key to the one transform that serves it,
+    /// reporting the plan-cache outcome into the metrics.
     fn transform_for(&self, key: &PlanKey) -> FftResult<AnyTransform> {
-        match key.op {
-            FftOp::Forward => {
-                self.planner
-                    .plan(key.n, key.strategy, Direction::Forward, key.dtype)
-            }
-            FftOp::Inverse => {
-                self.planner
-                    .plan(key.n, key.strategy, Direction::Inverse, key.dtype)
-            }
-            FftOp::MatchedFilter => self.matched_for(key.strategy, key.dtype),
-        }
+        let direction = match key.op {
+            FftOp::Forward => Direction::Forward,
+            FftOp::Inverse => Direction::Inverse,
+            FftOp::MatchedFilter => return self.matched_for(key.strategy, key.dtype),
+        };
+        let (t, hit) = self
+            .planner
+            .plan_tracked(key.n, key.strategy, direction, key.dtype)?;
+        self.metrics.record_planner_lookup(hit);
+        Ok(t)
     }
 
     /// The a-priori error bound attached to responses for `key` —
@@ -342,6 +352,7 @@ pub struct Server {
     n: usize,
     strategy: Strategy,
     dtype: DType,
+    wisdom: Option<Arc<Wisdom>>,
     next_id: AtomicU64,
     handles: Mutex<Vec<JoinHandle<()>>>,
     workers: usize,
@@ -418,6 +429,7 @@ impl Server {
             n: cfg.n,
             strategy: cfg.strategy,
             dtype: cfg.dtype,
+            wisdom: cfg.wisdom,
             next_id: AtomicU64::new(1),
             handles: Mutex::new(handles),
             workers: cfg.workers.max(1),
@@ -453,7 +465,7 @@ impl Server {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             op,
             dtype,
-            strategy: self.strategy,
+            strategy: self.strategy.into(),
         };
         self.submit_routed(route, re, im, tx)?;
         Ok(rx)
@@ -488,13 +500,38 @@ impl Server {
                 limit: self.gate.limit(),
             });
         };
+        // Resolve `Auto` to a concrete strategy *here*, before the
+        // PlanKey forms: explicit choice > wisdom entry for
+        // (n, dtype) > server default.  A tuned request therefore
+        // batches with — and is bit-identical to — an explicit request
+        // for the same resolved strategy; missing wisdom is counted
+        // and served, never an error.
+        let strategy = match route.strategy {
+            StrategyChoice::Explicit(s) => s,
+            StrategyChoice::Auto => {
+                match self
+                    .wisdom
+                    .as_ref()
+                    .and_then(|w| w.fft_strategy(self.n, route.dtype))
+                {
+                    Some(s) => {
+                        self.metrics.record_tuned_selected(route.dtype);
+                        s
+                    }
+                    None => {
+                        self.metrics.record_auto_defaulted();
+                        self.strategy
+                    }
+                }
+            }
+        };
         self.metrics.record_submitted(route.dtype);
         let req = FftRequest {
             id: route.id,
             key: PlanKey {
                 n: self.n,
                 op: route.op,
-                strategy: route.strategy,
+                strategy,
                 dtype: route.dtype,
             },
             re,
@@ -563,6 +600,13 @@ impl Server {
     /// into.
     pub fn metrics_handle(&self) -> Arc<Metrics> {
         self.metrics.clone()
+    }
+
+    /// A shared handle to the loaded tuning wisdom (`None` when the
+    /// server was booted without `--wisdom`) — the stream and graph
+    /// registries consult it for overlap-save block lengths.
+    pub fn wisdom_handle(&self) -> Option<Arc<Wisdom>> {
+        self.wisdom.clone()
     }
 
     /// Point-in-time serving metrics (counters — aggregate and
@@ -681,7 +725,7 @@ fn worker_loop(
     // answered with the error.  The per-dtype Scratch pools live as
     // long as the worker — after the first batch of each dtype the
     // compute path stops allocating.
-    let ctx = ComputeCtx::new(&recipe);
+    let ctx = ComputeCtx::new(&recipe, metrics.clone());
     let mut scratch = AnyScratch::new();
     loop {
         let msg = {

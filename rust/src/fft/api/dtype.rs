@@ -35,6 +35,7 @@
 //! `dtype_api` regression test).
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
 use std::sync::{Arc, Mutex, PoisonError};
 
 use crate::fixed::{FixedArena, FixedFrameRef, FixedPlan, FixedScratch};
@@ -634,23 +635,34 @@ impl AnyArenaPool {
 #[derive(Default)]
 pub struct AnyPlanner {
     cache: Mutex<HashMap<PlanSpec, AnyTransform>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
 }
 
 impl AnyPlanner {
     pub fn new() -> Self {
-        AnyPlanner { cache: Mutex::new(HashMap::new()) }
+        AnyPlanner::default()
     }
 
     /// Fetch or build the transform described by `spec` in
     /// `spec.dtype`.
     pub fn get(&self, spec: PlanSpec) -> FftResult<AnyTransform> {
+        self.get_tracked(spec).map(|(t, _)| t)
+    }
+
+    /// [`AnyPlanner::get`], also reporting whether the lookup was a
+    /// cache hit (`true`) or had to build the plan (`false`) — the
+    /// serving plane feeds this into its metrics.
+    pub fn get_tracked(&self, spec: PlanSpec) -> FftResult<(AnyTransform, bool)> {
         let mut cache = self.cache.lock().unwrap_or_else(PoisonError::into_inner);
         if let Some(t) = cache.get(&spec) {
-            return Ok(t.clone());
+            self.hits.fetch_add(1, AtomicOrdering::Relaxed);
+            return Ok((t.clone(), true));
         }
         let built = spec.build_any()?;
         cache.insert(spec, built.clone());
-        Ok(built)
+        self.misses.fetch_add(1, AtomicOrdering::Relaxed);
+        Ok((built, false))
     }
 
     /// Fetch or build a complex transform for `(n, strategy,
@@ -668,6 +680,32 @@ impl AnyPlanner {
                 .direction(direction)
                 .dtype(dtype),
         )
+    }
+
+    /// [`AnyPlanner::plan`] with hit/miss tracking.
+    pub fn plan_tracked(
+        &self,
+        n: usize,
+        strategy: Strategy,
+        direction: Direction,
+        dtype: DType,
+    ) -> FftResult<(AnyTransform, bool)> {
+        self.get_tracked(
+            PlanSpec::new(n)
+                .strategy(strategy)
+                .direction(direction)
+                .dtype(dtype),
+        )
+    }
+
+    /// Lookups served from cache since construction.
+    pub fn cache_hits(&self) -> u64 {
+        self.hits.load(AtomicOrdering::Relaxed)
+    }
+
+    /// Lookups that had to build a plan (failed builds not counted).
+    pub fn cache_misses(&self) -> u64 {
+        self.misses.load(AtomicOrdering::Relaxed)
     }
 
     /// Number of cached plans.

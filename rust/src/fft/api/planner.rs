@@ -10,6 +10,7 @@
 //! of wedging the serving plane.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::{Arc, Mutex, PoisonError};
 
 use crate::precision::Real;
@@ -23,6 +24,8 @@ use super::transform::Transform;
 /// Thread-safe plan cache keyed by [`PlanSpec`].
 pub struct Planner<T: Real> {
     cache: Mutex<HashMap<PlanSpec, Arc<dyn Transform<T>>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
 }
 
 impl<T: Real> Default for Planner<T> {
@@ -33,7 +36,11 @@ impl<T: Real> Default for Planner<T> {
 
 impl<T: Real> Planner<T> {
     pub fn new() -> Self {
-        Planner { cache: Mutex::new(HashMap::new()) }
+        Planner {
+            cache: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
     }
 
     /// Fetch or build the transform described by `spec`.
@@ -44,17 +51,37 @@ impl<T: Real> Planner<T> {
     /// a downstream `Real` impl with no wire dtype the tag is left
     /// as-is — there is nothing to normalize to.)
     pub fn get(&self, spec: PlanSpec) -> FftResult<Arc<dyn Transform<T>>> {
+        self.get_tracked(spec).map(|(t, _)| t)
+    }
+
+    /// [`Planner::get`], also reporting whether the lookup was a cache
+    /// hit (`true`) or had to build the plan (`false`) — the serving
+    /// plane feeds this into its metrics.
+    pub fn get_tracked(&self, spec: PlanSpec) -> FftResult<(Arc<dyn Transform<T>>, bool)> {
         let spec = match DType::try_of::<T>() {
             Some(dtype) => spec.dtype(dtype),
             None => spec,
         };
         let mut cache = self.cache.lock().unwrap_or_else(PoisonError::into_inner);
         if let Some(t) = cache.get(&spec) {
-            return Ok(t.clone());
+            self.hits.fetch_add(1, Relaxed);
+            return Ok((t.clone(), true));
         }
         let built: Arc<dyn Transform<T>> = Arc::from(spec.build::<T>()?);
         cache.insert(spec, built.clone());
-        Ok(built)
+        self.misses.fetch_add(1, Relaxed);
+        Ok((built, false))
+    }
+
+    /// Lookups served from cache since construction.
+    pub fn cache_hits(&self) -> u64 {
+        self.hits.load(Relaxed)
+    }
+
+    /// Lookups that had to build a plan.  Failed builds are not
+    /// counted — nothing entered the cache.
+    pub fn cache_misses(&self) -> u64 {
+        self.misses.load(Relaxed)
     }
 
     /// Fetch or build a complex transform for `(n, strategy,
@@ -95,6 +122,12 @@ mod tests {
         assert_eq!(planner.len(), 1);
         let _c = planner.plan(256, Strategy::DualSelect, Direction::Inverse).unwrap();
         assert_eq!(planner.len(), 2);
+        assert_eq!((planner.cache_hits(), planner.cache_misses()), (1, 2));
+        let (t, hit) = planner
+            .get_tracked(PlanSpec::new(256).strategy(Strategy::DualSelect))
+            .unwrap();
+        assert!(hit && Arc::ptr_eq(&a, &t));
+        assert_eq!((planner.cache_hits(), planner.cache_misses()), (2, 2));
     }
 
     #[test]

@@ -102,6 +102,70 @@ impl fmt::Display for Strategy {
     }
 }
 
+/// A per-request strategy selection: either an explicit [`Strategy`]
+/// or `Auto`, which defers the choice to loaded tuning wisdom
+/// ([`crate::tune::Wisdom`]) at admission.  `Auto` is resolved to a
+/// concrete strategy *before* a request enters the batcher (so
+/// [`crate::coordinator::PlanKey`]s stay concrete and a tuned request
+/// batches with — and is bit-identical to — an explicit one); with no
+/// wisdom entry it falls back to the server's default strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum StrategyChoice {
+    /// Resolve through tuning wisdom; fall back to the default.
+    Auto,
+    /// Use exactly this strategy.
+    Explicit(Strategy),
+}
+
+impl StrategyChoice {
+    /// Short name used by the CLI and reports ("auto", or the
+    /// underlying strategy's name).
+    pub fn name(self) -> &'static str {
+        match self {
+            StrategyChoice::Auto => "auto",
+            StrategyChoice::Explicit(s) => s.name(),
+        }
+    }
+
+    /// The concrete strategy, if one was chosen explicitly.
+    pub fn explicit(self) -> Option<Strategy> {
+        match self {
+            StrategyChoice::Auto => None,
+            StrategyChoice::Explicit(s) => Some(s),
+        }
+    }
+
+    /// Resolve against an optional tuned choice, else the default.
+    pub fn resolve_with(self, tuned: Option<Strategy>, default: Strategy) -> Strategy {
+        match self {
+            StrategyChoice::Explicit(s) => s,
+            StrategyChoice::Auto => tuned.unwrap_or(default),
+        }
+    }
+}
+
+impl From<Strategy> for StrategyChoice {
+    fn from(s: Strategy) -> Self {
+        StrategyChoice::Explicit(s)
+    }
+}
+
+impl FromStr for StrategyChoice {
+    type Err = FftError;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "auto" => Ok(StrategyChoice::Auto),
+            other => other.parse::<Strategy>().map(StrategyChoice::Explicit),
+        }
+    }
+}
+
+impl fmt::Display for StrategyChoice {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// Transform direction.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Direction {
@@ -139,6 +203,38 @@ mod tests {
             assert_eq!(s.name().parse::<Strategy>().unwrap(), s);
         }
         assert!("bogus".parse::<Strategy>().is_err());
+    }
+
+    #[test]
+    fn strategy_choice_parses_auto_and_delegates() {
+        assert_eq!("auto".parse::<StrategyChoice>().unwrap(), StrategyChoice::Auto);
+        for s in Strategy::ALL {
+            let c: StrategyChoice = s.name().parse().unwrap();
+            assert_eq!(c, StrategyChoice::Explicit(s));
+            assert_eq!(c.name(), s.name());
+            assert_eq!(c.explicit(), Some(s));
+            assert_eq!(StrategyChoice::from(s), c);
+        }
+        assert_eq!(StrategyChoice::Auto.explicit(), None);
+        assert!("bogus".parse::<StrategyChoice>().is_err());
+    }
+
+    #[test]
+    fn strategy_choice_resolution_order() {
+        let auto = StrategyChoice::Auto;
+        // Wisdom entry wins over the default...
+        assert_eq!(
+            auto.resolve_with(Some(Strategy::Cosine), Strategy::DualSelect),
+            Strategy::Cosine
+        );
+        // ...no entry falls back to the default...
+        assert_eq!(auto.resolve_with(None, Strategy::DualSelect), Strategy::DualSelect);
+        // ...and an explicit choice ignores both.
+        let explicit = StrategyChoice::Explicit(Strategy::LinzerFeig);
+        assert_eq!(
+            explicit.resolve_with(Some(Strategy::Cosine), Strategy::DualSelect),
+            Strategy::LinzerFeig
+        );
     }
 
     #[test]

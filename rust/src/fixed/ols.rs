@@ -28,10 +28,6 @@ use super::arena::{FixedArena, FixedScratch};
 use super::plan::FixedPlan;
 use super::{exp2i, QSample};
 
-/// Smallest FFT block the auto-sizer will pick (same as the float
-/// engine).
-const MIN_FFT: usize = 8;
-
 /// Stateful overlap-save FIR filter in fixed-point format `Q`.
 #[derive(Debug)]
 pub struct FixedOlsFilter<Q: QSample> {
@@ -82,7 +78,11 @@ impl<Q: QSample> FixedOlsFilter<Q> {
     /// [`Strategy::DualSelect`] — anything else is the fixed plane's
     /// typed unrepresentability error.
     pub fn new(strategy: Strategy, taps_re: &[f64], taps_im: &[f64]) -> FftResult<Self> {
-        let fft_n = (4 * taps_re.len().max(1)).next_power_of_two().max(MIN_FFT);
+        // Same auto-size rule as the float engine: ~4L, clamped to the
+        // 2L−1 feasibility floor.
+        let fft_n = (4 * taps_re.len().max(1))
+            .next_power_of_two()
+            .max(crate::stream::min_ols_block(taps_re.len()));
         Self::with_fft_len(strategy, taps_re, taps_im, fft_n)
     }
 

@@ -29,8 +29,9 @@ use crate::analysis::bounds::serving_bound_from_tmax;
 use crate::coordinator::Metrics;
 use crate::fft::api::DType;
 use crate::fft::{FftError, FftResult};
-use crate::stream::session::Engine;
+use crate::stream::session::{check_ols_fft_len, Engine};
 use crate::stream::{StreamSpec, MAX_STREAM_OUT_F64S};
+use crate::tune::Wisdom;
 
 use super::node::{
     matched_filter_node, DecimateNode, DetrendNode, EngineNode, FftNode, GraphNode, MagnitudeNode,
@@ -331,7 +332,12 @@ impl GraphExec {
     /// surface as [`FftError::Protocol`] (via `plan`), semantic ones —
     /// shape mismatches, caps, engine build failures — as the engine's
     /// own typed errors.
-    fn build(id: u64, spec: &GraphSpec, cfg: &GraphConfig) -> FftResult<GraphExec> {
+    fn build(
+        id: u64,
+        spec: &GraphSpec,
+        cfg: &GraphConfig,
+        wisdom: Option<&Wisdom>,
+    ) -> FftResult<GraphExec> {
         let plan = spec.plan()?;
         if spec.frame > cfg.max_chunk {
             return Err(FftError::InvalidArgument(format!(
@@ -407,7 +413,17 @@ impl GraphExec {
                     }
                     let mut s =
                         StreamSpec::ols(dtype, strategy, taps_re.clone(), taps_im.clone());
-                    s.fft_len = *fft_len;
+                    // No explicit override → take the tuned block for
+                    // this tap count × dtype, re-validated so stale
+                    // wisdom degrades to the auto-size heuristic
+                    // instead of failing the open.
+                    s.fft_len = fft_len.or_else(|| {
+                        let taps = taps_re.len();
+                        let cap = (4 * cfg.max_taps).next_power_of_two();
+                        wisdom.and_then(|w| w.ols_block(taps, dtype)).filter(|&b| {
+                            b <= cap && check_ols_fft_len(b, taps).is_ok()
+                        })
+                    });
                     let engine = Engine::build(&s)?;
                     (
                         Box::new(EngineNode::new(engine, true, dtype, strategy)),
@@ -640,6 +656,9 @@ pub struct GraphRegistry {
     cfg: GraphConfig,
     inner: Mutex<GraphsInner>,
     metrics: Option<Arc<Metrics>>,
+    /// Tuned OLS block lengths ([`crate::tune`]); consulted only for
+    /// `Ols` nodes that leave `fft_len` unset.
+    wisdom: Option<Arc<Wisdom>>,
 }
 
 impl Default for GraphRegistry {
@@ -659,6 +678,7 @@ impl GraphRegistry {
                 next_sub: 1,
             }),
             metrics: None,
+            wisdom: None,
         }
     }
 
@@ -666,6 +686,13 @@ impl GraphRegistry {
     /// [`Metrics`].
     pub fn with_metrics(cfg: GraphConfig, metrics: Arc<Metrics>) -> Self {
         GraphRegistry { metrics: Some(metrics), ..Self::new(cfg) }
+    }
+
+    /// Attach tuned wisdom (builder style); see
+    /// [`crate::stream::SessionRegistry::with_wisdom`].
+    pub fn with_wisdom(mut self, wisdom: Option<Arc<Wisdom>>) -> Self {
+        self.wisdom = wisdom;
+        self
     }
 
     pub fn config(&self) -> GraphConfig {
@@ -705,7 +732,7 @@ impl GraphRegistry {
             );
             id
         };
-        let exec = match GraphExec::build(id, spec, &self.cfg) {
+        let exec = match GraphExec::build(id, spec, &self.cfg, self.wisdom.as_deref()) {
             Ok(e) => e,
             Err(e) => {
                 self.inner

@@ -60,6 +60,14 @@
 //!   backpressure, and every published frame carries the composed
 //!   running bound along its source→sink path.  Served remotely via
 //!   the wire protocol's `GRAPH_*` ops (introduced in v4).
+//! * **Autotuning plane** ([`tune`]) — the measured answer to "which
+//!   plan?": a deterministic measurement harness, a candidate search
+//!   over the existing plan space, and persisted host-fingerprinted
+//!   wisdom ([`tune::Wisdom`]) that `fftd --wisdom` loads at boot.
+//!   Requests carrying [`fft::StrategyChoice::Auto`] resolve through
+//!   it; stream/graph overlap-save opens consult it for FFT block
+//!   lengths.  Selection only — results stay bit-identical to the
+//!   explicit plans.
 //! * **Applications** ([`signal`], [`workload`]) — the radar pulse
 //!   compression and spectrogram pipelines the paper motivates, used by
 //!   the examples and benches.
@@ -81,5 +89,6 @@ pub mod precision;
 pub mod runtime;
 pub mod signal;
 pub mod stream;
+pub mod tune;
 pub mod util;
 pub mod workload;

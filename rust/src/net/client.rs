@@ -40,7 +40,7 @@ use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 use crate::coordinator::FftOp;
-use crate::fft::{DType, FftError, FftResult, Strategy};
+use crate::fft::{DType, FftError, FftResult, Strategy, StrategyChoice};
 use crate::graph::GraphSpec;
 use crate::stream::StreamSpec;
 
@@ -163,7 +163,7 @@ pub struct FftClient {
     writer: BufWriter<TcpStream>,
     next_id: u64,
     dtype: DType,
-    strategy: Strategy,
+    strategy: StrategyChoice,
     /// Responses read while waiting for a specific id (completion
     /// order differs from submission order under pipelining).
     pending: VecDeque<wire::Response>,
@@ -189,7 +189,7 @@ impl FftClient {
             writer: BufWriter::new(stream),
             next_id: 1,
             dtype: DType::F32,
-            strategy: Strategy::DualSelect,
+            strategy: Strategy::DualSelect.into(),
             pending: VecDeque::new(),
             in_flight: 0,
             poisoned: false,
@@ -198,10 +198,12 @@ impl FftClient {
 
     /// Set the dtype/strategy used by [`FftClient::call`] and
     /// [`FftClient::submit`] (the wire defaults are f32 and
-    /// dual-select).
-    pub fn with_defaults(mut self, dtype: DType, strategy: Strategy) -> FftClient {
+    /// dual-select).  Accepts a plain [`Strategy`] or a
+    /// [`StrategyChoice`] — pass [`StrategyChoice::Auto`] to let the
+    /// server resolve through its loaded wisdom.
+    pub fn with_defaults(mut self, dtype: DType, strategy: impl Into<StrategyChoice>) -> FftClient {
         self.dtype = dtype;
-        self.strategy = strategy;
+        self.strategy = strategy.into();
         self
     }
 
@@ -236,10 +238,11 @@ impl FftClient {
         &mut self,
         op: FftOp,
         dtype: DType,
-        strategy: Strategy,
+        strategy: impl Into<StrategyChoice>,
         re: &[f64],
         im: &[f64],
     ) -> FftResult<u64> {
+        let strategy = strategy.into();
         if self.poisoned {
             return Err(FftError::ChannelClosed(
                 "connection poisoned by an earlier transport error; reconnect",
@@ -311,7 +314,7 @@ impl FftClient {
         &mut self,
         op: FftOp,
         dtype: DType,
-        strategy: Strategy,
+        strategy: impl Into<StrategyChoice>,
         re: &[f64],
         im: &[f64],
     ) -> FftResult<NetResponse> {

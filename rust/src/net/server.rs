@@ -189,14 +189,14 @@ impl FftdServer {
             .map_err(|e| FftError::Backend(format!("reading fftd listener address: {e}")))?;
         let stop = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<Vec<ConnHandle>>> = Arc::new(Mutex::new(Vec::new()));
-        let streams = Arc::new(SessionRegistry::with_metrics(
-            stream_cfg,
-            coordinator.metrics_handle(),
-        ));
-        let graphs = Arc::new(GraphRegistry::with_metrics(
-            graph_cfg,
-            coordinator.metrics_handle(),
-        ));
+        let streams = Arc::new(
+            SessionRegistry::with_metrics(stream_cfg, coordinator.metrics_handle())
+                .with_wisdom(coordinator.wisdom_handle()),
+        );
+        let graphs = Arc::new(
+            GraphRegistry::with_metrics(graph_cfg, coordinator.metrics_handle())
+                .with_wisdom(coordinator.wisdom_handle()),
+        );
 
         let accept_handle = {
             let stop = stop.clone();

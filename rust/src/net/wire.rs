@@ -59,7 +59,7 @@
 use std::io::{Read, Write};
 
 use crate::coordinator::FftOp;
-use crate::fft::{DType, FftError, FftResult, Strategy};
+use crate::fft::{DType, FftError, FftResult, Strategy, StrategyChoice};
 use crate::graph::{GraphSpec, NodeKind, NodeSpec, MAX_GRAPH_EDGES, MAX_GRAPH_NODES};
 use crate::signal::window::Window;
 use crate::stream::{StreamKind, StreamSpec};
@@ -83,7 +83,15 @@ pub const MAGIC: [u8; 4] = *b"FFTN";
 /// and the overlap-save FFT block-length override in `STREAM_OPEN`'s
 /// previously-zero `frame` field — new tags and a repurposed
 /// must-be-zero field, hence the bump.
-pub const VERSION: u16 = 4;
+///
+/// v5 added strategy tag 4 = `auto` on one-shot FFT requests: the
+/// server resolves it through its loaded tuning wisdom (node-local;
+/// wisdom itself never crosses the wire).  A v4 peer would reject the
+/// tag rather than misparse, but the *meaning* of a request changed —
+/// responses may be computed under a server-chosen strategy — hence
+/// the bump.  `STREAM_OPEN`/`GRAPH_OPEN` still require a concrete
+/// strategy tag (0–3): sessions pin their plan at open.
+pub const VERSION: u16 = 5;
 /// Fixed header size in bytes.
 pub const HEADER_LEN: usize = 28;
 /// Upper bound on a frame payload: 64 MiB = 4 Mi complex f64 samples.
@@ -137,7 +145,9 @@ pub struct Request {
     /// Caller-chosen correlation id, echoed on the response.
     pub id: u64,
     pub op: FftOp,
-    pub strategy: Strategy,
+    /// Either an explicit strategy (tags 0–3) or `auto` (tag 4,
+    /// protocol v5): resolved through the server's loaded wisdom.
+    pub strategy: StrategyChoice,
     pub dtype: DType,
     pub re: Vec<f64>,
     pub im: Vec<f64>,
@@ -317,6 +327,26 @@ fn strategy_from(code: u8) -> FftResult<Strategy> {
         2 => Ok(Strategy::Cosine),
         3 => Ok(Strategy::DualSelect),
         other => Err(FftError::Protocol(format!("unknown strategy tag {other}"))),
+    }
+}
+
+/// Tag 4 = `auto` (protocol v5).  Accepted on one-shot FFT requests
+/// only; `STREAM_OPEN`/`GRAPH_OPEN` decode through [`strategy_from`]
+/// and reject it — a session's plan is pinned at open.
+const STRATEGY_TAG_AUTO: u8 = 4;
+
+fn choice_code(c: StrategyChoice) -> u8 {
+    match c {
+        StrategyChoice::Auto => STRATEGY_TAG_AUTO,
+        StrategyChoice::Explicit(s) => strategy_code(s),
+    }
+}
+
+fn choice_from(code: u8) -> FftResult<StrategyChoice> {
+    if code == STRATEGY_TAG_AUTO {
+        Ok(StrategyChoice::Auto)
+    } else {
+        strategy_from(code).map(StrategyChoice::Explicit)
     }
 }
 
@@ -566,7 +596,7 @@ pub fn encode_request(req: &Request) -> FftResult<Vec<u8>> {
 pub fn encode_request_parts(
     id: u64,
     op: FftOp,
-    strategy: Strategy,
+    strategy: StrategyChoice,
     dtype: DType,
     re: &[f64],
     im: &[f64],
@@ -577,7 +607,7 @@ pub fn encode_request_parts(
     out.extend_from_slice(&encode_header(
         KIND_REQUEST,
         op_code(op),
-        strategy_code(strategy),
+        choice_code(strategy),
         dtype_code(dtype),
         id,
         body_len,
@@ -1019,7 +1049,7 @@ pub fn write_request_parts<W: Write>(
     w: &mut W,
     id: u64,
     op: FftOp,
-    strategy: Strategy,
+    strategy: StrategyChoice,
     dtype: DType,
     re: &[f64],
     im: &[f64],
@@ -1437,7 +1467,7 @@ pub fn read_request_frame<R: Read>(r: &mut R) -> FftResult<Option<RequestFrame>>
         }
         code => {
             let op = op_from(code)?;
-            let strategy = strategy_from(h.strategy)?;
+            let strategy = choice_from(h.strategy)?;
             let dtype = dtype_from(h.dtype)?;
             let body = read_body(r, h.body_len)?;
             if body.len() % 16 != 0 {
@@ -1626,6 +1656,18 @@ mod tests {
         assert!(matches!(op_from(9), Err(FftError::Protocol(_))));
         assert!(matches!(strategy_from(9), Err(FftError::Protocol(_))));
         assert!(matches!(dtype_from(9), Err(FftError::Protocol(_))));
+        // The choice codec covers tags 0–4; the concrete-strategy
+        // codec rejects `auto` (sessions pin their plan at open).
+        assert_eq!(choice_from(choice_code(StrategyChoice::Auto)).unwrap(), StrategyChoice::Auto);
+        for s in Strategy::ALL {
+            assert_eq!(choice_code(StrategyChoice::Explicit(s)), strategy_code(s));
+            assert_eq!(
+                choice_from(strategy_code(s)).unwrap(),
+                StrategyChoice::Explicit(s)
+            );
+        }
+        assert!(matches!(strategy_from(STRATEGY_TAG_AUTO), Err(FftError::Protocol(_))));
+        assert!(matches!(choice_from(9), Err(FftError::Protocol(_))));
     }
 
     #[test]
@@ -1689,10 +1731,12 @@ mod tests {
         assert_eq!(node_kind_tag(&NodeKind::Magnitude), 8);
         assert_eq!(node_kind_tag(&NodeKind::Decimate { factor: 2 }), 9);
         assert_eq!(node_kind_tag(&NodeKind::Summary), 10);
-        // v4: the graph plane (GRAPH_* ops, the PUBLISH status, and the
-        // STREAM_OPEN frame-field override) — v3 peers must get a
-        // clean version error, never misparse a topology body.
-        assert_eq!(VERSION, 4);
+        // v5: strategy tag 4 = auto on one-shot requests (wisdom
+        // resolution server-side) — v4 peers must get a clean version
+        // error, never serve an `auto` request under tag confusion.
+        assert_eq!(strategy_code(Strategy::DualSelect) + 1, STRATEGY_TAG_AUTO);
+        assert_eq!(choice_code(StrategyChoice::Auto), 4);
+        assert_eq!(VERSION, 5);
     }
 
     #[test]
@@ -1823,19 +1867,22 @@ mod tests {
             RequestFrame::StreamClose { id, session } => assert_eq!((id, session), (12, 77)),
             other => panic!("expected stream-close, got {other:?}"),
         }
-        // One-shot frames still decode through the same entry point.
-        let req = Request {
-            id: 13,
-            op: FftOp::Forward,
-            strategy: Strategy::DualSelect,
-            dtype: DType::F32,
-            re: vec![1.0],
-            im: vec![2.0],
-        };
-        let bytes = encode_request(&req).unwrap();
-        match read_request_frame(&mut &bytes[..]).unwrap().unwrap() {
-            RequestFrame::Fft(got) => assert_eq!(got, req),
-            other => panic!("expected fft request, got {other:?}"),
+        // One-shot frames still decode through the same entry point —
+        // with an explicit strategy or the v5 `auto` tag.
+        for strategy in [StrategyChoice::Explicit(Strategy::DualSelect), StrategyChoice::Auto] {
+            let req = Request {
+                id: 13,
+                op: FftOp::Forward,
+                strategy,
+                dtype: DType::F32,
+                re: vec![1.0],
+                im: vec![2.0],
+            };
+            let bytes = encode_request(&req).unwrap();
+            match read_request_frame(&mut &bytes[..]).unwrap().unwrap() {
+                RequestFrame::Fft(got) => assert_eq!(got, req),
+                other => panic!("expected fft request, got {other:?}"),
+            }
         }
         // ... and the one-shot-only reader refuses stream frames.
         let bytes = encode_stream_close(14, 1).unwrap();
@@ -1899,6 +1946,19 @@ mod tests {
         let mut bytes = encode_stream_open(1, &spec).unwrap();
         bytes[HEADER_LEN] = 9; // kind tag
         assert!(read_request_frame(&mut &bytes[..]).is_err());
+        // The v5 `auto` strategy tag is one-shot-only: a session must
+        // pin its plan at open, so tag 4 there is a typed error.  The
+        // header is checksummed, so re-encode it rather than poking
+        // the strategy byte in place.
+        let enc = encode_stream_open(1, &spec).unwrap();
+        let body_len = (enc.len() - HEADER_LEN) as u32;
+        let h = encode_header(KIND_REQUEST, OP_STREAM_OPEN, STRATEGY_TAG_AUTO, 1, 1, body_len);
+        let mut bytes = h.to_vec();
+        bytes.extend_from_slice(&enc[HEADER_LEN..]);
+        assert!(matches!(
+            read_request_frame(&mut &bytes[..]).unwrap_err(),
+            FftError::Protocol(_)
+        ));
         let mut bytes = encode_stream_open(1, &spec).unwrap();
         bytes[HEADER_LEN + 12] = 9; // window tag
         assert!(read_request_frame(&mut &bytes[..]).is_err());
@@ -1965,7 +2025,7 @@ mod tests {
         let err = encode_request_parts(
             1,
             FftOp::Forward,
-            Strategy::DualSelect,
+            Strategy::DualSelect.into(),
             DType::F32,
             &[1.0, 2.0, 3.0],
             &[4.0],

@@ -36,7 +36,7 @@ pub mod ols;
 pub mod session;
 pub mod stft;
 
-pub use ols::{filter_offline, filter_offline_any, OlsFilter};
+pub use ols::{filter_offline, filter_offline_any, min_ols_block, OlsFilter};
 pub use session::{
     SessionRegistry, StreamConfig, StreamKind, StreamOut, StreamSession, StreamSpec,
     MAX_STREAM_OUT_F64S,

@@ -26,7 +26,8 @@
 //! property suite for it.
 //!
 //! The FFT size is auto-chosen from the tap count (`~4·L`, clamped to
-//! a small minimum) so the per-sample cost is `O(log L)`; history
+//! the `2L − 1` feasibility floor of [`min_ols_block`]) so the
+//! per-sample cost is `O(log L)`; history
 //! (the last `L-1` input samples) carries across chunks.  Each block
 //! costs one forward and one inverse transform, and the filter tracks
 //! the **cumulative butterfly pass count** so the session layer can
@@ -43,8 +44,14 @@ use crate::fft::convolve::pointwise_mul_in;
 use crate::fft::{FftError, FftResult, Strategy};
 use crate::precision::{Real, SplitBuf};
 
-/// Smallest FFT block the auto-sizer will pick.
-const MIN_FFT: usize = 8;
+/// Smallest feasible overlap-save FFT block for an `L`-tap filter:
+/// `2L − 1` rounded up to a power of two (one block must hold the
+/// `L − 1` overlap plus at least one valid output sample), clamped to
+/// the smallest transform size 2.  This is both the auto-sizer's
+/// floor and the bottom of the autotuner's block search space.
+pub fn min_ols_block(taps: usize) -> usize {
+    (2 * taps.max(1) - 1).max(2).next_power_of_two()
+}
 
 /// Stateful overlap-save FIR filter over working precision `T`.
 #[derive(Debug)]
@@ -83,7 +90,9 @@ impl<T: Real> OlsFilter<T> {
         taps_re: &[f64],
         taps_im: &[f64],
     ) -> FftResult<Self> {
-        let fft_n = (4 * taps_re.len().max(1)).next_power_of_two().max(MIN_FFT);
+        let fft_n = (4 * taps_re.len().max(1))
+            .next_power_of_two()
+            .max(min_ols_block(taps_re.len()));
         Self::with_fft_len(planner, strategy, taps_re, taps_im, fft_n)
     }
 

@@ -40,6 +40,7 @@ use crate::fft::{FftError, FftResult, Strategy};
 use crate::fixed::FixedOlsFilter;
 use crate::precision::{Bf16, F16};
 use crate::signal::window::Window;
+use crate::tune::Wisdom;
 
 use super::ols::OlsFilter;
 use super::stft::{StftStream, StftStreamConfig};
@@ -467,6 +468,9 @@ pub struct SessionRegistry {
     cfg: StreamConfig,
     inner: Mutex<RegistryInner>,
     metrics: Option<Arc<Metrics>>,
+    /// Tuned OLS block lengths ([`crate::tune`]); consulted only when
+    /// a spec leaves `fft_len` unset.
+    wisdom: Option<Arc<Wisdom>>,
 }
 
 impl Default for SessionRegistry {
@@ -481,6 +485,7 @@ impl SessionRegistry {
             cfg,
             inner: Mutex::new(RegistryInner { sessions: HashMap::new(), next_id: 1 }),
             metrics: None,
+            wisdom: None,
         }
     }
 
@@ -488,6 +493,14 @@ impl SessionRegistry {
     /// max pass count) into the coordinator's [`Metrics`].
     pub fn with_metrics(cfg: StreamConfig, metrics: Arc<Metrics>) -> Self {
         SessionRegistry { metrics: Some(metrics), ..Self::new(cfg) }
+    }
+
+    /// Attach tuned wisdom (builder style).  OLS opens that leave
+    /// `fft_len` unset take the tuned block length for their tap count
+    /// × dtype when one is recorded; explicit overrides always win.
+    pub fn with_wisdom(mut self, wisdom: Option<Arc<Wisdom>>) -> Self {
+        self.wisdom = wisdom;
+        self
     }
 
     pub fn config(&self) -> StreamConfig {
@@ -535,6 +548,27 @@ impl SessionRegistry {
                 spec.frame, self.cfg.max_stft_frame
             )));
         }
+        // With no explicit block override, an OLS open consults the
+        // loaded wisdom for a tuned block length.  A tuned value is
+        // re-validated here (feasibility floor + registry ceiling) so
+        // a stale wisdom file can never make an open fail — it just
+        // falls back to the auto-size heuristic.
+        let tuned_spec;
+        let spec = if spec.kind == StreamKind::Ols && spec.fft_len.is_none() {
+            let taps = spec.taps_re.len();
+            let cap = (4 * self.cfg.max_taps).next_power_of_two();
+            match self.wisdom.as_ref().and_then(|w| w.ols_block(taps, spec.dtype)).filter(|&b| {
+                b <= cap && check_ols_fft_len(b, taps).is_ok()
+            }) {
+                Some(block) => {
+                    tuned_spec = spec.clone().with_fft_len(block);
+                    &tuned_spec
+                }
+                None => spec,
+            }
+        } else {
+            spec
+        };
         // Reserve the slot first (cheap check under the lock), build
         // the engine outside it, then fill the reservation.
         let id = {

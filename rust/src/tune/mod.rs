@@ -1,0 +1,81 @@
+//! `fft::tune` — the autotuning planner with persisted wisdom.
+//!
+//! FFT plan choice is an empirical question: which butterfly strategy
+//! and kernel organization wins at a given size depends on the
+//! machine, and the honest way to answer it is to *measure* (the FFTW
+//! wisdom discipline).  This module is the crate's measured answer,
+//! end to end:
+//!
+//! * [`measure`] — the deterministic harness: monotonic clock, warmup
+//!   then median-of-k repetitions, every buffer pooled before the
+//!   first timed repetition so timing is alloc-free.
+//! * [`search`] — the candidate enumerator over the *existing* plan
+//!   space (Stockham r2/r4, DIT, Bluestein × the four butterfly
+//!   strategies; overlap-save FFT blocks pow2 ≥ 2L−1) and the
+//!   budget-bounded sweep.  Because every candidate is a plan the
+//!   bound/bit-identity suites already cover, tuning can never change
+//!   a result bit — it only picks among verified plans.
+//! * [`wisdom`] — the persisted winners: a versioned, checksummed,
+//!   zero-dependency file keyed by `(n, op, dtype)` and fenced by a
+//!   [`host_fingerprint`] so wisdom measured on another machine is
+//!   rejected with a typed error instead of silently mis-applied.
+//!
+//! Serving integration: `fftd --wisdom PATH` loads a file at boot;
+//! requests carrying [`crate::fft::StrategyChoice::Auto`] resolve
+//! through it at admission (explicit choice > wisdom entry > server
+//! default — see `StrategyChoice::resolve_with`), and stream/graph
+//! overlap-save opens without an explicit `fft_len` consult it for
+//! the tuned block length.  Wisdom is node-local and never crosses
+//! the wire.
+
+pub mod measure;
+pub mod search;
+pub mod wisdom;
+
+pub use measure::{measure_fft, measure_ols, MeasureConfig, Measurement};
+pub use search::{fft_candidates, ols_block_candidates, tune, TuneConfig, TuneOutcome, TuneRow};
+pub use wisdom::{TuneOp, Wisdom, WisdomEntry, WISDOM_MAGIC, WISDOM_VERSION};
+
+/// A fingerprint of the machine wisdom was measured on: FNV-1a over
+/// the compile-time architecture and OS, the available parallelism,
+/// and the CPU model reported by `/proc/cpuinfo` (when present).
+/// Plan timings don't transfer across any of those boundaries, so a
+/// mismatch means the file's measurements are meaningless here and
+/// [`Wisdom::decode`] rejects it with a typed error.
+pub fn host_fingerprint() -> u64 {
+    const BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = BASIS;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    eat(std::env::consts::ARCH.as_bytes());
+    eat(b"|");
+    eat(std::env::consts::OS.as_bytes());
+    eat(b"|");
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    eat(&(threads as u64).to_le_bytes());
+    eat(b"|");
+    if let Ok(cpuinfo) = std::fs::read_to_string("/proc/cpuinfo") {
+        if let Some(line) = cpuinfo.lines().find(|l| l.starts_with("model name")) {
+            eat(line.as_bytes());
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_fingerprint_is_stable_within_a_process() {
+        let a = host_fingerprint();
+        let b = host_fingerprint();
+        assert_eq!(a, b);
+        assert_ne!(a, 0);
+    }
+}

@@ -1,0 +1,313 @@
+//! The candidate enumerator and budget-bounded search.
+//!
+//! The search space is exactly the existing plan space — every
+//! candidate is a [`PlanSpec`] (strategy × algorithm) or an
+//! overlap-save block length the serving planes could already be
+//! asked for explicitly.  Tuning therefore cannot change any result
+//! bit: it only reorders which of the already-verified plans `Auto`
+//! requests land on.
+//!
+//! The budget is a soft wall-clock bound checked *between*
+//! measurements: the first key of the sweep always completes (so even
+//! a tiny CI budget produces usable wisdom), and once the budget is
+//! exhausted the remaining keys are skipped and reported as such
+//! rather than half-measured.
+
+use std::time::{Duration, Instant};
+
+use crate::fft::{Algorithm, DType, FftResult, PlanSpec, Strategy};
+use crate::stream::min_ols_block;
+
+use super::measure::{measure_fft, measure_ols, MeasureConfig};
+use super::wisdom::{TuneOp, Wisdom, WisdomEntry};
+
+/// What to sweep and how long to spend.
+#[derive(Clone, Debug)]
+pub struct TuneConfig {
+    /// FFT sizes to tune (each × every dtype in `dtypes`).
+    pub sizes: Vec<usize>,
+    /// Overlap-save tap counts to tune block lengths for.
+    pub taps: Vec<usize>,
+    /// Dtypes to tune.
+    pub dtypes: Vec<DType>,
+    /// Soft wall-clock budget for the whole sweep.
+    pub budget: Duration,
+    /// Repetition policy per candidate.
+    pub measure: MeasureConfig,
+}
+
+impl Default for TuneConfig {
+    fn default() -> Self {
+        TuneConfig {
+            sizes: vec![256, 1024, 4096],
+            taps: vec![32],
+            dtypes: vec![DType::F32],
+            budget: Duration::from_secs(2),
+            measure: MeasureConfig::default(),
+        }
+    }
+}
+
+/// One winner row for reports (`fmafft tune` table, `BENCH_tune.json`).
+#[derive(Clone, Debug)]
+pub struct TuneRow {
+    pub op: TuneOp,
+    pub n: usize,
+    pub dtype: DType,
+    pub strategy: Strategy,
+    pub algorithm: Algorithm,
+    pub block_len: usize,
+    pub median_ns: u64,
+    /// How many candidates were actually measured for this key.
+    pub candidates: usize,
+}
+
+/// The completed search: validated wisdom plus the report rows.
+#[derive(Clone, Debug)]
+pub struct TuneOutcome {
+    pub wisdom: Wisdom,
+    pub rows: Vec<TuneRow>,
+    /// True when the budget ran out before the sweep finished.
+    pub budget_exhausted: bool,
+}
+
+/// Every (strategy, algorithm) plan candidate for an `n`-point FFT in
+/// `dtype`.  Fixed-point planes only represent the dual-select tables
+/// over the Stockham kernel; float planes sweep all four strategies
+/// over Stockham r2, r4 (power-of-four sizes, ratio strategies only —
+/// the r4 kernel has no standard-butterfly form), DIT and Bluestein.
+/// Candidates the planner would reject (e.g. r4 × standard) are kept
+/// out here so the measured count matches the true space.
+pub fn fft_candidates(n: usize, dtype: DType) -> Vec<(Strategy, Algorithm)> {
+    if dtype.is_fixed() {
+        return vec![(Strategy::DualSelect, Algorithm::Stockham)];
+    }
+    let pow4 = n.is_power_of_two() && n.trailing_zeros() % 2 == 0;
+    let mut out = Vec::new();
+    for s in Strategy::ALL {
+        if n.is_power_of_two() && n >= 2 {
+            out.push((s, Algorithm::Stockham));
+            out.push((s, Algorithm::Dit));
+            if pow4 && s != Strategy::Standard {
+                out.push((s, Algorithm::Radix4));
+            }
+        }
+        out.push((s, Algorithm::Bluestein));
+    }
+    out
+}
+
+/// Every overlap-save FFT block-length candidate for an `L`-tap
+/// filter: powers of two from the feasibility floor 2L−1 rounded up
+/// (the smallest block holding a full overlap plus one valid output
+/// sample) through 16L (past which per-sample FFT cost has flattened
+/// for every size this crate serves).
+pub fn ols_block_candidates(taps: usize) -> Vec<usize> {
+    let floor = min_ols_block(taps);
+    let ceil = (16 * taps.max(1)).next_power_of_two();
+    let mut out = Vec::new();
+    let mut b = floor;
+    while b <= ceil.max(floor) {
+        out.push(b);
+        b *= 2;
+    }
+    out
+}
+
+/// Run the sweep described by `cfg`.  Unbuildable candidates are
+/// skipped; a key where *no* candidate builds (there are none in the
+/// shipped plan space) simply produces no entry.  Measurement errors
+/// on a buildable plan are real failures and propagate.
+pub fn tune(cfg: &TuneConfig) -> FftResult<TuneOutcome> {
+    let t0 = Instant::now();
+    let mut wisdom = Wisdom::new();
+    let mut rows: Vec<TuneRow> = Vec::new();
+    let mut exhausted = false;
+    // The first key always completes: a budget too small to measure
+    // anything would otherwise write an empty (useless) wisdom file.
+    let mut over = |rows: &Vec<TuneRow>| {
+        let hit = t0.elapsed() >= cfg.budget && !rows.is_empty();
+        if hit {
+            exhausted = true;
+        }
+        hit
+    };
+
+    'fft: for &dtype in &cfg.dtypes {
+        for &n in &cfg.sizes {
+            if over(&rows) {
+                break 'fft;
+            }
+            let mut best: Option<(u64, Strategy, Algorithm)> = None;
+            let mut measured = 0usize;
+            for (strategy, algorithm) in fft_candidates(n, dtype) {
+                let spec = PlanSpec::new(n)
+                    .strategy(strategy)
+                    .algorithm(algorithm)
+                    .dtype(dtype);
+                let m = match measure_fft(spec, &cfg.measure) {
+                    Ok(m) => m,
+                    // Not in this key's plan space (size/strategy
+                    // combination the planner types out) — skip.
+                    Err(_) => continue,
+                };
+                measured += 1;
+                if best.map_or(true, |(t, _, _)| m.median_ns < t) {
+                    best = Some((m.median_ns, strategy, algorithm));
+                }
+            }
+            if let Some((median_ns, strategy, algorithm)) = best {
+                wisdom.insert(
+                    n,
+                    TuneOp::Fft,
+                    dtype,
+                    WisdomEntry { strategy, algorithm, block_len: 0, median_ns },
+                )?;
+                rows.push(TuneRow {
+                    op: TuneOp::Fft,
+                    n,
+                    dtype,
+                    strategy,
+                    algorithm,
+                    block_len: 0,
+                    median_ns,
+                    candidates: measured,
+                });
+            }
+        }
+    }
+
+    'ols: for &dtype in &cfg.dtypes {
+        for &taps in &cfg.taps {
+            if taps == 0 {
+                continue;
+            }
+            if over(&rows) {
+                break 'ols;
+            }
+            // Block-length tuning holds the strategy at the serving
+            // default (dual-select — the only one the fixed planes
+            // represent) and sweeps the block only; the block is a
+            // cost knob, bit-identity is per (strategy, block).
+            let taps_re: Vec<f64> =
+                (0..taps).map(|i| 0.5_f64.powi(i as i32 % 8)).collect();
+            let taps_im = vec![0.0; taps];
+            let mut best: Option<(u64, usize)> = None;
+            let mut measured = 0usize;
+            for block in ols_block_candidates(taps) {
+                let m = measure_ols(
+                    dtype,
+                    Strategy::DualSelect,
+                    &taps_re,
+                    &taps_im,
+                    block,
+                    &cfg.measure,
+                )?;
+                measured += 1;
+                if best.map_or(true, |(t, _)| m.median_ns < t) {
+                    best = Some((m.median_ns, block));
+                }
+            }
+            if let Some((median_ns, block)) = best {
+                wisdom.insert(
+                    taps,
+                    TuneOp::Ols,
+                    dtype,
+                    WisdomEntry {
+                        strategy: Strategy::DualSelect,
+                        algorithm: Algorithm::Auto,
+                        block_len: block as u32,
+                        median_ns,
+                    },
+                )?;
+                rows.push(TuneRow {
+                    op: TuneOp::Ols,
+                    n: taps,
+                    dtype,
+                    strategy: Strategy::DualSelect,
+                    algorithm: Algorithm::Auto,
+                    block_len: block,
+                    median_ns,
+                    candidates: measured,
+                });
+            }
+        }
+    }
+
+    Ok(TuneOutcome { wisdom, rows, budget_exhausted: exhausted })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fft_candidate_space_matches_plan_space() {
+        // Fixed dtypes: dual-select × Stockham only.
+        assert_eq!(
+            fft_candidates(64, DType::I16),
+            vec![(Strategy::DualSelect, Algorithm::Stockham)]
+        );
+        // Power of four: Stockham + DIT for all four strategies,
+        // radix-4 for the three ratio strategies, Bluestein for all.
+        let c64 = fft_candidates(64, DType::F32);
+        assert_eq!(c64.len(), 4 * 3 + 3);
+        assert!(c64.contains(&(Strategy::Cosine, Algorithm::Radix4)));
+        assert!(!c64.contains(&(Strategy::Standard, Algorithm::Radix4)));
+        // Power of two, not of four: no radix-4 candidates.
+        let c128 = fft_candidates(128, DType::F32);
+        assert!(c128.iter().all(|&(_, a)| a != Algorithm::Radix4));
+        // Non-power-of-two: Bluestein only.
+        let c60 = fft_candidates(60, DType::F64);
+        assert!(c60.iter().all(|&(_, a)| a == Algorithm::Bluestein));
+        assert_eq!(c60.len(), 4);
+    }
+
+    #[test]
+    fn ols_candidates_start_at_the_feasibility_floor() {
+        // L=1: 2L-1 = 1, clamped to the minimum transform size 2.
+        assert_eq!(ols_block_candidates(1)[0], 2);
+        // L=8: 2L-1 = 15 -> 16; ceiling 16L = 128.
+        assert_eq!(ols_block_candidates(8), vec![16, 32, 64, 128]);
+        for block in ols_block_candidates(33) {
+            assert!(block.is_power_of_two() && block >= 65);
+        }
+    }
+
+    #[test]
+    fn tiny_budget_still_tunes_the_first_key() {
+        let cfg = TuneConfig {
+            sizes: vec![16, 32],
+            taps: vec![4],
+            dtypes: vec![DType::F32],
+            budget: Duration::ZERO,
+            measure: MeasureConfig { warmup: 0, reps: 1, frames: 1 },
+        };
+        let out = tune(&cfg).unwrap();
+        assert!(out.budget_exhausted);
+        assert_eq!(out.rows.len(), 1, "first key must complete even at zero budget");
+        assert!(out.wisdom.fft_strategy(16, DType::F32).is_some());
+    }
+
+    #[test]
+    fn full_sweep_writes_fft_and_ols_entries() {
+        let cfg = TuneConfig {
+            sizes: vec![16],
+            taps: vec![2],
+            dtypes: vec![DType::F32, DType::I16],
+            budget: Duration::from_secs(600),
+            measure: MeasureConfig { warmup: 0, reps: 1, frames: 1 },
+        };
+        let out = tune(&cfg).unwrap();
+        assert!(!out.budget_exhausted);
+        assert!(out.wisdom.fft_strategy(16, DType::F32).is_some());
+        assert_eq!(out.wisdom.fft_strategy(16, DType::I16), Some(Strategy::DualSelect));
+        let block = out.wisdom.ols_block(2, DType::F32).unwrap();
+        assert!(block.is_power_of_two() && block >= 4);
+        assert!(out.wisdom.ols_block(2, DType::I16).is_some());
+        // Round-trips through the file codec.
+        let bytes = out.wisdom.encode();
+        let back = Wisdom::decode_for_host(&bytes, out.wisdom.host()).unwrap();
+        assert_eq!(back, out.wisdom);
+    }
+}

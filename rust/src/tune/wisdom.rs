@@ -1,0 +1,454 @@
+//! The persisted wisdom file: measured plan winners, keyed by
+//! `(n, op, dtype)` and fenced by a host fingerprint.
+//!
+//! The format follows the wire codec's discipline (`PROTOCOL.md`
+//! framing, [`crate::net::wire::checksum`] FNV-1a integrity, tag
+//! values pinned to this file — never derived from enum order), but
+//! wisdom is strictly **node-local**: it describes *this machine's*
+//! measured preferences and never crosses the wire.  A file recorded
+//! on another host fails decode with a typed
+//! [`FftError::Protocol`] — stale foreign wisdom is ignored, not
+//! silently applied.
+//!
+//! Every malformation — truncation, bad magic, checksum mismatch,
+//! unknown version, unknown op/dtype/strategy/algorithm tag, an entry
+//! violating the plan-space invariants (fixed-point entries must be
+//! dual-select; OLS blocks must be powers of two ≥ 2L−1) — is a typed
+//! [`FftError::Protocol`] and never a panic, so a corrupt file
+//! degrades the server to its defaults instead of taking it down.
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "FWIS"
+//! 4       2     version (little-endian u16) = 1
+//! 6       2     reserved (zero)
+//! 8       8     host fingerprint (tune::host_fingerprint)
+//! 16      4     entry count (u32)
+//! 20      24*k  entries
+//! 20+24k  4     FNV-1a checksum over bytes [0, 20+24k)
+//!
+//! entry:  n u64 | op u8 | dtype u8 | strategy u8 | algorithm u8
+//!         | block_len u32 | median_ns u64
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::fft::{Algorithm, DType, FftError, FftResult, Strategy};
+use crate::net::wire::checksum;
+use crate::stream::min_ols_block;
+
+/// Wisdom file magic.
+pub const WISDOM_MAGIC: [u8; 4] = *b"FWIS";
+/// Wisdom file format version.
+pub const WISDOM_VERSION: u16 = 1;
+
+const HEADER_LEN: usize = 20;
+const ENTRY_LEN: usize = 24;
+
+/// Which tuned operation an entry describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum TuneOp {
+    /// A complex FFT plan of size `n` (covers forward and inverse —
+    /// the factorization cost is direction-independent).
+    Fft,
+    /// An overlap-save FIR block-length choice for `n` taps.
+    Ols,
+}
+
+impl TuneOp {
+    pub fn name(self) -> &'static str {
+        match self {
+            TuneOp::Fft => "fft",
+            TuneOp::Ols => "ols",
+        }
+    }
+}
+
+// Tag values are pinned here explicitly, wire-codec style.
+
+fn op_code(op: TuneOp) -> u8 {
+    match op {
+        TuneOp::Fft => 0,
+        TuneOp::Ols => 1,
+    }
+}
+
+fn op_from(code: u8) -> FftResult<TuneOp> {
+    match code {
+        0 => Ok(TuneOp::Fft),
+        1 => Ok(TuneOp::Ols),
+        other => Err(FftError::Protocol(format!("wisdom: unknown op tag {other}"))),
+    }
+}
+
+fn strategy_code(s: Strategy) -> u8 {
+    match s {
+        Strategy::Standard => 0,
+        Strategy::LinzerFeig => 1,
+        Strategy::Cosine => 2,
+        Strategy::DualSelect => 3,
+    }
+}
+
+fn strategy_from(code: u8) -> FftResult<Strategy> {
+    match code {
+        0 => Ok(Strategy::Standard),
+        1 => Ok(Strategy::LinzerFeig),
+        2 => Ok(Strategy::Cosine),
+        3 => Ok(Strategy::DualSelect),
+        other => Err(FftError::Protocol(format!(
+            "wisdom: unknown strategy tag {other}"
+        ))),
+    }
+}
+
+fn dtype_code(d: DType) -> u8 {
+    match d {
+        DType::F64 => 0,
+        DType::F32 => 1,
+        DType::Bf16 => 2,
+        DType::F16 => 3,
+        DType::I16 => 4,
+        DType::I32 => 5,
+    }
+}
+
+fn dtype_from(code: u8) -> FftResult<DType> {
+    match code {
+        0 => Ok(DType::F64),
+        1 => Ok(DType::F32),
+        2 => Ok(DType::Bf16),
+        3 => Ok(DType::F16),
+        4 => Ok(DType::I16),
+        5 => Ok(DType::I32),
+        other => Err(FftError::Protocol(format!(
+            "wisdom: unknown dtype tag {other}"
+        ))),
+    }
+}
+
+fn algorithm_code(a: Algorithm) -> u8 {
+    match a {
+        Algorithm::Auto => 0,
+        Algorithm::Stockham => 1,
+        Algorithm::Radix4 => 2,
+        Algorithm::Dit => 3,
+        Algorithm::Bluestein => 4,
+    }
+}
+
+fn algorithm_from(code: u8) -> FftResult<Algorithm> {
+    match code {
+        0 => Ok(Algorithm::Auto),
+        1 => Ok(Algorithm::Stockham),
+        2 => Ok(Algorithm::Radix4),
+        3 => Ok(Algorithm::Dit),
+        4 => Ok(Algorithm::Bluestein),
+        other => Err(FftError::Protocol(format!(
+            "wisdom: unknown algorithm tag {other}"
+        ))),
+    }
+}
+
+/// One measured winner.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WisdomEntry {
+    /// Winning butterfly strategy (what `Auto` resolution applies).
+    pub strategy: Strategy,
+    /// Winning FFT organization — recorded for the perf trajectory;
+    /// `Auto` resolution applies the strategy only, so tuned requests
+    /// keep batching with explicit ones.
+    pub algorithm: Algorithm,
+    /// OLS entries: the winning FFT block length.  Zero for FFT
+    /// entries.
+    pub block_len: u32,
+    /// Median measured time of the winner, for reports.
+    pub median_ns: u64,
+}
+
+/// Loaded (or under-construction) wisdom: a validated map from
+/// `(n, op, dtype)` to the measured winner, stamped with the host it
+/// was measured on.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Wisdom {
+    host: u64,
+    entries: BTreeMap<(u64, u8, u8), WisdomEntry>,
+}
+
+impl Wisdom {
+    /// Empty wisdom for the current machine.
+    pub fn new() -> Self {
+        Self::for_host(super::host_fingerprint())
+    }
+
+    /// Empty wisdom for an explicit host fingerprint (tests, tooling).
+    pub fn for_host(host: u64) -> Self {
+        Wisdom { host, entries: BTreeMap::new() }
+    }
+
+    pub fn host(&self) -> u64 {
+        self.host
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Validate one entry against the plan-space invariants the rest
+    /// of the crate relies on.
+    fn validate(n: u64, op: TuneOp, dtype: DType, e: &WisdomEntry) -> FftResult<()> {
+        if n == 0 {
+            return Err(FftError::Protocol("wisdom: entry has n = 0".into()));
+        }
+        if dtype.is_fixed() && e.strategy != Strategy::DualSelect {
+            return Err(FftError::Protocol(format!(
+                "wisdom: fixed-point entry names strategy {}, but only dual-select \
+                 is representable in a signed Q-format",
+                e.strategy
+            )));
+        }
+        match op {
+            TuneOp::Fft => {
+                if e.block_len != 0 {
+                    return Err(FftError::Protocol(format!(
+                        "wisdom: fft entry carries a block length ({})",
+                        e.block_len
+                    )));
+                }
+            }
+            TuneOp::Ols => {
+                let taps = usize::try_from(n).map_err(|_| {
+                    FftError::Protocol(format!("wisdom: ols tap count {n} overflows usize"))
+                })?;
+                let block = e.block_len as usize;
+                if !block.is_power_of_two() || block < min_ols_block(taps) {
+                    return Err(FftError::Protocol(format!(
+                        "wisdom: ols block {block} for {taps} taps is not a power of two \
+                         >= {}",
+                        min_ols_block(taps)
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Record a measured winner (replacing any previous entry for the
+    /// key).  Invalid entries are rejected with the same typed error
+    /// decode would raise — wisdom never holds a value resolution
+    /// could trip over.
+    pub fn insert(
+        &mut self,
+        n: usize,
+        op: TuneOp,
+        dtype: DType,
+        entry: WisdomEntry,
+    ) -> FftResult<()> {
+        let n = n as u64;
+        Self::validate(n, op, dtype, &entry)?;
+        self.entries.insert((n, op_code(op), dtype_code(dtype)), entry);
+        Ok(())
+    }
+
+    /// The recorded winner for `(n, op, dtype)`, if any.
+    pub fn entry(&self, n: usize, op: TuneOp, dtype: DType) -> Option<&WisdomEntry> {
+        self.entries.get(&(n as u64, op_code(op), dtype_code(dtype)))
+    }
+
+    /// The tuned strategy for an `n`-point FFT in `dtype` — what the
+    /// coordinator applies when resolving
+    /// [`crate::fft::StrategyChoice::Auto`].
+    pub fn fft_strategy(&self, n: usize, dtype: DType) -> Option<Strategy> {
+        self.entry(n, TuneOp::Fft, dtype).map(|e| e.strategy)
+    }
+
+    /// The tuned overlap-save FFT block length for a `taps`-tap filter
+    /// in `dtype` — what the stream and graph planes consult when a
+    /// spec carries no explicit `fft_len` override.
+    pub fn ols_block(&self, taps: usize, dtype: DType) -> Option<usize> {
+        self.entry(taps, TuneOp::Ols, dtype).map(|e| e.block_len as usize)
+    }
+
+    /// Iterate entries in key order.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, TuneOp, DType, &WisdomEntry)> {
+        self.entries.iter().map(|(&(n, op, dt), e)| {
+            // Keys were validated on insert/decode; the tags are known.
+            (
+                n as usize,
+                op_from(op).expect("validated op tag"),
+                dtype_from(dt).expect("validated dtype tag"),
+                e,
+            )
+        })
+    }
+
+    /// Serialize to the checksummed file format.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(HEADER_LEN + ENTRY_LEN * self.entries.len() + 4);
+        out.extend_from_slice(&WISDOM_MAGIC);
+        out.extend_from_slice(&WISDOM_VERSION.to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes());
+        out.extend_from_slice(&self.host.to_le_bytes());
+        out.extend_from_slice(&(self.entries.len() as u32).to_le_bytes());
+        for (&(n, op, dt), e) in &self.entries {
+            out.extend_from_slice(&n.to_le_bytes());
+            out.push(op);
+            out.push(dt);
+            out.push(strategy_code(e.strategy));
+            out.push(algorithm_code(e.algorithm));
+            out.extend_from_slice(&e.block_len.to_le_bytes());
+            out.extend_from_slice(&e.median_ns.to_le_bytes());
+        }
+        let sum = checksum(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Decode and validate, accepting only wisdom recorded for `host`.
+    /// Every failure is a typed [`FftError::Protocol`]; this never
+    /// panics on hostile input.
+    pub fn decode_for_host(bytes: &[u8], host: u64) -> FftResult<Wisdom> {
+        if bytes.len() < HEADER_LEN + 4 {
+            return Err(FftError::Protocol(format!(
+                "wisdom: truncated file ({} bytes; header + checksum need {})",
+                bytes.len(),
+                HEADER_LEN + 4
+            )));
+        }
+        if bytes[0..4] != WISDOM_MAGIC {
+            return Err(FftError::Protocol(format!(
+                "wisdom: bad magic {:02x?} (expected {WISDOM_MAGIC:02x?})",
+                &bytes[0..4]
+            )));
+        }
+        let body = &bytes[..bytes.len() - 4];
+        let stored = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+        let computed = checksum(body);
+        if stored != computed {
+            return Err(FftError::Protocol(format!(
+                "wisdom: checksum mismatch (stored {stored:#010x}, computed {computed:#010x})"
+            )));
+        }
+        let version = u16::from_le_bytes(bytes[4..6].try_into().unwrap());
+        if version != WISDOM_VERSION {
+            return Err(FftError::Protocol(format!(
+                "wisdom: unknown version {version} (this build speaks {WISDOM_VERSION})"
+            )));
+        }
+        let file_host = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+        if file_host != host {
+            return Err(FftError::Protocol(format!(
+                "wisdom: foreign host fingerprint {file_host:#018x} (this machine is \
+                 {host:#018x}); re-run `fmafft tune` here"
+            )));
+        }
+        let count = u32::from_le_bytes(bytes[16..20].try_into().unwrap()) as usize;
+        let expected = HEADER_LEN + ENTRY_LEN * count + 4;
+        if bytes.len() != expected {
+            return Err(FftError::Protocol(format!(
+                "wisdom: {count} entries need {expected} bytes, file has {}",
+                bytes.len()
+            )));
+        }
+        let mut wisdom = Wisdom::for_host(host);
+        for i in 0..count {
+            let at = HEADER_LEN + ENTRY_LEN * i;
+            let e = &bytes[at..at + ENTRY_LEN];
+            let n = u64::from_le_bytes(e[0..8].try_into().unwrap());
+            let op = op_from(e[8])?;
+            let dtype = dtype_from(e[9])?;
+            let entry = WisdomEntry {
+                strategy: strategy_from(e[10])?,
+                algorithm: algorithm_from(e[11])?,
+                block_len: u32::from_le_bytes(e[12..16].try_into().unwrap()),
+                median_ns: u64::from_le_bytes(e[16..24].try_into().unwrap()),
+            };
+            Self::validate(n, op, dtype, &entry)?;
+            wisdom.entries.insert((n, e[8], e[9]), entry);
+        }
+        Ok(wisdom)
+    }
+
+    /// [`Wisdom::decode_for_host`] against the current machine's
+    /// fingerprint.
+    pub fn decode(bytes: &[u8]) -> FftResult<Wisdom> {
+        Self::decode_for_host(bytes, super::host_fingerprint())
+    }
+
+    /// Write the encoded file to `path`.
+    pub fn save(&self, path: &Path) -> FftResult<()> {
+        std::fs::write(path, self.encode()).map_err(|e| {
+            FftError::Backend(format!("writing wisdom {}: {e}", path.display()))
+        })
+    }
+
+    /// Read and decode `path` for the current machine.
+    pub fn load(path: &Path) -> FftResult<Wisdom> {
+        let bytes = std::fs::read(path).map_err(|e| {
+            FftError::Backend(format!("reading wisdom {}: {e}", path.display()))
+        })?;
+        Self::decode(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(strategy: Strategy) -> WisdomEntry {
+        WisdomEntry { strategy, algorithm: Algorithm::Stockham, block_len: 0, median_ns: 100 }
+    }
+
+    #[test]
+    fn insert_validates_like_decode() {
+        let mut w = Wisdom::for_host(7);
+        // Fixed dtypes only hold dual-select.
+        assert!(matches!(
+            w.insert(64, TuneOp::Fft, DType::I16, entry(Strategy::Cosine)),
+            Err(FftError::Protocol(_))
+        ));
+        w.insert(64, TuneOp::Fft, DType::I16, entry(Strategy::DualSelect)).unwrap();
+        // FFT entries carry no block length.
+        assert!(w
+            .insert(
+                64,
+                TuneOp::Fft,
+                DType::F32,
+                WisdomEntry { block_len: 64, ..entry(Strategy::DualSelect) }
+            )
+            .is_err());
+        // OLS blocks must be pow2 >= 2L-1.
+        assert!(w
+            .insert(
+                8,
+                TuneOp::Ols,
+                DType::F32,
+                WisdomEntry { block_len: 8, ..entry(Strategy::DualSelect) }
+            )
+            .is_err());
+        w.insert(
+            8,
+            TuneOp::Ols,
+            DType::F32,
+            WisdomEntry { block_len: 16, ..entry(Strategy::DualSelect) },
+        )
+        .unwrap();
+        assert_eq!(w.ols_block(8, DType::F32), Some(16));
+        assert_eq!(w.ols_block(8, DType::F64), None);
+    }
+
+    #[test]
+    fn resolution_is_keyed_on_all_three_fields() {
+        let mut w = Wisdom::for_host(1);
+        w.insert(256, TuneOp::Fft, DType::F32, entry(Strategy::Cosine)).unwrap();
+        assert_eq!(w.fft_strategy(256, DType::F32), Some(Strategy::Cosine));
+        assert_eq!(w.fft_strategy(256, DType::F16), None);
+        assert_eq!(w.fft_strategy(512, DType::F32), None);
+        assert_eq!(w.ols_block(256, DType::F32), None);
+    }
+}

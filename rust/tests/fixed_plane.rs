@@ -93,7 +93,12 @@ fn fixed_lf_is_a_typed_error_in_process_and_through_the_coordinator() {
     let (tx, rx) = mpsc::channel();
     server
         .submit_routed(
-            Route { id: 1, op: FftOp::Forward, dtype: DType::I16, strategy: Strategy::LinzerFeig },
+            Route {
+                id: 1,
+                op: FftOp::Forward,
+                dtype: DType::I16,
+                strategy: Strategy::LinzerFeig.into(),
+            },
             re.clone(),
             im.clone(),
             tx,

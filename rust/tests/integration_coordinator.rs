@@ -499,3 +499,121 @@ fn shutdown_is_idempotent_and_threadsafe() {
     let (re, im) = random_frame(64, 2);
     assert!(server.submit(FftOp::Forward, re, im).is_err());
 }
+
+#[test]
+fn auto_resolves_through_wisdom_bit_identically_for_every_dtype() {
+    // The tentpole acceptance check: an `Auto` request resolves to the
+    // wisdom-designated strategy (observable through the tuned-plan
+    // counters) and its response is bit-identical to an explicit
+    // request for that strategy — for every dtype, fixed included.
+    use fmafft::coordinator::Route;
+    use fmafft::fft::{Algorithm, StrategyChoice};
+    use fmafft::tune::{TuneOp, Wisdom, WisdomEntry};
+
+    let n = 64usize;
+    // Tuned winners deliberately differ from the server default below
+    // (fixed dtypes can only hold dual-select — the one Q-format
+    // representable strategy).
+    let tuned = |dtype: DType| {
+        if dtype.is_fixed() { Strategy::DualSelect } else { Strategy::Cosine }
+    };
+    let mut wisdom = Wisdom::new();
+    for dtype in DType::ALL {
+        wisdom
+            .insert(
+                n,
+                TuneOp::Fft,
+                dtype,
+                WisdomEntry {
+                    strategy: tuned(dtype),
+                    algorithm: Algorithm::Stockham,
+                    block_len: 0,
+                    median_ns: 1,
+                },
+            )
+            .unwrap();
+    }
+    let mut cfg = ServerConfig::native(n);
+    cfg.strategy = Strategy::LinzerFeig;
+    cfg.workers = 1;
+    cfg.wisdom = Some(Arc::new(wisdom));
+    let server = Server::start(cfg).unwrap();
+
+    let mut next_id = 1u64;
+    let mut call = |dtype: DType, strategy: StrategyChoice, re: Vec<f64>, im: Vec<f64>| {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let route = Route { id: next_id, op: FftOp::Forward, dtype, strategy };
+        next_id += 1;
+        server.submit_routed(route, re, im, tx).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+        assert!(resp.is_ok(), "{dtype}: {:?}", resp.error);
+        resp
+    };
+    for dtype in DType::ALL {
+        let (re, im) = random_frame(n, 4000 + dtype as u64);
+        let auto = call(dtype, StrategyChoice::Auto, re.clone(), im.clone());
+        let explicit = call(dtype, tuned(dtype).into(), re, im);
+        assert_eq!(auto.re_f64(), explicit.re_f64(), "{dtype}: re planes diverge");
+        assert_eq!(auto.im_f64(), explicit.im_f64(), "{dtype}: im planes diverge");
+        assert_eq!(auto.bound, explicit.bound, "{dtype}: bounds diverge");
+        assert_eq!(auto.dtype, dtype);
+    }
+    let snap = server.snapshot();
+    assert_eq!(snap.tuned_plans_selected, DType::ALL.len() as u64);
+    assert_eq!(snap.auto_defaulted, 0);
+    for dtype in DType::ALL {
+        assert_eq!(snap.dtype(dtype).tuned, 1, "{dtype}: per-dtype tuned counter");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn auto_without_wisdom_serves_the_default_bit_identically() {
+    use fmafft::coordinator::Route;
+    use fmafft::fft::StrategyChoice;
+
+    let n = 128usize;
+    let mut cfg = ServerConfig::native(n);
+    cfg.workers = 1;
+    let server = Server::start(cfg).unwrap();
+
+    let (re, im) = random_frame(n, 77);
+    let (tx, rx) = std::sync::mpsc::channel();
+    let route =
+        Route { id: 1, op: FftOp::Forward, dtype: DType::F32, strategy: StrategyChoice::Auto };
+    server.submit_routed(route, re.clone(), im.clone(), tx).unwrap();
+    let auto = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+    assert!(auto.is_ok(), "{:?}", auto.error);
+    // Explicit request at the server default (dual-select f32).
+    let explicit = server.submit_wait(FftOp::Forward, re, im).unwrap();
+    assert!(explicit.is_ok(), "{:?}", explicit.error);
+    assert_eq!(auto.re_f64(), explicit.re_f64());
+    assert_eq!(auto.im_f64(), explicit.im_f64());
+    assert_eq!(auto.bound, explicit.bound);
+    let snap = server.snapshot();
+    assert_eq!(snap.auto_defaulted, 1);
+    assert_eq!(snap.tuned_plans_selected, 0);
+    server.shutdown();
+}
+
+#[test]
+fn planner_cache_counters_track_hits_and_misses() {
+    let n = 64usize;
+    let mut cfg = ServerConfig::native(n);
+    cfg.workers = 1;
+    let server = Server::start(cfg).unwrap();
+    for i in 0..4u64 {
+        let (re, im) = random_frame(n, 900 + i);
+        let resp = server.submit_wait(FftOp::Forward, re, im).unwrap();
+        assert!(resp.is_ok(), "{:?}", resp.error);
+    }
+    let snap = server.snapshot();
+    // One worker, one plan key: first batch builds, the rest hit.
+    assert_eq!(snap.planner_cache_misses, 1);
+    assert_eq!(snap.planner_cache_hits, 3);
+    // The summary line surfaces them for operators.
+    let summary = server.metrics().summary();
+    assert!(summary.contains("plan_hits=3"), "{summary}");
+    assert!(summary.contains("plan_misses=1"), "{summary}");
+    server.shutdown();
+}

@@ -279,7 +279,7 @@ fn reserved_id_zero_request_is_rejected_but_connection_survives() {
             let req = wire::Request {
                 id,
                 op: FftOp::Forward,
-                strategy: Strategy::DualSelect,
+                strategy: Strategy::DualSelect.into(),
                 dtype: DType::F32,
                 re: re.clone(),
                 im: im.clone(),

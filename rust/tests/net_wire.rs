@@ -45,7 +45,14 @@ fn request_roundtrip_every_op_strategy_dtype_and_odd_length() {
                 for n in [1usize, 3, 7, 33, 257] {
                     let (re, im) = payload(n, seed);
                     seed += 1;
-                    let req = wire::Request { id: seed * 1000, op, strategy, dtype, re, im };
+                    let req = wire::Request {
+                        id: seed * 1000,
+                        op,
+                        strategy: strategy.into(),
+                        dtype,
+                        re,
+                        im,
+                    };
                     let bytes = wire::encode_request(&req).unwrap();
                     assert_eq!(bytes.len(), wire::HEADER_LEN + 16 * n);
                     let back = decode_request(&bytes)
@@ -108,7 +115,7 @@ fn multiple_frames_stream_back_to_back() {
     let a = wire::Request {
         id: 1,
         op: FftOp::Forward,
-        strategy: Strategy::DualSelect,
+        strategy: Strategy::DualSelect.into(),
         dtype: DType::F16,
         re: re.clone(),
         im: im.clone(),
@@ -135,7 +142,7 @@ fn truncated_header_is_a_typed_protocol_error() {
     let req = wire::Request {
         id: 1,
         op: FftOp::Forward,
-        strategy: Strategy::DualSelect,
+        strategy: Strategy::DualSelect.into(),
         dtype: DType::F32,
         re,
         im,
@@ -157,7 +164,7 @@ fn truncated_body_is_a_typed_protocol_error() {
     let req = wire::Request {
         id: 1,
         op: FftOp::Forward,
-        strategy: Strategy::DualSelect,
+        strategy: Strategy::DualSelect.into(),
         dtype: DType::F32,
         re,
         im,
@@ -175,7 +182,7 @@ fn bad_magic_rejected() {
     let req = wire::Request {
         id: 1,
         op: FftOp::Forward,
-        strategy: Strategy::DualSelect,
+        strategy: Strategy::DualSelect.into(),
         dtype: DType::F32,
         re,
         im,
@@ -193,7 +200,7 @@ fn corrupted_header_fails_the_checksum() {
     let req = wire::Request {
         id: 123,
         op: FftOp::Forward,
-        strategy: Strategy::DualSelect,
+        strategy: Strategy::DualSelect.into(),
         dtype: DType::F32,
         re,
         im,
@@ -218,7 +225,7 @@ fn wrong_version_rejected() {
     let req = wire::Request {
         id: 1,
         op: FftOp::Forward,
-        strategy: Strategy::DualSelect,
+        strategy: Strategy::DualSelect.into(),
         dtype: DType::F32,
         re,
         im,
@@ -237,7 +244,7 @@ fn oversized_length_rejected_without_allocating() {
     let req = wire::Request {
         id: 1,
         op: FftOp::Forward,
-        strategy: Strategy::DualSelect,
+        strategy: Strategy::DualSelect.into(),
         dtype: DType::F32,
         re,
         im,
@@ -256,7 +263,7 @@ fn unknown_tags_rejected() {
     let req = wire::Request {
         id: 1,
         op: FftOp::Forward,
-        strategy: Strategy::DualSelect,
+        strategy: Strategy::DualSelect.into(),
         dtype: DType::F32,
         re,
         im,
@@ -277,7 +284,7 @@ fn request_body_must_be_whole_complex_samples() {
     let req = wire::Request {
         id: 1,
         op: FftOp::Forward,
-        strategy: Strategy::DualSelect,
+        strategy: Strategy::DualSelect.into(),
         dtype: DType::F32,
         re,
         im,
@@ -299,7 +306,7 @@ fn kind_confusion_rejected() {
     let req = wire::Request {
         id: 1,
         op: FftOp::Forward,
-        strategy: Strategy::DualSelect,
+        strategy: Strategy::DualSelect.into(),
         dtype: DType::F32,
         re: re.clone(),
         im: im.clone(),
@@ -387,10 +394,10 @@ fn encode_publish(
 }
 
 #[test]
-fn protocol_v4_tags_are_pinned() {
+fn protocol_v5_tags_are_pinned() {
     // The numeric values are PROTOCOL.md law — changing any of them is
     // a wire break, caught here before it ships.
-    assert_eq!(wire::VERSION, 4);
+    assert_eq!(wire::VERSION, 5);
     assert_eq!(wire::OP_STREAM_OPEN, 3);
     assert_eq!(wire::OP_STREAM_CHUNK, 4);
     assert_eq!(wire::OP_STREAM_CLOSE, 5);

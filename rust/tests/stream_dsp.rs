@@ -265,3 +265,90 @@ fn streamed_stft_columns_track_a_chirp() {
         assert!(s.bound().unwrap() > 0.0);
     }
 }
+
+#[test]
+fn single_tap_default_block_sits_on_the_feasibility_floor_and_matches_offline() {
+    // Regression for the auto-size heuristic's L=1 edge: the default
+    // block is now clamped to `max(4L, 2L−1)` rounded up to a power of
+    // two — 4 for a single tap (previously a hardwired floor of 8) —
+    // and chunked output through the new default stays bit-identical
+    // to the offline whole-signal path.
+    use fmafft::stream::min_ols_block;
+
+    assert_eq!(min_ols_block(1), 2);
+    assert_eq!(min_ols_block(2), 4);
+    assert_eq!(min_ols_block(8), 16);
+    assert_eq!(min_ols_block(33), 128); // 2·33−1 = 65 → 128
+
+    let (hr, hi) = noise(1, 200);
+    let (xr, xi) = noise(257, 201);
+    let planner = Planner::<f32>::new();
+    let f = OlsFilter::<f32>::new(&planner, Strategy::DualSelect, &hr, &hi).unwrap();
+    assert_eq!(f.fft_len(), 4, "single-tap default block");
+    drop(f);
+    let (wr, wi) =
+        filter_offline::<f32>(&planner, Strategy::DualSelect, &hr, &hi, &xr, &xi).unwrap();
+    for (bias_one, seed) in [(false, 17u64), (true, 18)] {
+        let chunks = ragged_chunks(xr.len(), seed, bias_one);
+        let (gr, gi) = run_chunked::<f32>(Strategy::DualSelect, (&hr, &hi), (&xr, &xi), &chunks);
+        assert_eq!(gr, wr, "re differs (chunks {:?}...)", &chunks[..3.min(chunks.len())]);
+        assert_eq!(gi, wi, "im differs");
+    }
+}
+
+#[test]
+fn registry_open_takes_wisdom_block_when_no_override_is_given() {
+    // A registry with attached wisdom serves OLS opens at the tuned
+    // block; explicit overrides and infeasible/oversized tuned values
+    // leave the spec alone.
+    use fmafft::fft::Algorithm;
+    use fmafft::tune::{TuneOp, Wisdom, WisdomEntry};
+
+    let taps = 8usize;
+    let (hr, hi) = noise(taps, 300);
+    let mut wisdom = Wisdom::new();
+    wisdom
+        .insert(
+            taps,
+            TuneOp::Ols,
+            DType::F32,
+            WisdomEntry {
+                strategy: Strategy::DualSelect,
+                algorithm: Algorithm::Stockham,
+                block_len: 64,
+                median_ns: 1,
+            },
+        )
+        .unwrap();
+    let reg = SessionRegistry::new(StreamConfig::default())
+        .with_wisdom(Some(std::sync::Arc::new(wisdom)));
+
+    let spec = StreamSpec::ols(DType::F32, Strategy::DualSelect, hr.clone(), hi.clone());
+    let tuned = reg.open(&spec).unwrap();
+    assert_eq!(tuned.fft_len, 64, "tuned block applied");
+    // An explicit override always wins over wisdom.
+    let explicit = reg.open(&spec.clone().with_fft_len(32)).unwrap();
+    assert_eq!(explicit.fft_len, 32);
+    // A dtype with no entry falls back to the auto-size heuristic
+    // (4·8 = 32).
+    let other = reg
+        .open(&StreamSpec::ols(DType::F64, Strategy::DualSelect, hr.clone(), hi.clone()))
+        .unwrap();
+    assert_eq!(other.fft_len, 32);
+    // The tuned session is bit-identical to a direct filter pinned at
+    // the same block — wisdom is a throughput knob over identical
+    // numerics.
+    let (xr, xi) = noise(300, 301);
+    let mut got = reg.chunk(tuned.session, &xr, &xi).unwrap();
+    let tail = reg.close(tuned.session).unwrap();
+    got.re.extend_from_slice(&tail.re);
+    got.im.extend_from_slice(&tail.im);
+    let planner = Planner::<f32>::new();
+    let mut direct =
+        OlsFilter::<f32>::with_fft_len(&planner, Strategy::DualSelect, &hr, &hi, 64).unwrap();
+    let (mut dr, mut di) = (Vec::new(), Vec::new());
+    direct.push(&xr, &xi, &mut dr, &mut di).unwrap();
+    direct.finish(&mut dr, &mut di).unwrap();
+    assert_eq!(got.re, dr, "tuned session re differs from pinned 64-block filter");
+    assert_eq!(got.im, di, "tuned session im differs from pinned 64-block filter");
+}

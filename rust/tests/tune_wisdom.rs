@@ -1,0 +1,287 @@
+//! Wisdom-file integration coverage: exhaustive round-trips (every
+//! dtype × op × plan-space-valid entry) plus adversarial decodes —
+//! truncation, bad magic, corrupt checksum, unknown version, foreign
+//! host fingerprint, unknown tags, invariant-violating entries — all
+//! of which must surface as typed `FftError::Protocol` values (IO
+//! failures as `FftError::Backend`), never panics.
+
+use fmafft::fft::{Algorithm, DType, FftError, Strategy};
+use fmafft::net::wire::checksum;
+use fmafft::tune::{TuneOp, Wisdom, WisdomEntry, WISDOM_MAGIC, WISDOM_VERSION};
+
+const HEADER_LEN: usize = 20;
+const ENTRY_LEN: usize = 24;
+
+const HOST: u64 = 0xfeed_f00d_dead_beef;
+
+/// A wisdom set exercising every dtype on both ops, with the widest
+/// strategy spread the plan space allows (fixed dtypes are dual-select
+/// only).
+fn full_wisdom() -> Wisdom {
+    let mut w = Wisdom::for_host(HOST);
+    for (i, dtype) in DType::ALL.into_iter().enumerate() {
+        let strategy = if dtype.is_fixed() {
+            Strategy::DualSelect
+        } else {
+            // Spread across the float-legal strategies.
+            [Strategy::Standard, Strategy::LinzerFeig, Strategy::Cosine, Strategy::DualSelect]
+                [i % 4]
+        };
+        for n in [64usize, 256, 1024] {
+            w.insert(
+                n,
+                TuneOp::Fft,
+                dtype,
+                WisdomEntry {
+                    strategy,
+                    algorithm: Algorithm::Stockham,
+                    block_len: 0,
+                    median_ns: 1000 + (i as u64),
+                },
+            )
+            .unwrap();
+        }
+        for taps in [1usize, 8, 32] {
+            w.insert(
+                taps,
+                TuneOp::Ols,
+                dtype,
+                WisdomEntry {
+                    strategy: Strategy::DualSelect,
+                    algorithm: Algorithm::Stockham,
+                    block_len: (fmafft::stream::min_ols_block(taps) * 2) as u32,
+                    median_ns: 2000 + (i as u64),
+                },
+            )
+            .unwrap();
+        }
+    }
+    w
+}
+
+fn refit_checksum(bytes: &mut [u8]) {
+    let n = bytes.len();
+    let sum = checksum(&bytes[..n - 4]);
+    bytes[n - 4..].copy_from_slice(&sum.to_le_bytes());
+}
+
+fn expect_protocol(bytes: &[u8], what: &str) {
+    match Wisdom::decode_for_host(bytes, HOST) {
+        Err(FftError::Protocol(msg)) => {
+            assert!(msg.contains("wisdom"), "{what}: diagnostic names the subsystem: {msg}")
+        }
+        other => panic!("{what}: expected a typed Protocol error, got {other:?}"),
+    }
+}
+
+#[test]
+fn round_trip_preserves_every_entry() {
+    let w = full_wisdom();
+    assert_eq!(w.len(), DType::ALL.len() * 6);
+    let bytes = w.encode();
+    assert_eq!(bytes.len(), HEADER_LEN + ENTRY_LEN * w.len() + 4);
+    let back = Wisdom::decode_for_host(&bytes, HOST).unwrap();
+    assert_eq!(back, w);
+    assert_eq!(back.host(), HOST);
+    // Every entry individually resolvable after the round-trip.
+    for (n, op, dtype, e) in w.iter() {
+        assert_eq!(back.entry(n, op, dtype), Some(e), "({n}, {op:?}, {dtype})");
+        match op {
+            TuneOp::Fft => assert_eq!(back.fft_strategy(n, dtype), Some(e.strategy)),
+            TuneOp::Ols => assert_eq!(back.ols_block(n, dtype), Some(e.block_len as usize)),
+        }
+    }
+    // Encoding is canonical: same entries → same bytes.
+    assert_eq!(back.encode(), bytes);
+}
+
+#[test]
+fn save_and_load_round_trip_on_disk() {
+    // `load` checks against the *current* host fingerprint, so record
+    // for this machine.
+    let mut w = Wisdom::new();
+    w.insert(
+        512,
+        TuneOp::Fft,
+        DType::F32,
+        WisdomEntry {
+            strategy: Strategy::Cosine,
+            algorithm: Algorithm::Dit,
+            block_len: 0,
+            median_ns: 77,
+        },
+    )
+    .unwrap();
+    let path = std::env::temp_dir().join(format!("tune_wisdom_rt_{}.fft", std::process::id()));
+    w.save(&path).unwrap();
+    let back = Wisdom::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(back, w);
+    assert_eq!(back.fft_strategy(512, DType::F32), Some(Strategy::Cosine));
+}
+
+#[test]
+fn io_failures_are_typed_backend_errors() {
+    let missing = std::env::temp_dir().join("tune_wisdom_definitely_missing.fft");
+    let _ = std::fs::remove_file(&missing);
+    assert!(matches!(Wisdom::load(&missing), Err(FftError::Backend(_))));
+}
+
+#[test]
+fn truncated_files_are_rejected() {
+    let bytes = full_wisdom().encode();
+    // Every possible truncation point, including the empty file: a
+    // typed error, never a panic.
+    for len in 0..bytes.len() {
+        match Wisdom::decode_for_host(&bytes[..len], HOST) {
+            Err(FftError::Protocol(_)) => {}
+            other => panic!("truncation to {len} bytes: {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn bad_magic_is_rejected() {
+    let mut bytes = full_wisdom().encode();
+    bytes[0..4].copy_from_slice(b"WISF");
+    refit_checksum(&mut bytes);
+    assert_ne!(&bytes[0..4], &WISDOM_MAGIC);
+    expect_protocol(&bytes, "bad magic");
+}
+
+#[test]
+fn corrupt_checksum_is_rejected() {
+    let mut bytes = full_wisdom().encode();
+    let n = bytes.len();
+    bytes[n - 1] ^= 0x01;
+    expect_protocol(&bytes, "corrupt checksum trailer");
+    // A payload flip without refitting the trailer is equally caught.
+    let mut bytes = full_wisdom().encode();
+    bytes[HEADER_LEN] ^= 0x80;
+    expect_protocol(&bytes, "payload flip");
+}
+
+#[test]
+fn unknown_version_is_rejected() {
+    let mut bytes = full_wisdom().encode();
+    bytes[4..6].copy_from_slice(&(WISDOM_VERSION + 1).to_le_bytes());
+    refit_checksum(&mut bytes);
+    expect_protocol(&bytes, "future version");
+}
+
+#[test]
+fn foreign_host_fingerprint_is_rejected() {
+    let bytes = full_wisdom().encode();
+    match Wisdom::decode_for_host(&bytes, HOST ^ 1) {
+        Err(FftError::Protocol(msg)) => {
+            assert!(msg.contains("host"), "diagnostic names the fingerprint: {msg}")
+        }
+        other => panic!("foreign host: {other:?}"),
+    }
+    // And through the byte layout too: patch the stored fingerprint.
+    let mut bytes = full_wisdom().encode();
+    bytes[8..16].copy_from_slice(&(HOST ^ 0xff).to_le_bytes());
+    refit_checksum(&mut bytes);
+    expect_protocol(&bytes, "patched host field");
+}
+
+#[test]
+fn entry_count_must_match_file_size() {
+    let mut bytes = full_wisdom().encode();
+    let count = u32::from_le_bytes(bytes[16..20].try_into().unwrap());
+    bytes[16..20].copy_from_slice(&(count + 1).to_le_bytes());
+    refit_checksum(&mut bytes);
+    expect_protocol(&bytes, "overstated count");
+}
+
+#[test]
+fn unknown_entry_tags_are_rejected() {
+    // Entry layout: n u64 | op u8 | dtype u8 | strategy u8 | algo u8 | ...
+    for (offset, what) in [(8usize, "op"), (9, "dtype"), (10, "strategy"), (11, "algorithm")] {
+        let mut bytes = full_wisdom().encode();
+        bytes[HEADER_LEN + offset] = 0x7f;
+        refit_checksum(&mut bytes);
+        match Wisdom::decode_for_host(&bytes, HOST) {
+            Err(FftError::Protocol(msg)) => {
+                assert!(msg.contains(what), "{what}: diagnostic names the tag: {msg}")
+            }
+            other => panic!("{what}: {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn invariant_violating_entries_are_rejected() {
+    // A hand-built file whose tags are all legal but whose entry
+    // violates the plan space: an i16 FFT entry claiming the cosine
+    // strategy (only dual-select is Q-format representable).
+    let mut w = Wisdom::for_host(HOST);
+    w.insert(
+        64,
+        TuneOp::Fft,
+        DType::I16,
+        WisdomEntry {
+            strategy: Strategy::DualSelect,
+            algorithm: Algorithm::Stockham,
+            block_len: 0,
+            median_ns: 5,
+        },
+    )
+    .unwrap();
+    let mut bytes = w.encode();
+    bytes[HEADER_LEN + 10] = 2; // strategy tag: cosine
+    refit_checksum(&mut bytes);
+    expect_protocol(&bytes, "fixed dtype × non-dual strategy");
+
+    // An OLS entry whose block undercuts the 2L−1 feasibility floor.
+    let mut w = Wisdom::for_host(HOST);
+    w.insert(
+        8,
+        TuneOp::Ols,
+        DType::F32,
+        WisdomEntry {
+            strategy: Strategy::DualSelect,
+            algorithm: Algorithm::Stockham,
+            block_len: 16,
+            median_ns: 5,
+        },
+    )
+    .unwrap();
+    let mut bytes = w.encode();
+    bytes[HEADER_LEN + 12..HEADER_LEN + 16].copy_from_slice(&8u32.to_le_bytes());
+    refit_checksum(&mut bytes);
+    expect_protocol(&bytes, "ols block below the feasibility floor");
+
+    // A non-power-of-two block.
+    let mut bytes = w.encode();
+    bytes[HEADER_LEN + 12..HEADER_LEN + 16].copy_from_slice(&24u32.to_le_bytes());
+    refit_checksum(&mut bytes);
+    expect_protocol(&bytes, "ols block not a power of two");
+}
+
+#[test]
+fn corrupt_wisdom_degrades_the_server_to_defaults() {
+    // The serve path's contract: a wisdom failure is a diagnostic, not
+    // an outage.  Booting with no wisdom serves every request with
+    // the configured default — `auto` included.
+    use fmafft::coordinator::{FftOp, Route, Server, ServerConfig};
+    use fmafft::fft::StrategyChoice;
+
+    let n = 64usize;
+    let mut cfg = ServerConfig::native(n);
+    cfg.workers = 1;
+    assert!(cfg.wisdom.is_none());
+    let server = Server::start(cfg).unwrap();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let route =
+        Route { id: 9, op: FftOp::Forward, dtype: DType::F32, strategy: StrategyChoice::Auto };
+    server
+        .submit_routed(route, vec![1.0; n], vec![0.0; n], tx)
+        .unwrap();
+    let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+    assert!(resp.is_ok(), "auto with no wisdom must serve: {:?}", resp.error);
+    let snap = server.snapshot();
+    assert_eq!(snap.auto_defaulted, 1);
+    assert_eq!(snap.tuned_plans_selected, 0);
+    server.shutdown();
+}
