@@ -442,6 +442,95 @@ fn main() {
         }
     }
 
+    // Observability plane: latency of a protocol-v6 STATS scrape while
+    // 4 pipelined clients keep the coordinator under load, plus the
+    // per-stage latency quantiles the request traces feed — tagged
+    // mode=stats.  The scrape cost is what a Prometheus collector
+    // would add per poll; the stage quantiles are the trajectory
+    // record for where request time goes.
+    println!("\nobservability plane (STATS scrape under 4-client load):");
+    {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+
+        use fmafft::obs::STAGE_NAMES;
+
+        let mut cfg = ServerConfig::native(n);
+        cfg.workers = 4;
+        cfg.policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(300) };
+        let server = Server::start(cfg).unwrap();
+        let fftd = FftdServer::start(server.clone(), "127.0.0.1:0").unwrap();
+        let addr = fftd.local_addr();
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let scraper = {
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut client = FftClient::connect(addr).expect("connect stats client");
+                client
+                    .set_read_timeout(Some(Duration::from_secs(120)))
+                    .expect("read timeout");
+                let mut lat_us: Vec<u64> = Vec::new();
+                while !stop.load(Ordering::Relaxed) {
+                    let t0 = Instant::now();
+                    let snap = client.stats().expect("stats scrape");
+                    lat_us.push(t0.elapsed().as_micros() as u64);
+                    assert_eq!(snap.bound_violations, 0, "bound violation under load");
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                lat_us
+            })
+        };
+        let stats = drive_tcp(addr, &server, DType::F32, 4, count / 4, 16, kind);
+        stop.store(true, Ordering::Relaxed);
+        let mut scrape_us = scraper.join().expect("scraper thread");
+        scrape_us.sort_unstable();
+        let quantile = |v: &[u64], q: f64| -> u64 {
+            if v.is_empty() {
+                0
+            } else {
+                v[((v.len() as f64 * q) as usize).min(v.len() - 1)]
+            }
+        };
+        let snap = server.snapshot();
+        println!(
+            "  stats scrape clients=4                 {:>6} scrapes  p50 {:>6}us  p99 {:>7}us  ({} ok)",
+            scrape_us.len(),
+            quantile(&scrape_us, 0.50),
+            quantile(&scrape_us, 0.99),
+            stats.completed,
+        );
+        let mut fields: Vec<(String, f64)> = vec![
+            ("scrapes".into(), scrape_us.len() as f64),
+            ("scrape_p50_us".into(), quantile(&scrape_us, 0.50) as f64),
+            ("scrape_p99_us".into(), quantile(&scrape_us, 0.99) as f64),
+            ("completed".into(), stats.completed as f64),
+            ("req_per_s".into(), stats.completed as f64 / stats.wall),
+            ("traced".into(), snap.traced as f64),
+            ("bound_violations".into(), snap.bound_violations as f64),
+        ];
+        for (i, stage) in STAGE_NAMES.iter().enumerate() {
+            let h = &snap.stages[i];
+            println!(
+                "    stage {stage:<18} p50 {:>6}us  p99 {:>7}us  max {:>7}us  n={}",
+                h.quantile_us(0.50),
+                h.quantile_us(0.99),
+                h.max_seen_us,
+                h.total(),
+            );
+            fields.push((format!("{stage}_p50_us"), h.quantile_us(0.50) as f64));
+            fields.push((format!("{stage}_p99_us"), h.quantile_us(0.99) as f64));
+        }
+        let borrowed: Vec<(&str, f64)> = fields.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+        json.push_metrics_tags(
+            "stats scrape clients=4",
+            &[("dtype", "f32"), ("strategy", "dual"), ("mode", "stats")],
+            &borrowed,
+        );
+        fftd.shutdown();
+        server.shutdown();
+    }
+
     // PJRT backend (AOT JAX/Pallas artifacts).
     let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
     if std::path::Path::new(dir).join("manifest.json").exists() {

@@ -163,7 +163,7 @@ impl JsonReport {
     /// Append a named row of scalar metrics (for benches that measure
     /// things other than ns/iter, e.g. serving latency quantiles).
     pub fn push_metrics(&mut self, name: &str, fields: &[(&str, f64)]) {
-        self.push_entry(name, None, None, fields);
+        self.push_entry(name, &[], fields);
     }
 
     /// [`JsonReport::push_metrics`] with the workload's element dtype

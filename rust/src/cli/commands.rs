@@ -58,7 +58,7 @@ USAGE:
   fmafft serve   [--n 1024] [--dtype f32] [--strategy dual] [--pjrt]
                  [--artifacts DIR] [--rate 2000] [--requests 2000]
                  [--workers 2] [--max-batch 32] [--wisdom PATH]
-                 [--listen ADDR] [--serve-for SECS]
+                 [--listen ADDR] [--serve-for SECS] [--stats-every SECS]
       Run the dynamic-batching coordinator against a Poisson workload
       in the chosen working precision (try --dtype f16: the paper's
       bounded-ratio claim, served end to end; --dtype i16 serves the
@@ -70,15 +70,21 @@ USAGE:
       requests resolve through it, and overlap-save streams/graph
       nodes with no explicit block override take its tuned block
       length.  A missing or corrupt file logs a diagnostic and serves
-      with defaults — never fatal.
+      with defaults — never fatal.  --stats-every SECS logs a
+      one-line metrics summary to stderr on that cadence (0 = off).
   fmafft client  --addr HOST:PORT [--n 1024] [--dtype f32]
                  [--strategy dual|lf|cos|std|auto]
                  [--op forward|inverse|mf]
-                 [--requests 16] [--pipeline 8] [--verify]
+                 [--requests 16] [--pipeline 8] [--verify] [--stats]
       Drive a running fftd over TCP with pipelined requests; --verify
       checks every response against the f64 DFT oracle and its
-      attached a-priori bound.  --strategy auto (one-shot requests
-      only) lets the server resolve through its loaded wisdom.
+      attached a-priori bound, feeding each measured error/bound
+      ratio through the same bound-tightness sampler the server's
+      self-check uses (nonzero exit on any violation).  --stats
+      scrapes the server's protocol-v6 STATS snapshot after the
+      session and prints it as Prometheus text.  --strategy auto
+      (one-shot requests only) lets the server resolve through its
+      loaded wisdom.
       With --stream: drive the protocol-v2 streaming plane instead —
       an overlap-save session (ragged pipelined chunks, verified
       bit-identical to the offline filter and within the cumulative
@@ -93,6 +99,12 @@ USAGE:
       path, per-sink bounds monotone, and the matched-filter error
       within its composed bound.  --requests frames of --n samples;
       float dtypes only (try --dtype f16).
+  fmafft stats   --addr HOST:PORT [--json]
+      Fetch a running fftd's live metrics snapshot (the protocol-v6
+      STATS op) and print it as Prometheus text exposition — per-stage
+      latency histograms, bound-tightness telemetry, slow-request
+      exemplars — ready for `curl`-style scraping or a textfile
+      collector.  --json prints the same snapshot as JSON instead.
   fmafft help
 ";
 
@@ -595,6 +607,44 @@ pub fn fft(a: &Args) -> FftResult<()> {
     Ok(())
 }
 
+/// `fmafft stats` — scrape a running fftd's metrics snapshot over the
+/// protocol-v6 `STATS` op and print it as Prometheus text exposition
+/// (or JSON with `--json`).  One request, one frame, no state: safe to
+/// run on any cadence against a serving daemon.
+pub fn stats(a: &Args) -> FftResult<()> {
+    let addr = a
+        .get("addr")
+        .ok_or_else(|| FftError::InvalidArgument("stats requires --addr HOST:PORT".into()))?;
+    let mut client = FftClient::connect(addr)?;
+    client.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let snapshot = client.stats()?;
+    if a.flag("json") {
+        println!("{}", crate::obs::to_json(&snapshot).render());
+    } else {
+        print!("{}", crate::obs::prometheus_text(&snapshot));
+    }
+    Ok(())
+}
+
+/// `serve --stats-every SECS`: a detached reporter thread that logs a
+/// one-line metrics summary to stderr on a fixed cadence.  Holds only
+/// a `Weak` to the metrics registry so it never outlives the server it
+/// reports on — when the coordinator shuts down the thread exits on
+/// its next tick.
+fn spawn_stats_reporter(metrics: &std::sync::Arc<crate::coordinator::Metrics>, every: u64) {
+    if every == 0 {
+        return;
+    }
+    let weak = std::sync::Arc::downgrade(metrics);
+    std::thread::spawn(move || loop {
+        std::thread::sleep(Duration::from_secs(every));
+        match weak.upgrade() {
+            Some(m) => eprintln!("[stats] {}", m.summary()),
+            None => break,
+        }
+    });
+}
+
 pub fn serve(a: &Args) -> FftResult<()> {
     let n: usize = a.get_parse("n", 1024usize)?;
     crate::fft::log2_exact(n)?;
@@ -605,6 +655,7 @@ pub fn serve(a: &Args) -> FftResult<()> {
     let max_wait_us: u64 = a.get_parse("max-wait-us", 500u64)?;
     let dtype: DType = a.get_or("dtype", "f32").parse()?;
     let strategy: Strategy = a.get_or("strategy", "dual").parse()?;
+    let stats_every: u64 = a.get_parse("stats-every", 0u64)?;
 
     let mut cfg = if a.flag("pjrt") || a.get("artifacts").is_some() {
         if dtype != DType::F32 {
@@ -641,6 +692,7 @@ pub fn serve(a: &Args) -> FftResult<()> {
     if let Some(listen) = a.get("listen") {
         let serve_for: u64 = a.get_parse("serve-for", 0u64)?;
         let server = Server::start(cfg)?;
+        spawn_stats_reporter(&server.metrics_handle(), stats_every);
         let fftd = FftdServer::start(server.clone(), listen)?;
         // Scripts (CI smoke test) scrape the bound address from this
         // exact line — keep it first and flush it.
@@ -678,6 +730,7 @@ pub fn serve(a: &Args) -> FftResult<()> {
         }
     }
     let server = Server::start(cfg)?;
+    spawn_stats_reporter(&server.metrics_handle(), stats_every);
 
     let trace = ArrivalTrace::poisson(TraceConfig { rate, count: requests }, 7);
     let mut gen = WorkloadGen::new(n, 11);
@@ -1255,6 +1308,13 @@ pub fn client(a: &Args) -> FftResult<()> {
     // Frames retained for oracle verification (matched-filter has no
     // DFT oracle here, so nothing is retained for it).
     let track = verify && op != FftOp::MatchedFilter;
+    // --verify feeds every oracle-measured error through the same
+    // bound-tightness sampler (`record_tightness`) the server's own
+    // self-check uses, so client- and server-side telemetry agree on
+    // the error/bound ratio semantics.  `--strategy auto` resolves
+    // server-side, so its responses cannot be attributed to a cell
+    // and are hard-checked only.
+    let health = crate::obs::Metrics::new();
     let mut sent: std::collections::HashMap<u64, (Vec<f64>, Vec<f64>)> =
         std::collections::HashMap::new();
     let (mut ok, mut busy, mut failed) = (0usize, 0usize, 0usize);
@@ -1282,6 +1342,9 @@ pub fn client(a: &Args) -> FftResult<()> {
                         let (wr, wi) = crate::dft::naive_dft(&re, &im, inverse);
                         let err = crate::util::metrics::rel_l2(&resp.re, &resp.im, &wr, &wi);
                         max_err = max_err.max(err);
+                        if let (Some(bound), Some(s)) = (resp.bound, strategy.explicit()) {
+                            health.record_tightness(resp.dtype, s, err, bound);
+                        }
                         if let Some(bound) = resp.bound {
                             // NaN counts as a violation, not a pass.
                             if err.is_nan() || err > bound {
@@ -1315,11 +1378,31 @@ pub fn client(a: &Args) -> FftResult<()> {
     }
     if verify && ok > 0 {
         println!("verified against the f64 DFT oracle: max rel-L2 {}", sci(max_err));
+        let snap = health.snapshot();
+        for c in &snap.health {
+            println!(
+                "  bound tightness {} x {}: {} samples, max error/bound ratio {}",
+                c.dtype,
+                c.strategy,
+                c.samples,
+                sci(c.max_ratio)
+            );
+        }
+        if snap.bound_violations > 0 {
+            return Err(FftError::Backend(format!(
+                "{} sampled responses exceeded their a-priori bound",
+                snap.bound_violations
+            )));
+        }
     }
     if ok == 0 {
         return Err(FftError::Backend(format!(
             "no request succeeded ({busy} busy, {failed} error)"
         )));
+    }
+    if a.flag("stats") {
+        let snap = client.stats()?;
+        print!("{}", crate::obs::prometheus_text(&snap));
     }
     Ok(())
 }

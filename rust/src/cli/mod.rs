@@ -8,7 +8,9 @@
 //! fmafft serve   [--n 1024] [--dtype f16] [--strategy dual] [--pjrt]
 //!                [--rate 2000] [--requests 5000] [--wisdom PATH]
 //!                [--listen ADDR] [--serve-for SECS]   (fftd mode)
+//!                [--stats-every SECS]
 //! fmafft client  --addr HOST:PORT [--dtype f32] [--requests 16]
+//! fmafft stats   --addr HOST:PORT [--json]
 //! fmafft help
 //! ```
 
@@ -35,6 +37,7 @@ pub fn run<I: IntoIterator<Item = String>>(argv: I) -> i32 {
         "tune" => commands::tune(&parsed),
         "serve" => commands::serve(&parsed),
         "client" => commands::client(&parsed),
+        "stats" => commands::stats(&parsed),
         "help" | "--help" | "-h" => {
             println!("{}", commands::USAGE);
             Ok(())
@@ -100,6 +103,12 @@ mod tests {
         assert_eq!(run(["client".to_string()]), 1);
         // --stream still needs an address first.
         assert_eq!(run(["client".to_string(), "--stream".into()]), 1);
+    }
+
+    #[test]
+    fn stats_requires_addr() {
+        assert_eq!(run(["stats".to_string()]), 1);
+        assert_eq!(run(["stats".to_string(), "--json".into()]), 1);
     }
 
     #[test]

@@ -45,6 +45,9 @@ pub struct Batch {
     pub meta: Vec<RequestMeta>,
     /// When the oldest request entered the batcher.
     pub opened: Instant,
+    /// The policy's `max_batch` cap when this batch opened (reported in
+    /// traces as the batch-occupancy denominator).
+    pub capacity: usize,
 }
 
 impl Batch {
@@ -81,9 +84,16 @@ impl Batcher {
         let batch = self.pending.entry(key).or_insert_with(|| {
             let mut arena = pool.take(key.dtype, key.n);
             arena.reserve_frames(max_batch);
-            Batch { key, arena, meta: Vec::with_capacity(max_batch), opened: now }
+            Batch {
+                key,
+                arena,
+                meta: Vec::with_capacity(max_batch),
+                opened: now,
+                capacity: max_batch,
+            }
         });
-        let (re, im, meta) = req.into_parts();
+        let (re, im, mut meta) = req.into_parts();
+        meta.stamps.batched = now;
         batch.arena.push_frame_f64(&re, &im);
         batch.meta.push(meta);
         if batch.meta.len() >= self.policy.max_batch {

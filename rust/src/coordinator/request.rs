@@ -20,6 +20,7 @@ use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 use crate::fft::{AnyArena, DType, FftError, Strategy, StrategyChoice};
+use crate::obs::{TraceHandle, TraceStamps};
 
 /// What the request asks for.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -88,13 +89,17 @@ pub struct RequestMeta {
     pub reply: mpsc::Sender<FftResponse>,
     pub submitted: Instant,
     pub permit: Option<super::backpressure::Permit>,
+    /// Lifecycle stamps for the observability plane; initialized with
+    /// every stage collapsed onto the admission instant and filled in
+    /// as the request moves through the batcher and a worker.
+    pub stamps: TraceStamps,
 }
 
 impl FftRequest {
     /// Split into (payload, meta) — the intake path.
     pub fn into_parts(self) -> (Vec<f64>, Vec<f64>, RequestMeta) {
         let FftRequest { id, re, im, reply, submitted, permit, .. } = self;
-        (re, im, RequestMeta { id, reply, submitted, permit })
+        (re, im, RequestMeta { id, reply, submitted, permit, stamps: TraceStamps::new(submitted) })
     }
 }
 
@@ -119,6 +124,12 @@ pub struct FftResponse {
     pub bound: Option<f64>,
     /// Typed error if the request failed.
     pub error: Option<FftError>,
+    /// Trace handle attached by the serving worker.  Shared by clones;
+    /// the first [`FftResponse::finish_trace`] call (the TCP writer,
+    /// right after the frame bytes flush) stamps "reply written" and
+    /// records the trace; dropping the last clone is the fallback for
+    /// in-process consumers and dead connections.
+    trace: Option<Arc<TraceHandle>>,
 }
 
 impl FftResponse {
@@ -141,6 +152,7 @@ impl FftResponse {
             latency,
             bound,
             error: None,
+            trace: None,
         }
     }
 
@@ -160,6 +172,23 @@ impl FftResponse {
             latency,
             bound: None,
             error: Some(error),
+            trace: None,
+        }
+    }
+
+    /// Attach a trace handle (serving worker, on the Ok path).
+    pub fn with_trace(mut self, trace: Arc<TraceHandle>) -> Self {
+        self.trace = Some(trace);
+        self
+    }
+
+    /// Finish the attached trace now (idempotent; no-op when the
+    /// response carries none).  Called by the TCP writer immediately
+    /// after the reply bytes flush, so the "write" stage measures real
+    /// serialization + socket time.
+    pub fn finish_trace(&self) {
+        if let Some(t) = &self.trace {
+            t.finish();
         }
     }
 

@@ -32,6 +32,8 @@ use crate::signal::chirp::default_chirp;
 use crate::signal::pulse::MatchedFilter;
 use crate::tune::Wisdom;
 
+use crate::obs::TraceHandle;
+
 use super::backpressure::Gate;
 use super::batcher::{Batch, BatchPolicy, Batcher};
 use super::metrics::Metrics;
@@ -167,16 +169,24 @@ impl ComputeCtx {
     }
 
     /// |t|max of the stored table for `strategy` at this server's n,
-    /// computed once per strategy the worker has seen.
+    /// computed once per strategy the worker has seen — and reported
+    /// into the numerical-health registry's per-strategy high-water on
+    /// first computation.
     fn tmax_for(&self, strategy: Strategy) -> Option<f64> {
         let mut map = self.tmax.lock().unwrap_or_else(PoisonError::into_inner);
-        *map.entry(strategy).or_insert_with(|| {
-            if strategy == Strategy::Standard || self.n < 2 || !self.n.is_power_of_two() {
-                None
-            } else {
-                Some(ratio_stats(self.n, strategy).max_clamped)
-            }
-        })
+        if let Some(t) = map.get(&strategy) {
+            return *t;
+        }
+        let t = if strategy == Strategy::Standard || self.n < 2 || !self.n.is_power_of_two() {
+            None
+        } else {
+            Some(ratio_stats(self.n, strategy).max_clamped)
+        };
+        if let Some(tmax) = t {
+            self.metrics.record_tmax(strategy, tmax);
+        }
+        map.insert(strategy, t);
+        t
     }
 
     /// The matched filter computing in (`strategy`, `dtype`), built on
@@ -727,6 +737,7 @@ fn worker_loop(
     // compute path stops allocating.
     let ctx = ComputeCtx::new(&recipe, metrics.clone());
     let mut scratch = AnyScratch::new();
+    let mut batches_seen = 0u64;
     loop {
         let msg = {
             // Poison recovery: a sibling worker that panicked while
@@ -736,22 +747,43 @@ fn worker_loop(
         };
         match msg {
             Ok(WorkerMsg::Work(mut batch)) => {
+                let dequeued = Instant::now();
                 let size = batch.len();
+                let capacity = batch.capacity;
                 let key = batch.key;
+                batches_seen += 1;
+                // Sampled self-check (first batch, then every 64th):
+                // keep frame 0's input before the in-place execute so
+                // it can be re-run in f64 afterwards.
+                let sample = match &ctx {
+                    Ok(_) if batches_seen % 64 == 1 && key.op != FftOp::MatchedFilter => {
+                        Some(batch.arena.frame_f64(0))
+                    }
+                    _ => None,
+                };
                 let result = match &ctx {
                     Ok(ctx) => ctx.run_batch(&mut batch, &mut scratch),
                     Err(e) => Err(e.clone()),
                 };
+                let executed = Instant::now();
                 let bound = match &ctx {
                     Ok(ctx) => ctx.bound_for(&key),
                     Err(_) => None,
                 };
+                // Quantizer clamps counted while this batch's frames
+                // were ingested (fixed-point arenas only).
+                metrics.record_fixed_saturations(batch.arena.saturations());
                 let Batch { arena, meta, .. } = batch;
                 match result {
                     Ok(()) => {
                         // Share the result arena across all responses
                         // (zero copies), then park it for recycling.
                         let shared = Arc::new(arena);
+                        if let (Some(input), Ok(ctx)) = (sample, &ctx) {
+                            sampled_self_check(
+                                ctx, &key, input, &shared, bound, &mut scratch, &metrics,
+                            );
+                        }
                         for (frame, m) in meta.into_iter().enumerate() {
                             metrics.record_completed(key.dtype);
                             let latency = m.submitted.elapsed();
@@ -760,14 +792,30 @@ fn worker_loop(
                             // signal-dependent bound; floats use the
                             // batch-wide eq. (11) one.
                             let frame_bound = shared.frame_bound(frame).or(bound);
-                            let _ = m.reply.send(FftResponse::ok(
-                                m.id,
-                                shared.clone(),
-                                frame,
-                                size,
-                                latency,
-                                frame_bound,
+                            let mut stamps = m.stamps;
+                            stamps.dequeued = dequeued;
+                            stamps.executed = executed;
+                            let trace = Arc::new(TraceHandle::new(
+                                stamps,
+                                key.n as u32,
+                                key.op,
+                                key.strategy,
+                                key.dtype,
+                                size as u32,
+                                capacity as u32,
+                                metrics.clone(),
                             ));
+                            let _ = m.reply.send(
+                                FftResponse::ok(
+                                    m.id,
+                                    shared.clone(),
+                                    frame,
+                                    size,
+                                    latency,
+                                    frame_bound,
+                                )
+                                .with_trace(trace),
+                            );
                             drop(m.permit);
                         }
                         pool.recycle(shared);
@@ -794,4 +842,50 @@ fn worker_loop(
             Ok(WorkerMsg::Stop) | Err(_) => return,
         }
     }
+}
+
+/// Server-side sampled self-check: re-run one frame of a completed
+/// batch through the f64 reference plan and record the observed
+/// relative error against the a-priori bound the responses carry —
+/// the same [`Metrics::record_tightness`] path `client --verify`
+/// feeds.  Runs on ~1/64 batches, so allocation here is off the
+/// per-request hot path.
+fn sampled_self_check(
+    ctx: &ComputeCtx,
+    key: &PlanKey,
+    input: (Vec<f64>, Vec<f64>),
+    result: &AnyArena,
+    batch_bound: Option<f64>,
+    scratch: &mut AnyScratch,
+    metrics: &Metrics,
+) {
+    let Some(bound) = result.frame_bound(0).or(batch_bound) else {
+        return; // no a-priori bound applies (standard butterfly, …)
+    };
+    if !bound.is_finite() || bound <= 0.0 {
+        return;
+    }
+    let ref_key = PlanKey { dtype: DType::F64, ..*key };
+    let Ok(reference) = ctx.transform_for(&ref_key) else {
+        return;
+    };
+    let mut ref_arena = AnyArena::new(DType::F64, key.n);
+    ref_arena.push_frame_f64(&input.0, &input.1);
+    if reference.execute_many_any(&mut ref_arena, scratch).is_err() {
+        return;
+    }
+    let (rr, ri) = ref_arena.frame_f64(0);
+    let (or, oi) = result.frame_f64(0);
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for k in 0..key.n {
+        let dr = or[k] - rr[k];
+        let di = oi[k] - ri[k];
+        num += dr * dr + di * di;
+        den += rr[k] * rr[k] + ri[k] * ri[k];
+    }
+    if den <= 0.0 {
+        return; // zero reference spectrum: relative error is undefined
+    }
+    metrics.record_tightness(key.dtype, key.strategy, (num / den).sqrt(), bound);
 }

@@ -337,6 +337,17 @@ impl AnyArena {
         }
     }
 
+    /// Quantizer saturation events counted while this arena's frames
+    /// were ingested (since its last clear/reset).  Always 0 for float
+    /// arenas — rounding into a float format never clamps.
+    pub fn saturations(&self) -> u64 {
+        match self {
+            AnyArena::I16(a) => a.saturations(),
+            AnyArena::I32(a) => a.saturations(),
+            _ => 0,
+        }
+    }
+
     /// Borrow frame `i` as quantized codes plus block-floating-point
     /// metadata — the wire encoder's zero-copy read path.  `None` for
     /// float arenas.

@@ -52,12 +52,19 @@ pub struct FixedArena<Q: QSample> {
     im: Vec<Q>,
     meta: Vec<FrameMeta>,
     frame_len: usize,
+    /// Components clamped to ±`MAX_Q` at ingest since the last
+    /// [`FixedArena::clear`] — the observability plane's
+    /// saturation-event counter.  Peak-adjacent clamps are expected
+    /// (the peak itself can round to `MAX_Q + 1` before clamping) and
+    /// already covered by the ingest noise term; the counter makes
+    /// their rate visible.
+    saturations: u64,
 }
 
 impl<Q: QSample> FixedArena<Q> {
     /// An empty arena for frames of `frame_len` complex samples.
     pub fn new(frame_len: usize) -> Self {
-        FixedArena { re: Vec::new(), im: Vec::new(), meta: Vec::new(), frame_len }
+        FixedArena { re: Vec::new(), im: Vec::new(), meta: Vec::new(), frame_len, saturations: 0 }
     }
 
     /// Pre-size for `frames` frames (one allocation up front).
@@ -94,6 +101,12 @@ impl<Q: QSample> FixedArena<Q> {
         self.re.clear();
         self.im.clear();
         self.meta.clear();
+        self.saturations = 0;
+    }
+
+    /// Quantizer saturation events since the last clear.
+    pub fn saturations(&self) -> u64 {
+        self.saturations
     }
 
     /// Re-purpose the arena (possibly for a new frame length), keeping
@@ -136,12 +149,17 @@ impl<Q: QSample> FixedArena<Q> {
         }
         let scale = block_exponent(amax) - Q::FRAC as i32;
         let inv = exp2i(-scale);
-        let quantize = |x: f64| {
+        let mut clamped = 0u64;
+        let mut quantize = |x: f64| {
             let q = (x * inv).round() as i64;
+            if !(-Q::MAX_Q..=Q::MAX_Q).contains(&q) {
+                clamped += 1;
+            }
             Q::from_i64(q.clamp(-Q::MAX_Q, Q::MAX_Q))
         };
         self.re.extend(re.iter().map(|&x| quantize(x)));
         self.im.extend(im.iter().map(|&x| quantize(x)));
+        self.saturations += clamped;
         // One quantum of worst-case error per real component (half a
         // quantum from rounding, up to one for peak-adjacent clamps).
         let noise = (2.0 * self.frame_len as f64).sqrt() * exp2i(scale);
@@ -301,6 +319,21 @@ mod tests {
         let m = a.meta(0);
         assert_eq!((m.scale, m.l2, m.noise), (-15, 0.0, 0.0));
         assert_eq!(a.frame_f64(0).0, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn saturations_count_peak_adjacent_clamps_and_reset_on_clear() {
+        // A frame whose peak rounds up to MAX_Q + 1 clamps: with peak
+        // 1.9999999 the block exponent is 1, scale = 1 - 15, and
+        // 1.9999999 / 2^-14 rounds to 32768 > MAX_Q = 32767.
+        let mut a = FixedArena::<i16>::new(2);
+        a.push_frame_f64(&[1.999_999_9, 0.5], &[0.0, 0.0]);
+        assert_eq!(a.saturations(), 1);
+        // An in-range frame adds nothing.
+        a.push_frame_f64(&[1.0, 0.5], &[0.0, 0.0]);
+        assert_eq!(a.saturations(), 1);
+        a.clear();
+        assert_eq!(a.saturations(), 0);
     }
 
     #[test]

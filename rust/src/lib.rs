@@ -60,6 +60,16 @@
 //!   backpressure, and every published frame carries the composed
 //!   running bound along its source→sink path.  Served remotely via
 //!   the wire protocol's `GRAPH_*` ops (introduced in v4).
+//! * **Observability plane** ([`obs`]) — makes the running daemon
+//!   watchable: per-stage request tracing (admitted → batched →
+//!   dequeued → executed → reply-written) aggregated into log-bucketed
+//!   stage histograms with a lock-free span ring and worst-K
+//!   slow-request exemplars, numerical-health telemetry (sampled
+//!   bound-tightness ratios per dtype × strategy, stored-`|t|max`
+//!   high-waters, a `bound_violations` counter that must stay 0), and
+//!   a served stats surface: the wire protocol's `STATS` op (v6),
+//!   Prometheus text exposition via `fft stats --addr`, and
+//!   `serve --stats-every` log lines.  Alloc-free on the hot path.
 //! * **Autotuning plane** ([`tune`]) — the measured answer to "which
 //!   plan?": a deterministic measurement harness, a candidate search
 //!   over the existing plan space, and persisted host-fingerprinted
@@ -85,6 +95,7 @@ pub mod fft;
 pub mod fixed;
 pub mod graph;
 pub mod net;
+pub mod obs;
 pub mod precision;
 pub mod runtime;
 pub mod signal;

@@ -42,6 +42,7 @@ use std::time::Duration;
 use crate::coordinator::FftOp;
 use crate::fft::{DType, FftError, FftResult, Strategy, StrategyChoice};
 use crate::graph::GraphSpec;
+use crate::obs::MetricsSnapshot;
 use crate::stream::StreamSpec;
 
 use super::wire;
@@ -396,6 +397,31 @@ impl FftClient {
                 });
             }
             buffered.push_back(resp);
+        }
+    }
+
+    /// Fetch the server's live metrics snapshot (the protocol-v6
+    /// `STATS` op): counters, per-stage latency histograms,
+    /// bound-tightness telemetry, and slow-request exemplars — the
+    /// remote spelling of `coordinator::Server::metrics().snapshot()`.
+    /// The snapshot is taken synchronously on the server's reader
+    /// thread, so it reflects every request whose reply this client
+    /// has already received.  Interleaves freely with pipelined
+    /// traffic; other in-flight responses are parked for their own
+    /// receivers.
+    pub fn stats(&mut self) -> FftResult<MetricsSnapshot> {
+        let id = self.send_stream_frame(|id| Ok(wire::encode_stats_request(id)))?;
+        let frame = self.recv_frame_for(&[id])?;
+        match frame {
+            wire::Response::Stats { snapshot, .. } => Ok(*snapshot),
+            wire::Response::Busy { in_flight, limit, .. } => Err(FftError::Rejected {
+                in_flight: in_flight as usize,
+                limit: limit as usize,
+            }),
+            wire::Response::Error { message, .. } => Err(FftError::Backend(message)),
+            _ => Err(FftError::Protocol(
+                "non-stats frame answered a STATS request".into(),
+            )),
         }
     }
 
@@ -825,6 +851,11 @@ fn graph_response_from(frame: wire::Response) -> GraphResponse {
             s.dtype,
             FftError::Protocol("stream reply answered a graph request".into()),
         ),
+        wire::Response::Stats { id, .. } => fail(
+            id,
+            DType::F32,
+            FftError::Protocol("stats reply answered a graph request".into()),
+        ),
     }
 }
 
@@ -892,6 +923,19 @@ fn stream_response_from(frame: wire::Response) -> StreamResponse {
                 "graph publish frame answered a stream request".into(),
             )),
         },
+        wire::Response::Stats { id, .. } => StreamResponse {
+            id,
+            session: 0,
+            dtype: DType::F32,
+            passes: 0,
+            fft_len: 0,
+            bound: None,
+            re: Vec::new(),
+            im: Vec::new(),
+            error: Some(FftError::Protocol(
+                "stats reply answered a stream request".into(),
+            )),
+        },
     }
 }
 
@@ -944,6 +988,19 @@ fn from_wire(frame: wire::Response) -> NetResponse {
             im: Vec::new(),
             error: Some(FftError::Protocol(
                 "graph publish frame on the one-shot receive path; receive it via its handle"
+                    .into(),
+            )),
+        },
+        // And a stats frame: it answers an FftClient::stats call, which
+        // receives it itself — seeing one here means the ids desynced.
+        wire::Response::Stats { id, .. } => NetResponse {
+            id,
+            dtype: DType::F32,
+            bound: None,
+            re: Vec::new(),
+            im: Vec::new(),
+            error: Some(FftError::Protocol(
+                "stats reply on the one-shot receive path; request it via FftClient::stats"
                     .into(),
             )),
         },

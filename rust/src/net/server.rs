@@ -53,6 +53,7 @@ use std::time::Duration;
 use crate::coordinator::{FftResponse, Route, Server};
 use crate::fft::{DType, FftError, FftResult};
 use crate::graph::{GraphConfig, GraphOut, GraphPublish, GraphRegistry, PublishSink, Subscription};
+use crate::obs::MetricsSnapshot;
 use crate::stream::{SessionRegistry, StreamConfig, StreamOut};
 
 use super::wire;
@@ -96,6 +97,9 @@ enum ConnReply {
     /// and the writer releases the subscriber's backpressure slot
     /// ([`Subscription::complete_delivery`]) once it is written.
     Publish { sub: Arc<Subscription>, frame: Arc<GraphPublish> },
+    /// A reader-synthesized metrics snapshot answering an `OP_STATS`
+    /// request (protocol v6).
+    Stats { id: u64, snapshot: Box<MetricsSnapshot> },
 }
 
 /// The graph registry's delivery side for TCP subscribers: frames are
@@ -599,6 +603,13 @@ fn read_frames(
                             Err(e) => send_err(id, e, DType::F32),
                         }
                     }
+                    wire::RequestFrame::Stats { id } => {
+                        // Served synchronously on the reader: the
+                        // snapshot is a relaxed read of every counter,
+                        // never touching the request path.
+                        let snapshot = Box::new(coordinator.snapshot());
+                        let _ = conn_tx.send(ConnReply::Stats { id, snapshot });
+                    }
                 }
             }
             Err(e) => {
@@ -623,7 +634,8 @@ fn frame_id(frame: &wire::RequestFrame) -> u64 {
         | wire::RequestFrame::GraphOpen { id, .. }
         | wire::RequestFrame::GraphChunk { id, .. }
         | wire::RequestFrame::GraphSubscribe { id, .. }
-        | wire::RequestFrame::GraphClose { id, .. } => *id,
+        | wire::RequestFrame::GraphClose { id, .. }
+        | wire::RequestFrame::Stats { id } => *id,
     }
 }
 
@@ -687,7 +699,16 @@ fn write_loop(stream: TcpStream, reply_rx: mpsc::Receiver<ConnReply>) {
 
 fn write_conn_reply<W: std::io::Write>(w: &mut W, resp: &ConnReply) -> crate::fft::FftResult<()> {
     match resp {
-        ConnReply::Fft(resp) => write_reply(w, resp),
+        ConnReply::Fft(resp) => {
+            let result = write_reply(w, resp);
+            if result.is_ok() {
+                // The reply bytes are in the connection buffer — the
+                // trace's write stage ends here (on a failed write the
+                // handle's drop guard closes the trace instead).
+                resp.finish_trace();
+            }
+            result
+        }
         ConnReply::Stream(s) => wire::write_stream_reply_parts(
             w, s.id, s.dtype, s.session, s.passes, s.fft_len, s.bound, &s.re, &s.im,
         ),
@@ -715,6 +736,7 @@ fn write_conn_reply<W: std::io::Write>(w: &mut W, resp: &ConnReply) -> crate::ff
             sub.complete_delivery();
             result
         }
+        ConnReply::Stats { id, snapshot } => wire::write_stats_reply(w, *id, snapshot),
     }
 }
 

@@ -7,7 +7,7 @@
 //! ```text
 //! offset size  field
 //!   0     4    magic     "FFTN"
-//!   4     2    version   4
+//!   4     2    version   6
 //!   6     1    kind      1 = request, 2 = response
 //!   7     1    code      request: op tag; response: status
 //!   8     1    strategy  request only (responses write 0)
@@ -50,6 +50,14 @@
 //! additionally carries the overlap-save FFT block-length override in
 //! its previously-zero `frame` field — see `PROTOCOL.md` §Graphs.
 //!
+//! Protocol v6 adds the **observability plane**: the [`OP_STATS`]
+//! request op (empty body) and the [`STATUS_STATS`] response status,
+//! whose body is a versioned, self-describing serialization of the
+//! server's [`MetricsSnapshot`] — counters, per-dtype splits, the
+//! end-to-end and per-stage latency histograms, per-strategy `|t|max`
+//! high-waters, bound-tightness cells and slow-request exemplars.
+//! See `PROTOCOL.md` §Stats for the normative body layout.
+//!
 //! Every decode failure is a typed [`FftError::Protocol`] — truncated
 //! streams, bad magic, failed checksums, unknown versions/tags and
 //! oversized lengths are all errors, never panics (asserted by
@@ -61,6 +69,10 @@ use std::io::{Read, Write};
 use crate::coordinator::FftOp;
 use crate::fft::{DType, FftError, FftResult, Strategy, StrategyChoice};
 use crate::graph::{GraphSpec, NodeKind, NodeSpec, MAX_GRAPH_EDGES, MAX_GRAPH_NODES};
+use crate::obs::{
+    DTypeCounts, Exemplar, HistSnapshot, MetricsSnapshot, TightnessSnapshot, RATIO_BUCKETS,
+    STAGE_COUNT, STRATEGIES, TOTAL_BUCKETS,
+};
 use crate::signal::window::Window;
 use crate::stream::{StreamKind, StreamSpec};
 
@@ -91,7 +103,13 @@ pub const MAGIC: [u8; 4] = *b"FFTN";
 /// responses may be computed under a server-chosen strategy — hence
 /// the bump.  `STREAM_OPEN`/`GRAPH_OPEN` still require a concrete
 /// strategy tag (0–3): sessions pin their plan at open.
-pub const VERSION: u16 = 5;
+///
+/// v6 added the observability plane: request op `STATS = 10` and
+/// response status `STATS = 5`, whose body carries a versioned
+/// metrics-snapshot frame (counters, per-stage latency histograms,
+/// numerical-health telemetry, slow-request exemplars) — a new op tag
+/// and a new body layout, hence the bump.
+pub const VERSION: u16 = 6;
 /// Fixed header size in bytes.
 pub const HEADER_LEN: usize = 28;
 /// Upper bound on a frame payload: 64 MiB = 4 Mi complex f64 samples.
@@ -126,6 +144,10 @@ pub const STATUS_STREAM: u8 = 3;
 /// sink node id, publish sequence number, composed pass count and
 /// running path bound.
 pub const STATUS_PUBLISH: u8 = 4;
+/// An observability-plane response (protocol v6): answers [`OP_STATS`]
+/// with a versioned [`MetricsSnapshot`] body — see `PROTOCOL.md`
+/// §Stats for the normative layout.
+pub const STATUS_STATS: u8 = 5;
 
 /// Request op tags of the streaming plane (the one-shot FFT ops own
 /// tags 0–2 via [`FftOp`]).
@@ -138,6 +160,16 @@ pub const OP_GRAPH_OPEN: u8 = 6;
 pub const OP_GRAPH_CHUNK: u8 = 7;
 pub const OP_GRAPH_SUBSCRIBE: u8 = 8;
 pub const OP_GRAPH_CLOSE: u8 = 9;
+
+/// Request op tag of the observability plane (protocol v6): ask the
+/// server for a metrics snapshot.  The request body is empty and the
+/// strategy/dtype header bytes are 0.
+pub const OP_STATS: u8 = 10;
+
+/// Version tag leading every `STATUS_STATS` body.  Bumped when the
+/// snapshot layout itself changes (the protocol [`VERSION`] gates the
+/// frame layer; this gates the snapshot schema inside it).
+pub const STATS_SNAPSHOT_VERSION: u32 = 1;
 
 /// One decoded request frame: id + plan selection + planar payload.
 #[derive(Clone, Debug, PartialEq)]
@@ -177,6 +209,8 @@ pub enum RequestFrame {
     GraphSubscribe { id: u64, graph: u64, node: u32 },
     /// Flush every node's tail and close a graph.
     GraphClose { id: u64, graph: u64 },
+    /// Ask for a metrics snapshot (protocol v6, empty body).
+    Stats { id: u64 },
 }
 
 /// One decoded response frame.
@@ -203,6 +237,10 @@ pub enum Response {
     /// A graph-plane result (`STATUS_PUBLISH`, protocol v4): op acks
     /// and published sink frames share one shape.
     Publish(PublishReply),
+    /// An observability-plane result (`STATUS_STATS`, protocol v6):
+    /// the server's metrics snapshot at the moment the request was
+    /// served (boxed — the snapshot dwarfs every other variant).
+    Stats { id: u64, snapshot: Box<MetricsSnapshot> },
 }
 
 /// Sub-kind of a `STATUS_PUBLISH` frame.
@@ -271,9 +309,10 @@ impl Response {
     /// The correlation id this response answers.
     pub fn id(&self) -> u64 {
         match self {
-            Response::Ok { id, .. } | Response::Busy { id, .. } | Response::Error { id, .. } => {
-                *id
-            }
+            Response::Ok { id, .. }
+            | Response::Busy { id, .. }
+            | Response::Error { id, .. }
+            | Response::Stats { id, .. } => *id,
             Response::Stream(s) => s.id,
             Response::Publish(p) => p.id,
         }
@@ -883,6 +922,333 @@ pub fn write_graph_close<W: Write>(w: &mut W, id: u64, graph: u64) -> FftResult<
         .map_err(|e| io_err("writing graph-close frame", &e))
 }
 
+/// Encode one `STATS` request frame (protocol v6, empty body).
+pub fn encode_stats_request(id: u64) -> Vec<u8> {
+    encode_header(KIND_REQUEST, OP_STATS, 0, 0, id, 0).to_vec()
+}
+
+/// Write one `STATS` request frame.
+pub fn write_stats_request<W: Write>(w: &mut W, id: u64) -> FftResult<()> {
+    w.write_all(&encode_stats_request(id))
+        .map_err(|e| io_err("writing stats request frame", &e))
+}
+
+/// The u64 counters a `STATUS_STATS` body carries, in normative order
+/// (`PROTOCOL.md` §Stats).  The count travels on the wire, so a
+/// mismatched peer fails typed instead of misparsing the blocks after.
+const STATS_COUNTERS: usize = 24;
+
+/// `exemplars` length cap a decoder accepts — generous headroom over
+/// the server's worst-K table so the cap never gates a layout change,
+/// while a hostile length prefix still cannot force an allocation.
+const MAX_STATS_EXEMPLARS: usize = 64;
+
+fn stats_counters(s: &MetricsSnapshot) -> [u64; STATS_COUNTERS] {
+    [
+        s.submitted,
+        s.completed,
+        s.rejected,
+        s.failed,
+        s.batches,
+        s.queue_depth,
+        s.p50_us,
+        s.p99_us,
+        s.streams_opened,
+        s.open_streams,
+        s.stream_chunks,
+        s.max_stream_passes,
+        s.graphs_opened,
+        s.open_graphs,
+        s.active_subscribers,
+        s.published_chunks,
+        s.subscriber_lag_drops,
+        s.planner_cache_hits,
+        s.planner_cache_misses,
+        s.tuned_plans_selected,
+        s.auto_defaulted,
+        s.traced,
+        s.bound_violations,
+        s.fixed_saturations,
+    ]
+}
+
+fn put_hist(body: &mut Vec<u8>, tag: u8, h: &HistSnapshot) {
+    body.push(tag);
+    body.extend_from_slice(&(TOTAL_BUCKETS as u32).to_le_bytes());
+    for &b in &h.buckets {
+        body.extend_from_slice(&b.to_le_bytes());
+    }
+    body.extend_from_slice(&h.sum_us.to_le_bytes());
+    body.extend_from_slice(&h.max_seen_us.to_le_bytes());
+}
+
+fn take_hist(b: &mut &[u8], expect_tag: u8) -> FftResult<HistSnapshot> {
+    let tag = take_u8(b, "histogram stage tag")?;
+    if tag != expect_tag {
+        return Err(FftError::Protocol(format!(
+            "unknown or out-of-order histogram stage tag {tag} (expected {expect_tag})"
+        )));
+    }
+    let n_buckets = take_u32(b, "histogram bucket count")? as usize;
+    if n_buckets != TOTAL_BUCKETS {
+        return Err(FftError::Protocol(format!(
+            "histogram carries {n_buckets} buckets (this build speaks {TOTAL_BUCKETS})"
+        )));
+    }
+    let mut h = HistSnapshot::default();
+    for bucket in h.buckets.iter_mut() {
+        *bucket = take_u64(b, "histogram bucket")?;
+    }
+    h.sum_us = take_u64(b, "histogram sum")?;
+    h.max_seen_us = take_u64(b, "histogram max")?;
+    Ok(h)
+}
+
+/// Serialize a [`MetricsSnapshot`] into a `STATUS_STATS` body.  The
+/// layout is normative (`PROTOCOL.md` §Stats) and self-describing
+/// enough to fail typed: every variable-length block leads with its
+/// count, histograms with a stage tag + bucket count.
+fn encode_stats_body(s: &MetricsSnapshot) -> Vec<u8> {
+    let mut body = Vec::new();
+    body.extend_from_slice(&STATS_SNAPSHOT_VERSION.to_le_bytes());
+    // Counters.
+    body.extend_from_slice(&(STATS_COUNTERS as u32).to_le_bytes());
+    for c in stats_counters(s) {
+        body.extend_from_slice(&c.to_le_bytes());
+    }
+    // Derived gauges.
+    body.extend_from_slice(&s.mean_batch.to_le_bytes());
+    body.extend_from_slice(&s.occupancy.to_le_bytes());
+    // Per-dtype split.
+    body.extend_from_slice(&(DType::COUNT as u32).to_le_bytes());
+    for d in &s.per_dtype {
+        for c in [d.submitted, d.completed, d.failed, d.tuned] {
+            body.extend_from_slice(&c.to_le_bytes());
+        }
+    }
+    // Latency histograms: e2e (stage tag 0) then the four request
+    // stages (tags 1–4, `STAGE_NAMES` order).
+    body.extend_from_slice(&(1 + STAGE_COUNT as u32).to_le_bytes());
+    put_hist(&mut body, 0, &s.e2e);
+    for (i, h) in s.stages.iter().enumerate() {
+        put_hist(&mut body, 1 + i as u8, h);
+    }
+    // Stored-|t|max high-waters, STRATEGIES order (NaN = never seen).
+    body.extend_from_slice(&(STRATEGIES.len() as u32).to_le_bytes());
+    for t in &s.tmax_highwater {
+        body.extend_from_slice(&t.unwrap_or(f64::NAN).to_le_bytes());
+    }
+    // Bound-tightness cells.
+    body.extend_from_slice(&(s.health.len() as u32).to_le_bytes());
+    for c in &s.health {
+        body.push(dtype_code(c.dtype));
+        body.push(strategy_code(c.strategy));
+        body.extend_from_slice(&c.samples.to_le_bytes());
+        body.extend_from_slice(&c.violations.to_le_bytes());
+        body.extend_from_slice(&c.max_ratio.to_le_bytes());
+        body.extend_from_slice(&(RATIO_BUCKETS as u32).to_le_bytes());
+        for &b in &c.buckets {
+            body.extend_from_slice(&b.to_le_bytes());
+        }
+    }
+    // Slow-request exemplars, worst first.
+    body.extend_from_slice(&(s.exemplars.len() as u32).to_le_bytes());
+    for e in &s.exemplars {
+        for us in [e.batched_us, e.dequeued_us, e.executed_us, e.written_us] {
+            body.extend_from_slice(&us.to_le_bytes());
+        }
+        body.extend_from_slice(&e.n.to_le_bytes());
+        body.push(op_code(e.op));
+        body.push(strategy_code(e.strategy));
+        body.push(dtype_code(e.dtype));
+        body.push(0); // pad
+        body.extend_from_slice(&e.batch_len.to_le_bytes());
+        body.extend_from_slice(&e.batch_capacity.to_le_bytes());
+    }
+    body
+}
+
+/// Decode a `STATUS_STATS` body.  Every malformation — truncation, a
+/// foreign snapshot version, mismatched block counts, unknown stage /
+/// strategy / dtype tags, trailing bytes — is a typed
+/// [`FftError::Protocol`], never a panic.
+fn decode_stats_body(id: u64, body: &[u8]) -> FftResult<Response> {
+    let mut b = body;
+    let ver = take_u32(&mut b, "stats snapshot version")?;
+    if ver != STATS_SNAPSHOT_VERSION {
+        return Err(FftError::Protocol(format!(
+            "unsupported stats snapshot version {ver} (this build speaks {STATS_SNAPSHOT_VERSION})"
+        )));
+    }
+    let n_counters = take_u32(&mut b, "stats counter count")? as usize;
+    if n_counters != STATS_COUNTERS {
+        return Err(FftError::Protocol(format!(
+            "stats body carries {n_counters} counters (this build speaks {STATS_COUNTERS})"
+        )));
+    }
+    let mut counters = [0u64; STATS_COUNTERS];
+    for c in counters.iter_mut() {
+        *c = take_u64(&mut b, "stats counter")?;
+    }
+    let mean_batch = take_f64(&mut b, "mean batch")?;
+    let occupancy = take_f64(&mut b, "occupancy")?;
+    let n_dtypes = take_u32(&mut b, "dtype count")? as usize;
+    if n_dtypes != DType::COUNT {
+        return Err(FftError::Protocol(format!(
+            "stats body carries {n_dtypes} dtype cells (this build speaks {})",
+            DType::COUNT
+        )));
+    }
+    let mut per_dtype = [DTypeCounts::default(); DType::COUNT];
+    for d in per_dtype.iter_mut() {
+        d.submitted = take_u64(&mut b, "dtype submitted")?;
+        d.completed = take_u64(&mut b, "dtype completed")?;
+        d.failed = take_u64(&mut b, "dtype failed")?;
+        d.tuned = take_u64(&mut b, "dtype tuned")?;
+    }
+    let n_hists = take_u32(&mut b, "histogram count")? as usize;
+    if n_hists != 1 + STAGE_COUNT {
+        return Err(FftError::Protocol(format!(
+            "stats body carries {n_hists} histograms (this build speaks {})",
+            1 + STAGE_COUNT
+        )));
+    }
+    let e2e = take_hist(&mut b, 0)?;
+    let mut stages = [HistSnapshot::default(); STAGE_COUNT];
+    for (i, stage) in stages.iter_mut().enumerate() {
+        *stage = take_hist(&mut b, 1 + i as u8)?;
+    }
+    let n_tmax = take_u32(&mut b, "tmax count")? as usize;
+    if n_tmax != STRATEGIES.len() {
+        return Err(FftError::Protocol(format!(
+            "stats body carries {n_tmax} tmax high-waters (this build speaks {})",
+            STRATEGIES.len()
+        )));
+    }
+    let mut tmax_highwater = [None; STRATEGIES.len()];
+    for t in tmax_highwater.iter_mut() {
+        let v = take_f64(&mut b, "tmax high-water")?;
+        *t = (!v.is_nan()).then_some(v);
+    }
+    let n_health = take_u32(&mut b, "health cell count")? as usize;
+    if n_health > DType::COUNT * STRATEGIES.len() {
+        return Err(FftError::Protocol(format!(
+            "stats body advertises {n_health} health cells (at most {} exist)",
+            DType::COUNT * STRATEGIES.len()
+        )));
+    }
+    let mut health = Vec::with_capacity(n_health);
+    for _ in 0..n_health {
+        let dtype = dtype_from(take_u8(&mut b, "health dtype tag")?)?;
+        let strategy = strategy_from(take_u8(&mut b, "health strategy tag")?)?;
+        let samples = take_u64(&mut b, "health samples")?;
+        let violations = take_u64(&mut b, "health violations")?;
+        let max_ratio = take_f64(&mut b, "health max ratio")?;
+        let n_buckets = take_u32(&mut b, "health bucket count")? as usize;
+        if n_buckets != RATIO_BUCKETS {
+            return Err(FftError::Protocol(format!(
+                "health cell carries {n_buckets} ratio buckets (this build speaks {RATIO_BUCKETS})"
+            )));
+        }
+        let mut buckets = [0u64; RATIO_BUCKETS];
+        for bucket in buckets.iter_mut() {
+            *bucket = take_u64(&mut b, "health ratio bucket")?;
+        }
+        health.push(TightnessSnapshot { dtype, strategy, samples, violations, max_ratio, buckets });
+    }
+    let n_ex = take_u32(&mut b, "exemplar count")? as usize;
+    if n_ex > MAX_STATS_EXEMPLARS {
+        return Err(FftError::Protocol(format!(
+            "stats body advertises {n_ex} exemplars (limit {MAX_STATS_EXEMPLARS})"
+        )));
+    }
+    let mut exemplars = Vec::with_capacity(n_ex);
+    for _ in 0..n_ex {
+        let batched_us = take_u64(&mut b, "exemplar batched")?;
+        let dequeued_us = take_u64(&mut b, "exemplar dequeued")?;
+        let executed_us = take_u64(&mut b, "exemplar executed")?;
+        let written_us = take_u64(&mut b, "exemplar written")?;
+        let n = take_u32(&mut b, "exemplar n")?;
+        let op = op_from(take_u8(&mut b, "exemplar op tag")?)?;
+        let strategy = strategy_from(take_u8(&mut b, "exemplar strategy tag")?)?;
+        let dtype = dtype_from(take_u8(&mut b, "exemplar dtype tag")?)?;
+        let _pad = take_u8(&mut b, "exemplar pad")?;
+        let batch_len = take_u32(&mut b, "exemplar batch len")?;
+        let batch_capacity = take_u32(&mut b, "exemplar batch capacity")?;
+        exemplars.push(Exemplar {
+            batched_us,
+            dequeued_us,
+            executed_us,
+            written_us,
+            n,
+            op,
+            strategy,
+            dtype,
+            batch_len,
+            batch_capacity,
+        });
+    }
+    if !b.is_empty() {
+        return Err(FftError::Protocol(format!(
+            "stats body has {} trailing bytes after the exemplar block",
+            b.len()
+        )));
+    }
+    // Field order mirrors `stats_counters` — the one normative list.
+    let c = counters;
+    Ok(Response::Stats {
+        id,
+        snapshot: Box::new(MetricsSnapshot {
+            submitted: c[0],
+            completed: c[1],
+            rejected: c[2],
+            failed: c[3],
+            batches: c[4],
+            mean_batch,
+            occupancy,
+            queue_depth: c[5],
+            p50_us: c[6],
+            p99_us: c[7],
+            streams_opened: c[8],
+            open_streams: c[9],
+            stream_chunks: c[10],
+            max_stream_passes: c[11],
+            graphs_opened: c[12],
+            open_graphs: c[13],
+            active_subscribers: c[14],
+            published_chunks: c[15],
+            subscriber_lag_drops: c[16],
+            planner_cache_hits: c[17],
+            planner_cache_misses: c[18],
+            tuned_plans_selected: c[19],
+            auto_defaulted: c[20],
+            per_dtype,
+            traced: c[21],
+            bound_violations: c[22],
+            fixed_saturations: c[23],
+            e2e,
+            stages,
+            tmax_highwater,
+            health,
+            exemplars,
+        }),
+    })
+}
+
+/// Write one `STATUS_STATS` response frame carrying `snapshot`.
+pub fn write_stats_reply<W: Write>(
+    w: &mut W,
+    id: u64,
+    snapshot: &MetricsSnapshot,
+) -> FftResult<()> {
+    let body = encode_stats_body(snapshot);
+    let body_len = check_body_len(body.len())?;
+    let io = |e: std::io::Error| io_err("writing stats response frame", &e);
+    w.write_all(&encode_header(KIND_RESPONSE, STATUS_STATS, 0, 0, id, body_len))
+        .map_err(io)?;
+    w.write_all(&body).map_err(io)
+}
+
 /// Encode one response frame into bytes.  Errors when an `Ok` frame's
 /// `re`/`im` lengths differ.
 pub fn encode_response(resp: &Response) -> FftResult<Vec<u8>> {
@@ -954,6 +1320,11 @@ pub fn encode_response(resp: &Response) -> FftResult<Vec<u8>> {
                 &mut out, p.id, p.dtype, p.graph, p.kind, p.node, p.seq, p.passes, p.bound,
                 &p.re, &p.im,
             )?;
+            Ok(out)
+        }
+        Response::Stats { id, snapshot } => {
+            let mut out = Vec::new();
+            write_stats_reply(&mut out, *id, snapshot)?;
             Ok(out)
         }
     }
@@ -1189,7 +1560,7 @@ fn decode_fixed_ok(id: u64, dtype: DType, body: &[u8]) -> FftResult<Response> {
 fn take<'a>(b: &mut &'a [u8], n: usize, what: &str) -> FftResult<&'a [u8]> {
     if b.len() < n {
         return Err(FftError::Protocol(format!(
-            "graph-open body truncated reading {what} ({} of {n} bytes)",
+            "frame body truncated reading {what} ({} of {n} bytes)",
             b.len()
         )));
     }
@@ -1198,8 +1569,20 @@ fn take<'a>(b: &mut &'a [u8], n: usize, what: &str) -> FftResult<&'a [u8]> {
     Ok(head)
 }
 
+fn take_u8(b: &mut &[u8], what: &str) -> FftResult<u8> {
+    Ok(take(b, 1, what)?[0])
+}
+
 fn take_u32(b: &mut &[u8], what: &str) -> FftResult<u32> {
     Ok(u32::from_le_bytes(take(b, 4, what)?.try_into().unwrap()))
+}
+
+fn take_u64(b: &mut &[u8], what: &str) -> FftResult<u64> {
+    Ok(u64::from_le_bytes(take(b, 8, what)?.try_into().unwrap()))
+}
+
+fn take_f64(b: &mut &[u8], what: &str) -> FftResult<f64> {
+    Ok(f64::from_le_bytes(take(b, 8, what)?.try_into().unwrap()))
 }
 
 /// Decode a `GRAPH_OPEN` body into a structurally validated
@@ -1465,6 +1848,16 @@ pub fn read_request_frame<R: Read>(r: &mut R) -> FftResult<Option<RequestFrame>>
                 graph: u64::from_le_bytes(body[0..8].try_into().unwrap()),
             }))
         }
+        OP_STATS => {
+            let body = read_body(r, h.body_len)?;
+            if !body.is_empty() {
+                return Err(FftError::Protocol(format!(
+                    "stats request body length {} (expected empty)",
+                    body.len()
+                )));
+            }
+            Ok(Some(RequestFrame::Stats { id: h.id }))
+        }
         code => {
             let op = op_from(code)?;
             let strategy = choice_from(h.strategy)?;
@@ -1497,7 +1890,7 @@ pub fn read_request<R: Read>(r: &mut R) -> FftResult<Option<Request>> {
         None => Ok(None),
         Some(RequestFrame::Fft(req)) => Ok(Some(req)),
         Some(_) => Err(FftError::Protocol(
-            "stream/graph frame on the one-shot request path".into(),
+            "stream/graph/stats frame on the one-shot request path".into(),
         )),
     }
 }
@@ -1625,6 +2018,7 @@ pub fn read_response<R: Read>(r: &mut R) -> FftResult<Option<Response>> {
                 im: get_f64s(&body[re_end..]),
             })))
         }
+        STATUS_STATS => Ok(Some(decode_stats_body(h.id, &body)?)),
         other => Err(FftError::Protocol(format!(
             "unknown response status {other}"
         ))),
@@ -1736,7 +2130,11 @@ mod tests {
         // error, never serve an `auto` request under tag confusion.
         assert_eq!(strategy_code(Strategy::DualSelect) + 1, STRATEGY_TAG_AUTO);
         assert_eq!(choice_code(StrategyChoice::Auto), 4);
-        assert_eq!(VERSION, 5);
+        // v6: the observability plane.
+        assert_eq!(OP_STATS, 10);
+        assert_eq!(STATUS_STATS, 5);
+        assert_eq!(STATS_SNAPSHOT_VERSION, 1);
+        assert_eq!(VERSION, 6);
     }
 
     #[test]
@@ -2298,5 +2696,193 @@ mod tests {
             read_response(&mut &bytes[..]).unwrap_err(),
             FftError::Protocol(_)
         ));
+    }
+
+    /// A snapshot with every block populated by distinct values, so a
+    /// roundtrip that drops or reorders any field cannot pass.
+    fn demo_snapshot() -> MetricsSnapshot {
+        let mut s = MetricsSnapshot {
+            submitted: 101,
+            completed: 90,
+            rejected: 7,
+            failed: 4,
+            batches: 30,
+            mean_batch: 3.0,
+            occupancy: 0.09375,
+            queue_depth: 5,
+            p50_us: 128,
+            p99_us: 4096,
+            streams_opened: 11,
+            open_streams: 2,
+            stream_chunks: 200,
+            max_stream_passes: 17,
+            graphs_opened: 3,
+            open_graphs: 1,
+            active_subscribers: 4,
+            published_chunks: 55,
+            subscriber_lag_drops: 6,
+            planner_cache_hits: 80,
+            planner_cache_misses: 10,
+            tuned_plans_selected: 9,
+            auto_defaulted: 2,
+            traced: 88,
+            bound_violations: 0,
+            fixed_saturations: 13,
+            ..MetricsSnapshot::default()
+        };
+        for (i, d) in s.per_dtype.iter_mut().enumerate() {
+            *d = DTypeCounts {
+                submitted: 10 + i as u64,
+                completed: 20 + i as u64,
+                failed: i as u64,
+                tuned: 2 * i as u64,
+            };
+        }
+        s.e2e.buckets[7] = 88;
+        s.e2e.buckets[TOTAL_BUCKETS - 1] = 1; // overflow bucket travels
+        s.e2e.sum_us = 11_264;
+        s.e2e.max_seen_us = 60_000_000;
+        for (i, h) in s.stages.iter_mut().enumerate() {
+            h.buckets[i] = 88;
+            h.sum_us = 100 * (i as u64 + 1);
+            h.max_seen_us = 10 * (i as u64 + 1);
+        }
+        s.tmax_highwater = [Some(1.0), None, Some(0.7071), Some(1.4142)];
+        s.health.push(TightnessSnapshot {
+            dtype: DType::F16,
+            strategy: Strategy::DualSelect,
+            samples: 40,
+            violations: 0,
+            max_ratio: 0.021,
+            buckets: [0, 0, 0, 1, 3, 30, 5, 1],
+        });
+        s.health.push(TightnessSnapshot {
+            dtype: DType::I16,
+            strategy: Strategy::Standard,
+            samples: 8,
+            violations: 0,
+            max_ratio: 0.4,
+            buckets: [0; RATIO_BUCKETS],
+        });
+        s.exemplars.push(Exemplar {
+            batched_us: 40,
+            dequeued_us: 55,
+            executed_us: 900,
+            written_us: 1000,
+            n: 4096,
+            op: FftOp::MatchedFilter,
+            strategy: Strategy::Cosine,
+            dtype: DType::Bf16,
+            batch_len: 7,
+            batch_capacity: 32,
+        });
+        s
+    }
+
+    #[test]
+    fn stats_frames_roundtrip_exactly() {
+        // Request: empty body, id echoed.
+        let bytes = encode_stats_request(71);
+        assert_eq!(bytes.len(), HEADER_LEN);
+        match read_request_frame(&mut &bytes[..]).unwrap().unwrap() {
+            RequestFrame::Stats { id } => assert_eq!(id, 71),
+            other => panic!("expected stats request, got {other:?}"),
+        }
+        // Response: every field of a fully-populated snapshot survives
+        // the trip bit-exactly, and the staged encoder is
+        // byte-identical to the streaming writer.
+        for snapshot in [demo_snapshot(), MetricsSnapshot::default()] {
+            let resp = Response::Stats { id: 72, snapshot: Box::new(snapshot.clone()) };
+            let staged = encode_response(&resp).unwrap();
+            let mut streamed = Vec::new();
+            write_stats_reply(&mut streamed, 72, &snapshot).unwrap();
+            assert_eq!(streamed, staged);
+            match read_response(&mut &staged[..]).unwrap().unwrap() {
+                Response::Stats { id, snapshot: got } => {
+                    assert_eq!(id, 72);
+                    assert_eq!(*got, snapshot);
+                }
+                other => panic!("expected stats reply, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_stats_frames_are_typed_errors() {
+        let protocol_resp = |bytes: &[u8]| {
+            let err = read_response(&mut &bytes[..]).unwrap_err();
+            assert!(matches!(err, FftError::Protocol(_)), "{err:?}");
+        };
+        // A stats request with a body is malformed.
+        let h = encode_header(KIND_REQUEST, OP_STATS, 0, 0, 1, 8);
+        let mut bytes = h.to_vec();
+        bytes.extend_from_slice(&[0u8; 8]);
+        assert!(matches!(
+            read_request_frame(&mut &bytes[..]).unwrap_err(),
+            FftError::Protocol(_)
+        ));
+        // Offsets of the patchable fields in an encoded body (fixed by
+        // the normative layout; the roundtrip test pins the layout).
+        let counter_block = 4 + 4 + STATS_COUNTERS * 8 + 16;
+        let dtype_block = 4 + DType::COUNT * 4 * 8;
+        let first_stage_tag = counter_block + dtype_block + 4;
+        let good = encode_response(&Response::Stats {
+            id: 1,
+            snapshot: Box::new(demo_snapshot()),
+        })
+        .unwrap();
+        // Foreign snapshot version.
+        let mut bytes = good.clone();
+        bytes[HEADER_LEN..HEADER_LEN + 4].copy_from_slice(&9u32.to_le_bytes());
+        protocol_resp(&bytes);
+        // Mismatched counter count.
+        let mut bytes = good.clone();
+        bytes[HEADER_LEN + 4..HEADER_LEN + 8].copy_from_slice(&7u32.to_le_bytes());
+        protocol_resp(&bytes);
+        // Unknown histogram stage tag.
+        let mut bytes = good.clone();
+        bytes[HEADER_LEN + first_stage_tag] = 9;
+        protocol_resp(&bytes);
+        // Bad histogram bucket count.
+        let mut bytes = good.clone();
+        bytes[HEADER_LEN + first_stage_tag + 1..HEADER_LEN + first_stage_tag + 5]
+            .copy_from_slice(&99u32.to_le_bytes());
+        protocol_resp(&bytes);
+        // Unknown strategy tag in the first health cell (dtype u8 then
+        // strategy u8 lead the cell).
+        let hist_entry = 1 + 4 + TOTAL_BUCKETS * 8 + 16;
+        let first_health_cell = counter_block
+            + dtype_block
+            + 4
+            + (1 + STAGE_COUNT) * hist_entry
+            + 4
+            + STRATEGIES.len() * 8
+            + 4;
+        let mut bytes = good.clone();
+        bytes[HEADER_LEN + first_health_cell + 1] = 9;
+        protocol_resp(&bytes);
+        // Hostile exemplar count: the trailing count field of a
+        // truncated body advertises more entries than the cap.
+        let exemplar_entry = 4 * 8 + 4 + 4 + 4 + 4;
+        let truncated_at = good.len() - exemplar_entry; // drop the one entry
+        let body_len = (truncated_at - HEADER_LEN) as u32;
+        let mut bytes = encode_header(KIND_RESPONSE, STATUS_STATS, 0, 0, 1, body_len).to_vec();
+        bytes.extend_from_slice(&good[HEADER_LEN..truncated_at]);
+        let count_at = bytes.len() - 4;
+        bytes[count_at..].copy_from_slice(&1_000_000u32.to_le_bytes());
+        protocol_resp(&bytes);
+        // Truncated snapshot: a body cut mid-histogram (header re-encoded
+        // so the frame layer accepts it and the snapshot decoder trips).
+        let cut = HEADER_LEN + first_stage_tag + 40;
+        let body_len = (cut - HEADER_LEN) as u32;
+        let mut bytes = encode_header(KIND_RESPONSE, STATUS_STATS, 0, 0, 1, body_len).to_vec();
+        bytes.extend_from_slice(&good[HEADER_LEN..cut]);
+        protocol_resp(&bytes);
+        // Trailing bytes after the exemplar block.
+        let body_len = (good.len() - HEADER_LEN + 4) as u32;
+        let mut bytes = encode_header(KIND_RESPONSE, STATUS_STATS, 0, 0, 1, body_len).to_vec();
+        bytes.extend_from_slice(&good[HEADER_LEN..]);
+        bytes.extend_from_slice(&[0u8; 4]);
+        protocol_resp(&bytes);
     }
 }

@@ -1,0 +1,245 @@
+//! Numerical-health telemetry: how tight observed error runs against
+//! the a-priori bound attached to every response — the paper's
+//! dual-select claim as a live production metric.
+//!
+//! Per (dtype × strategy) cell the registry keeps the sampled
+//! *bound-tightness ratio* `observed error ÷ attached a-priori bound`
+//! as a decade histogram plus a max-ratio high-water; globally it
+//! keeps the `bound_violations` counter (ratio > 1, or a non-finite
+//! ratio — must provably stay 0), the fixed-plane saturation-event
+//! counter, and the stored `|t|max` high-water per strategy (how hard
+//! each strategy's precomputed ratio table is actually driven — for
+//! clamped Linzer–Feig this exposes the 1e7 clamp the paper
+//! criticizes; for dual-select it stays ≤ 1).
+//!
+//! Both samplers feed one shared entry point
+//! ([`HealthRegistry::observe_tightness`]): the server-side sampled
+//! self-check (worker re-runs a sampled frame in f64 and compares) and
+//! the CLI `client --verify` oracle check.  Recording is atomics only
+//! — no locks, no allocation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::trace::{strategy_index, STRATEGIES};
+use crate::fft::{DType, Strategy};
+
+/// Decade buckets for the tightness ratio: bucket `i < 7` counts
+/// ratios up to `10^{i-7}` (the lowest bucket absorbs everything
+/// `≤ 1e-7`), bucket 7 counts `(1e-1, 1]` plus any violating ratio
+/// above 1.
+pub const RATIO_BUCKETS: usize = 8;
+
+#[derive(Debug, Default)]
+struct HealthCell {
+    samples: AtomicU64,
+    violations: AtomicU64,
+    /// f64 bits of the max ratio seen (bit order = numeric order for
+    /// non-negative finite values; 0 bits = no finite sample yet).
+    max_ratio_bits: AtomicU64,
+    buckets: [AtomicU64; RATIO_BUCKETS],
+}
+
+/// Lock-free numerical-health registry (one per [`super::Metrics`]).
+#[derive(Debug, Default)]
+pub struct HealthRegistry {
+    cells: [[HealthCell; STRATEGIES.len()]; DType::COUNT],
+    /// Sampled checks whose observed error exceeded the attached
+    /// bound (or whose ratio was non-finite).  Must stay 0.
+    bound_violations: AtomicU64,
+    /// Quantizer saturation events reported by the fixed plane
+    /// (peak-adjacent ingest clamps).
+    fixed_saturations: AtomicU64,
+    /// f64 bits of the stored-`|t|max` high-water per strategy, in
+    /// [`STRATEGIES`] order (0 bits = never reported).
+    tmax_bits: [AtomicU64; STRATEGIES.len()],
+}
+
+impl HealthRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sampled tightness observation: `err` is the measured
+    /// relative error, `bound` the a-priori bound the response carried.
+    /// Shared by the server-side self-check and `client --verify`.
+    pub fn observe_tightness(&self, dtype: DType, strategy: Strategy, err: f64, bound: f64) {
+        let cell = &self.cells[dtype.index()][strategy_index(strategy)];
+        cell.samples.fetch_add(1, Ordering::Relaxed);
+        let ratio = err / bound;
+        if !ratio.is_finite() || ratio > 1.0 {
+            cell.violations.fetch_add(1, Ordering::Relaxed);
+            self.bound_violations.fetch_add(1, Ordering::Relaxed);
+        }
+        if ratio.is_finite() && ratio >= 0.0 {
+            cell.max_ratio_bits.fetch_max(ratio.to_bits(), Ordering::Relaxed);
+            cell.buckets[ratio_bucket(ratio)].fetch_add(1, Ordering::Relaxed);
+        } else {
+            // Non-finite ratios are counted in the top bucket so
+            // histogram totals still sum to `samples`.
+            cell.buckets[RATIO_BUCKETS - 1].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Raise the stored-`|t|max` high-water for `strategy`.
+    pub fn record_tmax(&self, strategy: Strategy, tmax: f64) {
+        if tmax.is_finite() && tmax >= 0.0 {
+            self.tmax_bits[strategy_index(strategy)].fetch_max(tmax.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    /// Count `events` quantizer saturation events from the fixed plane.
+    pub fn record_fixed_saturations(&self, events: u64) {
+        if events > 0 {
+            self.fixed_saturations.fetch_add(events, Ordering::Relaxed);
+        }
+    }
+
+    /// Total sampled checks that violated their bound (must stay 0).
+    pub fn bound_violations(&self) -> u64 {
+        self.bound_violations.load(Ordering::Relaxed)
+    }
+
+    /// Total fixed-plane saturation events.
+    pub fn fixed_saturations(&self) -> u64 {
+        self.fixed_saturations.load(Ordering::Relaxed)
+    }
+
+    /// The stored-`|t|max` high-water per strategy, [`STRATEGIES`]
+    /// order (`None` = that strategy never reported a table max).
+    pub fn tmax_highwater(&self) -> [Option<f64>; STRATEGIES.len()] {
+        core::array::from_fn(|i| {
+            let bits = self.tmax_bits[i].load(Ordering::Relaxed);
+            if bits == 0 {
+                None
+            } else {
+                Some(f64::from_bits(bits))
+            }
+        })
+    }
+
+    /// Every (dtype × strategy) cell that has seen at least one sample
+    /// (cold path; allocates).
+    pub fn snapshot(&self) -> Vec<TightnessSnapshot> {
+        let mut out = Vec::new();
+        for dtype in DType::ALL {
+            for strategy in STRATEGIES {
+                let cell = &self.cells[dtype.index()][strategy_index(strategy)];
+                let samples = cell.samples.load(Ordering::Relaxed);
+                if samples == 0 {
+                    continue;
+                }
+                out.push(TightnessSnapshot {
+                    dtype,
+                    strategy,
+                    samples,
+                    violations: cell.violations.load(Ordering::Relaxed),
+                    max_ratio: f64::from_bits(cell.max_ratio_bits.load(Ordering::Relaxed)),
+                    buckets: core::array::from_fn(|i| cell.buckets[i].load(Ordering::Relaxed)),
+                });
+            }
+        }
+        out
+    }
+}
+
+/// The decade bucket a (finite, non-negative) ratio falls into.
+fn ratio_bucket(ratio: f64) -> usize {
+    // Edges 1e-7, 1e-6, …, 1e-1, then everything else on top.
+    for (i, exp) in (-7i32..=-1).enumerate() {
+        if ratio <= 10f64.powi(exp) {
+            return i;
+        }
+    }
+    RATIO_BUCKETS - 1
+}
+
+/// One (dtype × strategy) tightness cell, as scraped.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TightnessSnapshot {
+    pub dtype: DType,
+    pub strategy: Strategy,
+    /// Sampled checks recorded for this cell.
+    pub samples: u64,
+    /// Samples whose ratio exceeded 1 (or was non-finite).
+    pub violations: u64,
+    /// Largest finite ratio observed (0 when none was finite).
+    pub max_ratio: f64,
+    /// Decade histogram of the ratio (see [`RATIO_BUCKETS`]).
+    pub buckets: [u64; RATIO_BUCKETS],
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tightness_cells_split_by_dtype_and_strategy() {
+        let h = HealthRegistry::new();
+        h.observe_tightness(DType::F16, Strategy::DualSelect, 1e-4, 1e-2); // ratio 1e-2
+        h.observe_tightness(DType::F16, Strategy::DualSelect, 5e-3, 1e-2); // ratio 0.5
+        h.observe_tightness(DType::F32, Strategy::LinzerFeig, 1e-9, 1e-6); // ratio 1e-3
+        let cells = h.snapshot();
+        assert_eq!(cells.len(), 2);
+        let dual = cells
+            .iter()
+            .find(|c| c.dtype == DType::F16 && c.strategy == Strategy::DualSelect)
+            .unwrap();
+        assert_eq!(dual.samples, 2);
+        assert_eq!(dual.violations, 0);
+        assert!((dual.max_ratio - 0.5).abs() < 1e-12);
+        // ratio 1e-2 → bucket 5 (≤1e-2), ratio 0.5 → top bucket.
+        assert_eq!(dual.buckets[5], 1);
+        assert_eq!(dual.buckets[RATIO_BUCKETS - 1], 1);
+        assert_eq!(dual.buckets.iter().sum::<u64>(), dual.samples);
+        assert_eq!(h.bound_violations(), 0);
+    }
+
+    #[test]
+    fn violations_count_ratios_above_one_and_non_finite() {
+        let h = HealthRegistry::new();
+        h.observe_tightness(DType::F32, Strategy::DualSelect, 2.0, 1.0); // ratio 2
+        h.observe_tightness(DType::F32, Strategy::DualSelect, 1.0, 0.0); // inf
+        h.observe_tightness(DType::F32, Strategy::DualSelect, 0.5, 1.0); // fine
+        assert_eq!(h.bound_violations(), 2);
+        let cell = &h.snapshot()[0];
+        assert_eq!(cell.samples, 3);
+        assert_eq!(cell.violations, 2);
+        assert_eq!(cell.buckets.iter().sum::<u64>(), 3);
+        assert!((cell.max_ratio - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tmax_highwater_is_per_strategy_and_monotone() {
+        let h = HealthRegistry::new();
+        assert_eq!(h.tmax_highwater(), [None; 4]);
+        h.record_tmax(Strategy::DualSelect, 1.0);
+        h.record_tmax(Strategy::DualSelect, 0.7); // lower: no change
+        h.record_tmax(Strategy::LinzerFeig, 1e7);
+        let hw = h.tmax_highwater();
+        assert_eq!(hw[strategy_index(Strategy::DualSelect)], Some(1.0));
+        assert_eq!(hw[strategy_index(Strategy::LinzerFeig)], Some(1e7));
+        assert_eq!(hw[strategy_index(Strategy::Standard)], None);
+    }
+
+    #[test]
+    fn fixed_saturations_accumulate() {
+        let h = HealthRegistry::new();
+        h.record_fixed_saturations(0);
+        assert_eq!(h.fixed_saturations(), 0);
+        h.record_fixed_saturations(3);
+        h.record_fixed_saturations(2);
+        assert_eq!(h.fixed_saturations(), 5);
+    }
+
+    #[test]
+    fn ratio_buckets_are_decades() {
+        assert_eq!(ratio_bucket(0.0), 0);
+        assert_eq!(ratio_bucket(1e-8), 0);
+        assert_eq!(ratio_bucket(1e-7), 0);
+        assert_eq!(ratio_bucket(2e-7), 1);
+        assert_eq!(ratio_bucket(1e-2), 5);
+        assert_eq!(ratio_bucket(0.09), 6);
+        assert_eq!(ratio_bucket(0.5), 7);
+        assert_eq!(ratio_bucket(100.0), 7);
+    }
+}

@@ -1,0 +1,178 @@
+//! Log-bucketed latency histograms ([`LogHist`]) with an explicit
+//! overflow bucket and a `max_seen_us` high-water gauge.
+//!
+//! Buckets are powers of two in microseconds: bucket `i` covers
+//! `[2^i, 2^{i+1})` µs for `i = 0 .. 24` (1 µs .. ~33.5 s), and one
+//! extra *overflow* bucket counts durations of `2^25` µs (~33.5 s) and
+//! beyond — previously such samples silently merged into the top
+//! power-of-two bucket and were indistinguishable from ~17–33 s
+//! requests.  `max_seen_us` records the largest single sample ever
+//! observed, so even one pathological request is visible in a scrape.
+//!
+//! Recording is two relaxed `fetch_add`s and one relaxed `fetch_max`
+//! — no locks, no allocation; reading ([`LogHist::snapshot`]) copies
+//! the counters into a plain [`HistSnapshot`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Power-of-two buckets: `2^0 .. 2^24` µs.
+pub const BUCKETS: usize = 25;
+/// [`BUCKETS`] plus the explicit overflow bucket.
+pub const TOTAL_BUCKETS: usize = BUCKETS + 1;
+
+/// Lock-free log₂-bucketed duration histogram (microsecond domain).
+#[derive(Debug, Default)]
+pub struct LogHist {
+    buckets: [AtomicU64; TOTAL_BUCKETS],
+    sum_us: AtomicU64,
+    max_seen_us: AtomicU64,
+}
+
+impl LogHist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one duration (floored at 1 µs, like every latency
+    /// counter in the serving plane).
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let idx = 63 - us.leading_zeros() as usize;
+        let bucket = if idx < BUCKETS { idx } else { BUCKETS };
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_seen_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of the counters.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: core::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+            max_seen_us: self.max_seen_us.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Approximate quantile straight off the live counters (upper
+    /// bucket edge, µs); `0` when empty.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        self.snapshot().quantile_us(q)
+    }
+}
+
+/// A plain copy of one [`LogHist`]: 25 power-of-two buckets, the
+/// overflow bucket (index [`BUCKETS`]), the sample sum and the largest
+/// single sample.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HistSnapshot {
+    /// `buckets[i]` counts samples in `[2^i, 2^{i+1})` µs for
+    /// `i < 25`; `buckets[25]` counts overflow samples (≥ `2^25` µs).
+    pub buckets: [u64; TOTAL_BUCKETS],
+    /// Σ samples in µs (the Prometheus `_sum`).
+    pub sum_us: u64,
+    /// Largest single sample ever recorded, µs (0 when empty).
+    pub max_seen_us: u64,
+}
+
+impl HistSnapshot {
+    /// Total samples recorded (the Prometheus `_count`).
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total() == 0
+    }
+
+    /// Samples that exceeded the largest power-of-two bucket.
+    pub fn overflow(&self) -> u64 {
+        self.buckets[BUCKETS]
+    }
+
+    /// Approximate quantile: the upper edge (µs) of the bucket holding
+    /// the `q`-th sample, or [`HistSnapshot::max_seen_us`] when that
+    /// sample sits in the overflow bucket.  `0` when empty.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.total();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i < BUCKETS {
+                    1u64 << (i + 1) // upper edge of bucket 2^i..2^{i+1}
+                } else {
+                    self.max_seen_us
+                };
+            }
+        }
+        self.max_seen_us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_match_the_legacy_histogram() {
+        let h = LogHist::new();
+        for _ in 0..90 {
+            h.record(Duration::from_micros(100));
+        }
+        for _ in 0..10 {
+            h.record(Duration::from_millis(10));
+        }
+        let s = h.snapshot();
+        assert_eq!(s.total(), 100);
+        assert!(s.quantile_us(0.5) <= 256);
+        assert!(s.quantile_us(0.99) >= 8192);
+        assert_eq!(s.overflow(), 0);
+        assert_eq!(s.sum_us, 90 * 100 + 10 * 10_000);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let s = LogHist::new().snapshot();
+        assert_eq!(s.quantile_us(0.99), 0);
+        assert!(s.is_empty());
+        assert_eq!(s.max_seen_us, 0);
+    }
+
+    #[test]
+    fn long_durations_are_visible_not_silently_merged() {
+        // Satellite regression: a 17.5 s sample used to vanish into
+        // the top bucket with nothing marking it.  Now the high-water
+        // gauge pins its exact value, and the top power-of-two bucket
+        // covers only [2^24, 2^25) µs.
+        let h = LogHist::new();
+        h.record(Duration::from_millis(17_500));
+        let s = h.snapshot();
+        assert_eq!(s.max_seen_us, 17_500_000);
+        assert_eq!(s.buckets[BUCKETS - 1], 1, "17.5 s sits in [2^24, 2^25) µs");
+        assert_eq!(s.overflow(), 0);
+
+        // Beyond 2^25 µs (~33.5 s) the explicit overflow bucket counts
+        // it, and the quantile answers the true maximum instead of a
+        // fictitious power-of-two edge.
+        h.record(Duration::from_secs(60));
+        let s = h.snapshot();
+        assert_eq!(s.overflow(), 1);
+        assert_eq!(s.max_seen_us, 60_000_000);
+        assert_eq!(s.quantile_us(1.0), 60_000_000);
+    }
+
+    #[test]
+    fn sub_microsecond_floors_to_one() {
+        let h = LogHist::new();
+        h.record(Duration::from_nanos(10));
+        let s = h.snapshot();
+        assert_eq!(s.buckets[0], 1);
+        assert_eq!(s.sum_us, 1);
+        assert_eq!(s.max_seen_us, 1);
+    }
+}

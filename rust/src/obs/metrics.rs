@@ -1,0 +1,766 @@
+//! The serving metrics registry (migrated here from
+//! `coordinator::metrics` when the observability plane landed):
+//! lock-free counters, the end-to-end latency histogram, per-stage
+//! latency histograms fed by request traces, the span ring, the
+//! slow-request exemplar table and the numerical-health registry.
+//! Request counters are kept both in aggregate and split per working
+//! [`DType`], so mixed-precision traffic is observable per precision.
+//!
+//! Everything recorded on the serving hot path is atomics only; the
+//! read side ([`Metrics::snapshot`]) is the cold scrape path and may
+//! allocate.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use super::health::{HealthRegistry, TightnessSnapshot};
+use super::hist::{HistSnapshot, LogHist};
+use super::trace::{Exemplar, ExemplarTable, SpanRecord, SpanRing, TraceSpan, STRATEGIES};
+use crate::fft::{DType, Strategy};
+
+/// The four traced pipeline stages, in stamp order.
+pub const STAGE_COUNT: usize = 4;
+
+/// Stage names, indexed like [`MetricsSnapshot::stages`]: queue wait
+/// (admitted → batched), batch formation (batched → dequeued), kernel
+/// execute (dequeued → executed), serialization/write (executed →
+/// reply written).
+pub const STAGE_NAMES: [&str; STAGE_COUNT] =
+    ["queue_wait", "batch_formation", "execute", "write"];
+
+/// Shared metrics sink (cheap to clone behind an Arc).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub failed: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    /// Σ `max_batch` over flushed batches — the denominator of
+    /// [`Metrics::occupancy`] (how full batches run vs the policy cap).
+    pub batch_capacity: AtomicU64,
+    /// Gauge: requests currently waiting in open (unflushed) batches.
+    queue_depth: AtomicU64,
+    /// Stream sessions ever opened (streaming plane counter).
+    pub streams_opened: AtomicU64,
+    /// Gauge: stream sessions currently open.
+    open_streams: AtomicU64,
+    /// Stream chunks processed (streaming plane counter; divide by
+    /// wall time for chunks/s).
+    pub stream_chunks: AtomicU64,
+    /// High-water mark of any session's cumulative FFT pass count —
+    /// how far the eq. (11) serving bound has been stretched.
+    max_stream_passes: AtomicU64,
+    /// Pipeline graphs ever opened (graph plane counter).
+    pub graphs_opened: AtomicU64,
+    /// Gauge: pipeline graphs currently open.
+    open_graphs: AtomicU64,
+    /// Gauge: sink-topic subscriptions currently attached.
+    active_subscribers: AtomicU64,
+    /// Sink frames published (one per frame, however many subscribers
+    /// share it).
+    pub published_chunks: AtomicU64,
+    /// Frames lag-dropped because a subscriber's backpressure window
+    /// was full.
+    pub subscriber_lag_drops: AtomicU64,
+    /// Plan-cache lookups the workers served from cache.
+    pub planner_cache_hits: AtomicU64,
+    /// Plan-cache lookups that had to build a plan.
+    pub planner_cache_misses: AtomicU64,
+    /// `Auto`-strategy requests resolved through a wisdom entry
+    /// (aggregate; the per-dtype split is in `dtype_tuned`).
+    pub tuned_plans_selected: AtomicU64,
+    /// `Auto`-strategy requests with no wisdom entry, resolved to the
+    /// server's default strategy.
+    pub auto_defaulted: AtomicU64,
+    /// End-to-end request latency (admission → worker reply send).
+    e2e: LogHist,
+    /// Per-stage latency histograms fed by finished traces, indexed
+    /// like [`STAGE_NAMES`].
+    stages: [LogHist; STAGE_COUNT],
+    /// Finished traces recorded (one per traced response).
+    traced: AtomicU64,
+    /// The last [`SpanRing::CAPACITY`] finished traces.
+    ring: SpanRing,
+    /// The worst-K slow-request exemplars.
+    exemplars: ExemplarTable,
+    /// Bound-tightness sampling, |t|max high-water, saturation and
+    /// violation counters.
+    health: HealthRegistry,
+    // Per-dtype splits of submitted/completed/failed/tuned, indexed by
+    // `DType::index()`.
+    dtype_submitted: [AtomicU64; DType::COUNT],
+    dtype_completed: [AtomicU64; DType::COUNT],
+    dtype_failed: [AtomicU64; DType::COUNT],
+    dtype_tuned: [AtomicU64; DType::COUNT],
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Count one admitted request of `dtype` (aggregate + per-dtype).
+    pub fn record_submitted(&self, dtype: DType) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.dtype_submitted[dtype.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one completed request of `dtype` (aggregate + per-dtype).
+    pub fn record_completed(&self, dtype: DType) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.dtype_completed[dtype.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one failed request of `dtype` (aggregate + per-dtype).
+    pub fn record_failed(&self, dtype: DType) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+        self.dtype_failed[dtype.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one `Auto` request resolved through a wisdom entry
+    /// (aggregate + per-dtype).
+    pub fn record_tuned_selected(&self, dtype: DType) {
+        self.tuned_plans_selected.fetch_add(1, Ordering::Relaxed);
+        self.dtype_tuned[dtype.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one `Auto` request with no wisdom entry (fell back to the
+    /// server default).
+    pub fn record_auto_defaulted(&self) {
+        self.auto_defaulted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one plan-cache lookup (`hit` = served from cache).
+    pub fn record_planner_lookup(&self, hit: bool) {
+        if hit {
+            self.planner_cache_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.planner_cache_misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Point-in-time per-dtype counters.
+    pub fn dtype_counts(&self, dtype: DType) -> DTypeCounts {
+        let i = dtype.index();
+        DTypeCounts {
+            submitted: self.dtype_submitted[i].load(Ordering::Relaxed),
+            completed: self.dtype_completed[i].load(Ordering::Relaxed),
+            failed: self.dtype_failed[i].load(Ordering::Relaxed),
+            tuned: self.dtype_tuned[i].load(Ordering::Relaxed),
+        }
+    }
+
+    /// Record one end-to-end request latency.
+    pub fn record_latency(&self, d: Duration) {
+        self.e2e.record(d);
+    }
+
+    /// Record one finished request trace: per-stage histograms, the
+    /// span ring and (if slow enough) the exemplar table.  Hot path:
+    /// atomics only, no allocation.
+    pub fn record_trace(&self, span: &TraceSpan) {
+        self.stages[0].record(span.queue);
+        self.stages[1].record(span.batch_form);
+        self.stages[2].record(span.execute);
+        self.stages[3].record(span.write);
+        self.ring.push(span);
+        self.exemplars.offer(span);
+        self.traced.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one sampled bound-tightness observation — the shared
+    /// entry point for the server-side self-check and the client-side
+    /// `--verify` oracle check.
+    pub fn record_tightness(&self, dtype: DType, strategy: Strategy, err: f64, bound: f64) {
+        self.health.observe_tightness(dtype, strategy, err, bound);
+    }
+
+    /// Raise the stored-`|t|max` high-water for `strategy`.
+    pub fn record_tmax(&self, strategy: Strategy, tmax: f64) {
+        self.health.record_tmax(strategy, tmax);
+    }
+
+    /// Count `events` fixed-plane quantizer saturation events.
+    pub fn record_fixed_saturations(&self, events: u64) {
+        self.health.record_fixed_saturations(events);
+    }
+
+    /// Sampled checks whose observed error exceeded the attached
+    /// a-priori bound (must provably stay 0).
+    pub fn bound_violations(&self) -> u64 {
+        self.health.bound_violations()
+    }
+
+    /// Finished traces recorded so far.
+    pub fn traced(&self) -> u64 {
+        self.traced.load(Ordering::Relaxed)
+    }
+
+    /// The most recent finished traces, oldest first (cold path).
+    pub fn recent_spans(&self) -> Vec<SpanRecord> {
+        self.ring.recent()
+    }
+
+    /// The worst-K slow-request exemplars, worst first (cold path).
+    pub fn exemplars(&self) -> Vec<Exemplar> {
+        self.exemplars.worst()
+    }
+
+    /// Record one flushed batch of `size` requests under a policy cap
+    /// of `max_batch`.
+    pub fn record_batch(&self, size: usize, max_batch: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
+        self.batch_capacity
+            .fetch_add(max_batch.max(1) as u64, Ordering::Relaxed);
+    }
+
+    /// Count one opened stream session; `open_now` updates the
+    /// open-sessions gauge.
+    pub fn record_stream_open(&self, open_now: usize) {
+        self.streams_opened.fetch_add(1, Ordering::Relaxed);
+        self.open_streams.store(open_now as u64, Ordering::Relaxed);
+    }
+
+    /// Record a closed stream session; `open_now` updates the gauge.
+    pub fn record_stream_closed(&self, open_now: usize) {
+        self.open_streams.store(open_now as u64, Ordering::Relaxed);
+    }
+
+    /// Count one processed stream chunk at a session whose cumulative
+    /// pass count is now `passes` (keeps the high-water mark).
+    pub fn record_stream_chunk(&self, passes: u64) {
+        self.stream_chunks.fetch_add(1, Ordering::Relaxed);
+        self.max_stream_passes.fetch_max(passes, Ordering::Relaxed);
+    }
+
+    /// Count one opened pipeline graph; `open_now` updates the
+    /// open-graphs gauge.
+    pub fn record_graph_open(&self, open_now: usize) {
+        self.graphs_opened.fetch_add(1, Ordering::Relaxed);
+        self.open_graphs.store(open_now as u64, Ordering::Relaxed);
+    }
+
+    /// Record a closed (or force-closed) graph; `open_now` updates the
+    /// gauge.
+    pub fn record_graph_closed(&self, open_now: usize) {
+        self.open_graphs.store(open_now as u64, Ordering::Relaxed);
+    }
+
+    /// Record one new sink-topic subscription; `active_now` updates the
+    /// subscriber gauge.
+    pub fn record_graph_subscribe(&self, active_now: usize) {
+        self.active_subscribers.store(active_now as u64, Ordering::Relaxed);
+    }
+
+    /// Record detached subscriptions; `active_now` updates the gauge.
+    pub fn record_graph_unsubscribe(&self, active_now: usize) {
+        self.active_subscribers.store(active_now as u64, Ordering::Relaxed);
+    }
+
+    /// Count one published sink frame (shared by all its subscribers).
+    pub fn record_graph_publish(&self) {
+        self.published_chunks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one frame lag-dropped at a slow subscriber.
+    pub fn record_graph_lag_drop(&self) {
+        self.subscriber_lag_drops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Pipeline graphs currently open.
+    pub fn open_graphs(&self) -> u64 {
+        self.open_graphs.load(Ordering::Relaxed)
+    }
+
+    /// Sink-topic subscriptions currently attached.
+    pub fn active_subscribers(&self) -> u64 {
+        self.active_subscribers.load(Ordering::Relaxed)
+    }
+
+    /// Stream sessions currently open.
+    pub fn open_streams(&self) -> u64 {
+        self.open_streams.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of any stream session's cumulative pass count.
+    pub fn max_stream_passes(&self) -> u64 {
+        self.max_stream_passes.load(Ordering::Relaxed)
+    }
+
+    /// Update the queue-depth gauge (intake thread, after every event).
+    pub fn set_queue_depth(&self, depth: usize) {
+        self.queue_depth.store(depth as u64, Ordering::Relaxed);
+    }
+
+    /// Requests currently waiting in open batches.
+    pub fn queue_depth(&self) -> u64 {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    /// Mean batch size so far.
+    pub fn mean_batch(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// Batch fill ratio in `[0, 1]`: served requests over the summed
+    /// policy caps of their batches (1.0 = every batch flushed full).
+    pub fn occupancy(&self) -> f64 {
+        let cap = self.batch_capacity.load(Ordering::Relaxed);
+        if cap == 0 {
+            return 0.0;
+        }
+        self.batched_requests.load(Ordering::Relaxed) as f64 / cap as f64
+    }
+
+    /// Approximate end-to-end latency quantile (upper bucket edge, µs).
+    pub fn latency_quantile_us(&self, q: f64) -> u64 {
+        self.e2e.quantile_us(q)
+    }
+
+    /// Point-in-time copy of every counter, gauge, histogram and
+    /// exemplar — what the server surfaces to operators, the `STATS`
+    /// wire op ships, and benches serialize to JSON.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let e2e = self.e2e.snapshot();
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            mean_batch: self.mean_batch(),
+            occupancy: self.occupancy(),
+            queue_depth: self.queue_depth(),
+            p50_us: e2e.quantile_us(0.5),
+            p99_us: e2e.quantile_us(0.99),
+            streams_opened: self.streams_opened.load(Ordering::Relaxed),
+            open_streams: self.open_streams(),
+            stream_chunks: self.stream_chunks.load(Ordering::Relaxed),
+            max_stream_passes: self.max_stream_passes(),
+            graphs_opened: self.graphs_opened.load(Ordering::Relaxed),
+            open_graphs: self.open_graphs(),
+            active_subscribers: self.active_subscribers(),
+            published_chunks: self.published_chunks.load(Ordering::Relaxed),
+            subscriber_lag_drops: self.subscriber_lag_drops.load(Ordering::Relaxed),
+            planner_cache_hits: self.planner_cache_hits.load(Ordering::Relaxed),
+            planner_cache_misses: self.planner_cache_misses.load(Ordering::Relaxed),
+            tuned_plans_selected: self.tuned_plans_selected.load(Ordering::Relaxed),
+            auto_defaulted: self.auto_defaulted.load(Ordering::Relaxed),
+            per_dtype: core::array::from_fn(|i| self.dtype_counts(DType::ALL[i])),
+            traced: self.traced(),
+            bound_violations: self.health.bound_violations(),
+            fixed_saturations: self.health.fixed_saturations(),
+            e2e,
+            stages: core::array::from_fn(|i| self.stages[i].snapshot()),
+            tmax_highwater: self.health.tmax_highwater(),
+            health: self.health.snapshot(),
+            exemplars: self.exemplars(),
+        }
+    }
+
+    /// One-line summary for logs (per-dtype splits appended for every
+    /// dtype that has seen traffic).
+    pub fn summary(&self) -> String {
+        let s = self.snapshot();
+        let mut out = format!(
+            "submitted={} completed={} rejected={} failed={} batches={} mean_batch={:.2} occupancy={:.2} queue_depth={} p50={}us p99={}us",
+            s.submitted,
+            s.completed,
+            s.rejected,
+            s.failed,
+            s.batches,
+            s.mean_batch,
+            s.occupancy,
+            s.queue_depth,
+            s.p50_us,
+            s.p99_us,
+        );
+        for dtype in DType::ALL {
+            let c = s.dtype(dtype);
+            if c.submitted > 0 {
+                out.push_str(&format!(
+                    " {}={}/{}",
+                    dtype.name(),
+                    c.completed,
+                    c.submitted
+                ));
+            }
+        }
+        if s.streams_opened > 0 {
+            out.push_str(&format!(
+                " streams={} open_streams={} stream_chunks={} max_stream_passes={}",
+                s.streams_opened, s.open_streams, s.stream_chunks, s.max_stream_passes
+            ));
+        }
+        if s.graphs_opened > 0 {
+            out.push_str(&format!(
+                " graphs={} open_graphs={} subscribers={} published_chunks={} lag_drops={}",
+                s.graphs_opened,
+                s.open_graphs,
+                s.active_subscribers,
+                s.published_chunks,
+                s.subscriber_lag_drops
+            ));
+        }
+        if s.planner_cache_hits + s.planner_cache_misses > 0 {
+            out.push_str(&format!(
+                " plan_hits={} plan_misses={}",
+                s.planner_cache_hits, s.planner_cache_misses
+            ));
+        }
+        if s.tuned_plans_selected + s.auto_defaulted > 0 {
+            out.push_str(&format!(
+                " tuned={} auto_defaulted={}",
+                s.tuned_plans_selected, s.auto_defaulted
+            ));
+        }
+        out.push_str(&format!(
+            " traced={} bound_violations={}",
+            s.traced, s.bound_violations
+        ));
+        if s.fixed_saturations > 0 {
+            out.push_str(&format!(" fixed_saturations={}", s.fixed_saturations));
+        }
+        out
+    }
+}
+
+/// Per-dtype request counters (one cell of the per-precision split).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DTypeCounts {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    /// `Auto` requests of this dtype resolved through a wisdom entry.
+    pub tuned: u64,
+}
+
+/// A consistent-enough copy of the serving metrics (each field is read
+/// with relaxed ordering; totals may be mid-update by one request).
+/// This is exactly what the wire protocol's `STATS` op serializes —
+/// its field set and order are normative, see `PROTOCOL.md` §Stats.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub failed: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    /// Batch fill ratio vs the policy `max_batch`, in `[0, 1]`.
+    pub occupancy: f64,
+    /// Requests waiting in open batches when the snapshot was taken.
+    pub queue_depth: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    /// Stream sessions ever opened (streaming plane).
+    pub streams_opened: u64,
+    /// Stream sessions open when the snapshot was taken.
+    pub open_streams: u64,
+    /// Stream chunks processed.
+    pub stream_chunks: u64,
+    /// High-water mark of any session's cumulative FFT pass count.
+    pub max_stream_passes: u64,
+    /// Pipeline graphs ever opened (graph plane).
+    pub graphs_opened: u64,
+    /// Pipeline graphs open when the snapshot was taken.
+    pub open_graphs: u64,
+    /// Sink-topic subscriptions attached when the snapshot was taken.
+    pub active_subscribers: u64,
+    /// Sink frames published (shared across subscribers, counted once).
+    pub published_chunks: u64,
+    /// Frames lag-dropped at slow subscribers.
+    pub subscriber_lag_drops: u64,
+    /// Plan-cache lookups the workers served from cache.
+    pub planner_cache_hits: u64,
+    /// Plan-cache lookups that had to build a plan.
+    pub planner_cache_misses: u64,
+    /// `Auto`-strategy requests resolved through a wisdom entry.
+    pub tuned_plans_selected: u64,
+    /// `Auto`-strategy requests that fell back to the server default.
+    pub auto_defaulted: u64,
+    /// Per-dtype request counters, indexed by `DType::index()` (use
+    /// [`MetricsSnapshot::dtype`] for keyed access).
+    pub per_dtype: [DTypeCounts; DType::COUNT],
+    /// Finished request traces recorded.
+    pub traced: u64,
+    /// Sampled checks whose observed error exceeded the attached
+    /// a-priori bound (must provably stay 0).
+    pub bound_violations: u64,
+    /// Fixed-plane quantizer saturation events.
+    pub fixed_saturations: u64,
+    /// End-to-end latency histogram (what `p50_us`/`p99_us` summarize).
+    pub e2e: HistSnapshot,
+    /// Per-stage latency histograms, indexed like [`STAGE_NAMES`].
+    pub stages: [HistSnapshot; STAGE_COUNT],
+    /// Stored-`|t|max` high-water per strategy, in
+    /// [`STRATEGIES`] order (`None` = never reported).
+    pub tmax_highwater: [Option<f64>; STRATEGIES.len()],
+    /// Bound-tightness cells that have seen at least one sample.
+    pub health: Vec<TightnessSnapshot>,
+    /// The worst-K slow-request exemplars, worst first.
+    pub exemplars: Vec<Exemplar>,
+}
+
+impl MetricsSnapshot {
+    /// The counters for one working precision.
+    pub fn dtype(&self, dtype: DType) -> DTypeCounts {
+        self.per_dtype[dtype.index()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::FftOp;
+
+    #[test]
+    fn quantiles_from_known_distribution() {
+        let m = Metrics::new();
+        // 90 requests at ~100µs (bucket 6: 64..128), 10 at ~10ms.
+        for _ in 0..90 {
+            m.record_latency(Duration::from_micros(100));
+        }
+        for _ in 0..10 {
+            m.record_latency(Duration::from_millis(10));
+        }
+        let p50 = m.latency_quantile_us(0.5);
+        let p99 = m.latency_quantile_us(0.99);
+        assert!(p50 <= 256, "p50 {p50}");
+        assert!(p99 >= 8192, "p99 {p99}");
+        assert!(p99 > p50);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_quantile_us(0.99), 0);
+        assert_eq!(m.mean_batch(), 0.0);
+        assert_eq!(m.occupancy(), 0.0);
+        assert_eq!(m.queue_depth(), 0);
+    }
+
+    #[test]
+    fn mean_batch_tracks() {
+        let m = Metrics::new();
+        m.record_batch(32, 32);
+        m.record_batch(16, 32);
+        assert_eq!(m.mean_batch(), 24.0);
+    }
+
+    #[test]
+    fn occupancy_is_fill_ratio_vs_policy_cap() {
+        let m = Metrics::new();
+        m.record_batch(32, 32); // full
+        m.record_batch(16, 32); // half
+        assert_eq!(m.occupancy(), 0.75);
+    }
+
+    #[test]
+    fn queue_depth_gauge_overwrites() {
+        let m = Metrics::new();
+        m.set_queue_depth(7);
+        assert_eq!(m.queue_depth(), 7);
+        m.set_queue_depth(2);
+        assert_eq!(m.queue_depth(), 2);
+        assert_eq!(m.snapshot().queue_depth, 2);
+    }
+
+    #[test]
+    fn summary_is_parseable() {
+        let m = Metrics::new();
+        m.submitted.fetch_add(5, Ordering::Relaxed);
+        m.record_batch(8, 16);
+        m.set_queue_depth(3);
+        let s = m.summary();
+        assert!(s.contains("submitted=5"));
+        assert!(s.contains("occupancy=0.50"));
+        assert!(s.contains("queue_depth=3"));
+        assert!(s.contains("bound_violations=0"));
+    }
+
+    #[test]
+    fn per_dtype_counters_split_traffic() {
+        let m = Metrics::new();
+        m.record_submitted(DType::F32);
+        m.record_submitted(DType::F32);
+        m.record_submitted(DType::F16);
+        m.record_completed(DType::F32);
+        m.record_completed(DType::F16);
+        m.record_failed(DType::F32);
+        // Aggregates and splits agree.
+        assert_eq!(m.submitted.load(Ordering::Relaxed), 3);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 2);
+        assert_eq!(m.failed.load(Ordering::Relaxed), 1);
+        let f32c = m.dtype_counts(DType::F32);
+        assert_eq!((f32c.submitted, f32c.completed, f32c.failed), (2, 1, 1));
+        let f16c = m.dtype_counts(DType::F16);
+        assert_eq!((f16c.submitted, f16c.completed, f16c.failed), (1, 1, 0));
+        assert_eq!(m.dtype_counts(DType::Bf16), DTypeCounts::default());
+        // Fixed-point dtypes have their own cells.
+        m.record_submitted(DType::I16);
+        m.record_completed(DType::I16);
+        let i16c = m.dtype_counts(DType::I16);
+        assert_eq!((i16c.submitted, i16c.completed, i16c.failed), (1, 1, 0));
+        // Snapshot carries the split; summary names active dtypes only.
+        let s = m.snapshot();
+        assert_eq!(s.dtype(DType::F16).completed, 1);
+        assert_eq!(s.dtype(DType::I32), DTypeCounts::default());
+        let text = m.summary();
+        assert!(text.contains("f32=1/2"), "{text}");
+        assert!(text.contains("f16=1/1"), "{text}");
+        assert!(text.contains("i16=1/1"), "{text}");
+        assert!(!text.contains("bf16="), "{text}");
+    }
+
+    #[test]
+    fn stream_gauges_track_sessions_and_passes() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().streams_opened, 0);
+        m.record_stream_open(1);
+        m.record_stream_open(2);
+        m.record_stream_chunk(20);
+        m.record_stream_chunk(12); // lower pass count: high-water stays
+        assert_eq!(m.open_streams(), 2);
+        assert_eq!(m.max_stream_passes(), 20);
+        m.record_stream_closed(1);
+        let s = m.snapshot();
+        assert_eq!(s.streams_opened, 2);
+        assert_eq!(s.open_streams, 1);
+        assert_eq!(s.stream_chunks, 2);
+        assert_eq!(s.max_stream_passes, 20);
+        let text = m.summary();
+        assert!(text.contains("streams=2"), "{text}");
+        assert!(text.contains("stream_chunks=2"), "{text}");
+    }
+
+    #[test]
+    fn graph_gauges_track_publishes_and_lag_drops() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().graphs_opened, 0);
+        m.record_graph_open(1);
+        m.record_graph_open(2);
+        m.record_graph_subscribe(1);
+        m.record_graph_subscribe(2);
+        m.record_graph_publish();
+        m.record_graph_publish();
+        m.record_graph_publish();
+        m.record_graph_lag_drop();
+        m.record_graph_unsubscribe(1);
+        m.record_graph_closed(1);
+        let s = m.snapshot();
+        assert_eq!(s.graphs_opened, 2);
+        assert_eq!(s.open_graphs, 1);
+        assert_eq!(s.active_subscribers, 1);
+        assert_eq!(s.published_chunks, 3);
+        assert_eq!(s.subscriber_lag_drops, 1);
+        let text = m.summary();
+        assert!(text.contains("graphs=2"), "{text}");
+        assert!(text.contains("published_chunks=3"), "{text}");
+        assert!(text.contains("lag_drops=1"), "{text}");
+    }
+
+    #[test]
+    fn planner_and_tuning_counters_track() {
+        let m = Metrics::new();
+        m.record_planner_lookup(false);
+        m.record_planner_lookup(true);
+        m.record_planner_lookup(true);
+        m.record_tuned_selected(DType::F32);
+        m.record_tuned_selected(DType::I16);
+        m.record_auto_defaulted();
+        let s = m.snapshot();
+        assert_eq!((s.planner_cache_hits, s.planner_cache_misses), (2, 1));
+        assert_eq!(s.tuned_plans_selected, 2);
+        assert_eq!(s.auto_defaulted, 1);
+        assert_eq!(s.dtype(DType::F32).tuned, 1);
+        assert_eq!(s.dtype(DType::I16).tuned, 1);
+        assert_eq!(s.dtype(DType::F64).tuned, 0);
+        let text = m.summary();
+        assert!(text.contains("plan_hits=2"), "{text}");
+        assert!(text.contains("plan_misses=1"), "{text}");
+        assert!(text.contains("tuned=2"), "{text}");
+        assert!(text.contains("auto_defaulted=1"), "{text}");
+    }
+
+    #[test]
+    fn snapshot_mirrors_counters() {
+        let m = Metrics::new();
+        m.submitted.fetch_add(4, Ordering::Relaxed);
+        m.completed.fetch_add(3, Ordering::Relaxed);
+        m.record_batch(3, 4);
+        m.record_latency(Duration::from_micros(100));
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 4);
+        assert_eq!(s.completed, 3);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.mean_batch, 3.0);
+        assert_eq!(s.occupancy, 0.75);
+        assert!(s.p50_us > 0);
+        assert_eq!(s.e2e.total(), 1);
+    }
+
+    fn demo_span(e2e_us: u64) -> TraceSpan {
+        TraceSpan {
+            queue: Duration::from_micros(e2e_us / 4),
+            batch_form: Duration::from_micros(e2e_us / 4),
+            execute: Duration::from_micros(e2e_us / 4),
+            write: Duration::from_micros(e2e_us / 4),
+            e2e: Duration::from_micros(e2e_us),
+            n: 256,
+            op: FftOp::Forward,
+            strategy: Strategy::DualSelect,
+            dtype: DType::F32,
+            batch_len: 4,
+            batch_capacity: 32,
+        }
+    }
+
+    #[test]
+    fn traces_feed_stage_histograms_ring_and_exemplars() {
+        let m = Metrics::new();
+        for i in 1..=12u64 {
+            m.record_trace(&demo_span(i * 1000));
+        }
+        assert_eq!(m.traced(), 12);
+        let s = m.snapshot();
+        assert_eq!(s.traced, 12);
+        for (i, stage) in s.stages.iter().enumerate() {
+            assert_eq!(stage.total(), 12, "stage {} total", STAGE_NAMES[i]);
+        }
+        let spans = m.recent_spans();
+        assert_eq!(spans.len(), 12);
+        assert_eq!(spans[0].e2e_us, 1000);
+        let ex = &s.exemplars;
+        assert_eq!(ex.len(), 8, "worst-K table is bounded");
+        assert_eq!(ex[0].written_us, 12_000);
+        assert!(ex[0].batched_us <= ex[0].dequeued_us);
+    }
+
+    #[test]
+    fn health_threads_through_snapshot_and_summary() {
+        let m = Metrics::new();
+        m.record_tightness(DType::F16, Strategy::DualSelect, 1e-4, 1e-2);
+        m.record_tmax(Strategy::DualSelect, 1.0);
+        m.record_fixed_saturations(2);
+        let s = m.snapshot();
+        assert_eq!(s.bound_violations, 0);
+        assert_eq!(s.fixed_saturations, 2);
+        assert_eq!(s.health.len(), 1);
+        assert_eq!(s.health[0].samples, 1);
+        assert_eq!(
+            s.tmax_highwater[crate::obs::strategy_index(Strategy::DualSelect)],
+            Some(1.0)
+        );
+        let text = m.summary();
+        assert!(text.contains("bound_violations=0"), "{text}");
+        assert!(text.contains("fixed_saturations=2"), "{text}");
+    }
+}

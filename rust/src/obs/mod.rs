@@ -1,0 +1,39 @@
+//! The observability plane: per-stage request tracing, numerical-health
+//! telemetry, and renderable stats snapshots for a running `fftd`.
+//!
+//! Three layers, hot to cold:
+//!
+//! 1. **Recording** (hot path, alloc-free): [`TraceStamps`] ride inside
+//!    each request and are stamped at the five lifecycle events
+//!    (admitted → batched → dequeued → executed → reply-written);
+//!    [`Metrics::record_trace`] folds a finished [`TraceSpan`] into the
+//!    four per-stage [`hist::LogHist`]s, the seqlocked [`SpanRing`] and
+//!    the worst-K [`ExemplarTable`]; [`Metrics::record_tightness`]
+//!    feeds the per-(dtype × strategy) bound-tightness registry that
+//!    keeps the paper's a-priori bound honest in production
+//!    (`bound_violations` must provably stay 0).
+//! 2. **Snapshotting** (cold read side): [`Metrics::snapshot`] copies
+//!    every counter, gauge, histogram and exemplar into a plain
+//!    [`MetricsSnapshot`] — the exact struct the wire protocol's v6
+//!    `STATS` op serializes.
+//! 3. **Rendering**: [`render::prometheus_text`] emits zero-dependency
+//!    Prometheus text exposition; [`render::to_json`] builds a
+//!    `util::json` tree for benches and `fft stats --json`.
+//!
+//! `coordinator::Metrics` is this module's [`Metrics`] — the
+//! coordinator re-exports it for backwards compatibility.
+
+pub mod health;
+pub mod hist;
+pub mod metrics;
+pub mod render;
+pub mod trace;
+
+pub use health::{HealthRegistry, TightnessSnapshot, RATIO_BUCKETS};
+pub use hist::{HistSnapshot, LogHist, BUCKETS, TOTAL_BUCKETS};
+pub use metrics::{DTypeCounts, Metrics, MetricsSnapshot, STAGE_COUNT, STAGE_NAMES};
+pub use render::{prometheus_text, to_json};
+pub use trace::{
+    op_index, strategy_index, Exemplar, ExemplarTable, SpanRecord, SpanRing, TraceHandle,
+    TraceSpan, TraceStamps, OPS, STRATEGIES,
+};

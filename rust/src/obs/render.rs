@@ -1,0 +1,388 @@
+//! Cold-path renderers for [`MetricsSnapshot`]: zero-dependency
+//! Prometheus text exposition (what `fft stats --addr` prints and CI
+//! scrapes) and a JSON tree through the `util::json` writer (what
+//! benches serialize and `fft stats --json` prints).
+
+use super::hist::{HistSnapshot, BUCKETS};
+use super::metrics::{MetricsSnapshot, STAGE_NAMES};
+use super::trace::STRATEGIES;
+use crate::fft::DType;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Render the snapshot in Prometheus text exposition format
+/// (version 0.0.4).  Deterministic: same snapshot, same text.
+pub fn prometheus_text(s: &MetricsSnapshot) -> String {
+    let mut out = String::with_capacity(8192);
+    let counter = |out: &mut String, name: &str, help: &str, v: u64| {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name} {v}");
+    };
+    let gauge_u = |out: &mut String, name: &str, help: &str, v: u64| {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        let _ = writeln!(out, "{name} {v}");
+    };
+    let gauge_f = |out: &mut String, name: &str, help: &str, v: f64| {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        let _ = writeln!(out, "{name} {v}");
+    };
+
+    counter(&mut out, "fmafft_requests_submitted_total", "Requests admitted", s.submitted);
+    counter(&mut out, "fmafft_requests_completed_total", "Requests completed", s.completed);
+    counter(&mut out, "fmafft_requests_rejected_total", "Requests rejected by backpressure", s.rejected);
+    counter(&mut out, "fmafft_requests_failed_total", "Requests failed", s.failed);
+    counter(&mut out, "fmafft_batches_total", "Batches flushed", s.batches);
+    gauge_f(&mut out, "fmafft_mean_batch", "Mean batch size", s.mean_batch);
+    gauge_f(&mut out, "fmafft_batch_occupancy", "Batch fill ratio vs policy cap", s.occupancy);
+    gauge_u(&mut out, "fmafft_queue_depth", "Requests waiting in open batches", s.queue_depth);
+
+    counter(&mut out, "fmafft_streams_opened_total", "Stream sessions opened", s.streams_opened);
+    gauge_u(&mut out, "fmafft_open_streams", "Stream sessions currently open", s.open_streams);
+    counter(&mut out, "fmafft_stream_chunks_total", "Stream chunks processed", s.stream_chunks);
+    gauge_u(&mut out, "fmafft_max_stream_passes", "High-water cumulative FFT passes of any stream session", s.max_stream_passes);
+    counter(&mut out, "fmafft_graphs_opened_total", "Pipeline graphs opened", s.graphs_opened);
+    gauge_u(&mut out, "fmafft_open_graphs", "Pipeline graphs currently open", s.open_graphs);
+    gauge_u(&mut out, "fmafft_active_subscribers", "Sink-topic subscriptions attached", s.active_subscribers);
+    counter(&mut out, "fmafft_published_chunks_total", "Sink frames published", s.published_chunks);
+    counter(&mut out, "fmafft_subscriber_lag_drops_total", "Frames lag-dropped at slow subscribers", s.subscriber_lag_drops);
+    counter(&mut out, "fmafft_planner_cache_hits_total", "Plan-cache hits", s.planner_cache_hits);
+    counter(&mut out, "fmafft_planner_cache_misses_total", "Plan-cache misses", s.planner_cache_misses);
+    counter(&mut out, "fmafft_tuned_plans_selected_total", "Auto requests resolved via wisdom", s.tuned_plans_selected);
+    counter(&mut out, "fmafft_auto_defaulted_total", "Auto requests without a wisdom entry", s.auto_defaulted);
+    counter(&mut out, "fmafft_traced_requests_total", "Finished request traces recorded", s.traced);
+    counter(&mut out, "fmafft_bound_violations_total", "Sampled checks whose error exceeded the a-priori bound (must stay 0)", s.bound_violations);
+    counter(&mut out, "fmafft_fixed_saturations_total", "Fixed-plane quantizer saturation events", s.fixed_saturations);
+
+    // Per-dtype request splits (active dtypes only — absent series are
+    // implicitly zero in Prometheus).
+    let _ = writeln!(out, "# HELP fmafft_dtype_requests_total Per-dtype request counters");
+    let _ = writeln!(out, "# TYPE fmafft_dtype_requests_total counter");
+    for dtype in DType::ALL {
+        let c = s.dtype(dtype);
+        if c.submitted == 0 && c.completed == 0 && c.failed == 0 && c.tuned == 0 {
+            continue;
+        }
+        let name = dtype.name();
+        let _ = writeln!(out, "fmafft_dtype_requests_total{{dtype=\"{name}\",state=\"submitted\"}} {}", c.submitted);
+        let _ = writeln!(out, "fmafft_dtype_requests_total{{dtype=\"{name}\",state=\"completed\"}} {}", c.completed);
+        let _ = writeln!(out, "fmafft_dtype_requests_total{{dtype=\"{name}\",state=\"failed\"}} {}", c.failed);
+        let _ = writeln!(out, "fmafft_dtype_requests_total{{dtype=\"{name}\",state=\"tuned\"}} {}", c.tuned);
+    }
+
+    // End-to-end latency histogram.
+    let _ = writeln!(out, "# HELP fmafft_request_duration_microseconds End-to-end request latency");
+    let _ = writeln!(out, "# TYPE fmafft_request_duration_microseconds histogram");
+    write_hist(&mut out, "fmafft_request_duration_microseconds", "", &s.e2e);
+
+    // Per-stage latency histograms, one labelled series per stage.
+    let _ = writeln!(out, "# HELP fmafft_stage_duration_microseconds Per-stage request latency");
+    let _ = writeln!(out, "# TYPE fmafft_stage_duration_microseconds histogram");
+    for (i, h) in s.stages.iter().enumerate() {
+        let label = format!("stage=\"{}\"", STAGE_NAMES[i]);
+        write_hist(&mut out, "fmafft_stage_duration_microseconds", &label, h);
+    }
+
+    // Stored-|t|max high-water per strategy (reported strategies only).
+    let _ = writeln!(out, "# HELP fmafft_tmax_highwater Stored |t|max high-water per strategy");
+    let _ = writeln!(out, "# TYPE fmafft_tmax_highwater gauge");
+    for (i, hw) in s.tmax_highwater.iter().enumerate() {
+        if let Some(t) = hw {
+            let _ = writeln!(out, "fmafft_tmax_highwater{{strategy=\"{}\"}} {t}", STRATEGIES[i].name());
+        }
+    }
+
+    // Bound-tightness cells (sampled observed error ÷ a-priori bound).
+    let _ = writeln!(out, "# HELP fmafft_bound_tightness_samples_total Sampled bound-tightness checks");
+    let _ = writeln!(out, "# TYPE fmafft_bound_tightness_samples_total counter");
+    for c in &s.health {
+        let _ = writeln!(
+            out,
+            "fmafft_bound_tightness_samples_total{{dtype=\"{}\",strategy=\"{}\"}} {}",
+            c.dtype.name(),
+            c.strategy.name(),
+            c.samples
+        );
+    }
+    let _ = writeln!(out, "# HELP fmafft_bound_tightness_max_ratio Largest observed error/bound ratio");
+    let _ = writeln!(out, "# TYPE fmafft_bound_tightness_max_ratio gauge");
+    for c in &s.health {
+        let _ = writeln!(
+            out,
+            "fmafft_bound_tightness_max_ratio{{dtype=\"{}\",strategy=\"{}\"}} {}",
+            c.dtype.name(),
+            c.strategy.name(),
+            c.max_ratio
+        );
+    }
+    let _ = writeln!(out, "# HELP fmafft_bound_tightness_ratio Decade histogram of error/bound ratios");
+    let _ = writeln!(out, "# TYPE fmafft_bound_tightness_ratio histogram");
+    for c in &s.health {
+        let base = format!("dtype=\"{}\",strategy=\"{}\"", c.dtype.name(), c.strategy.name());
+        let mut acc = 0u64;
+        for (i, &count) in c.buckets.iter().enumerate() {
+            acc += count;
+            let le = if i + 1 < c.buckets.len() {
+                format!("{}", 10f64.powi(i as i32 - 7))
+            } else {
+                "+Inf".to_string()
+            };
+            let _ = writeln!(out, "fmafft_bound_tightness_ratio_bucket{{{base},le=\"{le}\"}} {acc}");
+        }
+        let _ = writeln!(out, "fmafft_bound_tightness_ratio_count{{{base}}} {}", c.samples);
+    }
+
+    // Slow-request exemplars, worst first (not a Prometheus series —
+    // exported as comments for human scrapes; the wire snapshot and
+    // JSON carry them structurally).
+    for e in &s.exemplars {
+        let _ = writeln!(
+            out,
+            "# exemplar n={} op={} strategy={} dtype={} batch={}/{} batched_us={} dequeued_us={} executed_us={} written_us={}",
+            e.n,
+            crate::obs::op_index(e.op),
+            e.strategy.name(),
+            e.dtype.name(),
+            e.batch_len,
+            e.batch_capacity,
+            e.batched_us,
+            e.dequeued_us,
+            e.executed_us,
+            e.written_us
+        );
+    }
+    out
+}
+
+/// One histogram series: cumulative `_bucket{le=...}` lines (upper
+/// edges `2^{i+1}` µs, then `+Inf`), `_sum`, `_count`, and a
+/// `_max_microseconds` gauge making even a single pathological sample
+/// visible.
+fn write_hist(out: &mut String, name: &str, label: &str, h: &HistSnapshot) {
+    let sep = if label.is_empty() { "" } else { "," };
+    let mut acc = 0u64;
+    for (i, &c) in h.buckets.iter().enumerate() {
+        acc += c;
+        if i < BUCKETS {
+            let _ = writeln!(out, "{name}_bucket{{{label}{sep}le=\"{}\"}} {acc}", 1u64 << (i + 1));
+        } else {
+            let _ = writeln!(out, "{name}_bucket{{{label}{sep}le=\"+Inf\"}} {acc}");
+        }
+    }
+    if label.is_empty() {
+        let _ = writeln!(out, "{name}_sum {}", h.sum_us);
+        let _ = writeln!(out, "{name}_count {}", h.total());
+        let _ = writeln!(out, "{name}_max_microseconds {}", h.max_seen_us);
+    } else {
+        let _ = writeln!(out, "{name}_sum{{{label}}} {}", h.sum_us);
+        let _ = writeln!(out, "{name}_count{{{label}}} {}", h.total());
+        let _ = writeln!(out, "{name}_max_microseconds{{{label}}} {}", h.max_seen_us);
+    }
+}
+
+/// Build the snapshot as a [`Json`] tree (keys mirror the
+/// [`MetricsSnapshot`] field names; render with `.to_string()`).
+pub fn to_json(s: &MetricsSnapshot) -> Json {
+    let num = |v: u64| Json::Num(v as f64);
+    let mut m = BTreeMap::new();
+    m.insert("submitted".into(), num(s.submitted));
+    m.insert("completed".into(), num(s.completed));
+    m.insert("rejected".into(), num(s.rejected));
+    m.insert("failed".into(), num(s.failed));
+    m.insert("batches".into(), num(s.batches));
+    m.insert("mean_batch".into(), Json::Num(s.mean_batch));
+    m.insert("occupancy".into(), Json::Num(s.occupancy));
+    m.insert("queue_depth".into(), num(s.queue_depth));
+    m.insert("p50_us".into(), num(s.p50_us));
+    m.insert("p99_us".into(), num(s.p99_us));
+    m.insert("streams_opened".into(), num(s.streams_opened));
+    m.insert("open_streams".into(), num(s.open_streams));
+    m.insert("stream_chunks".into(), num(s.stream_chunks));
+    m.insert("max_stream_passes".into(), num(s.max_stream_passes));
+    m.insert("graphs_opened".into(), num(s.graphs_opened));
+    m.insert("open_graphs".into(), num(s.open_graphs));
+    m.insert("active_subscribers".into(), num(s.active_subscribers));
+    m.insert("published_chunks".into(), num(s.published_chunks));
+    m.insert("subscriber_lag_drops".into(), num(s.subscriber_lag_drops));
+    m.insert("planner_cache_hits".into(), num(s.planner_cache_hits));
+    m.insert("planner_cache_misses".into(), num(s.planner_cache_misses));
+    m.insert("tuned_plans_selected".into(), num(s.tuned_plans_selected));
+    m.insert("auto_defaulted".into(), num(s.auto_defaulted));
+    m.insert("traced".into(), num(s.traced));
+    m.insert("bound_violations".into(), num(s.bound_violations));
+    m.insert("fixed_saturations".into(), num(s.fixed_saturations));
+
+    let mut per_dtype = BTreeMap::new();
+    for dtype in DType::ALL {
+        let c = s.dtype(dtype);
+        let mut d = BTreeMap::new();
+        d.insert("submitted".into(), num(c.submitted));
+        d.insert("completed".into(), num(c.completed));
+        d.insert("failed".into(), num(c.failed));
+        d.insert("tuned".into(), num(c.tuned));
+        per_dtype.insert(dtype.name().to_string(), Json::Obj(d));
+    }
+    m.insert("per_dtype".into(), Json::Obj(per_dtype));
+
+    m.insert("e2e".into(), hist_json(&s.e2e));
+    let mut stages = BTreeMap::new();
+    for (i, h) in s.stages.iter().enumerate() {
+        stages.insert(STAGE_NAMES[i].to_string(), hist_json(h));
+    }
+    m.insert("stages".into(), Json::Obj(stages));
+
+    let mut tmax = BTreeMap::new();
+    for (i, hw) in s.tmax_highwater.iter().enumerate() {
+        tmax.insert(
+            STRATEGIES[i].name().to_string(),
+            hw.map(Json::Num).unwrap_or(Json::Null),
+        );
+    }
+    m.insert("tmax_highwater".into(), Json::Obj(tmax));
+
+    m.insert(
+        "health".into(),
+        Json::Arr(
+            s.health
+                .iter()
+                .map(|c| {
+                    let mut h = BTreeMap::new();
+                    h.insert("dtype".into(), Json::Str(c.dtype.name().into()));
+                    h.insert("strategy".into(), Json::Str(c.strategy.name().into()));
+                    h.insert("samples".into(), num(c.samples));
+                    h.insert("violations".into(), num(c.violations));
+                    h.insert("max_ratio".into(), Json::Num(c.max_ratio));
+                    h.insert("buckets".into(), Json::Arr(c.buckets.iter().map(|&b| num(b)).collect()));
+                    Json::Obj(h)
+                })
+                .collect(),
+        ),
+    );
+    m.insert(
+        "exemplars".into(),
+        Json::Arr(
+            s.exemplars
+                .iter()
+                .map(|e| {
+                    let mut x = BTreeMap::new();
+                    x.insert("batched_us".into(), num(e.batched_us));
+                    x.insert("dequeued_us".into(), num(e.dequeued_us));
+                    x.insert("executed_us".into(), num(e.executed_us));
+                    x.insert("written_us".into(), num(e.written_us));
+                    x.insert("n".into(), num(e.n as u64));
+                    x.insert("op".into(), num(crate::obs::op_index(e.op) as u64));
+                    x.insert("strategy".into(), Json::Str(e.strategy.name().into()));
+                    x.insert("dtype".into(), Json::Str(e.dtype.name().into()));
+                    x.insert("batch_len".into(), num(e.batch_len as u64));
+                    x.insert("batch_capacity".into(), num(e.batch_capacity as u64));
+                    Json::Obj(x)
+                })
+                .collect(),
+        ),
+    );
+    Json::Obj(m)
+}
+
+fn hist_json(h: &HistSnapshot) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("buckets".into(), Json::Arr(h.buckets.iter().map(|&b| Json::Num(b as f64)).collect()));
+    m.insert("sum_us".into(), Json::Num(h.sum_us as f64));
+    m.insert("max_seen_us".into(), Json::Num(h.max_seen_us as f64));
+    m.insert("count".into(), Json::Num(h.total() as f64));
+    m.insert("p50_us".into(), Json::Num(h.quantile_us(0.5) as f64));
+    m.insert("p99_us".into(), Json::Num(h.quantile_us(0.99) as f64));
+    Json::Obj(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::FftOp;
+    use crate::fft::Strategy;
+    use crate::obs::{Metrics, TraceSpan};
+    use std::time::Duration;
+
+    fn populated_snapshot() -> MetricsSnapshot {
+        let m = Metrics::new();
+        m.record_submitted(DType::F32);
+        m.record_completed(DType::F32);
+        m.record_latency(Duration::from_micros(150));
+        m.record_batch(4, 32);
+        m.record_trace(&TraceSpan {
+            queue: Duration::from_micros(10),
+            batch_form: Duration::from_micros(20),
+            execute: Duration::from_micros(100),
+            write: Duration::from_micros(20),
+            e2e: Duration::from_micros(150),
+            n: 256,
+            op: FftOp::Forward,
+            strategy: Strategy::DualSelect,
+            dtype: DType::F32,
+            batch_len: 4,
+            batch_capacity: 32,
+        });
+        m.record_tightness(DType::F32, Strategy::DualSelect, 1e-5, 1e-3);
+        m.record_tmax(Strategy::DualSelect, 1.0);
+        m.snapshot()
+    }
+
+    #[test]
+    fn prometheus_text_has_the_series_ci_greps_for() {
+        let text = prometheus_text(&populated_snapshot());
+        assert!(text.contains("fmafft_requests_completed_total 1"), "{text}");
+        for stage in STAGE_NAMES {
+            let needle = format!("fmafft_stage_duration_microseconds_count{{stage=\"{stage}\"}} 1");
+            assert!(text.contains(&needle), "missing {needle}\n{text}");
+        }
+        assert!(text.lines().any(|l| l == "fmafft_bound_violations_total 0"), "{text}");
+        assert!(text.contains("fmafft_tmax_highwater{strategy=\"dual\"} 1"), "{text}");
+        assert!(
+            text.contains("fmafft_bound_tightness_samples_total{dtype=\"f32\",strategy=\"dual\"} 1"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_end_at_inf() {
+        let text = prometheus_text(&populated_snapshot());
+        // The e2e sample (150µs) lands in bucket [128, 256); every
+        // cumulative bucket from le="256" on reports 1, ending at +Inf.
+        assert!(text.contains("fmafft_request_duration_microseconds_bucket{le=\"128\"} 0"));
+        assert!(text.contains("fmafft_request_duration_microseconds_bucket{le=\"256\"} 1"));
+        assert!(text.contains("fmafft_request_duration_microseconds_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("fmafft_request_duration_microseconds_count 1"));
+        assert!(text.contains("fmafft_request_duration_microseconds_sum 150"));
+        assert!(text.contains("fmafft_request_duration_microseconds_max_microseconds 150"));
+    }
+
+    #[test]
+    fn json_export_parses_back_and_reconciles() {
+        let s = populated_snapshot();
+        let text = to_json(&s).render();
+        let v = Json::parse(&text).expect("writer output parses");
+        assert_eq!(v.get("completed").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("bound_violations").unwrap().as_usize(), Some(0));
+        let stages = v.get("stages").unwrap();
+        for stage in STAGE_NAMES {
+            let count = stages.get(stage).unwrap().get("count").unwrap().as_usize();
+            assert_eq!(count, Some(1), "stage {stage}");
+        }
+        let health = v.get("health").unwrap().as_arr().unwrap();
+        assert_eq!(health.len(), 1);
+        assert_eq!(health[0].get("dtype").unwrap().as_str(), Some("f32"));
+        let ex = v.get("exemplars").unwrap().as_arr().unwrap();
+        assert_eq!(ex.len(), 1);
+        assert_eq!(ex[0].get("written_us").unwrap().as_usize(), Some(150));
+    }
+
+    #[test]
+    fn empty_snapshot_renders_without_panicking() {
+        let s = MetricsSnapshot::default();
+        let text = prometheus_text(&s);
+        assert!(text.lines().any(|l| l == "fmafft_bound_violations_total 0"));
+        assert!(Json::parse(&to_json(&s).render()).is_ok());
+    }
+}

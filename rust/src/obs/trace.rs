@@ -1,0 +1,514 @@
+//! Per-request lifecycle tracing: five monotonic stamps per request
+//! (admitted → batched → dequeued → executed → reply-written), a
+//! lock-free fixed-capacity span ring the finished traces land in, and
+//! a bounded slow-request exemplar table keeping the K worst traces
+//! with their full stage breakdown.
+//!
+//! The hot path is deliberately tiny:
+//!
+//! * stamping is a [`std::time::Instant`] copy into the request's
+//!   [`TraceStamps`] (no atomics, no clock beyond what the serving
+//!   plane already reads);
+//! * finishing a trace ([`TraceHandle::finish`]) is one `AtomicBool`
+//!   swap, four histogram records (relaxed `fetch_add`s), one seqlock
+//!   ring-slot write (relaxed stores bracketed by an odd/even sequence
+//!   counter) and a relaxed floor check for the exemplar table —
+//!   **no allocation**, proven by `tests/alloc_regression.rs`.
+//!
+//! Reading the ring ([`SpanRing::recent`]) and the exemplar table is
+//! the cold scrape path and may allocate freely.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::FftOp;
+use crate::fft::{DType, Strategy};
+
+/// Strategies in their wire-tag order — the obs plane's dense index
+/// for per-strategy registries ([`strategy_index`]).
+pub const STRATEGIES: [Strategy; 4] =
+    [Strategy::Standard, Strategy::LinzerFeig, Strategy::Cosine, Strategy::DualSelect];
+
+/// Dense index of a strategy into [`STRATEGIES`]-ordered tables.
+pub fn strategy_index(s: Strategy) -> usize {
+    match s {
+        Strategy::Standard => 0,
+        Strategy::LinzerFeig => 1,
+        Strategy::Cosine => 2,
+        Strategy::DualSelect => 3,
+    }
+}
+
+/// Dense index of an op (forward / inverse / matched-filter), matching
+/// the wire op tags.
+pub fn op_index(op: FftOp) -> usize {
+    match op {
+        FftOp::Forward => 0,
+        FftOp::Inverse => 1,
+        FftOp::MatchedFilter => 2,
+    }
+}
+
+/// The ops in [`op_index`] order.
+pub const OPS: [FftOp; 3] = [FftOp::Forward, FftOp::Inverse, FftOp::MatchedFilter];
+
+/// The four in-flight lifecycle stamps of one request.  All five
+/// lifecycle events are covered: the fifth (reply written) is taken by
+/// [`TraceHandle::finish`] at finish time.
+///
+/// Every field starts equal to `admitted`, so a trace that never
+/// passes through a stage reports a zero-width stage rather than
+/// garbage.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceStamps {
+    /// Admission: the request passed backpressure and was counted
+    /// submitted.
+    pub admitted: Instant,
+    /// The batcher appended the request to an open batch.
+    pub batched: Instant,
+    /// A worker dequeued the batch containing the request.
+    pub dequeued: Instant,
+    /// The worker finished executing the batch's kernel.
+    pub executed: Instant,
+}
+
+impl TraceStamps {
+    /// Stamps with every stage collapsed onto the admission instant.
+    pub fn new(admitted: Instant) -> Self {
+        TraceStamps { admitted, batched: admitted, dequeued: admitted, executed: admitted }
+    }
+}
+
+/// One finished trace: per-stage durations plus the identity of the
+/// request (plan shape, batch occupancy) — what
+/// [`super::Metrics::record_trace`] aggregates.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceSpan {
+    /// admitted → batched.
+    pub queue: Duration,
+    /// batched → dequeued.
+    pub batch_form: Duration,
+    /// dequeued → executed.
+    pub execute: Duration,
+    /// executed → reply written.
+    pub write: Duration,
+    /// admitted → reply written.
+    pub e2e: Duration,
+    pub n: u32,
+    pub op: FftOp,
+    pub strategy: Strategy,
+    pub dtype: DType,
+    /// Requests in the batch this request rode in.
+    pub batch_len: u32,
+    /// The batching policy's `max_batch` cap.
+    pub batch_capacity: u32,
+}
+
+/// A decoded span ring entry (durations in µs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanRecord {
+    pub queue_us: u64,
+    pub batch_us: u64,
+    pub execute_us: u64,
+    pub write_us: u64,
+    pub e2e_us: u64,
+    pub n: u32,
+    pub op: FftOp,
+    pub strategy: Strategy,
+    pub dtype: DType,
+    pub batch_len: u32,
+    pub batch_capacity: u32,
+}
+
+const SPAN_WORDS: usize = 8;
+
+/// One seqlocked ring slot: `seq` is odd while a writer is mid-store
+/// and even (twice the publish count) when stable; readers accept a
+/// slot only when `seq` is even and unchanged across the field reads.
+#[derive(Debug, Default)]
+struct Slot {
+    seq: AtomicU64,
+    words: [AtomicU64; SPAN_WORDS],
+}
+
+/// Fixed-capacity lock-free span ring.  Writers claim slots round-robin
+/// with one `fetch_add`; a reader that races a writer simply skips the
+/// torn slot.  Capacity [`SpanRing::CAPACITY`] bounds memory forever.
+#[derive(Debug)]
+pub struct SpanRing {
+    head: AtomicU64,
+    slots: Vec<Slot>,
+}
+
+impl Default for SpanRing {
+    fn default() -> Self {
+        SpanRing {
+            head: AtomicU64::new(0),
+            slots: (0..Self::CAPACITY).map(|_| Slot::default()).collect(),
+        }
+    }
+}
+
+impl SpanRing {
+    /// Slots in the ring; older spans are overwritten in FIFO order.
+    pub const CAPACITY: usize = 256;
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Spans ever pushed (≥ the number currently readable).
+    pub fn pushed(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Publish one span (hot path: atomics only, no allocation).
+    pub fn push(&self, span: &TraceSpan) {
+        let ticket = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(ticket % Self::CAPACITY as u64) as usize];
+        // Mark the slot dirty (odd) while the fields are in flux.
+        slot.seq.fetch_add(1, Ordering::Relaxed);
+        let words = encode_span(span);
+        for (w, v) in slot.words.iter().zip(words) {
+            w.store(v, Ordering::Relaxed);
+        }
+        // Publish (even); Release orders the field stores before it.
+        slot.seq.fetch_add(1, Ordering::Release);
+    }
+
+    /// Copy out every readable span, oldest first (cold path;
+    /// allocates).  Slots currently being written are skipped.
+    pub fn recent(&self) -> Vec<SpanRecord> {
+        let head = self.head.load(Ordering::Relaxed);
+        let cap = Self::CAPACITY as u64;
+        let len = head.min(cap);
+        let start = head - len;
+        let mut out = Vec::with_capacity(len as usize);
+        for ticket in start..head {
+            let slot = &self.slots[(ticket % cap) as usize];
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 % 2 != 0 || s1 == 0 {
+                continue; // mid-write or never written
+            }
+            let words: [u64; SPAN_WORDS] =
+                core::array::from_fn(|i| slot.words[i].load(Ordering::Relaxed));
+            let s2 = slot.seq.load(Ordering::Acquire);
+            if s1 != s2 {
+                continue; // torn by a concurrent writer
+            }
+            if let Some(rec) = decode_span(&words) {
+                out.push(rec);
+            }
+        }
+        out
+    }
+}
+
+fn encode_span(s: &TraceSpan) -> [u64; SPAN_WORDS] {
+    let us = |d: Duration| d.as_micros() as u64;
+    let ident = (op_index(s.op) as u64)
+        | ((strategy_index(s.strategy) as u64) << 8)
+        | ((s.dtype.index() as u64) << 16);
+    [
+        us(s.queue),
+        us(s.batch_form),
+        us(s.execute),
+        us(s.write),
+        us(s.e2e),
+        s.n as u64,
+        ident,
+        (s.batch_len as u64) | ((s.batch_capacity as u64) << 32),
+    ]
+}
+
+fn decode_span(words: &[u64; SPAN_WORDS]) -> Option<SpanRecord> {
+    let op = *OPS.get((words[6] & 0xff) as usize)?;
+    let strategy = *STRATEGIES.get(((words[6] >> 8) & 0xff) as usize)?;
+    let dtype = *DType::ALL.get(((words[6] >> 16) & 0xff) as usize)?;
+    Some(SpanRecord {
+        queue_us: words[0],
+        batch_us: words[1],
+        execute_us: words[2],
+        write_us: words[3],
+        e2e_us: words[4],
+        n: words[5] as u32,
+        op,
+        strategy,
+        dtype,
+        batch_len: words[7] as u32,
+        batch_capacity: (words[7] >> 32) as u32,
+    })
+}
+
+/// One slow-request exemplar: the full stage breakdown as *cumulative*
+/// microsecond offsets from admission (monotone by construction:
+/// `batched_us ≤ dequeued_us ≤ executed_us ≤ written_us`), plus the
+/// request's plan identity and batch occupancy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Exemplar {
+    /// admitted → batched, µs from admission.
+    pub batched_us: u64,
+    /// admitted → dequeued, µs from admission.
+    pub dequeued_us: u64,
+    /// admitted → executed, µs from admission.
+    pub executed_us: u64,
+    /// admitted → reply written, µs from admission (the trace's
+    /// end-to-end latency and its ranking key).
+    pub written_us: u64,
+    pub n: u32,
+    pub op: FftOp,
+    pub strategy: Strategy,
+    pub dtype: DType,
+    pub batch_len: u32,
+    pub batch_capacity: u32,
+}
+
+impl Exemplar {
+    fn from_span(s: &TraceSpan) -> Exemplar {
+        let us = |d: Duration| d.as_micros() as u64;
+        let batched_us = us(s.queue);
+        let dequeued_us = batched_us + us(s.batch_form);
+        let executed_us = dequeued_us + us(s.execute);
+        let written_us = executed_us + us(s.write);
+        Exemplar {
+            batched_us,
+            dequeued_us,
+            executed_us,
+            written_us,
+            n: s.n,
+            op: s.op,
+            strategy: s.strategy,
+            dtype: s.dtype,
+            batch_len: s.batch_len,
+            batch_capacity: s.batch_capacity,
+        }
+    }
+}
+
+/// Bounded worst-K exemplar table.  The hot-path gate is one relaxed
+/// load of the current admission floor; only traces slower than the
+/// slowest kept exemplar take the (cold) lock, and the backing vector
+/// is pre-allocated at capacity so inserts never allocate.
+#[derive(Debug)]
+pub struct ExemplarTable {
+    /// Fast reject: a trace with `written_us` ≤ floor cannot enter a
+    /// full table.  0 while the table has room.
+    floor_us: AtomicU64,
+    slots: Mutex<Vec<Exemplar>>,
+}
+
+impl Default for ExemplarTable {
+    fn default() -> Self {
+        ExemplarTable {
+            floor_us: AtomicU64::new(0),
+            slots: Mutex::new(Vec::with_capacity(Self::CAPACITY)),
+        }
+    }
+}
+
+impl ExemplarTable {
+    /// Worst traces kept.
+    pub const CAPACITY: usize = 8;
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Offer a finished trace; kept only if it ranks among the worst
+    /// K by end-to-end latency.
+    pub fn offer(&self, span: &TraceSpan) {
+        let e2e_us = span.e2e.as_micros() as u64;
+        if e2e_us <= self.floor_us.load(Ordering::Relaxed) {
+            return;
+        }
+        let ex = Exemplar::from_span(span);
+        let mut slots = match self.slots.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        if slots.len() < Self::CAPACITY {
+            slots.push(ex);
+        } else {
+            // Replace the fastest kept exemplar (the floor holder).
+            let (imin, _) = slots
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.written_us)
+                .expect("table is full, so non-empty");
+            if ex.written_us <= slots[imin].written_us {
+                return; // raced: floor rose past us
+            }
+            slots[imin] = ex;
+        }
+        if slots.len() == Self::CAPACITY {
+            let floor = slots.iter().map(|e| e.written_us).min().unwrap_or(0);
+            self.floor_us.store(floor, Ordering::Relaxed);
+        }
+    }
+
+    /// The kept exemplars, worst first (cold path; allocates).
+    pub fn worst(&self) -> Vec<Exemplar> {
+        let slots = match self.slots.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        let mut out = slots.clone();
+        out.sort_by(|a, b| b.written_us.cmp(&a.written_us));
+        out
+    }
+}
+
+/// Attached to an [`crate::coordinator::FftResponse`] by the worker;
+/// finishing the trace (idempotently) stamps "reply written" and
+/// aggregates the span into the metrics registry.  The TCP writer
+/// finishes it right after the frame bytes are flushed downstream;
+/// in-process consumers finish it implicitly on drop.
+#[derive(Debug)]
+pub struct TraceHandle {
+    stamps: TraceStamps,
+    n: u32,
+    op: FftOp,
+    strategy: Strategy,
+    dtype: DType,
+    batch_len: u32,
+    batch_capacity: u32,
+    metrics: std::sync::Arc<super::Metrics>,
+    done: std::sync::atomic::AtomicBool,
+}
+
+impl TraceHandle {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        stamps: TraceStamps,
+        n: u32,
+        op: FftOp,
+        strategy: Strategy,
+        dtype: DType,
+        batch_len: u32,
+        batch_capacity: u32,
+        metrics: std::sync::Arc<super::Metrics>,
+    ) -> TraceHandle {
+        TraceHandle {
+            stamps,
+            n,
+            op,
+            strategy,
+            dtype,
+            batch_len,
+            batch_capacity,
+            metrics,
+            done: std::sync::atomic::AtomicBool::new(false),
+        }
+    }
+
+    /// Stamp "reply written" now and record the trace.  Idempotent —
+    /// the first caller wins; [`Drop`] is the fallback for responses
+    /// that never reach an explicit finish (in-process consumers, dead
+    /// connections).
+    pub fn finish(&self) {
+        if self.done.swap(true, Ordering::Relaxed) {
+            return;
+        }
+        let written = Instant::now();
+        let s = &self.stamps;
+        let span = TraceSpan {
+            queue: s.batched.saturating_duration_since(s.admitted),
+            batch_form: s.dequeued.saturating_duration_since(s.batched),
+            execute: s.executed.saturating_duration_since(s.dequeued),
+            write: written.saturating_duration_since(s.executed),
+            e2e: written.saturating_duration_since(s.admitted),
+            n: self.n,
+            op: self.op,
+            strategy: self.strategy,
+            dtype: self.dtype,
+            batch_len: self.batch_len,
+            batch_capacity: self.batch_capacity,
+        };
+        self.metrics.record_trace(&span);
+    }
+}
+
+impl Drop for TraceHandle {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(e2e_us: u64) -> TraceSpan {
+        TraceSpan {
+            queue: Duration::from_micros(e2e_us / 4),
+            batch_form: Duration::from_micros(e2e_us / 4),
+            execute: Duration::from_micros(e2e_us / 4),
+            write: Duration::from_micros(e2e_us / 4),
+            e2e: Duration::from_micros(e2e_us),
+            n: 256,
+            op: FftOp::Forward,
+            strategy: Strategy::DualSelect,
+            dtype: DType::F16,
+            batch_len: 3,
+            batch_capacity: 32,
+        }
+    }
+
+    #[test]
+    fn ring_roundtrips_spans_in_order() {
+        let ring = SpanRing::new();
+        assert!(ring.recent().is_empty());
+        for i in 1..=5u64 {
+            ring.push(&span(i * 100));
+        }
+        let got = ring.recent();
+        assert_eq!(got.len(), 5);
+        assert_eq!(got[0].e2e_us, 100);
+        assert_eq!(got[4].e2e_us, 500);
+        let r = got[2];
+        assert_eq!((r.op, r.strategy, r.dtype), (FftOp::Forward, Strategy::DualSelect, DType::F16));
+        assert_eq!((r.n, r.batch_len, r.batch_capacity), (256, 3, 32));
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_beyond_capacity() {
+        let ring = SpanRing::new();
+        let extra = 10;
+        for i in 0..(SpanRing::CAPACITY + extra) {
+            ring.push(&span(i as u64 + 1));
+        }
+        let got = ring.recent();
+        assert_eq!(got.len(), SpanRing::CAPACITY);
+        // The oldest `extra` spans are gone; the newest survives.
+        assert_eq!(got[0].e2e_us, extra as u64 + 1);
+        assert_eq!(got.last().unwrap().e2e_us, (SpanRing::CAPACITY + extra) as u64);
+    }
+
+    #[test]
+    fn exemplar_table_keeps_the_worst_k() {
+        let t = ExemplarTable::new();
+        // 1..=20 — only 13..=20 should survive (K = 8).
+        for us in 1..=20u64 {
+            t.offer(&span(us * 1000));
+        }
+        let worst = t.worst();
+        assert_eq!(worst.len(), ExemplarTable::CAPACITY);
+        assert_eq!(worst[0].written_us, 20_000);
+        assert_eq!(worst.last().unwrap().written_us, 13_000);
+        // A fast request no longer enters.
+        t.offer(&span(2_000));
+        assert_eq!(t.worst().last().unwrap().written_us, 13_000);
+    }
+
+    #[test]
+    fn exemplar_offsets_are_monotone() {
+        let t = ExemplarTable::new();
+        t.offer(&span(4_000));
+        let e = t.worst()[0];
+        assert!(e.batched_us <= e.dequeued_us);
+        assert!(e.dequeued_us <= e.executed_us);
+        assert!(e.executed_us <= e.written_us);
+        assert_eq!(e.written_us, 4_000);
+    }
+}

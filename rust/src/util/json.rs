@@ -1,8 +1,11 @@
-//! Minimal JSON parser — enough for `artifacts/manifest.json`.
+//! Minimal JSON parser and writer — enough for
+//! `artifacts/manifest.json` and the observability plane's snapshot
+//! export.
 //!
 //! (No serde offline; this is a small recursive-descent parser with
 //! precise error positions, supporting the full JSON grammar except
-//! `\u` surrogate pairs beyond the BMP.)
+//! `\u` surrogate pairs beyond the BMP, plus a [`fmt::Display`]
+//! writer that round-trips what the parser accepts.)
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -68,6 +71,70 @@ impl Json {
             _ => None,
         }
     }
+
+    /// Serialize to compact JSON text (the inverse of [`Json::parse`]
+    /// up to number formatting; non-finite numbers render as `null`).
+    pub fn render(&self) -> String {
+        self.to_string()
+    }
+}
+
+/// Compact JSON writer.  Strings are escaped per RFC 8259; non-finite
+/// numbers (which JSON cannot represent) render as `null`.
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => f.write_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if !x.is_finite() {
+                    f.write_str("null")
+                } else if x.fract() == 0.0 && x.abs() < 9.007_199_254_740_992e15 {
+                    write!(f, "{}", *x as i64)
+                } else {
+                    write!(f, "{x}")
+                }
+            }
+            Json::Str(s) => write_json_string(f, s),
+            Json::Arr(items) => {
+                f.write_str("[")?;
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{item}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(map) => {
+                f.write_str("{")?;
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write_json_string(f, k)?;
+                    write!(f, ":{v}")?;
+                }
+                f.write_str("}")
+            }
+        }
+    }
+}
+
+fn write_json_string(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    f.write_str("\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\r' => f.write_str("\\r")?,
+            '\t' => f.write_str("\\t")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    f.write_str("\"")
 }
 
 /// Parse error with byte offset.
@@ -316,6 +383,20 @@ mod tests {
         assert_eq!(Json::parse("7").unwrap().as_usize(), Some(7));
         assert_eq!(Json::parse("7.5").unwrap().as_usize(), None);
         assert_eq!(Json::parse("-7").unwrap().as_usize(), None);
+    }
+
+    #[test]
+    fn writer_roundtrips_through_the_parser() {
+        let src = r#"{"a":[1,2.5,{"b":"c\nd"}],"e":null,"f":true,"g":"é"}"#;
+        let v = Json::parse(src).unwrap();
+        let text = v.render();
+        assert_eq!(Json::parse(&text).unwrap(), v);
+        // Integral floats render without a decimal point; key order is
+        // the BTreeMap's (sorted), so the output is deterministic.
+        assert_eq!(Json::Num(42.0).render(), "42");
+        assert_eq!(Json::Num(0.5).render(), "0.5");
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+        assert_eq!(Json::Str("x\"y\\z\u{1}".into()).render(), "\"x\\\"y\\\\z\\u0001\"");
     }
 
     #[test]

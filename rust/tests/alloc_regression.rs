@@ -6,7 +6,10 @@
 //! `FixedScratch`), through both the typed (`Transform::execute_many`)
 //! and the dtype-erased (`AnyTransform::execute_many_any`) entry
 //! points.  The graph plane's execute path (`GraphRegistry::chunk`
-//! into a reused `GraphOut`) is held to the same bar.
+//! into a reused `GraphOut`) is held to the same bar, and so is the
+//! observability recording path (`obs::Metrics::record_trace` /
+//! `record_latency` / `record_tightness`) — tracing a request must
+//! never buy visibility with hot-path allocations.
 //!
 //! This test binary installs a counting global allocator, so it
 //! contains exactly one `#[test]` (parallel tests in the same binary
@@ -261,4 +264,74 @@ fn worker_hot_path_allocates_zero_after_warmup() {
     let mut fc = GraphOut::default();
     reg.close(graph, &mut fc).unwrap();
     assert!(fc.sinks.iter().all(|s| s.eos));
+
+    // 5. The observability recording path: the per-request calls the
+    //    serving plane makes to fold a finished request into
+    //    `obs::Metrics` — counters, latency histogram, trace span
+    //    (span ring + stage histograms + worst-K exemplar table) and
+    //    bound-tightness sample — must be alloc-free after warmup.
+    //    The structures make this true by construction (fixed bucket
+    //    arrays, a preallocated span ring, a fixed-capacity exemplar
+    //    table, lazily-created-then-reused health cells); this section
+    //    keeps it true.
+    use fmafft::coordinator::FftOp;
+    use fmafft::obs::{Metrics, TraceSpan};
+    use std::time::Duration;
+
+    let metrics = Metrics::new();
+    let span = |i: u64| TraceSpan {
+        queue: Duration::from_micros(10 + (i % 37)),
+        batch_form: Duration::from_micros(20),
+        execute: Duration::from_micros(100 + 7 * (i % 53)),
+        write: Duration::from_micros(15),
+        // Varies so the worst-K exemplar table keeps evicting: the
+        // steady-state insert path is exercised, not just the miss
+        // path.
+        e2e: Duration::from_micros(145 + 9 * (i % 101)),
+        n: n as u32,
+        op: FftOp::Forward,
+        strategy: Strategy::DualSelect,
+        dtype: DType::F16,
+        batch_len: 4,
+        batch_capacity: batch as u32,
+    };
+
+    // Warmup: fills and wraps the 256-entry span ring, fills the
+    // exemplar table, and creates the (f16, dual) health cell.
+    for i in 0..512u64 {
+        metrics.record_submitted(DType::F16);
+        metrics.record_completed(DType::F16);
+        metrics.record_latency(Duration::from_micros(145 + 9 * (i % 101)));
+        metrics.record_batch(4, batch);
+        metrics.record_trace(&span(i));
+        metrics.record_tightness(DType::F16, Strategy::DualSelect, 1.5e-4, 1.0e-2);
+        metrics.record_tmax(Strategy::DualSelect, 1.0 + (i as f64) * 1e-6);
+    }
+
+    let before = allocations();
+    for i in 0..256u64 {
+        metrics.record_submitted(DType::F16);
+        metrics.record_completed(DType::F16);
+        metrics.record_latency(Duration::from_micros(145 + 9 * (i % 101)));
+        metrics.record_batch(4, batch);
+        metrics.record_trace(&span(i));
+        metrics.record_tightness(DType::F16, Strategy::DualSelect, 1.5e-4, 1.0e-2);
+        metrics.record_tmax(Strategy::DualSelect, 1.0 + (i as f64) * 1e-6);
+    }
+    let after = allocations();
+    assert_eq!(
+        after - before,
+        0,
+        "obs recording path allocated {} times after warmup",
+        after - before
+    );
+
+    // Snapshotting allocates (it builds an owned MetricsSnapshot) —
+    // that is the scrape path, not the hot path.  It must still see
+    // everything recorded above.
+    let snap = metrics.snapshot();
+    assert_eq!(snap.traced, 512 + 256);
+    assert_eq!(snap.completed, 512 + 256);
+    assert_eq!(snap.bound_violations, 0);
+    assert!(snap.stages.iter().all(|h| h.total() == 512 + 256));
 }

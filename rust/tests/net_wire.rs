@@ -394,10 +394,10 @@ fn encode_publish(
 }
 
 #[test]
-fn protocol_v5_tags_are_pinned() {
+fn protocol_v6_tags_are_pinned() {
     // The numeric values are PROTOCOL.md law — changing any of them is
     // a wire break, caught here before it ships.
-    assert_eq!(wire::VERSION, 5);
+    assert_eq!(wire::VERSION, 6);
     assert_eq!(wire::OP_STREAM_OPEN, 3);
     assert_eq!(wire::OP_STREAM_CHUNK, 4);
     assert_eq!(wire::OP_STREAM_CLOSE, 5);
@@ -405,7 +405,15 @@ fn protocol_v5_tags_are_pinned() {
     assert_eq!(wire::OP_GRAPH_CHUNK, 7);
     assert_eq!(wire::OP_GRAPH_SUBSCRIBE, 8);
     assert_eq!(wire::OP_GRAPH_CLOSE, 9);
+    assert_eq!(wire::OP_STATS, 10);
     assert_eq!(wire::STATUS_PUBLISH, 4);
+    assert_eq!(wire::STATUS_STATS, 5);
+    assert_eq!(wire::STATS_SNAPSHOT_VERSION, 1);
+    // A STATS request is a bare header: op tag in the code byte, empty
+    // body.
+    let stats_req = wire::encode_stats_request(1);
+    assert_eq!(stats_req.len(), wire::HEADER_LEN);
+    assert_eq!(stats_req[7], wire::OP_STATS);
     // Op tags land in the header's code byte (offset 7).
     let spec = kitchen_sink_graph(DType::F32, Strategy::DualSelect);
     assert_eq!(wire::encode_graph_open(1, &spec).unwrap()[7], wire::OP_GRAPH_OPEN);
@@ -662,6 +670,114 @@ fn malformed_graph_and_publish_bodies_are_typed_protocol_errors() {
         decode_request(&bytes).expect_err("graph op on the one-shot reader"),
         FftError::Protocol(_)
     ));
+}
+
+#[test]
+fn stats_snapshot_frame_layout_is_pinned() {
+    use fmafft::obs::{Metrics, TraceSpan};
+    use std::time::Duration;
+
+    let m = Metrics::new();
+    m.record_submitted(DType::F16);
+    m.record_completed(DType::F16);
+    m.record_latency(Duration::from_micros(150));
+    m.record_trace(&TraceSpan {
+        queue: Duration::from_micros(10),
+        batch_form: Duration::from_micros(20),
+        execute: Duration::from_micros(100),
+        write: Duration::from_micros(20),
+        e2e: Duration::from_micros(150),
+        n: 256,
+        op: FftOp::Forward,
+        strategy: Strategy::DualSelect,
+        dtype: DType::F16,
+        batch_len: 4,
+        batch_capacity: 32,
+    });
+    m.record_tightness(DType::F16, Strategy::DualSelect, 1e-4, 1e-2);
+    m.record_tmax(Strategy::DualSelect, 1.0);
+    let snapshot = m.snapshot();
+
+    let mut bytes = Vec::new();
+    wire::write_stats_reply(&mut bytes, 33, &snapshot).unwrap();
+    // Response header: kind = response (2), status tag in the code
+    // byte.
+    assert_eq!(bytes[6], 2);
+    assert_eq!(bytes[7], wire::STATUS_STATS);
+    // PROTOCOL.md §Stats body offsets are law — every number below is
+    // normative.
+    let b = wire::HEADER_LEN;
+    let u32_at = |at: usize| u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap());
+    let u64_at = |at: usize| u64::from_le_bytes(bytes[at..at + 8].try_into().unwrap());
+    assert_eq!(u32_at(b), wire::STATS_SNAPSHOT_VERSION);
+    assert_eq!(u32_at(b + 4), 24, "counter count");
+    assert_eq!(u64_at(b + 8), snapshot.submitted, "counters lead with submitted");
+    assert_eq!(u32_at(b + 216), 6, "per-dtype split count");
+    assert_eq!(u32_at(b + 412), 5, "e2e + four stage histograms");
+    assert_eq!(bytes[b + 416], 0, "first histogram tag = e2e");
+    assert_eq!(u32_at(b + 417), 26, "bucket count incl. overflow");
+    assert_eq!(u32_at(b + 416 + 5 * 229), 4, "tmax slots, one per strategy");
+
+    // The frame decodes back to the exact snapshot.
+    match decode_response(&bytes).expect("decodes").expect("not EOF") {
+        wire::Response::Stats { id, snapshot: back } => {
+            assert_eq!(id, 33);
+            assert_eq!(*back, snapshot);
+        }
+        other => panic!("decoded {other:?}"),
+    }
+    // The request side roundtrips too.
+    assert_eq!(
+        decode_request_frame(&wire::encode_stats_request(9)).unwrap().unwrap(),
+        wire::RequestFrame::Stats { id: 9 }
+    );
+}
+
+#[test]
+fn malformed_stats_frames_are_typed_protocol_errors() {
+    // A STATS request must have an empty body.
+    let mut req = wire::encode_stats_request(1);
+    req[20..24].copy_from_slice(&8u32.to_le_bytes());
+    fix_checksum(&mut req);
+    req.extend_from_slice(&[0u8; 8]);
+    assert!(matches!(
+        decode_request_frame(&req).expect_err("stats request with a body"),
+        FftError::Protocol(_)
+    ));
+    // A STATS op on the one-shot reader is a typed kind confusion.
+    assert!(matches!(
+        decode_request(&wire::encode_stats_request(1)).expect_err("stats op on one-shot reader"),
+        FftError::Protocol(_)
+    ));
+
+    let snapshot = fmafft::obs::Metrics::new().snapshot();
+    let mut base = Vec::new();
+    wire::write_stats_reply(&mut base, 1, &snapshot).unwrap();
+    let b = wire::HEADER_LEN;
+    let protocol = |bytes: &[u8], what: &str| {
+        let err = decode_response(bytes).expect_err(what);
+        assert!(matches!(err, FftError::Protocol(_)), "{what}: {err:?}");
+    };
+    // Unknown snapshot version.
+    let mut bytes = base.clone();
+    bytes[b..b + 4].copy_from_slice(&9u32.to_le_bytes());
+    protocol(&bytes, "snapshot version");
+    // Wrong counter count.
+    let mut bytes = base.clone();
+    bytes[b + 4..b + 8].copy_from_slice(&7u32.to_le_bytes());
+    protocol(&bytes, "counter count");
+    // Unknown stage tag on the first histogram.
+    let mut bytes = base.clone();
+    bytes[b + 416] = 9;
+    protocol(&bytes, "stage tag");
+    // Bad per-histogram bucket count.
+    let mut bytes = base.clone();
+    bytes[b + 417..b + 421].copy_from_slice(&99u32.to_le_bytes());
+    protocol(&bytes, "bucket count");
+    // Truncation anywhere inside the body dies typed, never panics.
+    for cut in [b, b + 4, b + 216, b + 420, base.len() - 1] {
+        protocol(&base[..cut], "truncated snapshot");
+    }
 }
 
 #[test]

@@ -1,0 +1,254 @@
+//! Integration: the observability plane end to end — mixed all-dtype
+//! traffic through fftd, then the protocol-v6 `STATS` surface scraped
+//! over the same TCP connection.  Asserts the acceptance loop of
+//! `fft::obs`: the wire snapshot IS the in-process snapshot
+//! (field-for-field), per-stage trace histograms account for every
+//! completed request, the worst-K exemplars carry the five lifecycle
+//! stamps in monotone order, the bound-violation counter provably
+//! stays zero, and both renderings (Prometheus text, JSON) reconcile
+//! with the snapshot they were rendered from.
+
+use std::time::Duration;
+
+use fmafft::coordinator::batcher::BatchPolicy;
+use fmafft::coordinator::{FftOp, Server, ServerConfig};
+use fmafft::fft::{DType, Strategy};
+use fmafft::net::{FftClient, FftdServer};
+use fmafft::obs::{prometheus_text, to_json, MetricsSnapshot, STAGE_NAMES};
+use fmafft::util::prng::Pcg32;
+
+use std::sync::Arc;
+
+const RECV_TIMEOUT: Duration = Duration::from_secs(60);
+
+fn random_frame(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Pcg32::seed(seed);
+    (
+        (0..n).map(|_| rng.range(-1.0, 1.0)).collect(),
+        (0..n).map(|_| rng.range(-1.0, 1.0)).collect(),
+    )
+}
+
+fn start_native(n: usize, workers: usize) -> (Arc<Server>, FftdServer) {
+    let mut cfg = ServerConfig::native(n);
+    cfg.workers = workers;
+    cfg.policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) };
+    let server = Server::start(cfg).unwrap();
+    let fftd = FftdServer::start(server.clone(), "127.0.0.1:0").unwrap();
+    (server, fftd)
+}
+
+/// Scrape the live surface until `done` holds (or give up and return
+/// the last snapshot — the caller's asserts then report the gap).
+/// Needed because "reply written" is stamped right after the response
+/// bytes flush: the client can read the final reply a beat before the
+/// writer thread folds its trace in.
+fn poll_stats<F: Fn(&MetricsSnapshot) -> bool>(client: &mut FftClient, done: F) -> MetricsSnapshot {
+    let mut last = client.stats().expect("stats scrape");
+    for _ in 0..400 {
+        if done(&last) {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+        last = client.stats().expect("stats scrape");
+    }
+    last
+}
+
+#[test]
+fn fftd_answers_stats_and_wire_snapshot_matches_in_process() {
+    let n = 256;
+    let per_dtype = 8usize;
+    let (server, fftd) = start_native(n, 2);
+    let mut client = FftClient::connect(fftd.local_addr()).unwrap();
+    client.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+
+    // All-dtype mixed traffic, fully drained before the scrape:
+    // `call_with` is synchronous, so by the last reply every request
+    // has been admitted, batched, executed and written.
+    let total = DType::ALL.len() * per_dtype;
+    for (i, dtype) in DType::ALL.iter().copied().cycle().take(total).enumerate() {
+        let (re, im) = random_frame(n, 100 + i as u64);
+        let resp = client
+            .call_with(FftOp::Forward, dtype, Strategy::DualSelect, &re, &im)
+            .unwrap();
+        assert!(resp.is_ok(), "{dtype}: {:?}", resp.error);
+    }
+    let expected = total as u64;
+    let snap = poll_stats(&mut client, |s| s.traced == expected);
+
+    // Counters: every TCP request completed, every completion traced.
+    assert_eq!(snap.submitted, expected);
+    assert_eq!(snap.completed, expected);
+    assert_eq!(snap.traced, expected);
+    assert_eq!(snap.failed, 0);
+    assert_eq!(snap.rejected, 0);
+    assert_eq!(snap.queue_depth, 0);
+
+    // The health acceptance bar: zero bound violations across mixed
+    // all-dtype traffic (sampled self-checks included).
+    assert_eq!(snap.bound_violations, 0);
+
+    // Per-dtype counters partition the total.
+    for dtype in DType::ALL {
+        let c = snap.dtype(dtype);
+        assert_eq!(c.submitted, per_dtype as u64, "{dtype} submitted");
+        assert_eq!(c.completed, per_dtype as u64, "{dtype} completed");
+        assert_eq!(c.failed, 0, "{dtype} failed");
+    }
+
+    // Stage accounting: each of the four stage histograms (and the
+    // end-to-end histogram they decompose) holds exactly one sample
+    // per completed request.
+    assert_eq!(snap.e2e.total(), expected);
+    for (stage, h) in STAGE_NAMES.iter().zip(snap.stages.iter()) {
+        assert_eq!(h.total(), expected, "stage {stage} histogram total");
+        assert!(h.max_seen_us <= snap.e2e.max_seen_us, "stage {stage} exceeds e2e max");
+    }
+
+    // Exemplars: worst-first by end-to-end latency, each carrying the
+    // five lifecycle stamps as monotone offsets from admission
+    // (admitted is the implicit 0).
+    assert!(!snap.exemplars.is_empty());
+    assert!(snap.exemplars.len() <= 8);
+    for w in snap.exemplars.windows(2) {
+        assert!(w[0].written_us >= w[1].written_us, "exemplars not worst-first");
+    }
+    for e in &snap.exemplars {
+        assert!(e.batched_us <= e.dequeued_us, "batched after dequeued: {e:?}");
+        assert!(e.dequeued_us <= e.executed_us, "dequeued after executed: {e:?}");
+        assert!(e.executed_us <= e.written_us, "executed after written: {e:?}");
+        assert_eq!(e.n, n as u32);
+        assert_eq!(e.op, FftOp::Forward);
+        assert_eq!(e.strategy, Strategy::DualSelect);
+        assert!(e.batch_len >= 1 && e.batch_len <= e.batch_capacity);
+    }
+
+    // The tentpole reconciliation: with traffic quiesced, the snapshot
+    // served over the wire is the in-process snapshot, verbatim —
+    // counters, histograms, tmax high-waters, health cells and
+    // exemplars all survive the v6 codec bit-for-bit.
+    let local = server.snapshot();
+    assert_eq!(snap, local, "wire snapshot diverges from in-process snapshot");
+
+    fftd.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn plaintext_and_json_scrapes_reconcile_with_snapshot() {
+    let n = 128;
+    let per_dtype = 6usize;
+    let (server, fftd) = start_native(n, 2);
+    let mut client = FftClient::connect(fftd.local_addr()).unwrap();
+    client.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+
+    let dtypes = [DType::F32, DType::F16];
+    for (i, dtype) in dtypes.iter().copied().cycle().take(dtypes.len() * per_dtype).enumerate() {
+        let (re, im) = random_frame(n, 500 + i as u64);
+        let resp = client
+            .call_with(FftOp::Forward, dtype, Strategy::DualSelect, &re, &im)
+            .unwrap();
+        assert!(resp.is_ok(), "{dtype}: {:?}", resp.error);
+    }
+    let expected = (dtypes.len() * per_dtype) as u64;
+    let snap = poll_stats(&mut client, |s| s.traced == expected);
+
+    // Prometheus text: what `fmafft stats --addr` prints (and what CI
+    // greps).  Every line asserted here is derived from the very
+    // snapshot the text was rendered from, so the two surfaces cannot
+    // drift apart silently.
+    let text = prometheus_text(&snap);
+    let has_line = |needle: &str| text.lines().any(|l| l == needle);
+    assert!(
+        has_line(&format!("fmafft_requests_completed_total {}", snap.completed)),
+        "completed counter line missing:\n{text}"
+    );
+    assert!(has_line("fmafft_bound_violations_total 0"), "{text}");
+    assert!(has_line(&format!("fmafft_traced_requests_total {expected}")), "{text}");
+    for stage in STAGE_NAMES {
+        let needle =
+            format!("fmafft_stage_duration_microseconds_count{{stage=\"{stage}\"}} {expected}");
+        assert!(has_line(&needle), "missing {needle:?}:\n{text}");
+    }
+    for dtype in dtypes {
+        let needle = format!(
+            "fmafft_dtype_requests_total{{dtype=\"{}\",state=\"completed\"}} {per_dtype}",
+            dtype.name()
+        );
+        assert!(has_line(&needle), "missing {needle:?}:\n{text}");
+    }
+    assert!(
+        has_line(&format!("fmafft_request_duration_microseconds_count {expected}")),
+        "{text}"
+    );
+
+    // JSON: what `fmafft stats --addr --json` prints.
+    let json = to_json(&snap).render();
+    assert!(json.contains(&format!("\"completed\":{}", snap.completed)), "{json}");
+    assert!(json.contains("\"bound_violations\":0"), "{json}");
+    assert!(json.contains(&format!("\"traced\":{expected}")), "{json}");
+    // And it parses back through the same zero-dep reader the repo
+    // ships (bench reports round-trip through it too).
+    fmafft::util::json::Json::parse(&json).expect("scrape JSON parses");
+
+    fftd.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn tightness_telemetry_rides_the_wire_and_stats_interleaves_with_compute() {
+    let n = 128;
+    let (server, fftd) = start_native(n, 1);
+
+    // Feed the shared bound-tightness sampler through the server's
+    // metrics handle — the exact path the worker's sampled self-check
+    // and `client --verify` both use.
+    let m = server.metrics();
+    m.record_tightness(DType::F32, Strategy::DualSelect, 2.0e-7, 1.0e-6);
+    m.record_tightness(DType::F32, Strategy::DualSelect, 8.0e-7, 1.0e-6);
+    m.record_tightness(DType::F16, Strategy::DualSelect, 1.0e-3, 1.0e-2);
+
+    let mut client = FftClient::connect(fftd.local_addr()).unwrap();
+    client.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+
+    // STATS interleaves with compute on one connection: the reader
+    // serves it synchronously without disturbing the request path.
+    for i in 0..4u64 {
+        let (re, im) = random_frame(n, 900 + i);
+        let resp = client.call(FftOp::Forward, &re, &im).unwrap();
+        assert!(resp.is_ok(), "{:?}", resp.error);
+        let snap = client.stats().unwrap();
+        assert!(snap.completed >= i + 1, "scrape {i} saw {}", snap.completed);
+    }
+    let snap = poll_stats(&mut client, |s| s.traced == 4);
+    assert_eq!(snap.completed, 4);
+
+    // The health cells recorded before any connection existed arrive
+    // over the wire with their counts, worst ratio and decade
+    // histogram intact.
+    let f32_cell = snap
+        .health
+        .iter()
+        .find(|c| c.dtype == DType::F32 && c.strategy == Strategy::DualSelect)
+        .expect("f32/dual tightness cell");
+    assert_eq!(f32_cell.samples, 2);
+    assert_eq!(f32_cell.violations, 0);
+    assert!((f32_cell.max_ratio - 0.8).abs() < 1e-12, "max_ratio {}", f32_cell.max_ratio);
+    assert_eq!(f32_cell.buckets.iter().sum::<u64>(), 2);
+
+    let f16_cell = snap
+        .health
+        .iter()
+        .find(|c| c.dtype == DType::F16 && c.strategy == Strategy::DualSelect)
+        .expect("f16/dual tightness cell");
+    assert_eq!(f16_cell.samples, 1);
+    assert_eq!(f16_cell.violations, 0);
+
+    // Nothing above (nor the sampled self-check, if it fired) pushed
+    // an error past its bound.
+    assert_eq!(snap.bound_violations, 0);
+
+    fftd.shutdown();
+    server.shutdown();
+}
