@@ -13,14 +13,15 @@
 use std::hint::black_box;
 use std::time::Duration;
 
-use fmafft::bench_util::{bench, config_from_env, header, JsonReport};
+use fmafft::bench_util::{bench, config_from_env, header, BenchConfig, JsonReport};
 use fmafft::fft::dit::DitPlan;
 use fmafft::fft::radix4::Radix4Plan;
 use fmafft::fft::{
     Algorithm, AnyArena, AnyScratch, DType, Direction, FrameArena, Plan, Planner, PlanSpec,
     Scratch, Strategy, Transform,
 };
-use fmafft::precision::SplitBuf;
+use fmafft::kernel::{simd_available, Kernel, MixedRadixPlan};
+use fmafft::precision::{Real, SplitBuf};
 use fmafft::stream::OlsFilter;
 use fmafft::tune::{tune, MeasureConfig, TuneConfig, TuneOp};
 use fmafft::util::prng::Pcg32;
@@ -30,6 +31,64 @@ fn signal(n: usize, seed: u64) -> SplitBuf<f32> {
     let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
     let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
     SplitBuf::from_f64(&re, &im)
+}
+
+fn signal_t<T: Real>(n: usize, seed: u64) -> SplitBuf<T> {
+    let mut rng = Pcg32::seed(seed);
+    let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+    let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+    SplitBuf::from_f64(&re, &im)
+}
+
+/// One mixed-radix kernel row (explicit dispatch arm), tagged
+/// `kernel=scalar` / `kernel=simd` in `BENCH_fft.json`.  Returns the
+/// mean ns so the caller can print the vector-over-scalar multiplier;
+/// `None` when this host cannot serve the requested arm.
+fn bench_mixed_kernel<T: Real>(
+    json: &mut JsonReport,
+    cfg: &BenchConfig,
+    n: usize,
+    kernel: Kernel,
+    dtype: &str,
+) -> Option<f64> {
+    if kernel == Kernel::Simd && !simd_available::<T>() {
+        println!("mixedradix {dtype} dual n={n} kernel=simd — AVX2+FMA unavailable, skipped");
+        return None;
+    }
+    let plan =
+        MixedRadixPlan::<T>::with_kernel(n, Strategy::DualSelect, Direction::Forward, kernel)
+            .unwrap();
+    let input: SplitBuf<T> = signal_t(n, 21 + n as u64);
+    let mut buf = input.clone();
+    let mut scratch = Scratch::new();
+    let r = bench(
+        &format!("mixedradix {dtype} dual n={n} kernel={}", kernel.name()),
+        cfg,
+        || {
+            buf.re.copy_from_slice(&input.re);
+            buf.im.copy_from_slice(&input.im);
+            plan.execute_frame(&mut buf.re, &mut buf.im, &mut scratch);
+            black_box(&buf.re[0]);
+        },
+    )
+    .tagged(dtype, "dual");
+    println!("{}  ({:.2} Mpt/s)", r.report(), r.throughput(n as f64) / 1e6);
+    json.push_metrics_tags(
+        &r.name,
+        &[
+            ("dtype", dtype),
+            ("strategy", "dual"),
+            ("algorithm", "MixedRadix"),
+            ("kernel", kernel.name()),
+        ],
+        &[
+            ("mean_ns", r.mean_ns),
+            ("median_ns", r.median_ns),
+            ("p99_ns", r.p99_ns),
+            ("per_second", r.per_second()),
+        ],
+    );
+    Some(r.mean_ns)
 }
 
 /// A pristine arena of `frames` random frames.
@@ -226,6 +285,69 @@ fn main() {
                 r.throughput((n * frames) as f64) / 1e6
             );
             json.push_result(&r);
+        }
+    }
+
+    // Mixed-radix kernel plane: the same plan on both dispatch arms
+    // (the arms are bit-identical, so the delta is pure speed), then
+    // composite sizes where the engine replaces the Bluestein detour.
+    header("mixed-radix kernel: dispatch arms and composite sizes");
+    for n in [1024usize, 4096] {
+        for dtype in ["f32", "f64"] {
+            let (scalar, simd) = if dtype == "f32" {
+                (
+                    bench_mixed_kernel::<f32>(&mut json, &cfg, n, Kernel::Scalar, dtype),
+                    bench_mixed_kernel::<f32>(&mut json, &cfg, n, Kernel::Simd, dtype),
+                )
+            } else {
+                (
+                    bench_mixed_kernel::<f64>(&mut json, &cfg, n, Kernel::Scalar, dtype),
+                    bench_mixed_kernel::<f64>(&mut json, &cfg, n, Kernel::Simd, dtype),
+                )
+            };
+            if let (Some(s), Some(v)) = (scalar, simd) {
+                println!("  simd over scalar ({dtype}, n={n}): {:.2}x", s / v);
+            }
+        }
+    }
+    println!();
+    for n in [48usize, 1536] {
+        let mut means = Vec::new();
+        for (algo_tag, spec) in [
+            ("MixedRadix", PlanSpec::new(n).strategy(Strategy::DualSelect).mixed_radix()),
+            ("Bluestein", PlanSpec::new(n).strategy(Strategy::DualSelect).bluestein()),
+        ] {
+            let t = spec.build::<f32>().unwrap();
+            let input = signal(n, 31 + n as u64);
+            let mut buf = input.clone();
+            let mut scratch = Scratch::new();
+            let r = bench(&format!("composite {algo_tag} dual n={n} f32"), &cfg, || {
+                buf.re.copy_from_slice(&input.re);
+                buf.im.copy_from_slice(&input.im);
+                t.execute_frame(&mut buf.re, &mut buf.im, &mut scratch);
+                black_box(&buf.re[0]);
+            })
+            .tagged("f32", "dual");
+            println!("{}  ({:.2} Mpt/s)", r.report(), r.throughput(n as f64) / 1e6);
+            json.push_metrics_tags(
+                &r.name,
+                &[
+                    ("dtype", "f32"),
+                    ("strategy", "dual"),
+                    ("algorithm", algo_tag),
+                    ("kernel", "auto"),
+                ],
+                &[
+                    ("mean_ns", r.mean_ns),
+                    ("median_ns", r.median_ns),
+                    ("p99_ns", r.p99_ns),
+                    ("per_second", r.per_second()),
+                ],
+            );
+            means.push(r.mean_ns);
+        }
+        if let [mixed, blue] = means[..] {
+            println!("  mixed-radix over Bluestein (n={n}): {:.2}x", blue / mixed);
         }
     }
 

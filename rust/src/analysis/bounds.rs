@@ -113,18 +113,88 @@ pub fn serving_bound_from_tmax(tmax: f64, eps: f64, m: u32) -> f64 {
     (m as f64 * (6.0 * (1.0 + tmax) * eps).ln_1p()).exp_m1()
 }
 
+/// Per-output rounding-operation count `C_r` for one mixed-radix pass
+/// of radix `r` — the constant that replaces the radix-2 butterfly's
+/// `6` in the serving-bound recurrence.  `None` for radices the
+/// kernel engine has no butterfly for.
+///
+/// Counts are conservative (each is an upper bound on the roundings
+/// any single output accumulates in one pass):
+///
+/// * radix 2 — the 6-FMA ratio butterfly (the paper's kernel): 6.
+/// * radix 3 — one ratio twiddle multiply (3 roundings, `(1+|t|)`
+///   amplified) feeding a 3-point DFT whose longest chain is
+///   2 adds + 2 FMA: 12 covers twiddle + chain for every output.
+/// * radix 4 — one twiddle multiply plus the two-level even/odd
+///   add tree (the radix-4 plan's own model): 12.
+/// * radix 8 — one twiddle multiply plus two 4-point levels, the
+///   `1/√2` rotation (2 roundings) and the final combine: 18.
+pub fn radix_pass_ops(radix: usize) -> Option<u32> {
+    match radix {
+        2 => Some(6),
+        3 => Some(12),
+        4 => Some(12),
+        8 => Some(18),
+        _ => None,
+    }
+}
+
+/// Serving bound for an explicit mixed-radix pass schedule: each
+/// radix-`r` pass grows relative error by at most
+/// `(1 + C_r·(1 + |t|max)·eps)`, so
+///
+/// ```text
+/// E  ≤  ∏_r (1 + C_r·(1 + |t|max)·eps) − 1
+/// ```
+///
+/// evaluated as `expm1(Σ_r ln1p(C_r·(1+tmax)·eps))` for underflow
+/// safety.  For an all-radix-2 schedule this is *exactly*
+/// [`serving_bound_from_tmax`] with `m = len(radices)` — the kernel
+/// engine's bound degenerates to the classic plan's.  `None` when the
+/// schedule contains a radix without an op count.
+pub fn serving_bound_schedule(radices: &[usize], tmax: f64, eps: f64) -> Option<f64> {
+    let mut acc = 0.0f64;
+    for &r in radices {
+        let ops = radix_pass_ops(r)? as f64;
+        acc += (ops * (1.0 + tmax) * eps).ln_1p();
+    }
+    Some(acc.exp_m1())
+}
+
+/// Serving bound for size `n` given the stored `|t|max` of whatever
+/// plan serves it: the classic radix-2 form for powers of two, the
+/// canonical mixed-radix schedule's per-radix form for composite
+/// `2^a·3^b` sizes, `None` for sizes neither engine serves directly
+/// (Bluestein responses carry no a-priori ratio bound).
+pub fn serving_bound_for_n(n: usize, tmax: f64, eps: f64) -> Option<f64> {
+    if n < 2 {
+        return None;
+    }
+    if n.is_power_of_two() {
+        return Some(serving_bound_from_tmax(tmax, eps, n.trailing_zeros()));
+    }
+    let radices = crate::kernel::plan_radices(n).ok()?;
+    serving_bound_schedule(&radices, tmax, eps)
+}
+
 /// The serving bound for one transform: `|t|max` is taken from the
 /// table as actually *stored* (clamped — for Linzer–Feig/cosine that
 /// is the 1e7 clamp entry, which is the paper's point), `eps` is the
-/// working dtype's unit roundoff.  `None` when no ratio bound applies
-/// (standard butterfly, or a size without a radix-2 decomposition).
+/// working dtype's unit roundoff.  Powers of two use the radix-2
+/// table; composite `2^a·3^b` sizes use the mixed-radix kernel's
+/// tables and per-radix op counts.  `None` when no ratio bound
+/// applies (standard butterfly, or a size with another prime factor).
 pub fn serving_bound(n: usize, strategy: Strategy, eps: f64) -> Option<f64> {
-    if strategy == Strategy::Standard || n < 2 || !n.is_power_of_two() {
+    if strategy == Strategy::Standard || n < 2 {
         return None;
     }
-    let m = n.trailing_zeros();
-    let tmax = ratio_stats(n, strategy).max_clamped;
-    Some(serving_bound_from_tmax(tmax, eps, m))
+    if n.is_power_of_two() {
+        let m = n.trailing_zeros();
+        let tmax = ratio_stats(n, strategy).max_clamped;
+        return Some(serving_bound_from_tmax(tmax, eps, m));
+    }
+    let tmax = crate::kernel::tables_tmax(n, strategy)?;
+    serving_bound_for_n(n, tmax, eps)
 }
 
 /// Absolute L2 quantization noise injected by fixed-point ingest: one
@@ -288,6 +358,48 @@ mod tests {
         // No ratio table, no bound.
         assert_eq!(serving_bound(n, Strategy::Standard, DType::F16.unit_roundoff()), None);
         assert_eq!(serving_bound(100, Strategy::DualSelect, DType::F16.unit_roundoff()), None);
+    }
+
+    #[test]
+    fn schedule_bound_degenerates_to_the_radix2_form() {
+        // An all-radix-2 schedule must reproduce serving_bound_from_tmax
+        // exactly — same ln1p terms, same expm1 fold.
+        for (tmax, eps, m) in [(1.0, F16::EPSILON, 10u32), (163.0, 1e-3, 6), (0.5, 1e-7, 4)] {
+            let radices = vec![2usize; m as usize];
+            let sched = serving_bound_schedule(&radices, tmax, eps).unwrap();
+            let classic = serving_bound_from_tmax(tmax, eps, m);
+            assert_eq!(sched, classic, "tmax={tmax} eps={eps} m={m}");
+        }
+        // Unknown radix: no bound, not a wrong one.
+        assert_eq!(radix_pass_ops(5), None);
+        assert_eq!(serving_bound_schedule(&[2, 5], 1.0, 1e-3), None);
+    }
+
+    #[test]
+    fn composite_sizes_get_finite_bounds() {
+        use crate::fft::DType;
+        let eps = DType::F16.unit_roundoff();
+        for n in [12usize, 48, 96, 144, 1536] {
+            let dual = serving_bound(n, Strategy::DualSelect, eps)
+                .unwrap_or_else(|| panic!("no dual bound at n={n}"));
+            assert!(dual > 0.0 && dual < 0.1, "n={n} dual bound {dual}");
+            // Linzer–Feig tables at composite sizes hit the W^0
+            // singularity clamp, and the bound says so.
+            let lf = serving_bound(n, Strategy::LinzerFeig, eps).unwrap();
+            assert!(lf / dual > 1e6, "n={n} lf={lf} dual={dual}");
+            // Standard butterfly: still no ratio bound.
+            assert_eq!(serving_bound(n, Strategy::Standard, eps), None);
+        }
+        // serving_bound_for_n mirrors the routing: pow2 → radix-2 form,
+        // smooth composite → schedule form, other primes → None.
+        assert_eq!(
+            serving_bound_for_n(1024, 1.0, eps),
+            Some(serving_bound_from_tmax(1.0, eps, 10))
+        );
+        let sched = serving_bound_schedule(&crate::kernel::plan_radices(96).unwrap(), 1.0, eps);
+        assert_eq!(serving_bound_for_n(96, 1.0, eps), sched);
+        assert_eq!(serving_bound_for_n(100, 1.0, eps), None);
+        assert_eq!(serving_bound_for_n(1, 1.0, eps), None);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! error, per strategy × precision × size.
 
 use crate::dft;
-use crate::fft::{Direction, Plan, Strategy};
+use crate::fft::{PlanSpec, Strategy, Transform};
 use crate::precision::{Real, SplitBuf};
 use crate::util::metrics::rel_l2;
 use crate::util::prng::Pcg32;
@@ -36,8 +36,12 @@ pub fn measure<T: Real>(n: usize, strategy: Strategy, seed: u64) -> ErrorMeasure
     let (re, im) = test_signal(n, seed);
     let (want_r, want_i) = dft::naive_dft(&re, &im, false);
 
-    let fwd = Plan::<T>::new(n, strategy, Direction::Forward).expect("plan");
-    let inv = Plan::<T>::new(n, strategy, Direction::Inverse).expect("plan");
+    // Through the facade: powers of two keep the classic pinned plan,
+    // {2,3}-smooth composites run the mixed-radix kernel, everything
+    // else takes Bluestein — so the §V harness measures any size.
+    let spec = PlanSpec::new(n).strategy(strategy);
+    let fwd = spec.build::<T>().expect("plan");
+    let inv = spec.inverse().build::<T>().expect("plan");
 
     let mut buf = SplitBuf::<T>::from_f64(&re, &im);
     let mut scratch = SplitBuf::zeroed(n);

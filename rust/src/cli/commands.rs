@@ -575,8 +575,11 @@ pub fn fft(a: &Args) -> FftResult<()> {
     if a.flag("graph") {
         return fft_graph(a);
     }
+    // Any float size works through the facade: powers of two on the
+    // classic pinned plan, {2,3}-smooth composites on the mixed-radix
+    // kernel, the rest via Bluestein (fixed dtypes stay pow2-only and
+    // surface the builder's typed error).
     let n: usize = a.get_parse("n", 1024usize)?;
-    crate::fft::log2_exact(n)?;
     let strategy: Strategy = a.get_or("strategy", "dual").parse()?;
     // --dtype is the canonical spelling; --precision stays as an alias.
     let dtype: DType = a
@@ -812,7 +815,7 @@ pub fn tune(a: &Args) -> FftResult<()> {
     let outcome = crate::tune::tune(&cfg)?;
     let mut t = Table::new(
         format!("fft tune — host {:016x}", outcome.wisdom.host()),
-        &["op", "key", "dtype", "winner", "block", "median", "cands"],
+        &["op", "key", "dtype", "winner", "kernel", "block", "median", "cands"],
     );
     for r in &outcome.rows {
         t.row(&[
@@ -823,6 +826,7 @@ pub fn tune(a: &Args) -> FftResult<()> {
                 crate::tune::TuneOp::Fft => format!("{} ({:?})", r.strategy, r.algorithm),
                 crate::tune::TuneOp::Ols => r.strategy.to_string(),
             },
+            r.kernel.name().to_string(),
             if r.block_len == 0 { "—".to_string() } else { r.block_len.to_string() },
             format!("{} ns", r.median_ns),
             r.candidates.to_string(),

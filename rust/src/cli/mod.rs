@@ -133,8 +133,15 @@ mod tests {
     }
 
     #[test]
-    fn fft_rejects_bad_size() {
-        assert_eq!(run(["fft".to_string(), "--n".into(), "100".into()]), 1);
+    fn fft_serves_any_float_size_but_fixed_stays_pow2() {
+        // 100 takes Bluestein; 48 = 2^4·3 runs the mixed-radix kernel.
+        assert_eq!(run(["fft".to_string(), "--n".into(), "100".into()]), 0);
+        assert_eq!(run(["fft".to_string(), "--n".into(), "48".into()]), 0);
+        // Fixed dtypes have no composite plan: typed error, exit 1.
+        assert_eq!(
+            run(["fft".to_string(), "--n".into(), "48".into(), "--dtype".into(), "i16".into()]),
+            1
+        );
     }
 
     #[test]

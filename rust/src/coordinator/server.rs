@@ -20,7 +20,6 @@ use std::sync::{mpsc, Arc, Mutex, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::analysis::bounds::serving_bound_from_tmax;
 use crate::analysis::ratio::ratio_stats;
 use crate::fft::{
     AnyArena, AnyArenaPool, AnyPlanner, AnyScratch, AnyTransform, DType, Direction, FftError,
@@ -177,10 +176,14 @@ impl ComputeCtx {
         if let Some(t) = map.get(&strategy) {
             return *t;
         }
-        let t = if strategy == Strategy::Standard || self.n < 2 || !self.n.is_power_of_two() {
+        let t = if strategy == Strategy::Standard || self.n < 2 {
             None
-        } else {
+        } else if self.n.is_power_of_two() {
             Some(ratio_stats(self.n, strategy).max_clamped)
+        } else {
+            // Composite 2^a·3^b sizes are served by the mixed-radix
+            // kernel; its per-pass ratio tables carry the |t|max.
+            crate::kernel::tables_tmax(self.n, strategy)
         };
         if let Some(tmax) = t {
             self.metrics.record_tmax(strategy, tmax);
@@ -257,9 +260,15 @@ impl ComputeCtx {
         }
         match key.op {
             FftOp::MatchedFilter => None,
-            FftOp::Forward | FftOp::Inverse => self.tmax_for(key.strategy).map(|tmax| {
-                serving_bound_from_tmax(tmax, key.dtype.unit_roundoff(), self.n.trailing_zeros())
-            }),
+            FftOp::Forward | FftOp::Inverse => {
+                self.tmax_for(key.strategy).and_then(|tmax| {
+                    crate::analysis::bounds::serving_bound_for_n(
+                        self.n,
+                        tmax,
+                        key.dtype.unit_roundoff(),
+                    )
+                })
+            }
         }
     }
 

@@ -10,9 +10,13 @@
 //! fft.execute_alloc(&mut buf);
 //! assert!((buf.re[0] - 8.0).abs() < 1e-3);
 //!
-//! // Non-power-of-two sizes auto-route to Bluestein instead of erroring.
+//! // Non-power-of-two sizes auto-route instead of erroring:
+//! // {2,3}-smooth composites hit the mixed-radix kernel engine,
+//! // everything else goes through Bluestein.
 //! let odd = PlanSpec::new(12).build::<f64>().unwrap();
 //! assert_eq!(odd.len(), 12);
+//! let prime = PlanSpec::new(101).build::<f64>().unwrap();
+//! assert_eq!(prime.len(), 101);
 //!
 //! // The builder covers direction, algorithm and real input too.
 //! let spec = PlanSpec::new(1024)
@@ -29,6 +33,7 @@
 
 use std::sync::Arc;
 
+use crate::kernel::{Kernel, MixedRadixPlan};
 use crate::precision::Real;
 
 use super::super::bluestein::BluesteinPlan;
@@ -44,14 +49,21 @@ use super::transform::{RealTransform, Transform};
 /// Which FFT organization executes the plan.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Algorithm {
-    /// Pick automatically: Stockham radix-2 for powers of two,
-    /// Bluestein (chirp-Z) for everything else.
+    /// Pick automatically: Stockham radix-2 for powers of two, the
+    /// mixed-radix kernel engine for composite `2^a·3^b` sizes under
+    /// a ratio strategy (and for any {2,3}-smooth size when a kernel
+    /// variant is explicitly requested), Bluestein (chirp-Z) for
+    /// everything else.
     #[default]
     Auto,
     /// Radix-2 Stockham autosort (the tuned hot path).
     Stockham,
     /// Radix-4 Stockham (powers of four, ratio strategies only).
     Radix4,
+    /// Mixed-radix 2/3/4/8 Stockham with runtime SIMD dispatch
+    /// ([`crate::kernel::MixedRadixPlan`]; {2,3}-smooth sizes, ratio
+    /// strategies only).
+    MixedRadix,
     /// In-place Cooley-Tukey DIT with bit reversal (ablation baseline).
     Dit,
     /// Bluestein chirp-Z (any size >= 1).
@@ -66,6 +78,12 @@ pub struct PlanSpec {
     pub strategy: Strategy,
     pub direction: Direction,
     pub algorithm: Algorithm,
+    /// Butterfly kernel variant for algorithms that have more than
+    /// one ([`Algorithm::MixedRadix`], and [`Algorithm::Auto`] when
+    /// it routes there): `Auto` resolves to SIMD where the host
+    /// supports it, `Scalar`/`Simd` pin an arm.  Plans that have only
+    /// scalar kernels ignore it (but it stays part of the cache key).
+    pub kernel: Kernel,
     pub real_input: bool,
     /// Working precision used by [`PlanSpec::build_any`] and the
     /// dtype-erased planner cache.  The statically-typed
@@ -82,6 +100,7 @@ impl PlanSpec {
             strategy: Strategy::DualSelect,
             direction: Direction::Forward,
             algorithm: Algorithm::Auto,
+            kernel: Kernel::Auto,
             real_input: false,
             dtype: DType::F32,
         }
@@ -128,8 +147,19 @@ impl PlanSpec {
         self.algorithm(Algorithm::Dit)
     }
 
+    pub fn mixed_radix(self) -> Self {
+        self.algorithm(Algorithm::MixedRadix)
+    }
+
     pub fn bluestein(self) -> Self {
         self.algorithm(Algorithm::Bluestein)
+    }
+
+    /// Butterfly kernel variant (auto / scalar / simd) for the
+    /// mixed-radix engine.
+    pub fn kernel(mut self, kernel: Kernel) -> Self {
+        self.kernel = kernel;
+        self
     }
 
     /// Treat the input as real samples (in the `re` lane); see
@@ -152,7 +182,27 @@ impl PlanSpec {
         }
         match self.algorithm {
             Algorithm::Auto => {
-                if self.n >= 2 && self.n.is_power_of_two() {
+                let pow2 = self.n >= 2 && self.n.is_power_of_two();
+                let ratio = self.strategy != Strategy::Standard;
+                // Powers of two keep the classic radix-2 plan (its
+                // serving results are pinned bit-for-bit) unless a
+                // kernel variant was explicitly requested; composite
+                // {2,3}-smooth sizes go to the mixed-radix engine
+                // instead of the Bluestein detour; everything else —
+                // other prime factors, or the standard strategy the
+                // kernel engine's ratio tables cannot express — stays
+                // on Bluestein/Stockham as before.
+                if crate::kernel::is_23_smooth(self.n)
+                    && ratio
+                    && (!pow2 || self.kernel != Kernel::Auto)
+                {
+                    Ok(Box::new(MixedRadixPlan::<T>::with_kernel(
+                        self.n,
+                        self.strategy,
+                        self.direction,
+                        self.kernel,
+                    )?))
+                } else if pow2 {
                     Ok(Box::new(Plan::<T>::new(self.n, self.strategy, self.direction)?))
                 } else {
                     Ok(Box::new(BluesteinPlan::<T>::new(
@@ -162,6 +212,12 @@ impl PlanSpec {
                     )?))
                 }
             }
+            Algorithm::MixedRadix => Ok(Box::new(MixedRadixPlan::<T>::with_kernel(
+                self.n,
+                self.strategy,
+                self.direction,
+                self.kernel,
+            )?)),
             Algorithm::Stockham => {
                 Ok(Box::new(Plan::<T>::new(self.n, self.strategy, self.direction)?))
             }
@@ -242,6 +298,85 @@ mod tests {
         let (wr, wi) = crate::dft::naive_dft(&re, &im, false);
         let (gr, gi) = buf.to_f64();
         assert!(rel_l2(&gr, &gi, &wr, &wi) < 1e-10);
+    }
+
+    #[test]
+    fn auto_routes_composite_23_smooth_to_mixed_radix() {
+        // 48 = 2^4·3 used to take the Bluestein detour; now it gets a
+        // direct mixed-radix plan (and the answer still matches DFT).
+        for n in [12usize, 48, 96, 1536] {
+            let t = PlanSpec::new(n).build::<f64>().unwrap();
+            assert!(
+                format!("{t:?}").contains("MixedRadixPlan"),
+                "n={n} routed to {t:?}"
+            );
+            let mut rng = Pcg32::seed(n as u64);
+            let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let mut buf = SplitBuf::from_f64(&re, &im);
+            t.execute_alloc(&mut buf);
+            let (wr, wi) = crate::dft::naive_dft(&re, &im, false);
+            let (gr, gi) = buf.to_f64();
+            assert!(rel_l2(&gr, &gi, &wr, &wi) < 1e-11, "n={n}");
+        }
+        // Powers of two keep the classic pinned plan under Kernel::Auto...
+        let t = PlanSpec::new(64).build::<f64>().unwrap();
+        assert!(format!("{t:?}").contains("Plan"), "{t:?}");
+        assert!(!format!("{t:?}").contains("MixedRadixPlan"), "{t:?}");
+        // ...but an explicit kernel request opts them into the engine.
+        let t = PlanSpec::new(64).kernel(Kernel::Scalar).build::<f64>().unwrap();
+        assert!(format!("{t:?}").contains("MixedRadixPlan"), "{t:?}");
+        // The standard strategy has no ratio tables: composite sizes
+        // stay on Bluestein.
+        let t = PlanSpec::new(48).strategy(Strategy::Standard).build::<f64>().unwrap();
+        assert!(format!("{t:?}").contains("BluesteinPlan"), "{t:?}");
+    }
+
+    #[test]
+    fn explicit_mixed_radix_rejects_what_it_cannot_serve() {
+        assert!(matches!(
+            PlanSpec::new(100).mixed_radix().build::<f64>().unwrap_err(),
+            FftError::InvalidSize { n: 100, .. }
+        ));
+        assert!(matches!(
+            PlanSpec::new(48)
+                .strategy(Strategy::Standard)
+                .mixed_radix()
+                .build::<f64>()
+                .unwrap_err(),
+            FftError::UnsupportedStrategy { .. }
+        ));
+        assert!(PlanSpec::new(48).mixed_radix().build::<f32>().is_ok());
+    }
+
+    #[test]
+    fn kernel_is_part_of_the_cache_key() {
+        use std::collections::HashSet;
+        let mut set = HashSet::new();
+        set.insert(PlanSpec::new(48));
+        set.insert(PlanSpec::new(48).kernel(Kernel::Auto)); // same as default
+        set.insert(PlanSpec::new(48).kernel(Kernel::Scalar));
+        set.insert(PlanSpec::new(48).kernel(Kernel::Simd));
+        assert_eq!(set.len(), 3);
+    }
+
+    #[test]
+    fn mixed_radix_builds_in_every_float_dtype() {
+        for dtype in DType::FLOATS {
+            let t = PlanSpec::new(96).dtype(dtype).build_any().unwrap();
+            assert_eq!(t.dtype(), dtype);
+            assert_eq!(t.len(), 96);
+        }
+        // Fixed dtypes stay on the Stockham-only core: a composite
+        // size is a typed error, never a silent fallback.
+        assert!(matches!(
+            PlanSpec::new(96).dtype(DType::I16).build_any().unwrap_err(),
+            FftError::NonPowerOfTwo { n: 96 }
+        ));
+        assert!(matches!(
+            PlanSpec::new(64).mixed_radix().dtype(DType::I32).build_any().unwrap_err(),
+            FftError::Unsupported(_)
+        ));
     }
 
     #[test]

@@ -1,0 +1,188 @@
+//! Scalar radix-3/4/8 DFT micro-kernels — the formula sheet both
+//! dispatch arms implement *op for op*.
+//!
+//! Bit-identity contract: the AVX2 arm in [`super::simd`] executes,
+//! per lane, exactly the operation sequence written here — every
+//! `mul_add(x, y, acc)` maps to one `vfmadd`, every
+//! `mul_add(-x, y, acc)` to one `vfnmadd`, every `+`/`-`/`*` to the
+//! corresponding vector op, and negation to a sign-bit flip.  Each of
+//! those lane operations rounds identically to its scalar twin under
+//! IEEE-754, and every output element depends only on its own gather
+//! column, so the two arms produce the same bits regardless of loop
+//! shape.  Change an expression here and you must change the SIMD arm
+//! the same way (tests/kernel_plane.rs will catch you if you don't).
+//!
+//! The radix-2 butterfly is *not* redefined here: the mixed-radix
+//! engine calls [`crate::fft::butterfly::ratio`] directly, so a
+//! radix-2-only schedule reproduces the classic Stockham plan bit for
+//! bit.
+
+use crate::precision::Real;
+
+/// √3/2 — the radix-3 rotation constant (nearest f64).
+pub const SQRT3_2: f64 = 0.866_025_403_784_438_6;
+/// 1/√2 — the radix-8 odd-term rotation constant.
+pub const FRAC_1_SQRT_2: f64 = core::f64::consts::FRAC_1_SQRT_2;
+
+/// 3-point DFT of already-twiddled inputs.  `fwd` selects the
+/// e^{∓2πi/3} root to match [`crate::fft::Direction::sign`].
+#[inline(always)]
+pub fn dft3<T: Real>(z0: (T, T), z1: (T, T), z2: (T, T), fwd: bool) -> [(T, T); 3] {
+    let half = T::from_f64(0.5);
+    let c = T::from_f64(SQRT3_2);
+    let sr = z1.0 + z2.0;
+    let si = z1.1 + z2.1;
+    let u0 = (z0.0 + sr, z0.1 + si);
+    let mr = half.mul_add(-sr, z0.0); // z0 - s/2, one rounding
+    let mi = half.mul_add(-si, z0.1);
+    let dr = z1.0 - z2.0;
+    let di = z1.1 - z2.1;
+    // ∓i·(√3/2)·d folded into m: forward subtracts i·c·d, inverse adds.
+    let (u1, u2) = if fwd {
+        ((c.mul_add(di, mr), c.mul_add(-dr, mi)), (c.mul_add(-di, mr), c.mul_add(dr, mi)))
+    } else {
+        ((c.mul_add(-di, mr), c.mul_add(dr, mi)), (c.mul_add(di, mr), c.mul_add(-dr, mi)))
+    };
+    [u0, u1, u2]
+}
+
+/// 4-point DFT of already-twiddled inputs — the even/odd partial-sum
+/// form of [`crate::fft::radix4`], kept verbatim so the mixed-radix
+/// radix-4 pass rounds exactly like the dedicated radix-4 plan.
+#[inline(always)]
+pub fn dft4<T: Real>(z0: (T, T), z1: (T, T), z2: (T, T), z3: (T, T), fwd: bool) -> [(T, T); 4] {
+    let e_r = z0.0 + z2.0;
+    let e_i = z0.1 + z2.1;
+    let f_r = z0.0 - z2.0;
+    let f_i = z0.1 - z2.1;
+    let g_r = z1.0 + z3.0;
+    let g_i = z1.1 + z3.1;
+    let h_r = z1.0 - z3.0;
+    let h_i = z1.1 - z3.1;
+    // ∓i·h: forward (h_i, -h_r), inverse (-h_i, h_r).
+    let (jh_r, jh_i) = if fwd { (h_i, -h_r) } else { (-h_i, h_r) };
+    [
+        (e_r + g_r, e_i + g_i),
+        (f_r + jh_r, f_i + jh_i),
+        (e_r - g_r, e_i - g_i),
+        (f_r - jh_r, f_i - jh_i),
+    ]
+}
+
+/// 8-point DFT of already-twiddled inputs: two 4-point DFTs (even and
+/// odd columns) glued by the ω_8^m rotations, whose only irrational
+/// constant is 1/√2.
+#[inline(always)]
+pub fn dft8<T: Real>(z: [(T, T); 8], fwd: bool) -> [(T, T); 8] {
+    let c = T::from_f64(FRAC_1_SQRT_2);
+    let e = dft4(z[0], z[2], z[4], z[6], fwd);
+    let o = dft4(z[1], z[3], z[5], z[7], fwd);
+    // ω_8^m · o_m for m = 1..3 (m = 0 is the identity).
+    let (r1, i1) = o[1];
+    let (r2, i2) = o[2];
+    let (r3, i3) = o[3];
+    let (o1, o2, o3) = if fwd {
+        (
+            (c * (r1 + i1), c * (i1 - r1)),
+            (i2, -r2),
+            (c * (i3 - r3), -(c * (r3 + i3))),
+        )
+    } else {
+        (
+            (c * (r1 - i1), c * (i1 + r1)),
+            (-i2, r2),
+            (-(c * (r3 + i3)), c * (r3 - i3)),
+        )
+    };
+    let rot = [o[0], o1, o2, o3];
+    let mut out = [(T::zero(), T::zero()); 8];
+    for m in 0..4 {
+        out[m] = (e[m].0 + rot[m].0, e[m].1 + rot[m].1);
+        out[m + 4] = (e[m].0 - rot[m].0, e[m].1 - rot[m].1);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    fn oracle(z: &[(f64, f64)], sign: f64) -> Vec<(f64, f64)> {
+        let r = z.len();
+        (0..r)
+            .map(|m| {
+                let mut acc = (0.0, 0.0);
+                for (q, &(re, im)) in z.iter().enumerate() {
+                    let th = sign * 2.0 * core::f64::consts::PI * (q * m) as f64 / r as f64;
+                    let (c, s) = (th.cos(), th.sin());
+                    acc.0 += re * c - im * s;
+                    acc.1 += re * s + im * c;
+                }
+                acc
+            })
+            .collect()
+    }
+
+    fn rand_z(rng: &mut Pcg32, r: usize) -> Vec<(f64, f64)> {
+        (0..r).map(|_| (rng.gaussian(), rng.gaussian())).collect()
+    }
+
+    #[test]
+    fn dft3_matches_oracle_both_directions() {
+        let mut rng = Pcg32::seed(41);
+        for _ in 0..200 {
+            let z = rand_z(&mut rng, 3);
+            for (fwd, sign) in [(true, -1.0), (false, 1.0)] {
+                let got = dft3(z[0], z[1], z[2], fwd);
+                for (g, w) in got.iter().zip(oracle(&z, sign)) {
+                    assert!((g.0 - w.0).abs() < 1e-13 && (g.1 - w.1).abs() < 1e-13);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dft4_matches_oracle_both_directions() {
+        let mut rng = Pcg32::seed(42);
+        for _ in 0..200 {
+            let z = rand_z(&mut rng, 4);
+            for (fwd, sign) in [(true, -1.0), (false, 1.0)] {
+                let got = dft4(z[0], z[1], z[2], z[3], fwd);
+                for (g, w) in got.iter().zip(oracle(&z, sign)) {
+                    assert!((g.0 - w.0).abs() < 1e-13 && (g.1 - w.1).abs() < 1e-13);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dft8_matches_oracle_both_directions() {
+        let mut rng = Pcg32::seed(43);
+        for _ in 0..200 {
+            let z = rand_z(&mut rng, 8);
+            for (fwd, sign) in [(true, -1.0), (false, 1.0)] {
+                let arr: [(f64, f64); 8] = core::array::from_fn(|i| z[i]);
+                let got = dft8(arr, fwd);
+                for (g, w) in got.iter().zip(oracle(&z, sign)) {
+                    assert!((g.0 - w.0).abs() < 1e-12 && (g.1 - w.1).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kernels_hold_in_half_precision() {
+        use crate::precision::F16;
+        let mut rng = Pcg32::seed(44);
+        let z: Vec<(F16, F16)> = (0..8)
+            .map(|_| (F16::from_f64(rng.range(-1.0, 1.0)), F16::from_f64(rng.range(-1.0, 1.0))))
+            .collect();
+        let zf: Vec<(f64, f64)> = z.iter().map(|&(r, i)| (r.to_f64(), i.to_f64())).collect();
+        let got = dft8(core::array::from_fn(|i| z[i]), true);
+        for (g, w) in got.iter().zip(oracle(&zf, -1.0)) {
+            assert!((g.0.to_f64() - w.0).abs() < 0.02, "{g:?} vs {w:?}");
+            assert!((g.1.to_f64() - w.1).abs() < 0.02, "{g:?} vs {w:?}");
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! `fft::kernel` — the SIMD mixed-radix Autosort engine.
+//!
+//! The paper's dual-select strategy is a *table* property ("only the
+//! precomputed twiddle table changes"), so nothing about it is
+//! radix-2-specific or scalar-specific.  This plane takes that
+//! seriously in both directions at once:
+//!
+//! * **Mixed radix** — [`MixedRadixPlan`] runs a Stockham/Autosort
+//!   recurrence over radix-2/3/4/8 passes, serving every composite
+//!   `n = 2^a · 3^b` directly (48, 96, 1536, ...) instead of taking
+//!   the 3–5× Bluestein detour.  Every twiddle multiply, at every
+//!   radix, is stored in the paper's bounded-ratio `(m1, m2, t, sel)`
+//!   form; `|t| ≤ 1` remains the numerical contract
+//!   ([`twiddles::tables_tmax`] is what `analysis::bounds` prices).
+//! * **Runtime dispatch** — each plan freezes a dispatch [`Arm`] at
+//!   build time: the AVX2/FMA arm ([`simd`]) when the host and element
+//!   type support it, the portable scalar arm ([`passes`]) otherwise.
+//!   The two arms execute the same per-element operation sequence and
+//!   are bit identical (tests/kernel_plane.rs proves it); dispatch is
+//!   therefore invisible to every numerical guarantee.
+//!
+//! Layer map: [`schedule`] factors n into passes, [`twiddles`] builds
+//! the per-pass ratio tables, [`butterflies`] holds the scalar
+//! radix-3/4/8 micro-kernels, [`passes`]/[`simd`] are the two dispatch
+//! arms, and [`plan`] wraps it all in a [`crate::fft::api::Transform`].
+//! Routing lives in `fft::api::spec` (composite sizes reach this plane
+//! through `Algorithm::Auto`), tuning in `tune::search` (kernel choice
+//! is part of the wisdom candidate space), and the dispatch counters
+//! below surface through `fft::obs`.
+
+use core::sync::atomic::{AtomicU64, Ordering};
+
+use crate::fft::{FftError, FftResult};
+
+pub mod butterflies;
+pub mod passes;
+pub mod plan;
+pub mod schedule;
+pub mod simd;
+pub mod twiddles;
+
+pub use plan::MixedRadixPlan;
+pub use schedule::{factor23, is_23_smooth, plan_radices, SUPPORTED_RADICES};
+pub use simd::simd_available;
+pub use twiddles::{build_passes, tables_tmax, PassTables};
+
+/// Which butterfly kernel a plan should use — the tunable axis wisdom
+/// records per (n, op, dtype, host).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Kernel {
+    /// Resolve at plan build: SIMD when the host supports it.
+    #[default]
+    Auto,
+    /// Force the portable scalar arm.
+    Scalar,
+    /// Require the AVX2/FMA arm; plan construction fails where the
+    /// host (or element type) cannot serve it.
+    Simd,
+}
+
+impl Kernel {
+    pub const ALL: [Kernel; 3] = [Kernel::Auto, Kernel::Scalar, Kernel::Simd];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kernel::Auto => "auto",
+            Kernel::Scalar => "scalar",
+            Kernel::Simd => "simd",
+        }
+    }
+}
+
+impl core::fmt::Display for Kernel {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl core::str::FromStr for Kernel {
+    type Err = FftError;
+    fn from_str(s: &str) -> FftResult<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(Kernel::Auto),
+            "scalar" | "portable" => Ok(Kernel::Scalar),
+            "simd" | "vector" => Ok(Kernel::Simd),
+            _ => Err(FftError::InvalidArgument(format!(
+                "unknown kernel '{s}' (expected auto, scalar or simd)"
+            ))),
+        }
+    }
+}
+
+/// The dispatch arm a plan resolved to at build time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Arm {
+    /// Portable scalar loops ([`passes`]) — valid on every target.
+    Portable,
+    /// AVX2/FMA vector loops ([`simd`]) — x86_64 with runtime-detected
+    /// feature support, f32/f64 only.
+    Simd,
+}
+
+impl Arm {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Arm::Portable => "portable",
+            Arm::Simd => "simd",
+        }
+    }
+}
+
+/// Environment override for kernel dispatch, read at plan build time:
+/// `scalar`/`portable` caps every plan to the portable arm (the CI
+/// fallback run and the dispatch test use this), `simd`/`vector`
+/// upgrades `Auto` requests to hard SIMD requests, `auto` and unknown
+/// values change nothing.
+pub const KERNEL_ENV: &str = "FMAFFT_KERNEL";
+
+/// The parsed [`KERNEL_ENV`] override, if one is set and recognized.
+pub fn kernel_env_override() -> Option<Kernel> {
+    let v = std::env::var(KERNEL_ENV).ok()?;
+    v.parse::<Kernel>().ok()
+}
+
+static PORTABLE_DISPATCHES: AtomicU64 = AtomicU64::new(0);
+static SIMD_DISPATCHES: AtomicU64 = AtomicU64::new(0);
+
+/// Record one frame executed on `arm` (called by
+/// [`MixedRadixPlan::execute_in`]; surfaced via `fft::obs`).
+pub(crate) fn note_dispatch(arm: Arm) {
+    match arm {
+        Arm::Portable => PORTABLE_DISPATCHES.fetch_add(1, Ordering::Relaxed),
+        Arm::Simd => SIMD_DISPATCHES.fetch_add(1, Ordering::Relaxed),
+    };
+}
+
+/// Process-lifetime mixed-radix dispatch counters, by arm.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DispatchCounts {
+    /// Frames executed on the portable scalar arm.
+    pub scalar: u64,
+    /// Frames executed on the AVX2/FMA arm.
+    pub simd: u64,
+}
+
+impl DispatchCounts {
+    pub fn total(&self) -> u64 {
+        self.scalar + self.simd
+    }
+}
+
+/// Snapshot the per-arm dispatch counters (monotonic, process-wide).
+pub fn dispatch_counts() -> DispatchCounts {
+    DispatchCounts {
+        scalar: PORTABLE_DISPATCHES.load(Ordering::Relaxed),
+        simd: SIMD_DISPATCHES.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_names_roundtrip() {
+        for k in Kernel::ALL {
+            assert_eq!(k.name().parse::<Kernel>().unwrap(), k);
+            assert_eq!(format!("{k}"), k.name());
+        }
+        assert_eq!("portable".parse::<Kernel>().unwrap(), Kernel::Scalar);
+        assert_eq!("vector".parse::<Kernel>().unwrap(), Kernel::Simd);
+        assert!(matches!(
+            "avx512".parse::<Kernel>(),
+            Err(FftError::InvalidArgument(_))
+        ));
+    }
+
+    #[test]
+    fn dispatch_counters_are_monotonic() {
+        let before = dispatch_counts();
+        note_dispatch(Arm::Portable);
+        note_dispatch(Arm::Simd);
+        let after = dispatch_counts();
+        assert!(after.scalar >= before.scalar + 1);
+        assert!(after.simd >= before.simd + 1);
+        assert!(after.total() >= before.total() + 2);
+    }
+
+    #[test]
+    fn arm_names_are_stable() {
+        // These strings are metric labels; changing them breaks
+        // dashboards.
+        assert_eq!(Arm::Portable.name(), "portable");
+        assert_eq!(Arm::Simd.name(), "simd");
+    }
+}

@@ -1,0 +1,352 @@
+//! Portable (scalar) mixed-radix Stockham passes.
+//!
+//! One pass of radix `r` at stride `s` views the state as `l = n/(r·s)`
+//! blocks: element `q` of block `(k, j)` is gathered from
+//! `x[k·s + j + q·(n/r)]`, twiddled by `W_n^{q·j·l}` (in bounded-ratio
+//! form, [`super::twiddles`]), pushed through the `r`-point DFT
+//! ([`super::butterflies`]), and scattered to `y[r·k·s + m·s + j]` —
+//! the autosort interleave, so no bit-reversal ever happens.  For
+//! radix 2 this is *exactly* the classic plan's pass
+//! ([`crate::fft::stockham::run_pass`], same `ratio` kernel, same
+//! trivial fast path), which is what makes a radix-2-only schedule bit
+//! identical to [`crate::fft::Plan`].
+//!
+//! This module is the *portable dispatch arm*: plain indexed loops,
+//! no intrinsics, valid on every target.  [`super::simd`] implements
+//! the same passes with AVX2/FMA lanes and defers to the per-element
+//! helpers here for loop remainders; both arms execute the same
+//! per-element operation sequence, so their outputs are bit identical
+//! (see tests/kernel_plane.rs).
+
+use crate::fft::butterfly::{ratio, ratio_twiddle_mul};
+use crate::precision::Real;
+
+use super::butterflies::{dft3, dft4, dft8};
+use super::twiddles::PassTables;
+
+/// Execute one pass of `pass.radix` from `x` planes into `y` planes
+/// (all length `n`) using the portable scalar loops.
+pub fn run_pass<T: Real>(
+    pass: &PassTables<T>,
+    fwd: bool,
+    xre: &[T],
+    xim: &[T],
+    yre: &mut [T],
+    yim: &mut [T],
+) {
+    match pass.radix {
+        2 => pass2(pass, xre, xim, yre, yim),
+        3 => pass3(pass, fwd, xre, xim, yre, yim),
+        4 => pass4(pass, fwd, xre, xim, yre, yim),
+        8 => pass8(pass, fwd, xre, xim, yre, yim),
+        r => unreachable!("unsupported radix {r} escaped schedule validation"),
+    }
+}
+
+/// Radix-2 pass — the classic plan's pass body, verbatim: trivial
+/// tables degenerate to add/sub, everything else runs the 6-FMA
+/// `ratio` butterfly over slice windows.  (Direction lives entirely in
+/// the table for radix 2, hence no `fwd` argument.)
+fn pass2<T: Real>(pass: &PassTables<T>, xre: &[T], xim: &[T], yre: &mut [T], yim: &mut [T]) {
+    let n = xre.len();
+    let s = pass.s;
+    let l = n / (2 * s);
+    debug_assert_eq!(n % (2 * s), 0);
+    let (are, bre) = xre.split_at(n / 2);
+    let (aim, bim) = xim.split_at(n / 2);
+    if pass.trivial {
+        for k in 0..l {
+            let i = k * s;
+            let o = 2 * k * s;
+            for j in 0..s {
+                let (ar, ai, br, bi) = (are[i + j], aim[i + j], bre[i + j], bim[i + j]);
+                yre[o + j] = ar + br;
+                yim[o + j] = ai + bi;
+                yre[o + s + j] = ar - br;
+                yim[o + s + j] = ai - bi;
+            }
+        }
+    } else {
+        let tab = &pass.tables[0];
+        for k in 0..l {
+            let base_in = k * s;
+            let base_out = 2 * k * s;
+            let ar = &are[base_in..base_in + s];
+            let ai = &aim[base_in..base_in + s];
+            let br = &bre[base_in..base_in + s];
+            let bi = &bim[base_in..base_in + s];
+            let (yar, ybr) = yre[base_out..base_out + 2 * s].split_at_mut(s);
+            let (yai, ybi) = yim[base_out..base_out + 2 * s].split_at_mut(s);
+            for j in 0..s {
+                let (a_r, a_i, b_r, b_i) = ratio(
+                    ar[j], ai[j], br[j], bi[j],
+                    tab.m1[j], tab.m2[j], tab.t[j], tab.sel[j],
+                );
+                yar[j] = a_r;
+                yai[j] = a_i;
+                ybr[j] = b_r;
+                ybi[j] = b_i;
+            }
+        }
+    }
+}
+
+fn pass3<T: Real>(
+    pass: &PassTables<T>,
+    fwd: bool,
+    xre: &[T],
+    xim: &[T],
+    yre: &mut [T],
+    yim: &mut [T],
+) {
+    let n = xre.len();
+    let s = pass.s;
+    let l = n / (3 * s);
+    let seg = n / 3;
+    debug_assert_eq!(n % (3 * s), 0);
+    if pass.trivial {
+        for k in 0..l {
+            for j in 0..s {
+                let i0 = k * s + j;
+                let u = dft3(
+                    (xre[i0], xim[i0]),
+                    (xre[i0 + seg], xim[i0 + seg]),
+                    (xre[i0 + 2 * seg], xim[i0 + 2 * seg]),
+                    fwd,
+                );
+                scatter(yre, yim, 3 * k * s + j, s, &u);
+            }
+        }
+    } else {
+        let (t1, t2) = (&pass.tables[0], &pass.tables[1]);
+        for k in 0..l {
+            for j in 0..s {
+                let i0 = k * s + j;
+                let z1 = ratio_twiddle_mul(
+                    xre[i0 + seg], xim[i0 + seg],
+                    t1.m1[j], t1.m2[j], t1.t[j], t1.sel[j],
+                );
+                let z2 = ratio_twiddle_mul(
+                    xre[i0 + 2 * seg], xim[i0 + 2 * seg],
+                    t2.m1[j], t2.m2[j], t2.t[j], t2.sel[j],
+                );
+                let u = dft3((xre[i0], xim[i0]), z1, z2, fwd);
+                scatter(yre, yim, 3 * k * s + j, s, &u);
+            }
+        }
+    }
+}
+
+fn pass4<T: Real>(
+    pass: &PassTables<T>,
+    fwd: bool,
+    xre: &[T],
+    xim: &[T],
+    yre: &mut [T],
+    yim: &mut [T],
+) {
+    let n = xre.len();
+    let s = pass.s;
+    let l = n / (4 * s);
+    let seg = n / 4;
+    debug_assert_eq!(n % (4 * s), 0);
+    if pass.trivial {
+        for k in 0..l {
+            for j in 0..s {
+                let i0 = k * s + j;
+                let u = dft4(
+                    (xre[i0], xim[i0]),
+                    (xre[i0 + seg], xim[i0 + seg]),
+                    (xre[i0 + 2 * seg], xim[i0 + 2 * seg]),
+                    (xre[i0 + 3 * seg], xim[i0 + 3 * seg]),
+                    fwd,
+                );
+                scatter(yre, yim, 4 * k * s + j, s, &u);
+            }
+        }
+    } else {
+        let (t1, t2, t3) = (&pass.tables[0], &pass.tables[1], &pass.tables[2]);
+        for k in 0..l {
+            for j in 0..s {
+                let i0 = k * s + j;
+                let z1 = ratio_twiddle_mul(
+                    xre[i0 + seg], xim[i0 + seg],
+                    t1.m1[j], t1.m2[j], t1.t[j], t1.sel[j],
+                );
+                let z2 = ratio_twiddle_mul(
+                    xre[i0 + 2 * seg], xim[i0 + 2 * seg],
+                    t2.m1[j], t2.m2[j], t2.t[j], t2.sel[j],
+                );
+                let z3 = ratio_twiddle_mul(
+                    xre[i0 + 3 * seg], xim[i0 + 3 * seg],
+                    t3.m1[j], t3.m2[j], t3.t[j], t3.sel[j],
+                );
+                let u = dft4((xre[i0], xim[i0]), z1, z2, z3, fwd);
+                scatter(yre, yim, 4 * k * s + j, s, &u);
+            }
+        }
+    }
+}
+
+fn pass8<T: Real>(
+    pass: &PassTables<T>,
+    fwd: bool,
+    xre: &[T],
+    xim: &[T],
+    yre: &mut [T],
+    yim: &mut [T],
+) {
+    let n = xre.len();
+    let s = pass.s;
+    let l = n / (8 * s);
+    let seg = n / 8;
+    debug_assert_eq!(n % (8 * s), 0);
+    if pass.trivial {
+        for k in 0..l {
+            for j in 0..s {
+                let i0 = k * s + j;
+                let z: [(T, T); 8] =
+                    core::array::from_fn(|q| (xre[i0 + q * seg], xim[i0 + q * seg]));
+                let u = dft8(z, fwd);
+                scatter(yre, yim, 8 * k * s + j, s, &u);
+            }
+        }
+    } else {
+        for k in 0..l {
+            for j in 0..s {
+                let i0 = k * s + j;
+                let z: [(T, T); 8] = core::array::from_fn(|q| {
+                    if q == 0 {
+                        (xre[i0], xim[i0])
+                    } else {
+                        let tab = &pass.tables[q - 1];
+                        ratio_twiddle_mul(
+                            xre[i0 + q * seg], xim[i0 + q * seg],
+                            tab.m1[j], tab.m2[j], tab.t[j], tab.sel[j],
+                        )
+                    }
+                });
+                let u = dft8(z, fwd);
+                scatter(yre, yim, 8 * k * s + j, s, &u);
+            }
+        }
+    }
+}
+
+/// Scatter `u[m]` to `y[base + m·s]` — the autosort interleave.
+#[inline(always)]
+fn scatter<T: Real, const R: usize>(yre: &mut [T], yim: &mut [T], base: usize, s: usize, u: &[(T, T); R]) {
+    for (m, &(ur, ui)) in u.iter().enumerate() {
+        yre[base + m * s] = ur;
+        yim[base + m * s] = ui;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::{Direction, Strategy};
+    use crate::util::prng::Pcg32;
+
+    /// Run a whole schedule through `run_pass` ping-pong (test-local
+    /// driver; the real one lives in [`super::super::plan`]).
+    fn run_schedule(
+        n: usize,
+        radices: &[usize],
+        strategy: Strategy,
+        dir: Direction,
+        re: &[f64],
+        im: &[f64],
+    ) -> (Vec<f64>, Vec<f64>) {
+        let passes = crate::kernel::twiddles::build_passes::<f64>(n, radices, dir, strategy);
+        let fwd = dir == Direction::Forward;
+        let mut a = (re.to_vec(), im.to_vec());
+        let mut b = (vec![0.0; n], vec![0.0; n]);
+        for pass in &passes {
+            run_pass(pass, fwd, &a.0, &a.1, &mut b.0, &mut b.1);
+            core::mem::swap(&mut a, &mut b);
+        }
+        if dir == Direction::Inverse {
+            for x in a.0.iter_mut().chain(a.1.iter_mut()) {
+                *x /= n as f64;
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn every_radix_order_matches_the_dft_oracle() {
+        // The Stockham recurrence is order-free: any permutation of
+        // the same radices computes the same DFT.
+        let mut rng = Pcg32::seed(21);
+        let cases: &[(usize, &[usize])] = &[
+            (6, &[3, 2]),
+            (6, &[2, 3]),
+            (24, &[3, 8]),
+            (24, &[8, 3]),
+            (24, &[2, 3, 4]),
+            (48, &[3, 4, 4]),
+            (96, &[3, 8, 4]),
+            (96, &[4, 8, 3]),
+            (1536, &[3, 8, 8, 8]),
+        ];
+        for &(n, radices) in cases {
+            let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let (wr, wi) = crate::dft::naive_dft(&re, &im, false);
+            let (gr, gi) = run_schedule(n, radices, Strategy::DualSelect, Direction::Forward, &re, &im);
+            let err = crate::util::metrics::rel_l2(&gr, &gi, &wr, &wi);
+            assert!(err < 1e-12, "n={n} radices={radices:?} err={err:.3e}");
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrips_through_any_schedule() {
+        let mut rng = Pcg32::seed(22);
+        let n = 144usize; // 2^4 · 3^2
+        let radices = [3, 3, 4, 4];
+        let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let (fr, fi) = run_schedule(n, &radices, Strategy::DualSelect, Direction::Forward, &re, &im);
+        let (gr, gi) = run_schedule(n, &radices, Strategy::DualSelect, Direction::Inverse, &fr, &fi);
+        assert!(crate::util::metrics::rel_l2(&gr, &gi, &re, &im) < 1e-12);
+    }
+
+    #[test]
+    fn radix2_pass_is_bit_identical_to_the_classic_plan_pass() {
+        use crate::fft::plan::{PassKind, Plan};
+        let n = 128usize;
+        let mut rng = Pcg32::seed(23);
+        let plan = Plan::<f32>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+        for (p, table) in plan.passes.iter().enumerate() {
+            let PassKind::Ratio(_) = &table.kind else {
+                panic!("ratio strategies build ratio passes")
+            };
+            let pass = crate::kernel::twiddles::PassTables::<f32>::build(
+                n, 2, table.s, Direction::Forward, Strategy::DualSelect,
+            );
+            assert_eq!(pass.trivial, table.trivial, "p={p}");
+            let xre: Vec<f32> = (0..n).map(|_| rng.gaussian() as f32).collect();
+            let xim: Vec<f32> = (0..n).map(|_| rng.gaussian() as f32).collect();
+            let (mut yr0, mut yi0) = (vec![0.0f32; n], vec![0.0f32; n]);
+            let (mut yr1, mut yi1) = (vec![0.0f32; n], vec![0.0f32; n]);
+            crate::fft::stockham::run_pass(table, &xre, &xim, &mut yr0, &mut yi0);
+            run_pass(&pass, true, &xre, &xim, &mut yr1, &mut yi1);
+            assert_eq!(yr0, yr1, "re plane diverged at pass {p}");
+            assert_eq!(yi0, yi1, "im plane diverged at pass {p}");
+        }
+    }
+
+    #[test]
+    fn clamped_baselines_run_but_carry_clamp_damage() {
+        let mut rng = Pcg32::seed(24);
+        let n = 48usize;
+        let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let (wr, wi) = crate::dft::naive_dft(&re, &im, false);
+        let (gr, gi) = run_schedule(n, &[3, 4, 4], Strategy::LinzerFeig, Direction::Forward, &re, &im);
+        let err = crate::util::metrics::rel_l2(&gr, &gi, &wr, &wi);
+        assert!(err < 5e-6, "lf err {err:.3e}"); // finite, but clamp-limited
+        assert!(err > 1e-12, "clamped W^0 must show up in f64");
+    }
+}

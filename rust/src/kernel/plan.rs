@@ -1,0 +1,411 @@
+//! [`MixedRadixPlan`] — the planned, executable face of the
+//! mixed-radix engine, implementing [`Transform`] so the serving
+//! plane, pipelines and benches drive it like every other plan.
+//!
+//! Construction factors `n` into the canonical radix schedule
+//! ([`super::schedule`]), builds the bounded-ratio twiddle tables per
+//! pass ([`super::twiddles`]), and resolves the dispatch arm *once*:
+//! the requested [`Kernel`] (plus the `FMAFFT_KERNEL` env override)
+//! against what the host actually supports.  Execution then ping-pongs
+//! frame ↔ scratch through the passes with zero per-call allocation,
+//! exactly like the classic radix-2 plan.
+
+use crate::fft::api::batch::Scratch;
+use crate::fft::api::Transform;
+use crate::fft::{Direction, FftError, FftResult, Strategy};
+use crate::precision::Real;
+
+use super::passes;
+use super::schedule::{plan_radices, validate_radices};
+use super::simd;
+use super::twiddles::{build_passes, PassTables};
+use super::{kernel_env_override, note_dispatch, Arm, Kernel};
+
+/// A planned mixed-radix Stockham transform for composite
+/// `n = 2^a · 3^b`, with the dispatch arm (portable scalar vs.
+/// AVX2/FMA) frozen at build time.
+#[derive(Clone, Debug)]
+pub struct MixedRadixPlan<T: Real> {
+    pub n: usize,
+    pub strategy: Strategy,
+    pub direction: Direction,
+    /// Per-pass butterfly radices, in execution order.
+    pub radices: Vec<usize>,
+    passes: Vec<PassTables<T>>,
+    kernel: Kernel,
+    arm: Arm,
+}
+
+impl<T: Real> MixedRadixPlan<T> {
+    /// Plan with the canonical radix schedule and automatic kernel
+    /// dispatch (SIMD when the host supports it).
+    pub fn new(n: usize, strategy: Strategy, direction: Direction) -> FftResult<Self> {
+        Self::with_kernel(n, strategy, direction, Kernel::Auto)
+    }
+
+    /// Plan with the canonical radix schedule and an explicit kernel
+    /// request.  [`Kernel::Simd`] fails with [`FftError::Unsupported`]
+    /// on hosts (or element types) the SIMD arm cannot serve.
+    pub fn with_kernel(
+        n: usize,
+        strategy: Strategy,
+        direction: Direction,
+        kernel: Kernel,
+    ) -> FftResult<Self> {
+        let radices = plan_radices(n)?;
+        Self::with_radices(n, &radices, strategy, direction, kernel)
+    }
+
+    /// Plan with an explicit radix schedule (must multiply to `n`).
+    /// A `[2, 2, ...]` schedule reproduces the classic radix-2 plan
+    /// bit for bit — the ablation hook tests/kernel_plane.rs leans on.
+    pub fn with_radices(
+        n: usize,
+        radices: &[usize],
+        strategy: Strategy,
+        direction: Direction,
+        kernel: Kernel,
+    ) -> FftResult<Self> {
+        if strategy == Strategy::Standard {
+            return Err(FftError::UnsupportedStrategy {
+                strategy,
+                reason: "mixed-radix kernel stores twiddles in ratio form; \
+                         use lf, cos or dual",
+            });
+        }
+        validate_radices(n, radices)?;
+        let arm = resolve_arm::<T>(kernel)?;
+        let passes = build_passes::<T>(n, radices, direction, strategy);
+        Ok(MixedRadixPlan {
+            n,
+            strategy,
+            direction,
+            radices: radices.to_vec(),
+            passes,
+            kernel,
+            arm,
+        })
+    }
+
+    /// The kernel variant that was *requested* at build time.
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+
+    /// The dispatch arm that was *resolved* at build time.
+    pub fn arm(&self) -> Arm {
+        self.arm
+    }
+
+    /// True when frames execute on the AVX2/FMA arm.
+    pub fn uses_simd(&self) -> bool {
+        self.arm == Arm::Simd
+    }
+
+    pub fn num_passes(&self) -> usize {
+        self.passes.len()
+    }
+
+    /// Max |ratio| across every twiddle table, as stored (the paper's
+    /// Theorem 1 quantity: ≤ 1 for dual-select at every radix).
+    pub fn max_ratio(&self) -> f64 {
+        let mut worst = 0.0f64;
+        for pass in &self.passes {
+            for tab in &pass.tables {
+                for &t in &tab.t {
+                    worst = worst.max(t.to_f64().abs());
+                }
+            }
+        }
+        worst
+    }
+
+    /// Bytes held by the precomputed twiddle tables.
+    pub fn table_bytes(&self) -> usize {
+        self.passes.iter().map(|p| p.table_bytes()).sum()
+    }
+
+    /// Full transform over borrowed planar slices, ping-ponging with
+    /// the caller's scratch planes; result lands in `re`/`im`, with
+    /// the 1/n fold applied for inverse plans.  Mirrors
+    /// [`crate::fft::stockham::execute_in`].
+    pub fn execute_in(&self, re: &mut [T], im: &mut [T], sre: &mut [T], sim: &mut [T]) {
+        let n = self.n;
+        assert_eq!(re.len(), n, "buffer length != plan size");
+        assert_eq!(im.len(), n, "buffer length != plan size");
+        assert_eq!(sre.len(), n, "scratch length != plan size");
+        assert_eq!(sim.len(), n, "scratch length != plan size");
+
+        note_dispatch(self.arm);
+        let fwd = self.direction == Direction::Forward;
+        let mut src_in_frame = self.passes.len() % 2 == 0;
+        if !src_in_frame {
+            sre.copy_from_slice(re);
+            sim.copy_from_slice(im);
+        }
+        for pass in &self.passes {
+            if src_in_frame {
+                self.run_one(pass, fwd, re, im, sre, sim);
+            } else {
+                self.run_one(pass, fwd, sre, sim, re, im);
+            }
+            src_in_frame = !src_in_frame;
+        }
+        debug_assert!(src_in_frame, "result must end in the frame");
+
+        if self.direction == Direction::Inverse {
+            let inv_n = T::from_f64(1.0 / n as f64);
+            for x in re.iter_mut() {
+                *x = *x * inv_n;
+            }
+            for x in im.iter_mut() {
+                *x = *x * inv_n;
+            }
+        }
+    }
+
+    #[inline]
+    fn run_one(
+        &self,
+        pass: &PassTables<T>,
+        fwd: bool,
+        xre: &[T],
+        xim: &[T],
+        yre: &mut [T],
+        yim: &mut [T],
+    ) {
+        match self.arm {
+            Arm::Portable => passes::run_pass(pass, fwd, xre, xim, yre, yim),
+            Arm::Simd => simd::run_pass_simd(pass, fwd, xre, xim, yre, yim),
+        }
+    }
+}
+
+/// Resolve a kernel request to a dispatch arm for element type `T`,
+/// honoring the `FMAFFT_KERNEL` environment override (which caps
+/// `Auto`/`Simd` requests down to the portable arm when set to
+/// `scalar`, and upgrades `Auto` to a hard SIMD request when set to
+/// `simd`).
+fn resolve_arm<T: Real>(kernel: Kernel) -> FftResult<Arm> {
+    let effective = match kernel_env_override() {
+        Some(Kernel::Scalar) => Kernel::Scalar,
+        Some(Kernel::Simd) if kernel == Kernel::Auto => Kernel::Simd,
+        _ => kernel,
+    };
+    match effective {
+        Kernel::Scalar => Ok(Arm::Portable),
+        Kernel::Simd => {
+            if simd::simd_available::<T>() {
+                Ok(Arm::Simd)
+            } else {
+                Err(FftError::Unsupported(
+                    "SIMD kernel requested but AVX2+FMA is unavailable on this host \
+                     (or the element type has no vector arm)",
+                ))
+            }
+        }
+        Kernel::Auto => {
+            if simd::simd_available::<T>() {
+                Ok(Arm::Simd)
+            } else {
+                Ok(Arm::Portable)
+            }
+        }
+    }
+}
+
+impl<T: Real> Transform<T> for MixedRadixPlan<T> {
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn strategy(&self) -> Strategy {
+        self.strategy
+    }
+    fn direction(&self) -> Direction {
+        self.direction
+    }
+    fn execute_frame(&self, re: &mut [T], im: &mut [T], scratch: &mut Scratch<T>) {
+        let mut work = scratch.take(self.n);
+        self.execute_in(re, im, &mut work.re, &mut work.im);
+        scratch.put(work);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dft;
+    use crate::precision::{Bf16, SplitBuf, F16};
+    use crate::util::metrics::rel_l2;
+    use crate::util::prng::Pcg32;
+
+    fn random_signal(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = Pcg32::seed(seed);
+        (
+            (0..n).map(|_| rng.gaussian()).collect(),
+            (0..n).map(|_| rng.gaussian()).collect(),
+        )
+    }
+
+    fn run<T: Real>(
+        plan: &MixedRadixPlan<T>,
+        re: &[f64],
+        im: &[f64],
+    ) -> (Vec<f64>, Vec<f64>) {
+        let mut buf = SplitBuf::<T>::from_f64(re, im);
+        plan.execute_alloc(&mut buf);
+        buf.to_f64()
+    }
+
+    #[test]
+    fn composite_sizes_match_dft_oracle_f64() {
+        for n in [2usize, 6, 12, 16, 27, 48, 64, 96, 144, 768, 1536] {
+            let (re, im) = random_signal(n, n as u64);
+            let (wr, wi) = dft::naive_dft(&re, &im, false);
+            for strategy in [Strategy::DualSelect, Strategy::LinzerFeig, Strategy::Cosine] {
+                let plan =
+                    MixedRadixPlan::<f64>::new(n, strategy, Direction::Forward).unwrap();
+                let (gr, gi) = run(&plan, &re, &im);
+                let err = rel_l2(&gr, &gi, &wr, &wi);
+                let tol = match strategy {
+                    Strategy::DualSelect => 1e-12,
+                    _ => 5e-6, // clamp damage, as in the radix-2 plan
+                };
+                assert!(err < tol, "n={n} {strategy:?} err={err:.3e}");
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrips_composite_sizes() {
+        for n in [6usize, 48, 96, 1536] {
+            let (re, im) = random_signal(n, 7 + n as u64);
+            let fwd = MixedRadixPlan::<f64>::new(n, Strategy::DualSelect, Direction::Forward)
+                .unwrap();
+            let inv = MixedRadixPlan::<f64>::new(n, Strategy::DualSelect, Direction::Inverse)
+                .unwrap();
+            let (fr, fi) = run(&fwd, &re, &im);
+            let (gr, gi) = run(&inv, &fr, &fi);
+            assert!(rel_l2(&gr, &gi, &re, &im) < 1e-12, "n={n}");
+        }
+    }
+
+    #[test]
+    fn f32_roundtrip_error_matches_paper_scale() {
+        let n = 1536;
+        let (re, im) = random_signal(n, 42);
+        let fwd =
+            MixedRadixPlan::<f32>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let inv =
+            MixedRadixPlan::<f32>::new(n, Strategy::DualSelect, Direction::Inverse).unwrap();
+        let (fr, fi) = run(&fwd, &re, &im);
+        let (gr, gi) = run(&inv, &fr, &fi);
+        assert!(rel_l2(&gr, &gi, &re, &im) < 1e-6);
+    }
+
+    #[test]
+    fn radix2_schedule_is_bit_identical_to_classic_plan() {
+        // Same pass structure + same ratio tables + same butterfly
+        // ops = same bits, on either dispatch arm.
+        let n = 64usize;
+        let radices = vec![2usize; 6];
+        let (re, im) = random_signal(n, 5);
+        for kernel in [Kernel::Scalar, Kernel::Auto] {
+            let kplan = MixedRadixPlan::<f32>::with_radices(
+                n, &radices, Strategy::DualSelect, Direction::Forward, kernel,
+            )
+            .unwrap();
+            let cplan =
+                crate::fft::Plan::<f32>::new(n, Strategy::DualSelect, Direction::Forward)
+                    .unwrap();
+            let mut kb = SplitBuf::<f32>::from_f64(&re, &im);
+            let mut cb = kb.clone();
+            kplan.execute_alloc(&mut kb);
+            cplan.execute_alloc(&mut cb);
+            assert_eq!(kb, cb, "kernel={kernel:?} arm={:?}", kplan.arm());
+        }
+    }
+
+    #[test]
+    fn standard_strategy_is_rejected() {
+        let err = MixedRadixPlan::<f64>::new(48, Strategy::Standard, Direction::Forward)
+            .unwrap_err();
+        assert!(matches!(err, FftError::UnsupportedStrategy { .. }));
+    }
+
+    #[test]
+    fn forced_simd_errors_for_soft_floats() {
+        let res = MixedRadixPlan::<F16>::with_kernel(
+            48, Strategy::DualSelect, Direction::Forward, Kernel::Simd,
+        );
+        if kernel_env_override() == Some(Kernel::Scalar) {
+            // The CI fallback run (FMAFFT_KERNEL=portable) caps every
+            // request before SIMD support is ever consulted.
+            assert_eq!(res.unwrap().arm(), Arm::Portable);
+        } else {
+            assert!(matches!(res.unwrap_err(), FftError::Unsupported(_)));
+        }
+        // Auto quietly takes the portable arm instead.
+        let plan = MixedRadixPlan::<F16>::new(48, Strategy::DualSelect, Direction::Forward)
+            .unwrap();
+        assert_eq!(plan.arm(), Arm::Portable);
+    }
+
+    #[test]
+    fn soft_floats_transform_on_the_portable_arm() {
+        let n = 96;
+        let (re, im) = random_signal(n, 11);
+        let (wr, wi) = dft::naive_dft(&re, &im, false);
+        let p16 =
+            MixedRadixPlan::<F16>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let (gr, gi) = run(&p16, &re, &im);
+        assert!(rel_l2(&gr, &gi, &wr, &wi) < 0.05, "f16 err");
+        let pbf =
+            MixedRadixPlan::<Bf16>::new(n, Strategy::DualSelect, Direction::Forward).unwrap();
+        let (gr, gi) = run(&pbf, &re, &im);
+        assert!(rel_l2(&gr, &gi, &wr, &wi) < 0.2, "bf16 err");
+    }
+
+    #[test]
+    fn theorem_one_bound_survives_the_kernel() {
+        for n in [6usize, 48, 96, 1536] {
+            let plan =
+                MixedRadixPlan::<f64>::new(n, Strategy::DualSelect, Direction::Forward)
+                    .unwrap();
+            assert!(plan.max_ratio() <= 1.0 + 1e-15, "n={n}");
+            assert!(plan.table_bytes() > 0);
+        }
+        let lf = MixedRadixPlan::<f64>::new(48, Strategy::LinzerFeig, Direction::Forward)
+            .unwrap();
+        assert!(lf.max_ratio() > 1e6, "clamped LF table must stay honest");
+    }
+
+    #[test]
+    fn scratch_stops_allocating_after_warmup() {
+        use crate::fft::api::batch::FrameArena;
+        let plan =
+            MixedRadixPlan::<f64>::new(96, Strategy::DualSelect, Direction::Forward).unwrap();
+        let mut scratch = Scratch::new();
+        let mut arena = FrameArena::<f64>::new(96);
+        for _ in 0..4 {
+            arena.push_zeroed();
+        }
+        plan.execute_many(arena.view_mut(), &mut scratch);
+        let warm = scratch.misses();
+        plan.execute_many(arena.view_mut(), &mut scratch);
+        assert_eq!(scratch.misses(), warm, "allocated after warmup");
+    }
+
+    #[test]
+    fn dispatch_counters_tick_per_frame() {
+        let plan =
+            MixedRadixPlan::<f64>::new(48, Strategy::DualSelect, Direction::Forward).unwrap();
+        let before = super::super::dispatch_counts();
+        let mut buf = SplitBuf::<f64>::zeroed(48);
+        plan.execute_alloc(&mut buf);
+        plan.execute_alloc(&mut buf);
+        let after = super::super::dispatch_counts();
+        let ticks = (after.scalar + after.simd) - (before.scalar + before.simd);
+        assert!(ticks >= 2, "expected >= 2 dispatch ticks, saw {ticks}");
+    }
+}

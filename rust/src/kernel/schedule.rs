@@ -1,0 +1,186 @@
+//! Radix schedules: factor a {2,3}-smooth size into the per-pass
+//! radices the mixed-radix engine executes.
+//!
+//! The canonical schedule puts the radix-3 passes first (they run
+//! while the twiddle stride `s` is still small, where every radix is
+//! equally scalar-bound) and then covers the power-of-two part with
+//! the largest butterflies the remaining exponent admits — radix-8
+//! greedily, radix-4 for the leftovers, radix-2 only when the
+//! exponent is odd and too small for anything better.  Fewer, fatter
+//! passes mean fewer sweeps over the frame, which is where the
+//! vectorized kernels earn their multiplier.
+//!
+//! Any ordering of the same radices computes the same DFT (the
+//! Stockham recurrence is order-free; `tests` below pin that), so the
+//! schedule is purely a performance choice — `analysis::bounds` takes
+//! the schedule, not the order, when it prices a plan.
+
+use crate::fft::{FftError, FftResult};
+
+/// The radices the engine has butterfly kernels for.
+pub const SUPPORTED_RADICES: [usize; 4] = [2, 3, 4, 8];
+
+/// Factor `n` as `2^a · 3^b`, or `None` when another prime divides it.
+pub fn factor23(n: usize) -> Option<(u32, u32)> {
+    if n == 0 {
+        return None;
+    }
+    let mut m = n;
+    let mut a = 0u32;
+    let mut b = 0u32;
+    while m % 2 == 0 {
+        m /= 2;
+        a += 1;
+    }
+    while m % 3 == 0 {
+        m /= 3;
+        b += 1;
+    }
+    (m == 1).then_some((a, b))
+}
+
+/// True when `n ≥ 2` has no prime factor other than 2 and 3 — the
+/// sizes the mixed-radix plan serves.
+pub fn is_23_smooth(n: usize) -> bool {
+    n >= 2 && factor23(n).is_some()
+}
+
+/// The canonical pass schedule for a {2,3}-smooth `n ≥ 2`: radix-3
+/// passes first, then the 2-exponent covered greedily by radix-8 with
+/// radix-4/2 absorbing the remainder (an exponent of 4 splits as
+/// 4·4 rather than 8·2 — two quad butterflies beat an 8 plus the
+/// weakest pass).
+pub fn plan_radices(n: usize) -> FftResult<Vec<usize>> {
+    if n < 2 {
+        return Err(FftError::InvalidSize {
+            n,
+            reason: "mixed-radix FFT size must be >= 2",
+        });
+    }
+    let (mut a, b) = factor23(n).ok_or(FftError::InvalidSize {
+        n,
+        reason: "mixed-radix FFT size must factor as 2^a * 3^b",
+    })?;
+    let mut out = Vec::with_capacity((a + b) as usize);
+    for _ in 0..b {
+        out.push(3);
+    }
+    while a >= 3 {
+        if a == 4 {
+            out.extend([4, 4]);
+            a = 0;
+        } else {
+            out.push(8);
+            a -= 3;
+        }
+    }
+    if a == 2 {
+        out.push(4);
+    } else if a == 1 {
+        out.push(2);
+    }
+    Ok(out)
+}
+
+/// A pure radix-2 schedule for power-of-two `n` — the ablation
+/// schedule whose pass structure (and therefore whose every rounding)
+/// matches the classic radix-2 Stockham plan bit for bit.
+pub fn radix2_radices(n: usize) -> FftResult<Vec<usize>> {
+    let m = crate::fft::log2_exact(n)?;
+    Ok(vec![2; m as usize])
+}
+
+/// Validate an explicit schedule against `n`: every radix supported,
+/// product exactly `n`.
+pub fn validate_radices(n: usize, radices: &[usize]) -> FftResult<()> {
+    if radices.is_empty() {
+        return Err(FftError::InvalidSize {
+            n,
+            reason: "mixed-radix schedule must have at least one pass",
+        });
+    }
+    let mut prod = 1usize;
+    for &r in radices {
+        if !SUPPORTED_RADICES.contains(&r) {
+            return Err(FftError::InvalidSize {
+                n,
+                reason: "mixed-radix schedule may only use radices 2, 3, 4, 8",
+            });
+        }
+        prod = prod.checked_mul(r).ok_or(FftError::InvalidSize {
+            n,
+            reason: "mixed-radix schedule product overflows",
+        })?;
+    }
+    if prod != n {
+        return Err(FftError::InvalidSize {
+            n,
+            reason: "mixed-radix schedule product != n",
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factor23_accepts_smooth_rejects_rest() {
+        assert_eq!(factor23(1), Some((0, 0)));
+        assert_eq!(factor23(48), Some((4, 1)));
+        assert_eq!(factor23(1536), Some((9, 1)));
+        assert_eq!(factor23(27), Some((0, 3)));
+        assert_eq!(factor23(0), None);
+        assert_eq!(factor23(100), None); // 2^2 · 5^2
+        assert_eq!(factor23(7), None);
+        assert!(is_23_smooth(96));
+        assert!(!is_23_smooth(1)); // below the minimum transform size
+        assert!(!is_23_smooth(60));
+    }
+
+    #[test]
+    fn canonical_schedule_covers_the_exponents() {
+        for n in [2usize, 4, 6, 8, 12, 16, 24, 27, 48, 96, 256, 768, 1024, 1536] {
+            let radices = plan_radices(n).unwrap();
+            validate_radices(n, &radices).unwrap();
+            let (_, b) = factor23(n).unwrap();
+            // Every 3 is at the front of the schedule.
+            assert!(radices.iter().take(b as usize).all(|&r| r == 3), "n={n}");
+        }
+        // a=4 splits as 4·4, not 8·2.
+        assert_eq!(plan_radices(16).unwrap(), vec![4, 4]);
+        assert_eq!(plan_radices(48).unwrap(), vec![3, 4, 4]);
+        // a=10 = 3+3+4.
+        assert_eq!(plan_radices(1024).unwrap(), vec![8, 8, 4, 4]);
+        // a=9 is all eights.
+        assert_eq!(plan_radices(1536).unwrap(), vec![3, 8, 8, 8]);
+        // Radix-2 appears only for odd exponents < 3.
+        assert_eq!(plan_radices(2).unwrap(), vec![2]);
+        assert_eq!(plan_radices(6).unwrap(), vec![3, 2]);
+        assert!(plan_radices(96).unwrap().iter().all(|&r| r != 2));
+    }
+
+    #[test]
+    fn schedule_rejects_non_smooth_and_tiny() {
+        assert!(plan_radices(0).is_err());
+        assert!(plan_radices(1).is_err());
+        assert!(plan_radices(100).is_err());
+        assert!(plan_radices(7).is_err());
+    }
+
+    #[test]
+    fn radix2_schedule_matches_log2() {
+        assert_eq!(radix2_radices(8).unwrap(), vec![2, 2, 2]);
+        assert!(radix2_radices(12).is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_schedules() {
+        assert!(validate_radices(24, &[3, 8]).is_ok());
+        assert!(validate_radices(24, &[8, 3]).is_ok());
+        assert!(validate_radices(24, &[]).is_err());
+        assert!(validate_radices(24, &[3, 4]).is_err()); // product 12
+        assert!(validate_radices(24, &[24]).is_err()); // unsupported radix
+    }
+}

@@ -1,0 +1,713 @@
+//! AVX2/FMA dispatch arm of the mixed-radix engine.
+//!
+//! Bit-identity is the design constraint, not an accident: every
+//! vector instruction here is the 8-lane (f32) or 4-lane (f64) image
+//! of one scalar operation in [`super::passes`] /
+//! [`super::butterflies`] / [`crate::fft::butterfly`]:
+//!
+//! * `x.mul_add(y, acc)`  → `vfmadd`   (one rounding either way)
+//! * `x.mul_add(-y, acc)` → `vfnmadd`  (`x·(-y)+a ≡ -(x·y)+a` exactly)
+//! * `+` / `-` / `*`      → `vadd` / `vsub` / `vmul`
+//! * unary `-`            → sign-bit XOR (exact, no rounding)
+//! * the dual-select operand swap → `vblendv` on a mask computed from
+//!   the 0/1 `selm` plane (`selm[j] > 0.5`), which picks per lane
+//!   exactly what the scalar `if sel { .. }` picks per element
+//!
+//! Each output element of a pass depends only on its own gather
+//! column, so vectorizing the `j` loop changes evaluation *order* but
+//! not any dataflow, and lane-for-lane identical ops give bit-for-bit
+//! identical planes.  `tests/kernel_plane.rs` enforces this against
+//! the portable arm on every supported size and dtype.
+//!
+//! Only the stride loop (`j`) is vectorized; blocks with `s` smaller
+//! than the lane width (in practice only the first, twiddle-free
+//! passes of a plan) and loop remainders run the scalar per-element
+//! code verbatim.
+//!
+//! On non-x86_64 targets [`simd_available`] is `false` and the
+//! dispatcher never routes here; the entry point is compiled out to
+//! an `unreachable!`.
+
+use core::any::TypeId;
+
+use crate::precision::Real;
+
+use super::twiddles::PassTables;
+
+/// True when the SIMD arm can serve element type `T` on this host:
+/// x86_64 with AVX2 and FMA detected at runtime, `T` ∈ {f32, f64}.
+/// (f16/bf16 ingest reaches the kernel through the dtype-erased f32
+/// arm of `AnyTransform`, so the soft formats never dispatch here.)
+pub fn simd_available<T: Real>() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        let ty = TypeId::of::<T>();
+        (ty == TypeId::of::<f32>() || ty == TypeId::of::<f64>())
+            && std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Run one pass on the SIMD arm.  Panics if [`simd_available::<T>`]
+/// is false — the plan constructor only selects this arm after
+/// checking, so hitting the panic means a dispatch bug, not a user
+/// error.
+#[cfg_attr(not(target_arch = "x86_64"), allow(unused_variables))]
+pub fn run_pass_simd<T: Real>(
+    pass: &PassTables<T>,
+    fwd: bool,
+    xre: &[T],
+    xim: &[T],
+    yre: &mut [T],
+    yim: &mut [T],
+) {
+    assert!(
+        simd_available::<T>(),
+        "SIMD arm dispatched without AVX2+FMA or for a soft float type"
+    );
+    #[cfg(target_arch = "x86_64")]
+    {
+        let ty = TypeId::of::<T>();
+        if ty == TypeId::of::<f32>() {
+            // SAFETY: TypeId equality proves T == f32, so every cast
+            // below is an identity cast; `run_pass` requires AVX2+FMA,
+            // established by the `simd_available` assert above.
+            unsafe {
+                x86::f32_lanes::run_pass(
+                    cast_pass::<T, f32>(pass),
+                    fwd,
+                    cast_slice::<T, f32>(xre),
+                    cast_slice::<T, f32>(xim),
+                    cast_slice_mut::<T, f32>(yre),
+                    cast_slice_mut::<T, f32>(yim),
+                )
+            }
+        } else {
+            // SAFETY: as above with T == f64 (`simd_available` admits
+            // only f32 and f64, and the f32 case was handled).
+            unsafe {
+                x86::f64_lanes::run_pass(
+                    cast_pass::<T, f64>(pass),
+                    fwd,
+                    cast_slice::<T, f64>(xre),
+                    cast_slice::<T, f64>(xim),
+                    cast_slice_mut::<T, f64>(yre),
+                    cast_slice_mut::<T, f64>(yim),
+                )
+            }
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        unreachable!("simd_available is false off x86_64; dispatch must pick the portable arm")
+    }
+}
+
+/// Identity-cast a slice once `TypeId` has proven `T == U`.
+#[cfg(target_arch = "x86_64")]
+fn cast_slice<T: 'static, U: 'static>(x: &[T]) -> &[U] {
+    assert_eq!(TypeId::of::<T>(), TypeId::of::<U>());
+    // SAFETY: T and U are the same type (checked above), so layout,
+    // validity and lifetime are trivially preserved.
+    unsafe { core::slice::from_raw_parts(x.as_ptr() as *const U, x.len()) }
+}
+
+/// Identity-cast a mutable slice once `TypeId` has proven `T == U`.
+#[cfg(target_arch = "x86_64")]
+fn cast_slice_mut<T: 'static, U: 'static>(x: &mut [T]) -> &mut [U] {
+    assert_eq!(TypeId::of::<T>(), TypeId::of::<U>());
+    // SAFETY: identity cast, as in `cast_slice`; the &mut borrow is
+    // moved, never duplicated.
+    unsafe { core::slice::from_raw_parts_mut(x.as_mut_ptr() as *mut U, x.len()) }
+}
+
+/// Identity-cast a pass-table reference once `TypeId` has proven
+/// `T == U`.
+#[cfg(target_arch = "x86_64")]
+fn cast_pass<T: Real, U: Real>(p: &PassTables<T>) -> &PassTables<U> {
+    assert_eq!(TypeId::of::<T>(), TypeId::of::<U>());
+    // SAFETY: PassTables<T> and PassTables<U> are the same type when
+    // T == U (checked above).
+    unsafe { &*(p as *const PassTables<T> as *const PassTables<U>) }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    macro_rules! lanes_impl {
+        (
+            $modname:ident, $elem:ty, $vec:ty, $lanes:expr,
+            $loadu:ident, $storeu:ident, $set1:ident,
+            $add:ident, $sub:ident, $mul:ident, $xor:ident,
+            $fmadd:ident, $fnmadd:ident, $blendv:ident, $cmp:ident
+        ) => {
+            pub mod $modname {
+                use core::arch::x86_64::*;
+
+                use crate::fft::butterfly::{ratio, ratio_twiddle_mul};
+                use crate::kernel::butterflies::{dft3, dft4, dft8, FRAC_1_SQRT_2, SQRT3_2};
+                use crate::kernel::twiddles::PassTables;
+
+                const LANES: usize = $lanes;
+
+                #[inline(always)]
+                unsafe fn ld(x: &[$elem], i: usize) -> $vec {
+                    debug_assert!(i + LANES <= x.len());
+                    // SAFETY: caller keeps i + LANES <= x.len().
+                    unsafe { $loadu(x.as_ptr().add(i)) }
+                }
+
+                #[inline(always)]
+                unsafe fn st(y: &mut [$elem], i: usize, v: $vec) {
+                    debug_assert!(i + LANES <= y.len());
+                    // SAFETY: caller keeps i + LANES <= y.len().
+                    unsafe { $storeu(y.as_mut_ptr().add(i), v) }
+                }
+
+                /// Sign-bit flip — the vector image of scalar unary `-`.
+                #[inline(always)]
+                unsafe fn neg(x: $vec) -> $vec {
+                    unsafe { $xor(x, $set1(-0.0)) }
+                }
+
+                /// Lane image of [`crate::fft::butterfly::ratio`]:
+                /// blendv swap, 2 FMA shears, 4 FMA combines.
+                #[inline(always)]
+                #[allow(clippy::too_many_arguments)]
+                unsafe fn bf_ratio(
+                    ar: $vec, ai: $vec, br: $vec, bi: $vec,
+                    m1: $vec, m2: $vec, t: $vec, mask: $vec,
+                ) -> ($vec, $vec, $vec, $vec) {
+                    unsafe {
+                        let u = $blendv(bi, br, mask); // sel ? br : bi
+                        let v = $blendv(br, bi, mask); // sel ? bi : br
+                        let s1 = $fnmadd(t, v, u); // t.mul_add(-v, u)
+                        let s2 = $fmadd(t, u, v); //  t.mul_add(u, v)
+                        (
+                            $fmadd(m1, s1, ar),
+                            $fmadd(m2, s2, ai),
+                            $fnmadd(m1, s1, ar), // (-m1).mul_add(s1, ar)
+                            $fnmadd(m2, s2, ai),
+                        )
+                    }
+                }
+
+                /// Lane image of [`crate::fft::butterfly::ratio_twiddle_mul`].
+                #[inline(always)]
+                unsafe fn tw_mul(
+                    zr: $vec, zi: $vec, m1: $vec, m2: $vec, t: $vec, mask: $vec,
+                ) -> ($vec, $vec) {
+                    unsafe {
+                        let u = $blendv(zi, zr, mask);
+                        let v = $blendv(zr, zi, mask);
+                        ($mul(m1, $fnmadd(t, v, u)), $mul(m2, $fmadd(t, u, v)))
+                    }
+                }
+
+                /// Lane image of [`crate::kernel::butterflies::dft3`].
+                #[inline(always)]
+                unsafe fn dft3v(
+                    z0: ($vec, $vec), z1: ($vec, $vec), z2: ($vec, $vec), fwd: bool,
+                ) -> [($vec, $vec); 3] {
+                    unsafe {
+                        let half = $set1(0.5);
+                        let c = $set1(SQRT3_2 as $elem);
+                        let sr = $add(z1.0, z2.0);
+                        let si = $add(z1.1, z2.1);
+                        let u0 = ($add(z0.0, sr), $add(z0.1, si));
+                        let mr = $fnmadd(half, sr, z0.0); // half.mul_add(-sr, z0r)
+                        let mi = $fnmadd(half, si, z0.1);
+                        let dr = $sub(z1.0, z2.0);
+                        let di = $sub(z1.1, z2.1);
+                        let (u1, u2) = if fwd {
+                            (
+                                ($fmadd(c, di, mr), $fnmadd(c, dr, mi)),
+                                ($fnmadd(c, di, mr), $fmadd(c, dr, mi)),
+                            )
+                        } else {
+                            (
+                                ($fnmadd(c, di, mr), $fmadd(c, dr, mi)),
+                                ($fmadd(c, di, mr), $fnmadd(c, dr, mi)),
+                            )
+                        };
+                        [u0, u1, u2]
+                    }
+                }
+
+                /// Lane image of [`crate::kernel::butterflies::dft4`].
+                #[inline(always)]
+                unsafe fn dft4v(
+                    z0: ($vec, $vec), z1: ($vec, $vec), z2: ($vec, $vec), z3: ($vec, $vec),
+                    fwd: bool,
+                ) -> [($vec, $vec); 4] {
+                    unsafe {
+                        let e_r = $add(z0.0, z2.0);
+                        let e_i = $add(z0.1, z2.1);
+                        let f_r = $sub(z0.0, z2.0);
+                        let f_i = $sub(z0.1, z2.1);
+                        let g_r = $add(z1.0, z3.0);
+                        let g_i = $add(z1.1, z3.1);
+                        let h_r = $sub(z1.0, z3.0);
+                        let h_i = $sub(z1.1, z3.1);
+                        let (jh_r, jh_i) = if fwd { (h_i, neg(h_r)) } else { (neg(h_i), h_r) };
+                        [
+                            ($add(e_r, g_r), $add(e_i, g_i)),
+                            ($add(f_r, jh_r), $add(f_i, jh_i)),
+                            ($sub(e_r, g_r), $sub(e_i, g_i)),
+                            ($sub(f_r, jh_r), $sub(f_i, jh_i)),
+                        ]
+                    }
+                }
+
+                /// Lane image of [`crate::kernel::butterflies::dft8`].
+                #[inline(always)]
+                unsafe fn dft8v(z: [($vec, $vec); 8], fwd: bool) -> [($vec, $vec); 8] {
+                    unsafe {
+                        let c = $set1(FRAC_1_SQRT_2 as $elem);
+                        let e = dft4v(z[0], z[2], z[4], z[6], fwd);
+                        let o = dft4v(z[1], z[3], z[5], z[7], fwd);
+                        let (r1, i1) = o[1];
+                        let (r2, i2) = o[2];
+                        let (r3, i3) = o[3];
+                        let (o1, o2, o3) = if fwd {
+                            (
+                                ($mul(c, $add(r1, i1)), $mul(c, $sub(i1, r1))),
+                                (i2, neg(r2)),
+                                ($mul(c, $sub(i3, r3)), neg($mul(c, $add(r3, i3)))),
+                            )
+                        } else {
+                            (
+                                ($mul(c, $sub(r1, i1)), $mul(c, $add(i1, r1))),
+                                (neg(i2), r2),
+                                (neg($mul(c, $add(r3, i3))), $mul(c, $sub(r3, i3))),
+                            )
+                        };
+                        let rot = [o[0], o1, o2, o3];
+                        let mut out = [z[0]; 8];
+                        for m in 0..4 {
+                            out[m] = ($add(e[m].0, rot[m].0), $add(e[m].1, rot[m].1));
+                            out[m + 4] = ($sub(e[m].0, rot[m].0), $sub(e[m].1, rot[m].1));
+                        }
+                        out
+                    }
+                }
+
+                /// One pass on this lane width.
+                ///
+                /// # Safety
+                /// AVX2 and FMA must be available on the executing CPU
+                /// (checked by the dispatcher); slices must all have
+                /// length `n` divisible by `pass.radix · pass.s`.
+                #[target_feature(enable = "avx2,fma")]
+                pub unsafe fn run_pass(
+                    pass: &PassTables<$elem>,
+                    fwd: bool,
+                    xre: &[$elem],
+                    xim: &[$elem],
+                    yre: &mut [$elem],
+                    yim: &mut [$elem],
+                ) {
+                    // SAFETY: the per-radix bodies inherit this
+                    // function's feature context and slice contract.
+                    unsafe {
+                        match pass.radix {
+                            2 => pass2(pass, xre, xim, yre, yim),
+                            3 => pass3(pass, fwd, xre, xim, yre, yim),
+                            4 => pass4(pass, fwd, xre, xim, yre, yim),
+                            8 => pass8(pass, fwd, xre, xim, yre, yim),
+                            r => unreachable!("unsupported radix {r}"),
+                        }
+                    }
+                }
+
+                #[target_feature(enable = "avx2,fma")]
+                unsafe fn pass2(
+                    pass: &PassTables<$elem>,
+                    xre: &[$elem],
+                    xim: &[$elem],
+                    yre: &mut [$elem],
+                    yim: &mut [$elem],
+                ) {
+                    let n = xre.len();
+                    let s = pass.s;
+                    let l = n / (2 * s);
+                    let (are, bre) = xre.split_at(n / 2);
+                    let (aim, bim) = xim.split_at(n / 2);
+                    if pass.trivial {
+                        for k in 0..l {
+                            let i = k * s;
+                            let o = 2 * k * s;
+                            let mut j = 0usize;
+                            while j + LANES <= s {
+                                // SAFETY: j + LANES <= s keeps every
+                                // offset in bounds.
+                                unsafe {
+                                    let ar = ld(are, i + j);
+                                    let ai = ld(aim, i + j);
+                                    let br = ld(bre, i + j);
+                                    let bi = ld(bim, i + j);
+                                    st(yre, o + j, $add(ar, br));
+                                    st(yim, o + j, $add(ai, bi));
+                                    st(yre, o + s + j, $sub(ar, br));
+                                    st(yim, o + s + j, $sub(ai, bi));
+                                }
+                                j += LANES;
+                            }
+                            while j < s {
+                                let (ar, ai, br, bi) =
+                                    (are[i + j], aim[i + j], bre[i + j], bim[i + j]);
+                                yre[o + j] = ar + br;
+                                yim[o + j] = ai + bi;
+                                yre[o + s + j] = ar - br;
+                                yim[o + s + j] = ai - bi;
+                                j += 1;
+                            }
+                        }
+                    } else {
+                        let tab = &pass.tables[0];
+                        let selm = &pass.selm[0];
+                        for k in 0..l {
+                            let i = k * s;
+                            let o = 2 * k * s;
+                            let mut j = 0usize;
+                            while j + LANES <= s {
+                                // SAFETY: j + LANES <= s; table planes
+                                // have length s by construction.
+                                unsafe {
+                                    let half = $set1(0.5);
+                                    let mask = $cmp::<_CMP_GT_OQ>(ld(selm, j), half);
+                                    let (a_r, a_i, b_r, b_i) = bf_ratio(
+                                        ld(are, i + j), ld(aim, i + j),
+                                        ld(bre, i + j), ld(bim, i + j),
+                                        ld(&tab.m1, j), ld(&tab.m2, j), ld(&tab.t, j), mask,
+                                    );
+                                    st(yre, o + j, a_r);
+                                    st(yim, o + j, a_i);
+                                    st(yre, o + s + j, b_r);
+                                    st(yim, o + s + j, b_i);
+                                }
+                                j += LANES;
+                            }
+                            while j < s {
+                                let (a_r, a_i, b_r, b_i) = ratio(
+                                    are[i + j], aim[i + j], bre[i + j], bim[i + j],
+                                    tab.m1[j], tab.m2[j], tab.t[j], tab.sel[j],
+                                );
+                                yre[o + j] = a_r;
+                                yim[o + j] = a_i;
+                                yre[o + s + j] = b_r;
+                                yim[o + s + j] = b_i;
+                                j += 1;
+                            }
+                        }
+                    }
+                }
+
+                #[target_feature(enable = "avx2,fma")]
+                unsafe fn pass3(
+                    pass: &PassTables<$elem>,
+                    fwd: bool,
+                    xre: &[$elem],
+                    xim: &[$elem],
+                    yre: &mut [$elem],
+                    yim: &mut [$elem],
+                ) {
+                    let n = xre.len();
+                    let s = pass.s;
+                    let l = n / (3 * s);
+                    let seg = n / 3;
+                    for k in 0..l {
+                        let i0 = k * s;
+                        let o = 3 * k * s;
+                        let mut j = 0usize;
+                        while j + LANES <= s {
+                            // SAFETY: j + LANES <= s keeps gather and
+                            // scatter offsets in bounds.
+                            unsafe {
+                                let z0 = (ld(xre, i0 + j), ld(xim, i0 + j));
+                                let (z1, z2) = if pass.trivial {
+                                    (
+                                        (ld(xre, i0 + seg + j), ld(xim, i0 + seg + j)),
+                                        (ld(xre, i0 + 2 * seg + j), ld(xim, i0 + 2 * seg + j)),
+                                    )
+                                } else {
+                                    let half = $set1(0.5);
+                                    let (t1, t2) = (&pass.tables[0], &pass.tables[1]);
+                                    let m1 = $cmp::<_CMP_GT_OQ>(ld(&pass.selm[0], j), half);
+                                    let m2 = $cmp::<_CMP_GT_OQ>(ld(&pass.selm[1], j), half);
+                                    (
+                                        tw_mul(
+                                            ld(xre, i0 + seg + j), ld(xim, i0 + seg + j),
+                                            ld(&t1.m1, j), ld(&t1.m2, j), ld(&t1.t, j), m1,
+                                        ),
+                                        tw_mul(
+                                            ld(xre, i0 + 2 * seg + j), ld(xim, i0 + 2 * seg + j),
+                                            ld(&t2.m1, j), ld(&t2.m2, j), ld(&t2.t, j), m2,
+                                        ),
+                                    )
+                                };
+                                let u = dft3v(z0, z1, z2, fwd);
+                                for (m, &(ur, ui)) in u.iter().enumerate() {
+                                    st(yre, o + m * s + j, ur);
+                                    st(yim, o + m * s + j, ui);
+                                }
+                            }
+                            j += LANES;
+                        }
+                        while j < s {
+                            let i = i0 + j;
+                            let z0 = (xre[i], xim[i]);
+                            let (z1, z2) = if pass.trivial {
+                                ((xre[i + seg], xim[i + seg]), (xre[i + 2 * seg], xim[i + 2 * seg]))
+                            } else {
+                                let (t1, t2) = (&pass.tables[0], &pass.tables[1]);
+                                (
+                                    ratio_twiddle_mul(
+                                        xre[i + seg], xim[i + seg],
+                                        t1.m1[j], t1.m2[j], t1.t[j], t1.sel[j],
+                                    ),
+                                    ratio_twiddle_mul(
+                                        xre[i + 2 * seg], xim[i + 2 * seg],
+                                        t2.m1[j], t2.m2[j], t2.t[j], t2.sel[j],
+                                    ),
+                                )
+                            };
+                            let u = dft3(z0, z1, z2, fwd);
+                            for (m, &(ur, ui)) in u.iter().enumerate() {
+                                yre[o + m * s + j] = ur;
+                                yim[o + m * s + j] = ui;
+                            }
+                            j += 1;
+                        }
+                    }
+                }
+
+                #[target_feature(enable = "avx2,fma")]
+                unsafe fn pass4(
+                    pass: &PassTables<$elem>,
+                    fwd: bool,
+                    xre: &[$elem],
+                    xim: &[$elem],
+                    yre: &mut [$elem],
+                    yim: &mut [$elem],
+                ) {
+                    let n = xre.len();
+                    let s = pass.s;
+                    let l = n / (4 * s);
+                    let seg = n / 4;
+                    for k in 0..l {
+                        let i0 = k * s;
+                        let o = 4 * k * s;
+                        let mut j = 0usize;
+                        while j + LANES <= s {
+                            // SAFETY: j + LANES <= s keeps gather and
+                            // scatter offsets in bounds.
+                            unsafe {
+                                let z: [($vec, $vec); 4] = if pass.trivial {
+                                    core::array::from_fn(|q| {
+                                        (ld(xre, i0 + q * seg + j), ld(xim, i0 + q * seg + j))
+                                    })
+                                } else {
+                                    let half = $set1(0.5);
+                                    core::array::from_fn(|q| {
+                                        if q == 0 {
+                                            (ld(xre, i0 + j), ld(xim, i0 + j))
+                                        } else {
+                                            let tab = &pass.tables[q - 1];
+                                            let mask = $cmp::<_CMP_GT_OQ>(
+                                                ld(&pass.selm[q - 1], j), half,
+                                            );
+                                            tw_mul(
+                                                ld(xre, i0 + q * seg + j),
+                                                ld(xim, i0 + q * seg + j),
+                                                ld(&tab.m1, j), ld(&tab.m2, j), ld(&tab.t, j),
+                                                mask,
+                                            )
+                                        }
+                                    })
+                                };
+                                let u = dft4v(z[0], z[1], z[2], z[3], fwd);
+                                for (m, &(ur, ui)) in u.iter().enumerate() {
+                                    st(yre, o + m * s + j, ur);
+                                    st(yim, o + m * s + j, ui);
+                                }
+                            }
+                            j += LANES;
+                        }
+                        while j < s {
+                            let i = i0 + j;
+                            let z: [($elem, $elem); 4] = if pass.trivial {
+                                core::array::from_fn(|q| (xre[i + q * seg], xim[i + q * seg]))
+                            } else {
+                                core::array::from_fn(|q| {
+                                    if q == 0 {
+                                        (xre[i], xim[i])
+                                    } else {
+                                        let tab = &pass.tables[q - 1];
+                                        ratio_twiddle_mul(
+                                            xre[i + q * seg], xim[i + q * seg],
+                                            tab.m1[j], tab.m2[j], tab.t[j], tab.sel[j],
+                                        )
+                                    }
+                                })
+                            };
+                            let u = dft4(z[0], z[1], z[2], z[3], fwd);
+                            for (m, &(ur, ui)) in u.iter().enumerate() {
+                                yre[o + m * s + j] = ur;
+                                yim[o + m * s + j] = ui;
+                            }
+                            j += 1;
+                        }
+                    }
+                }
+
+                #[target_feature(enable = "avx2,fma")]
+                unsafe fn pass8(
+                    pass: &PassTables<$elem>,
+                    fwd: bool,
+                    xre: &[$elem],
+                    xim: &[$elem],
+                    yre: &mut [$elem],
+                    yim: &mut [$elem],
+                ) {
+                    let n = xre.len();
+                    let s = pass.s;
+                    let l = n / (8 * s);
+                    let seg = n / 8;
+                    for k in 0..l {
+                        let i0 = k * s;
+                        let o = 8 * k * s;
+                        let mut j = 0usize;
+                        while j + LANES <= s {
+                            // SAFETY: j + LANES <= s keeps gather and
+                            // scatter offsets in bounds.
+                            unsafe {
+                                let z: [($vec, $vec); 8] = if pass.trivial {
+                                    core::array::from_fn(|q| {
+                                        (ld(xre, i0 + q * seg + j), ld(xim, i0 + q * seg + j))
+                                    })
+                                } else {
+                                    let half = $set1(0.5);
+                                    core::array::from_fn(|q| {
+                                        if q == 0 {
+                                            (ld(xre, i0 + j), ld(xim, i0 + j))
+                                        } else {
+                                            let tab = &pass.tables[q - 1];
+                                            let mask = $cmp::<_CMP_GT_OQ>(
+                                                ld(&pass.selm[q - 1], j), half,
+                                            );
+                                            tw_mul(
+                                                ld(xre, i0 + q * seg + j),
+                                                ld(xim, i0 + q * seg + j),
+                                                ld(&tab.m1, j), ld(&tab.m2, j), ld(&tab.t, j),
+                                                mask,
+                                            )
+                                        }
+                                    })
+                                };
+                                let u = dft8v(z, fwd);
+                                for (m, &(ur, ui)) in u.iter().enumerate() {
+                                    st(yre, o + m * s + j, ur);
+                                    st(yim, o + m * s + j, ui);
+                                }
+                            }
+                            j += LANES;
+                        }
+                        while j < s {
+                            let i = i0 + j;
+                            let z: [($elem, $elem); 8] = if pass.trivial {
+                                core::array::from_fn(|q| (xre[i + q * seg], xim[i + q * seg]))
+                            } else {
+                                core::array::from_fn(|q| {
+                                    if q == 0 {
+                                        (xre[i], xim[i])
+                                    } else {
+                                        let tab = &pass.tables[q - 1];
+                                        ratio_twiddle_mul(
+                                            xre[i + q * seg], xim[i + q * seg],
+                                            tab.m1[j], tab.m2[j], tab.t[j], tab.sel[j],
+                                        )
+                                    }
+                                })
+                            };
+                            let u = dft8(z, fwd);
+                            for (m, &(ur, ui)) in u.iter().enumerate() {
+                                yre[o + m * s + j] = ur;
+                                yim[o + m * s + j] = ui;
+                            }
+                            j += 1;
+                        }
+                    }
+                }
+            }
+        };
+    }
+
+    lanes_impl!(
+        f32_lanes, f32, __m256, 8,
+        _mm256_loadu_ps, _mm256_storeu_ps, _mm256_set1_ps,
+        _mm256_add_ps, _mm256_sub_ps, _mm256_mul_ps, _mm256_xor_ps,
+        _mm256_fmadd_ps, _mm256_fnmadd_ps, _mm256_blendv_ps, _mm256_cmp_ps
+    );
+    lanes_impl!(
+        f64_lanes, f64, __m256d, 4,
+        _mm256_loadu_pd, _mm256_storeu_pd, _mm256_set1_pd,
+        _mm256_add_pd, _mm256_sub_pd, _mm256_mul_pd, _mm256_xor_pd,
+        _mm256_fmadd_pd, _mm256_fnmadd_pd, _mm256_blendv_pd, _mm256_cmp_pd
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::{Direction, Strategy};
+    use crate::kernel::twiddles::build_passes;
+    use crate::util::prng::Pcg32;
+
+    fn check_bit_identity<T: Real>(n: usize, radices: &[usize], strategy: Strategy) {
+        if !simd_available::<T>() {
+            return; // nothing to compare against on this host
+        }
+        let mut rng = Pcg32::seed(n as u64);
+        for dir in [Direction::Forward, Direction::Inverse] {
+            let passes = build_passes::<T>(n, radices, dir, strategy);
+            let fwd = dir == Direction::Forward;
+            let xre: Vec<T> = (0..n).map(|_| T::from_f64(rng.gaussian())).collect();
+            let xim: Vec<T> = (0..n).map(|_| T::from_f64(rng.gaussian())).collect();
+            let zero = vec![T::zero(); n];
+            // Feed each pass the previous *portable* output so both
+            // arms see identical inputs at every depth.
+            let (mut cre, mut cim) = (xre, xim);
+            for (p, pass) in passes.iter().enumerate() {
+                let (mut pr, mut pi) = (zero.clone(), zero.clone());
+                let (mut vr, mut vi) = (zero.clone(), zero.clone());
+                crate::kernel::passes::run_pass(pass, fwd, &cre, &cim, &mut pr, &mut pi);
+                run_pass_simd(pass, fwd, &cre, &cim, &mut vr, &mut vi);
+                assert_eq!(pr, vr, "{} re plane pass {p} s={}", T::NAME, pass.s);
+                assert_eq!(pi, vi, "{} im plane pass {p} s={}", T::NAME, pass.s);
+                (cre, cim) = (pr, pi);
+            }
+        }
+    }
+
+    #[test]
+    fn simd_passes_bit_identical_to_portable() {
+        for strategy in [Strategy::DualSelect, Strategy::LinzerFeig, Strategy::Cosine] {
+            check_bit_identity::<f32>(96, &[3, 8, 4], strategy);
+            check_bit_identity::<f64>(96, &[3, 8, 4], strategy);
+            check_bit_identity::<f32>(1024, &[8, 8, 4, 4], strategy);
+            check_bit_identity::<f64>(1024, &[8, 8, 4, 4], strategy);
+            check_bit_identity::<f32>(64, &[2, 2, 2, 2, 2, 2], strategy);
+            check_bit_identity::<f64>(1536, &[3, 8, 8, 8], strategy);
+        }
+    }
+
+    #[test]
+    fn soft_floats_never_claim_the_simd_arm() {
+        assert!(!simd_available::<crate::precision::F16>());
+        assert!(!simd_available::<crate::precision::Bf16>());
+    }
+}

@@ -1,0 +1,185 @@
+//! Per-pass twiddle tables for the mixed-radix engine.
+//!
+//! A radix-`r` pass at stride `s` multiplies its `q`-th input
+//! (`q ∈ 1..r`) by `W_n^{q·j·l}` (`l = n/(r·s)`, `j ∈ 0..s`) before
+//! the internal `r`-point DFT.  Every one of those multiplies is
+//! stored in the paper's bounded-ratio form — the same
+//! `(m1, m2, t, sel)` dual-select layout [`crate::fft::twiddle`]
+//! builds for the radix-2 plan — so vectorizing the kernel changes
+//! nothing about the numerical contract: `|t| ≤ 1` per entry for
+//! dual-select, per twiddle power, at every radix (paper §VI).
+//!
+//! Layout: one [`RatioTable`] per twiddle power `q`, each `s` entries
+//! long, held contiguously per pass (`tables[q-1]`) — the interleaved
+//! per-pass layout of the Autosort exemplars, transposed to planes so
+//! the SIMD inner loops load `m1/m2/t` with unit stride.  The `sel`
+//! lane is additionally materialized as a 0.0/1.0 mask plane
+//! (`selm`), which is what the AVX2 arm blends on; the scalar arm
+//! reads the `bool` lane.  Both arms see the same table values, which
+//! is half of the bit-identity argument (the other half is the
+//! op-for-op FMA correspondence in [`super::butterflies`]).
+
+use crate::fft::twiddle::{ratio_table, RatioTable};
+use crate::fft::{Direction, Strategy};
+use crate::precision::Real;
+
+use super::schedule::plan_radices;
+
+/// Twiddle tables for one mixed-radix pass.
+#[derive(Clone, Debug)]
+pub struct PassTables<T> {
+    /// Butterfly radix of this pass (2, 3, 4 or 8).
+    pub radix: usize,
+    /// Twiddle stride: the product of all earlier passes' radices.
+    pub s: usize,
+    /// `tables[q-1]` holds the ratio entries for `W_n^{q·j·l}`.
+    pub tables: Vec<RatioTable<T>>,
+    /// `sel` as a 0.0 (sine path) / 1.0 (cosine path) mask plane per
+    /// twiddle power — the branch-free blend form the SIMD arm uses.
+    pub selm: Vec<Vec<T>>,
+    /// True when every table is the exact trivial twiddle `W^0`: the
+    /// pass degenerates to the pure `r`-point DFT.  (Exactly the
+    /// radix-2 plan's trivial-pass rule; for dual-select this is the
+    /// `s = 1` pass, while the clamped baselines' huge `W^0` entries
+    /// keep the general path — that difference *is* the paper.)
+    pub trivial: bool,
+}
+
+impl<T: Real> PassTables<T> {
+    /// Build the tables for one pass of an `n`-point transform.
+    pub fn build(n: usize, radix: usize, s: usize, direction: Direction, strategy: Strategy) -> Self {
+        let l = n / (radix * s);
+        debug_assert_eq!(n % (radix * s), 0);
+        let sign = direction.sign();
+        let mut tables = Vec::with_capacity(radix - 1);
+        let mut selm = Vec::with_capacity(radix - 1);
+        for q in 1..radix {
+            let angles: Vec<f64> = (0..s)
+                .map(|j| sign * 2.0 * core::f64::consts::PI * (q * j * l) as f64 / n as f64)
+                .collect();
+            let tab = ratio_table::<T>(&angles, strategy);
+            selm.push(
+                tab.sel
+                    .iter()
+                    .map(|&c| if c { T::one() } else { T::zero() })
+                    .collect(),
+            );
+            tables.push(tab);
+        }
+        let trivial = tables.iter().all(|t| t.is_trivial());
+        PassTables { radix, s, tables, selm, trivial }
+    }
+
+    /// Bytes held by this pass's tables (capacity reporting).
+    pub fn table_bytes(&self) -> usize {
+        let per_entry = 4 * core::mem::size_of::<T>() + core::mem::size_of::<bool>();
+        (self.radix - 1) * self.s * per_entry
+    }
+}
+
+/// Build the tables for every pass of a schedule.  `radices` must
+/// multiply to `n` (validated by the plan constructor).
+pub fn build_passes<T: Real>(
+    n: usize,
+    radices: &[usize],
+    direction: Direction,
+    strategy: Strategy,
+) -> Vec<PassTables<T>> {
+    let mut out = Vec::with_capacity(radices.len());
+    let mut s = 1usize;
+    for &r in radices {
+        out.push(PassTables::build(n, r, s, direction, strategy));
+        s *= r;
+    }
+    out
+}
+
+/// Max |ratio| across every twiddle table of the canonical schedule
+/// for `n`, as *stored* in f64 (clamped entries included — for the
+/// clamped baselines that is the honest, ugly number).  `None` when
+/// the mixed-radix plan does not serve `(n, strategy)` — the bound
+/// attachment then has nothing to price.
+pub fn tables_tmax(n: usize, strategy: Strategy) -> Option<f64> {
+    if strategy == Strategy::Standard {
+        return None;
+    }
+    let radices = plan_radices(n).ok()?;
+    let passes = build_passes::<f64>(n, &radices, Direction::Forward, strategy);
+    let mut worst = 0.0f64;
+    for pass in &passes {
+        for tab in &pass.tables {
+            for &t in &tab.t {
+                worst = worst.max(t.abs());
+            }
+        }
+    }
+    Some(worst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dual_select_ratio_bound_holds_at_every_radix() {
+        // Paper §VI: per-twiddle min-ratio selection keeps |t| ≤ 1
+        // for every power q at every radix — vectorization changes
+        // the kernel, never the table.
+        for n in [6usize, 12, 24, 48, 96, 144, 768, 1536] {
+            let tmax = tables_tmax(n, Strategy::DualSelect).unwrap();
+            assert!(tmax <= 1.0 + 1e-15, "n={n} tmax={tmax}");
+        }
+    }
+
+    #[test]
+    fn clamped_baselines_stay_unbounded() {
+        // The W^0 entry of the first pass is clamped for LF: the
+        // mixed-radix table reports it honestly.
+        let lf = tables_tmax(48, Strategy::LinzerFeig).unwrap();
+        assert!(lf > 1e6, "lf tmax {lf}");
+        assert_eq!(tables_tmax(48, Strategy::Standard), None);
+        assert_eq!(tables_tmax(100, Strategy::DualSelect), None);
+    }
+
+    #[test]
+    fn first_pass_is_trivial_for_dual_select_only() {
+        let dual = PassTables::<f64>::build(24, 3, 1, Direction::Forward, Strategy::DualSelect);
+        assert!(dual.trivial);
+        let lf = PassTables::<f64>::build(24, 3, 1, Direction::Forward, Strategy::LinzerFeig);
+        assert!(!lf.trivial, "clamped W^0 must keep the general path");
+    }
+
+    #[test]
+    fn selm_mirrors_sel_and_radix2_tables_match_the_plan() {
+        use crate::fft::twiddle::pass_angles;
+        let n = 64usize;
+        // A radix-2 pass at s = 2^p must build the *same* table the
+        // classic Stockham plan uses — the dual-select ratio table is
+        // the kernel's numerical contract, unchanged.
+        for p in 0..6u32 {
+            let s = 1usize << p;
+            let pass = PassTables::<f32>::build(n, 2, s, Direction::Forward, Strategy::DualSelect);
+            let want = ratio_table::<f32>(
+                &pass_angles(n, p, Direction::Forward),
+                Strategy::DualSelect,
+            );
+            assert_eq!(pass.tables[0].m1, want.m1, "p={p}");
+            assert_eq!(pass.tables[0].m2, want.m2, "p={p}");
+            assert_eq!(pass.tables[0].t, want.t, "p={p}");
+            assert_eq!(pass.tables[0].sel, want.sel, "p={p}");
+            for (j, &c) in pass.tables[0].sel.iter().enumerate() {
+                assert_eq!(pass.selm[0][j], if c { 1.0f32 } else { 0.0 });
+            }
+        }
+    }
+
+    #[test]
+    fn build_passes_strides_multiply_through() {
+        let passes = build_passes::<f64>(96, &[3, 8, 4], Direction::Inverse, Strategy::DualSelect);
+        assert_eq!(passes.len(), 3);
+        assert_eq!((passes[0].radix, passes[0].s), (3, 1));
+        assert_eq!((passes[1].radix, passes[1].s), (8, 3));
+        assert_eq!((passes[2].radix, passes[2].s), (4, 24));
+        assert!(passes[0].table_bytes() < passes[2].table_bytes());
+    }
+}

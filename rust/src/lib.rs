@@ -35,6 +35,16 @@
 //!   [`net::FftdServer`], [`net::FftClient`]), so remote callers get
 //!   the same dtype + a-priori-bound metadata as in-process ones.
 //!   See `PROTOCOL.md` for the wire format.
+//! * **Kernel plane** ([`kernel`]) — the SIMD mixed-radix Autosort
+//!   engine: [`kernel::MixedRadixPlan`] executes radix-2/3/4/8
+//!   Stockham passes over composite `n = 2^a·3^b` (48, 96, 1536 no
+//!   longer take the Bluestein detour), with runtime AVX2/FMA
+//!   dispatch and a portable fallback that is *bit identical* to the
+//!   vector arm.  Twiddles stay in the paper's bounded-ratio
+//!   dual-select form at every radix, so `|t| ≤ 1` and the a-priori
+//!   bounds survive vectorization unchanged; kernel choice
+//!   (auto/scalar/simd) is a [`tune`] search axis and per-arm dispatch
+//!   counts surface through [`obs`].
 //! * **Fixed-point plane** ([`fixed`]) — a quantized Q15/Q31 integer
 //!   FFT with per-frame block-floating-point scaling
 //!   ([`fixed::FixedPlan`], [`fixed::FixedArena`]).  Dual-select is
@@ -94,6 +104,7 @@ pub mod dft;
 pub mod fft;
 pub mod fixed;
 pub mod graph;
+pub mod kernel;
 pub mod net;
 pub mod obs;
 pub mod precision;

@@ -428,6 +428,17 @@ impl Metrics {
         if s.fixed_saturations > 0 {
             out.push_str(&format!(" fixed_saturations={}", s.fixed_saturations));
         }
+        // Mixed-radix kernel dispatch is a process-wide counter pair
+        // (not part of the wire snapshot — see PROTOCOL.md §Stats);
+        // the summary runs in the serving process, so reading it here
+        // reports the arms this server actually executed on.
+        let kd = crate::kernel::dispatch_counts();
+        if kd.total() > 0 {
+            out.push_str(&format!(
+                " kernel_portable={} kernel_simd={}",
+                kd.scalar, kd.simd
+            ));
+        }
         out
     }
 }

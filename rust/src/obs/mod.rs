@@ -18,7 +18,12 @@
 //!    `STATS` op serializes.
 //! 3. **Rendering**: [`render::prometheus_text`] emits zero-dependency
 //!    Prometheus text exposition; [`render::to_json`] builds a
-//!    `util::json` tree for benches and `fft stats --json`.
+//!    `util::json` tree for benches and `fft stats --json`;
+//!    [`render::kernel_dispatch_text`] exposes the mixed-radix
+//!    kernel's per-arm dispatch counters (process-local statics from
+//!    [`crate::kernel`], kept off the pinned v6 wire snapshot; the
+//!    `--stats-every` summary line appends them in the serving
+//!    process).
 //!
 //! `coordinator::Metrics` is this module's [`Metrics`] — the
 //! coordinator re-exports it for backwards compatibility.
@@ -32,7 +37,7 @@ pub mod trace;
 pub use health::{HealthRegistry, TightnessSnapshot, RATIO_BUCKETS};
 pub use hist::{HistSnapshot, LogHist, BUCKETS, TOTAL_BUCKETS};
 pub use metrics::{DTypeCounts, Metrics, MetricsSnapshot, STAGE_COUNT, STAGE_NAMES};
-pub use render::{prometheus_text, to_json};
+pub use render::{kernel_dispatch_text, prometheus_text, to_json};
 pub use trace::{
     op_index, strategy_index, Exemplar, ExemplarTable, SpanRecord, SpanRing, TraceHandle,
     TraceSpan, TraceStamps, OPS, STRATEGIES,

@@ -157,6 +157,27 @@ pub fn prometheus_text(s: &MetricsSnapshot) -> String {
     out
 }
 
+/// Prometheus text for the mixed-radix kernel dispatch counters.
+///
+/// These counters are **process-local** statics
+/// ([`crate::kernel::dispatch_counts`]), deliberately kept off the
+/// pinned protocol-v6 `STATS` wire snapshot — so they are rendered by
+/// the process that executed the transforms (the serving process's
+/// exposition, a bench, a test), never grafted onto a snapshot
+/// scraped from another machine.
+pub fn kernel_dispatch_text() -> String {
+    let kd = crate::kernel::dispatch_counts();
+    let mut out = String::with_capacity(256);
+    let _ = writeln!(
+        out,
+        "# HELP fmafft_kernel_dispatch_total Mixed-radix frames executed per dispatch arm"
+    );
+    let _ = writeln!(out, "# TYPE fmafft_kernel_dispatch_total counter");
+    let _ = writeln!(out, "fmafft_kernel_dispatch_total{{arm=\"portable\"}} {}", kd.scalar);
+    let _ = writeln!(out, "fmafft_kernel_dispatch_total{{arm=\"simd\"}} {}", kd.simd);
+    out
+}
+
 /// One histogram series: cumulative `_bucket{le=...}` lines (upper
 /// edges `2^{i+1}` µs, then `+Inf`), `_sum`, `_count`, and a
 /// `_max_microseconds` gauge making even a single pathological sample
@@ -376,6 +397,21 @@ mod tests {
         let ex = v.get("exemplars").unwrap().as_arr().unwrap();
         assert_eq!(ex.len(), 1);
         assert_eq!(ex[0].get("written_us").unwrap().as_usize(), Some(150));
+    }
+
+    #[test]
+    fn kernel_dispatch_text_tracks_the_process_counters() {
+        let before = crate::kernel::dispatch_counts();
+        let text = kernel_dispatch_text();
+        assert!(text.contains("# TYPE fmafft_kernel_dispatch_total counter"), "{text}");
+        assert!(
+            text.contains(&format!(
+                "fmafft_kernel_dispatch_total{{arm=\"portable\"}} {}",
+                before.scalar
+            )) || crate::kernel::dispatch_counts().scalar > before.scalar,
+            "{text}"
+        );
+        assert!(text.contains("fmafft_kernel_dispatch_total{arm=\"simd\"}"), "{text}");
     }
 
     #[test]

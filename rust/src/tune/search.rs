@@ -16,6 +16,7 @@
 use std::time::{Duration, Instant};
 
 use crate::fft::{Algorithm, DType, FftResult, PlanSpec, Strategy};
+use crate::kernel::Kernel;
 use crate::stream::min_ols_block;
 
 use super::measure::{measure_fft, measure_ols, MeasureConfig};
@@ -56,6 +57,7 @@ pub struct TuneRow {
     pub dtype: DType,
     pub strategy: Strategy,
     pub algorithm: Algorithm,
+    pub kernel: Kernel,
     pub block_len: usize,
     pub median_ns: u64,
     /// How many candidates were actually measured for this key.
@@ -71,28 +73,43 @@ pub struct TuneOutcome {
     pub budget_exhausted: bool,
 }
 
-/// Every (strategy, algorithm) plan candidate for an `n`-point FFT in
-/// `dtype`.  Fixed-point planes only represent the dual-select tables
-/// over the Stockham kernel; float planes sweep all four strategies
-/// over Stockham r2, r4 (power-of-four sizes, ratio strategies only —
-/// the r4 kernel has no standard-butterfly form), DIT and Bluestein.
-/// Candidates the planner would reject (e.g. r4 × standard) are kept
-/// out here so the measured count matches the true space.
-pub fn fft_candidates(n: usize, dtype: DType) -> Vec<(Strategy, Algorithm)> {
+/// Every (strategy, algorithm, kernel) plan candidate for an
+/// `n`-point FFT in `dtype`.  Fixed-point planes only represent the
+/// dual-select tables over the Stockham kernel; float planes sweep
+/// all four strategies over Stockham r2, r4 (power-of-four sizes,
+/// ratio strategies only — the r4 kernel has no standard-butterfly
+/// form), DIT and Bluestein, all with `Kernel::Auto` (the kernel axis
+/// is meaningless to them).  Sizes the mixed-radix engine serves
+/// (`2^a·3^b`, ratio strategies) additionally sweep
+/// `Algorithm::MixedRadix` per kernel arm: the scalar arm everywhere,
+/// the SIMD arm for hardware floats (it may still fail to *build* on
+/// a host without AVX2+FMA, in which case the sweep skips it like any
+/// other unbuildable candidate).  Candidates the planner would
+/// statically reject (e.g. r4 × standard) are kept out here so the
+/// measured count matches the true space.
+pub fn fft_candidates(n: usize, dtype: DType) -> Vec<(Strategy, Algorithm, Kernel)> {
     if dtype.is_fixed() {
-        return vec![(Strategy::DualSelect, Algorithm::Stockham)];
+        return vec![(Strategy::DualSelect, Algorithm::Stockham, Kernel::Auto)];
     }
     let pow4 = n.is_power_of_two() && n.trailing_zeros() % 2 == 0;
+    let smooth = crate::kernel::is_23_smooth(n);
+    let hw_float = matches!(dtype, DType::F64 | DType::F32);
     let mut out = Vec::new();
     for s in Strategy::ALL {
         if n.is_power_of_two() && n >= 2 {
-            out.push((s, Algorithm::Stockham));
-            out.push((s, Algorithm::Dit));
+            out.push((s, Algorithm::Stockham, Kernel::Auto));
+            out.push((s, Algorithm::Dit, Kernel::Auto));
             if pow4 && s != Strategy::Standard {
-                out.push((s, Algorithm::Radix4));
+                out.push((s, Algorithm::Radix4, Kernel::Auto));
             }
         }
-        out.push((s, Algorithm::Bluestein));
+        out.push((s, Algorithm::Bluestein, Kernel::Auto));
+        if smooth && s != Strategy::Standard {
+            out.push((s, Algorithm::MixedRadix, Kernel::Scalar));
+            if hw_float {
+                out.push((s, Algorithm::MixedRadix, Kernel::Simd));
+            }
+        }
     }
     out
 }
@@ -138,30 +155,32 @@ pub fn tune(cfg: &TuneConfig) -> FftResult<TuneOutcome> {
             if over(&rows) {
                 break 'fft;
             }
-            let mut best: Option<(u64, Strategy, Algorithm)> = None;
+            let mut best: Option<(u64, Strategy, Algorithm, Kernel)> = None;
             let mut measured = 0usize;
-            for (strategy, algorithm) in fft_candidates(n, dtype) {
+            for (strategy, algorithm, kernel) in fft_candidates(n, dtype) {
                 let spec = PlanSpec::new(n)
                     .strategy(strategy)
                     .algorithm(algorithm)
+                    .kernel(kernel)
                     .dtype(dtype);
                 let m = match measure_fft(spec, &cfg.measure) {
                     Ok(m) => m,
                     // Not in this key's plan space (size/strategy
-                    // combination the planner types out) — skip.
+                    // combination the planner types out, or a SIMD
+                    // arm this host cannot serve) — skip.
                     Err(_) => continue,
                 };
                 measured += 1;
-                if best.map_or(true, |(t, _, _)| m.median_ns < t) {
-                    best = Some((m.median_ns, strategy, algorithm));
+                if best.map_or(true, |(t, _, _, _)| m.median_ns < t) {
+                    best = Some((m.median_ns, strategy, algorithm, kernel));
                 }
             }
-            if let Some((median_ns, strategy, algorithm)) = best {
+            if let Some((median_ns, strategy, algorithm, kernel)) = best {
                 wisdom.insert(
                     n,
                     TuneOp::Fft,
                     dtype,
-                    WisdomEntry { strategy, algorithm, block_len: 0, median_ns },
+                    WisdomEntry { strategy, algorithm, kernel, block_len: 0, median_ns },
                 )?;
                 rows.push(TuneRow {
                     op: TuneOp::Fft,
@@ -169,6 +188,7 @@ pub fn tune(cfg: &TuneConfig) -> FftResult<TuneOutcome> {
                     dtype,
                     strategy,
                     algorithm,
+                    kernel,
                     block_len: 0,
                     median_ns,
                     candidates: measured,
@@ -216,6 +236,7 @@ pub fn tune(cfg: &TuneConfig) -> FftResult<TuneOutcome> {
                     WisdomEntry {
                         strategy: Strategy::DualSelect,
                         algorithm: Algorithm::Auto,
+                        kernel: Kernel::Auto,
                         block_len: block as u32,
                         median_ns,
                     },
@@ -226,6 +247,7 @@ pub fn tune(cfg: &TuneConfig) -> FftResult<TuneOutcome> {
                     dtype,
                     strategy: Strategy::DualSelect,
                     algorithm: Algorithm::Auto,
+                    kernel: Kernel::Auto,
                     block_len: block,
                     median_ns,
                     candidates: measured,
@@ -246,21 +268,37 @@ mod tests {
         // Fixed dtypes: dual-select × Stockham only.
         assert_eq!(
             fft_candidates(64, DType::I16),
-            vec![(Strategy::DualSelect, Algorithm::Stockham)]
+            vec![(Strategy::DualSelect, Algorithm::Stockham, Kernel::Auto)]
         );
         // Power of four: Stockham + DIT for all four strategies,
-        // radix-4 for the three ratio strategies, Bluestein for all.
+        // radix-4 for the three ratio strategies, Bluestein for all —
+        // plus the mixed-radix engine per kernel arm for the three
+        // ratio strategies (64 = 2^6 is 2,3-smooth).
         let c64 = fft_candidates(64, DType::F32);
-        assert_eq!(c64.len(), 4 * 3 + 3);
-        assert!(c64.contains(&(Strategy::Cosine, Algorithm::Radix4)));
-        assert!(!c64.contains(&(Strategy::Standard, Algorithm::Radix4)));
+        assert_eq!(c64.len(), 4 * 3 + 3 + 3 * 2);
+        assert!(c64.contains(&(Strategy::Cosine, Algorithm::Radix4, Kernel::Auto)));
+        assert!(!c64.contains(&(Strategy::Standard, Algorithm::Radix4, Kernel::Auto)));
+        assert!(c64.contains(&(Strategy::DualSelect, Algorithm::MixedRadix, Kernel::Scalar)));
+        assert!(c64.contains(&(Strategy::DualSelect, Algorithm::MixedRadix, Kernel::Simd)));
+        assert!(!c64.iter().any(|&(s, a, _)| s == Strategy::Standard
+            && a == Algorithm::MixedRadix));
         // Power of two, not of four: no radix-4 candidates.
         let c128 = fft_candidates(128, DType::F32);
-        assert!(c128.iter().all(|&(_, a)| a != Algorithm::Radix4));
-        // Non-power-of-two: Bluestein only.
+        assert!(c128.iter().all(|&(_, a, _)| a != Algorithm::Radix4));
+        // Non-power-of-two, not 2,3-smooth: Bluestein only.
         let c60 = fft_candidates(60, DType::F64);
-        assert!(c60.iter().all(|&(_, a)| a == Algorithm::Bluestein));
+        assert!(c60.iter().all(|&(_, a, _)| a == Algorithm::Bluestein));
         assert_eq!(c60.len(), 4);
+        // Smooth composite: Bluestein everywhere plus mixed-radix per
+        // arm for the ratio strategies.
+        let c48 = fft_candidates(48, DType::F64);
+        assert_eq!(c48.len(), 4 + 3 * 2);
+        assert!(c48.contains(&(Strategy::LinzerFeig, Algorithm::MixedRadix, Kernel::Simd)));
+        // Soft floats have no vector arm, so no SIMD candidates — the
+        // scalar mixed-radix arm still competes.
+        let c48h = fft_candidates(48, DType::F16);
+        assert_eq!(c48h.len(), 4 + 3);
+        assert!(c48h.iter().all(|&(_, _, k)| k != Kernel::Simd));
     }
 
     #[test]
@@ -292,7 +330,7 @@ mod tests {
     #[test]
     fn full_sweep_writes_fft_and_ols_entries() {
         let cfg = TuneConfig {
-            sizes: vec![16],
+            sizes: vec![16, 12],
             taps: vec![2],
             dtypes: vec![DType::F32, DType::I16],
             budget: Duration::from_secs(600),
@@ -301,6 +339,17 @@ mod tests {
         let out = tune(&cfg).unwrap();
         assert!(!out.budget_exhausted);
         assert!(out.wisdom.fft_strategy(16, DType::F32).is_some());
+        // The composite size tunes too (Bluestein vs mixed-radix); the
+        // winner round-trips through the wisdom codec with its kernel.
+        let e12 = out.wisdom.entry(12, TuneOp::Fft, DType::F32).unwrap();
+        assert!(
+            e12.algorithm == Algorithm::Bluestein || e12.algorithm == Algorithm::MixedRadix,
+            "{:?}",
+            e12.algorithm
+        );
+        // Fixed-point at 12 has no buildable candidate (fixed plans
+        // are power-of-two): no entry, no error.
+        assert!(out.wisdom.entry(12, TuneOp::Fft, DType::I16).is_none());
         assert_eq!(out.wisdom.fft_strategy(16, DType::I16), Some(Strategy::DualSelect));
         let block = out.wisdom.ols_block(2, DType::F32).unwrap();
         assert!(block.is_power_of_two() && block >= 4);

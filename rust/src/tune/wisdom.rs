@@ -27,14 +27,23 @@
 //! 20      24*k  entries
 //! 20+24k  4     FNV-1a checksum over bytes [0, 20+24k)
 //!
-//! entry:  n u64 | op u8 | dtype u8 | strategy u8 | algorithm u8
+//! entry:  n u64 | op u8 | dtype u8 | strategy u8 | algo_kernel u8
 //!         | block_len u32 | median_ns u64
 //! ```
+//!
+//! The `algo_kernel` byte packs two nibbles: algorithm tag in the low
+//! nibble, kernel tag ([`Kernel::Auto`] = 0, scalar = 1, simd = 2) in
+//! the high nibble.  Files written before the kernel axis existed
+//! carry 0 in the high nibble and load as `Kernel::Auto` — the codec
+//! change is backward compatible without a version bump.  Unknown
+//! nibble values in either half are typed [`FftError::Protocol`]
+//! errors, never panics.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::fft::{Algorithm, DType, FftError, FftResult, Strategy};
+use crate::kernel::Kernel;
 use crate::net::wire::checksum;
 use crate::stream::min_ols_block;
 
@@ -135,6 +144,7 @@ fn algorithm_code(a: Algorithm) -> u8 {
         Algorithm::Radix4 => 2,
         Algorithm::Dit => 3,
         Algorithm::Bluestein => 4,
+        Algorithm::MixedRadix => 5,
     }
 }
 
@@ -145,10 +155,41 @@ fn algorithm_from(code: u8) -> FftResult<Algorithm> {
         2 => Ok(Algorithm::Radix4),
         3 => Ok(Algorithm::Dit),
         4 => Ok(Algorithm::Bluestein),
+        5 => Ok(Algorithm::MixedRadix),
         other => Err(FftError::Protocol(format!(
             "wisdom: unknown algorithm tag {other}"
         ))),
     }
+}
+
+fn kernel_code(k: Kernel) -> u8 {
+    match k {
+        Kernel::Auto => 0,
+        Kernel::Scalar => 1,
+        Kernel::Simd => 2,
+    }
+}
+
+fn kernel_from(code: u8) -> FftResult<Kernel> {
+    match code {
+        0 => Ok(Kernel::Auto),
+        1 => Ok(Kernel::Scalar),
+        2 => Ok(Kernel::Simd),
+        other => Err(FftError::Protocol(format!(
+            "wisdom: unknown kernel tag {other}"
+        ))),
+    }
+}
+
+/// Pack the algorithm/kernel pair into the entry's `algo_kernel` byte.
+fn algo_kernel_byte(a: Algorithm, k: Kernel) -> u8 {
+    algorithm_code(a) | (kernel_code(k) << 4)
+}
+
+/// Split the `algo_kernel` byte back into its halves.  Pre-kernel
+/// files carry 0 in the high nibble, which is exactly `Kernel::Auto`.
+fn algo_kernel_from(byte: u8) -> FftResult<(Algorithm, Kernel)> {
+    Ok((algorithm_from(byte & 0x0f)?, kernel_from(byte >> 4)?))
 }
 
 /// One measured winner.
@@ -160,6 +201,10 @@ pub struct WisdomEntry {
     /// `Auto` resolution applies the strategy only, so tuned requests
     /// keep batching with explicit ones.
     pub algorithm: Algorithm,
+    /// Winning butterfly kernel (mixed-radix dispatch arm choice) —
+    /// recorded alongside the algorithm; files written before the
+    /// kernel axis existed load as [`Kernel::Auto`].
+    pub kernel: Kernel,
     /// OLS entries: the winning FFT block length.  Zero for FFT
     /// entries.
     pub block_len: u32,
@@ -300,7 +345,7 @@ impl Wisdom {
             out.push(op);
             out.push(dt);
             out.push(strategy_code(e.strategy));
-            out.push(algorithm_code(e.algorithm));
+            out.push(algo_kernel_byte(e.algorithm, e.kernel));
             out.extend_from_slice(&e.block_len.to_le_bytes());
             out.extend_from_slice(&e.median_ns.to_le_bytes());
         }
@@ -362,9 +407,11 @@ impl Wisdom {
             let n = u64::from_le_bytes(e[0..8].try_into().unwrap());
             let op = op_from(e[8])?;
             let dtype = dtype_from(e[9])?;
+            let (algorithm, kernel) = algo_kernel_from(e[11])?;
             let entry = WisdomEntry {
                 strategy: strategy_from(e[10])?,
-                algorithm: algorithm_from(e[11])?,
+                algorithm,
+                kernel,
                 block_len: u32::from_le_bytes(e[12..16].try_into().unwrap()),
                 median_ns: u64::from_le_bytes(e[16..24].try_into().unwrap()),
             };
@@ -401,7 +448,13 @@ mod tests {
     use super::*;
 
     fn entry(strategy: Strategy) -> WisdomEntry {
-        WisdomEntry { strategy, algorithm: Algorithm::Stockham, block_len: 0, median_ns: 100 }
+        WisdomEntry {
+            strategy,
+            algorithm: Algorithm::Stockham,
+            kernel: Kernel::Auto,
+            block_len: 0,
+            median_ns: 100,
+        }
     }
 
     #[test]
@@ -440,6 +493,31 @@ mod tests {
         .unwrap();
         assert_eq!(w.ols_block(8, DType::F32), Some(16));
         assert_eq!(w.ols_block(8, DType::F64), None);
+    }
+
+    #[test]
+    fn algo_kernel_byte_roundtrips_every_pair() {
+        for a in [
+            Algorithm::Auto,
+            Algorithm::Stockham,
+            Algorithm::Radix4,
+            Algorithm::Dit,
+            Algorithm::Bluestein,
+            Algorithm::MixedRadix,
+        ] {
+            for k in Kernel::ALL {
+                let byte = algo_kernel_byte(a, k);
+                assert_eq!(algo_kernel_from(byte).unwrap(), (a, k));
+            }
+        }
+        // A pre-kernel byte (high nibble 0) is plain algorithm + Auto.
+        assert_eq!(
+            algo_kernel_from(algorithm_code(Algorithm::Bluestein)).unwrap(),
+            (Algorithm::Bluestein, Kernel::Auto)
+        );
+        // Foreign nibbles in either half: typed errors, not panics.
+        assert!(matches!(algo_kernel_from(0x0f), Err(FftError::Protocol(_))));
+        assert!(matches!(algo_kernel_from(0xf0), Err(FftError::Protocol(_))));
     }
 
     #[test]

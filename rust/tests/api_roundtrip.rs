@@ -91,6 +91,36 @@ fn prop_roundtrip_bluestein_arbitrary_sizes() {
 }
 
 #[test]
+fn composite_sizes_roundtrip_through_the_mixed_radix_kernel() {
+    // Composite 2^a·3^b sizes route to the mixed-radix kernel — both
+    // explicitly and through `Algorithm::Auto` — and round-trip at
+    // power-of-two accuracy rather than taking the Bluestein detour.
+    for n in [6usize, 12, 48, 96, 144, 768, 1536] {
+        let mut rng = Pcg32::seed(0xC0 + n as u64);
+        let (re, im) = signal(&mut rng, n);
+        let m = (n as f64).log2().ceil() as u32;
+        for strategy in [Strategy::DualSelect, Strategy::LinzerFeig, Strategy::Cosine] {
+            let clamped = matches!(strategy, Strategy::LinzerFeig | Strategy::Cosine);
+            let spec = PlanSpec::new(n).strategy(strategy).mixed_radix();
+            let e64 = roundtrip_err::<f64>(spec, &re, &im);
+            let lim64 = if clamped { 5e-5 } else { tol::<f64>(m) };
+            assert!(e64 < lim64, "f64 n={n} {strategy:?} err={e64:.3e}");
+            let e32 = roundtrip_err::<f32>(spec, &re, &im);
+            let lim32 = tol::<f32>(m).max(if clamped { 5e-5 } else { 0.0 });
+            assert!(e32 < lim32, "f32 n={n} {strategy:?} err={e32:.3e}");
+            // Auto picks the same engine for smooth non-powers-of-two.
+            let auto = PlanSpec::new(n).strategy(strategy);
+            let routed = auto.build::<f64>().unwrap();
+            assert!(
+                format!("{routed:?}").contains("MixedRadixPlan"),
+                "n={n} auto routed to {routed:?}"
+            );
+            assert_eq!(roundtrip_err::<f64>(auto, &re, &im), e64, "n={n} auto != explicit");
+        }
+    }
+}
+
+#[test]
 fn prop_roundtrip_real_input() {
     check("spec-roundtrip-real", QcConfig { cases: 16, ..Default::default() }, |rng| {
         let n = pow2(rng, 2, 11);

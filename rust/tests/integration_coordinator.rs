@@ -527,6 +527,7 @@ fn auto_resolves_through_wisdom_bit_identically_for_every_dtype() {
                 WisdomEntry {
                     strategy: tuned(dtype),
                     algorithm: Algorithm::Stockham,
+                    kernel: fmafft::kernel::Kernel::Auto,
                     block_len: 0,
                     median_ns: 1,
                 },

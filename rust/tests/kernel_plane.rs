@@ -1,0 +1,215 @@
+//! Integration: the mixed-radix kernel plane end to end — SIMD vs.
+//! portable bit-identity through the `PlanSpec` facade, forward error
+//! under the published per-schedule bound, the `FMAFFT_KERNEL`
+//! environment override, and composite sizes served over the
+//! coordinator and loopback TCP with the a-priori bound attached.
+//!
+//! One test here mutates `FMAFFT_KERNEL`, which `MixedRadixPlan`
+//! reads at *build* time for every kernel request (including explicit
+//! ones — `scalar` caps them all).  Every test that builds a plan
+//! therefore serializes on [`ENV_LOCK`]; Cargo.toml gives this file
+//! its own test binary so no other suite shares the process.
+
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+use fmafft::analysis::bounds::serving_bound;
+use fmafft::coordinator::{FftOp, Server, ServerConfig};
+use fmafft::dft;
+use fmafft::fft::{DType, PlanSpec, Strategy, Transform};
+use fmafft::kernel::{dispatch_counts, simd_available, Arm, Kernel, MixedRadixPlan, KERNEL_ENV};
+use fmafft::net::{FftClient, FftdServer};
+use fmafft::precision::{Real, SplitBuf, F16};
+use fmafft::util::metrics::rel_l2;
+use fmafft::util::prng::Pcg32;
+
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize plan construction against the env-override test; a
+/// panicked holder must not wedge the rest of the suite.
+fn env_guard() -> MutexGuard<'static, ()> {
+    ENV_LOCK.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+fn random_frame(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Pcg32::seed(seed);
+    (
+        (0..n).map(|_| rng.gaussian()).collect(),
+        (0..n).map(|_| rng.gaussian()).collect(),
+    )
+}
+
+/// Build through the facade with an explicit kernel and run forward.
+fn run_spec<T: Real>(
+    n: usize,
+    strategy: Strategy,
+    kernel: Kernel,
+    re: &[f64],
+    im: &[f64],
+) -> SplitBuf<T> {
+    let plan = PlanSpec::new(n)
+        .strategy(strategy)
+        .mixed_radix()
+        .kernel(kernel)
+        .build::<T>()
+        .unwrap();
+    let mut buf = SplitBuf::<T>::from_f64(re, im);
+    plan.execute_alloc(&mut buf);
+    buf
+}
+
+fn bit_identity_case<T: Real>(n: usize, strategy: Strategy) {
+    let (re, im) = random_frame(n, n as u64 ^ 0xD15);
+    let scalar = run_spec::<T>(n, strategy, Kernel::Scalar, &re, &im);
+    let simd = run_spec::<T>(n, strategy, Kernel::Simd, &re, &im);
+    // Bit-for-bit, not approximately: the two arms run the same
+    // per-element operation sequence, so dispatch must be invisible.
+    assert_eq!(scalar, simd, "n={n} {strategy:?}: arms diverge");
+}
+
+#[test]
+fn simd_and_portable_arms_are_bit_identical_through_the_facade() {
+    let _g = env_guard();
+    for n in [48usize, 64, 96, 1024, 1536] {
+        for strategy in [Strategy::DualSelect, Strategy::LinzerFeig, Strategy::Cosine] {
+            if simd_available::<f32>() {
+                bit_identity_case::<f32>(n, strategy);
+            }
+            if simd_available::<f64>() {
+                bit_identity_case::<f64>(n, strategy);
+            }
+        }
+    }
+    if !simd_available::<f64>() {
+        eprintln!("kernel_plane: no AVX2+FMA host; bit-identity ran portable-only");
+    }
+}
+
+fn bound_case<T: Real>(n: usize, eps: f64, seed: u64) {
+    let (re, im) = random_frame(n, seed);
+    // Oracle the input as the transform actually sees it (rounded once
+    // into T), so the comparison prices transform error only.
+    let (qre, qim) = SplitBuf::<T>::from_f64(&re, &im).to_f64();
+    let (wr, wi) = dft::naive_dft(&qre, &qim, false);
+    let bound = serving_bound(n, Strategy::DualSelect, eps)
+        .expect("dual-select composite sizes carry a bound");
+    assert!(bound.is_finite() && bound > 0.0, "n={n} bound={bound:e}");
+    for kernel in [Kernel::Scalar, Kernel::Auto] {
+        let buf = run_spec::<T>(n, Strategy::DualSelect, kernel, &re, &im);
+        let (gr, gi) = buf.to_f64();
+        let err = rel_l2(&gr, &gi, &wr, &wi);
+        assert!(
+            err <= bound,
+            "n={n} {kernel:?}: err {err:.3e} exceeds bound {bound:.3e}"
+        );
+    }
+}
+
+#[test]
+fn forward_error_stays_under_the_published_schedule_bound() {
+    let _g = env_guard();
+    for n in [12usize, 48, 96, 144, 1024, 1536] {
+        bound_case::<f64>(n, DType::F64.unit_roundoff(), 3 + n as u64);
+        bound_case::<f32>(n, DType::F32.unit_roundoff(), 5 + n as u64);
+    }
+    // Soft floats run the portable arm; the bound still prices them.
+    bound_case::<F16>(48, DType::F16.unit_roundoff(), 17);
+}
+
+#[test]
+fn env_override_dispatch() {
+    let _g = env_guard();
+    let n = 96usize;
+
+    // `portable` caps everything — Auto and explicit SIMD requests.
+    std::env::set_var(KERNEL_ENV, "portable");
+    let auto = MixedRadixPlan::<f32>::new(n, Strategy::DualSelect, fmafft::fft::Direction::Forward)
+        .unwrap();
+    assert_eq!(auto.arm(), Arm::Portable);
+    assert!(!auto.uses_simd());
+    let forced = MixedRadixPlan::<f32>::with_kernel(
+        n,
+        Strategy::DualSelect,
+        fmafft::fft::Direction::Forward,
+        Kernel::Simd,
+    )
+    .unwrap();
+    assert_eq!(forced.arm(), Arm::Portable, "scalar override must cap explicit SIMD");
+
+    // Frames executed under the override tick the portable counter.
+    let before = dispatch_counts();
+    let mut buf = SplitBuf::<f32>::zeroed(n);
+    auto.execute_alloc(&mut buf);
+    let after = dispatch_counts();
+    assert!(after.scalar > before.scalar, "portable dispatches must advance");
+
+    // `simd` upgrades Auto to a hard SIMD request.
+    std::env::set_var(KERNEL_ENV, "simd");
+    let upgraded =
+        MixedRadixPlan::<f64>::new(n, Strategy::DualSelect, fmafft::fft::Direction::Forward);
+    if simd_available::<f64>() {
+        assert_eq!(upgraded.unwrap().arm(), Arm::Simd);
+    } else {
+        upgraded.unwrap_err();
+    }
+
+    // Unrecognized values change nothing.
+    std::env::set_var(KERNEL_ENV, "definitely-not-a-kernel");
+    let plain = MixedRadixPlan::<f64>::new(n, Strategy::DualSelect, fmafft::fft::Direction::Forward)
+        .unwrap();
+    let expect = if simd_available::<f64>() { Arm::Simd } else { Arm::Portable };
+    assert_eq!(plain.arm(), expect);
+
+    std::env::remove_var(KERNEL_ENV);
+}
+
+#[test]
+fn composite_sizes_serve_end_to_end_in_process_and_over_tcp() {
+    let _g = env_guard();
+    let n = 48usize;
+    let mut cfg = ServerConfig::native(n);
+    cfg.workers = 1;
+    let server = Server::start(cfg).unwrap();
+    let fftd = FftdServer::start(server.clone(), "127.0.0.1:0").unwrap();
+    let mut client = FftClient::connect(fftd.local_addr()).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+
+    let before = dispatch_counts();
+    let (re, im) = random_frame(n, 4848);
+    let tcp = client
+        .call_with(FftOp::Forward, DType::F32, Strategy::DualSelect, &re, &im)
+        .unwrap();
+    assert!(tcp.is_ok(), "{:?}", tcp.error);
+    let local = server
+        .submit_wait_with(FftOp::Forward, DType::F32, re.clone(), im.clone())
+        .unwrap();
+    assert!(local.is_ok(), "{:?}", local.error);
+
+    // TCP and in-process agree bit for bit, with the same metadata.
+    assert_eq!(tcp.re, local.re_f64());
+    assert_eq!(tcp.im, local.im_f64());
+    assert_eq!(tcp.bound, local.bound);
+
+    // The composite-size bound plumbing: exactly the schedule bound,
+    // and the served error actually lands under it.
+    let bound = tcp.bound.expect("composite dual-select carries a bound");
+    assert_eq!(
+        bound,
+        serving_bound(n, Strategy::DualSelect, DType::F32.unit_roundoff()).unwrap()
+    );
+    let (wr, wi) = dft::naive_dft(&re, &im, false);
+    let err = rel_l2(&tcp.re, &tcp.im, &wr, &wi);
+    assert!(err <= bound, "served err {err:.3e} vs bound {bound:.3e}");
+
+    // Serving a composite size went through the mixed-radix kernel:
+    // the per-arm dispatch counters moved, and the obs surface shows
+    // them.
+    let after = dispatch_counts();
+    assert!(after.total() > before.total(), "kernel dispatch counters must advance");
+    let text = fmafft::obs::kernel_dispatch_text();
+    assert!(text.contains("fmafft_kernel_dispatch_total{arm=\"portable\"}"));
+    assert!(text.contains("fmafft_kernel_dispatch_total{arm=\"simd\"}"));
+
+    fftd.shutdown();
+    server.shutdown();
+}

@@ -315,6 +315,7 @@ fn registry_open_takes_wisdom_block_when_no_override_is_given() {
             WisdomEntry {
                 strategy: Strategy::DualSelect,
                 algorithm: Algorithm::Stockham,
+                kernel: fmafft::kernel::Kernel::Auto,
                 block_len: 64,
                 median_ns: 1,
             },

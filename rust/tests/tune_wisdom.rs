@@ -6,6 +6,7 @@
 //! failures as `FftError::Backend`), never panics.
 
 use fmafft::fft::{Algorithm, DType, FftError, Strategy};
+use fmafft::kernel::Kernel;
 use fmafft::net::wire::checksum;
 use fmafft::tune::{TuneOp, Wisdom, WisdomEntry, WISDOM_MAGIC, WISDOM_VERSION};
 
@@ -35,6 +36,9 @@ fn full_wisdom() -> Wisdom {
                 WisdomEntry {
                     strategy,
                     algorithm: Algorithm::Stockham,
+                    // Spread across the kernel axis so the packed
+                    // algo/kernel byte round-trips every arm.
+                    kernel: Kernel::ALL[i % Kernel::ALL.len()],
                     block_len: 0,
                     median_ns: 1000 + (i as u64),
                 },
@@ -49,6 +53,7 @@ fn full_wisdom() -> Wisdom {
                 WisdomEntry {
                     strategy: Strategy::DualSelect,
                     algorithm: Algorithm::Stockham,
+                    kernel: Kernel::Auto,
                     block_len: (fmafft::stream::min_ols_block(taps) * 2) as u32,
                     median_ns: 2000 + (i as u64),
                 },
@@ -107,6 +112,7 @@ fn save_and_load_round_trip_on_disk() {
         WisdomEntry {
             strategy: Strategy::Cosine,
             algorithm: Algorithm::Dit,
+            kernel: Kernel::Scalar,
             block_len: 0,
             median_ns: 77,
         },
@@ -196,10 +202,19 @@ fn entry_count_must_match_file_size() {
 
 #[test]
 fn unknown_entry_tags_are_rejected() {
-    // Entry layout: n u64 | op u8 | dtype u8 | strategy u8 | algo u8 | ...
-    for (offset, what) in [(8usize, "op"), (9, "dtype"), (10, "strategy"), (11, "algorithm")] {
+    // Entry layout: n u64 | op u8 | dtype u8 | strategy u8
+    //               | algo_kernel u8 | ...
+    // Byte 11 packs two nibbles; 0x7f poisons the algorithm half,
+    // 0x30 keeps the algorithm legal (Auto) and poisons the kernel.
+    for (offset, value, what) in [
+        (8usize, 0x7fu8, "op"),
+        (9, 0x7f, "dtype"),
+        (10, 0x7f, "strategy"),
+        (11, 0x7f, "algorithm"),
+        (11, 0x30, "kernel"),
+    ] {
         let mut bytes = full_wisdom().encode();
-        bytes[HEADER_LEN + offset] = 0x7f;
+        bytes[HEADER_LEN + offset] = value;
         refit_checksum(&mut bytes);
         match Wisdom::decode_for_host(&bytes, HOST) {
             Err(FftError::Protocol(msg)) => {
@@ -208,6 +223,37 @@ fn unknown_entry_tags_are_rejected() {
             other => panic!("{what}: {other:?}"),
         }
     }
+}
+
+#[test]
+fn pre_kernel_files_load_as_kernel_auto() {
+    // Files written before the kernel axis carried the bare algorithm
+    // tag in byte 11 (high nibble 0).  Rewriting the byte to that
+    // legacy form must decode to the same entry with `Kernel::Auto` —
+    // the codec bump is backward compatible without a version change.
+    let mut w = Wisdom::for_host(HOST);
+    w.insert(
+        1536,
+        TuneOp::Fft,
+        DType::F32,
+        WisdomEntry {
+            strategy: Strategy::DualSelect,
+            algorithm: Algorithm::MixedRadix,
+            kernel: Kernel::Simd,
+            block_len: 0,
+            median_ns: 9,
+        },
+    )
+    .unwrap();
+    let mut bytes = w.encode();
+    assert_eq!(bytes[HEADER_LEN + 11], 5 | (2 << 4), "simd-tagged mixed-radix byte");
+    bytes[HEADER_LEN + 11] &= 0x0f; // strip the kernel nibble, legacy style
+    refit_checksum(&mut bytes);
+    let back = Wisdom::decode_for_host(&bytes, HOST).unwrap();
+    let e = back.entry(1536, TuneOp::Fft, DType::F32).unwrap();
+    assert_eq!(e.algorithm, Algorithm::MixedRadix);
+    assert_eq!(e.kernel, Kernel::Auto);
+    assert_eq!(e.median_ns, 9);
 }
 
 #[test]
@@ -223,6 +269,7 @@ fn invariant_violating_entries_are_rejected() {
         WisdomEntry {
             strategy: Strategy::DualSelect,
             algorithm: Algorithm::Stockham,
+            kernel: Kernel::Auto,
             block_len: 0,
             median_ns: 5,
         },
@@ -242,6 +289,7 @@ fn invariant_violating_entries_are_rejected() {
         WisdomEntry {
             strategy: Strategy::DualSelect,
             algorithm: Algorithm::Stockham,
+            kernel: Kernel::Auto,
             block_len: 16,
             median_ns: 5,
         },
